@@ -1,0 +1,31 @@
+//! Run the vectorization autotuner (paper §3.3) on a profile environment:
+//! benchmarks all four code paths plus serial across worker counts and
+//! recommends the best configuration for this host.
+//!
+//! ```bash
+//! cargo run --release --example autotune [env] [num_envs] [secs]
+//! ```
+
+use pufferlib::envs;
+use pufferlib::vector::autotune::{autotune, format_results};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let env = args.first().cloned().unwrap_or_else(|| "profile/minigrid".into());
+    let num_envs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let secs: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+
+    println!("autotuning {env} ({num_envs} envs, {secs}s per candidate)\n");
+    let name = env.clone();
+    let factory: Arc<dyn Fn(usize) -> Box<dyn pufferlib::emulation::FlatEnv> + Send + Sync> =
+        Arc::new(move |i| envs::make(&name, i as u64));
+    let results = autotune(factory, num_envs, 8, secs)?;
+    print!("{}", format_results(&results));
+    let best = &results[0];
+    println!(
+        "\nrecommended: {} → VecConfig {{ num_envs: {}, num_workers: {}, batch_size: {}, zero_copy: {} }}",
+        best.label, best.cfg.num_envs, best.cfg.num_workers, best.cfg.batch_size, best.cfg.zero_copy
+    );
+    Ok(())
+}

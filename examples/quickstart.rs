@@ -1,0 +1,63 @@
+//! Quickstart: wrap an environment, vectorize it, run a random rollout.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pufferlib::prelude::*;
+use pufferlib::util::timer::SpsCounter;
+use pufferlib::{envs, vector::VecConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick any first-party env (or wrap your own StructuredEnv with
+    //    PufferEnv::new — see examples/custom_env.rs).
+    let name = "ocean/squared";
+
+    // 2. Vectorize: 8 envs on 2 workers, EnvPool batch of 4 (first
+    //    finishers win).
+    let cfg = VecConfig {
+        num_envs: 8,
+        num_workers: 2,
+        batch_size: 4,
+        ..Default::default()
+    };
+    let mut venv = Multiprocessing::new(move |i| envs::make(name, i as u64), cfg)?;
+    println!(
+        "{name}: {} envs, batch {}, mode {:?}, obs {}B ({} f32), actions {:?}",
+        venv.num_envs(),
+        venv.batch_size(),
+        venv.mode(),
+        venv.obs_layout().byte_len(),
+        venv.obs_layout().flat_len(),
+        venv.action_dims(),
+    );
+
+    // 3. Drive it with random actions.
+    let mut rng = Rng::new(0);
+    let slots = venv.action_dims().len();
+    let dims: Vec<usize> = venv.action_dims().to_vec();
+    let rows = venv.batch_rows();
+    let mut sps = SpsCounter::new();
+    let mut episodes = 0usize;
+
+    venv.async_reset(42);
+    for _ in 0..2000 {
+        let batch = venv.recv()?;
+        episodes += batch
+            .infos
+            .iter()
+            .filter(|(_, i)| i.iter().any(|(k, _)| *k == "episode_return"))
+            .count();
+        let actions: Vec<i32> = (0..rows)
+            .flat_map(|_| dims.iter().map(|&n| rng.below(n as u64) as i32).collect::<Vec<_>>())
+            .collect();
+        debug_assert_eq!(actions.len(), rows * slots);
+        venv.send(&actions)?;
+        sps.add(venv.batch_size() as u64);
+    }
+    println!(
+        "random rollout: {:.0} env-steps/sec, {episodes} episodes completed",
+        sps.overall()
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! **End-to-end driver**: train Clean PuffeRL on the full Ocean suite and
+//! report solve status — the paper's §4 claim that every env is solved
+//! (score > 0.9) in roughly 30k interactions with one barely-tuned
+//! hyperparameter set.
+//!
+//! All three layers compose here: Rust coordinator (emulation +
+//! vectorization + PPO loop) → AOT-compiled JAX train step → Pallas
+//! fused-MLP and GAE kernels, all via PJRT, with Python nowhere at
+//! runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_ocean
+//! ```
+//!
+//! Env names as args restrict the sweep: `... train_ocean ocean/memory`.
+
+use pufferlib::envs;
+use pufferlib::train::{TrainConfig, Trainer};
+
+/// Per-env step budget/hypers: one base config, with the paper's "barely
+/// tuned" caveat applied as a small multiplier for the two slowest
+/// learners (squared's long credit chain, memory's recurrence).
+fn config_for(env: &str) -> TrainConfig {
+    let base = TrainConfig {
+        env: env.to_string(),
+        total_steps: 30_000,
+        lr: 3e-3,
+        ent_coef: 0.005,
+        epochs: 4,
+        anneal_lr: true,
+        seed: 1,
+        num_workers: 2,
+        pool: false,
+        run_dir: Some(format!("runs/{}", env.replace('/', "_"))),
+        log_every: 10,
+    };
+    match env {
+        "ocean/squared" => TrainConfig {
+            total_steps: 150_000,
+            ent_coef: 0.002,
+            ..base
+        },
+        "ocean/spaces" => TrainConfig {
+            total_steps: 150_000,
+            lr: 8e-3,
+            ent_coef: 0.002,
+            ..base
+        },
+        "ocean/memory" => TrainConfig {
+            total_steps: 120_000,
+            lr: 5e-3,
+            ..base
+        },
+        _ => base,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let selected: Vec<&str> = if args.is_empty() {
+        envs::OCEAN_ENVS.to_vec()
+    } else {
+        args.iter().map(String::as_str).collect()
+    };
+
+    println!("=== Ocean end-to-end training sweep (paper §4 / bench C3) ===\n");
+    let mut rows = Vec::new();
+    for env in &selected {
+        let cfg = config_for(env);
+        let steps = cfg.total_steps;
+        let mut trainer = Trainer::new(cfg, "artifacts")?;
+        let report = trainer.train()?;
+        // When did the curve first cross 0.9?
+        let solved_at = report
+            .score_curve
+            .iter()
+            .find(|(_, s)| *s > 0.9)
+            .map(|(step, _)| *step);
+        rows.push((
+            env.to_string(),
+            steps,
+            report.mean_score.unwrap_or(0.0),
+            solved_at,
+            report.sps,
+            report.episodes,
+        ));
+    }
+
+    println!("\n| env | budget | final score | solved@ | SPS | episodes |");
+    println!("|---|---|---|---|---|---|");
+    let mut solved = 0;
+    for (env, steps, score, solved_at, sps, eps) in &rows {
+        if *score > 0.9 {
+            solved += 1;
+        }
+        println!(
+            "| {env} | {steps} | {score:.3} | {} | {sps:.0} | {eps} |",
+            solved_at
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| "-".into())
+        );
+    }
+    println!("\n{solved}/{} solved (score > 0.9)", rows.len());
+    println!("paper claim: every Ocean env solved in ~30k interactions (§4)");
+    Ok(())
+}

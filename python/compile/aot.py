@@ -1,0 +1,180 @@
+"""AOT pipeline: lower every entry point for every env spec to HLO *text*
+plus a JSON manifest, consumed by the Rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+The env spec table below is the Python↔Rust contract: the Rust runtime
+asserts at load time that each env's emulated observation layout matches
+the obs_dim recorded in the manifest, so drift fails loudly.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, obs_dim, act_dims, agents, lstm). obs_dim must equal the Rust
+# StructLayout::flat_len() of the env's observation space.
+ENV_SPECS = [
+    ("ocean_squared", 121, [4], 1, False),
+    ("ocean_password", 5, [2], 1, False),
+    ("ocean_stochastic", 1, [2], 1, False),
+    ("ocean_memory", 3, [2], 1, True),
+    ("ocean_multiagent", 2, [2], 2, False),
+    ("ocean_spaces", 5, [2, 2], 1, False),
+    ("ocean_bandit", 1, [4], 1, False),
+    ("classic_cartpole", 4, [2], 1, False),
+    ("classic_minigrid", 26, [3], 1, False),
+    ("classic_breakout", 53, [3], 1, False),
+    ("profile_nmmo", 283, [5, 9], 16, False),
+]
+
+# Rollout geometry shared with the Rust trainer:
+#   B_FWD  — agent rows per forward call (the pool batch, N rows);
+#   B_ROLL — total agent rows across all envs (M rows, the GAE/train width);
+#   T      — steps per rollout segment.
+# B_ROLL = 2 * B_FWD gives the paper's double-buffered EnvPool setting
+# (M = 2N); sync-mode training forwards all B_ROLL rows at once instead.
+B_FWD = 16
+B_ROLL = 32
+T = 32
+
+GAMMA = 0.99
+LAM = 0.95
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_spec(name, obs_dim, act_dims, agents, lstm, out_dir):
+    """Lower all entry points for one env spec; return its manifest dict."""
+    n_params, _ = model.param_spec(obs_dim, act_dims, lstm)
+    slots = len(act_dims)
+    n = T * B_ROLL
+    h = model.HIDDEN
+
+    artifacts = {}
+
+    def emit(key, fn, *args):
+        path = f"{name}_{key}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(lower(fn, *args))
+        artifacts[key] = path
+
+    # Forward at both batch sizes: the pool batch (N rows) and the full
+    # row set (M rows, sync mode / bootstrap passes).
+    for b in sorted({B_FWD, B_ROLL}):
+        if lstm:
+            fwd_l = model.make_forward(obs_dim, act_dims, lstm=True)
+            emit(f"forward_lstm_b{b}", fwd_l, f32(n_params), f32(b, obs_dim), f32(b, h), f32(b, h))
+        else:
+            fwd = model.make_forward(obs_dim, act_dims, lstm=False)
+            emit(f"forward_b{b}", fwd, f32(n_params), f32(b, obs_dim))
+
+    emit(
+        "gae",
+        lambda r, v, d, lv: model.make_gae(GAMMA, LAM)(r, v, d, lv),
+        f32(T, B_ROLL),
+        f32(T, B_ROLL),
+        f32(T, B_ROLL),
+        f32(B_ROLL),
+    )
+
+    if lstm:
+        ts = model.make_train_step(obs_dim, act_dims, lstm=True)
+        emit(
+            "train_step",
+            ts,
+            f32(n_params), f32(n_params), f32(n_params), f32(), f32(), f32(),
+            f32(T, B_ROLL, obs_dim), f32(T, B_ROLL), i32(T, B_ROLL, slots),
+            f32(T, B_ROLL), f32(T, B_ROLL), f32(T, B_ROLL),
+        )
+    else:
+        ts = model.make_train_step(obs_dim, act_dims, lstm=False)
+        emit(
+            "train_step",
+            ts,
+            f32(n_params), f32(n_params), f32(n_params), f32(), f32(), f32(),
+            f32(n, obs_dim), i32(n, slots), f32(n), f32(n), f32(n),
+        )
+
+    # Initial parameters: ravel_pytree order is a Python-side detail, so
+    # the initial flat vector is exported rather than re-derived in Rust.
+    import hashlib
+
+    import numpy as np
+    seed = int(hashlib.md5(name.encode()).hexdigest()[:8], 16)  # stable across runs
+    params0 = model.init_params(jax.random.PRNGKey(seed), obs_dim, act_dims, lstm)
+    flat0, _ = jax.flatten_util.ravel_pytree(params0)
+    params_file = f"{name}_params0.bin"
+    np.asarray(flat0, dtype="<f4").tofile(os.path.join(out_dir, params_file))
+
+    return {
+        "obs_dim": obs_dim,
+        "act_dims": act_dims,
+        "agents": agents,
+        "lstm": lstm,
+        "n_params": n_params,
+        "hidden": h,
+        "batch_fwd": B_FWD,
+        "batch_roll": B_ROLL,
+        "horizon": T,
+        "gamma": GAMMA,
+        "lam": LAM,
+        "params0": params_file,
+        "artifacts": artifacts,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated spec names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"batch_fwd": B_FWD, "batch_roll": B_ROLL, "horizon": T, "specs": {}}
+    for name, obs_dim, act_dims, agents, lstm in ENV_SPECS:
+        if only and name not in only:
+            continue
+        print(f"lowering {name} (obs={obs_dim}, act={act_dims}, lstm={lstm}) ...", flush=True)
+        manifest["specs"][name] = build_spec(name, obs_dim, act_dims, agents, lstm, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['specs'])} specs to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

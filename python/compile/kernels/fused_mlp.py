@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: fused linear + bias + activation.
+
+The policy MLP's hot op. On the paper's hardware this is a cuBLAS GEMM
+followed by separate bias/activation kernels; the TPU-shaped rethink (see
+DESIGN.md §Hardware-Adaptation) tiles the GEMM for VMEM with MXU-aligned
+128x128 blocks and fuses the bias add + nonlinearity into the matmul
+epilogue, so each output tile is produced in one VMEM-resident pass.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the interpret path emits plain HLO with identical
+numerics. Real-TPU efficiency is estimated from the BlockSpec footprint in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile sides. Shapes smaller than a tile fall back to a single
+# block covering the (padded) array — Pallas pads reads/writes internally.
+TILE_M = 128
+TILE_N = 128
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One (TILE_M, TILE_N) output tile. K is kept whole per tile (policy
+    nets have K ≤ a few hundred floats ≪ VMEM), so the MXU sees a single
+    (bm, K) × (K, bn) contraction and the bias + nonlinearity run in the
+    same VMEM-resident epilogue — no extra HBM round trip."""
+    y = x_ref[...] @ w_ref[...] + b_ref[...]
+    if act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _pallas_linear(x, w, b, act: str):
+    """Raw Pallas call: ``act(x @ w + b)``.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32. Grid tiles M and N; K stays
+    resident per tile (policy-net K ≤ a few hundred floats ≪ VMEM).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert b.shape == (n,)
+    bm = min(TILE_M, m)
+    bn = min(TILE_N, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_linear_act(act: str):
+    """Differentiable fused linear: forward is the Pallas kernel; the
+    hand-written VJP reuses the same kernel for both backward GEMMs
+    (``dx = dz @ wᵀ``, ``dw = xᵀ @ dz``), so the backward pass also runs
+    tiled and fused — Pallas calls have no built-in reverse rule."""
+
+    @jax.custom_vjp
+    def f(x, w, b):
+        return _pallas_linear(x, w, b, act)
+
+    def fwd(x, w, b):
+        y = _pallas_linear(x, w, b, act)
+        return y, (x, w, y)
+
+    def bwd(res, dy):
+        x, w, y = res
+        if act == "tanh":
+            dz = dy * (1.0 - y * y)
+        elif act == "relu":
+            dz = dy * (y > 0.0).astype(dy.dtype)
+        else:
+            dz = dy
+        zn = jnp.zeros((w.shape[0],), jnp.float32)
+        zk = jnp.zeros((dz.shape[1],), jnp.float32)
+        dx = _pallas_linear(dz, w.T, zn, "none")
+        dw = _pallas_linear(x.T, dz, zk, "none")
+        db = dz.sum(axis=0)
+        return dx, dw, db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def linear_act(x, w, b, act: str = "tanh"):
+    """Fused, differentiable ``act(x @ w + b)``. See module docs."""
+    return _make_linear_act(act)(x, w, b)

@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: Generalized Advantage Estimation.
+
+A reverse time scan over the rollout. The CUDA-era implementations run
+this on the CPU in numpy (it is sequential in T); the TPU-shaped version
+keeps the whole (T, B_tile) rollout tile resident in VMEM and performs the
+scan in-kernel over the batch lanes, so the only HBM traffic is one read
+of (rewards, values, dones) and one write of (adv) per tile.
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic); numerics
+are identical to the lowered TPU kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch lanes per tile; 128 matches the VPU lane count.
+TILE_B = 128
+
+
+def _kernel(rew_ref, val_ref, done_ref, lastv_ref, adv_ref, *, gamma: float, lam: float):
+    T = rew_ref.shape[0]
+
+    def body(i, carry):
+        gae, next_value = carry
+        t = T - 1 - i
+        mask = 1.0 - done_ref[t, :]
+        delta = rew_ref[t, :] + gamma * next_value * mask - val_ref[t, :]
+        gae = delta + gamma * lam * mask * gae
+        adv_ref[t, :] = gae
+        return gae, val_ref[t, :]
+
+    zeros = jnp.zeros(lastv_ref.shape, jnp.float32)
+    jax.lax.fori_loop(0, T, body, (zeros, lastv_ref[...]))
+
+
+def gae(rewards, values, dones, last_value, gamma: float = 0.99, lam: float = 0.95):
+    """Pallas GAE over a (T, B) rollout; returns (advantages, returns)."""
+    t, b = rewards.shape
+    assert values.shape == (t, b) and dones.shape == (t, b)
+    assert last_value.shape == (b,)
+    bb = min(TILE_B, b)
+    grid = (pl.cdiv(b, bb),)
+    adv = pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma, lam=lam),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, bb), lambda j: (0, j)),
+            pl.BlockSpec((t, bb), lambda j: (0, j)),
+            pl.BlockSpec((t, bb), lambda j: (0, j)),
+            pl.BlockSpec((bb,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((t, bb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((t, b), jnp.float32),
+        interpret=True,
+    )(rewards, values, dones, last_value)
+    return adv, adv + values

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written in the most obvious jnp style. pytest (python/tests/test_kernels.py)
+sweeps shapes and dtypes with hypothesis and asserts allclose between the
+kernel and its oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_act_ref(x, w, b, act: str):
+    """y = act(x @ w + b).
+
+    x: (M, K), w: (K, N), b: (N,). act in {"tanh", "relu", "none"}.
+    """
+    y = x @ w + b
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "none":
+        return y
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def gae_ref(rewards, values, dones, last_value, gamma: float, lam: float):
+    """Generalized Advantage Estimation, time-major.
+
+    rewards, values, dones: (T, B); last_value: (B,).
+    dones[t] = 1 if the episode ended *at* step t (the env auto-reset after
+    producing rewards[t]); bootstrap is masked accordingly.
+
+    Returns (advantages, returns), both (T, B), with
+    returns = advantages + values.
+    """
+
+    def body(carry, xs):
+        gae, next_value = carry
+        reward, value, done = xs
+        mask = 1.0 - done
+        delta = reward + gamma * next_value * mask - value
+        gae = delta + gamma * lam * mask * gae
+        return (gae, value), gae
+
+    (_, _), adv_rev = jax.lax.scan(
+        body,
+        (jnp.zeros_like(last_value), last_value),
+        (rewards[::-1], values[::-1], dones[::-1]),
+    )
+    adv = adv_rev[::-1]
+    return adv, adv + values

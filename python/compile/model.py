@@ -1,0 +1,248 @@
+"""Layer-2: JAX policy networks + the PPO train step (Clean PuffeRL's
+learner math), lowered once to HLO-text artifacts and executed from Rust.
+
+Model format (paper §3.4): the forward pass is split into **encode** and
+**decode** halves so an LSTM can be sandwiched between hidden-state
+computation and action heads. The same encoder/decoder weights serve both
+the feedforward and recurrent variants; recurrence is a per-experiment
+config flag, not a second model.
+
+All parameters (and Adam state) travel as ONE flat f32 vector — Rust owns
+them as opaque buffers and the manifest records the total length. The
+pytree structure lives only here, via ``ravel_pytree``.
+
+Entry points (AOT-lowered per env spec by aot.py):
+  forward          (params, obs[B,D])                    -> logits[B,A], value[B]
+  forward_lstm     (params, obs[B,D], h[B,H], c[B,H])    -> logits, value, h', c'
+  gae              (rew[T,B], val[T,B], done[T,B], last[B]) -> adv[T,B], ret[T,B]
+  train_step       (params, m, v, step, lr, ent_coef,
+                    obs[N,D], act[N,S], logp[N], adv[N], ret[N])
+                                                         -> params', m', v', step', metrics[5]
+  train_step_lstm  (params, m, v, step, lr, ent_coef,
+                    obs[T,B,D], starts[T,B], act[T,B,S], logp[T,B], adv[T,B], ret[T,B])
+                                                         -> params', m', v', step', metrics[5]
+
+metrics = [loss, pg_loss, v_loss, entropy, approx_kl].
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.fused_mlp import linear_act
+from .kernels.gae import gae as gae_kernel
+
+HIDDEN = 128
+CLIP = 0.2
+VF_COEF = 0.5
+MAX_GRAD_NORM = 0.5
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# --------------------------------------------------------------------------
+# Parameters
+
+
+def init_params(key, obs_dim: int, act_dims, lstm: bool):
+    """Orthogonal-ish init matching CleanRL's layer_init scalings."""
+    ks = jax.random.split(key, 8)
+
+    def dense(k, fan_in, fan_out, scale):
+        w = jax.random.normal(k, (fan_in, fan_out)) * (scale / jnp.sqrt(fan_in))
+        return {"w": w.astype(jnp.float32), "b": jnp.zeros(fan_out, jnp.float32)}
+
+    params = {
+        "enc1": dense(ks[0], obs_dim, HIDDEN, 1.0),
+        "enc2": dense(ks[1], HIDDEN, HIDDEN, 1.0),
+        "actor": dense(ks[2], HIDDEN, sum(act_dims), 0.01),
+        "critic": dense(ks[3], HIDDEN, 1, 1.0),
+    }
+    if lstm:
+        # Fused LSTM cell weights: [x, h] -> 4H gates (i, f, g, o).
+        params["lstm"] = dense(ks[4], HIDDEN + HIDDEN, 4 * HIDDEN, 1.0)
+    return params
+
+
+def param_spec(obs_dim: int, act_dims, lstm: bool):
+    """(flat_len, unravel) for the given architecture."""
+    params = init_params(jax.random.PRNGKey(0), obs_dim, act_dims, lstm)
+    flat, unravel = ravel_pytree(params)
+    return flat.shape[0], unravel
+
+
+# --------------------------------------------------------------------------
+# Encode / decode split (paper §3.4)
+
+
+def encode(p, obs):
+    """Observation -> hidden state. First op unflattens: the manifest's
+    field table defines how obs maps back to the structured space; the
+    dense encoder consumes the flat f32 row directly (the 'no loss of
+    generality' path), so unflattening is the identity here and
+    slice-based for models that want per-field processing."""
+    h = linear_act(obs, p["enc1"]["w"], p["enc1"]["b"], "tanh")
+    return linear_act(h, p["enc2"]["w"], p["enc2"]["b"], "tanh")
+
+
+def decode(p, hidden):
+    """Hidden state -> (logits, value): the action/value heads."""
+    logits = linear_act(hidden, p["actor"]["w"], p["actor"]["b"], "none")
+    value = linear_act(hidden, p["critic"]["w"], p["critic"]["b"], "none")
+    return logits, value[:, 0]
+
+
+def lstm_cell(p, x, h, c):
+    """Fused-gate LSTM cell sandwiched between encode and decode."""
+    gates = linear_act(jnp.concatenate([x, h], axis=1), p["lstm"]["w"], p["lstm"]["b"], "none")
+    i, f, g, o = jnp.split(gates, 4, axis=1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def make_forward(obs_dim, act_dims, lstm: bool):
+    _, unravel = param_spec(obs_dim, act_dims, lstm)
+
+    if not lstm:
+
+        def forward(params_flat, obs):
+            p = unravel(params_flat)
+            logits, value = decode(p, encode(p, obs))
+            return logits, value
+
+        return forward
+
+    def forward_lstm(params_flat, obs, h, c):
+        p = unravel(params_flat)
+        x = encode(p, obs)
+        h2, c2 = lstm_cell(p, x, h, c)
+        logits, value = decode(p, h2)
+        return logits, value, h2, c2
+
+    return forward_lstm
+
+
+# --------------------------------------------------------------------------
+# PPO loss
+
+
+def _logp_entropy(logits, actions, act_dims):
+    """Sum of per-slot categorical log-probs and entropies for a
+    MultiDiscrete action (the emulated action space is always one
+    MultiDiscrete; a plain Discrete is the 1-slot case)."""
+    logp = 0.0
+    entropy = 0.0
+    off = 0
+    for slot, n in enumerate(act_dims):
+        lg = logits[:, off : off + n]
+        logz = jax.nn.logsumexp(lg, axis=1)
+        lp_all = lg - logz[:, None]
+        a = actions[:, slot]
+        logp = logp + jnp.take_along_axis(lp_all, a[:, None], axis=1)[:, 0]
+        entropy = entropy - jnp.sum(jnp.exp(lp_all) * lp_all, axis=1)
+        off += n
+    return logp, entropy
+
+
+def _ppo_loss(logits, value, actions, old_logp, adv, ret, ent_coef, act_dims):
+    logp, entropy = _logp_entropy(logits, actions, act_dims)
+    logratio = logp - old_logp
+    ratio = jnp.exp(logratio)
+    # Advantage normalization (batch level, CleanRL default).
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    pg1 = -adv * ratio
+    pg2 = -adv * jnp.clip(ratio, 1.0 - CLIP, 1.0 + CLIP)
+    pg_loss = jnp.maximum(pg1, pg2).mean()
+    v_loss = 0.5 * jnp.square(value - ret).mean()
+    ent = entropy.mean()
+    loss = pg_loss - ent_coef * ent + VF_COEF * v_loss
+    approx_kl = ((ratio - 1.0) - logratio).mean()
+    return loss, (pg_loss, v_loss, ent, approx_kl)
+
+
+def _adam(params_flat, m, v, step, lr, grads):
+    """Adam with global-norm gradient clipping, all flat."""
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, MAX_GRAD_NORM / gnorm)
+    g = grads * scale
+    step = step + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    params_flat = params_flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return params_flat, m, v, step
+
+
+def make_train_step(obs_dim, act_dims, lstm: bool):
+    _, unravel = param_spec(obs_dim, act_dims, lstm)
+    act_dims = tuple(act_dims)
+
+    if not lstm:
+
+        def train_step(params_flat, m, v, step, lr, ent_coef, obs, actions, old_logp, adv, ret):
+            def loss_fn(pf):
+                p = unravel(pf)
+                logits, value = decode(p, encode(p, obs))
+                return _ppo_loss(
+                    logits, value, actions, old_logp, adv, ret, ent_coef, act_dims
+                )
+
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params_flat)
+            params_flat, m, v, step = _adam(params_flat, m, v, step, lr, grads)
+            pg_loss, v_loss, ent, kl = aux
+            metrics = jnp.stack([loss, pg_loss, v_loss, ent, kl])
+            return params_flat, m, v, step, metrics
+
+        return train_step
+
+    def train_step_lstm(
+        params_flat, m, v, step, lr, ent_coef, obs, starts, actions, old_logp, adv, ret
+    ):
+        """obs: (T,B,D); starts[t,b] = 1 if obs[t,b] begins a new episode
+        (LSTM state is zeroed there — the state-reshaping logic the paper
+        calls the most common source of hard bugs, done once, here)."""
+        T, B, _ = obs.shape
+
+        def loss_fn(pf):
+            p = unravel(pf)
+
+            def scan_body(carry, xs):
+                h, c = carry
+                o_t, s_t = xs
+                mask = (1.0 - s_t)[:, None]
+                h, c = h * mask, c * mask
+                x = encode(p, o_t)
+                h, c = lstm_cell(p, x, h, c)
+                logits, value = decode(p, h)
+                return (h, c), (logits, value)
+
+            zeros = jnp.zeros((B, HIDDEN), jnp.float32)
+            (_, _), (logits, value) = jax.lax.scan(scan_body, (zeros, zeros), (obs, starts))
+            flat = lambda x: x.reshape((T * B,) + x.shape[2:])
+            return _ppo_loss(
+                flat(logits),
+                flat(value),
+                flat(actions),
+                old_logp.reshape(-1),
+                adv.reshape(-1),
+                ret.reshape(-1),
+                ent_coef,
+                act_dims,
+            )
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params_flat)
+        params_flat, m, v, step = _adam(params_flat, m, v, step, lr, grads)
+        pg_loss, v_loss, ent, kl = aux
+        metrics = jnp.stack([loss, pg_loss, v_loss, ent, kl])
+        return params_flat, m, v, step, metrics
+
+    return train_step_lstm
+
+
+def make_gae(gamma: float = 0.99, lam: float = 0.95):
+    return partial(gae_kernel, gamma=gamma, lam=lam)

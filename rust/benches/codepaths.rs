@@ -1,0 +1,111 @@
+//! **Bench C2** — the four optimized code paths and the
+//! multiple-envs-per-worker scaling claim (paper §5: Gymnasium/SB3
+//! degrade above ~1000 synchronizations/sec/core; PufferLib's
+//! envs-per-worker stacking scales to 100k+ SPS envs).
+//!
+//! Fast env (Ocean Squared, ~µs steps), sweeping envs-per-worker and
+//! comparing every code path against the baseline designs.
+//!
+//! `cargo bench --bench codepaths`; `PUFFER_BENCH_SECS` per cell.
+
+use pufferlib::envs;
+use pufferlib::vector::autotune::measure;
+use pufferlib::vector::baselines::{GymnasiumVec, Sb3Vec};
+use pufferlib::vector::{Multiprocessing, Serial, VecConfig};
+
+fn main() {
+    let secs: f64 = std::env::var("PUFFER_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let mk = |i: usize| envs::make("ocean/squared", i as u64);
+
+    println!("# Bench C2a — four code paths on a fast env (8 envs, 4 workers)");
+    println!("| {:<22} | {:>10} |", "path", "SPS");
+    println!("|{}|{}|", "-".repeat(24), "-".repeat(12));
+
+    let serial = measure(
+        Serial::new(mk, VecConfig {
+            num_envs: 8,
+            num_workers: 1,
+            batch_size: 8,
+            ..Default::default()
+        })
+        .unwrap(),
+        secs,
+    )
+    .unwrap();
+    println!("| {:<22} | {:>10.0} |", "serial (reference)", serial);
+
+    let paths: [(&str, usize, bool); 4] = [
+        ("sync (N=M)", 8, false),
+        ("async (N=M/2)", 4, false),
+        ("async-single (N=epw)", 2, false),
+        ("zero-copy (N=M/2)", 4, true),
+    ];
+    for (label, batch, zero_copy) in paths {
+        let cfg = VecConfig {
+            num_envs: 8,
+            num_workers: 4,
+            batch_size: batch,
+            zero_copy,
+            ..Default::default()
+        };
+        let sps = measure(Multiprocessing::new(mk, cfg).unwrap(), secs).unwrap();
+        println!("| {:<22} | {:>10.0} |", label, sps);
+    }
+    for (label, make) in [
+        ("gymnasium design", 0usize),
+        ("sb3 design", 1usize),
+    ] {
+        let cfg = VecConfig {
+            num_envs: 8,
+            num_workers: 8,
+            batch_size: 8,
+            ..Default::default()
+        };
+        let sps = match make {
+            0 => measure(GymnasiumVec::new(mk, cfg).unwrap(), secs).unwrap(),
+            _ => measure(Sb3Vec::new(mk, cfg).unwrap(), secs).unwrap(),
+        };
+        println!("| {:<22} | {:>10.0} |", label, sps);
+    }
+
+    println!("\n# Bench C2b — multiple envs per worker (4 workers fixed)");
+    println!("# paper: don't clog the system with small processes");
+    println!(
+        "| {:>6} | {:>11} | {:>12} | {:>12} |",
+        "envs", "envs/worker", "puffer SPS", "gym-design SPS"
+    );
+    println!(
+        "|{}|{}|{}|{}|",
+        "-".repeat(8),
+        "-".repeat(13),
+        "-".repeat(14),
+        "-".repeat(14)
+    );
+    for num_envs in [4usize, 8, 16, 32] {
+        let cfg = VecConfig {
+            num_envs,
+            num_workers: 4,
+            batch_size: num_envs,
+            ..Default::default()
+        };
+        let puffer = measure(Multiprocessing::new(mk, cfg).unwrap(), secs).unwrap();
+        // Gymnasium design: one env per worker, always.
+        let gcfg = VecConfig {
+            num_envs,
+            num_workers: num_envs,
+            batch_size: num_envs,
+            ..Default::default()
+        };
+        let gym = measure(GymnasiumVec::new(mk, gcfg).unwrap(), secs).unwrap();
+        println!(
+            "| {:>6} | {:>11} | {:>12.0} | {:>12.0} |",
+            num_envs,
+            num_envs / 4,
+            puffer,
+            gym
+        );
+    }
+}

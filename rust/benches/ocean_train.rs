@@ -1,0 +1,75 @@
+//! **Bench C3** — the paper's §4 claim: Clean PuffeRL solves each Ocean
+//! env (score > 0.9) in roughly 30k interactions with one set of barely
+//! tuned hyperparameters.
+//!
+//! Default: the three fastest-training envs (keeps `cargo bench` short).
+//! `PUFFER_BENCH_FULL=1` runs the whole suite with per-env budgets — see
+//! also `examples/train_ocean.rs`, the end-to-end driver.
+
+use pufferlib::train::{TrainConfig, Trainer};
+
+fn main() {
+    let full = std::env::var("PUFFER_BENCH_FULL").is_ok();
+    let quick = ["ocean/bandit", "ocean/password", "ocean/stochastic"];
+    let all = [
+        ("ocean/bandit", 30_000u64),
+        ("ocean/password", 30_000),
+        ("ocean/stochastic", 30_000),
+        ("ocean/multiagent", 30_000),
+        ("ocean/squared", 150_000),
+        ("ocean/spaces", 150_000),
+        ("ocean/memory", 120_000),
+    ];
+
+    println!("# Bench C3 — Ocean solve sweep (paper §4: score > 0.9 in ~30k)");
+    println!(
+        "| {:<18} | {:>8} | {:>7} | {:>9} | {:>8} |",
+        "env", "budget", "score", "solved@", "SPS"
+    );
+    println!(
+        "|{}|{}|{}|{}|{}|",
+        "-".repeat(20),
+        "-".repeat(10),
+        "-".repeat(9),
+        "-".repeat(11),
+        "-".repeat(10)
+    );
+
+    let mut solved = 0;
+    let mut total = 0;
+    for (env, budget) in all {
+        if !full && !quick.contains(&env) {
+            continue;
+        }
+        total += 1;
+        let cfg = TrainConfig {
+            env: env.to_string(),
+            total_steps: budget,
+            log_every: 0,
+            ..Default::default()
+        };
+        match Trainer::new(cfg, "artifacts").and_then(|mut t| t.train()) {
+            Ok(report) => {
+                let score = report.mean_score.unwrap_or(0.0);
+                if score > 0.9 {
+                    solved += 1;
+                }
+                let solved_at = report
+                    .score_curve
+                    .iter()
+                    .find(|(_, s)| *s > 0.9)
+                    .map(|(s, _)| s.to_string())
+                    .unwrap_or_else(|| "-".into());
+                println!(
+                    "| {:<18} | {:>8} | {:>7.3} | {:>9} | {:>8.0} |",
+                    env, budget, score, solved_at, report.sps
+                );
+            }
+            Err(e) => println!("| {:<18} | {:>8} | error: {e} |", env, budget),
+        }
+    }
+    println!("\n{solved}/{total} solved (score > 0.9)");
+    if !full {
+        println!("(set PUFFER_BENCH_FULL=1 for the whole suite)");
+    }
+}

@@ -1,0 +1,125 @@
+//! **Bench P1** — PJRT runtime latency/throughput for every entry point:
+//! forward (both batch sizes), the Pallas GAE kernel, and the full PPO
+//! train step. This is the learner-side hot path the trainer drives; the
+//! §Perf targets in EXPERIMENTS.md come from here.
+//!
+//! `cargo bench --bench runtime`; `PUFFER_BENCH_SECS` per entry.
+
+use pufferlib::runtime::*;
+use pufferlib::util::stats::{percentile, Welford};
+use std::time::Instant;
+
+fn bench_entry(
+    label: &str,
+    reps_budget_secs: f64,
+    mut run: impl FnMut() -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    // Warmup.
+    for _ in 0..3 {
+        run()?;
+    }
+    let mut lat = Welford::new();
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < reps_budget_secs {
+        let s = Instant::now();
+        run()?;
+        let us = s.elapsed().as_secs_f64() * 1e6;
+        lat.push(us);
+        samples.push(us);
+    }
+    println!(
+        "| {:<22} | {:>9.0} | {:>9.0} | {:>9.0} | {:>7} |",
+        label,
+        lat.mean(),
+        percentile(&samples, 50.0),
+        percentile(&samples, 99.0),
+        lat.count()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let secs: f64 = std::env::var("PUFFER_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+
+    let mut rt = Runtime::new("artifacts")?;
+    let spec = rt.manifest().spec("ocean_squared")?.clone();
+    let (bf, br, t, d) = (spec.batch_fwd, spec.batch_roll, spec.horizon, spec.obs_dim);
+    let n = t * br;
+    let params = vec![0.01f32; spec.n_params];
+
+    println!("# Bench P1 — PJRT entry-point latency (ocean_squared spec: obs {d}, {} params)", spec.n_params);
+    println!(
+        "| {:<22} | {:>9} | {:>9} | {:>9} | {:>7} |",
+        "entry", "mean µs", "p50 µs", "p99 µs", "reps"
+    );
+    println!(
+        "|{}|{}|{}|{}|{}|",
+        "-".repeat(24),
+        "-".repeat(11),
+        "-".repeat(11),
+        "-".repeat(11),
+        "-".repeat(9)
+    );
+
+    // forward at both batch sizes
+    for b in [bf, br] {
+        let exe = rt.load("ocean_squared", &format!("forward_b{b}"))?;
+        let obs = vec![0.1f32; b * d];
+        bench_entry(&format!("forward_b{b}"), secs, || {
+            let out = exe.run(&[lit_f32(&params), lit_f32_2d(&obs, b, d)?])?;
+            std::hint::black_box(&out);
+            Ok(())
+        })?;
+    }
+
+    // GAE (Pallas kernel)
+    {
+        let exe = rt.load("ocean_squared", "gae")?;
+        let z = vec![0.1f32; n];
+        let lv = vec![0.0f32; br];
+        bench_entry("gae (pallas)", secs, || {
+            let out = exe.run(&[
+                lit_f32_2d(&z, t, br)?,
+                lit_f32_2d(&z, t, br)?,
+                lit_f32_2d(&z, t, br)?,
+                lit_f32(&lv),
+            ])?;
+            std::hint::black_box(&out);
+            Ok(())
+        })?;
+    }
+
+    // train_step (full PPO update, fused MLP fwd+bwd + Adam)
+    {
+        let exe = rt.load("ocean_squared", "train_step")?;
+        let obs = vec![0.1f32; n * d];
+        let actions = vec![0i32; n];
+        let zn = vec![0.0f32; n];
+        let m = vec![0.0f32; spec.n_params];
+        bench_entry("train_step", secs.max(3.0), || {
+            let out = exe.run(&[
+                lit_f32(&params),
+                lit_f32(&m),
+                lit_f32(&m),
+                lit_scalar(0.0),
+                lit_scalar(1e-3),
+                lit_scalar(0.01),
+                lit_f32_2d(&obs, n, d)?,
+                lit_i32_2d(&actions, n, 1)?,
+                lit_f32(&zn),
+                lit_f32(&zn),
+                lit_f32(&zn),
+            ])?;
+            std::hint::black_box(&out);
+            Ok(())
+        })?;
+    }
+
+    println!("\n# derived: forward_b{bf} rows/s and train_step steps/s set the");
+    println!("# learner ceiling; compare against rollout SPS in bench T2.");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! **Bench T2 + C4** — reproduces the paper's Table 2: vectorized
+//! throughput of PufferLib (sync), Puffer Pool (EnvPool), and the
+//! Gymnasium / SB3 baseline designs, across the profiled environments.
+//!
+//! One host column (the paper had desktop + laptop); the quantity that
+//! must reproduce is the *ordering and ratios* between implementations,
+//! not absolute SPS — see EXPERIMENTS.md.
+//!
+//! `cargo bench --bench vectorization [-- env-substring]`
+//! `PUFFER_BENCH_SECS` per-cell budget (default 2.0).
+
+use pufferlib::emulation::FlatEnv;
+use pufferlib::envs;
+use pufferlib::vector::autotune::measure;
+use pufferlib::vector::baselines::{GymnasiumVec, Sb3Vec};
+use pufferlib::vector::{Multiprocessing, VecConfig, VecEnv};
+use std::sync::Arc;
+
+type Factory = Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>;
+
+/// (display name, factory, num_envs, workers). Slow sims are time-scaled
+/// (relative comparisons unaffected; DESIGN.md §Substitutions).
+fn workloads() -> Vec<(&'static str, Factory, usize, usize)> {
+    fn scaled(name: &'static str, scale: f64) -> Factory {
+        Arc::new(move |i| envs::profile::make_profile_scaled(name, i as u64, scale))
+    }
+    fn plain(name: &'static str) -> Factory {
+        Arc::new(move |i| envs::make(name, i as u64))
+    }
+    vec![
+        ("Neural MMO", scaled("nmmo", 0.1), 4, 4),
+        ("Nethack", scaled("nethack", 1.0), 8, 4),
+        ("Minihack", scaled("minihack", 1.0), 8, 4),
+        ("Pokemon Red", scaled("pokemon", 0.1), 8, 4),
+        ("Cartpole", plain("classic/cartpole"), 8, 4),
+        ("Ocean Squared", plain("ocean/squared"), 8, 4),
+        ("Procgen Bigfish", scaled("procgen", 1.0), 8, 4),
+        ("Atari Breakout", scaled("atari", 0.25), 8, 4),
+        ("Crafter", scaled("crafter", 0.05), 8, 4),
+        ("Minigrid", scaled("minigrid", 1.0), 8, 4),
+    ]
+}
+
+fn cell(factory: &Factory, backend: &str, num_envs: usize, workers: usize, secs: f64) -> Option<f64> {
+    let f = factory.clone();
+    let mk = move |i: usize| f(i);
+    let sync_cfg = VecConfig {
+        num_envs,
+        num_workers: workers,
+        batch_size: num_envs,
+        ..Default::default()
+    };
+    let pool_cfg = VecConfig {
+        num_envs,
+        num_workers: workers,
+        batch_size: num_envs / 2,
+        ..Default::default()
+    };
+    let res = match backend {
+        "puffer" => Multiprocessing::new(mk, sync_cfg).ok().map(|v| measure(v, secs)),
+        "pool" => {
+            if pool_cfg.mode().is_err() {
+                return None;
+            }
+            Multiprocessing::new(mk, pool_cfg).ok().map(|v| measure(v, secs))
+        }
+        "gymnasium" => GymnasiumVec::new(mk, sync_cfg).ok().map(|v| measure(v, secs)),
+        "sb3" => Sb3Vec::new(mk, sync_cfg).ok().map(|v| measure(v, secs)),
+        _ => unreachable!(),
+    };
+    res.and_then(|r| r.ok())
+}
+
+fn main() {
+    let secs: f64 = std::env::var("PUFFER_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .map(|s| s.to_lowercase());
+
+    println!("# Bench T2 — vectorized throughput (env-steps/sec), one host");
+    println!("# paper Table 2; time-scaled sims marked (×s) in EXPERIMENTS.md");
+    println!(
+        "| {:<16} | {:>10} | {:>11} | {:>10} | {:>10} | {:>5} |",
+        "Environment", "PufferLib", "Puffer Pool", "Gymnasium", "SB3", "best"
+    );
+    println!(
+        "|{}|{}|{}|{}|{}|{}|",
+        "-".repeat(18),
+        "-".repeat(12),
+        "-".repeat(13),
+        "-".repeat(12),
+        "-".repeat(12),
+        "-".repeat(7)
+    );
+
+    for (name, factory, num_envs, workers) in workloads() {
+        if let Some(f) = &filter {
+            if !name.to_lowercase().contains(f.as_str()) {
+                continue;
+            }
+        }
+        let puffer = cell(&factory, "puffer", num_envs, workers, secs);
+        let pool = cell(&factory, "pool", num_envs, workers, secs);
+        let gym = cell(&factory, "gymnasium", num_envs, workers, secs);
+        let sb3 = cell(&factory, "sb3", num_envs, workers, secs);
+        let fmt = |x: Option<f64>| x.map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into());
+        let best = [("puffer", puffer), ("pool", pool), ("gym", gym), ("sb3", sb3)]
+            .into_iter()
+            .filter_map(|(n, v)| v.map(|v| (n, v)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(n, _)| n)
+            .unwrap_or("-");
+        println!(
+            "| {:<16} | {:>10} | {:>11} | {:>10} | {:>10} | {:>5} |",
+            name,
+            fmt(puffer),
+            fmt(pool),
+            fmt(gym),
+            fmt(sb3),
+            best
+        );
+    }
+    println!("\n# C4 note: pokemon row ≈ the paper's §7 Pokémon Red training workload;");
+    println!("# compare Puffer Pool vs SB3 columns for the claimed 2-3x.");
+}

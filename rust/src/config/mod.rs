@@ -1,0 +1,114 @@
+//! Configuration: a YAML-subset file format plus `--key.path=value` CLI
+//! overrides (Clean PuffeRL ships "clean YAML configs" with a runner CLI;
+//! serde is unavailable offline, so the parser lives here).
+//!
+//! Supported YAML subset: nested maps by 2-space indentation, scalar
+//! values (bool/int/float/string), `#` comments, blank lines. That covers
+//! every config this project ships; anything else is a parse error.
+
+mod yaml;
+
+pub use yaml::{parse_yaml, YamlError};
+
+use crate::train::TrainConfig;
+use std::collections::BTreeMap;
+
+/// A flat key→scalar view of a config tree ("train.lr" → "0.0025").
+pub type FlatConfig = BTreeMap<String, String>;
+
+/// Apply `--a.b=c`-style CLI overrides onto a flat config. Returns the
+/// list of unrecognized args (for the caller to reject or pass on).
+pub fn apply_overrides<'a>(
+    cfg: &mut FlatConfig,
+    args: impl Iterator<Item = &'a str>,
+) -> Vec<String> {
+    let mut rest = Vec::new();
+    for arg in args {
+        if let Some(body) = arg.strip_prefix("--") {
+            if let Some((k, v)) = body.split_once('=') {
+                cfg.insert(k.to_string(), v.to_string());
+                continue;
+            }
+        }
+        rest.push(arg.to_string());
+    }
+    rest
+}
+
+fn get_parse<T: std::str::FromStr>(cfg: &FlatConfig, key: &str, default: T) -> T {
+    cfg.get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Build a [`TrainConfig`] from a flat config (file + overrides merged).
+/// Unknown keys under `train.` are ignored; everything has a default.
+pub fn train_config(cfg: &FlatConfig) -> TrainConfig {
+    let d = TrainConfig::default();
+    TrainConfig {
+        env: cfg.get("train.env").cloned().unwrap_or(d.env),
+        total_steps: get_parse(cfg, "train.total_steps", d.total_steps),
+        lr: get_parse(cfg, "train.lr", d.lr),
+        ent_coef: get_parse(cfg, "train.ent_coef", d.ent_coef),
+        epochs: get_parse(cfg, "train.epochs", d.epochs),
+        anneal_lr: get_parse(cfg, "train.anneal_lr", d.anneal_lr),
+        seed: get_parse(cfg, "train.seed", d.seed),
+        num_workers: get_parse(cfg, "train.num_workers", d.num_workers),
+        pool: get_parse(cfg, "train.pool", d.pool),
+        run_dir: cfg.get("train.run_dir").cloned(),
+        log_every: get_parse(cfg, "train.log_every", d.log_every),
+    }
+}
+
+/// Load a config file (if given) and apply CLI overrides.
+pub fn load(path: Option<&str>, args: &[String]) -> anyhow::Result<(FlatConfig, Vec<String>)> {
+    let mut flat = match path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow::anyhow!("reading config {p}: {e}"))?;
+            parse_yaml(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))?
+        }
+        None => FlatConfig::new(),
+    };
+    let rest = apply_overrides(&mut flat, args.iter().map(String::as_str));
+    Ok((flat, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.lr".into(), "0.001".into());
+        let rest = apply_overrides(
+            &mut cfg,
+            ["--train.lr=0.01", "--train.pool=true", "positional"].into_iter(),
+        );
+        assert_eq!(cfg["train.lr"], "0.01");
+        assert_eq!(cfg["train.pool"], "true");
+        assert_eq!(rest, vec!["positional"]);
+    }
+
+    #[test]
+    fn train_config_defaults_and_parsing() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.env".into(), "ocean/memory".into());
+        cfg.insert("train.total_steps".into(), "50000".into());
+        cfg.insert("train.pool".into(), "true".into());
+        let tc = train_config(&cfg);
+        assert_eq!(tc.env, "ocean/memory");
+        assert_eq!(tc.total_steps, 50_000);
+        assert!(tc.pool);
+        assert_eq!(tc.epochs, TrainConfig::default().epochs);
+    }
+
+    #[test]
+    fn bad_values_fall_back_to_default() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.lr".into(), "banana".into());
+        let tc = train_config(&cfg);
+        assert_eq!(tc.lr, TrainConfig::default().lr);
+    }
+}

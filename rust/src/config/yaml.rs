@@ -1,0 +1,139 @@
+//! Minimal YAML-subset parser producing flat dotted keys.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for YamlError {}
+
+/// Parse the YAML subset (nested maps via 2-space indents, scalars,
+/// comments) into flat dotted keys: `{a: {b: 1}}` → `{"a.b": "1"}`.
+pub fn parse_yaml(text: &str) -> Result<BTreeMap<String, String>, YamlError> {
+    let mut out = BTreeMap::new();
+    // Stack of (indent, key-prefix).
+    let mut stack: Vec<(usize, String)> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim_end();
+        if line.trim().is_empty() {
+            continue;
+        }
+        let indent = line.len() - line.trim_start().len();
+        if indent % 2 != 0 {
+            return Err(YamlError {
+                line: lineno + 1,
+                msg: "odd indentation (use 2-space indents)".into(),
+            });
+        }
+        let body = line.trim_start();
+        let (key, value) = body.split_once(':').ok_or(YamlError {
+            line: lineno + 1,
+            msg: "expected 'key: value' or 'key:'".into(),
+        })?;
+        let key = key.trim();
+        if key.is_empty() || key.contains(' ') {
+            return Err(YamlError {
+                line: lineno + 1,
+                msg: format!("bad key '{key}'"),
+            });
+        }
+        // Pop scopes deeper or equal to this indent.
+        while let Some(&(d, _)) = stack.last() {
+            if d >= indent {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(d, _)) = stack.last() {
+            if indent > d + 2 {
+                return Err(YamlError {
+                    line: lineno + 1,
+                    msg: "over-indented".into(),
+                });
+            }
+        } else if indent != 0 {
+            return Err(YamlError {
+                line: lineno + 1,
+                msg: "top-level keys must not be indented".into(),
+            });
+        }
+        let prefix = stack
+            .last()
+            .map(|(_, p)| format!("{p}.{key}"))
+            .unwrap_or_else(|| key.to_string());
+
+        let value = value.trim();
+        if value.is_empty() {
+            // A nested map scope.
+            stack.push((indent, prefix));
+        } else {
+            let v = value.trim_matches('"').trim_matches('\'');
+            out.insert(prefix, v.to_string());
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_maps_flatten() {
+        let text = "\
+# Clean PuffeRL config
+train:
+  env: ocean/squared   # the env
+  lr: 0.0025
+  pool: true
+  nested:
+    deep: 7
+vec:
+  workers: 4
+";
+        let m = parse_yaml(text).unwrap();
+        assert_eq!(m["train.env"], "ocean/squared");
+        assert_eq!(m["train.lr"], "0.0025");
+        assert_eq!(m["train.pool"], "true");
+        assert_eq!(m["train.nested.deep"], "7");
+        assert_eq!(m["vec.workers"], "4");
+    }
+
+    #[test]
+    fn dedent_returns_to_outer_scope() {
+        let text = "\
+a:
+  b: 1
+c: 2
+";
+        let m = parse_yaml(text).unwrap();
+        assert_eq!(m["a.b"], "1");
+        assert_eq!(m["c"], "2");
+    }
+
+    #[test]
+    fn quoted_strings_unquoted() {
+        let m = parse_yaml("k: \"hello world\"\n").unwrap();
+        assert_eq!(m["k"], "hello world");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_yaml("ok: 1\n   bad: 2\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(parse_yaml("just a line\n").is_err());
+        assert!(parse_yaml("  indented: 1\n").is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! [`FlatEnv`] — the Atari-shaped interface every vectorization backend
+//! consumes. One env owns `num_agents()` fixed-size rows; single-agent
+//! envs have exactly one row.
+
+use super::Info;
+use crate::spaces::{Space, StructLayout};
+
+/// An environment whose observations are packed byte rows and whose
+/// actions are flat `i32` slot vectors. Produced by wrapping a
+/// [`StructuredEnv`](super::StructuredEnv) in
+/// [`PufferEnv`](super::PufferEnv) (or the multiagent analog); implemented
+/// directly only by envs that are natively flat.
+///
+/// ### Buffer contract
+///
+/// For an env with `A = num_agents()` and row width `W =
+/// obs_layout().byte_len()`:
+/// - `obs_out` is `A * W` bytes, agent-major.
+/// - `rewards`, `terms`, `truncs` are `A` long.
+/// - `actions` is `A * action_dims().len()` slots, agent-major.
+///
+/// ### Auto-reset
+///
+/// `step` must auto-reset: when the episode ends, the env immediately
+/// starts a new one and writes the *new* episode's first observation. The
+/// final observation of the old episode is not surfaced (standard vector
+/// semantics; PPO-style algorithms bootstrap off the done flag instead).
+pub trait FlatEnv: Send {
+    /// Layout of one observation row.
+    fn obs_layout(&self) -> &StructLayout;
+    /// Per-slot cardinalities of the emulated MultiDiscrete action.
+    fn action_dims(&self) -> &[usize];
+    /// The structured observation space (for user-side unflattening).
+    fn observation_space(&self) -> &Space;
+    /// The structured action space.
+    fn action_space(&self) -> &Space;
+    /// Fixed number of agent rows (1 for single-agent envs).
+    fn num_agents(&self) -> usize {
+        1
+    }
+    /// Begin a new episode; write each agent's first observation.
+    fn reset(&mut self, seed: u64, obs_out: &mut [u8]) -> Info;
+    /// Advance one step for all agents.
+    fn step(
+        &mut self,
+        actions: &[i32],
+        obs_out: &mut [u8],
+        rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+    ) -> Info;
+}
+
+/// Blanket impl so `Box<dyn FlatEnv>` is itself a `FlatEnv` (workers store
+/// trait objects).
+impl FlatEnv for Box<dyn FlatEnv> {
+    fn obs_layout(&self) -> &StructLayout {
+        (**self).obs_layout()
+    }
+    fn action_dims(&self) -> &[usize] {
+        (**self).action_dims()
+    }
+    fn observation_space(&self) -> &Space {
+        (**self).observation_space()
+    }
+    fn action_space(&self) -> &Space {
+        (**self).action_space()
+    }
+    fn num_agents(&self) -> usize {
+        (**self).num_agents()
+    }
+    fn reset(&mut self, seed: u64, obs_out: &mut [u8]) -> Info {
+        (**self).reset(seed, obs_out)
+    }
+    fn step(
+        &mut self,
+        actions: &[i32],
+        obs_out: &mut [u8],
+        rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+    ) -> Info {
+        (**self).step(actions, obs_out, rewards, terms, truncs)
+    }
+}

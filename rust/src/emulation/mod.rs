@@ -1,0 +1,114 @@
+//! The emulation layer (paper §3.1): one-line wrappers that make any
+//! structured environment *look like Atari* — flat fixed-size observation
+//! rows and a single MultiDiscrete action — with an exact inverse and no
+//! loss of generality.
+//!
+//! - [`StructuredEnv`] / [`StructuredMultiEnv`] are what environment
+//!   authors implement: arbitrary [`Space`] trees, structured [`Value`]s.
+//! - [`PufferEnv`] / [`PufferMultiEnv`] wrap them into [`FlatEnv`]: packed
+//!   byte rows per agent, flat `i32` action slots, auto-reset, episode-stat
+//!   info aggregation, first-batch shape checks, canonical agent ordering,
+//!   and padding for variable population sizes.
+//! - Vectorization ([`crate::vector`]) operates **only** on [`FlatEnv`] —
+//!   the "hard assumption on PufferLib emulation" that makes shared-memory
+//!   and zero-copy batching possible (paper §3.3).
+
+mod flat;
+mod multi;
+mod single;
+
+pub use flat::FlatEnv;
+pub use multi::PufferMultiEnv;
+pub use single::PufferEnv;
+
+use crate::spaces::Value;
+
+/// Per-step auxiliary information. Numeric key/value pairs; an empty info
+/// is "pruned" by vectorization (never crosses the worker boundary), so
+/// well-behaved envs emit infos only on episode end — exactly the paper's
+/// pipes-once-per-episode discipline.
+pub type Info = Vec<(&'static str, f64)>;
+
+/// Identifier for an agent within a multiagent environment. Emulation
+/// sorts observations/actions by this id (canonical order, paper §3.1).
+pub type AgentId = u32;
+
+/// A single-agent environment with arbitrary structured spaces. This is
+/// the Gym/Gymnasium-shaped trait environment authors implement.
+pub trait StructuredEnv: Send {
+    fn observation_space(&self) -> crate::spaces::Space;
+    fn action_space(&self) -> crate::spaces::Space;
+    /// Start a new episode; returns the initial observation.
+    fn reset(&mut self, seed: u64) -> Value;
+    /// Advance one step. Returns (obs, reward, terminated, truncated, info).
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info);
+}
+
+/// A multiagent environment (PettingZoo-shaped): a variable set of agents,
+/// each with the same per-agent spaces. Agents may join/leave between
+/// steps up to [`max_agents`](Self::max_agents).
+pub trait StructuredMultiEnv: Send {
+    /// Per-agent observation space.
+    fn observation_space(&self) -> crate::spaces::Space;
+    /// Per-agent action space.
+    fn action_space(&self) -> crate::spaces::Space;
+    /// Upper bound on simultaneously alive agents (fixed buffer size).
+    fn max_agents(&self) -> usize;
+    /// Start a new episode; returns (agent, obs) for each alive agent, in
+    /// any order — emulation sorts them.
+    fn reset(&mut self, seed: u64) -> Vec<(AgentId, Value)>;
+    /// Advance one step given (agent, action) pairs for alive agents.
+    /// Returns per-agent (id, obs, reward, terminated) plus a shared info;
+    /// `episode_over` ends the episode for everyone.
+    fn step(&mut self, actions: &[(AgentId, Value)]) -> MultiStep;
+}
+
+/// Result of one multiagent step.
+pub struct MultiStep {
+    pub agents: Vec<(AgentId, Value, f32, bool)>,
+    pub episode_over: bool,
+    pub info: Info,
+}
+
+/// Streaming accumulator for per-episode statistics. The wrappers use this
+/// to aggregate rewards/lengths so that infos cross the worker boundary
+/// once per episode (paper §3.3 "Empty infos are pruned, and we provide
+/// wrappers to aggregate them over episodes").
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeStats {
+    pub ret: f64,
+    pub len: u64,
+}
+
+impl EpisodeStats {
+    #[inline]
+    pub fn push(&mut self, reward: f32) {
+        self.ret += reward as f64;
+        self.len += 1;
+    }
+
+    /// Drain into an info payload and reset for the next episode.
+    pub fn emit(&mut self, info: &mut Info) {
+        info.push(("episode_return", self.ret));
+        info.push(("episode_length", self.len as f64));
+        *self = EpisodeStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_stats_accumulate_and_reset() {
+        let mut s = EpisodeStats::default();
+        s.push(1.0);
+        s.push(0.5);
+        let mut info = Info::new();
+        s.emit(&mut info);
+        assert_eq!(info[0], ("episode_return", 1.5));
+        assert_eq!(info[1], ("episode_length", 2.0));
+        assert_eq!(s.ret, 0.0);
+        assert_eq!(s.len, 0);
+    }
+}

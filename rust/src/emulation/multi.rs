@@ -1,0 +1,310 @@
+//! [`PufferMultiEnv`] — the one-line wrapper for multiagent environments
+//! with variable population size.
+//!
+//! Mirrors the paper's multiagent guarantees (§3.1): observations and
+//! actions are kept in **canonical sorted order** by agent id, and when
+//! the population is below `max_agents` the wrapper **pads** rows so data
+//! buffers stay fixed-size. Padded rows carry zero observations, zero
+//! reward, and `terminated = true` (so a learner masks them naturally).
+
+use super::{AgentId, EpisodeStats, FlatEnv, Info, StructuredMultiEnv};
+use crate::spaces::{Space, StructLayout, Value};
+
+/// Flattening/padding wrapper around a [`StructuredMultiEnv`].
+pub struct PufferMultiEnv<E: StructuredMultiEnv> {
+    env: E,
+    obs_space: Space,
+    act_space: Space,
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    max_agents: usize,
+    /// Sorted ids of currently alive agents; index in this vec == row.
+    alive: Vec<AgentId>,
+    stats: EpisodeStats,
+    checked: bool,
+    episode_seed: u64,
+    scratch_actions: Vec<(AgentId, Value)>,
+}
+
+impl<E: StructuredMultiEnv> PufferMultiEnv<E> {
+    pub fn new(env: E) -> Self {
+        let obs_space = env.observation_space();
+        let act_space = env.action_space();
+        let layout = obs_space.layout();
+        let action_dims = act_space
+            .action_dims()
+            .expect("PufferMultiEnv: continuous action leaves unsupported");
+        let max_agents = env.max_agents();
+        assert!(max_agents > 0, "max_agents must be positive");
+        PufferMultiEnv {
+            env,
+            obs_space,
+            act_space,
+            layout,
+            action_dims,
+            max_agents,
+            alive: Vec::with_capacity(max_agents),
+            stats: EpisodeStats::default(),
+            checked: false,
+            episode_seed: 0,
+            scratch_actions: Vec::with_capacity(max_agents),
+        }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.env
+    }
+
+    /// Currently alive agents, in canonical (sorted) row order.
+    pub fn alive(&self) -> &[AgentId] {
+        &self.alive
+    }
+
+    fn check_first(&mut self, obs: &Value) {
+        if self.checked {
+            return;
+        }
+        assert!(
+            self.obs_space.contains(obs),
+            "PufferMultiEnv: first observation does not match the declared \
+             per-agent observation space.\n  space: {:?}\n  obs: {:?}",
+            self.obs_space,
+            obs
+        );
+        self.checked = true;
+    }
+
+    /// Write per-agent observations into fixed rows: alive agents in
+    /// sorted order first, zero padding for the remainder.
+    fn write_rows(&mut self, mut per_agent: Vec<(AgentId, Value)>, obs_out: &mut [u8]) {
+        let w = self.layout.byte_len();
+        debug_assert_eq!(obs_out.len(), self.max_agents * w);
+        assert!(
+            per_agent.len() <= self.max_agents,
+            "env returned {} agents > max_agents {}",
+            per_agent.len(),
+            self.max_agents
+        );
+        // Canonical sorted order (paper §3.1).
+        per_agent.sort_by_key(|(id, _)| *id);
+        self.alive.clear();
+        for (row, (id, obs)) in per_agent.iter().enumerate() {
+            self.check_first(obs);
+            self.alive.push(*id);
+            self.layout
+                .write_value(obs, &mut obs_out[row * w..(row + 1) * w]);
+        }
+        // Pad the tail with zeros so buffers stay fixed-size.
+        obs_out[per_agent.len() * w..].fill(0);
+    }
+}
+
+impl<E: StructuredMultiEnv> FlatEnv for PufferMultiEnv<E> {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn observation_space(&self) -> &Space {
+        &self.obs_space
+    }
+    fn action_space(&self) -> &Space {
+        &self.act_space
+    }
+    fn num_agents(&self) -> usize {
+        self.max_agents
+    }
+
+    fn reset(&mut self, seed: u64, obs_out: &mut [u8]) -> Info {
+        self.episode_seed = seed;
+        self.stats = EpisodeStats::default();
+        let per_agent = self.env.reset(seed);
+        assert!(!per_agent.is_empty(), "reset returned no agents");
+        self.write_rows(per_agent, obs_out);
+        Info::new()
+    }
+
+    fn step(
+        &mut self,
+        actions: &[i32],
+        obs_out: &mut [u8],
+        rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+    ) -> Info {
+        let slots = self.action_dims.len();
+        debug_assert_eq!(actions.len(), self.max_agents * slots);
+
+        // Route flat action rows back to alive agents (rows beyond the
+        // alive population are padding and are dropped).
+        self.scratch_actions.clear();
+        for (row, &id) in self.alive.iter().enumerate() {
+            let a = self
+                .act_space
+                .unflatten_action(&actions[row * slots..(row + 1) * slots]);
+            self.scratch_actions.push((id, a));
+        }
+        let step = self.env.step(&std::mem::take(&mut self.scratch_actions));
+        let mut info = step.info;
+
+        // Per-agent outputs in canonical order, padded.
+        let mut agents = step.agents;
+        agents.sort_by_key(|(id, ..)| *id);
+        let n = agents.len();
+        assert!(n <= self.max_agents);
+        let mut mean_reward = 0.0f32;
+        let mut per_agent = Vec::with_capacity(n);
+        for (row, (id, obs, reward, term)) in agents.into_iter().enumerate() {
+            rewards[row] = reward;
+            terms[row] = term || step.episode_over;
+            truncs[row] = false;
+            mean_reward += reward;
+            per_agent.push((id, obs));
+        }
+        for row in n..self.max_agents {
+            rewards[row] = 0.0;
+            terms[row] = true; // padded rows read as terminated
+            truncs[row] = false;
+        }
+        self.stats.push(mean_reward / n.max(1) as f32);
+
+        if step.episode_over {
+            self.stats.emit(&mut info);
+            info.push(("num_agents", n as f64));
+            self.episode_seed = self
+                .episode_seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1);
+            let first = self.env.reset(self.episode_seed);
+            self.write_rows(first, obs_out);
+        } else {
+            self.write_rows(per_agent, obs_out);
+        }
+        info
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::MultiStep;
+
+    /// Mock multiagent env: starts with 3 agents (ids 5, 1, 9 — returned
+    /// unsorted on purpose); agent dies when it picks action 0; episode
+    /// ends after `horizon` steps or when all die. Obs = [id, t].
+    struct MockArena {
+        t: u32,
+        horizon: u32,
+        alive: Vec<AgentId>,
+    }
+
+    impl MockArena {
+        fn new(horizon: u32) -> Self {
+            MockArena {
+                t: 0,
+                horizon,
+                alive: vec![],
+            }
+        }
+        fn obs(&self, id: AgentId) -> Value {
+            Value::F32(vec![id as f32, self.t as f32])
+        }
+    }
+
+    impl StructuredMultiEnv for MockArena {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[2], 0.0, 1e6)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(3)
+        }
+        fn max_agents(&self) -> usize {
+            4
+        }
+        fn reset(&mut self, _seed: u64) -> Vec<(AgentId, Value)> {
+            self.t = 0;
+            self.alive = vec![5, 1, 9]; // deliberately unsorted
+            self.alive.iter().map(|&id| (id, self.obs(id))).collect()
+        }
+        fn step(&mut self, actions: &[(AgentId, Value)]) -> MultiStep {
+            self.t += 1;
+            let mut survivors = Vec::new();
+            for &(id, ref a) in actions {
+                if a.as_discrete().unwrap() != 0 {
+                    survivors.push(id);
+                }
+            }
+            self.alive = survivors.clone();
+            let over = self.t >= self.horizon || self.alive.is_empty();
+            MultiStep {
+                agents: survivors
+                    .iter()
+                    .map(|&id| (id, self.obs(id), 1.0, false))
+                    .collect(),
+                episode_over: over,
+                info: Info::new(),
+            }
+        }
+    }
+
+    fn read_row(env: &PufferMultiEnv<MockArena>, obs: &[u8], row: usize) -> Vec<f32> {
+        let w = env.obs_layout().byte_len();
+        let v = env
+            .obs_layout()
+            .read_value(env.observation_space(), &obs[row * w..(row + 1) * w]);
+        v.as_f32s().unwrap().to_vec()
+    }
+
+    #[test]
+    fn canonical_sort_and_padding_on_reset() {
+        let mut env = PufferMultiEnv::new(MockArena::new(10));
+        let w = env.obs_layout().byte_len();
+        let mut obs = vec![0xAAu8; 4 * w];
+        env.reset(0, &mut obs);
+        assert_eq!(env.alive(), &[1, 5, 9], "sorted canonical order");
+        assert_eq!(read_row(&env, &obs, 0), vec![1.0, 0.0]);
+        assert_eq!(read_row(&env, &obs, 1), vec![5.0, 0.0]);
+        assert_eq!(read_row(&env, &obs, 2), vec![9.0, 0.0]);
+        assert_eq!(read_row(&env, &obs, 3), vec![0.0, 0.0], "padded row zeroed");
+    }
+
+    #[test]
+    fn dead_agents_padded_and_rewards_routed() {
+        let mut env = PufferMultiEnv::new(MockArena::new(10));
+        let w = env.obs_layout().byte_len();
+        let mut obs = vec![0u8; 4 * w];
+        env.reset(0, &mut obs);
+
+        // Rows are [1, 5, 9, pad]. Kill agent 5 (row 1, action 0).
+        let actions = [1, 0, 2, 0];
+        let mut r = [0.0; 4];
+        let (mut te, mut tr) = ([false; 4], [false; 4]);
+        let info = env.step(&actions, &mut obs, &mut r, &mut te, &mut tr);
+        assert!(info.is_empty());
+        assert_eq!(env.alive(), &[1, 9]);
+        assert_eq!(r, [1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(te, [false, false, true, true], "dead + padded rows terminated");
+        assert_eq!(read_row(&env, &obs, 0), vec![1.0, 1.0]);
+        assert_eq!(read_row(&env, &obs, 1), vec![9.0, 1.0]);
+        assert_eq!(read_row(&env, &obs, 2), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn episode_over_resets_and_reports() {
+        let mut env = PufferMultiEnv::new(MockArena::new(2));
+        let w = env.obs_layout().byte_len();
+        let mut obs = vec![0u8; 4 * w];
+        env.reset(3, &mut obs);
+        let mut r = [0.0; 4];
+        let (mut te, mut tr) = ([false; 4], [false; 4]);
+        env.step(&[1, 1, 1, 0], &mut obs, &mut r, &mut te, &mut tr);
+        let info = env.step(&[1, 1, 1, 0], &mut obs, &mut r, &mut te, &mut tr);
+        assert!(te[..3].iter().all(|&t| t), "episode over terminates everyone");
+        assert!(info.iter().any(|(k, _)| *k == "episode_return"));
+        assert!(info.iter().any(|(k, v)| *k == "num_agents" && *v == 3.0));
+        // Fresh episode: 3 agents alive again at t=0.
+        assert_eq!(env.alive(), &[1, 5, 9]);
+        assert_eq!(read_row(&env, &obs, 0), vec![1.0, 0.0]);
+    }
+}

@@ -1,0 +1,289 @@
+//! [`PufferEnv`] — the one-line wrapper for single-agent environments.
+//!
+//! `PufferEnv::new(env)` is the entire integration story for an env author
+//! (paper §3.1): it infers the structured-array layout from the env's
+//! spaces, flattens observations into packed rows, emulates the action
+//! space as a single MultiDiscrete, validates shapes on the *first*
+//! observation only (no steady-state overhead), auto-resets, and
+//! aggregates episode statistics into once-per-episode infos.
+
+use super::{EpisodeStats, FlatEnv, Info, StructuredEnv};
+use crate::spaces::{Space, StructLayout, Value};
+
+/// Flattening wrapper around a [`StructuredEnv`].
+pub struct PufferEnv<E: StructuredEnv> {
+    env: E,
+    obs_space: Space,
+    act_space: Space,
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    stats: EpisodeStats,
+    /// Shape checks run on the first observation and first action only.
+    checked: bool,
+    episode_seed: u64,
+}
+
+impl<E: StructuredEnv> PufferEnv<E> {
+    /// Wrap an environment. Panics immediately if the action space
+    /// contains a continuous (Box) leaf — mirroring the paper's current
+    /// limitation (§8); see [`crate::policy::continuous`] for the
+    /// extension pathway.
+    pub fn new(env: E) -> Self {
+        let obs_space = env.observation_space();
+        let act_space = env.action_space();
+        let layout = obs_space.layout();
+        let action_dims = act_space.action_dims().unwrap_or_else(|| {
+            panic!("PufferEnv: action space has continuous leaves; use ContinuousPolicy instead")
+        });
+        PufferEnv {
+            env,
+            obs_space,
+            act_space,
+            layout,
+            action_dims,
+            stats: EpisodeStats::default(),
+            checked: false,
+            episode_seed: 0,
+        }
+    }
+
+    /// Access the wrapped environment.
+    pub fn inner(&self) -> &E {
+        &self.env
+    }
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.env
+    }
+
+    fn check_first(&mut self, obs: &Value) {
+        if self.checked {
+            return;
+        }
+        assert!(
+            self.obs_space.contains(obs),
+            "PufferEnv: first observation does not match the declared \
+             observation space.\n  space: {:?}\n  obs: {:?}\n(This check runs \
+             only on the first batch, so it costs nothing at steady state.)",
+            self.obs_space,
+            obs
+        );
+        self.checked = true;
+    }
+
+    fn write_obs(&mut self, obs: &Value, obs_out: &mut [u8]) {
+        self.check_first(obs);
+        self.layout.write_value(obs, obs_out);
+    }
+}
+
+impl<E: StructuredEnv> FlatEnv for PufferEnv<E> {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn observation_space(&self) -> &Space {
+        &self.obs_space
+    }
+    fn action_space(&self) -> &Space {
+        &self.act_space
+    }
+
+    fn reset(&mut self, seed: u64, obs_out: &mut [u8]) -> Info {
+        self.episode_seed = seed;
+        self.stats = EpisodeStats::default();
+        let obs = self.env.reset(seed);
+        self.write_obs(&obs, obs_out);
+        Info::new()
+    }
+
+    fn step(
+        &mut self,
+        actions: &[i32],
+        obs_out: &mut [u8],
+        rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+    ) -> Info {
+        debug_assert_eq!(actions.len(), self.action_dims.len());
+        let action = self.act_space.unflatten_action(actions);
+        let (obs, reward, term, trunc, mut info) = self.env.step(&action);
+        self.stats.push(reward);
+        rewards[0] = reward;
+        terms[0] = term;
+        truncs[0] = trunc;
+        if term || trunc {
+            // Auto-reset: surface episode stats, then write the next
+            // episode's first observation.
+            self.stats.emit(&mut info);
+            self.episode_seed = self.episode_seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let first = self.env.reset(self.episode_seed);
+            self.write_obs(&first, obs_out);
+        } else {
+            self.write_obs(&obs, obs_out);
+        }
+        info
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spaces::Dtype;
+
+    /// Minimal structured env for wrapper tests: dict obs {pos: f32[2],
+    /// tile: u8[4]}, dict action {dir: Discrete(4), jump: Discrete(2)}.
+    /// Terminates after `horizon` steps with reward 1 per step.
+    struct MockEnv {
+        t: u32,
+        horizon: u32,
+        last_action: Option<(i64, i64)>,
+    }
+
+    impl MockEnv {
+        fn new(horizon: u32) -> Self {
+            MockEnv {
+                t: 0,
+                horizon,
+                last_action: None,
+            }
+        }
+        fn obs(&self) -> Value {
+            Value::Dict(vec![
+                ("pos".into(), Value::F32(vec![self.t as f32, -1.0])),
+                ("tile".into(), Value::U8(vec![1, 2, 3, self.t as u8])),
+            ])
+        }
+    }
+
+    impl StructuredEnv for MockEnv {
+        fn observation_space(&self) -> Space {
+            Space::dict(vec![
+                ("pos".into(), Space::boxf(&[2], -1e6, 1e6)),
+                ("tile".into(), Space::boxu8(&[4])),
+            ])
+        }
+        fn action_space(&self) -> Space {
+            Space::dict(vec![
+                ("dir".into(), Space::Discrete(4)),
+                ("jump".into(), Space::Discrete(2)),
+            ])
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            self.t = 0;
+            self.obs()
+        }
+        fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+            let dir = action.field("dir").unwrap().as_discrete().unwrap();
+            let jump = action.field("jump").unwrap().as_discrete().unwrap();
+            self.last_action = Some((dir, jump));
+            self.t += 1;
+            let done = self.t >= self.horizon;
+            (self.obs(), 1.0, done, false, Info::new())
+        }
+    }
+
+    #[test]
+    fn wrapper_shapes() {
+        let env = PufferEnv::new(MockEnv::new(3));
+        // dict order: pos < tile → [f32 x2][u8 x4] = 12 bytes, 6 f32 elems
+        assert_eq!(env.obs_layout().byte_len(), 12);
+        assert_eq!(env.obs_layout().flat_len(), 6);
+        assert_eq!(env.action_dims(), &[4, 2]);
+        assert_eq!(env.num_agents(), 1);
+        assert_eq!(env.obs_layout().fields()[0].dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn step_flattens_and_unflattens() {
+        let mut env = PufferEnv::new(MockEnv::new(10));
+        let w = env.obs_layout().byte_len();
+        let mut obs = vec![0u8; w];
+        env.reset(0, &mut obs);
+
+        let (mut r, mut te, mut tr) = ([0.0], [false], [false]);
+        let info = env.step(&[2, 1], &mut obs, &mut r, &mut te, &mut tr);
+        assert!(info.is_empty(), "no info mid-episode");
+        assert_eq!(env.inner().last_action, Some((2, 1)));
+        assert_eq!(r[0], 1.0);
+        assert!(!te[0] && !tr[0]);
+
+        // Flat row decodes back to the structured obs.
+        let v = env.obs_layout().read_value(&env.inner().observation_space(), &obs);
+        assert_eq!(v.field("pos").unwrap().as_f32s(), Some(&[1.0f32, -1.0][..]));
+        assert_eq!(v.field("tile").unwrap().as_u8s(), Some(&[1u8, 2, 3, 1][..]));
+    }
+
+    #[test]
+    fn auto_reset_emits_episode_stats() {
+        let mut env = PufferEnv::new(MockEnv::new(2));
+        let w = env.obs_layout().byte_len();
+        let mut obs = vec![0u8; w];
+        env.reset(7, &mut obs);
+        let (mut r, mut te, mut tr) = ([0.0], [false], [false]);
+
+        let info = env.step(&[0, 0], &mut obs, &mut r, &mut te, &mut tr);
+        assert!(info.is_empty());
+        let info = env.step(&[0, 0], &mut obs, &mut r, &mut te, &mut tr);
+        assert!(te[0]);
+        assert_eq!(info, vec![("episode_return", 2.0), ("episode_length", 2.0)]);
+
+        // Auto-reset wrote the *new* episode's first obs (t=0).
+        let v = env.obs_layout().read_value(&env.inner().observation_space(), &obs);
+        assert_eq!(v.field("pos").unwrap().as_f32s().unwrap()[0], 0.0);
+
+        // Next episode accumulates fresh stats.
+        let info = env.step(&[0, 0], &mut obs, &mut r, &mut te, &mut tr);
+        assert!(info.is_empty());
+    }
+
+    /// Env that lies about its observation space — the first-batch check
+    /// must catch it.
+    struct LyingEnv;
+    impl StructuredEnv for LyingEnv {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[4], 0.0, 1.0)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(2)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            Value::F32(vec![0.5; 3]) // wrong length!
+        }
+        fn step(&mut self, _a: &Value) -> (Value, f32, bool, bool, Info) {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "first observation does not match")]
+    fn first_batch_shape_check_catches_bad_envs() {
+        let mut env = PufferEnv::new(LyingEnv);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+    }
+
+    /// Continuous action spaces are rejected up front (paper §8).
+    struct ContinuousActEnv;
+    impl StructuredEnv for ContinuousActEnv {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[1], 0.0, 1.0)
+        }
+        fn action_space(&self) -> Space {
+            Space::boxf(&[2], -1.0, 1.0)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            Value::F32(vec![0.0])
+        }
+        fn step(&mut self, _a: &Value) -> (Value, f32, bool, bool, Info) {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "continuous leaves")]
+    fn continuous_actions_rejected() {
+        let _ = PufferEnv::new(ContinuousActEnv);
+    }
+}

@@ -1,0 +1,249 @@
+//! A Breakout-style paddle game on a continuous field with a discrete
+//! brick wall. Structured observation (continuous kinematics + u8 brick
+//! bitmap) exercises the mixed-dtype flattening path; the game itself is a
+//! real learnable environment.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+const ROWS: usize = 4;
+const COLS: usize = 12;
+const PADDLE_W: f32 = 0.15;
+const PADDLE_SPEED: f32 = 0.05;
+const BALL_SPEED: f32 = 0.025;
+const BRICK_TOP: f32 = 0.1; // wall occupies y in [BRICK_TOP, BRICK_BOTTOM)
+const BRICK_BOTTOM: f32 = 0.35;
+const MAX_STEPS: u32 = 2000;
+
+/// Paddle-and-bricks arcade game on the unit square. y grows downward;
+/// the paddle sits at y = 1.
+pub struct Breakout {
+    ball: (f32, f32),
+    vel: (f32, f32),
+    paddle_x: f32,
+    bricks: Vec<u8>, // 1 = alive
+    t: u32,
+    cleared: u32,
+    rng: Rng,
+}
+
+impl Breakout {
+    pub fn new() -> Self {
+        Breakout {
+            ball: (0.5, 0.5),
+            vel: (0.0, 0.0),
+            paddle_x: 0.5,
+            bricks: vec![1; ROWS * COLS],
+            t: 0,
+            cleared: 0,
+            rng: Rng::new(0),
+        }
+    }
+
+    fn brick_at(x: f32, y: f32) -> Option<usize> {
+        if !(BRICK_TOP..BRICK_BOTTOM).contains(&y) || !(0.0..1.0).contains(&x) {
+            return None;
+        }
+        let row = ((y - BRICK_TOP) / (BRICK_BOTTOM - BRICK_TOP) * ROWS as f32) as usize;
+        let col = (x * COLS as f32) as usize;
+        Some(row.min(ROWS - 1) * COLS + col.min(COLS - 1))
+    }
+
+    fn obs(&self) -> Value {
+        // Canonical key order: bricks < state.
+        Value::Dict(vec![
+            ("bricks".into(), Value::U8(self.bricks.clone())),
+            (
+                "state".into(),
+                Value::F32(vec![
+                    self.ball.0,
+                    self.ball.1,
+                    self.vel.0 / BALL_SPEED,
+                    self.vel.1 / BALL_SPEED,
+                    self.paddle_x,
+                ]),
+            ),
+        ])
+    }
+}
+
+impl Default for Breakout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StructuredEnv for Breakout {
+    fn observation_space(&self) -> Space {
+        Space::dict(vec![
+            ("bricks".into(), Space::boxu8(&[ROWS, COLS])),
+            ("state".into(), Space::boxf(&[5], -2.0, 2.0)),
+        ])
+    }
+
+    /// 0: stay, 1: left, 2: right.
+    fn action_space(&self) -> Space {
+        Space::Discrete(3)
+    }
+
+    fn reset(&mut self, seed: u64) -> Value {
+        self.rng = Rng::new(seed ^ 0x4252_4B54);
+        self.ball = (self.rng.uniform(0.2, 0.8), 0.6);
+        let angle = self.rng.uniform(-0.8, 0.8);
+        self.vel = (BALL_SPEED * angle.sin(), BALL_SPEED * angle.cos().abs());
+        self.paddle_x = 0.5;
+        self.bricks.fill(1);
+        self.t = 0;
+        self.cleared = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let a = action.as_discrete().expect("Breakout: Discrete action");
+        match a {
+            0 => {}
+            1 => self.paddle_x = (self.paddle_x - PADDLE_SPEED).max(PADDLE_W / 2.0),
+            2 => self.paddle_x = (self.paddle_x + PADDLE_SPEED).min(1.0 - PADDLE_W / 2.0),
+            _ => panic!("Breakout: action {a} out of range"),
+        }
+
+        let mut reward = 0.0;
+        // Advance the ball.
+        self.ball.0 += self.vel.0;
+        self.ball.1 += self.vel.1;
+
+        // Side walls.
+        if self.ball.0 <= 0.0 {
+            self.ball.0 = -self.ball.0;
+            self.vel.0 = self.vel.0.abs();
+        } else if self.ball.0 >= 1.0 {
+            self.ball.0 = 2.0 - self.ball.0;
+            self.vel.0 = -self.vel.0.abs();
+        }
+        // Ceiling.
+        if self.ball.1 <= 0.0 {
+            self.ball.1 = -self.ball.1;
+            self.vel.1 = self.vel.1.abs();
+        }
+        // Brick collisions.
+        if let Some(idx) = Self::brick_at(self.ball.0, self.ball.1) {
+            if self.bricks[idx] == 1 {
+                self.bricks[idx] = 0;
+                self.cleared += 1;
+                self.vel.1 = -self.vel.1;
+                reward += 1.0;
+            }
+        }
+        // Paddle (y = 1) when moving down.
+        let mut dropped = false;
+        if self.ball.1 >= 1.0 {
+            if (self.ball.0 - self.paddle_x).abs() <= PADDLE_W / 2.0 {
+                self.ball.1 = 2.0 - self.ball.1;
+                // English: hit offset steers the ball.
+                let off = (self.ball.0 - self.paddle_x) / (PADDLE_W / 2.0);
+                self.vel.0 = BALL_SPEED * 0.9 * off;
+                self.vel.1 = -(BALL_SPEED * BALL_SPEED - self.vel.0 * self.vel.0)
+                    .max(1e-6)
+                    .sqrt();
+            } else {
+                dropped = true;
+            }
+        }
+
+        self.t += 1;
+        let all_cleared = self.cleared as usize == ROWS * COLS;
+        let timeout = self.t >= MAX_STEPS;
+        let done = dropped || all_cleared || timeout;
+        let mut info = Info::new();
+        if done {
+            info.push(("score", self.cleared as f64 / (ROWS * COLS) as f64));
+        }
+        (self.obs(), reward, dropped || all_cleared, timeout && !dropped && !all_cleared, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::check_space_contract;
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut Breakout::new(), 3);
+    }
+
+    #[test]
+    fn tracking_paddle_clears_bricks() {
+        // Follow the ball's x: a decent heuristic that should clear a good
+        // chunk of the wall and never drop early.
+        let mut env = Breakout::new();
+        env.reset(2);
+        let mut total_reward = 0.0;
+        for _ in 0..MAX_STEPS {
+            let a = if env.paddle_x < env.ball.0 - 0.02 {
+                2
+            } else if env.paddle_x > env.ball.0 + 0.02 {
+                1
+            } else {
+                0
+            };
+            let (_, r, term, trunc, _) = env.step(&Value::Discrete(a));
+            total_reward += r;
+            if term || trunc {
+                break;
+            }
+        }
+        assert!(total_reward >= 5.0, "tracker cleared only {total_reward}");
+    }
+
+    #[test]
+    fn idle_paddle_drops_ball() {
+        let mut env = Breakout::new();
+        env.reset(7);
+        let mut steps = 0;
+        loop {
+            let (_, _, term, trunc, _) = env.step(&Value::Discrete(0));
+            steps += 1;
+            if term || trunc {
+                break;
+            }
+            assert!(steps < MAX_STEPS, "idle game never ended");
+        }
+        assert!(steps < 500, "idle survived suspiciously long: {steps}");
+    }
+
+    #[test]
+    fn brick_hits_pay_exactly_once() {
+        let mut env = Breakout::new();
+        env.reset(0);
+        // Aim the ball straight up into a brick column.
+        env.ball = (0.5, 0.4);
+        env.vel = (0.0, -BALL_SPEED);
+        let mut rewards = 0.0;
+        for _ in 0..12 {
+            let (_, r, ..) = env.step(&Value::Discrete(0));
+            rewards += r;
+        }
+        // Ball passes through the wall band once going up: exactly one
+        // brick pays, then the ball bounces back down.
+        assert_eq!(rewards, 1.0, "expected exactly one brick");
+        assert!(env.vel.1 > 0.0, "ball should bounce downward");
+    }
+
+    #[test]
+    fn ball_stays_in_bounds() {
+        let mut env = Breakout::new();
+        let mut rng = Rng::new(3);
+        env.reset(1);
+        for _ in 0..3000 {
+            let (_, _, term, trunc, _) =
+                env.step(&Value::Discrete(rng.below(3) as i64));
+            assert!((-0.05..=1.05).contains(&env.ball.0), "x {}", env.ball.0);
+            assert!((-0.05..=1.2).contains(&env.ball.1), "y {}", env.ball.1);
+            if term || trunc {
+                env.reset(2);
+            }
+        }
+    }
+}

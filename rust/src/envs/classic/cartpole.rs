@@ -1,0 +1,184 @@
+//! CartPole-v1 with the exact OpenAI Gym dynamics (Barto, Sutton &
+//! Anderson 1983 as implemented in `gym/envs/classic_control/cartpole.py`):
+//! Euler integration at 0.02s, force ±10N, terminate at |x| > 2.4 or
+//! |θ| > 12°. This is the paper's canonical "fast env" — 270k raw SPS in
+//! Table 1 — so it doubles as the overhead stress test.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+const GRAVITY: f64 = 9.8;
+const MASS_CART: f64 = 1.0;
+const MASS_POLE: f64 = 0.1;
+const TOTAL_MASS: f64 = MASS_CART + MASS_POLE;
+const LENGTH: f64 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f64 = MASS_POLE * LENGTH;
+const FORCE_MAG: f64 = 10.0;
+const TAU: f64 = 0.02;
+const X_THRESHOLD: f64 = 2.4;
+const THETA_THRESHOLD: f64 = 12.0 * std::f64::consts::PI / 180.0;
+
+/// The classic pole-balancing control task.
+pub struct CartPole {
+    state: [f64; 4], // x, x_dot, theta, theta_dot
+    t: u32,
+    max_steps: u32,
+    rng: Rng,
+}
+
+impl CartPole {
+    pub fn new(max_steps: u32) -> Self {
+        CartPole {
+            state: [0.0; 4],
+            t: 0,
+            max_steps,
+            rng: Rng::new(0),
+        }
+    }
+
+    pub fn state(&self) -> &[f64; 4] {
+        &self.state
+    }
+
+    fn obs(&self) -> Value {
+        Value::F32(self.state.map(|x| x as f32).to_vec())
+    }
+}
+
+impl StructuredEnv for CartPole {
+    fn observation_space(&self) -> Space {
+        // Gym reports ±4.8 / ±inf / ±0.418 / ±inf; use generous finite
+        // bounds (the contract check needs finite ranges).
+        Space::boxf(&[4], -1e6, 1e6)
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete(2)
+    }
+
+    fn reset(&mut self, seed: u64) -> Value {
+        self.rng = Rng::new(seed ^ 0x4341_5254);
+        for s in &mut self.state {
+            *s = self.rng.uniform(-0.05, 0.05) as f64;
+        }
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let a = action.as_discrete().expect("CartPole: Discrete action");
+        let force = if a == 1 { FORCE_MAG } else { -FORCE_MAG };
+        let [x, x_dot, theta, theta_dot] = self.state;
+
+        let cos = theta.cos();
+        let sin = theta.sin();
+        let temp = (force + POLE_MASS_LENGTH * theta_dot * theta_dot * sin) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin - cos * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos * cos / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos / TOTAL_MASS;
+
+        self.state = [
+            x + TAU * x_dot,
+            x_dot + TAU * x_acc,
+            theta + TAU * theta_dot,
+            theta_dot + TAU * theta_acc,
+        ];
+        self.t += 1;
+
+        let fell = self.state[0].abs() > X_THRESHOLD || self.state[2].abs() > THETA_THRESHOLD;
+        let timeout = self.t >= self.max_steps;
+        let mut info = Info::new();
+        if fell || timeout {
+            info.push(("score", self.t as f64 / self.max_steps as f64));
+        }
+        // Gym semantics: reward 1 on every step, truncation on timeout.
+        (self.obs(), 1.0, fell, timeout && !fell, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::check_space_contract;
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut CartPole::new(50), 3);
+    }
+
+    #[test]
+    fn random_policy_falls_quickly() {
+        let mut env = CartPole::new(500);
+        let mut rng = Rng::new(5);
+        let mut lengths = Vec::new();
+        for ep in 0..20 {
+            env.reset(ep);
+            let mut t = 0;
+            loop {
+                let (_, _, term, trunc, _) =
+                    env.step(&Value::Discrete(rng.below(2) as i64));
+                t += 1;
+                if term || trunc {
+                    break;
+                }
+            }
+            lengths.push(t);
+        }
+        let mean = lengths.iter().sum::<i32>() as f64 / lengths.len() as f64;
+        // Known property of CartPole: random play survives ~20 steps.
+        assert!(mean > 8.0 && mean < 60.0, "random ep length {mean}");
+    }
+
+    #[test]
+    fn balance_controller_survives() {
+        // Simple hand controller: push in the direction the pole leans,
+        // weighted by angular velocity — keeps the pole up far longer than
+        // random (usually the full horizon).
+        let mut env = CartPole::new(200);
+        env.reset(3);
+        let mut t = 0;
+        loop {
+            let s = env.state();
+            let a = if s[2] + 0.5 * s[3] > 0.0 { 1 } else { 0 };
+            let (_, _, term, trunc, _) = env.step(&Value::Discrete(a));
+            t += 1;
+            if term || trunc {
+                break;
+            }
+        }
+        assert!(t >= 150, "controller survived only {t} steps");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = CartPole::new(100);
+        let mut b = CartPole::new(100);
+        a.reset(9);
+        b.reset(9);
+        for _ in 0..50 {
+            let (oa, ra, ta, _, _) = a.step(&Value::Discrete(1));
+            let (ob, rb, tb, _, _) = b.step(&Value::Discrete(1));
+            assert_eq!(oa, ob);
+            assert_eq!(ra, rb);
+            assert_eq!(ta, tb);
+            if ta {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn physics_sanity_pole_accelerates_downward() {
+        // From rest with a small positive angle and no force balance, the
+        // pole falls further positive.
+        let mut env = CartPole::new(100);
+        env.reset(0);
+        env.state = [0.0, 0.0, 0.05, 0.0];
+        // Alternate pushes cancel on average; the angle must grow.
+        for i in 0..20 {
+            env.step(&Value::Discrete(i % 2));
+        }
+        assert!(env.state[2] > 0.05, "theta {}", env.state[2]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Full reimplementations of classic benchmark environments: exact
+//! CartPole dynamics, a Minigrid-style egocentric gridworld, and a
+//! Breakout-style paddle game. These are real environments (not workload
+//! sims) used for end-to-end learning and for the fast-env rows of the
+//! paper's tables.
+
+mod breakout;
+mod cartpole;
+mod minigrid;
+
+pub use breakout::Breakout;
+pub use cartpole::CartPole;
+pub use minigrid::MiniGrid;

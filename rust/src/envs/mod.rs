@@ -1,0 +1,127 @@
+//! First-party environments.
+//!
+//! - [`ocean`] — the paper's §4 sanity suite: each env trains in well under
+//!   a minute and is *"trivial with correct implementations and impossible
+//!   with specific common bugs"*. Every Ocean env reports a normalized
+//!   `score` in `[0, 1]` at episode end; "solved" means score > 0.9.
+//! - [`classic`] — full reimplementations of CartPole, a Minigrid-style
+//!   gridworld, and a Breakout-style game, used for end-to-end learning.
+//! - [`profile`] — workload simulators calibrated to the paper's Table 1
+//!   profiles (NetHack, Neural MMO, Pokémon Red, Procgen, Crafter, Atari,
+//!   MiniHack, Minigrid): same observation/action structure, step-time
+//!   distribution, and reset cost as the real binaries, so the
+//!   vectorization experiments exercise the same code paths. See DESIGN.md
+//!   §Substitutions.
+//!
+//! There is deliberately **no registry** (paper §3.2): [`make`] is a plain
+//! match over first-party names; downstream users construct their own envs
+//! and wrap them with [`PufferEnv`](crate::emulation::PufferEnv) directly
+//! (see `examples/custom_env.rs`).
+
+pub mod classic;
+pub mod ocean;
+pub mod profile;
+
+use crate::emulation::{FlatEnv, PufferEnv, PufferMultiEnv};
+
+/// All first-party env names accepted by [`make`], in display order.
+pub const ALL_ENVS: &[&str] = &[
+    "ocean/squared",
+    "ocean/password",
+    "ocean/stochastic",
+    "ocean/memory",
+    "ocean/multiagent",
+    "ocean/spaces",
+    "ocean/bandit",
+    "classic/cartpole",
+    "classic/minigrid",
+    "classic/breakout",
+    "profile/nethack",
+    "profile/minihack",
+    "profile/nmmo",
+    "profile/pokemon",
+    "profile/procgen",
+    "profile/atari",
+    "profile/crafter",
+    "profile/minigrid",
+];
+
+/// Ocean env names only (the sanity-suite sweep).
+pub const OCEAN_ENVS: &[&str] = &[
+    "ocean/squared",
+    "ocean/password",
+    "ocean/stochastic",
+    "ocean/memory",
+    "ocean/multiagent",
+    "ocean/spaces",
+    "ocean/bandit",
+];
+
+/// Construct a first-party environment, already wrapped for vectorization.
+///
+/// `seed` individualizes stochastic env internals (bandit arm layout,
+/// profile-sim timing streams); episode randomness comes from the
+/// `reset(seed)` calls issued by the vectorizer.
+pub fn make(name: &str, seed: u64) -> Box<dyn FlatEnv> {
+    match name {
+        "ocean/squared" => Box::new(PufferEnv::new(ocean::Squared::new(11, seed))),
+        // Password/Bandit hide a *static* secret (paper §4) — it must be
+        // the same secret in every vectorized copy or the task is
+        // unlearnable, so the instance seed is fixed here.
+        "ocean/password" => Box::new(PufferEnv::new(ocean::Password::new(5, 0x50AD))),
+        "ocean/stochastic" => Box::new(PufferEnv::new(ocean::Stochastic::new(0.75, 64))),
+        "ocean/memory" => Box::new(PufferEnv::new(ocean::Memory::new(3, 0))),
+        "ocean/multiagent" => Box::new(PufferMultiEnv::new(ocean::Multiagent::new(8))),
+        "ocean/spaces" => Box::new(PufferEnv::new(ocean::SpacesEnv::new(8))),
+        "ocean/bandit" => Box::new(PufferEnv::new(ocean::Bandit::new(4, 0xA4A1))),
+        "classic/cartpole" => Box::new(PufferEnv::new(classic::CartPole::new(200))),
+        "classic/minigrid" => Box::new(PufferEnv::new(classic::MiniGrid::new(7))),
+        "classic/breakout" => Box::new(PufferEnv::new(classic::Breakout::new())),
+        "profile/nethack" => profile::make_profile("nethack", seed),
+        "profile/minihack" => profile::make_profile("minihack", seed),
+        "profile/nmmo" => profile::make_profile("nmmo", seed),
+        "profile/pokemon" => profile::make_profile("pokemon", seed),
+        "profile/procgen" => profile::make_profile("procgen", seed),
+        "profile/atari" => profile::make_profile("atari", seed),
+        "profile/crafter" => profile::make_profile("crafter", seed),
+        "profile/minigrid" => profile::make_profile("minigrid", seed),
+        other => panic!(
+            "unknown first-party env '{other}'. First-party names: {ALL_ENVS:?}. \
+             Custom envs need no registry: wrap them with PufferEnv::new directly."
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_first_party_envs_construct_and_step() {
+        for name in ALL_ENVS {
+            // Keep profile sims fast in tests by skipping the slowest two.
+            if *name == "profile/crafter" || *name == "profile/pokemon" {
+                continue;
+            }
+            let mut env = make(name, 1);
+            let rows = env.num_agents();
+            let w = env.obs_layout().byte_len();
+            let slots = env.action_dims().len();
+            let mut obs = vec![0u8; rows * w];
+            let mut rewards = vec![0.0; rows];
+            let mut terms = vec![false; rows];
+            let mut truncs = vec![false; rows];
+            env.reset(0, &mut obs);
+            let actions = vec![0i32; rows * slots];
+            for _ in 0..4 {
+                env.step(&actions, &mut obs, &mut rewards, &mut terms, &mut truncs);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown first-party env")]
+    fn unknown_name_panics_helpfully() {
+        make("atari/breakout-v5", 0);
+    }
+}

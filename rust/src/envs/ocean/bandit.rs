@@ -1,0 +1,128 @@
+//! **Bandit** (paper §4): a classic multiarmed bandit. One-step episodes;
+//! pulling arm `k` pays 1 with probability `p_k`. The arm layout is fixed
+//! per env instance (seeded), so the policy must find and commit to the
+//! best arm — broken exploration or value baselines show up immediately.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+/// Stationary Bernoulli bandit.
+pub struct Bandit {
+    probs: Vec<f64>,
+    best: f64,
+    rng: Rng,
+}
+
+impl Bandit {
+    /// `k` arms; the best arm pays with probability 0.9, the rest 0.3.
+    /// Which arm is best is derived from the instance `seed`.
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 2);
+        let mut rng = Rng::new(seed ^ 0x4241_4E44);
+        let best_arm = rng.below(k as u64) as usize;
+        let probs: Vec<f64> = (0..k)
+            .map(|i| if i == best_arm { 0.9 } else { 0.3 })
+            .collect();
+        Bandit {
+            probs,
+            best: 0.9,
+            rng,
+        }
+    }
+
+    pub fn arm_probs(&self) -> &[f64] {
+        &self.probs
+    }
+}
+
+impl StructuredEnv for Bandit {
+    /// Constant observation (contextless bandit).
+    fn observation_space(&self) -> Space {
+        Space::boxf(&[1], 0.0, 1.0)
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete(self.probs.len())
+    }
+
+    fn reset(&mut self, _seed: u64) -> Value {
+        Value::F32(vec![0.0])
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let arm = action.as_discrete().expect("Bandit: Discrete action") as usize;
+        assert!(arm < self.probs.len(), "Bandit: arm {arm} out of range");
+        let reward = if self.rng.chance(self.probs[arm]) {
+            1.0
+        } else {
+            0.0
+        };
+        // Score is the *expected* payout ratio of the pulled arm — noise-free
+        // so the solved threshold is meaningful on few episodes.
+        let info = vec![("score", self.probs[arm] / self.best)];
+        (Value::F32(vec![0.0]), reward, true, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::{check_space_contract, rollout_score};
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut Bandit::new(4, 5), 3);
+    }
+
+    #[test]
+    fn best_arm_scores_one() {
+        let mut env = Bandit::new(4, 9);
+        let best = env
+            .arm_probs()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i64;
+        let score = rollout_score(&mut env, 20, 0, |_, _| Value::Discrete(best));
+        assert_eq!(score, 1.0);
+    }
+
+    #[test]
+    fn worst_arm_scores_third() {
+        let mut env = Bandit::new(4, 9);
+        let worst = env
+            .arm_probs()
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as i64;
+        let score = rollout_score(&mut env, 20, 0, |_, _| Value::Discrete(worst));
+        assert!((score - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layout_static_per_seed() {
+        assert_eq!(Bandit::new(4, 3).arm_probs(), Bandit::new(4, 3).arm_probs());
+    }
+
+    #[test]
+    fn payout_rate_matches_prob() {
+        let mut env = Bandit::new(2, 1);
+        let arm = 0i64;
+        let p = env.arm_probs()[0];
+        let mut paid = 0u32;
+        for _ in 0..2000 {
+            env.reset(0);
+            let (_, r, done, _, _) = env.step(&Value::Discrete(arm));
+            assert!(done, "bandit episodes are one step");
+            if r > 0.0 {
+                paid += 1;
+            }
+        }
+        let rate = paid as f64 / 2000.0;
+        assert!((rate - p).abs() < 0.05, "rate {rate} vs p {p}");
+    }
+}

@@ -1,0 +1,146 @@
+//! **Memory** (paper §4): repeat an observed binary sequence after a
+//! delay. The sequence is regenerated on every reset and presented one
+//! digit at a time, followed by a string of zeros during which the agent
+//! must echo it back. Unsolvable without recurrence — this is the env that
+//! validates the LSTM sandwich (paper §3.4) and its state resets.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+/// Delayed sequence recall.
+pub struct Memory {
+    len: usize,
+    delay: usize,
+    seq: Vec<i64>,
+    t: usize,
+    correct: u32,
+    rng: Rng,
+}
+
+impl Memory {
+    pub fn new(len: usize, delay: usize) -> Self {
+        assert!((1..=16).contains(&len));
+        Memory {
+            len,
+            delay,
+            seq: Vec::new(),
+            t: 0,
+            correct: 0,
+            rng: Rng::new(0),
+        }
+    }
+
+    fn horizon(&self) -> usize {
+        2 * self.len + self.delay
+    }
+
+    /// Observation: `[shown_bit, presenting_flag, recalling_flag]`.
+    /// `shown_bit` carries the sequence during presentation and is 0
+    /// afterwards (the "string of 0" from the paper).
+    fn obs(&self) -> Value {
+        let presenting = self.t < self.len;
+        let recalling = self.t >= self.len + self.delay && self.t < self.horizon();
+        let bit = if presenting { self.seq[self.t] as f32 } else { 0.0 };
+        Value::F32(vec![
+            bit,
+            if presenting { 1.0 } else { 0.0 },
+            if recalling { 1.0 } else { 0.0 },
+        ])
+    }
+}
+
+impl StructuredEnv for Memory {
+    fn observation_space(&self) -> Space {
+        Space::boxf(&[3], 0.0, 1.0)
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete(2)
+    }
+
+    fn reset(&mut self, seed: u64) -> Value {
+        self.rng = Rng::new(seed ^ 0x4D45_4D4F);
+        self.seq = (0..self.len).map(|_| self.rng.below(2) as i64).collect();
+        self.t = 0;
+        self.correct = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let a = action.as_discrete().expect("Memory: Discrete action");
+        let recall_start = self.len + self.delay;
+        let mut reward = 0.0;
+        if self.t >= recall_start {
+            let target = self.seq[self.t - recall_start];
+            if a == target {
+                self.correct += 1;
+                reward = 1.0 / self.len as f32;
+            }
+        }
+        self.t += 1;
+        let done = self.t >= self.horizon();
+        let mut info = Info::new();
+        if done {
+            info.push(("score", self.correct as f64 / self.len as f64));
+        }
+        (self.obs(), reward, done, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::{check_space_contract, rollout_score};
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut Memory::new(3, 0), 3);
+    }
+
+    #[test]
+    fn perfect_recall_scores_one() {
+        let mut env = Memory::new(4, 2);
+        // Stateful oracle: record bits during presentation, replay during
+        // recall (this is exactly what the LSTM must learn to do).
+        let mut recorded: Vec<i64> = Vec::new();
+        let mut replay_idx = 0usize;
+        let score = rollout_score(&mut env, 10, 5, |obs, _| {
+            let o = obs.as_f32s().unwrap();
+            let (bit, presenting, recalling) = (o[0], o[1], o[2]);
+            if presenting > 0.5 {
+                if recorded.len() >= 4 {
+                    recorded.clear(); // fresh episode
+                }
+                recorded.push(bit as i64);
+            }
+            if recalling > 0.5 {
+                let a = recorded[replay_idx % recorded.len().max(1)];
+                replay_idx += 1;
+                return Value::Discrete(a);
+            }
+            replay_idx = 0;
+            Value::Discrete(0)
+        });
+        assert_eq!(score, 1.0, "oracle recall score {score}");
+    }
+
+    #[test]
+    fn sequence_regenerated_per_reset() {
+        let mut env = Memory::new(8, 0);
+        env.reset(1);
+        let s1 = env.seq.clone();
+        env.reset(2);
+        let s2 = env.seq.clone();
+        assert_ne!(s1, s2, "1/256 collision chance; these seeds differ");
+    }
+
+    #[test]
+    fn memoryless_policy_near_half() {
+        let mut env = Memory::new(8, 0);
+        let score = rollout_score(&mut env, 100, 13, |_, rng| {
+            Value::Discrete(rng.below(2) as i64)
+        });
+        assert!((score - 0.5).abs() < 0.1, "random score {score}");
+    }
+}

@@ -1,0 +1,143 @@
+//! **Password** (paper §4): guess a static binary string. The reward is
+//! sparse — exactly 1 when the full guess matches, else 0 — so *"the
+//! policy has to not determinize before it happens to get the reward, and
+//! it also has to latch onto the reward within a few instances of getting
+//! it"*. Catches premature entropy collapse and broken advantage signs.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+/// Sparse-reward binary string guessing.
+pub struct Password {
+    len: usize,
+    password: Vec<i64>,
+    guess: Vec<i64>,
+    t: usize,
+    obs_buf: Vec<f32>,
+}
+
+impl Password {
+    /// The password is derived from `seed` (the *instance* seed), so it is
+    /// static across episodes — that is what makes it learnable.
+    pub fn new(len: usize, seed: u64) -> Self {
+        assert!((1..=16).contains(&len));
+        let mut rng = Rng::new(seed ^ 0x5057_4421);
+        let password = (0..len).map(|_| rng.below(2) as i64).collect();
+        Password {
+            len,
+            password,
+            guess: Vec::with_capacity(len),
+            t: 0,
+            obs_buf: vec![0.0; len],
+        }
+    }
+
+    pub fn password(&self) -> &[i64] {
+        &self.password
+    }
+
+    /// Observation: one-hot of the current position in the string.
+    fn obs(&mut self) -> Value {
+        self.obs_buf.fill(0.0);
+        if self.t < self.len {
+            self.obs_buf[self.t] = 1.0;
+        }
+        Value::F32(self.obs_buf.clone())
+    }
+}
+
+impl StructuredEnv for Password {
+    fn observation_space(&self) -> Space {
+        Space::boxf(&[self.len], 0.0, 1.0)
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete(2)
+    }
+
+    fn reset(&mut self, _seed: u64) -> Value {
+        self.guess.clear();
+        self.t = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let bit = action.as_discrete().expect("Password: Discrete action");
+        assert!((0..2).contains(&bit), "Password: bit {bit} out of range");
+        self.guess.push(bit);
+        self.t += 1;
+        let done = self.t >= self.len;
+        let mut reward = 0.0;
+        let mut info = Info::new();
+        if done {
+            let correct = self.guess == self.password;
+            reward = if correct { 1.0 } else { 0.0 };
+            info.push(("score", if correct { 1.0 } else { 0.0 }));
+        }
+        (self.obs(), reward, done, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::{check_space_contract, rollout_score};
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut Password::new(5, 9), 3);
+    }
+
+    #[test]
+    fn password_static_across_episodes() {
+        let env1 = Password::new(5, 123);
+        let env2 = Password::new(5, 123);
+        assert_eq!(env1.password(), env2.password());
+        let env3 = Password::new(5, 124);
+        // 1/32 collision chance per seed pair; these seeds differ.
+        assert_ne!(env1.password(), env3.password());
+    }
+
+    #[test]
+    fn oracle_policy_scores_one() {
+        let mut env = Password::new(5, 77);
+        let password = env.password().to_vec();
+        let score = rollout_score(&mut env, 5, 0, |obs, _| {
+            let pos = obs
+                .as_f32s()
+                .unwrap()
+                .iter()
+                .position(|&x| x > 0.5)
+                .unwrap();
+            Value::Discrete(password[pos])
+        });
+        assert_eq!(score, 1.0);
+    }
+
+    #[test]
+    fn wrong_guess_scores_zero() {
+        let mut env = Password::new(5, 77);
+        let password = env.password().to_vec();
+        let score = rollout_score(&mut env, 5, 0, |obs, _| {
+            let pos = obs
+                .as_f32s()
+                .unwrap()
+                .iter()
+                .position(|&x| x > 0.5)
+                .unwrap();
+            Value::Discrete(1 - password[pos]) // always wrong
+        });
+        assert_eq!(score, 0.0);
+    }
+
+    #[test]
+    fn random_policy_hits_rarely() {
+        let mut env = Password::new(5, 3);
+        let score = rollout_score(&mut env, 200, 11, |_, rng| {
+            Value::Discrete(rng.below(2) as i64)
+        });
+        // Expected 1/32 ≈ 0.031.
+        assert!(score < 0.15, "random score {score}");
+    }
+}

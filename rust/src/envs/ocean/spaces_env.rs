@@ -1,0 +1,158 @@
+//! **Spaces** (paper §4): a simple environment with hierarchical
+//! observation *and* action spaces. Obtaining the maximal score requires
+//! taking every subspace into account — a flattening bug that drops,
+//! reorders, or mis-slices any field caps the score at 0.5.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+/// Hierarchical-space sanity check.
+///
+/// Observation: `{image: u8[4] of bits, flag: Discrete(2)}`.
+/// Action: `{parity: Discrete(2), mirror: Discrete(2)}`.
+/// Correct play: `parity = XOR(image)`, `mirror = flag`; each pays 0.5.
+pub struct SpacesEnv {
+    horizon: u32,
+    t: u32,
+    image: [u8; 4],
+    flag: i64,
+    reward_sum: f64,
+    rng: Rng,
+}
+
+impl SpacesEnv {
+    pub fn new(horizon: u32) -> Self {
+        assert!(horizon > 0);
+        SpacesEnv {
+            horizon,
+            t: 0,
+            image: [0; 4],
+            flag: 0,
+            reward_sum: 0.0,
+            rng: Rng::new(0),
+        }
+    }
+
+    fn randomize(&mut self) {
+        for b in &mut self.image {
+            *b = self.rng.below(2) as u8;
+        }
+        self.flag = self.rng.below(2) as i64;
+    }
+
+    fn parity(&self) -> i64 {
+        self.image.iter().fold(0u8, |acc, &b| acc ^ b) as i64
+    }
+
+    fn obs(&self) -> Value {
+        // Keys in canonical (sorted) order: flag < image.
+        Value::Dict(vec![
+            ("flag".into(), Value::Discrete(self.flag)),
+            ("image".into(), Value::U8(self.image.to_vec())),
+        ])
+    }
+}
+
+impl StructuredEnv for SpacesEnv {
+    fn observation_space(&self) -> Space {
+        Space::dict(vec![
+            ("image".into(), Space::boxu8(&[4])),
+            ("flag".into(), Space::Discrete(2)),
+        ])
+    }
+
+    fn action_space(&self) -> Space {
+        Space::dict(vec![
+            ("parity".into(), Space::Discrete(2)),
+            ("mirror".into(), Space::Discrete(2)),
+        ])
+    }
+
+    fn reset(&mut self, seed: u64) -> Value {
+        self.rng = Rng::new(seed ^ 0x5350_4143);
+        self.t = 0;
+        self.reward_sum = 0.0;
+        self.randomize();
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let parity = action
+            .field("parity")
+            .and_then(Value::as_discrete)
+            .expect("SpacesEnv: action.parity");
+        let mirror = action
+            .field("mirror")
+            .and_then(Value::as_discrete)
+            .expect("SpacesEnv: action.mirror");
+
+        let mut reward = 0.0;
+        if parity == self.parity() {
+            reward += 0.5;
+        }
+        if mirror == self.flag {
+            reward += 0.5;
+        }
+        self.reward_sum += reward as f64;
+        self.t += 1;
+        let done = self.t >= self.horizon;
+        let mut info = Info::new();
+        if done {
+            info.push(("score", self.reward_sum / self.horizon as f64));
+        }
+        self.randomize();
+        (self.obs(), reward, done, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::{check_space_contract, rollout_score};
+
+    fn oracle(obs: &Value) -> Value {
+        let image = obs.field("image").unwrap().as_u8s().unwrap();
+        let flag = obs.field("flag").unwrap().as_discrete().unwrap();
+        let parity = image.iter().fold(0u8, |a, &b| a ^ b) as i64;
+        // Action dict in canonical order: mirror < parity.
+        Value::Dict(vec![
+            ("mirror".into(), Value::Discrete(flag)),
+            ("parity".into(), Value::Discrete(parity)),
+        ])
+    }
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut SpacesEnv::new(4), 3);
+    }
+
+    #[test]
+    fn oracle_scores_one() {
+        let mut env = SpacesEnv::new(8);
+        let score = rollout_score(&mut env, 20, 5, |obs, _| oracle(obs));
+        assert_eq!(score, 1.0);
+    }
+
+    #[test]
+    fn ignoring_one_subspace_caps_at_threequarters() {
+        // Right parity, random mirror → 0.5 + 0.25 expected.
+        let mut env = SpacesEnv::new(8);
+        let score = rollout_score(&mut env, 60, 5, |obs, rng| {
+            let mut a = oracle(obs);
+            if let Value::Dict(entries) = &mut a {
+                entries[0].1 = Value::Discrete(rng.below(2) as i64); // mirror
+            }
+            a
+        });
+        assert!((score - 0.75).abs() < 0.06, "score {score}");
+    }
+
+    #[test]
+    fn random_scores_half() {
+        let mut env = SpacesEnv::new(8);
+        let aspace = env.action_space();
+        let score = rollout_score(&mut env, 60, 5, |_, rng| aspace.sample(rng));
+        assert!((score - 0.5).abs() < 0.06, "score {score}");
+    }
+}

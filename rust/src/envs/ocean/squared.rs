@@ -1,0 +1,259 @@
+//! **Squared** (paper §4): the agent starts at the center of a square
+//! grid; a target is placed on the perimeter. Reward is `1` minus the
+//! (normalized) L∞ distance to the closest unhit target, so it varies from
+//! −1 to 1, and hit targets stop paying. A correct implementation learns
+//! to walk outward in a handful of updates; common sign/indexing bugs make
+//! it unlearnable.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+
+/// Grid-walk toward perimeter targets.
+pub struct Squared {
+    n: usize,
+    rng: Rng,
+    agent: (i32, i32),
+    target: (i32, i32),
+    hit: bool,
+    t: u32,
+    horizon: u32,
+    reward_sum: f64,
+    obs_buf: Vec<f32>,
+}
+
+impl Squared {
+    /// `n` must be odd so the grid has an exact center.
+    pub fn new(n: usize, seed: u64) -> Self {
+        assert!(n >= 5 && n % 2 == 1, "grid side must be odd and >= 5");
+        Squared {
+            n,
+            rng: Rng::new(seed),
+            agent: (0, 0),
+            target: (0, 0),
+            hit: false,
+            t: 0,
+            horizon: 2 * n as u32,
+            reward_sum: 0.0,
+            obs_buf: vec![0.0; n * n],
+        }
+    }
+
+    fn center(&self) -> i32 {
+        (self.n / 2) as i32
+    }
+
+    /// Max possible L∞ distance to a perimeter target (from the opposite
+    /// edge).
+    fn dmax(&self) -> f32 {
+        (self.n - 1) as f32
+    }
+
+    fn linf(&self) -> f32 {
+        let dx = (self.agent.0 - self.target.0).abs();
+        let dy = (self.agent.1 - self.target.1).abs();
+        dx.max(dy) as f32
+    }
+
+    /// Reward in [-1, 1]: 1 - 2·d/dmax; zero once the target is hit.
+    fn reward(&self) -> f32 {
+        if self.hit {
+            0.0
+        } else {
+            1.0 - 2.0 * self.linf() / self.dmax()
+        }
+    }
+
+    fn sample_perimeter(&mut self) -> (i32, i32) {
+        let n = self.n as i32;
+        let side = self.rng.below(4);
+        let along = self.rng.below(self.n as u64) as i32;
+        match side {
+            0 => (along, 0),
+            1 => (along, n - 1),
+            2 => (0, along),
+            _ => (n - 1, along),
+        }
+    }
+
+    fn obs(&mut self) -> Value {
+        self.obs_buf.fill(0.0);
+        let n = self.n;
+        self.obs_buf[self.agent.1 as usize * n + self.agent.0 as usize] = 1.0;
+        if !self.hit {
+            self.obs_buf[self.target.1 as usize * n + self.target.0 as usize] = -1.0;
+        }
+        Value::F32(self.obs_buf.clone())
+    }
+}
+
+impl StructuredEnv for Squared {
+    fn observation_space(&self) -> Space {
+        Space::boxf(&[self.n, self.n], -1.0, 1.0)
+    }
+
+    /// 0: up, 1: down, 2: left, 3: right.
+    fn action_space(&self) -> Space {
+        Space::Discrete(4)
+    }
+
+    fn reset(&mut self, seed: u64) -> Value {
+        self.rng = Rng::new(seed ^ 0x5153_5152);
+        self.agent = (self.center(), self.center());
+        self.target = self.sample_perimeter();
+        self.hit = false;
+        self.t = 0;
+        self.reward_sum = 0.0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let a = action.as_discrete().expect("Squared: Discrete action");
+        let n = self.n as i32;
+        let (dx, dy) = match a {
+            0 => (0, -1),
+            1 => (0, 1),
+            2 => (-1, 0),
+            3 => (1, 0),
+            _ => panic!("Squared: action {a} out of range"),
+        };
+        self.agent.0 = (self.agent.0 + dx).clamp(0, n - 1);
+        self.agent.1 = (self.agent.1 + dy).clamp(0, n - 1);
+        self.t += 1;
+
+        // The hit step itself pays the full reward (d = 0); only *already*
+        // hit targets stop paying.
+        let just_hit = !self.hit && self.agent == self.target;
+        let reward = if just_hit { 1.0 } else { self.reward() };
+        if just_hit {
+            self.hit = true;
+        }
+        self.reward_sum += reward as f64;
+
+        let done = self.t >= self.horizon;
+        let mut info = Info::new();
+        if done {
+            // Score: 1 if the target was hit, else scaled closeness — both
+            // normalized to [0, 1].
+            let score = if self.hit {
+                1.0
+            } else {
+                (1.0 - self.linf() as f64 / self.dmax() as f64).max(0.0)
+            };
+            info.push(("score", score));
+        }
+        (self.obs(), reward, done, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::{check_space_contract, rollout_score};
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut Squared::new(7, 1), 3);
+    }
+
+    #[test]
+    fn reward_increases_toward_target() {
+        let mut env = Squared::new(11, 0);
+        env.reset(5);
+        // Greedy walk toward the target must strictly increase reward
+        // until the hit.
+        let mut last = -1.0f32;
+        for _ in 0..env.horizon {
+            let (tx, ty) = env.target;
+            let (ax, ay) = env.agent;
+            // Move along the dominant axis so L∞ strictly decreases.
+            let (dx, dy) = (tx - ax, ty - ay);
+            let a = if dx.abs() >= dy.abs() {
+                if dx > 0 {
+                    3
+                } else {
+                    2
+                }
+            } else if dy > 0 {
+                1
+            } else {
+                0
+            };
+            let hit_before = env.hit;
+            let (_, r, done, _, _) = env.step(&Value::Discrete(a));
+            if env.hit && !hit_before {
+                assert_eq!(r, 1.0, "reward exactly 1 on the hit step");
+                return;
+            }
+            if !env.hit {
+                // With 4-dir moves L∞ is non-increasing under the dominant-
+                // axis policy (it can stall one step when |dx| == |dy|).
+                assert!(r >= last, "reward {r} decreased from {last}");
+                last = r;
+            }
+            if done {
+                break;
+            }
+        }
+        panic!("greedy policy failed to reach the target");
+    }
+
+    #[test]
+    fn greedy_policy_scores_one() {
+        let mut env = Squared::new(11, 0);
+        let score = rollout_score(&mut env, 20, 42, |obs, _rng| {
+            // Decode agent + target from the flat grid.
+            let g = obs.as_f32s().unwrap();
+            let n = 11i32;
+            let mut agent = (0, 0);
+            let mut target = None;
+            for (i, &v) in g.iter().enumerate() {
+                let (x, y) = (i as i32 % n, i as i32 / n);
+                if v > 0.5 {
+                    agent = (x, y);
+                } else if v < -0.5 {
+                    target = Some((x, y));
+                }
+            }
+            let a = match target {
+                Some((tx, ty)) => {
+                    if agent.0 < tx {
+                        3
+                    } else if agent.0 > tx {
+                        2
+                    } else if agent.1 < ty {
+                        1
+                    } else {
+                        0
+                    }
+                }
+                None => 0,
+            };
+            Value::Discrete(a)
+        });
+        assert!(score > 0.95, "greedy score {score}");
+    }
+
+    #[test]
+    fn random_policy_scores_low() {
+        let mut env = Squared::new(11, 0);
+        let score = rollout_score(&mut env, 30, 7, |_obs, rng| {
+            Value::Discrete(rng.below(4) as i64)
+        });
+        assert!(score < 0.7, "random score {score} suspiciously high");
+    }
+
+    #[test]
+    fn reward_bounds() {
+        let mut env = Squared::new(7, 2);
+        let mut rng = Rng::new(1);
+        env.reset(0);
+        for _ in 0..200 {
+            let (_, r, done, _, _) = env.step(&Value::Discrete(rng.below(4) as i64));
+            assert!((-1.0..=1.0).contains(&r), "reward {r} out of [-1,1]");
+            if done {
+                env.reset(1);
+            }
+        }
+    }
+}

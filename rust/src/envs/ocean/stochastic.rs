@@ -1,0 +1,112 @@
+//! **Stochastic** (paper §4): the optimal policy plays action 0 with
+//! probability `p` and action 1 with probability `1 − p`. The observation
+//! is constant, so a memoryless policy *must* be genuinely stochastic to
+//! score well — this catches algorithms that cannot represent or maintain
+//! a nonuniform stochastic policy (e.g. broken entropy bonuses or
+//! deterministic argmax evaluation).
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+
+/// Blind stochastic-ratio matching.
+pub struct Stochastic {
+    p: f64,
+    horizon: u32,
+    t: u32,
+    count0: u32,
+}
+
+impl Stochastic {
+    pub fn new(p: f64, horizon: u32) -> Self {
+        assert!((0.0..=1.0).contains(&p) && horizon > 0);
+        Stochastic {
+            p,
+            horizon,
+            t: 0,
+            count0: 0,
+        }
+    }
+
+    /// Score: 1 − |freq₀ − p| / max(p, 1−p), clamped to [0, 1]. A
+    /// Bernoulli(p) policy concentrates near 1; any deterministic policy
+    /// is capped well below 0.9 for p = 0.75.
+    fn score(&self) -> f64 {
+        let freq0 = self.count0 as f64 / self.horizon as f64;
+        (1.0 - (freq0 - self.p).abs() / self.p.max(1.0 - self.p)).max(0.0)
+    }
+}
+
+impl StructuredEnv for Stochastic {
+    /// Constant observation: the env is intentionally blind.
+    fn observation_space(&self) -> Space {
+        Space::boxf(&[1], 0.0, 1.0)
+    }
+
+    fn action_space(&self) -> Space {
+        Space::Discrete(2)
+    }
+
+    fn reset(&mut self, _seed: u64) -> Value {
+        self.t = 0;
+        self.count0 = 0;
+        Value::F32(vec![0.0])
+    }
+
+    fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        let a = action.as_discrete().expect("Stochastic: Discrete action");
+        if a == 0 {
+            self.count0 += 1;
+        }
+        self.t += 1;
+        let done = self.t >= self.horizon;
+        let mut reward = 0.0;
+        let mut info = Info::new();
+        if done {
+            let score = self.score();
+            reward = score as f32;
+            info.push(("score", score));
+        }
+        (Value::F32(vec![0.0]), reward, done, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::ocean::testutil::{check_space_contract, rollout_score};
+
+    #[test]
+    fn space_contract() {
+        check_space_contract(&mut Stochastic::new(0.75, 16), 3);
+    }
+
+    #[test]
+    fn bernoulli_p_policy_scores_high() {
+        let mut env = Stochastic::new(0.75, 64);
+        let score = rollout_score(&mut env, 50, 4, |_, rng| {
+            Value::Discrete(if rng.chance(0.75) { 0 } else { 1 })
+        });
+        assert!(score > 0.9, "matched policy score {score}");
+    }
+
+    #[test]
+    fn deterministic_policies_capped() {
+        let mut env = Stochastic::new(0.75, 64);
+        let all0 = rollout_score(&mut env, 10, 0, |_, _| Value::Discrete(0));
+        let all1 = rollout_score(&mut env, 10, 0, |_, _| Value::Discrete(1));
+        // all-0: freq0 = 1 → score = 1 - 0.25/0.75 = 2/3.
+        assert!((all0 - 2.0 / 3.0).abs() < 1e-9, "all0 {all0}");
+        assert_eq!(all1, 0.0, "all1 {all1}");
+        assert!(all0 < 0.9 && all1 < 0.9, "deterministic must not solve");
+    }
+
+    #[test]
+    fn uniform_random_below_matched() {
+        let mut env = Stochastic::new(0.75, 64);
+        let uniform = rollout_score(&mut env, 50, 9, |_, rng| {
+            Value::Discrete(rng.below(2) as i64)
+        });
+        // freq0 ≈ 0.5 → score ≈ 1 - 0.25/0.75 ≈ 0.67.
+        assert!(uniform < 0.8, "uniform {uniform}");
+    }
+}

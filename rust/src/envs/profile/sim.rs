@@ -1,0 +1,263 @@
+//! [`ProfileSim`] — the single-agent workload simulator.
+
+use crate::emulation::{Info, StructuredEnv};
+use crate::spaces::{Space, Value};
+use crate::util::rng::Rng;
+use crate::util::timer::spin_for;
+use std::time::Duration;
+
+/// Timing/structure profile of a simulated environment. See
+/// [`super::config`] for the Table 1 calibrations.
+#[derive(Clone, Debug)]
+pub struct ProfileConfig {
+    pub name: &'static str,
+    pub obs_space: Space,
+    pub action_space: Space,
+    /// Mean step compute time in µs (at `time_scale` = 1).
+    pub step_us: f64,
+    /// Coefficient of variation of the lognormal step-time distribution.
+    pub step_cv: f64,
+    /// Fraction of total env time spent resetting (Table 1 "% Reset").
+    pub reset_frac: f64,
+    /// Mean episode length in steps (episodes are geometric around this).
+    pub ep_len: u64,
+    /// Global multiplier on all simulated times.
+    pub time_scale: f64,
+}
+
+impl ProfileConfig {
+    /// Reset cost implied by `reset_frac`:
+    /// `reset/(reset + ep_len·step) = frac`.
+    pub fn reset_us(&self) -> f64 {
+        if self.reset_frac <= 0.0 {
+            return 0.0;
+        }
+        self.reset_frac / (1.0 - self.reset_frac) * self.ep_len as f64 * self.step_us
+    }
+
+    /// A fully synthetic profile for sweeps (benches/emulation.rs F1,
+    /// benches/pool_ablation.rs C1): flat f32 obs of `obs_elems`, given
+    /// step time/CV/reset fraction.
+    pub fn synthetic(step_us: f64, step_cv: f64, reset_frac: f64, obs_elems: usize) -> Self {
+        ProfileConfig {
+            name: "synthetic",
+            obs_space: Space::boxf(&[obs_elems], -1e6, 1e6),
+            action_space: Space::Discrete(4),
+            step_us,
+            step_cv,
+            reset_frac,
+            ep_len: 64,
+            time_scale: 1.0,
+        }
+    }
+}
+
+/// Single-agent workload simulator: burns a lognormal-distributed amount
+/// of CPU per step, produces structurally realistic observations, and
+/// terminates episodes geometrically around the calibrated length.
+pub struct ProfileSim {
+    cfg: ProfileConfig,
+    rng: Rng,
+    t: u64,
+    episode_len: u64,
+    /// Lognormal parameters derived from (mean, cv).
+    mu: f64,
+    sigma: f64,
+    /// Cached observation value, cheaply mutated per step so emulation
+    /// flattens realistic (changing) data without the sim paying a full
+    /// regeneration each step.
+    obs: Value,
+    counter: u32,
+}
+
+impl ProfileSim {
+    pub fn new(cfg: ProfileConfig, seed: u64) -> Self {
+        // lognormal: mean m, cv c  ⇒  σ² = ln(1+c²), µ = ln m − σ²/2.
+        let sigma2 = (1.0 + cfg.step_cv * cfg.step_cv).ln();
+        let mu = (cfg.step_us.max(1e-9)).ln() - sigma2 / 2.0;
+        let mut rng = Rng::new(seed ^ 0x5052_4F46);
+        let obs = Self::fresh_obs(&cfg.obs_space, &mut rng);
+        ProfileSim {
+            cfg,
+            rng,
+            t: 0,
+            episode_len: 1,
+            mu,
+            sigma: sigma2.sqrt(),
+            obs,
+            counter: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ProfileConfig {
+        &self.cfg
+    }
+
+    fn fresh_obs(space: &Space, rng: &mut Rng) -> Value {
+        space.sample(rng)
+    }
+
+    /// Touch a handful of leaf entries so consecutive observations differ
+    /// (defeats any accidental memoization downstream) without paying a
+    /// full random regeneration.
+    fn mutate_obs(&mut self) {
+        self.counter = self.counter.wrapping_add(1);
+        let c = self.counter;
+        fn poke(v: &mut Value, c: u32) {
+            match v {
+                Value::F32(xs) => {
+                    let n = xs.len();
+                    xs[c as usize % n] = (c % 251) as f32;
+                }
+                Value::U8(xs) => {
+                    let n = xs.len();
+                    xs[c as usize % n] = (c % 251) as u8;
+                }
+                Value::I32(xs) => {
+                    let n = xs.len();
+                    xs[c as usize % n] = (c % 251) as i32;
+                }
+                Value::Discrete(x) => *x = (c % 2) as i64,
+                Value::MultiDiscrete(xs) => {
+                    let n = xs.len();
+                    xs[c as usize % n] = (c % 2) as i64;
+                }
+                Value::Tuple(vs) => {
+                    for v in vs {
+                        poke(v, c);
+                    }
+                }
+                Value::Dict(entries) => {
+                    for (_, v) in entries {
+                        poke(v, c);
+                    }
+                }
+            }
+        }
+        poke(&mut self.obs, c);
+    }
+
+    fn sample_step_time(&mut self) -> Duration {
+        let z = self.rng.normal();
+        let us = (self.mu + self.sigma * z).exp() * self.cfg.time_scale;
+        Duration::from_nanos((us * 1000.0) as u64)
+    }
+
+    fn sample_episode_len(&mut self) -> u64 {
+        // Geometric-ish: uniform in [0.5, 1.5] × ep_len keeps the mean and
+        // gives resets the jitter real envs have.
+        let lo = (self.cfg.ep_len / 2).max(1);
+        let hi = self.cfg.ep_len + self.cfg.ep_len / 2;
+        self.rng.range_i64(lo as i64, hi as i64) as u64
+    }
+}
+
+impl StructuredEnv for ProfileSim {
+    fn observation_space(&self) -> Space {
+        self.cfg.obs_space.clone()
+    }
+
+    fn action_space(&self) -> Space {
+        self.cfg.action_space.clone()
+    }
+
+    fn reset(&mut self, seed: u64) -> Value {
+        self.rng = Rng::new(seed ^ 0x5052_4F46 ^ self.counter as u64);
+        let reset_us = self.cfg.reset_us() * self.cfg.time_scale;
+        spin_for(Duration::from_nanos((reset_us * 1000.0) as u64));
+        self.t = 0;
+        self.episode_len = self.sample_episode_len();
+        self.mutate_obs();
+        self.obs.clone()
+    }
+
+    fn step(&mut self, _action: &Value) -> (Value, f32, bool, bool, Info) {
+        let d = self.sample_step_time();
+        spin_for(d);
+        self.t += 1;
+        self.mutate_obs();
+        let done = self.t >= self.episode_len;
+        let reward = self.rng.f32();
+        let mut info = Info::new();
+        if done {
+            info.push(("score", self.rng.f64()));
+        }
+        (self.obs.clone(), reward, done, false, info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+    use std::time::Instant;
+
+    #[test]
+    fn step_time_mean_and_cv_match_profile() {
+        let cfg = ProfileConfig::synthetic(200.0, 0.5, 0.0, 16);
+        let mut sim = ProfileSim::new(cfg, 1);
+        sim.reset(0);
+        let mut w = Welford::new();
+        let a = Value::Discrete(0);
+        for _ in 0..400 {
+            let t0 = Instant::now();
+            let (_, _, done, _, _) = sim.step(&a);
+            w.push(t0.elapsed().as_secs_f64() * 1e6);
+            if done {
+                sim.reset(1);
+            }
+        }
+        let mean = w.mean();
+        // Spin granularity adds a little; allow 25%.
+        assert!(
+            (mean - 200.0).abs() / 200.0 < 0.25,
+            "mean step {mean}µs vs 200µs"
+        );
+        assert!(w.cv() > 0.25, "cv {} too low for profile 0.5", w.cv());
+    }
+
+    #[test]
+    fn reset_cost_visible_for_high_reset_frac() {
+        let mut cfg = ProfileConfig::synthetic(50.0, 0.1, 0.5, 4);
+        cfg.ep_len = 10;
+        let reset_us = cfg.reset_us();
+        assert!((reset_us - 500.0).abs() < 1.0, "reset_us {reset_us}");
+        let mut sim = ProfileSim::new(cfg, 2);
+        let t0 = Instant::now();
+        sim.reset(0);
+        let took = t0.elapsed().as_secs_f64() * 1e6;
+        assert!(took >= 450.0, "reset took only {took}µs");
+    }
+
+    #[test]
+    fn observations_change_between_steps() {
+        let cfg = ProfileConfig::synthetic(1.0, 0.0, 0.0, 8);
+        let mut sim = ProfileSim::new(cfg, 3);
+        let o1 = sim.reset(0);
+        let (o2, ..) = sim.step(&Value::Discrete(0));
+        assert_ne!(o1, o2);
+    }
+
+    #[test]
+    fn episode_lengths_jitter_around_mean() {
+        let mut cfg = ProfileConfig::synthetic(0.1, 0.0, 0.0, 4);
+        cfg.ep_len = 40;
+        let mut sim = ProfileSim::new(cfg, 4);
+        let mut lens = Vec::new();
+        for ep in 0..30 {
+            sim.reset(ep);
+            let mut t = 0u64;
+            loop {
+                let (_, _, done, _, _) = sim.step(&Value::Discrete(0));
+                t += 1;
+                if done {
+                    break;
+                }
+            }
+            lens.push(t);
+        }
+        let mean = lens.iter().sum::<u64>() as f64 / lens.len() as f64;
+        assert!((mean - 40.0).abs() < 12.0, "mean ep len {mean}");
+        assert!(lens.iter().any(|&l| l != lens[0]), "no jitter");
+    }
+}

@@ -1,0 +1,54 @@
+//! # PufferLib (Rust + JAX + Pallas reproduction)
+//!
+//! A faithful systems reproduction of *"PufferLib: Making Reinforcement
+//! Learning Libraries and Environments Play Nice"* (Suárez, 2024), built as
+//! a three-layer stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: the emulation layer that
+//!   flattens arbitrary structured observation/action spaces
+//!   ([`emulation`]), the from-scratch vectorization engine with EnvPool
+//!   semantics and four optimized code paths ([`vector`]), first-party
+//!   environments including the Ocean sanity suite ([`envs`]), and the
+//!   Clean PuffeRL PPO trainer ([`train`]) driving AOT-compiled policies.
+//! - **Layer 2 (python/compile/model.py)** — JAX policy networks and the
+//!   PPO train step, lowered once to HLO text artifacts.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the fused
+//!   policy MLP and the GAE scan, checked against a pure-jnp oracle.
+//!
+//! Python never runs on the rollout or training path: the [`runtime`]
+//! module loads the HLO artifacts via the PJRT C API and executes them
+//! directly from Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pufferlib::prelude::*;
+//!
+//! // Wrap a structured env so it "looks like Atari" (flat obs, one
+//! // MultiDiscrete action), then vectorize it.
+//! let cfg = VecConfig { num_envs: 8, num_workers: 2, batch_size: 8, ..Default::default() };
+//! let mut venv = Multiprocessing::new(
+//!     |i| Box::new(PufferEnv::new(pufferlib::envs::ocean::Squared::new(11, i as u64))) as _,
+//!     cfg,
+//! ).unwrap();
+//! let (obs, _rewards, _terms, _truncs, _infos) = venv.reset(0).unwrap();
+//! assert_eq!(obs.len(), 8 * venv.obs_layout().byte_len());
+//! ```
+
+pub mod config;
+pub mod emulation;
+pub mod envs;
+pub mod policy;
+pub mod runtime;
+pub mod spaces;
+pub mod train;
+pub mod util;
+pub mod vector;
+
+/// Convenience re-exports covering the most common entry points.
+pub mod prelude {
+    pub use crate::emulation::{EpisodeStats, FlatEnv, PufferEnv, StructuredEnv};
+    pub use crate::spaces::{Space, StructLayout, Value};
+    pub use crate::util::rng::Rng;
+    pub use crate::vector::{Multiprocessing, Serial, StepBatch, VecConfig, VecEnv};
+}

@@ -1,0 +1,213 @@
+//! `puffer` — the Clean PuffeRL runner CLI (paper §6: "a runner file with
+//! a CLI for all included PufferLib environments, clean YAML configs").
+//!
+//! ```text
+//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--train.pool=true] ...
+//! puffer eval <env> --checkpoint runs/x/checkpoint.bin [--episodes 20]
+//! puffer sweep                      # train the whole Ocean suite
+//! puffer autotune <env> [--envs 8] [--workers 4] [--secs 1.0]
+//! puffer envs                       # list first-party environments
+//! ```
+
+use anyhow::{Context, Result};
+use pufferlib::config;
+use pufferlib::envs;
+use pufferlib::train::{Checkpoint, Trainer};
+use pufferlib::vector::autotune;
+use std::sync::Arc;
+
+const ARTIFACTS: &str = "artifacts";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+
+    match cmd {
+        "train" => cmd_train(&rest),
+        "eval" => cmd_eval(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "autotune" => cmd_autotune(&rest),
+        "envs" => {
+            for name in envs::ALL_ENVS {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'");
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
+         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...]\n  \
+         puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
+         puffer sweep [--train.KEY=VAL ...]        train the whole Ocean suite\n  \
+         puffer autotune <env> [--envs=N] [--workers=W] [--secs=S]\n  \
+         puffer envs                               list first-party envs\n\n\
+         Train keys: env total_steps lr ent_coef epochs anneal_lr seed\n\
+         \x20           num_workers pool run_dir log_every"
+    );
+}
+
+/// Extract `--config FILE` and positional args, leaving `--k=v` overrides.
+fn split_args(args: &[String]) -> (Option<String>, Vec<String>, Vec<String>) {
+    let mut cfg_file = None;
+    let mut positional = Vec::new();
+    let mut overrides = Vec::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if a == "--config" {
+            cfg_file = it.next().cloned();
+        } else if a.starts_with("--") {
+            overrides.push(a.clone());
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    (cfg_file, positional, overrides)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, overrides) = split_args(args);
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat);
+    println!("training {} for {} steps ...", tc.env, tc.total_steps);
+    let mut trainer = Trainer::new(tc, ARTIFACTS)?;
+    let report = trainer.train()?;
+    println!(
+        "done: {} steps @ {:.0} SPS, {} episodes, score {}, return {}",
+        report.global_step,
+        report.sps,
+        report.episodes,
+        report
+            .mean_score
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+        report
+            .mean_return
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    // Pull out eval-specific flags.
+    let mut checkpoint = None;
+    let mut episodes = 20usize;
+    overrides.retain(|a| {
+        if let Some(v) = a.strip_prefix("--checkpoint=") {
+            checkpoint = Some(v.to_string());
+            false
+        } else if let Some(v) = a.strip_prefix("--episodes=") {
+            episodes = v.parse().unwrap_or(20);
+            false
+        } else {
+            true
+        }
+    });
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat);
+    let mut trainer = Trainer::new(tc, ARTIFACTS)?;
+    if let Some(ck_path) = checkpoint {
+        let ck = Checkpoint::load(&ck_path).context("loading checkpoint")?;
+        trainer.restore(&ck)?;
+        println!("restored checkpoint at step {}", ck.global_step);
+    }
+    let report = trainer.eval(episodes)?;
+    println!(
+        "eval: {} episodes, score {}, return {}",
+        report.episodes,
+        report
+            .mean_score
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+        report
+            .mean_return
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let (cfg_file, _, overrides) = split_args(args);
+    let mut solved = 0;
+    for env in envs::OCEAN_ENVS {
+        let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+        flat.insert("train.env".into(), env.to_string());
+        let tc = config::train_config(&flat);
+        let mut trainer = Trainer::new(tc, ARTIFACTS)?;
+        let report = trainer.train()?;
+        let score = report.mean_score.unwrap_or(0.0);
+        let ok = score > 0.9;
+        if ok {
+            solved += 1;
+        }
+        println!(
+            "{:<20} score {:.3}  {}",
+            env,
+            score,
+            if ok { "SOLVED" } else { "unsolved" }
+        );
+    }
+    println!("{solved}/{} Ocean envs solved", envs::OCEAN_ENVS.len());
+    Ok(())
+}
+
+fn cmd_autotune(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    let env = positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "ocean/squared".into());
+    let mut num_envs = 8;
+    let mut workers = 4;
+    let mut secs = 1.0f64;
+    for a in &overrides {
+        if let Some(v) = a.strip_prefix("--envs=") {
+            num_envs = v.parse().unwrap_or(8);
+        } else if let Some(v) = a.strip_prefix("--workers=") {
+            workers = v.parse().unwrap_or(4);
+        } else if let Some(v) = a.strip_prefix("--secs=") {
+            secs = v.parse().unwrap_or(1.0);
+        }
+    }
+    println!("autotuning {env} with {num_envs} envs (≤{workers} workers, {secs}s per config) ...");
+    let env_name = env.clone();
+    let factory: Arc<dyn Fn(usize) -> Box<dyn pufferlib::emulation::FlatEnv> + Send + Sync> =
+        Arc::new(move |i| envs::make(&env_name, i as u64));
+    let results = autotune::autotune(factory, num_envs, workers, secs)?;
+    print!("{}", autotune::format_results(&results));
+    println!(
+        "\nrecommended: {} (num_workers={}, batch_size={}, zero_copy={})",
+        results[0].label,
+        results[0].cfg.num_workers,
+        results[0].cfg.batch_size,
+        results[0].cfg.zero_copy
+    );
+    Ok(())
+}

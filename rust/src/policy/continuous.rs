@@ -1,0 +1,133 @@
+//! Continuous-action support — the paper lists this as its first
+//! limitation (§8: *"PufferLib does not yet support continuous action
+//! spaces. This is a relatively straightforward feature planned for within
+//! the next few minor updates."*). This module implements the planned
+//! extension at the emulation level: a continuous `Box` action space is
+//! emulated as a MultiDiscrete over a fixed quantization grid, with an
+//! exact dequantization inverse — the same "looks like Atari" trick the
+//! emulation layer plays on observations.
+//!
+//! The grid resolution is configurable; 15 bins per dimension is enough
+//! for classic control tasks, and downstream users who need true Gaussian
+//! heads can still consume the flat observation path and bring their own
+//! actor (the emulation layer never constrains the model).
+
+use crate::spaces::{Space, Value};
+
+/// Quantization wrapper for a continuous `Box` action space.
+#[derive(Clone, Debug)]
+pub struct QuantizedActions {
+    low: f32,
+    high: f32,
+    dims: usize,
+    bins: usize,
+}
+
+impl QuantizedActions {
+    /// Build from a `Box` action space. Errors on non-Box spaces.
+    pub fn new(space: &Space, bins: usize) -> Option<Self> {
+        assert!(bins >= 2, "need at least 2 bins");
+        match space {
+            Space::Box {
+                shape, low, high, ..
+            } => Some(QuantizedActions {
+                low: *low,
+                high: *high,
+                dims: shape.iter().product::<usize>().max(1),
+                bins,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The emulated MultiDiscrete dims: `bins` choices per continuous dim.
+    pub fn action_dims(&self) -> Vec<usize> {
+        vec![self.bins; self.dims]
+    }
+
+    /// Map discrete slot choices back to continuous values (bin centers).
+    pub fn dequantize(&self, slots: &[i32]) -> Value {
+        debug_assert_eq!(slots.len(), self.dims);
+        let step = (self.high - self.low) / (self.bins as f32 - 1.0);
+        Value::F32(
+            slots
+                .iter()
+                .map(|&s| self.low + step * s as f32)
+                .collect(),
+        )
+    }
+
+    /// Map a continuous action to the nearest grid slots (round trip
+    /// partner of [`dequantize`](Self::dequantize); used by tests and by
+    /// imitation-style pipelines).
+    pub fn quantize(&self, v: &Value) -> Vec<i32> {
+        let xs = v.as_f32s().expect("continuous action must be F32");
+        debug_assert_eq!(xs.len(), self.dims);
+        let step = (self.high - self.low) / (self.bins as f32 - 1.0);
+        xs.iter()
+            .map(|&x| {
+                (((x - self.low) / step).round() as i32).clamp(0, self.bins as i32 - 1)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, CheckConfig};
+    use crate::util::rng::Rng;
+
+    fn space() -> Space {
+        Space::boxf(&[3], -2.0, 2.0)
+    }
+
+    #[test]
+    fn rejects_discrete_spaces() {
+        assert!(QuantizedActions::new(&Space::Discrete(4), 15).is_none());
+    }
+
+    #[test]
+    fn grid_shape() {
+        let q = QuantizedActions::new(&space(), 15).unwrap();
+        assert_eq!(q.action_dims(), vec![15, 15, 15]);
+    }
+
+    #[test]
+    fn dequantize_hits_bounds_and_center() {
+        let q = QuantizedActions::new(&space(), 5).unwrap();
+        let v = q.dequantize(&[0, 2, 4]);
+        assert_eq!(v.as_f32s().unwrap(), &[-2.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn quantize_dequantize_round_trip_property() {
+        let q = QuantizedActions::new(&space(), 31).unwrap();
+        let step = 4.0 / 30.0;
+        check(
+            CheckConfig::default(),
+            |rng: &mut Rng| Value::F32((0..3).map(|_| rng.uniform(-2.0, 2.0)).collect()),
+            |v| {
+                let slots = q.quantize(v);
+                let back = q.dequantize(&slots);
+                let orig = v.as_f32s().unwrap();
+                let rec = back.as_f32s().unwrap();
+                for (o, r) in orig.iter().zip(rec) {
+                    if (o - r).abs() > step / 2.0 + 1e-5 {
+                        return Err(format!("{o} -> {r} exceeds half-step"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn grid_points_exactly_recovered() {
+        let q = QuantizedActions::new(&space(), 9).unwrap();
+        for s in 0..9 {
+            let v = q.dequantize(&[s, s, s]);
+            assert_eq!(q.quantize(&v), vec![s, s, s]);
+        }
+    }
+}

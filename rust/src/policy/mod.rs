@@ -1,0 +1,223 @@
+//! The rollout-side policy: runs the AOT-compiled forward pass via PJRT,
+//! samples MultiDiscrete actions from the logits, and manages recurrent
+//! state (the LSTM "sandwich" of paper §3.4 — recurrence is a config
+//! flag, not a second model; this module owns the state-reshaping and
+//! reset-on-done logic that the paper calls the most common source of
+//! hard-to-diagnose bugs).
+
+pub mod continuous;
+
+use crate::runtime::{lit_f32, lit_f32_2d, to_f32s, Runtime, SpecManifest};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Output of one policy step over a batch of rows.
+#[derive(Clone, Debug, Default)]
+pub struct PolicyOut {
+    /// Sampled actions, `rows × slots`, row-major.
+    pub actions: Vec<i32>,
+    /// Joint log-probability of each row's action.
+    pub logp: Vec<f32>,
+    /// Value estimates per row.
+    pub values: Vec<f32>,
+}
+
+/// A policy bound to one spec. Parameters are an opaque flat f32 buffer
+/// (layout owned by python/compile/model.py; initial values come from the
+/// exported `params0` artifact).
+pub struct Policy {
+    spec_key: String,
+    spec: SpecManifest,
+    params: Vec<f32>,
+    /// Per-row recurrent state, `batch_fwd × hidden` (LSTM specs only);
+    /// indexed by global env row.
+    h: Vec<f32>,
+    c: Vec<f32>,
+    rng: Rng,
+}
+
+impl Policy {
+    /// Load initial parameters for `spec_key` from the artifacts dir.
+    pub fn new(rt: &Runtime, artifacts_dir: &str, spec_key: &str, seed: u64) -> Result<Self> {
+        let spec = rt.manifest().spec(spec_key)?.clone();
+        let path = format!("{artifacts_dir}/{}", spec.params0);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path}"))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * spec.n_params,
+            "params0 size {} != 4 * n_params {}",
+            bytes.len(),
+            spec.n_params
+        );
+        let params: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let state_rows = spec.batch_roll.max(spec.batch_fwd);
+        let state = vec![0.0; state_rows * spec.hidden];
+        Ok(Policy {
+            spec_key: spec_key.to_string(),
+            spec,
+            params,
+            h: state.clone(),
+            c: state,
+            rng: Rng::new(seed ^ 0x504F_4C49),
+        })
+    }
+
+    pub fn spec(&self) -> &SpecManifest {
+        &self.spec
+    }
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+    pub fn params_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.params
+    }
+
+    /// Zero the recurrent state of a global env row (call when that row's
+    /// episode ended — the auto-reset means its next obs starts fresh).
+    pub fn reset_state(&mut self, row: usize) {
+        if !self.spec.lstm {
+            return;
+        }
+        let h = self.spec.hidden;
+        self.h[row * h..(row + 1) * h].fill(0.0);
+        self.c[row * h..(row + 1) * h].fill(0.0);
+    }
+
+    /// Zero all recurrent state.
+    pub fn reset_all_state(&mut self) {
+        self.h.fill(0.0);
+        self.c.fill(0.0);
+    }
+
+    /// Run the forward pass on `obs` (`rows × obs_dim` f32) where `rows`
+    /// must equal `batch_fwd` or `batch_roll`; `global_rows[i]` maps batch
+    /// row `i` to its env row (for recurrent-state gather/scatter).
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        obs: &[f32],
+        global_rows: &[usize],
+    ) -> Result<PolicyOut> {
+        let rows = global_rows.len();
+        let d = self.spec.obs_dim;
+        anyhow::ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        anyhow::ensure!(
+            rows == self.spec.batch_fwd || rows == self.spec.batch_roll,
+            "forward compiled for {} or {} rows, got {rows}",
+            self.spec.batch_fwd,
+            self.spec.batch_roll
+        );
+        let hdim = self.spec.hidden;
+
+        let (logits, values) = if self.spec.lstm {
+            // Gather recurrent state for these rows.
+            let mut hbuf = vec![0.0f32; rows * hdim];
+            let mut cbuf = vec![0.0f32; rows * hdim];
+            for (i, &g) in global_rows.iter().enumerate() {
+                hbuf[i * hdim..(i + 1) * hdim]
+                    .copy_from_slice(&self.h[g * hdim..(g + 1) * hdim]);
+                cbuf[i * hdim..(i + 1) * hdim]
+                    .copy_from_slice(&self.c[g * hdim..(g + 1) * hdim]);
+            }
+            let exe = rt.load(&self.spec_key, &format!("forward_lstm_b{rows}"))?;
+            let out = exe.run(&[
+                lit_f32(&self.params),
+                lit_f32_2d(obs, rows, d)?,
+                lit_f32_2d(&hbuf, rows, hdim)?,
+                lit_f32_2d(&cbuf, rows, hdim)?,
+            ])?;
+            anyhow::ensure!(out.len() == 4, "forward_lstm returns 4 outputs");
+            let logits = to_f32s(&out[0])?;
+            let values = to_f32s(&out[1])?;
+            let h2 = to_f32s(&out[2])?;
+            let c2 = to_f32s(&out[3])?;
+            // Scatter updated state back.
+            for (i, &g) in global_rows.iter().enumerate() {
+                self.h[g * hdim..(g + 1) * hdim]
+                    .copy_from_slice(&h2[i * hdim..(i + 1) * hdim]);
+                self.c[g * hdim..(g + 1) * hdim]
+                    .copy_from_slice(&c2[i * hdim..(i + 1) * hdim]);
+            }
+            (logits, values)
+        } else {
+            let exe = rt.load(&self.spec_key, &format!("forward_b{rows}"))?;
+            let out = exe.run(&[lit_f32(&self.params), lit_f32_2d(obs, rows, d)?])?;
+            anyhow::ensure!(out.len() == 2, "forward returns (logits, value)");
+            (to_f32s(&out[0])?, to_f32s(&out[1])?)
+        };
+
+        Ok(self.sample(&logits, &values, rows))
+    }
+
+    /// Sample MultiDiscrete actions from logits; compute joint log-probs.
+    fn sample(&mut self, logits: &[f32], values: &[f32], rows: usize) -> PolicyOut {
+        let act_dims = &self.spec.act_dims;
+        let n_act: usize = act_dims.iter().sum();
+        debug_assert_eq!(logits.len(), rows * n_act);
+        let slots = act_dims.len();
+        let mut actions = vec![0i32; rows * slots];
+        let mut logp = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &logits[r * n_act..(r + 1) * n_act];
+            let mut off = 0;
+            for (s, &n) in act_dims.iter().enumerate() {
+                let seg = &row[off..off + n];
+                let a = self.rng.categorical_logits(seg);
+                actions[r * slots + s] = a as i32;
+                logp[r] += log_softmax_at(seg, a);
+                off += n;
+            }
+        }
+        PolicyOut {
+            actions,
+            logp,
+            values: values[..rows].to_vec(),
+        }
+    }
+
+    /// Greedy (argmax) actions — deterministic evaluation.
+    pub fn greedy(&self, logits_row: &[f32]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.spec.act_dims.len());
+        let mut off = 0;
+        for &n in &self.spec.act_dims {
+            let seg = &logits_row[off..off + n];
+            let arg = seg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            out.push(arg as i32);
+            off += n;
+        }
+        out
+    }
+}
+
+/// Numerically stable `log softmax(seg)[idx]`.
+pub fn log_softmax_at(seg: &[f32], idx: usize) -> f32 {
+    let max = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let logz = seg.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    seg[idx] - logz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_sane() {
+        let seg = [0.0f32, 0.0];
+        assert!((log_softmax_at(&seg, 0) - (-0.6931472)).abs() < 1e-5);
+        // Invariant to shifts.
+        let a = log_softmax_at(&[1.0, 3.0, 2.0], 1);
+        let b = log_softmax_at(&[101.0, 103.0, 102.0], 1);
+        assert!((a - b).abs() < 1e-4);
+        // Sums to one in prob space.
+        let seg = [0.3f32, -1.2, 2.0, 0.0];
+        let total: f32 = (0..4).map(|i| log_softmax_at(&seg, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,173 @@
+//! The AOT manifest: the Python→Rust shape contract written by
+//! `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Per-spec entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct SpecManifest {
+    pub obs_dim: usize,
+    pub act_dims: Vec<usize>,
+    pub agents: usize,
+    pub lstm: bool,
+    pub n_params: usize,
+    pub hidden: usize,
+    /// Agent rows per pooled forward call (`N`).
+    pub batch_fwd: usize,
+    /// Total agent rows across all envs (`M`, the GAE/train width).
+    pub batch_roll: usize,
+    /// Rollout segment length `T`.
+    pub horizon: usize,
+    pub gamma: f64,
+    pub lam: f64,
+    /// File holding the initial flat parameter vector (little-endian f32).
+    pub params0: String,
+    /// entry name → artifact file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch_fwd: usize,
+    pub batch_roll: usize,
+    pub horizon: usize,
+    specs: BTreeMap<String, SpecManifest>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut specs = BTreeMap::new();
+        let spec_obj = j
+            .get("specs")
+            .as_obj()
+            .context("manifest missing 'specs'")?;
+        for (name, s) in spec_obj {
+            let need_usize = |key: &str| -> Result<usize> {
+                s.get(key)
+                    .as_usize()
+                    .with_context(|| format!("spec {name}: bad '{key}'"))
+            };
+            let artifacts = s
+                .get("artifacts")
+                .as_obj()
+                .with_context(|| format!("spec {name}: missing artifacts"))?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                .collect();
+            specs.insert(
+                name.clone(),
+                SpecManifest {
+                    obs_dim: need_usize("obs_dim")?,
+                    act_dims: s
+                        .get("act_dims")
+                        .as_usize_vec()
+                        .with_context(|| format!("spec {name}: bad act_dims"))?,
+                    agents: need_usize("agents")?,
+                    lstm: s.get("lstm").as_bool().unwrap_or(false),
+                    n_params: need_usize("n_params")?,
+                    hidden: need_usize("hidden")?,
+                    batch_fwd: need_usize("batch_fwd")?,
+                    batch_roll: need_usize("batch_roll")?,
+                    horizon: need_usize("horizon")?,
+                    gamma: s.get("gamma").as_f64().unwrap_or(0.99),
+                    lam: s.get("lam").as_f64().unwrap_or(0.95),
+                    params0: s
+                        .get("params0")
+                        .as_str()
+                        .with_context(|| format!("spec {name}: missing params0"))?
+                        .to_string(),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest {
+            batch_fwd: j
+                .get("batch_fwd")
+                .as_usize()
+                .context("manifest: bad batch_fwd")?,
+            batch_roll: j
+                .get("batch_roll")
+                .as_usize()
+                .context("manifest: bad batch_roll")?,
+            horizon: j
+                .get("horizon")
+                .as_usize()
+                .context("manifest: bad horizon")?,
+            specs,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&SpecManifest> {
+        self.specs.get(name).with_context(|| {
+            format!(
+                "spec '{name}' not in manifest (have: {:?})",
+                self.specs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn spec_names(&self) -> impl Iterator<Item = &str> {
+        self.specs.keys().map(String::as_str)
+    }
+
+    /// Map a first-party env name ("ocean/squared") to its manifest spec
+    /// key ("ocean_squared").
+    pub fn spec_key_for_env(env_name: &str) -> String {
+        env_name.replace('/', "_")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "batch_fwd": 16, "batch_roll": 32, "horizon": 32,
+      "specs": {
+        "ocean_bandit": {
+          "obs_dim": 1, "act_dims": [4], "agents": 1, "lstm": false,
+          "n_params": 17000, "hidden": 128, "batch_fwd": 16, "batch_roll": 32,
+          "horizon": 32, "gamma": 0.99, "lam": 0.95, "params0": "p.bin",
+          "artifacts": {"forward_b16": "f.hlo.txt", "gae": "g.hlo.txt", "train_step": "t.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch_fwd, 16);
+        assert_eq!(m.batch_roll, 32);
+        let s = m.spec("ocean_bandit").unwrap();
+        assert_eq!(s.act_dims, vec![4]);
+        assert_eq!(s.artifacts["gae"], "g.hlo.txt");
+        assert!(!s.lstm);
+        assert!(m.spec("nope").is_err());
+    }
+
+    #[test]
+    fn env_name_mapping() {
+        assert_eq!(Manifest::spec_key_for_env("ocean/squared"), "ocean_squared");
+        assert_eq!(
+            Manifest::spec_key_for_env("classic/cartpole"),
+            "classic_cartpole"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"batch_fwd": 16}"#).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! [`StructLayout`]: the inferred structured-array datatype.
+//!
+//! The paper (§5): *"Emulation works by inferring a numpy structured array
+//! datatype from the environment's Gym/Gymnasium observation and action
+//! spaces. ... we can use structured arrays as flat bytes, as is required
+//! for efficient vectorization, or with dict-like accessors, as is required
+//! by the model and the environment."*
+//!
+//! A [`StructLayout`] is a packed field table: each leaf of the space tree
+//! gets a named [`Field`] with a byte range in the flat row and an element
+//! range in the f32 view handed to the policy. Flattening writes a
+//! structured [`Value`] into a `&mut [u8]` row with zero allocation;
+//! unflattening reverses it exactly.
+
+use super::{Dtype, Space, Value};
+
+/// One leaf of the flattened space: a named, typed, contiguous slice of the
+/// row buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field {
+    /// Dotted path into the space tree, e.g. `"obs.inventory.0"`.
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// Scalar element count (product of `shape`, min 1).
+    pub count: usize,
+    /// Byte offset of this field within the packed row.
+    pub byte_offset: usize,
+    /// Element offset within the f32 view of the row.
+    pub f32_offset: usize,
+}
+
+/// Packed layout of a space tree: the structured-array "dtype".
+#[derive(Clone, Debug, PartialEq)]
+pub struct StructLayout {
+    fields: Vec<Field>,
+    byte_len: usize,
+    flat_len: usize,
+}
+
+/// How a leaf kind maps to bytes. Discrete leaves are stored as one i32;
+/// MultiDiscrete as i32 per slot. (Matches what a Gym structured dtype
+/// would do with int32 catgorical data.)
+fn leaf_dtype_count(space: &Space) -> Option<(Dtype, usize, Vec<usize>)> {
+    match space {
+        Space::Discrete(_) => Some((Dtype::I32, 1, vec![1])),
+        Space::MultiDiscrete(nvec) => Some((Dtype::I32, nvec.len(), vec![nvec.len()])),
+        Space::Box { dtype, shape, .. } => {
+            Some((*dtype, shape.iter().product::<usize>().max(1), shape.clone()))
+        }
+        _ => None,
+    }
+}
+
+impl StructLayout {
+    /// Infer the packed layout from a space tree (depth-first, Dict keys
+    /// already canonically sorted by [`Space::dict`]).
+    pub fn infer(space: &Space) -> StructLayout {
+        let mut fields = Vec::new();
+        let mut byte_off = 0usize;
+        let mut f32_off = 0usize;
+        Self::walk(space, "", &mut fields, &mut byte_off, &mut f32_off);
+        StructLayout {
+            fields,
+            byte_len: byte_off,
+            flat_len: f32_off,
+        }
+    }
+
+    fn walk(
+        space: &Space,
+        prefix: &str,
+        fields: &mut Vec<Field>,
+        byte_off: &mut usize,
+        f32_off: &mut usize,
+    ) {
+        if let Some((dtype, count, shape)) = leaf_dtype_count(space) {
+            fields.push(Field {
+                name: prefix.to_string(),
+                dtype,
+                shape,
+                count,
+                byte_offset: *byte_off,
+                f32_offset: *f32_off,
+            });
+            *byte_off += count * dtype.size();
+            *f32_off += count;
+            return;
+        }
+        match space {
+            Space::Tuple(subs) => {
+                for (i, s) in subs.iter().enumerate() {
+                    let name = if prefix.is_empty() {
+                        i.to_string()
+                    } else {
+                        format!("{prefix}.{i}")
+                    };
+                    Self::walk(s, &name, fields, byte_off, f32_off);
+                }
+            }
+            Space::Dict(entries) => {
+                for (k, s) in entries {
+                    let name = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    Self::walk(s, &name, fields, byte_off, f32_off);
+                }
+            }
+            _ => unreachable!("leaf handled above"),
+        }
+    }
+
+    pub fn fields(&self) -> &[Field] {
+        &self.fields
+    }
+    /// Packed row size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.byte_len
+    }
+    /// Row length of the f32 view (total scalar count).
+    pub fn flat_len(&self) -> usize {
+        self.flat_len
+    }
+    /// Look up a field by dotted path.
+    pub fn field(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    /// Flatten a structured value into a packed byte row. The row must be
+    /// exactly [`byte_len`](Self::byte_len) bytes. Zero allocation.
+    ///
+    /// Panics if the value does not structurally match the layout's space —
+    /// the emulation wrapper performs a full check on the *first* batch
+    /// only (paper §3.1), then trusts the env.
+    pub fn write_value(&self, value: &Value, row: &mut [u8]) {
+        debug_assert_eq!(row.len(), self.byte_len);
+        let mut idx = 0;
+        self.write_walk(value, row, &mut idx);
+        debug_assert_eq!(idx, self.fields.len(), "value has fewer leaves than layout");
+    }
+
+    fn write_walk(&self, value: &Value, row: &mut [u8], idx: &mut usize) {
+        match value {
+            Value::Discrete(x) => {
+                let f = &self.fields[*idx];
+                row[f.byte_offset..f.byte_offset + 4].copy_from_slice(&(*x as i32).to_le_bytes());
+                *idx += 1;
+            }
+            Value::MultiDiscrete(xs) => {
+                let f = &self.fields[*idx];
+                debug_assert_eq!(xs.len(), f.count);
+                for (i, &x) in xs.iter().enumerate() {
+                    let o = f.byte_offset + 4 * i;
+                    row[o..o + 4].copy_from_slice(&(x as i32).to_le_bytes());
+                }
+                *idx += 1;
+            }
+            Value::F32(xs) => {
+                let f = &self.fields[*idx];
+                debug_assert_eq!(xs.len(), f.count);
+                // Bulk copy: f32 slice → le bytes.
+                let dst = &mut row[f.byte_offset..f.byte_offset + 4 * xs.len()];
+                for (chunk, &x) in dst.chunks_exact_mut(4).zip(xs) {
+                    chunk.copy_from_slice(&x.to_le_bytes());
+                }
+                *idx += 1;
+            }
+            Value::U8(xs) => {
+                let f = &self.fields[*idx];
+                debug_assert_eq!(xs.len(), f.count);
+                row[f.byte_offset..f.byte_offset + xs.len()].copy_from_slice(xs);
+                *idx += 1;
+            }
+            Value::I32(xs) => {
+                let f = &self.fields[*idx];
+                debug_assert_eq!(xs.len(), f.count);
+                let dst = &mut row[f.byte_offset..f.byte_offset + 4 * xs.len()];
+                for (chunk, &x) in dst.chunks_exact_mut(4).zip(xs) {
+                    chunk.copy_from_slice(&x.to_le_bytes());
+                }
+                *idx += 1;
+            }
+            Value::Tuple(vs) => {
+                for v in vs {
+                    self.write_walk(v, row, idx);
+                }
+            }
+            Value::Dict(entries) => {
+                for (_, v) in entries {
+                    self.write_walk(v, row, idx);
+                }
+            }
+        }
+    }
+
+    /// Rebuild the structured value from a packed byte row given the
+    /// original space tree (the layout alone can't distinguish Tuple from
+    /// Dict nesting). Exact inverse of [`write_value`](Self::write_value).
+    pub fn read_value(&self, space: &Space, row: &[u8]) -> Value {
+        debug_assert_eq!(row.len(), self.byte_len);
+        let mut idx = 0;
+        self.read_walk(space, row, &mut idx)
+    }
+
+    fn read_walk(&self, space: &Space, row: &[u8], idx: &mut usize) -> Value {
+        match space {
+            Space::Discrete(_) => {
+                let f = &self.fields[*idx];
+                *idx += 1;
+                let x = i32::from_le_bytes(row[f.byte_offset..f.byte_offset + 4].try_into().unwrap());
+                Value::Discrete(x as i64)
+            }
+            Space::MultiDiscrete(nvec) => {
+                let f = &self.fields[*idx];
+                *idx += 1;
+                let xs = (0..nvec.len())
+                    .map(|i| {
+                        let o = f.byte_offset + 4 * i;
+                        i32::from_le_bytes(row[o..o + 4].try_into().unwrap()) as i64
+                    })
+                    .collect();
+                Value::MultiDiscrete(xs)
+            }
+            Space::Box { dtype, .. } => {
+                let f = &self.fields[*idx];
+                *idx += 1;
+                match dtype {
+                    Dtype::F32 => Value::F32(
+                        row[f.byte_offset..f.byte_offset + 4 * f.count]
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    ),
+                    Dtype::U8 => {
+                        Value::U8(row[f.byte_offset..f.byte_offset + f.count].to_vec())
+                    }
+                    Dtype::I32 => Value::I32(
+                        row[f.byte_offset..f.byte_offset + 4 * f.count]
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    ),
+                }
+            }
+            Space::Tuple(subs) => {
+                Value::Tuple(subs.iter().map(|s| self.read_walk(s, row, idx)).collect())
+            }
+            Space::Dict(entries) => Value::Dict(
+                entries
+                    .iter()
+                    .map(|(k, s)| (k.clone(), self.read_walk(s, row, idx)))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Convert a packed byte row into its f32 view (`out` must be
+    /// [`flat_len`](Self::flat_len) long): f32 fields pass through, u8 and
+    /// i32 fields are cast. This is the policy-side representation; the
+    /// field table (exported in the AOT manifest) lets the JAX model
+    /// unflatten by slicing.
+    pub fn row_to_f32(&self, row: &[u8], out: &mut [f32]) {
+        debug_assert_eq!(row.len(), self.byte_len);
+        debug_assert_eq!(out.len(), self.flat_len);
+        for f in &self.fields {
+            let dst = &mut out[f.f32_offset..f.f32_offset + f.count];
+            match f.dtype {
+                Dtype::F32 => {
+                    let src = &row[f.byte_offset..f.byte_offset + 4 * f.count];
+                    for (o, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+                        *o = f32::from_le_bytes(c.try_into().unwrap());
+                    }
+                }
+                Dtype::U8 => {
+                    let src = &row[f.byte_offset..f.byte_offset + f.count];
+                    for (o, &b) in dst.iter_mut().zip(src) {
+                        *o = b as f32;
+                    }
+                }
+                Dtype::I32 => {
+                    let src = &row[f.byte_offset..f.byte_offset + 4 * f.count];
+                    for (o, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+                        *o = i32::from_le_bytes(c.try_into().unwrap()) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, CheckConfig};
+    use crate::util::rng::Rng;
+
+    fn complex_space() -> Space {
+        Space::dict(vec![
+            ("glyphs".into(), Space::boxi32(&[4, 3], 0.0, 100.0)),
+            ("stats".into(), Space::boxf(&[5], -10.0, 10.0)),
+            ("msg".into(), Space::boxu8(&[7])),
+            (
+                "inv".into(),
+                Space::Tuple(vec![Space::Discrete(6), Space::MultiDiscrete(vec![2, 3])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn layout_offsets_are_packed_and_ordered() {
+        let s = complex_space();
+        let l = s.layout();
+        // canonical key order: glyphs, inv.0, inv.1, msg, stats
+        let names: Vec<&str> = l.fields().iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["glyphs", "inv.0", "inv.1", "msg", "stats"]);
+        // packed: each byte_offset = previous end
+        let mut expect = 0;
+        for f in l.fields() {
+            assert_eq!(f.byte_offset, expect);
+            expect += f.count * f.dtype.size();
+        }
+        assert_eq!(l.byte_len(), expect);
+        assert_eq!(l.flat_len(), s.num_elements());
+    }
+
+    #[test]
+    fn write_read_round_trip_property() {
+        let s = complex_space();
+        let l = s.layout();
+        check(
+            CheckConfig::default(),
+            |rng| s.sample(rng),
+            |v| {
+                let mut row = vec![0u8; l.byte_len()];
+                l.write_value(v, &mut row);
+                let back = l.read_value(&s, &row);
+                if &back == v {
+                    Ok(())
+                } else {
+                    Err(format!("{back:?} != {v:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn row_to_f32_casts() {
+        let s = Space::dict(vec![
+            ("a".into(), Space::boxu8(&[2])),
+            ("b".into(), Space::boxf(&[2], -5.0, 5.0)),
+            ("c".into(), Space::Discrete(10)),
+        ]);
+        let l = s.layout();
+        let v = Value::Dict(vec![
+            ("a".into(), Value::U8(vec![7, 255])),
+            ("b".into(), Value::F32(vec![1.5, -2.25])),
+            ("c".into(), Value::Discrete(4)),
+        ]);
+        let mut row = vec![0u8; l.byte_len()];
+        l.write_value(&v, &mut row);
+        let mut flat = vec![0f32; l.flat_len()];
+        l.row_to_f32(&row, &mut flat);
+        assert_eq!(flat, vec![7.0, 255.0, 1.5, -2.25, 4.0]);
+    }
+
+    #[test]
+    fn random_space_round_trip_property() {
+        // Generate random space *trees* and check flatten/unflatten on them.
+        fn random_space(rng: &mut Rng, depth: usize) -> Space {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Space::Discrete(rng.range_i64(1, 8) as usize),
+                1 => Space::MultiDiscrete(
+                    (0..rng.range_i64(1, 4)).map(|_| rng.range_i64(1, 5) as usize).collect(),
+                ),
+                2 => Space::boxf(&[rng.range_i64(1, 6) as usize], -3.0, 3.0),
+                3 => Space::boxu8(&[rng.range_i64(1, 6) as usize]),
+                4 => Space::Tuple(
+                    (0..rng.range_i64(1, 3))
+                        .map(|_| random_space(rng, depth - 1))
+                        .collect(),
+                ),
+                _ => Space::dict(
+                    (0..rng.range_i64(1, 3))
+                        .map(|i| (format!("k{i}"), random_space(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        check(
+            CheckConfig { cases: 64, ..Default::default() },
+            |rng| {
+                let s = random_space(rng, 2);
+                let v = s.sample(rng);
+                (s, v)
+            },
+            |(s, v)| {
+                let l = s.layout();
+                let mut row = vec![0u8; l.byte_len()];
+                l.write_value(v, &mut row);
+                let back = l.read_value(s, &row);
+                if &back == v {
+                    Ok(())
+                } else {
+                    Err(format!("{back:?} != {v:?}"))
+                }
+            },
+        );
+    }
+}

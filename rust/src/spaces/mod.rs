@@ -1,0 +1,431 @@
+//! Observation/action space algebra and the flat byte layout ("structured
+//! array") that powers the emulation layer.
+//!
+//! This is the Rust analog of the paper's key mechanism (§3.1, §5):
+//! emulation *infers a structured-array datatype* from the environment's
+//! space, then uses it two ways — as **flat bytes** for vectorization, and
+//! with **dict-like accessors** for the model and the environment. A
+//! [`Space`] describes the structure; [`StructLayout`] is the inferred
+//! datatype: a packed field table mapping every leaf of the space tree to a
+//! byte range of a flat row buffer, plus an f32 view used when handing
+//! observations to the policy.
+
+mod layout;
+mod value;
+
+pub use layout::{Field, StructLayout};
+pub use value::Value;
+
+use crate::util::rng::Rng;
+
+/// Element type of a [`Space::Box`] leaf. Mirrors the numpy dtypes the
+/// paper's environments actually use (images are u8, symbolic state i32,
+/// continuous features f32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::U8 => "u8",
+            Dtype::I32 => "i32",
+        }
+    }
+}
+
+/// A Gym/Gymnasium-style space tree.
+///
+/// `Dict` keys are sorted on construction (Gymnasium does the same), which
+/// gives the canonical ordering the emulation layer relies on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Space {
+    /// `n` mutually exclusive choices.
+    Discrete(usize),
+    /// A vector of independent discrete choices with per-slot cardinality.
+    MultiDiscrete(Vec<usize>),
+    /// An n-dimensional array of `dtype` elements in `[low, high]`.
+    Box {
+        dtype: Dtype,
+        shape: Vec<usize>,
+        low: f32,
+        high: f32,
+    },
+    /// Heterogeneous fixed-length product of subspaces.
+    Tuple(Vec<Space>),
+    /// Named product of subspaces. Keys are kept sorted.
+    Dict(Vec<(String, Space)>),
+}
+
+impl Space {
+    /// Convenience constructor for an f32 Box.
+    pub fn boxf(shape: &[usize], low: f32, high: f32) -> Space {
+        Space::Box {
+            dtype: Dtype::F32,
+            shape: shape.to_vec(),
+            low,
+            high,
+        }
+    }
+
+    /// Convenience constructor for a u8 image-style Box.
+    pub fn boxu8(shape: &[usize]) -> Space {
+        Space::Box {
+            dtype: Dtype::U8,
+            shape: shape.to_vec(),
+            low: 0.0,
+            high: 255.0,
+        }
+    }
+
+    /// Convenience constructor for an i32 Box.
+    pub fn boxi32(shape: &[usize], low: f32, high: f32) -> Space {
+        Space::Box {
+            dtype: Dtype::I32,
+            shape: shape.to_vec(),
+            low,
+            high,
+        }
+    }
+
+    /// Dict constructor; sorts keys into canonical order.
+    pub fn dict(mut entries: Vec<(String, Space)>) -> Space {
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Space::Dict(entries)
+    }
+
+    /// Total number of scalar elements across all leaves.
+    pub fn num_elements(&self) -> usize {
+        match self {
+            Space::Discrete(_) => 1,
+            Space::MultiDiscrete(nvec) => nvec.len(),
+            Space::Box { shape, .. } => shape.iter().product::<usize>().max(1),
+            Space::Tuple(subs) => subs.iter().map(Space::num_elements).sum(),
+            Space::Dict(entries) => entries.iter().map(|(_, s)| s.num_elements()).sum(),
+        }
+    }
+
+    /// Infer the packed structured-array layout for this space.
+    pub fn layout(&self) -> StructLayout {
+        StructLayout::infer(self)
+    }
+
+    /// Draw a uniformly random valid value (used by tests, mocked envs,
+    /// and random rollouts).
+    pub fn sample(&self, rng: &mut Rng) -> Value {
+        match self {
+            Space::Discrete(n) => Value::Discrete(rng.below(*n as u64) as i64),
+            Space::MultiDiscrete(nvec) => Value::MultiDiscrete(
+                nvec.iter().map(|&n| rng.below(n as u64) as i64).collect(),
+            ),
+            Space::Box {
+                dtype,
+                shape,
+                low,
+                high,
+            } => {
+                let n = shape.iter().product::<usize>().max(1);
+                match dtype {
+                    Dtype::F32 => {
+                        Value::F32((0..n).map(|_| rng.uniform(*low, *high)).collect())
+                    }
+                    Dtype::U8 => Value::U8(
+                        (0..n)
+                            .map(|_| rng.range_i64(*low as i64, *high as i64) as u8)
+                            .collect(),
+                    ),
+                    Dtype::I32 => Value::I32(
+                        (0..n)
+                            .map(|_| rng.range_i64(*low as i64, *high as i64) as i32)
+                            .collect(),
+                    ),
+                }
+            }
+            Space::Tuple(subs) => Value::Tuple(subs.iter().map(|s| s.sample(rng)).collect()),
+            Space::Dict(entries) => Value::Dict(
+                entries
+                    .iter()
+                    .map(|(k, s)| (k.clone(), s.sample(rng)))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Structural + range membership test.
+    pub fn contains(&self, v: &Value) -> bool {
+        match (self, v) {
+            (Space::Discrete(n), Value::Discrete(x)) => *x >= 0 && (*x as usize) < *n,
+            (Space::MultiDiscrete(nvec), Value::MultiDiscrete(xs)) => {
+                nvec.len() == xs.len()
+                    && nvec
+                        .iter()
+                        .zip(xs)
+                        .all(|(&n, &x)| x >= 0 && (x as usize) < n)
+            }
+            (
+                Space::Box {
+                    dtype: Dtype::F32,
+                    shape,
+                    low,
+                    high,
+                },
+                Value::F32(xs),
+            ) => {
+                xs.len() == shape.iter().product::<usize>().max(1)
+                    && xs.iter().all(|x| *x >= *low && *x <= *high && x.is_finite())
+            }
+            (
+                Space::Box {
+                    dtype: Dtype::U8,
+                    shape,
+                    low,
+                    high,
+                },
+                Value::U8(xs),
+            ) => {
+                xs.len() == shape.iter().product::<usize>().max(1)
+                    && xs
+                        .iter()
+                        .all(|&x| x as f32 >= *low && x as f32 <= *high)
+            }
+            (
+                Space::Box {
+                    dtype: Dtype::I32,
+                    shape,
+                    low,
+                    high,
+                },
+                Value::I32(xs),
+            ) => {
+                xs.len() == shape.iter().product::<usize>().max(1)
+                    && xs
+                        .iter()
+                        .all(|&x| x as f32 >= *low && x as f32 <= *high)
+            }
+            (Space::Tuple(subs), Value::Tuple(vs)) => {
+                subs.len() == vs.len() && subs.iter().zip(vs).all(|(s, v)| s.contains(v))
+            }
+            (Space::Dict(entries), Value::Dict(vs)) => {
+                entries.len() == vs.len()
+                    && entries
+                        .iter()
+                        .zip(vs)
+                        .all(|((k, s), (vk, v))| k == vk && s.contains(v))
+            }
+            _ => false,
+        }
+    }
+
+    /// The single-MultiDiscrete emulation of this space when used as an
+    /// *action* space: the per-slot cardinalities of every discrete leaf.
+    ///
+    /// Returns `None` if the space contains a Box leaf (continuous actions;
+    /// see [`crate::emulation`] for the continuous extension).
+    pub fn action_dims(&self) -> Option<Vec<usize>> {
+        let mut dims = Vec::new();
+        if self.collect_action_dims(&mut dims) {
+            Some(dims)
+        } else {
+            None
+        }
+    }
+
+    fn collect_action_dims(&self, dims: &mut Vec<usize>) -> bool {
+        match self {
+            Space::Discrete(n) => {
+                dims.push(*n);
+                true
+            }
+            Space::MultiDiscrete(nvec) => {
+                dims.extend_from_slice(nvec);
+                true
+            }
+            Space::Box { .. } => false,
+            Space::Tuple(subs) => subs.iter().all(|s| s.collect_action_dims(dims)),
+            Space::Dict(entries) => entries.iter().all(|(_, s)| s.collect_action_dims(dims)),
+        }
+    }
+
+    /// Pack a structured action value into the flat MultiDiscrete encoding.
+    /// Inverse of [`Space::unflatten_action`].
+    pub fn flatten_action(&self, v: &Value, out: &mut Vec<i32>) {
+        match (self, v) {
+            (Space::Discrete(_), Value::Discrete(x)) => out.push(*x as i32),
+            (Space::MultiDiscrete(_), Value::MultiDiscrete(xs)) => {
+                out.extend(xs.iter().map(|&x| x as i32))
+            }
+            (Space::Tuple(subs), Value::Tuple(vs)) => {
+                for (s, v) in subs.iter().zip(vs) {
+                    s.flatten_action(v, out);
+                }
+            }
+            (Space::Dict(entries), Value::Dict(vs)) => {
+                for ((_, s), (_, v)) in entries.iter().zip(vs) {
+                    s.flatten_action(v, out);
+                }
+            }
+            _ => panic!("flatten_action: value does not match space"),
+        }
+    }
+
+    /// Rebuild the structured action from its flat MultiDiscrete encoding.
+    /// This is the "call it in the first line of your env step" inverse.
+    pub fn unflatten_action(&self, flat: &[i32]) -> Value {
+        let mut pos = 0;
+        let v = self.unflatten_action_inner(flat, &mut pos);
+        assert_eq!(
+            pos,
+            flat.len(),
+            "unflatten_action: consumed {pos} of {} slots",
+            flat.len()
+        );
+        v
+    }
+
+    fn unflatten_action_inner(&self, flat: &[i32], pos: &mut usize) -> Value {
+        match self {
+            Space::Discrete(_) => {
+                let x = flat[*pos];
+                *pos += 1;
+                Value::Discrete(x as i64)
+            }
+            Space::MultiDiscrete(nvec) => {
+                let xs = flat[*pos..*pos + nvec.len()]
+                    .iter()
+                    .map(|&x| x as i64)
+                    .collect();
+                *pos += nvec.len();
+                Value::MultiDiscrete(xs)
+            }
+            Space::Box { .. } => panic!("unflatten_action: Box leaf in action space"),
+            Space::Tuple(subs) => Value::Tuple(
+                subs.iter()
+                    .map(|s| s.unflatten_action_inner(flat, pos))
+                    .collect(),
+            ),
+            Space::Dict(entries) => Value::Dict(
+                entries
+                    .iter()
+                    .map(|(k, s)| (k.clone(), s.unflatten_action_inner(flat, pos)))
+                    .collect(),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, CheckConfig};
+
+    fn nethack_like() -> Space {
+        Space::dict(vec![
+            ("glyphs".into(), Space::boxi32(&[21, 79], 0.0, 5976.0)),
+            ("blstats".into(), Space::boxf(&[27], -1e6, 1e6)),
+            ("message".into(), Space::boxu8(&[256])),
+        ])
+    }
+
+    #[test]
+    fn dict_keys_sorted() {
+        let s = Space::dict(vec![
+            ("zeta".into(), Space::Discrete(2)),
+            ("alpha".into(), Space::Discrete(3)),
+        ]);
+        if let Space::Dict(entries) = &s {
+            assert_eq!(entries[0].0, "alpha");
+            assert_eq!(entries[1].0, "zeta");
+        } else {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn num_elements() {
+        assert_eq!(Space::Discrete(5).num_elements(), 1);
+        assert_eq!(Space::MultiDiscrete(vec![2, 3, 4]).num_elements(), 3);
+        assert_eq!(Space::boxf(&[4, 5], 0.0, 1.0).num_elements(), 20);
+        assert_eq!(nethack_like().num_elements(), 21 * 79 + 27 + 256);
+    }
+
+    #[test]
+    fn sample_is_contained() {
+        let spaces = vec![
+            Space::Discrete(7),
+            Space::MultiDiscrete(vec![2, 5, 9]),
+            Space::boxf(&[3, 2], -2.0, 2.0),
+            Space::boxu8(&[8]),
+            nethack_like(),
+            Space::Tuple(vec![Space::Discrete(2), Space::boxf(&[3], 0.0, 1.0)]),
+        ];
+        let mut rng = Rng::new(11);
+        for s in &spaces {
+            for _ in 0..20 {
+                let v = s.sample(&mut rng);
+                assert!(s.contains(&v), "sample not contained in {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn contains_rejects_mismatches() {
+        let s = Space::Discrete(3);
+        assert!(!s.contains(&Value::Discrete(3)));
+        assert!(!s.contains(&Value::Discrete(-1)));
+        assert!(!s.contains(&Value::F32(vec![0.0])));
+        let b = Space::boxf(&[2], 0.0, 1.0);
+        assert!(!b.contains(&Value::F32(vec![0.5])), "wrong length");
+        assert!(!b.contains(&Value::F32(vec![0.5, 2.0])), "out of range");
+        assert!(!b.contains(&Value::F32(vec![0.5, f32::NAN])), "nan");
+    }
+
+    #[test]
+    fn action_dims_flattening() {
+        let s = Space::dict(vec![
+            ("move".into(), Space::Discrete(5)),
+            ("attack".into(), Space::Tuple(vec![
+                Space::Discrete(3),
+                Space::MultiDiscrete(vec![2, 2]),
+            ])),
+        ]);
+        // canonical (sorted) key order: attack < move
+        assert_eq!(s.action_dims(), Some(vec![3, 2, 2, 5]));
+        assert_eq!(Space::boxf(&[1], 0.0, 1.0).action_dims(), None);
+    }
+
+    #[test]
+    fn action_round_trip_property() {
+        let s = Space::dict(vec![
+            ("a".into(), Space::Discrete(4)),
+            ("b".into(), Space::MultiDiscrete(vec![3, 6])),
+            (
+                "c".into(),
+                Space::Tuple(vec![Space::Discrete(2), Space::Discrete(9)]),
+            ),
+        ]);
+        check(
+            CheckConfig::default(),
+            |rng| s.sample(rng),
+            |v| {
+                let mut flat = Vec::new();
+                s.flatten_action(v, &mut flat);
+                let back = s.unflatten_action(&flat);
+                if &back == v {
+                    Ok(())
+                } else {
+                    Err(format!("round trip mismatch: {back:?} != {v:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Structured runtime values exchanged with [`StructuredEnv`]s
+//! (observations before flattening, actions after unflattening).
+
+/// A structured value matching a [`Space`](super::Space) tree. This is the
+/// Rust stand-in for "whatever Python object the environment returns".
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Discrete(i64),
+    MultiDiscrete(Vec<i64>),
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    Tuple(Vec<Value>),
+    Dict(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Dict field lookup (linear scan; dicts are small).
+    pub fn field(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Dict(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Tuple element access.
+    pub fn elem(&self, idx: usize) -> Option<&Value> {
+        match self {
+            Value::Tuple(vs) => vs.get(idx),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32s(&self) -> Option<&[f32]> {
+        match self {
+            Value::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_u8s(&self) -> Option<&[u8]> {
+        match self {
+            Value::U8(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i32s(&self) -> Option<&[i32]> {
+        match self {
+            Value::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_discrete(&self) -> Option<i64> {
+        match self {
+            Value::Discrete(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Total scalar count of the tree (matches
+    /// [`Space::num_elements`](super::Space::num_elements) when the value
+    /// matches its space).
+    pub fn num_elements(&self) -> usize {
+        match self {
+            Value::Discrete(_) => 1,
+            Value::MultiDiscrete(v) => v.len(),
+            Value::F32(v) => v.len(),
+            Value::U8(v) => v.len(),
+            Value::I32(v) => v.len(),
+            Value::Tuple(vs) => vs.iter().map(Value::num_elements).sum(),
+            Value::Dict(entries) => entries.iter().map(|(_, v)| v.num_elements()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = Value::Dict(vec![
+            ("a".into(), Value::Discrete(3)),
+            ("b".into(), Value::Tuple(vec![Value::F32(vec![1.0, 2.0])])),
+        ]);
+        assert_eq!(v.field("a").unwrap().as_discrete(), Some(3));
+        assert_eq!(
+            v.field("b").unwrap().elem(0).unwrap().as_f32s(),
+            Some(&[1.0f32, 2.0][..])
+        );
+        assert!(v.field("zzz").is_none());
+        assert_eq!(v.num_elements(), 3);
+    }
+}

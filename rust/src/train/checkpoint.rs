@@ -1,0 +1,116 @@
+//! Binary checkpoints: flat params + Adam state + counters. Format:
+//! magic, version, spec-key, then length-prefixed f32 arrays, all
+//! little-endian — no serde needed, stable across runs.
+
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PUFFCKPT";
+const VERSION: u32 = 1;
+
+/// Everything needed to resume training.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub spec_key: String,
+    pub global_step: u64,
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub adam_step: f32,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        let key = self.spec_key.as_bytes();
+        f.write_all(&(key.len() as u32).to_le_bytes())?;
+        f.write_all(key)?;
+        f.write_all(&self.global_step.to_le_bytes())?;
+        f.write_all(&self.adam_step.to_le_bytes())?;
+        for arr in [&self.params, &self.adam_m, &self.adam_v] {
+            f.write_all(&(arr.len() as u64).to_le_bytes())?;
+            for x in arr.iter() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a puffer checkpoint");
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        anyhow::ensure!(u32::from_le_bytes(u32b) == VERSION, "checkpoint version mismatch");
+        f.read_exact(&mut u32b)?;
+        let key_len = u32::from_le_bytes(u32b) as usize;
+        let mut key = vec![0u8; key_len];
+        f.read_exact(&mut key)?;
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let global_step = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u32b)?;
+        let adam_step = f32::from_le_bytes(u32b);
+        let read_arr = |f: &mut std::fs::File| -> Result<Vec<f32>> {
+            let mut lenb = [0u8; 8];
+            f.read_exact(&mut lenb)?;
+            let len = u64::from_le_bytes(lenb) as usize;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect())
+        };
+        let params = read_arr(&mut f)?;
+        let adam_m = read_arr(&mut f)?;
+        let adam_v = read_arr(&mut f)?;
+        Ok(Checkpoint {
+            spec_key: String::from_utf8(key).context("bad spec key")?,
+            global_step,
+            params,
+            adam_m,
+            adam_v,
+            adam_step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let ck = Checkpoint {
+            spec_key: "ocean_squared".into(),
+            global_step: 12_345,
+            params: vec![1.5, -2.0, 0.25],
+            adam_m: vec![0.1, 0.2, 0.3],
+            adam_v: vec![0.0; 3],
+            adam_step: 7.0,
+        };
+        let dir = std::env::temp_dir().join("puffer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("puffer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Clean PuffeRL (paper §6): the first-party PPO trainer. Heavily
+//! customized in the same ways the paper describes — separate train/eval,
+//! model checkpointing, fast LSTM support, asynchronous environment
+//! simulation (EnvPool), episode-stat logging, and multiagent support —
+//! driving the AOT-compiled L2 train step through PJRT. Python never runs
+//! here.
+
+mod checkpoint;
+mod rollout;
+mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
+pub use trainer::{EvalReport, TrainConfig, TrainReport, Trainer};

@@ -1,0 +1,403 @@
+//! Rollout collection over any [`VecEnv`] — including pooled (EnvPool)
+//! backends where each `recv` returns a different subset of env rows.
+//!
+//! Bookkeeping is per *global row* (env × agent): each row keeps its own
+//! time cursor, so fast envs from early batches and stragglers from late
+//! ones all assemble into one dense time-major `(T, R)` rollout. A row's
+//! reward/done arrives one `recv` after its (obs, action) was stored; the
+//! first value seen after a row fills `T` slots becomes its GAE bootstrap.
+
+use crate::emulation::Info;
+use crate::policy::PolicyOut;
+use crate::vector::VecEnv;
+use anyhow::Result;
+
+/// Time-major rollout storage, width `rows` = total agent rows (`R`),
+/// depth `horizon` = `T`.
+pub struct RolloutBuffer {
+    pub horizon: usize,
+    pub rows: usize,
+    pub obs_dim: usize,
+    pub slots: usize,
+
+    /// `(T, R, D)` f32, time-major.
+    pub obs: Vec<f32>,
+    /// `(T, R)`: 1.0 where the stored obs begins a new episode (LSTM
+    /// state reset marker).
+    pub starts: Vec<f32>,
+    /// `(T, R, S)` i32.
+    pub actions: Vec<i32>,
+    /// `(T, R)`.
+    pub logp: Vec<f32>,
+    pub values: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub dones: Vec<f32>,
+    /// `(R,)` bootstrap values.
+    pub last_values: Vec<f32>,
+
+    cursor: Vec<usize>,
+    pending: Vec<bool>,
+    complete: Vec<bool>,
+    /// Persisted across rollouts: the next obs stored for this row starts
+    /// a new episode.
+    next_start: Vec<bool>,
+}
+
+impl RolloutBuffer {
+    pub fn new(horizon: usize, rows: usize, obs_dim: usize, slots: usize) -> Self {
+        RolloutBuffer {
+            horizon,
+            rows,
+            obs_dim,
+            slots,
+            obs: vec![0.0; horizon * rows * obs_dim],
+            starts: vec![0.0; horizon * rows],
+            actions: vec![0; horizon * rows * slots],
+            logp: vec![0.0; horizon * rows],
+            values: vec![0.0; horizon * rows],
+            rewards: vec![0.0; horizon * rows],
+            dones: vec![0.0; horizon * rows],
+            last_values: vec![0.0; rows],
+            cursor: vec![0; rows],
+            pending: vec![false; rows],
+            complete: vec![false; rows],
+            next_start: vec![true; rows],
+        }
+    }
+
+    /// Prepare for a fresh segment (cursors reset; `next_start` persists
+    /// so episodes spanning segments keep correct LSTM reset flags).
+    pub fn begin_segment(&mut self) {
+        self.cursor.fill(0);
+        self.pending.fill(false);
+        self.complete.fill(false);
+    }
+
+    /// Mark every row as starting a new episode (after a hard env reset).
+    pub fn mark_all_starts(&mut self) {
+        self.next_start.fill(true);
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.complete.iter().all(|&c| c)
+    }
+
+    /// Total transitions stored in the segment.
+    pub fn segment_steps(&self) -> usize {
+        self.horizon * self.rows
+    }
+
+    #[inline]
+    fn idx(&self, t: usize, row: usize) -> usize {
+        t * self.rows + row
+    }
+
+    /// Attribute an arriving (reward, done) to the row's pending
+    /// transition. Returns true if the row's episode ended (the caller
+    /// should zero any recurrent state).
+    pub fn attribute(&mut self, row: usize, reward: f32, done: bool) -> bool {
+        if !self.pending[row] {
+            return false; // first recv after reset: nothing outstanding
+        }
+        let t = self.cursor[row] - 1;
+        let i = self.idx(t, row);
+        self.rewards[i] = reward;
+        self.dones[i] = if done { 1.0 } else { 0.0 };
+        self.pending[row] = false;
+        if done {
+            self.next_start[row] = true;
+        }
+        done
+    }
+
+    /// Store a new decision point for the row, or capture its bootstrap
+    /// value if the segment is already full. Returns `true` if stored
+    /// (the row still collects).
+    pub fn store(
+        &mut self,
+        row: usize,
+        obs_row: &[f32],
+        action_row: &[i32],
+        logp: f32,
+        value: f32,
+    ) -> bool {
+        debug_assert_eq!(obs_row.len(), self.obs_dim);
+        debug_assert_eq!(action_row.len(), self.slots);
+        let t = self.cursor[row];
+        if t >= self.horizon {
+            if !self.complete[row] {
+                self.last_values[row] = value;
+                self.complete[row] = true;
+            }
+            return false;
+        }
+        let i = self.idx(t, row);
+        self.obs[i * self.obs_dim..(i + 1) * self.obs_dim].copy_from_slice(obs_row);
+        self.actions[i * self.slots..(i + 1) * self.slots].copy_from_slice(action_row);
+        self.logp[i] = logp;
+        self.values[i] = value;
+        self.starts[i] = if self.next_start[row] { 1.0 } else { 0.0 };
+        self.next_start[row] = false;
+        self.pending[row] = true;
+        self.cursor[row] = t + 1;
+        true
+    }
+}
+
+/// Episode statistics harvested from env infos during collection.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeLog {
+    pub returns: Vec<f64>,
+    pub lengths: Vec<f64>,
+    pub scores: Vec<f64>,
+}
+
+impl EpisodeLog {
+    pub fn absorb(&mut self, infos: &[(usize, Info)]) {
+        for (_, info) in infos {
+            for (k, v) in info {
+                match *k {
+                    "episode_return" => self.returns.push(*v),
+                    "episode_length" => self.lengths.push(*v),
+                    "score" => self.scores.push(*v),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    pub fn mean_score(&self, window: usize) -> Option<f64> {
+        mean_tail(&self.scores, window)
+    }
+    pub fn mean_return(&self, window: usize) -> Option<f64> {
+        mean_tail(&self.returns, window)
+    }
+    pub fn mean_length(&self, window: usize) -> Option<f64> {
+        mean_tail(&self.lengths, window)
+    }
+}
+
+fn mean_tail(xs: &[f64], window: usize) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    let tail = &xs[xs.len().saturating_sub(window)..];
+    Some(tail.iter().sum::<f64>() / tail.len() as f64)
+}
+
+/// Collect one full `(T, R)` segment from `venv`, calling `policy_step`
+/// for each received batch. `policy_step(obs_f32, global_rows, done_rows)`
+/// returns the sampled actions/logps/values for those rows; `done_rows`
+/// lists the global rows whose episode just ended — the policy must zero
+/// any recurrent state for them *before* the forward pass (their obs
+/// begins a fresh episode thanks to auto-reset).
+///
+/// Works on every backend mode: sync needs exactly `T + 1` recvs; pooled
+/// modes take as many as the stragglers require, with surplus frames from
+/// fast envs simply driven (actions computed and sent) but not stored.
+pub fn collect_rollout<V: VecEnv, F>(
+    venv: &mut V,
+    buf: &mut RolloutBuffer,
+    log: &mut EpisodeLog,
+    mut policy_step: F,
+) -> Result<()>
+where
+    F: FnMut(&[f32], &[usize], &[usize]) -> Result<PolicyOut>,
+{
+    let agents = venv.agents_per_env();
+    let layout = venv.obs_layout().clone();
+    let d = layout.flat_len();
+    let slots = venv.action_dims().len();
+    buf.begin_segment();
+
+    let mut obs_f32: Vec<f32> = Vec::new();
+    let mut global_rows: Vec<usize> = Vec::new();
+    let mut done_rows: Vec<usize> = Vec::new();
+    let mut actions_out: Vec<i32> = Vec::new();
+
+    while !buf.all_complete() {
+        // recv: obs o_t for a batch of rows; rewards/dones for those rows'
+        // *previous* actions.
+        let (rewards, terms, truncs, raw_obs, env_ids, infos) = {
+            let b = venv.recv()?;
+            (
+                b.rewards.to_vec(),
+                b.terms.to_vec(),
+                b.truncs.to_vec(),
+                b.obs.to_vec(),
+                b.env_ids.to_vec(),
+                b.infos,
+            )
+        };
+        log.absorb(&infos);
+
+        global_rows.clear();
+        for &e in &env_ids {
+            for a in 0..agents {
+                global_rows.push(e * agents + a);
+            }
+        }
+        let rows = global_rows.len();
+
+        // 1) Attribute last step's rewards.
+        done_rows.clear();
+        for (i, &g) in global_rows.iter().enumerate() {
+            let done = terms[i] || truncs[i];
+            if buf.attribute(g, rewards[i], done) {
+                done_rows.push(g);
+            }
+        }
+
+        // 2) Policy forward on the fresh observations (recurrent state of
+        //    done_rows zeroed inside the closure first).
+        obs_f32.resize(rows * d, 0.0);
+        for (i, row) in raw_obs.chunks_exact(layout.byte_len()).enumerate() {
+            layout.row_to_f32(row, &mut obs_f32[i * d..(i + 1) * d]);
+        }
+        let out = policy_step(&obs_f32, &global_rows, &done_rows)?;
+
+        // 3) Store decision points (or bootstrap values for full rows).
+        for (i, &g) in global_rows.iter().enumerate() {
+            buf.store(
+                g,
+                &obs_f32[i * d..(i + 1) * d],
+                &out.actions[i * slots..(i + 1) * slots],
+                out.logp[i],
+                out.values[i],
+            );
+        }
+
+        // 4) Send the actions back regardless — envs must keep running.
+        actions_out.clear();
+        actions_out.extend_from_slice(&out.actions[..rows * slots]);
+        venv.send(&actions_out)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs;
+    use crate::policy::PolicyOut;
+    use crate::vector::{Multiprocessing, Serial, VecConfig};
+
+    fn fake_policy(obs: &[f32], rows: &[usize], d: usize, slots: usize) -> PolicyOut {
+        // Deterministic: value = first obs elem; action = row id % 2.
+        let n = rows.len();
+        PolicyOut {
+            actions: rows
+                .iter()
+                .flat_map(|&g| std::iter::repeat((g % 2) as i32).take(slots))
+                .collect(),
+            logp: vec![-0.7; n],
+            values: (0..n).map(|i| obs[i * d]).collect(),
+        }
+    }
+
+    #[test]
+    fn sync_collection_fills_exactly() {
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 1,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut v = Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg).unwrap();
+        let d = v.obs_layout().flat_len();
+        let slots = v.action_dims().len();
+        let mut buf = RolloutBuffer::new(8, 4, d, slots);
+        let mut log = EpisodeLog::default();
+        v.async_reset(0);
+        collect_rollout(
+            &mut v,
+            &mut buf,
+            &mut log,
+            |obs, rows, _done| Ok(fake_policy(obs, rows, d, slots)),
+        )
+        .unwrap();
+        assert!(buf.all_complete());
+        // Every slot stored: starts[0, :] all 1 (fresh reset).
+        assert!(buf.starts[..4].iter().all(|&s| s == 1.0));
+        // Later starts only where an episode ended.
+        let interior_starts: f32 = buf.starts[4..].iter().sum();
+        let dones: f32 = buf.dones.iter().sum();
+        assert!(interior_starts <= dones + 1e-6);
+    }
+
+    #[test]
+    fn pooled_collection_completes_with_stragglers() {
+        use crate::emulation::PufferEnv;
+        use crate::envs::profile::{ProfileConfig, ProfileSim};
+        let factory = |i: usize| -> Box<dyn crate::emulation::FlatEnv> {
+            // Worker 1's envs are 20x slower.
+            let step_us = if i >= 2 { 400.0 } else { 20.0 };
+            Box::new(PufferEnv::new(ProfileSim::new(
+                ProfileConfig::synthetic(step_us, 0.3, 0.0, 4),
+                i as u64,
+            )))
+        };
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 2,
+            batch_size: 2,
+            ..Default::default()
+        };
+        let mut v = Multiprocessing::new(factory, cfg).unwrap();
+        let d = v.obs_layout().flat_len();
+        let slots = v.action_dims().len();
+        let mut buf = RolloutBuffer::new(6, 4, d, slots);
+        let mut log = EpisodeLog::default();
+        v.async_reset(0);
+        collect_rollout(
+            &mut v,
+            &mut buf,
+            &mut log,
+            |obs, rows, _done| Ok(fake_policy(obs, rows, d, slots)),
+        )
+        .unwrap();
+        assert!(buf.all_complete());
+        // All rows filled all T slots despite imbalance: values recorded
+        // everywhere (value = obs[0], cartpole obs nonzero generally; just
+        // check cursor bookkeeping via dones/rewards shape).
+        assert_eq!(buf.rewards.len(), 6 * 4);
+    }
+
+    #[test]
+    fn attribute_before_store_is_noop() {
+        let mut buf = RolloutBuffer::new(4, 2, 3, 1);
+        buf.begin_segment();
+        assert!(!buf.attribute(0, 1.0, true), "nothing pending yet");
+        assert_eq!(buf.rewards[0], 0.0);
+    }
+
+    #[test]
+    fn bootstrap_captured_after_full() {
+        let mut buf = RolloutBuffer::new(2, 1, 1, 1);
+        buf.begin_segment();
+        assert!(buf.store(0, &[0.1], &[0], -0.5, 10.0));
+        buf.attribute(0, 1.0, false);
+        assert!(buf.store(0, &[0.2], &[1], -0.5, 11.0));
+        buf.attribute(0, 2.0, false);
+        // Row full: next store captures the bootstrap instead.
+        assert!(!buf.store(0, &[0.3], &[0], -0.5, 99.0));
+        assert!(buf.all_complete());
+        assert_eq!(buf.last_values[0], 99.0);
+        assert_eq!(buf.rewards, vec![1.0, 2.0]);
+        assert_eq!(buf.values, vec![10.0, 11.0]);
+    }
+
+    #[test]
+    fn start_flags_track_episode_boundaries() {
+        let mut buf = RolloutBuffer::new(3, 1, 1, 1);
+        buf.mark_all_starts();
+        buf.begin_segment();
+        buf.store(0, &[0.0], &[0], -0.5, 0.0);
+        buf.attribute(0, 1.0, true); // episode ends
+        buf.store(0, &[0.0], &[0], -0.5, 0.0);
+        buf.attribute(0, 1.0, false);
+        buf.store(0, &[0.0], &[0], -0.5, 0.0);
+        assert_eq!(buf.starts, vec![1.0, 1.0, 0.0]);
+        assert_eq!(buf.dones, vec![1.0, 0.0, 0.0]);
+    }
+}

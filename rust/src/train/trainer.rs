@@ -1,0 +1,485 @@
+//! The PPO training loop: rollouts → GAE (L1 kernel via PJRT) →
+//! train_step (L2 via PJRT) × epochs, with LR annealing, checkpointing,
+//! and CSV/console metric logging.
+
+use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
+use super::Checkpoint;
+use crate::envs;
+use crate::policy::Policy;
+use crate::runtime::{
+    lit_f32, lit_f32_2d, lit_f32_3d, lit_i32_2d, lit_i32_3d, lit_scalar, to_f32s, Manifest,
+    Runtime,
+};
+use crate::util::timer::SpsCounter;
+use crate::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
+use anyhow::Result;
+use std::io::Write as _;
+
+/// Training configuration (Clean PuffeRL's YAML keys, as a struct; see
+/// [`crate::config`] for the file/CLI layer).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// First-party env name, e.g. "ocean/squared".
+    pub env: String,
+    /// Total environment interactions to train for.
+    pub total_steps: u64,
+    pub lr: f32,
+    pub ent_coef: f32,
+    /// PPO epochs per rollout segment.
+    pub epochs: usize,
+    pub anneal_lr: bool,
+    pub seed: u64,
+    /// Worker threads for the vectorizer (0 = serial backend).
+    pub num_workers: usize,
+    /// EnvPool mode: recv half the envs per batch (M = 2N
+    /// double-buffering). Requires `num_workers >= 2`.
+    pub pool: bool,
+    /// Optional run directory for metrics.csv + checkpoints.
+    pub run_dir: Option<String>,
+    /// Console log every n segments (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            env: "ocean/squared".into(),
+            total_steps: 30_000,
+            lr: 2.5e-3,
+            ent_coef: 0.01,
+            epochs: 4,
+            anneal_lr: true,
+            seed: 1,
+            num_workers: 2,
+            pool: false,
+            run_dir: None,
+            log_every: 5,
+        }
+    }
+}
+
+/// Final report from a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub global_step: u64,
+    pub sps: f64,
+    pub mean_score: Option<f64>,
+    pub mean_return: Option<f64>,
+    pub episodes: usize,
+    pub last_loss: f32,
+    /// (global_step, mean_score) curve sampled once per segment.
+    pub score_curve: Vec<(u64, f64)>,
+}
+
+/// Report from an evaluation run.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub episodes: usize,
+    pub mean_score: Option<f64>,
+    pub mean_return: Option<f64>,
+}
+
+/// Clean PuffeRL.
+pub struct Trainer {
+    cfg: TrainConfig,
+    rt: Runtime,
+    policy: Policy,
+    venv: Box<dyn VecEnv>,
+    buf: RolloutBuffer,
+    log: EpisodeLog,
+    spec_key: String,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    adam_step: f32,
+    global_step: u64,
+    metrics_file: Option<std::fs::File>,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let spec_key = Manifest::spec_key_for_env(&cfg.env);
+        let spec = rt.manifest().spec(&spec_key)?.clone();
+
+        // Contract check against a probe env.
+        let probe = envs::make(&cfg.env, cfg.seed);
+        rt.check_env_contract(
+            &spec_key,
+            probe.obs_layout().flat_len(),
+            probe.action_dims(),
+            probe.num_agents(),
+        )?;
+        drop(probe);
+
+        let agents = spec.agents;
+        anyhow::ensure!(
+            spec.batch_roll % agents == 0,
+            "batch_roll {} not divisible by agents {agents}",
+            spec.batch_roll
+        );
+        let num_envs = spec.batch_roll / agents;
+
+        // Vectorizer: sync (batch = all) or pooled (batch = half, M = 2N).
+        let env_name = cfg.env.clone();
+        let factory = move |i: usize| envs::make(&env_name, i as u64);
+        let venv: Box<dyn VecEnv> = if cfg.num_workers == 0 {
+            Box::new(Serial::new(
+                factory,
+                VecConfig {
+                    num_envs,
+                    num_workers: 1,
+                    batch_size: num_envs,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+            )?)
+        } else {
+            let workers = pick_workers(num_envs, cfg.num_workers, cfg.pool);
+            let batch = if cfg.pool { num_envs / 2 } else { num_envs };
+            Box::new(Multiprocessing::new(
+                factory,
+                VecConfig {
+                    num_envs,
+                    num_workers: workers,
+                    batch_size: batch,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+            )?)
+        };
+        if cfg.pool {
+            anyhow::ensure!(
+                spec.batch_fwd * 2 == spec.batch_roll,
+                "pool mode needs batch_roll == 2 * batch_fwd"
+            );
+        }
+
+        let policy = Policy::new(&rt, artifacts_dir, &spec_key, cfg.seed)?;
+        let buf = RolloutBuffer::new(
+            spec.horizon,
+            spec.batch_roll,
+            spec.obs_dim,
+            spec.act_dims.len(),
+        );
+        let n_params = spec.n_params;
+
+        let metrics_file = match &cfg.run_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                let mut f = std::fs::File::create(format!("{dir}/metrics.csv"))?;
+                writeln!(
+                    f,
+                    "global_step,sps,score,ep_return,ep_length,loss,pg_loss,v_loss,entropy,approx_kl"
+                )?;
+                Some(f)
+            }
+            None => None,
+        };
+
+        Ok(Trainer {
+            cfg,
+            rt,
+            policy,
+            venv,
+            buf,
+            log: EpisodeLog::default(),
+            spec_key,
+            adam_m: vec![0.0; n_params],
+            adam_v: vec![0.0; n_params],
+            adam_step: 0.0,
+            global_step: 0,
+            metrics_file,
+        })
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+    pub fn global_step(&self) -> u64 {
+        self.global_step
+    }
+
+    /// Run the full training loop.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let spec = self.policy.spec().clone();
+        let t_dim = spec.horizon;
+        let r_dim = spec.batch_roll;
+        let n = t_dim * r_dim;
+        let slots = spec.act_dims.len();
+        let mut sps = SpsCounter::new();
+        let mut last_metrics = [0.0f32; 5];
+        let mut segment = 0usize;
+        let mut score_curve = Vec::new();
+
+        self.venv.async_reset(self.cfg.seed);
+        self.buf.mark_all_starts();
+        self.policy.reset_all_state();
+
+        while self.global_step < self.cfg.total_steps {
+            // ---- Rollout ----
+            let (policy, rt, venv, buf, log) = (
+                &mut self.policy,
+                &mut self.rt,
+                &mut *self.venv,
+                &mut self.buf,
+                &mut self.log,
+            );
+            let mut dyn_venv = VenvRef(venv);
+            collect_rollout(&mut dyn_venv, buf, log, |obs, rows, done_rows| {
+                // Zero recurrent state for rows whose episode just ended
+                // *before* the forward pass on their fresh observations —
+                // the LSTM state-reset discipline of paper §3.4.
+                for &r in done_rows {
+                    policy.reset_state(r);
+                }
+                policy.step(rt, obs, rows)
+            })?;
+            self.global_step += n as u64;
+            sps.add(n as u64);
+
+            // ---- GAE (L1 Pallas kernel via PJRT) ----
+            let gae_exe = self.rt.load(&self.spec_key, "gae")?;
+            let outs = gae_exe.run(&[
+                lit_f32_2d(&self.buf.rewards, t_dim, r_dim)?,
+                lit_f32_2d(&self.buf.values, t_dim, r_dim)?,
+                lit_f32_2d(&self.buf.dones, t_dim, r_dim)?,
+                lit_f32(&self.buf.last_values),
+            ])?;
+            let adv = to_f32s(&outs[0])?;
+            let ret = to_f32s(&outs[1])?;
+
+            // ---- PPO epochs (L2 train step via PJRT) ----
+            let lr = if self.cfg.anneal_lr {
+                let frac = 1.0 - self.global_step as f32 / self.cfg.total_steps as f32;
+                self.cfg.lr * frac.max(0.05)
+            } else {
+                self.cfg.lr
+            };
+            for _ in 0..self.cfg.epochs {
+                let inputs: Vec<xla::Literal> = if spec.lstm {
+                    vec![
+                        lit_f32(self.policy.params()),
+                        lit_f32(&self.adam_m),
+                        lit_f32(&self.adam_v),
+                        lit_scalar(self.adam_step),
+                        lit_scalar(lr),
+                        lit_scalar(self.cfg.ent_coef),
+                        lit_f32_3d(&self.buf.obs, t_dim, r_dim, spec.obs_dim)?,
+                        lit_f32_2d(&self.buf.starts, t_dim, r_dim)?,
+                        lit_i32_3d(&self.buf.actions, t_dim, r_dim, slots)?,
+                        lit_f32_2d(&self.buf.logp, t_dim, r_dim)?,
+                        lit_f32_2d(&adv, t_dim, r_dim)?,
+                        lit_f32_2d(&ret, t_dim, r_dim)?,
+                    ]
+                } else {
+                    vec![
+                        lit_f32(self.policy.params()),
+                        lit_f32(&self.adam_m),
+                        lit_f32(&self.adam_v),
+                        lit_scalar(self.adam_step),
+                        lit_scalar(lr),
+                        lit_scalar(self.cfg.ent_coef),
+                        lit_f32_2d(&self.buf.obs, n, spec.obs_dim)?,
+                        lit_i32_2d(&self.buf.actions, n, slots)?,
+                        lit_f32(&self.buf.logp),
+                        lit_f32(&adv),
+                        lit_f32(&ret),
+                    ]
+                };
+                let exe = self.rt.load(&self.spec_key, "train_step")?;
+                let outs = exe.run(&inputs)?;
+                anyhow::ensure!(outs.len() == 5, "train_step returns 5 outputs");
+                *self.policy.params_mut() = to_f32s(&outs[0])?;
+                self.adam_m = to_f32s(&outs[1])?;
+                self.adam_v = to_f32s(&outs[2])?;
+                self.adam_step = to_f32s(&outs[3])?[0];
+                let m = to_f32s(&outs[4])?;
+                last_metrics.copy_from_slice(&m);
+            }
+
+            // ---- Logging ----
+            segment += 1;
+            if let Some(s) = self.log.mean_score(100) {
+                score_curve.push((self.global_step, s));
+            }
+            let window_sps = sps.window();
+            if self.cfg.log_every > 0 && segment % self.cfg.log_every == 0 {
+                println!(
+                    "[{}] step {:>8}  sps {:>8.0}  score {:>6}  return {:>8}  loss {:>8.4}  kl {:>7.4}",
+                    self.cfg.env,
+                    self.global_step,
+                    window_sps,
+                    fmt_opt(self.log.mean_score(100)),
+                    fmt_opt(self.log.mean_return(100)),
+                    last_metrics[0],
+                    last_metrics[4],
+                );
+            }
+            if let Some(f) = &mut self.metrics_file {
+                writeln!(
+                    f,
+                    "{},{:.0},{},{},{},{},{},{},{},{}",
+                    self.global_step,
+                    window_sps,
+                    fmt_opt(self.log.mean_score(100)),
+                    fmt_opt(self.log.mean_return(100)),
+                    fmt_opt(self.log.mean_length(100)),
+                    last_metrics[0],
+                    last_metrics[1],
+                    last_metrics[2],
+                    last_metrics[3],
+                    last_metrics[4],
+                )?;
+            }
+        }
+
+        if let Some(dir) = &self.cfg.run_dir {
+            self.checkpoint().save(format!("{dir}/checkpoint.bin"))?;
+        }
+
+        Ok(TrainReport {
+            global_step: self.global_step,
+            sps: sps.overall(),
+            mean_score: self.log.mean_score(100),
+            mean_return: self.log.mean_return(100),
+            episodes: self.log.scores.len(),
+            last_loss: last_metrics[0],
+            score_curve,
+        })
+    }
+
+    /// Evaluate the current policy (stochastic sampling, fresh envs) for
+    /// `min_episodes` episodes.
+    pub fn eval(&mut self, min_episodes: usize) -> Result<EvalReport> {
+        let mut log = EpisodeLog::default();
+        self.venv.async_reset(self.cfg.seed ^ 0xEEEE);
+        self.policy.reset_all_state();
+        let agents = self.venv.agents_per_env();
+        let slots = self.venv.action_dims().len();
+        let layout = self.venv.obs_layout().clone();
+        let d = layout.flat_len();
+        while log.scores.len() < min_episodes {
+            let (raw_obs, env_ids, infos) = {
+                let b = self.venv.recv()?;
+                (b.obs.to_vec(), b.env_ids.to_vec(), b.infos)
+            };
+            log.absorb(&infos);
+            let mut global_rows = Vec::new();
+            for &e in &env_ids {
+                for a in 0..agents {
+                    global_rows.push(e * agents + a);
+                }
+            }
+            let rows = global_rows.len();
+            let mut obs_f32 = vec![0.0; rows * d];
+            for (i, row) in raw_obs.chunks_exact(layout.byte_len()).enumerate() {
+                layout.row_to_f32(row, &mut obs_f32[i * d..(i + 1) * d]);
+            }
+            // Eval-side recurrent reset: done flags arrive with the batch.
+            let out = self.policy.step(&mut self.rt, &obs_f32, &global_rows)?;
+            self.venv.send(&out.actions[..rows * slots])?;
+        }
+        Ok(EvalReport {
+            episodes: log.scores.len(),
+            mean_score: log.mean_score(usize::MAX),
+            mean_return: log.mean_return(usize::MAX),
+        })
+    }
+
+    /// Snapshot trainer state.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            spec_key: self.spec_key.clone(),
+            global_step: self.global_step,
+            params: self.policy.params().to_vec(),
+            adam_m: self.adam_m.clone(),
+            adam_v: self.adam_v.clone(),
+            adam_step: self.adam_step,
+        }
+    }
+
+    /// Restore from a checkpoint (spec must match).
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ck.spec_key == self.spec_key,
+            "checkpoint is for '{}', trainer is '{}'",
+            ck.spec_key,
+            self.spec_key
+        );
+        *self.policy.params_mut() = ck.params.clone();
+        self.adam_m = ck.adam_m.clone();
+        self.adam_v = ck.adam_v.clone();
+        self.adam_step = ck.adam_step;
+        self.global_step = ck.global_step;
+        Ok(())
+    }
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.3}"),
+        None => "-".into(),
+    }
+}
+
+/// Pick a worker count ≤ `want` that divides `num_envs` (and keeps the
+/// pool batch a multiple of envs-per-worker when pooling).
+fn pick_workers(num_envs: usize, want: usize, pool: bool) -> usize {
+    let mut best = 1;
+    for w in 1..=want.min(num_envs) {
+        if num_envs % w != 0 {
+            continue;
+        }
+        let epw = num_envs / w;
+        if pool && (num_envs / 2) % epw != 0 {
+            continue;
+        }
+        best = w;
+    }
+    best
+}
+
+/// Adapter so `collect_rollout` (generic over `V: VecEnv`) can take the
+/// boxed trait object.
+struct VenvRef<'a>(&'a mut dyn VecEnv);
+impl crate::vector::VecEnv for VenvRef<'_> {
+    fn obs_layout(&self) -> &crate::spaces::StructLayout {
+        self.0.obs_layout()
+    }
+    fn action_dims(&self) -> &[usize] {
+        self.0.action_dims()
+    }
+    fn agents_per_env(&self) -> usize {
+        self.0.agents_per_env()
+    }
+    fn num_envs(&self) -> usize {
+        self.0.num_envs()
+    }
+    fn batch_size(&self) -> usize {
+        self.0.batch_size()
+    }
+    fn async_reset(&mut self, seed: u64) {
+        self.0.async_reset(seed)
+    }
+    fn recv(&mut self) -> Result<crate::vector::StepBatch<'_>> {
+        self.0.recv()
+    }
+    fn send(&mut self, actions: &[i32]) -> Result<()> {
+        self.0.send(actions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_workers_respects_divisibility() {
+        assert_eq!(pick_workers(32, 4, false), 4);
+        assert_eq!(pick_workers(32, 4, true), 4);
+        assert_eq!(pick_workers(30, 4, false), 3);
+        assert_eq!(pick_workers(7, 4, false), 1);
+        // pool: batch 16, envs 32, w=4 → epw 8, 16 % 8 == 0 ✓
+        assert_eq!(pick_workers(32, 3, true), 2);
+    }
+}

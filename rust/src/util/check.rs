@@ -1,0 +1,178 @@
+//! Mini property-testing framework (`proptest` is unavailable offline).
+//!
+//! Runs a property against N randomly generated cases from a seeded
+//! [`Rng`](crate::util::rng::Rng); on failure it reports the case index and
+//! seed so the exact case replays deterministically. A lightweight
+//! "shrinking" pass retries the property with each registered simpler
+//! variant of the failing input when the generator provides them.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct CheckConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        CheckConfig {
+            cases: 128,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn from `gen`. Panics with a
+/// reproducible diagnostic on the first failing case.
+pub fn check<T, G, P>(cfg: CheckConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n  input: {:?}\n  error: {msg}",
+                cfg.cases, cfg.seed, input
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with shrinking: `shrink` proposes simpler variants of
+/// a failing input; the smallest still-failing variant is reported.
+pub fn check_shrink<T, G, S, P>(cfg: CheckConfig, mut gen: G, shrink: S, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first simpler variant that
+            // still fails, up to a budget.
+            let mut current = input.clone();
+            let mut msg = first_msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in shrink(&current) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n  shrunk input: {:?}\n  error: {msg}",
+                cfg.cases, cfg.seed, current
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vec of length in `[min_len, max_len]` with elements from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let len = rng.range_i64(min_len as i64, max_len as i64) as usize;
+        (0..len).map(|_| f(rng)).collect()
+    }
+
+    /// Finite f32 in a reasonable range (no NaN/inf).
+    pub fn f32_reasonable(rng: &mut Rng) -> f32 {
+        rng.uniform(-1e4, 1e4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            CheckConfig::default(),
+            |rng| rng.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 100"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        check(
+            CheckConfig {
+                cases: 50,
+                seed: 42,
+            },
+            |rng| rng.below(10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input: 10")]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property: x < 10. Failing inputs are >= 10; shrinking by
+        // decrement should land exactly on 10.
+        check_shrink(
+            CheckConfig {
+                cases: 100,
+                seed: 7,
+            },
+            |rng| rng.below(1000),
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+            |&x| {
+                if x < 10 {
+                    Ok(())
+                } else {
+                    Err("x >= 10".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let v = gen::vec_of(&mut rng, 2, 5, |r| r.below(10));
+            assert!(v.len() >= 2 && v.len() <= 5);
+        }
+    }
+}

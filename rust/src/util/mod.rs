@@ -1,0 +1,11 @@
+//! Shared substrates: RNG, statistics, timing, JSON, and a mini
+//! property-testing framework. These exist because the build environment is
+//! offline — the usual crates (`rand`, `serde`, `criterion`, `proptest`)
+//! are unavailable, and the implementations here are small, specified, and
+//! tested.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,135 @@
+//! Timing helpers for benchmarks and throughput (steps-per-second)
+//! accounting.
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn micros(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e6
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Steps-per-second counter with windowed reporting, used by the trainer's
+/// console log and the bench harness.
+#[derive(Debug)]
+pub struct SpsCounter {
+    start: Instant,
+    window_start: Instant,
+    total_steps: u64,
+    window_steps: u64,
+}
+
+impl Default for SpsCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpsCounter {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        SpsCounter {
+            start: now,
+            window_start: now,
+            total_steps: 0,
+            window_steps: 0,
+        }
+    }
+
+    pub fn add(&mut self, steps: u64) {
+        self.total_steps += steps;
+        self.window_steps += steps;
+    }
+
+    /// Overall steps/second since construction.
+    pub fn overall(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.total_steps as f64 / secs
+        }
+    }
+
+    /// Steps/second since the last `window()` call, then reset the window.
+    pub fn window(&mut self) -> f64 {
+        let secs = self.window_start.elapsed().as_secs_f64();
+        let sps = if secs <= 0.0 {
+            0.0
+        } else {
+            self.window_steps as f64 / secs
+        };
+        self.window_start = Instant::now();
+        self.window_steps = 0;
+        sps
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total_steps
+    }
+}
+
+/// Busy-spin for a precise duration. Environment simulators use this to
+/// model per-step compute cost: `thread::sleep` has ~50µs+ granularity and
+/// yields the core, which would misrepresent a CPU-bound env. The spin is
+/// checked against the monotonic clock so it is accurate to ~100ns.
+#[inline]
+pub fn spin_for(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spin_for_is_accurate() {
+        let t = Timer::start();
+        spin_for(Duration::from_micros(200));
+        let us = t.micros();
+        assert!(us >= 200.0, "spun only {us}µs");
+        assert!(us < 5_000.0, "spun way too long: {us}µs");
+    }
+
+    #[test]
+    fn sps_counts() {
+        let mut c = SpsCounter::new();
+        c.add(10);
+        c.add(5);
+        assert_eq!(c.total(), 15);
+        spin_for(Duration::from_millis(2));
+        assert!(c.overall() > 0.0);
+        assert!(c.window() > 0.0);
+        // window resets
+        c.add(1);
+        assert_eq!(c.total(), 16);
+    }
+}

@@ -1,0 +1,152 @@
+//! The autotune utility (paper §3.3): *"Obtaining the best configuration
+//! for your environment and hardware requires testing all four code paths.
+//! We provide an utility that benchmarks valid vectorization settings."*
+
+use super::{Multiprocessing, Serial, VecConfig, VecEnv};
+use crate::emulation::FlatEnv;
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Result of benchmarking one candidate configuration.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub label: String,
+    pub cfg: VecConfig,
+    /// Aggregate environment steps per second (env-steps, not agent-steps).
+    pub sps: f64,
+}
+
+/// Benchmark every valid backend/code-path combination for `duration`
+/// seconds each and return results sorted best-first.
+///
+/// `num_envs` is the env budget; worker counts and batch sizes are swept
+/// over the divisors that produce each of the four code paths plus the
+/// serial baseline.
+pub fn autotune(
+    factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>,
+    num_envs: usize,
+    max_workers: usize,
+    duration_secs: f64,
+) -> Result<Vec<TuneResult>> {
+    let mut results = Vec::new();
+
+    // Serial reference.
+    {
+        let f = factory.clone();
+        let cfg = VecConfig {
+            num_envs,
+            num_workers: 1,
+            batch_size: num_envs,
+            ..Default::default()
+        };
+        let v = Serial::new(move |i| f(i), cfg.clone())?;
+        let sps = measure(v, duration_secs)?;
+        results.push(TuneResult {
+            label: "serial".into(),
+            cfg,
+            sps,
+        });
+    }
+
+    let worker_counts: Vec<usize> = [1, 2, 4, 8, 16]
+        .into_iter()
+        .filter(|&w| w <= max_workers && w <= num_envs && num_envs % w == 0)
+        .collect();
+
+    for &workers in &worker_counts {
+        let epw = num_envs / workers;
+        // Candidate (batch, zero_copy, label) per code path.
+        let mut candidates: Vec<(usize, bool, String)> =
+            vec![(num_envs, false, format!("sync w={workers}"))];
+        if workers > 1 {
+            candidates.push((epw, false, format!("pool-single w={workers}")));
+            if num_envs / 2 >= epw && (num_envs / 2) % epw == 0 && num_envs / 2 != epw {
+                candidates.push((num_envs / 2, false, format!("pool-half w={workers}")));
+                candidates.push((num_envs / 2, true, format!("zero-copy-half w={workers}")));
+            }
+        }
+        for (batch, zero_copy, label) in candidates {
+            let f = factory.clone();
+            let cfg = VecConfig {
+                num_envs,
+                num_workers: workers,
+                batch_size: batch,
+                zero_copy,
+                ..Default::default()
+            };
+            if cfg.mode().is_err() {
+                continue;
+            }
+            let v = Multiprocessing::new(move |i| f(i), cfg.clone())?;
+            let sps = measure(v, duration_secs)?;
+            results.push(TuneResult { label, cfg, sps });
+        }
+    }
+
+    results.sort_by(|a, b| b.sps.partial_cmp(&a.sps).unwrap());
+    Ok(results)
+}
+
+/// Drive a backend with no-op actions for `secs`, returning env-steps/sec.
+pub fn measure<V: VecEnv>(mut v: V, secs: f64) -> Result<f64> {
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    let batch_envs = v.batch_size();
+    let actions = vec![0i32; rows * slots];
+    v.async_reset(0);
+    // Warmup.
+    for _ in 0..3 {
+        let _ = v.recv()?;
+        v.send(&actions)?;
+    }
+    let t = Timer::start();
+    let mut steps = 0u64;
+    while t.secs() < secs {
+        let _ = v.recv()?;
+        v.send(&actions)?;
+        steps += batch_envs as u64;
+    }
+    Ok(steps as f64 / t.secs())
+}
+
+/// Pretty-print tune results as an aligned table.
+pub fn format_results(results: &[TuneResult]) -> String {
+    let mut out = String::from(
+        "rank  config                    workers  batch  zero_copy        SPS\n",
+    );
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>4}  {:<24}  {:>7}  {:>5}  {:>9}  {:>9.0}\n",
+            i + 1,
+            r.label,
+            r.cfg.num_workers,
+            r.cfg.batch_size,
+            r.cfg.zero_copy,
+            r.sps
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs;
+
+    #[test]
+    fn autotune_covers_code_paths_and_ranks() {
+        let factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync> =
+            Arc::new(|i| envs::make("ocean/squared", i as u64));
+        let results = autotune(factory, 4, 2, 0.05).unwrap();
+        assert!(results.len() >= 3, "too few candidates: {results:?}");
+        // Sorted best-first.
+        for pair in results.windows(2) {
+            assert!(pair[0].sps >= pair[1].sps);
+        }
+        // Serial is always among the candidates.
+        assert!(results.iter().any(|r| r.label == "serial"));
+        let table = format_results(&results);
+        assert!(table.contains("serial"));
+    }
+}

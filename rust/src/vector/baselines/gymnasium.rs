@@ -1,0 +1,248 @@
+//! The Gymnasium `AsyncVectorEnv` design: one env per worker, command/
+//! reply channels, wait for **all** envs every step, and "structured"
+//! shared-memory writes — each observation field copied separately into
+//! the batch (the multiple-small-copies path the paper calls out), plus
+//! Python-side per-message buffer churn (fresh allocations per reply).
+
+use super::{Cmd, Reply};
+use crate::emulation::{FlatEnv, Info};
+use crate::spaces::StructLayout;
+use crate::vector::{probe_factory, EnvFactory, StepBatch, VecConfig, VecEnv};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Gymnasium-style synchronous vectorization over worker threads.
+pub struct GymnasiumVec {
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    agents: usize,
+    num_envs: usize,
+    cmd_tx: Vec<mpsc::Sender<Cmd>>,
+    reply_rx: mpsc::Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+
+    obs: Vec<u8>,
+    rewards: Vec<f32>,
+    terms: Vec<bool>,
+    truncs: Vec<bool>,
+    env_ids: Vec<usize>,
+    infos: Vec<(usize, Info)>,
+    outstanding: usize,
+}
+
+impl GymnasiumVec {
+    pub fn new(
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+        cfg: VecConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.batch_size == cfg.num_envs,
+            "Gymnasium vectorization has no pool support: batch_size must equal num_envs"
+        );
+        let factory: EnvFactory = Box::new(factory);
+        let (layout, action_dims, agents) = probe_factory(&factory);
+        let factory = std::sync::Arc::new(factory);
+        let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+        let mut cmd_tx = Vec::new();
+        let mut handles = Vec::new();
+        for env_id in 0..cfg.num_envs {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            cmd_tx.push(tx);
+            let reply_tx = reply_tx.clone();
+            let factory = factory.clone();
+            let w = layout.byte_len();
+            handles.push(std::thread::spawn(move || {
+                // One env per worker: the design both libraries use.
+                let mut env = factory(env_id);
+                let rows = env.num_agents();
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Close => return,
+                        Cmd::Reset(seed) => {
+                            let mut obs = vec![0u8; rows * w];
+                            let info = env.reset(seed + env_id as u64, &mut obs);
+                            let _ = reply_tx.send(Reply {
+                                env_id,
+                                obs,
+                                rewards: vec![0.0; rows],
+                                terms: vec![false; rows],
+                                truncs: vec![false; rows],
+                                info,
+                            });
+                        }
+                        Cmd::Step(actions) => {
+                            // Fresh allocations per message: the pickling
+                            // analog.
+                            let mut obs = vec![0u8; rows * w];
+                            let mut rewards = vec![0.0; rows];
+                            let mut terms = vec![false; rows];
+                            let mut truncs = vec![false; rows];
+                            let info =
+                                env.step(&actions, &mut obs, &mut rewards, &mut terms, &mut truncs);
+                            let _ = reply_tx.send(Reply {
+                                env_id,
+                                obs,
+                                rewards,
+                                terms,
+                                truncs,
+                                info,
+                            });
+                        }
+                    }
+                }
+            }));
+        }
+        let rows = cfg.num_envs * agents;
+        let w = layout.byte_len();
+        Ok(GymnasiumVec {
+            layout,
+            action_dims,
+            agents,
+            num_envs: cfg.num_envs,
+            cmd_tx,
+            reply_rx,
+            handles,
+            obs: vec![0; rows * w],
+            rewards: vec![0.0; rows],
+            terms: vec![false; rows],
+            truncs: vec![false; rows],
+            env_ids: (0..cfg.num_envs).collect(),
+            infos: Vec::new(),
+            outstanding: 0,
+        })
+    }
+
+    /// Copy a reply into the batch buffers, field by field — Gymnasium's
+    /// structured shared-memory discipline (one small copy per leaf field
+    /// per env rather than one row copy).
+    fn place(&mut self, r: Reply) {
+        let w = self.layout.byte_len();
+        let rows = self.agents;
+        let base_row = r.env_id * rows;
+        for row in 0..rows {
+            let src = &r.obs[row * w..(row + 1) * w];
+            let dst_off = (base_row + row) * w;
+            for f in self.layout.fields() {
+                let nbytes = f.count * f.dtype.size();
+                self.obs[dst_off + f.byte_offset..dst_off + f.byte_offset + nbytes]
+                    .copy_from_slice(&src[f.byte_offset..f.byte_offset + nbytes]);
+            }
+        }
+        self.rewards[base_row..base_row + rows].copy_from_slice(&r.rewards);
+        self.terms[base_row..base_row + rows].copy_from_slice(&r.terms);
+        self.truncs[base_row..base_row + rows].copy_from_slice(&r.truncs);
+        if !r.info.is_empty() {
+            self.infos.push((r.env_id, r.info));
+        }
+    }
+}
+
+impl VecEnv for GymnasiumVec {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn agents_per_env(&self) -> usize {
+        self.agents
+    }
+    fn num_envs(&self) -> usize {
+        self.num_envs
+    }
+    fn batch_size(&self) -> usize {
+        self.num_envs
+    }
+
+    fn async_reset(&mut self, seed: u64) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Reset(seed));
+        }
+        self.outstanding = self.num_envs;
+    }
+
+    fn recv(&mut self) -> Result<StepBatch<'_>> {
+        anyhow::ensure!(self.outstanding > 0, "recv without outstanding work");
+        // Wait for ALL envs — the design's defining (and costly) property.
+        for _ in 0..self.outstanding {
+            let r = self
+                .reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("baseline worker died"))?;
+            self.place(r);
+        }
+        self.outstanding = 0;
+        Ok(StepBatch {
+            env_ids: &self.env_ids,
+            obs: &self.obs,
+            rewards: &self.rewards,
+            terms: &self.terms,
+            truncs: &self.truncs,
+            infos: std::mem::take(&mut self.infos),
+        })
+    }
+
+    fn send(&mut self, actions: &[i32]) -> Result<()> {
+        let slots = self.action_dims.len();
+        let rows = self.agents;
+        anyhow::ensure!(
+            actions.len() == self.num_envs * rows * slots,
+            "bad action length"
+        );
+        for (env_id, tx) in self.cmd_tx.iter().enumerate() {
+            let a = actions[env_id * rows * slots..(env_id + 1) * rows * slots].to_vec();
+            let _ = tx.send(Cmd::Step(a));
+        }
+        self.outstanding = self.num_envs;
+        Ok(())
+    }
+}
+
+impl Drop for GymnasiumVec {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Close);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs;
+
+    #[test]
+    fn round_trip() {
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 4,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut v = GymnasiumVec::new(|i| envs::make("ocean/squared", i as u64), cfg).unwrap();
+        v.async_reset(1);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        for _ in 0..20 {
+            let b = v.recv().unwrap();
+            assert_eq!(b.env_ids, &[0, 1, 2, 3]);
+            assert_eq!(b.obs.len(), rows * v.obs_layout().byte_len());
+            v.send(&vec![0i32; rows * slots]).unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_pooling() {
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 4,
+            batch_size: 2,
+            ..Default::default()
+        };
+        assert!(GymnasiumVec::new(|i| envs::make("ocean/squared", i as u64), cfg).is_err());
+    }
+}

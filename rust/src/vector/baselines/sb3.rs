@@ -1,0 +1,220 @@
+//! The SB3 `SubprocVecEnv` design: one env per worker, a pipe per worker
+//! polled **in worker order** (not completion order), no shared memory —
+//! observations travel inside the reply message — and flattening performed
+//! on the main process (the paper: *"For some reason, it does this on the
+//! main process and with a rather inefficient implementation"*).
+
+use super::{Cmd, Reply};
+use crate::emulation::{FlatEnv, Info};
+use crate::spaces::StructLayout;
+use crate::vector::{probe_factory, EnvFactory, StepBatch, VecConfig, VecEnv};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// SB3-style synchronous vectorization over worker threads.
+pub struct Sb3Vec {
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    agents: usize,
+    num_envs: usize,
+    cmd_tx: Vec<mpsc::Sender<Cmd>>,
+    /// One reply pipe per worker, read in order — a straggler at worker 0
+    /// blocks everything behind it.
+    reply_rx: Vec<mpsc::Receiver<Reply>>,
+    handles: Vec<JoinHandle<()>>,
+
+    obs: Vec<u8>,
+    rewards: Vec<f32>,
+    terms: Vec<bool>,
+    truncs: Vec<bool>,
+    env_ids: Vec<usize>,
+    infos: Vec<(usize, Info)>,
+    outstanding: bool,
+}
+
+impl Sb3Vec {
+    pub fn new(
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+        cfg: VecConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.batch_size == cfg.num_envs,
+            "SB3 vectorization has no pool support: batch_size must equal num_envs"
+        );
+        let factory: EnvFactory = Box::new(factory);
+        let (layout, action_dims, agents) = probe_factory(&factory);
+        let factory = std::sync::Arc::new(factory);
+        let mut cmd_tx = Vec::new();
+        let mut reply_rx = Vec::new();
+        let mut handles = Vec::new();
+        let w = layout.byte_len();
+        for env_id in 0..cfg.num_envs {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            let (rtx, rrx) = mpsc::channel::<Reply>();
+            cmd_tx.push(tx);
+            reply_rx.push(rrx);
+            let factory = factory.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut env = factory(env_id);
+                let rows = env.num_agents();
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Close => return,
+                        Cmd::Reset(seed) => {
+                            let mut obs = vec![0u8; rows * w];
+                            let info = env.reset(seed + env_id as u64, &mut obs);
+                            let _ = rtx.send(Reply {
+                                env_id,
+                                obs,
+                                rewards: vec![0.0; rows],
+                                terms: vec![false; rows],
+                                truncs: vec![false; rows],
+                                info,
+                            });
+                        }
+                        Cmd::Step(actions) => {
+                            let mut obs = vec![0u8; rows * w];
+                            let mut rewards = vec![0.0; rows];
+                            let mut terms = vec![false; rows];
+                            let mut truncs = vec![false; rows];
+                            let info =
+                                env.step(&actions, &mut obs, &mut rewards, &mut terms, &mut truncs);
+                            let _ = rtx.send(Reply {
+                                env_id,
+                                obs,
+                                rewards,
+                                terms,
+                                truncs,
+                                info,
+                            });
+                        }
+                    }
+                }
+            }));
+        }
+        let rows = cfg.num_envs * agents;
+        Ok(Sb3Vec {
+            layout,
+            action_dims,
+            agents,
+            num_envs: cfg.num_envs,
+            cmd_tx,
+            reply_rx,
+            handles,
+            obs: vec![0; rows * w],
+            rewards: vec![0.0; rows],
+            terms: vec![false; rows],
+            truncs: vec![false; rows],
+            env_ids: (0..cfg.num_envs).collect(),
+            infos: Vec::new(),
+            outstanding: false,
+        })
+    }
+}
+
+impl VecEnv for Sb3Vec {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn agents_per_env(&self) -> usize {
+        self.agents
+    }
+    fn num_envs(&self) -> usize {
+        self.num_envs
+    }
+    fn batch_size(&self) -> usize {
+        self.num_envs
+    }
+
+    fn async_reset(&mut self, seed: u64) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Reset(seed));
+        }
+        self.outstanding = true;
+    }
+
+    fn recv(&mut self) -> Result<StepBatch<'_>> {
+        anyhow::ensure!(self.outstanding, "recv without outstanding work");
+        let w = self.layout.byte_len();
+        let rows = self.agents;
+        // Poll pipes in worker order; main-thread "flatten" copies each
+        // env's observation into the stacked batch.
+        for env_id in 0..self.num_envs {
+            let r = self.reply_rx[env_id]
+                .recv()
+                .map_err(|_| anyhow::anyhow!("baseline worker died"))?;
+            let base = env_id * rows;
+            self.obs[base * w..(base + rows) * w].copy_from_slice(&r.obs);
+            self.rewards[base..base + rows].copy_from_slice(&r.rewards);
+            self.terms[base..base + rows].copy_from_slice(&r.terms);
+            self.truncs[base..base + rows].copy_from_slice(&r.truncs);
+            if !r.info.is_empty() {
+                self.infos.push((env_id, r.info));
+            }
+        }
+        self.outstanding = false;
+        Ok(StepBatch {
+            env_ids: &self.env_ids,
+            obs: &self.obs,
+            rewards: &self.rewards,
+            terms: &self.terms,
+            truncs: &self.truncs,
+            infos: std::mem::take(&mut self.infos),
+        })
+    }
+
+    fn send(&mut self, actions: &[i32]) -> Result<()> {
+        let slots = self.action_dims.len();
+        let rows = self.agents;
+        anyhow::ensure!(
+            actions.len() == self.num_envs * rows * slots,
+            "bad action length"
+        );
+        for (env_id, tx) in self.cmd_tx.iter().enumerate() {
+            let a = actions[env_id * rows * slots..(env_id + 1) * rows * slots].to_vec();
+            let _ = tx.send(Cmd::Step(a));
+        }
+        self.outstanding = true;
+        Ok(())
+    }
+}
+
+impl Drop for Sb3Vec {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Close);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs;
+
+    #[test]
+    fn round_trip() {
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 4,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut v = Sb3Vec::new(|i| envs::make("classic/cartpole", i as u64), cfg).unwrap();
+        v.async_reset(1);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        for _ in 0..20 {
+            let b = v.recv().unwrap();
+            assert_eq!(b.env_ids.len(), 4);
+            v.send(&vec![0i32; rows * slots]).unwrap();
+        }
+    }
+}

@@ -1,0 +1,866 @@
+//! The multiprocessing backend: `W` worker threads, each simulating
+//! `M / W` environments, exchanging all step data through preallocated
+//! shared slabs and signaling through busy-wait flags.
+//!
+//! This is the Rust analog of the paper's Python multiprocessing design
+//! (see DESIGN.md §Hardware-Adaptation: threads + shared buffers preserve
+//! the copy counts and synchronization topology of the original's shared
+//! memory + process model). All four optimized code paths live here,
+//! selected by [`VecConfig::mode`]:
+//!
+//! | [`Mode`]              | wait policy             | obs copies |
+//! |-----------------------|-------------------------|------------|
+//! | `Sync`                | all workers             | 0 (slab *is* the batch) |
+//! | `Async`               | first workers to finish | 1 gather   |
+//! | `AsyncSingleWorker`   | first worker to finish  | 0 (worker region is the batch) |
+//! | `ZeroCopy`            | next band in rotation   | 0 (band region is the batch) |
+
+use super::shared::{Flag, Slab, ACTIONS_READY, OBS_READY, POISONED, RESET, SHUTDOWN};
+use super::{probe_factory, EnvFactory, Mode, StepBatch, VecConfig, VecEnv};
+use crate::emulation::{FlatEnv, Info};
+use crate::spaces::StructLayout;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// Shared-memory threaded vectorization with EnvPool semantics.
+pub struct Multiprocessing {
+    cfg: VecConfig,
+    mode: Mode,
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    agents: usize,
+
+    flags: Vec<Arc<Flag>>,
+    obs: Arc<Slab<u8>>,
+    rewards: Arc<Slab<f32>>,
+    terms: Arc<Slab<bool>>,
+    truncs: Arc<Slab<bool>>,
+    actions: Arc<Slab<i32>>,
+    reset_seed: Arc<AtomicU64>,
+    /// Out-of-band shutdown: a worker mid-step would otherwise overwrite
+    /// a SHUTDOWN flag with OBS_READY and wait forever (lost signal).
+    shutdown: Arc<AtomicBool>,
+    info_rx: mpsc::Receiver<(usize, Info)>,
+    handles: Vec<JoinHandle<()>>,
+
+    /// Worker ids claimed by the last `recv`, in claim order.
+    pending: Vec<usize>,
+    env_ids: Vec<usize>,
+    awaiting_send: bool,
+    /// Round-robin scan start (Async fairness).
+    scan_cursor: usize,
+    /// Next band to claim (ZeroCopy rotation).
+    band_cursor: usize,
+
+    // Gather buffers (Async path only).
+    g_obs: Vec<u8>,
+    g_rewards: Vec<f32>,
+    g_terms: Vec<bool>,
+    g_truncs: Vec<bool>,
+}
+
+impl Multiprocessing {
+    pub fn new(
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+        cfg: VecConfig,
+    ) -> Result<Self> {
+        let factory: EnvFactory = Box::new(factory);
+        let mode = cfg.mode()?;
+        let (layout, action_dims, agents) = probe_factory(&factory);
+        let w = layout.byte_len();
+        let slots = action_dims.len();
+        let rows = cfg.num_envs * agents;
+
+        let obs = Slab::<u8>::new(rows * w);
+        let rewards = Slab::<f32>::new(rows);
+        let terms = Slab::<bool>::new(rows);
+        let truncs = Slab::<bool>::new(rows);
+        let actions = Slab::<i32>::new(rows * slots);
+        let reset_seed = Arc::new(AtomicU64::new(cfg.seed));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flags: Vec<Arc<Flag>> = (0..cfg.num_workers).map(|_| Arc::new(Flag::new())).collect();
+        let (info_tx, info_rx) = mpsc::channel::<(usize, Info)>();
+
+        let factory = Arc::new(factory);
+        let epw = cfg.envs_per_worker();
+        let mut handles = Vec::with_capacity(cfg.num_workers);
+        for wid in 0..cfg.num_workers {
+            let ctx = WorkerCtx {
+                wid,
+                epw,
+                agents,
+                byte_len: w,
+                slots,
+                spin_budget: cfg.spin_budget,
+                flag: flags[wid].clone(),
+                obs: obs.clone(),
+                rewards: rewards.clone(),
+                terms: terms.clone(),
+                truncs: truncs.clone(),
+                actions: actions.clone(),
+                reset_seed: reset_seed.clone(),
+                shutdown: shutdown.clone(),
+                info_tx: info_tx.clone(),
+                factory: factory.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("puffer-worker-{wid}"))
+                    .spawn(move || worker_main(ctx))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let batch_rows = cfg.batch_size * agents;
+        Ok(Multiprocessing {
+            mode,
+            layout,
+            action_dims,
+            agents,
+            flags,
+            obs,
+            rewards,
+            terms,
+            truncs,
+            actions,
+            reset_seed,
+            shutdown,
+            info_rx,
+            handles,
+            pending: Vec::with_capacity(cfg.num_workers),
+            env_ids: Vec::with_capacity(cfg.batch_size),
+            awaiting_send: false,
+            scan_cursor: 0,
+            band_cursor: 0,
+            g_obs: vec![0; batch_rows * w],
+            g_rewards: vec![0.0; batch_rows],
+            g_terms: vec![false; batch_rows],
+            g_truncs: vec![false; batch_rows],
+            cfg,
+        })
+    }
+
+    /// The resolved code path.
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    fn epw(&self) -> usize {
+        self.cfg.envs_per_worker()
+    }
+    /// Rows owned by one worker.
+    fn rows_per_worker(&self) -> usize {
+        self.epw() * self.agents
+    }
+    fn workers_per_batch(&self) -> usize {
+        self.cfg.batch_size / self.epw()
+    }
+
+    fn drain_infos(&mut self) -> Vec<(usize, Info)> {
+        let mut out = Vec::new();
+        while let Ok(item) = self.info_rx.try_recv() {
+            out.push(item);
+        }
+        out
+    }
+
+    fn check_poison(&self) -> Result<()> {
+        for (wid, f) in self.flags.iter().enumerate() {
+            if f.load() == POISONED {
+                anyhow::bail!(
+                    "worker {wid} poisoned: an environment panicked; the vectorizer is dead"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Wait until `wid` reaches a leader-owned state (OBS_READY), claiming
+    /// it. Errors on poison.
+    fn wait_and_claim(&self, wid: usize) -> Result<()> {
+        let s = self.flags[wid].wait(self.cfg.spin_budget, |s| {
+            s == OBS_READY || s == POISONED
+        });
+        if s == POISONED {
+            self.check_poison()?;
+        }
+        // Exclusive claim (we are the only leader, but CAS keeps the
+        // invariant explicit and cheap).
+        anyhow::ensure!(self.flags[wid].try_claim(), "claim raced on worker {wid}");
+        Ok(())
+    }
+
+    /// Borrowed slices over a contiguous run of workers
+    /// `[first, first + n)`.
+    fn region_slices(&self, first_wid: usize, n_workers: usize) -> (&[u8], &[f32], &[bool], &[bool]) {
+        let rpw = self.rows_per_worker();
+        let w = self.layout.byte_len();
+        let row0 = first_wid * rpw;
+        let rows = n_workers * rpw;
+        // SAFETY: all workers in the run are CLAIMED (leader-owned).
+        unsafe {
+            (
+                self.obs.slice(row0 * w, rows * w),
+                self.rewards.slice(row0, rows),
+                self.terms.slice(row0, rows),
+                self.truncs.slice(row0, rows),
+            )
+        }
+    }
+
+    fn set_env_ids(&mut self, worker_order: &[usize]) {
+        self.env_ids.clear();
+        let epw = self.epw();
+        for &wid in worker_order {
+            self.env_ids.extend(wid * epw..(wid + 1) * epw);
+        }
+    }
+}
+
+impl VecEnv for Multiprocessing {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn agents_per_env(&self) -> usize {
+        self.agents
+    }
+    fn num_envs(&self) -> usize {
+        self.cfg.num_envs
+    }
+    fn batch_size(&self) -> usize {
+        self.cfg.batch_size
+    }
+
+    fn async_reset(&mut self, seed: u64) {
+        assert!(
+            !self.awaiting_send,
+            "async_reset with a batch outstanding; send() first"
+        );
+        self.reset_seed.store(seed, Ordering::Release);
+        for f in &self.flags {
+            // Workers are IDLE (startup) or OBS_READY/CLAIMED (mid-run,
+            // nothing outstanding): all leader-owned states.
+            f.wait(self.cfg.spin_budget, |s| {
+                s != ACTIONS_READY && s != RESET
+            });
+            f.store(RESET);
+        }
+        self.pending.clear();
+        self.scan_cursor = 0;
+        self.band_cursor = 0;
+    }
+
+    fn recv(&mut self) -> Result<StepBatch<'_>> {
+        anyhow::ensure!(
+            !self.awaiting_send,
+            "recv called twice without an intervening send"
+        );
+        self.check_poison()?;
+        self.pending.clear();
+
+        match self.mode {
+            Mode::Sync => {
+                for wid in 0..self.cfg.num_workers {
+                    self.wait_and_claim(wid)?;
+                    self.pending.push(wid);
+                }
+                self.set_env_ids(&(0..self.cfg.num_workers).collect::<Vec<_>>());
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                let (obs, rewards, terms, truncs) =
+                    self.region_slices(0, self.cfg.num_workers);
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs,
+                    rewards,
+                    terms,
+                    truncs,
+                    infos,
+                })
+            }
+            Mode::AsyncSingleWorker => {
+                // First worker to finish wins; round-robin scan for
+                // fairness.
+                let wid = loop {
+                    self.check_poison()?;
+                    let mut found = None;
+                    for k in 0..self.cfg.num_workers {
+                        let wid = (self.scan_cursor + k) % self.cfg.num_workers;
+                        if self.flags[wid].try_claim() {
+                            found = Some(wid);
+                            break;
+                        }
+                    }
+                    match found {
+                        Some(wid) => break wid,
+                        // Nothing ready: let workers run (crucial when
+                        // cores are oversubscribed).
+                        None => std::thread::yield_now(),
+                    }
+                };
+                self.scan_cursor = (wid + 1) % self.cfg.num_workers;
+                self.pending.push(wid);
+                self.set_env_ids(&[wid]);
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                let (obs, rewards, terms, truncs) = self.region_slices(wid, 1);
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs,
+                    rewards,
+                    terms,
+                    truncs,
+                    infos,
+                })
+            }
+            Mode::Async => {
+                // Claim the first `workers_per_batch` finishers, gather
+                // their regions into one contiguous batch (the single copy
+                // this path pays).
+                let need = self.workers_per_batch();
+                while self.pending.len() < need {
+                    self.check_poison()?;
+                    let mut progressed = false;
+                    for k in 0..self.cfg.num_workers {
+                        let wid = (self.scan_cursor + k) % self.cfg.num_workers;
+                        if self.pending.contains(&wid) {
+                            continue;
+                        }
+                        if self.flags[wid].try_claim() {
+                            self.pending.push(wid);
+                            progressed = true;
+                            if self.pending.len() == need {
+                                break;
+                            }
+                        }
+                    }
+                    if !progressed {
+                        // Let workers run while we wait for finishers.
+                        std::thread::yield_now();
+                    }
+                }
+                self.scan_cursor =
+                    (self.pending.last().copied().unwrap_or(0) + 1) % self.cfg.num_workers;
+                let order = self.pending.clone();
+                self.set_env_ids(&order);
+
+                let rpw = self.rows_per_worker();
+                let w = self.layout.byte_len();
+                for (slot, &wid) in order.iter().enumerate() {
+                    let row0 = wid * rpw;
+                    // SAFETY: worker `wid` is CLAIMED (leader-owned).
+                    // Field-disjoint borrows: slab sources vs gather
+                    // destinations.
+                    unsafe {
+                        self.g_obs[slot * rpw * w..(slot + 1) * rpw * w]
+                            .copy_from_slice(self.obs.slice(row0 * w, rpw * w));
+                        self.g_rewards[slot * rpw..(slot + 1) * rpw]
+                            .copy_from_slice(self.rewards.slice(row0, rpw));
+                        self.g_terms[slot * rpw..(slot + 1) * rpw]
+                            .copy_from_slice(self.terms.slice(row0, rpw));
+                        self.g_truncs[slot * rpw..(slot + 1) * rpw]
+                            .copy_from_slice(self.truncs.slice(row0, rpw));
+                    }
+                }
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs: &self.g_obs,
+                    rewards: &self.g_rewards,
+                    terms: &self.g_terms,
+                    truncs: &self.g_truncs,
+                    infos,
+                })
+            }
+            Mode::ZeroCopy => {
+                // Bands of adjacent workers claimed in rotation: the batch
+                // is a contiguous slab window — a circular buffer of
+                // batches.
+                let wpb = self.workers_per_batch();
+                let n_bands = self.cfg.num_workers / wpb;
+                let band = self.band_cursor % n_bands;
+                let first = band * wpb;
+                for wid in first..first + wpb {
+                    self.wait_and_claim(wid)?;
+                    self.pending.push(wid);
+                }
+                self.band_cursor = (band + 1) % n_bands;
+                self.set_env_ids(&(first..first + wpb).collect::<Vec<_>>());
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                let (obs, rewards, terms, truncs) = self.region_slices(first, wpb);
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs,
+                    rewards,
+                    terms,
+                    truncs,
+                    infos,
+                })
+            }
+        }
+    }
+
+    fn send(&mut self, actions: &[i32]) -> Result<()> {
+        anyhow::ensure!(self.awaiting_send, "send called without a pending recv");
+        let slots = self.action_dims.len();
+        let rpw = self.rows_per_worker();
+        anyhow::ensure!(
+            actions.len() == self.pending.len() * rpw * slots,
+            "expected {} action slots, got {}",
+            self.pending.len() * rpw * slots,
+            actions.len()
+        );
+        for (slot, &wid) in self.pending.iter().enumerate() {
+            // SAFETY: worker is CLAIMED (leader-owned) until the flag
+            // below hands the region back.
+            let dst = unsafe { self.actions.slice_mut(wid * rpw * slots, rpw * slots) };
+            dst.copy_from_slice(&actions[slot * rpw * slots..(slot + 1) * rpw * slots]);
+            self.flags[wid].store(ACTIONS_READY);
+        }
+        self.pending.clear();
+        self.awaiting_send = false;
+        Ok(())
+    }
+}
+
+impl Drop for Multiprocessing {
+    fn drop(&mut self) {
+        // Out-of-band flag first (survives any in-flight OBS_READY store),
+        // then the state flags to wake waiters immediately.
+        self.shutdown.store(true, Ordering::Release);
+        for f in &self.flags {
+            f.store(SHUTDOWN);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct WorkerCtx {
+    wid: usize,
+    epw: usize,
+    agents: usize,
+    byte_len: usize,
+    slots: usize,
+    spin_budget: u32,
+    flag: Arc<Flag>,
+    obs: Arc<Slab<u8>>,
+    rewards: Arc<Slab<f32>>,
+    terms: Arc<Slab<bool>>,
+    truncs: Arc<Slab<bool>>,
+    actions: Arc<Slab<i32>>,
+    reset_seed: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    info_tx: mpsc::Sender<(usize, Info)>,
+    factory: Arc<EnvFactory>,
+}
+
+fn worker_main(ctx: WorkerCtx) {
+    let flag = ctx.flag.clone();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        worker_loop(ctx)
+    }));
+    if result.is_err() {
+        // Mark the backend dead; the leader surfaces this as an error on
+        // the next recv (failure injection tests exercise this path).
+        flag.store(POISONED);
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    // Envs are constructed *inside* the worker (processes do the same),
+    // parallelizing expensive env startup.
+    let mut envs: Vec<Box<dyn FlatEnv>> = (0..ctx.epw)
+        .map(|j| (ctx.factory)(ctx.wid * ctx.epw + j))
+        .collect();
+
+    let rpw = ctx.epw * ctx.agents;
+    let row0 = ctx.wid * rpw;
+    loop {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let state = ctx
+            .flag
+            .wait(ctx.spin_budget, |s| matches!(s, ACTIONS_READY | RESET | SHUTDOWN));
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match state {
+            SHUTDOWN => return,
+            RESET => {
+                let seed = ctx.reset_seed.load(Ordering::Acquire);
+                for (j, env) in envs.iter_mut().enumerate() {
+                    let env_id = ctx.wid * ctx.epw + j;
+                    let r = j * ctx.agents;
+                    // SAFETY: RESET state grants the worker its regions.
+                    let obs = unsafe {
+                        ctx.obs
+                            .slice_mut((row0 + r) * ctx.byte_len, ctx.agents * ctx.byte_len)
+                    };
+                    let info = env.reset(seed + env_id as u64, obs);
+                    unsafe {
+                        ctx.rewards.slice_mut(row0 + r, ctx.agents).fill(0.0);
+                        ctx.terms.slice_mut(row0 + r, ctx.agents).fill(false);
+                        ctx.truncs.slice_mut(row0 + r, ctx.agents).fill(false);
+                    }
+                    if !info.is_empty() {
+                        let _ = ctx.info_tx.send((env_id, info));
+                    }
+                }
+                ctx.flag.store(OBS_READY);
+            }
+            ACTIONS_READY => {
+                for (j, env) in envs.iter_mut().enumerate() {
+                    let env_id = ctx.wid * ctx.epw + j;
+                    let r = j * ctx.agents;
+                    // SAFETY: ACTIONS_READY grants the worker its regions.
+                    // Each env's rows are stacked directly into the shared
+                    // slab — "multiple environments per worker" without
+                    // extra copies.
+                    let (actions, obs, rewards, terms, truncs) = unsafe {
+                        (
+                            ctx.actions
+                                .slice((row0 + r) * ctx.slots, ctx.agents * ctx.slots),
+                            ctx.obs
+                                .slice_mut((row0 + r) * ctx.byte_len, ctx.agents * ctx.byte_len),
+                            ctx.rewards.slice_mut(row0 + r, ctx.agents),
+                            ctx.terms.slice_mut(row0 + r, ctx.agents),
+                            ctx.truncs.slice_mut(row0 + r, ctx.agents),
+                        )
+                    };
+                    let info = env.step(actions, obs, rewards, terms, truncs);
+                    if !info.is_empty() {
+                        // The only cross-thread channel traffic: one send
+                        // per episode per env (paper: pipes for infos).
+                        let _ = ctx.info_tx.send((env_id, info));
+                    }
+                }
+                ctx.flag.store(OBS_READY);
+            }
+            _ => unreachable!("worker woke in state {state}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs;
+    use crate::spaces::{Space, Value};
+
+    fn cfg(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) -> VecConfig {
+        VecConfig {
+            num_envs,
+            num_workers,
+            batch_size,
+            zero_copy,
+            ..Default::default()
+        }
+    }
+
+    fn drive(mut v: Multiprocessing, steps: usize) {
+        v.async_reset(3);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let w = v.obs_layout().byte_len();
+        for _ in 0..steps {
+            let ids;
+            {
+                let b = v.recv().unwrap();
+                assert_eq!(b.obs.len(), rows * w);
+                assert_eq!(b.rewards.len(), rows);
+                ids = b.env_ids.to_vec();
+            }
+            assert_eq!(ids.len(), v.batch_size());
+            v.send(&vec![0i32; rows * slots]).unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_path() {
+        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 2, 8, false)).unwrap();
+        assert_eq!(v.mode(), Mode::Sync);
+        drive(v, 30);
+    }
+
+    #[test]
+    fn async_path() {
+        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 4, 4, false)).unwrap();
+        assert_eq!(v.mode(), Mode::Async);
+        drive(v, 30);
+    }
+
+    #[test]
+    fn async_single_worker_path() {
+        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 4, 2, false)).unwrap();
+        assert_eq!(v.mode(), Mode::AsyncSingleWorker);
+        drive(v, 30);
+    }
+
+    #[test]
+    fn zero_copy_path() {
+        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 4, 4, true)).unwrap();
+        assert_eq!(v.mode(), Mode::ZeroCopy);
+        drive(v, 30);
+    }
+
+    /// Deterministic env whose obs encodes (env_instance_id, step_count,
+    /// last_action) — catches row routing bugs across all code paths.
+    struct Tracer {
+        id: u64,
+        t: f32,
+        last: f32,
+    }
+    impl crate::emulation::StructuredEnv for Tracer {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[3], -1e6, 1e6)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(64)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            self.t = 0.0;
+            self.last = -1.0;
+            Value::F32(vec![self.id as f32, 0.0, -1.0])
+        }
+        fn step(&mut self, a: &Value) -> (Value, f32, bool, bool, crate::emulation::Info) {
+            self.t += 1.0;
+            self.last = a.as_discrete().unwrap() as f32;
+            (
+                Value::F32(vec![self.id as f32, self.t, self.last]),
+                self.last,
+                false,
+                false,
+                vec![],
+            )
+        }
+    }
+
+    fn tracer_factory(i: usize) -> Box<dyn FlatEnv> {
+        Box::new(crate::emulation::PufferEnv::new(Tracer {
+            id: i as u64,
+            t: 0.0,
+            last: -1.0,
+        }))
+    }
+
+    fn decode_rows(w: usize, obs: &[u8]) -> Vec<(f32, f32, f32)> {
+        obs.chunks_exact(w)
+            .map(|row| {
+                let f = |i: usize| {
+                    f32::from_le_bytes(row[4 * i..4 * i + 4].try_into().unwrap())
+                };
+                (f(0), f(1), f(2))
+            })
+            .collect()
+    }
+
+    /// Actions sent for env e must arrive at env e, and its obs row must
+    /// come back in the position its env_id claims — on every path.
+    fn routing_check(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) {
+        let mut v =
+            Multiprocessing::new(tracer_factory, cfg(num_envs, num_workers, batch_size, zero_copy))
+                .unwrap();
+        let w = v.obs_layout().byte_len();
+        v.async_reset(0);
+        for _round in 0..20 {
+            let (ids, rows) = {
+                let b = v.recv().unwrap();
+                (b.env_ids.to_vec(), decode_rows(w, b.obs))
+            };
+            for (slot, &env_id) in ids.iter().enumerate() {
+                let (id, _t, _last) = rows[slot];
+                assert_eq!(id as usize, env_id, "row {slot} carries wrong env");
+            }
+            // Send action = env_id + 7; verify it echoes next time we see
+            // that env.
+            let actions: Vec<i32> = ids.iter().map(|&e| (e as i32 + 7) % 64).collect();
+            v.send(&actions).unwrap();
+            let (ids2, rows2) = {
+                let b = v.recv().unwrap();
+                (b.env_ids.to_vec(), decode_rows(w, b.obs))
+            };
+            for (slot, &env_id) in ids2.iter().enumerate() {
+                let (id, t, last) = rows2[slot];
+                assert_eq!(id as usize, env_id);
+                if t > 0.0 {
+                    assert_eq!(
+                        last as i32,
+                        (env_id as i32 + 7) % 64,
+                        "env {env_id} got someone else's action"
+                    );
+                }
+            }
+            let actions: Vec<i32> = ids2.iter().map(|&e| (e as i32 + 7) % 64).collect();
+            v.send(&actions).unwrap();
+        }
+    }
+
+    #[test]
+    fn routing_sync() {
+        routing_check(8, 4, 8, false);
+    }
+    #[test]
+    fn routing_async() {
+        routing_check(8, 4, 4, false);
+    }
+    #[test]
+    fn routing_single_worker() {
+        routing_check(8, 4, 2, false);
+    }
+    #[test]
+    fn routing_zero_copy() {
+        routing_check(8, 4, 4, true);
+    }
+    #[test]
+    fn routing_multi_env_per_worker() {
+        routing_check(12, 3, 4, false);
+    }
+
+    #[test]
+    fn infos_cross_once_per_episode() {
+        let mut v = Multiprocessing::new(
+            |i| envs::make("ocean/bandit", i as u64),
+            cfg(4, 2, 4, false),
+        )
+        .unwrap();
+        v.async_reset(1);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let mut episode_infos = 0;
+        for _ in 0..10 {
+            let b = v.recv().unwrap();
+            episode_infos += b.infos.len();
+            let n = rows * slots;
+            v.send(&vec![0i32; n]).unwrap();
+        }
+        // Bandit episodes are one step: every step ends an episode, so
+        // infos flow — but only via the channel, only non-empty.
+        assert!(episode_infos > 0, "no episode infos arrived");
+    }
+
+    /// Env that panics on step `k` — the worker must poison, and the
+    /// leader must report an error instead of hanging.
+    struct Bomb {
+        t: u32,
+        fuse: u32,
+    }
+    impl crate::emulation::StructuredEnv for Bomb {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[1], 0.0, 1.0)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(2)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            Value::F32(vec![0.0])
+        }
+        fn step(&mut self, _a: &Value) -> (Value, f32, bool, bool, crate::emulation::Info) {
+            self.t += 1;
+            if self.t >= self.fuse {
+                panic!("boom");
+            }
+            (Value::F32(vec![0.0]), 0.0, false, false, vec![])
+        }
+    }
+
+    #[test]
+    fn worker_panic_poisons_backend() {
+        let mut v = Multiprocessing::new(
+            |_i| {
+                Box::new(crate::emulation::PufferEnv::new(Bomb { t: 0, fuse: 3 }))
+                    as Box<dyn FlatEnv>
+            },
+            cfg(4, 2, 4, false),
+        )
+        .unwrap();
+        v.async_reset(0);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let mut saw_error = false;
+        for _ in 0..10 {
+            match v.recv() {
+                Ok(_) => {
+                    if v.send(&vec![0i32; rows * slots]).is_err() {
+                        saw_error = true;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    assert!(e.to_string().contains("poisoned"), "{e}");
+                    saw_error = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_error, "poison never surfaced");
+    }
+
+    #[test]
+    fn pool_returns_fast_envs_first() {
+        // Workers 0..3: worker 3 is 50x slower. With batch = 1 worker, the
+        // fast workers should dominate the claimed batches.
+        use crate::envs::profile::{ProfileConfig, ProfileSim};
+        let factory = |i: usize| -> Box<dyn FlatEnv> {
+            let step_us = if i == 3 { 5000.0 } else { 100.0 };
+            Box::new(crate::emulation::PufferEnv::new(ProfileSim::new(
+                ProfileConfig::synthetic(step_us, 0.0, 0.0, 4),
+                i as u64,
+            )))
+        };
+        let mut v = Multiprocessing::new(factory, cfg(4, 4, 1, false)).unwrap();
+        assert_eq!(v.mode(), Mode::AsyncSingleWorker);
+        v.async_reset(0);
+        let slots = v.action_dims().len();
+        let mut counts = [0usize; 4];
+        for _ in 0..40 {
+            let wid = {
+                let b = v.recv().unwrap();
+                b.env_ids[0]
+            };
+            counts[wid] += 1;
+            v.send(&vec![0i32; slots]).unwrap();
+        }
+        let fast: usize = counts[..3].iter().sum();
+        assert!(
+            fast > counts[3] * 3,
+            "slow worker claimed too often: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn batch_sizes_and_agent_rows() {
+        let v = Multiprocessing::new(
+            |i| envs::make("ocean/multiagent", i as u64),
+            cfg(4, 2, 2, false),
+        )
+        .unwrap();
+        assert_eq!(v.agents_per_env(), 2);
+        assert_eq!(v.batch_rows(), 4);
+        drop(v);
+    }
+
+    #[test]
+    fn protocol_misuse_errors() {
+        let mut v = Multiprocessing::new(
+            |i| envs::make("ocean/bandit", i as u64),
+            cfg(2, 1, 2, false),
+        )
+        .unwrap();
+        assert!(v.send(&[0, 0]).is_err(), "send before recv");
+        v.async_reset(0);
+        let _ = v.recv().unwrap();
+        assert!(v.recv().is_err(), "double recv");
+    }
+}

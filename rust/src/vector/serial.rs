@@ -1,0 +1,204 @@
+//! The serial backend: all envs stepped inline on the caller's thread.
+//! Zero parallelism, zero synchronization overhead — the baseline every
+//! other backend is compared against, and the right choice for very fast
+//! envs at small counts (and for debugging).
+
+use super::{probe_factory, EnvFactory, StepBatch, VecConfig, VecEnv};
+use crate::emulation::{FlatEnv, Info};
+use crate::spaces::StructLayout;
+use anyhow::Result;
+
+/// In-thread vectorization.
+pub struct Serial {
+    envs: Vec<Box<dyn FlatEnv>>,
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    agents: usize,
+    obs: Vec<u8>,
+    rewards: Vec<f32>,
+    terms: Vec<bool>,
+    truncs: Vec<bool>,
+    env_ids: Vec<usize>,
+    infos: Vec<(usize, Info)>,
+    seed: u64,
+    /// Results pending delivery by `recv` (reset or step happened).
+    ready: bool,
+}
+
+impl Serial {
+    pub fn new(factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static, cfg: VecConfig) -> Result<Self> {
+        let factory: EnvFactory = Box::new(factory);
+        anyhow::ensure!(
+            cfg.batch_size == cfg.num_envs,
+            "Serial requires batch_size == num_envs (got {} vs {})",
+            cfg.batch_size,
+            cfg.num_envs
+        );
+        let (layout, action_dims, agents) = probe_factory(&factory);
+        let envs: Vec<_> = (0..cfg.num_envs).map(|i| factory(i)).collect();
+        let rows = cfg.num_envs * agents;
+        let w = layout.byte_len();
+        Ok(Serial {
+            envs,
+            layout,
+            action_dims,
+            agents,
+            obs: vec![0; rows * w],
+            rewards: vec![0.0; rows],
+            terms: vec![false; rows],
+            truncs: vec![false; rows],
+            env_ids: (0..cfg.num_envs).collect(),
+            infos: Vec::new(),
+            seed: cfg.seed,
+            ready: false,
+        })
+    }
+}
+
+impl VecEnv for Serial {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn agents_per_env(&self) -> usize {
+        self.agents
+    }
+    fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+    fn batch_size(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn async_reset(&mut self, seed: u64) {
+        self.seed = seed;
+        let w = self.layout.byte_len();
+        let rows_per_env = self.agents;
+        self.infos.clear();
+        for (i, env) in self.envs.iter_mut().enumerate() {
+            let start = i * rows_per_env * w;
+            let info = env.reset(seed + i as u64, &mut self.obs[start..start + rows_per_env * w]);
+            if !info.is_empty() {
+                self.infos.push((i, info));
+            }
+        }
+        self.rewards.fill(0.0);
+        self.terms.fill(false);
+        self.truncs.fill(false);
+        self.ready = true;
+    }
+
+    fn recv(&mut self) -> Result<StepBatch<'_>> {
+        anyhow::ensure!(self.ready, "recv called before async_reset/send");
+        self.ready = false;
+        Ok(StepBatch {
+            env_ids: &self.env_ids,
+            obs: &self.obs,
+            rewards: &self.rewards,
+            terms: &self.terms,
+            truncs: &self.truncs,
+            infos: std::mem::take(&mut self.infos),
+        })
+    }
+
+    fn send(&mut self, actions: &[i32]) -> Result<()> {
+        let slots = self.action_dims.len();
+        let rows_per_env = self.agents;
+        anyhow::ensure!(
+            actions.len() == self.envs.len() * rows_per_env * slots,
+            "expected {} action slots, got {}",
+            self.envs.len() * rows_per_env * slots,
+            actions.len()
+        );
+        let w = self.layout.byte_len();
+        for (i, env) in self.envs.iter_mut().enumerate() {
+            let o = i * rows_per_env;
+            let info = env.step(
+                &actions[o * slots..(o + rows_per_env) * slots],
+                &mut self.obs[o * w..(o + rows_per_env) * w],
+                &mut self.rewards[o..o + rows_per_env],
+                &mut self.terms[o..o + rows_per_env],
+                &mut self.truncs[o..o + rows_per_env],
+            );
+            if !info.is_empty() {
+                self.infos.push((i, info));
+            }
+        }
+        self.ready = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs;
+
+    #[test]
+    fn serial_round_trip_on_cartpole() {
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 1,
+            batch_size: 4,
+            ..Default::default()
+        };
+        let mut v = Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg).unwrap();
+        v.async_reset(7);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let w = v.obs_layout().byte_len();
+        for _ in 0..50 {
+            let b = v.recv().unwrap();
+            assert_eq!(b.obs.len(), rows * w);
+            assert_eq!(b.env_ids, &[0, 1, 2, 3]);
+            let actions = vec![1i32; rows * slots];
+            v.send(&actions).unwrap();
+        }
+    }
+
+    #[test]
+    fn serial_rejects_pool_config() {
+        let cfg = VecConfig {
+            num_envs: 4,
+            num_workers: 1,
+            batch_size: 2,
+            ..Default::default()
+        };
+        assert!(Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg).is_err());
+    }
+
+    #[test]
+    fn recv_before_reset_errors() {
+        let cfg = VecConfig {
+            num_envs: 1,
+            num_workers: 1,
+            batch_size: 1,
+            ..Default::default()
+        };
+        let mut v = Serial::new(|i| envs::make("ocean/bandit", i as u64), cfg).unwrap();
+        assert!(v.recv().is_err());
+    }
+
+    #[test]
+    fn multiagent_rows() {
+        let cfg = VecConfig {
+            num_envs: 2,
+            num_workers: 1,
+            batch_size: 2,
+            ..Default::default()
+        };
+        let mut v = Serial::new(|i| envs::make("ocean/multiagent", i as u64), cfg).unwrap();
+        assert_eq!(v.agents_per_env(), 2);
+        assert_eq!(v.batch_rows(), 4);
+        v.async_reset(0);
+        let b = v.recv().unwrap();
+        assert_eq!(b.rewards.len(), 4);
+        let slots = v.action_dims().len();
+        v.send(&vec![0i32; 4 * slots]).unwrap();
+        let b = v.recv().unwrap();
+        // agent 0 rows picked action 0 → reward 1; agent 1 rows → 0.
+        assert_eq!(b.rewards, &[1.0, 0.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Shared-memory slabs and the per-worker signaling flags.
+//!
+//! The multiprocessing backend exchanges *all* per-step data
+//! (observations, rewards, terminals, truncateds, actions) through large
+//! preallocated shared arrays, and signals readiness through per-worker
+//! atomic flags that both sides busy-wait on — the paper's "shared memory
+//! for data communication" + "shared flags for signaling" design, which
+//! reduces steady-state inter-process communication to zero. Only infos
+//! travel over a channel (the paper's pipes), and only when non-empty.
+//!
+//! ## Safety protocol
+//!
+//! Each worker owns a disjoint region of every slab. Region access
+//! alternates strictly between leader and worker, mediated by that
+//! worker's [`Flag`]:
+//!
+//! ```text
+//!   leader writes actions ──Release──▶ ACTIONS_READY
+//!   worker Acquire-loads, steps envs, writes obs/rew/term/trunc
+//!          ──Release──▶ OBS_READY
+//!   leader Acquire-loads, reads results, (claims), writes next actions…
+//! ```
+//!
+//! The Release/Acquire pair on the flag makes every slab write by one side
+//! visible to the other before it touches the region, so the raw slices
+//! handed out by [`Slab`] are never accessed concurrently.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Worker flag states.
+pub const IDLE: u32 = 0;
+/// Leader → worker: actions for your envs are in the action slab; step.
+pub const ACTIONS_READY: u32 = 1;
+/// Worker → leader: observations/rewards/terms are in the slabs.
+pub const OBS_READY: u32 = 2;
+/// Leader → worker: reset all your envs (seed in the seed slab).
+pub const RESET: u32 = 3;
+/// Leader has taken this worker's OBS_READY output (pool bookkeeping).
+pub const CLAIMED: u32 = 4;
+/// Leader → worker: exit.
+pub const SHUTDOWN: u32 = 5;
+/// Worker → leader: an env panicked; the backend is dead.
+pub const POISONED: u32 = 6;
+
+/// A fixed-size shared array of `T` carved into per-worker regions.
+///
+/// Interior mutability + manual synchronization: see the module docs for
+/// the flag protocol that makes region access exclusive.
+pub struct Slab<T> {
+    data: Box<[UnsafeCell<T>]>,
+}
+
+// SAFETY: access to disjoint regions is serialized by the flag protocol;
+// UnsafeCell<T> has T's layout.
+unsafe impl<T: Send> Send for Slab<T> {}
+unsafe impl<T: Send> Sync for Slab<T> {}
+
+impl<T: Copy + Default> Slab<T> {
+    pub fn new(len: usize) -> Arc<Self> {
+        let data: Box<[UnsafeCell<T>]> = (0..len).map(|_| UnsafeCell::new(T::default())).collect();
+        Arc::new(Slab { data })
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Borrow a region immutably.
+    ///
+    /// # Safety
+    /// The caller must hold the flag state that grants it the region, and
+    /// the range must stay within its region.
+    #[inline]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &[T] {
+        debug_assert!(start + len <= self.data.len());
+        std::slice::from_raw_parts(self.data.as_ptr().add(start) as *const T, len)
+    }
+
+    /// Borrow a region mutably.
+    ///
+    /// # Safety
+    /// As [`slice`](Self::slice), plus exclusivity: no other live
+    /// reference to the range (guaranteed by the flag protocol).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.data.len());
+        std::slice::from_raw_parts_mut(self.data.as_ptr().add(start) as *mut T, len)
+    }
+}
+
+/// One worker's signaling flag.
+pub struct Flag {
+    state: AtomicU32,
+}
+
+impl Flag {
+    pub fn new() -> Self {
+        Flag {
+            state: AtomicU32::new(IDLE),
+        }
+    }
+
+    #[inline]
+    pub fn load(&self) -> u32 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn store(&self, v: u32) {
+        self.state.store(v, Ordering::Release);
+    }
+
+    /// CAS used by the pool leader to claim an OBS_READY worker exactly
+    /// once.
+    #[inline]
+    pub fn try_claim(&self) -> bool {
+        self.state
+            .compare_exchange(OBS_READY, CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Busy-wait until the flag matches `pred`, spinning `spin_budget`
+    /// iterations between yields. Returns the matched state.
+    #[inline]
+    pub fn wait(&self, spin_budget: u32, pred: impl Fn(u32) -> bool) -> u32 {
+        loop {
+            for _ in 0..spin_budget.max(1) {
+                let s = self.load();
+                if pred(s) {
+                    return s;
+                }
+                std::hint::spin_loop();
+            }
+            // Oversubscribed or long step: give the core away. On the
+            // paper's many-core desktop this branch is cold; on small
+            // hosts it is what keeps busy-wait from starving the workers.
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Default for Flag {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn slab_regions_round_trip() {
+        let slab = Slab::<f32>::new(8);
+        unsafe {
+            slab.slice_mut(2, 3).copy_from_slice(&[1.0, 2.0, 3.0]);
+            assert_eq!(slab.slice(2, 3), &[1.0, 2.0, 3.0]);
+            assert_eq!(slab.slice(0, 2), &[0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn flag_claim_is_exclusive() {
+        let f = Flag::new();
+        f.store(OBS_READY);
+        assert!(f.try_claim());
+        assert!(!f.try_claim(), "double claim must fail");
+        assert_eq!(f.load(), CLAIMED);
+    }
+
+    #[test]
+    fn flag_protocol_passes_data_across_threads() {
+        let slab = Slab::<u32>::new(4);
+        let flag = Arc::new(Flag::new());
+        let (s2, f2) = (slab.clone(), flag.clone());
+        let t = thread::spawn(move || {
+            f2.wait(16, |s| s == ACTIONS_READY);
+            let val = unsafe { s2.slice(0, 1) }[0];
+            unsafe {
+                s2.slice_mut(1, 1)[0] = val * 2;
+            }
+            f2.store(OBS_READY);
+        });
+        unsafe {
+            slab.slice_mut(0, 1)[0] = 21;
+        }
+        flag.store(ACTIONS_READY);
+        flag.wait(16, |s| s == OBS_READY);
+        assert_eq!(unsafe { slab.slice(1, 1) }[0], 42);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_matches_any_predicate() {
+        let f = Flag::new();
+        f.store(SHUTDOWN);
+        let s = f.wait(4, |s| s == ACTIONS_READY || s == SHUTDOWN);
+        assert_eq!(s, SHUTDOWN);
+    }
+}

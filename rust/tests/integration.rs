@@ -1,0 +1,229 @@
+//! Integration tests across the full stack: emulation → vectorization →
+//! PJRT runtime → Clean PuffeRL. The runtime/training tests require
+//! `make artifacts` to have run (the Makefile's `test` target guarantees
+//! the ordering).
+
+use pufferlib::emulation::{FlatEnv, PufferEnv};
+use pufferlib::envs;
+use pufferlib::train::{Checkpoint, TrainConfig, Trainer};
+use pufferlib::vector::baselines::{GymnasiumVec, Sb3Vec};
+use pufferlib::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Every backend must produce identical step results for a deterministic
+/// env when driven with the same actions — the cross-backend equivalence
+/// property that guards all four code paths plus both baselines.
+#[test]
+fn backends_agree_on_deterministic_env() {
+    fn run<V: VecEnv>(mut v: V, steps: usize) -> (Vec<f32>, Vec<u8>) {
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let num_envs = v.num_envs();
+        let mut rewards_log = vec![0.0f32; num_envs];
+        let mut final_obs = Vec::new();
+        v.async_reset(99);
+        for _ in 0..steps {
+            let (ids, obs, rewards) = {
+                let b = v.recv().unwrap();
+                (b.env_ids.to_vec(), b.obs.to_vec(), b.rewards.to_vec())
+            };
+            for (slot, &e) in ids.iter().enumerate() {
+                rewards_log[e] += rewards[slot];
+            }
+            if final_obs.is_empty() {
+                final_obs = obs;
+            }
+            // Deterministic action per env id.
+            let actions: Vec<i32> = ids.iter().map(|&e| (e % 2) as i32).collect();
+            assert_eq!(actions.len() * slots, ids.len() * slots);
+            v.send(&actions).unwrap();
+        }
+        (rewards_log, final_obs)
+    }
+
+    let mk = |i: usize| envs::make("classic/cartpole", i as u64);
+    let cfg_sync = VecConfig {
+        num_envs: 4,
+        num_workers: 2,
+        batch_size: 4,
+        ..Default::default()
+    };
+    let serial_cfg = VecConfig {
+        num_envs: 4,
+        num_workers: 1,
+        batch_size: 4,
+        ..Default::default()
+    };
+
+    let (r_serial, o_serial) = run(Serial::new(mk, serial_cfg.clone()).unwrap(), 20);
+    let (r_mp, o_mp) = run(Multiprocessing::new(mk, cfg_sync.clone()).unwrap(), 20);
+    let (r_gym, o_gym) = run(GymnasiumVec::new(mk, cfg_sync.clone()).unwrap(), 20);
+    let (r_sb3, o_sb3) = run(Sb3Vec::new(mk, cfg_sync).unwrap(), 20);
+
+    assert_eq!(r_serial, r_mp, "serial vs multiprocessing rewards");
+    assert_eq!(r_serial, r_gym, "serial vs gymnasium rewards");
+    assert_eq!(r_serial, r_sb3, "serial vs sb3 rewards");
+    assert_eq!(o_serial, o_mp, "first-batch obs identical");
+    assert_eq!(o_serial, o_gym);
+    assert_eq!(o_serial, o_sb3);
+}
+
+/// Pooled modes must see every env eventually (fairness) and keep row
+/// routing intact under heavy step-time imbalance.
+#[test]
+fn pool_fairness_under_imbalance() {
+    use pufferlib::envs::profile::{ProfileConfig, ProfileSim};
+    let factory = |i: usize| -> Box<dyn FlatEnv> {
+        let step_us = if i % 2 == 0 { 30.0 } else { 300.0 };
+        Box::new(PufferEnv::new(ProfileSim::new(
+            ProfileConfig::synthetic(step_us, 0.5, 0.0, 4),
+            i as u64,
+        )))
+    };
+    let cfg = VecConfig {
+        num_envs: 8,
+        num_workers: 4,
+        batch_size: 2,
+        ..Default::default()
+    };
+    let mut v = Multiprocessing::new(factory, cfg).unwrap();
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    let mut seen = [0usize; 8];
+    v.async_reset(0);
+    for _ in 0..200 {
+        let ids = {
+            let b = v.recv().unwrap();
+            b.env_ids.to_vec()
+        };
+        for e in ids {
+            seen[e] += 1;
+        }
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+    assert!(
+        seen.iter().all(|&c| c > 0),
+        "some env never appeared: {seen:?}"
+    );
+}
+
+#[test]
+fn trainer_improves_bandit_and_checkpoints() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let dir = std::env::temp_dir().join("puffer_it_bandit");
+    let cfg = TrainConfig {
+        env: "ocean/bandit".into(),
+        total_steps: 16_000,
+        log_every: 0,
+        run_dir: Some(dir.to_str().unwrap().to_string()),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, "artifacts").unwrap();
+    let report = trainer.train().unwrap();
+    let score = report.mean_score.expect("episodes finished");
+    assert!(
+        score > 0.75,
+        "bandit should be mostly solved by 16k steps, got {score}"
+    );
+    assert!(report.episodes > 1000);
+
+    // Checkpoint round trip through the trainer.
+    let ck = trainer.checkpoint();
+    ck.save(dir.join("ck.bin")).unwrap();
+    let back = Checkpoint::load(dir.join("ck.bin")).unwrap();
+    assert_eq!(back.params, trainer.policy().params());
+    let mut trainer2 = Trainer::new(
+        TrainConfig {
+            env: "ocean/bandit".into(),
+            total_steps: 16_000,
+            log_every: 0,
+            ..Default::default()
+        },
+        "artifacts",
+    )
+    .unwrap();
+    trainer2.restore(&back).unwrap();
+    assert_eq!(trainer2.global_step(), report.global_step);
+
+    // Restored policy evaluates well immediately.
+    let eval = trainer2.eval(50).unwrap();
+    assert!(
+        eval.mean_score.unwrap() > 0.7,
+        "restored eval score {:?}",
+        eval.mean_score
+    );
+
+    // metrics.csv was written with a header and rows.
+    let csv = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+    assert!(csv.starts_with("global_step,"));
+    assert!(csv.lines().count() > 3);
+}
+
+#[test]
+fn trainer_pool_mode_runs() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = TrainConfig {
+        env: "ocean/stochastic".into(),
+        total_steps: 4_096,
+        pool: true,
+        num_workers: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, "artifacts").unwrap();
+    let report = trainer.train().unwrap();
+    assert!(report.global_step >= 4_096);
+    assert!(report.episodes > 0, "episodes must complete in pool mode");
+}
+
+#[test]
+fn trainer_multiagent_runs() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let cfg = TrainConfig {
+        env: "ocean/multiagent".into(),
+        total_steps: 8_192,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(cfg, "artifacts").unwrap();
+    let report = trainer.train().unwrap();
+    // Identity routing is learnable fast; anything above random (0.5)
+    // proves rows aren't crossed. (Full solve is covered by bench C3.)
+    assert!(
+        report.mean_score.unwrap_or(0.0) > 0.55,
+        "multiagent score {:?} suggests crossed agent rows",
+        report.mean_score
+    );
+}
+
+#[test]
+fn manifest_covers_all_trainable_envs() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = pufferlib::runtime::Runtime::new("artifacts").unwrap();
+    for env in envs::OCEAN_ENVS {
+        let key = pufferlib::runtime::Manifest::spec_key_for_env(env);
+        let probe = envs::make(env, 0);
+        rt.check_env_contract(
+            &key,
+            probe.obs_layout().flat_len(),
+            probe.action_dims(),
+            probe.num_agents(),
+        )
+        .unwrap_or_else(|e| panic!("{env}: {e}"));
+    }
+}
