@@ -1,0 +1,17 @@
+.PHONY: artifacts fixtures test bench
+
+# AOT-lower every env spec to HLO text + manifest (needed only for the
+# `pjrt` feature; the default native backend needs nothing).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+# Regenerate the NativeBackend parity fixtures from the JAX reference.
+fixtures:
+	cd python && python -m compile.gen_fixtures --out ../rust/tests/fixtures
+
+# Tier-1 verification.
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench

@@ -1,14 +1,17 @@
 //! Multiagent at scale: the Neural-MMO-profile simulator (variable
 //! population, Dict observations, structured Dict actions) driven through
-//! emulation + pooled vectorization, with the AOT policy computing actions
-//! for every alive agent — the paper's §7 Neural MMO use case in miniature.
+//! emulation + pooled vectorization, with the policy computing actions
+//! for every alive agent — the paper's §7 Neural MMO use case in
+//! miniature. Runs on the default pure-Rust backend (no artifacts, no
+//! Python):
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example multiagent_nmmo
+//! cargo run --release --example multiagent_nmmo
 //! ```
 
+use pufferlib::backend::NativeBackend;
 use pufferlib::policy::Policy;
-use pufferlib::runtime::Runtime;
+use pufferlib::prelude::PolicyBackend as _;
 use pufferlib::util::stats::Welford;
 use pufferlib::util::timer::SpsCounter;
 use pufferlib::vector::{Multiprocessing, VecConfig, VecEnv};
@@ -33,12 +36,14 @@ fn main() -> anyhow::Result<()> {
     );
     assert_eq!(venv.agents_per_env(), profile::nmmo_max_agents());
 
-    let mut rt = Runtime::new("artifacts")?;
-    let mut policy = Policy::new(&rt, "artifacts", "profile_nmmo", 7)?;
+    let probe = envs::make("profile/nmmo", 0);
+    let mut backend = NativeBackend::for_env("profile/nmmo", probe.as_ref())?;
+    drop(probe);
+    assert_eq!(backend.spec().obs_dim, venv.obs_layout().flat_len());
+    let mut policy = Policy::new(&mut backend, 7)?;
     let layout = venv.obs_layout().clone();
     let d = layout.flat_len();
     let agents = venv.agents_per_env();
-    let slots = venv.action_dims().len();
 
     let mut sps = SpsCounter::new();
     let mut pop = Welford::new();
@@ -68,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             (obs_f32, rows, alive)
         };
         pop.push(alive_rows as f64);
-        let out = policy.step(&mut rt, &obs_f32, &global_rows)?;
+        let out = policy.step(&mut backend, &obs_f32, &global_rows)?;
         venv.send(&out.actions)?;
         sps.add((global_rows.len() / agents) as u64);
     }

@@ -3,13 +3,18 @@
 //! (score > 0.9) in roughly 30k interactions with one barely-tuned
 //! hyperparameter set.
 //!
-//! All three layers compose here: Rust coordinator (emulation +
-//! vectorization + PPO loop) → AOT-compiled JAX train step → Pallas
-//! fused-MLP and GAE kernels, all via PJRT, with Python nowhere at
-//! runtime.
+//! Caveat for the default (native) backend: ocean/memory needs recurrence
+//! to be solvable, and native training is feedforward-only — expect
+//! ~chance scores there unless built with `--features pjrt` and driven
+//! through the PJRT backend (see rust/README.md).
+//!
+//! Everything composes here: Rust coordinator (emulation + vectorization
+//! + PPO loop) → the `PolicyBackend` learner math. The default build uses
+//! the pure-Rust `NativeBackend`, so this runs on a clean machine with no
+//! artifacts and no Python:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_ocean
+//! cargo run --release --example train_ocean
 //! ```
 //!
 //! Env names as args restrict the sweep: `... train_ocean ocean/memory`.
@@ -68,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     for env in &selected {
         let cfg = config_for(env);
         let steps = cfg.total_steps;
-        let mut trainer = Trainer::new(cfg, "artifacts")?;
+        let mut trainer = Trainer::native(cfg)?;
         let report = trainer.train()?;
         // When did the curve first cross 0.9?
         let solved_at = report

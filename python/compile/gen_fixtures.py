@@ -1,0 +1,154 @@
+"""Generate golden-value fixtures for the Rust NativeBackend parity tests.
+
+The fixtures are produced by the same JAX code the PJRT path executes —
+``model.py`` (which builds on the ``kernels/ref.py`` oracles) — at a small
+architecture (D=3, H=4, act_dims=[2, 3]) so the checked-in JSON stays tiny
+and the Rust tests need no Python or XLA at test time.
+
+Run from ``python/``:
+
+    python -m compile.gen_fixtures --out ../rust/tests/fixtures
+
+Regenerate whenever the model math or the flat parameter layout changes;
+``rust/tests/native_parity.rs`` consumes the output.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from . import model
+from .kernels import ref
+
+D, H = 3, 4
+ACT_DIMS = [2, 3]
+GAMMA, LAM = 0.99, 0.95
+
+
+def lst(x):
+    return np.asarray(x, np.float64).ravel().tolist()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../rust/tests/fixtures")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    model.HIDDEN = H  # small architecture for compact fixtures
+    rng = np.random.default_rng(20240612)
+
+    fx = {"d": D, "h": H, "act_dims": ACT_DIMS, "gamma": GAMMA, "lam": LAM}
+
+    # ---- forward (feedforward) ----
+    params = model.init_params(jax.random.PRNGKey(7), D, ACT_DIMS, False)
+    p0, _ = ravel_pytree(params)
+    p0 = np.asarray(p0, np.float32)
+    n = 5
+    obs = rng.standard_normal((n, D)).astype(np.float32)
+    logits, value = model.make_forward(D, ACT_DIMS, False)(
+        jnp.asarray(p0), jnp.asarray(obs)
+    )
+    fx["forward"] = {
+        "rows": n,
+        "params": lst(p0),
+        "obs": lst(obs),
+        "logits": lst(logits),
+        "value": lst(value),
+    }
+
+    # ---- forward (lstm cell) ----
+    params_l = model.init_params(jax.random.PRNGKey(8), D, ACT_DIMS, True)
+    pl0, _ = ravel_pytree(params_l)
+    pl0 = np.asarray(pl0, np.float32)
+    h_in = (rng.standard_normal((n, H)) * 0.5).astype(np.float32)
+    c_in = (rng.standard_normal((n, H)) * 0.5).astype(np.float32)
+    lo, va, h2, c2 = model.make_forward(D, ACT_DIMS, True)(
+        jnp.asarray(pl0), jnp.asarray(obs), jnp.asarray(h_in), jnp.asarray(c_in)
+    )
+    fx["forward_lstm"] = {
+        "rows": n,
+        "params": lst(pl0),
+        "obs": lst(obs),
+        "h": lst(h_in),
+        "c": lst(c_in),
+        "logits": lst(lo),
+        "value": lst(va),
+        "h2": lst(h2),
+        "c2": lst(c2),
+    }
+
+    # ---- gae (ref.py oracle) ----
+    t, b = 8, 6
+    rew = rng.standard_normal((t, b)).astype(np.float32)
+    val = rng.standard_normal((t, b)).astype(np.float32)
+    done = (rng.random((t, b)) < 0.2).astype(np.float32)
+    lastv = rng.standard_normal(b).astype(np.float32)
+    adv, ret = ref.gae_ref(
+        jnp.asarray(rew), jnp.asarray(val), jnp.asarray(done), jnp.asarray(lastv),
+        GAMMA, LAM,
+    )
+    fx["gae"] = {
+        "t": t,
+        "b": b,
+        "rewards": lst(rew),
+        "values": lst(val),
+        "dones": lst(done),
+        "last_values": lst(lastv),
+        "adv": lst(adv),
+        "ret": lst(ret),
+    }
+
+    # ---- train_step (full PPO update: grads + clip + Adam) ----
+    n2 = 16
+    obs2 = rng.standard_normal((n2, D)).astype(np.float32)
+    actions = np.stack(
+        [rng.integers(0, k, n2) for k in ACT_DIMS], axis=1
+    ).astype(np.int32)
+    old_logp = (rng.standard_normal(n2) * 0.5 - 1.0).astype(np.float32)
+    adv2 = rng.standard_normal(n2).astype(np.float32)
+    ret2 = rng.standard_normal(n2).astype(np.float32)
+    m0 = (np.abs(rng.standard_normal(p0.shape[0])) * 1e-3).astype(np.float32)
+    v0 = (np.abs(rng.standard_normal(p0.shape[0])) * 1e-4).astype(np.float32)
+    step0, lr, ent_coef = 3.0, 2.5e-3, 0.01
+    ts = model.make_train_step(D, ACT_DIMS, False)
+    p2, m2, v2, s2, metrics = ts(
+        jnp.asarray(p0), jnp.asarray(m0), jnp.asarray(v0),
+        jnp.asarray(step0, jnp.float32), jnp.asarray(lr, jnp.float32),
+        jnp.asarray(ent_coef, jnp.float32),
+        jnp.asarray(obs2), jnp.asarray(actions), jnp.asarray(old_logp),
+        jnp.asarray(adv2), jnp.asarray(ret2),
+    )
+    fx["train_step"] = {
+        "rows": n2,
+        "params": lst(p0),
+        "m": lst(m0),
+        "v": lst(v0),
+        "step": step0,
+        "lr": lr,
+        "ent_coef": ent_coef,
+        "obs": lst(obs2),
+        "actions": np.asarray(actions).ravel().tolist(),
+        "old_logp": lst(old_logp),
+        "adv": lst(adv2),
+        "ret": lst(ret2),
+        "params2": lst(p2),
+        "m2": lst(m2),
+        "v2": lst(v2),
+        "step2": float(s2),
+        "metrics": lst(metrics),
+    }
+
+    path = os.path.join(args.out, "native_parity.json")
+    with open(path, "w") as f:
+        json.dump(fx, f)
+    print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

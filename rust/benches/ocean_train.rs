@@ -48,7 +48,7 @@ fn main() {
             log_every: 0,
             ..Default::default()
         };
-        match Trainer::new(cfg, "artifacts").and_then(|mut t| t.train()) {
+        match Trainer::native(cfg).and_then(|mut t| t.train()) {
             Ok(report) => {
                 let score = report.mean_score.unwrap_or(0.0);
                 if score > 0.9 {

@@ -1,11 +1,16 @@
-//! **Bench P1** — PJRT runtime latency/throughput for every entry point:
-//! forward (both batch sizes), the Pallas GAE kernel, and the full PPO
-//! train step. This is the learner-side hot path the trainer drives; the
-//! §Perf targets in EXPERIMENTS.md come from here.
+//! **Bench P1** — learner-side entry-point latency/throughput through the
+//! `PolicyBackend` abstraction: forward (both batch sizes), the GAE scan,
+//! and the full PPO train step. This is the hot path the trainer drives;
+//! the §Perf targets in EXPERIMENTS.md come from here.
+//!
+//! Runs on the default pure-Rust `NativeBackend` (no artifacts needed).
+//! Build with `--features pjrt` and set `PUFFER_BACKEND=pjrt` to measure
+//! the AOT/PJRT path instead.
 //!
 //! `cargo bench --bench runtime`; `PUFFER_BENCH_SECS` per entry.
 
-use pufferlib::runtime::*;
+use pufferlib::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
+use pufferlib::envs;
 use pufferlib::util::stats::{percentile, Welford};
 use std::time::Instant;
 
@@ -39,19 +44,43 @@ fn bench_entry(
     Ok(())
 }
 
+fn make_backend() -> anyhow::Result<Box<dyn PolicyBackend>> {
+    let choice = std::env::var("PUFFER_BACKEND").unwrap_or_else(|_| "native".into());
+    match choice.as_str() {
+        "native" => {
+            let probe = envs::make("ocean/squared", 0);
+            Ok(Box::new(NativeBackend::for_env("ocean/squared", probe.as_ref())?))
+        }
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(pufferlib::backend::PjrtBackend::new(
+            "artifacts",
+            "ocean_squared",
+        )?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!(
+            "this bench was built without the `pjrt` feature; rebuild with \
+             `cargo bench --features pjrt`"
+        ),
+        other => anyhow::bail!("unknown PUFFER_BACKEND '{other}'"),
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let secs: f64 = std::env::var("PUFFER_BENCH_SECS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(2.0);
 
-    let mut rt = Runtime::new("artifacts")?;
-    let spec = rt.manifest().spec("ocean_squared")?.clone();
+    let mut backend = make_backend()?;
+    let spec = backend.spec().clone();
     let (bf, br, t, d) = (spec.batch_fwd, spec.batch_roll, spec.horizon, spec.obs_dim);
     let n = t * br;
-    let params = vec![0.01f32; spec.n_params];
+    let params = backend.init_params()?;
 
-    println!("# Bench P1 — PJRT entry-point latency (ocean_squared spec: obs {d}, {} params)", spec.n_params);
+    println!(
+        "# Bench P1 — backend entry-point latency (ocean_squared spec: obs {d}, {} params)",
+        spec.n_params
+    );
     println!(
         "| {:<22} | {:>9} | {:>9} | {:>9} | {:>7} |",
         "entry", "mean µs", "p50 µs", "p99 µs", "reps"
@@ -67,53 +96,46 @@ fn main() -> anyhow::Result<()> {
 
     // forward at both batch sizes
     for b in [bf, br] {
-        let exe = rt.load("ocean_squared", &format!("forward_b{b}"))?;
         let obs = vec![0.1f32; b * d];
         bench_entry(&format!("forward_b{b}"), secs, || {
-            let out = exe.run(&[lit_f32(&params), lit_f32_2d(&obs, b, d)?])?;
+            let out = backend.forward(&params, &obs, b)?;
             std::hint::black_box(&out);
             Ok(())
         })?;
     }
 
-    // GAE (Pallas kernel)
+    // GAE reverse scan
     {
-        let exe = rt.load("ocean_squared", "gae")?;
         let z = vec![0.1f32; n];
+        let zeros = vec![0.0f32; n];
         let lv = vec![0.0f32; br];
-        bench_entry("gae (pallas)", secs, || {
-            let out = exe.run(&[
-                lit_f32_2d(&z, t, br)?,
-                lit_f32_2d(&z, t, br)?,
-                lit_f32_2d(&z, t, br)?,
-                lit_f32(&lv),
-            ])?;
+        bench_entry("gae", secs, || {
+            let out = backend.gae(&z, &z, &zeros, &lv)?;
             std::hint::black_box(&out);
             Ok(())
         })?;
     }
 
-    // train_step (full PPO update, fused MLP fwd+bwd + Adam)
+    // train_step (full PPO update: fwd + bwd + clip + Adam)
     {
-        let exe = rt.load("ocean_squared", "train_step")?;
         let obs = vec![0.1f32; n * d];
         let actions = vec![0i32; n];
         let zn = vec![0.0f32; n];
-        let m = vec![0.0f32; spec.n_params];
+        let starts = vec![0.0f32; n];
+        let mut p = params.clone();
+        let mut opt = AdamState::new(p.len());
         bench_entry("train_step", secs.max(3.0), || {
-            let out = exe.run(&[
-                lit_f32(&params),
-                lit_f32(&m),
-                lit_f32(&m),
-                lit_scalar(0.0),
-                lit_scalar(1e-3),
-                lit_scalar(0.01),
-                lit_f32_2d(&obs, n, d)?,
-                lit_i32_2d(&actions, n, 1)?,
-                lit_f32(&zn),
-                lit_f32(&zn),
-                lit_f32(&zn),
-            ])?;
+            let batch = TrainBatch {
+                t,
+                r: br,
+                obs: &obs,
+                starts: &starts,
+                actions: &actions,
+                logp: &zn,
+                adv: &zn,
+                ret: &zn,
+            };
+            let out = backend.train_step(&mut p, &mut opt, 1e-3, 0.01, &batch)?;
             std::hint::black_box(&out);
             Ok(())
         })?;

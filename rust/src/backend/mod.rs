@@ -1,0 +1,150 @@
+//! The compute-backend layer: one trait, [`PolicyBackend`], between the
+//! coordinator (trainer + rollout + policy) and whatever executes the
+//! learner math.
+//!
+//! Two implementations ship:
+//!
+//! - [`NativeBackend`] (default) — a pure-Rust port of the reference math
+//!   in `python/compile/kernels/ref.py` / `gae.py` and `model.py`: the
+//!   fused policy-MLP forward, the LSTM cell, the GAE reverse scan, and
+//!   the full clipped-surrogate PPO update (hand-derived backprop +
+//!   global-norm clip + Adam). Zero native dependencies: the crate builds
+//!   and trains on a clean machine with no XLA artifacts and no Python.
+//! - `PjrtBackend` (`pjrt` cargo feature) — the original AOT path: JAX/
+//!   Pallas entry points lowered to HLO text by `python/compile/aot.py`
+//!   and executed through the PJRT C API.
+//!
+//! Both speak the same flat-parameter contract (the alphabetical
+//! `ravel_pytree` order of `model.py`), so checkpoints written against
+//! one backend restore against the other **when the spec architectures
+//! match** — i.e. feedforward specs; recurrent specs currently train only
+//! on the PJRT path, and [`crate::train::Trainer::restore`] rejects
+//! mismatched parameter counts. Golden-value parity between the two is
+//! pinned by `rust/tests/native_parity.rs` against fixtures generated
+//! from the JAX reference (`python/compile/gen_fixtures.py`).
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::runtime::SpecManifest;
+use anyhow::Result;
+
+/// Output of a feedforward policy pass over `rows` observations.
+#[derive(Clone, Debug, Default)]
+pub struct Forward {
+    /// `rows × sum(act_dims)` logits, row-major.
+    pub logits: Vec<f32>,
+    /// `rows` value estimates.
+    pub values: Vec<f32>,
+}
+
+/// Output of a recurrent (one LSTM cell step) policy pass.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardLstm {
+    pub logits: Vec<f32>,
+    pub values: Vec<f32>,
+    /// Updated hidden state, `rows × hidden`.
+    pub h: Vec<f32>,
+    /// Updated cell state, `rows × hidden`.
+    pub c: Vec<f32>,
+}
+
+/// Flat Adam optimizer state (same length as the parameter vector).
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl AdamState {
+    pub fn new(n_params: usize) -> Self {
+        AdamState {
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            step: 0.0,
+        }
+    }
+}
+
+/// One PPO update's worth of rollout data, time-major `(T, R)` over all
+/// agent rows. Feedforward backends flatten to `N = T × R` sample rows;
+/// recurrent backends keep the time structure (and the `starts` episode
+/// boundaries) for BPTT.
+pub struct TrainBatch<'a> {
+    /// Rollout segment length `T`.
+    pub t: usize,
+    /// Total agent rows `R` (`batch_roll`).
+    pub r: usize,
+    /// `(T, R, obs_dim)` f32.
+    pub obs: &'a [f32],
+    /// `(T, R)`: 1.0 where the stored obs begins a new episode.
+    pub starts: &'a [f32],
+    /// `(T, R, slots)` i32.
+    pub actions: &'a [i32],
+    /// `(T, R)` behavior log-probs.
+    pub logp: &'a [f32],
+    /// `(T, R)` advantages (from [`PolicyBackend::gae`]).
+    pub adv: &'a [f32],
+    /// `(T, R)` returns.
+    pub ret: &'a [f32],
+}
+
+/// The narrow waist between the trainer/policy and the learner math:
+/// policy forward, value head, GAE, and the PPO update.
+///
+/// Parameters travel as one opaque flat f32 vector owned by the caller
+/// (the [`Policy`](crate::policy::Policy) / the trainer); backends define
+/// its layout via [`PolicyBackend::init_params`] and consume it
+/// everywhere else.
+pub trait PolicyBackend: Send {
+    /// The shape contract this backend was built for.
+    fn spec(&self) -> &SpecManifest;
+
+    /// Spec key, e.g. `"ocean_bandit"` (checkpoint compatibility).
+    fn key(&self) -> &str;
+
+    /// Produce the initial flat parameter vector (`spec().n_params` long).
+    fn init_params(&mut self) -> Result<Vec<f32>>;
+
+    /// Feedforward pass: `obs` is `rows × obs_dim` f32, row-major.
+    fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward>;
+
+    /// Recurrent pass: one LSTM cell step with per-row state `h`, `c`
+    /// (`rows × hidden` each).
+    fn forward_lstm(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+        rows: usize,
+    ) -> Result<ForwardLstm>;
+
+    /// Generalized Advantage Estimation over the `(T, R)` rollout
+    /// (`horizon × batch_roll` from the spec). Returns
+    /// `(advantages, returns)`, both `(T, R)`.
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        dones: &[f32],
+        last_values: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// One clipped-surrogate PPO update, applied in place to `params` and
+    /// `opt`. Returns `[loss, pg_loss, v_loss, entropy, approx_kl]`.
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]>;
+}

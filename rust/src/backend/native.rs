@@ -1,0 +1,763 @@
+//! [`NativeBackend`] — the default, dependency-free compute backend: a
+//! pure-Rust port of the reference math the Pallas kernels are checked
+//! against (`python/compile/kernels/ref.py`, `gae.py`) and of the Clean
+//! PuffeRL learner in `python/compile/model.py`:
+//!
+//! - the two-layer tanh policy MLP with actor/critic heads (the fused
+//!   `linear_act` kernel's `y = act(x @ w + b)` contract),
+//! - the fused-gate LSTM cell (rollout-side recurrence),
+//! - the GAE reverse time scan,
+//! - the full clipped-surrogate PPO update: hand-derived backprop through
+//!   the MLP + softmax heads, global-norm gradient clipping, and Adam —
+//!   bit-for-bit the same update rule as `model._adam`.
+//!
+//! The flat parameter vector uses the same layout as the PJRT path:
+//! JAX's `ravel_pytree` flattens the params dict in alphabetical leaf
+//! order (`actor.b, actor.w, critic.b, critic.w, enc1.b, enc1.w, enc2.b,
+//! enc2.w[, lstm.b, lstm.w]`), so checkpoints are interchangeable across
+//! backends for matching (feedforward) architectures. Parity with the
+//! JAX reference is pinned by `rust/tests/native_parity.rs` against
+//! checked-in fixtures.
+//!
+//! Recurrent *training* (BPTT through the scan) is not ported yet: specs
+//! are synthesized with `lstm: false`, so recurrent envs train with the
+//! feedforward policy on the native path; the `pjrt` feature retains full
+//! LSTM training.
+
+use super::{AdamState, Forward, ForwardLstm, PolicyBackend, TrainBatch};
+use crate::emulation::FlatEnv;
+use crate::runtime::{Manifest, SpecManifest};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+// Rollout geometry + hyperparameters, mirroring python/compile/aot.py and
+// model.py (the Python↔Rust contract for the PJRT path; the native path
+// keeps the same numbers so runs are comparable across backends).
+pub const HIDDEN: usize = 128;
+pub const B_FWD: usize = 16;
+pub const B_ROLL: usize = 32;
+pub const HORIZON: usize = 32;
+pub const GAMMA: f32 = 0.99;
+pub const LAM: f32 = 0.95;
+
+const CLIP: f32 = 0.2;
+const VF_COEF: f32 = 0.5;
+const MAX_GRAD_NORM: f32 = 0.5;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Flat parameter count for the model architecture.
+pub fn n_params(obs_dim: usize, act_dims: &[usize], hidden: usize, lstm: bool) -> usize {
+    let a: usize = act_dims.iter().sum();
+    let h = hidden;
+    let mut n = (a + h * a) // actor
+        + (1 + h)           // critic
+        + (h + obs_dim * h) // enc1
+        + (h + h * h); // enc2
+    if lstm {
+        n += 4 * h + (2 * h) * (4 * h); // fused-gate cell
+    }
+    n
+}
+
+/// Byte offsets of each leaf inside the flat parameter vector, in
+/// `ravel_pytree` (alphabetical) order — the single source of truth for
+/// the layout, shared by the forward pass (parameter views) and the
+/// backward pass (gradient accumulation).
+struct ParamRanges {
+    actor_b: std::ops::Range<usize>,
+    actor_w: std::ops::Range<usize>,
+    critic_b: std::ops::Range<usize>,
+    critic_w: std::ops::Range<usize>,
+    enc1_b: std::ops::Range<usize>,
+    enc1_w: std::ops::Range<usize>,
+    enc2_b: std::ops::Range<usize>,
+    enc2_w: std::ops::Range<usize>,
+    lstm_b: std::ops::Range<usize>,
+    lstm_w: std::ops::Range<usize>,
+}
+
+fn param_ranges(d: usize, h: usize, a: usize, lstm: bool) -> ParamRanges {
+    let mut off = 0;
+    let mut take = move |n: usize| {
+        let r = off..off + n;
+        off += n;
+        r
+    };
+    ParamRanges {
+        actor_b: take(a),
+        actor_w: take(h * a),
+        critic_b: take(1),
+        critic_w: take(h),
+        enc1_b: take(h),
+        enc1_w: take(d * h),
+        enc2_b: take(h),
+        enc2_w: take(h * h),
+        lstm_b: if lstm { take(4 * h) } else { 0..0 },
+        lstm_w: if lstm { take(2 * h * 4 * h) } else { 0..0 },
+    }
+}
+
+/// Borrowed views of each leaf inside the flat parameter vector. Weights
+/// are row-major `(fan_in, fan_out)`.
+struct ParamView<'a> {
+    actor_b: &'a [f32],
+    actor_w: &'a [f32],
+    critic_b: &'a [f32],
+    critic_w: &'a [f32],
+    enc1_b: &'a [f32],
+    enc1_w: &'a [f32],
+    enc2_b: &'a [f32],
+    enc2_w: &'a [f32],
+    lstm_b: &'a [f32],
+    lstm_w: &'a [f32],
+}
+
+impl<'a> ParamView<'a> {
+    fn split(p: &'a [f32], d: usize, h: usize, a: usize, lstm: bool) -> Result<ParamView<'a>> {
+        ensure!(
+            p.len() == n_params(d, &[a], h, lstm),
+            "params len {} != expected {} (obs_dim {d}, act {a}, hidden {h}, lstm {lstm})",
+            p.len(),
+            n_params(d, &[a], h, lstm)
+        );
+        let r = param_ranges(d, h, a, lstm);
+        Ok(ParamView {
+            actor_b: &p[r.actor_b],
+            actor_w: &p[r.actor_w],
+            critic_b: &p[r.critic_b],
+            critic_w: &p[r.critic_w],
+            enc1_b: &p[r.enc1_b],
+            enc1_w: &p[r.enc1_w],
+            enc2_b: &p[r.enc2_b],
+            enc2_w: &p[r.enc2_w],
+            lstm_b: &p[r.lstm_b],
+            lstm_w: &p[r.lstm_w],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels (the ref.py `linear_act_ref` contract, row-major).
+
+/// `out[m×n] = x[m×k] @ w[k×n] + b[n]` (bias broadcast over rows).
+fn linear(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let row = &mut out[i * n..(i + 1) * n];
+        row.copy_from_slice(b);
+        for kk in 0..k {
+            let a = x[i * k + kk];
+            if a != 0.0 {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[k×n] += a[m×k]ᵀ @ b[m×n]` (weight-gradient GEMM).
+fn accum_at_b(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av != 0.0 {
+                let brow = &b[i * n..(i + 1) * n];
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[m×k] = a[m×n] @ w[k×n]ᵀ` (input-gradient GEMM).
+fn matmul_a_wt(a: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &wv) in arow.iter().zip(wrow) {
+                acc += av * wv;
+            }
+            out[i * k + kk] = acc;
+        }
+    }
+}
+
+fn tanh_inplace(xs: &mut [f32]) {
+    for x in xs {
+        *x = x.tanh();
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+// ---------------------------------------------------------------------------
+
+/// The pure-Rust compute backend (see module docs).
+pub struct NativeBackend {
+    key: String,
+    spec: SpecManifest,
+    rng: Rng,
+}
+
+impl NativeBackend {
+    /// Build a backend for a first-party env: probes the emulated
+    /// observation layout / action dims and synthesizes the spec with the
+    /// shared rollout geometry (`B_FWD`/`B_ROLL`/`HORIZON`).
+    pub fn for_env(env_name: &str, env: &dyn FlatEnv) -> Result<Self> {
+        // Envs whose reference spec (aot.py ENV_SPECS) is recurrent. The
+        // native backend trains feedforward only, which cannot solve
+        // memory tasks — warn loudly instead of burning the step budget
+        // in silence.
+        const RECURRENT_REFERENCE_SPECS: &[&str] = &["ocean/memory"];
+        if RECURRENT_REFERENCE_SPECS.contains(&env_name) {
+            eprintln!(
+                "warning: '{env_name}' needs recurrence to be solvable, but the \
+                 native backend trains feedforward policies only; expect ~chance \
+                 scores. Build with `--features pjrt` (+ `make artifacts`) and \
+                 use `--backend=pjrt` for LSTM training."
+            );
+        }
+        let agents = env.num_agents();
+        ensure!(
+            B_ROLL % agents == 0,
+            "env '{env_name}': batch_roll {B_ROLL} not divisible by {agents} agents"
+        );
+        let obs_dim = env.obs_layout().flat_len();
+        let act_dims = env.action_dims().to_vec();
+        let spec = SpecManifest {
+            obs_dim,
+            n_params: n_params(obs_dim, &act_dims, HIDDEN, false),
+            act_dims,
+            agents,
+            // Recurrent training is a PJRT-path feature for now; the
+            // native policy is always the feedforward MLP.
+            lstm: false,
+            hidden: HIDDEN,
+            batch_fwd: B_FWD,
+            batch_roll: B_ROLL,
+            horizon: HORIZON,
+            gamma: GAMMA as f64,
+            lam: LAM as f64,
+            params0: String::new(),
+            artifacts: BTreeMap::new(),
+        };
+        let key = Manifest::spec_key_for_env(env_name);
+        // Deterministic per-spec init, like aot.py's name-hashed params0.
+        let seed = key
+            .bytes()
+            .fold(0x4E41_5449u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+        Ok(NativeBackend::from_spec(key, spec, seed))
+    }
+
+    /// Build from an explicit spec (tests, custom geometries).
+    pub fn from_spec(key: String, spec: SpecManifest, seed: u64) -> Self {
+        NativeBackend {
+            key,
+            spec,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn act_sum(&self) -> usize {
+        self.spec.act_dims.iter().sum()
+    }
+
+    /// Two-layer tanh encoder (model.py `encode`). Returns `(h1, x)`:
+    /// `h1` is kept for backprop, `x` feeds the decoder or LSTM cell.
+    fn encode(&self, pv: &ParamView<'_>, obs: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let (d, h) = (self.spec.obs_dim, self.spec.hidden);
+        let mut h1 = vec![0.0; rows * h];
+        linear(obs, pv.enc1_w, pv.enc1_b, &mut h1, rows, d, h);
+        tanh_inplace(&mut h1);
+        let mut x = vec![0.0; rows * h];
+        linear(&h1, pv.enc2_w, pv.enc2_b, &mut x, rows, h, h);
+        tanh_inplace(&mut x);
+        (h1, x)
+    }
+
+    /// Actor/critic heads off a hidden state (model.py `decode`).
+    fn decode(&self, pv: &ParamView<'_>, hidden: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let (h, a) = (self.spec.hidden, self.act_sum());
+        let mut logits = vec![0.0; rows * a];
+        linear(hidden, pv.actor_w, pv.actor_b, &mut logits, rows, h, a);
+        let mut values = vec![0.0; rows];
+        linear(hidden, pv.critic_w, pv.critic_b, &mut values, rows, h, 1);
+        (logits, values)
+    }
+
+    /// Full feedforward pass, returning the intermediate activations
+    /// needed for backprop: `(h1, h2, logits, values)`.
+    fn forward_cached(
+        &self,
+        pv: &ParamView<'_>,
+        obs: &[f32],
+        rows: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (h1, h2) = self.encode(pv, obs, rows);
+        let (logits, values) = self.decode(pv, &h2, rows);
+        (h1, h2, logits, values)
+    }
+}
+
+impl PolicyBackend for NativeBackend {
+    fn spec(&self) -> &SpecManifest {
+        &self.spec
+    }
+
+    fn key(&self) -> &str {
+        &self.key
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        // CleanRL-style layer_init scaling, as model.init_params: weights
+        // are N(0, scale²/fan_in), biases zero, actor head scaled 0.01.
+        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
+        let lstm = self.spec.lstm;
+        let mut p = Vec::with_capacity(self.spec.n_params);
+        let dense = |rng: &mut Rng, p: &mut Vec<f32>, fan_in: usize, fan_out: usize, scale: f32| {
+            p.extend(std::iter::repeat(0.0).take(fan_out)); // bias
+            let s = scale / (fan_in as f32).sqrt();
+            p.extend((0..fan_in * fan_out).map(|_| rng.normal() as f32 * s));
+        };
+        dense(&mut self.rng, &mut p, h, a, 0.01); // actor
+        dense(&mut self.rng, &mut p, h, 1, 1.0); // critic
+        dense(&mut self.rng, &mut p, d, h, 1.0); // enc1
+        dense(&mut self.rng, &mut p, h, h, 1.0); // enc2
+        if lstm {
+            dense(&mut self.rng, &mut p, 2 * h, 4 * h, 1.0);
+        }
+        ensure!(
+            p.len() == self.spec.n_params,
+            "init_params produced {} values, spec says {}",
+            p.len(),
+            self.spec.n_params
+        );
+        Ok(p)
+    }
+
+    fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward> {
+        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
+        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        let pv = ParamView::split(params, d, h, a, self.spec.lstm)?;
+        let (_, _, logits, values) = self.forward_cached(&pv, obs, rows);
+        Ok(Forward { logits, values })
+    }
+
+    fn forward_lstm(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+    ) -> Result<ForwardLstm> {
+        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
+        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        ensure!(h_in.len() == rows * h && c_in.len() == rows * h, "state shape mismatch");
+        let pv = ParamView::split(params, d, h, a, true)?;
+        let (_h1, x) = self.encode(&pv, obs, rows);
+
+        // fused-gate cell: gates = [x, h] @ w + b, split (i, f, g, o)
+        let mut xh = vec![0.0; rows * 2 * h];
+        for r in 0..rows {
+            xh[r * 2 * h..r * 2 * h + h].copy_from_slice(&x[r * h..(r + 1) * h]);
+            xh[r * 2 * h + h..(r + 1) * 2 * h].copy_from_slice(&h_in[r * h..(r + 1) * h]);
+        }
+        let mut gates = vec![0.0; rows * 4 * h];
+        linear(&xh, pv.lstm_w, pv.lstm_b, &mut gates, rows, 2 * h, 4 * h);
+
+        let mut h2 = vec![0.0; rows * h];
+        let mut c2 = vec![0.0; rows * h];
+        for r in 0..rows {
+            let g = &gates[r * 4 * h..(r + 1) * 4 * h];
+            for j in 0..h {
+                let i_g = sigmoid(g[j]);
+                let f_g = sigmoid(g[h + j]);
+                let g_g = g[2 * h + j].tanh();
+                let o_g = sigmoid(g[3 * h + j]);
+                let c = f_g * c_in[r * h + j] + i_g * g_g;
+                c2[r * h + j] = c;
+                h2[r * h + j] = o_g * c.tanh();
+            }
+        }
+
+        // decode off the recurrent hidden state
+        let (logits, values) = self.decode(&pv, &h2, rows);
+        Ok(ForwardLstm {
+            logits,
+            values,
+            h: h2,
+            c: c2,
+        })
+    }
+
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        dones: &[f32],
+        last_values: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        // The ref.py `gae_ref` reverse scan, time-major (T, R).
+        let (t_dim, r_dim) = (self.spec.horizon, self.spec.batch_roll);
+        let n = t_dim * r_dim;
+        ensure!(
+            rewards.len() == n && values.len() == n && dones.len() == n,
+            "gae inputs must be (T={t_dim}, R={r_dim})"
+        );
+        ensure!(last_values.len() == r_dim, "last_values must be R={r_dim}");
+        let (gamma, lam) = (self.spec.gamma as f32, self.spec.lam as f32);
+
+        let mut adv = vec![0.0f32; n];
+        let mut gae = vec![0.0f32; r_dim];
+        let mut next_value = last_values.to_vec();
+        for t in (0..t_dim).rev() {
+            let base = t * r_dim;
+            for r in 0..r_dim {
+                let mask = 1.0 - dones[base + r];
+                let delta = rewards[base + r] + gamma * next_value[r] * mask - values[base + r];
+                gae[r] = delta + gamma * lam * mask * gae[r];
+                adv[base + r] = gae[r];
+                next_value[r] = values[base + r];
+            }
+        }
+        let ret: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+        Ok((adv, ret))
+    }
+
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        ensure!(
+            !self.spec.lstm,
+            "NativeBackend does not support recurrent (BPTT) training yet; \
+             build with `--features pjrt` for LSTM specs"
+        );
+        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
+        let slots = self.spec.act_dims.len();
+        let n = batch.t * batch.r; // feedforward: flatten (T, R) → N rows
+        ensure!(batch.obs.len() == n * d, "obs len {} != {n}x{d}", batch.obs.len());
+        ensure!(batch.actions.len() == n * slots, "actions len mismatch");
+        ensure!(
+            batch.logp.len() == n && batch.adv.len() == n && batch.ret.len() == n,
+            "logp/adv/ret must be N={n}"
+        );
+        ensure!(
+            opt.m.len() == params.len() && opt.v.len() == params.len(),
+            "optimizer state length mismatch"
+        );
+        let nf = n as f32;
+
+        let pv = ParamView::split(params, d, h, a, false)?;
+        let (h1, h2, logits, values) = self.forward_cached(&pv, batch.obs, n);
+
+        // Per-slot softmax statistics: probs, log-probs, slot entropies.
+        let mut probs = vec![0.0f32; n * a];
+        let mut lps = vec![0.0f32; n * a];
+        let mut slot_ent = vec![0.0f32; n * slots];
+        let mut logp = vec![0.0f32; n];
+        let mut entropy = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &logits[i * a..(i + 1) * a];
+            let mut off = 0;
+            for (s, &k) in self.spec.act_dims.iter().enumerate() {
+                let seg = &row[off..off + k];
+                let mx = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for &x in seg {
+                    z += (x - mx).exp();
+                }
+                let logz = z.ln() + mx;
+                let mut hs = 0.0f32;
+                for (j, &x) in seg.iter().enumerate() {
+                    let lp = x - logz;
+                    let p = lp.exp();
+                    lps[i * a + off + j] = lp;
+                    probs[i * a + off + j] = p;
+                    hs -= p * lp;
+                }
+                let act = batch.actions[i * slots + s] as usize;
+                ensure!(act < k, "action {act} out of range for slot {s} (dim {k})");
+                logp[i] += lps[i * a + off + act];
+                slot_ent[i * slots + s] = hs;
+                entropy[i] += hs;
+                off += k;
+            }
+        }
+
+        // Clipped-surrogate loss (model._ppo_loss), batch-normalized adv.
+        let mu = batch.adv.iter().sum::<f32>() / nf;
+        let var = batch.adv.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / nf;
+        let sd = var.sqrt();
+        let mut pg_loss = 0.0f32;
+        let mut v_loss = 0.0f32;
+        let mut ent_mean = 0.0f32;
+        let mut kl = 0.0f32;
+        let mut g_logp = vec![0.0f32; n]; // d pg_loss / d logp_i
+        let mut d_value = vec![0.0f32; n];
+        for i in 0..n {
+            let advn = (batch.adv[i] - mu) / (sd + 1e-8);
+            let logratio = logp[i] - batch.logp[i];
+            let ratio = logratio.exp();
+            let clipped = ratio.clamp(1.0 - CLIP, 1.0 + CLIP);
+            let pg1 = -advn * ratio;
+            let pg2 = -advn * clipped;
+            pg_loss += pg1.max(pg2);
+            // max() routes the gradient: the clipped branch is flat
+            // outside the trust region. Inside it, clipped == ratio so
+            // pg1 == pg2 and this branch covers that case too.
+            if pg1 >= pg2 {
+                g_logp[i] = -advn * ratio / nf;
+            }
+            v_loss += 0.5 * (values[i] - batch.ret[i]) * (values[i] - batch.ret[i]);
+            d_value[i] = VF_COEF * (values[i] - batch.ret[i]) / nf;
+            ent_mean += entropy[i];
+            kl += (ratio - 1.0) - logratio;
+        }
+        pg_loss /= nf;
+        v_loss /= nf;
+        ent_mean /= nf;
+        kl /= nf;
+        let loss = pg_loss - ent_coef * ent_mean + VF_COEF * v_loss;
+
+        // d loss / d logits: policy-gradient term + entropy-bonus term.
+        let mut d_logits = vec![0.0f32; n * a];
+        for i in 0..n {
+            let mut off = 0;
+            for (s, &k) in self.spec.act_dims.iter().enumerate() {
+                let act = batch.actions[i * slots + s] as usize;
+                let hs = slot_ent[i * slots + s];
+                for j in 0..k {
+                    let p = probs[i * a + off + j];
+                    let lp = lps[i * a + off + j];
+                    let onehot = if j == act { 1.0 } else { 0.0 };
+                    d_logits[i * a + off + j] =
+                        g_logp[i] * (onehot - p) + (ent_coef / nf) * p * (lp + hs);
+                }
+                off += k;
+            }
+        }
+
+        // Backprop through decode + encode into one flat gradient vector
+        // (the same `param_ranges` layout the forward pass reads from).
+        let mut grads = vec![0.0f32; params.len()];
+        {
+            let ParamRanges {
+                actor_b: r_actor_b,
+                actor_w: r_actor_w,
+                critic_b: r_critic_b,
+                critic_w: r_critic_w,
+                enc1_b: r_enc1_b,
+                enc1_w: r_enc1_w,
+                enc2_b: r_enc2_b,
+                enc2_w: r_enc2_w,
+                ..
+            } = param_ranges(d, h, a, false);
+
+            // Heads.
+            for i in 0..n {
+                for j in 0..a {
+                    grads[r_actor_b.start + j] += d_logits[i * a + j];
+                }
+                grads[r_critic_b.start] += d_value[i];
+            }
+            accum_at_b(&h2, &d_logits, &mut grads[r_actor_w.clone()], n, h, a);
+            for i in 0..n {
+                let dv = d_value[i];
+                if dv != 0.0 {
+                    for kk in 0..h {
+                        grads[r_critic_w.start + kk] += h2[i * h + kk] * dv;
+                    }
+                }
+            }
+
+            // d_h2 = d_logits @ actor_wᵀ + d_value ⊗ critic_w
+            let mut d_h2 = vec![0.0f32; n * h];
+            matmul_a_wt(&d_logits, pv.actor_w, &mut d_h2, n, a, h);
+            for i in 0..n {
+                let dv = d_value[i];
+                for kk in 0..h {
+                    d_h2[i * h + kk] += dv * pv.critic_w[kk];
+                }
+            }
+
+            // tanh' through enc2.
+            let mut d_z2 = d_h2;
+            for (dz, &hv) in d_z2.iter_mut().zip(&h2) {
+                *dz *= 1.0 - hv * hv;
+            }
+            accum_at_b(&h1, &d_z2, &mut grads[r_enc2_w.clone()], n, h, h);
+            for i in 0..n {
+                for j in 0..h {
+                    grads[r_enc2_b.start + j] += d_z2[i * h + j];
+                }
+            }
+
+            // d_h1 = d_z2 @ enc2_wᵀ ; tanh' through enc1.
+            let mut d_h1 = vec![0.0f32; n * h];
+            matmul_a_wt(&d_z2, pv.enc2_w, &mut d_h1, n, h, h);
+            let mut d_z1 = d_h1;
+            for (dz, &hv) in d_z1.iter_mut().zip(&h1) {
+                *dz *= 1.0 - hv * hv;
+            }
+            accum_at_b(batch.obs, &d_z1, &mut grads[r_enc1_w.clone()], n, d, h);
+            for i in 0..n {
+                for j in 0..h {
+                    grads[r_enc1_b.start + j] += d_z1[i * h + j];
+                }
+            }
+        }
+
+        // Global-norm clip + Adam (model._adam, flat).
+        let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
+        let scale = (MAX_GRAD_NORM / gnorm).min(1.0);
+        opt.step += 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(opt.step);
+        let bc2 = 1.0 - ADAM_B2.powf(opt.step);
+        for i in 0..params.len() {
+            let g = grads[i] * scale;
+            opt.m[i] = ADAM_B1 * opt.m[i] + (1.0 - ADAM_B1) * g;
+            opt.v[i] = ADAM_B2 * opt.v[i] + (1.0 - ADAM_B2) * g * g;
+            let mhat = opt.m[i] / bc1;
+            let vhat = opt.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+
+        Ok([loss, pg_loss, v_loss, ent_mean, kl])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(d: usize, act_dims: Vec<usize>, hidden: usize) -> SpecManifest {
+        SpecManifest {
+            obs_dim: d,
+            n_params: n_params(d, &act_dims, hidden, false),
+            act_dims,
+            agents: 1,
+            lstm: false,
+            hidden,
+            batch_fwd: 4,
+            batch_roll: 4,
+            horizon: 3,
+            gamma: 0.99,
+            lam: 0.95,
+            params0: String::new(),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn init_params_matches_spec_len() {
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(5, vec![3, 2], 8), 1);
+        let p = b.init_params().unwrap();
+        assert_eq!(p.len(), b.spec().n_params);
+        // Actor bias and all biases start at zero; some weights nonzero.
+        assert!(p[..5].iter().all(|&x| x == 0.0), "actor bias zero-init");
+        assert!(p.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(5, vec![3, 2], 8), 2);
+        let p = b.init_params().unwrap();
+        let obs: Vec<f32> = (0..4 * 5).map(|i| (i as f32 * 0.37).sin()).collect();
+        let out = b.forward(&p, &obs, 4).unwrap();
+        assert_eq!(out.logits.len(), 4 * 5);
+        assert_eq!(out.values.len(), 4);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn gae_single_row_hand_check() {
+        // T=3, R=1, gamma/lam as spec; verify against a hand-unrolled scan.
+        let mut spec = tiny_spec(1, vec![2], 4);
+        spec.horizon = 3;
+        spec.batch_roll = 1;
+        let mut b = NativeBackend::from_spec("t".into(), spec, 3);
+        let rewards = [1.0f32, 0.0, 2.0];
+        let values = [0.5f32, 0.4, 0.3];
+        let dones = [0.0f32, 1.0, 0.0];
+        let last = [0.7f32];
+        let (adv, ret) = b.gae(&rewards, &values, &dones, &last).unwrap();
+        let (g, l) = (0.99f32, 0.95f32);
+        let d2 = 2.0 + g * 0.7 - 0.3;
+        let a2 = d2;
+        let d1 = 0.0 + 0.0 - 0.4; // done masks the bootstrap
+        let a1 = d1;
+        let d0 = 1.0 + g * 0.4 - 0.5;
+        let a0 = d0 + g * l * a1;
+        assert!((adv[0] - a0).abs() < 1e-6, "{} vs {a0}", adv[0]);
+        assert!((adv[1] - a1).abs() < 1e-6);
+        assert!((adv[2] - a2).abs() < 1e-6);
+        assert!((ret[2] - (a2 + 0.3)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn train_step_descends_on_value_loss() {
+        // With adv ≡ 0 the update is pure value regression: repeated steps
+        // must reduce v_loss.
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(3, vec![2], 8), 4);
+        let mut params = b.init_params().unwrap();
+        let mut opt = AdamState::new(params.len());
+        let t = 3usize;
+        let r = 4usize;
+        let n = t * r;
+        let obs: Vec<f32> = (0..n * 3).map(|i| ((i * 7 % 13) as f32) / 13.0).collect();
+        let actions = vec![0i32; n];
+        let logp = vec![-0.69f32; n];
+        let adv = vec![0.0f32; n];
+        let ret: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
+        let starts = vec![0.0; n];
+        let batch = TrainBatch {
+            t,
+            r,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let first = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        }
+        assert!(
+            last[2] < first[2] * 0.5,
+            "v_loss did not descend: {} -> {}",
+            first[2],
+            last[2]
+        );
+        assert_eq!(opt.step, 61.0);
+    }
+}

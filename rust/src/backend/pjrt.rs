@@ -1,0 +1,182 @@
+//! [`PjrtBackend`] (`pjrt` cargo feature) — the AOT execution path: JAX/
+//! Pallas entry points lowered to HLO text by `python/compile/aot.py` and
+//! executed through the PJRT C API via the [`Runtime`]. This is the
+//! original three-layer stack; the backend trait wraps it so the trainer
+//! and policy no longer know about literals or artifacts.
+
+use super::{AdamState, Forward, ForwardLstm, PolicyBackend, TrainBatch};
+use crate::runtime::{
+    lit_f32, lit_f32_2d, lit_f32_3d, lit_i32_2d, lit_i32_3d, lit_scalar, to_f32s, Runtime,
+    SpecManifest,
+};
+use anyhow::{Context, Result};
+
+/// PJRT-backed compute: compiles the manifest's HLO artifacts lazily and
+/// runs them on the CPU PJRT client.
+pub struct PjrtBackend {
+    rt: Runtime,
+    key: String,
+    spec: SpecManifest,
+    artifacts_dir: String,
+}
+
+impl PjrtBackend {
+    /// Load the manifest from `artifacts_dir` and bind to `spec_key`
+    /// (e.g. `"ocean_bandit"`).
+    pub fn new(artifacts_dir: &str, spec_key: &str) -> Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let spec = rt.manifest().spec(spec_key)?.clone();
+        Ok(PjrtBackend {
+            rt,
+            key: spec_key.to_string(),
+            spec,
+            artifacts_dir: artifacts_dir.to_string(),
+        })
+    }
+
+    /// The underlying runtime (extra entry points, contract checks).
+    pub fn runtime(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+}
+
+impl PolicyBackend for PjrtBackend {
+    fn spec(&self) -> &SpecManifest {
+        &self.spec
+    }
+
+    fn key(&self) -> &str {
+        &self.key
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        // aot.py exports the ravel_pytree-ordered initial vector; reading
+        // it back avoids re-deriving the pytree layout in Rust.
+        let path = format!("{}/{}", self.artifacts_dir, self.spec.params0);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path}"))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * self.spec.n_params,
+            "params0 size {} != 4 * n_params {}",
+            bytes.len(),
+            self.spec.n_params
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward> {
+        let d = self.spec.obs_dim;
+        anyhow::ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        let exe = self.rt.load(&self.key, &format!("forward_b{rows}"))?;
+        let out = exe.run(&[lit_f32(params), lit_f32_2d(obs, rows, d)?])?;
+        anyhow::ensure!(out.len() == 2, "forward returns (logits, value)");
+        Ok(Forward {
+            logits: to_f32s(&out[0])?,
+            values: to_f32s(&out[1])?,
+        })
+    }
+
+    fn forward_lstm(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+        rows: usize,
+    ) -> Result<ForwardLstm> {
+        let d = self.spec.obs_dim;
+        let hdim = self.spec.hidden;
+        anyhow::ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        let exe = self.rt.load(&self.key, &format!("forward_lstm_b{rows}"))?;
+        let out = exe.run(&[
+            lit_f32(params),
+            lit_f32_2d(obs, rows, d)?,
+            lit_f32_2d(h, rows, hdim)?,
+            lit_f32_2d(c, rows, hdim)?,
+        ])?;
+        anyhow::ensure!(out.len() == 4, "forward_lstm returns 4 outputs");
+        Ok(ForwardLstm {
+            logits: to_f32s(&out[0])?,
+            values: to_f32s(&out[1])?,
+            h: to_f32s(&out[2])?,
+            c: to_f32s(&out[3])?,
+        })
+    }
+
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        dones: &[f32],
+        last_values: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (t, r) = (self.spec.horizon, self.spec.batch_roll);
+        let exe = self.rt.load(&self.key, "gae")?;
+        let outs = exe.run(&[
+            lit_f32_2d(rewards, t, r)?,
+            lit_f32_2d(values, t, r)?,
+            lit_f32_2d(dones, t, r)?,
+            lit_f32(last_values),
+        ])?;
+        anyhow::ensure!(outs.len() == 2, "gae returns (adv, ret)");
+        Ok((to_f32s(&outs[0])?, to_f32s(&outs[1])?))
+    }
+
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        let spec = &self.spec;
+        let (t, r) = (batch.t, batch.r);
+        let n = t * r;
+        let slots = spec.act_dims.len();
+        let inputs: Vec<xla::Literal> = if spec.lstm {
+            vec![
+                lit_f32(params),
+                lit_f32(&opt.m),
+                lit_f32(&opt.v),
+                lit_scalar(opt.step),
+                lit_scalar(lr),
+                lit_scalar(ent_coef),
+                lit_f32_3d(batch.obs, t, r, spec.obs_dim)?,
+                lit_f32_2d(batch.starts, t, r)?,
+                lit_i32_3d(batch.actions, t, r, slots)?,
+                lit_f32_2d(batch.logp, t, r)?,
+                lit_f32_2d(batch.adv, t, r)?,
+                lit_f32_2d(batch.ret, t, r)?,
+            ]
+        } else {
+            vec![
+                lit_f32(params),
+                lit_f32(&opt.m),
+                lit_f32(&opt.v),
+                lit_scalar(opt.step),
+                lit_scalar(lr),
+                lit_scalar(ent_coef),
+                lit_f32_2d(batch.obs, n, spec.obs_dim)?,
+                lit_i32_2d(batch.actions, n, slots)?,
+                lit_f32(batch.logp),
+                lit_f32(batch.adv),
+                lit_f32(batch.ret),
+            ]
+        };
+        let exe = self.rt.load(&self.key, "train_step")?;
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 5, "train_step returns 5 outputs");
+        *params = to_f32s(&outs[0])?;
+        opt.m = to_f32s(&outs[1])?;
+        opt.v = to_f32s(&outs[2])?;
+        opt.step = to_f32s(&outs[3])?[0];
+        let m = to_f32s(&outs[4])?;
+        anyhow::ensure!(m.len() == 5, "metrics must be length 5");
+        let mut metrics = [0.0f32; 5];
+        metrics.copy_from_slice(&m);
+        Ok(metrics)
+    }
+}

@@ -9,15 +9,20 @@
 //!   ([`emulation`]), the from-scratch vectorization engine with EnvPool
 //!   semantics and four optimized code paths ([`vector`]), first-party
 //!   environments including the Ocean sanity suite ([`envs`]), and the
-//!   Clean PuffeRL PPO trainer ([`train`]) driving AOT-compiled policies.
+//!   Clean PuffeRL PPO trainer ([`train`]).
 //! - **Layer 2 (python/compile/model.py)** — JAX policy networks and the
 //!   PPO train step, lowered once to HLO text artifacts.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas kernels for the fused
 //!   policy MLP and the GAE scan, checked against a pure-jnp oracle.
 //!
-//! Python never runs on the rollout or training path: the [`runtime`]
-//! module loads the HLO artifacts via the PJRT C API and executes them
-//! directly from Rust.
+//! The learner math sits behind the [`backend`] abstraction
+//! ([`backend::PolicyBackend`]): the default
+//! [`NativeBackend`](backend::NativeBackend) is a pure-Rust port of the
+//! layer-1/2 reference math, so the crate builds and trains on a clean
+//! machine with **zero native dependencies** — no XLA, no Python. Enable
+//! the `pjrt` cargo feature to execute the AOT-compiled HLO artifacts
+//! through the PJRT C API instead (the [`runtime`] module), with Python
+//! still never running on the rollout or training path.
 //!
 //! ## Quickstart
 //!
@@ -28,13 +33,26 @@
 //! // MultiDiscrete action), then vectorize it.
 //! let cfg = VecConfig { num_envs: 8, num_workers: 2, batch_size: 8, ..Default::default() };
 //! let mut venv = Multiprocessing::new(
-//!     |i| Box::new(PufferEnv::new(pufferlib::envs::ocean::Squared::new(11, i as u64))) as _,
+//!     |i| -> Box<dyn FlatEnv> {
+//!         Box::new(PufferEnv::new(pufferlib::envs::ocean::Squared::new(11, i as u64)))
+//!     },
 //!     cfg,
 //! ).unwrap();
 //! let (obs, _rewards, _terms, _truncs, _infos) = venv.reset(0).unwrap();
 //! assert_eq!(obs.len(), 8 * venv.obs_layout().byte_len());
 //! ```
+//!
+//! Training end to end needs nothing beyond the crate:
+//!
+//! ```no_run
+//! use pufferlib::train::{TrainConfig, Trainer};
+//!
+//! let cfg = TrainConfig { env: "ocean/bandit".into(), total_steps: 16_000, ..Default::default() };
+//! let report = Trainer::native(cfg).unwrap().train().unwrap();
+//! println!("score: {:?}", report.mean_score);
+//! ```
 
+pub mod backend;
 pub mod config;
 pub mod emulation;
 pub mod envs;
@@ -47,6 +65,7 @@ pub mod vector;
 
 /// Convenience re-exports covering the most common entry points.
 pub mod prelude {
+    pub use crate::backend::{NativeBackend, PolicyBackend};
     pub use crate::emulation::{EpisodeStats, FlatEnv, PufferEnv, StructuredEnv};
     pub use crate::spaces::{Space, StructLayout, Value};
     pub use crate::util::rng::Rng;

@@ -2,20 +2,25 @@
 //! a CLI for all included PufferLib environments, clean YAML configs").
 //!
 //! ```text
-//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--train.pool=true] ...
+//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--backend=native|pjrt] ...
 //! puffer eval <env> --checkpoint runs/x/checkpoint.bin [--episodes 20]
 //! puffer sweep                      # train the whole Ocean suite
 //! puffer autotune <env> [--envs 8] [--workers 4] [--secs 1.0]
 //! puffer envs                       # list first-party environments
 //! ```
+//!
+//! The default backend is the pure-Rust `NativeBackend` (no artifacts, no
+//! Python). `--backend=pjrt` selects the AOT/PJRT path; it requires a
+//! build with `--features pjrt` plus `make artifacts`.
 
 use anyhow::{Context, Result};
 use pufferlib::config;
 use pufferlib::envs;
-use pufferlib::train::{Checkpoint, Trainer};
+use pufferlib::train::{Checkpoint, TrainConfig, Trainer};
 use pufferlib::vector::autotune;
 use std::sync::Arc;
 
+#[cfg(feature = "pjrt")]
 const ARTIFACTS: &str = "artifacts";
 
 fn main() {
@@ -55,13 +60,15 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
-         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...]\n  \
+         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--backend=native|pjrt]\n  \
          puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
          puffer sweep [--train.KEY=VAL ...]        train the whole Ocean suite\n  \
          puffer autotune <env> [--envs=N] [--workers=W] [--secs=S]\n  \
          puffer envs                               list first-party envs\n\n\
          Train keys: env total_steps lr ent_coef epochs anneal_lr seed\n\
-         \x20           num_workers pool run_dir log_every"
+         \x20           num_workers pool run_dir log_every\n\n\
+         Backends: native (default, pure Rust) | pjrt (AOT artifacts;\n\
+         \x20         needs a build with --features pjrt and `make artifacts`)"
     );
 }
 
@@ -83,15 +90,54 @@ fn split_args(args: &[String]) -> (Option<String>, Vec<String>, Vec<String>) {
     (cfg_file, positional, overrides)
 }
 
+/// Pull `--backend=...` out of the override list (default: native).
+fn take_backend(overrides: &mut Vec<String>) -> String {
+    let mut backend = "native".to_string();
+    overrides.retain(|a| {
+        if let Some(v) = a.strip_prefix("--backend=") {
+            backend = v.to_string();
+            false
+        } else {
+            true
+        }
+    });
+    backend
+}
+
+fn make_trainer(tc: TrainConfig, backend: &str) -> Result<Trainer> {
+    match backend {
+        "native" => Trainer::native(tc),
+        "pjrt" => pjrt_trainer(tc),
+        other => anyhow::bail!("unknown backend '{other}' (expected native or pjrt)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_trainer(tc: TrainConfig) -> Result<Trainer> {
+    Trainer::pjrt(tc, ARTIFACTS)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_trainer(_tc: TrainConfig) -> Result<Trainer> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `cargo build --release --features pjrt` and run `make artifacts`"
+    )
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
-    let (cfg_file, positional, overrides) = split_args(args);
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
     }
     let tc = config::train_config(&flat);
-    println!("training {} for {} steps ...", tc.env, tc.total_steps);
-    let mut trainer = Trainer::new(tc, ARTIFACTS)?;
+    println!(
+        "training {} for {} steps ({backend} backend) ...",
+        tc.env, tc.total_steps
+    );
+    let mut trainer = make_trainer(tc, &backend)?;
     let report = trainer.train()?;
     println!(
         "done: {} steps @ {:.0} SPS, {} episodes, score {}, return {}",
@@ -112,6 +158,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
 fn cmd_eval(args: &[String]) -> Result<()> {
     let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
     // Pull out eval-specific flags.
     let mut checkpoint = None;
     let mut episodes = 20usize;
@@ -131,7 +178,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         flat.insert("train.env".into(), env.clone());
     }
     let tc = config::train_config(&flat);
-    let mut trainer = Trainer::new(tc, ARTIFACTS)?;
+    let mut trainer = make_trainer(tc, &backend)?;
     if let Some(ck_path) = checkpoint {
         let ck = Checkpoint::load(&ck_path).context("loading checkpoint")?;
         trainer.restore(&ck)?;
@@ -154,13 +201,14 @@ fn cmd_eval(args: &[String]) -> Result<()> {
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
-    let (cfg_file, _, overrides) = split_args(args);
+    let (cfg_file, _, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
     let mut solved = 0;
     for env in envs::OCEAN_ENVS {
         let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
         flat.insert("train.env".into(), env.to_string());
         let tc = config::train_config(&flat);
-        let mut trainer = Trainer::new(tc, ARTIFACTS)?;
+        let mut trainer = make_trainer(tc, &backend)?;
         let report = trainer.train()?;
         let score = report.mean_score.unwrap_or(0.0);
         let ok = score > 0.9;

@@ -1,15 +1,17 @@
-//! The rollout-side policy: runs the AOT-compiled forward pass via PJRT,
-//! samples MultiDiscrete actions from the logits, and manages recurrent
-//! state (the LSTM "sandwich" of paper §3.4 — recurrence is a config
-//! flag, not a second model; this module owns the state-reshaping and
-//! reset-on-done logic that the paper calls the most common source of
-//! hard-to-diagnose bugs).
+//! The rollout-side policy: runs the forward pass through a
+//! [`PolicyBackend`] (native Rust math by default, AOT/PJRT behind the
+//! `pjrt` feature), samples MultiDiscrete actions from the logits, and
+//! manages recurrent state (the LSTM "sandwich" of paper §3.4 —
+//! recurrence is a config flag, not a second model; this module owns the
+//! state-reshaping and reset-on-done logic that the paper calls the most
+//! common source of hard-to-diagnose bugs).
 
 pub mod continuous;
 
-use crate::runtime::{lit_f32, lit_f32_2d, to_f32s, Runtime, SpecManifest};
+use crate::backend::PolicyBackend;
+use crate::runtime::SpecManifest;
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// Output of one policy step over a batch of rows.
 #[derive(Clone, Debug, Default)]
@@ -23,13 +25,13 @@ pub struct PolicyOut {
 }
 
 /// A policy bound to one spec. Parameters are an opaque flat f32 buffer
-/// (layout owned by python/compile/model.py; initial values come from the
-/// exported `params0` artifact).
+/// whose layout is owned by the backend ([`PolicyBackend::init_params`]);
+/// both backends share the `ravel_pytree` layout, so checkpoints are
+/// interchangeable across backends when the spec architectures match.
 pub struct Policy {
-    spec_key: String,
     spec: SpecManifest,
     params: Vec<f32>,
-    /// Per-row recurrent state, `batch_fwd × hidden` (LSTM specs only);
+    /// Per-row recurrent state, `rows × hidden` (LSTM specs only);
     /// indexed by global env row.
     h: Vec<f32>,
     c: Vec<f32>,
@@ -37,25 +39,19 @@ pub struct Policy {
 }
 
 impl Policy {
-    /// Load initial parameters for `spec_key` from the artifacts dir.
-    pub fn new(rt: &Runtime, artifacts_dir: &str, spec_key: &str, seed: u64) -> Result<Self> {
-        let spec = rt.manifest().spec(spec_key)?.clone();
-        let path = format!("{artifacts_dir}/{}", spec.params0);
-        let bytes = std::fs::read(&path).with_context(|| format!("reading {path}"))?;
+    /// Initialize parameters for the backend's spec.
+    pub fn new(backend: &mut dyn PolicyBackend, seed: u64) -> Result<Self> {
+        let spec = backend.spec().clone();
+        let params = backend.init_params()?;
         anyhow::ensure!(
-            bytes.len() == 4 * spec.n_params,
-            "params0 size {} != 4 * n_params {}",
-            bytes.len(),
+            params.len() == spec.n_params,
+            "backend produced {} params, spec says {}",
+            params.len(),
             spec.n_params
         );
-        let params: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
         let state_rows = spec.batch_roll.max(spec.batch_fwd);
         let state = vec![0.0; state_rows * spec.hidden];
         Ok(Policy {
-            spec_key: spec_key.to_string(),
             spec,
             params,
             h: state.clone(),
@@ -96,7 +92,7 @@ impl Policy {
     /// row `i` to its env row (for recurrent-state gather/scatter).
     pub fn step(
         &mut self,
-        rt: &mut Runtime,
+        backend: &mut dyn PolicyBackend,
         obs: &[f32],
         global_rows: &[usize],
     ) -> Result<PolicyOut> {
@@ -121,31 +117,18 @@ impl Policy {
                 cbuf[i * hdim..(i + 1) * hdim]
                     .copy_from_slice(&self.c[g * hdim..(g + 1) * hdim]);
             }
-            let exe = rt.load(&self.spec_key, &format!("forward_lstm_b{rows}"))?;
-            let out = exe.run(&[
-                lit_f32(&self.params),
-                lit_f32_2d(obs, rows, d)?,
-                lit_f32_2d(&hbuf, rows, hdim)?,
-                lit_f32_2d(&cbuf, rows, hdim)?,
-            ])?;
-            anyhow::ensure!(out.len() == 4, "forward_lstm returns 4 outputs");
-            let logits = to_f32s(&out[0])?;
-            let values = to_f32s(&out[1])?;
-            let h2 = to_f32s(&out[2])?;
-            let c2 = to_f32s(&out[3])?;
+            let out = backend.forward_lstm(&self.params, obs, &hbuf, &cbuf, rows)?;
             // Scatter updated state back.
             for (i, &g) in global_rows.iter().enumerate() {
                 self.h[g * hdim..(g + 1) * hdim]
-                    .copy_from_slice(&h2[i * hdim..(i + 1) * hdim]);
+                    .copy_from_slice(&out.h[i * hdim..(i + 1) * hdim]);
                 self.c[g * hdim..(g + 1) * hdim]
-                    .copy_from_slice(&c2[i * hdim..(i + 1) * hdim]);
+                    .copy_from_slice(&out.c[i * hdim..(i + 1) * hdim]);
             }
-            (logits, values)
+            (out.logits, out.values)
         } else {
-            let exe = rt.load(&self.spec_key, &format!("forward_b{rows}"))?;
-            let out = exe.run(&[lit_f32(&self.params), lit_f32_2d(obs, rows, d)?])?;
-            anyhow::ensure!(out.len() == 2, "forward returns (logits, value)");
-            (to_f32s(&out[0])?, to_f32s(&out[1])?)
+            let out = backend.forward(&self.params, obs, rows)?;
+            (out.logits, out.values)
         };
 
         Ok(self.sample(&logits, &values, rows))
@@ -219,5 +202,23 @@ mod tests {
         let seg = [0.3f32, -1.2, 2.0, 0.0];
         let total: f32 = (0..4).map(|i| log_softmax_at(&seg, i).exp()).sum();
         assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn policy_steps_through_native_backend() {
+        use crate::backend::{NativeBackend, PolicyBackend as _};
+        let env = crate::envs::make("ocean/bandit", 0);
+        let mut backend = NativeBackend::for_env("ocean/bandit", env.as_ref()).unwrap();
+        let spec = backend.spec().clone();
+        let mut policy = Policy::new(&mut backend, 5).unwrap();
+        let rows: Vec<usize> = (0..spec.batch_fwd).collect();
+        let obs = vec![0.0f32; spec.batch_fwd * spec.obs_dim];
+        let out = policy.step(&mut backend, &obs, &rows).unwrap();
+        assert_eq!(out.actions.len(), spec.batch_fwd * spec.act_dims.len());
+        assert_eq!(out.values.len(), spec.batch_fwd);
+        assert!(out.logp.iter().all(|l| *l <= 0.0));
+        // Wrong batch size is rejected (the PJRT artifact contract).
+        let bad_rows: Vec<usize> = (0..3).collect();
+        assert!(policy.step(&mut backend, &vec![0.0; 3 * spec.obs_dim], &bad_rows).is_err());
     }
 }

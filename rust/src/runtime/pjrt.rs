@@ -1,0 +1,221 @@
+//! The PJRT runtime (`pjrt` cargo feature): loads the HLO-text artifacts
+//! produced by `python/compile/aot.py`, compiles them on the CPU PJRT
+//! client, and executes them from the training/serving hot path.
+
+use super::manifest::{Manifest, SpecManifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled entry point plus its name (for error messages).
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    ///
+    /// aot.py lowers with `return_tuple=True`, so every artifact returns
+    /// one tuple literal; this unpacks it into its elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut result = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let tuple = result.decompose_tuple()?;
+        Ok(tuple)
+    }
+}
+
+/// A loaded model spec: the PJRT client, all compiled entry points, and
+/// the shape contract from the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, Executable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `artifacts/manifest.json`.
+    /// Entry points compile lazily on first use (see [`Runtime::load`]).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let manifest = Manifest::load(&manifest_path).with_context(|| {
+            format!(
+                "loading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            artifacts_dir,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) the `entry` point of `spec`, e.g.
+    /// `load("ocean_squared", "train_step")`.
+    pub fn load(&mut self, spec: &str, entry: &str) -> Result<&Executable> {
+        let key = format!("{spec}/{entry}");
+        if !self.executables.contains_key(&key) {
+            let sm = self
+                .manifest
+                .spec(spec)
+                .with_context(|| format!("spec '{spec}' not in manifest"))?;
+            let file = sm
+                .artifacts
+                .get(entry)
+                .with_context(|| format!("entry '{entry}' not in spec '{spec}'"))?;
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?;
+            self.executables.insert(
+                key.clone(),
+                Executable {
+                    name: key.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(&self.executables[&key])
+    }
+
+    /// Assert the Rust-side env shape matches the manifest contract
+    /// (obs_dim drift between aot.py's spec table and the Rust env fails
+    /// loudly here).
+    pub fn check_env_contract(
+        &self,
+        spec: &str,
+        obs_dim: usize,
+        act_dims: &[usize],
+        agents: usize,
+    ) -> Result<&SpecManifest> {
+        let sm = self.manifest.spec(spec)?;
+        anyhow::ensure!(
+            sm.obs_dim == obs_dim,
+            "spec '{spec}': manifest obs_dim {} != env flat obs len {obs_dim} \
+             (python/compile/aot.py ENV_SPECS is out of sync with the Rust env)",
+            sm.obs_dim
+        );
+        anyhow::ensure!(
+            sm.act_dims == act_dims,
+            "spec '{spec}': manifest act_dims {:?} != env action dims {act_dims:?}",
+            sm.act_dims
+        );
+        anyhow::ensure!(
+            sm.agents == agents,
+            "spec '{spec}': manifest agents {} != env num_agents {agents}",
+            sm.agents
+        );
+        Ok(sm)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+
+/// f32 vector literal.
+pub fn lit_f32(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// f32 matrix literal of shape `(rows, cols)` from row-major data.
+pub fn lit_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// f32 rank-3 literal from row-major data.
+pub fn lit_f32_3d(data: &[f32], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), d0 * d1 * d2);
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64, d2 as i64])?)
+}
+
+/// i32 matrix literal.
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// i32 rank-3 literal.
+pub fn lit_i32_3d(data: &[i32], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), d0 * d1 * d2);
+    Ok(xla::Literal::vec1(data).reshape(&[d0 as i64, d1 as i64, d2 as i64])?)
+}
+
+/// Extract an f32 vector from a literal (any shape, row-major).
+pub fn to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_contract_checks() {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::new("artifacts").unwrap();
+        let env = crate::envs::make("ocean/bandit", 0);
+        let sm = rt
+            .check_env_contract(
+                "ocean_bandit",
+                env.obs_layout().flat_len(),
+                env.action_dims(),
+                env.num_agents(),
+            )
+            .unwrap();
+        assert!(sm.n_params > 0);
+        assert!(rt.check_env_contract("ocean_bandit", 999, &[4], 1).is_err());
+    }
+
+    #[test]
+    fn load_and_run_forward() {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::new("artifacts").unwrap();
+        let sm = rt.manifest().spec("ocean_bandit").unwrap().clone();
+        let b = sm.batch_fwd;
+        let exe = rt.load("ocean_bandit", &format!("forward_b{b}")).unwrap();
+        let params = lit_f32(&vec![0.01; sm.n_params]);
+        let obs = lit_f32_2d(&vec![0.0; b * sm.obs_dim], b, sm.obs_dim).unwrap();
+        let out = exe.run(&[params, obs]).unwrap();
+        assert_eq!(out.len(), 2, "forward returns (logits, value)");
+        let logits = to_f32s(&out[0]).unwrap();
+        assert_eq!(logits.len(), b * sm.act_dims.iter().sum::<usize>());
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -2,8 +2,9 @@
 //! customized in the same ways the paper describes — separate train/eval,
 //! model checkpointing, fast LSTM support, asynchronous environment
 //! simulation (EnvPool), episode-stat logging, and multiagent support —
-//! driving the AOT-compiled L2 train step through PJRT. Python never runs
-//! here.
+//! driving the learner math through the [`crate::backend::PolicyBackend`]
+//! abstraction (pure-Rust `NativeBackend` by default, AOT/PJRT behind the
+//! `pjrt` feature). Python never runs here.
 
 mod checkpoint;
 mod rollout;

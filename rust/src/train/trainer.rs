@@ -1,15 +1,14 @@
-//! The PPO training loop: rollouts → GAE (L1 kernel via PJRT) →
-//! train_step (L2 via PJRT) × epochs, with LR annealing, checkpointing,
-//! and CSV/console metric logging.
+//! The PPO training loop: rollouts → GAE → train_step × epochs, with LR
+//! annealing, checkpointing, and CSV/console metric logging — all through
+//! the [`PolicyBackend`] abstraction, so the same loop drives the pure-
+//! Rust [`NativeBackend`] (default) and the AOT/PJRT path (`pjrt`
+//! feature).
 
 use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 use super::Checkpoint;
+use crate::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
 use crate::envs;
 use crate::policy::Policy;
-use crate::runtime::{
-    lit_f32, lit_f32_2d, lit_f32_3d, lit_i32_2d, lit_i32_3d, lit_scalar, to_f32s, Manifest,
-    Runtime,
-};
 use crate::util::timer::SpsCounter;
 use crate::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
 use anyhow::Result;
@@ -82,33 +81,69 @@ pub struct EvalReport {
 /// Clean PuffeRL.
 pub struct Trainer {
     cfg: TrainConfig,
-    rt: Runtime,
+    backend: Box<dyn PolicyBackend>,
     policy: Policy,
     venv: Box<dyn VecEnv>,
     buf: RolloutBuffer,
     log: EpisodeLog,
     spec_key: String,
-    adam_m: Vec<f32>,
-    adam_v: Vec<f32>,
-    adam_step: f32,
+    opt: AdamState,
     global_step: u64,
     metrics_file: Option<std::fs::File>,
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
-        let rt = Runtime::new(artifacts_dir)?;
-        let spec_key = Manifest::spec_key_for_env(&cfg.env);
-        let spec = rt.manifest().spec(&spec_key)?.clone();
-
-        // Contract check against a probe env.
+    /// Train with the default pure-Rust [`NativeBackend`]: no artifacts,
+    /// no Python, no native dependencies.
+    pub fn native(cfg: TrainConfig) -> Result<Self> {
         let probe = envs::make(&cfg.env, cfg.seed);
-        rt.check_env_contract(
-            &spec_key,
-            probe.obs_layout().flat_len(),
-            probe.action_dims(),
-            probe.num_agents(),
-        )?;
+        let backend = NativeBackend::for_env(&cfg.env, probe.as_ref())?;
+        Self::build(cfg, Box::new(backend), probe)
+    }
+
+    /// Train through the AOT/PJRT path (requires the `pjrt` feature and
+    /// `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
+        let key = crate::runtime::Manifest::spec_key_for_env(&cfg.env);
+        let backend = crate::backend::PjrtBackend::new(artifacts_dir, &key)?;
+        Self::with_backend(cfg, Box::new(backend))
+    }
+
+    /// Train with any [`PolicyBackend`].
+    pub fn with_backend(cfg: TrainConfig, backend: Box<dyn PolicyBackend>) -> Result<Self> {
+        let probe = envs::make(&cfg.env, cfg.seed);
+        Self::build(cfg, backend, probe)
+    }
+
+    fn build(
+        cfg: TrainConfig,
+        mut backend: Box<dyn PolicyBackend>,
+        probe: Box<dyn crate::emulation::FlatEnv>,
+    ) -> Result<Self> {
+        let spec = backend.spec().clone();
+        let spec_key = backend.key().to_string();
+
+        // Contract check against the probe env: shape drift between the
+        // backend spec and the Rust env fails loudly here.
+        anyhow::ensure!(
+            spec.obs_dim == probe.obs_layout().flat_len(),
+            "spec '{spec_key}': obs_dim {} != env flat obs len {}",
+            spec.obs_dim,
+            probe.obs_layout().flat_len()
+        );
+        anyhow::ensure!(
+            spec.act_dims == probe.action_dims(),
+            "spec '{spec_key}': act_dims {:?} != env action dims {:?}",
+            spec.act_dims,
+            probe.action_dims()
+        );
+        anyhow::ensure!(
+            spec.agents == probe.num_agents(),
+            "spec '{spec_key}': agents {} != env num_agents {}",
+            spec.agents,
+            probe.num_agents()
+        );
         drop(probe);
 
         let agents = spec.agents;
@@ -154,14 +189,13 @@ impl Trainer {
             );
         }
 
-        let policy = Policy::new(&rt, artifacts_dir, &spec_key, cfg.seed)?;
+        let policy = Policy::new(backend.as_mut(), cfg.seed)?;
         let buf = RolloutBuffer::new(
             spec.horizon,
             spec.batch_roll,
             spec.obs_dim,
             spec.act_dims.len(),
         );
-        let n_params = spec.n_params;
 
         let metrics_file = match &cfg.run_dir {
             Some(dir) => {
@@ -178,15 +212,13 @@ impl Trainer {
 
         Ok(Trainer {
             cfg,
-            rt,
+            backend,
             policy,
             venv,
             buf,
             log: EpisodeLog::default(),
             spec_key,
-            adam_m: vec![0.0; n_params],
-            adam_v: vec![0.0; n_params],
-            adam_step: 0.0,
+            opt: AdamState::new(spec.n_params),
             global_step: 0,
             metrics_file,
         })
@@ -205,7 +237,6 @@ impl Trainer {
         let t_dim = spec.horizon;
         let r_dim = spec.batch_roll;
         let n = t_dim * r_dim;
-        let slots = spec.act_dims.len();
         let mut sps = SpsCounter::new();
         let mut last_metrics = [0.0f32; 5];
         let mut segment = 0usize;
@@ -217,9 +248,9 @@ impl Trainer {
 
         while self.global_step < self.cfg.total_steps {
             // ---- Rollout ----
-            let (policy, rt, venv, buf, log) = (
+            let (policy, backend, venv, buf, log) = (
                 &mut self.policy,
-                &mut self.rt,
+                &mut *self.backend,
                 &mut *self.venv,
                 &mut self.buf,
                 &mut self.log,
@@ -232,23 +263,20 @@ impl Trainer {
                 for &r in done_rows {
                     policy.reset_state(r);
                 }
-                policy.step(rt, obs, rows)
+                policy.step(&mut *backend, obs, rows)
             })?;
             self.global_step += n as u64;
             sps.add(n as u64);
 
-            // ---- GAE (L1 Pallas kernel via PJRT) ----
-            let gae_exe = self.rt.load(&self.spec_key, "gae")?;
-            let outs = gae_exe.run(&[
-                lit_f32_2d(&self.buf.rewards, t_dim, r_dim)?,
-                lit_f32_2d(&self.buf.values, t_dim, r_dim)?,
-                lit_f32_2d(&self.buf.dones, t_dim, r_dim)?,
-                lit_f32(&self.buf.last_values),
-            ])?;
-            let adv = to_f32s(&outs[0])?;
-            let ret = to_f32s(&outs[1])?;
+            // ---- GAE ----
+            let (adv, ret) = self.backend.gae(
+                &self.buf.rewards,
+                &self.buf.values,
+                &self.buf.dones,
+                &self.buf.last_values,
+            )?;
 
-            // ---- PPO epochs (L2 train step via PJRT) ----
+            // ---- PPO epochs ----
             let lr = if self.cfg.anneal_lr {
                 let frac = 1.0 - self.global_step as f32 / self.cfg.total_steps as f32;
                 self.cfg.lr * frac.max(0.05)
@@ -256,45 +284,23 @@ impl Trainer {
                 self.cfg.lr
             };
             for _ in 0..self.cfg.epochs {
-                let inputs: Vec<xla::Literal> = if spec.lstm {
-                    vec![
-                        lit_f32(self.policy.params()),
-                        lit_f32(&self.adam_m),
-                        lit_f32(&self.adam_v),
-                        lit_scalar(self.adam_step),
-                        lit_scalar(lr),
-                        lit_scalar(self.cfg.ent_coef),
-                        lit_f32_3d(&self.buf.obs, t_dim, r_dim, spec.obs_dim)?,
-                        lit_f32_2d(&self.buf.starts, t_dim, r_dim)?,
-                        lit_i32_3d(&self.buf.actions, t_dim, r_dim, slots)?,
-                        lit_f32_2d(&self.buf.logp, t_dim, r_dim)?,
-                        lit_f32_2d(&adv, t_dim, r_dim)?,
-                        lit_f32_2d(&ret, t_dim, r_dim)?,
-                    ]
-                } else {
-                    vec![
-                        lit_f32(self.policy.params()),
-                        lit_f32(&self.adam_m),
-                        lit_f32(&self.adam_v),
-                        lit_scalar(self.adam_step),
-                        lit_scalar(lr),
-                        lit_scalar(self.cfg.ent_coef),
-                        lit_f32_2d(&self.buf.obs, n, spec.obs_dim)?,
-                        lit_i32_2d(&self.buf.actions, n, slots)?,
-                        lit_f32(&self.buf.logp),
-                        lit_f32(&adv),
-                        lit_f32(&ret),
-                    ]
+                let batch = TrainBatch {
+                    t: t_dim,
+                    r: r_dim,
+                    obs: &self.buf.obs,
+                    starts: &self.buf.starts,
+                    actions: &self.buf.actions,
+                    logp: &self.buf.logp,
+                    adv: &adv,
+                    ret: &ret,
                 };
-                let exe = self.rt.load(&self.spec_key, "train_step")?;
-                let outs = exe.run(&inputs)?;
-                anyhow::ensure!(outs.len() == 5, "train_step returns 5 outputs");
-                *self.policy.params_mut() = to_f32s(&outs[0])?;
-                self.adam_m = to_f32s(&outs[1])?;
-                self.adam_v = to_f32s(&outs[2])?;
-                self.adam_step = to_f32s(&outs[3])?[0];
-                let m = to_f32s(&outs[4])?;
-                last_metrics.copy_from_slice(&m);
+                last_metrics = self.backend.train_step(
+                    self.policy.params_mut(),
+                    &mut self.opt,
+                    lr,
+                    self.cfg.ent_coef,
+                    &batch,
+                )?;
             }
 
             // ---- Logging ----
@@ -359,9 +365,15 @@ impl Trainer {
         let layout = self.venv.obs_layout().clone();
         let d = layout.flat_len();
         while log.scores.len() < min_episodes {
-            let (raw_obs, env_ids, infos) = {
+            let (raw_obs, env_ids, terms, truncs, infos) = {
                 let b = self.venv.recv()?;
-                (b.obs.to_vec(), b.env_ids.to_vec(), b.infos)
+                (
+                    b.obs.to_vec(),
+                    b.env_ids.to_vec(),
+                    b.terms.to_vec(),
+                    b.truncs.to_vec(),
+                    b.infos,
+                )
             };
             log.absorb(&infos);
             let mut global_rows = Vec::new();
@@ -371,12 +383,20 @@ impl Trainer {
                 }
             }
             let rows = global_rows.len();
+            // Eval-side recurrent reset: done flags arrive with the batch;
+            // rows whose episode just ended get fresh obs (auto-reset), so
+            // their LSTM state must be zeroed before the forward pass —
+            // the same discipline the training rollout applies.
+            for (i, &g) in global_rows.iter().enumerate() {
+                if terms[i] || truncs[i] {
+                    self.policy.reset_state(g);
+                }
+            }
             let mut obs_f32 = vec![0.0; rows * d];
             for (i, row) in raw_obs.chunks_exact(layout.byte_len()).enumerate() {
                 layout.row_to_f32(row, &mut obs_f32[i * d..(i + 1) * d]);
             }
-            // Eval-side recurrent reset: done flags arrive with the batch.
-            let out = self.policy.step(&mut self.rt, &obs_f32, &global_rows)?;
+            let out = self.policy.step(&mut *self.backend, &obs_f32, &global_rows)?;
             self.venv.send(&out.actions[..rows * slots])?;
         }
         Ok(EvalReport {
@@ -392,9 +412,9 @@ impl Trainer {
             spec_key: self.spec_key.clone(),
             global_step: self.global_step,
             params: self.policy.params().to_vec(),
-            adam_m: self.adam_m.clone(),
-            adam_v: self.adam_v.clone(),
-            adam_step: self.adam_step,
+            adam_m: self.opt.m.clone(),
+            adam_v: self.opt.v.clone(),
+            adam_step: self.opt.step,
         }
     }
 
@@ -406,10 +426,23 @@ impl Trainer {
             ck.spec_key,
             self.spec_key
         );
+        anyhow::ensure!(
+            ck.params.len() == self.policy.spec().n_params,
+            "checkpoint '{}' has {} params, this backend expects {} — was it \
+             written by a backend with a different architecture (e.g. a \
+             recurrent pjrt spec vs the feedforward native spec)?",
+            ck.spec_key,
+            ck.params.len(),
+            self.policy.spec().n_params
+        );
+        anyhow::ensure!(
+            ck.adam_m.len() == ck.params.len() && ck.adam_v.len() == ck.params.len(),
+            "checkpoint optimizer state length does not match its params"
+        );
         *self.policy.params_mut() = ck.params.clone();
-        self.adam_m = ck.adam_m.clone();
-        self.adam_v = ck.adam_v.clone();
-        self.adam_step = ck.adam_step;
+        self.opt.m = ck.adam_m.clone();
+        self.opt.v = ck.adam_v.clone();
+        self.opt.step = ck.adam_step;
         self.global_step = ck.global_step;
         Ok(())
     }
@@ -481,5 +514,19 @@ mod tests {
         assert_eq!(pick_workers(7, 4, false), 1);
         // pool: batch 16, envs 32, w=4 → epw 8, 16 % 8 == 0 ✓
         assert_eq!(pick_workers(32, 3, true), 2);
+    }
+
+    #[test]
+    fn native_trainer_constructs_for_every_ocean_env() {
+        for env in crate::envs::OCEAN_ENVS {
+            let cfg = TrainConfig {
+                env: env.to_string(),
+                total_steps: 0, // construct only
+                log_every: 0,
+                ..Default::default()
+            };
+            let t = Trainer::native(cfg).unwrap_or_else(|e| panic!("{env}: {e}"));
+            assert_eq!(t.policy().params().len(), t.policy().spec().n_params);
+        }
     }
 }

@@ -1,17 +1,13 @@
 //! Integration tests across the full stack: emulation → vectorization →
-//! PJRT runtime → Clean PuffeRL. The runtime/training tests require
-//! `make artifacts` to have run (the Makefile's `test` target guarantees
-//! the ordering).
+//! compute backend → Clean PuffeRL. The training tests run on the default
+//! pure-Rust `NativeBackend`, so they need no artifacts and no Python;
+//! PJRT-specific coverage lives behind the `pjrt` feature.
 
 use pufferlib::emulation::{FlatEnv, PufferEnv};
 use pufferlib::envs;
 use pufferlib::train::{Checkpoint, TrainConfig, Trainer};
 use pufferlib::vector::baselines::{GymnasiumVec, Sb3Vec};
 use pufferlib::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
-
-fn artifacts_ready() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
-}
 
 /// Every backend must produce identical step results for a deterministic
 /// env when driven with the same actions — the cross-backend equivalence
@@ -20,7 +16,6 @@ fn artifacts_ready() -> bool {
 fn backends_agree_on_deterministic_env() {
     fn run<V: VecEnv>(mut v: V, steps: usize) -> (Vec<f32>, Vec<u8>) {
         let slots = v.action_dims().len();
-        let rows = v.batch_rows();
         let num_envs = v.num_envs();
         let mut rewards_log = vec![0.0f32; num_envs];
         let mut final_obs = Vec::new();
@@ -112,10 +107,6 @@ fn pool_fairness_under_imbalance() {
 
 #[test]
 fn trainer_improves_bandit_and_checkpoints() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
     let dir = std::env::temp_dir().join("puffer_it_bandit");
     let cfg = TrainConfig {
         env: "ocean/bandit".into(),
@@ -124,7 +115,7 @@ fn trainer_improves_bandit_and_checkpoints() {
         run_dir: Some(dir.to_str().unwrap().to_string()),
         ..Default::default()
     };
-    let mut trainer = Trainer::new(cfg, "artifacts").unwrap();
+    let mut trainer = Trainer::native(cfg).unwrap();
     let report = trainer.train().unwrap();
     let score = report.mean_score.expect("episodes finished");
     assert!(
@@ -138,15 +129,12 @@ fn trainer_improves_bandit_and_checkpoints() {
     ck.save(dir.join("ck.bin")).unwrap();
     let back = Checkpoint::load(dir.join("ck.bin")).unwrap();
     assert_eq!(back.params, trainer.policy().params());
-    let mut trainer2 = Trainer::new(
-        TrainConfig {
-            env: "ocean/bandit".into(),
-            total_steps: 16_000,
-            log_every: 0,
-            ..Default::default()
-        },
-        "artifacts",
-    )
+    let mut trainer2 = Trainer::native(TrainConfig {
+        env: "ocean/bandit".into(),
+        total_steps: 16_000,
+        log_every: 0,
+        ..Default::default()
+    })
     .unwrap();
     trainer2.restore(&back).unwrap();
     assert_eq!(trainer2.global_step(), report.global_step);
@@ -167,10 +155,6 @@ fn trainer_improves_bandit_and_checkpoints() {
 
 #[test]
 fn trainer_pool_mode_runs() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
     let cfg = TrainConfig {
         env: "ocean/stochastic".into(),
         total_steps: 4_096,
@@ -179,7 +163,7 @@ fn trainer_pool_mode_runs() {
         log_every: 0,
         ..Default::default()
     };
-    let mut trainer = Trainer::new(cfg, "artifacts").unwrap();
+    let mut trainer = Trainer::native(cfg).unwrap();
     let report = trainer.train().unwrap();
     assert!(report.global_step >= 4_096);
     assert!(report.episodes > 0, "episodes must complete in pool mode");
@@ -187,17 +171,13 @@ fn trainer_pool_mode_runs() {
 
 #[test]
 fn trainer_multiagent_runs() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
     let cfg = TrainConfig {
         env: "ocean/multiagent".into(),
         total_steps: 8_192,
         log_every: 0,
         ..Default::default()
     };
-    let mut trainer = Trainer::new(cfg, "artifacts").unwrap();
+    let mut trainer = Trainer::native(cfg).unwrap();
     let report = trainer.train().unwrap();
     // Identity routing is learnable fast; anything above random (0.5)
     // proves rows aren't crossed. (Full solve is covered by bench C3.)
@@ -208,9 +188,31 @@ fn trainer_multiagent_runs() {
     );
 }
 
+/// The native backend must synthesize a valid spec (shape contract,
+/// geometry divisibility) for every trainable first-party env.
+#[test]
+fn native_backend_covers_all_trainable_envs() {
+    use pufferlib::backend::{NativeBackend, PolicyBackend as _};
+    for &env in envs::OCEAN_ENVS.iter().chain(&["classic/cartpole", "profile/nmmo"]) {
+        let probe = envs::make(env, 0);
+        let mut b = NativeBackend::for_env(env, probe.as_ref())
+            .unwrap_or_else(|e| panic!("{env}: {e}"));
+        let spec = b.spec().clone();
+        assert_eq!(spec.obs_dim, probe.obs_layout().flat_len(), "{env}");
+        assert_eq!(spec.act_dims, probe.action_dims(), "{env}");
+        assert_eq!(spec.agents, probe.num_agents(), "{env}");
+        assert_eq!(spec.batch_roll % spec.agents, 0, "{env}");
+        let params = b.init_params().unwrap();
+        assert_eq!(params.len(), spec.n_params, "{env}");
+    }
+}
+
+/// PJRT path: the AOT manifest must cover every trainable env with
+/// matching shapes (requires `make artifacts`).
+#[cfg(feature = "pjrt")]
 #[test]
 fn manifest_covers_all_trainable_envs() {
-    if !artifacts_ready() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("SKIP: run `make artifacts` first");
         return;
     }

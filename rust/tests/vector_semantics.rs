@@ -1,0 +1,157 @@
+//! Vectorization-semantics tests: the ordering and liveness contracts of
+//! the optimized code paths.
+//!
+//! - `Mode::ZeroCopy` hands out worker bands **in rotation, in claim
+//!   order** — a circular buffer of batches.
+//! - `Mode::Async` (`N < M`) returns the **first finishers** without
+//!   blocking on stragglers.
+//! - `Serial` is inherently synchronous: one full batch, always in env
+//!   order, and pool configs are rejected up front.
+
+use pufferlib::emulation::{FlatEnv, PufferEnv};
+use pufferlib::envs;
+use pufferlib::envs::profile::{ProfileConfig, ProfileSim};
+use pufferlib::vector::{Mode, Multiprocessing, Serial, VecConfig, VecEnv};
+use std::time::Instant;
+
+fn cfg(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) -> VecConfig {
+    VecConfig {
+        num_envs,
+        num_workers,
+        batch_size,
+        zero_copy,
+        ..Default::default()
+    }
+}
+
+/// ZeroCopy: with 4 workers × 2 envs and batch 4 (2 workers per band),
+/// recv must return band 0 (envs 0–3), then band 1 (envs 4–7), then band
+/// 0 again — the claim rotation — with rows in worker order inside each
+/// band.
+#[test]
+fn zero_copy_band_rotation_returns_batches_in_claim_order() {
+    let mut v = Multiprocessing::new(
+        |i| envs::make("ocean/squared", i as u64),
+        cfg(8, 4, 4, true),
+    )
+    .unwrap();
+    assert_eq!(v.mode(), Mode::ZeroCopy);
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    v.async_reset(0);
+    for round in 0..6 {
+        let ids = {
+            let b = v.recv().unwrap();
+            b.env_ids.to_vec()
+        };
+        let expect: Vec<usize> = if round % 2 == 0 {
+            (0..4).collect()
+        } else {
+            (4..8).collect()
+        };
+        assert_eq!(
+            ids, expect,
+            "round {round}: ZeroCopy must claim bands in rotation"
+        );
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+}
+
+/// Async (N < M): recv returns the first workers to finish. With one
+/// worker 1000× slower than the rest, the fast workers dominate the
+/// batches and the whole loop completes far faster than it could if any
+/// recv blocked on the straggler.
+#[test]
+fn async_recv_returns_first_finishers_without_blocking() {
+    const SLOW_US: f64 = 50_000.0;
+    let factory = |i: usize| -> Box<dyn FlatEnv> {
+        let step_us = if i == 3 { SLOW_US } else { 50.0 };
+        Box::new(PufferEnv::new(ProfileSim::new(
+            ProfileConfig::synthetic(step_us, 0.0, 0.0, 4),
+            i as u64,
+        )))
+    };
+    // 4 workers × 1 env, batch = 2 workers → Mode::Async.
+    let mut v = Multiprocessing::new(factory, cfg(4, 4, 2, false)).unwrap();
+    assert_eq!(v.mode(), Mode::Async);
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    v.async_reset(0);
+    let rounds = 20usize;
+    let t0 = Instant::now();
+    let mut counts = [0usize; 4];
+    for _ in 0..rounds {
+        let ids = {
+            let b = v.recv().unwrap();
+            b.env_ids.to_vec()
+        };
+        assert_eq!(ids.len(), 2, "Async batch is exactly N envs");
+        for e in ids {
+            counts[e] += 1;
+        }
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    // A sync vectorizer would pay the straggler every round
+    // (rounds × 50 ms ≥ 1 s); first-finisher batches stay far under that.
+    assert!(
+        elapsed < rounds as f64 * SLOW_US / 1e6 * 0.5,
+        "recv appears to block on the straggler: {elapsed:.3}s for {rounds} rounds"
+    );
+    let fast: usize = counts[..3].iter().sum();
+    assert!(
+        fast > counts[3] * 3,
+        "straggler claimed too often: {counts:?}"
+    );
+}
+
+/// Serial: every batch is the full env set, in env order (claim order is
+/// definitionally 0..M), and `N < M` pool configs are rejected up front.
+#[test]
+fn serial_is_sync_and_in_order() {
+    let mut v = Serial::new(
+        |i| envs::make("classic/cartpole", i as u64),
+        cfg(4, 1, 4, false),
+    )
+    .unwrap();
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    v.async_reset(1);
+    for _ in 0..10 {
+        let ids = {
+            let b = v.recv().unwrap();
+            b.env_ids.to_vec()
+        };
+        assert_eq!(ids, vec![0, 1, 2, 3], "Serial batches are in env order");
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+
+    // Pool semantics need a pooled backend: Serial refuses N < M.
+    assert!(
+        Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg(4, 1, 2, false)).is_err(),
+        "Serial must reject batch_size < num_envs"
+    );
+}
+
+/// Multiprocessing sync mode mirrors Serial's ordering contract: the
+/// batch is all envs, ascending.
+#[test]
+fn multiprocessing_sync_matches_serial_order() {
+    let mut v = Multiprocessing::new(
+        |i| envs::make("classic/cartpole", i as u64),
+        cfg(4, 2, 4, false),
+    )
+    .unwrap();
+    assert_eq!(v.mode(), Mode::Sync);
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    v.async_reset(1);
+    for _ in 0..10 {
+        let ids = {
+            let b = v.recv().unwrap();
+            b.env_ids.to_vec()
+        };
+        assert_eq!(ids, vec![0, 1, 2, 3], "Sync batches are in env order");
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+}
