@@ -1,4 +1,4 @@
-.PHONY: artifacts fixtures test bench
+.PHONY: artifacts fixtures test bench bench-all
 
 # AOT-lower every env spec to HLO text + manifest (needed only for the
 # `pjrt` feature; the default native backend needs nothing).
@@ -13,5 +13,11 @@ fixtures:
 test:
 	cargo build --release && cargo test -q
 
+# Vector throughput bench (paper Table 2 + the W1 wrapper-overhead
+# cell); writes machine-readable results to BENCH_vector.json.
 bench:
+	PUFFER_BENCH_JSON=BENCH_vector.json cargo bench --bench vectorization
+
+# Every bench target.
+bench-all:
 	cargo bench

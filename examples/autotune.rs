@@ -6,9 +6,8 @@
 //! cargo run --release --example autotune [env] [num_envs] [secs]
 //! ```
 
-use pufferlib::envs;
 use pufferlib::vector::autotune::{autotune, format_results};
-use std::sync::Arc;
+use pufferlib::wrappers::EnvSpec;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -17,10 +16,8 @@ fn main() -> anyhow::Result<()> {
     let secs: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
 
     println!("autotuning {env} ({num_envs} envs, {secs}s per candidate)\n");
-    let name = env.clone();
-    let factory: Arc<dyn Fn(usize) -> Box<dyn pufferlib::emulation::FlatEnv> + Send + Sync> =
-        Arc::new(move |i| envs::make(&name, i as u64));
-    let results = autotune(factory, num_envs, 8, secs)?;
+    let spec = EnvSpec::new(env.as_str());
+    let results = autotune(&spec, num_envs, 8, secs)?;
     print!("{}", format_results(&results));
     let best = &results[0];
     println!(

@@ -106,14 +106,20 @@ impl StructuredEnv for Forage {
 }
 
 fn main() -> anyhow::Result<()> {
-    // One line: any structured env becomes vectorization-ready.
+    // One line: any structured env becomes vectorization-ready. The
+    // EnvSpec carries the custom constructor plus any wrapper chain
+    // (here: clip the sparse find-the-food reward), and every layer of
+    // the stack consumes the spec.
+    let spec =
+        EnvSpec::custom("forage", |_| Box::new(PufferEnv::new(Forage::new())) as Box<dyn FlatEnv>)
+            .clip_reward(0.5);
     let cfg = VecConfig {
         num_envs: 4,
         num_workers: 1,
         batch_size: 4,
         ..Default::default()
     };
-    let mut venv = Serial::new(|_| Box::new(PufferEnv::new(Forage::new())) as _, cfg)?;
+    let mut venv = Serial::from_spec(&spec, cfg)?;
 
     println!(
         "custom env emulated: {} obs bytes -> {} f32 features, action dims {:?}",

@@ -15,6 +15,7 @@ use pufferlib::prelude::PolicyBackend as _;
 use pufferlib::util::stats::Welford;
 use pufferlib::util::timer::SpsCounter;
 use pufferlib::vector::{Multiprocessing, VecConfig, VecEnv};
+use pufferlib::wrappers::EnvSpec;
 use pufferlib::{envs, envs::profile};
 
 fn main() -> anyhow::Result<()> {
@@ -26,7 +27,8 @@ fn main() -> anyhow::Result<()> {
         batch_size: 1,
         ..Default::default()
     };
-    let mut venv = Multiprocessing::new(|i| envs::make("profile/nmmo", i as u64), cfg)?;
+    let spec = EnvSpec::new("profile/nmmo");
+    let mut venv = Multiprocessing::from_spec(&spec, cfg)?;
     println!(
         "nmmo-sim: {} envs × {} agents, obs {} f32 (dict: tiles i32[15,15] + entities f32[8,6] + stats f32[10]), actions {:?}",
         venv.num_envs(),

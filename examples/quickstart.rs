@@ -6,24 +6,27 @@
 
 use pufferlib::prelude::*;
 use pufferlib::util::timer::SpsCounter;
-use pufferlib::{envs, vector::VecConfig};
+use pufferlib::vector::VecConfig;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Pick any first-party env (or wrap your own StructuredEnv with
-    //    PufferEnv::new — see examples/custom_env.rs).
-    let name = "ocean/squared";
+    // 1. Describe the env as an EnvSpec: any first-party name (or a
+    //    custom env via EnvSpec::custom — see examples/custom_env.rs)
+    //    plus a one-line wrapper chain, applied innermost first.
+    let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(2);
 
     // 2. Vectorize: 8 envs on 2 workers, EnvPool batch of 4 (first
-    //    finishers win).
+    //    finishers win). The slabs size themselves from the *wrapped*
+    //    layout (stacking doubled the rows here).
     let cfg = VecConfig {
         num_envs: 8,
         num_workers: 2,
         batch_size: 4,
         ..Default::default()
     };
-    let mut venv = Multiprocessing::new(move |i| envs::make(name, i as u64), cfg)?;
+    let mut venv = Multiprocessing::from_spec(&spec, cfg)?;
     println!(
-        "{name}: {} envs, batch {}, mode {:?}, obs {}B ({} f32), actions {:?}",
+        "{}: {} envs, batch {}, mode {:?}, obs {}B ({} f32), actions {:?}",
+        spec.key(),
         venv.num_envs(),
         venv.batch_size(),
         venv.mode(),

@@ -28,6 +28,7 @@ use pufferlib::train::{TrainConfig, Trainer};
 fn config_for(env: &str) -> TrainConfig {
     let base = TrainConfig {
         env: env.to_string(),
+        wrappers: vec![],
         total_steps: 30_000,
         lr: 3e-3,
         ent_coef: 0.005,

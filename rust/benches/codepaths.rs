@@ -25,7 +25,7 @@ fn main() {
     println!("|{}|{}|", "-".repeat(24), "-".repeat(12));
 
     let serial = measure(
-        Serial::new(mk, VecConfig {
+        Serial::from_factory(mk, VecConfig {
             num_envs: 8,
             num_workers: 1,
             batch_size: 8,
@@ -51,7 +51,7 @@ fn main() {
             zero_copy,
             ..Default::default()
         };
-        let sps = measure(Multiprocessing::new(mk, cfg).unwrap(), secs).unwrap();
+        let sps = measure(Multiprocessing::from_factory(mk, cfg).unwrap(), secs).unwrap();
         println!("| {:<22} | {:>10.0} |", label, sps);
     }
     for (label, make) in [
@@ -91,7 +91,7 @@ fn main() {
             batch_size: num_envs,
             ..Default::default()
         };
-        let puffer = measure(Multiprocessing::new(mk, cfg).unwrap(), secs).unwrap();
+        let puffer = measure(Multiprocessing::from_factory(mk, cfg).unwrap(), secs).unwrap();
         // Gymnasium design: one env per worker, always.
         let gcfg = VecConfig {
             num_envs,

@@ -33,8 +33,8 @@ fn sync_vs_pool(
         ..Default::default()
     };
     let mk2 = mk.clone();
-    let sync = measure(Multiprocessing::new(move |i| mk(i), sync_cfg).unwrap(), secs).unwrap();
-    let pool = measure(Multiprocessing::new(move |i| mk2(i), pool_cfg).unwrap(), secs).unwrap();
+    let sync = measure(Multiprocessing::from_factory(move |i| mk(i), sync_cfg).unwrap(), secs).unwrap();
+    let pool = measure(Multiprocessing::from_factory(move |i| mk2(i), pool_cfg).unwrap(), secs).unwrap();
     (sync, pool)
 }
 

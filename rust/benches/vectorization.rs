@@ -1,6 +1,10 @@
-//! **Bench T2 + C4** — reproduces the paper's Table 2: vectorized
+//! **Bench T2 + C4 + W1** — reproduces the paper's Table 2: vectorized
 //! throughput of PufferLib (sync), Puffer Pool (EnvPool), and the
-//! Gymnasium / SB3 baseline designs, across the profiled environments.
+//! Gymnasium / SB3 baseline designs, across the profiled environments —
+//! plus the wrapper-overhead cell (W1): an obs-stacking chain over
+//! `profile/atari` through the ZeroCopy path versus the unwrapped
+//! baseline, which must stay within a few percent because wrappers
+//! operate in place on the shared slabs.
 //!
 //! One host column (the paper had desktop + laptop); the quantity that
 //! must reproduce is the *ordering and ratios* between implementations,
@@ -8,12 +12,16 @@
 //!
 //! `cargo bench --bench vectorization [-- env-substring]`
 //! `PUFFER_BENCH_SECS` per-cell budget (default 2.0).
+//! `PUFFER_BENCH_JSON` write machine-readable results to this path
+//! (`make bench` sets it to `BENCH_vector.json`).
 
 use pufferlib::emulation::FlatEnv;
 use pufferlib::envs;
+use pufferlib::util::json::{arr, num, obj, s, Json};
 use pufferlib::vector::autotune::measure;
 use pufferlib::vector::baselines::{GymnasiumVec, Sb3Vec};
-use pufferlib::vector::{Multiprocessing, VecConfig, VecEnv};
+use pufferlib::vector::{Mode, Multiprocessing, VecConfig};
+use pufferlib::wrappers::EnvSpec;
 use std::sync::Arc;
 
 type Factory = Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>;
@@ -57,12 +65,12 @@ fn cell(factory: &Factory, backend: &str, num_envs: usize, workers: usize, secs:
         ..Default::default()
     };
     let res = match backend {
-        "puffer" => Multiprocessing::new(mk, sync_cfg).ok().map(|v| measure(v, secs)),
+        "puffer" => Multiprocessing::from_factory(mk, sync_cfg).ok().map(|v| measure(v, secs)),
         "pool" => {
             if pool_cfg.mode().is_err() {
                 return None;
             }
-            Multiprocessing::new(mk, pool_cfg).ok().map(|v| measure(v, secs))
+            Multiprocessing::from_factory(mk, pool_cfg).ok().map(|v| measure(v, secs))
         }
         "gymnasium" => GymnasiumVec::new(mk, sync_cfg).ok().map(|v| measure(v, secs)),
         "sb3" => Sb3Vec::new(mk, sync_cfg).ok().map(|v| measure(v, secs)),
@@ -71,11 +79,33 @@ fn cell(factory: &Factory, backend: &str, num_envs: usize, workers: usize, secs:
     res.and_then(|r| r.ok())
 }
 
+/// W1: obs-stacking wrapper chain over profile/atari on the ZeroCopy
+/// path vs the unwrapped baseline. Returns (unwrapped, wrapped) SPS.
+fn wrapper_overhead(secs: f64) -> Option<(f64, f64)> {
+    let base = || EnvSpec::custom("profile/atari", |i| envs::profile::make_profile_scaled("atari", i as u64, 0.25));
+    let cfg = VecConfig {
+        num_envs: 8,
+        num_workers: 4,
+        batch_size: 4,
+        zero_copy: true,
+        ..Default::default()
+    };
+    let plain = Multiprocessing::from_spec(&base(), cfg.clone()).ok()?;
+    assert_eq!(plain.mode(), Mode::ZeroCopy);
+    let plain_sps = measure(plain, secs).ok()?;
+    let wrapped_spec = base().clip_reward(1.0).stack(4);
+    let wrapped = Multiprocessing::from_spec(&wrapped_spec, cfg).ok()?;
+    assert_eq!(wrapped.mode(), Mode::ZeroCopy);
+    let wrapped_sps = measure(wrapped, secs).ok()?;
+    Some((plain_sps, wrapped_sps))
+}
+
 fn main() {
     let secs: f64 = std::env::var("PUFFER_BENCH_SECS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(2.0);
+    let json_path = std::env::var("PUFFER_BENCH_JSON").ok();
     let filter: Option<String> = std::env::args()
         .skip(1)
         .find(|a| !a.starts_with("--"))
@@ -97,6 +127,7 @@ fn main() {
         "-".repeat(7)
     );
 
+    let mut rows = Vec::new();
     for (name, factory, num_envs, workers) in workloads() {
         if let Some(f) = &filter {
             if !name.to_lowercase().contains(f.as_str()) {
@@ -123,7 +154,55 @@ fn main() {
             fmt(sb3),
             best
         );
+        rows.push((name, puffer, pool, gym, sb3));
     }
+
     println!("\n# C4 note: pokemon row ≈ the paper's §7 Pokémon Red training workload;");
     println!("# compare Puffer Pool vs SB3 columns for the claimed 2-3x.");
+
+    // W1: wrapper overhead on the zero-copy path.
+    let overhead = if filter.is_none() { wrapper_overhead(secs) } else { None };
+    if let Some((plain_sps, wrapped_sps)) = overhead {
+        let pct = (1.0 - wrapped_sps / plain_sps) * 100.0;
+        println!("\n# W1 — wrapper chain (clip_reward=1 + stack=4) over profile/atari, ZeroCopy path");
+        println!("unwrapped: {plain_sps:.0} SPS   wrapped: {wrapped_sps:.0} SPS   overhead: {pct:.1}%");
+        println!("# acceptance: overhead < 5% (wrappers run in place on the shared slabs)");
+    }
+
+    if let Some(path) = json_path {
+        let opt = |x: Option<f64>| x.map(num).unwrap_or(Json::Null);
+        let table2 = rows
+            .into_iter()
+            .map(|(name, puffer, pool, gym, sb3)| {
+                obj(vec![
+                    ("env", s(name)),
+                    ("puffer", opt(puffer)),
+                    ("pool", opt(pool)),
+                    ("gymnasium", opt(gym)),
+                    ("sb3", opt(sb3)),
+                ])
+            })
+            .collect();
+        let w1 = match overhead {
+            Some((plain_sps, wrapped_sps)) => obj(vec![
+                ("env", s("profile/atari")),
+                ("mode", s("ZeroCopy")),
+                ("chain", s("clip_reward=1+stack=4")),
+                ("unwrapped_sps", num(plain_sps)),
+                ("wrapped_sps", num(wrapped_sps)),
+                ("overhead_pct", num((1.0 - wrapped_sps / plain_sps) * 100.0)),
+            ]),
+            None => Json::Null,
+        };
+        let out = obj(vec![
+            ("bench", s("vectorization")),
+            ("secs_per_cell", num(secs)),
+            ("table2", arr(table2)),
+            ("wrapper_overhead", w1),
+        ]);
+        match std::fs::write(&path, out.dump()) {
+            Ok(()) => println!("\n# wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
 }

@@ -224,13 +224,20 @@ impl NativeBackend {
     /// Build a backend for a first-party env: probes the emulated
     /// observation layout / action dims and synthesizes the spec with the
     /// shared rollout geometry (`B_FWD`/`B_ROLL`/`HORIZON`).
+    ///
+    /// `env_name` may be a full [`EnvSpec`](crate::wrappers::EnvSpec) key
+    /// ("ocean/squared+clip_reward=1+stack=4"); the wrapper fragments
+    /// become part of the backend/checkpoint key, and `env` is expected
+    /// to be the *wrapped* probe so the spec is sized from the wrapped
+    /// geometry.
     pub fn for_env(env_name: &str, env: &dyn FlatEnv) -> Result<Self> {
         // Envs whose reference spec (aot.py ENV_SPECS) is recurrent. The
         // native backend trains feedforward only, which cannot solve
         // memory tasks — warn loudly instead of burning the step budget
         // in silence.
         const RECURRENT_REFERENCE_SPECS: &[&str] = &["ocean/memory"];
-        if RECURRENT_REFERENCE_SPECS.contains(&env_name) {
+        let base_name = env_name.split('+').next().unwrap_or(env_name);
+        if RECURRENT_REFERENCE_SPECS.contains(&base_name) {
             eprintln!(
                 "warning: '{env_name}' needs recurrence to be solvable, but the \
                  native backend trains feedforward policies only; expect ~chance \

@@ -5,16 +5,49 @@
 //! Supported YAML subset: nested maps by 2-space indentation, scalar
 //! values (bool/int/float/string), `#` comments, blank lines. That covers
 //! every config this project ships; anything else is a parse error.
+//!
+//! Parsing is **strict**: unknown keys under the `train.` / `wrap.`
+//! namespaces and malformed values are rejected with an error naming the
+//! key — a typo'd `--train.totl_steps=1000` fails loudly instead of
+//! silently training with the default.
 
 mod yaml;
 
 pub use yaml::{parse_yaml, YamlError};
 
 use crate::train::TrainConfig;
+use crate::wrappers::WrapperSpec;
+use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
 
 /// A flat key→scalar view of a config tree ("train.lr" → "0.0025").
 pub type FlatConfig = BTreeMap<String, String>;
+
+/// Recognized keys under `train.` (excluding the `train.wrap.` subtree).
+const TRAIN_KEYS: &[&str] = &[
+    "env",
+    "total_steps",
+    "lr",
+    "ent_coef",
+    "epochs",
+    "anneal_lr",
+    "seed",
+    "num_workers",
+    "pool",
+    "run_dir",
+    "log_every",
+];
+
+/// Recognized wrapper knobs, reachable as `train.wrap.X` (config files)
+/// or `wrap.X` (CLI `--wrap.X=...` overrides).
+const WRAP_KEYS: &[&str] = &[
+    "clip_reward",
+    "scale_reward",
+    "normalize_obs",
+    "stack",
+    "time_limit",
+    "action_repeat",
+];
 
 /// Apply `--a.b=c`-style CLI overrides onto a flat config. Returns the
 /// list of unrecognized args (for the caller to reject or pass on).
@@ -35,33 +68,127 @@ pub fn apply_overrides<'a>(
     rest
 }
 
-fn get_parse<T: std::str::FromStr>(cfg: &FlatConfig, key: &str, default: T) -> T {
-    cfg.get(key)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
-}
-
-/// Build a [`TrainConfig`] from a flat config (file + overrides merged).
-/// Unknown keys under `train.` are ignored; everything has a default.
-pub fn train_config(cfg: &FlatConfig) -> TrainConfig {
-    let d = TrainConfig::default();
-    TrainConfig {
-        env: cfg.get("train.env").cloned().unwrap_or(d.env),
-        total_steps: get_parse(cfg, "train.total_steps", d.total_steps),
-        lr: get_parse(cfg, "train.lr", d.lr),
-        ent_coef: get_parse(cfg, "train.ent_coef", d.ent_coef),
-        epochs: get_parse(cfg, "train.epochs", d.epochs),
-        anneal_lr: get_parse(cfg, "train.anneal_lr", d.anneal_lr),
-        seed: get_parse(cfg, "train.seed", d.seed),
-        num_workers: get_parse(cfg, "train.num_workers", d.num_workers),
-        pool: get_parse(cfg, "train.pool", d.pool),
-        run_dir: cfg.get("train.run_dir").cloned(),
-        log_every: get_parse(cfg, "train.log_every", d.log_every),
+/// Parse `cfg[key]`, or take `default` when absent. Malformed values are
+/// an error naming the key — never a silent fallback.
+fn get_parse<T: std::str::FromStr>(cfg: &FlatConfig, key: &str, default: T) -> Result<T> {
+    match cfg.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "config key '{key}': cannot parse value '{v}' as {}",
+                std::any::type_name::<T>()
+            )
+        }),
     }
 }
 
+/// Reject unknown keys in the `train.` and `wrap.` namespaces. Keys in
+/// other namespaces pass through untouched (config files may carry
+/// sections this binary does not own).
+pub fn validate_keys(cfg: &FlatConfig) -> Result<()> {
+    for key in cfg.keys() {
+        if let Some(rest) = key.strip_prefix("train.wrap.").or_else(|| key.strip_prefix("wrap.")) {
+            ensure!(
+                WRAP_KEYS.contains(&rest),
+                "unknown wrapper key '{key}' (known wrapper knobs: {WRAP_KEYS:?})"
+            );
+        } else if let Some(rest) = key.strip_prefix("train.") {
+            ensure!(
+                TRAIN_KEYS.contains(&rest),
+                "unknown config key '{key}' (known train keys: {TRAIN_KEYS:?}, \
+                 plus wrapper knobs under train.wrap: {WRAP_KEYS:?})"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Build the wrapper chain from a flat config. CLI-style `wrap.X` keys
+/// win over file-style `train.wrap.X`.
+///
+/// Config-driven chains use a fixed canonical order, **innermost
+/// first**: `action_repeat`, `time_limit`, `scale_reward`,
+/// `clip_reward`, `normalize_obs`, `stack` — repeats and limits sit at
+/// the env boundary; clipping sees scaled rewards; stacking is outermost
+/// so it stacks normalized observations. Chains needing a different
+/// order are built in code via [`crate::wrappers::EnvSpec`].
+pub fn wrap_config(cfg: &FlatConfig) -> Result<Vec<WrapperSpec>> {
+    let get = |knob: &str| {
+        cfg.get(&format!("wrap.{knob}"))
+            .map(|v| (format!("wrap.{knob}"), v))
+            .or_else(|| cfg.get(&format!("train.wrap.{knob}")).map(|v| (format!("train.wrap.{knob}"), v)))
+    };
+    let parse = |knob: &str| -> Result<Option<(String, f64)>> {
+        match get(knob) {
+            None => Ok(None),
+            // The f32 guard keeps huge-but-finite f64s (1e39) from
+            // casting to infinity downstream and tripping wrapper
+            // constructor asserts instead of a config error.
+            Some((key, v)) => match v.parse::<f64>() {
+                Ok(x) if x.is_finite() && (x as f32).is_finite() => Ok(Some((key, x))),
+                _ => bail!("config key '{key}': cannot parse value '{v}' as a number"),
+            },
+        }
+    };
+
+    let mut out = Vec::new();
+    if let Some((key, x)) = parse("action_repeat")? {
+        ensure!(x >= 1.0 && x.fract() == 0.0, "config key '{key}': expected an integer >= 1, got {x}");
+        if x > 1.0 {
+            out.push(WrapperSpec::ActionRepeat(x as usize));
+        }
+    }
+    if let Some((key, x)) = parse("time_limit")? {
+        ensure!(x >= 1.0 && x.fract() == 0.0, "config key '{key}': expected an integer >= 1, got {x}");
+        out.push(WrapperSpec::TimeLimit(x as u64));
+    }
+    if let Some((_, x)) = parse("scale_reward")? {
+        out.push(WrapperSpec::ScaleReward(x as f32));
+    }
+    if let Some((key, x)) = parse("clip_reward")? {
+        ensure!(x > 0.0, "config key '{key}': clip bound must be positive, got {x}");
+        out.push(WrapperSpec::ClipReward(x as f32));
+    }
+    if let Some((key, v)) = get("normalize_obs") {
+        let on: bool = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("config key '{key}': cannot parse value '{v}' as bool"))?;
+        if on {
+            out.push(WrapperSpec::NormalizeObs);
+        }
+    }
+    if let Some((key, x)) = parse("stack")? {
+        ensure!(x >= 1.0 && x.fract() == 0.0, "config key '{key}': expected an integer >= 1, got {x}");
+        if x > 1.0 {
+            out.push(WrapperSpec::Stack(x as usize));
+        }
+    }
+    Ok(out)
+}
+
+/// Build a [`TrainConfig`] from a flat config (file + overrides merged).
+/// Unknown `train.`/`wrap.` keys and malformed values are errors.
+pub fn train_config(cfg: &FlatConfig) -> Result<TrainConfig> {
+    validate_keys(cfg)?;
+    let d = TrainConfig::default();
+    Ok(TrainConfig {
+        env: cfg.get("train.env").cloned().unwrap_or(d.env),
+        total_steps: get_parse(cfg, "train.total_steps", d.total_steps)?,
+        lr: get_parse(cfg, "train.lr", d.lr)?,
+        ent_coef: get_parse(cfg, "train.ent_coef", d.ent_coef)?,
+        epochs: get_parse(cfg, "train.epochs", d.epochs)?,
+        anneal_lr: get_parse(cfg, "train.anneal_lr", d.anneal_lr)?,
+        seed: get_parse(cfg, "train.seed", d.seed)?,
+        num_workers: get_parse(cfg, "train.num_workers", d.num_workers)?,
+        pool: get_parse(cfg, "train.pool", d.pool)?,
+        run_dir: cfg.get("train.run_dir").cloned(),
+        log_every: get_parse(cfg, "train.log_every", d.log_every)?,
+        wrappers: wrap_config(cfg)?,
+    })
+}
+
 /// Load a config file (if given) and apply CLI overrides.
-pub fn load(path: Option<&str>, args: &[String]) -> anyhow::Result<(FlatConfig, Vec<String>)> {
+pub fn load(path: Option<&str>, args: &[String]) -> Result<(FlatConfig, Vec<String>)> {
     let mut flat = match path {
         Some(p) => {
             let text = std::fs::read_to_string(p)
@@ -97,18 +224,87 @@ mod tests {
         cfg.insert("train.env".into(), "ocean/memory".into());
         cfg.insert("train.total_steps".into(), "50000".into());
         cfg.insert("train.pool".into(), "true".into());
-        let tc = train_config(&cfg);
+        let tc = train_config(&cfg).unwrap();
         assert_eq!(tc.env, "ocean/memory");
         assert_eq!(tc.total_steps, 50_000);
         assert!(tc.pool);
         assert_eq!(tc.epochs, TrainConfig::default().epochs);
+        assert!(tc.wrappers.is_empty());
     }
 
     #[test]
-    fn bad_values_fall_back_to_default() {
+    fn bad_values_are_rejected_naming_the_key() {
         let mut cfg = FlatConfig::new();
         cfg.insert("train.lr".into(), "banana".into());
-        let tc = train_config(&cfg);
-        assert_eq!(tc.lr, TrainConfig::default().lr);
+        let err = train_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("train.lr"), "{err}");
+        assert!(err.contains("banana"), "{err}");
+    }
+
+    #[test]
+    fn unknown_train_keys_are_rejected() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.totl_steps".into(), "1000".into());
+        let err = train_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("train.totl_steps"), "{err}");
+        // Other namespaces pass through untouched.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("eval.episodes".into(), "5".into());
+        assert!(train_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn wrap_keys_build_the_canonical_chain() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("wrap.clip_reward".into(), "1.0".into());
+        cfg.insert("wrap.stack".into(), "4".into());
+        cfg.insert("train.wrap.action_repeat".into(), "2".into());
+        let tc = train_config(&cfg).unwrap();
+        assert_eq!(
+            tc.wrappers,
+            vec![
+                WrapperSpec::ActionRepeat(2),
+                WrapperSpec::ClipReward(1.0),
+                WrapperSpec::Stack(4),
+            ]
+        );
+    }
+
+    #[test]
+    fn wrap_cli_alias_wins_over_file_key() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.wrap.stack".into(), "2".into());
+        cfg.insert("wrap.stack".into(), "8".into());
+        let ws = wrap_config(&cfg).unwrap();
+        assert_eq!(ws, vec![WrapperSpec::Stack(8)]);
+    }
+
+    #[test]
+    fn wrap_validation_rejects_bad_knobs() {
+        for (k, v) in [
+            ("wrap.stack", "0.5"),
+            ("wrap.clip_reward", "-1"),
+            ("wrap.clip_reward", "1e39"), // finite f64, infinite f32
+            ("wrap.time_limit", "0"),
+            ("wrap.action_repeat", "x"),
+            ("wrap.normalize_obs", "maybe"),
+        ] {
+            let mut cfg = FlatConfig::new();
+            cfg.insert(k.into(), v.into());
+            let err = wrap_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(k), "{k}: {err}");
+        }
+        let mut cfg = FlatConfig::new();
+        cfg.insert("wrap.stak".into(), "4".into());
+        assert!(validate_keys(&cfg).unwrap_err().to_string().contains("wrap.stak"));
+    }
+
+    #[test]
+    fn identity_wrap_values_produce_no_wrappers() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("wrap.stack".into(), "1".into());
+        cfg.insert("wrap.action_repeat".into(), "1".into());
+        cfg.insert("wrap.normalize_obs".into(), "false".into());
+        assert!(wrap_config(&cfg).unwrap().is_empty());
     }
 }

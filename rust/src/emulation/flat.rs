@@ -9,7 +9,9 @@ use crate::spaces::{Space, StructLayout};
 /// actions are flat `i32` slot vectors. Produced by wrapping a
 /// [`StructuredEnv`](super::StructuredEnv) in
 /// [`PufferEnv`](super::PufferEnv) (or the multiagent analog); implemented
-/// directly only by envs that are natively flat.
+/// directly only by envs that are natively flat — and by
+/// [`Wrapped`](crate::wrappers::Wrapped), which layers in-place
+/// microwrappers over any `FlatEnv` while preserving this contract.
 ///
 /// ### Buffer contract
 ///

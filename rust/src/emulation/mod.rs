@@ -12,6 +12,11 @@
 //! - Vectorization ([`crate::vector`]) operates **only** on [`FlatEnv`] —
 //!   the "hard assumption on PufferLib emulation" that makes shared-memory
 //!   and zero-copy batching possible (paper §3.3).
+//! - Behavioral postprocessing (reward clipping/scaling, obs
+//!   normalization/stacking, time limits, action repeat) does **not**
+//!   live here: it composes over [`FlatEnv`] as microwrappers declared
+//!   through [`EnvSpec`](crate::wrappers::EnvSpec) (see
+//!   [`crate::wrappers`]), keeping this layer a pure flattening bridge.
 
 mod flat;
 mod multi;

@@ -172,10 +172,7 @@ impl<E: StructuredMultiEnv> FlatEnv for PufferMultiEnv<E> {
         if step.episode_over {
             self.stats.emit(&mut info);
             info.push(("num_agents", n as f64));
-            self.episode_seed = self
-                .episode_seed
-                .wrapping_mul(6364136223846793005)
-                .wrapping_add(1);
+            self.episode_seed = crate::util::rng::next_episode_seed(self.episode_seed);
             let first = self.env.reset(self.episode_seed);
             self.write_rows(first, obs_out);
         } else {

@@ -117,7 +117,7 @@ impl<E: StructuredEnv> FlatEnv for PufferEnv<E> {
             // Auto-reset: surface episode stats, then write the next
             // episode's first observation.
             self.stats.emit(&mut info);
-            self.episode_seed = self.episode_seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            self.episode_seed = crate::util::rng::next_episode_seed(self.episode_seed);
             let first = self.env.reset(self.episode_seed);
             self.write_obs(&first, obs_out);
         } else {

@@ -63,6 +63,25 @@ pub const OCEAN_ENVS: &[&str] = &[
 /// profile-sim timing streams); episode randomness comes from the
 /// `reset(seed)` calls issued by the vectorizer.
 pub fn make(name: &str, seed: u64) -> Box<dyn FlatEnv> {
+    make_scaled(name, seed, profile::DEFAULT_TIME_SCALE)
+}
+
+/// As [`make`], with a time-scale knob for the `profile/*` simulators
+/// (ignored by every other env): all simulated step/reset costs are
+/// multiplied by `profile_time_scale`. Tests shrink it so the slowest
+/// profiles (Crafter's 1.25 s resets, Pokémon's 1.4 ms steps) can be
+/// exercised in milliseconds; relative behavior is unaffected because
+/// every simulated cost scales together (DESIGN.md §Substitutions).
+pub fn make_scaled(name: &str, seed: u64, profile_time_scale: f64) -> Box<dyn FlatEnv> {
+    if let Some(profile_name) = name.strip_prefix("profile/") {
+        if !ALL_ENVS.contains(&name) {
+            panic!(
+                "unknown first-party env '{name}'. First-party names: {ALL_ENVS:?}. \
+                 Custom envs need no registry: wrap them with PufferEnv::new directly."
+            );
+        }
+        return profile::make_profile_scaled(profile_name, seed, profile_time_scale);
+    }
     match name {
         "ocean/squared" => Box::new(PufferEnv::new(ocean::Squared::new(11, seed))),
         // Password/Bandit hide a *static* secret (paper §4) — it must be
@@ -77,14 +96,6 @@ pub fn make(name: &str, seed: u64) -> Box<dyn FlatEnv> {
         "classic/cartpole" => Box::new(PufferEnv::new(classic::CartPole::new(200))),
         "classic/minigrid" => Box::new(PufferEnv::new(classic::MiniGrid::new(7))),
         "classic/breakout" => Box::new(PufferEnv::new(classic::Breakout::new())),
-        "profile/nethack" => profile::make_profile("nethack", seed),
-        "profile/minihack" => profile::make_profile("minihack", seed),
-        "profile/nmmo" => profile::make_profile("nmmo", seed),
-        "profile/pokemon" => profile::make_profile("pokemon", seed),
-        "profile/procgen" => profile::make_profile("procgen", seed),
-        "profile/atari" => profile::make_profile("atari", seed),
-        "profile/crafter" => profile::make_profile("crafter", seed),
-        "profile/minigrid" => profile::make_profile("minigrid", seed),
         other => panic!(
             "unknown first-party env '{other}'. First-party names: {ALL_ENVS:?}. \
              Custom envs need no registry: wrap them with PufferEnv::new directly."
@@ -99,11 +110,10 @@ mod tests {
     #[test]
     fn all_first_party_envs_construct_and_step() {
         for name in ALL_ENVS {
-            // Keep profile sims fast in tests by skipping the slowest two.
-            if *name == "profile/crafter" || *name == "profile/pokemon" {
-                continue;
-            }
-            let mut env = make(name, 1);
+            // Shrink the profile sims' simulated time by 1000x so even
+            // Crafter (1.25s resets) and Pokémon (1.4ms steps) are
+            // covered without dominating the test wall-clock.
+            let mut env = make_scaled(name, 1, 1e-3);
             let rows = env.num_agents();
             let w = env.obs_layout().byte_len();
             let slots = env.action_dims().len();
@@ -123,5 +133,11 @@ mod tests {
     #[should_panic(expected = "unknown first-party env")]
     fn unknown_name_panics_helpfully() {
         make("atari/breakout-v5", 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown first-party env")]
+    fn unknown_profile_name_panics_helpfully() {
+        make("profile/doom", 0);
     }
 }

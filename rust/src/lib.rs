@@ -26,31 +26,50 @@
 //!
 //! ## Quickstart
 //!
+//! Environment construction is an [`EnvSpec`](wrappers::EnvSpec): a base
+//! env plus a composable chain of microwrappers ([`wrappers`]) that
+//! transform the packed byte rows in place — reward clipping/scaling,
+//! running obs normalization, obs stacking, time limits, action repeat.
+//! The spec is the currency every layer consumes: the vectorizers, the
+//! trainer, the autotuner, and the `puffer` CLI (`--wrap.clip_reward=1
+//! --wrap.stack=4`).
+//!
 //! ```no_run
 //! use pufferlib::prelude::*;
 //!
-//! // Wrap a structured env so it "looks like Atari" (flat obs, one
-//! // MultiDiscrete action), then vectorize it.
+//! // Base env + wrapper chain (applied innermost first). Stacking widens
+//! // the advertised rows, and the vectorizer's shared slabs size
+//! // themselves from the wrapped layout automatically.
+//! let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4);
 //! let cfg = VecConfig { num_envs: 8, num_workers: 2, batch_size: 8, ..Default::default() };
-//! let mut venv = Multiprocessing::new(
-//!     |i| -> Box<dyn FlatEnv> {
-//!         Box::new(PufferEnv::new(pufferlib::envs::ocean::Squared::new(11, i as u64)))
-//!     },
-//!     cfg,
-//! ).unwrap();
+//! let mut venv = Multiprocessing::from_spec(&spec, cfg).unwrap();
 //! let (obs, _rewards, _terms, _truncs, _infos) = venv.reset(0).unwrap();
 //! assert_eq!(obs.len(), 8 * venv.obs_layout().byte_len());
 //! ```
 //!
-//! Training end to end needs nothing beyond the crate:
+//! Custom envs need one `PufferEnv::new` and slot into the same pipeline
+//! via [`EnvSpec::custom`](wrappers::EnvSpec::custom) (see
+//! `examples/custom_env.rs`). Training end to end needs nothing beyond
+//! the crate:
 //!
 //! ```no_run
 //! use pufferlib::train::{TrainConfig, Trainer};
+//! use pufferlib::wrappers::WrapperSpec;
 //!
-//! let cfg = TrainConfig { env: "ocean/bandit".into(), total_steps: 16_000, ..Default::default() };
+//! let cfg = TrainConfig {
+//!     env: "ocean/bandit".into(),
+//!     total_steps: 16_000,
+//!     wrappers: vec![WrapperSpec::ClipReward(1.0)],
+//!     ..Default::default()
+//! };
 //! let report = Trainer::native(cfg).unwrap().train().unwrap();
 //! println!("score: {:?}", report.mean_score);
 //! ```
+//!
+//! Constructing the vectorizers from bare factory closures
+//! (`Serial::new`, `Multiprocessing::new`) is deprecated; use
+//! `from_spec`, or `from_factory` for the rare case a closure is really
+//! needed.
 
 pub mod backend;
 pub mod config;
@@ -62,6 +81,7 @@ pub mod spaces;
 pub mod train;
 pub mod util;
 pub mod vector;
+pub mod wrappers;
 
 /// Convenience re-exports covering the most common entry points.
 pub mod prelude {
@@ -70,4 +90,5 @@ pub mod prelude {
     pub use crate::spaces::{Space, StructLayout, Value};
     pub use crate::util::rng::Rng;
     pub use crate::vector::{Multiprocessing, Serial, StepBatch, VecConfig, VecEnv};
+    pub use crate::wrappers::{EnvSpec, Wrapper, WrapperSpec};
 }

@@ -2,12 +2,17 @@
 //! a CLI for all included PufferLib environments, clean YAML configs").
 //!
 //! ```text
-//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--backend=native|pjrt] ...
+//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] ...
 //! puffer eval <env> --checkpoint runs/x/checkpoint.bin [--episodes 20]
 //! puffer sweep                      # train the whole Ocean suite
-//! puffer autotune <env> [--envs 8] [--workers 4] [--secs 1.0]
+//! puffer autotune <env> [--envs 8] [--workers 4] [--secs 1.0] [--wrap.* ...]
 //! puffer envs                       # list first-party environments
 //! ```
+//!
+//! `--wrap.*` overrides compose the one-line wrapper pipeline onto the
+//! env (innermost first: action_repeat, time_limit, scale_reward,
+//! clip_reward, normalize_obs, stack), e.g.
+//! `puffer train ocean/squared --wrap.clip_reward=1.0 --wrap.stack=4`.
 //!
 //! The default backend is the pure-Rust `NativeBackend` (no artifacts, no
 //! Python). `--backend=pjrt` selects the AOT/PJRT path; it requires a
@@ -18,7 +23,7 @@ use pufferlib::config;
 use pufferlib::envs;
 use pufferlib::train::{Checkpoint, TrainConfig, Trainer};
 use pufferlib::vector::autotune;
-use std::sync::Arc;
+use pufferlib::wrappers::EnvSpec;
 
 #[cfg(feature = "pjrt")]
 const ARTIFACTS: &str = "artifacts";
@@ -60,13 +65,16 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
-         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--backend=native|pjrt]\n  \
+         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--backend=native|pjrt]\n  \
          puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
          puffer sweep [--train.KEY=VAL ...]        train the whole Ocean suite\n  \
-         puffer autotune <env> [--envs=N] [--workers=W] [--secs=S]\n  \
+         puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--wrap.KEY=VAL ...]\n  \
          puffer envs                               list first-party envs\n\n\
          Train keys: env total_steps lr ent_coef epochs anneal_lr seed\n\
-         \x20           num_workers pool run_dir log_every\n\n\
+         \x20           num_workers pool run_dir log_every\n\
+         Wrap keys (one-line wrapper pipeline, applied innermost-first in\n\
+         \x20 this order): action_repeat time_limit scale_reward clip_reward\n\
+         \x20 normalize_obs stack — e.g. --wrap.clip_reward=1.0 --wrap.stack=4\n\n\
          Backends: native (default, pure Rust) | pjrt (AOT artifacts;\n\
          \x20         needs a build with --features pjrt and `make artifacts`)"
     );
@@ -88,6 +96,32 @@ fn split_args(args: &[String]) -> (Option<String>, Vec<String>, Vec<String>) {
         }
     }
     (cfg_file, positional, overrides)
+}
+
+/// Reject `--key=value` overrides outside the namespaces this command
+/// owns. Without this, a typo'd `--clip_reward=1` (missing the `wrap.`
+/// prefix) or `--trian.lr=3e-3` would be silently ignored — the same
+/// footgun the strict config parser closes for key *suffixes*.
+fn reject_stray_overrides(overrides: &[String], allowed: &[&str]) -> Result<()> {
+    for a in overrides {
+        if let Some(body) = a.strip_prefix("--") {
+            let key = body.split('=').next().unwrap_or(body);
+            if !allowed.iter().any(|ns| key.starts_with(ns)) {
+                let expected: Vec<String> = allowed.iter().map(|ns| format!("--{ns}KEY=VAL")).collect();
+                anyhow::bail!(
+                    "unrecognized flag '--{key}...': this command accepts {}",
+                    expected.join(" and ")
+                );
+            }
+            // Space-separated values (`--wrap.stack 4`) would otherwise
+            // be dropped without effect by the override parser.
+            anyhow::ensure!(
+                body.contains('='),
+                "flag '--{key}' is missing a value: use --{key}=VALUE"
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Pull `--backend=...` out of the override list (default: native).
@@ -128,14 +162,17 @@ fn pjrt_trainer(_tc: TrainConfig) -> Result<Trainer> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let (cfg_file, positional, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
+    reject_stray_overrides(&overrides, &["train.", "wrap."])?;
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
     }
-    let tc = config::train_config(&flat);
+    let tc = config::train_config(&flat)?;
+    let spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
     println!(
         "training {} for {} steps ({backend} backend) ...",
-        tc.env, tc.total_steps
+        spec.key(),
+        tc.total_steps
     );
     let mut trainer = make_trainer(tc, &backend)?;
     let report = trainer.train()?;
@@ -173,11 +210,12 @@ fn cmd_eval(args: &[String]) -> Result<()> {
             true
         }
     });
+    reject_stray_overrides(&overrides, &["train.", "wrap."])?;
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
     }
-    let tc = config::train_config(&flat);
+    let tc = config::train_config(&flat)?;
     let mut trainer = make_trainer(tc, &backend)?;
     if let Some(ck_path) = checkpoint {
         let ck = Checkpoint::load(&ck_path).context("loading checkpoint")?;
@@ -203,11 +241,12 @@ fn cmd_eval(args: &[String]) -> Result<()> {
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let (cfg_file, _, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
+    reject_stray_overrides(&overrides, &["train.", "wrap."])?;
     let mut solved = 0;
     for env in envs::OCEAN_ENVS {
         let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
         flat.insert("train.env".into(), env.to_string());
-        let tc = config::train_config(&flat);
+        let tc = config::train_config(&flat)?;
         let mut trainer = make_trainer(tc, &backend)?;
         let report = trainer.train()?;
         let score = report.mean_score.unwrap_or(0.0);
@@ -235,20 +274,29 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     let mut num_envs = 8;
     let mut workers = 4;
     let mut secs = 1.0f64;
-    for a in &overrides {
+    let mut wrap_overrides = Vec::new();
+    for a in overrides {
         if let Some(v) = a.strip_prefix("--envs=") {
-            num_envs = v.parse().unwrap_or(8);
+            num_envs = v.parse().map_err(|_| anyhow::anyhow!("--envs: cannot parse '{v}'"))?;
         } else if let Some(v) = a.strip_prefix("--workers=") {
-            workers = v.parse().unwrap_or(4);
+            workers = v.parse().map_err(|_| anyhow::anyhow!("--workers: cannot parse '{v}'"))?;
         } else if let Some(v) = a.strip_prefix("--secs=") {
-            secs = v.parse().unwrap_or(1.0);
+            secs = v.parse().map_err(|_| anyhow::anyhow!("--secs: cannot parse '{v}'"))?;
+        } else {
+            wrap_overrides.push(a);
         }
     }
-    println!("autotuning {env} with {num_envs} envs (≤{workers} workers, {secs}s per config) ...");
-    let env_name = env.clone();
-    let factory: Arc<dyn Fn(usize) -> Box<dyn pufferlib::emulation::FlatEnv> + Send + Sync> =
-        Arc::new(move |i| envs::make(&env_name, i as u64));
-    let results = autotune::autotune(factory, num_envs, workers, secs)?;
+    // Remaining overrides are --wrap.* knobs: tune with the exact
+    // pipeline you will train with.
+    reject_stray_overrides(&wrap_overrides, &["wrap."])?;
+    let (flat, _) = config::load(None, &wrap_overrides)?;
+    config::validate_keys(&flat)?;
+    let spec = EnvSpec::new(env.as_str()).with_wrappers(config::wrap_config(&flat)?);
+    println!(
+        "autotuning {} with {num_envs} envs (≤{workers} workers, {secs}s per config) ...",
+        spec.key()
+    );
+    let results = autotune::autotune(&spec, num_envs, workers, secs)?;
     print!("{}", autotune::format_results(&results));
     println!(
         "\nrecommended: {} (num_workers={}, batch_size={}, zero_copy={})",

@@ -278,7 +278,6 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::envs;
     use crate::policy::PolicyOut;
     use crate::vector::{Multiprocessing, Serial, VecConfig};
 
@@ -303,7 +302,8 @@ mod tests {
             batch_size: 4,
             ..Default::default()
         };
-        let mut v = Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg).unwrap();
+        let mut v =
+            Serial::from_spec(&crate::wrappers::EnvSpec::new("classic/cartpole"), cfg).unwrap();
         let d = v.obs_layout().flat_len();
         let slots = v.action_dims().len();
         let mut buf = RolloutBuffer::new(8, 4, d, slots);
@@ -343,7 +343,7 @@ mod tests {
             batch_size: 2,
             ..Default::default()
         };
-        let mut v = Multiprocessing::new(factory, cfg).unwrap();
+        let mut v = Multiprocessing::from_factory(factory, cfg).unwrap();
         let d = v.obs_layout().flat_len();
         let slots = v.action_dims().len();
         let mut buf = RolloutBuffer::new(6, 4, d, slots);

@@ -7,10 +7,10 @@
 use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 use super::Checkpoint;
 use crate::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
-use crate::envs;
 use crate::policy::Policy;
 use crate::util::timer::SpsCounter;
 use crate::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
+use crate::wrappers::{EnvSpec, WrapperSpec};
 use anyhow::Result;
 use std::io::Write as _;
 
@@ -20,6 +20,11 @@ use std::io::Write as _;
 pub struct TrainConfig {
     /// First-party env name, e.g. "ocean/squared".
     pub env: String,
+    /// Wrapper chain applied over the env, innermost first (the
+    /// `train.wrap.*` config keys / `--wrap.*` CLI overrides). The whole
+    /// pipeline — probe, backend spec, vectorizer slabs — sizes itself
+    /// from the wrapped geometry.
+    pub wrappers: Vec<WrapperSpec>,
     /// Total environment interactions to train for.
     pub total_steps: u64,
     pub lr: f32,
@@ -43,6 +48,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             env: "ocean/squared".into(),
+            wrappers: Vec::new(),
             total_steps: 30_000,
             lr: 2.5e-3,
             ent_coef: 0.01,
@@ -93,11 +99,20 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// The env + wrapper-chain spec this config describes — what every
+    /// construction path (probe, backend, vectorizer) builds from.
+    fn env_spec(cfg: &TrainConfig) -> EnvSpec {
+        EnvSpec::new(cfg.env.as_str()).with_wrappers(cfg.wrappers.iter().cloned())
+    }
+
     /// Train with the default pure-Rust [`NativeBackend`]: no artifacts,
-    /// no Python, no native dependencies.
+    /// no Python, no native dependencies. The backend spec is sized from
+    /// the *wrapped* env (stacking widens `obs_dim`), and its key embeds
+    /// the wrapper chain so checkpoints never cross chains silently.
     pub fn native(cfg: TrainConfig) -> Result<Self> {
-        let probe = envs::make(&cfg.env, cfg.seed);
-        let backend = NativeBackend::for_env(&cfg.env, probe.as_ref())?;
+        let spec = Self::env_spec(&cfg);
+        let probe = spec.build(0);
+        let backend = NativeBackend::for_env(&spec.key(), probe.as_ref())?;
         Self::build(cfg, Box::new(backend), probe)
     }
 
@@ -105,6 +120,11 @@ impl Trainer {
     /// `make artifacts`).
     #[cfg(feature = "pjrt")]
     pub fn pjrt(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.wrappers.is_empty(),
+            "the pjrt backend executes AOT-compiled specs with fixed shapes; \
+             wrapper chains are supported on the native backend only for now"
+        );
         let key = crate::runtime::Manifest::spec_key_for_env(&cfg.env);
         let backend = crate::backend::PjrtBackend::new(artifacts_dir, &key)?;
         Self::with_backend(cfg, Box::new(backend))
@@ -112,7 +132,7 @@ impl Trainer {
 
     /// Train with any [`PolicyBackend`].
     pub fn with_backend(cfg: TrainConfig, backend: Box<dyn PolicyBackend>) -> Result<Self> {
-        let probe = envs::make(&cfg.env, cfg.seed);
+        let probe = Self::env_spec(&cfg).build(0);
         Self::build(cfg, backend, probe)
     }
 
@@ -155,11 +175,12 @@ impl Trainer {
         let num_envs = spec.batch_roll / agents;
 
         // Vectorizer: sync (batch = all) or pooled (batch = half, M = 2N).
-        let env_name = cfg.env.clone();
-        let factory = move |i: usize| envs::make(&env_name, i as u64);
+        // Built from the same EnvSpec as the probe, so the worker slabs
+        // use the wrapped layout.
+        let env_spec = Self::env_spec(&cfg);
         let venv: Box<dyn VecEnv> = if cfg.num_workers == 0 {
-            Box::new(Serial::new(
-                factory,
+            Box::new(Serial::from_spec(
+                &env_spec,
                 VecConfig {
                     num_envs,
                     num_workers: 1,
@@ -171,8 +192,8 @@ impl Trainer {
         } else {
             let workers = pick_workers(num_envs, cfg.num_workers, cfg.pool);
             let batch = if cfg.pool { num_envs / 2 } else { num_envs };
-            Box::new(Multiprocessing::new(
-                factory,
+            Box::new(Multiprocessing::from_spec(
+                &env_spec,
                 VecConfig {
                     num_envs,
                     num_workers: workers,
@@ -514,6 +535,25 @@ mod tests {
         assert_eq!(pick_workers(7, 4, false), 1);
         // pool: batch 16, envs 32, w=4 → epw 8, 16 % 8 == 0 ✓
         assert_eq!(pick_workers(32, 3, true), 2);
+    }
+
+    #[test]
+    fn trainer_sizes_backend_from_wrapped_spec() {
+        let bare = crate::envs::make("ocean/squared", 0);
+        let bare_dim = bare.obs_layout().flat_len();
+        drop(bare);
+        let cfg = TrainConfig {
+            env: "ocean/squared".into(),
+            wrappers: vec![WrapperSpec::ClipReward(1.0), WrapperSpec::Stack(4)],
+            total_steps: 0, // construct only
+            log_every: 0,
+            ..Default::default()
+        };
+        let t = Trainer::native(cfg).unwrap();
+        assert_eq!(t.policy().spec().obs_dim, 4 * bare_dim);
+        // The chain is part of the checkpoint key: a differently-wrapped
+        // run can never silently restore these params.
+        assert!(t.spec_key.contains("stack=4"), "{}", t.spec_key);
     }
 
     #[test]

@@ -16,6 +16,14 @@ pub struct Rng {
 
 const PCG_MULT: u128 = 0xda94_2042_e4dd_58b5;
 
+/// Advance the per-episode seed stream used by every auto-resetting
+/// layer (`PufferEnv`, `PufferMultiEnv`, wrapper-forced truncation): one
+/// LCG step. A single shared discipline keeps wrapped and bare envs
+/// trace-comparable across backends.
+pub fn next_episode_seed(seed: u64) -> u64 {
+    seed.wrapping_mul(6364136223846793005).wrapping_add(1)
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed. Distinct seeds give
     /// independent-looking streams.

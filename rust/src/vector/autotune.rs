@@ -5,6 +5,7 @@
 use super::{Multiprocessing, Serial, VecConfig, VecEnv};
 use crate::emulation::FlatEnv;
 use crate::util::timer::Timer;
+use crate::wrappers::EnvSpec;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -20,11 +21,14 @@ pub struct TuneResult {
 /// Benchmark every valid backend/code-path combination for `duration`
 /// seconds each and return results sorted best-first.
 ///
+/// The candidate env (including any wrapper chain — tuning with the
+/// exact pipeline you will train with matters, since e.g. stacking
+/// changes the bytes moved per step) is described by an [`EnvSpec`].
 /// `num_envs` is the env budget; worker counts and batch sizes are swept
 /// over the divisors that produce each of the four code paths plus the
 /// serial baseline.
 pub fn autotune(
-    factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>,
+    spec: &EnvSpec,
     num_envs: usize,
     max_workers: usize,
     duration_secs: f64,
@@ -33,14 +37,13 @@ pub fn autotune(
 
     // Serial reference.
     {
-        let f = factory.clone();
         let cfg = VecConfig {
             num_envs,
             num_workers: 1,
             batch_size: num_envs,
             ..Default::default()
         };
-        let v = Serial::new(move |i| f(i), cfg.clone())?;
+        let v = Serial::from_spec(spec, cfg.clone())?;
         let sps = measure(v, duration_secs)?;
         results.push(TuneResult {
             label: "serial".into(),
@@ -67,7 +70,6 @@ pub fn autotune(
             }
         }
         for (batch, zero_copy, label) in candidates {
-            let f = factory.clone();
             let cfg = VecConfig {
                 num_envs,
                 num_workers: workers,
@@ -78,7 +80,7 @@ pub fn autotune(
             if cfg.mode().is_err() {
                 continue;
             }
-            let v = Multiprocessing::new(move |i| f(i), cfg.clone())?;
+            let v = Multiprocessing::from_spec(spec, cfg.clone())?;
             let sps = measure(v, duration_secs)?;
             results.push(TuneResult { label, cfg, sps });
         }
@@ -86,6 +88,18 @@ pub fn autotune(
 
     results.sort_by(|a, b| b.sps.partial_cmp(&a.sps).unwrap());
     Ok(results)
+}
+
+/// Legacy entry point taking a raw factory.
+#[deprecated(since = "0.2.0", note = "describe the env with an EnvSpec and call `autotune`")]
+pub fn autotune_factory(
+    factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>,
+    num_envs: usize,
+    max_workers: usize,
+    duration_secs: f64,
+) -> Result<Vec<TuneResult>> {
+    let spec = EnvSpec::custom("custom", move |i| factory(i));
+    autotune(&spec, num_envs, max_workers, duration_secs)
 }
 
 /// Drive a backend with no-op actions for `secs`, returning env-steps/sec.
@@ -136,9 +150,8 @@ mod tests {
 
     #[test]
     fn autotune_covers_code_paths_and_ranks() {
-        let factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync> =
-            Arc::new(|i| envs::make("ocean/squared", i as u64));
-        let results = autotune(factory, 4, 2, 0.05).unwrap();
+        let spec = EnvSpec::new("ocean/squared");
+        let results = autotune(&spec, 4, 2, 0.05).unwrap();
         assert!(results.len() >= 3, "too few candidates: {results:?}");
         // Sorted best-first.
         for pair in results.windows(2) {
@@ -148,5 +161,14 @@ mod tests {
         assert!(results.iter().any(|r| r.label == "serial"));
         let table = format_results(&results);
         assert!(table.contains("serial"));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_factory_entry_point_still_tunes() {
+        let factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync> =
+            Arc::new(|i| envs::make("ocean/squared", i as u64));
+        let results = autotune_factory(factory, 2, 1, 0.02).unwrap();
+        assert!(!results.is_empty());
     }
 }

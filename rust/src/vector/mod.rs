@@ -39,6 +39,11 @@ use anyhow::Result;
 
 /// Factory that builds env instance `i` of `num_envs`. Must be callable
 /// from worker threads.
+///
+/// This is the low-level form; the public construction currency is
+/// [`EnvSpec`](crate::wrappers::EnvSpec) (`Serial::from_spec`,
+/// `Multiprocessing::from_spec`), which carries the wrapper chain and
+/// converts to a factory internally.
 pub type EnvFactory = Box<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>;
 
 /// Vectorization settings.

@@ -19,6 +19,7 @@ use super::shared::{Flag, Slab, ACTIONS_READY, OBS_READY, POISONED, RESET, SHUTD
 use super::{probe_factory, EnvFactory, Mode, StepBatch, VecConfig, VecEnv};
 use crate::emulation::{FlatEnv, Info};
 use crate::spaces::StructLayout;
+use crate::wrappers::EnvSpec;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -62,11 +63,35 @@ pub struct Multiprocessing {
 }
 
 impl Multiprocessing {
+    /// Build from a composable [`EnvSpec`] — the preferred constructor.
+    /// Every worker instantiates its own envs (and wrapper state) from
+    /// the spec, so wrapper chains need no cross-thread synchronization.
+    pub fn from_spec(spec: &EnvSpec, cfg: VecConfig) -> Result<Self> {
+        Self::from_factory_box(spec.to_factory(), cfg)
+    }
+
+    /// Low-level escape hatch: build from a raw factory closure. Prefer
+    /// [`from_spec`](Self::from_spec); for custom envs see
+    /// [`EnvSpec::custom`].
+    pub fn from_factory(
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+        cfg: VecConfig,
+    ) -> Result<Self> {
+        Self::from_factory_box(Box::new(factory), cfg)
+    }
+
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through an EnvSpec (`Multiprocessing::from_spec`), or use `from_factory`"
+    )]
     pub fn new(
         factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
         cfg: VecConfig,
     ) -> Result<Self> {
-        let factory: EnvFactory = Box::new(factory);
+        Self::from_factory(factory, cfg)
+    }
+
+    fn from_factory_box(factory: EnvFactory, cfg: VecConfig) -> Result<Self> {
         let mode = cfg.mode()?;
         let (layout, action_dims, agents) = probe_factory(&factory);
         let w = layout.byte_len();
@@ -556,7 +581,6 @@ fn worker_loop(ctx: WorkerCtx) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::envs;
     use crate::spaces::{Space, Value};
 
     fn cfg(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) -> VecConfig {
@@ -589,28 +613,28 @@ mod tests {
 
     #[test]
     fn sync_path() {
-        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 2, 8, false)).unwrap();
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 2, 8, false)).unwrap();
         assert_eq!(v.mode(), Mode::Sync);
         drive(v, 30);
     }
 
     #[test]
     fn async_path() {
-        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 4, 4, false)).unwrap();
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 4, 4, false)).unwrap();
         assert_eq!(v.mode(), Mode::Async);
         drive(v, 30);
     }
 
     #[test]
     fn async_single_worker_path() {
-        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 4, 2, false)).unwrap();
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 4, 2, false)).unwrap();
         assert_eq!(v.mode(), Mode::AsyncSingleWorker);
         drive(v, 30);
     }
 
     #[test]
     fn zero_copy_path() {
-        let v = Multiprocessing::new(|i| envs::make("ocean/squared", i as u64), cfg(8, 4, 4, true)).unwrap();
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 4, 4, true)).unwrap();
         assert_eq!(v.mode(), Mode::ZeroCopy);
         drive(v, 30);
     }
@@ -669,9 +693,11 @@ mod tests {
     /// Actions sent for env e must arrive at env e, and its obs row must
     /// come back in the position its env_id claims — on every path.
     fn routing_check(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) {
-        let mut v =
-            Multiprocessing::new(tracer_factory, cfg(num_envs, num_workers, batch_size, zero_copy))
-                .unwrap();
+        let mut v = Multiprocessing::from_factory(
+            tracer_factory,
+            cfg(num_envs, num_workers, batch_size, zero_copy),
+        )
+        .unwrap();
         let w = v.obs_layout().byte_len();
         v.async_reset(0);
         for _round in 0..20 {
@@ -730,11 +756,8 @@ mod tests {
 
     #[test]
     fn infos_cross_once_per_episode() {
-        let mut v = Multiprocessing::new(
-            |i| envs::make("ocean/bandit", i as u64),
-            cfg(4, 2, 4, false),
-        )
-        .unwrap();
+        let mut v =
+            Multiprocessing::from_spec(&EnvSpec::new("ocean/bandit"), cfg(4, 2, 4, false)).unwrap();
         v.async_reset(1);
         let slots = v.action_dims().len();
         let rows = v.batch_rows();
@@ -777,7 +800,7 @@ mod tests {
 
     #[test]
     fn worker_panic_poisons_backend() {
-        let mut v = Multiprocessing::new(
+        let mut v = Multiprocessing::from_factory(
             |_i| {
                 Box::new(crate::emulation::PufferEnv::new(Bomb { t: 0, fuse: 3 }))
                     as Box<dyn FlatEnv>
@@ -819,7 +842,7 @@ mod tests {
                 i as u64,
             )))
         };
-        let mut v = Multiprocessing::new(factory, cfg(4, 4, 1, false)).unwrap();
+        let mut v = Multiprocessing::from_factory(factory, cfg(4, 4, 1, false)).unwrap();
         assert_eq!(v.mode(), Mode::AsyncSingleWorker);
         v.async_reset(0);
         let slots = v.action_dims().len();
@@ -841,11 +864,9 @@ mod tests {
 
     #[test]
     fn batch_sizes_and_agent_rows() {
-        let v = Multiprocessing::new(
-            |i| envs::make("ocean/multiagent", i as u64),
-            cfg(4, 2, 2, false),
-        )
-        .unwrap();
+        let v =
+            Multiprocessing::from_spec(&EnvSpec::new("ocean/multiagent"), cfg(4, 2, 2, false))
+                .unwrap();
         assert_eq!(v.agents_per_env(), 2);
         assert_eq!(v.batch_rows(), 4);
         drop(v);
@@ -853,11 +874,8 @@ mod tests {
 
     #[test]
     fn protocol_misuse_errors() {
-        let mut v = Multiprocessing::new(
-            |i| envs::make("ocean/bandit", i as u64),
-            cfg(2, 1, 2, false),
-        )
-        .unwrap();
+        let mut v =
+            Multiprocessing::from_spec(&EnvSpec::new("ocean/bandit"), cfg(2, 1, 2, false)).unwrap();
         assert!(v.send(&[0, 0]).is_err(), "send before recv");
         v.async_reset(0);
         let _ = v.recv().unwrap();

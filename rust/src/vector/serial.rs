@@ -6,6 +6,7 @@
 use super::{probe_factory, EnvFactory, StepBatch, VecConfig, VecEnv};
 use crate::emulation::{FlatEnv, Info};
 use crate::spaces::StructLayout;
+use crate::wrappers::EnvSpec;
 use anyhow::Result;
 
 /// In-thread vectorization.
@@ -26,8 +27,30 @@ pub struct Serial {
 }
 
 impl Serial {
+    /// Build from a composable [`EnvSpec`] — the preferred constructor.
+    pub fn from_spec(spec: &EnvSpec, cfg: VecConfig) -> Result<Self> {
+        Self::from_factory_box(spec.to_factory(), cfg)
+    }
+
+    /// Low-level escape hatch: build from a raw factory closure. Prefer
+    /// [`from_spec`](Self::from_spec); for custom envs see
+    /// [`EnvSpec::custom`].
+    pub fn from_factory(
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+        cfg: VecConfig,
+    ) -> Result<Self> {
+        Self::from_factory_box(Box::new(factory), cfg)
+    }
+
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through an EnvSpec (`Serial::from_spec`), or use `from_factory`"
+    )]
     pub fn new(factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static, cfg: VecConfig) -> Result<Self> {
-        let factory: EnvFactory = Box::new(factory);
+        Self::from_factory(factory, cfg)
+    }
+
+    fn from_factory_box(factory: EnvFactory, cfg: VecConfig) -> Result<Self> {
         anyhow::ensure!(
             cfg.batch_size == cfg.num_envs,
             "Serial requires batch_size == num_envs (got {} vs {})",
@@ -144,7 +167,7 @@ mod tests {
             batch_size: 4,
             ..Default::default()
         };
-        let mut v = Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg).unwrap();
+        let mut v = Serial::from_spec(&EnvSpec::new("classic/cartpole"), cfg).unwrap();
         v.async_reset(7);
         let slots = v.action_dims().len();
         let rows = v.batch_rows();
@@ -166,7 +189,21 @@ mod tests {
             batch_size: 2,
             ..Default::default()
         };
-        assert!(Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg).is_err());
+        assert!(Serial::from_spec(&EnvSpec::new("classic/cartpole"), cfg).is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_factory_shim_still_constructs() {
+        let cfg = VecConfig {
+            num_envs: 2,
+            num_workers: 1,
+            batch_size: 2,
+            ..Default::default()
+        };
+        let mut v = Serial::new(|i| envs::make("ocean/bandit", i as u64), cfg).unwrap();
+        v.async_reset(0);
+        assert_eq!(v.recv().unwrap().rewards.len(), 2);
     }
 
     #[test]
@@ -177,7 +214,7 @@ mod tests {
             batch_size: 1,
             ..Default::default()
         };
-        let mut v = Serial::new(|i| envs::make("ocean/bandit", i as u64), cfg).unwrap();
+        let mut v = Serial::from_spec(&EnvSpec::new("ocean/bandit"), cfg).unwrap();
         assert!(v.recv().is_err());
     }
 
@@ -189,7 +226,7 @@ mod tests {
             batch_size: 2,
             ..Default::default()
         };
-        let mut v = Serial::new(|i| envs::make("ocean/multiagent", i as u64), cfg).unwrap();
+        let mut v = Serial::from_spec(&EnvSpec::new("ocean/multiagent"), cfg).unwrap();
         assert_eq!(v.agents_per_env(), 2);
         assert_eq!(v.batch_rows(), 4);
         v.async_reset(0);

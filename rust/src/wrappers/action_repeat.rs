@@ -1,0 +1,31 @@
+//! Action repeat (frame skip): step the inner env `k` times per outer
+//! step with the same actions, summing rewards.
+
+use super::Wrapper;
+
+/// Repeat each action `k` times. The driving layer performs the loop:
+/// rewards are summed, done flags OR-ed, and the loop exits early when
+/// the episode ends (the inner env has auto-reset by then; repeating
+/// further would leak actions into the next episode). Only the final
+/// observation is surfaced — the standard frame-skip contract.
+pub struct ActionRepeat {
+    k: usize,
+}
+
+impl ActionRepeat {
+    /// `k` must be at least 1 (1 is an identity layer).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "ActionRepeat count must be >= 1");
+        ActionRepeat { k }
+    }
+}
+
+impl Wrapper for ActionRepeat {
+    fn name(&self) -> &'static str {
+        "action_repeat"
+    }
+
+    fn repeat(&self) -> usize {
+        self.k
+    }
+}

@@ -1,0 +1,529 @@
+//! Composable microwrappers over [`FlatEnv`] — the paper's "one-line
+//! wrappers that eliminate common compatibility problems" (§3.1), in the
+//! SuperSuit spirit of small, single-purpose transforms, but operating
+//! **in place on the packed byte rows** so the vector backends keep their
+//! zero-copy guarantees.
+//!
+//! Three pieces:
+//!
+//! - [`Wrapper`] — the transform trait. Width-preserving wrappers mutate
+//!   the step buffers in place ([`Wrapper::on_step`]); layout-changing
+//!   wrappers (obs stacking) project inner rows into wider output rows
+//!   ([`Wrapper::project_step`]) and advertise the new layout via
+//!   [`Wrapper::transform_space`], so `probe_factory`, the shared-memory
+//!   slabs, and `NativeBackend::for_env` all size themselves from the
+//!   *wrapped* geometry.
+//! - [`Wrapped`] — the generic layer that drives one wrapper over one
+//!   inner [`FlatEnv`]. Chains are built by nesting layers; each layer
+//!   preallocates any state it needs, so steady-state stepping does **no
+//!   per-step allocation**.
+//! - [`EnvSpec`] — the declarative builder
+//!   (`EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4)`) that
+//!   replaces raw `EnvFactory` closures as the currency passed to
+//!   `Serial`/`Multiprocessing`, the `Trainer`, `autotune`, and the
+//!   `puffer` CLI. Specs are cloneable descriptions; every vectorized env
+//!   copy instantiates its own fresh wrapper state from them.
+//!
+//! Order matters and is explicit: the chain applies **innermost first**
+//! (`.scale_reward(2.0).clip_reward(1.0)` scales at the env boundary,
+//! then clips the scaled reward). The same list therefore produces the
+//! same semantics on every backend — `Serial`, all four `Multiprocessing`
+//! code paths, and the baselines (pinned by `tests/wrapper_semantics.rs`).
+
+mod action_repeat;
+mod normalize;
+mod reward;
+mod spec;
+mod stack;
+mod time_limit;
+
+pub use action_repeat::ActionRepeat;
+pub use normalize::NormalizeObs;
+pub use reward::{ClipReward, ScaleReward};
+pub use spec::{EnvSpec, WrapperSpec};
+pub use stack::ObsStack;
+pub use time_limit::TimeLimit;
+
+use crate::emulation::{FlatEnv, Info};
+use crate::spaces::{Space, StructLayout};
+
+/// Control-flow verdict a wrapper returns from its step hook.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flow {
+    /// Pass the step results through.
+    Continue,
+    /// Force the episode to end now: the driving [`Wrapped`] layer resets
+    /// its inner env (writing the new episode's first observation, per
+    /// the [`FlatEnv`] auto-reset contract) and raises every `truncs`
+    /// flag. Used by [`TimeLimit`].
+    Truncate,
+}
+
+/// A single transform over [`FlatEnv`] step results.
+///
+/// All buffer arguments are whole-env buffers: `num_agents` rows,
+/// agent-major, exactly as [`FlatEnv::step`] sees them. Implement the
+/// `on_*` hooks when the observation layout is unchanged (the buffers are
+/// mutated in place on the shared slab); implement [`transform_space`] +
+/// the `project_*` hooks when the wrapper widens rows (the driver stages
+/// inner rows in a preallocated scratch buffer and the wrapper writes the
+/// output rows).
+///
+/// [`transform_space`]: Wrapper::transform_space
+pub trait Wrapper: Send {
+    /// Stable name for keys/diagnostics ("clip_reward", "stack", ...).
+    fn name(&self) -> &'static str;
+
+    /// The transformed observation space, or `None` if unchanged. The
+    /// output layout is inferred from this space, exactly as emulation
+    /// infers the inner layout.
+    fn transform_space(&self, _inner: &Space) -> Option<Space> {
+        None
+    }
+
+    /// The transformed action space, or `None` if unchanged. The
+    /// advertised `action_dims` are re-derived from this space, so the
+    /// two can never disagree. The space must stay discrete (emulation's
+    /// MultiDiscrete contract).
+    fn transform_action_space(&self, _inner: &Space) -> Option<Space> {
+        None
+    }
+
+    /// One-time bind to the inner geometry; preallocate all state here.
+    fn bind(&mut self, _inner: &StructLayout, _num_agents: usize) {}
+
+    /// Inner steps per outer step (action repeat). The driver loops the
+    /// inner env, accumulates rewards, and stops early on episode end.
+    fn repeat(&self) -> usize {
+        1
+    }
+
+    /// In-place hook after a reset (width-preserving wrappers).
+    fn on_reset(&mut self, _obs: &mut [u8]) {}
+
+    /// In-place hook after a step (width-preserving wrappers).
+    fn on_step(
+        &mut self,
+        _obs: &mut [u8],
+        _rewards: &mut [f32],
+        _terms: &mut [bool],
+        _truncs: &mut [bool],
+        _info: &mut Info,
+    ) -> Flow {
+        Flow::Continue
+    }
+
+    /// Layout-changing hook after a reset: inner rows in `src` → output
+    /// rows in `dst`.
+    fn project_reset(&mut self, _src: &[u8], _dst: &mut [u8]) {
+        unimplemented!("wrapper '{}' changes the layout but has no project_reset", self.name())
+    }
+
+    /// Layout-changing hook after a step.
+    fn project_step(
+        &mut self,
+        _src: &[u8],
+        _dst: &mut [u8],
+        _rewards: &mut [f32],
+        _terms: &mut [bool],
+        _truncs: &mut [bool],
+        _info: &mut Info,
+    ) -> Flow {
+        unimplemented!("wrapper '{}' changes the layout but has no project_step", self.name())
+    }
+}
+
+/// Apply one wrapper to an env, producing a new [`FlatEnv`]. Chains are
+/// built by repeated application, innermost first (what [`EnvSpec::build`]
+/// does).
+pub fn wrap(inner: Box<dyn FlatEnv>, wrapper: Box<dyn Wrapper>) -> Box<dyn FlatEnv> {
+    Box::new(Wrapped::new(inner, wrapper))
+}
+
+/// One wrapper layer driving one inner env. Implements [`FlatEnv`], so
+/// layers nest and the vectorizers see an ordinary flat env with the
+/// *wrapped* layout and action dims.
+pub struct Wrapped {
+    inner: Box<dyn FlatEnv>,
+    wrapper: Box<dyn Wrapper>,
+    obs_space: Space,
+    act_space: Space,
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    /// Staging rows in the *inner* layout; `Some` only when the wrapper
+    /// changes the layout (preallocated once, never grown).
+    scratch: Option<Vec<u8>>,
+    /// Accumulators for `repeat > 1` (preallocated; unused otherwise).
+    acc_rewards: Vec<f32>,
+    acc_terms: Vec<bool>,
+    acc_truncs: Vec<bool>,
+    episode_seed: u64,
+}
+
+impl Wrapped {
+    fn new(inner: Box<dyn FlatEnv>, mut wrapper: Box<dyn Wrapper>) -> Self {
+        let inner_layout = inner.obs_layout().clone();
+        let agents = inner.num_agents();
+        wrapper.bind(&inner_layout, agents);
+        let (obs_space, layout, scratch) = match wrapper.transform_space(inner.observation_space()) {
+            Some(space) => {
+                let layout = space.layout();
+                (space, layout, Some(vec![0u8; agents * inner_layout.byte_len()]))
+            }
+            None => (inner.observation_space().clone(), inner_layout, None),
+        };
+        let (act_space, action_dims) = match wrapper.transform_action_space(inner.action_space()) {
+            Some(space) => {
+                let dims = space.action_dims().unwrap_or_else(|| {
+                    panic!(
+                        "wrapper '{}' produced an action space with continuous leaves",
+                        wrapper.name()
+                    )
+                });
+                (space, dims)
+            }
+            None => (inner.action_space().clone(), inner.action_dims().to_vec()),
+        };
+        Wrapped {
+            inner,
+            wrapper,
+            obs_space,
+            act_space,
+            layout,
+            action_dims,
+            scratch,
+            acc_rewards: vec![0.0; agents],
+            acc_terms: vec![false; agents],
+            acc_truncs: vec![false; agents],
+            episode_seed: 0,
+        }
+    }
+
+    fn next_episode_seed(&mut self) -> u64 {
+        self.episode_seed = crate::util::rng::next_episode_seed(self.episode_seed);
+        self.episode_seed
+    }
+}
+
+impl FlatEnv for Wrapped {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn observation_space(&self) -> &Space {
+        &self.obs_space
+    }
+    fn action_space(&self) -> &Space {
+        &self.act_space
+    }
+    fn num_agents(&self) -> usize {
+        self.inner.num_agents()
+    }
+
+    fn reset(&mut self, seed: u64, obs_out: &mut [u8]) -> Info {
+        self.episode_seed = seed;
+        match &mut self.scratch {
+            Some(scratch) => {
+                let info = self.inner.reset(seed, scratch);
+                self.wrapper.project_reset(scratch, obs_out);
+                info
+            }
+            None => {
+                let info = self.inner.reset(seed, obs_out);
+                self.wrapper.on_reset(obs_out);
+                info
+            }
+        }
+    }
+
+    fn step(
+        &mut self,
+        actions: &[i32],
+        obs_out: &mut [u8],
+        rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+    ) -> Info {
+        let rows = rewards.len();
+        let k = self.wrapper.repeat().max(1);
+        let mut info = Info::new();
+
+        if k == 1 {
+            let dst: &mut [u8] = match &mut self.scratch {
+                Some(s) => s,
+                None => &mut *obs_out,
+            };
+            info = self.inner.step(actions, dst, rewards, terms, truncs);
+        } else {
+            // Action repeat: same actions, summed rewards, OR-ed done
+            // flags, early exit once the episode ends (the inner env has
+            // already auto-reset by then; repeating further would leak
+            // actions into the next episode).
+            self.acc_rewards[..rows].fill(0.0);
+            self.acc_terms[..rows].fill(false);
+            self.acc_truncs[..rows].fill(false);
+            for _ in 0..k {
+                let dst: &mut [u8] = match &mut self.scratch {
+                    Some(s) => s,
+                    None => &mut *obs_out,
+                };
+                let step_info = self.inner.step(actions, dst, rewards, terms, truncs);
+                info.extend(step_info);
+                for r in 0..rows {
+                    self.acc_rewards[r] += rewards[r];
+                    self.acc_terms[r] |= terms[r];
+                    self.acc_truncs[r] |= truncs[r];
+                }
+                if terms.iter().zip(truncs.iter()).all(|(t, u)| *t || *u) {
+                    break;
+                }
+            }
+            rewards.copy_from_slice(&self.acc_rewards[..rows]);
+            terms.copy_from_slice(&self.acc_terms[..rows]);
+            truncs.copy_from_slice(&self.acc_truncs[..rows]);
+        }
+
+        let flow = match &mut self.scratch {
+            Some(scratch) => {
+                self.wrapper.project_step(scratch, obs_out, rewards, terms, truncs, &mut info)
+            }
+            None => self.wrapper.on_step(obs_out, rewards, terms, truncs, &mut info),
+        };
+
+        if flow == Flow::Truncate {
+            // Forced episode end (time limit): honor the auto-reset
+            // contract ourselves — reset the inner chain and surface the
+            // *new* episode's first observation with `truncs` raised.
+            let seed = self.next_episode_seed();
+            match &mut self.scratch {
+                Some(scratch) => {
+                    info.extend(self.inner.reset(seed, scratch));
+                    self.wrapper.project_reset(scratch, obs_out);
+                }
+                None => {
+                    info.extend(self.inner.reset(seed, obs_out));
+                    self.wrapper.on_reset(obs_out);
+                }
+            }
+            truncs.fill(true);
+        }
+        info
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulation::{PufferEnv, StructuredEnv};
+    use crate::spaces::Value;
+
+    /// Deterministic env: obs [t, last_action], reward = 1 + t, episode
+    /// ends after `horizon` steps.
+    struct Counter {
+        t: u32,
+        horizon: u32,
+    }
+
+    impl Counter {
+        fn boxed(horizon: u32) -> Box<dyn FlatEnv> {
+            Box::new(PufferEnv::new(Counter { t: 0, horizon }))
+        }
+    }
+
+    impl StructuredEnv for Counter {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[2], -1e6, 1e6)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(4)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            self.t = 0;
+            Value::F32(vec![0.0, -1.0])
+        }
+        fn step(&mut self, a: &Value) -> (Value, f32, bool, bool, Info) {
+            self.t += 1;
+            let obs = Value::F32(vec![self.t as f32, a.as_discrete().unwrap() as f32]);
+            (obs, 1.0 + self.t as f32, self.t >= self.horizon, false, Info::new())
+        }
+    }
+
+    fn decode_f32s(row: &[u8]) -> Vec<f32> {
+        row.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    fn drive(env: &mut Box<dyn FlatEnv>, action: i32) -> (Vec<u8>, f32, bool, bool, Info) {
+        let w = env.obs_layout().byte_len();
+        let mut obs = vec![0u8; w];
+        let (mut r, mut te, mut tr) = ([0.0], [false], [false]);
+        let info = env.step(&[action], &mut obs, &mut r, &mut te, &mut tr);
+        (obs, r[0], te[0], tr[0], info)
+    }
+
+    #[test]
+    fn clip_and_scale_apply_innermost_first() {
+        // scale(2) then clip(3): rewards are 2·(1+t) clamped to 3.
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(100))
+            .scale_reward(2.0)
+            .clip_reward(3.0);
+        let mut env = spec.build(0);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        let (_, r1, ..) = drive(&mut env, 0);
+        assert_eq!(r1, 3.0); // 2·2 = 4 → clipped to 3
+
+        // clip(3) then scale(2): clamp first, then scale.
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(100))
+            .clip_reward(3.0)
+            .scale_reward(2.0);
+        let mut env = spec.build(0);
+        env.reset(0, &mut obs);
+        let (_, r1, ..) = drive(&mut env, 0);
+        assert_eq!(r1, 4.0); // min(2, 3)·2
+    }
+
+    #[test]
+    fn stack_widens_layout_and_orders_frames_oldest_first() {
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(100)).stack(3);
+        let mut env = spec.build(0);
+        assert_eq!(env.obs_layout().byte_len(), 3 * 8);
+        assert_eq!(env.obs_layout().flat_len(), 6);
+
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        // Reset fills every frame with the first observation.
+        assert_eq!(decode_f32s(&obs), vec![0.0, -1.0, 0.0, -1.0, 0.0, -1.0]);
+
+        let (obs, ..) = drive(&mut env, 2);
+        assert_eq!(decode_f32s(&obs), vec![0.0, -1.0, 0.0, -1.0, 1.0, 2.0]);
+        let (obs, ..) = drive(&mut env, 3);
+        assert_eq!(decode_f32s(&obs), vec![0.0, -1.0, 1.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn stack_refills_history_on_auto_reset() {
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(2)).stack(3);
+        let mut env = spec.build(0);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        drive(&mut env, 0);
+        let (obs, _, term, _, _) = drive(&mut env, 0);
+        assert!(term);
+        // The inner env auto-reset: the stack must not leak old frames.
+        assert_eq!(decode_f32s(&obs), vec![0.0, -1.0, 0.0, -1.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn time_limit_truncates_and_surfaces_fresh_obs() {
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(100)).time_limit(3);
+        let mut env = spec.build(0);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(7, &mut obs);
+        for step in 1..=2 {
+            let (obs, _, term, trunc, _) = drive(&mut env, 0);
+            assert!(!term && !trunc, "step {step}");
+            assert_eq!(decode_f32s(&obs)[0], step as f32);
+        }
+        let (obs, _, term, trunc, info) = drive(&mut env, 0);
+        assert!(!term && trunc, "limit must truncate, not terminate");
+        // Auto-reset contract: the surfaced obs is the new episode's first.
+        assert_eq!(decode_f32s(&obs), vec![0.0, -1.0]);
+        assert!(info.iter().any(|(k, v)| *k == "truncated_at" && *v == 3.0));
+        // The counter restarted with the new episode.
+        let (obs, _, _, trunc, _) = drive(&mut env, 0);
+        assert!(!trunc);
+        assert_eq!(decode_f32s(&obs)[0], 1.0);
+    }
+
+    #[test]
+    fn time_limit_defers_to_natural_episode_ends() {
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(2)).time_limit(3);
+        let mut env = spec.build(0);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        for _ in 0..4 {
+            let (_, _, term, trunc, _) = drive(&mut env, 0);
+            // Horizon 2 always beats limit 3: only natural terminations.
+            assert!(!trunc);
+            let _ = term;
+        }
+    }
+
+    #[test]
+    fn action_repeat_sums_rewards_and_stops_at_episode_end() {
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(100)).action_repeat(3);
+        let mut env = spec.build(0);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        let (obs, r, ..) = drive(&mut env, 1);
+        // Three inner steps: rewards 2 + 3 + 4; obs is the last frame.
+        assert_eq!(r, 9.0);
+        assert_eq!(decode_f32s(&obs), vec![3.0, 1.0]);
+
+        // Horizon 4: the second repeated step ends the episode after one
+        // inner step (t = 4) and must not bleed into the next episode.
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(4)).action_repeat(3);
+        let mut env = spec.build(0);
+        let mut obs4 = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs4);
+        let (_, r, term, ..) = drive(&mut env, 0);
+        assert_eq!(r, 2.0 + 3.0 + 4.0);
+        assert!(!term);
+        let (obs, r, term, ..) = drive(&mut env, 0);
+        assert_eq!(r, 5.0, "episode ended after one inner step");
+        assert!(term);
+        // Auto-reset already surfaced the new episode's first obs.
+        assert_eq!(decode_f32s(&obs), vec![0.0, -1.0]);
+    }
+
+    #[test]
+    fn normalize_rewrites_f32_leaves_in_place() {
+        let spec = EnvSpec::custom("counter", |_| Counter::boxed(1000)).normalize_obs();
+        let mut env = spec.build(0);
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        // Element [1] echoes the action: alternate 0/3 so the raw stream
+        // has a stable mean the running stats can converge to.
+        let mut seen = Vec::new();
+        for i in 0..60 {
+            let (obs, ..) = drive(&mut env, if i % 2 == 0 { 0 } else { 3 });
+            seen.push(decode_f32s(&obs)[1]);
+        }
+        assert!(seen.iter().all(|x| x.abs() <= 10.0), "clip bound violated: {seen:?}");
+        // Once the stats settle, 0 maps below the mean and 3 above it…
+        let tail = &seen[40..];
+        for pair in tail.chunks_exact(2) {
+            assert!(pair[0] < 0.0 && pair[1] > 0.0, "not centered: {pair:?}");
+        }
+        // …and the normalized tail is roughly zero-mean, unit-scale.
+        let mean: f32 = tail.iter().sum::<f32>() / tail.len() as f32;
+        assert!(mean.abs() < 0.5, "running-normalized tail mean {mean} far from 0");
+        assert!(tail.iter().all(|x| x.abs() < 3.0), "tail not unit-scale: {tail:?}");
+    }
+
+    #[test]
+    fn chains_compose_and_key_is_ordered() {
+        let spec = EnvSpec::new("classic/cartpole")
+            .action_repeat(2)
+            .clip_reward(0.5)
+            .stack(4);
+        assert_eq!(
+            spec.key(),
+            "classic/cartpole+action_repeat=2+clip_reward=0.5+stack=4"
+        );
+        let mut env = spec.build(0);
+        let base = crate::envs::make("classic/cartpole", 0);
+        assert_eq!(env.obs_layout().byte_len(), 4 * base.obs_layout().byte_len());
+        assert_eq!(env.action_dims(), base.action_dims());
+        let mut obs = vec![0u8; env.obs_layout().byte_len()];
+        env.reset(0, &mut obs);
+        let (_, r, ..) = drive(&mut env, 0);
+        // Clip sits outside the repeat layer, so it clamps the *summed*
+        // reward: two cartpole steps at 1.0 each → 2.0 → clipped to 0.5.
+        assert_eq!(r, 0.5);
+    }
+}

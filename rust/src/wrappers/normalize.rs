@@ -1,0 +1,109 @@
+//! Observation normalization with running mean/variance, in place on the
+//! packed byte rows.
+
+use super::{Flow, Wrapper};
+use crate::emulation::Info;
+use crate::spaces::{Dtype, StructLayout};
+
+/// Normalize every `f32` leaf element to zero mean / unit variance using
+/// Welford running statistics, then clip to `±clip`. Integer leaves (u8
+/// tiles, i32 glyphs, discrete slots) pass through untouched — they are
+/// categorical data, and rewriting them in place would corrupt their
+/// byte representation.
+///
+/// Statistics are **per env instance**: every vectorized copy maintains
+/// its own running moments (wrapper state lives with the env on its
+/// worker, which is what keeps the shared-slab paths copy- and
+/// synchronization-free). With the identical reward/observation streams
+/// of a vectorized sweep the per-copy moments converge to the same
+/// values; exact cross-env aggregation would require a side channel and
+/// is out of scope here.
+pub struct NormalizeObs {
+    eps: f32,
+    clip: f32,
+    /// `(byte_offset, element_count)` of each f32 leaf within a row.
+    fields: Vec<(usize, usize)>,
+    row_bytes: usize,
+    /// Welford state over all rows seen, one slot per f32 element.
+    count: f64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl NormalizeObs {
+    pub fn new() -> Self {
+        NormalizeObs {
+            eps: 1e-8,
+            clip: 10.0,
+            fields: Vec::new(),
+            row_bytes: 0,
+            count: 0.0,
+            mean: Vec::new(),
+            m2: Vec::new(),
+        }
+    }
+
+    fn normalize(&mut self, obs: &mut [u8]) {
+        debug_assert_eq!(obs.len() % self.row_bytes.max(1), 0);
+        for row in obs.chunks_exact_mut(self.row_bytes) {
+            self.count += 1.0;
+            let mut slot = 0usize;
+            for &(off, n) in &self.fields {
+                for i in 0..n {
+                    let o = off + 4 * i;
+                    let x = f32::from_le_bytes(row[o..o + 4].try_into().unwrap()) as f64;
+                    let d = x - self.mean[slot];
+                    self.mean[slot] += d / self.count;
+                    self.m2[slot] += d * (x - self.mean[slot]);
+                    let var = if self.count > 1.0 { self.m2[slot] / (self.count - 1.0) } else { 1.0 };
+                    let norm = ((x - self.mean[slot]) / (var.sqrt() + self.eps as f64)) as f32;
+                    let norm = norm.clamp(-self.clip, self.clip);
+                    row[o..o + 4].copy_from_slice(&norm.to_le_bytes());
+                    slot += 1;
+                }
+            }
+        }
+    }
+}
+
+impl Default for NormalizeObs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Wrapper for NormalizeObs {
+    fn name(&self) -> &'static str {
+        "normalize_obs"
+    }
+
+    fn bind(&mut self, inner: &StructLayout, _num_agents: usize) {
+        self.row_bytes = inner.byte_len();
+        self.fields = inner
+            .fields()
+            .iter()
+            .filter(|f| f.dtype == Dtype::F32)
+            .map(|f| (f.byte_offset, f.count))
+            .collect();
+        let elems: usize = self.fields.iter().map(|&(_, n)| n).sum();
+        self.count = 0.0;
+        self.mean = vec![0.0; elems];
+        self.m2 = vec![0.0; elems];
+    }
+
+    fn on_reset(&mut self, obs: &mut [u8]) {
+        self.normalize(obs);
+    }
+
+    fn on_step(
+        &mut self,
+        obs: &mut [u8],
+        _rewards: &mut [f32],
+        _terms: &mut [bool],
+        _truncs: &mut [bool],
+        _info: &mut Info,
+    ) -> Flow {
+        self.normalize(obs);
+        Flow::Continue
+    }
+}

@@ -1,0 +1,71 @@
+//! Reward microwrappers: clipping and scaling. Both mutate the reward
+//! buffer in place; observations and flags pass through untouched.
+
+use super::{Flow, Wrapper};
+use crate::emulation::Info;
+
+/// Clamp every reward into `[-bound, bound]` (the DQN-era stabilizer).
+pub struct ClipReward {
+    bound: f32,
+}
+
+impl ClipReward {
+    /// `bound` must be positive and finite.
+    pub fn new(bound: f32) -> Self {
+        assert!(bound > 0.0 && bound.is_finite(), "ClipReward bound must be positive, got {bound}");
+        ClipReward { bound }
+    }
+}
+
+impl Wrapper for ClipReward {
+    fn name(&self) -> &'static str {
+        "clip_reward"
+    }
+
+    fn on_step(
+        &mut self,
+        _obs: &mut [u8],
+        rewards: &mut [f32],
+        _terms: &mut [bool],
+        _truncs: &mut [bool],
+        _info: &mut Info,
+    ) -> Flow {
+        for r in rewards.iter_mut() {
+            *r = r.clamp(-self.bound, self.bound);
+        }
+        Flow::Continue
+    }
+}
+
+/// Multiply every reward by a constant factor.
+pub struct ScaleReward {
+    scale: f32,
+}
+
+impl ScaleReward {
+    /// `scale` must be finite.
+    pub fn new(scale: f32) -> Self {
+        assert!(scale.is_finite(), "ScaleReward factor must be finite, got {scale}");
+        ScaleReward { scale }
+    }
+}
+
+impl Wrapper for ScaleReward {
+    fn name(&self) -> &'static str {
+        "scale_reward"
+    }
+
+    fn on_step(
+        &mut self,
+        _obs: &mut [u8],
+        rewards: &mut [f32],
+        _terms: &mut [bool],
+        _truncs: &mut [bool],
+        _info: &mut Info,
+    ) -> Flow {
+        for r in rewards.iter_mut() {
+            *r *= self.scale;
+        }
+        Flow::Continue
+    }
+}

@@ -1,0 +1,205 @@
+//! [`EnvSpec`] — the declarative environment + wrapper-chain description
+//! that replaces raw factory closures as the construction currency across
+//! the stack.
+
+use super::{wrap, ActionRepeat, ClipReward, NormalizeObs, ObsStack, ScaleReward, TimeLimit, Wrapper};
+use crate::emulation::FlatEnv;
+use crate::vector::EnvFactory;
+use std::fmt;
+use std::sync::Arc;
+
+/// A declarative wrapper description. Specs are plain data (cloneable,
+/// comparable), so an [`EnvSpec`] can cross worker-thread boundaries and
+/// instantiate fresh, independent wrapper state for every vectorized env
+/// copy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WrapperSpec {
+    /// Clamp rewards into `[-bound, bound]`.
+    ClipReward(f32),
+    /// Multiply rewards by a constant.
+    ScaleReward(f32),
+    /// Running mean/var normalization of f32 observation leaves.
+    NormalizeObs,
+    /// Stack the last `k` observations (widens rows ×`k`).
+    Stack(usize),
+    /// Truncate episodes after `n` steps.
+    TimeLimit(u64),
+    /// Repeat each action `k` times, summing rewards.
+    ActionRepeat(usize),
+}
+
+impl WrapperSpec {
+    /// Build a fresh wrapper instance from this description.
+    pub fn instantiate(&self) -> Box<dyn Wrapper> {
+        match *self {
+            WrapperSpec::ClipReward(b) => Box::new(ClipReward::new(b)),
+            WrapperSpec::ScaleReward(s) => Box::new(ScaleReward::new(s)),
+            WrapperSpec::NormalizeObs => Box::new(NormalizeObs::new()),
+            WrapperSpec::Stack(k) => Box::new(ObsStack::new(k)),
+            WrapperSpec::TimeLimit(n) => Box::new(TimeLimit::new(n)),
+            WrapperSpec::ActionRepeat(k) => Box::new(ActionRepeat::new(k)),
+        }
+    }
+
+    /// Stable `name=value` fragment for spec keys (checkpoint
+    /// compatibility: a differently-wrapped env is a different spec).
+    pub fn key_fragment(&self) -> String {
+        match self {
+            WrapperSpec::ClipReward(b) => format!("clip_reward={b}"),
+            WrapperSpec::ScaleReward(s) => format!("scale_reward={s}"),
+            WrapperSpec::NormalizeObs => "normalize_obs".to_string(),
+            WrapperSpec::Stack(k) => format!("stack={k}"),
+            WrapperSpec::TimeLimit(n) => format!("time_limit={n}"),
+            WrapperSpec::ActionRepeat(k) => format!("action_repeat={k}"),
+        }
+    }
+}
+
+/// Base environment constructor: a first-party name (resolved through
+/// [`crate::envs::make`]) or a user-supplied factory.
+type BaseFactory = Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>;
+
+/// A composable environment specification: base env + ordered wrapper
+/// chain. This is what `Serial::from_spec`, `Multiprocessing::from_spec`,
+/// the `Trainer`, `autotune`, and the `puffer` CLI consume.
+///
+/// The chain applies **innermost first**: in
+/// `EnvSpec::new("classic/cartpole").scale_reward(2.0).clip_reward(1.0)`
+/// the scale sits at the env boundary and the clip sees scaled rewards.
+/// Order is part of the semantics (and of [`key`](Self::key)).
+///
+/// ```no_run
+/// use pufferlib::wrappers::EnvSpec;
+/// let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4);
+/// let _env = spec.build(0); // rows are 4× wider than the bare env's
+/// assert_eq!(spec.key(), "ocean/squared+clip_reward=1+stack=4");
+/// ```
+#[derive(Clone)]
+pub struct EnvSpec {
+    name: String,
+    wrappers: Vec<WrapperSpec>,
+    base: Option<BaseFactory>,
+}
+
+impl EnvSpec {
+    /// Spec for a first-party env name (see [`crate::envs::ALL_ENVS`]).
+    pub fn new(name: impl Into<String>) -> Self {
+        EnvSpec {
+            name: name.into(),
+            wrappers: Vec::new(),
+            base: None,
+        }
+    }
+
+    /// Spec over a custom base env: `factory(i)` builds instance `i`.
+    /// `name` is only used for display and spec keys.
+    pub fn custom(
+        name: impl Into<String>,
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+    ) -> Self {
+        EnvSpec {
+            name: name.into(),
+            wrappers: Vec::new(),
+            base: Some(Arc::new(factory)),
+        }
+    }
+
+    /// Append one wrapper (outermost so far).
+    pub fn wrap(mut self, w: WrapperSpec) -> Self {
+        self.wrappers.push(w);
+        self
+    }
+
+    /// Append a whole chain (innermost-first order preserved).
+    pub fn with_wrappers(mut self, ws: impl IntoIterator<Item = WrapperSpec>) -> Self {
+        self.wrappers.extend(ws);
+        self
+    }
+
+    /// Clamp rewards into `[-bound, bound]`.
+    pub fn clip_reward(self, bound: f32) -> Self {
+        self.wrap(WrapperSpec::ClipReward(bound))
+    }
+
+    /// Multiply rewards by `scale`.
+    pub fn scale_reward(self, scale: f32) -> Self {
+        self.wrap(WrapperSpec::ScaleReward(scale))
+    }
+
+    /// Normalize f32 observation leaves with running mean/var.
+    pub fn normalize_obs(self) -> Self {
+        self.wrap(WrapperSpec::NormalizeObs)
+    }
+
+    /// Stack the last `k` observations (widens rows ×`k`).
+    pub fn stack(self, k: usize) -> Self {
+        self.wrap(WrapperSpec::Stack(k))
+    }
+
+    /// Truncate episodes after `n` steps.
+    pub fn time_limit(self, n: u64) -> Self {
+        self.wrap(WrapperSpec::TimeLimit(n))
+    }
+
+    /// Repeat each action `k` times, summing rewards.
+    pub fn action_repeat(self, k: usize) -> Self {
+        self.wrap(WrapperSpec::ActionRepeat(k))
+    }
+
+    /// Base env name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The wrapper chain, innermost first.
+    pub fn wrappers(&self) -> &[WrapperSpec] {
+        &self.wrappers
+    }
+
+    /// Spec key: the base name plus one `+name=value` fragment per
+    /// wrapper, e.g. `"ocean/squared+clip_reward=1+stack=4"`. Used for
+    /// backend/checkpoint keys so a differently-wrapped env never
+    /// silently restores another chain's parameters.
+    pub fn key(&self) -> String {
+        let mut key = self.name.clone();
+        for w in &self.wrappers {
+            key.push('+');
+            key.push_str(&w.key_fragment());
+        }
+        key
+    }
+
+    /// Build env instance `index`: base env (seeded with `index`, exactly
+    /// like the factory convention) wrapped by the chain, innermost
+    /// first.
+    pub fn build(&self, index: usize) -> Box<dyn FlatEnv> {
+        let mut env = match &self.base {
+            Some(f) => f(index),
+            None => crate::envs::make(&self.name, index as u64),
+        };
+        for w in &self.wrappers {
+            env = wrap(env, w.instantiate());
+        }
+        env
+    }
+
+    /// Convert into the raw factory form the vector internals consume.
+    pub fn into_factory(self) -> EnvFactory {
+        Box::new(move |i| self.build(i))
+    }
+
+    /// As [`into_factory`](Self::into_factory), without consuming.
+    pub fn to_factory(&self) -> EnvFactory {
+        self.clone().into_factory()
+    }
+}
+
+impl fmt::Debug for EnvSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EnvSpec")
+            .field("name", &self.name)
+            .field("wrappers", &self.wrappers)
+            .field("custom_base", &self.base.is_some())
+            .finish()
+    }
+}

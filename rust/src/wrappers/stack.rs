@@ -1,0 +1,101 @@
+//! Observation stacking: each output row is the concatenation of the last
+//! `k` inner rows (frame stacking generalized to arbitrary packed
+//! layouts).
+
+use super::{Flow, Wrapper};
+use crate::emulation::Info;
+use crate::spaces::{Space, StructLayout};
+
+/// Stack the last `k` observations per agent row. The advertised space is
+/// `Tuple` of `k` copies of the inner space, so the output layout is
+/// exactly `k` concatenated inner layouts — frame 0 is the **oldest**,
+/// frame `k-1` the **newest**. On reset (and on auto-reset, detected via
+/// the done flags) the history is filled with the new episode's first
+/// observation, so frames never leak across episode boundaries.
+///
+/// This is the one shipped wrapper that widens rows: the vectorizer's
+/// shared slabs size themselves from the wrapped layout, the inner env
+/// writes into a preallocated staging row, and the stack projects into
+/// the slab — two bounded copies per step, no allocation.
+pub struct ObsStack {
+    k: usize,
+    inner_bytes: usize,
+    agents: usize,
+    /// Per-agent history, agent-major, `k` frames each, oldest first —
+    /// byte-identical to the output rows, so projection is one copy.
+    frames: Vec<u8>,
+}
+
+impl ObsStack {
+    /// `k` must be at least 2 (1 would be an identity wrap that still
+    /// renames every layout field).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2, "ObsStack depth must be >= 2, got {k}");
+        ObsStack {
+            k,
+            inner_bytes: 0,
+            agents: 0,
+            frames: Vec::new(),
+        }
+    }
+}
+
+impl Wrapper for ObsStack {
+    fn name(&self) -> &'static str {
+        "stack"
+    }
+
+    fn transform_space(&self, inner: &Space) -> Option<Space> {
+        Some(Space::Tuple(vec![inner.clone(); self.k]))
+    }
+
+    fn bind(&mut self, inner: &StructLayout, num_agents: usize) {
+        self.inner_bytes = inner.byte_len();
+        self.agents = num_agents;
+        self.frames = vec![0u8; num_agents * self.k * self.inner_bytes];
+    }
+
+    fn project_reset(&mut self, src: &[u8], dst: &mut [u8]) {
+        let w = self.inner_bytes;
+        for a in 0..self.agents {
+            let row = &src[a * w..(a + 1) * w];
+            let hist = &mut self.frames[a * self.k * w..(a + 1) * self.k * w];
+            for f in 0..self.k {
+                hist[f * w..(f + 1) * w].copy_from_slice(row);
+            }
+        }
+        dst.copy_from_slice(&self.frames);
+    }
+
+    fn project_step(
+        &mut self,
+        src: &[u8],
+        dst: &mut [u8],
+        _rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+        _info: &mut Info,
+    ) -> Flow {
+        let (w, k) = (self.inner_bytes, self.k);
+        // The episode boundary is *all* rows done (an individual agent
+        // dying mid-episode keeps reporting term on its padded row, with
+        // no reset having happened — the same convention TimeLimit and
+        // the multiagent emulation use). Only then has the inner env
+        // auto-reset, making `src` the new episode's first observation.
+        let episode_over = terms.iter().zip(truncs.iter()).all(|(t, u)| *t || *u);
+        for a in 0..self.agents {
+            let row = &src[a * w..(a + 1) * w];
+            let hist = &mut self.frames[a * k * w..(a + 1) * k * w];
+            if episode_over {
+                for f in 0..k {
+                    hist[f * w..(f + 1) * w].copy_from_slice(row);
+                }
+            } else {
+                hist.copy_within(w.., 0);
+                hist[(k - 1) * w..].copy_from_slice(row);
+            }
+        }
+        dst.copy_from_slice(&self.frames);
+        Flow::Continue
+    }
+}

@@ -1,0 +1,60 @@
+//! Episode truncation after a fixed number of wrapper-level steps.
+
+use super::{Flow, Wrapper};
+use crate::emulation::Info;
+
+/// Truncate the episode after `max_steps` outer steps. When the limit
+/// hits, the driving layer resets the inner chain (auto-reset contract:
+/// the surfaced observation is the *new* episode's first one) and raises
+/// every `truncs` flag; a `("truncated_at", t)` info marks the event.
+///
+/// The counter counts *this layer's* steps: placed outside an
+/// [`ActionRepeat`](super::ActionRepeat), one repeated step counts once;
+/// placed inside, every inner step counts. Episode ends reported by the
+/// inner env (all rows done) reset the counter.
+pub struct TimeLimit {
+    max_steps: u64,
+    t: u64,
+}
+
+impl TimeLimit {
+    /// `max_steps` must be at least 1.
+    pub fn new(max_steps: u64) -> Self {
+        assert!(max_steps >= 1, "TimeLimit must allow at least one step");
+        TimeLimit { max_steps, t: 0 }
+    }
+}
+
+impl Wrapper for TimeLimit {
+    fn name(&self) -> &'static str {
+        "time_limit"
+    }
+
+    fn on_reset(&mut self, _obs: &mut [u8]) {
+        self.t = 0;
+    }
+
+    fn on_step(
+        &mut self,
+        _obs: &mut [u8],
+        _rewards: &mut [f32],
+        terms: &mut [bool],
+        truncs: &mut [bool],
+        info: &mut Info,
+    ) -> Flow {
+        self.t += 1;
+        // "All rows done" is the episode boundary (multiagent padded rows
+        // read as terminated, so `any` would fire spuriously).
+        let episode_over = terms.iter().zip(truncs.iter()).all(|(t, u)| *t || *u);
+        if episode_over {
+            self.t = 0;
+            return Flow::Continue;
+        }
+        if self.t >= self.max_steps {
+            info.push(("truncated_at", self.t as f64));
+            self.t = 0;
+            return Flow::Truncate;
+        }
+        Flow::Continue
+    }
+}

@@ -53,8 +53,8 @@ fn backends_agree_on_deterministic_env() {
         ..Default::default()
     };
 
-    let (r_serial, o_serial) = run(Serial::new(mk, serial_cfg.clone()).unwrap(), 20);
-    let (r_mp, o_mp) = run(Multiprocessing::new(mk, cfg_sync.clone()).unwrap(), 20);
+    let (r_serial, o_serial) = run(Serial::from_factory(mk, serial_cfg.clone()).unwrap(), 20);
+    let (r_mp, o_mp) = run(Multiprocessing::from_factory(mk, cfg_sync.clone()).unwrap(), 20);
     let (r_gym, o_gym) = run(GymnasiumVec::new(mk, cfg_sync.clone()).unwrap(), 20);
     let (r_sb3, o_sb3) = run(Sb3Vec::new(mk, cfg_sync).unwrap(), 20);
 
@@ -84,7 +84,7 @@ fn pool_fairness_under_imbalance() {
         batch_size: 2,
         ..Default::default()
     };
-    let mut v = Multiprocessing::new(factory, cfg).unwrap();
+    let mut v = Multiprocessing::from_factory(factory, cfg).unwrap();
     let slots = v.action_dims().len();
     let rows = v.batch_rows();
     let mut seen = [0usize; 8];

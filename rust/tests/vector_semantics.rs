@@ -30,7 +30,7 @@ fn cfg(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) 
 /// band.
 #[test]
 fn zero_copy_band_rotation_returns_batches_in_claim_order() {
-    let mut v = Multiprocessing::new(
+    let mut v = Multiprocessing::from_factory(
         |i| envs::make("ocean/squared", i as u64),
         cfg(8, 4, 4, true),
     )
@@ -72,7 +72,7 @@ fn async_recv_returns_first_finishers_without_blocking() {
         )))
     };
     // 4 workers × 1 env, batch = 2 workers → Mode::Async.
-    let mut v = Multiprocessing::new(factory, cfg(4, 4, 2, false)).unwrap();
+    let mut v = Multiprocessing::from_factory(factory, cfg(4, 4, 2, false)).unwrap();
     assert_eq!(v.mode(), Mode::Async);
     let slots = v.action_dims().len();
     let rows = v.batch_rows();
@@ -109,7 +109,7 @@ fn async_recv_returns_first_finishers_without_blocking() {
 /// definitionally 0..M), and `N < M` pool configs are rejected up front.
 #[test]
 fn serial_is_sync_and_in_order() {
-    let mut v = Serial::new(
+    let mut v = Serial::from_factory(
         |i| envs::make("classic/cartpole", i as u64),
         cfg(4, 1, 4, false),
     )
@@ -128,7 +128,7 @@ fn serial_is_sync_and_in_order() {
 
     // Pool semantics need a pooled backend: Serial refuses N < M.
     assert!(
-        Serial::new(|i| envs::make("classic/cartpole", i as u64), cfg(4, 1, 2, false)).is_err(),
+        Serial::from_factory(|i| envs::make("classic/cartpole", i as u64), cfg(4, 1, 2, false)).is_err(),
         "Serial must reject batch_size < num_envs"
     );
 }
@@ -137,7 +137,7 @@ fn serial_is_sync_and_in_order() {
 /// batch is all envs, ascending.
 #[test]
 fn multiprocessing_sync_matches_serial_order() {
-    let mut v = Multiprocessing::new(
+    let mut v = Multiprocessing::from_factory(
         |i| envs::make("classic/cartpole", i as u64),
         cfg(4, 2, 4, false),
     )

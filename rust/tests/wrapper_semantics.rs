@@ -1,0 +1,182 @@
+//! Vectorized wrapper semantics: the wrapper pipeline must (a) preserve
+//! the no-copy property of the `Sync`/`ZeroCopy` paths, (b) agree on the
+//! stacked layout between the probe env and the worker slabs, and (c)
+//! apply wrapper order identically across `Serial` and `Multiprocessing`.
+
+use pufferlib::vector::{Mode, Multiprocessing, Serial, VecConfig, VecEnv};
+use pufferlib::wrappers::EnvSpec;
+
+fn cfg(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) -> VecConfig {
+    VecConfig {
+        num_envs,
+        num_workers,
+        batch_size,
+        zero_copy,
+        ..Default::default()
+    }
+}
+
+/// (a) Sync path: with an in-place wrapper chain, every recv hands back
+/// the same slab region (the batch IS the shared memory, no gather copy),
+/// and the mode resolution is unchanged by wrapping.
+#[test]
+fn in_place_wrappers_keep_sync_path_no_copy() {
+    let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).normalize_obs();
+    let mut v = Multiprocessing::from_spec(&spec, cfg(8, 2, 8, false)).unwrap();
+    assert_eq!(v.mode(), Mode::Sync);
+    let rows = v.batch_rows();
+    let w = v.obs_layout().byte_len();
+    v.async_reset(0);
+    let slots = v.action_dims().len();
+    let mut ptrs = Vec::new();
+    for _ in 0..6 {
+        {
+            let b = v.recv().unwrap();
+            assert_eq!(b.obs.len(), rows * w);
+            ptrs.push(b.obs.as_ptr() as usize);
+        }
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+    assert!(
+        ptrs.windows(2).all(|p| p[0] == p[1]),
+        "Sync batch moved between recvs — a copy appeared: {ptrs:?}"
+    );
+}
+
+/// (a) ZeroCopy path: batches rotate through the fixed slab bands (two
+/// bands here), never through a gather buffer — even with a chain that
+/// includes a row-widening stack.
+#[test]
+fn wrapped_zero_copy_path_rotates_slab_bands() {
+    let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4);
+    let mut v = Multiprocessing::from_spec(&spec, cfg(8, 4, 4, true)).unwrap();
+    assert_eq!(v.mode(), Mode::ZeroCopy);
+    let rows = v.batch_rows();
+    let w = v.obs_layout().byte_len();
+    v.async_reset(0);
+    let slots = v.action_dims().len();
+    let mut ptrs = Vec::new();
+    for _ in 0..8 {
+        {
+            let b = v.recv().unwrap();
+            assert_eq!(b.obs.len(), rows * w);
+            ptrs.push(b.obs.as_ptr() as usize);
+        }
+        v.send(&vec![0i32; rows * slots]).unwrap();
+    }
+    // Two bands: recvs alternate between exactly two fixed addresses,
+    // one band-width (batch bytes) apart.
+    let distinct: std::collections::BTreeSet<usize> = ptrs.iter().copied().collect();
+    assert_eq!(distinct.len(), 2, "expected 2 rotating bands: {ptrs:?}");
+    let band: Vec<usize> = distinct.into_iter().collect();
+    assert_eq!(band[1] - band[0], rows * w, "bands are not adjacent slab regions");
+    for (i, p) in ptrs.iter().enumerate() {
+        assert_eq!(*p, band[i % 2], "band rotation broke at recv {i}");
+    }
+}
+
+/// (b) The probe env and the worker slabs agree on the stacked layout:
+/// slab sizing, env-side rows, and the advertised layout all derive from
+/// the same wrapped spec.
+#[test]
+fn stacked_layout_agrees_between_probe_and_worker_slabs() {
+    let spec = EnvSpec::new("classic/cartpole").stack(4);
+    let probe = spec.build(0);
+    let bare = EnvSpec::new("classic/cartpole").build(0);
+    assert_eq!(probe.obs_layout().byte_len(), 4 * bare.obs_layout().byte_len());
+
+    let mut v = Multiprocessing::from_spec(&spec, cfg(4, 2, 4, false)).unwrap();
+    assert_eq!(v.obs_layout().byte_len(), probe.obs_layout().byte_len());
+    assert_eq!(v.obs_layout().flat_len(), probe.obs_layout().flat_len());
+    v.async_reset(3);
+    let b = v.recv().unwrap();
+    assert_eq!(b.obs.len(), 4 * probe.obs_layout().byte_len());
+    // Reset fills all 4 frames with the first observation: each row is
+    // the same frame repeated 4 times.
+    let w = bare.obs_layout().byte_len();
+    for row in b.obs.chunks_exact(4 * w) {
+        let first = &row[..w];
+        for f in 1..4 {
+            assert_eq!(&row[f * w..(f + 1) * w], first, "reset frames differ");
+        }
+    }
+}
+
+/// Drive a venv for `steps` and collect (env_id, reward) in batch order.
+fn reward_trace(v: &mut dyn VecEnv, steps: usize, action: i32) -> Vec<(usize, f32)> {
+    let slots = v.action_dims().len();
+    let rows = v.batch_rows();
+    let agents = v.agents_per_env();
+    v.async_reset(11);
+    let mut trace = Vec::new();
+    for _ in 0..steps {
+        {
+            let b = v.recv().unwrap();
+            for (i, &e) in b.env_ids.iter().enumerate() {
+                trace.push((e, b.rewards[i * agents]));
+            }
+        }
+        v.send(&vec![action; rows * slots]).unwrap();
+    }
+    trace
+}
+
+/// (c) Wrapper order matters: scale-then-clip and clip-then-scale give
+/// different rewards — and each chain gives identical results on Serial
+/// and on Multiprocessing (sync), step for step.
+#[test]
+fn wrapper_order_matters_and_is_stable_across_backends() {
+    // Cartpole pays reward 1.0 every step, deterministically.
+    let scale_then_clip = EnvSpec::new("classic/cartpole").scale_reward(2.0).clip_reward(0.5);
+    let clip_then_scale = EnvSpec::new("classic/cartpole").clip_reward(0.5).scale_reward(2.0);
+
+    let mut serial_a = Serial::from_spec(&scale_then_clip, cfg(4, 1, 4, false)).unwrap();
+    let mut serial_b = Serial::from_spec(&clip_then_scale, cfg(4, 1, 4, false)).unwrap();
+    let mut mp_a = Multiprocessing::from_spec(&scale_then_clip, cfg(4, 2, 4, false)).unwrap();
+    let mut mp_b = Multiprocessing::from_spec(&clip_then_scale, cfg(4, 2, 4, false)).unwrap();
+
+    let t_serial_a = reward_trace(&mut serial_a, 30, 1);
+    let t_serial_b = reward_trace(&mut serial_b, 30, 1);
+    let t_mp_a = reward_trace(&mut mp_a, 30, 1);
+    let t_mp_b = reward_trace(&mut mp_b, 30, 1);
+
+    // Order matters: ×2 then clip → 0.5; clip then ×2 → 1.0.
+    // (First recv after reset carries zero rewards on every backend.)
+    assert!(t_serial_a[4..].iter().all(|&(_, r)| r == 0.5), "{t_serial_a:?}");
+    assert!(t_serial_b[4..].iter().all(|&(_, r)| r == 1.0), "{t_serial_b:?}");
+    assert_ne!(t_serial_a, t_serial_b);
+
+    // Stable across backends: identical traces, step for step.
+    assert_eq!(t_serial_a, t_mp_a);
+    assert_eq!(t_serial_b, t_mp_b);
+}
+
+/// (c) continued: a full chain (repeat + clip + stack) behaves
+/// identically on Serial and Multiprocessing, including obs bytes.
+#[test]
+fn full_chain_identical_on_serial_and_multiprocessing() {
+    let spec = EnvSpec::new("classic/cartpole").action_repeat(2).clip_reward(0.75).stack(2);
+    let mut serial = Serial::from_spec(&spec, cfg(4, 1, 4, false)).unwrap();
+    let mut mp = Multiprocessing::from_spec(&spec, cfg(4, 2, 4, false)).unwrap();
+
+    let slots = serial.action_dims().len();
+    let rows = serial.batch_rows();
+    serial.async_reset(5);
+    mp.async_reset(5);
+    for step in 0..25 {
+        let (obs_s, rew_s, term_s): (Vec<u8>, Vec<f32>, Vec<bool>) = {
+            let b = serial.recv().unwrap();
+            (b.obs.to_vec(), b.rewards.to_vec(), b.terms.to_vec())
+        };
+        let (obs_m, rew_m, term_m): (Vec<u8>, Vec<f32>, Vec<bool>) = {
+            let b = mp.recv().unwrap();
+            (b.obs.to_vec(), b.rewards.to_vec(), b.terms.to_vec())
+        };
+        assert_eq!(obs_s, obs_m, "obs diverged at step {step}");
+        assert_eq!(rew_s, rew_m, "rewards diverged at step {step}");
+        assert_eq!(term_s, term_m, "terms diverged at step {step}");
+        let actions = vec![1i32; rows * slots];
+        serial.send(&actions).unwrap();
+        mp.send(&actions).unwrap();
+    }
+}
