@@ -14,9 +14,11 @@ test:
 	cargo build --release && cargo test -q
 
 # Vector throughput bench (paper Table 2 + the W1 wrapper-overhead
-# cell); writes machine-readable results to BENCH_vector.json.
+# cell) and the pipelined-vs-serial trainer bench (P1); write
+# machine-readable results to BENCH_vector.json / BENCH_train.json.
 bench:
 	PUFFER_BENCH_JSON=BENCH_vector.json cargo bench --bench vectorization
+	PUFFER_BENCH_JSON=BENCH_train.json cargo bench --bench train_pipeline
 
 # Every bench target.
 bench-all:

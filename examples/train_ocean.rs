@@ -4,8 +4,9 @@
 //! hyperparameter set.
 //!
 //! Caveat for the default (native) backend: ocean/memory needs recurrence
-//! to be solvable, and native training is feedforward-only — expect
-//! ~chance scores there unless built with `--features pjrt` and driven
+//! to be solvable, and native training is feedforward-only — the trainer
+//! refuses to construct it (a hard error naming `--features pjrt`), so
+//! this sweep skips it unless built with `--features pjrt` and driven
 //! through the PJRT backend (see rust/README.md).
 //!
 //! Everything composes here: Rust coordinator (emulation + vectorization
@@ -39,6 +40,11 @@ fn config_for(env: &str) -> TrainConfig {
         pool: false,
         run_dir: Some(format!("runs/{}", env.replace('/', "_"))),
         log_every: 10,
+        // Serial loop, full-batch updates: the reference solve settings.
+        // Flip pipeline_depth to 1 (and raise minibatches) for the
+        // overlapped collector/learner pipeline — see README "Throughput
+        // tuning".
+        ..TrainConfig::default()
     };
     match env {
         "ocean/squared" => TrainConfig {
@@ -72,6 +78,12 @@ fn main() -> anyhow::Result<()> {
     println!("=== Ocean end-to-end training sweep (paper §4 / bench C3) ===\n");
     let mut rows = Vec::new();
     for env in &selected {
+        if pufferlib::backend::native::requires_recurrence(env) {
+            // Recurrent reference specs hard-error on the feedforward
+            // native backend; skip instead of aborting the sweep.
+            println!("skipping {env}: needs an LSTM (--features pjrt + --backend=pjrt)");
+            continue;
+        }
         let cfg = config_for(env);
         let steps = cfg.total_steps;
         let mut trainer = Trainer::native(cfg)?;

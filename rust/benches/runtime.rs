@@ -128,6 +128,7 @@ fn main() -> anyhow::Result<()> {
             let batch = TrainBatch {
                 t,
                 r: br,
+                norm_adv: true,
                 obs: &obs,
                 starts: &starts,
                 actions: &actions,

@@ -1,0 +1,143 @@
+//! **Bench P2** — pipelined vs serial trainer throughput: the end-to-end
+//! payoff of overlapping rollout collection with minibatched PPO
+//! learning. Two workloads:
+//!
+//! - `ocean/squared` — near-free env stepping: learner-bound, so the
+//!   pipeline mostly exposes the learner ceiling (watch the collector
+//!   stall counter).
+//! - `profile/atari` — a Table 1-calibrated simulator with real step and
+//!   reset cost, driven through a pooled (`M = 2N`) VecConfig: the case
+//!   the pipeline is built for. Acceptance: `pipelined_sps >=
+//!   1.3 × serial_sps`.
+//!
+//! `PUFFER_BENCH_TRAIN_STEPS` env-steps per cell (default 16384).
+//! `PUFFER_BENCH_JSON` write machine-readable results to this path
+//! (`make bench` sets it to `BENCH_train.json`).
+
+use pufferlib::train::{TrainConfig, TrainReport, Trainer};
+use pufferlib::util::json::{arr, num, obj, s, Json};
+
+struct Cell {
+    env: &'static str,
+    serial: TrainReport,
+    pipelined: TrainReport,
+}
+
+fn run(env: &str, total_steps: u64, pipeline_depth: usize) -> anyhow::Result<TrainReport> {
+    let cfg = TrainConfig {
+        env: env.to_string(),
+        total_steps,
+        // Pooled vectorizer: recv half the envs per batch (M = 2N), the
+        // paper's EnvPool double-buffering, under both trainer paths so
+        // the comparison isolates the pipeline itself.
+        pool: true,
+        num_workers: 2,
+        // A learner heavy enough to be worth hiding, split into row
+        // minibatches; identical under serial so the math matches.
+        epochs: 2,
+        minibatches: 2,
+        pipeline_depth,
+        log_every: 0,
+        ..Default::default()
+    };
+    Trainer::native(cfg)?.train()
+}
+
+fn report_json(r: &TrainReport) -> Json {
+    obj(vec![
+        ("sps", num(r.sps)),
+        ("env_sps", num(r.env_sps)),
+        ("learn_sps", num(r.learn_sps)),
+        ("collector_stall_s", num(r.collector_stall_s)),
+        ("learner_stall_s", num(r.learner_stall_s)),
+        ("max_param_staleness", num(r.max_param_staleness as f64)),
+    ])
+}
+
+fn main() {
+    let total_steps: u64 = std::env::var("PUFFER_BENCH_TRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16_384);
+    let json_path = std::env::var("PUFFER_BENCH_JSON").ok();
+
+    println!(
+        "# Bench P2 — pipelined vs serial trainer (env-steps/sec, {total_steps} steps/cell)"
+    );
+    println!(
+        "| {:<16} | {:>10} | {:>12} | {:>7} | {:>9} | {:>9} | {:>8} |",
+        "Environment", "serial", "pipelined", "speedup", "env SPS", "learn SPS", "stall s"
+    );
+    println!(
+        "|{}|{}|{}|{}|{}|{}|{}|",
+        "-".repeat(18),
+        "-".repeat(12),
+        "-".repeat(14),
+        "-".repeat(9),
+        "-".repeat(11),
+        "-".repeat(11),
+        "-".repeat(10)
+    );
+
+    let mut cells = Vec::new();
+    for env in ["ocean/squared", "profile/atari"] {
+        let serial = match run(env, total_steps, 0) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{env} serial failed: {e}");
+                continue;
+            }
+        };
+        let pipelined = match run(env, total_steps, 1) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{env} pipelined failed: {e}");
+                continue;
+            }
+        };
+        println!(
+            "| {:<16} | {:>10.0} | {:>12.0} | {:>6.2}x | {:>9.0} | {:>9.0} | {:>8.2} |",
+            env,
+            serial.sps,
+            pipelined.sps,
+            pipelined.sps / serial.sps,
+            pipelined.env_sps,
+            pipelined.learn_sps,
+            pipelined.collector_stall_s + pipelined.learner_stall_s,
+        );
+        cells.push(Cell {
+            env,
+            serial,
+            pipelined,
+        });
+    }
+
+    println!("\n# acceptance: profile/atari (pooled VecConfig) pipelined >= 1.3x serial;");
+    println!("# ocean/squared is learner-bound — expect ~1x with a large collector stall.");
+
+    if let Some(path) = json_path {
+        let cells_json = cells
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("env", s(c.env)),
+                    ("serial_sps", num(c.serial.sps)),
+                    ("pipelined_sps", num(c.pipelined.sps)),
+                    ("speedup", num(c.pipelined.sps / c.serial.sps)),
+                    ("serial", report_json(&c.serial)),
+                    ("pipelined", report_json(&c.pipelined)),
+                ])
+            })
+            .collect();
+        let out = obj(vec![
+            ("bench", s("train_pipeline")),
+            ("total_steps", num(total_steps as f64)),
+            ("config", s("pool=true workers=2 epochs=2 minibatches=2 depth=1")),
+            ("cells", arr(cells_json)),
+        ]);
+        match std::fs::write(&path, out.dump()) {
+            Ok(()) => println!("\n# wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+}

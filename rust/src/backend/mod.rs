@@ -73,14 +73,19 @@ impl AdamState {
 }
 
 /// One PPO update's worth of rollout data, time-major `(T, R)` over all
-/// agent rows. Feedforward backends flatten to `N = T × R` sample rows;
-/// recurrent backends keep the time structure (and the `starts` episode
-/// boundaries) for BPTT.
+/// agent rows — a full segment, or a row-subset minibatch produced by
+/// [`TrainBatch::gather_rows`]. Feedforward backends flatten to
+/// `N = T × R` sample rows; recurrent backends keep the time structure
+/// (and the `starts` episode boundaries) for BPTT.
 pub struct TrainBatch<'a> {
     /// Rollout segment length `T`.
     pub t: usize,
-    /// Total agent rows `R` (`batch_roll`).
+    /// Agent rows `R` in this batch (`batch_roll`, or
+    /// `batch_roll / minibatches` for a minibatch view).
     pub r: usize,
+    /// Normalize advantages (mean/var over *this* batch — i.e. per
+    /// minibatch once the segment is split) inside the surrogate loss.
+    pub norm_adv: bool,
     /// `(T, R, obs_dim)` f32.
     pub obs: &'a [f32],
     /// `(T, R)`: 1.0 where the stored obs begins a new episode.
@@ -93,6 +98,74 @@ pub struct TrainBatch<'a> {
     pub adv: &'a [f32],
     /// `(T, R)` returns.
     pub ret: &'a [f32],
+}
+
+/// Reusable owned storage backing a minibatch view gathered out of a full
+/// `(T, R)` segment — one allocation, recycled across minibatches and
+/// epochs.
+#[derive(Default)]
+pub struct MinibatchScratch {
+    obs: Vec<f32>,
+    starts: Vec<f32>,
+    actions: Vec<i32>,
+    logp: Vec<f32>,
+    adv: Vec<f32>,
+    ret: Vec<f32>,
+}
+
+impl TrainBatch<'_> {
+    /// Gather the row subset `rows` (indices into `0..self.r`) into
+    /// `scratch`, returning a dense time-major `(T, rows.len())` batch.
+    ///
+    /// Minibatching slices **whole rows**: each selected agent row keeps
+    /// its full `T`-step trajectory and its `starts` episode-boundary
+    /// flags, so recurrent (BPTT) backends see intact time structure —
+    /// shuffling permutes rows, never time steps (LSTM-start-aware
+    /// slicing).
+    pub fn gather_rows<'s>(
+        &self,
+        rows: &[usize],
+        scratch: &'s mut MinibatchScratch,
+    ) -> TrainBatch<'s> {
+        let (t_dim, r_dim) = (self.t, self.r);
+        let n = t_dim * r_dim;
+        let d = self.obs.len() / n;
+        let slots = self.actions.len() / n;
+        let rb = rows.len();
+        debug_assert!(rows.iter().all(|&g| g < r_dim), "row index out of range");
+
+        scratch.obs.resize(t_dim * rb * d, 0.0);
+        scratch.starts.resize(t_dim * rb, 0.0);
+        scratch.actions.resize(t_dim * rb * slots, 0);
+        scratch.logp.resize(t_dim * rb, 0.0);
+        scratch.adv.resize(t_dim * rb, 0.0);
+        scratch.ret.resize(t_dim * rb, 0.0);
+        for ti in 0..t_dim {
+            for (j, &g) in rows.iter().enumerate() {
+                let src = ti * r_dim + g;
+                let dst = ti * rb + j;
+                scratch.obs[dst * d..(dst + 1) * d]
+                    .copy_from_slice(&self.obs[src * d..(src + 1) * d]);
+                scratch.actions[dst * slots..(dst + 1) * slots]
+                    .copy_from_slice(&self.actions[src * slots..(src + 1) * slots]);
+                scratch.starts[dst] = self.starts[src];
+                scratch.logp[dst] = self.logp[src];
+                scratch.adv[dst] = self.adv[src];
+                scratch.ret[dst] = self.ret[src];
+            }
+        }
+        TrainBatch {
+            t: t_dim,
+            r: rb,
+            norm_adv: self.norm_adv,
+            obs: &scratch.obs,
+            starts: &scratch.starts,
+            actions: &scratch.actions,
+            logp: &scratch.logp,
+            adv: &scratch.adv,
+            ret: &scratch.ret,
+        }
+    }
 }
 
 /// The narrow waist between the trainer/policy and the learner math:
@@ -147,4 +220,99 @@ pub trait PolicyBackend: Send {
         ent_coef: f32,
         batch: &TrainBatch<'_>,
     ) -> Result<[f32; 5]>;
+
+    /// Clone this backend for concurrent rollout inference on the
+    /// pipelined trainer's collector thread (only `forward`/`forward_lstm`
+    /// are called on the fork; the learner keeps `self` for
+    /// `gae`/`train_step`). Backends whose execution state cannot run
+    /// concurrently keep this default error — the serial path
+    /// (`pipeline.depth = 0`) never calls it.
+    fn fork_for_rollout(&self) -> Result<Box<dyn PolicyBackend>> {
+        anyhow::bail!(
+            "backend '{}' does not support pipelined collection \
+             (train.pipeline.depth > 0); use the serial trainer \
+             (--pipeline.depth=0)",
+            self.key()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type SeqBatch = (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+    fn seq_batch(t: usize, r: usize, d: usize, slots: usize) -> SeqBatch {
+        let n = t * r;
+        (
+            (0..n * d).map(|i| i as f32).collect(),
+            (0..n).map(|i| (i % 3 == 0) as u8 as f32).collect(),
+            (0..n * slots).map(|i| i as i32).collect(),
+            (0..n).map(|i| -(i as f32)).collect(),
+            (0..n).map(|i| 0.5 * i as f32).collect(),
+            (0..n).map(|i| 2.0 * i as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn gather_rows_keeps_time_major_layout() {
+        let (t, r, d, slots) = (3, 4, 2, 2);
+        let (obs, starts, actions, logp, adv, ret) = seq_batch(t, r, d, slots);
+        let full = TrainBatch {
+            t,
+            r,
+            norm_adv: true,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let mut scratch = MinibatchScratch::default();
+        let mb = full.gather_rows(&[2, 0], &mut scratch);
+        assert_eq!((mb.t, mb.r), (3, 2));
+        assert!(mb.norm_adv);
+        for ti in 0..t {
+            for (j, g) in [2usize, 0].into_iter().enumerate() {
+                let src = ti * r + g;
+                let dst = ti * 2 + j;
+                assert_eq!(mb.obs[dst * d..(dst + 1) * d], obs[src * d..(src + 1) * d]);
+                assert_eq!(
+                    mb.actions[dst * slots..(dst + 1) * slots],
+                    actions[src * slots..(src + 1) * slots]
+                );
+                assert_eq!(mb.starts[dst], starts[src]);
+                assert_eq!(mb.logp[dst], logp[src]);
+                assert_eq!(mb.adv[dst], adv[src]);
+                assert_eq!(mb.ret[dst], ret[src]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_all_rows_in_order_is_identity() {
+        let (t, r, d, slots) = (2, 3, 1, 1);
+        let (obs, starts, actions, logp, adv, ret) = seq_batch(t, r, d, slots);
+        let full = TrainBatch {
+            t,
+            r,
+            norm_adv: false,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let mut scratch = MinibatchScratch::default();
+        let mb = full.gather_rows(&[0, 1, 2], &mut scratch);
+        assert_eq!(mb.obs, &obs[..]);
+        assert_eq!(mb.starts, &starts[..]);
+        assert_eq!(mb.actions, &actions[..]);
+        assert_eq!(mb.logp, &logp[..]);
+        assert_eq!(mb.adv, &adv[..]);
+        assert_eq!(mb.ret, &ret[..]);
+    }
 }

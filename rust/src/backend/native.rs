@@ -48,6 +48,18 @@ const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
 
+/// Envs whose reference spec (aot.py ENV_SPECS) is recurrent and therefore
+/// untrainable on the feedforward-only native backend. Accepts a full
+/// [`EnvSpec`](crate::wrappers::EnvSpec) key — wrapper fragments after `+`
+/// are ignored. The sweep CLI, examples, and tests use this to route or
+/// skip such envs instead of tripping the hard error in
+/// [`NativeBackend::for_env`].
+pub fn requires_recurrence(env_name: &str) -> bool {
+    const RECURRENT_REFERENCE_SPECS: &[&str] = &["ocean/memory"];
+    let base_name = env_name.split('+').next().unwrap_or(env_name);
+    RECURRENT_REFERENCE_SPECS.contains(&base_name)
+}
+
 /// Flat parameter count for the model architecture.
 pub fn n_params(obs_dim: usize, act_dims: &[usize], hidden: usize, lstm: bool) -> usize {
     let a: usize = act_dims.iter().sum();
@@ -214,6 +226,7 @@ fn sigmoid(x: f32) -> f32 {
 // ---------------------------------------------------------------------------
 
 /// The pure-Rust compute backend (see module docs).
+#[derive(Clone)]
 pub struct NativeBackend {
     key: String,
     spec: SpecManifest,
@@ -231,20 +244,17 @@ impl NativeBackend {
     /// to be the *wrapped* probe so the spec is sized from the wrapped
     /// geometry.
     pub fn for_env(env_name: &str, env: &dyn FlatEnv) -> Result<Self> {
-        // Envs whose reference spec (aot.py ENV_SPECS) is recurrent. The
-        // native backend trains feedforward only, which cannot solve
-        // memory tasks — warn loudly instead of burning the step budget
-        // in silence.
-        const RECURRENT_REFERENCE_SPECS: &[&str] = &["ocean/memory"];
-        let base_name = env_name.split('+').next().unwrap_or(env_name);
-        if RECURRENT_REFERENCE_SPECS.contains(&base_name) {
-            eprintln!(
-                "warning: '{env_name}' needs recurrence to be solvable, but the \
-                 native backend trains feedforward policies only; expect ~chance \
-                 scores. Build with `--features pjrt` (+ `make artifacts`) and \
-                 use `--backend=pjrt` for LSTM training."
-            );
-        }
+        // The native backend trains feedforward only, which cannot solve
+        // memory tasks — fail at construction instead of burning the step
+        // budget training garbage (this used to be a warning that was
+        // trivially lost in training logs).
+        ensure!(
+            !requires_recurrence(env_name),
+            "'{env_name}' needs a recurrent (LSTM) policy to be solvable, but \
+             the native backend trains feedforward policies only — training \
+             would produce ~chance scores. Build with `--features pjrt`, run \
+             `make artifacts`, and select `--backend=pjrt` for LSTM training."
+        );
         let agents = env.num_agents();
         ensure!(
             B_ROLL % agents == 0,
@@ -518,10 +528,16 @@ impl PolicyBackend for NativeBackend {
             }
         }
 
-        // Clipped-surrogate loss (model._ppo_loss), batch-normalized adv.
-        let mu = batch.adv.iter().sum::<f32>() / nf;
-        let var = batch.adv.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / nf;
-        let sd = var.sqrt();
+        // Clipped-surrogate loss (model._ppo_loss). Advantages are
+        // normalized over *this* batch when `batch.norm_adv` — i.e. per
+        // minibatch once the trainer splits the segment.
+        let (mu, sd) = if batch.norm_adv {
+            let mu = batch.adv.iter().sum::<f32>() / nf;
+            let var = batch.adv.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / nf;
+            (mu, var.sqrt())
+        } else {
+            (0.0, 1.0)
+        };
         let mut pg_loss = 0.0f32;
         let mut v_loss = 0.0f32;
         let mut ent_mean = 0.0f32;
@@ -529,7 +545,11 @@ impl PolicyBackend for NativeBackend {
         let mut g_logp = vec![0.0f32; n]; // d pg_loss / d logp_i
         let mut d_value = vec![0.0f32; n];
         for i in 0..n {
-            let advn = (batch.adv[i] - mu) / (sd + 1e-8);
+            let advn = if batch.norm_adv {
+                (batch.adv[i] - mu) / (sd + 1e-8)
+            } else {
+                batch.adv[i]
+            };
             let logratio = logp[i] - batch.logp[i];
             let ratio = logratio.exp();
             let clipped = ratio.clamp(1.0 - CLIP, 1.0 + CLIP);
@@ -658,6 +678,13 @@ impl PolicyBackend for NativeBackend {
 
         Ok([loss, pg_loss, v_loss, ent_mean, kl])
     }
+
+    fn fork_for_rollout(&self) -> Result<Box<dyn PolicyBackend>> {
+        // The backend is pure math over caller-owned parameters; its only
+        // state (the init RNG) is never touched by forward passes, so a
+        // plain clone is a safe concurrent-inference fork.
+        Ok(Box::new(self.clone()))
+    }
 }
 
 #[cfg(test)]
@@ -747,6 +774,7 @@ mod tests {
         let batch = TrainBatch {
             t,
             r,
+            norm_adv: true,
             obs: &obs,
             starts: &starts,
             actions: &actions,
@@ -766,5 +794,75 @@ mod tests {
             last[2]
         );
         assert_eq!(opt.step, 61.0);
+    }
+
+    #[test]
+    fn recurrent_reference_env_is_a_hard_error() {
+        let env = crate::envs::make("ocean/memory", 0);
+        let err = NativeBackend::for_env("ocean/memory", env.as_ref())
+            .err()
+            .expect("recurrent env must not construct on the native backend")
+            .to_string();
+        assert!(err.contains("--features pjrt"), "unactionable error: {err}");
+        assert!(err.contains("--backend=pjrt"), "unactionable error: {err}");
+        // Wrapper fragments in the spec key don't mask the base env.
+        assert!(NativeBackend::for_env("ocean/memory+stack=4", env.as_ref()).is_err());
+        assert!(requires_recurrence("ocean/memory+clip_reward=1"));
+        assert!(!requires_recurrence("ocean/bandit"));
+    }
+
+    #[test]
+    fn norm_adv_off_feeds_raw_advantages() {
+        // Constant positive advantages: normalized they collapse to zero
+        // (zero policy gradient); raw they drive an actor update. The two
+        // settings must therefore diverge from the same start.
+        let mk = || NativeBackend::from_spec("t".into(), tiny_spec(3, vec![2], 8), 9);
+        let mut b = mk();
+        let params0 = b.init_params().unwrap();
+        let t = 3usize;
+        let r = 4usize;
+        let n = t * r;
+        let obs: Vec<f32> = (0..n * 3).map(|i| ((i * 5 % 11) as f32) / 11.0).collect();
+        let actions = vec![1i32; n];
+        let logp = vec![-0.69f32; n];
+        let adv = vec![1.0f32; n];
+        let ret = vec![0.0f32; n];
+        let starts = vec![0.0f32; n];
+        let run = |norm_adv: bool| {
+            let mut b = mk();
+            let mut params = params0.clone();
+            let mut opt = AdamState::new(params.len());
+            let batch = TrainBatch {
+                t,
+                r,
+                norm_adv,
+                obs: &obs,
+                starts: &starts,
+                actions: &actions,
+                logp: &logp,
+                adv: &adv,
+                ret: &ret,
+            };
+            let m = b.train_step(&mut params, &mut opt, 0.01, 0.0, &batch).unwrap();
+            (params, m)
+        };
+        let (p_norm, m_norm) = run(true);
+        let (p_raw, m_raw) = run(false);
+        assert!((m_norm[1]).abs() < 1e-6, "normalized constant adv → pg 0");
+        assert!(m_raw[1].abs() > 1e-3, "raw adv must drive the surrogate");
+        assert_ne!(p_norm, p_raw);
+    }
+
+    #[test]
+    fn fork_for_rollout_matches_forward() {
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(5, vec![3], 8), 2);
+        let p = b.init_params().unwrap();
+        let obs: Vec<f32> = (0..4 * 5).map(|i| (i as f32 * 0.31).cos()).collect();
+        let mut fork = b.fork_for_rollout().unwrap();
+        assert_eq!(fork.key(), b.key());
+        let a = b.forward(&p, &obs, 4).unwrap();
+        let f = fork.forward(&p, &obs, 4).unwrap();
+        assert_eq!(a.logits, f.logits);
+        assert_eq!(a.values, f.values);
     }
 }

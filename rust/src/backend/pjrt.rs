@@ -133,6 +133,25 @@ impl PolicyBackend for PjrtBackend {
         batch: &TrainBatch<'_>,
     ) -> Result<[f32; 5]> {
         let spec = &self.spec;
+        // The AOT-lowered train_step bakes batch advantage normalization
+        // into the compiled graph; it cannot be toggled per call.
+        anyhow::ensure!(
+            batch.norm_adv,
+            "the pjrt backend's compiled train_step always normalizes \
+             advantages; train.norm_adv=false requires the native backend"
+        );
+        // Fixed-shape executable: a minibatch view (r < batch_roll) can
+        // never match the lowered argument shapes — fail with the config
+        // fix instead of an opaque XLA shape error.
+        anyhow::ensure!(
+            batch.t == spec.horizon && batch.r == spec.batch_roll,
+            "the pjrt train_step was AOT-lowered for (T={}, R={}), got \
+             (T={}, R={}); train.minibatches > 1 requires the native backend",
+            spec.horizon,
+            spec.batch_roll,
+            batch.t,
+            batch.r
+        );
         let (t, r) = (batch.t, batch.r);
         let n = t * r;
         let slots = spec.act_dims.len();

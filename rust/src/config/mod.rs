@@ -23,13 +23,16 @@ use std::collections::BTreeMap;
 /// A flat key→scalar view of a config tree ("train.lr" → "0.0025").
 pub type FlatConfig = BTreeMap<String, String>;
 
-/// Recognized keys under `train.` (excluding the `train.wrap.` subtree).
+/// Recognized keys under `train.` (excluding the `train.wrap.` and
+/// `train.pipeline.` subtrees).
 const TRAIN_KEYS: &[&str] = &[
     "env",
     "total_steps",
     "lr",
     "ent_coef",
     "epochs",
+    "minibatches",
+    "norm_adv",
     "anneal_lr",
     "seed",
     "num_workers",
@@ -37,6 +40,10 @@ const TRAIN_KEYS: &[&str] = &[
     "run_dir",
     "log_every",
 ];
+
+/// Recognized experience-pipeline knobs, reachable as `train.pipeline.X`
+/// (config files) or `pipeline.X` (CLI `--pipeline.X=...` overrides).
+const PIPELINE_KEYS: &[&str] = &["depth"];
 
 /// Recognized wrapper knobs, reachable as `train.wrap.X` (config files)
 /// or `wrap.X` (CLI `--wrap.X=...` overrides).
@@ -92,15 +99,40 @@ pub fn validate_keys(cfg: &FlatConfig) -> Result<()> {
                 WRAP_KEYS.contains(&rest),
                 "unknown wrapper key '{key}' (known wrapper knobs: {WRAP_KEYS:?})"
             );
+        } else if let Some(rest) = key
+            .strip_prefix("train.pipeline.")
+            .or_else(|| key.strip_prefix("pipeline."))
+        {
+            ensure!(
+                PIPELINE_KEYS.contains(&rest),
+                "unknown pipeline key '{key}' (known pipeline knobs: {PIPELINE_KEYS:?})"
+            );
         } else if let Some(rest) = key.strip_prefix("train.") {
             ensure!(
                 TRAIN_KEYS.contains(&rest),
                 "unknown config key '{key}' (known train keys: {TRAIN_KEYS:?}, \
-                 plus wrapper knobs under train.wrap: {WRAP_KEYS:?})"
+                 plus wrapper knobs under train.wrap: {WRAP_KEYS:?} and pipeline \
+                 knobs under train.pipeline: {PIPELINE_KEYS:?})"
             );
         }
     }
     Ok(())
+}
+
+/// Read the experience-pipeline depth from a flat config. CLI-style
+/// `pipeline.depth` wins over file-style `train.pipeline.depth`; 0 (the
+/// default) selects the serial trainer.
+pub fn pipeline_config(cfg: &FlatConfig) -> Result<usize> {
+    let got = cfg
+        .get("pipeline.depth")
+        .map(|v| ("pipeline.depth", v))
+        .or_else(|| cfg.get("train.pipeline.depth").map(|v| ("train.pipeline.depth", v)));
+    match got {
+        None => Ok(0),
+        Some((key, v)) => v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("config key '{key}': cannot parse value '{v}' as a non-negative integer")
+        }),
+    }
 }
 
 /// Build the wrapper chain from a flat config. CLI-style `wrap.X` keys
@@ -177,10 +209,13 @@ pub fn train_config(cfg: &FlatConfig) -> Result<TrainConfig> {
         lr: get_parse(cfg, "train.lr", d.lr)?,
         ent_coef: get_parse(cfg, "train.ent_coef", d.ent_coef)?,
         epochs: get_parse(cfg, "train.epochs", d.epochs)?,
+        minibatches: get_parse(cfg, "train.minibatches", d.minibatches)?,
+        norm_adv: get_parse(cfg, "train.norm_adv", d.norm_adv)?,
         anneal_lr: get_parse(cfg, "train.anneal_lr", d.anneal_lr)?,
         seed: get_parse(cfg, "train.seed", d.seed)?,
         num_workers: get_parse(cfg, "train.num_workers", d.num_workers)?,
         pool: get_parse(cfg, "train.pool", d.pool)?,
+        pipeline_depth: pipeline_config(cfg)?,
         run_dir: cfg.get("train.run_dir").cloned(),
         log_every: get_parse(cfg, "train.log_every", d.log_every)?,
         wrappers: wrap_config(cfg)?,
@@ -251,6 +286,43 @@ mod tests {
         let mut cfg = FlatConfig::new();
         cfg.insert("eval.episodes".into(), "5".into());
         assert!(train_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn pipeline_and_minibatch_keys_parse() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.pipeline.depth".into(), "1".into());
+        cfg.insert("train.minibatches".into(), "4".into());
+        cfg.insert("train.norm_adv".into(), "false".into());
+        let tc = train_config(&cfg).unwrap();
+        assert_eq!(tc.pipeline_depth, 1);
+        assert_eq!(tc.minibatches, 4);
+        assert!(!tc.norm_adv);
+        // Defaults: serial, full batch, normalization on.
+        let d = train_config(&FlatConfig::new()).unwrap();
+        assert_eq!(d.pipeline_depth, 0);
+        assert_eq!(d.minibatches, 1);
+        assert!(d.norm_adv);
+    }
+
+    #[test]
+    fn pipeline_cli_alias_wins_over_file_key() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.pipeline.depth".into(), "2".into());
+        cfg.insert("pipeline.depth".into(), "1".into());
+        assert_eq!(pipeline_config(&cfg).unwrap(), 1);
+    }
+
+    #[test]
+    fn bad_pipeline_keys_are_rejected() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("pipeline.depht".into(), "1".into());
+        let err = validate_keys(&cfg).unwrap_err().to_string();
+        assert!(err.contains("pipeline.depht"), "{err}");
+        let mut cfg = FlatConfig::new();
+        cfg.insert("pipeline.depth".into(), "-1".into());
+        let err = train_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("pipeline.depth"), "{err}");
     }
 
     #[test]

@@ -70,6 +70,54 @@
 //! (`Serial::new`, `Multiprocessing::new`) is deprecated; use
 //! `from_spec`, or `from_factory` for the rare case a closure is really
 //! needed.
+//!
+//! ## Throughput tuning
+//!
+//! Three multiplicative levers, innermost out:
+//!
+//! 1. **Vectorizer pooling** (`TrainConfig::pool`, paper §3.3): `recv`
+//!    returns the first half of the envs to finish (`M = 2N`), so
+//!    rollout inference double-buffers against simulation and stragglers
+//!    never block a batch.
+//! 2. **Pipeline depth** (`TrainConfig::pipeline_depth`,
+//!    `--pipeline.depth`): `0` is the serial collect-then-learn loop;
+//!    `d ≥ 1` moves collection to a dedicated thread that runs up to `d`
+//!    rollout segments ahead over `d + 1` rotating buffers, inferring
+//!    off epoch-versioned parameter snapshots while the learner
+//!    optimizes the previous segment. Simulation and backprop overlap
+//!    instead of taking turns.
+//! 3. **Minibatches** (`TrainConfig::minibatches`): each PPO epoch
+//!    shuffles the segment's agent rows into this many row-subset
+//!    updates (advantages re-normalized per minibatch,
+//!    `TrainConfig::norm_adv`). More, smaller updates per segment —
+//!    standard PPO — and the learner-side cost knob to balance against
+//!    collection.
+//!
+//! ```no_run
+//! use pufferlib::train::{TrainConfig, Trainer};
+//!
+//! let cfg = TrainConfig {
+//!     env: "profile/atari".into(),
+//!     pool: true,        // M = 2N double-buffered simulation
+//!     pipeline_depth: 1, // collector thread overlaps the learner
+//!     minibatches: 4,    // 4 shuffled row-minibatches per PPO epoch
+//!     ..Default::default()
+//! };
+//! let report = Trainer::native(cfg).unwrap().train().unwrap();
+//! // Read the balance: env_sps ≈ collection ceiling, learn_sps ≈
+//! // learner ceiling; end-to-end sps approaches min(env, learn) when
+//! // pipelined. collector_stall_s > 0 → learner-bound (lower epochs /
+//! // minibatch cost); learner_stall_s > 0 → env-bound (more workers,
+//! // enable pool).
+//! println!("sps {:.0} env {:.0} learn {:.0} stalls {:.1}s/{:.1}s",
+//!     report.sps, report.env_sps, report.learn_sps,
+//!     report.collector_stall_s, report.learner_stall_s);
+//! ```
+//!
+//! With `pipeline_depth = 0` and `minibatches = 1` the trainer is the
+//! exact serial loop (bit-identical params; pinned by
+//! `tests/pipeline.rs`), so results stay comparable when you turn the
+//! knobs off.
 
 pub mod backend;
 pub mod config;

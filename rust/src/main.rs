@@ -65,13 +65,17 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
-         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--backend=native|pjrt]\n  \
+         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--backend=native|pjrt]\n  \
          puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
          puffer sweep [--train.KEY=VAL ...]        train the whole Ocean suite\n  \
          puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--wrap.KEY=VAL ...]\n  \
          puffer envs                               list first-party envs\n\n\
-         Train keys: env total_steps lr ent_coef epochs anneal_lr seed\n\
-         \x20           num_workers pool run_dir log_every\n\
+         Train keys: env total_steps lr ent_coef epochs minibatches norm_adv\n\
+         \x20           anneal_lr seed num_workers pool run_dir log_every\n\
+         Pipeline keys: depth — 0 (default) trains serially; d >= 1 runs an\n\
+         \x20 overlapped collector/learner pipeline, the collector filling up\n\
+         \x20 to d rollout segments ahead (e.g. --pipeline.depth=1 with\n\
+         \x20 --train.pool=true --train.minibatches=4 for max overlap)\n\
          Wrap keys (one-line wrapper pipeline, applied innermost-first in\n\
          \x20 this order): action_repeat time_limit scale_reward clip_reward\n\
          \x20 normalize_obs stack — e.g. --wrap.clip_reward=1.0 --wrap.stack=4\n\n\
@@ -162,7 +166,7 @@ fn pjrt_trainer(_tc: TrainConfig) -> Result<Trainer> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let (cfg_file, positional, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
-    reject_stray_overrides(&overrides, &["train.", "wrap."])?;
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline."])?;
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
@@ -176,6 +180,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let mut trainer = make_trainer(tc, &backend)?;
     let report = trainer.train()?;
+    println!(
+        "pipeline: env {:.0} SPS, learner {:.0} SPS, stalls {:.2}s collector / {:.2}s learner",
+        report.env_sps, report.learn_sps, report.collector_stall_s, report.learner_stall_s,
+    );
     println!(
         "done: {} steps @ {:.0} SPS, {} episodes, score {}, return {}",
         report.global_step,
@@ -210,7 +218,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
             true
         }
     });
-    reject_stray_overrides(&overrides, &["train.", "wrap."])?;
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline."])?;
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
@@ -241,9 +249,16 @@ fn cmd_eval(args: &[String]) -> Result<()> {
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let (cfg_file, _, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
-    reject_stray_overrides(&overrides, &["train.", "wrap."])?;
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline."])?;
     let mut solved = 0;
     for env in envs::OCEAN_ENVS {
+        // ocean/memory (recurrent reference spec) is a hard error on the
+        // native backend; report it as skipped instead of aborting the
+        // sweep.
+        if backend == "native" && pufferlib::backend::native::requires_recurrence(env) {
+            println!("{:<20} SKIPPED (needs an LSTM: --features pjrt + --backend=pjrt)", env);
+            continue;
+        }
         let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
         flat.insert("train.env".into(), env.to_string());
         let tc = config::train_config(&flat)?;

@@ -7,6 +7,9 @@
 //! common source of hard-to-diagnose bugs).
 
 pub mod continuous;
+pub mod snapshot;
+
+pub use snapshot::ParamSnapshot;
 
 use crate::backend::PolicyBackend;
 use crate::runtime::SpecManifest;
@@ -68,6 +71,18 @@ impl Policy {
     }
     pub fn params_mut(&mut self) -> &mut Vec<f32> {
         &mut self.params
+    }
+
+    /// Overwrite the parameter vector (e.g. from a [`ParamSnapshot`]
+    /// acquired on the pipelined trainer's collector thread). Length must
+    /// match the spec.
+    pub fn set_params(&mut self, params: &[f32]) {
+        assert_eq!(
+            params.len(),
+            self.spec.n_params,
+            "params length != spec n_params"
+        );
+        self.params.copy_from_slice(params);
     }
 
     /// Zero the recurrent state of a global env row (call when that row's

@@ -5,11 +5,20 @@
 //! driving the learner math through the [`crate::backend::PolicyBackend`]
 //! abstraction (pure-Rust `NativeBackend` by default, AOT/PJRT behind the
 //! `pjrt` feature). Python never runs here.
+//!
+//! Training itself is an **experience pipeline** ([`pipeline`]): with
+//! `train.pipeline.depth ≥ 1` a collector thread fills rotating rollout
+//! segments (inference off epoch-versioned parameter snapshots) while the
+//! learner runs shuffled-minibatch PPO epochs on the previous segment —
+//! simulation and optimization overlap instead of taking turns. Depth 0
+//! is the serial loop, bit-identical to the pre-pipeline trainer.
 
 mod checkpoint;
+pub mod pipeline;
 mod rollout;
 mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use pipeline::Segment;
 pub use rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 pub use trainer::{EvalReport, TrainConfig, TrainReport, Trainer};

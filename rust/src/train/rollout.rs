@@ -78,6 +78,22 @@ impl RolloutBuffer {
         self.next_start.fill(true);
     }
 
+    /// Episode-boundary carry: for each row, whether its *next* stored obs
+    /// begins a new episode. The serial loop reuses one buffer so this
+    /// state persists implicitly; the pipelined trainer rotates several
+    /// buffers and must thread it from the segment just collected into
+    /// the buffer about to be filled ([`Self::set_episode_carry`]).
+    pub fn episode_carry(&self) -> &[bool] {
+        &self.next_start
+    }
+
+    /// Restore the episode-boundary carry exported from the previous
+    /// segment's buffer (see [`Self::episode_carry`]).
+    pub fn set_episode_carry(&mut self, carry: &[bool]) {
+        assert_eq!(carry.len(), self.rows, "carry length != buffer rows");
+        self.next_start.copy_from_slice(carry);
+    }
+
     pub fn all_complete(&self) -> bool {
         self.complete.iter().all(|&c| c)
     }
@@ -166,6 +182,15 @@ impl EpisodeLog {
         }
     }
 
+    /// Append another log's episodes (the pipelined trainer collects into
+    /// a per-segment log on the collector thread and merges learner-side,
+    /// preserving arrival order for the windowed means).
+    pub fn merge(&mut self, other: &EpisodeLog) {
+        self.returns.extend_from_slice(&other.returns);
+        self.lengths.extend_from_slice(&other.lengths);
+        self.scores.extend_from_slice(&other.scores);
+    }
+
     pub fn mean_score(&self, window: usize) -> Option<f64> {
         mean_tail(&self.scores, window)
     }
@@ -195,8 +220,8 @@ fn mean_tail(xs: &[f64], window: usize) -> Option<f64> {
 /// Works on every backend mode: sync needs exactly `T + 1` recvs; pooled
 /// modes take as many as the stragglers require, with surplus frames from
 /// fast envs simply driven (actions computed and sent) but not stored.
-pub fn collect_rollout<V: VecEnv, F>(
-    venv: &mut V,
+pub fn collect_rollout<F>(
+    venv: &mut dyn VecEnv,
     buf: &mut RolloutBuffer,
     log: &mut EpisodeLog,
     mut policy_step: F,
@@ -385,6 +410,28 @@ mod tests {
         assert_eq!(buf.last_values[0], 99.0);
         assert_eq!(buf.rewards, vec![1.0, 2.0]);
         assert_eq!(buf.values, vec![10.0, 11.0]);
+    }
+
+    #[test]
+    fn episode_carry_transfers_across_buffers() {
+        // An episode ends at the tail of buffer A; the carry moved into
+        // buffer B must flag B's first stored obs as an episode start.
+        let mut a = RolloutBuffer::new(1, 2, 1, 1);
+        a.mark_all_starts();
+        a.begin_segment();
+        a.store(0, &[0.0], &[0], -0.5, 0.0);
+        a.store(1, &[0.0], &[0], -0.5, 0.0);
+        a.attribute(0, 1.0, true); // row 0's episode ends
+        a.attribute(1, 0.0, false);
+        assert_eq!(a.episode_carry(), &[true, false]);
+
+        let mut b = RolloutBuffer::new(1, 2, 1, 1);
+        b.next_start.fill(false); // stale state from a previous rotation
+        b.set_episode_carry(a.episode_carry());
+        b.begin_segment();
+        b.store(0, &[0.0], &[0], -0.5, 0.0);
+        b.store(1, &[0.0], &[0], -0.5, 0.0);
+        assert_eq!(b.starts, vec![1.0, 0.0]);
     }
 
     #[test]

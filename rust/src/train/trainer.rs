@@ -1,18 +1,33 @@
-//! The PPO training loop: rollouts → GAE → train_step × epochs, with LR
-//! annealing, checkpointing, and CSV/console metric logging — all through
-//! the [`PolicyBackend`] abstraction, so the same loop drives the pure-
-//! Rust [`NativeBackend`] (default) and the AOT/PJRT path (`pjrt`
-//! feature).
+//! The PPO training loop — as a two-speed **experience pipeline**:
+//!
+//! - `pipeline.depth = 0` (default): the serial loop — rollout → GAE →
+//!   minibatched PPO epochs, one after another on the caller thread. With
+//!   `minibatches = 1` this is bit-identical to the pre-pipeline trainer
+//!   (pinned by `tests/pipeline.rs`).
+//! - `pipeline.depth = d ≥ 1`: a collector thread owns the [`VecEnv`] and
+//!   fills one of `d + 1` rotating [`RolloutBuffer`] segments, inferring
+//!   off an epoch-versioned [`ParamSnapshot`], while the learner (this
+//!   thread) consumes completed segments — GAE plus shuffled-minibatch
+//!   PPO epochs — and publishes fresh parameters. Simulation and
+//!   optimization overlap; each side's stall time is reported so the
+//!   depth × minibatches balance is tunable from the logs.
+//!
+//! Everything runs through the [`PolicyBackend`] abstraction, so the same
+//! loop drives the pure-Rust [`NativeBackend`] (default) and the AOT/PJRT
+//! path (`pjrt` feature).
 
+use super::pipeline::{collector_loop, Segment};
 use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 use super::Checkpoint;
-use crate::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
-use crate::policy::Policy;
-use crate::util::timer::SpsCounter;
+use crate::backend::{AdamState, MinibatchScratch, NativeBackend, PolicyBackend, TrainBatch};
+use crate::policy::{ParamSnapshot, Policy};
+use crate::util::rng::Rng;
+use crate::util::timer::{SpsCounter, Timer};
 use crate::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
 use crate::wrappers::{EnvSpec, WrapperSpec};
 use anyhow::Result;
 use std::io::Write as _;
+use std::sync::mpsc;
 
 /// Training configuration (Clean PuffeRL's YAML keys, as a struct; see
 /// [`crate::config`] for the file/CLI layer).
@@ -31,6 +46,13 @@ pub struct TrainConfig {
     pub ent_coef: f32,
     /// PPO epochs per rollout segment.
     pub epochs: usize,
+    /// Minibatches per epoch: the segment's agent rows are shuffled and
+    /// split into this many row-subset batches (1 = full batch, the
+    /// pre-pipeline behavior). Must divide `batch_roll`.
+    pub minibatches: usize,
+    /// Normalize advantages per minibatch (mean/var) inside the
+    /// surrogate loss. Standard PPO; on by default.
+    pub norm_adv: bool,
     pub anneal_lr: bool,
     pub seed: u64,
     /// Worker threads for the vectorizer (0 = serial backend).
@@ -38,6 +60,11 @@ pub struct TrainConfig {
     /// EnvPool mode: recv half the envs per batch (M = 2N
     /// double-buffering). Requires `num_workers >= 2`.
     pub pool: bool,
+    /// Experience-pipeline depth (`train.pipeline.depth` /
+    /// `--pipeline.depth`): 0 = serial loop; d ≥ 1 = a collector thread
+    /// runs up to d segments ahead of the learner over d + 1 rotating
+    /// buffers.
+    pub pipeline_depth: usize,
     /// Optional run directory for metrics.csv + checkpoints.
     pub run_dir: Option<String>,
     /// Console log every n segments (0 = silent).
@@ -53,10 +80,13 @@ impl Default for TrainConfig {
             lr: 2.5e-3,
             ent_coef: 0.01,
             epochs: 4,
+            minibatches: 1,
+            norm_adv: true,
             anneal_lr: true,
             seed: 1,
             num_workers: 2,
             pool: false,
+            pipeline_depth: 0,
             run_dir: None,
             log_every: 5,
         }
@@ -67,7 +97,29 @@ impl Default for TrainConfig {
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     pub global_step: u64,
+    /// End-to-end env steps per wall-clock second.
     pub sps: f64,
+    /// Steps per second of *collection* alone (env stepping + rollout
+    /// inference, excluding stalls). Equals learner-side idle capacity
+    /// when it exceeds `sps`.
+    pub env_sps: f64,
+    /// Steps per second of *learning* alone (GAE + PPO epochs,
+    /// excluding stalls).
+    pub learn_sps: f64,
+    /// Seconds the collector spent stalled waiting for a free segment
+    /// buffer (pipelined mode; 0 when serial). High values → the learner
+    /// is the bottleneck: raise `pipeline.depth` or lower `epochs` /
+    /// `minibatches` cost.
+    pub collector_stall_s: f64,
+    /// Seconds the learner spent stalled waiting for a filled segment
+    /// (pipelined mode; 0 when serial). High values → collection is the
+    /// bottleneck: add env workers or enable `pool`.
+    pub learner_stall_s: f64,
+    /// Worst-case parameter staleness observed: how many published
+    /// updates the collector's snapshot lagged behind the learner when a
+    /// segment was consumed. 0 when serial; bounded by `pipeline_depth`
+    /// (the learner publishes before recycling each buffer).
+    pub max_param_staleness: u64,
     pub mean_score: Option<f64>,
     pub mean_return: Option<f64>,
     pub episodes: usize,
@@ -96,6 +148,11 @@ pub struct Trainer {
     opt: AdamState,
     global_step: u64,
     metrics_file: Option<std::fs::File>,
+    /// Minibatch row-permutation stream (never consumed when
+    /// `minibatches == 1`, keeping the full-batch path bit-identical to
+    /// the pre-pipeline trainer).
+    shuffle_rng: Rng,
+    scratch: MinibatchScratch,
 }
 
 impl Trainer {
@@ -124,6 +181,17 @@ impl Trainer {
             cfg.wrappers.is_empty(),
             "the pjrt backend executes AOT-compiled specs with fixed shapes; \
              wrapper chains are supported on the native backend only for now"
+        );
+        anyhow::ensure!(
+            cfg.minibatches == 1,
+            "the pjrt backend's train_step was AOT-lowered for the full \
+             (horizon, batch_roll) segment; train.minibatches > 1 requires \
+             the native backend"
+        );
+        anyhow::ensure!(
+            cfg.norm_adv,
+            "the pjrt backend's compiled train_step always normalizes \
+             advantages; train.norm_adv=false requires the native backend"
         );
         let key = crate::runtime::Manifest::spec_key_for_env(&cfg.env);
         let backend = crate::backend::PjrtBackend::new(artifacts_dir, &key)?;
@@ -170,6 +238,13 @@ impl Trainer {
         anyhow::ensure!(
             spec.batch_roll % agents == 0,
             "batch_roll {} not divisible by agents {agents}",
+            spec.batch_roll
+        );
+        anyhow::ensure!(
+            cfg.minibatches >= 1 && spec.batch_roll % cfg.minibatches == 0,
+            "train.minibatches {} must be >= 1 and divide batch_roll {} \
+             (minibatches slice whole agent rows)",
+            cfg.minibatches,
             spec.batch_roll
         );
         let num_envs = spec.batch_roll / agents;
@@ -224,13 +299,14 @@ impl Trainer {
                 let mut f = std::fs::File::create(format!("{dir}/metrics.csv"))?;
                 writeln!(
                     f,
-                    "global_step,sps,score,ep_return,ep_length,loss,pg_loss,v_loss,entropy,approx_kl"
+                    "global_step,sps,score,ep_return,ep_length,loss,pg_loss,v_loss,entropy,approx_kl,env_sps,learn_sps,stall_s"
                 )?;
                 Some(f)
             }
             None => None,
         };
 
+        let shuffle_rng = Rng::new(cfg.seed ^ 0x5B0F_F1E5);
         Ok(Trainer {
             cfg,
             backend,
@@ -242,6 +318,8 @@ impl Trainer {
             opt: AdamState::new(spec.n_params),
             global_step: 0,
             metrics_file,
+            shuffle_rng,
+            scratch: MinibatchScratch::default(),
         })
     }
 
@@ -252,15 +330,29 @@ impl Trainer {
         self.global_step
     }
 
-    /// Run the full training loop.
+    /// Run the full training loop (serial or pipelined per
+    /// [`TrainConfig::pipeline_depth`]).
     pub fn train(&mut self) -> Result<TrainReport> {
-        let spec = self.policy.spec().clone();
-        let t_dim = spec.horizon;
-        let r_dim = spec.batch_roll;
-        let n = t_dim * r_dim;
+        let report = if self.cfg.pipeline_depth == 0 {
+            self.train_serial()?
+        } else {
+            self.train_pipelined()?
+        };
+        if let Some(dir) = &self.cfg.run_dir {
+            self.checkpoint().save(format!("{dir}/checkpoint.bin"))?;
+        }
+        Ok(report)
+    }
+
+    /// The serial loop: collect a segment, then learn on it, on one
+    /// thread. With `minibatches == 1` every operation — and therefore
+    /// every parameter bit — matches the pre-pipeline trainer.
+    fn train_serial(&mut self) -> Result<TrainReport> {
+        let n = self.buf.segment_steps() as u64;
         let mut sps = SpsCounter::new();
+        let mut tel = Telemetry::default();
         let mut last_metrics = [0.0f32; 5];
-        let mut segment = 0usize;
+        let mut segment = 0u64;
         let mut score_curve = Vec::new();
 
         self.venv.async_reset(self.cfg.seed);
@@ -269,6 +361,7 @@ impl Trainer {
 
         while self.global_step < self.cfg.total_steps {
             // ---- Rollout ----
+            let roll = Timer::start();
             let (policy, backend, venv, buf, log) = (
                 &mut self.policy,
                 &mut *self.backend,
@@ -276,8 +369,7 @@ impl Trainer {
                 &mut self.buf,
                 &mut self.log,
             );
-            let mut dyn_venv = VenvRef(venv);
-            collect_rollout(&mut dyn_venv, buf, log, |obs, rows, done_rows| {
+            collect_rollout(venv, buf, log, |obs, rows, done_rows| {
                 // Zero recurrent state for rows whose episode just ended
                 // *before* the forward pass on their fresh observations —
                 // the LSTM state-reset discipline of paper §3.4.
@@ -286,93 +378,223 @@ impl Trainer {
                 }
                 policy.step(&mut *backend, obs, rows)
             })?;
-            self.global_step += n as u64;
-            sps.add(n as u64);
+            tel.env_active_s += roll.secs();
+            self.global_step += n;
+            sps.add(n);
 
-            // ---- GAE ----
-            let (adv, ret) = self.backend.gae(
-                &self.buf.rewards,
-                &self.buf.values,
-                &self.buf.dones,
-                &self.buf.last_values,
+            // ---- GAE + PPO epochs ----
+            let lr = anneal_lr(&self.cfg, self.global_step, self.cfg.total_steps);
+            let learn = Timer::start();
+            last_metrics = learn_on_segment(
+                &mut *self.backend,
+                self.policy.params_mut(),
+                &mut self.opt,
+                &self.cfg,
+                &mut self.shuffle_rng,
+                &mut self.scratch,
+                &self.buf,
+                lr,
             )?;
-
-            // ---- PPO epochs ----
-            let lr = if self.cfg.anneal_lr {
-                let frac = 1.0 - self.global_step as f32 / self.cfg.total_steps as f32;
-                self.cfg.lr * frac.max(0.05)
-            } else {
-                self.cfg.lr
-            };
-            for _ in 0..self.cfg.epochs {
-                let batch = TrainBatch {
-                    t: t_dim,
-                    r: r_dim,
-                    obs: &self.buf.obs,
-                    starts: &self.buf.starts,
-                    actions: &self.buf.actions,
-                    logp: &self.buf.logp,
-                    adv: &adv,
-                    ret: &ret,
-                };
-                last_metrics = self.backend.train_step(
-                    self.policy.params_mut(),
-                    &mut self.opt,
-                    lr,
-                    self.cfg.ent_coef,
-                    &batch,
-                )?;
-            }
+            tel.learn_s += learn.secs();
 
             // ---- Logging ----
             segment += 1;
             if let Some(s) = self.log.mean_score(100) {
                 score_curve.push((self.global_step, s));
             }
-            let window_sps = sps.window();
-            if self.cfg.log_every > 0 && segment % self.cfg.log_every == 0 {
-                println!(
-                    "[{}] step {:>8}  sps {:>8.0}  score {:>6}  return {:>8}  loss {:>8.4}  kl {:>7.4}",
-                    self.cfg.env,
-                    self.global_step,
-                    window_sps,
-                    fmt_opt(self.log.mean_score(100)),
-                    fmt_opt(self.log.mean_return(100)),
-                    last_metrics[0],
-                    last_metrics[4],
-                );
-            }
-            if let Some(f) = &mut self.metrics_file {
-                writeln!(
-                    f,
-                    "{},{:.0},{},{},{},{},{},{},{},{}",
-                    self.global_step,
-                    window_sps,
-                    fmt_opt(self.log.mean_score(100)),
-                    fmt_opt(self.log.mean_return(100)),
-                    fmt_opt(self.log.mean_length(100)),
-                    last_metrics[0],
-                    last_metrics[1],
-                    last_metrics[2],
-                    last_metrics[3],
-                    last_metrics[4],
+            log_segment(
+                &self.cfg,
+                &mut self.metrics_file,
+                self.global_step,
+                sps.window(),
+                sps.total(),
+                &self.log,
+                &last_metrics,
+                segment,
+                &tel,
+            )?;
+        }
+
+        Ok(self.report(sps.overall(), sps.total(), &tel, last_metrics, score_curve))
+    }
+
+    /// The pipelined loop: a collector thread fills rotating segment
+    /// buffers (inference off the latest published params) while this
+    /// thread learns on completed segments and publishes updates.
+    fn train_pipelined(&mut self) -> Result<TrainReport> {
+        let depth = self.cfg.pipeline_depth;
+        let spec = self.policy.spec().clone();
+        let n = (spec.horizon * spec.batch_roll) as u64;
+        let remaining = self.cfg.total_steps.saturating_sub(self.global_step);
+        let segments_total = remaining.div_ceil(n);
+
+        // Collector-side inference stack: a forked backend plus its own
+        // policy (sampling RNG + recurrent state), reading the learner's
+        // published weights — never its in-place-mutating buffer.
+        let mut col_backend = self.backend.fork_for_rollout()?;
+        let mut col_policy = Policy::new(col_backend.as_mut(), self.cfg.seed ^ 0x50C0_11EC)?;
+        col_policy.set_params(self.policy.params());
+        let snapshot = ParamSnapshot::new(self.policy.params().to_vec());
+
+        // depth + 1 buffers rotate collector → learner → collector; the
+        // buffer pool, not the channel, is the back-pressure bound. The
+        // trainer's own segment buffer is lent as pool slot 0 (the
+        // collector rewrites the episode carry before every fill) and
+        // re-created after the scope, so peak memory is depth + 1 segment
+        // buffers instead of depth + 2.
+        let (free_tx, free_rx) = mpsc::channel::<RolloutBuffer>();
+        let (filled_tx, filled_rx) = mpsc::sync_channel::<Result<Segment>>(depth + 1);
+        let lent = std::mem::replace(&mut self.buf, RolloutBuffer::new(0, 0, 0, 0));
+        free_tx.send(lent).expect("free_rx alive");
+        for _ in 0..depth {
+            let buf = RolloutBuffer::new(
+                spec.horizon,
+                spec.batch_roll,
+                spec.obs_dim,
+                spec.act_dims.len(),
+            );
+            free_tx.send(buf).expect("free_rx alive");
+        }
+        // Learner-side endpoints enter the scope closure via take() so
+        // every exit path (success or `?`) drops them there, unblocking a
+        // collector stuck on recv/send before the implicit join.
+        let mut free_tx = Some(free_tx);
+        let mut filled_rx = Some(filled_rx);
+
+        let seed = self.cfg.seed;
+        let mut sps = SpsCounter::new();
+        let mut tel = Telemetry::default();
+        let mut last_metrics = [0.0f32; 5];
+        let mut score_curve = Vec::new();
+
+        let Trainer {
+            cfg,
+            backend,
+            policy,
+            venv,
+            log,
+            opt,
+            global_step,
+            metrics_file,
+            shuffle_rng,
+            scratch,
+            ..
+        } = self;
+
+        // Reborrows handed to the spawned collector must be created out
+        // here: scoped threads may only borrow data living outside the
+        // scope closure.
+        let venv_ref: &mut dyn VecEnv = &mut **venv;
+        let col_policy_ref = &mut col_policy;
+        let col_backend_ref = col_backend.as_mut();
+        let snapshot_ref = &snapshot;
+
+        let scope_result = std::thread::scope(|s| -> Result<()> {
+            let free_tx = free_tx.take().expect("taken once");
+            let filled_rx = filled_rx.take().expect("taken once");
+            let _collector = s.spawn(move || {
+                collector_loop(
+                    venv_ref,
+                    col_policy_ref,
+                    col_backend_ref,
+                    snapshot_ref,
+                    free_rx,
+                    filled_tx,
+                    segments_total,
+                    seed,
+                )
+            });
+
+            let mut segment = 0u64;
+            while segment < segments_total {
+                let wait = Timer::start();
+                let msg = filled_rx.recv().map_err(|_| {
+                    anyhow::anyhow!("collector thread exited before delivering all segments")
+                })?;
+                tel.learner_stall_s += wait.secs();
+                let seg: Segment = msg?;
+                // `segment` publishes have happened so far; the collector
+                // inferred this segment with version `seg.version`.
+                tel.max_staleness = tel.max_staleness.max(segment.saturating_sub(seg.version));
+                log.merge(&seg.log);
+                *global_step += seg.steps;
+                sps.add(seg.steps);
+                tel.env_active_s += seg.collect_s;
+                tel.collector_stall_s += seg.stall_s;
+
+                let lr = anneal_lr(cfg, *global_step, cfg.total_steps);
+                let learn = Timer::start();
+                last_metrics = learn_on_segment(
+                    backend.as_mut(),
+                    policy.params_mut(),
+                    opt,
+                    cfg,
+                    shuffle_rng,
+                    scratch,
+                    &seg.buf,
+                    lr,
                 )?;
+                tel.learn_s += learn.secs();
+                snapshot.publish(policy.params());
+
+                segment += 1;
+                if let Some(sc) = log.mean_score(100) {
+                    score_curve.push((*global_step, sc));
+                }
+                log_segment(
+                    cfg,
+                    metrics_file,
+                    *global_step,
+                    sps.window(),
+                    sps.total(),
+                    log,
+                    &last_metrics,
+                    segment,
+                    &tel,
+                )?;
+                // Recycle; the collector may already be done with its
+                // quota, so a hung-up receiver is fine.
+                let _ = free_tx.send(seg.buf);
             }
-        }
+            Ok(())
+        });
 
-        if let Some(dir) = &self.cfg.run_dir {
-            self.checkpoint().save(format!("{dir}/checkpoint.bin"))?;
-        }
+        // Re-create the lent segment buffer on every exit path (including
+        // errors) so a later train() on this trainer — e.g. after
+        // restore() rewinds global_step — finds a full-sized buffer.
+        self.buf = RolloutBuffer::new(
+            spec.horizon,
+            spec.batch_roll,
+            spec.obs_dim,
+            spec.act_dims.len(),
+        );
+        scope_result?;
 
-        Ok(TrainReport {
+        Ok(self.report(sps.overall(), sps.total(), &tel, last_metrics, score_curve))
+    }
+
+    fn report(
+        &self,
+        sps: f64,
+        steps: u64,
+        tel: &Telemetry,
+        last_metrics: [f32; 5],
+        score_curve: Vec<(u64, f64)>,
+    ) -> TrainReport {
+        TrainReport {
             global_step: self.global_step,
-            sps: sps.overall(),
+            sps,
+            env_sps: rate(steps, tel.env_active_s),
+            learn_sps: rate(steps, tel.learn_s),
+            collector_stall_s: tel.collector_stall_s,
+            learner_stall_s: tel.learner_stall_s,
+            max_param_staleness: tel.max_staleness,
             mean_score: self.log.mean_score(100),
             mean_return: self.log.mean_return(100),
             episodes: self.log.scores.len(),
             last_loss: last_metrics[0],
             score_curve,
-        })
+        }
     }
 
     /// Evaluate the current policy (stochastic sampling, fresh envs) for
@@ -469,6 +691,139 @@ impl Trainer {
     }
 }
 
+/// Per-run wall-clock accounting (both trainer paths).
+#[derive(Default)]
+struct Telemetry {
+    /// Collection time: env stepping + rollout inference.
+    env_active_s: f64,
+    /// Learning time: GAE + PPO epochs.
+    learn_s: f64,
+    collector_stall_s: f64,
+    learner_stall_s: f64,
+    /// Worst published-updates lag of any consumed segment's snapshot.
+    max_staleness: u64,
+}
+
+fn rate(steps: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        0.0
+    } else {
+        steps as f64 / secs
+    }
+}
+
+/// Annealed learning rate at `global_step` (the pre-pipeline formula,
+/// evaluated after the segment's steps are added).
+fn anneal_lr(cfg: &TrainConfig, global_step: u64, total_steps: u64) -> f32 {
+    if cfg.anneal_lr {
+        let frac = 1.0 - global_step as f32 / total_steps as f32;
+        cfg.lr * frac.max(0.05)
+    } else {
+        cfg.lr
+    }
+}
+
+/// Learner half shared by both paths: GAE over the full segment, then
+/// `epochs × minibatches` PPO updates. With `minibatches == 1` the full
+/// buffers are passed straight through (no shuffle, no gather) — the
+/// bit-identical pre-pipeline path; otherwise agent rows are shuffled
+/// each epoch and gathered into dense row-subset views
+/// ([`TrainBatch::gather_rows`]).
+#[allow(clippy::too_many_arguments)]
+fn learn_on_segment(
+    backend: &mut dyn PolicyBackend,
+    params: &mut Vec<f32>,
+    opt: &mut AdamState,
+    cfg: &TrainConfig,
+    shuffle_rng: &mut Rng,
+    scratch: &mut MinibatchScratch,
+    buf: &RolloutBuffer,
+    lr: f32,
+) -> Result<[f32; 5]> {
+    let (adv, ret) = backend.gae(&buf.rewards, &buf.values, &buf.dones, &buf.last_values)?;
+    let full = TrainBatch {
+        t: buf.horizon,
+        r: buf.rows,
+        norm_adv: cfg.norm_adv,
+        obs: &buf.obs,
+        starts: &buf.starts,
+        actions: &buf.actions,
+        logp: &buf.logp,
+        adv: &adv,
+        ret: &ret,
+    };
+    let mut metrics = [0.0f32; 5];
+    if cfg.minibatches <= 1 {
+        for _ in 0..cfg.epochs {
+            metrics = backend.train_step(params, opt, lr, cfg.ent_coef, &full)?;
+        }
+    } else {
+        let mb_rows = buf.rows / cfg.minibatches;
+        let mut perm: Vec<usize> = (0..buf.rows).collect();
+        for _ in 0..cfg.epochs {
+            shuffle_rng.shuffle(&mut perm);
+            for rows in perm.chunks_exact(mb_rows) {
+                let mb = full.gather_rows(rows, scratch);
+                metrics = backend.train_step(params, opt, lr, cfg.ent_coef, &mb)?;
+            }
+        }
+    }
+    Ok(metrics)
+}
+
+/// Console + CSV metric emission, once per segment.
+#[allow(clippy::too_many_arguments)]
+fn log_segment(
+    cfg: &TrainConfig,
+    metrics_file: &mut Option<std::fs::File>,
+    global_step: u64,
+    window_sps: f64,
+    total_steps_done: u64,
+    log: &EpisodeLog,
+    metrics: &[f32; 5],
+    segment: u64,
+    tel: &Telemetry,
+) -> Result<()> {
+    let env_sps = rate(total_steps_done, tel.env_active_s);
+    let learn_sps = rate(total_steps_done, tel.learn_s);
+    let stall_s = tel.collector_stall_s + tel.learner_stall_s;
+    if cfg.log_every > 0 && segment % cfg.log_every as u64 == 0 {
+        println!(
+            "[{}] step {:>8}  sps {:>8.0}  env {:>8.0}  learn {:>8.0}  stall {:>6.2}s  score {:>6}  return {:>8}  loss {:>8.4}  kl {:>7.4}",
+            cfg.env,
+            global_step,
+            window_sps,
+            env_sps,
+            learn_sps,
+            stall_s,
+            fmt_opt(log.mean_score(100)),
+            fmt_opt(log.mean_return(100)),
+            metrics[0],
+            metrics[4],
+        );
+    }
+    if let Some(f) = metrics_file {
+        writeln!(
+            f,
+            "{},{:.0},{},{},{},{},{},{},{},{},{:.0},{:.0},{:.3}",
+            global_step,
+            window_sps,
+            fmt_opt(log.mean_score(100)),
+            fmt_opt(log.mean_return(100)),
+            fmt_opt(log.mean_length(100)),
+            metrics[0],
+            metrics[1],
+            metrics[2],
+            metrics[3],
+            metrics[4],
+            env_sps,
+            learn_sps,
+            stall_s,
+        )?;
+    }
+    Ok(())
+}
+
 fn fmt_opt(x: Option<f64>) -> String {
     match x {
         Some(v) => format!("{v:.3}"),
@@ -491,36 +846,6 @@ fn pick_workers(num_envs: usize, want: usize, pool: bool) -> usize {
         best = w;
     }
     best
-}
-
-/// Adapter so `collect_rollout` (generic over `V: VecEnv`) can take the
-/// boxed trait object.
-struct VenvRef<'a>(&'a mut dyn VecEnv);
-impl crate::vector::VecEnv for VenvRef<'_> {
-    fn obs_layout(&self) -> &crate::spaces::StructLayout {
-        self.0.obs_layout()
-    }
-    fn action_dims(&self) -> &[usize] {
-        self.0.action_dims()
-    }
-    fn agents_per_env(&self) -> usize {
-        self.0.agents_per_env()
-    }
-    fn num_envs(&self) -> usize {
-        self.0.num_envs()
-    }
-    fn batch_size(&self) -> usize {
-        self.0.batch_size()
-    }
-    fn async_reset(&mut self, seed: u64) {
-        self.0.async_reset(seed)
-    }
-    fn recv(&mut self) -> Result<crate::vector::StepBatch<'_>> {
-        self.0.recv()
-    }
-    fn send(&mut self, actions: &[i32]) -> Result<()> {
-        self.0.send(actions)
-    }
 }
 
 #[cfg(test)]
@@ -565,8 +890,46 @@ mod tests {
                 log_every: 0,
                 ..Default::default()
             };
+            if crate::backend::native::requires_recurrence(env) {
+                // Feedforward-only backend: recurrent reference specs are
+                // a hard, actionable construction error.
+                let err = Trainer::native(cfg).err().expect(env).to_string();
+                assert!(err.contains("--features pjrt"), "{env}: {err}");
+                continue;
+            }
             let t = Trainer::native(cfg).unwrap_or_else(|e| panic!("{env}: {e}"));
             assert_eq!(t.policy().params().len(), t.policy().spec().n_params);
         }
+    }
+
+    #[test]
+    fn minibatches_must_divide_batch_roll() {
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            minibatches: 5, // batch_roll is 32
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let err = Trainer::native(cfg).unwrap_err().to_string();
+        assert!(err.contains("minibatches"), "{err}");
+    }
+
+    #[test]
+    fn anneal_matches_pre_pipeline_formula() {
+        let cfg = TrainConfig {
+            lr: 1.0,
+            anneal_lr: true,
+            ..Default::default()
+        };
+        assert!((anneal_lr(&cfg, 250, 1000) - 0.75).abs() < 1e-6);
+        // Floors at 5%.
+        assert!((anneal_lr(&cfg, 1000, 1000) - 0.05).abs() < 1e-6);
+        let no = TrainConfig {
+            lr: 0.3,
+            anneal_lr: false,
+            ..Default::default()
+        };
+        assert_eq!(anneal_lr(&no, 900, 1000), 0.3);
     }
 }

@@ -164,7 +164,12 @@ pub struct StepBatch<'a> {
 ///     venv.send(&actions)?;                // routed to those same envs
 /// }
 /// ```
-pub trait VecEnv {
+///
+/// `Send` is a supertrait: the pipelined trainer drives the venv from a
+/// dedicated collector thread, so every backend must be movable (and
+/// `&mut`-borrowable) across threads. All env state is already `Send`
+/// ([`FlatEnv`] requires it), so implementations get this for free.
+pub trait VecEnv: Send {
     fn obs_layout(&self) -> &StructLayout;
     fn action_dims(&self) -> &[usize];
     /// Agent rows per env (1 for single-agent envs).

@@ -1,0 +1,276 @@
+//! Pipeline-equivalence suite for the collector/learner trainer.
+//!
+//! - `pipeline.depth = 0` must reproduce the pre-refactor serial loop
+//!   **bit for bit**: the first test hand-rolls that loop (collect → GAE
+//!   → full-batch PPO epochs, exactly the operations and ordering of the
+//!   old `Trainer::train` body) against the same seeds and compares
+//!   parameters, optimizer state, and step counters after 3 segments.
+//! - The pipelined path must checkpoint/restore losslessly and continue
+//!   training without a score cliff.
+//! - The minibatch split must not break learning.
+
+use pufferlib::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
+use pufferlib::policy::Policy;
+use pufferlib::train::{
+    collect_rollout, Checkpoint, EpisodeLog, RolloutBuffer, TrainConfig, Trainer,
+};
+use pufferlib::vector::{Serial, VecConfig, VecEnv};
+use pufferlib::wrappers::EnvSpec;
+
+const SEED: u64 = 7;
+const ENV: &str = "ocean/bandit";
+
+fn serial_cfg(total_steps: u64) -> TrainConfig {
+    TrainConfig {
+        env: ENV.into(),
+        total_steps,
+        seed: SEED,
+        num_workers: 0, // Serial vectorizer: fully deterministic ordering
+        log_every: 0,
+        ..Default::default()
+    }
+}
+
+/// The pre-refactor trainer body, hand-rolled: rollout → GAE → lr anneal
+/// → `epochs` full-batch `train_step`s, repeated until `total_steps`.
+/// Construction mirrors `Trainer::native` + `Trainer::build` exactly.
+fn reference_serial_run(total_steps: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32, u64) {
+    let cfg = serial_cfg(total_steps);
+    let spec_env = EnvSpec::new(cfg.env.as_str());
+    let probe = spec_env.build(0);
+    let mut backend = NativeBackend::for_env(&spec_env.key(), probe.as_ref()).unwrap();
+    let spec = backend.spec().clone();
+    drop(probe);
+    let num_envs = spec.batch_roll / spec.agents;
+    let mut venv = Serial::from_spec(
+        &spec_env,
+        VecConfig {
+            num_envs,
+            num_workers: 1,
+            batch_size: num_envs,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut policy = Policy::new(&mut backend, cfg.seed).unwrap();
+    let mut opt = AdamState::new(spec.n_params);
+    let mut buf = RolloutBuffer::new(
+        spec.horizon,
+        spec.batch_roll,
+        spec.obs_dim,
+        spec.act_dims.len(),
+    );
+    let mut log = EpisodeLog::default();
+    let n = (spec.horizon * spec.batch_roll) as u64;
+    let mut global_step = 0u64;
+
+    venv.async_reset(cfg.seed);
+    buf.mark_all_starts();
+    policy.reset_all_state();
+    while global_step < cfg.total_steps {
+        collect_rollout(&mut venv, &mut buf, &mut log, |obs, rows, done_rows| {
+            for &r in done_rows {
+                policy.reset_state(r);
+            }
+            policy.step(&mut backend, obs, rows)
+        })
+        .unwrap();
+        global_step += n;
+
+        let (adv, ret) = backend
+            .gae(&buf.rewards, &buf.values, &buf.dones, &buf.last_values)
+            .unwrap();
+        let lr = if cfg.anneal_lr {
+            let frac = 1.0 - global_step as f32 / cfg.total_steps as f32;
+            cfg.lr * frac.max(0.05)
+        } else {
+            cfg.lr
+        };
+        for _ in 0..cfg.epochs {
+            let batch = TrainBatch {
+                t: spec.horizon,
+                r: spec.batch_roll,
+                norm_adv: true, // the old loop always normalized in-batch
+                obs: &buf.obs,
+                starts: &buf.starts,
+                actions: &buf.actions,
+                logp: &buf.logp,
+                adv: &adv,
+                ret: &ret,
+            };
+            backend
+                .train_step(policy.params_mut(), &mut opt, lr, cfg.ent_coef, &batch)
+                .unwrap();
+        }
+    }
+    (
+        policy.params().to_vec(),
+        opt.m.clone(),
+        opt.v.clone(),
+        opt.step,
+        global_step,
+    )
+}
+
+#[test]
+fn depth0_is_bit_identical_to_the_pre_refactor_serial_loop() {
+    let spec = EnvSpec::new(ENV);
+    let probe = spec.build(0);
+    let backend = NativeBackend::for_env(&spec.key(), probe.as_ref()).unwrap();
+    let n = (backend.spec().horizon * backend.spec().batch_roll) as u64;
+    let total_steps = 3 * n; // 3 segments
+
+    let (ref_params, ref_m, ref_v, ref_step, ref_global) = reference_serial_run(total_steps);
+
+    let mut trainer = Trainer::native(serial_cfg(total_steps)).unwrap();
+    assert_eq!(trainer.global_step(), 0);
+    trainer.train().unwrap();
+    assert_eq!(trainer.global_step(), ref_global);
+    assert_eq!(
+        trainer.policy().params(),
+        &ref_params[..],
+        "depth=0 params diverged from the pre-refactor serial loop"
+    );
+    let ck = trainer.checkpoint();
+    assert_eq!(ck.adam_m, ref_m, "Adam m diverged");
+    assert_eq!(ck.adam_v, ref_v, "Adam v diverged");
+    assert_eq!(ck.adam_step, ref_step, "Adam step count diverged");
+}
+
+#[test]
+fn depth0_is_deterministic_across_runs() {
+    let run = || {
+        let mut t = Trainer::native(serial_cfg(2 * 1024)).unwrap();
+        t.train().unwrap();
+        t.policy().params().to_vec()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn minibatched_serial_training_still_learns() {
+    let cfg = TrainConfig {
+        minibatches: 4,
+        ..serial_cfg(16_000)
+    };
+    let mut trainer = Trainer::native(cfg).unwrap();
+    let report = trainer.train().unwrap();
+    let score = report.mean_score.expect("episodes finished");
+    assert!(
+        score > 0.75,
+        "minibatched bandit should be mostly solved by 16k steps, got {score}"
+    );
+}
+
+#[test]
+fn pipelined_checkpoint_round_trip_continues_without_cliff() {
+    let dir = std::env::temp_dir().join("puffer_pipeline_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pipelined = |total_steps: u64| TrainConfig {
+        env: ENV.into(),
+        total_steps,
+        seed: SEED,
+        pipeline_depth: 1,
+        minibatches: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+
+    // Phase 1: train halfway through the pipelined path and checkpoint.
+    let mut first = Trainer::native(pipelined(8_192)).unwrap();
+    let report1 = first.train().unwrap();
+    assert!(report1.global_step >= 8_192);
+    let ck = first.checkpoint();
+    let path = dir.join("ck.bin");
+    ck.save(&path).unwrap();
+    drop(first);
+
+    // Round trip the file: params + Adam state + wrapper-chain key +
+    // global_step all survive byte-exactly.
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back, ck);
+
+    // A differently-wrapped trainer must refuse the checkpoint (the
+    // wrapper chain is part of the spec key).
+    let mut wrong_chain = Trainer::native(TrainConfig {
+        wrappers: vec![pufferlib::wrappers::WrapperSpec::Stack(2)],
+        total_steps: 0,
+        ..pipelined(0)
+    })
+    .unwrap();
+    let err = wrong_chain.restore(&back).unwrap_err().to_string();
+    assert!(err.contains("checkpoint is for"), "{err}");
+
+    // Phase 2: restore into a fresh pipelined trainer and continue to the
+    // full budget. No score cliff: the restored policy evaluates well
+    // immediately, and further training keeps (or improves) the score.
+    let mut second = Trainer::native(pipelined(16_384)).unwrap();
+    second.restore(&back).unwrap();
+    assert_eq!(second.global_step(), back.global_step);
+    let eval = second.eval(50).unwrap();
+    assert!(
+        eval.mean_score.unwrap() > 0.6,
+        "restored eval score cliff: {:?}",
+        eval.mean_score
+    );
+    let report2 = second.train().unwrap();
+    assert!(report2.global_step >= 16_384);
+    assert!(
+        report2.mean_score.unwrap_or(0.0) > 0.75,
+        "continued pipelined training regressed: {:?}",
+        report2.mean_score
+    );
+}
+
+#[test]
+fn pipelined_trainer_supports_repeated_train_calls() {
+    // The pipeline lends the trainer's segment buffer into the rotating
+    // pool; it must be restored so a rewind (restore an older
+    // checkpoint) followed by another train() collects again instead of
+    // panicking on a zero-sized buffer.
+    let cfg = TrainConfig {
+        env: ENV.into(),
+        total_steps: 2_048,
+        seed: SEED,
+        pipeline_depth: 1,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut t = Trainer::native(cfg).unwrap();
+    let ck0 = t.checkpoint(); // pristine, global_step 0
+    t.train().unwrap();
+    assert!(t.global_step() >= 2_048);
+    t.restore(&ck0).unwrap();
+    assert_eq!(t.global_step(), 0);
+    let report = t.train().unwrap();
+    assert!(report.global_step >= 2_048);
+}
+
+#[test]
+fn pipelined_report_exposes_stall_accounting() {
+    // A deliberately learner-light run: stall numbers must be finite and
+    // the env/learn split populated.
+    let cfg = TrainConfig {
+        env: "ocean/stochastic".into(),
+        total_steps: 2_048,
+        seed: SEED,
+        pipeline_depth: 2, // 3 rotating buffers
+        epochs: 1,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::native(cfg).unwrap();
+    let report = trainer.train().unwrap();
+    assert!(report.env_sps > 0.0);
+    assert!(report.learn_sps > 0.0);
+    assert!(report.collector_stall_s >= 0.0 && report.collector_stall_s.is_finite());
+    assert!(report.learner_stall_s >= 0.0 && report.learner_stall_s.is_finite());
+    // The learner publishes before recycling each buffer, so snapshot
+    // staleness is bounded by the pipeline depth.
+    assert!(
+        report.max_param_staleness <= 2,
+        "staleness {} exceeds depth 2",
+        report.max_param_staleness
+    );
+}
