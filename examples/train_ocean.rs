@@ -3,11 +3,11 @@
 //! (score > 0.9) in roughly 30k interactions with one barely-tuned
 //! hyperparameter set.
 //!
-//! Caveat for the default (native) backend: ocean/memory needs recurrence
-//! to be solvable, and native training is feedforward-only — the trainer
-//! refuses to construct it (a hard error naming `--features pjrt`), so
-//! this sweep skips it unless built with `--features pjrt` and driven
-//! through the PJRT backend (see rust/README.md).
+//! ocean/memory needs recurrence to be solvable: its default
+//! `PolicySpec` resolves the LSTM sandwich, and since the native backend
+//! gained BPTT the sweep trains it like every other env — no pjrt-only
+//! caveat. (We shrink its trunk/state to 48 below: the scalar BPTT is
+//! the one genuinely expensive cell, and a 48-wide LSTM solves it.)
 //!
 //! Everything composes here: Rust coordinator (emulation + vectorization
 //! + PPO loop) → the `PolicyBackend` learner math. The default build uses
@@ -21,6 +21,7 @@
 //! Env names as args restrict the sweep: `... train_ocean ocean/memory`.
 
 use pufferlib::envs;
+use pufferlib::policy::PolicySpec;
 use pufferlib::train::{TrainConfig, Trainer};
 
 /// Per-env step budget/hypers: one base config, with the paper's "barely
@@ -60,7 +61,11 @@ fn config_for(env: &str) -> TrainConfig {
         },
         "ocean/memory" => TrainConfig {
             total_steps: 120_000,
-            lr: 5e-3,
+            lr: 2.5e-3,
+            ent_coef: 0.01,
+            // The LSTM sandwich, sized down: a 48-wide trunk/state is
+            // plenty for 3-bit recall and keeps scalar BPTT fast.
+            policy: Some(PolicySpec::default().with_hidden(48).with_lstm(48)),
             ..base
         },
         _ => base,
@@ -78,12 +83,6 @@ fn main() -> anyhow::Result<()> {
     println!("=== Ocean end-to-end training sweep (paper §4 / bench C3) ===\n");
     let mut rows = Vec::new();
     for env in &selected {
-        if pufferlib::backend::native::requires_recurrence(env) {
-            // Recurrent reference specs hard-error on the feedforward
-            // native backend; skip instead of aborting the sweep.
-            println!("skipping {env}: needs an LSTM (--features pjrt + --backend=pjrt)");
-            continue;
-        }
         let cfg = config_for(env);
         let steps = cfg.total_steps;
         let mut trainer = Trainer::native(cfg)?;

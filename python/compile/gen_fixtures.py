@@ -144,6 +144,157 @@ def main():
         "metrics": lst(metrics),
     }
 
+    # ---- train_step_lstm (BPTT through the scan: grads + clip + Adam) ----
+    # Pins the native backend's hand-derived backward-through-time pass,
+    # including episode-start state masking. Reuses the forward_lstm
+    # parameters (pl0); fresh inputs are drawn *after* all prior groups so
+    # the existing fixture values stay bit-identical.
+    t_l, b_l = 5, 4
+    obs_l = rng.standard_normal((t_l, b_l, D)).astype(np.float32)
+    starts_l = (rng.random((t_l, b_l)) < 0.3).astype(np.float32)
+    starts_l[0] = 1.0
+    actions_l = np.stack(
+        [rng.integers(0, k, (t_l, b_l)) for k in ACT_DIMS], axis=2
+    ).astype(np.int32)
+    old_logp_l = (rng.standard_normal((t_l, b_l)) * 0.5 - 1.0).astype(np.float32)
+    adv_l = rng.standard_normal((t_l, b_l)).astype(np.float32)
+    ret_l = rng.standard_normal((t_l, b_l)).astype(np.float32)
+    ml0 = (np.abs(rng.standard_normal(pl0.shape[0])) * 1e-3).astype(np.float32)
+    vl0 = (np.abs(rng.standard_normal(pl0.shape[0])) * 1e-4).astype(np.float32)
+    ts_l = model.make_train_step(D, ACT_DIMS, True)
+    pl2, ml2, vl2, sl2, metrics_l = ts_l(
+        jnp.asarray(pl0), jnp.asarray(ml0), jnp.asarray(vl0),
+        jnp.asarray(step0, jnp.float32), jnp.asarray(lr, jnp.float32),
+        jnp.asarray(ent_coef, jnp.float32),
+        jnp.asarray(obs_l), jnp.asarray(starts_l), jnp.asarray(actions_l),
+        jnp.asarray(old_logp_l), jnp.asarray(adv_l), jnp.asarray(ret_l),
+    )
+    fx["train_step_lstm"] = {
+        "t": t_l,
+        "b": b_l,
+        "params": lst(pl0),
+        "m": lst(ml0),
+        "v": lst(vl0),
+        "step": step0,
+        "lr": lr,
+        "ent_coef": ent_coef,
+        "obs": lst(obs_l),
+        "starts": lst(starts_l),
+        "actions": np.asarray(actions_l).ravel().tolist(),
+        "old_logp": lst(old_logp_l),
+        "adv": lst(adv_l),
+        "ret": lst(ret_l),
+        "params2": lst(pl2),
+        "m2": lst(ml2),
+        "v2": lst(vl2),
+        "step2": float(sl2),
+        "metrics": lst(metrics_l),
+    }
+
+    # ---- embedding lookup (fwd + one full train step for the bwd) ----
+    # Architecture: {feat: f32[2], tok: MultiDiscrete([5, 5])} with
+    # embed_dim 3 — the flat row is [f0, f1, t0, t1], the trunk input is
+    # [f0, f1, emb(t0), emb(t1)] (2 + 2*3 wide). Param pytree keys are
+    # chosen so ravel_pytree's alphabetical order matches the Rust
+    # ArchRanges layout: actor, critic, embed_00, enc1, enc2.
+    ED, VOCAB = 3, 5
+    trunk_in = 2 + 2 * ED
+
+    def init_embed(key):
+        ks = jax.random.split(key, 8)
+
+        def dense(k, fi, fo, scale):
+            w = jax.random.normal(k, (fi, fo)) * (scale / jnp.sqrt(fi))
+            return {"w": w.astype(jnp.float32), "b": jnp.zeros(fo, jnp.float32)}
+
+        return {
+            "actor": dense(ks[0], H, sum(ACT_DIMS), 0.01),
+            "critic": dense(ks[1], H, 1, 1.0),
+            "embed_00": {
+                "w": (
+                    jax.random.normal(ks[2], (VOCAB, ED)) * (1.0 / jnp.sqrt(VOCAB))
+                ).astype(jnp.float32)
+            },
+            "enc1": dense(ks[3], trunk_in, H, 1.0),
+            "enc2": dense(ks[4], H, H, 1.0),
+        }
+
+    ep_tree = init_embed(jax.random.PRNGKey(21))
+    ep0, eunravel = ravel_pytree(ep_tree)
+    ep0 = np.asarray(ep0, np.float32)
+
+    from .kernels.fused_mlp import linear_act
+
+    def embed_forward(pf, obs):
+        p = eunravel(pf)
+        toks = jnp.clip(jnp.round(obs[:, 2:]).astype(jnp.int32), 0, VOCAB - 1)
+        emb = p["embed_00"]["w"][toks].reshape(obs.shape[0], 2 * ED)
+        trunk = jnp.concatenate([obs[:, :2], emb], axis=1)
+        h = linear_act(trunk, p["enc1"]["w"], p["enc1"]["b"], "tanh")
+        x = linear_act(h, p["enc2"]["w"], p["enc2"]["b"], "tanh")
+        logits = linear_act(x, p["actor"]["w"], p["actor"]["b"], "none")
+        value = linear_act(x, p["critic"]["w"], p["critic"]["b"], "none")
+        return logits, value[:, 0]
+
+    ne = 12
+    eobs = np.zeros((ne, 4), np.float32)
+    eobs[:, :2] = rng.standard_normal((ne, 2)).astype(np.float32)
+    eobs[:, 2:] = rng.integers(0, VOCAB, (ne, 2)).astype(np.float32)
+    elo, eva = embed_forward(jnp.asarray(ep0), jnp.asarray(eobs))
+    fx["embed_forward"] = {
+        "rows": ne,
+        "embed_dim": ED,
+        "vocab": VOCAB,
+        "params": lst(ep0),
+        "obs": lst(eobs),
+        "logits": lst(elo),
+        "value": lst(eva),
+    }
+
+    eact = np.stack([rng.integers(0, k, ne) for k in ACT_DIMS], axis=1).astype(np.int32)
+    elogp = (rng.standard_normal(ne) * 0.5 - 1.0).astype(np.float32)
+    eadv = rng.standard_normal(ne).astype(np.float32)
+    eret = rng.standard_normal(ne).astype(np.float32)
+    em0 = (np.abs(rng.standard_normal(ep0.shape[0])) * 1e-3).astype(np.float32)
+    ev0 = (np.abs(rng.standard_normal(ep0.shape[0])) * 1e-4).astype(np.float32)
+
+    def embed_train_step(pf, m, v, step, lr_, ec, obs, actions, old_logp, adv, ret):
+        def loss_fn(pf):
+            logits, value = embed_forward(pf, obs)
+            return model._ppo_loss(
+                logits, value, actions, old_logp, adv, ret, ec, tuple(ACT_DIMS)
+            )
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(pf)
+        pf, m, v, step = model._adam(pf, m, v, step, lr_, grads)
+        pg, vl, e, kl = aux
+        return pf, m, v, step, jnp.stack([loss, pg, vl, e, kl])
+
+    ep2, em2, ev2, es2, emetrics = embed_train_step(
+        jnp.asarray(ep0), jnp.asarray(em0), jnp.asarray(ev0),
+        jnp.asarray(step0, jnp.float32), jnp.asarray(lr, jnp.float32),
+        jnp.asarray(ent_coef, jnp.float32),
+        jnp.asarray(eobs), jnp.asarray(eact), jnp.asarray(elogp),
+        jnp.asarray(eadv), jnp.asarray(eret),
+    )
+    fx["embed_train_step"] = {
+        "rows": ne,
+        "m": lst(em0),
+        "v": lst(ev0),
+        "step": step0,
+        "lr": lr,
+        "ent_coef": ent_coef,
+        "actions": np.asarray(eact).ravel().tolist(),
+        "old_logp": lst(elogp),
+        "adv": lst(eadv),
+        "ret": lst(eret),
+        "params2": lst(ep2),
+        "m2": lst(em2),
+        "v2": lst(ev2),
+        "step2": float(es2),
+        "metrics": lst(emetrics),
+    }
+
     path = os.path.join(args.out, "native_parity.json")
     with open(path, "w") as f:
         json.dump(fx, f)

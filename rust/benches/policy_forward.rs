@@ -1,0 +1,191 @@
+//! **Bench P3** — policy forward/backward throughput per architecture:
+//! what a [`PolicySpec`] costs. Three cells over synthetic data at the
+//! shared rollout geometry (T=32, R=32):
+//!
+//! - `flat-mlp` — the default architecture (raw 64-f32 row → 128-wide
+//!   trunk → heads): the baseline every env gets for free.
+//! - `embed-tokens` — 8 token slots over a 128-entry vocabulary embedded
+//!   at width 8 plus 16 raw features: the NetHack-style symbolic path.
+//! - `lstm` — the recurrent sandwich (state 128) with full BPTT in the
+//!   backward cell: what `ocean/memory`-class envs now pay natively.
+//!
+//! Reported per cell: rollout-forward rows/s (batch 32) and train-step
+//! samples/s (one full PPO update over the T×R segment).
+//! `PUFFER_BENCH_POLICY_ITERS` scales iteration counts;
+//! `PUFFER_BENCH_JSON` writes machine-readable results (`make bench`
+//! sets it to `BENCH_policy.json`).
+
+use pufferlib::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
+use pufferlib::policy::{PolicySpec, ResolvedPolicy};
+use pufferlib::runtime::SpecManifest;
+use pufferlib::spaces::Space;
+use pufferlib::util::json::{arr, num, obj, s, Json};
+use pufferlib::util::timer::Timer;
+use std::collections::BTreeMap;
+
+const T: usize = 32;
+const R: usize = 32;
+const ACT: usize = 4;
+
+struct Cell {
+    label: &'static str,
+    fwd_rows_per_s: f64,
+    train_samples_per_s: f64,
+    n_params: usize,
+}
+
+fn manifest_for(arch: &ResolvedPolicy) -> SpecManifest {
+    SpecManifest {
+        obs_dim: arch.obs_dim,
+        n_params: arch.n_params(),
+        act_dims: arch.act_dims.clone(),
+        agents: 1,
+        lstm: arch.is_recurrent(),
+        hidden: arch.hidden(),
+        policy: arch.effective_spec(),
+        batch_fwd: R,
+        batch_roll: R,
+        horizon: T,
+        gamma: 0.99,
+        lam: 0.95,
+        params0: String::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn bench_arch(label: &'static str, arch: ResolvedPolicy, iters: usize) -> Cell {
+    let spec = manifest_for(&arch);
+    let d = arch.obs_dim;
+    let lstm = arch.is_recurrent();
+    let sd = arch.state_dim();
+    let n_params = arch.n_params();
+    let mut b = NativeBackend::from_arch(label.to_string(), spec, arch, 1).unwrap();
+    let params = b.init_params().unwrap();
+
+    // Deterministic pseudo-random inputs; token slots get small values
+    // that stay in-vocabulary after rounding.
+    let obs: Vec<f32> = (0..T * R * d)
+        .map(|i| ((i * 37 % 97) as f32 / 97.0) * 3.0)
+        .collect();
+
+    // Rollout-forward throughput at the pool batch width.
+    let t0 = Timer::start();
+    let (h0, c0) = (vec![0.0f32; R * sd], vec![0.0f32; R * sd]);
+    for i in 0..iters {
+        let rows = &obs[(i % T) * R * d..((i % T) + 1) * R * d];
+        if lstm {
+            b.forward_lstm(&params, rows, &h0, &c0, R).unwrap();
+        } else {
+            b.forward(&params, rows, R).unwrap();
+        }
+    }
+    let fwd_rows_per_s = (iters * R) as f64 / t0.secs();
+
+    // Train-step throughput over the full segment.
+    let mut p = params.clone();
+    let mut opt = AdamState::new(p.len());
+    let n = T * R;
+    let actions: Vec<i32> = (0..n).map(|i| (i % ACT) as i32).collect();
+    let logp = vec![-1.2f32; n];
+    let adv: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.3).collect();
+    let ret: Vec<f32> = (0..n).map(|i| (i % 5) as f32 * 0.2).collect();
+    let starts: Vec<f32> = (0..n).map(|i| if i % 6 == 0 { 1.0 } else { 0.0 }).collect();
+    let batch = TrainBatch {
+        t: T,
+        r: R,
+        norm_adv: true,
+        obs: &obs,
+        starts: &starts,
+        actions: &actions,
+        logp: &logp,
+        adv: &adv,
+        ret: &ret,
+    };
+    let train_iters = (iters / 16).max(2);
+    let t1 = Timer::start();
+    for _ in 0..train_iters {
+        b.train_step(&mut p, &mut opt, 1e-4, 0.01, &batch).unwrap();
+    }
+    let train_samples_per_s = (train_iters * n) as f64 / t1.secs();
+
+    Cell {
+        label,
+        fwd_rows_per_s,
+        train_samples_per_s,
+        n_params,
+    }
+}
+
+fn main() {
+    let iters: usize = std::env::var("PUFFER_BENCH_POLICY_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let json_path = std::env::var("PUFFER_BENCH_JSON").ok();
+    let act_dims = [ACT];
+
+    let flat_space = Space::boxf(&[64], -1.0, 1.0);
+    let flat = ResolvedPolicy::resolve(&PolicySpec::default(), &flat_space.layout(), &act_dims)
+        .unwrap();
+
+    let embed_space = Space::dict(vec![
+        ("feats".into(), Space::boxf(&[16], -1.0, 1.0)),
+        ("tokens".into(), Space::boxi32(&[8], 0.0, 127.0)),
+    ]);
+    let embed = ResolvedPolicy::resolve(
+        &PolicySpec::default().with_embed_dim(8),
+        &embed_space.layout(),
+        &act_dims,
+    )
+    .unwrap();
+    assert!(embed.has_embeds(), "bench arch must actually embed");
+
+    let lstm = ResolvedPolicy::resolve(
+        &PolicySpec::default().with_lstm(128),
+        &flat_space.layout(),
+        &act_dims,
+    )
+    .unwrap();
+
+    println!("# Bench P3 — policy fwd/bwd throughput per architecture ({iters} fwd iters)");
+    println!(
+        "| {:<14} | {:>10} | {:>14} | {:>16} |",
+        "Architecture", "params", "fwd rows/s", "train samples/s"
+    );
+    println!("|{}|{}|{}|{}|", "-".repeat(16), "-".repeat(12), "-".repeat(16), "-".repeat(18));
+    let mut cells = Vec::new();
+    for (label, arch) in [("flat-mlp", flat), ("embed-tokens", embed), ("lstm", lstm)] {
+        let cell = bench_arch(label, arch, iters);
+        println!(
+            "| {:<14} | {:>10} | {:>14.0} | {:>16.0} |",
+            cell.label, cell.n_params, cell.fwd_rows_per_s, cell.train_samples_per_s
+        );
+        cells.push(cell);
+    }
+    println!("\n# flat-mlp is the baseline; embed-tokens trades a gather for a");
+    println!("# narrower effective input; lstm pays the cell + BPTT tax natively.");
+
+    if let Some(path) = json_path {
+        let cells_json: Vec<Json> = cells
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("arch", s(c.label)),
+                    ("n_params", num(c.n_params as f64)),
+                    ("fwd_rows_per_s", num(c.fwd_rows_per_s)),
+                    ("train_samples_per_s", num(c.train_samples_per_s)),
+                ])
+            })
+            .collect();
+        let out = obj(vec![
+            ("bench", s("policy_forward")),
+            ("iters", num(iters as f64)),
+            ("geometry", s("T=32 R=32")),
+            ("cells", arr(cells_json)),
+        ]);
+        match std::fs::write(&path, out.dump()) {
+            Ok(()) => println!("\n# wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+}

@@ -5,23 +5,27 @@
 //! Two implementations ship:
 //!
 //! - [`NativeBackend`] (default) — a pure-Rust port of the reference math
-//!   in `python/compile/kernels/ref.py` / `gae.py` and `model.py`: the
-//!   fused policy-MLP forward, the LSTM cell, the GAE reverse scan, and
-//!   the full clipped-surrogate PPO update (hand-derived backprop +
-//!   global-norm clip + Adam). Zero native dependencies: the crate builds
-//!   and trains on a clean machine with no XLA artifacts and no Python.
+//!   in `python/compile/kernels/ref.py` / `gae.py` and `model.py`, built
+//!   from a resolved [`PolicySpec`](crate::policy::PolicySpec): per-leaf
+//!   observation encoders (raw or embedding tables), the trunk MLP
+//!   forward, the LSTM cell **and full BPTT training**, the GAE reverse
+//!   scan, and the full clipped-surrogate PPO update (hand-derived
+//!   backprop + global-norm clip + Adam). Zero native dependencies: the
+//!   crate builds and trains on a clean machine with no XLA artifacts
+//!   and no Python.
 //! - `PjrtBackend` (`pjrt` cargo feature) — the original AOT path: JAX/
 //!   Pallas entry points lowered to HLO text by `python/compile/aot.py`
-//!   and executed through the PJRT C API.
+//!   and executed through the PJRT C API. Executes default architectures
+//!   only (the shapes are baked into the artifacts).
 //!
 //! Both speak the same flat-parameter contract (the alphabetical
 //! `ravel_pytree` order of `model.py`), so checkpoints written against
-//! one backend restore against the other **when the spec architectures
-//! match** — i.e. feedforward specs; recurrent specs currently train only
-//! on the PJRT path, and [`crate::train::Trainer::restore`] rejects
-//! mismatched parameter counts. Golden-value parity between the two is
-//! pinned by `rust/tests/native_parity.rs` against fixtures generated
-//! from the JAX reference (`python/compile/gen_fixtures.py`).
+//! one backend restore against the other **when the resolved
+//! architectures match** — [`crate::train::Trainer::restore`] rejects
+//! mismatched architecture keys and parameter counts. Golden-value
+//! parity between the two is pinned by `rust/tests/native_parity.rs`
+//! against fixtures generated from the JAX reference
+//! (`python/compile/gen_fixtures.py`).
 
 pub mod native;
 #[cfg(feature = "pjrt")]

@@ -1,35 +1,45 @@
 //! [`NativeBackend`] — the default, dependency-free compute backend: a
 //! pure-Rust port of the reference math the Pallas kernels are checked
 //! against (`python/compile/kernels/ref.py`, `gae.py`) and of the Clean
-//! PuffeRL learner in `python/compile/model.py`:
+//! PuffeRL learner in `python/compile/model.py`.
 //!
-//! - the two-layer tanh policy MLP with actor/critic heads (the fused
-//!   `linear_act` kernel's `y = act(x @ w + b)` contract),
-//! - the fused-gate LSTM cell (rollout-side recurrence),
+//! Since the PolicySpec redesign the backend builds its forward **and
+//! backward** passes from a [`ResolvedPolicy`] — the declarative
+//! [`PolicySpec`] bound to the env's emulated observation layout:
+//!
+//! - per-leaf observation encoders (raw f32 pass-through, or learned
+//!   embedding tables for Discrete/token leaves) concatenated into the
+//!   two-layer tanh trunk (the fused `linear_act` kernel's
+//!   `y = act(x @ w + b)` contract),
+//! - recurrence as a composable stage: the fused-gate LSTM cell on the
+//!   rollout side **and full BPTT through the time scan on the training
+//!   side** (`model.py::train_step_lstm`), over whole rollout rows with
+//!   episode-start state masking — recurrent envs train natively,
 //! - the GAE reverse time scan,
 //! - the full clipped-surrogate PPO update: hand-derived backprop through
-//!   the MLP + softmax heads, global-norm gradient clipping, and Adam —
-//!   bit-for-bit the same update rule as `model._adam`.
+//!   every stage, global-norm gradient clipping, and Adam — bit-for-bit
+//!   the same update rule as `model._adam`.
 //!
 //! The flat parameter vector uses the same layout as the PJRT path:
 //! JAX's `ravel_pytree` flattens the params dict in alphabetical leaf
-//! order (`actor.b, actor.w, critic.b, critic.w, enc1.b, enc1.w, enc2.b,
-//! enc2.w[, lstm.b, lstm.w]`), so checkpoints are interchangeable across
-//! backends for matching (feedforward) architectures. Parity with the
-//! JAX reference is pinned by `rust/tests/native_parity.rs` against
-//! checked-in fixtures.
-//!
-//! Recurrent *training* (BPTT through the scan) is not ported yet: specs
-//! are synthesized with `lstm: false`, so recurrent envs train with the
-//! feedforward policy on the native path; the `pjrt` feature retains full
-//! LSTM training.
+//! order (`actor.b, actor.w, critic.b, critic.w[, embed_00.w …], enc1.b,
+//! enc1.w, enc2.b, enc2.w[, lstm.b, lstm.w]`), so checkpoints are
+//! interchangeable across backends for matching architectures. The
+//! default [`PolicySpec`] reproduces the pre-PolicySpec model bit for
+//! bit; parity with the JAX reference (including embedding fwd/bwd and
+//! LSTM BPTT gradients) is pinned by `rust/tests/native_parity.rs`
+//! against checked-in fixtures.
 
 use super::{AdamState, Forward, ForwardLstm, PolicyBackend, TrainBatch};
 use crate::emulation::FlatEnv;
+use crate::policy::arch::{ArchRanges, PolicySpec, ResolvedPolicy, TrunkSegment};
 use crate::runtime::{Manifest, SpecManifest};
 use crate::util::rng::Rng;
 use anyhow::{ensure, Result};
+use std::borrow::Cow;
 use std::collections::BTreeMap;
+
+pub use crate::policy::arch::requires_recurrence;
 
 // Rollout geometry + hyperparameters, mirroring python/compile/aot.py and
 // model.py (the Python↔Rust contract for the PJRT path; the native path
@@ -48,77 +58,26 @@ const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
 
-/// Envs whose reference spec (aot.py ENV_SPECS) is recurrent and therefore
-/// untrainable on the feedforward-only native backend. Accepts a full
-/// [`EnvSpec`](crate::wrappers::EnvSpec) key — wrapper fragments after `+`
-/// are ignored. The sweep CLI, examples, and tests use this to route or
-/// skip such envs instead of tripping the hard error in
-/// [`NativeBackend::for_env`].
-pub fn requires_recurrence(env_name: &str) -> bool {
-    const RECURRENT_REFERENCE_SPECS: &[&str] = &["ocean/memory"];
-    let base_name = env_name.split('+').next().unwrap_or(env_name);
-    RECURRENT_REFERENCE_SPECS.contains(&base_name)
-}
-
-/// Flat parameter count for the model architecture.
+/// Flat parameter count for the *default* (flat-observation) model
+/// architecture — the legacy formula, kept as the Python↔Rust n_params
+/// cross-check. Arbitrary architectures: [`ResolvedPolicy::n_params`].
 pub fn n_params(obs_dim: usize, act_dims: &[usize], hidden: usize, lstm: bool) -> usize {
-    let a: usize = act_dims.iter().sum();
-    let h = hidden;
-    let mut n = (a + h * a) // actor
-        + (1 + h)           // critic
-        + (h + obs_dim * h) // enc1
-        + (h + h * h); // enc2
+    let mut spec = PolicySpec::default().with_hidden(hidden);
     if lstm {
-        n += 4 * h + (2 * h) * (4 * h); // fused-gate cell
+        spec = spec.with_lstm(hidden);
     }
-    n
+    ResolvedPolicy::from_flat(&spec, obs_dim, act_dims).n_params()
 }
 
-/// Byte offsets of each leaf inside the flat parameter vector, in
-/// `ravel_pytree` (alphabetical) order — the single source of truth for
-/// the layout, shared by the forward pass (parameter views) and the
-/// backward pass (gradient accumulation).
-struct ParamRanges {
-    actor_b: std::ops::Range<usize>,
-    actor_w: std::ops::Range<usize>,
-    critic_b: std::ops::Range<usize>,
-    critic_w: std::ops::Range<usize>,
-    enc1_b: std::ops::Range<usize>,
-    enc1_w: std::ops::Range<usize>,
-    enc2_b: std::ops::Range<usize>,
-    enc2_w: std::ops::Range<usize>,
-    lstm_b: std::ops::Range<usize>,
-    lstm_w: std::ops::Range<usize>,
-}
-
-fn param_ranges(d: usize, h: usize, a: usize, lstm: bool) -> ParamRanges {
-    let mut off = 0;
-    let mut take = move |n: usize| {
-        let r = off..off + n;
-        off += n;
-        r
-    };
-    ParamRanges {
-        actor_b: take(a),
-        actor_w: take(h * a),
-        critic_b: take(1),
-        critic_w: take(h),
-        enc1_b: take(h),
-        enc1_w: take(d * h),
-        enc2_b: take(h),
-        enc2_w: take(h * h),
-        lstm_b: if lstm { take(4 * h) } else { 0..0 },
-        lstm_w: if lstm { take(2 * h * 4 * h) } else { 0..0 },
-    }
-}
-
-/// Borrowed views of each leaf inside the flat parameter vector. Weights
-/// are row-major `(fan_in, fan_out)`.
+/// Borrowed views of each parameter leaf inside the flat vector, laid
+/// out by [`ResolvedPolicy::ranges`]. Weights are row-major
+/// `(fan_in, fan_out)`; embedding tables are `(vocab, embed_dim)`.
 struct ParamView<'a> {
     actor_b: &'a [f32],
     actor_w: &'a [f32],
     critic_b: &'a [f32],
     critic_w: &'a [f32],
+    embeds: Vec<&'a [f32]>,
     enc1_b: &'a [f32],
     enc1_w: &'a [f32],
     enc2_b: &'a [f32],
@@ -128,19 +87,21 @@ struct ParamView<'a> {
 }
 
 impl<'a> ParamView<'a> {
-    fn split(p: &'a [f32], d: usize, h: usize, a: usize, lstm: bool) -> Result<ParamView<'a>> {
+    fn split(p: &'a [f32], arch: &ResolvedPolicy) -> Result<ParamView<'a>> {
+        let r = arch.ranges();
         ensure!(
-            p.len() == n_params(d, &[a], h, lstm),
-            "params len {} != expected {} (obs_dim {d}, act {a}, hidden {h}, lstm {lstm})",
+            p.len() == r.total,
+            "params len {} != expected {} for architecture '{}'",
             p.len(),
-            n_params(d, &[a], h, lstm)
+            r.total,
+            arch.spec.key()
         );
-        let r = param_ranges(d, h, a, lstm);
         Ok(ParamView {
             actor_b: &p[r.actor_b],
             actor_w: &p[r.actor_w],
             critic_b: &p[r.critic_b],
             critic_w: &p[r.critic_w],
+            embeds: r.embeds.iter().map(|e| &p[e.clone()]).collect(),
             enc1_b: &p[r.enc1_b],
             enc1_w: &p[r.enc1_w],
             enc2_b: &p[r.enc2_b],
@@ -224,53 +185,189 @@ fn sigmoid(x: f32) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// Shared PPO loss: per-slot softmax statistics, the clipped surrogate,
+// and its gradient w.r.t. logits/values — identical math for the
+// feedforward and BPTT paths (model._ppo_loss).
+
+/// Returns `(metrics, d_logits, d_value)` over `n` flattened sample rows.
+/// `metrics = [loss, pg_loss, v_loss, entropy, approx_kl]`.
+#[allow(clippy::too_many_arguments)]
+fn ppo_loss_grads(
+    act_dims: &[usize],
+    logits: &[f32],
+    values: &[f32],
+    actions: &[i32],
+    old_logp: &[f32],
+    adv: &[f32],
+    ret: &[f32],
+    ent_coef: f32,
+    norm_adv: bool,
+    n: usize,
+) -> Result<([f32; 5], Vec<f32>, Vec<f32>)> {
+    let a: usize = act_dims.iter().sum();
+    let slots = act_dims.len();
+    let nf = n as f32;
+
+    // Per-slot softmax statistics: probs, log-probs, slot entropies.
+    let mut probs = vec![0.0f32; n * a];
+    let mut lps = vec![0.0f32; n * a];
+    let mut slot_ent = vec![0.0f32; n * slots];
+    let mut logp = vec![0.0f32; n];
+    let mut entropy = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &logits[i * a..(i + 1) * a];
+        let mut off = 0;
+        for (s, &k) in act_dims.iter().enumerate() {
+            let seg = &row[off..off + k];
+            let mx = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &x in seg {
+                z += (x - mx).exp();
+            }
+            let logz = z.ln() + mx;
+            let mut hs = 0.0f32;
+            for (j, &x) in seg.iter().enumerate() {
+                let lp = x - logz;
+                let p = lp.exp();
+                lps[i * a + off + j] = lp;
+                probs[i * a + off + j] = p;
+                hs -= p * lp;
+            }
+            let act = actions[i * slots + s] as usize;
+            ensure!(act < k, "action {act} out of range for slot {s} (dim {k})");
+            logp[i] += lps[i * a + off + act];
+            slot_ent[i * slots + s] = hs;
+            entropy[i] += hs;
+            off += k;
+        }
+    }
+
+    // Clipped-surrogate loss (model._ppo_loss). Advantages are
+    // normalized over *this* batch when `norm_adv` — i.e. per minibatch
+    // once the trainer splits the segment.
+    let (mu, sd) = if norm_adv {
+        let mu = adv.iter().sum::<f32>() / nf;
+        let var = adv.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / nf;
+        (mu, var.sqrt())
+    } else {
+        (0.0, 1.0)
+    };
+    let mut pg_loss = 0.0f32;
+    let mut v_loss = 0.0f32;
+    let mut ent_mean = 0.0f32;
+    let mut kl = 0.0f32;
+    let mut g_logp = vec![0.0f32; n]; // d pg_loss / d logp_i
+    let mut d_value = vec![0.0f32; n];
+    for i in 0..n {
+        let advn = if norm_adv {
+            (adv[i] - mu) / (sd + 1e-8)
+        } else {
+            adv[i]
+        };
+        let logratio = logp[i] - old_logp[i];
+        let ratio = logratio.exp();
+        let clipped = ratio.clamp(1.0 - CLIP, 1.0 + CLIP);
+        let pg1 = -advn * ratio;
+        let pg2 = -advn * clipped;
+        pg_loss += pg1.max(pg2);
+        // max() routes the gradient: the clipped branch is flat
+        // outside the trust region. Inside it, clipped == ratio so
+        // pg1 == pg2 and this branch covers that case too.
+        if pg1 >= pg2 {
+            g_logp[i] = -advn * ratio / nf;
+        }
+        v_loss += 0.5 * (values[i] - ret[i]) * (values[i] - ret[i]);
+        d_value[i] = VF_COEF * (values[i] - ret[i]) / nf;
+        ent_mean += entropy[i];
+        kl += (ratio - 1.0) - logratio;
+    }
+    pg_loss /= nf;
+    v_loss /= nf;
+    ent_mean /= nf;
+    kl /= nf;
+    let loss = pg_loss - ent_coef * ent_mean + VF_COEF * v_loss;
+
+    // d loss / d logits: policy-gradient term + entropy-bonus term.
+    let mut d_logits = vec![0.0f32; n * a];
+    for i in 0..n {
+        let mut off = 0;
+        for (s, &k) in act_dims.iter().enumerate() {
+            let act = actions[i * slots + s] as usize;
+            let hs = slot_ent[i * slots + s];
+            for j in 0..k {
+                let p = probs[i * a + off + j];
+                let lp = lps[i * a + off + j];
+                let onehot = if j == act { 1.0 } else { 0.0 };
+                d_logits[i * a + off + j] =
+                    g_logp[i] * (onehot - p) + (ent_coef / nf) * p * (lp + hs);
+            }
+            off += k;
+        }
+    }
+
+    Ok(([loss, pg_loss, v_loss, ent_mean, kl], d_logits, d_value))
+}
+
+// ---------------------------------------------------------------------------
 
 /// The pure-Rust compute backend (see module docs).
 #[derive(Clone)]
 pub struct NativeBackend {
     key: String,
     spec: SpecManifest,
+    arch: ResolvedPolicy,
     rng: Rng,
 }
 
 impl NativeBackend {
-    /// Build a backend for a first-party env: probes the emulated
-    /// observation layout / action dims and synthesizes the spec with the
-    /// shared rollout geometry (`B_FWD`/`B_ROLL`/`HORIZON`).
-    ///
-    /// `env_name` may be a full [`EnvSpec`](crate::wrappers::EnvSpec) key
-    /// ("ocean/squared+clip_reward=1+stack=4"); the wrapper fragments
-    /// become part of the backend/checkpoint key, and `env` is expected
-    /// to be the *wrapped* probe so the spec is sized from the wrapped
-    /// geometry.
+    /// Build a backend for a first-party env with its **default**
+    /// architecture ([`PolicySpec::default_for`] — feedforward, except
+    /// recurrent reference envs, which get the LSTM sandwich).
     pub fn for_env(env_name: &str, env: &dyn FlatEnv) -> Result<Self> {
-        // The native backend trains feedforward only, which cannot solve
-        // memory tasks — fail at construction instead of burning the step
-        // budget training garbage (this used to be a warning that was
-        // trivially lost in training logs).
+        Self::for_env_with_policy(env_name, env, &PolicySpec::default_for(env_name))
+    }
+
+    /// Build a backend for an env with an explicit [`PolicySpec`]: the
+    /// spec's per-leaf encoders are resolved against the env's emulated
+    /// observation layout, and the architecture key fragment is embedded
+    /// in the backend/checkpoint key (relative to the env's default
+    /// spec, so default-arch checkpoints keep their pre-PolicySpec
+    /// keys).
+    ///
+    /// `env_name` may be a full [`EnvSpec`](crate::wrappers::EnvSpec)
+    /// key ("ocean/squared+clip_reward=1+stack=4"); wrapper fragments
+    /// become part of the key, and `env` is expected to be the *wrapped*
+    /// probe so the spec is sized from the wrapped geometry.
+    pub fn for_env_with_policy(
+        env_name: &str,
+        env: &dyn FlatEnv,
+        policy: &PolicySpec,
+    ) -> Result<Self> {
+        // A feedforward policy cannot solve a memory task — fail at
+        // construction instead of burning the step budget training
+        // garbage. (The *default* spec for such envs is recurrent; this
+        // only fires when a user explicitly forces feedforward.)
         ensure!(
-            !requires_recurrence(env_name),
+            policy.is_recurrent() || !requires_recurrence(env_name),
             "'{env_name}' needs a recurrent (LSTM) policy to be solvable, but \
-             the native backend trains feedforward policies only — training \
-             would produce ~chance scores. Build with `--features pjrt`, run \
-             `make artifacts`, and select `--backend=pjrt` for LSTM training."
+             this PolicySpec is feedforward — training would produce ~chance \
+             scores. Drop the override (the default spec for this env is \
+             recurrent) or set --policy.lstm=true."
         );
         let agents = env.num_agents();
         ensure!(
             B_ROLL % agents == 0,
             "env '{env_name}': batch_roll {B_ROLL} not divisible by {agents} agents"
         );
-        let obs_dim = env.obs_layout().flat_len();
-        let act_dims = env.action_dims().to_vec();
+        let arch = ResolvedPolicy::resolve(policy, env.obs_layout(), env.action_dims())?;
         let spec = SpecManifest {
-            obs_dim,
-            n_params: n_params(obs_dim, &act_dims, HIDDEN, false),
-            act_dims,
+            obs_dim: arch.obs_dim,
+            n_params: arch.n_params(),
+            act_dims: arch.act_dims.clone(),
             agents,
-            // Recurrent training is a PJRT-path feature for now; the
-            // native policy is always the feedforward MLP.
-            lstm: false,
-            hidden: HIDDEN,
+            lstm: arch.is_recurrent(),
+            hidden: arch.hidden(),
+            policy: arch.effective_spec(),
             batch_fwd: B_FWD,
             batch_roll: B_ROLL,
             horizon: HORIZON,
@@ -279,33 +376,268 @@ impl NativeBackend {
             params0: String::new(),
             artifacts: BTreeMap::new(),
         };
-        let key = Manifest::spec_key_for_env(env_name);
-        // Deterministic per-spec init, like aot.py's name-hashed params0.
+        let mut key = Manifest::spec_key_for_env(env_name);
+        if let Some(frag) = arch.key_fragment(&PolicySpec::default_for(env_name)) {
+            key.push('#');
+            key.push_str(&frag);
+        }
+        // Deterministic per-spec init, like aot.py's name-hashed params0
+        // (the architecture fragment participates, so distinct archs
+        // draw distinct initial weights).
         let seed = key
             .bytes()
             .fold(0x4E41_5449u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
-        Ok(NativeBackend::from_spec(key, spec, seed))
+        Self::from_arch(key, spec, arch, seed)
     }
 
-    /// Build from an explicit spec (tests, custom geometries).
+    /// Build from an explicit manifest spec (tests, custom geometries,
+    /// manifest-driven paths): the architecture is taken from
+    /// `spec.policy` over the opaque flat observation — no layout, so no
+    /// per-leaf embedding resolution (see
+    /// [`from_arch`](Self::from_arch) for that).
+    ///
+    /// # Panics
+    ///
+    /// If `spec` is internally inconsistent — `n_params` / `lstm` /
+    /// `hidden` disagreeing with what `spec.policy` resolves to. That is
+    /// a caller-constructed contradiction, not an input condition; use
+    /// [`from_arch`](Self::from_arch) for fallible construction.
     pub fn from_spec(key: String, spec: SpecManifest, seed: u64) -> Self {
-        NativeBackend {
+        let arch = ResolvedPolicy::from_flat(&spec.policy, spec.obs_dim, &spec.act_dims);
+        Self::from_arch(key, spec, arch, seed)
+            .unwrap_or_else(|e| panic!("from_spec: manifest contradicts its own policy spec: {e}"))
+    }
+
+    /// Build from a fully resolved architecture (golden-fixture tests,
+    /// embedded-leaf specs with explicit geometry).
+    pub fn from_arch(
+        key: String,
+        spec: SpecManifest,
+        arch: ResolvedPolicy,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(
+            spec.n_params == arch.n_params(),
+            "spec '{key}': manifest n_params {} != resolved architecture {} ('{}')",
+            spec.n_params,
+            arch.n_params(),
+            arch.spec.key()
+        );
+        ensure!(
+            spec.obs_dim == arch.obs_dim && spec.act_dims == arch.act_dims,
+            "spec '{key}': manifest geometry disagrees with resolved architecture"
+        );
+        ensure!(
+            spec.lstm == arch.is_recurrent(),
+            "spec '{key}': manifest lstm flag disagrees with the architecture"
+        );
+        Ok(NativeBackend {
             key,
             spec,
+            arch,
             rng: Rng::new(seed),
+        })
+    }
+
+    /// The resolved architecture this backend executes.
+    pub fn arch(&self) -> &ResolvedPolicy {
+        &self.arch
+    }
+
+    /// Build the trunk input for `rows` observations: raw segments pass
+    /// through, token segments are replaced by embedding-table rows.
+    /// Returns the trunk (borrowed when nothing is embedded — the
+    /// default path stays zero-copy) plus the clamped token indices per
+    /// embed segment (kept for the backward scatter).
+    fn trunk_input<'a>(
+        &self,
+        pv: &ParamView<'_>,
+        obs: &'a [f32],
+        rows: usize,
+    ) -> (Cow<'a, [f32]>, Vec<Vec<usize>>) {
+        if !self.arch.has_embeds() {
+            return (Cow::Borrowed(obs), Vec::new());
+        }
+        let d = self.arch.obs_dim;
+        let ti = self.arch.trunk_in;
+        let dim = self.arch.spec.embed_dim;
+        let mut trunk = vec![0.0f32; rows * ti];
+        let mut tokens: Vec<Vec<usize>> = Vec::new();
+        let mut col = 0usize;
+        let mut ei = 0usize;
+        for seg in &self.arch.segments {
+            match *seg {
+                TrunkSegment::Raw { offset, count, .. } => {
+                    for i in 0..rows {
+                        trunk[i * ti + col..i * ti + col + count]
+                            .copy_from_slice(&obs[i * d + offset..i * d + offset + count]);
+                    }
+                    col += count;
+                }
+                TrunkSegment::Embed {
+                    offset,
+                    count,
+                    vocab,
+                    base,
+                    ..
+                } => {
+                    let table = pv.embeds[ei];
+                    let mut toks = Vec::with_capacity(rows * count);
+                    for i in 0..rows {
+                        for j in 0..count {
+                            let v = obs[i * d + offset + j];
+                            let t = ((v.round() as i64) - base as i64)
+                                .clamp(0, vocab as i64 - 1) as usize;
+                            trunk[i * ti + col + j * dim..i * ti + col + (j + 1) * dim]
+                                .copy_from_slice(&table[t * dim..(t + 1) * dim]);
+                            toks.push(t);
+                        }
+                    }
+                    tokens.push(toks);
+                    ei += 1;
+                    col += count * dim;
+                }
+            }
+        }
+        (Cow::Owned(trunk), tokens)
+    }
+
+    /// Scatter `d_trunk` (`rows × trunk_in`) into the embedding-table
+    /// gradients — the backward half of [`trunk_input`](Self::trunk_input).
+    fn scatter_embed_grads(
+        &self,
+        d_trunk: &[f32],
+        tokens: &[Vec<usize>],
+        rows: usize,
+        grads: &mut [f32],
+        ranges: &ArchRanges,
+    ) {
+        let ti = self.arch.trunk_in;
+        let dim = self.arch.spec.embed_dim;
+        let mut col = 0usize;
+        let mut ei = 0usize;
+        for seg in &self.arch.segments {
+            match seg {
+                TrunkSegment::Raw { count, .. } => col += count,
+                TrunkSegment::Embed { count, .. } => {
+                    let g = &mut grads[ranges.embeds[ei].clone()];
+                    let toks = &tokens[ei];
+                    for i in 0..rows {
+                        for j in 0..*count {
+                            let t = toks[i * count + j];
+                            let c0 = i * ti + col + j * dim;
+                            let src = &d_trunk[c0..c0 + dim];
+                            for (o, &v) in g[t * dim..(t + 1) * dim].iter_mut().zip(src) {
+                                *o += v;
+                            }
+                        }
+                    }
+                    col += count * dim;
+                    ei += 1;
+                }
+            }
         }
     }
 
-    fn act_sum(&self) -> usize {
-        self.spec.act_dims.iter().sum()
+    /// Backward through the actor/critic heads, shared by both train
+    /// paths: accumulates head parameter gradients and **overwrites**
+    /// `d_hidden` with `d_logits @ actor_wᵀ + d_value ⊗ critic_w`
+    /// (`rows × decode_in`).
+    #[allow(clippy::too_many_arguments)]
+    fn head_backward(
+        &self,
+        pv: &ParamView<'_>,
+        ranges: &ArchRanges,
+        hidden: &[f32],
+        d_logits: &[f32],
+        d_value: &[f32],
+        rows: usize,
+        grads: &mut [f32],
+        d_hidden: &mut [f32],
+    ) {
+        let (d_in, a) = (self.arch.decode_in(), self.arch.act_sum());
+        for i in 0..rows {
+            for j in 0..a {
+                grads[ranges.actor_b.start + j] += d_logits[i * a + j];
+            }
+            grads[ranges.critic_b.start] += d_value[i];
+        }
+        accum_at_b(hidden, d_logits, &mut grads[ranges.actor_w.clone()], rows, d_in, a);
+        for i in 0..rows {
+            let dv = d_value[i];
+            if dv != 0.0 {
+                for kk in 0..d_in {
+                    grads[ranges.critic_w.start + kk] += hidden[i * d_in + kk] * dv;
+                }
+            }
+        }
+        matmul_a_wt(d_logits, pv.actor_w, d_hidden, rows, a, d_in);
+        for i in 0..rows {
+            let dv = d_value[i];
+            for kk in 0..d_in {
+                d_hidden[i * d_in + kk] += dv * pv.critic_w[kk];
+            }
+        }
     }
 
-    /// Two-layer tanh encoder (model.py `encode`). Returns `(h1, x)`:
-    /// `h1` is kept for backprop, `x` feeds the decoder or LSTM cell.
-    fn encode(&self, pv: &ParamView<'_>, obs: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
-        let (d, h) = (self.spec.obs_dim, self.spec.hidden);
+    /// Backward through the trunk — tanh' through enc2, enc2 grads,
+    /// tanh' through enc1, enc1 grads, and the embedding scatter — shared
+    /// verbatim by the feedforward path and every BPTT step. `d_top` is
+    /// the loss gradient w.r.t. the trunk output `x` (`rows × hidden`);
+    /// scratch buffers in `s` are resized (not reallocated) per call.
+    #[allow(clippy::too_many_arguments)]
+    fn trunk_backward(
+        &self,
+        pv: &ParamView<'_>,
+        ranges: &ArchRanges,
+        d_top: &[f32],
+        x: &[f32],
+        h1: &[f32],
+        trunk: &[f32],
+        tokens: &[Vec<usize>],
+        rows: usize,
+        grads: &mut [f32],
+        s: &mut TrunkBwdScratch,
+    ) {
+        let (h, ti) = (self.arch.hidden(), self.arch.trunk_in);
+        s.d_z2.resize(rows * h, 0.0);
+        s.d_z2.copy_from_slice(d_top);
+        for (dz, &hv) in s.d_z2.iter_mut().zip(x) {
+            *dz *= 1.0 - hv * hv;
+        }
+        accum_at_b(h1, &s.d_z2, &mut grads[ranges.enc2_w.clone()], rows, h, h);
+        for i in 0..rows {
+            for j in 0..h {
+                grads[ranges.enc2_b.start + j] += s.d_z2[i * h + j];
+            }
+        }
+        s.d_h1.resize(rows * h, 0.0);
+        matmul_a_wt(&s.d_z2, pv.enc2_w, &mut s.d_h1, rows, h, h);
+        s.d_z1.resize(rows * h, 0.0);
+        s.d_z1.copy_from_slice(&s.d_h1);
+        for (dz, &hv) in s.d_z1.iter_mut().zip(h1) {
+            *dz *= 1.0 - hv * hv;
+        }
+        accum_at_b(trunk, &s.d_z1, &mut grads[ranges.enc1_w.clone()], rows, ti, h);
+        for i in 0..rows {
+            for j in 0..h {
+                grads[ranges.enc1_b.start + j] += s.d_z1[i * h + j];
+            }
+        }
+        if self.arch.has_embeds() {
+            s.d_trunk.resize(rows * ti, 0.0);
+            matmul_a_wt(&s.d_z1, pv.enc1_w, &mut s.d_trunk, rows, h, ti);
+            self.scatter_embed_grads(&s.d_trunk, tokens, rows, grads, ranges);
+        }
+    }
+
+    /// Two-layer tanh trunk (model.py `encode`) over a prepared trunk
+    /// input. Returns `(h1, x)`: `h1` is kept for backprop, `x` feeds
+    /// the decoder or LSTM cell.
+    fn encode(&self, pv: &ParamView<'_>, trunk: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let (ti, h) = (self.arch.trunk_in, self.arch.hidden());
         let mut h1 = vec![0.0; rows * h];
-        linear(obs, pv.enc1_w, pv.enc1_b, &mut h1, rows, d, h);
+        linear(trunk, pv.enc1_w, pv.enc1_b, &mut h1, rows, ti, h);
         tanh_inplace(&mut h1);
         let mut x = vec![0.0; rows * h];
         linear(&h1, pv.enc2_w, pv.enc2_b, &mut x, rows, h, h);
@@ -315,25 +647,333 @@ impl NativeBackend {
 
     /// Actor/critic heads off a hidden state (model.py `decode`).
     fn decode(&self, pv: &ParamView<'_>, hidden: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
-        let (h, a) = (self.spec.hidden, self.act_sum());
+        let (d_in, a) = (self.arch.decode_in(), self.arch.act_sum());
         let mut logits = vec![0.0; rows * a];
-        linear(hidden, pv.actor_w, pv.actor_b, &mut logits, rows, h, a);
+        linear(hidden, pv.actor_w, pv.actor_b, &mut logits, rows, d_in, a);
         let mut values = vec![0.0; rows];
-        linear(hidden, pv.critic_w, pv.critic_b, &mut values, rows, h, 1);
+        linear(hidden, pv.critic_w, pv.critic_b, &mut values, rows, d_in, 1);
         (logits, values)
     }
 
-    /// Full feedforward pass, returning the intermediate activations
-    /// needed for backprop: `(h1, h2, logits, values)`.
-    fn forward_cached(
+    /// One fused-gate LSTM cell step: `gates = [x, h] @ w + b`, split
+    /// `(i, f, g, o)`. Returns `(h', c', gates_post)` where `gates_post`
+    /// holds the post-activation gate values (kept for BPTT).
+    fn lstm_cell(
         &self,
         pv: &ParamView<'_>,
-        obs: &[f32],
+        x: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
         rows: usize,
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (h1, h2) = self.encode(pv, obs, rows);
-        let (logits, values) = self.decode(pv, &h2, rows);
-        (h1, h2, logits, values)
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (h, sd) = (self.arch.hidden(), self.arch.state_dim());
+        let mut xh = vec![0.0; rows * (h + sd)];
+        for r in 0..rows {
+            xh[r * (h + sd)..r * (h + sd) + h].copy_from_slice(&x[r * h..(r + 1) * h]);
+            xh[r * (h + sd) + h..(r + 1) * (h + sd)].copy_from_slice(&h_in[r * sd..(r + 1) * sd]);
+        }
+        let mut gates = vec![0.0; rows * 4 * sd];
+        linear(&xh, pv.lstm_w, pv.lstm_b, &mut gates, rows, h + sd, 4 * sd);
+
+        let mut h2 = vec![0.0; rows * sd];
+        let mut c2 = vec![0.0; rows * sd];
+        for r in 0..rows {
+            let g = &mut gates[r * 4 * sd..(r + 1) * 4 * sd];
+            for j in 0..sd {
+                let i_g = sigmoid(g[j]);
+                let f_g = sigmoid(g[sd + j]);
+                let g_g = g[2 * sd + j].tanh();
+                let o_g = sigmoid(g[3 * sd + j]);
+                let c = f_g * c_in[r * sd + j] + i_g * g_g;
+                c2[r * sd + j] = c;
+                h2[r * sd + j] = o_g * c.tanh();
+                g[j] = i_g;
+                g[sd + j] = f_g;
+                g[2 * sd + j] = g_g;
+                g[3 * sd + j] = o_g;
+            }
+        }
+        (h2, c2, gates)
+    }
+
+    // -- train paths -------------------------------------------------------
+
+    /// Feedforward PPO update over `n = T × R` flattened sample rows.
+    fn train_step_ff(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        let h = self.arch.hidden();
+        let n = batch.t * batch.r;
+        let pv = ParamView::split(params, &self.arch)?;
+        let (trunk, tokens) = self.trunk_input(&pv, batch.obs, n);
+        let (h1, h2) = self.encode(&pv, &trunk, n);
+        let (logits, values) = self.decode(&pv, &h2, n);
+
+        let (metrics, d_logits, d_value) = ppo_loss_grads(
+            &self.arch.act_dims,
+            &logits,
+            &values,
+            batch.actions,
+            batch.logp,
+            batch.adv,
+            batch.ret,
+            ent_coef,
+            batch.norm_adv,
+            n,
+        )?;
+
+        // Backprop through decode + trunk into one flat gradient vector
+        // (the same `ranges` layout the forward pass reads from). The
+        // chain is shared with the BPTT path: heads, then tanh' through
+        // enc2/enc1, then the embedding scatter. For feedforward archs
+        // the decode input *is* the trunk output, so `d_h2` feeds
+        // `trunk_backward` directly.
+        let mut grads = vec![0.0f32; params.len()];
+        let ranges = self.arch.ranges();
+        let mut d_h2 = vec![0.0f32; n * h];
+        self.head_backward(&pv, &ranges, &h2, &d_logits, &d_value, n, &mut grads, &mut d_h2);
+        let mut scratch = TrunkBwdScratch::default();
+        self.trunk_backward(
+            &pv,
+            &ranges,
+            &d_h2,
+            &h2,
+            &h1,
+            &trunk,
+            &tokens,
+            n,
+            &mut grads,
+            &mut scratch,
+        );
+        drop(pv);
+
+        adam_update(params, opt, lr, &grads);
+        Ok(metrics)
+    }
+
+    /// Recurrent PPO update: BPTT through the whole `(T, R)` time scan,
+    /// with LSTM state zeroed at episode starts (`batch.starts`) exactly
+    /// like `model.py::train_step_lstm` — the scan begins from zero
+    /// state each segment, and the minibatch slicer only ever hands this
+    /// path whole agent rows, so the time structure is intact.
+    fn train_step_bptt(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        let (t_dim, rows) = (batch.t, batch.r);
+        let n = t_dim * rows;
+        let h = self.arch.hidden();
+        let sd = self.arch.state_dim();
+        let d = self.arch.obs_dim;
+        let a = self.arch.act_sum();
+        let pv = ParamView::split(params, &self.arch)?;
+
+        // ---- forward scan, caching per-step activations ----
+        struct StepCache {
+            trunk: Option<Vec<f32>>, // None when borrowed straight from obs
+            tokens: Vec<Vec<usize>>,
+            h1: Vec<f32>,
+            x: Vec<f32>,
+            h_in: Vec<f32>, // post-mask state entering the cell
+            c_in: Vec<f32>,
+            gates: Vec<f32>, // post-activation (i, f, g, o)
+            c: Vec<f32>,
+            h: Vec<f32>,
+        }
+        let mut cache: Vec<StepCache> = Vec::with_capacity(t_dim);
+        let mut logits_all = vec![0.0f32; n * a];
+        let mut values_all = vec![0.0f32; n];
+        let mut h_prev = vec![0.0f32; rows * sd];
+        let mut c_prev = vec![0.0f32; rows * sd];
+        for t in 0..t_dim {
+            let obs_t = &batch.obs[t * rows * d..(t + 1) * rows * d];
+            let starts_t = &batch.starts[t * rows..(t + 1) * rows];
+            let mut h_in = h_prev.clone();
+            let mut c_in = c_prev.clone();
+            for r in 0..rows {
+                if starts_t[r] != 0.0 {
+                    h_in[r * sd..(r + 1) * sd].fill(0.0);
+                    c_in[r * sd..(r + 1) * sd].fill(0.0);
+                }
+            }
+            let (trunk, tokens) = self.trunk_input(&pv, obs_t, rows);
+            let (h1, x) = self.encode(&pv, &trunk, rows);
+            let (h2, c2, gates) = self.lstm_cell(&pv, &x, &h_in, &c_in, rows);
+            let (lo, va) = self.decode(&pv, &h2, rows);
+            logits_all[t * rows * a..(t + 1) * rows * a].copy_from_slice(&lo);
+            values_all[t * rows..(t + 1) * rows].copy_from_slice(&va);
+            h_prev.copy_from_slice(&h2);
+            c_prev.copy_from_slice(&c2);
+            cache.push(StepCache {
+                trunk: match trunk {
+                    Cow::Borrowed(_) => None,
+                    Cow::Owned(v) => Some(v),
+                },
+                tokens,
+                h1,
+                x,
+                h_in,
+                c_in,
+                gates,
+                c: c2,
+                h: h2,
+            });
+        }
+
+        // ---- loss over the flattened (T × R) rows ----
+        let (metrics, d_logits, d_value) = ppo_loss_grads(
+            &self.arch.act_dims,
+            &logits_all,
+            &values_all,
+            batch.actions,
+            batch.logp,
+            batch.adv,
+            batch.ret,
+            ent_coef,
+            batch.norm_adv,
+            n,
+        )?;
+
+        // ---- backward scan ----
+        let mut grads = vec![0.0f32; params.len()];
+        let ranges = self.arch.ranges();
+        let mut dh_next = vec![0.0f32; rows * sd];
+        let mut dc_next = vec![0.0f32; rows * sd];
+        // Reused per-step scratch — sized once, overwritten every step.
+        let mut dh = vec![0.0f32; rows * sd];
+        let mut d_x = vec![0.0f32; rows * h];
+        let mut dgates = vec![0.0f32; rows * 4 * sd];
+        let mut dc_in_t = vec![0.0f32; rows * sd];
+        let mut xh = vec![0.0f32; rows * (h + sd)];
+        let mut d_xh = vec![0.0f32; rows * (h + sd)];
+        let mut scratch = TrunkBwdScratch::default();
+        for t in (0..t_dim).rev() {
+            let sc = &cache[t];
+            let dl = &d_logits[t * rows * a..(t + 1) * rows * a];
+            let dv = &d_value[t * rows..(t + 1) * rows];
+            let starts_t = &batch.starts[t * rows..(t + 1) * rows];
+
+            // Heads off h_t: parameter grads + dh, then the carry from
+            // t+1 on top.
+            self.head_backward(&pv, &ranges, &sc.h, dl, dv, rows, &mut grads, &mut dh);
+            for (acc, &carry) in dh.iter_mut().zip(&dh_next) {
+                *acc += carry;
+            }
+
+            // Cell backward: c = f∘c_in + i∘g, h = o∘tanh(c).
+            for r in 0..rows {
+                let g = &sc.gates[r * 4 * sd..(r + 1) * 4 * sd];
+                for j in 0..sd {
+                    let (gi, gf, gg, go) = (g[j], g[sd + j], g[2 * sd + j], g[3 * sd + j]);
+                    let c = sc.c[r * sd + j];
+                    let tc = c.tanh();
+                    let dh_v = dh[r * sd + j];
+                    let d_o = dh_v * tc;
+                    let dc = dh_v * go * (1.0 - tc * tc) + dc_next[r * sd + j];
+                    let d_i = dc * gg;
+                    let d_f = dc * sc.c_in[r * sd + j];
+                    let d_g = dc * gi;
+                    dc_in_t[r * sd + j] = dc * gf;
+                    dgates[r * 4 * sd + j] = d_i * gi * (1.0 - gi);
+                    dgates[r * 4 * sd + sd + j] = d_f * gf * (1.0 - gf);
+                    dgates[r * 4 * sd + 2 * sd + j] = d_g * (1.0 - gg * gg);
+                    dgates[r * 4 * sd + 3 * sd + j] = d_o * go * (1.0 - go);
+                }
+            }
+            // lstm parameter grads off [x, h_in].
+            for r in 0..rows {
+                xh[r * (h + sd)..r * (h + sd) + h].copy_from_slice(&sc.x[r * h..(r + 1) * h]);
+                xh[r * (h + sd) + h..(r + 1) * (h + sd)]
+                    .copy_from_slice(&sc.h_in[r * sd..(r + 1) * sd]);
+            }
+            for i in 0..rows {
+                for j in 0..4 * sd {
+                    grads[ranges.lstm_b.start + j] += dgates[i * 4 * sd + j];
+                }
+            }
+            accum_at_b(
+                &xh,
+                &dgates,
+                &mut grads[ranges.lstm_w.clone()],
+                rows,
+                h + sd,
+                4 * sd,
+            );
+            // d_xh = dgates @ lstm_wᵀ → split into d_x and d_h_in.
+            matmul_a_wt(&dgates, pv.lstm_w, &mut d_xh, rows, 4 * sd, h + sd);
+            for r in 0..rows {
+                d_x[r * h..(r + 1) * h].copy_from_slice(&d_xh[r * (h + sd)..r * (h + sd) + h]);
+            }
+
+            // Trunk backward: identical chain to the feedforward path.
+            let obs_t = &batch.obs[t * rows * d..(t + 1) * rows * d];
+            let trunk_t: &[f32] = match &sc.trunk {
+                Some(v) => v,
+                None => obs_t,
+            };
+            self.trunk_backward(
+                &pv,
+                &ranges,
+                &d_x,
+                &sc.x,
+                &sc.h1,
+                trunk_t,
+                &sc.tokens,
+                rows,
+                &mut grads,
+                &mut scratch,
+            );
+
+            // Carry to t-1 through the episode-start mask: state entering
+            // step t was `h_{t-1} * (1 - starts_t)`.
+            for r in 0..rows {
+                let mask = 1.0 - starts_t[r];
+                for j in 0..sd {
+                    dh_next[r * sd + j] = d_xh[r * (h + sd) + h + j] * mask;
+                    dc_next[r * sd + j] = dc_in_t[r * sd + j] * mask;
+                }
+            }
+        }
+        drop(pv);
+
+        adam_update(params, opt, lr, &grads);
+        Ok(metrics)
+    }
+}
+
+/// Reusable scratch for [`NativeBackend::trunk_backward`]: one set of
+/// buffers per train step, resized (never reallocated) per call.
+#[derive(Default)]
+struct TrunkBwdScratch {
+    d_z2: Vec<f32>,
+    d_h1: Vec<f32>,
+    d_z1: Vec<f32>,
+    d_trunk: Vec<f32>,
+}
+
+/// Global-norm clip + Adam (model._adam, flat) — shared update tail.
+fn adam_update(params: &mut [f32], opt: &mut AdamState, lr: f32, grads: &[f32]) {
+    let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
+    let scale = (MAX_GRAD_NORM / gnorm).min(1.0);
+    opt.step += 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(opt.step);
+    let bc2 = 1.0 - ADAM_B2.powf(opt.step);
+    for i in 0..params.len() {
+        let g = grads[i] * scale;
+        opt.m[i] = ADAM_B1 * opt.m[i] + (1.0 - ADAM_B1) * g;
+        opt.v[i] = ADAM_B2 * opt.v[i] + (1.0 - ADAM_B2) * g * g;
+        let mhat = opt.m[i] / bc1;
+        let vhat = opt.v[i] / bc2;
+        params[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
     }
 }
 
@@ -348,21 +988,41 @@ impl PolicyBackend for NativeBackend {
 
     fn init_params(&mut self) -> Result<Vec<f32>> {
         // CleanRL-style layer_init scaling, as model.init_params: weights
-        // are N(0, scale²/fan_in), biases zero, actor head scaled 0.01.
-        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
-        let lstm = self.spec.lstm;
+        // are N(0, scale²/fan_in), biases zero, actor head scaled 0.01,
+        // embedding tables bias-free. Draw order == layout order, so the
+        // default architecture replays the exact pre-PolicySpec stream.
+        let arch = self.arch.clone();
+        let (h, a, d_in, sd, ti) = (
+            arch.hidden(),
+            arch.act_sum(),
+            arch.decode_in(),
+            arch.state_dim(),
+            arch.trunk_in,
+        );
         let mut p = Vec::with_capacity(self.spec.n_params);
-        let dense = |rng: &mut Rng, p: &mut Vec<f32>, fan_in: usize, fan_out: usize, scale: f32| {
-            p.extend(std::iter::repeat(0.0).take(fan_out)); // bias
+        let dense = |rng: &mut Rng,
+                     p: &mut Vec<f32>,
+                     fan_in: usize,
+                     fan_out: usize,
+                     scale: f32,
+                     bias: bool| {
+            if bias {
+                p.extend(std::iter::repeat(0.0).take(fan_out));
+            }
             let s = scale / (fan_in as f32).sqrt();
             p.extend((0..fan_in * fan_out).map(|_| rng.normal() as f32 * s));
         };
-        dense(&mut self.rng, &mut p, h, a, 0.01); // actor
-        dense(&mut self.rng, &mut p, h, 1, 1.0); // critic
-        dense(&mut self.rng, &mut p, d, h, 1.0); // enc1
-        dense(&mut self.rng, &mut p, h, h, 1.0); // enc2
-        if lstm {
-            dense(&mut self.rng, &mut p, 2 * h, 4 * h, 1.0);
+        dense(&mut self.rng, &mut p, d_in, a, 0.01, true); // actor
+        dense(&mut self.rng, &mut p, d_in, 1, 1.0, true); // critic
+        for seg in &arch.segments {
+            if let TrunkSegment::Embed { vocab, .. } = seg {
+                dense(&mut self.rng, &mut p, *vocab, arch.spec.embed_dim, 1.0, false);
+            }
+        }
+        dense(&mut self.rng, &mut p, ti, h, 1.0, true); // enc1
+        dense(&mut self.rng, &mut p, h, h, 1.0, true); // enc2
+        if sd > 0 {
+            dense(&mut self.rng, &mut p, h + sd, 4 * sd, 1.0, true);
         }
         ensure!(
             p.len() == self.spec.n_params,
@@ -374,10 +1034,16 @@ impl PolicyBackend for NativeBackend {
     }
 
     fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward> {
-        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
+        let d = self.arch.obs_dim;
+        ensure!(
+            !self.arch.is_recurrent(),
+            "stateless forward on a recurrent architecture — use forward_lstm"
+        );
         ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
-        let pv = ParamView::split(params, d, h, a, self.spec.lstm)?;
-        let (_, _, logits, values) = self.forward_cached(&pv, obs, rows);
+        let pv = ParamView::split(params, &self.arch)?;
+        let (trunk, _) = self.trunk_input(&pv, obs, rows);
+        let (_, x) = self.encode(&pv, &trunk, rows);
+        let (logits, values) = self.decode(&pv, &x, rows);
         Ok(Forward { logits, values })
     }
 
@@ -389,37 +1055,18 @@ impl PolicyBackend for NativeBackend {
         c_in: &[f32],
         rows: usize,
     ) -> Result<ForwardLstm> {
-        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
+        let d = self.arch.obs_dim;
+        let sd = self.arch.state_dim();
+        ensure!(sd > 0, "forward_lstm on a feedforward architecture");
         ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
-        ensure!(h_in.len() == rows * h && c_in.len() == rows * h, "state shape mismatch");
-        let pv = ParamView::split(params, d, h, a, true)?;
-        let (_h1, x) = self.encode(&pv, obs, rows);
-
-        // fused-gate cell: gates = [x, h] @ w + b, split (i, f, g, o)
-        let mut xh = vec![0.0; rows * 2 * h];
-        for r in 0..rows {
-            xh[r * 2 * h..r * 2 * h + h].copy_from_slice(&x[r * h..(r + 1) * h]);
-            xh[r * 2 * h + h..(r + 1) * 2 * h].copy_from_slice(&h_in[r * h..(r + 1) * h]);
-        }
-        let mut gates = vec![0.0; rows * 4 * h];
-        linear(&xh, pv.lstm_w, pv.lstm_b, &mut gates, rows, 2 * h, 4 * h);
-
-        let mut h2 = vec![0.0; rows * h];
-        let mut c2 = vec![0.0; rows * h];
-        for r in 0..rows {
-            let g = &gates[r * 4 * h..(r + 1) * 4 * h];
-            for j in 0..h {
-                let i_g = sigmoid(g[j]);
-                let f_g = sigmoid(g[h + j]);
-                let g_g = g[2 * h + j].tanh();
-                let o_g = sigmoid(g[3 * h + j]);
-                let c = f_g * c_in[r * h + j] + i_g * g_g;
-                c2[r * h + j] = c;
-                h2[r * h + j] = o_g * c.tanh();
-            }
-        }
-
-        // decode off the recurrent hidden state
+        ensure!(
+            h_in.len() == rows * sd && c_in.len() == rows * sd,
+            "state shape mismatch"
+        );
+        let pv = ParamView::split(params, &self.arch)?;
+        let (trunk, _) = self.trunk_input(&pv, obs, rows);
+        let (_h1, x) = self.encode(&pv, &trunk, rows);
+        let (h2, c2, _) = self.lstm_cell(&pv, &x, h_in, c_in, rows);
         let (logits, values) = self.decode(&pv, &h2, rows);
         Ok(ForwardLstm {
             logits,
@@ -471,212 +1118,25 @@ impl PolicyBackend for NativeBackend {
         ent_coef: f32,
         batch: &TrainBatch<'_>,
     ) -> Result<[f32; 5]> {
-        ensure!(
-            !self.spec.lstm,
-            "NativeBackend does not support recurrent (BPTT) training yet; \
-             build with `--features pjrt` for LSTM specs"
-        );
-        let (d, h, a) = (self.spec.obs_dim, self.spec.hidden, self.act_sum());
-        let slots = self.spec.act_dims.len();
-        let n = batch.t * batch.r; // feedforward: flatten (T, R) → N rows
+        let d = self.arch.obs_dim;
+        let slots = self.arch.act_dims.len();
+        let n = batch.t * batch.r;
         ensure!(batch.obs.len() == n * d, "obs len {} != {n}x{d}", batch.obs.len());
         ensure!(batch.actions.len() == n * slots, "actions len mismatch");
         ensure!(
             batch.logp.len() == n && batch.adv.len() == n && batch.ret.len() == n,
             "logp/adv/ret must be N={n}"
         );
+        ensure!(batch.starts.len() == n, "starts must be N={n}");
         ensure!(
             opt.m.len() == params.len() && opt.v.len() == params.len(),
             "optimizer state length mismatch"
         );
-        let nf = n as f32;
-
-        let pv = ParamView::split(params, d, h, a, false)?;
-        let (h1, h2, logits, values) = self.forward_cached(&pv, batch.obs, n);
-
-        // Per-slot softmax statistics: probs, log-probs, slot entropies.
-        let mut probs = vec![0.0f32; n * a];
-        let mut lps = vec![0.0f32; n * a];
-        let mut slot_ent = vec![0.0f32; n * slots];
-        let mut logp = vec![0.0f32; n];
-        let mut entropy = vec![0.0f32; n];
-        for i in 0..n {
-            let row = &logits[i * a..(i + 1) * a];
-            let mut off = 0;
-            for (s, &k) in self.spec.act_dims.iter().enumerate() {
-                let seg = &row[off..off + k];
-                let mx = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let mut z = 0.0f32;
-                for &x in seg {
-                    z += (x - mx).exp();
-                }
-                let logz = z.ln() + mx;
-                let mut hs = 0.0f32;
-                for (j, &x) in seg.iter().enumerate() {
-                    let lp = x - logz;
-                    let p = lp.exp();
-                    lps[i * a + off + j] = lp;
-                    probs[i * a + off + j] = p;
-                    hs -= p * lp;
-                }
-                let act = batch.actions[i * slots + s] as usize;
-                ensure!(act < k, "action {act} out of range for slot {s} (dim {k})");
-                logp[i] += lps[i * a + off + act];
-                slot_ent[i * slots + s] = hs;
-                entropy[i] += hs;
-                off += k;
-            }
-        }
-
-        // Clipped-surrogate loss (model._ppo_loss). Advantages are
-        // normalized over *this* batch when `batch.norm_adv` — i.e. per
-        // minibatch once the trainer splits the segment.
-        let (mu, sd) = if batch.norm_adv {
-            let mu = batch.adv.iter().sum::<f32>() / nf;
-            let var = batch.adv.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / nf;
-            (mu, var.sqrt())
+        if self.arch.is_recurrent() {
+            self.train_step_bptt(params, opt, lr, ent_coef, batch)
         } else {
-            (0.0, 1.0)
-        };
-        let mut pg_loss = 0.0f32;
-        let mut v_loss = 0.0f32;
-        let mut ent_mean = 0.0f32;
-        let mut kl = 0.0f32;
-        let mut g_logp = vec![0.0f32; n]; // d pg_loss / d logp_i
-        let mut d_value = vec![0.0f32; n];
-        for i in 0..n {
-            let advn = if batch.norm_adv {
-                (batch.adv[i] - mu) / (sd + 1e-8)
-            } else {
-                batch.adv[i]
-            };
-            let logratio = logp[i] - batch.logp[i];
-            let ratio = logratio.exp();
-            let clipped = ratio.clamp(1.0 - CLIP, 1.0 + CLIP);
-            let pg1 = -advn * ratio;
-            let pg2 = -advn * clipped;
-            pg_loss += pg1.max(pg2);
-            // max() routes the gradient: the clipped branch is flat
-            // outside the trust region. Inside it, clipped == ratio so
-            // pg1 == pg2 and this branch covers that case too.
-            if pg1 >= pg2 {
-                g_logp[i] = -advn * ratio / nf;
-            }
-            v_loss += 0.5 * (values[i] - batch.ret[i]) * (values[i] - batch.ret[i]);
-            d_value[i] = VF_COEF * (values[i] - batch.ret[i]) / nf;
-            ent_mean += entropy[i];
-            kl += (ratio - 1.0) - logratio;
+            self.train_step_ff(params, opt, lr, ent_coef, batch)
         }
-        pg_loss /= nf;
-        v_loss /= nf;
-        ent_mean /= nf;
-        kl /= nf;
-        let loss = pg_loss - ent_coef * ent_mean + VF_COEF * v_loss;
-
-        // d loss / d logits: policy-gradient term + entropy-bonus term.
-        let mut d_logits = vec![0.0f32; n * a];
-        for i in 0..n {
-            let mut off = 0;
-            for (s, &k) in self.spec.act_dims.iter().enumerate() {
-                let act = batch.actions[i * slots + s] as usize;
-                let hs = slot_ent[i * slots + s];
-                for j in 0..k {
-                    let p = probs[i * a + off + j];
-                    let lp = lps[i * a + off + j];
-                    let onehot = if j == act { 1.0 } else { 0.0 };
-                    d_logits[i * a + off + j] =
-                        g_logp[i] * (onehot - p) + (ent_coef / nf) * p * (lp + hs);
-                }
-                off += k;
-            }
-        }
-
-        // Backprop through decode + encode into one flat gradient vector
-        // (the same `param_ranges` layout the forward pass reads from).
-        let mut grads = vec![0.0f32; params.len()];
-        {
-            let ParamRanges {
-                actor_b: r_actor_b,
-                actor_w: r_actor_w,
-                critic_b: r_critic_b,
-                critic_w: r_critic_w,
-                enc1_b: r_enc1_b,
-                enc1_w: r_enc1_w,
-                enc2_b: r_enc2_b,
-                enc2_w: r_enc2_w,
-                ..
-            } = param_ranges(d, h, a, false);
-
-            // Heads.
-            for i in 0..n {
-                for j in 0..a {
-                    grads[r_actor_b.start + j] += d_logits[i * a + j];
-                }
-                grads[r_critic_b.start] += d_value[i];
-            }
-            accum_at_b(&h2, &d_logits, &mut grads[r_actor_w.clone()], n, h, a);
-            for i in 0..n {
-                let dv = d_value[i];
-                if dv != 0.0 {
-                    for kk in 0..h {
-                        grads[r_critic_w.start + kk] += h2[i * h + kk] * dv;
-                    }
-                }
-            }
-
-            // d_h2 = d_logits @ actor_wᵀ + d_value ⊗ critic_w
-            let mut d_h2 = vec![0.0f32; n * h];
-            matmul_a_wt(&d_logits, pv.actor_w, &mut d_h2, n, a, h);
-            for i in 0..n {
-                let dv = d_value[i];
-                for kk in 0..h {
-                    d_h2[i * h + kk] += dv * pv.critic_w[kk];
-                }
-            }
-
-            // tanh' through enc2.
-            let mut d_z2 = d_h2;
-            for (dz, &hv) in d_z2.iter_mut().zip(&h2) {
-                *dz *= 1.0 - hv * hv;
-            }
-            accum_at_b(&h1, &d_z2, &mut grads[r_enc2_w.clone()], n, h, h);
-            for i in 0..n {
-                for j in 0..h {
-                    grads[r_enc2_b.start + j] += d_z2[i * h + j];
-                }
-            }
-
-            // d_h1 = d_z2 @ enc2_wᵀ ; tanh' through enc1.
-            let mut d_h1 = vec![0.0f32; n * h];
-            matmul_a_wt(&d_z2, pv.enc2_w, &mut d_h1, n, h, h);
-            let mut d_z1 = d_h1;
-            for (dz, &hv) in d_z1.iter_mut().zip(&h1) {
-                *dz *= 1.0 - hv * hv;
-            }
-            accum_at_b(batch.obs, &d_z1, &mut grads[r_enc1_w.clone()], n, d, h);
-            for i in 0..n {
-                for j in 0..h {
-                    grads[r_enc1_b.start + j] += d_z1[i * h + j];
-                }
-            }
-        }
-
-        // Global-norm clip + Adam (model._adam, flat).
-        let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
-        let scale = (MAX_GRAD_NORM / gnorm).min(1.0);
-        opt.step += 1.0;
-        let bc1 = 1.0 - ADAM_B1.powf(opt.step);
-        let bc2 = 1.0 - ADAM_B2.powf(opt.step);
-        for i in 0..params.len() {
-            let g = grads[i] * scale;
-            opt.m[i] = ADAM_B1 * opt.m[i] + (1.0 - ADAM_B1) * g;
-            opt.v[i] = ADAM_B2 * opt.v[i] + (1.0 - ADAM_B2) * g * g;
-            let mhat = opt.m[i] / bc1;
-            let vhat = opt.v[i] / bc2;
-            params[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
-        }
-
-        Ok([loss, pg_loss, v_loss, ent_mean, kl])
     }
 
     fn fork_for_rollout(&self) -> Result<Box<dyn PolicyBackend>> {
@@ -691,14 +1151,16 @@ impl PolicyBackend for NativeBackend {
 mod tests {
     use super::*;
 
-    fn tiny_spec(d: usize, act_dims: Vec<usize>, hidden: usize) -> SpecManifest {
+    fn tiny_manifest(policy: &PolicySpec, d: usize, act_dims: Vec<usize>) -> SpecManifest {
+        let arch = ResolvedPolicy::from_flat(policy, d, &act_dims);
         SpecManifest {
             obs_dim: d,
-            n_params: n_params(d, &act_dims, hidden, false),
+            n_params: arch.n_params(),
             act_dims,
             agents: 1,
-            lstm: false,
-            hidden,
+            lstm: policy.is_recurrent(),
+            hidden: policy.hidden,
+            policy: policy.clone(),
             batch_fwd: 4,
             batch_roll: 4,
             horizon: 3,
@@ -707,6 +1169,10 @@ mod tests {
             params0: String::new(),
             artifacts: BTreeMap::new(),
         }
+    }
+
+    fn tiny_spec(d: usize, act_dims: Vec<usize>, hidden: usize) -> SpecManifest {
+        tiny_manifest(&PolicySpec::default().with_hidden(hidden), d, act_dims)
     }
 
     #[test]
@@ -755,6 +1221,20 @@ mod tests {
         assert!((ret[2] - (a2 + 0.3)).abs() < 1e-6);
     }
 
+    type RegressionBatch = (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+    fn value_regression_batch(t: usize, r: usize, d: usize) -> RegressionBatch {
+        let n = t * r;
+        (
+            (0..n * d).map(|i| ((i * 7 % 13) as f32) / 13.0).collect(),
+            vec![0i32; n],
+            vec![-0.69f32; n],
+            vec![0.0f32; n],
+            (0..n).map(|i| (i % 3) as f32).collect(),
+            vec![0.0; n],
+        )
+    }
+
     #[test]
     fn train_step_descends_on_value_loss() {
         // With adv ≡ 0 the update is pure value regression: repeated steps
@@ -762,15 +1242,8 @@ mod tests {
         let mut b = NativeBackend::from_spec("t".into(), tiny_spec(3, vec![2], 8), 4);
         let mut params = b.init_params().unwrap();
         let mut opt = AdamState::new(params.len());
-        let t = 3usize;
-        let r = 4usize;
-        let n = t * r;
-        let obs: Vec<f32> = (0..n * 3).map(|i| ((i * 7 % 13) as f32) / 13.0).collect();
-        let actions = vec![0i32; n];
-        let logp = vec![-0.69f32; n];
-        let adv = vec![0.0f32; n];
-        let ret: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
-        let starts = vec![0.0; n];
+        let (t, r) = (3usize, 4usize);
+        let (obs, actions, logp, adv, ret, starts) = value_regression_batch(t, r, 3);
         let batch = TrainBatch {
             t,
             r,
@@ -797,18 +1270,88 @@ mod tests {
     }
 
     #[test]
-    fn recurrent_reference_env_is_a_hard_error() {
+    fn bptt_train_step_descends_on_value_loss() {
+        // The recurrent path must optimize too: same pure value
+        // regression through the LSTM sandwich, with episode starts
+        // scattered through the batch.
+        let policy = PolicySpec::default().with_hidden(8).with_lstm(8);
+        let mut b = NativeBackend::from_spec("t".into(), tiny_manifest(&policy, 3, vec![2]), 4);
+        let mut params = b.init_params().unwrap();
+        let mut opt = AdamState::new(params.len());
+        let (t, r) = (3usize, 4usize);
+        let (obs, actions, logp, adv, ret, mut starts) = value_regression_batch(t, r, 3);
+        for (i, s) in starts.iter_mut().enumerate() {
+            *s = if i % 5 == 0 { 1.0 } else { 0.0 };
+        }
+        let batch = TrainBatch {
+            t,
+            r,
+            norm_adv: true,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let first = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        let mut last = first;
+        for _ in 0..80 {
+            last = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        }
+        assert!(
+            last[2] < first[2] * 0.5,
+            "BPTT v_loss did not descend: {} -> {}",
+            first[2],
+            last[2]
+        );
+    }
+
+    #[test]
+    fn recurrent_reference_env_gets_a_recurrent_default_arch() {
+        // ocean/memory now constructs on the native backend: the default
+        // PolicySpec for it carries the LSTM stage (and no architecture
+        // key fragment — it *is* the env default).
         let env = crate::envs::make("ocean/memory", 0);
-        let err = NativeBackend::for_env("ocean/memory", env.as_ref())
-            .err()
-            .expect("recurrent env must not construct on the native backend")
-            .to_string();
-        assert!(err.contains("--features pjrt"), "unactionable error: {err}");
-        assert!(err.contains("--backend=pjrt"), "unactionable error: {err}");
-        // Wrapper fragments in the spec key don't mask the base env.
-        assert!(NativeBackend::for_env("ocean/memory+stack=4", env.as_ref()).is_err());
+        let b = NativeBackend::for_env("ocean/memory", env.as_ref()).unwrap();
+        assert!(b.arch().is_recurrent());
+        assert!(b.spec().lstm);
+        assert_eq!(b.key(), "ocean_memory");
+        // Forcing feedforward on a memory env stays a hard, actionable
+        // construction error.
+        let err = NativeBackend::for_env_with_policy(
+            "ocean/memory",
+            env.as_ref(),
+            &PolicySpec::default(),
+        )
+        .err()
+        .expect("feedforward override must not construct")
+        .to_string();
+        assert!(err.contains("--policy.lstm"), "unactionable error: {err}");
         assert!(requires_recurrence("ocean/memory+clip_reward=1"));
         assert!(!requires_recurrence("ocean/bandit"));
+    }
+
+    #[test]
+    fn non_default_arch_is_part_of_the_key() {
+        let env = crate::envs::make("ocean/bandit", 0);
+        let b = NativeBackend::for_env("ocean/bandit", env.as_ref()).unwrap();
+        assert_eq!(b.key(), "ocean_bandit");
+        let b64 = NativeBackend::for_env_with_policy(
+            "ocean/bandit",
+            env.as_ref(),
+            &PolicySpec::default().with_hidden(64),
+        )
+        .unwrap();
+        assert_eq!(b64.key(), "ocean_bandit#h=64");
+        // Distinct architecture keys draw distinct init streams.
+        let lstm = NativeBackend::for_env_with_policy(
+            "ocean/bandit",
+            env.as_ref(),
+            &PolicySpec::default().with_lstm(128),
+        )
+        .unwrap();
+        assert_eq!(lstm.key(), "ocean_bandit#lstm=128");
     }
 
     #[test]
@@ -864,5 +1407,31 @@ mod tests {
         let f = fork.forward(&p, &obs, 4).unwrap();
         assert_eq!(a.logits, f.logits);
         assert_eq!(a.values, f.values);
+    }
+
+    #[test]
+    fn embedded_tokens_change_the_trunk_not_the_api() {
+        use crate::spaces::Space;
+        // {feat: f32[2], tok: Discrete(5)} with embed_dim 3.
+        let space = Space::dict(vec![
+            ("feat".into(), Space::boxf(&[2], -1.0, 1.0)),
+            ("tok".into(), Space::Discrete(5)),
+        ]);
+        let policy = PolicySpec::default().with_hidden(8).with_embed_dim(3);
+        let arch = ResolvedPolicy::resolve(&policy, &space.layout(), &[2]).unwrap();
+        let mut spec = tiny_manifest(&policy, 3, vec![2]);
+        spec.hidden = 8;
+        spec.n_params = arch.n_params();
+        let mut b = NativeBackend::from_arch("t".into(), spec, arch, 7).unwrap();
+        let params = b.init_params().unwrap();
+        // Two observations differing only in the token must produce
+        // different logits (the table rows differ), same shapes.
+        let obs_a = [0.5f32, -0.25, 1.0, 0.5f32, -0.25, 3.0];
+        let out = b.forward(&params, &obs_a, 2).unwrap();
+        assert_eq!(out.logits.len(), 2 * 2);
+        assert_ne!(out.logits[0..2], out.logits[2..4]);
+        // Out-of-range tokens clamp instead of indexing out of bounds.
+        let obs_c = [0.5f32, -0.25, 99.0];
+        assert!(b.forward(&params, &obs_c, 1).is_ok());
     }
 }

@@ -6,15 +6,16 @@
 //! values (bool/int/float/string), `#` comments, blank lines. That covers
 //! every config this project ships; anything else is a parse error.
 //!
-//! Parsing is **strict**: unknown keys under the `train.` / `wrap.`
-//! namespaces and malformed values are rejected with an error naming the
-//! key — a typo'd `--train.totl_steps=1000` fails loudly instead of
-//! silently training with the default.
+//! Parsing is **strict**: unknown keys under the `train.` / `wrap.` /
+//! `pipeline.` / `policy.` namespaces and malformed values are rejected
+//! with an error naming the key — a typo'd `--train.totl_steps=1000`
+//! fails loudly instead of silently training with the default.
 
 mod yaml;
 
 pub use yaml::{parse_yaml, YamlError};
 
+use crate::policy::PolicySpec;
 use crate::train::TrainConfig;
 use crate::wrappers::WrapperSpec;
 use anyhow::{bail, ensure, Result};
@@ -44,6 +45,10 @@ const TRAIN_KEYS: &[&str] = &[
 /// Recognized experience-pipeline knobs, reachable as `train.pipeline.X`
 /// (config files) or `pipeline.X` (CLI `--pipeline.X=...` overrides).
 const PIPELINE_KEYS: &[&str] = &["depth"];
+
+/// Recognized policy-architecture knobs, reachable as `train.policy.X`
+/// (config files) or `policy.X` (CLI `--policy.X=...` overrides).
+const POLICY_KEYS: &[&str] = &["hidden", "lstm", "lstm_hidden", "embed_dim", "head"];
 
 /// Recognized wrapper knobs, reachable as `train.wrap.X` (config files)
 /// or `wrap.X` (CLI `--wrap.X=...` overrides).
@@ -107,12 +112,21 @@ pub fn validate_keys(cfg: &FlatConfig) -> Result<()> {
                 PIPELINE_KEYS.contains(&rest),
                 "unknown pipeline key '{key}' (known pipeline knobs: {PIPELINE_KEYS:?})"
             );
+        } else if let Some(rest) = key
+            .strip_prefix("train.policy.")
+            .or_else(|| key.strip_prefix("policy."))
+        {
+            ensure!(
+                POLICY_KEYS.contains(&rest),
+                "unknown policy key '{key}' (known policy knobs: {POLICY_KEYS:?})"
+            );
         } else if let Some(rest) = key.strip_prefix("train.") {
             ensure!(
                 TRAIN_KEYS.contains(&rest),
                 "unknown config key '{key}' (known train keys: {TRAIN_KEYS:?}, \
-                 plus wrapper knobs under train.wrap: {WRAP_KEYS:?} and pipeline \
-                 knobs under train.pipeline: {PIPELINE_KEYS:?})"
+                 plus wrapper knobs under train.wrap: {WRAP_KEYS:?}, pipeline \
+                 knobs under train.pipeline: {PIPELINE_KEYS:?}, and policy \
+                 knobs under train.policy: {POLICY_KEYS:?})"
             );
         }
     }
@@ -133,6 +147,80 @@ pub fn pipeline_config(cfg: &FlatConfig) -> Result<usize> {
             anyhow::anyhow!("config key '{key}': cannot parse value '{v}' as a non-negative integer")
         }),
     }
+}
+
+/// Build the policy architecture from a flat config. CLI-style
+/// `policy.X` keys win over file-style `train.policy.X`. Returns `None`
+/// when no policy key is present — the trainer then resolves the env's
+/// default spec ([`PolicySpec::default_for`]); any explicit key starts
+/// from that same default, so e.g. `--policy.hidden=64` on a recurrent
+/// env keeps the LSTM stage.
+pub fn policy_config(cfg: &FlatConfig, env: &str) -> Result<Option<PolicySpec>> {
+    let get = |knob: &str| {
+        cfg.get(&format!("policy.{knob}"))
+            .map(|v| (format!("policy.{knob}"), v))
+            .or_else(|| {
+                cfg.get(&format!("train.policy.{knob}"))
+                    .map(|v| (format!("train.policy.{knob}"), v))
+            })
+    };
+    if POLICY_KEYS.iter().all(|k| get(k).is_none()) {
+        return Ok(None);
+    }
+    let parse_dim = |knob: &str, min: usize| -> Result<Option<usize>> {
+        match get(knob) {
+            None => Ok(None),
+            Some((key, v)) => match v.parse::<usize>() {
+                Ok(x) if x >= min => Ok(Some(x)),
+                _ => bail!("config key '{key}': expected an integer >= {min}, got '{v}'"),
+            },
+        }
+    };
+
+    let mut spec = PolicySpec::default_for(env);
+    if let Some(h) = parse_dim("hidden", 1)? {
+        spec = spec.with_hidden(h);
+        // The recurrent state follows the trunk width unless pinned
+        // separately below.
+        if spec.is_recurrent() && get("lstm_hidden").is_none() && get("lstm").is_none() {
+            spec = spec.with_lstm(h);
+        }
+    }
+    if let Some((key, v)) = get("lstm") {
+        let on: bool = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("config key '{key}': cannot parse value '{v}' as bool"))?;
+        spec = if on {
+            let h = spec.hidden;
+            spec.with_lstm(h)
+        } else {
+            spec.feedforward()
+        };
+    }
+    if let Some(h) = parse_dim("lstm_hidden", 1)? {
+        ensure!(
+            spec.is_recurrent(),
+            "config key 'policy.lstm_hidden': set policy.lstm=true to size \
+             the recurrent state (this architecture is feedforward)"
+        );
+        spec = spec.with_lstm(h);
+    }
+    if let Some(d) = parse_dim("embed_dim", 0)? {
+        spec = spec.with_embed_dim(d);
+    }
+    if let Some((key, v)) = get("head") {
+        spec.head = match v.as_str() {
+            "categorical" => crate::policy::ActionHead::Categorical,
+            other => match other.strip_prefix("quantized:").map(str::parse::<usize>) {
+                Some(Ok(bins)) if bins >= 2 => crate::policy::ActionHead::Quantized { bins },
+                _ => bail!(
+                    "config key '{key}': expected 'categorical' or \
+                     'quantized:<bins>=2..', got '{v}'"
+                ),
+            },
+        };
+    }
+    Ok(Some(spec))
 }
 
 /// Build the wrapper chain from a flat config. CLI-style `wrap.X` keys
@@ -203,8 +291,10 @@ pub fn wrap_config(cfg: &FlatConfig) -> Result<Vec<WrapperSpec>> {
 pub fn train_config(cfg: &FlatConfig) -> Result<TrainConfig> {
     validate_keys(cfg)?;
     let d = TrainConfig::default();
+    let env = cfg.get("train.env").cloned().unwrap_or(d.env);
     Ok(TrainConfig {
-        env: cfg.get("train.env").cloned().unwrap_or(d.env),
+        policy: policy_config(cfg, &env)?,
+        env,
         total_steps: get_parse(cfg, "train.total_steps", d.total_steps)?,
         lr: get_parse(cfg, "train.lr", d.lr)?,
         ent_coef: get_parse(cfg, "train.ent_coef", d.ent_coef)?,
@@ -323,6 +413,67 @@ mod tests {
         cfg.insert("pipeline.depth".into(), "-1".into());
         let err = train_config(&cfg).unwrap_err().to_string();
         assert!(err.contains("pipeline.depth"), "{err}");
+    }
+
+    #[test]
+    fn policy_keys_build_the_spec() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.env".into(), "ocean/bandit".into());
+        cfg.insert("policy.hidden".into(), "64".into());
+        cfg.insert("policy.lstm".into(), "true".into());
+        cfg.insert("policy.embed_dim".into(), "8".into());
+        let p = train_config(&cfg).unwrap().policy.expect("spec built");
+        assert_eq!(p.hidden, 64);
+        assert_eq!(p.state_dim(), 64);
+        assert_eq!(p.embed_dim, 8);
+        // No policy keys -> None (the trainer resolves the env default).
+        assert!(train_config(&FlatConfig::new()).unwrap().policy.is_none());
+    }
+
+    #[test]
+    fn policy_overrides_start_from_the_env_default() {
+        // A hidden override on a recurrent env keeps (and follows) the
+        // LSTM stage.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.env".into(), "ocean/memory".into());
+        cfg.insert("policy.hidden".into(), "48".into());
+        let p = train_config(&cfg).unwrap().policy.unwrap();
+        assert_eq!((p.hidden, p.state_dim()), (48, 48));
+        // Explicit lstm_hidden pins the state width separately.
+        cfg.insert("policy.lstm_hidden".into(), "32".into());
+        let p = train_config(&cfg).unwrap().policy.unwrap();
+        assert_eq!((p.hidden, p.state_dim()), (48, 32));
+        // CLI alias wins over the file key.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("train.policy.hidden".into(), "32".into());
+        cfg.insert("policy.hidden".into(), "96".into());
+        assert_eq!(train_config(&cfg).unwrap().policy.unwrap().hidden, 96);
+    }
+
+    #[test]
+    fn bad_policy_keys_are_rejected_naming_the_key() {
+        for (k, v) in [
+            ("policy.hidden", "0"),
+            ("policy.hidden", "x"),
+            ("policy.lstm", "maybe"),
+            ("policy.head", "gaussian"),
+            ("policy.head", "quantized:1"),
+            ("policy.embed_dim", "-3"),
+        ] {
+            let mut cfg = FlatConfig::new();
+            cfg.insert(k.into(), v.into());
+            let err = train_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(k), "{k}={v}: {err}");
+        }
+        let mut cfg = FlatConfig::new();
+        cfg.insert("policy.hiden".into(), "64".into());
+        let err = validate_keys(&cfg).unwrap_err().to_string();
+        assert!(err.contains("policy.hiden"), "{err}");
+        // lstm_hidden without an LSTM stage names the missing switch.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("policy.lstm_hidden".into(), "32".into());
+        let err = train_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("policy.lstm"), "{err}");
     }
 
     #[test]

@@ -66,10 +66,63 @@
 //! println!("score: {:?}", report.mean_score);
 //! ```
 //!
-//! Constructing the vectorizers from bare factory closures
-//! (`Serial::new`, `Multiprocessing::new`) is deprecated; use
-//! `from_spec`, or `from_factory` for the rare case a closure is really
-//! needed.
+//! Vectorizers are constructed from specs (`from_spec`), or from
+//! `from_factory` in the rare case a raw closure is really needed (the
+//! old deprecated `Serial::new` / `Multiprocessing::new` shims are
+//! gone).
+//!
+//! ## Policy architectures
+//!
+//! The model is as composable as the env: a declarative
+//! [`PolicySpec`](policy::PolicySpec) — per-leaf observation encoders ×
+//! recurrence × action head, paper §3.4's encoder → LSTM → decoder
+//! "sandwich" — is resolved against the env's emulated
+//! [`StructLayout`](spaces::StructLayout) and becomes the construction
+//! currency for models exactly as [`EnvSpec`](wrappers::EnvSpec) is for
+//! envs:
+//!
+//! - **Per-leaf encoders**: f32/u8 leaves feed the two-layer tanh trunk
+//!   raw; Discrete / token (i32) leaves become learned embedding tables
+//!   when `embed_dim > 0` (indices clamped into the leaf's vocabulary,
+//!   concatenated into the trunk in field order).
+//! - **Recurrence is a flag, not a second model**
+//!   ([`Recurrence::None`](policy::Recurrence) |
+//!   [`Lstm { hidden }`](policy::Recurrence)): the native backend runs
+//!   the fused-gate cell on the rollout side and **full BPTT through the
+//!   time scan** on the training side, with LSTM state zeroed at episode
+//!   starts. Recurrent envs (e.g. `ocean/memory`) resolve a recurrent
+//!   default spec and train natively — the old "recurrent envs require
+//!   `--features pjrt`" error is gone.
+//! - **Unified action head** ([`ActionHead`](policy::ActionHead)):
+//!   per-slot categorical logits over the emulated MultiDiscrete, or the
+//!   declared quantized-continuous grid
+//!   ([`policy::continuous::QuantizedActions`]).
+//!
+//! ```no_run
+//! use pufferlib::policy::PolicySpec;
+//! use pufferlib::train::{TrainConfig, Trainer};
+//!
+//! // ocean/memory defaults to the LSTM sandwich — this trains natively.
+//! let recurrent = TrainConfig { env: "ocean/memory".into(), ..Default::default() };
+//! Trainer::native(recurrent).unwrap().train().unwrap();
+//!
+//! // Explicit spec: 64-wide trunk, 8-wide token embeddings, 64-wide LSTM.
+//! let cfg = TrainConfig {
+//!     env: "ocean/spaces".into(),
+//!     policy: Some(PolicySpec::default().with_hidden(64).with_embed_dim(8).with_lstm(64)),
+//!     ..Default::default()
+//! };
+//! Trainer::native(cfg).unwrap().train().unwrap();
+//! ```
+//!
+//! Config/CLI: `train.policy.*` keys and `--policy.*` overrides
+//! (`hidden`, `lstm`, `lstm_hidden`, `embed_dim`,
+//! `head=categorical|quantized:<bins>`), parsed as strictly as
+//! `--wrap.*`. A non-default spec is embedded in the checkpoint key
+//! (`env#h=64+lstm=64`), so restores never cross architectures;
+//! `puffer policy describe <env>` prints the resolved leaves, stages,
+//! and parameter counts. The PJRT backend executes AOT-lowered default
+//! architectures only and rejects non-default specs at construction.
 //!
 //! ## Throughput tuning
 //!
@@ -135,6 +188,7 @@ pub mod wrappers;
 pub mod prelude {
     pub use crate::backend::{NativeBackend, PolicyBackend};
     pub use crate::emulation::{EpisodeStats, FlatEnv, PufferEnv, StructuredEnv};
+    pub use crate::policy::{ActionHead, PolicySpec, Recurrence};
     pub use crate::spaces::{Space, StructLayout, Value};
     pub use crate::util::rng::Rng;
     pub use crate::vector::{Multiprocessing, Serial, StepBatch, VecConfig, VecEnv};

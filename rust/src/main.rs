@@ -2,10 +2,11 @@
 //! a CLI for all included PufferLib environments, clean YAML configs").
 //!
 //! ```text
-//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] ...
+//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] [--policy.lstm=true] ...
 //! puffer eval <env> --checkpoint runs/x/checkpoint.bin [--episodes 20]
 //! puffer sweep                      # train the whole Ocean suite
 //! puffer autotune <env> [--envs 8] [--workers 4] [--secs 1.0] [--wrap.* ...]
+//! puffer policy describe <env> [--wrap.* ...] [--policy.* ...]
 //! puffer envs                       # list first-party environments
 //! ```
 //!
@@ -13,6 +14,13 @@
 //! env (innermost first: action_repeat, time_limit, scale_reward,
 //! clip_reward, normalize_obs, stack), e.g.
 //! `puffer train ocean/squared --wrap.clip_reward=1.0 --wrap.stack=4`.
+//!
+//! `--policy.*` overrides compose the policy architecture (per-leaf
+//! encoders × recurrence × action head): `--policy.hidden=64`
+//! `--policy.lstm=true` `--policy.embed_dim=8`. Recurrent reference envs
+//! (e.g. `ocean/memory`) default to the LSTM sandwich and train natively;
+//! `puffer policy describe <env>` prints the resolved stages and param
+//! counts for debugging spec/env mismatches.
 //!
 //! The default backend is the pure-Rust `NativeBackend` (no artifacts, no
 //! Python). `--backend=pjrt` selects the AOT/PJRT path; it requires a
@@ -45,6 +53,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&rest),
         "sweep" => cmd_sweep(&rest),
         "autotune" => cmd_autotune(&rest),
+        "policy" => cmd_policy(&rest),
         "envs" => {
             for name in envs::ALL_ENVS {
                 println!("{name}");
@@ -65,10 +74,11 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
-         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--backend=native|pjrt]\n  \
+         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--backend=native|pjrt]\n  \
          puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
          puffer sweep [--train.KEY=VAL ...]        train the whole Ocean suite\n  \
          puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--wrap.KEY=VAL ...]\n  \
+         puffer policy describe <env> [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...]\n  \
          puffer envs                               list first-party envs\n\n\
          Train keys: env total_steps lr ent_coef epochs minibatches norm_adv\n\
          \x20           anneal_lr seed num_workers pool run_dir log_every\n\
@@ -78,9 +88,16 @@ fn print_help() {
          \x20 --train.pool=true --train.minibatches=4 for max overlap)\n\
          Wrap keys (one-line wrapper pipeline, applied innermost-first in\n\
          \x20 this order): action_repeat time_limit scale_reward clip_reward\n\
-         \x20 normalize_obs stack — e.g. --wrap.clip_reward=1.0 --wrap.stack=4\n\n\
-         Backends: native (default, pure Rust) | pjrt (AOT artifacts;\n\
-         \x20         needs a build with --features pjrt and `make artifacts`)"
+         \x20 normalize_obs stack — e.g. --wrap.clip_reward=1.0 --wrap.stack=4\n\
+         Policy keys (architecture = per-leaf encoders x recurrence x head):\n\
+         \x20 hidden (trunk width) | lstm true/false | lstm_hidden (state\n\
+         \x20 width) | embed_dim (token-leaf embedding tables, 0 = raw) |\n\
+         \x20 head categorical|quantized:<bins> — recurrent reference envs\n\
+         \x20 (ocean/memory) default to lstm=true and train natively; a\n\
+         \x20 non-default spec becomes part of the checkpoint key\n\n\
+         Backends: native (default, pure Rust; any --policy.* spec) | pjrt\n\
+         \x20         (AOT artifacts, default archs only; needs a build with\n\
+         \x20         --features pjrt and `make artifacts`)"
     );
 }
 
@@ -166,7 +183,7 @@ fn pjrt_trainer(_tc: TrainConfig) -> Result<Trainer> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let (cfg_file, positional, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
-    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline."])?;
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy."])?;
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
@@ -218,7 +235,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
             true
         }
     });
-    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline."])?;
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy."])?;
     let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
     if let Some(env) = positional.first() {
         flat.insert("train.env".into(), env.clone());
@@ -249,16 +266,12 @@ fn cmd_eval(args: &[String]) -> Result<()> {
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let (cfg_file, _, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
-    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline."])?;
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy."])?;
     let mut solved = 0;
     for env in envs::OCEAN_ENVS {
-        // ocean/memory (recurrent reference spec) is a hard error on the
-        // native backend; report it as skipped instead of aborting the
-        // sweep.
-        if backend == "native" && pufferlib::backend::native::requires_recurrence(env) {
-            println!("{:<20} SKIPPED (needs an LSTM: --features pjrt + --backend=pjrt)", env);
-            continue;
-        }
+        // Recurrent reference specs (ocean/memory) resolve an LSTM
+        // default architecture and train natively — no skip needed since
+        // the native backend gained BPTT.
         let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
         flat.insert("train.env".into(), env.to_string());
         let tc = config::train_config(&flat)?;
@@ -277,6 +290,42 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         );
     }
     println!("{solved}/{} Ocean envs solved", envs::OCEAN_ENVS.len());
+    Ok(())
+}
+
+/// `puffer policy describe <env>`: print the resolved architecture —
+/// per-leaf encoders, trunk/recurrence/head stages, parameter counts per
+/// stage, and the checkpoint key — for debugging spec/env mismatches.
+fn cmd_policy(args: &[String]) -> Result<()> {
+    let sub = args.first().map(String::as_str);
+    anyhow::ensure!(
+        sub == Some("describe"),
+        "usage: puffer policy describe <env> [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...]"
+    );
+    let (cfg_file, positional, overrides) = split_args(&args[1..]);
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "policy."])?;
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat)?;
+    let spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
+    let pspec = tc
+        .policy
+        .clone()
+        .unwrap_or_else(|| pufferlib::policy::PolicySpec::default_for(&tc.env));
+    let probe = spec.build(0);
+    let backend = pufferlib::backend::NativeBackend::for_env_with_policy(
+        &spec.key(),
+        probe.as_ref(),
+        &pspec,
+    )?;
+    println!(
+        "{} — resolved architecture (checkpoint key: {})",
+        spec.key(),
+        backend.key()
+    );
+    print!("{}", backend.arch().describe());
     Ok(())
 }
 

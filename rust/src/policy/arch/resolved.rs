@@ -1,0 +1,447 @@
+//! [`ResolvedPolicy`] — a [`PolicySpec`] bound to a concrete observation
+//! layout and action geometry: the per-leaf encoder plan, the trunk
+//! width, and the single-source-of-truth flat parameter layout that the
+//! native backend's forward and backward passes both read.
+
+use super::{ActionHead, PolicySpec, Recurrence, MAX_EMBED_VOCAB};
+use crate::spaces::StructLayout;
+use anyhow::{ensure, Result};
+use std::ops::Range;
+
+/// One contiguous segment of the trunk input, in observation-field
+/// order. The trunk consumes the concatenation of all segments.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TrunkSegment {
+    /// Raw f32 pass-through of `count` scalars at `offset` in the flat
+    /// observation row (f32/u8 leaves, and token leaves when embedding
+    /// is off or the vocabulary is too large).
+    Raw {
+        name: String,
+        offset: usize,
+        count: usize,
+    },
+    /// A learned embedding table: each of the `count` token slots at
+    /// `offset` indexes a `vocab × embed_dim` table (index =
+    /// `round(value) - base`, clamped into the vocabulary), contributing
+    /// `count × embed_dim` trunk features.
+    Embed {
+        name: String,
+        offset: usize,
+        count: usize,
+        vocab: usize,
+        base: i32,
+    },
+}
+
+impl TrunkSegment {
+    /// Trunk features this segment contributes.
+    pub fn width(&self, embed_dim: usize) -> usize {
+        match self {
+            TrunkSegment::Raw { count, .. } => *count,
+            TrunkSegment::Embed { count, .. } => count * embed_dim,
+        }
+    }
+}
+
+/// Byte-offset layout of every parameter leaf inside the flat vector, in
+/// `ravel_pytree` (alphabetical) order: `actor.b, actor.w, critic.b,
+/// critic.w, embed_00.w … (field order), enc1.b, enc1.w, enc2.b, enc2.w
+/// [, lstm.b, lstm.w]`. For the default spec this is byte-identical to
+/// the pre-PolicySpec layout.
+pub struct ArchRanges {
+    pub actor_b: Range<usize>,
+    pub actor_w: Range<usize>,
+    pub critic_b: Range<usize>,
+    pub critic_w: Range<usize>,
+    /// One table per `TrunkSegment::Embed`, in segment order.
+    pub embeds: Vec<Range<usize>>,
+    pub enc1_b: Range<usize>,
+    pub enc1_w: Range<usize>,
+    pub enc2_b: Range<usize>,
+    pub enc2_w: Range<usize>,
+    pub lstm_b: Range<usize>,
+    pub lstm_w: Range<usize>,
+    pub total: usize,
+}
+
+/// A policy architecture resolved against an observation layout: what
+/// the native backend builds its passes from, and what
+/// `puffer policy describe` prints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResolvedPolicy {
+    pub spec: PolicySpec,
+    /// Flat f32 observation width (the emulated row).
+    pub obs_dim: usize,
+    pub act_dims: Vec<usize>,
+    /// Trunk input plan, in observation-field order.
+    pub segments: Vec<TrunkSegment>,
+    /// Total trunk input width (== `obs_dim` when nothing is embedded).
+    pub trunk_in: usize,
+}
+
+impl ResolvedPolicy {
+    /// Resolve a spec against the env's emulated observation layout:
+    /// f32/u8 leaves pass through raw; Discrete/MultiDiscrete/i32 token
+    /// leaves become embedding tables when `spec.embed_dim > 0` (and the
+    /// vocabulary fits [`MAX_EMBED_VOCAB`]).
+    pub fn resolve(spec: &PolicySpec, layout: &StructLayout, act_dims: &[usize]) -> Result<Self> {
+        ensure!(!act_dims.is_empty(), "policy needs at least one action slot");
+        if let ActionHead::Quantized { bins } = spec.head {
+            ensure!(
+                act_dims.iter().all(|&k| k == bins),
+                "quantized head declares {bins} bins per dim, but the env's \
+                 emulated action dims are {act_dims:?} — the grid must match \
+                 the QuantizedActions emulation exactly"
+            );
+        }
+        let mut segments = Vec::new();
+        for f in layout.fields() {
+            let embeddable =
+                spec.embed_dim > 0 && f.vocab > 0 && f.vocab <= MAX_EMBED_VOCAB;
+            segments.push(if embeddable {
+                TrunkSegment::Embed {
+                    name: f.name.clone(),
+                    offset: f.f32_offset,
+                    count: f.count,
+                    vocab: f.vocab,
+                    base: f.token_base,
+                }
+            } else {
+                TrunkSegment::Raw {
+                    name: f.name.clone(),
+                    offset: f.f32_offset,
+                    count: f.count,
+                }
+            });
+        }
+        let trunk_in: usize = segments.iter().map(|s| s.width(spec.embed_dim)).sum();
+        ensure!(trunk_in > 0, "empty observation layout");
+        Ok(ResolvedPolicy {
+            spec: spec.clone(),
+            obs_dim: layout.flat_len(),
+            act_dims: act_dims.to_vec(),
+            segments,
+            trunk_in,
+        })
+    }
+
+    /// Resolve over an opaque flat observation of `obs_dim` f32s (one
+    /// raw segment, nothing embedded) — the manifest path, where no
+    /// layout is available. Embedding requests are ignored by
+    /// construction here; use [`resolve`](Self::resolve) with a real
+    /// layout for per-leaf encoders.
+    pub fn from_flat(spec: &PolicySpec, obs_dim: usize, act_dims: &[usize]) -> Self {
+        ResolvedPolicy {
+            spec: spec.clone(),
+            obs_dim,
+            act_dims: act_dims.to_vec(),
+            segments: vec![TrunkSegment::Raw {
+                name: "obs".into(),
+                offset: 0,
+                count: obs_dim,
+            }],
+            trunk_in: obs_dim,
+        }
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.spec.hidden
+    }
+
+    /// Recurrent state width (0 when feedforward).
+    pub fn state_dim(&self) -> usize {
+        self.spec.state_dim()
+    }
+
+    pub fn is_recurrent(&self) -> bool {
+        self.spec.is_recurrent()
+    }
+
+    /// Actor/critic fan-in.
+    pub fn decode_in(&self) -> usize {
+        self.spec.decode_in()
+    }
+
+    pub fn act_sum(&self) -> usize {
+        self.act_dims.iter().sum()
+    }
+
+    /// The embedding segments, in trunk order.
+    pub fn embeds(&self) -> impl Iterator<Item = &TrunkSegment> {
+        self.segments
+            .iter()
+            .filter(|s| matches!(s, TrunkSegment::Embed { .. }))
+    }
+
+    pub fn has_embeds(&self) -> bool {
+        self.embeds().next().is_some()
+    }
+
+    /// The flat parameter layout (forward reads it, backward accumulates
+    /// into it, init fills it — one source of truth).
+    pub fn ranges(&self) -> ArchRanges {
+        let (h, a, d_in) = (self.hidden(), self.act_sum(), self.decode_in());
+        let sd = self.state_dim();
+        let mut off = 0usize;
+        let mut take = |n: usize| {
+            let r = off..off + n;
+            off += n;
+            r
+        };
+        let actor_b = take(a);
+        let actor_w = take(d_in * a);
+        let critic_b = take(1);
+        let critic_w = take(d_in);
+        let mut embeds = Vec::new();
+        for seg in &self.segments {
+            if let TrunkSegment::Embed { vocab, .. } = seg {
+                embeds.push(take(vocab * self.spec.embed_dim));
+            }
+        }
+        let enc1_b = take(h);
+        let enc1_w = take(self.trunk_in * h);
+        let enc2_b = take(h);
+        let enc2_w = take(h * h);
+        let (lstm_b, lstm_w) = if sd > 0 {
+            (take(4 * sd), take((h + sd) * 4 * sd))
+        } else {
+            (0..0, 0..0)
+        };
+        ArchRanges {
+            actor_b,
+            actor_w,
+            critic_b,
+            critic_w,
+            embeds,
+            enc1_b,
+            enc1_w,
+            enc2_b,
+            enc2_w,
+            lstm_b,
+            lstm_w,
+            total: off,
+        }
+    }
+
+    /// Total flat parameter count.
+    pub fn n_params(&self) -> usize {
+        self.ranges().total
+    }
+
+    /// The spec as it actually resolved: an `embed_dim` that produced no
+    /// tables (no token leaves, or all vocabularies too large) does not
+    /// change the parameters and is canonicalized away.
+    pub fn effective_spec(&self) -> PolicySpec {
+        let mut effective = self.spec.clone();
+        if !self.has_embeds() {
+            effective.embed_dim = 0;
+        }
+        effective
+    }
+
+    /// The architecture fragment embedded in backend/checkpoint keys
+    /// (after `#`), **relative to `baseline`** — the env's default spec.
+    /// `None` when this *is* the baseline architecture, so default-spec
+    /// checkpoints keep their pre-PolicySpec keys (and, for recurrent
+    /// reference envs, stay interchangeable with the PJRT manifest
+    /// spec). Any deviation records the full effective descriptor
+    /// ([`PolicySpec::key`], `"mlp"` included) so no two architectures
+    /// share a key.
+    pub fn key_fragment(&self, baseline: &PolicySpec) -> Option<String> {
+        let effective = self.effective_spec();
+        if effective == *baseline {
+            None
+        } else {
+            Some(effective.key())
+        }
+    }
+
+    /// Human-readable architecture report: per-leaf encoders and
+    /// per-stage parameter counts (the `puffer policy describe` output).
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let r = self.ranges();
+        let mut out = String::new();
+        let _ = writeln!(out, "observation leaves ({} f32 scalars):", self.obs_dim);
+        let mut ei = 0usize;
+        for seg in &self.segments {
+            match seg {
+                TrunkSegment::Raw { name, offset, count } => {
+                    let _ = writeln!(
+                        out,
+                        "  {name:<24} f32[{count}] @ {offset:<5} -> raw ({count} trunk features)"
+                    );
+                }
+                TrunkSegment::Embed {
+                    name,
+                    offset,
+                    count,
+                    vocab,
+                    base,
+                } => {
+                    let dim = self.spec.embed_dim;
+                    let _ = writeln!(
+                        out,
+                        "  {name:<24} tok[{count}] @ {offset:<5} -> embed[{vocab}x{dim}] \
+                         (base {base}, {} trunk features, {} params)",
+                        count * dim,
+                        r.embeds[ei].len(),
+                    );
+                    ei += 1;
+                }
+            }
+        }
+        let _ = writeln!(out, "stages:");
+        let stage = |out: &mut String, name: &str, shape: String, n: usize| {
+            let _ = writeln!(out, "  {name:<8} {shape:<20} {n:>8} params");
+        };
+        let (h, sd, d_in, a) = (self.hidden(), self.state_dim(), self.decode_in(), self.act_sum());
+        stage(
+            &mut out,
+            "enc1",
+            format!("{}x{h} + {h}", self.trunk_in),
+            r.enc1_b.len() + r.enc1_w.len(),
+        );
+        stage(&mut out, "enc2", format!("{h}x{h} + {h}"), r.enc2_b.len() + r.enc2_w.len());
+        if sd > 0 {
+            stage(
+                &mut out,
+                "lstm",
+                format!("[{h}+{sd}]x{} + {}", 4 * sd, 4 * sd),
+                r.lstm_b.len() + r.lstm_w.len(),
+            );
+        }
+        let head = match self.spec.head {
+            ActionHead::Categorical => format!("{:?} slots", self.act_dims),
+            ActionHead::Quantized { bins } => {
+                format!("quantized grid, {} dims x {bins} bins", self.act_dims.len())
+            }
+        };
+        stage(
+            &mut out,
+            "actor",
+            format!("{d_in}x{a} + {a} ({head})"),
+            r.actor_b.len() + r.actor_w.len(),
+        );
+        stage(
+            &mut out,
+            "critic",
+            format!("{d_in}x1 + 1"),
+            r.critic_b.len() + r.critic_w.len(),
+        );
+        let recur = match self.spec.recurrence {
+            Recurrence::None => "feedforward".to_string(),
+            Recurrence::Lstm { hidden } => format!("lstm (state {hidden}, BPTT-trained natively)"),
+        };
+        let _ = writeln!(
+            out,
+            "total: {} params | trunk in {} | {recur} | arch key: {}",
+            r.total,
+            self.trunk_in,
+            self.effective_spec().key(),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spaces::Space;
+
+    #[test]
+    fn default_flat_resolution_matches_legacy_n_params() {
+        // The legacy formula: actor + critic + enc1 + enc2 [+ lstm].
+        let legacy = |d: usize, a: usize, h: usize, lstm: bool| {
+            let mut n = (a + h * a) + (1 + h) + (h + d * h) + (h + h * h);
+            if lstm {
+                n += 4 * h + (2 * h) * (4 * h);
+            }
+            n
+        };
+        let spec = PolicySpec::default().with_hidden(4);
+        let arch = ResolvedPolicy::from_flat(&spec, 3, &[2, 3]);
+        assert_eq!(arch.n_params(), legacy(3, 5, 4, false));
+        let arch = ResolvedPolicy::from_flat(&spec.with_lstm(4), 3, &[2, 3]);
+        assert_eq!(arch.n_params(), legacy(3, 5, 4, true));
+    }
+
+    #[test]
+    fn token_leaves_resolve_to_embedding_tables() {
+        // {feat: f32[2], tok: MultiDiscrete[5,5]} — canonical key order
+        // puts feat first, so the flat row is [f0, f1, t0, t1].
+        let space = Space::dict(vec![
+            ("feat".into(), Space::boxf(&[2], -1.0, 1.0)),
+            ("tok".into(), Space::MultiDiscrete(vec![5, 5])),
+        ]);
+        let spec = PolicySpec::default().with_hidden(4).with_embed_dim(3);
+        let arch = ResolvedPolicy::resolve(&spec, &space.layout(), &[2, 3]).unwrap();
+        assert_eq!(arch.obs_dim, 4);
+        assert_eq!(arch.trunk_in, 2 + 2 * 3);
+        assert_eq!(arch.segments.len(), 2);
+        assert!(matches!(arch.segments[0], TrunkSegment::Raw { count: 2, .. }));
+        match &arch.segments[1] {
+            TrunkSegment::Embed { count, vocab, base, .. } => {
+                assert_eq!((*count, *vocab, *base), (2, 5, 0));
+            }
+            other => panic!("expected embed segment, got {other:?}"),
+        }
+        // Params: actor(5+4*5) + critic(1+4) + embed(5*3) + enc1(4+8*4) + enc2(4+16)
+        assert_eq!(arch.n_params(), 25 + 5 + 15 + 36 + 20);
+        assert_eq!(
+            arch.key_fragment(&PolicySpec::default()).unwrap(),
+            "embed=3+h=4"
+        );
+    }
+
+    #[test]
+    fn embed_dim_without_token_leaves_is_effectively_default() {
+        let space = Space::boxf(&[3], 0.0, 1.0);
+        let spec = PolicySpec::default().with_embed_dim(8);
+        let arch = ResolvedPolicy::resolve(&spec, &space.layout(), &[2]).unwrap();
+        assert!(!arch.has_embeds());
+        assert_eq!(arch.trunk_in, 3);
+        assert_eq!(
+            arch.key_fragment(&PolicySpec::default()),
+            None,
+            "no tables -> default params -> default key"
+        );
+        // Relative to a *recurrent* baseline, a feedforward arch records
+        // its full descriptor, so the two never share a key.
+        let base = PolicySpec::default().with_lstm(128);
+        assert_eq!(arch.key_fragment(&base).unwrap(), "mlp");
+    }
+
+    #[test]
+    fn huge_vocabularies_stay_raw() {
+        let space = Space::boxi32(&[2], 0.0, 100_000.0);
+        let spec = PolicySpec::default().with_embed_dim(4);
+        let arch = ResolvedPolicy::resolve(&spec, &space.layout(), &[2]).unwrap();
+        assert!(!arch.has_embeds());
+    }
+
+    #[test]
+    fn quantized_head_must_match_the_grid() {
+        let space = Space::boxf(&[3], 0.0, 1.0);
+        let spec = PolicySpec::default().with_quantized_head(15);
+        assert!(ResolvedPolicy::resolve(&spec, &space.layout(), &[15, 15]).is_ok());
+        let err = ResolvedPolicy::resolve(&spec, &space.layout(), &[15, 9])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("15 bins"), "{err}");
+    }
+
+    #[test]
+    fn describe_names_every_leaf_and_stage() {
+        let space = Space::dict(vec![
+            ("feat".into(), Space::boxf(&[2], -1.0, 1.0)),
+            ("tok".into(), Space::Discrete(6)),
+        ]);
+        let spec = PolicySpec::default().with_hidden(8).with_embed_dim(4).with_lstm(8);
+        let arch = ResolvedPolicy::resolve(&spec, &space.layout(), &[3]).unwrap();
+        let d = arch.describe();
+        for needle in ["feat", "tok", "embed[6x4]", "enc1", "enc2", "lstm", "actor", "critic"] {
+            assert!(d.contains(needle), "describe missing '{needle}':\n{d}");
+        }
+    }
+}

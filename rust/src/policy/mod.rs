@@ -6,9 +6,11 @@
 //! state-reshaping and reset-on-done logic that the paper calls the most
 //! common source of hard-to-diagnose bugs).
 
+pub mod arch;
 pub mod continuous;
 pub mod snapshot;
 
+pub use arch::{ActionHead, PolicySpec, Recurrence, ResolvedPolicy};
 pub use snapshot::ParamSnapshot;
 
 use crate::backend::PolicyBackend;
@@ -34,8 +36,8 @@ pub struct PolicyOut {
 pub struct Policy {
     spec: SpecManifest,
     params: Vec<f32>,
-    /// Per-row recurrent state, `rows × hidden` (LSTM specs only);
-    /// indexed by global env row.
+    /// Per-row recurrent state, `rows × state_dim` (recurrent
+    /// architectures only); indexed by global env row.
     h: Vec<f32>,
     c: Vec<f32>,
     rng: Rng,
@@ -53,7 +55,7 @@ impl Policy {
             spec.n_params
         );
         let state_rows = spec.batch_roll.max(spec.batch_fwd);
-        let state = vec![0.0; state_rows * spec.hidden];
+        let state = vec![0.0; state_rows * spec.policy.state_dim()];
         Ok(Policy {
             spec,
             params,
@@ -88,10 +90,10 @@ impl Policy {
     /// Zero the recurrent state of a global env row (call when that row's
     /// episode ended — the auto-reset means its next obs starts fresh).
     pub fn reset_state(&mut self, row: usize) {
-        if !self.spec.lstm {
+        if !self.spec.policy.is_recurrent() {
             return;
         }
-        let h = self.spec.hidden;
+        let h = self.spec.policy.state_dim();
         self.h[row * h..(row + 1) * h].fill(0.0);
         self.c[row * h..(row + 1) * h].fill(0.0);
     }
@@ -120,9 +122,9 @@ impl Policy {
             self.spec.batch_fwd,
             self.spec.batch_roll
         );
-        let hdim = self.spec.hidden;
+        let hdim = self.spec.policy.state_dim();
 
-        let (logits, values) = if self.spec.lstm {
+        let (logits, values) = if self.spec.policy.is_recurrent() {
             // Gather recurrent state for these rows.
             let mut hbuf = vec![0.0f32; rows * hdim];
             let mut cbuf = vec![0.0f32; rows * hdim];

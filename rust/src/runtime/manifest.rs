@@ -1,6 +1,7 @@
 //! The AOT manifest: the Python→Rust shape contract written by
 //! `python/compile/aot.py`.
 
+use crate::policy::arch::PolicySpec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -15,6 +16,11 @@ pub struct SpecManifest {
     pub lstm: bool,
     pub n_params: usize,
     pub hidden: usize,
+    /// The declarative architecture descriptor this spec executes. For
+    /// manifest-parsed (AOT/PJRT) specs it is synthesized from
+    /// `hidden`/`lstm` — the AOT pipeline lowers default architectures
+    /// only; native backends carry the full resolved spec here.
+    pub policy: PolicySpec,
     /// Agent rows per pooled forward call (`N`).
     pub batch_fwd: usize,
     /// Total agent rows across all envs (`M`, the GAE/train width).
@@ -65,6 +71,12 @@ impl Manifest {
                 .iter()
                 .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
                 .collect();
+            let lstm = s.get("lstm").as_bool().unwrap_or(false);
+            let hidden = need_usize("hidden")?;
+            let mut policy = PolicySpec::default().with_hidden(hidden);
+            if lstm {
+                policy = policy.with_lstm(hidden);
+            }
             specs.insert(
                 name.clone(),
                 SpecManifest {
@@ -74,9 +86,10 @@ impl Manifest {
                         .as_usize_vec()
                         .with_context(|| format!("spec {name}: bad act_dims"))?,
                     agents: need_usize("agents")?,
-                    lstm: s.get("lstm").as_bool().unwrap_or(false),
+                    lstm,
                     n_params: need_usize("n_params")?,
-                    hidden: need_usize("hidden")?,
+                    hidden,
+                    policy,
                     batch_fwd: need_usize("batch_fwd")?,
                     batch_roll: need_usize("batch_roll")?,
                     horizon: need_usize("horizon")?,
@@ -153,6 +166,9 @@ mod tests {
         assert_eq!(s.act_dims, vec![4]);
         assert_eq!(s.artifacts["gae"], "g.hlo.txt");
         assert!(!s.lstm);
+        // The synthesized architecture descriptor mirrors hidden/lstm.
+        assert_eq!(s.policy, PolicySpec::default().with_hidden(128));
+        assert_eq!(s.policy.state_dim(), 0);
         assert!(m.spec("nope").is_err());
     }
 

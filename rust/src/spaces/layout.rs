@@ -28,6 +28,15 @@ pub struct Field {
     pub byte_offset: usize,
     /// Element offset within the f32 view of the row.
     pub f32_offset: usize,
+    /// Token vocabulary size when this leaf is categorical (`Discrete`,
+    /// `MultiDiscrete`, or an i32 `Box`): the number of distinct values
+    /// per slot, which a [`PolicySpec`](crate::policy::arch::PolicySpec)
+    /// with `embed_dim > 0` turns into an embedding table. `0` for
+    /// continuous/image leaves (f32/u8 boxes).
+    pub vocab: usize,
+    /// Smallest token value (embedding index = `value - token_base`);
+    /// nonzero only for i32 boxes with a shifted range.
+    pub token_base: i32,
 }
 
 /// Packed layout of a space tree: the structured-array "dtype".
@@ -40,13 +49,35 @@ pub struct StructLayout {
 
 /// How a leaf kind maps to bytes. Discrete leaves are stored as one i32;
 /// MultiDiscrete as i32 per slot. (Matches what a Gym structured dtype
-/// would do with int32 catgorical data.)
-fn leaf_dtype_count(space: &Space) -> Option<(Dtype, usize, Vec<usize>)> {
+/// would do with int32 catgorical data.) The trailing `(vocab, base)`
+/// pair carries the token cardinality for categorical leaves (see
+/// [`Field::vocab`]); `(0, 0)` marks continuous/image data.
+fn leaf_dtype_count(space: &Space) -> Option<(Dtype, usize, Vec<usize>, usize, i32)> {
     match space {
-        Space::Discrete(_) => Some((Dtype::I32, 1, vec![1])),
-        Space::MultiDiscrete(nvec) => Some((Dtype::I32, nvec.len(), vec![nvec.len()])),
-        Space::Box { dtype, shape, .. } => {
-            Some((*dtype, shape.iter().product::<usize>().max(1), shape.clone()))
+        Space::Discrete(n) => Some((Dtype::I32, 1, vec![1], *n, 0)),
+        Space::MultiDiscrete(nvec) => Some((
+            Dtype::I32,
+            nvec.len(),
+            vec![nvec.len()],
+            nvec.iter().copied().max().unwrap_or(0),
+            0,
+        )),
+        Space::Box {
+            dtype, shape, low, high, ..
+        } => {
+            let count = shape.iter().product::<usize>().max(1);
+            let (vocab, base) = if *dtype == Dtype::I32 && low.is_finite() && high.is_finite() {
+                let lo = *low as i64;
+                let hi = *high as i64;
+                if hi >= lo {
+                    (((hi - lo) as usize).saturating_add(1), lo as i32)
+                } else {
+                    (0, 0)
+                }
+            } else {
+                (0, 0)
+            };
+            Some((*dtype, count, shape.clone(), vocab, base))
         }
         _ => None,
     }
@@ -74,7 +105,7 @@ impl StructLayout {
         byte_off: &mut usize,
         f32_off: &mut usize,
     ) {
-        if let Some((dtype, count, shape)) = leaf_dtype_count(space) {
+        if let Some((dtype, count, shape, vocab, token_base)) = leaf_dtype_count(space) {
             fields.push(Field {
                 name: prefix.to_string(),
                 dtype,
@@ -82,6 +113,8 @@ impl StructLayout {
                 count,
                 byte_offset: *byte_off,
                 f32_offset: *f32_off,
+                vocab,
+                token_base,
             });
             *byte_off += count * dtype.size();
             *f32_off += count;
@@ -323,6 +356,23 @@ mod tests {
         }
         assert_eq!(l.byte_len(), expect);
         assert_eq!(l.flat_len(), s.num_elements());
+    }
+
+    #[test]
+    fn token_vocab_metadata_marks_categorical_leaves() {
+        let l = complex_space().layout();
+        // i32 box 0..=100 → vocab 101; Discrete(6) → 6;
+        // MultiDiscrete([2,3]) → max slot cardinality 3; u8/f32 → 0.
+        assert_eq!(l.field("glyphs").unwrap().vocab, 101);
+        assert_eq!(l.field("glyphs").unwrap().token_base, 0);
+        assert_eq!(l.field("inv.0").unwrap().vocab, 6);
+        assert_eq!(l.field("inv.1").unwrap().vocab, 3);
+        assert_eq!(l.field("msg").unwrap().vocab, 0);
+        assert_eq!(l.field("stats").unwrap().vocab, 0);
+        // Shifted i32 ranges record their base.
+        let shifted = Space::boxi32(&[2], -5.0, 5.0).layout();
+        let f = &shifted.fields()[0];
+        assert_eq!((f.vocab, f.token_base), (11, -5));
     }
 
     #[test]

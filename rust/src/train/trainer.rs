@@ -20,7 +20,7 @@ use super::pipeline::{collector_loop, Segment};
 use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 use super::Checkpoint;
 use crate::backend::{AdamState, MinibatchScratch, NativeBackend, PolicyBackend, TrainBatch};
-use crate::policy::{ParamSnapshot, Policy};
+use crate::policy::{ParamSnapshot, Policy, PolicySpec};
 use crate::util::rng::Rng;
 use crate::util::timer::{SpsCounter, Timer};
 use crate::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
@@ -40,6 +40,13 @@ pub struct TrainConfig {
     /// pipeline — probe, backend spec, vectorizer slabs — sizes itself
     /// from the wrapped geometry.
     pub wrappers: Vec<WrapperSpec>,
+    /// Policy architecture (the `train.policy.*` config keys /
+    /// `--policy.*` CLI overrides). `None` (default) resolves the env's
+    /// default spec — feedforward, except recurrent reference envs,
+    /// which get the LSTM sandwich ([`PolicySpec::default_for`]). A
+    /// non-default spec becomes part of the backend/checkpoint key, so
+    /// parameters never cross architectures silently.
+    pub policy: Option<PolicySpec>,
     /// Total environment interactions to train for.
     pub total_steps: u64,
     pub lr: f32,
@@ -76,6 +83,7 @@ impl Default for TrainConfig {
         TrainConfig {
             env: "ocean/squared".into(),
             wrappers: Vec::new(),
+            policy: None,
             total_steps: 30_000,
             lr: 2.5e-3,
             ent_coef: 0.01,
@@ -162,14 +170,25 @@ impl Trainer {
         EnvSpec::new(cfg.env.as_str()).with_wrappers(cfg.wrappers.iter().cloned())
     }
 
+    /// The policy architecture this config trains: the explicit
+    /// [`TrainConfig::policy`] spec, or the env's default.
+    fn policy_spec(cfg: &TrainConfig) -> PolicySpec {
+        cfg.policy
+            .clone()
+            .unwrap_or_else(|| PolicySpec::default_for(&cfg.env))
+    }
+
     /// Train with the default pure-Rust [`NativeBackend`]: no artifacts,
     /// no Python, no native dependencies. The backend spec is sized from
-    /// the *wrapped* env (stacking widens `obs_dim`), and its key embeds
-    /// the wrapper chain so checkpoints never cross chains silently.
+    /// the *wrapped* env (stacking widens `obs_dim`) and resolved
+    /// against its observation layout (per-leaf encoders), and its key
+    /// embeds the wrapper chain plus any non-default architecture so
+    /// checkpoints never cross chains or architectures silently.
     pub fn native(cfg: TrainConfig) -> Result<Self> {
         let spec = Self::env_spec(&cfg);
         let probe = spec.build(0);
-        let backend = NativeBackend::for_env(&spec.key(), probe.as_ref())?;
+        let policy = Self::policy_spec(&cfg);
+        let backend = NativeBackend::for_env_with_policy(&spec.key(), probe.as_ref(), &policy)?;
         Self::build(cfg, Box::new(backend), probe)
     }
 
@@ -193,6 +212,16 @@ impl Trainer {
             "the pjrt backend's compiled train_step always normalizes \
              advantages; train.norm_adv=false requires the native backend"
         );
+        if let Some(policy) = &cfg.policy {
+            anyhow::ensure!(
+                *policy == PolicySpec::default_for(&cfg.env),
+                "the pjrt backend executes AOT-lowered default architectures \
+                 only; the requested spec '{}' (train.policy.* / --policy.*) \
+                 requires the native backend, which builds arbitrary \
+                 PolicySpecs from the spec itself",
+                policy.key()
+            );
+        }
         let key = crate::runtime::Manifest::spec_key_for_env(&cfg.env);
         let backend = crate::backend::PjrtBackend::new(artifacts_dir, &key)?;
         Self::with_backend(cfg, Box::new(backend))
@@ -661,14 +690,35 @@ impl Trainer {
         }
     }
 
-    /// Restore from a checkpoint (spec must match).
+    /// Restore from a checkpoint (env spec, wrapper chain, and policy
+    /// architecture must all match — they are the key).
     pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
-        anyhow::ensure!(
-            ck.spec_key == self.spec_key,
-            "checkpoint is for '{}', trainer is '{}'",
-            ck.spec_key,
-            self.spec_key
-        );
+        if ck.spec_key != self.spec_key {
+            // The key is `<env+wrappers>[#<arch>]`; name the mismatched
+            // half so the fix (re-train, or match --policy.*) is obvious.
+            let split = |k: &str| -> (String, String) {
+                match k.split_once('#') {
+                    Some((env, arch)) => (env.to_string(), arch.to_string()),
+                    None => (k.to_string(), "default".to_string()),
+                }
+            };
+            let (ck_env, ck_arch) = split(&ck.spec_key);
+            let (my_env, my_arch) = split(&self.spec_key);
+            if ck_env == my_env && ck_arch != my_arch {
+                anyhow::bail!(
+                    "checkpoint is for '{ck_env}' with policy architecture \
+                     '{ck_arch}', but this trainer resolved architecture \
+                     '{my_arch}' — parameter layouts differ across \
+                     architectures; match the checkpoint's --policy.* spec \
+                     or retrain"
+                );
+            }
+            anyhow::bail!(
+                "checkpoint is for '{}', trainer is '{}'",
+                ck.spec_key,
+                self.spec_key
+            );
+        }
         anyhow::ensure!(
             ck.params.len() == self.policy.spec().n_params,
             "checkpoint '{}' has {} params, this backend expects {} — was it \
@@ -890,16 +940,30 @@ mod tests {
                 log_every: 0,
                 ..Default::default()
             };
-            if crate::backend::native::requires_recurrence(env) {
-                // Feedforward-only backend: recurrent reference specs are
-                // a hard, actionable construction error.
-                let err = Trainer::native(cfg).err().expect(env).to_string();
-                assert!(err.contains("--features pjrt"), "{env}: {err}");
-                continue;
-            }
+            // Every env constructs with its default architecture —
+            // recurrent reference specs get the LSTM sandwich and train
+            // natively (no more pjrt-only caveat).
             let t = Trainer::native(cfg).unwrap_or_else(|e| panic!("{env}: {e}"));
             assert_eq!(t.policy().params().len(), t.policy().spec().n_params);
+            assert_eq!(
+                t.policy().spec().lstm,
+                crate::backend::native::requires_recurrence(env),
+                "{env}: default recurrence"
+            );
         }
+        // Forcing feedforward on a memory env stays a hard error naming
+        // the --policy.lstm fix.
+        let err = Trainer::native(TrainConfig {
+            env: "ocean/memory".into(),
+            policy: Some(PolicySpec::default()),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        })
+        .err()
+        .expect("feedforward memory must not construct")
+        .to_string();
+        assert!(err.contains("--policy.lstm"), "{err}");
     }
 
     #[test]

@@ -3,11 +3,9 @@
 //! We provide an utility that benchmarks valid vectorization settings."*
 
 use super::{Multiprocessing, Serial, VecConfig, VecEnv};
-use crate::emulation::FlatEnv;
 use crate::util::timer::Timer;
 use crate::wrappers::EnvSpec;
 use anyhow::Result;
-use std::sync::Arc;
 
 /// Result of benchmarking one candidate configuration.
 #[derive(Clone, Debug)]
@@ -90,18 +88,6 @@ pub fn autotune(
     Ok(results)
 }
 
-/// Legacy entry point taking a raw factory.
-#[deprecated(since = "0.2.0", note = "describe the env with an EnvSpec and call `autotune`")]
-pub fn autotune_factory(
-    factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync>,
-    num_envs: usize,
-    max_workers: usize,
-    duration_secs: f64,
-) -> Result<Vec<TuneResult>> {
-    let spec = EnvSpec::custom("custom", move |i| factory(i));
-    autotune(&spec, num_envs, max_workers, duration_secs)
-}
-
 /// Drive a backend with no-op actions for `secs`, returning env-steps/sec.
 pub fn measure<V: VecEnv>(mut v: V, secs: f64) -> Result<f64> {
     let slots = v.action_dims().len();
@@ -161,14 +147,5 @@ mod tests {
         assert!(results.iter().any(|r| r.label == "serial"));
         let table = format_results(&results);
         assert!(table.contains("serial"));
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_factory_entry_point_still_tunes() {
-        let factory: Arc<dyn Fn(usize) -> Box<dyn FlatEnv> + Send + Sync> =
-            Arc::new(|i| envs::make("ocean/squared", i as u64));
-        let results = autotune_factory(factory, 2, 1, 0.02).unwrap();
-        assert!(!results.is_empty());
     }
 }

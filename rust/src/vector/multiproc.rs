@@ -80,17 +80,6 @@ impl Multiprocessing {
         Self::from_factory_box(Box::new(factory), cfg)
     }
 
-    #[deprecated(
-        since = "0.2.0",
-        note = "construct through an EnvSpec (`Multiprocessing::from_spec`), or use `from_factory`"
-    )]
-    pub fn new(
-        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
-        cfg: VecConfig,
-    ) -> Result<Self> {
-        Self::from_factory(factory, cfg)
-    }
-
     fn from_factory_box(factory: EnvFactory, cfg: VecConfig) -> Result<Self> {
         let mode = cfg.mode()?;
         let (layout, action_dims, agents) = probe_factory(&factory);

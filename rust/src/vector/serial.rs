@@ -42,14 +42,6 @@ impl Serial {
         Self::from_factory_box(Box::new(factory), cfg)
     }
 
-    #[deprecated(
-        since = "0.2.0",
-        note = "construct through an EnvSpec (`Serial::from_spec`), or use `from_factory`"
-    )]
-    pub fn new(factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static, cfg: VecConfig) -> Result<Self> {
-        Self::from_factory(factory, cfg)
-    }
-
     fn from_factory_box(factory: EnvFactory, cfg: VecConfig) -> Result<Self> {
         anyhow::ensure!(
             cfg.batch_size == cfg.num_envs,
@@ -157,7 +149,6 @@ impl VecEnv for Serial {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::envs;
 
     #[test]
     fn serial_round_trip_on_cartpole() {
@@ -190,20 +181,6 @@ mod tests {
             ..Default::default()
         };
         assert!(Serial::from_spec(&EnvSpec::new("classic/cartpole"), cfg).is_err());
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_factory_shim_still_constructs() {
-        let cfg = VecConfig {
-            num_envs: 2,
-            num_workers: 1,
-            batch_size: 2,
-            ..Default::default()
-        };
-        let mut v = Serial::new(|i| envs::make("ocean/bandit", i as u64), cfg).unwrap();
-        v.async_reset(0);
-        assert_eq!(v.recv().unwrap().rewards.len(), 2);
     }
 
     #[test]

@@ -263,22 +263,15 @@ fn trainer_pool_mode_pipelined_runs() {
 }
 
 /// The native backend must synthesize a valid spec (shape contract,
-/// geometry divisibility) for every trainable first-party env — and
-/// refuse, actionably, the envs that need recurrence to be solvable.
+/// geometry divisibility) for every trainable first-party env —
+/// including recurrent reference envs, which now resolve an LSTM
+/// default architecture instead of hard-erroring.
 #[test]
 fn native_backend_covers_all_trainable_envs() {
     use pufferlib::backend::native::requires_recurrence;
     use pufferlib::backend::{NativeBackend, PolicyBackend as _};
     for &env in envs::OCEAN_ENVS.iter().chain(&["classic/cartpole", "profile/nmmo"]) {
         let probe = envs::make(env, 0);
-        if requires_recurrence(env) {
-            let err = NativeBackend::for_env(env, probe.as_ref())
-                .err()
-                .unwrap_or_else(|| panic!("{env}: recurrent env must hard-error"))
-                .to_string();
-            assert!(err.contains("--features pjrt"), "{env}: {err}");
-            continue;
-        }
         let mut b = NativeBackend::for_env(env, probe.as_ref())
             .unwrap_or_else(|e| panic!("{env}: {e}"));
         let spec = b.spec().clone();
@@ -286,9 +279,63 @@ fn native_backend_covers_all_trainable_envs() {
         assert_eq!(spec.act_dims, probe.action_dims(), "{env}");
         assert_eq!(spec.agents, probe.num_agents(), "{env}");
         assert_eq!(spec.batch_roll % spec.agents, 0, "{env}");
+        assert_eq!(spec.lstm, requires_recurrence(env), "{env}: default recurrence");
         let params = b.init_params().unwrap();
         assert_eq!(params.len(), spec.n_params, "{env}");
     }
+}
+
+/// A recurrent env trains past its reward threshold on the **native**
+/// backend (serial path). `ocean/memory` is unsolvable without
+/// recurrence — a memoryless policy scores 0.5 in expectation (the
+/// recall-phase observations are identical), so clearing 0.7 proves the
+/// LSTM sandwich plus its BPTT gradients work end to end. The small
+/// `--policy.*`-style spec (48-wide trunk/state) keeps the scalar BPTT
+/// affordable at test opt-level.
+#[test]
+fn trainer_improves_memory_native_serial() {
+    use pufferlib::policy::PolicySpec;
+    let cfg = TrainConfig {
+        env: "ocean/memory".into(),
+        total_steps: 49_152,
+        policy: Some(PolicySpec::default().with_hidden(48).with_lstm(48)),
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::native(cfg).unwrap();
+    let report = trainer.train().unwrap();
+    let score = report.mean_score.expect("episodes finished");
+    assert!(
+        score > 0.7,
+        "memory should train well past chance (0.5) by 49k steps, got {score}"
+    );
+    assert!(report.episodes > 1000);
+}
+
+/// The same recurrent env through the pipelined trainer (depth ≥ 1):
+/// collector-side LSTM state, episode-start carry across rotated
+/// buffers, and whole-row BPTT minibatches must all survive the
+/// collector/learner handoff.
+#[test]
+fn trainer_improves_memory_native_pipelined() {
+    use pufferlib::policy::PolicySpec;
+    let cfg = TrainConfig {
+        env: "ocean/memory".into(),
+        total_steps: 49_152,
+        policy: Some(PolicySpec::default().with_hidden(48).with_lstm(48)),
+        pipeline_depth: 1,
+        minibatches: 2,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::native(cfg).unwrap();
+    let report = trainer.train().unwrap();
+    let score = report.mean_score.expect("episodes finished");
+    assert!(
+        score > 0.7,
+        "pipelined memory should train well past chance by 49k steps, got {score}"
+    );
+    assert!(report.max_param_staleness <= 1);
 }
 
 /// PJRT path: the AOT manifest must cover every trainable env with
