@@ -1,12 +1,16 @@
 //! Run the vectorization autotuner (paper §3.3) on a profile environment:
-//! benchmarks all four code paths plus serial across worker counts and
-//! recommends the best configuration for this host.
+//! benchmarks all four code paths plus serial across worker counts,
+//! recommends the best configuration for this host, and emits it as a
+//! machine-readable `VecSpec` — the exact value a RunSpec's
+//! `vec = "auto"` consumes from the cache file.
 //!
 //! ```bash
 //! cargo run --release --example autotune [env] [num_envs] [secs]
 //! ```
 
-use pufferlib::vector::autotune::{autotune, format_results};
+use pufferlib::vector::autotune::{
+    autotune, cache_path, format_results, trainable_winner, write_cache,
+};
 use pufferlib::wrappers::EnvSpec;
 
 fn main() -> anyhow::Result<()> {
@@ -24,5 +28,14 @@ fn main() -> anyhow::Result<()> {
         "\nrecommended: {} → VecConfig {{ num_envs: {}, num_workers: {}, batch_size: {}, zero_copy: {} }}",
         best.label, best.cfg.num_envs, best.cfg.num_workers, best.cfg.batch_size, best.cfg.zero_copy
     );
+    // The declarative form: serializable into a RunSpec [vec] section,
+    // and cached where `vec = "auto"` looks for it. The cache only
+    // accepts trainable (full/half batch) candidates — the policy
+    // forward is compiled for exactly those shapes.
+    let winner = trainable_winner(&results, num_envs).vec_spec();
+    println!("vec spec: {}", winner.to_json().dump());
+    let cache = cache_path(None);
+    write_cache(&cache, &spec.key(), num_envs, &winner)?;
+    println!("cached → {}", cache.display());
     Ok(())
 }

@@ -6,7 +6,6 @@
 
 use pufferlib::prelude::*;
 use pufferlib::util::timer::SpsCounter;
-use pufferlib::vector::VecConfig;
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe the env as an EnvSpec: any first-party name (or a
@@ -14,16 +13,19 @@ fn main() -> anyhow::Result<()> {
     //    plus a one-line wrapper chain, applied innermost first.
     let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(2);
 
-    // 2. Vectorize: 8 envs on 2 workers, EnvPool batch of 4 (first
-    //    finishers win). The slabs size themselves from the *wrapped*
-    //    layout (stacking doubled the rows here).
-    let cfg = VecConfig {
-        num_envs: 8,
-        num_workers: 2,
-        batch_size: 4,
-        ..Default::default()
+    // 2. Describe the vectorization as a VecSpec — the same declarative
+    //    value a RunSpec's [vec] section deserializes into: 2 workers,
+    //    EnvPool batch of 4 envs (first finishers win). Resolving it
+    //    against the env budget yields the validated low-level
+    //    VecConfig; the slabs size themselves from the *wrapped* layout
+    //    (stacking doubled the rows here).
+    let vec = VecSpec::Mt {
+        workers: 2,
+        batch: VecBatch::Envs(4),
+        zero_copy: false,
+        spin_budget: 64,
     };
-    let mut venv = Multiprocessing::from_spec(&spec, cfg)?;
+    let mut venv = Multiprocessing::from_spec(&spec, vec.resolve(8, 0)?)?;
     println!(
         "{}: {} envs, batch {}, mode {:?}, obs {}B ({} f32), actions {:?}",
         spec.key(),

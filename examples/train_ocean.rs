@@ -3,11 +3,12 @@
 //! (score > 0.9) in roughly 30k interactions with one barely-tuned
 //! hyperparameter set.
 //!
-//! ocean/memory needs recurrence to be solvable: its default
-//! `PolicySpec` resolves the LSTM sandwich, and since the native backend
-//! gained BPTT the sweep trains it like every other env — no pjrt-only
-//! caveat. (We shrink its trunk/state to 48 below: the scalar BPTT is
-//! the one genuinely expensive cell, and a 48-wide LSTM solves it.)
+//! Each run is one declarative [`RunSpec`] — env × policy × vec × train
+//! × seed — the same value `puffer run <spec.toml>` executes and every
+//! checkpoint embeds (see `examples/specs/` for the file form).
+//! ocean/memory needs recurrence to be solvable: its spec pins the LSTM
+//! sandwich at 48 wide (the scalar BPTT is the one genuinely expensive
+//! cell, and a 48-wide LSTM solves it).
 //!
 //! Everything composes here: Rust coordinator (emulation + vectorization
 //! + PPO loop) → the `PolicyBackend` learner math. The default build uses
@@ -22,52 +23,49 @@
 
 use pufferlib::envs;
 use pufferlib::policy::PolicySpec;
-use pufferlib::train::{TrainConfig, Trainer};
+use pufferlib::runspec::RunSpec;
+use pufferlib::vector::VecSpec;
+use pufferlib::wrappers::EnvSpec;
 
-/// Per-env step budget/hypers: one base config, with the paper's "barely
+/// Per-env spec: one base configuration, with the paper's "barely
 /// tuned" caveat applied as a small multiplier for the two slowest
 /// learners (squared's long credit chain, memory's recurrence).
-fn config_for(env: &str) -> TrainConfig {
-    let base = TrainConfig {
-        env: env.to_string(),
-        wrappers: vec![],
-        total_steps: 30_000,
-        lr: 3e-3,
-        ent_coef: 0.005,
-        epochs: 4,
-        anneal_lr: true,
-        seed: 1,
-        num_workers: 2,
-        pool: false,
-        run_dir: Some(format!("runs/{}", env.replace('/', "_"))),
-        log_every: 10,
-        // Serial loop, full-batch updates: the reference solve settings.
-        // Flip pipeline_depth to 1 (and raise minibatches) for the
-        // overlapped collector/learner pipeline — see README "Throughput
-        // tuning".
-        ..TrainConfig::default()
-    };
+fn spec_for(env: &str) -> RunSpec {
+    let base = RunSpec::new(EnvSpec::new(env))
+        .with_vec(VecSpec::mt(2))
+        .with_seed(1)
+        .with_train(|t| {
+            t.total_steps = 30_000;
+            t.lr = 3e-3;
+            t.ent_coef = 0.005;
+            t.epochs = 4;
+            t.anneal_lr = true;
+            t.log_every = 10;
+            // Serial loop, full-batch updates: the reference solve
+            // settings. Flip pipeline_depth to 1 (and raise minibatches)
+            // for the overlapped collector/learner pipeline — see README
+            // "Throughput tuning".
+            t.run_dir = Some(format!("runs/{}", env.replace('/', "_")));
+        });
     match env {
-        "ocean/squared" => TrainConfig {
-            total_steps: 150_000,
-            ent_coef: 0.002,
-            ..base
-        },
-        "ocean/spaces" => TrainConfig {
-            total_steps: 150_000,
-            lr: 8e-3,
-            ent_coef: 0.002,
-            ..base
-        },
-        "ocean/memory" => TrainConfig {
-            total_steps: 120_000,
-            lr: 2.5e-3,
-            ent_coef: 0.01,
+        "ocean/squared" => base.with_train(|t| {
+            t.total_steps = 150_000;
+            t.ent_coef = 0.002;
+        }),
+        "ocean/spaces" => base.with_train(|t| {
+            t.total_steps = 150_000;
+            t.lr = 8e-3;
+            t.ent_coef = 0.002;
+        }),
+        "ocean/memory" => base
             // The LSTM sandwich, sized down: a 48-wide trunk/state is
             // plenty for 3-bit recall and keeps scalar BPTT fast.
-            policy: Some(PolicySpec::default().with_hidden(48).with_lstm(48)),
-            ..base
-        },
+            .with_policy(PolicySpec::default().with_hidden(48).with_lstm(48))
+            .with_train(|t| {
+                t.total_steps = 120_000;
+                t.lr = 2.5e-3;
+                t.ent_coef = 0.01;
+            }),
         _ => base,
     }
 }
@@ -83,9 +81,9 @@ fn main() -> anyhow::Result<()> {
     println!("=== Ocean end-to-end training sweep (paper §4 / bench C3) ===\n");
     let mut rows = Vec::new();
     for env in &selected {
-        let cfg = config_for(env);
-        let steps = cfg.total_steps;
-        let mut trainer = Trainer::native(cfg)?;
+        let spec = spec_for(env);
+        let steps = spec.train.total_steps;
+        let mut trainer = spec.build()?;
         let report = trainer.train()?;
         // When did the curve first cross 0.9?
         let solved_at = report

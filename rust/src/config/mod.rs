@@ -11,12 +11,15 @@
 //! with an error naming the key — a typo'd `--train.totl_steps=1000`
 //! fails loudly instead of silently training with the default.
 
+mod toml;
 mod yaml;
 
+pub use toml::{parse_toml, toml_value, TomlDoc, TomlError};
 pub use yaml::{parse_yaml, YamlError};
 
 use crate::policy::PolicySpec;
 use crate::train::TrainConfig;
+use crate::vector::VecSpec;
 use crate::wrappers::WrapperSpec;
 use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
@@ -49,6 +52,10 @@ const PIPELINE_KEYS: &[&str] = &["depth"];
 /// Recognized policy-architecture knobs, reachable as `train.policy.X`
 /// (config files) or `policy.X` (CLI `--policy.X=...` overrides).
 const POLICY_KEYS: &[&str] = &["hidden", "lstm", "lstm_hidden", "embed_dim", "head"];
+
+/// Recognized vectorization knobs ([`VecSpec`]), reachable as `vec.X`
+/// (RunSpec `[vec]` sections and `--vec.X=...` CLI overrides).
+pub const VEC_KEYS: &[&str] = &["mode", "workers", "batch", "zero_copy", "spin_budget"];
 
 /// Recognized wrapper knobs, reachable as `train.wrap.X` (config files)
 /// or `wrap.X` (CLI `--wrap.X=...` overrides).
@@ -119,6 +126,11 @@ pub fn validate_keys(cfg: &FlatConfig) -> Result<()> {
             ensure!(
                 POLICY_KEYS.contains(&rest),
                 "unknown policy key '{key}' (known policy knobs: {POLICY_KEYS:?})"
+            );
+        } else if let Some(rest) = key.strip_prefix("vec.") {
+            ensure!(
+                VEC_KEYS.contains(&rest),
+                "unknown vec key '{key}' (known vec knobs: {VEC_KEYS:?})"
             );
         } else if let Some(rest) = key.strip_prefix("train.") {
             ensure!(
@@ -223,6 +235,69 @@ pub fn policy_config(cfg: &FlatConfig, env: &str) -> Result<Option<PolicySpec>> 
     Ok(Some(spec))
 }
 
+/// Build the [`VecSpec`] from a flat config's `vec.*` keys. Returns
+/// `None` when no vec key is present — the trainer then falls back to
+/// the legacy `train.num_workers` / `train.pool` mapping. Present keys
+/// other than `vec.mode` imply `mode = "mt"`.
+pub fn vec_config(cfg: &FlatConfig) -> Result<Option<VecSpec>> {
+    let get = |knob: &str| cfg.get(&format!("vec.{knob}")).map(String::as_str);
+    if VEC_KEYS.iter().all(|k| get(k).is_none()) {
+        return Ok(None);
+    }
+    let mode = get("mode").unwrap_or("mt");
+    VecSpec::from_parts(
+        mode,
+        get("workers"),
+        get("batch"),
+        get("zero_copy"),
+        get("spin_budget"),
+    )
+    .map(Some)
+}
+
+/// Emit a wrapper chain as canonical `(knob, value)` pairs — the inverse
+/// of [`wrap_config`], used to serialize an
+/// [`EnvSpec`](crate::wrappers::EnvSpec) into a RunSpec `[env.wrap]`
+/// section. Errors when the chain is not representable in the knob
+/// grammar (duplicate wrappers, or an order other than the canonical
+/// innermost-first one); such chains are built in code and cannot live
+/// in a spec file.
+pub fn wrap_knob_pairs(chain: &[WrapperSpec]) -> Result<Vec<(&'static str, String)>> {
+    let mut pairs = Vec::new();
+    let mut last_rank = 0usize;
+    for w in chain {
+        let (rank, knob, value) = match w {
+            WrapperSpec::ActionRepeat(k) => {
+                // k = 1 is the identity: wrap_config would drop it on
+                // re-parse, so the round trip would not be exact.
+                ensure!(*k >= 2, "action_repeat={k} is the identity; drop the wrapper");
+                (1, "action_repeat", k.to_string())
+            }
+            WrapperSpec::TimeLimit(n) => (2, "time_limit", n.to_string()),
+            WrapperSpec::ScaleReward(s) => (3, "scale_reward", format!("{s}")),
+            WrapperSpec::ClipReward(b) => (4, "clip_reward", format!("{b}")),
+            WrapperSpec::NormalizeObs => (5, "normalize_obs", "true".to_string()),
+            WrapperSpec::Stack(k) => {
+                ensure!(*k >= 2, "stack={k} is the identity; drop the wrapper");
+                (6, "stack", k.to_string())
+            }
+        };
+        ensure!(
+            rank > last_rank,
+            "wrapper chain is not expressible in the config knob grammar \
+             (canonical innermost-first order is action_repeat, time_limit, \
+             scale_reward, clip_reward, normalize_obs, stack, each at most \
+             once; '{}' is out of order or repeated) — chains with custom \
+             order are built in code via EnvSpec and cannot be serialized \
+             into a RunSpec",
+            w.key_fragment()
+        );
+        last_rank = rank;
+        pairs.push((knob, value));
+    }
+    Ok(pairs)
+}
+
 /// Build the wrapper chain from a flat config. CLI-style `wrap.X` keys
 /// win over file-style `train.wrap.X`.
 ///
@@ -309,6 +384,7 @@ pub fn train_config(cfg: &FlatConfig) -> Result<TrainConfig> {
         run_dir: cfg.get("train.run_dir").cloned(),
         log_every: get_parse(cfg, "train.log_every", d.log_every)?,
         wrappers: wrap_config(cfg)?,
+        vec: vec_config(cfg)?,
     })
 }
 
@@ -520,6 +596,75 @@ mod tests {
         let mut cfg = FlatConfig::new();
         cfg.insert("wrap.stak".into(), "4".into());
         assert!(validate_keys(&cfg).unwrap_err().to_string().contains("wrap.stak"));
+    }
+
+    #[test]
+    fn vec_keys_build_the_spec() {
+        use crate::vector::{VecBatch, VecSpec};
+        // No vec keys → None (legacy num_workers/pool mapping applies).
+        assert!(train_config(&FlatConfig::new()).unwrap().vec.is_none());
+        let mut cfg = FlatConfig::new();
+        cfg.insert("vec.mode".into(), "serial".into());
+        assert_eq!(train_config(&cfg).unwrap().vec, Some(VecSpec::Serial));
+        let mut cfg = FlatConfig::new();
+        cfg.insert("vec.workers".into(), "4".into()); // mode=mt implied
+        cfg.insert("vec.batch".into(), "half".into());
+        cfg.insert("vec.zero_copy".into(), "true".into());
+        match train_config(&cfg).unwrap().vec.unwrap() {
+            VecSpec::Mt {
+                workers,
+                batch,
+                zero_copy,
+                ..
+            } => assert_eq!((workers, batch, zero_copy), (4, VecBatch::Half, true)),
+            other => panic!("expected mt, got {other:?}"),
+        }
+        let mut cfg = FlatConfig::new();
+        cfg.insert("vec.mode".into(), "auto".into());
+        assert_eq!(train_config(&cfg).unwrap().vec, Some(VecSpec::Auto));
+    }
+
+    #[test]
+    fn bad_vec_keys_are_rejected_naming_the_key() {
+        let mut cfg = FlatConfig::new();
+        cfg.insert("vec.wrokers".into(), "4".into());
+        let err = validate_keys(&cfg).unwrap_err().to_string();
+        assert!(err.contains("vec.wrokers"), "{err}");
+        for (k, v) in [
+            ("vec.mode", "warp"),
+            ("vec.workers", "0"),
+            ("vec.batch", "some"),
+            ("vec.zero_copy", "maybe"),
+        ] {
+            let mut cfg = FlatConfig::new();
+            cfg.insert(k.into(), v.into());
+            let err = train_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(k), "{k}={v}: {err}");
+        }
+    }
+
+    #[test]
+    fn wrap_knob_pairs_invert_wrap_config() {
+        let chain = vec![
+            WrapperSpec::ActionRepeat(2),
+            WrapperSpec::TimeLimit(64),
+            WrapperSpec::ScaleReward(0.5),
+            WrapperSpec::ClipReward(1.0),
+            WrapperSpec::NormalizeObs,
+            WrapperSpec::Stack(4),
+        ];
+        let pairs = wrap_knob_pairs(&chain).unwrap();
+        let mut cfg = FlatConfig::new();
+        for (k, v) in pairs {
+            cfg.insert(format!("wrap.{k}"), v);
+        }
+        assert_eq!(wrap_config(&cfg).unwrap(), chain);
+        // Non-canonical order → actionable error, not silent reorder.
+        let twisted = vec![WrapperSpec::Stack(4), WrapperSpec::ClipReward(1.0)];
+        let err = wrap_knob_pairs(&twisted).unwrap_err().to_string();
+        assert!(err.contains("clip_reward"), "{err}");
+        let doubled = vec![WrapperSpec::Stack(2), WrapperSpec::Stack(2)];
+        assert!(wrap_knob_pairs(&doubled).is_err());
     }
 
     #[test]

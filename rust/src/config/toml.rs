@@ -1,0 +1,276 @@
+//! Minimal TOML-subset parser producing flat dotted keys — the
+//! [`RunSpec`](crate::runspec::RunSpec) file format.
+//!
+//! Supported subset (everything a spec file needs; anything else is a
+//! parse error naming the line):
+//!
+//! - `[section]` / `[section.sub]` table headers,
+//! - `key = value` pairs (bare or `"quoted"` keys, which may be dotted),
+//! - scalar values: `"strings"`, booleans, numbers, and bare words
+//!   (treated as strings, so `mode = mt` works without quotes),
+//! - single-line arrays of scalars: `lr = [0.001, 0.0025]` — the
+//!   `[grid]` sweep grammar,
+//! - `#` comments (full-line or trailing) and blank lines.
+
+use super::FlatConfig;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+/// A parsed spec file: scalar keys flattened to dotted paths, plus
+/// array-valued keys (each element stringified) kept separate — arrays
+/// are only legal where the consumer says so (the `[grid]` section).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    pub scalars: FlatConfig,
+    pub arrays: BTreeMap<String, Vec<String>>,
+}
+
+/// Strip a trailing `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Unquote one scalar token.
+fn scalar(tok: &str, lineno: usize) -> Result<String, TomlError> {
+    let tok = tok.trim();
+    if tok.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if let Some(body) = tok.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            return Err(err(lineno, format!("unterminated string {tok}")));
+        };
+        if body.contains('"') {
+            return Err(err(lineno, format!("stray quote inside {tok}")));
+        }
+        return Ok(body.to_string());
+    }
+    if tok.contains('"') {
+        return Err(err(lineno, format!("stray quote in value {tok}")));
+    }
+    Ok(tok.to_string())
+}
+
+/// Validate a (possibly dotted, possibly quoted) key and return its
+/// normalized dotted form.
+fn key_name(tok: &str, lineno: usize) -> Result<String, TomlError> {
+    let tok = tok.trim();
+    let body = if let Some(b) = tok.strip_prefix('"') {
+        b.strip_suffix('"')
+            .ok_or_else(|| err(lineno, format!("unterminated quoted key {tok}")))?
+    } else {
+        tok
+    };
+    let ok = !body.is_empty()
+        && body.split('.').all(|seg| {
+            !seg.is_empty()
+                && seg
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '/')
+        });
+    if !ok {
+        return Err(err(lineno, format!("bad key '{tok}'")));
+    }
+    Ok(body.to_string())
+}
+
+/// Split a single-line array body (`a, b, "c"`) on commas outside
+/// quotes.
+fn split_array(body: &str, lineno: usize) -> Result<Vec<String>, TomlError> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err(err(lineno, "unterminated string in array"));
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    if items.iter().any(|i| i.trim().is_empty()) {
+        return Err(err(lineno, "empty element in array"));
+    }
+    items.into_iter().map(|i| scalar(&i, lineno)).collect()
+}
+
+/// Parse the TOML subset into a [`TomlDoc`].
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let Some(name) = body.strip_suffix(']') else {
+                return Err(err(lineno, format!("unterminated section header {line}")));
+            };
+            section = key_name(name, lineno)?;
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(err(
+                lineno,
+                format!("expected 'key = value' or '[section]', got '{line}'"),
+            ));
+        };
+        let key = key_name(k, lineno)?;
+        let full = if section.is_empty() {
+            key
+        } else {
+            format!("{section}.{key}")
+        };
+        if doc.scalars.contains_key(&full) || doc.arrays.contains_key(&full) {
+            return Err(err(lineno, format!("duplicate key '{full}'")));
+        }
+        let v = v.trim();
+        if let Some(arr_body) = v.strip_prefix('[') {
+            let Some(arr_body) = arr_body.strip_suffix(']') else {
+                return Err(err(lineno, format!("unterminated array for key '{full}'")));
+            };
+            let items = split_array(arr_body, lineno)?;
+            if items.is_empty() {
+                return Err(err(lineno, format!("empty array for key '{full}'")));
+            }
+            doc.arrays.insert(full, items);
+        } else {
+            doc.scalars.insert(full, scalar(v, lineno)?);
+        }
+    }
+    Ok(doc)
+}
+
+/// Quote a value for canonical TOML output: numbers and booleans stay
+/// bare, everything else is double-quoted.
+pub fn toml_value(v: &str) -> String {
+    let bare = v.parse::<f64>().is_ok() || v == "true" || v == "false";
+    if bare {
+        v.to_string()
+    } else {
+        format!("\"{v}\"")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars_flatten() {
+        let text = r#"
+# a run spec
+seed = 42
+
+[env]
+name = "ocean/memory"   # quoted strings
+[env.wrap]
+stack = 4
+
+[vec]
+mode = mt               # bare words are strings
+zero_copy = true
+
+[train.pipeline]
+depth = 1
+"#;
+        let doc = parse_toml(text).unwrap();
+        assert_eq!(doc.scalars["seed"], "42");
+        assert_eq!(doc.scalars["env.name"], "ocean/memory");
+        assert_eq!(doc.scalars["env.wrap.stack"], "4");
+        assert_eq!(doc.scalars["vec.mode"], "mt");
+        assert_eq!(doc.scalars["vec.zero_copy"], "true");
+        assert_eq!(doc.scalars["train.pipeline.depth"], "1");
+        assert!(doc.arrays.is_empty());
+    }
+
+    #[test]
+    fn arrays_parse_for_the_grid_section() {
+        let text = r#"
+[grid]
+"train.lr" = [0.001, 0.0025]
+train.total_steps = [1000, 2000]
+names = ["a", "b,c"]
+"#;
+        let doc = parse_toml(text).unwrap();
+        assert_eq!(doc.arrays["grid.train.lr"], vec!["0.001", "0.0025"]);
+        assert_eq!(doc.arrays["grid.train.total_steps"], vec!["1000", "2000"]);
+        assert_eq!(doc.arrays["grid.names"], vec!["a", "b,c"]);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, needle) in [
+            ("[sec\nk = 1", "unterminated section"),
+            ("just a line", "expected 'key = value'"),
+            ("k = ", "empty value"),
+            ("k = \"unterminated", "unterminated string"),
+            ("a = 1\na = 2", "duplicate key"),
+            ("k = [1, 2", "unterminated array"),
+            ("k = []", "empty array"),
+            ("bad key = 1", "bad key"),
+        ] {
+            let e = parse_toml(text).unwrap_err();
+            assert!(e.msg.contains(needle), "{text}: {e}");
+        }
+        assert_eq!(parse_toml("ok = 1\n???\n").unwrap_err().line, 2);
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = parse_toml("k = \"a # not a comment\" # real comment\n").unwrap();
+        assert_eq!(doc.scalars["k"], "a # not a comment");
+    }
+
+    #[test]
+    fn toml_value_quotes_only_strings() {
+        assert_eq!(toml_value("42"), "42");
+        assert_eq!(toml_value("0.0025"), "0.0025");
+        assert_eq!(toml_value("true"), "true");
+        assert_eq!(toml_value("ocean/memory"), "\"ocean/memory\"");
+        assert_eq!(toml_value("half"), "\"half\"");
+    }
+}

@@ -24,52 +24,63 @@
 //! through the PJRT C API instead (the [`runtime`] module), with Python
 //! still never running on the rollout or training path.
 //!
-//! ## Quickstart
+//! ## Quickstart: one `RunSpec` per experiment
 //!
-//! Environment construction is an [`EnvSpec`](wrappers::EnvSpec): a base
-//! env plus a composable chain of microwrappers ([`wrappers`]) that
-//! transform the packed byte rows in place — reward clipping/scaling,
-//! running obs normalization, obs stacking, time limits, action repeat.
-//! The spec is the currency every layer consumes: the vectorizers, the
-//! trainer, the autotuner, and the `puffer` CLI (`--wrap.clip_reward=1
-//! --wrap.stack=4`).
+//! The construction currency is the declarative [`RunSpec`](runspec::RunSpec):
+//! env × policy × vectorization × training × one root seed, fully
+//! TOML/JSON-serializable. One value describes a run; one value is
+//! embedded in every checkpoint (`puffer resume <ckpt>` needs zero
+//! flags); one file drives the CLI (`puffer run spec.toml`, see the
+//! `examples/specs/` gallery).
+//!
+//! ```no_run
+//! use pufferlib::prelude::*;
+//! use pufferlib::runspec::RunSpec;
+//!
+//! let spec = RunSpec::new(EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4))
+//!     .with_vec(VecSpec::pooled(2))            // mt, M = 2N double-buffering
+//!     .with_seed(7)                            // root of every RNG stream
+//!     .with_train(|t| t.total_steps = 30_000);
+//! let report = spec.build().unwrap().train().unwrap();
+//! println!("score: {:?}", report.mean_score);
+//!
+//! // The same spec as a file (examples/specs/*.toml):
+//! let toml = spec.to_toml().unwrap();
+//! assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+//! ```
+//!
+//! Three sub-specs compose it, each usable on its own:
+//!
+//! - [`EnvSpec`](wrappers::EnvSpec) — base env + in-place microwrapper
+//!   chain ([`wrappers`]); custom envs slot in via
+//!   [`EnvSpec::custom`](wrappers::EnvSpec::custom) (see
+//!   `examples/custom_env.rs`).
+//! - [`PolicySpec`](policy::PolicySpec) — the architecture sandwich
+//!   (below).
+//! - [`VecSpec`](vector::VecSpec) — `serial`, `mt { workers, batch,
+//!   zero_copy, spin_budget }`, or `auto` (autotuned once, cached under
+//!   the run dir). `VecSpec::build(&env_spec, num_envs, seed)` is the
+//!   public vectorizer path; `Serial::from_spec` /
+//!   `Multiprocessing::from_spec` remain underneath as the typed
+//!   low-level layer:
 //!
 //! ```no_run
 //! use pufferlib::prelude::*;
 //!
-//! // Base env + wrapper chain (applied innermost first). Stacking widens
-//! // the advertised rows, and the vectorizer's shared slabs size
-//! // themselves from the wrapped layout automatically.
-//! let spec = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4);
-//! let cfg = VecConfig { num_envs: 8, num_workers: 2, batch_size: 8, ..Default::default() };
-//! let mut venv = Multiprocessing::from_spec(&spec, cfg).unwrap();
+//! let env = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4);
+//! let mut venv = VecSpec::mt(2).build(&env, 8, 0).unwrap();
 //! let (obs, _rewards, _terms, _truncs, _infos) = venv.reset(0).unwrap();
 //! assert_eq!(obs.len(), 8 * venv.obs_layout().byte_len());
 //! ```
 //!
-//! Custom envs need one `PufferEnv::new` and slot into the same pipeline
-//! via [`EnvSpec::custom`](wrappers::EnvSpec::custom) (see
-//! `examples/custom_env.rs`). Training end to end needs nothing beyond
-//! the crate:
-//!
-//! ```no_run
-//! use pufferlib::train::{TrainConfig, Trainer};
-//! use pufferlib::wrappers::WrapperSpec;
-//!
-//! let cfg = TrainConfig {
-//!     env: "ocean/bandit".into(),
-//!     total_steps: 16_000,
-//!     wrappers: vec![WrapperSpec::ClipReward(1.0)],
-//!     ..Default::default()
-//! };
-//! let report = Trainer::native(cfg).unwrap().train().unwrap();
-//! println!("score: {:?}", report.mean_score);
-//! ```
-//!
-//! Vectorizers are constructed from specs (`from_spec`), or from
-//! `from_factory` in the rare case a raw closure is really needed (the
-//! old deprecated `Serial::new` / `Multiprocessing::new` shims are
-//! gone).
+//! The classic imperative `TrainConfig` path still works (and stays
+//! bit-identical to the pre-RunSpec trainer); a RunSpec additionally
+//! derives every RNG stream — env resets, policy sampling, minibatch
+//! shuffle, collector, eval — from the single `seed` root via the
+//! documented split function ([`util::seed::SeedPlan::from_root`]), and
+//! a `[grid]` section expands into a sweep
+//! ([`RunSpec::expand_grid`](runspec::RunSpec::expand_grid), `puffer
+//! sweep`).
 //!
 //! ## Policy architectures
 //!
@@ -177,6 +188,7 @@ pub mod config;
 pub mod emulation;
 pub mod envs;
 pub mod policy;
+pub mod runspec;
 pub mod runtime;
 pub mod spaces;
 pub mod train;
@@ -189,8 +201,9 @@ pub mod prelude {
     pub use crate::backend::{NativeBackend, PolicyBackend};
     pub use crate::emulation::{EpisodeStats, FlatEnv, PufferEnv, StructuredEnv};
     pub use crate::policy::{ActionHead, PolicySpec, Recurrence};
+    pub use crate::runspec::RunSpec;
     pub use crate::spaces::{Space, StructLayout, Value};
     pub use crate::util::rng::Rng;
-    pub use crate::vector::{Multiprocessing, Serial, StepBatch, VecConfig, VecEnv};
+    pub use crate::vector::{Multiprocessing, Serial, StepBatch, VecBatch, VecConfig, VecEnv, VecSpec};
     pub use crate::wrappers::{EnvSpec, Wrapper, WrapperSpec};
 }

@@ -2,39 +2,47 @@
 //! a CLI for all included PufferLib environments, clean YAML configs").
 //!
 //! ```text
-//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] [--policy.lstm=true] ...
-//! puffer eval <env> --checkpoint runs/x/checkpoint.bin [--episodes 20]
-//! puffer sweep                      # train the whole Ocean suite
-//! puffer autotune <env> [--envs 8] [--workers 4] [--secs 1.0] [--wrap.* ...]
+//! puffer run <spec.toml> [--train.lr=3e-3 --vec.workers=4 ...]
+//! puffer validate <spec.toml> [more.toml ...]
+//! puffer resume <checkpoint.bin>            # zero flags: spec is embedded
+//! puffer sweep <spec.toml> [--jobs=N]       # expand the [grid] section
+//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] ...
+//! puffer eval <checkpoint.bin> [--episodes=N]      # spec from the checkpoint
+//! puffer eval <env> --checkpoint=FILE [--episodes=N]
+//! puffer sweep                              # legacy: train the whole Ocean suite
+//! puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--run_dir=DIR]
 //! puffer policy describe <env> [--wrap.* ...] [--policy.* ...]
-//! puffer envs                       # list first-party environments
+//! puffer envs                               # list first-party environments
 //! ```
 //!
-//! `--wrap.*` overrides compose the one-line wrapper pipeline onto the
-//! env (innermost first: action_repeat, time_limit, scale_reward,
-//! clip_reward, normalize_obs, stack), e.g.
-//! `puffer train ocean/squared --wrap.clip_reward=1.0 --wrap.stack=4`.
+//! The declarative path: a `RunSpec` TOML file (see `examples/specs/`)
+//! describes the whole experiment — `[env]` + `[env.wrap]`, `[policy]`,
+//! `[vec]` (`serial` | `mt` | `auto`), `[train]`, one root `seed`, and
+//! an optional `[grid]` sweep. `puffer run` executes it, embeds the spec
+//! in the checkpoint, and `puffer resume` / `puffer eval` reconstruct
+//! the run from the checkpoint alone. CLI `--section.key=value`
+//! overrides compose onto any spec (`--wrap.*` / `--pipeline.*` are
+//! aliases for `env.wrap.*` / `train.pipeline.*`).
 //!
-//! `--policy.*` overrides compose the policy architecture (per-leaf
-//! encoders × recurrence × action head): `--policy.hidden=64`
-//! `--policy.lstm=true` `--policy.embed_dim=8`. Recurrent reference envs
-//! (e.g. `ocean/memory`) default to the LSTM sandwich and train natively;
-//! `puffer policy describe <env>` prints the resolved stages and param
-//! counts for debugging spec/env mismatches.
-//!
-//! The default backend is the pure-Rust `NativeBackend` (no artifacts, no
-//! Python). `--backend=pjrt` selects the AOT/PJRT path; it requires a
-//! build with `--features pjrt` plus `make artifacts`.
+//! The imperative path (`puffer train <env>`) still accepts the classic
+//! flat keys, now including `--vec.*`. The default backend is the
+//! pure-Rust `NativeBackend`; `--backend=pjrt` (train/eval only) selects
+//! the AOT/PJRT path, which requires a build with `--features pjrt` plus
+//! `make artifacts`.
 
 use anyhow::{Context, Result};
 use pufferlib::config;
 use pufferlib::envs;
-use pufferlib::train::{Checkpoint, TrainConfig, Trainer};
+use pufferlib::runspec::{self, RunSpec};
+use pufferlib::train::{Checkpoint, TrainConfig, TrainReport, Trainer};
 use pufferlib::vector::autotune;
 use pufferlib::wrappers::EnvSpec;
 
 #[cfg(feature = "pjrt")]
 const ARTIFACTS: &str = "artifacts";
+
+/// Override namespaces every spec-consuming command accepts.
+const SPEC_NAMESPACES: &[&str] = &["train.", "wrap.", "pipeline.", "policy.", "vec.", "env.", "seed"];
 
 fn main() {
     if let Err(e) = run() {
@@ -49,6 +57,9 @@ fn run() -> Result<()> {
     let rest: Vec<String> = args.iter().skip(1).cloned().collect();
 
     match cmd {
+        "run" => cmd_run(&rest),
+        "validate" => cmd_validate(&rest),
+        "resume" => cmd_resume(&rest),
         "train" => cmd_train(&rest),
         "eval" => cmd_eval(&rest),
         "sweep" => cmd_sweep(&rest),
@@ -74,30 +85,36 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
-         USAGE:\n  puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--backend=native|pjrt]\n  \
+         USAGE:\n  puffer run <spec.toml> [--KEY=VAL ...]          run a declarative RunSpec\n  \
+         puffer validate <spec.toml> [...]               parse + deep-check spec files\n  \
+         puffer resume <checkpoint.bin> [--KEY=VAL ...]  continue a run (spec embedded)\n  \
+         puffer sweep <spec.toml> [--jobs=N]             expand + train the [grid] section\n  \
+         puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--vec.KEY=VAL ...] [--backend=native|pjrt]\n  \
+         puffer eval <checkpoint.bin> [--episodes=N]     evaluate from a RunSpec checkpoint\n  \
          puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
-         puffer sweep [--train.KEY=VAL ...]        train the whole Ocean suite\n  \
-         puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--wrap.KEY=VAL ...]\n  \
+         puffer sweep [--train.KEY=VAL ...]              legacy: train the whole Ocean suite\n  \
+         puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--run_dir=DIR] [--wrap.KEY=VAL ...]\n  \
          puffer policy describe <env> [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...]\n  \
-         puffer envs                               list first-party envs\n\n\
+         puffer envs                                     list first-party envs\n\n\
+         RunSpec files (examples/specs/*.toml): seed = N, [env] name + [env.wrap]\n\
+         \x20 knobs, [policy] hidden/lstm/lstm_hidden/embed_dim/head, [vec]\n\
+         \x20 mode=serial|mt|auto + workers/batch/zero_copy/spin_budget, [train]\n\
+         \x20 keys below, and an optional [grid] of key = [values] to sweep.\n\
+         \x20 `vec = auto` benchmarks once and caches under the run dir\n\
+         \x20 (puffer autotune writes the same cache).\n\n\
          Train keys: env total_steps lr ent_coef epochs minibatches norm_adv\n\
          \x20           anneal_lr seed num_workers pool run_dir log_every\n\
          Pipeline keys: depth — 0 (default) trains serially; d >= 1 runs an\n\
-         \x20 overlapped collector/learner pipeline, the collector filling up\n\
-         \x20 to d rollout segments ahead (e.g. --pipeline.depth=1 with\n\
-         \x20 --train.pool=true --train.minibatches=4 for max overlap)\n\
-         Wrap keys (one-line wrapper pipeline, applied innermost-first in\n\
-         \x20 this order): action_repeat time_limit scale_reward clip_reward\n\
-         \x20 normalize_obs stack — e.g. --wrap.clip_reward=1.0 --wrap.stack=4\n\
-         Policy keys (architecture = per-leaf encoders x recurrence x head):\n\
-         \x20 hidden (trunk width) | lstm true/false | lstm_hidden (state\n\
-         \x20 width) | embed_dim (token-leaf embedding tables, 0 = raw) |\n\
-         \x20 head categorical|quantized:<bins> — recurrent reference envs\n\
-         \x20 (ocean/memory) default to lstm=true and train natively; a\n\
-         \x20 non-default spec becomes part of the checkpoint key\n\n\
-         Backends: native (default, pure Rust; any --policy.* spec) | pjrt\n\
-         \x20         (AOT artifacts, default archs only; needs a build with\n\
-         \x20         --features pjrt and `make artifacts`)"
+         \x20 overlapped collector/learner pipeline\n\
+         Wrap keys (innermost-first order): action_repeat time_limit\n\
+         \x20 scale_reward clip_reward normalize_obs stack\n\
+         Policy keys: hidden | lstm true/false | lstm_hidden | embed_dim |\n\
+         \x20 head categorical|quantized:<bins>\n\
+         Vec keys: mode serial|mt|auto | workers | batch full|half|<envs> |\n\
+         \x20 zero_copy | spin_budget\n\n\
+         Backends: native (default, pure Rust; any spec) | pjrt (train/eval\n\
+         \x20         only; AOT artifacts, default archs; needs --features pjrt\n\
+         \x20         and `make artifacts`)"
     );
 }
 
@@ -180,23 +197,7 @@ fn pjrt_trainer(_tc: TrainConfig) -> Result<Trainer> {
     )
 }
 
-fn cmd_train(args: &[String]) -> Result<()> {
-    let (cfg_file, positional, mut overrides) = split_args(args);
-    let backend = take_backend(&mut overrides);
-    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy."])?;
-    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
-    if let Some(env) = positional.first() {
-        flat.insert("train.env".into(), env.clone());
-    }
-    let tc = config::train_config(&flat)?;
-    let spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
-    println!(
-        "training {} for {} steps ({backend} backend) ...",
-        spec.key(),
-        tc.total_steps
-    );
-    let mut trainer = make_trainer(tc, &backend)?;
-    let report = trainer.train()?;
+fn print_train_report(report: &TrainReport) {
     println!(
         "pipeline: env {:.0} SPS, learner {:.0} SPS, stalls {:.2}s collector / {:.2}s learner",
         report.env_sps, report.learn_sps, report.collector_stall_s, report.learner_stall_s,
@@ -215,63 +216,217 @@ fn cmd_train(args: &[String]) -> Result<()> {
             .map(|s| format!("{s:.3}"))
             .unwrap_or_else(|| "-".into()),
     );
+}
+
+// -- declarative commands ---------------------------------------------------
+
+/// Merge `--section.key=value` overrides onto a spec (through its flat
+/// serialized form, so override values get exactly the file grammar's
+/// strict validation, and discriminant switches like `--vec.mode=serial`
+/// drop the old mode's dependent knobs).
+fn apply_spec_overrides(spec: RunSpec, overrides: &[String]) -> Result<RunSpec> {
+    if overrides.is_empty() {
+        return Ok(spec);
+    }
+    let (mut flat, arrays) = spec.to_flat()?;
+    let pairs: Vec<(String, String)> = overrides
+        .iter()
+        .filter_map(|a| {
+            let body = a.strip_prefix("--")?;
+            let (k, v) = body.split_once('=')?;
+            Some((runspec::translate_cli_key(k), v.to_string()))
+        })
+        .collect();
+    runspec::merge_overrides(&mut flat, &pairs);
+    RunSpec::from_parts(&flat, &arrays)
+}
+
+/// The deterministic default run dir for an env key — shared by
+/// `puffer run` (when the spec has none) and `puffer autotune` (so its
+/// cache lands exactly where a default `puffer run` of the same env
+/// will look for it).
+fn run_dir_for(env_key: &str) -> String {
+    let leaf: String = env_key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("runs/{leaf}")
+}
+
+/// Give a spec a deterministic run dir when it has none, so every
+/// `puffer run` leaves a resumable checkpoint + metrics behind. Applied
+/// *before* the trainer embeds the spec, so resumed runs agree.
+fn default_run_dir(spec: RunSpec) -> RunSpec {
+    if spec.train.run_dir.is_some() {
+        return spec;
+    }
+    let dir = run_dir_for(&spec.env.key());
+    spec.with_train(|t| t.run_dir = Some(dir))
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    anyhow::ensure!(
+        backend == "native",
+        "puffer run drives the native backend; use `puffer train <env> --backend=pjrt` for the AOT path"
+    );
+    let path = positional
+        .first()
+        .cloned()
+        .or(cfg_file)
+        .context("usage: puffer run <spec.toml> [--KEY=VAL ...]")?;
+    reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+    let spec = RunSpec::load(&path)?;
+    anyhow::ensure!(
+        spec.grid.is_empty(),
+        "{path} has a [grid] section — execute it with `puffer sweep {path}`"
+    );
+    let spec = default_run_dir(apply_spec_overrides(spec, &overrides)?);
+    let run_dir = spec.train.run_dir.clone().unwrap_or_default();
+    println!(
+        "running {} (policy {}, vec {}, seed {}) for {} steps → {run_dir}",
+        spec.env.key(),
+        spec.policy.as_ref().map(|p| p.key()).unwrap_or_else(|| "default".into()),
+        spec.vec,
+        spec.seed,
+        spec.train.total_steps,
+    );
+    let mut trainer = spec.build()?;
+    let report = trainer.train()?;
+    print_train_report(&report);
+    println!("checkpoint: {run_dir}/checkpoint.bin (resume with `puffer resume {run_dir}/checkpoint.bin`)");
     Ok(())
 }
 
-fn cmd_eval(args: &[String]) -> Result<()> {
-    let (cfg_file, positional, mut overrides) = split_args(args);
-    let backend = take_backend(&mut overrides);
-    // Pull out eval-specific flags.
-    let mut checkpoint = None;
-    let mut episodes = 20usize;
-    overrides.retain(|a| {
-        if let Some(v) = a.strip_prefix("--checkpoint=") {
-            checkpoint = Some(v.to_string());
-            false
-        } else if let Some(v) = a.strip_prefix("--episodes=") {
-            episodes = v.parse().unwrap_or(20);
-            false
-        } else {
-            true
-        }
-    });
-    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy."])?;
-    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
-    if let Some(env) = positional.first() {
-        flat.insert("train.env".into(), env.clone());
-    }
-    let tc = config::train_config(&flat)?;
-    let mut trainer = make_trainer(tc, &backend)?;
-    if let Some(ck_path) = checkpoint {
-        let ck = Checkpoint::load(&ck_path).context("loading checkpoint")?;
-        trainer.restore(&ck)?;
-        println!("restored checkpoint at step {}", ck.global_step);
-    }
-    let report = trainer.eval(episodes)?;
-    println!(
-        "eval: {} episodes, score {}, return {}",
-        report.episodes,
-        report
-            .mean_score
-            .map(|s| format!("{s:.3}"))
-            .unwrap_or_else(|| "-".into()),
-        report
-            .mean_return
-            .map(|s| format!("{s:.3}"))
-            .unwrap_or_else(|| "-".into()),
+fn cmd_validate(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    anyhow::ensure!(
+        !positional.is_empty() && overrides.is_empty(),
+        "usage: puffer validate <spec.toml> [more.toml ...]"
     );
+    for path in &positional {
+        let spec = RunSpec::load(path)?;
+        spec.validate().with_context(|| format!("validating {path}"))?;
+        let grid_note = if spec.grid.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", grid {} points",
+                spec.expand_grid().map(|c| c.len()).unwrap_or(0)
+            )
+        };
+        println!(
+            "OK {path}: env {}, policy {}, vec {}, seed {}, {} steps{grid_note}",
+            spec.env.key(),
+            spec.policy.as_ref().map(|p| p.key()).unwrap_or_else(|| "default".into()),
+            spec.vec,
+            spec.seed,
+            spec.train.total_steps,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_resume(args: &[String]) -> Result<()> {
+    let (_, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    anyhow::ensure!(backend == "native", "puffer resume drives the native backend");
+    let path = positional
+        .first()
+        .context("usage: puffer resume <checkpoint.bin> [--KEY=VAL ...]")?;
+    reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+    let ck = Checkpoint::load(path).context("loading checkpoint")?;
+    let json = ck.run_spec_json.as_deref().with_context(|| {
+        format!(
+            "{path} has no embedded RunSpec (written by `puffer train` or an \
+             older version) — rerun through `puffer run`, or use \
+             `puffer train`/`puffer eval` with explicit flags"
+        )
+    })?;
+    let spec = RunSpec::from_json_str(json).context("parsing the embedded RunSpec")?;
+    let spec = apply_spec_overrides(spec, &overrides)?;
+    println!(
+        "resuming {} at step {} of {} (spec from checkpoint)",
+        spec.env.key(),
+        ck.global_step,
+        spec.train.total_steps
+    );
+    let mut trainer = spec.build()?;
+    trainer.restore(&ck)?;
+    if trainer.global_step() >= spec.train.total_steps {
+        println!(
+            "already at the step budget — extend with --train.total_steps=N to keep training"
+        );
+    }
+    let report = trainer.train()?;
+    print_train_report(&report);
     Ok(())
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
-    let (cfg_file, _, mut overrides) = split_args(args);
+    let (cfg_file, positional, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
-    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy."])?;
+    // Spec-based grid sweep: `puffer sweep <spec.toml> [--jobs=N]`.
+    if let Some(path) = positional.first().cloned() {
+        anyhow::ensure!(backend == "native", "puffer sweep drives the native backend");
+        let mut jobs = 2usize;
+        let mut bad_jobs = None;
+        overrides.retain(|a| {
+            if let Some(v) = a.strip_prefix("--jobs=") {
+                match v.parse::<usize>() {
+                    Ok(j) if j >= 1 => jobs = j,
+                    _ => bad_jobs = Some(v.to_string()),
+                }
+                false
+            } else {
+                true
+            }
+        });
+        if let Some(v) = bad_jobs {
+            anyhow::bail!("--jobs: expected an integer >= 1, got '{v}'");
+        }
+        reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+        let spec = apply_spec_overrides(RunSpec::load(&path)?, &overrides)?;
+        anyhow::ensure!(
+            !spec.grid.is_empty(),
+            "{path} has no [grid] section to sweep — run it with `puffer run {path}`"
+        );
+        let children = spec.expand_grid()?;
+        println!(
+            "sweeping {}: {} grid points across {} worker(s)",
+            spec.env.key(),
+            children.len(),
+            jobs.min(children.len())
+        );
+        let outcomes = runspec::run_sweep(&children, jobs, |i, o| match &o.report {
+            Ok(r) => println!(
+                "[{}/{}] {:<40} score {}  ({} steps @ {:.0} SPS) → {}",
+                i + 1,
+                children.len(),
+                o.label,
+                r.mean_score.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+                r.global_step,
+                r.sps,
+                o.run_dir
+            ),
+            Err(e) => println!("[{}/{}] {:<40} FAILED: {e:#}", i + 1, children.len(), o.label),
+        })?;
+        let failed = outcomes.iter().filter(|o| o.report.is_err()).count();
+        println!(
+            "sweep done: {}/{} children trained, per-child metrics under {}",
+            outcomes.len() - failed,
+            outcomes.len(),
+            spec.train.run_dir.as_deref().unwrap_or("runs/sweep")
+        );
+        anyhow::ensure!(failed == 0, "{failed} sweep children failed");
+        return Ok(());
+    }
+
+    // Legacy: train the whole Ocean suite with one flat config.
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy.", "vec."])?;
     let mut solved = 0;
     for env in envs::OCEAN_ENVS {
-        // Recurrent reference specs (ocean/memory) resolve an LSTM
-        // default architecture and train natively — no skip needed since
-        // the native backend gained BPTT.
         let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
         flat.insert("train.env".into(), env.to_string());
         let tc = config::train_config(&flat)?;
@@ -291,6 +446,129 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     }
     println!("{solved}/{} Ocean envs solved", envs::OCEAN_ENVS.len());
     Ok(())
+}
+
+// -- imperative commands ----------------------------------------------------
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy.", "vec."])?;
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat)?;
+    let spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
+    println!(
+        "training {} for {} steps ({backend} backend) ...",
+        spec.key(),
+        tc.total_steps
+    );
+    let mut trainer = make_trainer(tc, &backend)?;
+    let report = trainer.train()?;
+    print_train_report(&report);
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    // Pull out eval-specific flags.
+    let mut checkpoint = None;
+    let mut episodes = 20usize;
+    let mut bad_episodes = None;
+    overrides.retain(|a| {
+        if let Some(v) = a.strip_prefix("--checkpoint=") {
+            checkpoint = Some(v.to_string());
+            false
+        } else if let Some(v) = a.strip_prefix("--episodes=") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => episodes = n,
+                _ => bad_episodes = Some(v.to_string()),
+            }
+            false
+        } else {
+            true
+        }
+    });
+    if let Some(v) = bad_episodes {
+        anyhow::bail!("--episodes: expected an integer >= 1, got '{v}'");
+    }
+
+    // RunSpec form: the positional is a checkpoint file, spec embedded.
+    // Route by argument shape, not just existence: a mistyped checkpoint
+    // path must fail with the file error, not a confusing "unknown env".
+    let positional_is_ckpt = positional.first().is_some_and(|p| {
+        !envs::ALL_ENVS.contains(&p.as_str())
+            && (p.ends_with(".bin") || std::path::Path::new(p).is_file())
+    });
+    if positional_is_ckpt {
+        anyhow::ensure!(
+            backend == "native",
+            "RunSpec checkpoints evaluate on the native backend; use \
+             `puffer eval <env> --checkpoint=FILE --backend=pjrt` for the AOT path"
+        );
+        anyhow::ensure!(
+            checkpoint.is_none(),
+            "conflicting checkpoints: a positional checkpoint and --checkpoint= \
+             were both given — pass one or the other"
+        );
+        reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+        let path = positional.first().unwrap();
+        let ck = Checkpoint::load(path).context("loading checkpoint")?;
+        let json = ck.run_spec_json.as_deref().with_context(|| {
+            format!("{path} has no embedded RunSpec — use `puffer eval <env> --checkpoint={path}`")
+        })?;
+        // Evaluation never writes run data: the metrics sink opens
+        // lazily on the first written row (eval writes none) and the
+        // checkpoint is only saved by train(). One exception by design:
+        // a vec = "auto" spec whose autotune cache is missing re-tunes
+        // and restores `<run_dir>/autotune.json` — infrastructure, not
+        // run history.
+        let spec = apply_spec_overrides(RunSpec::from_json_str(json)?, &overrides)?;
+        let mut trainer = spec.build()?;
+        trainer.restore(&ck)?;
+        println!(
+            "evaluating {} restored at step {}",
+            spec.env.key(),
+            ck.global_step
+        );
+        let report = trainer.eval(episodes)?;
+        print_eval(&report);
+        return Ok(());
+    }
+
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy.", "vec."])?;
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat)?;
+    let mut trainer = make_trainer(tc, &backend)?;
+    if let Some(ck_path) = checkpoint {
+        let ck = Checkpoint::load(&ck_path).context("loading checkpoint")?;
+        trainer.restore(&ck)?;
+        println!("restored checkpoint at step {}", ck.global_step);
+    }
+    let report = trainer.eval(episodes)?;
+    print_eval(&report);
+    Ok(())
+}
+
+fn print_eval(report: &pufferlib::train::EvalReport) {
+    println!(
+        "eval: {} episodes, score {}, return {}",
+        report.episodes,
+        report
+            .mean_score
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+        report
+            .mean_return
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+    );
 }
 
 /// `puffer policy describe <env>`: print the resolved architecture —
@@ -335,17 +613,20 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
         .first()
         .cloned()
         .unwrap_or_else(|| "ocean/squared".into());
-    let mut num_envs = 8;
+    let mut num_envs = None;
     let mut workers = 4;
     let mut secs = 1.0f64;
+    let mut run_dir = None;
     let mut wrap_overrides = Vec::new();
     for a in overrides {
         if let Some(v) = a.strip_prefix("--envs=") {
-            num_envs = v.parse().map_err(|_| anyhow::anyhow!("--envs: cannot parse '{v}'"))?;
+            num_envs = Some(v.parse().map_err(|_| anyhow::anyhow!("--envs: cannot parse '{v}'"))?);
         } else if let Some(v) = a.strip_prefix("--workers=") {
             workers = v.parse().map_err(|_| anyhow::anyhow!("--workers: cannot parse '{v}'"))?;
         } else if let Some(v) = a.strip_prefix("--secs=") {
             secs = v.parse().map_err(|_| anyhow::anyhow!("--secs: cannot parse '{v}'"))?;
+        } else if let Some(v) = a.strip_prefix("--run_dir=") {
+            run_dir = Some(v.to_string());
         } else {
             wrap_overrides.push(a);
         }
@@ -356,6 +637,18 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
     let (flat, _) = config::load(None, &wrap_overrides)?;
     config::validate_keys(&flat)?;
     let spec = EnvSpec::new(env.as_str()).with_wrappers(config::wrap_config(&flat)?);
+    // Default the env budget to the trainer's own count (batch_roll /
+    // agents) so the cached winner is exactly what `vec = "auto"`
+    // consumes on the next run of this env.
+    let num_envs = match num_envs {
+        Some(n) => n,
+        None => {
+            let probe = spec.build(0);
+            let backend =
+                pufferlib::backend::NativeBackend::for_env(&spec.key(), probe.as_ref())?;
+            backend.spec().batch_roll / backend.spec().agents
+        }
+    };
     println!(
         "autotuning {} with {num_envs} envs (≤{workers} workers, {secs}s per config) ...",
         spec.key()
@@ -368,6 +661,31 @@ fn cmd_autotune(args: &[String]) -> Result<()> {
         results[0].cfg.num_workers,
         results[0].cfg.batch_size,
         results[0].cfg.zero_copy
+    );
+    // The machine-readable winner: a VecSpec, printed and cached where
+    // `vec = "auto"` looks for it. Only full/half batches are trainable
+    // (the policy forward is compiled for those shapes), so the cache
+    // takes the fastest such candidate.
+    let trainable = autotune::trainable_winner(&results, num_envs);
+    if trainable.label != results[0].label {
+        println!(
+            "(fastest *trainable* config: {} — the overall winner's batch shape \
+             cannot feed the policy forward)",
+            trainable.label
+        );
+    }
+    let winner = trainable.vec_spec();
+    println!("vec spec: {}", winner.to_json().dump());
+    // Default the cache location to the same run dir a default
+    // `puffer run` of this env resolves, so `vec = "auto"` actually
+    // consumes what was just tuned.
+    let run_dir = run_dir.unwrap_or_else(|| run_dir_for(&spec.key()));
+    let cache = autotune::cache_path(Some(&run_dir));
+    autotune::write_cache(&cache, &spec.key(), num_envs, &winner)?;
+    println!(
+        "cached → {} (consumed by vec = \"auto\" for {} at {num_envs} envs)",
+        cache.display(),
+        spec.key()
     );
     Ok(())
 }

@@ -65,6 +65,18 @@ pub enum ActionHead {
     Quantized { bins: usize },
 }
 
+impl ActionHead {
+    /// The `policy.head` config-grammar form (`"categorical"` or
+    /// `"quantized:<bins>"`) — what [`crate::config::policy_config`]
+    /// parses and what RunSpec serialization emits.
+    pub fn config_value(&self) -> String {
+        match self {
+            ActionHead::Categorical => "categorical".to_string(),
+            ActionHead::Quantized { bins } => format!("quantized:{bins}"),
+        }
+    }
+}
+
 /// Declarative policy architecture: per-leaf encoders × trunk ×
 /// recurrence × action head.
 ///

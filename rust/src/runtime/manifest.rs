@@ -35,6 +35,26 @@ pub struct SpecManifest {
     pub artifacts: BTreeMap<String, String>,
 }
 
+impl SpecManifest {
+    /// Validate that a vectorizer batch of `batch_envs` envs can feed
+    /// the policy forward, which is compiled for exactly `batch_fwd`
+    /// (pooled) or `batch_roll` (sync) agent rows. The single source of
+    /// this invariant — `Trainer::build` and `RunSpec::validate` both
+    /// call it.
+    pub fn ensure_trainable_batch(&self, vec_desc: &str, batch_envs: usize) -> Result<()> {
+        let batch_rows = batch_envs * self.agents;
+        anyhow::ensure!(
+            batch_rows == self.batch_fwd || batch_rows == self.batch_roll,
+            "vec spec '{vec_desc}' yields batches of {batch_rows} agent rows, \
+             but this spec forwards {} (pooled) or {} (sync) rows — use \
+             vec.batch = \"full\" or \"half\"",
+            self.batch_fwd,
+            self.batch_roll
+        );
+        Ok(())
+    }
+}
+
 /// The full manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {

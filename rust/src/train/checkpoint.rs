@@ -1,18 +1,27 @@
-//! Binary checkpoints: flat params + Adam state + counters. Format:
-//! magic, version, spec-key, then length-prefixed f32 arrays, all
-//! little-endian — no serde needed, stable across runs.
+//! Binary checkpoints: flat params + Adam state + counters, plus (since
+//! v2) the serialized [`RunSpec`](crate::runspec::RunSpec) of the run
+//! that wrote them. Format: magic, version, spec-key, run-spec JSON,
+//! then length-prefixed f32 arrays, all little-endian — no serde
+//! needed, stable across runs. v1 files (pre-RunSpec) still load, with
+//! no embedded spec.
 
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PUFFCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Everything needed to resume training.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub spec_key: String,
+    /// The compact-JSON [`RunSpec`](crate::runspec::RunSpec) of the run
+    /// that wrote this checkpoint, when it was constructed through
+    /// `Trainer::from_run_spec` — what lets `puffer resume <ckpt>` /
+    /// `puffer eval <ckpt>` rebuild the whole experiment with zero
+    /// flags. `None` for v1 files and directly-configured trainers.
+    pub run_spec_json: Option<String>,
     pub global_step: u64,
     pub params: Vec<f32>,
     pub adam_m: Vec<f32>,
@@ -29,6 +38,10 @@ impl Checkpoint {
         let key = self.spec_key.as_bytes();
         f.write_all(&(key.len() as u32).to_le_bytes())?;
         f.write_all(key)?;
+        // Length-prefixed run spec; 0 = none.
+        let spec = self.run_spec_json.as_deref().unwrap_or("").as_bytes();
+        f.write_all(&(spec.len() as u32).to_le_bytes())?;
+        f.write_all(spec)?;
         f.write_all(&self.global_step.to_le_bytes())?;
         f.write_all(&self.adam_step.to_le_bytes())?;
         for arr in [&self.params, &self.adam_m, &self.adam_v] {
@@ -48,11 +61,30 @@ impl Checkpoint {
         anyhow::ensure!(&magic == MAGIC, "not a puffer checkpoint");
         let mut u32b = [0u8; 4];
         f.read_exact(&mut u32b)?;
-        anyhow::ensure!(u32::from_le_bytes(u32b) == VERSION, "checkpoint version mismatch");
-        f.read_exact(&mut u32b)?;
-        let key_len = u32::from_le_bytes(u32b) as usize;
-        let mut key = vec![0u8; key_len];
-        f.read_exact(&mut key)?;
+        let version = u32::from_le_bytes(u32b);
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "checkpoint version {version} not supported (this build reads v1 and v{VERSION})"
+        );
+        let read_string = |f: &mut std::fs::File| -> Result<String> {
+            let mut lenb = [0u8; 4];
+            f.read_exact(&mut lenb)?;
+            let len = u32::from_le_bytes(lenb) as usize;
+            let mut bytes = vec![0u8; len];
+            f.read_exact(&mut bytes)?;
+            String::from_utf8(bytes).context("bad checkpoint string")
+        };
+        let spec_key = read_string(&mut f)?;
+        let run_spec_json = if version >= 2 {
+            let s = read_string(&mut f)?;
+            if s.is_empty() {
+                None
+            } else {
+                Some(s)
+            }
+        } else {
+            None
+        };
         let mut u64b = [0u8; 8];
         f.read_exact(&mut u64b)?;
         let global_step = u64::from_le_bytes(u64b);
@@ -73,7 +105,8 @@ impl Checkpoint {
         let adam_m = read_arr(&mut f)?;
         let adam_v = read_arr(&mut f)?;
         Ok(Checkpoint {
-            spec_key: String::from_utf8(key).context("bad spec key")?,
+            spec_key,
+            run_spec_json,
             global_step,
             params,
             adam_m,
@@ -87,22 +120,61 @@ impl Checkpoint {
 mod tests {
     use super::*;
 
-    #[test]
-    fn round_trip() {
-        let ck = Checkpoint {
+    fn sample(run_spec_json: Option<String>) -> Checkpoint {
+        Checkpoint {
             spec_key: "ocean_squared".into(),
+            run_spec_json,
             global_step: 12_345,
             params: vec![1.5, -2.0, 0.25],
             adam_m: vec![0.1, 0.2, 0.3],
             adam_v: vec![0.0; 3],
             adam_step: 7.0,
-        };
+        }
+    }
+
+    #[test]
+    fn round_trip() {
         let dir = std::env::temp_dir().join("puffer_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("ck.bin");
-        ck.save(&path).unwrap();
+        for (name, ck) in [
+            ("plain.bin", sample(None)),
+            (
+                "spec.bin",
+                sample(Some(r#"{"env":{"name":"ocean/squared"}}"#.into())),
+            ),
+        ] {
+            let path = dir.join(name);
+            ck.save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(ck, back);
+        }
+    }
+
+    #[test]
+    fn v1_files_still_load_without_a_run_spec() {
+        // Hand-write the v1 layout: magic, version 1, spec-key,
+        // global_step, adam_step, three arrays.
+        let dir = std::env::temp_dir().join("puffer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bin");
+        let ck = sample(None);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(ck.spec_key.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(ck.spec_key.as_bytes());
+        bytes.extend_from_slice(&ck.global_step.to_le_bytes());
+        bytes.extend_from_slice(&ck.adam_step.to_le_bytes());
+        for arr in [&ck.params, &ck.adam_m, &ck.adam_v] {
+            bytes.extend_from_slice(&(arr.len() as u64).to_le_bytes());
+            for x in arr.iter() {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, bytes).unwrap();
         let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(ck, back);
+        assert_eq!(back, ck);
+        assert_eq!(back.run_spec_json, None);
     }
 
     #[test]
@@ -112,5 +184,13 @@ mod tests {
         let path = dir.join("garbage.bin");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        // An unknown future version is rejected with the version named.
+        let path = dir.join("future.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("99"), "{err}");
     }
 }

@@ -21,17 +21,21 @@ use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 use super::Checkpoint;
 use crate::backend::{AdamState, MinibatchScratch, NativeBackend, PolicyBackend, TrainBatch};
 use crate::policy::{ParamSnapshot, Policy, PolicySpec};
+use crate::runspec::RunSpec;
 use crate::util::rng::Rng;
+use crate::util::seed::SeedPlan;
 use crate::util::timer::{SpsCounter, Timer};
-use crate::vector::{Multiprocessing, Serial, VecConfig, VecEnv};
+use crate::vector::{VecEnv, VecSpec};
 use crate::wrappers::{EnvSpec, WrapperSpec};
 use anyhow::Result;
 use std::io::Write as _;
 use std::sync::mpsc;
 
 /// Training configuration (Clean PuffeRL's YAML keys, as a struct; see
-/// [`crate::config`] for the file/CLI layer).
-#[derive(Clone, Debug)]
+/// [`crate::config`] for the file/CLI layer, and
+/// [`RunSpec`](crate::runspec::RunSpec) for the declarative experiment
+/// currency that assembles one of these from its `[train]` section).
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     /// First-party env name, e.g. "ocean/squared".
     pub env: String,
@@ -62,11 +66,18 @@ pub struct TrainConfig {
     pub norm_adv: bool,
     pub anneal_lr: bool,
     pub seed: u64,
-    /// Worker threads for the vectorizer (0 = serial backend).
+    /// Worker threads for the vectorizer (0 = serial backend). Legacy
+    /// knob: ignored when [`TrainConfig::vec`] is set.
     pub num_workers: usize,
     /// EnvPool mode: recv half the envs per batch (M = 2N
-    /// double-buffering). Requires `num_workers >= 2`.
+    /// double-buffering). Requires `num_workers >= 2`. Legacy knob:
+    /// ignored when [`TrainConfig::vec`] is set.
     pub pool: bool,
+    /// Declarative vectorization ([`VecSpec`]: `serial`, `mt { … }`, or
+    /// `auto`). `None` (default) maps the legacy `num_workers`/`pool`
+    /// knobs through [`VecSpec::from_workers_pool`]. `auto` resolves
+    /// through the autotune cache under [`TrainConfig::run_dir`].
+    pub vec: Option<VecSpec>,
     /// Experience-pipeline depth (`train.pipeline.depth` /
     /// `--pipeline.depth`): 0 = serial loop; d ≥ 1 = a collector thread
     /// runs up to d segments ahead of the learner over d + 1 rotating
@@ -94,6 +105,7 @@ impl Default for TrainConfig {
             seed: 1,
             num_workers: 2,
             pool: false,
+            vec: None,
             pipeline_depth: 0,
             run_dir: None,
             log_every: 5,
@@ -144,6 +156,57 @@ pub struct EvalReport {
     pub mean_return: Option<f64>,
 }
 
+/// Lazily-opened `metrics.csv` sink. Nothing on disk is touched until
+/// the first row is written, so trainers that never train (e.g.
+/// `puffer eval <ckpt>` rebuilding from an embedded RunSpec) leave the
+/// run dir untouched. The truncate-vs-append decision is made at first
+/// write: a fresh run starts a clean file; a restored trainer
+/// ([`Trainer::restore`]) appends, continuing the original run's curve
+/// instead of erasing its history. The header is written only when the
+/// file ends up empty.
+struct MetricsSink {
+    path: Option<String>,
+    file: Option<std::fs::File>,
+    /// Set by `restore()`: append instead of truncating.
+    append: bool,
+}
+
+impl MetricsSink {
+    fn new(run_dir: Option<&str>) -> Self {
+        MetricsSink {
+            path: run_dir.map(|dir| format!("{dir}/metrics.csv")),
+            file: None,
+            append: false,
+        }
+    }
+
+    /// The open file, creating it on first use (`None` when the run has
+    /// no directory).
+    fn file(&mut self) -> Result<Option<&mut std::fs::File>> {
+        if self.file.is_none() {
+            let Some(path) = &self.path else {
+                return Ok(None);
+            };
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let mut f = if self.append {
+                std::fs::OpenOptions::new().create(true).append(true).open(path)?
+            } else {
+                std::fs::File::create(path)?
+            };
+            if f.metadata()?.len() == 0 {
+                writeln!(
+                    f,
+                    "global_step,sps,score,ep_return,ep_length,loss,pg_loss,v_loss,entropy,approx_kl,env_sps,learn_sps,stall_s"
+                )?;
+            }
+            self.file = Some(f);
+        }
+        Ok(self.file.as_mut())
+    }
+}
+
 /// Clean PuffeRL.
 pub struct Trainer {
     cfg: TrainConfig,
@@ -155,7 +218,15 @@ pub struct Trainer {
     spec_key: String,
     opt: AdamState,
     global_step: u64,
-    metrics_file: Option<std::fs::File>,
+    metrics: MetricsSink,
+    /// Per-stream seeds: [`SeedPlan::legacy`] for directly-configured
+    /// trainers (bit-identical to the pre-RunSpec loop),
+    /// [`SeedPlan::from_root`] for RunSpec-constructed ones.
+    seeds: SeedPlan,
+    /// The declarative spec this trainer was built from, when it was
+    /// built through [`Trainer::from_run_spec`] — embedded in every
+    /// checkpoint so `puffer resume` / `puffer eval` need zero flags.
+    run_spec: Option<RunSpec>,
     /// Minibatch row-permutation stream (never consumed when
     /// `minibatches == 1`, keeping the full-batch path bit-identical to
     /// the pre-pipeline trainer).
@@ -185,11 +256,30 @@ impl Trainer {
     /// embeds the wrapper chain plus any non-default architecture so
     /// checkpoints never cross chains or architectures silently.
     pub fn native(cfg: TrainConfig) -> Result<Self> {
+        let seeds = SeedPlan::legacy(cfg.seed);
+        Self::native_with(cfg, seeds, None)
+    }
+
+    /// Construct from a declarative [`RunSpec`] — the one-line
+    /// experiment path. Differences from [`Trainer::native`]: the env,
+    /// wrappers, policy, vectorization, and train settings all come from
+    /// the spec; every RNG stream is derived from the single `run.seed`
+    /// root via the documented split function
+    /// ([`SeedPlan::from_root`]); and checkpoints embed the serialized
+    /// spec, so `puffer resume <ckpt>` / `puffer eval <ckpt>` work with
+    /// zero flags.
+    pub fn from_run_spec(spec: &RunSpec) -> Result<Self> {
+        let cfg = spec.train_config();
+        let seeds = SeedPlan::from_root(spec.seed);
+        Self::native_with(cfg, seeds, Some(spec.clone()))
+    }
+
+    fn native_with(cfg: TrainConfig, seeds: SeedPlan, run_spec: Option<RunSpec>) -> Result<Self> {
         let spec = Self::env_spec(&cfg);
         let probe = spec.build(0);
         let policy = Self::policy_spec(&cfg);
         let backend = NativeBackend::for_env_with_policy(&spec.key(), probe.as_ref(), &policy)?;
-        Self::build(cfg, Box::new(backend), probe)
+        Self::build(cfg, Box::new(backend), probe, seeds, run_spec)
     }
 
     /// Train through the AOT/PJRT path (requires the `pjrt` feature and
@@ -230,13 +320,16 @@ impl Trainer {
     /// Train with any [`PolicyBackend`].
     pub fn with_backend(cfg: TrainConfig, backend: Box<dyn PolicyBackend>) -> Result<Self> {
         let probe = Self::env_spec(&cfg).build(0);
-        Self::build(cfg, backend, probe)
+        let seeds = SeedPlan::legacy(cfg.seed);
+        Self::build(cfg, backend, probe, seeds, None)
     }
 
     fn build(
         cfg: TrainConfig,
         mut backend: Box<dyn PolicyBackend>,
         probe: Box<dyn crate::emulation::FlatEnv>,
+        seeds: SeedPlan,
+        run_spec: Option<RunSpec>,
     ) -> Result<Self> {
         let spec = backend.spec().clone();
         let spec_key = backend.key().to_string();
@@ -278,43 +371,20 @@ impl Trainer {
         );
         let num_envs = spec.batch_roll / agents;
 
-        // Vectorizer: sync (batch = all) or pooled (batch = half, M = 2N).
-        // Built from the same EnvSpec as the probe, so the worker slabs
-        // use the wrapped layout.
+        // Vectorizer: built through the declarative VecSpec from the
+        // same EnvSpec as the probe, so the worker slabs use the wrapped
+        // layout. Explicit `cfg.vec` wins; otherwise the legacy
+        // num_workers/pool knobs map through the same spec type.
         let env_spec = Self::env_spec(&cfg);
-        let venv: Box<dyn VecEnv> = if cfg.num_workers == 0 {
-            Box::new(Serial::from_spec(
-                &env_spec,
-                VecConfig {
-                    num_envs,
-                    num_workers: 1,
-                    batch_size: num_envs,
-                    seed: cfg.seed,
-                    ..Default::default()
-                },
-            )?)
-        } else {
-            let workers = pick_workers(num_envs, cfg.num_workers, cfg.pool);
-            let batch = if cfg.pool { num_envs / 2 } else { num_envs };
-            Box::new(Multiprocessing::from_spec(
-                &env_spec,
-                VecConfig {
-                    num_envs,
-                    num_workers: workers,
-                    batch_size: batch,
-                    seed: cfg.seed,
-                    ..Default::default()
-                },
-            )?)
+        let vec_spec = match &cfg.vec {
+            Some(v) => v.clone(),
+            None => VecSpec::from_workers_pool(cfg.num_workers, cfg.pool),
         };
-        if cfg.pool {
-            anyhow::ensure!(
-                spec.batch_fwd * 2 == spec.batch_roll,
-                "pool mode needs batch_roll == 2 * batch_fwd"
-            );
-        }
+        let vec_spec = vec_spec.resolved(&env_spec, num_envs, cfg.run_dir.as_deref())?;
+        let venv = vec_spec.build(&env_spec, num_envs, seeds.env)?;
+        spec.ensure_trainable_batch(&vec_spec.to_string(), venv.batch_size())?;
 
-        let policy = Policy::new(backend.as_mut(), cfg.seed)?;
+        let policy = Policy::new(backend.as_mut(), seeds.policy)?;
         let buf = RolloutBuffer::new(
             spec.horizon,
             spec.batch_roll,
@@ -322,20 +392,8 @@ impl Trainer {
             spec.act_dims.len(),
         );
 
-        let metrics_file = match &cfg.run_dir {
-            Some(dir) => {
-                std::fs::create_dir_all(dir)?;
-                let mut f = std::fs::File::create(format!("{dir}/metrics.csv"))?;
-                writeln!(
-                    f,
-                    "global_step,sps,score,ep_return,ep_length,loss,pg_loss,v_loss,entropy,approx_kl,env_sps,learn_sps,stall_s"
-                )?;
-                Some(f)
-            }
-            None => None,
-        };
-
-        let shuffle_rng = Rng::new(cfg.seed ^ 0x5B0F_F1E5);
+        let metrics = MetricsSink::new(cfg.run_dir.as_deref());
+        let shuffle_rng = Rng::new(seeds.shuffle);
         Ok(Trainer {
             cfg,
             backend,
@@ -346,7 +404,9 @@ impl Trainer {
             spec_key,
             opt: AdamState::new(spec.n_params),
             global_step: 0,
-            metrics_file,
+            metrics,
+            seeds,
+            run_spec,
             shuffle_rng,
             scratch: MinibatchScratch::default(),
         })
@@ -358,6 +418,11 @@ impl Trainer {
     pub fn global_step(&self) -> u64 {
         self.global_step
     }
+    /// The declarative spec this trainer was built from (only when
+    /// constructed through [`Trainer::from_run_spec`]).
+    pub fn run_spec(&self) -> Option<&RunSpec> {
+        self.run_spec.as_ref()
+    }
 
     /// Run the full training loop (serial or pipelined per
     /// [`TrainConfig::pipeline_depth`]).
@@ -368,6 +433,7 @@ impl Trainer {
             self.train_pipelined()?
         };
         if let Some(dir) = &self.cfg.run_dir {
+            std::fs::create_dir_all(dir)?;
             self.checkpoint().save(format!("{dir}/checkpoint.bin"))?;
         }
         Ok(report)
@@ -384,7 +450,7 @@ impl Trainer {
         let mut segment = 0u64;
         let mut score_curve = Vec::new();
 
-        self.venv.async_reset(self.cfg.seed);
+        self.venv.async_reset(self.seeds.env);
         self.buf.mark_all_starts();
         self.policy.reset_all_state();
 
@@ -433,7 +499,7 @@ impl Trainer {
             }
             log_segment(
                 &self.cfg,
-                &mut self.metrics_file,
+                &mut self.metrics,
                 self.global_step,
                 sps.window(),
                 sps.total(),
@@ -461,7 +527,7 @@ impl Trainer {
         // policy (sampling RNG + recurrent state), reading the learner's
         // published weights — never its in-place-mutating buffer.
         let mut col_backend = self.backend.fork_for_rollout()?;
-        let mut col_policy = Policy::new(col_backend.as_mut(), self.cfg.seed ^ 0x50C0_11EC)?;
+        let mut col_policy = Policy::new(col_backend.as_mut(), self.seeds.collector)?;
         col_policy.set_params(self.policy.params());
         let snapshot = ParamSnapshot::new(self.policy.params().to_vec());
 
@@ -490,7 +556,7 @@ impl Trainer {
         let mut free_tx = Some(free_tx);
         let mut filled_rx = Some(filled_rx);
 
-        let seed = self.cfg.seed;
+        let seed = self.seeds.env;
         let mut sps = SpsCounter::new();
         let mut tel = Telemetry::default();
         let mut last_metrics = [0.0f32; 5];
@@ -504,7 +570,7 @@ impl Trainer {
             log,
             opt,
             global_step,
-            metrics_file,
+            metrics,
             shuffle_rng,
             scratch,
             ..
@@ -572,7 +638,7 @@ impl Trainer {
                 }
                 log_segment(
                     cfg,
-                    metrics_file,
+                    metrics,
                     *global_step,
                     sps.window(),
                     sps.total(),
@@ -630,7 +696,7 @@ impl Trainer {
     /// `min_episodes` episodes.
     pub fn eval(&mut self, min_episodes: usize) -> Result<EvalReport> {
         let mut log = EpisodeLog::default();
-        self.venv.async_reset(self.cfg.seed ^ 0xEEEE);
+        self.venv.async_reset(self.seeds.eval);
         self.policy.reset_all_state();
         let agents = self.venv.agents_per_env();
         let slots = self.venv.action_dims().len();
@@ -678,10 +744,21 @@ impl Trainer {
         })
     }
 
-    /// Snapshot trainer state.
+    /// Snapshot trainer state. When the trainer was built from a
+    /// [`RunSpec`], the serialized spec rides along so `puffer resume` /
+    /// `puffer eval` can reconstruct the whole experiment with zero
+    /// flags. Specs that cannot serialize (custom base env,
+    /// non-canonical wrapper chain) checkpoint without an embedded spec
+    /// — such runs restore through the explicit API, matched by
+    /// `spec_key` as always.
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             spec_key: self.spec_key.clone(),
+            run_spec_json: self
+                .run_spec
+                .as_ref()
+                .filter(|r| r.to_flat().is_ok())
+                .map(|r| r.to_json().dump()),
             global_step: self.global_step,
             params: self.policy.params().to_vec(),
             adam_m: self.opt.m.clone(),
@@ -737,6 +814,10 @@ impl Trainer {
         self.opt.v = ck.adam_v.clone();
         self.opt.step = ck.adam_step;
         self.global_step = ck.global_step;
+        // This trainer now continues an earlier run: metrics must append
+        // to that run's history, not truncate it (no-op if rows were
+        // already written this session — the file is simply kept open).
+        self.metrics.append = true;
         Ok(())
     }
 }
@@ -825,7 +906,7 @@ fn learn_on_segment(
 #[allow(clippy::too_many_arguments)]
 fn log_segment(
     cfg: &TrainConfig,
-    metrics_file: &mut Option<std::fs::File>,
+    sink: &mut MetricsSink,
     global_step: u64,
     window_sps: f64,
     total_steps_done: u64,
@@ -852,7 +933,7 @@ fn log_segment(
             metrics[4],
         );
     }
-    if let Some(f) = metrics_file {
+    if let Some(f) = sink.file()? {
         writeln!(
             f,
             "{},{:.0},{},{},{},{},{},{},{},{},{:.0},{:.0},{:.3}",
@@ -881,36 +962,9 @@ fn fmt_opt(x: Option<f64>) -> String {
     }
 }
 
-/// Pick a worker count ≤ `want` that divides `num_envs` (and keeps the
-/// pool batch a multiple of envs-per-worker when pooling).
-fn pick_workers(num_envs: usize, want: usize, pool: bool) -> usize {
-    let mut best = 1;
-    for w in 1..=want.min(num_envs) {
-        if num_envs % w != 0 {
-            continue;
-        }
-        let epw = num_envs / w;
-        if pool && (num_envs / 2) % epw != 0 {
-            continue;
-        }
-        best = w;
-    }
-    best
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn pick_workers_respects_divisibility() {
-        assert_eq!(pick_workers(32, 4, false), 4);
-        assert_eq!(pick_workers(32, 4, true), 4);
-        assert_eq!(pick_workers(30, 4, false), 3);
-        assert_eq!(pick_workers(7, 4, false), 1);
-        // pool: batch 16, envs 32, w=4 → epw 8, 16 % 8 == 0 ✓
-        assert_eq!(pick_workers(32, 3, true), 2);
-    }
 
     #[test]
     fn trainer_sizes_backend_from_wrapped_spec() {
@@ -964,6 +1018,48 @@ mod tests {
         .expect("feedforward memory must not construct")
         .to_string();
         assert!(err.contains("--policy.lstm"), "{err}");
+    }
+
+    #[test]
+    fn explicit_vec_spec_drives_the_vectorizer() {
+        // A declarative VecSpec overrides the legacy num_workers/pool
+        // knobs entirely.
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            num_workers: 4, // ignored: vec wins
+            vec: Some(VecSpec::Serial),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let t = Trainer::native(cfg).unwrap();
+        assert_eq!(t.venv.batch_size(), t.venv.num_envs());
+        // A pooled spec halves the recv batch (batch_fwd rows).
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            vec: Some(VecSpec::pooled(2)),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let t = Trainer::native(cfg).unwrap();
+        assert_eq!(t.venv.batch_rows(), t.policy.spec().batch_fwd);
+        // A batch size the compiled forward cannot take is a
+        // construction error naming vec.batch.
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            vec: Some(VecSpec::Mt {
+                workers: 8,
+                batch: crate::vector::VecBatch::Envs(8),
+                zero_copy: false,
+                spin_budget: 64,
+            }),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let err = Trainer::native(cfg).unwrap_err().to_string();
+        assert!(err.contains("vec.batch"), "{err}");
     }
 
     #[test]

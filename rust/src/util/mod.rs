@@ -7,5 +7,6 @@
 pub mod check;
 pub mod json;
 pub mod rng;
+pub mod seed;
 pub mod stats;
 pub mod timer;

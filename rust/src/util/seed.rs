@@ -1,0 +1,132 @@
+//! Seed derivation: one root seed per run, split into independent
+//! per-stream seeds.
+//!
+//! A run touches several RNG streams — env resets (the vectorizer's
+//! `VecConfig::seed` / `async_reset`), rollout action sampling, the
+//! minibatch shuffle, the pipelined collector's sampling stream, and
+//! evaluation resets. Before [`RunSpec`](crate::runspec::RunSpec)
+//! existed, callers copied one `TrainConfig::seed` into `VecConfig.seed`
+//! by hand and the trainer XOR'd ad-hoc constants for the rest. The
+//! documented split is now explicit:
+//!
+//! - [`split`] — `splitmix64(root ^ fnv1a(domain))`: statistically
+//!   independent streams from one `run.seed` root. This is what
+//!   [`SeedPlan::from_root`] uses, and therefore what every
+//!   RunSpec-constructed trainer runs with.
+//! - [`SeedPlan::legacy`] — the exact pre-RunSpec derivations (identity
+//!   for env + policy, the historical XOR constants for the rest), kept
+//!   so `Trainer::native(TrainConfig)` stays bit-identical to the
+//!   pinned pre-refactor trainer (`tests/pipeline.rs`).
+//!
+//! Reproducibility contract: two identical RunSpecs produce identical
+//! SeedPlans and therefore bit-identical first segments (pinned by
+//! `tests/run_spec.rs`).
+
+/// `splitmix64` finalizer: a cheap, well-mixed 64-bit permutation
+/// (Steele et al., "Fast splittable pseudorandom number generators").
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// FNV-1a over the domain label — turns `"env"` / `"policy"` / … into a
+/// 64-bit domain constant without a hand-maintained table.
+fn fnv1a(label: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in label.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The documented split function: derive the seed for one named stream
+/// from the run's root seed. Identical `(root, domain)` always produces
+/// the same stream seed; distinct domains decorrelate even when `root`
+/// values are small and sequential (0, 1, 2, …).
+pub fn split(root: u64, domain: &str) -> u64 {
+    splitmix64(root ^ fnv1a(domain))
+}
+
+/// Every per-stream seed a trainer consumes, derived from one root.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeedPlan {
+    /// Env-reset stream: `VecConfig::seed` and `async_reset` (env `i`
+    /// resets with `env + i`).
+    pub env: u64,
+    /// Rollout policy construction (action-sampling RNG).
+    pub policy: u64,
+    /// Minibatch row-permutation stream.
+    pub shuffle: u64,
+    /// The pipelined collector's own policy sampling stream.
+    pub collector: u64,
+    /// Evaluation env-reset stream.
+    pub eval: u64,
+}
+
+impl SeedPlan {
+    /// The split-function plan for a [`RunSpec`](crate::runspec::RunSpec)
+    /// root seed: every stream is `split(root, <domain>)`.
+    pub fn from_root(root: u64) -> Self {
+        SeedPlan {
+            env: split(root, "env"),
+            policy: split(root, "policy"),
+            shuffle: split(root, "shuffle"),
+            collector: split(root, "collector"),
+            eval: split(root, "eval"),
+        }
+    }
+
+    /// The pre-RunSpec derivations from `TrainConfig::seed`, preserved
+    /// bit for bit so directly-configured trainers reproduce the pinned
+    /// pre-refactor loop (`tests/pipeline.rs` compares parameters
+    /// bitwise against a replica seeded this way).
+    pub fn legacy(seed: u64) -> Self {
+        SeedPlan {
+            env: seed,
+            policy: seed,
+            shuffle: seed ^ 0x5B0F_F1E5,
+            collector: seed ^ 0x50C0_11EC,
+            eval: seed ^ 0xEEEE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_deterministic_and_domain_separated() {
+        assert_eq!(split(7, "env"), split(7, "env"));
+        assert_ne!(split(7, "env"), split(7, "policy"));
+        assert_ne!(split(7, "env"), split(8, "env"));
+        // Sequential roots do not produce correlated neighbors.
+        assert_ne!(split(0, "env") + 1, split(1, "env"));
+    }
+
+    #[test]
+    fn from_root_streams_are_pairwise_distinct() {
+        let p = SeedPlan::from_root(1);
+        let all = [p.env, p.policy, p.shuffle, p.collector, p.eval];
+        for i in 0..all.len() {
+            for j in (i + 1)..all.len() {
+                assert_ne!(all[i], all[j], "streams {i} and {j} collide");
+            }
+        }
+        assert_eq!(p, SeedPlan::from_root(1));
+        assert_ne!(p, SeedPlan::from_root(2));
+    }
+
+    #[test]
+    fn legacy_matches_the_historical_constants() {
+        let p = SeedPlan::legacy(7);
+        assert_eq!(p.env, 7);
+        assert_eq!(p.policy, 7);
+        assert_eq!(p.shuffle, 7 ^ 0x5B0F_F1E5);
+        assert_eq!(p.collector, 7 ^ 0x50C0_11EC);
+        assert_eq!(p.eval, 7 ^ 0xEEEE);
+    }
+}

@@ -2,10 +2,12 @@
 //! for your environment and hardware requires testing all four code paths.
 //! We provide an utility that benchmarks valid vectorization settings."*
 
-use super::{Multiprocessing, Serial, VecConfig, VecEnv};
+use super::{Multiprocessing, Serial, VecBatch, VecConfig, VecEnv, VecSpec};
+use crate::util::json::{self, Json};
 use crate::util::timer::Timer;
 use crate::wrappers::EnvSpec;
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
 
 /// Result of benchmarking one candidate configuration.
 #[derive(Clone, Debug)]
@@ -14,6 +16,29 @@ pub struct TuneResult {
     pub cfg: VecConfig,
     /// Aggregate environment steps per second (env-steps, not agent-steps).
     pub sps: f64,
+}
+
+impl TuneResult {
+    /// This candidate as a declarative [`VecSpec`] — the machine-readable
+    /// form `puffer autotune` emits and `vec = "auto"` consumes.
+    pub fn vec_spec(&self) -> VecSpec {
+        if self.label == "serial" {
+            return VecSpec::Serial;
+        }
+        let batch = if self.cfg.batch_size == self.cfg.num_envs {
+            VecBatch::Full
+        } else if self.cfg.batch_size * 2 == self.cfg.num_envs {
+            VecBatch::Half
+        } else {
+            VecBatch::Envs(self.cfg.batch_size)
+        };
+        VecSpec::Mt {
+            workers: self.cfg.num_workers,
+            batch,
+            zero_copy: self.cfg.zero_copy,
+            spin_budget: self.cfg.spin_budget,
+        }
+    }
 }
 
 /// Benchmark every valid backend/code-path combination for `duration`
@@ -110,6 +135,92 @@ pub fn measure<V: VecEnv>(mut v: V, secs: f64) -> Result<f64> {
     Ok(steps as f64 / t.secs())
 }
 
+/// The fastest *trainable* candidate: the policy forward takes exactly
+/// full (`N == M`) or half (`N == M/2`) batches, so e.g. a winning
+/// `pool-single` config (one worker's slab per recv) cannot feed the
+/// trainer. The serial baseline always qualifies, so on a sorted result
+/// list this cannot come up empty. Every cache writer must go through
+/// this filter — `read_cache` does not re-validate trainability.
+pub fn trainable_winner(results: &[TuneResult], num_envs: usize) -> &TuneResult {
+    results
+        .iter()
+        .find(|r| r.cfg.batch_size == num_envs || r.cfg.batch_size * 2 == num_envs)
+        .unwrap_or(&results[0])
+}
+
+// -- the `vec = "auto"` cache -----------------------------------------------
+
+/// Benchmark budget per candidate when `vec = "auto"` has no cached
+/// winner: long enough to separate the code paths, short enough that a
+/// cold-cache construction stays interactive.
+pub const AUTO_SECS_PER_CANDIDATE: f64 = 0.15;
+
+/// Where the autotune winner is cached: `<run_dir>/autotune.json`, or
+/// `./autotune.json` when the run has no directory.
+pub fn cache_path(run_dir: Option<&str>) -> PathBuf {
+    match run_dir {
+        Some(dir) => Path::new(dir).join("autotune.json"),
+        None => PathBuf::from("autotune.json"),
+    }
+}
+
+/// The cache entry: winning [`VecSpec`] keyed by env-spec key and env
+/// count (a cached winner for a different env or scale is stale).
+pub fn write_cache(path: &Path, env_key: &str, num_envs: usize, spec: &VecSpec) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let entry = json::obj(vec![
+        ("env", json::s(env_key)),
+        ("num_envs", json::num(num_envs as f64)),
+        ("vec", spec.to_json()),
+    ]);
+    std::fs::write(path, entry.dump())
+        .with_context(|| format!("writing autotune cache {}", path.display()))
+}
+
+/// Read a cached winner, returning `None` when the file is absent or was
+/// tuned for a different env/scale (malformed files are an error — a
+/// corrupt cache should fail loudly, not silently re-benchmark).
+pub fn read_cache(path: &Path, env_key: &str, num_envs: usize) -> Result<Option<VecSpec>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("autotune cache {} is corrupt: {e}", path.display()))?;
+    if j.get("env").as_str() != Some(env_key) || j.get("num_envs").as_usize() != Some(num_envs) {
+        return Ok(None);
+    }
+    VecSpec::from_json(j.get("vec")).map(Some)
+}
+
+/// Resolve `vec = "auto"`: consume the cached winner under `run_dir` if
+/// it matches this env + scale, otherwise benchmark (a short sweep —
+/// `secs` per candidate, workers capped at the host's parallelism) and
+/// cache the [`trainable_winner`] for subsequent runs.
+pub fn resolve_auto(
+    env: &EnvSpec,
+    num_envs: usize,
+    run_dir: Option<&str>,
+    secs: f64,
+) -> Result<VecSpec> {
+    let path = cache_path(run_dir);
+    if let Some(cached) = read_cache(&path, &env.key(), num_envs)? {
+        return Ok(cached);
+    }
+    let max_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let results = autotune(env, num_envs, max_workers, secs)?;
+    let spec = trainable_winner(&results, num_envs).vec_spec();
+    write_cache(&path, &env.key(), num_envs, &spec)?;
+    Ok(spec)
+}
+
 /// Pretty-print tune results as an aligned table.
 pub fn format_results(results: &[TuneResult]) -> String {
     let mut out = String::from(
@@ -132,7 +243,77 @@ pub fn format_results(results: &[TuneResult]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::envs;
+
+    #[test]
+    fn cache_round_trips_and_rejects_stale_entries() {
+        let dir = std::env::temp_dir().join("puffer_autotune_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("autotune.json");
+        let spec = VecSpec::pooled(4);
+        write_cache(&path, "ocean/squared", 8, &spec).unwrap();
+        assert_eq!(read_cache(&path, "ocean/squared", 8).unwrap(), Some(spec));
+        // Different env or scale → cache miss, not a wrong answer.
+        assert_eq!(read_cache(&path, "ocean/bandit", 8).unwrap(), None);
+        assert_eq!(read_cache(&path, "ocean/squared", 16).unwrap(), None);
+        // Absent file → None; corrupt file → loud error.
+        assert_eq!(read_cache(&dir.join("nope.json"), "x", 1).unwrap(), None);
+        std::fs::write(&path, "not json").unwrap();
+        assert!(read_cache(&path, "ocean/squared", 8).is_err());
+    }
+
+    #[test]
+    fn resolve_auto_benchmarks_once_then_consumes_the_cache() {
+        let dir = std::env::temp_dir().join("puffer_resolve_auto_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let run_dir = dir.to_str().unwrap();
+        let env = EnvSpec::new("ocean/squared");
+        let first = resolve_auto(&env, 4, Some(run_dir), 0.02).unwrap();
+        assert!(!first.is_auto());
+        assert!(cache_path(Some(run_dir)).exists());
+        // Second resolution must come from the cache (same answer, no
+        // re-benchmark): poison the bench by asking for an absurd spec —
+        // the cached value wins regardless.
+        let second = resolve_auto(&env, 4, Some(run_dir), 0.02).unwrap();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn winner_converts_to_a_vec_spec() {
+        let serial = TuneResult {
+            label: "serial".into(),
+            cfg: VecConfig {
+                num_envs: 8,
+                num_workers: 1,
+                batch_size: 8,
+                ..Default::default()
+            },
+            sps: 1.0,
+        };
+        assert_eq!(serial.vec_spec(), VecSpec::Serial);
+        let half = TuneResult {
+            label: "zero-copy-half w=4".into(),
+            cfg: VecConfig {
+                num_envs: 8,
+                num_workers: 4,
+                batch_size: 4,
+                zero_copy: true,
+                ..Default::default()
+            },
+            sps: 1.0,
+        };
+        match half.vec_spec() {
+            VecSpec::Mt {
+                workers,
+                batch,
+                zero_copy,
+                ..
+            } => {
+                assert_eq!((workers, batch, zero_copy), (4, VecBatch::Half, true));
+            }
+            other => panic!("expected mt, got {other:?}"),
+        }
+    }
 
     #[test]
     fn autotune_covers_code_paths_and_ranks() {

@@ -16,6 +16,13 @@
 //! - **Four separately optimized code paths** ([`Mode`]): `Sync`,
 //!   `Async`, `AsyncSingleWorker`, and `ZeroCopy`.
 //! - An [`autotune`] utility that benchmarks all valid settings.
+//! - A declarative [`VecSpec`] (`serial` | `mt { workers, batch,
+//!   zero_copy, spin_budget }` | `auto`) — the public construction
+//!   path: `VecSpec::build(&env_spec, num_envs, seed)` resolves into a
+//!   validated [`VecConfig`] and boxes the right backend, and is what a
+//!   [`RunSpec`](crate::runspec::RunSpec)'s `[vec]` section
+//!   deserializes into. `auto` resolves through the autotune cache
+//!   ([`autotune::resolve_auto`]).
 //!
 //! The API follows PufferLib's async triple: [`VecEnv::async_reset`], then
 //! alternate [`VecEnv::recv`] / [`VecEnv::send`].
@@ -29,9 +36,11 @@ pub mod baselines;
 mod multiproc;
 mod serial;
 mod shared;
+mod spec;
 
 pub use multiproc::Multiprocessing;
 pub use serial::Serial;
+pub use spec::{VecBatch, VecSpec};
 
 use crate::emulation::{FlatEnv, Info};
 use crate::spaces::StructLayout;

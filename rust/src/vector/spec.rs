@@ -1,0 +1,511 @@
+//! [`VecSpec`] — the declarative vectorization description, the third
+//! spec currency alongside [`EnvSpec`](crate::wrappers::EnvSpec) (envs)
+//! and [`PolicySpec`](crate::policy::PolicySpec) (models).
+//!
+//! A `VecSpec` says *how* to simulate, not *how many*: the env count is
+//! supplied at build time (the trainer derives it from the backend
+//! spec's `batch_roll`), so one spec file drives any env. It replaces
+//! direct `Serial::from_spec` / `Multiprocessing::from_spec` calls as
+//! the public construction path — [`VecSpec::build`] resolves the spec
+//! against an env count into a validated [`VecConfig`] and returns the
+//! boxed [`VecEnv`]; the `from_spec` constructors remain as the typed
+//! low-level layer underneath.
+
+use super::{Multiprocessing, Serial, VecConfig, VecEnv};
+use crate::util::json::{self, Json};
+use crate::wrappers::EnvSpec;
+use anyhow::{bail, ensure, Result};
+use std::fmt;
+
+/// Envs returned per `recv`, relative to the env count resolved at
+/// build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecBatch {
+    /// `N == M`: every env each step — the synchronous path.
+    Full,
+    /// `N == M / 2`: EnvPool double-buffering — `recv` returns the first
+    /// half of the envs to finish while the other half simulates.
+    Half,
+    /// An explicit env count per batch. Must be a multiple of the
+    /// resolved envs-per-worker.
+    Envs(usize),
+}
+
+/// Declarative vectorization: which backend/code path simulates the
+/// envs. Plain data — cloneable, comparable, serializable — so it can
+/// sit in a [`RunSpec`](crate::runspec::RunSpec) file, a checkpoint, or
+/// the autotune cache.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VecSpec {
+    /// The single-threaded reference backend.
+    Serial,
+    /// The multi-worker shared-memory backend ("mt"). `workers` is a
+    /// ceiling: like the pre-VecSpec trainer, resolution picks the
+    /// largest count `<= workers` that divides the env total (and keeps
+    /// the batch claimable at worker granularity), so one spec file
+    /// works across envs with different `batch_roll`s.
+    Mt {
+        workers: usize,
+        batch: VecBatch,
+        /// Opt into the zero-copy band-rotation path (`Mode::ZeroCopy`)
+        /// when the batch spans multiple workers.
+        zero_copy: bool,
+        /// Busy-wait iterations before yielding the core.
+        spin_budget: u32,
+    },
+    /// Resolve via the autotune benchmark, cached under the run dir —
+    /// see [`crate::vector::autotune::resolve_auto`]. Must be resolved
+    /// to one of the concrete variants before [`VecSpec::build`].
+    Auto,
+}
+
+impl Default for VecSpec {
+    /// Matches `TrainConfig::default()` (2 workers, sync batch).
+    fn default() -> Self {
+        VecSpec::mt(2)
+    }
+}
+
+impl VecSpec {
+    /// `Mt` with the default batch (full), no zero-copy, default spin.
+    pub fn mt(workers: usize) -> Self {
+        VecSpec::Mt {
+            workers,
+            batch: VecBatch::Full,
+            zero_copy: false,
+            spin_budget: VecConfig::default().spin_budget,
+        }
+    }
+
+    /// `Mt` with EnvPool half-batching (`M = 2N`).
+    pub fn pooled(workers: usize) -> Self {
+        VecSpec::Mt {
+            workers,
+            batch: VecBatch::Half,
+            zero_copy: false,
+            spin_budget: VecConfig::default().spin_budget,
+        }
+    }
+
+    pub fn is_auto(&self) -> bool {
+        matches!(self, VecSpec::Auto)
+    }
+
+    /// The legacy mapping from the pre-VecSpec `TrainConfig` knobs
+    /// (`num_workers`, `pool`): `num_workers == 0` selected the serial
+    /// backend, otherwise multiprocessing with a full (or half, when
+    /// pooling) batch.
+    pub fn from_workers_pool(num_workers: usize, pool: bool) -> Self {
+        if num_workers == 0 {
+            VecSpec::Serial
+        } else if pool {
+            VecSpec::pooled(num_workers)
+        } else {
+            VecSpec::mt(num_workers)
+        }
+    }
+
+    /// Resolve against a concrete env count into a validated
+    /// [`VecConfig`]. `seed` becomes `VecConfig::seed` (derive it from
+    /// the run root via [`crate::util::seed::split`]).
+    pub fn resolve(&self, num_envs: usize, seed: u64) -> Result<VecConfig> {
+        ensure!(num_envs > 0, "vec: cannot vectorize 0 envs");
+        let cfg = match self {
+            VecSpec::Auto => bail!(
+                "vec = \"auto\" must be resolved (via the autotune cache — \
+                 RunSpec::build does this) before constructing a vectorizer"
+            ),
+            VecSpec::Serial => VecConfig {
+                num_envs,
+                num_workers: 1,
+                batch_size: num_envs,
+                seed,
+                ..Default::default()
+            },
+            VecSpec::Mt {
+                workers,
+                batch,
+                zero_copy,
+                spin_budget,
+            } => {
+                ensure!(*workers >= 1, "vec.workers must be >= 1 (got {workers})");
+                let want_half = matches!(batch, VecBatch::Half);
+                let workers = pick_workers(num_envs, *workers, want_half);
+                let batch_size = match batch {
+                    VecBatch::Full => num_envs,
+                    VecBatch::Half => {
+                        ensure!(
+                            num_envs >= 2 && num_envs % 2 == 0,
+                            "vec.batch = \"half\" needs an even env count, got {num_envs}"
+                        );
+                        num_envs / 2
+                    }
+                    VecBatch::Envs(n) => *n,
+                };
+                VecConfig {
+                    num_envs,
+                    num_workers: workers,
+                    batch_size,
+                    zero_copy: *zero_copy,
+                    spin_budget: *spin_budget,
+                    seed,
+                }
+            }
+        };
+        // mode() carries the full divisibility story; surface its error
+        // under the vec.* namespace so spec files fail actionably.
+        cfg.mode()
+            .map_err(|e| anyhow::anyhow!("vec spec '{self}' invalid for {num_envs} envs: {e}"))?;
+        Ok(cfg)
+    }
+
+    /// This spec with `auto` resolved through the autotune cache under
+    /// `run_dir` (concrete specs pass through unchanged) — the single
+    /// resolution point shared by `Trainer::build` and
+    /// `RunSpec::build_venv`, so both paths use the same cache and
+    /// benchmark budget.
+    pub fn resolved(
+        &self,
+        env: &EnvSpec,
+        num_envs: usize,
+        run_dir: Option<&str>,
+    ) -> Result<VecSpec> {
+        if self.is_auto() {
+            super::autotune::resolve_auto(
+                env,
+                num_envs,
+                run_dir,
+                super::autotune::AUTO_SECS_PER_CANDIDATE,
+            )
+        } else {
+            Ok(self.clone())
+        }
+    }
+
+    /// Build the vectorized env — the public construction path that
+    /// replaces direct `Serial::from_spec` / `Multiprocessing::from_spec`
+    /// calls.
+    pub fn build(&self, env: &EnvSpec, num_envs: usize, seed: u64) -> Result<Box<dyn VecEnv>> {
+        let cfg = self.resolve(num_envs, seed)?;
+        Ok(match self {
+            VecSpec::Serial => Box::new(Serial::from_spec(env, cfg)?),
+            VecSpec::Mt { .. } => Box::new(Multiprocessing::from_spec(env, cfg)?),
+            VecSpec::Auto => unreachable!("resolve() rejects Auto"),
+        })
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Flat `vec.*` key/value pairs (the RunSpec TOML/override grammar).
+    pub fn to_flat_pairs(&self) -> Vec<(&'static str, String)> {
+        match self {
+            VecSpec::Serial => vec![("mode", "serial".into())],
+            VecSpec::Auto => vec![("mode", "auto".into())],
+            VecSpec::Mt {
+                workers,
+                batch,
+                zero_copy,
+                spin_budget,
+            } => vec![
+                ("mode", "mt".into()),
+                ("workers", workers.to_string()),
+                (
+                    "batch",
+                    match batch {
+                        VecBatch::Full => "full".into(),
+                        VecBatch::Half => "half".into(),
+                        VecBatch::Envs(n) => n.to_string(),
+                    },
+                ),
+                ("zero_copy", zero_copy.to_string()),
+                ("spin_budget", spin_budget.to_string()),
+            ],
+        }
+    }
+
+    /// Machine-readable form (what `puffer autotune` emits and the
+    /// `vec = "auto"` cache stores).
+    pub fn to_json(&self) -> Json {
+        json::obj(
+            self.to_flat_pairs()
+                .into_iter()
+                .map(|(k, v)| (k, json::s(&v)))
+                .collect(),
+        )
+    }
+
+    /// Parse the JSON emitted by [`to_json`](Self::to_json). Strict: a
+    /// missing `mode` or a wrongly-typed field is an error, never a
+    /// silent default — a hand-edited or corrupt autotune cache must
+    /// fail loudly, not resolve to an unintended vectorizer.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<Option<String>> {
+            match j.get(k) {
+                Json::Null => Ok(None),
+                v => match v.as_str() {
+                    Some(s) => Ok(Some(s.to_string())),
+                    None => bail!(
+                        "vec spec JSON: field '{k}' must be a string (got {})",
+                        v.dump()
+                    ),
+                },
+            }
+        };
+        let mode = get("mode")?
+            .ok_or_else(|| anyhow::anyhow!("vec spec JSON: missing 'mode' field"))?;
+        let (w, b, z, s) = (
+            get("workers")?,
+            get("batch")?,
+            get("zero_copy")?,
+            get("spin_budget")?,
+        );
+        Self::from_parts(&mode, w.as_deref(), b.as_deref(), z.as_deref(), s.as_deref())
+    }
+
+    /// Assemble from the flat `vec.*` key grammar. Any `None` field
+    /// takes the default. Errors name the offending key.
+    pub fn from_parts(
+        mode: &str,
+        workers: Option<&str>,
+        batch: Option<&str>,
+        zero_copy: Option<&str>,
+        spin_budget: Option<&str>,
+    ) -> Result<Self> {
+        match mode {
+            "serial" | "auto" => {
+                for (k, v) in [
+                    ("vec.workers", workers),
+                    ("vec.batch", batch),
+                    ("vec.zero_copy", zero_copy),
+                    ("vec.spin_budget", spin_budget),
+                ] {
+                    ensure!(
+                        v.is_none(),
+                        "config key '{k}': only vec.mode = \"mt\" takes mt knobs \
+                         (mode is \"{mode}\")"
+                    );
+                }
+                Ok(if mode == "serial" {
+                    VecSpec::Serial
+                } else {
+                    VecSpec::Auto
+                })
+            }
+            "mt" => {
+                let d = match VecSpec::default() {
+                    VecSpec::Mt {
+                        workers,
+                        zero_copy,
+                        spin_budget,
+                        ..
+                    } => (workers, zero_copy, spin_budget),
+                    _ => unreachable!(),
+                };
+                let workers = match workers {
+                    None => d.0,
+                    Some(v) => match v.parse::<usize>() {
+                        Ok(w) if w >= 1 => w,
+                        _ => bail!("config key 'vec.workers': expected an integer >= 1, got '{v}'"),
+                    },
+                };
+                let batch = match batch {
+                    None | Some("full") => VecBatch::Full,
+                    Some("half") => VecBatch::Half,
+                    Some(v) => match v.parse::<usize>() {
+                        Ok(n) if n >= 1 => VecBatch::Envs(n),
+                        _ => bail!(
+                            "config key 'vec.batch': expected \"full\", \"half\", or an \
+                             integer >= 1, got '{v}'"
+                        ),
+                    },
+                };
+                let zero_copy = match zero_copy {
+                    None => d.1,
+                    Some(v) => v.parse::<bool>().map_err(|_| {
+                        anyhow::anyhow!("config key 'vec.zero_copy': cannot parse '{v}' as bool")
+                    })?,
+                };
+                let spin_budget = match spin_budget {
+                    None => d.2,
+                    Some(v) => v.parse::<u32>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "config key 'vec.spin_budget': expected a non-negative integer, got '{v}'"
+                        )
+                    })?,
+                };
+                Ok(VecSpec::Mt {
+                    workers,
+                    batch,
+                    zero_copy,
+                    spin_budget,
+                })
+            }
+            other => bail!(
+                "config key 'vec.mode': expected \"serial\", \"mt\", or \"auto\", got '{other}'"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for VecSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VecSpec::Serial => write!(f, "serial"),
+            VecSpec::Auto => write!(f, "auto"),
+            VecSpec::Mt {
+                workers,
+                batch,
+                zero_copy,
+                spin_budget,
+            } => {
+                write!(f, "mt(workers={workers}, batch=")?;
+                match batch {
+                    VecBatch::Full => write!(f, "full")?,
+                    VecBatch::Half => write!(f, "half")?,
+                    VecBatch::Envs(n) => write!(f, "{n}")?,
+                }
+                write!(f, ", zero_copy={zero_copy}, spin_budget={spin_budget})")
+            }
+        }
+    }
+}
+
+/// Pick a worker count `<= want` that divides `num_envs` (and keeps the
+/// half batch a multiple of envs-per-worker when pooling). This is the
+/// adjustment the trainer has always applied, now owned by the spec.
+pub(crate) fn pick_workers(num_envs: usize, want: usize, pool: bool) -> usize {
+    let mut best = 1;
+    for w in 1..=want.min(num_envs) {
+        if num_envs % w != 0 {
+            continue;
+        }
+        let epw = num_envs / w;
+        if pool && (num_envs / 2) % epw != 0 {
+            continue;
+        }
+        best = w;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_workers_respects_divisibility() {
+        assert_eq!(pick_workers(32, 4, false), 4);
+        assert_eq!(pick_workers(32, 4, true), 4);
+        assert_eq!(pick_workers(30, 4, false), 3);
+        assert_eq!(pick_workers(7, 4, false), 1);
+        // pool: batch 16, envs 32, w=4 → epw 8, 16 % 8 == 0 ✓
+        assert_eq!(pick_workers(32, 3, true), 2);
+    }
+
+    #[test]
+    fn resolve_matches_the_legacy_trainer_mapping() {
+        // num_workers == 0 → serial backend, batch = all.
+        let c = VecSpec::from_workers_pool(0, false).resolve(8, 7).unwrap();
+        assert_eq!((c.num_workers, c.batch_size, c.seed), (1, 8, 7));
+        // num_workers >= 1 → mt sync.
+        let c = VecSpec::from_workers_pool(2, false).resolve(8, 7).unwrap();
+        assert_eq!((c.num_workers, c.batch_size), (2, 8));
+        // pool → half batch.
+        let c = VecSpec::from_workers_pool(2, true).resolve(8, 7).unwrap();
+        assert_eq!((c.num_workers, c.batch_size), (2, 4));
+        // Worker ceiling adjusts downward exactly like pick_workers.
+        let c = VecSpec::mt(4).resolve(30, 0).unwrap();
+        assert_eq!(c.num_workers, 3);
+    }
+
+    #[test]
+    fn resolve_validates_and_names_the_namespace() {
+        let err = VecSpec::Auto.resolve(8, 0).unwrap_err().to_string();
+        assert!(err.contains("auto"), "{err}");
+        // Explicit batch that breaks worker granularity.
+        let bad = VecSpec::Mt {
+            workers: 4,
+            batch: VecBatch::Envs(3),
+            zero_copy: false,
+            spin_budget: 64,
+        };
+        let err = bad.resolve(8, 0).unwrap_err().to_string();
+        assert!(err.contains("vec spec"), "{err}");
+        // Half with an odd env count.
+        let err = VecSpec::pooled(2).resolve(7, 0).unwrap_err().to_string();
+        assert!(err.contains("half"), "{err}");
+    }
+
+    #[test]
+    fn flat_pairs_round_trip_through_from_parts() {
+        let specs = [
+            VecSpec::Serial,
+            VecSpec::Auto,
+            VecSpec::mt(4),
+            VecSpec::pooled(8),
+            VecSpec::Mt {
+                workers: 4,
+                batch: VecBatch::Envs(16),
+                zero_copy: true,
+                spin_budget: 128,
+            },
+        ];
+        for spec in specs {
+            let pairs = spec.to_flat_pairs();
+            let get = |k: &str| {
+                pairs
+                    .iter()
+                    .find(|(pk, _)| *pk == k)
+                    .map(|(_, v)| v.as_str())
+            };
+            let back = VecSpec::from_parts(
+                get("mode").unwrap(),
+                get("workers"),
+                get("batch"),
+                get("zero_copy"),
+                get("spin_budget"),
+            )
+            .unwrap();
+            assert_eq!(back, spec);
+            // JSON round trip too.
+            assert_eq!(VecSpec::from_json(&spec.to_json()).unwrap(), spec);
+        }
+        // Corrupt cache JSON fails loudly instead of defaulting.
+        let bad = Json::parse(r#"{"mode":"mt","workers":8}"#).unwrap();
+        let err = VecSpec::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("workers"), "{err}");
+        let empty = Json::parse("{}").unwrap();
+        let err = VecSpec::from_json(&empty).unwrap_err().to_string();
+        assert!(err.contains("mode"), "{err}");
+    }
+
+    #[test]
+    fn from_parts_errors_name_the_key() {
+        for (args, needle) in [
+            (("mt", Some("0"), None, None, None), "vec.workers"),
+            (("mt", None, Some("0"), None, None), "vec.batch"),
+            (("mt", None, None, Some("maybe"), None), "vec.zero_copy"),
+            (("mt", None, None, None, Some("-1")), "vec.spin_budget"),
+            (("warp", None, None, None, None), "vec.mode"),
+            (("serial", Some("4"), None, None, None), "vec.workers"),
+        ] {
+            let (mode, w, b, z, s) = args;
+            let err = VecSpec::from_parts(mode, w, b, z, s).unwrap_err().to_string();
+            assert!(err.contains(needle), "{needle}: {err}");
+        }
+    }
+
+    #[test]
+    fn build_constructs_both_backends() {
+        let env = EnvSpec::new("ocean/squared");
+        let mut v = VecSpec::Serial.build(&env, 2, 0).unwrap();
+        assert_eq!(v.num_envs(), 2);
+        v.async_reset(0);
+        let b = v.recv().unwrap();
+        assert_eq!(b.env_ids.len(), 2);
+        let mut v = VecSpec::mt(2).build(&env, 4, 0).unwrap();
+        assert_eq!((v.num_envs(), v.batch_size()), (4, 4));
+        v.async_reset(0);
+        let _ = v.recv().unwrap();
+    }
+}

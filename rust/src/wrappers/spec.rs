@@ -194,6 +194,34 @@ impl EnvSpec {
     }
 }
 
+/// Specs compare by name + wrapper chain. Custom-base specs compare by
+/// factory identity (same `Arc`): two independently-constructed custom
+/// specs are never equal even under the same display name, because the
+/// name does not determine the env they build.
+impl PartialEq for EnvSpec {
+    fn eq(&self, other: &Self) -> bool {
+        let base_eq = match (&self.base, &other.base) {
+            (None, None) => true,
+            // Compare the data address only (thin pointers): vtable
+            // addresses are not stable across codegen units.
+            (Some(a), Some(b)) => {
+                std::ptr::eq(Arc::as_ptr(a) as *const (), Arc::as_ptr(b) as *const ())
+            }
+            _ => false,
+        };
+        base_eq && self.name == other.name && self.wrappers == other.wrappers
+    }
+}
+
+impl EnvSpec {
+    /// True when this spec builds a first-party env by name (no custom
+    /// factory) — the only form a [`RunSpec`](crate::runspec::RunSpec)
+    /// file can express.
+    pub fn is_named(&self) -> bool {
+        self.base.is_none()
+    }
+}
+
 impl fmt::Debug for EnvSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("EnvSpec")
