@@ -1,4 +1,4 @@
-.PHONY: artifacts fixtures test bench bench-all
+.PHONY: artifacts fixtures test bench bench-all loom miri tsan lint
 
 # AOT-lower every env spec to HLO text + manifest (needed only for the
 # `pjrt` feature; the default native backend needs nothing).
@@ -12,6 +12,39 @@ fixtures:
 # Tier-1 verification.
 test:
 	cargo build --release && cargo test -q
+
+# Exhaustive model checking of the cross-thread protocols: the
+# crate::sync facade swaps to loom's instrumented primitives under
+# --cfg loom, and tests/loom_models.rs explores every interleaving of
+# the slab handoff, shutdown, snapshot, rotation, and reset-seed
+# protocols (see rust/CONCURRENCY.md). Release profile: loom's state
+# exploration is CPU-bound, and the debug-only slab sentinel must stay
+# out of the modeled state space.
+loom:
+	RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+		cargo test --release -p pufferlib --test loom_models
+
+# Miri over the unsafe-adjacent lib tests (slab windows + sentinel,
+# queue, snapshot): undefined behavior (aliasing, leaks, invalid
+# reads) fails the lane. Scoped — full-crate Miri is far too slow.
+miri:
+	cargo +nightly miri test -p pufferlib --lib -- \
+		sync:: vector::shared policy::snapshot
+
+# ThreadSanitizer over the integration suites that actually thread:
+# the pipelined trainer and the vectorizer semantics. Needs nightly +
+# rust-src (build-std instruments std too).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+		cargo +nightly test -p pufferlib -Zbuild-std \
+		--target x86_64-unknown-linux-gnu \
+		--test pipeline --test vector_semantics
+
+# Repo-invariant lint floor (xtask/src/main.rs): ordering comments on
+# atomics, PANIC-justified unwrap/expect, allocation-free wrapper hot
+# paths, forbid(unsafe_code) coverage.
+lint:
+	cargo xtask lint
 
 # Vector throughput bench (paper Table 2 + the W1 wrapper-overhead
 # cell), the pipelined-vs-serial trainer bench (P2), the per-

@@ -62,6 +62,7 @@ impl PolicyBackend for PjrtBackend {
         );
         Ok(bytes
             .chunks_exact(4)
+            // PANIC: chunks_exact(4) yields exactly 4-byte chunks.
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }

@@ -11,6 +11,9 @@
 //! with an error naming the key — a typo'd `--train.totl_steps=1000`
 //! fails loudly instead of silently training with the default.
 
+// Parsing only: no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
 mod toml;
 mod yaml;
 

@@ -18,6 +18,10 @@
 //!   through [`EnvSpec`](crate::wrappers::EnvSpec) (see
 //!   [`crate::wrappers`]), keeping this layer a pure flattening bridge.
 
+// Emulation packs/unpacks bytes through safe slice APIs only
+// (CONCURRENCY.md — keep the unsafe surface in vector/).
+#![forbid(unsafe_code)]
+
 mod flat;
 mod multi;
 mod single;

@@ -33,6 +33,7 @@ impl<E: StructuredMultiEnv> PufferMultiEnv<E> {
         let layout = obs_space.layout();
         let action_dims = act_space
             .action_dims()
+            // PANIC: construction-time validation — continuous leaves are rejected here, loudly.
             .expect("PufferMultiEnv: continuous action leaves unsupported");
         let max_agents = env.max_agents();
         assert!(max_agents > 0, "max_agents must be positive");

@@ -100,6 +100,7 @@ impl StructuredEnv for Breakout {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let a = action.as_discrete().expect("Breakout: Discrete action");
         match a {
             0 => {}

@@ -67,6 +67,7 @@ impl StructuredEnv for CartPole {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let a = action.as_discrete().expect("CartPole: Discrete action");
         let force = if a == 1 { FORCE_MAG } else { -FORCE_MAG };
         let [x, x_dot, theta, theta_dot] = self.state;

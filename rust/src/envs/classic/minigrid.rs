@@ -133,6 +133,7 @@ impl StructuredEnv for MiniGrid {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let a = action.as_discrete().expect("MiniGrid: Discrete action");
         match a {
             0 => self.dir = (self.dir + 3) % 4,

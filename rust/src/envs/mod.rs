@@ -18,6 +18,10 @@
 //! and wrap them with [`PufferEnv`](crate::emulation::PufferEnv) directly
 //! (see `examples/custom_env.rs`).
 
+// Environments are pure computation over their own state: nothing here
+// may need unsafe (CONCURRENCY.md — keep the unsafe surface in vector/).
+#![forbid(unsafe_code)]
+
 pub mod classic;
 pub mod ocean;
 pub mod profile;

@@ -51,6 +51,7 @@ impl StructuredEnv for Bandit {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let arm = action.as_discrete().expect("Bandit: Discrete action") as usize;
         assert!(arm < self.probs.len(), "Bandit: arm {arm} out of range");
         let reward = if self.rng.chance(self.probs[arm]) {

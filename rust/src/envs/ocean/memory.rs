@@ -68,6 +68,7 @@ impl StructuredEnv for Memory {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let a = action.as_discrete().expect("Memory: Discrete action");
         let recall_start = self.len + self.delay;
         let mut reward = 0.0;

@@ -56,6 +56,7 @@ impl StructuredMultiEnv for Multiagent {
         self.t += 1;
         let mut agents = Vec::with_capacity(2);
         for &(id, ref a) in actions {
+            // PANIC: emulation decodes actions against this env's declared Discrete space.
             let a = a.as_discrete().expect("Multiagent: Discrete action");
             // Agent `id` must play action `id`.
             let reward = if a == id as i64 { 1.0 } else { 0.0 };

@@ -63,6 +63,7 @@ impl StructuredEnv for Password {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let bit = action.as_discrete().expect("Password: Discrete action");
         assert!((0..2).contains(&bit), "Password: bit {bit} out of range");
         self.guess.push(bit);

@@ -81,10 +81,12 @@ impl StructuredEnv for SpacesEnv {
         let parity = action
             .field("parity")
             .and_then(Value::as_discrete)
+            // PANIC: emulation decodes actions against this env's declared space tree.
             .expect("SpacesEnv: action.parity");
         let mirror = action
             .field("mirror")
             .and_then(Value::as_discrete)
+            // PANIC: emulation decodes actions against this env's declared space tree.
             .expect("SpacesEnv: action.mirror");
 
         let mut reward = 0.0;

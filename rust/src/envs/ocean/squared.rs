@@ -108,6 +108,7 @@ impl StructuredEnv for Squared {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let a = action.as_discrete().expect("Squared: Discrete action");
         let n = self.n as i32;
         let (dx, dy) = match a {

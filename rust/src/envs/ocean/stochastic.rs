@@ -53,6 +53,7 @@ impl StructuredEnv for Stochastic {
     }
 
     fn step(&mut self, action: &Value) -> (Value, f32, bool, bool, Info) {
+        // PANIC: emulation decodes actions against this env's declared Discrete space.
         let a = action.as_discrete().expect("Stochastic: Discrete action");
         if a == 0 {
             self.count0 += 1;

@@ -182,6 +182,16 @@
 //! exact serial loop (bit-identical params; pinned by
 //! `tests/pipeline.rs`), so results stay comparable when you turn the
 //! knobs off.
+//!
+//! ## Concurrency correctness
+//!
+//! Every cross-thread protocol (slab handoff, parameter snapshots,
+//! buffer rotation, shutdown/reset delivery) is written against the
+//! [`sync`] facade, which swaps to [loom](https://docs.rs/loom)'s
+//! model-checked primitives under `--cfg loom` so
+//! `rust/tests/loom_models.rs` can exhaustively explore interleavings.
+//! The protocol contracts, memory-ordering audit, and rules for new
+//! `unsafe`/atomics live in `rust/CONCURRENCY.md`.
 
 pub mod backend;
 pub mod config;
@@ -191,6 +201,7 @@ pub mod policy;
 pub mod runspec;
 pub mod runtime;
 pub mod spaces;
+pub mod sync;
 pub mod train;
 pub mod util;
 pub mod vector;

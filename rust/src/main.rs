@@ -515,6 +515,7 @@ fn cmd_eval(args: &[String]) -> Result<()> {
              were both given — pass one or the other"
         );
         reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+        // PANIC: positional_is_ckpt implies a first positional exists.
         let path = positional.first().unwrap();
         let ck = Checkpoint::load(path).context("loading checkpoint")?;
         let json = ck.run_spec_json.as_deref().with_context(|| {

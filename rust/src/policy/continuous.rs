@@ -61,6 +61,7 @@ impl QuantizedActions {
     /// partner of [`dequantize`](Self::dequantize); used by tests and by
     /// imitation-style pipelines).
     pub fn quantize(&self, v: &Value) -> Vec<i32> {
+        // PANIC: quantize's contract — callers hand the env's continuous (F32) action value.
         let xs = v.as_f32s().expect("continuous action must be F32");
         debug_assert_eq!(xs.len(), self.dims);
         let step = (self.high - self.low) / (self.bins as f32 - 1.0);

@@ -6,6 +6,10 @@
 //! state-reshaping and reset-on-done logic that the paper calls the most
 //! common source of hard-to-diagnose bugs).
 
+// Policy math and snapshots go through safe primitives only
+// (CONCURRENCY.md — keep the unsafe surface in vector/).
+#![forbid(unsafe_code)]
+
 pub mod arch;
 pub mod continuous;
 pub mod snapshot;
@@ -186,6 +190,7 @@ impl Policy {
             let arg = seg
                 .iter()
                 .enumerate()
+                // PANIC: act_dims entries are > 0, so the segment is non-empty and logits are finite.
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .unwrap()
                 .0;

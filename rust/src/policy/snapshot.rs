@@ -9,8 +9,13 @@
 //! practical purposes (one mutex-guarded pointer swap; the parameter
 //! copy happens outside the lock) and a collector mid-segment keeps its
 //! already-acquired version untouched.
+//!
+//! Built on the [`crate::sync`] facade: the
+//! `snapshot_is_never_torn_and_versions_are_monotone` model in
+//! `rust/tests/loom_models.rs` checks every publish/acquire interleaving
+//! for tearing and version regression.
 
-use std::sync::{Arc, Mutex};
+use crate::sync::{lock_unpoisoned, Arc, Mutex};
 
 /// A published (version, params) pair shared between the learner
 /// (publisher) and collector (consumer).
@@ -30,7 +35,7 @@ impl ParamSnapshot {
     /// stays free to mutate). Returns the new version number.
     pub fn publish(&self, params: &[f32]) -> u64 {
         let fresh = Arc::new(params.to_vec());
-        let mut slot = self.slot.lock().expect("snapshot lock poisoned");
+        let mut slot = lock_unpoisoned(&self.slot);
         slot.0 += 1;
         slot.1 = fresh;
         slot.0
@@ -40,12 +45,12 @@ impl ParamSnapshot {
     /// alive even if newer versions are published while the caller uses
     /// it.
     pub fn acquire(&self) -> (u64, Arc<Vec<f32>>) {
-        let slot = self.slot.lock().expect("snapshot lock poisoned");
+        let slot = lock_unpoisoned(&self.slot);
         (slot.0, slot.1.clone())
     }
 
     pub fn version(&self) -> u64 {
-        self.slot.lock().expect("snapshot lock poisoned").0
+        lock_unpoisoned(&self.slot).0
     }
 }
 

@@ -55,6 +55,9 @@
 //! by `puffer sweep` across a worker pool, each with its own metrics
 //! directory.
 
+// Declarative plumbing: no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
 use crate::config::{self, FlatConfig};
 use crate::envs;
 use crate::policy::{PolicySpec, Recurrence};
@@ -286,6 +289,7 @@ impl RunSpec {
         );
         let grid = arrays
             .iter()
+            // PANIC: arrays keys are collected with the 'grid.' prefix present.
             .map(|(k, v)| (k.strip_prefix("grid.").unwrap().to_string(), v.clone()))
             .collect();
         let mut spec = RunSpec {
@@ -417,6 +421,7 @@ impl RunSpec {
                 let body: Vec<String> = values.iter().map(|v| config::toml_value(v)).collect();
                 out.push_str(&format!(
                     "\"{}\" = [{}]\n",
+                    // PANIC: arrays keys are collected with the 'grid.' prefix present.
                     k.strip_prefix("grid.").unwrap(),
                     body.join(", ")
                 ));
@@ -431,6 +436,7 @@ impl RunSpec {
     pub fn to_json(&self) -> Json {
         let (flat, arrays) = self
             .to_flat()
+            // PANIC: documented contract — to_json panics on unserializable specs.
             .expect("unserializable RunSpec (custom env or non-canonical chain)");
         let mut root = BTreeMap::new();
         for (k, v) in &flat {
@@ -637,6 +643,9 @@ pub fn run_sweep(
             let tx = tx.clone();
             let next = &next;
             s.spawn(move || loop {
+                // ordering: Relaxed — a pure work-stealing counter; the
+                // claimed index is the only data, and fetch_add's
+                // atomicity alone guarantees each index is claimed once.
                 let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= children.len() {
                     break;
@@ -664,6 +673,7 @@ pub fn run_sweep(
             outcomes[i] = Some(outcome);
         }
     });
+    // PANIC: the scope joined every worker; each index was reported exactly once.
     Ok(outcomes.into_iter().map(|o| o.expect("all children ran")).collect())
 }
 

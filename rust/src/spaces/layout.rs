@@ -242,6 +242,7 @@ impl StructLayout {
             Space::Discrete(_) => {
                 let f = &self.fields[*idx];
                 *idx += 1;
+                // PANIC: 4-byte slice by construction — try_into::<[u8; 4]> cannot fail.
                 let x = i32::from_le_bytes(row[f.byte_offset..f.byte_offset + 4].try_into().unwrap());
                 Value::Discrete(x as i64)
             }
@@ -251,6 +252,7 @@ impl StructLayout {
                 let xs = (0..nvec.len())
                     .map(|i| {
                         let o = f.byte_offset + 4 * i;
+                        // PANIC: 4-byte slice by construction — try_into::<[u8; 4]> cannot fail.
                         i32::from_le_bytes(row[o..o + 4].try_into().unwrap()) as i64
                     })
                     .collect();
@@ -263,6 +265,7 @@ impl StructLayout {
                     Dtype::F32 => Value::F32(
                         row[f.byte_offset..f.byte_offset + 4 * f.count]
                             .chunks_exact(4)
+                            // PANIC: chunks_exact(4) yields exactly 4-byte chunks.
                             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                             .collect(),
                     ),
@@ -272,6 +275,7 @@ impl StructLayout {
                     Dtype::I32 => Value::I32(
                         row[f.byte_offset..f.byte_offset + 4 * f.count]
                             .chunks_exact(4)
+                            // PANIC: chunks_exact(4) yields exactly 4-byte chunks.
                             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                             .collect(),
                     ),
@@ -303,6 +307,7 @@ impl StructLayout {
                 Dtype::F32 => {
                     let src = &row[f.byte_offset..f.byte_offset + 4 * f.count];
                     for (o, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+                        // PANIC: chunks_exact(4) yields exactly 4-byte chunks.
                         *o = f32::from_le_bytes(c.try_into().unwrap());
                     }
                 }
@@ -315,6 +320,7 @@ impl StructLayout {
                 Dtype::I32 => {
                     let src = &row[f.byte_offset..f.byte_offset + 4 * f.count];
                     for (o, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+                        // PANIC: chunks_exact(4) yields exactly 4-byte chunks.
                         *o = i32::from_le_bytes(c.try_into().unwrap()) as f32;
                     }
                 }

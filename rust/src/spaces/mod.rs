@@ -10,6 +10,10 @@
 //! byte range of a flat row buffer, plus an f32 view used when handing
 //! observations to the policy.
 
+// Layout math is bounds-checked slice indexing throughout — no unsafe
+// (CONCURRENCY.md — keep the unsafe surface in vector/).
+#![forbid(unsafe_code)]
+
 mod layout;
 mod value;
 

@@ -1,0 +1,224 @@
+//! A small closable blocking queue (Mutex + Condvar) — the transport of
+//! the trainer's rotating-buffer pipeline.
+//!
+//! `std::sync::mpsc` would do the same job, but it cannot be swapped for
+//! loom's doubles, which would leave the collector↔learner handover —
+//! precisely the protocol whose hangup/backpressure behavior decides
+//! whether shutdown can deadlock — outside the model-checked surface.
+//! This queue is built purely on the [`crate::sync`] facade, so the
+//! *production* rotation code runs under loom verbatim
+//! (`tests/loom_models.rs::rotation_*`).
+//!
+//! Semantics (mirrors the `mpsc` subset the trainer used):
+//!
+//! - multi-producer ([`Sender`] is `Clone`), single-consumer;
+//! - optional capacity: [`Sender::send`] blocks while full;
+//! - hangup is a value, not a panic: `send` returns the item back once
+//!   the [`Receiver`] is dropped, `recv` returns `None` once the queue
+//!   is empty and every `Sender` is dropped. Both sides use that as
+//!   their exit signal, so either side can abandon the pipeline (learner
+//!   error, collector quota reached) without stranding the other.
+
+use super::{lock_unpoisoned, Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+
+struct State<T> {
+    items: VecDeque<T>,
+    /// `usize::MAX` = unbounded.
+    cap: usize,
+    senders: usize,
+    rx_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    /// One condvar for both directions: senders wait for space or
+    /// rx-drop, the receiver waits for items or sender-drop. Cheap at
+    /// this scale (2 threads, segment-sized items) and keeps the loom
+    /// state space small.
+    cond: Condvar,
+}
+
+/// Create a queue. `cap = None` is unbounded; `Some(n)` blocks senders
+/// once `n` items are in flight (the trainer's filled-segment queue uses
+/// `depth + 1`, though the buffer pool itself is the real bound).
+pub fn channel<T>(cap: Option<usize>) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            items: VecDeque::new(),
+            cap: cap.unwrap_or(usize::MAX),
+            senders: 1,
+            rx_alive: true,
+        }),
+        cond: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: shared.clone(),
+        },
+        Receiver { shared },
+    )
+}
+
+/// Producer endpoint. Cloning registers another producer; the receiver
+/// sees hangup only after *all* clones drop.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consumer endpoint (not cloneable: single consumer).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Sender<T> {
+    /// Blocking send. `Err(item)` hands the item back if the receiver
+    /// hung up (now, or while we were blocked on a full queue).
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = lock_unpoisoned(&self.shared.state);
+        loop {
+            if !st.rx_alive {
+                return Err(item);
+            }
+            if st.items.len() < st.cap {
+                st.items.push_back(item);
+                self.shared.cond.notify_all();
+                return Ok(());
+            }
+            st = self
+                .shared
+                .cond
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive. `None` once the queue is drained and every
+    /// sender has dropped.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = lock_unpoisoned(&self.shared.state);
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                // Wake a sender blocked on capacity.
+                self.shared.cond.notify_all();
+                return Some(item);
+            }
+            if st.senders == 0 {
+                return None;
+            }
+            st = self
+                .shared
+                .cond
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        lock_unpoisoned(&self.shared.state).senders += 1;
+        Sender {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = lock_unpoisoned(&self.shared.state);
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.shared.cond.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        lock_unpoisoned(&self.shared.state).rx_alive = false;
+        // Unblock senders parked on a full queue so they see the hangup.
+        self.shared.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_round_trip() {
+        let (tx, rx) = channel::<u32>(None);
+        for v in 0..4 {
+            assert!(tx.send(v).is_ok());
+        }
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), Some(1));
+        drop(tx);
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+        assert_eq!(rx.recv(), None, "drained + senders gone = hangup");
+    }
+
+    #[test]
+    fn send_after_receiver_drop_returns_the_item() {
+        let (tx, rx) = channel::<String>(None);
+        drop(rx);
+        assert_eq!(tx.send("boomerang".into()), Err("boomerang".into()));
+    }
+
+    #[test]
+    fn bounded_send_blocks_until_space_or_hangup() {
+        let (tx, rx) = channel::<u32>(Some(1));
+        assert!(tx.send(1).is_ok());
+        let blocked = thread::spawn(move || tx.send(2));
+        // The blocked sender is released by the recv freeing a slot.
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(blocked.join().expect("sender thread"), Ok(()));
+        assert_eq!(rx.recv(), Some(2));
+    }
+
+    #[test]
+    fn receiver_drop_releases_a_blocked_sender() {
+        let (tx, rx) = channel::<u32>(Some(1));
+        assert!(tx.send(1).is_ok());
+        let blocked = thread::spawn(move || tx.send(2));
+        // Let the sender reach the full-queue wait, then hang up.
+        thread::sleep(std::time::Duration::from_millis(20));
+        drop(rx);
+        assert_eq!(blocked.join().expect("sender thread"), Err(2));
+    }
+
+    #[test]
+    fn clones_keep_the_queue_open() {
+        let (tx, rx) = channel::<u32>(None);
+        let tx2 = tx.clone();
+        drop(tx);
+        assert!(tx2.send(9).is_ok());
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(9));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn cross_thread_stream() {
+        let (tx, rx) = channel::<u64>(Some(2));
+        let producer = thread::spawn(move || {
+            for v in 0..200u64 {
+                if tx.send(v).is_err() {
+                    panic!("receiver died early");
+                }
+            }
+        });
+        let mut expected = 0u64;
+        while let Some(v) = rx.recv() {
+            assert_eq!(v, expected, "FIFO order violated");
+            expected += 1;
+        }
+        assert_eq!(expected, 200);
+        producer.join().expect("producer");
+    }
+}

@@ -98,6 +98,7 @@ impl Checkpoint {
             f.read_exact(&mut bytes)?;
             Ok(bytes
                 .chunks_exact(4)
+                // PANIC: chunks_exact(4) yields exactly 4-byte chunks.
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect())
         };

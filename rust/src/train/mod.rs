@@ -13,6 +13,10 @@
 //! simulation and optimization overlap instead of taking turns. Depth 0
 //! is the serial loop, bit-identical to the pre-pipeline trainer.
 
+// The trainer threads, but through safe primitives only (crate::sync,
+// scoped threads); no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
 mod checkpoint;
 pub mod pipeline;
 mod rollout;

@@ -12,14 +12,18 @@
 //! on both sides is measured (the collector's wait for a free buffer, the
 //! learner's wait for a filled segment) so `env SPS` vs `learner SPS` and
 //! the pipeline balance are observable per run.
+//!
+//! The transport is [`crate::sync::queue`] rather than `std::sync::mpsc`
+//! so the rotation/hangup protocol itself runs under loom — see the
+//! `rotation_*` models in `rust/tests/loom_models.rs`.
 
 use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
 use crate::backend::PolicyBackend;
 use crate::policy::{ParamSnapshot, Policy};
+use crate::sync::queue;
 use crate::util::timer::Timer;
 use crate::vector::VecEnv;
 use anyhow::Result;
-use std::sync::mpsc;
 
 /// One collected rollout segment in flight from collector to learner.
 pub struct Segment {
@@ -51,8 +55,8 @@ pub(crate) fn collector_loop(
     policy: &mut Policy,
     backend: &mut dyn PolicyBackend,
     snapshot: &ParamSnapshot,
-    free_rx: mpsc::Receiver<RolloutBuffer>,
-    filled_tx: mpsc::SyncSender<Result<Segment>>,
+    free_rx: queue::Receiver<RolloutBuffer>,
+    filled_tx: queue::Sender<Result<Segment>>,
     segments_total: u64,
     seed: u64,
 ) {
@@ -63,7 +67,7 @@ pub(crate) fn collector_loop(
 
     for _ in 0..segments_total {
         let wait = Timer::start();
-        let Ok(mut buf) = free_rx.recv() else {
+        let Some(mut buf) = free_rx.recv() else {
             return; // learner dropped its sender (done or errored)
         };
         let stall_s = wait.secs();

@@ -22,6 +22,7 @@ use super::Checkpoint;
 use crate::backend::{AdamState, MinibatchScratch, NativeBackend, PolicyBackend, TrainBatch};
 use crate::policy::{ParamSnapshot, Policy, PolicySpec};
 use crate::runspec::RunSpec;
+use crate::sync::queue;
 use crate::util::rng::Rng;
 use crate::util::seed::SeedPlan;
 use crate::util::timer::{SpsCounter, Timer};
@@ -29,7 +30,6 @@ use crate::vector::{VecEnv, VecSpec};
 use crate::wrappers::{EnvSpec, WrapperSpec};
 use anyhow::Result;
 use std::io::Write as _;
-use std::sync::mpsc;
 
 /// Training configuration (Clean PuffeRL's YAML keys, as a struct; see
 /// [`crate::config`] for the file/CLI layer, and
@@ -537,10 +537,10 @@ impl Trainer {
         // collector rewrites the episode carry before every fill) and
         // re-created after the scope, so peak memory is depth + 1 segment
         // buffers instead of depth + 2.
-        let (free_tx, free_rx) = mpsc::channel::<RolloutBuffer>();
-        let (filled_tx, filled_rx) = mpsc::sync_channel::<Result<Segment>>(depth + 1);
+        let (free_tx, free_rx) = queue::channel::<RolloutBuffer>(None);
+        let (filled_tx, filled_rx) = queue::channel::<Result<Segment>>(Some(depth + 1));
         let lent = std::mem::replace(&mut self.buf, RolloutBuffer::new(0, 0, 0, 0));
-        free_tx.send(lent).expect("free_rx alive");
+        assert!(free_tx.send(lent).is_ok(), "free_rx alive until the scope");
         for _ in 0..depth {
             let buf = RolloutBuffer::new(
                 spec.horizon,
@@ -548,13 +548,8 @@ impl Trainer {
                 spec.obs_dim,
                 spec.act_dims.len(),
             );
-            free_tx.send(buf).expect("free_rx alive");
+            assert!(free_tx.send(buf).is_ok(), "free_rx alive until the scope");
         }
-        // Learner-side endpoints enter the scope closure via take() so
-        // every exit path (success or `?`) drops them there, unblocking a
-        // collector stuck on recv/send before the implicit join.
-        let mut free_tx = Some(free_tx);
-        let mut filled_rx = Some(filled_rx);
 
         let seed = self.seeds.env;
         let mut sps = SpsCounter::new();
@@ -585,8 +580,12 @@ impl Trainer {
         let snapshot_ref = &snapshot;
 
         let scope_result = std::thread::scope(|s| -> Result<()> {
-            let free_tx = free_tx.take().expect("taken once");
-            let filled_rx = filled_rx.take().expect("taken once");
+            // Rebinding moves the learner-side endpoints *into* this
+            // closure, so every exit path (success or `?`) drops them
+            // here — unblocking a collector stuck on recv/send before
+            // the scope's implicit join.
+            let free_tx = free_tx;
+            let filled_rx = filled_rx;
             let _collector = s.spawn(move || {
                 collector_loop(
                     venv_ref,
@@ -603,7 +602,7 @@ impl Trainer {
             let mut segment = 0u64;
             while segment < segments_total {
                 let wait = Timer::start();
-                let msg = filled_rx.recv().map_err(|_| {
+                let msg = filled_rx.recv().ok_or_else(|| {
                     anyhow::anyhow!("collector thread exited before delivering all segments")
                 })?;
                 tel.learner_stall_s += wait.secs();

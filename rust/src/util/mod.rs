@@ -4,6 +4,9 @@
 //! are unavailable, and the implementations here are small, specified, and
 //! tested.
 
+// Pure substrates: no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
 pub mod check;
 pub mod json;
 pub mod rng;

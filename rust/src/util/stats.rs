@@ -95,6 +95,7 @@ impl Welford {
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
     let mut v: Vec<f64> = xs.to_vec();
+    // PANIC: callers pass finite samples (timings/scores); partial_cmp is total here.
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = q / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;

@@ -109,6 +109,7 @@ pub fn autotune(
         }
     }
 
+    // PANIC: sps is steps over a positive duration — finite, never NaN.
     results.sort_by(|a, b| b.sps.partial_cmp(&a.sps).unwrap());
     Ok(results)
 }

@@ -35,7 +35,7 @@ pub mod autotune;
 pub mod baselines;
 mod multiproc;
 mod serial;
-mod shared;
+pub mod shared;
 mod spec;
 
 pub use multiproc::Multiprocessing;

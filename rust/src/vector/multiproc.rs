@@ -14,15 +14,24 @@
 //! | `Async`               | first workers to finish | 1 gather   |
 //! | `AsyncSingleWorker`   | first worker to finish  | 0 (worker region is the batch) |
 //! | `ZeroCopy`            | next band in rotation   | 0 (band region is the batch) |
+//!
+//! The leader↔worker handoff, shutdown, and reset-seed protocols are
+//! documented in `rust/CONCURRENCY.md` and model-checked in
+//! `rust/tests/loom_models.rs` (see [`crate::sync`]).
 
 use super::shared::{Flag, Slab, ACTIONS_READY, OBS_READY, POISONED, RESET, SHUTDOWN};
 use super::{probe_factory, EnvFactory, Mode, StepBatch, VecConfig, VecEnv};
 use crate::emulation::{FlatEnv, Info};
 use crate::spaces::StructLayout;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Arc;
 use crate::wrappers::EnvSpec;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+// The info channel is the documented exception to the crate::sync facade
+// rule (CONCURRENCY.md): fire-and-forget, unbounded, never part of the
+// flag protocol's blocking structure, so it stays std mpsc and outside
+// the loom-modeled surface.
+use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 /// Shared-memory threaded vectorization with EnvPool semantics.
@@ -40,8 +49,10 @@ pub struct Multiprocessing {
     truncs: Arc<Slab<bool>>,
     actions: Arc<Slab<i32>>,
     reset_seed: Arc<AtomicU64>,
-    /// Out-of-band shutdown: a worker mid-step would otherwise overwrite
-    /// a SHUTDOWN flag with OBS_READY and wait forever (lost signal).
+    /// Advisory fast-exit hint for workers. The *authoritative* shutdown
+    /// signal is the SHUTDOWN flag state: a worker's step-completion edge
+    /// is a CAS ([`Flag::complete`]) that loses to a concurrent SHUTDOWN
+    /// store, so the signal can never be overwritten and lost.
     shutdown: Arc<AtomicBool>,
     info_rx: mpsc::Receiver<(usize, Info)>,
     handles: Vec<JoinHandle<()>>,
@@ -50,6 +61,10 @@ pub struct Multiprocessing {
     pending: Vec<usize>,
     env_ids: Vec<usize>,
     awaiting_send: bool,
+    /// True while the leader's `StepBatch` views alias claimed workers'
+    /// slab regions directly (Sync/AsyncSingleWorker/ZeroCopy); drives
+    /// the sentinel hold/release bookkeeping (see [`Slab::hold`]).
+    holding: bool,
     /// Round-robin scan start (Async fairness).
     scan_cursor: usize,
     /// Next band to claim (ZeroCopy rotation).
@@ -99,7 +114,7 @@ impl Multiprocessing {
 
         let factory = Arc::new(factory);
         let epw = cfg.envs_per_worker();
-        let mut handles = Vec::with_capacity(cfg.num_workers);
+        let mut handles: Vec<JoinHandle<()>> = Vec::with_capacity(cfg.num_workers);
         for wid in 0..cfg.num_workers {
             let ctx = WorkerCtx {
                 wid,
@@ -119,12 +134,26 @@ impl Multiprocessing {
                 info_tx: info_tx.clone(),
                 factory: factory.clone(),
             };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("puffer-worker-{wid}"))
-                    .spawn(move || worker_main(ctx))
-                    .expect("spawn worker"),
-            );
+            let spawned = std::thread::Builder::new()
+                .name(format!("puffer-worker-{wid}"))
+                .spawn(move || worker_main(ctx));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Tear down the workers already spawned so the error
+                    // doesn't leak threads parked in Flag::wait forever.
+                    // ordering: Relaxed — advisory hint; the SHUTDOWN
+                    // flag store below is the authoritative signal.
+                    shutdown.store(true, Ordering::Relaxed);
+                    for f in &flags[..wid] {
+                        f.store(SHUTDOWN);
+                    }
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    anyhow::bail!("failed to spawn worker {wid}: {e}");
+                }
+            }
         }
 
         let batch_rows = cfg.batch_size * agents;
@@ -146,6 +175,7 @@ impl Multiprocessing {
             pending: Vec::with_capacity(cfg.num_workers),
             env_ids: Vec::with_capacity(cfg.batch_size),
             awaiting_send: false,
+            holding: false,
             scan_cursor: 0,
             band_cursor: 0,
             g_obs: vec![0; batch_rows * w],
@@ -206,6 +236,21 @@ impl Multiprocessing {
         Ok(())
     }
 
+    /// Register the leader's long-lived `StepBatch` views over
+    /// `[first, first + n)` worker regions with the aliasing sentinel
+    /// (no-op in release builds). Matched by the releases in `send`.
+    fn hold_workers(&mut self, first_wid: usize, n: usize) {
+        let rpw = self.rows_per_worker();
+        let w = self.layout.byte_len();
+        for wid in first_wid..first_wid + n {
+            self.obs.hold(wid * rpw * w, rpw * w);
+            self.rewards.hold(wid * rpw, rpw);
+            self.terms.hold(wid * rpw, rpw);
+            self.truncs.hold(wid * rpw, rpw);
+        }
+        self.holding = true;
+    }
+
     /// Borrowed slices over a contiguous run of workers
     /// `[first, first + n)`.
     fn region_slices(&self, first_wid: usize, n_workers: usize) -> (&[u8], &[f32], &[bool], &[bool]) {
@@ -255,13 +300,25 @@ impl VecEnv for Multiprocessing {
             !self.awaiting_send,
             "async_reset with a batch outstanding; send() first"
         );
-        self.reset_seed.store(seed, Ordering::Release);
+        // Phase 1: quiesce. Every worker must be parked in a leader-owned
+        // state (IDLE at startup, OBS_READY/CLAIMED mid-run, POISONED if
+        // dead) before the new seed is published. Publishing first would
+        // let a worker still processing a *previous* RESET load *this*
+        // seed — back-to-back resets would then mix seed epochs (pinned
+        // by `reset_seed_epochs_never_mix` below and the
+        // `reset_seed_matches_epoch` loom model).
         for f in &self.flags {
-            // Workers are IDLE (startup) or OBS_READY/CLAIMED (mid-run,
-            // nothing outstanding): all leader-owned states.
             f.wait(self.cfg.spin_budget, |s| {
                 s != ACTIONS_READY && s != RESET
             });
+        }
+        // Phase 2: publish the seed, then wake each worker into RESET.
+        // ordering: Relaxed — publication piggybacks on the RESET flag
+        // edge: this store is sequenced before the flag's Release store,
+        // and workers read the seed only after their Acquire load
+        // returns RESET; phase 1 guarantees no worker reads concurrently.
+        self.reset_seed.store(seed, Ordering::Relaxed);
+        for f in &self.flags {
             f.store(RESET);
         }
         self.pending.clear();
@@ -284,6 +341,7 @@ impl VecEnv for Multiprocessing {
                     self.pending.push(wid);
                 }
                 self.set_env_ids(&(0..self.cfg.num_workers).collect::<Vec<_>>());
+                self.hold_workers(0, self.cfg.num_workers);
                 self.awaiting_send = true;
                 let infos = self.drain_infos();
                 let (obs, rewards, terms, truncs) =
@@ -314,12 +372,13 @@ impl VecEnv for Multiprocessing {
                         Some(wid) => break wid,
                         // Nothing ready: let workers run (crucial when
                         // cores are oversubscribed).
-                        None => std::thread::yield_now(),
+                        None => crate::sync::yield_now(),
                     }
                 };
                 self.scan_cursor = (wid + 1) % self.cfg.num_workers;
                 self.pending.push(wid);
                 self.set_env_ids(&[wid]);
+                self.hold_workers(wid, 1);
                 self.awaiting_send = true;
                 let infos = self.drain_infos();
                 let (obs, rewards, terms, truncs) = self.region_slices(wid, 1);
@@ -335,7 +394,9 @@ impl VecEnv for Multiprocessing {
             Mode::Async => {
                 // Claim the first `workers_per_batch` finishers, gather
                 // their regions into one contiguous batch (the single copy
-                // this path pays).
+                // this path pays). The gather reads are transient, so no
+                // sentinel holds: the StepBatch aliases g_* buffers, not
+                // the slabs.
                 let need = self.workers_per_batch();
                 while self.pending.len() < need {
                     self.check_poison()?;
@@ -355,7 +416,7 @@ impl VecEnv for Multiprocessing {
                     }
                     if !progressed {
                         // Let workers run while we wait for finishers.
-                        std::thread::yield_now();
+                        crate::sync::yield_now();
                     }
                 }
                 self.scan_cursor =
@@ -406,6 +467,7 @@ impl VecEnv for Multiprocessing {
                 }
                 self.band_cursor = (band + 1) % n_bands;
                 self.set_env_ids(&(first..first + wpb).collect::<Vec<_>>());
+                self.hold_workers(first, wpb);
                 self.awaiting_send = true;
                 let infos = self.drain_infos();
                 let (obs, rewards, terms, truncs) = self.region_slices(first, wpb);
@@ -425,20 +487,34 @@ impl VecEnv for Multiprocessing {
         anyhow::ensure!(self.awaiting_send, "send called without a pending recv");
         let slots = self.action_dims.len();
         let rpw = self.rows_per_worker();
+        let w = self.layout.byte_len();
         anyhow::ensure!(
             actions.len() == self.pending.len() * rpw * slots,
             "expected {} action slots, got {}",
             self.pending.len() * rpw * slots,
             actions.len()
         );
-        for (slot, &wid) in self.pending.iter().enumerate() {
-            // SAFETY: worker is CLAIMED (leader-owned) until the flag
-            // below hands the region back.
-            let dst = unsafe { self.actions.slice_mut(wid * rpw * slots, rpw * slots) };
-            dst.copy_from_slice(&actions[slot * rpw * slots..(slot + 1) * rpw * slots]);
+        for slot in 0..self.pending.len() {
+            let wid = self.pending[slot];
+            if self.holding {
+                // The caller's StepBatch views died when this call
+                // borrowed self mutably; tell the sentinel before the
+                // ACTIONS_READY store lets the worker write the regions.
+                self.obs.release(wid * rpw * w, rpw * w);
+                self.rewards.release(wid * rpw, rpw);
+                self.terms.release(wid * rpw, rpw);
+                self.truncs.release(wid * rpw, rpw);
+            }
+            {
+                // SAFETY: worker is CLAIMED (leader-owned) until the flag
+                // store below hands the region back.
+                let mut dst = unsafe { self.actions.slice_mut(wid * rpw * slots, rpw * slots) };
+                dst.copy_from_slice(&actions[slot * rpw * slots..(slot + 1) * rpw * slots]);
+            } // window guard drops before the handoff store
             self.flags[wid].store(ACTIONS_READY);
         }
         self.pending.clear();
+        self.holding = false;
         self.awaiting_send = false;
         Ok(())
     }
@@ -446,9 +522,11 @@ impl VecEnv for Multiprocessing {
 
 impl Drop for Multiprocessing {
     fn drop(&mut self) {
-        // Out-of-band flag first (survives any in-flight OBS_READY store),
-        // then the state flags to wake waiters immediately.
-        self.shutdown.store(true, Ordering::Release);
+        // ordering: Relaxed — advisory fast-exit hint only; the flag
+        // stores below are the authoritative, Release-ordered signal. A
+        // worker mid-step cannot lose it: its completion edge is a CAS
+        // that fails against SHUTDOWN instead of overwriting it.
+        self.shutdown.store(true, Ordering::Relaxed);
         for f in &self.flags {
             f.store(SHUTDOWN);
         }
@@ -501,28 +579,35 @@ fn worker_loop(ctx: WorkerCtx) {
     let rpw = ctx.epw * ctx.agents;
     let row0 = ctx.wid * rpw;
     loop {
-        if ctx.shutdown.load(Ordering::Acquire) {
+        // ordering: Relaxed — advisory fast exit (skip one last wake-up
+        // cycle); correctness does not depend on observing it, because
+        // the SHUTDOWN flag state below cannot be overwritten by this
+        // worker (completion is a CAS, not a store).
+        if ctx.shutdown.load(Ordering::Relaxed) {
             return;
         }
         let state = ctx
             .flag
             .wait(ctx.spin_budget, |s| matches!(s, ACTIONS_READY | RESET | SHUTDOWN));
-        if ctx.shutdown.load(Ordering::Acquire) {
-            return;
-        }
         match state {
             SHUTDOWN => return,
             RESET => {
-                let seed = ctx.reset_seed.load(Ordering::Acquire);
+                // ordering: Relaxed — async_reset quiesces all workers,
+                // stores the seed, *then* Release-stores RESET; our
+                // Acquire load of RESET (in `wait`) makes the seed
+                // visible, and no store can race while any worker is
+                // processing RESET.
+                let seed = ctx.reset_seed.load(Ordering::Relaxed);
                 for (j, env) in envs.iter_mut().enumerate() {
                     let env_id = ctx.wid * ctx.epw + j;
                     let r = j * ctx.agents;
                     // SAFETY: RESET state grants the worker its regions.
-                    let obs = unsafe {
+                    let mut obs = unsafe {
                         ctx.obs
                             .slice_mut((row0 + r) * ctx.byte_len, ctx.agents * ctx.byte_len)
                     };
-                    let info = env.reset(seed + env_id as u64, obs);
+                    let info = env.reset(seed + env_id as u64, &mut obs);
+                    // SAFETY: RESET state grants the worker its regions.
                     unsafe {
                         ctx.rewards.slice_mut(row0 + r, ctx.agents).fill(0.0);
                         ctx.terms.slice_mut(row0 + r, ctx.agents).fill(false);
@@ -532,7 +617,13 @@ fn worker_loop(ctx: WorkerCtx) {
                         let _ = ctx.info_tx.send((env_id, info));
                     }
                 }
-                ctx.flag.store(OBS_READY);
+                // Publish results only if the leader didn't pull the flag
+                // out from under us (SHUTDOWN mid-reset): a plain store
+                // would erase that signal and strand this worker in its
+                // next wait.
+                if !ctx.flag.complete(RESET) {
+                    return;
+                }
             }
             ACTIONS_READY => {
                 for (j, env) in envs.iter_mut().enumerate() {
@@ -542,7 +633,7 @@ fn worker_loop(ctx: WorkerCtx) {
                     // Each env's rows are stacked directly into the shared
                     // slab — "multiple environments per worker" without
                     // extra copies.
-                    let (actions, obs, rewards, terms, truncs) = unsafe {
+                    let (actions, mut obs, mut rewards, mut terms, mut truncs) = unsafe {
                         (
                             ctx.actions
                                 .slice((row0 + r) * ctx.slots, ctx.agents * ctx.slots),
@@ -553,14 +644,19 @@ fn worker_loop(ctx: WorkerCtx) {
                             ctx.truncs.slice_mut(row0 + r, ctx.agents),
                         )
                     };
-                    let info = env.step(actions, obs, rewards, terms, truncs);
+                    let info =
+                        env.step(actions, &mut obs, &mut rewards, &mut terms, &mut truncs);
                     if !info.is_empty() {
                         // The only cross-thread channel traffic: one send
                         // per episode per env (paper: pipes for infos).
                         let _ = ctx.info_tx.send((env_id, info));
                     }
                 }
-                ctx.flag.store(OBS_READY);
+                // As in the RESET arm: CAS, never a blind store, so a
+                // concurrent SHUTDOWN survives and we exit instead.
+                if !ctx.flag.complete(ACTIONS_READY) {
+                    return;
+                }
             }
             _ => unreachable!("worker woke in state {state}"),
         }
@@ -869,5 +965,89 @@ mod tests {
         v.async_reset(0);
         let _ = v.recv().unwrap();
         assert!(v.recv().is_err(), "double recv");
+    }
+
+    /// Env whose observation is exactly the seed its last reset received
+    /// — the probe for reset-seed epoch mixing.
+    struct SeedEcho {
+        seed: f32,
+    }
+    impl crate::emulation::StructuredEnv for SeedEcho {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[1], 0.0, 1e9)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(2)
+        }
+        fn reset(&mut self, seed: u64) -> Value {
+            self.seed = seed as f32;
+            Value::F32(vec![self.seed])
+        }
+        fn step(&mut self, _a: &Value) -> (Value, f32, bool, bool, crate::emulation::Info) {
+            (Value::F32(vec![self.seed]), 0.0, false, false, vec![])
+        }
+    }
+
+    /// Regression for the reset-seed epoch race: async_reset published
+    /// the new seed *before* quiescing workers, so with back-to-back
+    /// resets a worker still processing reset A could load seed B. The
+    /// fix quiesces all workers first (phase 1), then publishes the seed
+    /// and the RESET flags (phase 2); with the old order this test is
+    /// racy, with the new order it must always pass.
+    #[test]
+    fn reset_seed_epochs_never_mix() {
+        let mut v = Multiprocessing::from_factory(
+            |_i| Box::new(crate::emulation::PufferEnv::new(SeedEcho { seed: -1.0 })) as Box<dyn FlatEnv>,
+            cfg(8, 4, 8, false),
+        )
+        .unwrap();
+        let w = v.obs_layout().byte_len();
+        for round in 0..20u64 {
+            let (a, b) = (1000 * round + 100, 1000 * round + 200);
+            v.async_reset(a);
+            v.async_reset(b); // immediately supersedes A
+            let obs: Vec<f32> = {
+                let batch = v.recv().unwrap();
+                batch
+                    .obs
+                    .chunks_exact(w)
+                    .map(|row| f32::from_le_bytes(row[0..4].try_into().unwrap()))
+                    .collect()
+            };
+            // Sync mode: rows come back in env-id order 0..8.
+            for env_id in 0..8usize {
+                assert_eq!(
+                    obs[env_id],
+                    (b + env_id as u64) as f32,
+                    "env {env_id} reset with a stale seed epoch"
+                );
+            }
+            v.send(&vec![0i32; 8]).unwrap();
+        }
+    }
+
+    /// Dropping the vectorizer while workers are mid-step (flags still
+    /// ACTIONS_READY) must join every worker: the SHUTDOWN store lands
+    /// while a worker is stepping, the worker's completion CAS fails,
+    /// and it exits instead of stranding itself in the next wait. With
+    /// the old blind `store(OBS_READY)` this could hang forever.
+    #[test]
+    fn drop_mid_step_joins_straggler_workers() {
+        use crate::envs::profile::{ProfileConfig, ProfileSim};
+        let factory = |i: usize| -> Box<dyn FlatEnv> {
+            // 2ms steps: drop() below lands while workers are stepping.
+            Box::new(crate::emulation::PufferEnv::new(ProfileSim::new(
+                ProfileConfig::synthetic(2000.0, 0.0, 0.0, 4),
+                i as u64,
+            )))
+        };
+        let mut v = Multiprocessing::from_factory(factory, cfg(4, 4, 4, false)).unwrap();
+        v.async_reset(0);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let _ = v.recv().unwrap();
+        v.send(&vec![0i32; rows * slots]).unwrap();
+        // Workers are now inside env.step; Drop must still join them all.
+        drop(v);
     }
 }

@@ -30,6 +30,10 @@
 //! same semantics on every backend — `Serial`, all four `Multiprocessing`
 //! code paths, and the baselines (pinned by `tests/wrapper_semantics.rs`).
 
+// Wrappers transform rows they are handed — no shared state, no unsafe
+// (CONCURRENCY.md — keep the unsafe surface in vector/).
+#![forbid(unsafe_code)]
+
 mod action_repeat;
 mod normalize;
 mod reward;

@@ -51,6 +51,7 @@ impl NormalizeObs {
             for &(off, n) in &self.fields {
                 for i in 0..n {
                     let o = off + 4 * i;
+                    // PANIC: 4-byte slice by construction — try_into::<[u8; 4]> cannot fail.
                     let x = f32::from_le_bytes(row[o..o + 4].try_into().unwrap()) as f64;
                     let d = x - self.mean[slot];
                     self.mean[slot] += d / self.count;

@@ -248,6 +248,39 @@ fn pipelined_trainer_supports_repeated_train_calls() {
 }
 
 #[test]
+fn pipelined_learner_abort_mid_run_joins_the_collector() {
+    // A learner-side error in the middle of a pipelined run (here: the
+    // metrics sink cannot create its run directory because the parent is
+    // a regular file) must tear the pipeline down cleanly: the scope
+    // drops the learner's queue endpoints, the collector — possibly
+    // blocked mid-rotation with segments still to deliver — unblocks and
+    // exits, the scope joins it, and train() returns the error instead
+    // of deadlocking or panicking. (If the join protocol regressed, this
+    // test hangs and the harness timeout catches it.)
+    let file = std::env::temp_dir().join("puffer_abort_not_a_dir");
+    std::fs::write(&file, b"occupied").unwrap();
+    let run_dir = file.join("run"); // create_dir_all must fail: parent is a file
+    let cfg = TrainConfig {
+        env: ENV.into(),
+        total_steps: 16_384, // several segments: the abort is mid-run
+        seed: SEED,
+        pipeline_depth: 2,
+        log_every: 0,
+        run_dir: Some(run_dir.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let mut t = Trainer::native(cfg).unwrap();
+    let err = t.train().expect_err("metrics sink must fail");
+    // The failure surfaced as an error, not a wedge — and the trainer is
+    // still usable: the lent segment buffer was re-created on the error
+    // path, so a follow-up eval (no metrics involved) works.
+    let _ = err.to_string();
+    let eval = t.eval(5).unwrap();
+    assert!(eval.episodes >= 5);
+    let _ = std::fs::remove_file(&file);
+}
+
+#[test]
 fn pipelined_report_exposes_stall_accounting() {
     // A deliberately learner-light run: stall numbers must be finite and
     // the env/learn split populated.

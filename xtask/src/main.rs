@@ -1,0 +1,400 @@
+//! `cargo xtask lint` — repo-invariant checks that rustc/clippy cannot
+//! express (see `rust/CONCURRENCY.md` for the rationale behind each):
+//!
+//! - **R1 (ordering)**: every `Ordering::` use in `rust/src/vector/` and
+//!   `rust/src/policy/` carries a `// ordering:` comment on the same
+//!   line or within 3 lines above, naming the edge it establishes.
+//! - **R2 (panic)**: no `.unwrap()` / `.expect(` in `rust/src` outside
+//!   `#[cfg(test)]` blocks without a `// PANIC:` justification on the
+//!   same line or within 3 lines above.
+//! - **R3 (hot path)**: no allocation tokens inside `fn on_step` /
+//!   `fn project_step` bodies in `rust/src/wrappers/` — these run per
+//!   step per env and must stay allocation-free.
+//! - **R4 (forbid)**: modules that need no unsafe carry
+//!   `#![forbid(unsafe_code)]`, keeping the unsafe surface pinned to
+//!   `vector/`.
+//!
+//! Output is `file:line: RULE — message`, one finding per line; exit
+//! status is nonzero when anything fires. CI runs this in the lint job;
+//! locally it is `make lint` / `cargo xtask lint`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// How many *non-comment* lines above a flagged line a justification
+/// comment may sit — comment lines are traversed freely, so a
+/// multi-line `// ordering:` / `// PANIC:` block directly above its
+/// statement always counts, however long it is.
+const MARKER_WINDOW: usize = 3;
+
+/// Files that must stay `#![forbid(unsafe_code)]` (R4). Paths are
+/// relative to the repo root. `vector/` is deliberately absent — it owns
+/// the crate's entire unsafe surface.
+const FORBID_UNSAFE: &[&str] = &[
+    "rust/src/config/mod.rs",
+    "rust/src/emulation/mod.rs",
+    "rust/src/envs/mod.rs",
+    "rust/src/policy/mod.rs",
+    "rust/src/runspec.rs",
+    "rust/src/spaces/mod.rs",
+    "rust/src/sync/mod.rs",
+    "rust/src/train/mod.rs",
+    "rust/src/util/mod.rs",
+    "rust/src/wrappers/mod.rs",
+];
+
+/// Allocation tokens banned from wrapper hot paths (R3).
+const ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    "with_capacity",
+    "to_vec(",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "format!",
+    ".collect()",
+    ".clone()",
+];
+
+#[derive(Debug)]
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {} — {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    let root = repo_root();
+    let src = root.join("rust/src");
+    let mut findings = Vec::new();
+    let mut scanned = 0usize;
+
+    for path in rust_files(&src) {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                findings.push(Finding {
+                    file: rel,
+                    line: 0,
+                    rule: "IO",
+                    msg: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        scanned += 1;
+        if rel.starts_with("rust/src/vector/") || rel.starts_with("rust/src/policy/") {
+            findings.extend(check_ordering(&rel, &text));
+        }
+        findings.extend(check_panics(&rel, &text));
+        if rel.starts_with("rust/src/wrappers/") {
+            findings.extend(check_hot_paths(&rel, &text));
+        }
+    }
+    findings.extend(check_forbid(&root));
+
+    if findings.is_empty() {
+        println!("xtask lint: {scanned} files clean (R1 ordering, R2 panic, R3 hot-path, R4 forbid)");
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!("xtask lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn repo_root() -> PathBuf {
+    // xtask lives at <root>/xtask, so the repo root is one level up.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent directory")
+        .to_path_buf()
+}
+
+/// All `.rs` files under `dir`, recursively, in stable order.
+fn rust_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&d) else {
+            continue;
+        };
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// The code portion of a line: everything before a `//` comment. Naive
+/// about `//` inside string literals, which only makes the checks more
+/// conservative (tokens inside the false "comment" are not flagged).
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Per-line mask: `true` for lines inside a `#[cfg(test)]` item body
+/// (brace-tracked from the attribute's item). The attribute line itself
+/// and everything through the item's closing brace are masked.
+fn test_line_mask(lines: &[&str]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].trim_start().starts_with("#[cfg(test)]") {
+            let mut depth = 0i32;
+            let mut entered = false;
+            let mut j = i;
+            while j < lines.len() {
+                mask[j] = true;
+                let code = code_part(lines[j]);
+                depth += code.matches('{').count() as i32;
+                depth -= code.matches('}').count() as i32;
+                if code.contains('{') {
+                    entered = true;
+                }
+                if entered && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Does line `i` (0-based) or the span above it carry `marker`? Walking
+/// upward, comment lines are free; at most `window` non-comment lines
+/// (code, blanks) may be crossed before giving up. This lets a
+/// justification block sit directly above a multi-line statement.
+fn marker_nearby(lines: &[&str], i: usize, marker: &str, window: usize) -> bool {
+    if lines[i].contains(marker) {
+        return true;
+    }
+    let mut budget = window;
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if lines[j].contains(marker) {
+            return true;
+        }
+        if !lines[j].trim_start().starts_with("//") {
+            budget -= 1;
+            if budget == 0 {
+                return false;
+            }
+        }
+    }
+    false
+}
+
+/// R1: `Ordering::` uses in concurrency-bearing modules must say which
+/// happens-before edge they establish (or why none is needed).
+fn check_ordering(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mask = test_line_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] || !code_part(line).contains("Ordering::") {
+            continue;
+        }
+        if !marker_nearby(&lines, i, "// ordering:", MARKER_WINDOW) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "R1",
+                msg: "atomic Ordering without a `// ordering:` comment naming its edge".into(),
+            });
+        }
+    }
+    out
+}
+
+/// R2: `.unwrap()` / `.expect(` outside tests must justify why the
+/// panic is unreachable (or deliberate) with `// PANIC:`.
+fn check_panics(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mask = test_line_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = code_part(line);
+        if !code.contains(".unwrap()") && !code.contains(".expect(") {
+            continue;
+        }
+        if !marker_nearby(&lines, i, "// PANIC:", MARKER_WINDOW) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "R2",
+                msg: "unwrap/expect outside tests without a `// PANIC:` justification".into(),
+            });
+        }
+    }
+    out
+}
+
+/// R3: wrapper hot paths (`on_step` / `project_step`) run once per step
+/// per env — allocation there silently wrecks the throughput the
+/// vectorization layer exists to provide.
+fn check_hot_paths(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        let code = code_part(lines[i]);
+        if !(code.contains("fn on_step") || code.contains("fn project_step")) {
+            i += 1;
+            continue;
+        }
+        // Walk the body: from the signature to its balancing brace.
+        let mut depth = 0i32;
+        let mut entered = false;
+        let mut j = i;
+        while j < lines.len() {
+            let body = code_part(lines[j]);
+            depth += body.matches('{').count() as i32;
+            depth -= body.matches('}').count() as i32;
+            if body.contains('{') {
+                entered = true;
+            }
+            for tok in ALLOC_TOKENS {
+                if body.contains(tok) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line: j + 1,
+                        rule: "R3",
+                        msg: format!("allocation token `{tok}` in a per-step hot path"),
+                    });
+                }
+            }
+            if entered && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// R4: the forbid list keeps the unsafe surface pinned to `vector/`.
+fn check_forbid(root: &Path) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for rel in FORBID_UNSAFE {
+        let path = root.join(rel);
+        let ok = std::fs::read_to_string(&path)
+            .map(|t| t.contains("#![forbid(unsafe_code)]"))
+            .unwrap_or(false);
+        if !ok {
+            out.push(Finding {
+                file: (*rel).to_string(),
+                line: 1,
+                rule: "R4",
+                msg: "missing `#![forbid(unsafe_code)]` (or file unreadable)".into(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mask_covers_cfg_test_modules() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn b() {}\n";
+        let lines: Vec<&str> = src.lines().collect();
+        let mask = test_line_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn ordering_needs_a_comment() {
+        let bad = "let x = f.load(Ordering::Acquire);\n";
+        assert_eq!(check_ordering("f.rs", bad).len(), 1);
+        let same_line = "let x = f.load(Ordering::Acquire); // ordering: pairs with store\n";
+        assert!(check_ordering("f.rs", same_line).is_empty());
+        let above = "// ordering: Acquire pairs with the worker's Release\nlet x = f.load(Ordering::Acquire);\n";
+        assert!(check_ordering("f.rs", above).is_empty());
+        let too_far =
+            "// ordering: far away\n\n\n\n\nlet x = f.load(Ordering::Acquire);\n";
+        assert_eq!(check_ordering("f.rs", too_far).len(), 1);
+    }
+
+    #[test]
+    fn ordering_in_tests_and_comments_is_exempt() {
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { f.load(Ordering::SeqCst); }\n}\n";
+        assert!(check_ordering("f.rs", in_test).is_empty());
+        let in_comment = "// uses Ordering::Acquire internally\nfn a() {}\n";
+        assert!(check_ordering("f.rs", in_comment).is_empty());
+    }
+
+    #[test]
+    fn unwrap_needs_a_panic_comment() {
+        let bad = "let v = x.unwrap();\n";
+        assert_eq!(check_panics("f.rs", bad).len(), 1);
+        let ok = "// PANIC: x was checked two lines up\nlet v = x.unwrap();\n";
+        assert!(check_panics("f.rs", ok).is_empty());
+        // unwrap_or / expect_byte style names never match.
+        let cousins = "let v = x.unwrap_or(0);\nlet b = p.expect_byte(b'x');\n";
+        assert!(check_panics("f.rs", cousins).is_empty());
+        // Test code is exempt.
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        assert!(check_panics("f.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn hot_path_allocation_is_flagged() {
+        let bad = "fn on_step(&mut self) {\n    let v = vec![0.0; 4];\n}\n";
+        let f = check_hot_paths("w.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("vec!"));
+        // Allocation outside the hot path is fine.
+        let ok = "fn reset(&mut self) {\n    let v = vec![0.0; 4];\n}\nfn on_step(&mut self) {\n    self.t += 1;\n}\n";
+        assert!(check_hot_paths("w.rs", ok).is_empty());
+        // project_step is covered too.
+        let proj = "fn project_step(&self) {\n    let s = String::new();\n}\n";
+        assert_eq!(check_hot_paths("w.rs", proj).len(), 1);
+    }
+}
