@@ -48,15 +48,17 @@ lint:
 
 # Vector throughput bench (paper Table 2 + the W1 wrapper-overhead
 # cell), the pipelined-vs-serial trainer bench (P2), the per-
-# architecture policy fwd/bwd bench (P3), and the RunSpec-construction
-# microbench (R1); write machine-readable results to
-# BENCH_vector.json / BENCH_train.json / BENCH_policy.json /
-# BENCH_runspec.json.
+# architecture policy fwd/bwd bench (P3), the RunSpec-construction
+# microbench (R1), and the inference-serving latency bench (S1);
+# write machine-readable results to BENCH_vector.json /
+# BENCH_train.json / BENCH_policy.json / BENCH_runspec.json /
+# BENCH_serve.json.
 bench:
 	PUFFER_BENCH_JSON=BENCH_vector.json cargo bench --bench vectorization
 	PUFFER_BENCH_JSON=BENCH_train.json cargo bench --bench train_pipeline
 	PUFFER_BENCH_JSON=BENCH_policy.json cargo bench --bench policy_forward
 	PUFFER_BENCH_JSON=BENCH_runspec.json cargo bench --bench runspec
+	PUFFER_BENCH_JSON=BENCH_serve.json cargo bench --bench serve_latency
 
 # Every bench target.
 bench-all:

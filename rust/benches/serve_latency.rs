@@ -1,0 +1,74 @@
+//! **Bench S1** — inference-serving latency and batch occupancy: the
+//! `puffer serve` dynamic batcher (dual budget: `max_batch` rows or
+//! `max_wait_us`) under the built-in load generator, with pipelined
+//! clients, per-session LSTM state, and a mid-run weight hot-swap.
+//!
+//! `cargo bench --bench serve_latency`; `PUFFER_BENCH_REQUESTS` scales
+//! the run (default 10k requests over 64 sessions, the selftest
+//! acceptance shape). `PUFFER_BENCH_JSON=BENCH_serve.json` writes the
+//! machine-readable report.
+
+use pufferlib::policy::PolicySpec;
+use pufferlib::runspec::RunSpec;
+use pufferlib::serve::selftest::{self, SelftestConfig};
+use pufferlib::serve::ServeConfig;
+use pufferlib::vector::VecSpec;
+use pufferlib::wrappers::EnvSpec;
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::var("PUFFER_BENCH_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+
+    let dir = std::env::temp_dir().join("puffer_serve_bench");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("ckpt.bin").to_string_lossy().into_owned();
+    // Recurrent policy: the expensive serving shape (per-session h/c
+    // gather/scatter plus the unique-session batch split).
+    let spec = RunSpec::new(EnvSpec::new("ocean/bandit"))
+        .with_vec(VecSpec::Serial)
+        .with_policy(PolicySpec::default().with_hidden(64).with_lstm(32))
+        .with_seed(1);
+    selftest::write_synthetic_checkpoint(&spec, &path)?;
+
+    let cfg = ServeConfig {
+        port: 0,
+        ..Default::default()
+    };
+    let st = SelftestConfig {
+        requests,
+        ..Default::default()
+    };
+    let report = selftest::run(&path, &cfg, &st)?;
+
+    println!("# Bench S1 — serve latency (dynamic batcher, LSTM policy)");
+    println!(
+        "{} requests, {} sessions, {} clients x window {}, hot-swap {}",
+        st.requests, st.sessions, st.clients, st.window, st.hot_swap
+    );
+    println!("| {:<18} | {:>12} |", "metric", "value");
+    println!("|{}|{}|", "-".repeat(20), "-".repeat(14));
+    let rps = report.requests as f64 / (report.elapsed_ms.max(1) as f64 / 1000.0);
+    for (metric, value) in [
+        ("requests/s", format!("{rps:.0}")),
+        ("p50 latency (us)", report.p50_us.to_string()),
+        ("p99 latency (us)", report.p99_us.to_string()),
+        ("occupancy (rows)", format!("{:.2}", report.occupancy)),
+        ("max batch (rows)", report.max_batch.to_string()),
+        ("batches", report.batches.to_string()),
+        ("multi-row batches", report.multi_row_batches.to_string()),
+        ("sessions", report.sessions.to_string()),
+        ("evicted", report.evicted.to_string()),
+        ("dropped", report.dropped.to_string()),
+        ("weight version", report.max_version.to_string()),
+    ] {
+        println!("| {:<18} | {:>12} |", metric, value);
+    }
+
+    anyhow::ensure!(report.dropped == 0, "bench dropped {} requests", report.dropped);
+    if let Some(p) = selftest::maybe_write_bench_json(&report)? {
+        println!("wrote {p}");
+    }
+    Ok(())
+}

@@ -60,6 +60,11 @@ const POLICY_KEYS: &[&str] = &["hidden", "lstm", "lstm_hidden", "embed_dim", "he
 /// (RunSpec `[vec]` sections and `--vec.X=...` CLI overrides).
 pub const VEC_KEYS: &[&str] = &["mode", "workers", "batch", "zero_copy", "spin_budget"];
 
+/// Recognized inference-server knobs
+/// ([`ServeConfig`](crate::serve::ServeConfig)), reachable as `serve.X`
+/// (RunSpec `[serve]` sections and `--serve.X=...` CLI overrides).
+pub const SERVE_KEYS: &[&str] = &["port", "max_batch", "max_wait_us", "session_ttl_s", "threads"];
+
 /// Recognized wrapper knobs, reachable as `train.wrap.X` (config files)
 /// or `wrap.X` (CLI `--wrap.X=...` overrides).
 const WRAP_KEYS: &[&str] = &[
@@ -134,6 +139,11 @@ pub fn validate_keys(cfg: &FlatConfig) -> Result<()> {
             ensure!(
                 VEC_KEYS.contains(&rest),
                 "unknown vec key '{key}' (known vec knobs: {VEC_KEYS:?})"
+            );
+        } else if let Some(rest) = key.strip_prefix("serve.") {
+            ensure!(
+                SERVE_KEYS.contains(&rest),
+                "unknown serve key '{key}' (known serve knobs: {SERVE_KEYS:?})"
             );
         } else if let Some(rest) = key.strip_prefix("train.") {
             ensure!(
@@ -226,6 +236,14 @@ pub fn policy_config(cfg: &FlatConfig, env: &str) -> Result<Option<PolicySpec>> 
     if let Some((key, v)) = get("head") {
         spec.head = match v.as_str() {
             "categorical" => crate::policy::ActionHead::Categorical,
+            // A continuous head is a known gap, not a typo — name the
+            // roadmap item and the workaround instead of the grammar.
+            "gaussian" | "continuous" | "normal" => bail!(
+                "config key '{key}': continuous (Gaussian) action heads are \
+                 not implemented yet — see ROADMAP item 4. Quantize the \
+                 action space instead: 'quantized:<bins>' emulates a Box \
+                 space as <bins> choices per dim"
+            ),
             other => match other.strip_prefix("quantized:").map(str::parse::<usize>) {
                 Some(Ok(bins)) if bins >= 2 => crate::policy::ActionHead::Quantized { bins },
                 _ => bail!(
@@ -235,6 +253,32 @@ pub fn policy_config(cfg: &FlatConfig, env: &str) -> Result<Option<PolicySpec>> 
             },
         };
     }
+    Ok(Some(spec))
+}
+
+/// Build the [`ServeConfig`](crate::serve::ServeConfig) from a flat
+/// config's `serve.*` keys. Returns `None` when no serve key is present
+/// (most specs never serve); present keys get strict bounds checks and
+/// defaults for the rest.
+pub fn serve_config(cfg: &FlatConfig) -> Result<Option<crate::serve::ServeConfig>> {
+    let get = |knob: &str| cfg.get(&format!("serve.{knob}")).map(String::as_str);
+    if SERVE_KEYS.iter().all(|k| get(k).is_none()) {
+        return Ok(None);
+    }
+    let defaults = crate::serve::ServeConfig::default();
+    let spec = crate::serve::ServeConfig {
+        port: get_parse(cfg, "serve.port", defaults.port)?,
+        max_batch: get_parse(cfg, "serve.max_batch", defaults.max_batch)?,
+        max_wait_us: get_parse(cfg, "serve.max_wait_us", defaults.max_wait_us)?,
+        session_ttl_s: get_parse(cfg, "serve.session_ttl_s", defaults.session_ttl_s)?,
+        threads: get_parse(cfg, "serve.threads", defaults.threads)?,
+    };
+    ensure!(spec.max_batch >= 1, "config key 'serve.max_batch': must be >= 1");
+    ensure!(
+        spec.session_ttl_s >= 1,
+        "config key 'serve.session_ttl_s': must be >= 1 (sessions would evict instantly)"
+    );
+    ensure!(spec.threads >= 1, "config key 'serve.threads': must be >= 1");
     Ok(Some(spec))
 }
 
@@ -553,6 +597,70 @@ mod tests {
         cfg.insert("policy.lstm_hidden".into(), "32".into());
         let err = train_config(&cfg).unwrap_err().to_string();
         assert!(err.contains("policy.lstm"), "{err}");
+    }
+
+    #[test]
+    fn continuous_heads_fail_with_the_roadmap_pointer() {
+        for head in ["gaussian", "continuous", "normal"] {
+            let mut cfg = FlatConfig::new();
+            cfg.insert("policy.head".into(), head.into());
+            let err = train_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains("ROADMAP item 4"), "{head}: {err}");
+            assert!(err.contains("quantized:<bins>"), "{head}: {err}");
+        }
+    }
+
+    #[test]
+    fn serve_config_defaults_bounds_and_unknown_keys() {
+        // No serve keys → None.
+        assert_eq!(serve_config(&FlatConfig::new()).unwrap(), None);
+        // One key pulls in defaults for the rest.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("serve.max_batch".into(), "16".into());
+        let sc = serve_config(&cfg).unwrap().unwrap();
+        assert_eq!(sc.max_batch, 16);
+        assert_eq!(sc.port, crate::serve::ServeConfig::default().port);
+        assert_eq!(sc.threads, 1);
+        // Full section round-trips.
+        let mut cfg = FlatConfig::new();
+        for (k, v) in [
+            ("serve.port", "0"),
+            ("serve.max_batch", "8"),
+            ("serve.max_wait_us", "250"),
+            ("serve.session_ttl_s", "60"),
+            ("serve.threads", "2"),
+        ] {
+            cfg.insert(k.into(), v.into());
+        }
+        let sc = serve_config(&cfg).unwrap().unwrap();
+        assert_eq!(
+            sc,
+            crate::serve::ServeConfig {
+                port: 0,
+                max_batch: 8,
+                max_wait_us: 250,
+                session_ttl_s: 60,
+                threads: 2
+            }
+        );
+        // Bounds are named after their key.
+        for (k, v) in [
+            ("serve.max_batch", "0"),
+            ("serve.threads", "0"),
+            ("serve.session_ttl_s", "0"),
+            ("serve.port", "70000"),
+            ("serve.max_wait_us", "-1"),
+        ] {
+            let mut cfg = FlatConfig::new();
+            cfg.insert(k.into(), v.into());
+            let err = serve_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(k), "{k}={v}: {err}");
+        }
+        // Typos are rejected by namespace validation.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("serve.prot".into(), "7777".into());
+        let err = validate_keys(&cfg).unwrap_err().to_string();
+        assert!(err.contains("serve.prot"), "{err}");
     }
 
     #[test]

@@ -26,14 +26,17 @@ pub struct PufferEnv<E: StructuredEnv> {
 impl<E: StructuredEnv> PufferEnv<E> {
     /// Wrap an environment. Panics immediately if the action space
     /// contains a continuous (Box) leaf — mirroring the paper's current
-    /// limitation (§8); see [`crate::policy::continuous`] for the
-    /// extension pathway.
+    /// limitation (§8); native continuous heads are ROADMAP item 4.
     pub fn new(env: E) -> Self {
         let obs_space = env.observation_space();
         let act_space = env.action_space();
         let layout = obs_space.layout();
         let action_dims = act_space.action_dims().unwrap_or_else(|| {
-            panic!("PufferEnv: action space has continuous leaves; use ContinuousPolicy instead")
+            panic!(
+                "PufferEnv: action space has continuous leaves — quantize them \
+                 in the env (emulated MultiDiscrete); native continuous heads \
+                 are ROADMAP item 4"
+            )
         });
         PufferEnv {
             env,

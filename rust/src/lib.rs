@@ -105,9 +105,10 @@
 //!   default spec and train natively — the old "recurrent envs require
 //!   `--features pjrt`" error is gone.
 //! - **Unified action head** ([`ActionHead`](policy::ActionHead)):
-//!   per-slot categorical logits over the emulated MultiDiscrete, or the
-//!   declared quantized-continuous grid
-//!   ([`policy::continuous::QuantizedActions`]).
+//!   per-slot categorical logits over the emulated MultiDiscrete, or a
+//!   declared quantized-continuous grid (`head=quantized:<bins>`).
+//!   Native continuous (Gaussian) heads are ROADMAP item 4 and rejected
+//!   with an actionable error at spec parse time.
 //!
 //! ```no_run
 //! use pufferlib::policy::PolicySpec;
@@ -183,6 +184,25 @@
 //! `tests/pipeline.rs`), so results stay comparable when you turn the
 //! knobs off.
 //!
+//! ## Serving
+//!
+//! `puffer serve <ckpt>` ([`serve`]) turns a v2 (RunSpec-embedded)
+//! checkpoint into a localhost inference service: concurrent TCP
+//! clients send flat observation rows (length-prefixed binary frames,
+//! or newline-JSON for debugging — [`serve::protocol`] documents the
+//! exact layout), and a dynamic batcher coalesces them into batched
+//! forward passes under a dual budget (`serve.max_batch` rows or
+//! `serve.max_wait_us`, whichever first). Recurrent policies keep
+//! per-session LSTM state server-side — sessions are created lazily,
+//! reset on episode boundaries, and evicted after `serve.session_ttl_s`
+//! idle — and a watcher thread hot-swaps weights through
+//! [`policy::ParamSnapshot`] whenever the checkpoint file changes, so a
+//! trainer can publish into a live server. Replies are deterministic
+//! (greedy argmax) and bit-identical to a serial forward regardless of
+//! batch shape (pinned by `tests/serve.rs`). `puffer serve <ckpt>
+//! --selftest` runs a synthetic load and reports p50/p99 latency plus
+//! batch occupancy; `puffer ckpt info <ckpt>` prints the embedded spec.
+//!
 //! ## Concurrency correctness
 //!
 //! Every cross-thread protocol (slab handoff, parameter snapshots,
@@ -200,6 +220,7 @@ pub mod envs;
 pub mod policy;
 pub mod runspec;
 pub mod runtime;
+pub mod serve;
 pub mod spaces;
 pub mod sync;
 pub mod train;

@@ -12,6 +12,8 @@
 //! puffer sweep                              # legacy: train the whole Ocean suite
 //! puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--run_dir=DIR]
 //! puffer policy describe <env> [--wrap.* ...] [--policy.* ...]
+//! puffer serve <checkpoint.bin> [--serve.port=7777 ...] [--selftest]
+//! puffer ckpt info <checkpoint.bin>         # version, arch key, embedded spec
 //! puffer envs                               # list first-party environments
 //! ```
 //!
@@ -42,7 +44,8 @@ use pufferlib::wrappers::EnvSpec;
 const ARTIFACTS: &str = "artifacts";
 
 /// Override namespaces every spec-consuming command accepts.
-const SPEC_NAMESPACES: &[&str] = &["train.", "wrap.", "pipeline.", "policy.", "vec.", "env.", "seed"];
+const SPEC_NAMESPACES: &[&str] =
+    &["train.", "wrap.", "pipeline.", "policy.", "vec.", "env.", "serve.", "seed"];
 
 fn main() {
     if let Err(e) = run() {
@@ -65,6 +68,8 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&rest),
         "autotune" => cmd_autotune(&rest),
         "policy" => cmd_policy(&rest),
+        "serve" => cmd_serve(&rest),
+        "ckpt" => cmd_ckpt(&rest),
         "envs" => {
             for name in envs::ALL_ENVS {
                 println!("{name}");
@@ -95,6 +100,8 @@ fn print_help() {
          puffer sweep [--train.KEY=VAL ...]              legacy: train the whole Ocean suite\n  \
          puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--run_dir=DIR] [--wrap.KEY=VAL ...]\n  \
          puffer policy describe <env> [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...]\n  \
+         puffer serve <checkpoint.bin> [--serve.KEY=VAL ...] [--selftest]\n  \
+         puffer ckpt info <checkpoint.bin>               print version + embedded spec\n  \
          puffer envs                                     list first-party envs\n\n\
          RunSpec files (examples/specs/*.toml): seed = N, [env] name + [env.wrap]\n\
          \x20 knobs, [policy] hidden/lstm/lstm_hidden/embed_dim/head, [vec]\n\
@@ -111,7 +118,8 @@ fn print_help() {
          Policy keys: hidden | lstm true/false | lstm_hidden | embed_dim |\n\
          \x20 head categorical|quantized:<bins>\n\
          Vec keys: mode serial|mt|auto | workers | batch full|half|<envs> |\n\
-         \x20 zero_copy | spin_budget\n\n\
+         \x20 zero_copy | spin_budget\n\
+         Serve keys: port | max_batch | max_wait_us | session_ttl_s | threads\n\n\
          Backends: native (default, pure Rust; any spec) | pjrt (train/eval\n\
          \x20         only; AOT artifacts, default archs; needs --features pjrt\n\
          \x20         and `make artifacts`)"
@@ -605,6 +613,130 @@ fn cmd_policy(args: &[String]) -> Result<()> {
         backend.key()
     );
     print!("{}", backend.arch().describe());
+    Ok(())
+}
+
+/// `puffer serve <checkpoint.bin>`: dynamic-batching inference server
+/// over the checkpoint's embedded policy. `--serve.KEY=VAL` overrides
+/// the spec's `[serve]` section; `--selftest` runs the built-in load
+/// generator against an ephemeral instance (port 0) and checks the
+/// batching/zero-drop acceptance gates instead of serving forever.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    anyhow::ensure!(
+        cfg_file.is_none(),
+        "puffer serve takes no --config file: serve knobs come from the \
+         checkpoint's [serve] section or --serve.KEY=VAL overrides"
+    );
+    let mut selftest = false;
+    let mut st = pufferlib::serve::selftest::SelftestConfig::default();
+    let mut bad: Option<String> = None;
+    overrides.retain(|a| {
+        if a == "--selftest" {
+            selftest = true;
+            false
+        } else if let Some(v) = a.strip_prefix("--selftest.requests=") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => st.requests = n,
+                _ => bad = Some(format!("--selftest.requests: expected an integer >= 1, got '{v}'")),
+            }
+            false
+        } else if let Some(v) = a.strip_prefix("--selftest.sessions=") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => st.sessions = n,
+                _ => bad = Some(format!("--selftest.sessions: expected an integer >= 1, got '{v}'")),
+            }
+            false
+        } else {
+            true
+        }
+    });
+    if let Some(msg) = bad {
+        anyhow::bail!("{msg}");
+    }
+    reject_stray_overrides(&overrides, &["serve."])?;
+    anyhow::ensure!(
+        positional.len() == 1,
+        "usage: puffer serve <checkpoint.bin> [--serve.KEY=VAL ...] [--selftest]"
+    );
+    // PANIC: length checked above.
+    let path = positional.first().unwrap();
+    let model = pufferlib::serve::ServedModel::open(path)?;
+    let spec = apply_spec_overrides(model.spec.clone(), &overrides)?;
+    let cfg = spec.serve.clone().unwrap_or_default();
+
+    if selftest {
+        let report = pufferlib::serve::selftest::run(path, &cfg, &st)?;
+        pufferlib::serve::selftest::print_report(&report);
+        if let Some(p) = pufferlib::serve::selftest::maybe_write_bench_json(&report)? {
+            println!("wrote {p}");
+        }
+        anyhow::ensure!(
+            report.dropped == 0,
+            "selftest dropped {} requests — the server must answer every \
+             accepted request",
+            report.dropped
+        );
+        anyhow::ensure!(
+            report.occupancy > 1.0,
+            "selftest never coalesced: occupancy {:.2} rows/batch should \
+             exceed 1 (is max_wait_us too small for this machine?)",
+            report.occupancy
+        );
+        return Ok(());
+    }
+
+    let recurrent = model.recurrent();
+    let step = model.global_step;
+    let key = model.spec_key.clone();
+    let handle = pufferlib::serve::Server::start(model, &cfg, Some(path.as_str()))?;
+    println!(
+        "serving {key} (step {step}{}) on {} — {} shard(s), batch <= {} rows \
+         or {} us, session ttl {} s; Ctrl-C to stop",
+        if recurrent { ", recurrent" } else { "" },
+        handle.addr(),
+        cfg.threads,
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.session_ttl_s,
+    );
+    // Foreground server: park until killed. The handle keeps the
+    // accept/shard/watcher threads alive for the life of the process.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `puffer ckpt info <checkpoint.bin>`: print the file's format
+/// version, arch key, training step, parameter count, and the embedded
+/// RunSpec as canonical TOML (v2 files; v1 files error naming the
+/// limitation after the header fields).
+fn cmd_ckpt(args: &[String]) -> Result<()> {
+    anyhow::ensure!(
+        args.first().map(String::as_str) == Some("info") && args.len() == 2,
+        "usage: puffer ckpt info <checkpoint.bin>"
+    );
+    // PANIC: length checked above.
+    let path = args.get(1).unwrap();
+    let version = Checkpoint::probe_version(path)?;
+    let ck = Checkpoint::load(path).context("loading checkpoint")?;
+    println!("file:     {path}");
+    println!("format:   v{version}");
+    println!("arch key: {}", ck.spec_key);
+    println!("step:     {}", ck.global_step);
+    println!("params:   {}", ck.params.len());
+    let json = ck.run_spec_json.as_deref().with_context(|| {
+        format!(
+            "{path} is a v{version} checkpoint with no embedded RunSpec — \
+             `ckpt info` can only print the spec for v2 files, which record \
+             it at save time. Re-train (or fine-tune via `puffer resume`) \
+             with this build to produce one"
+        )
+    })?;
+    let spec = RunSpec::from_json_str(json)
+        .with_context(|| format!("parsing the RunSpec embedded in {path}"))?;
+    println!();
+    print!("{}", spec.to_toml()?);
     Ok(())
 }
 

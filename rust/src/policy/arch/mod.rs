@@ -7,8 +7,10 @@
 //! encoders resolved from the emulated [`StructLayout`]), a trunk MLP
 //! mixes the encoded leaves, an optional LSTM cell sits between hidden
 //! state and heads (recurrence is a flag, not a second model), and a
-//! unified action head covers MultiDiscrete logits plus the quantized
-//! continuous grid from [`crate::policy::continuous`].
+//! unified action head covers MultiDiscrete logits plus a declared
+//! quantized-continuous grid ([`ActionHead::Quantized`]). Native
+//! continuous (Gaussian) heads are ROADMAP item 4 and rejected with an
+//! actionable error at spec parse time.
 //!
 //! A spec is plain data: cloneable, comparable, and embedded in
 //! checkpoint keys ([`ResolvedPolicy::key_fragment`]) so parameters never
@@ -58,10 +60,9 @@ pub enum ActionHead {
     /// the 1-slot case).
     Categorical,
     /// The continuous path: the env's Box action space was emulated as a
-    /// quantization grid
-    /// ([`QuantizedActions`](crate::policy::continuous::QuantizedActions)),
-    /// so every slot must have exactly `bins` choices. Same logits math,
-    /// declared so the grid resolution is part of the architecture key.
+    /// quantization grid, so every slot must have exactly `bins`
+    /// choices. Same logits math, declared so the grid resolution is
+    /// part of the architecture key.
     Quantized { bins: usize },
 }
 

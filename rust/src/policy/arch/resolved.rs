@@ -91,7 +91,7 @@ impl ResolvedPolicy {
                 act_dims.iter().all(|&k| k == bins),
                 "quantized head declares {bins} bins per dim, but the env's \
                  emulated action dims are {act_dims:?} — the grid must match \
-                 the QuantizedActions emulation exactly"
+                 the env's quantized-action emulation exactly"
             );
         }
         let mut segments = Vec::new();

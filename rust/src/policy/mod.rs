@@ -11,7 +11,6 @@
 #![forbid(unsafe_code)]
 
 pub mod arch;
-pub mod continuous;
 pub mod snapshot;
 
 pub use arch::{ActionHead, PolicySpec, Recurrence, ResolvedPolicy};
@@ -183,22 +182,29 @@ impl Policy {
 
     /// Greedy (argmax) actions — deterministic evaluation.
     pub fn greedy(&self, logits_row: &[f32]) -> Vec<i32> {
-        let mut out = Vec::with_capacity(self.spec.act_dims.len());
-        let mut off = 0;
-        for &n in &self.spec.act_dims {
-            let seg = &logits_row[off..off + n];
-            let arg = seg
-                .iter()
-                .enumerate()
-                // PANIC: act_dims entries are > 0, so the segment is non-empty and logits are finite.
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            out.push(arg as i32);
-            off += n;
-        }
-        out
+        greedy_actions(logits_row, &self.spec.act_dims)
     }
+}
+
+/// Greedy (argmax) action per head slot from one row of logits — the
+/// deterministic decode shared by [`Policy::greedy`] and the serve
+/// batcher (which runs the backend directly, without a [`Policy`]).
+pub fn greedy_actions(logits_row: &[f32], act_dims: &[usize]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(act_dims.len());
+    let mut off = 0;
+    for &n in act_dims {
+        let seg = &logits_row[off..off + n];
+        let arg = seg
+            .iter()
+            .enumerate()
+            // PANIC: act_dims entries are > 0, so the segment is non-empty and logits are finite.
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        out.push(arg as i32);
+        off += n;
+    }
+    out
 }
 
 /// Numerically stable `log softmax(seg)[idx]`.

@@ -104,6 +104,9 @@ pub struct RunSpec {
     /// The run root seed; every RNG stream derives from it via
     /// [`seed::split`].
     pub seed: u64,
+    /// Inference-server settings (`puffer serve`); `None` for the
+    /// (common) specs that never serve. Inert during training.
+    pub serve: Option<crate::serve::ServeConfig>,
     /// Sweep grid: spec key → candidate values. Empty for a single run.
     pub grid: BTreeMap<String, Vec<String>>,
 }
@@ -117,6 +120,7 @@ impl RunSpec {
             vec: VecSpec::default(),
             train: TrainConfig::default(),
             seed: TrainConfig::default().seed,
+            serve: None,
             grid: BTreeMap::new(),
         };
         spec.normalize();
@@ -137,6 +141,12 @@ impl RunSpec {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self.normalize();
+        self
+    }
+
+    pub fn with_serve(mut self, serve: crate::serve::ServeConfig) -> Self {
+        self.serve = Some(serve);
         self.normalize();
         self
     }
@@ -292,12 +302,14 @@ impl RunSpec {
             // PANIC: arrays keys are collected with the 'grid.' prefix present.
             .map(|(k, v)| (k.strip_prefix("grid.").unwrap().to_string(), v.clone()))
             .collect();
+        let serve = config::serve_config(&flat)?;
         let mut spec = RunSpec {
             env: EnvSpec::new(name).with_wrappers(train.wrappers.iter().cloned()),
             policy: train.policy.clone(),
             vec: train.vec.clone().unwrap_or_default(),
             seed: train.seed,
             train,
+            serve,
             grid,
         };
         spec.normalize();
@@ -344,6 +356,11 @@ impl RunSpec {
         for (knob, value) in s.vec.to_flat_pairs() {
             put(&format!("vec.{knob}"), value);
         }
+        if let Some(serve) = &s.serve {
+            for (knob, value) in serve.to_flat_pairs() {
+                put(&format!("serve.{knob}"), value);
+            }
+        }
         let t = &s.train;
         put("train.total_steps", t.total_steps.to_string());
         put("train.lr", format!("{}", t.lr));
@@ -388,7 +405,7 @@ impl RunSpec {
         };
         section_value(&mut out, "seed", &flat["seed"]);
         // Emit sections in a fixed, readable order.
-        for section in ["env", "env.wrap", "policy", "vec", "train"] {
+        for section in ["env", "env.wrap", "policy", "vec", "serve", "train"] {
             let prefix = format!("{section}.");
             let keys: Vec<&String> = flat
                 .keys()
@@ -791,6 +808,7 @@ fn validate_scalar_key(key: &str) -> Result<()> {
     let known_namespace = key.starts_with("env.wrap.")
         || key.starts_with("policy.")
         || key.starts_with("vec.")
+        || key.starts_with("serve.")
         || key.starts_with("train.pipeline.")
         || (key.strip_prefix("train.").is_some_and(|rest| RUN_TRAIN_KEYS.contains(&rest)));
     if !known_namespace {
@@ -802,7 +820,7 @@ fn validate_scalar_key(key: &str) -> Result<()> {
         }
         bail!(
             "unknown RunSpec key '{key}' (sections: seed, [env], [env.wrap], \
-             [policy], [vec], [train], [grid])"
+             [policy], [vec], [serve], [train], [grid])"
         );
     }
     // Namespaced keys get their suffix validation from the config-layer
@@ -864,6 +882,45 @@ mod tests {
         assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
         let json = spec.to_json().dump();
         assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+    }
+
+    #[test]
+    fn serve_section_round_trips_and_rejects_unknown_knobs() {
+        let serve = crate::serve::ServeConfig {
+            port: 9001,
+            max_batch: 32,
+            max_wait_us: 250,
+            session_ttl_s: 60,
+            threads: 2,
+        };
+        let spec = full_spec().with_serve(serve.clone());
+        let toml = spec.to_toml().unwrap();
+        assert!(toml.contains("\n[serve]\n"), "serve gets its own section:\n{toml}");
+        assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+
+        // Specs that never serve stay serve-less (no section emitted).
+        let plain = full_spec();
+        assert_eq!(plain.serve, None);
+        assert!(!plain.to_toml().unwrap().contains("[serve]"));
+
+        // A partial section pulls defaults for the rest.
+        let partial = RunSpec::from_toml_str(
+            "[env]\nname = \"ocean/bandit\"\n[serve]\nport = 8080\n",
+        )
+        .unwrap();
+        assert_eq!(
+            partial.serve,
+            Some(crate::serve::ServeConfig { port: 8080, ..Default::default() })
+        );
+
+        // Unknown serve knobs error naming the key.
+        let err = RunSpec::from_toml_str("[serve]\nprot = 7777\n")
+            .err()
+            .expect("typo'd serve key must be rejected")
+            .to_string();
+        assert!(err.contains("serve key 'prot'"), "got: {err}");
     }
 
     #[test]

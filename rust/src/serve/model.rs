@@ -1,0 +1,140 @@
+//! Read-only checkpoint open for serving and `puffer ckpt info`:
+//! rebuild the exact [`NativeBackend`] the trainer used from the
+//! RunSpec embedded in a v2 checkpoint, and validate that the file's
+//! parameter vector actually fits that architecture.
+//!
+//! This is the serve-side half of the contract
+//! `train/checkpoint.rs` writes: training embeds the spec so inference
+//! needs zero flags — the flat observation width, action head layout,
+//! and recurrence all come out of the file.
+
+use crate::backend::{NativeBackend, PolicyBackend};
+use crate::policy::PolicySpec;
+use crate::runspec::RunSpec;
+use crate::train::Checkpoint;
+use crate::wrappers::EnvSpec;
+use anyhow::{Context, Result};
+
+/// A checkpoint opened for inference: the rebuilt backend plus the
+/// weights and metadata the server (or `ckpt info`) needs.
+pub struct ServedModel {
+    /// The embedded experiment spec, exactly as trained.
+    pub spec: RunSpec,
+    /// Backend rebuilt from the spec; its arch gives obs/action geometry.
+    pub backend: NativeBackend,
+    /// Flat parameter vector from the checkpoint file.
+    pub params: Vec<f32>,
+    /// Training step the checkpoint was written at.
+    pub global_step: u64,
+    /// Architecture key the checkpoint was saved under.
+    pub spec_key: String,
+    /// Checkpoint format version (2 = RunSpec-embedded).
+    pub format_version: u32,
+}
+
+impl ServedModel {
+    /// Open `path` read-only and rebuild its policy. Fails with an
+    /// actionable message for v1 (spec-less) files, arch mismatches,
+    /// and truncated parameter vectors.
+    pub fn open(path: &str) -> Result<ServedModel> {
+        let format_version = Checkpoint::probe_version(path)?;
+        let ck = Checkpoint::load(path).context("loading checkpoint")?;
+        let json = ck.run_spec_json.as_deref().with_context(|| {
+            format!(
+                "{path} is a v{format_version} checkpoint with no embedded RunSpec — \
+                 serving and `ckpt info` need the v2 format, which records the \
+                 experiment spec at save time. Re-train (or fine-tune via \
+                 `puffer resume`) with this build to produce one"
+            )
+        })?;
+        let spec = RunSpec::from_json_str(json)
+            .with_context(|| format!("parsing the RunSpec embedded in {path}"))?;
+        let backend = Self::backend_for(&spec)?;
+        Self::check_fit(&backend, &ck, path)?;
+        Ok(ServedModel {
+            spec,
+            backend,
+            params: ck.params,
+            global_step: ck.global_step,
+            spec_key: ck.spec_key,
+            format_version,
+        })
+    }
+
+    /// Rebuild the native backend a spec trains with — the same
+    /// construction path as `Trainer::from_run_spec`, minus the
+    /// vectorizer and optimizer. Public so tests and the selftest can
+    /// synthesize servable checkpoints without a training run.
+    pub fn backend_for(spec: &RunSpec) -> Result<NativeBackend> {
+        let tc = spec.train_config();
+        let env_spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
+        let probe = env_spec.build(0);
+        let policy = tc
+            .policy
+            .clone()
+            .unwrap_or_else(|| PolicySpec::default_for(&tc.env));
+        NativeBackend::for_env_with_policy(&env_spec.key(), probe.as_ref(), &policy)
+    }
+
+    /// Validate that a (re-)loaded checkpoint matches this model's
+    /// architecture — shared by `open` and the hot-swap watcher, so a
+    /// half-written or wrong-run file can never be published.
+    pub fn check_compatible(&self, ck: &Checkpoint, path: &str) -> Result<()> {
+        anyhow::ensure!(
+            ck.spec_key == self.spec_key,
+            "{path} was saved under arch key '{}' but this server loaded '{}' — \
+             refusing to hot-swap weights across architectures",
+            ck.spec_key,
+            self.spec_key
+        );
+        anyhow::ensure!(
+            ck.params.len() == self.params.len(),
+            "{path} holds {} parameters, expected {}",
+            ck.params.len(),
+            self.params.len()
+        );
+        Ok(())
+    }
+
+    fn check_fit(backend: &NativeBackend, ck: &Checkpoint, path: &str) -> Result<()> {
+        anyhow::ensure!(
+            backend.key() == ck.spec_key,
+            "{path} was saved under arch key '{}', but its embedded RunSpec \
+             rebuilds '{}' — the checkpoint is internally inconsistent",
+            ck.spec_key,
+            backend.key()
+        );
+        anyhow::ensure!(
+            ck.params.len() == backend.spec().n_params,
+            "{path} holds {} parameters, but the rebuilt architecture needs {}",
+            ck.params.len(),
+            backend.spec().n_params
+        );
+        Ok(())
+    }
+
+    /// Flat observation row width clients must send.
+    pub fn obs_dim(&self) -> usize {
+        self.backend.arch().obs_dim
+    }
+
+    /// MultiDiscrete action slots per reply.
+    pub fn slots(&self) -> usize {
+        self.backend.arch().act_dims.len()
+    }
+
+    /// Per-slot action cardinalities.
+    pub fn act_dims(&self) -> &[usize] {
+        &self.backend.arch().act_dims
+    }
+
+    /// Recurrent state width per session (0 for feedforward policies).
+    pub fn state_dim(&self) -> usize {
+        self.backend.arch().state_dim()
+    }
+
+    /// Whether the policy carries LSTM state between steps.
+    pub fn recurrent(&self) -> bool {
+        self.backend.arch().is_recurrent()
+    }
+}

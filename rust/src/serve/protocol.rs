@@ -1,0 +1,381 @@
+//! The serve wire protocol: a length-prefixed binary framing for
+//! production clients, plus a newline-JSON debug mode for poking the
+//! server with `nc`. Both encode and decode live here so the server,
+//! the selftest load generator, the latency bench, and the tests all
+//! speak through one implementation.
+//!
+//! ## Binary mode
+//!
+//! All integers little-endian. The client opens with the 4-byte magic
+//! `PUFB`; the server answers with a hello:
+//!
+//! ```text
+//! hello  := "PUFS" u32 obs_dim u32 slots
+//! ```
+//!
+//! after which both directions are length-prefixed frames:
+//!
+//! ```text
+//! request := u32 len | u64 session | u8 flags | f32 × obs_dim obs
+//!            (len == 9 + 4*obs_dim; flags bit0 = reset episode)
+//! reply   := u32 len | u64 session | u64 version | f32 value
+//!            | i32 × slots actions
+//!            (len == 20 + 4*slots; version = weight snapshot version)
+//! ```
+//!
+//! ## JSON debug mode
+//!
+//! If the first byte the client sends is `{` instead of the magic, the
+//! connection switches to newline-delimited JSON. The server sends a
+//! hello line `{"proto":"puffer-serve","obs_dim":N,"slots":K}`, then:
+//!
+//! ```text
+//! request := {"session": N, "reset": bool, "obs": [f, ...]} "\n"
+//! reply   := {"session": N, "version": V, "value": f, "actions": [i, ...]} "\n"
+//! ```
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// First bytes of a binary-mode connection (client → server).
+pub const CLIENT_MAGIC: &[u8; 4] = b"PUFB";
+/// First bytes of the binary-mode hello (server → client).
+pub const SERVER_MAGIC: &[u8; 4] = b"PUFS";
+/// Hard cap on any framed payload; a length prefix above this is
+/// treated as a corrupt stream rather than an allocation request.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// One observation submitted for inference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepRequest {
+    /// Client-chosen session id; recurrent state is keyed on it.
+    pub session: u64,
+    /// Episode boundary: zero this session's recurrent state before
+    /// the forward that consumes this observation.
+    pub reset: bool,
+    /// Flattened observation row, exactly `obs_dim` wide.
+    pub obs: Vec<f32>,
+}
+
+/// The action the policy chose for one [`StepRequest`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepReply {
+    /// Echoed from the request.
+    pub session: u64,
+    /// Monotone weight-snapshot version the forward ran with.
+    pub version: u64,
+    /// Critic value estimate for the observation.
+    pub value: f32,
+    /// Greedy action per head slot (MultiDiscrete layout).
+    pub actions: Vec<i32>,
+}
+
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    // EOF is only clean at a frame boundary: nothing read yet.
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..]).context("serve socket read")?;
+        if n == 0 {
+            ensure!(got == 0, "connection closed mid-frame ({got} of {} bytes)", buf.len());
+            return Ok(false);
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
+fn u32_le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn u64_le(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Read one length-prefixed frame payload. `Ok(None)` on clean EOF.
+fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len_buf)? {
+        return Ok(None);
+    }
+    let len = u32_le(&len_buf) as usize;
+    ensure!(len <= MAX_FRAME, "frame length {len} exceeds the {MAX_FRAME}-byte cap");
+    let mut payload = vec![0u8; len];
+    ensure!(
+        read_exact_or_eof(r, &mut payload)? || len == 0,
+        "connection closed mid-frame (0 of {len} payload bytes)"
+    );
+    Ok(Some(payload))
+}
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    ensure!(payload.len() <= MAX_FRAME, "frame length {} exceeds the cap", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(payload))
+        .context("serve socket write")
+}
+
+/// Server side: announce the model geometry after seeing [`CLIENT_MAGIC`].
+pub fn write_hello(w: &mut impl Write, obs_dim: usize, slots: usize) -> Result<()> {
+    let mut buf = Vec::with_capacity(12);
+    buf.extend_from_slice(SERVER_MAGIC);
+    buf.extend_from_slice(&(obs_dim as u32).to_le_bytes());
+    buf.extend_from_slice(&(slots as u32).to_le_bytes());
+    w.write_all(&buf).context("serve hello write")?;
+    w.flush().context("serve hello flush")
+}
+
+/// Client side: read the hello, returning `(obs_dim, slots)`.
+pub fn read_hello(r: &mut impl Read) -> Result<(usize, usize)> {
+    let mut buf = [0u8; 12];
+    ensure!(read_exact_or_eof(r, &mut buf)?, "server closed before hello");
+    ensure!(&buf[..4] == SERVER_MAGIC, "bad server magic {:?}", &buf[..4]);
+    Ok((u32_le(&buf[4..8]) as usize, u32_le(&buf[8..12]) as usize))
+}
+
+/// Encode a request as one binary frame.
+pub fn write_request(w: &mut impl Write, req: &StepRequest) -> Result<()> {
+    let mut payload = Vec::with_capacity(9 + 4 * req.obs.len());
+    payload.extend_from_slice(&req.session.to_le_bytes());
+    payload.push(req.reset as u8);
+    for v in &req.obs {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    write_frame(w, &payload)
+}
+
+/// Decode one binary request frame; `Ok(None)` on clean EOF. The
+/// observation width is enforced against the served model's `obs_dim`.
+pub fn read_request(r: &mut impl Read, obs_dim: usize) -> Result<Option<StepRequest>> {
+    let Some(payload) = read_frame(r)? else {
+        return Ok(None);
+    };
+    let want = 9 + 4 * obs_dim;
+    ensure!(
+        payload.len() == want,
+        "request frame is {} bytes, expected {want} (obs_dim {obs_dim})",
+        payload.len()
+    );
+    let flags = payload[8];
+    ensure!(flags <= 1, "unknown request flags {flags:#04x}");
+    let obs = payload[9..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Some(StepRequest {
+        session: u64_le(&payload[..8]),
+        reset: flags & 1 != 0,
+        obs,
+    }))
+}
+
+/// Encode a reply as one binary frame.
+pub fn write_reply(w: &mut impl Write, rep: &StepReply) -> Result<()> {
+    let mut payload = Vec::with_capacity(20 + 4 * rep.actions.len());
+    payload.extend_from_slice(&rep.session.to_le_bytes());
+    payload.extend_from_slice(&rep.version.to_le_bytes());
+    payload.extend_from_slice(&rep.value.to_le_bytes());
+    for a in &rep.actions {
+        payload.extend_from_slice(&a.to_le_bytes());
+    }
+    write_frame(w, &payload)
+}
+
+/// Decode one binary reply frame; `Ok(None)` on clean EOF.
+pub fn read_reply(r: &mut impl Read, slots: usize) -> Result<Option<StepReply>> {
+    let Some(payload) = read_frame(r)? else {
+        return Ok(None);
+    };
+    let want = 20 + 4 * slots;
+    ensure!(
+        payload.len() == want,
+        "reply frame is {} bytes, expected {want} (slots {slots})",
+        payload.len()
+    );
+    let actions = payload[20..]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Some(StepReply {
+        session: u64_le(&payload[..8]),
+        version: u64_le(&payload[8..16]),
+        value: f32::from_le_bytes([payload[16], payload[17], payload[18], payload[19]]),
+        actions,
+    }))
+}
+
+/// JSON-mode hello line (no trailing newline; callers add it).
+pub fn hello_json(obs_dim: usize, slots: usize) -> String {
+    json::obj(vec![
+        ("proto", json::s("puffer-serve")),
+        ("obs_dim", json::num(obs_dim as f64)),
+        ("slots", json::num(slots as f64)),
+    ])
+    .dump()
+}
+
+/// Parse one JSON-mode request line.
+pub fn request_from_json(line: &str, obs_dim: usize) -> Result<StepRequest> {
+    let j = Json::parse(line).context("serve JSON request")?;
+    let session = j
+        .get("session")
+        .as_f64()
+        .context("request needs a numeric \"session\"")? as u64;
+    let reset = j.get("reset").as_bool().unwrap_or(false);
+    let obs_arr = j
+        .get("obs")
+        .as_arr()
+        .context("request needs an \"obs\" array")?;
+    ensure!(
+        obs_arr.len() == obs_dim,
+        "request obs has {} values, expected {obs_dim}",
+        obs_arr.len()
+    );
+    let mut obs = Vec::with_capacity(obs_arr.len());
+    for (i, v) in obs_arr.iter().enumerate() {
+        obs.push(v.as_f64().with_context(|| format!("obs[{i}] is not a number"))? as f32);
+    }
+    Ok(StepRequest { session, reset, obs })
+}
+
+/// Encode one JSON-mode request line (no trailing newline).
+pub fn request_to_json(req: &StepRequest) -> String {
+    json::obj(vec![
+        ("session", json::num(req.session as f64)),
+        ("reset", Json::Bool(req.reset)),
+        ("obs", json::arr(req.obs.iter().map(|&v| json::num(v as f64)).collect())),
+    ])
+    .dump()
+}
+
+/// Encode one JSON-mode reply line (no trailing newline).
+pub fn reply_to_json(rep: &StepReply) -> String {
+    json::obj(vec![
+        ("session", json::num(rep.session as f64)),
+        ("version", json::num(rep.version as f64)),
+        ("value", json::num(rep.value as f64)),
+        ("actions", json::arr(rep.actions.iter().map(|&a| json::num(a as f64)).collect())),
+    ])
+    .dump()
+}
+
+/// Parse one JSON-mode reply line.
+pub fn reply_from_json(line: &str) -> Result<StepReply> {
+    let j = Json::parse(line).context("serve JSON reply")?;
+    let field = |k: &str| -> Result<f64> {
+        j.get(k)
+            .as_f64()
+            .with_context(|| format!("reply needs a numeric {k:?}"))
+    };
+    let actions_arr = j
+        .get("actions")
+        .as_arr()
+        .context("reply needs an \"actions\" array")?;
+    let mut actions = Vec::with_capacity(actions_arr.len());
+    for (i, a) in actions_arr.iter().enumerate() {
+        actions.push(a.as_f64().with_context(|| format!("actions[{i}] is not a number"))? as i32);
+    }
+    Ok(StepReply {
+        session: field("session")? as u64,
+        version: field("version")? as u64,
+        value: field("value")? as f32,
+        actions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(session: u64, reset: bool, obs: &[f32]) -> StepRequest {
+        StepRequest { session, reset, obs: obs.to_vec() }
+    }
+
+    #[test]
+    fn binary_request_round_trips() {
+        let r = req(42, true, &[0.5, -1.25, 3.0]);
+        let mut buf = Vec::new();
+        write_request(&mut buf, &r).unwrap();
+        assert_eq!(buf.len(), 4 + 9 + 12, "frame layout drifted");
+        let back = read_request(&mut buf.as_slice(), 3).unwrap().unwrap();
+        assert_eq!(back, r);
+        // Clean EOF after the frame.
+        let mut rest = &buf[buf.len()..];
+        assert!(read_request(&mut rest, 3).unwrap().is_none());
+    }
+
+    #[test]
+    fn binary_reply_round_trips() {
+        let rep = StepReply { session: 7, version: 3, value: -0.125, actions: vec![2, 0] };
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &rep).unwrap();
+        assert_eq!(buf.len(), 4 + 20 + 8, "frame layout drifted");
+        let back = read_reply(&mut buf.as_slice(), 2).unwrap().unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn hello_round_trips() {
+        let mut buf = Vec::new();
+        write_hello(&mut buf, 11, 4).unwrap();
+        assert_eq!(read_hello(&mut buf.as_slice()).unwrap(), (11, 4));
+    }
+
+    #[test]
+    fn wrong_width_request_is_rejected() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req(1, false, &[1.0, 2.0])).unwrap();
+        let err = read_request(&mut buf.as_slice(), 5).unwrap_err().to_string();
+        assert!(err.contains("expected"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req(1, false, &[1.0])).unwrap();
+        buf.truncate(buf.len() - 2);
+        let err = read_request(&mut buf.as_slice(), 1).unwrap_err().to_string();
+        assert!(err.contains("mid-frame"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let buf = (u32::MAX).to_le_bytes();
+        let err = read_request(&mut buf.as_slice(), 1).unwrap_err().to_string();
+        assert!(err.contains("cap"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let r = req(1, false, &[1.0]);
+        let mut buf = Vec::new();
+        write_request(&mut buf, &r).unwrap();
+        buf[4 + 8] = 0x80;
+        let err = read_request(&mut buf.as_slice(), 1).unwrap_err().to_string();
+        assert!(err.contains("flags"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn json_request_round_trips() {
+        let r = req(9, true, &[0.0, 1.5]);
+        let back = request_from_json(&request_to_json(&r), 2).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn json_reply_round_trips() {
+        let rep = StepReply { session: 9, version: 12, value: 0.75, actions: vec![1] };
+        let back = reply_from_json(&reply_to_json(&rep)).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn json_request_validates_width_and_types() {
+        assert!(request_from_json(r#"{"session":1,"obs":[1,2,3]}"#, 2).is_err());
+        assert!(request_from_json(r#"{"obs":[1,2]}"#, 2).is_err());
+        // reset defaults to false.
+        let r = request_from_json(r#"{"session":1,"obs":[1,2]}"#, 2).unwrap();
+        assert!(!r.reset);
+    }
+}

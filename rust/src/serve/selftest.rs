@@ -1,0 +1,314 @@
+//! Synthetic open-loop load generator: `puffer serve --selftest` and
+//! `benches/serve_latency.rs` drive a real in-process server over real
+//! TCP sockets with deterministic traffic, then report latency
+//! percentiles, batch occupancy, and sessions served — into
+//! `BENCH_serve.json` when `PUFFER_BENCH_JSON` is set.
+//!
+//! The run doubles as an end-to-end correctness gate: every request
+//! must be answered (zero drops), per-session snapshot versions must be
+//! monotone, and a mid-run checkpoint rewrite must roll the weights
+//! live (the watcher picks it up while traffic flows).
+
+use super::model::ServedModel;
+use super::protocol::{self, StepRequest};
+use super::server::Server;
+use super::ServeConfig;
+use crate::runspec::RunSpec;
+use crate::sync::atomic::Ordering;
+use crate::train::Checkpoint;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Load-generator shape. Defaults match the acceptance gate: ≥10k
+/// requests over ≥64 sessions.
+#[derive(Clone, Debug)]
+pub struct SelftestConfig {
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent sessions (partitioned evenly across clients).
+    pub sessions: usize,
+    /// Client connections.
+    pub clients: usize,
+    /// Pipelining window per client: requests in flight before the
+    /// client reads a reply. >1 is what gives the batcher something to
+    /// coalesce.
+    pub window: usize,
+    /// Rewrite the checkpoint mid-run to exercise the hot-swap watcher.
+    pub hot_swap: bool,
+}
+
+impl Default for SelftestConfig {
+    fn default() -> Self {
+        SelftestConfig {
+            requests: 10_000,
+            sessions: 64,
+            clients: 8,
+            window: 8,
+            hot_swap: true,
+        }
+    }
+}
+
+/// What the run measured. All latencies in microseconds, wall-clock
+/// from request write to reply read on the client thread.
+#[derive(Clone, Debug)]
+pub struct SelftestReport {
+    pub requests: u64,
+    pub sessions: u64,
+    pub batches: u64,
+    pub occupancy: f64,
+    pub max_batch: u64,
+    pub multi_row_batches: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub dropped: u64,
+    pub evicted: u64,
+    /// Highest weight-snapshot version observed in replies (≥1 proves
+    /// the hot-swap landed).
+    pub max_version: u64,
+    pub elapsed_ms: u64,
+}
+
+/// Write a freshly initialized (untrained) checkpoint for `spec` —
+/// tests and the latency bench use this to get a servable file without
+/// running a training loop.
+pub fn write_synthetic_checkpoint(spec: &RunSpec, path: &str) -> Result<()> {
+    use crate::backend::PolicyBackend;
+    let mut backend = ServedModel::backend_for(spec)?;
+    let params = backend.init_params()?;
+    let n = params.len();
+    Checkpoint {
+        spec_key: backend.key().to_string(),
+        run_spec_json: Some(spec.to_json().dump()),
+        global_step: 0,
+        params,
+        adam_m: vec![0.0; n],
+        adam_v: vec![0.0; n],
+        adam_step: 0.0,
+    }
+    .save(path)
+}
+
+/// Deterministic observation for `(session, step)` — cheap, spread over
+/// [0, 1), and unique enough that replies can be sanity-checked against
+/// a serial forward in tests.
+pub fn synthetic_obs(session: u64, step: u64, obs_dim: usize) -> Vec<f32> {
+    (0..obs_dim)
+        .map(|j| {
+            let x = session
+                .wrapping_mul(31)
+                .wrapping_add(step.wrapping_mul(7))
+                .wrapping_add(j as u64)
+                % 97;
+            x as f32 / 97.0
+        })
+        .collect()
+}
+
+/// Run the load against `ckpt_path`. Binds an ephemeral port (the
+/// `cfg.port` value is ignored by design — a selftest never squats the
+/// configured one).
+pub fn run(ckpt_path: &str, cfg: &ServeConfig, st: &SelftestConfig) -> Result<SelftestReport> {
+    anyhow::ensure!(st.clients >= 1, "selftest needs at least one client");
+    anyhow::ensure!(
+        st.sessions >= st.clients,
+        "selftest needs at least one session per client ({} sessions, {} clients)",
+        st.sessions,
+        st.clients
+    );
+    let model = ServedModel::open(ckpt_path)?;
+    let obs_dim = model.obs_dim();
+    let mut serve_cfg = cfg.clone();
+    serve_cfg.port = 0;
+    let handle = Server::start(model, &serve_cfg, Some(ckpt_path))?;
+    let addr = handle.addr();
+
+    let started = Instant::now();
+    let per_client = st.requests / st.clients;
+    let sessions_per_client = st.sessions / st.clients;
+    let mut clients = Vec::with_capacity(st.clients);
+    for client_idx in 0..st.clients {
+        let window = st.window.max(1);
+        clients.push(std::thread::spawn(move || -> Result<(Vec<u64>, u64)> {
+            let stream = TcpStream::connect(addr).context("selftest connect")?;
+            stream.set_nodelay(true).ok();
+            let mut writer = BufWriter::new(stream.try_clone().context("clone stream")?);
+            let mut reader = BufReader::new(stream);
+            writer.write_all(protocol::CLIENT_MAGIC).context("magic")?;
+            writer.flush().context("magic flush")?;
+            let (dim, slots) = protocol::read_hello(&mut reader)?;
+            anyhow::ensure!(dim == obs_dim, "hello obs_dim {dim} != model {obs_dim}");
+
+            let session_of = |k: usize| -> u64 {
+                (client_idx * sessions_per_client + k % sessions_per_client) as u64
+            };
+            let mut steps: HashMap<u64, u64> = HashMap::new();
+            let mut sent_at: HashMap<u64, VecDeque<Instant>> = HashMap::new();
+            let mut last_version: HashMap<u64, u64> = HashMap::new();
+            let mut latencies = Vec::with_capacity(per_client);
+            let mut max_version = 0u64;
+            let (mut sent, mut received) = (0usize, 0usize);
+            while received < per_client {
+                while sent < per_client && sent - received < window {
+                    let session = session_of(sent);
+                    let step = steps.entry(session).or_insert(0);
+                    let req = StepRequest {
+                        session,
+                        // Periodic episode boundary: exercises per-row reset.
+                        reset: *step % 16 == 0,
+                        obs: synthetic_obs(session, *step, obs_dim),
+                    };
+                    *step += 1;
+                    sent_at.entry(session).or_default().push_back(Instant::now());
+                    protocol::write_request(&mut writer, &req)?;
+                    writer.flush().context("request flush")?;
+                    sent += 1;
+                }
+                let rep = protocol::read_reply(&mut reader, slots)?
+                    .context("server closed before all replies arrived")?;
+                let t0 = sent_at
+                    .get_mut(&rep.session)
+                    .and_then(VecDeque::pop_front)
+                    .context("reply for a session with nothing outstanding")?;
+                latencies.push(t0.elapsed().as_micros() as u64);
+                let prev = last_version.entry(rep.session).or_insert(0);
+                anyhow::ensure!(
+                    rep.version >= *prev,
+                    "session {} saw version {} after {} — snapshot versions regressed",
+                    rep.session,
+                    rep.version,
+                    *prev
+                );
+                *prev = rep.version;
+                max_version = max_version.max(rep.version);
+                received += 1;
+            }
+            Ok((latencies, max_version))
+        }));
+    }
+
+    // Hot-swap mid-run: once a quarter of the traffic has been served,
+    // rewrite the checkpoint in place (same weights, bumped step) and
+    // wait for the watcher to publish it while the clients keep going.
+    let mut swap_error = None;
+    if st.hot_swap {
+        let quarter = (st.requests / 4) as u64;
+        let swap_deadline = Instant::now() + Duration::from_secs(30);
+        // ordering: Relaxed — stat counter poll, no data dependence.
+        while handle.stats().requests.load(Ordering::Relaxed) < quarter {
+            if Instant::now() > swap_deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        match Checkpoint::load(ckpt_path) {
+            Ok(mut ck) => {
+                ck.global_step += 1;
+                if let Err(e) = ck.save(ckpt_path) {
+                    swap_error = Some(e);
+                } else {
+                    let publish_deadline = Instant::now() + Duration::from_secs(10);
+                    while handle.snapshot_version() == 0 && Instant::now() < publish_deadline {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    if handle.snapshot_version() == 0 {
+                        swap_error =
+                            Some(anyhow::anyhow!("watcher never published the rewritten file"));
+                    }
+                }
+            }
+            Err(e) => swap_error = Some(e),
+        }
+    }
+
+    let mut latencies = Vec::with_capacity(st.requests);
+    let mut max_version = 0u64;
+    for c in clients {
+        // PANIC: client threads hold no shared lock; propagate panics.
+        let (lat, v) = c.join().expect("selftest client panicked")?;
+        latencies.extend(lat);
+        max_version = max_version.max(v);
+    }
+    if let Some(e) = swap_error {
+        return Err(e.context("hot-swap leg of the selftest"));
+    }
+
+    let stats = handle.stats();
+    latencies.sort_unstable();
+    let pct = |p: f64| -> u64 {
+        if latencies.is_empty() {
+            return 0;
+        }
+        let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
+        latencies[idx]
+    };
+    // ordering: Relaxed — every client joined; these are final tallies.
+    let answered = stats.requests.load(Ordering::Relaxed);
+    let report = SelftestReport {
+        requests: answered,
+        sessions: stats.sessions.load(Ordering::Relaxed),
+        batches: stats.batches.load(Ordering::Relaxed),
+        occupancy: stats.occupancy(),
+        max_batch: stats.max_batch.load(Ordering::Relaxed),
+        multi_row_batches: stats.multi_row_batches.load(Ordering::Relaxed),
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        dropped: answered.saturating_sub(latencies.len() as u64)
+            + stats.hangups.load(Ordering::Relaxed),
+        evicted: stats.evicted.load(Ordering::Relaxed),
+        max_version,
+        elapsed_ms: started.elapsed().as_millis() as u64,
+    };
+    handle.shutdown()?;
+    Ok(report)
+}
+
+/// The report as the `BENCH_serve.json` object.
+pub fn report_json(r: &SelftestReport) -> Json {
+    json::obj(vec![
+        ("bench", json::s("serve_latency")),
+        ("requests", json::num(r.requests as f64)),
+        ("sessions", json::num(r.sessions as f64)),
+        ("batches", json::num(r.batches as f64)),
+        ("occupancy", json::num(r.occupancy)),
+        ("max_batch", json::num(r.max_batch as f64)),
+        ("multi_row_batches", json::num(r.multi_row_batches as f64)),
+        ("p50_us", json::num(r.p50_us as f64)),
+        ("p99_us", json::num(r.p99_us as f64)),
+        ("dropped", json::num(r.dropped as f64)),
+        ("evicted", json::num(r.evicted as f64)),
+        ("max_version", json::num(r.max_version as f64)),
+        ("elapsed_ms", json::num(r.elapsed_ms as f64)),
+    ])
+}
+
+/// Honor `PUFFER_BENCH_JSON`: write the report there if set, returning
+/// the path written.
+pub fn maybe_write_bench_json(r: &SelftestReport) -> Result<Option<String>> {
+    let Ok(path) = std::env::var("PUFFER_BENCH_JSON") else {
+        return Ok(None);
+    };
+    std::fs::write(&path, report_json(r).dump())
+        .with_context(|| format!("writing {path}"))?;
+    Ok(Some(path))
+}
+
+/// Human-readable summary for the CLI.
+pub fn print_report(r: &SelftestReport) {
+    println!(
+        "serve selftest: {} requests over {} sessions in {} ms",
+        r.requests, r.sessions, r.elapsed_ms
+    );
+    println!(
+        "  batches {}  occupancy {:.2}  max batch {}  multi-row {}",
+        r.batches, r.occupancy, r.max_batch, r.multi_row_batches
+    );
+    println!(
+        "  latency p50 {} us  p99 {} us  dropped {}  weight version {}",
+        r.p50_us, r.p99_us, r.dropped, r.max_version
+    );
+}

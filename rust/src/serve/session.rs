@@ -1,0 +1,184 @@
+//! Per-session recurrent state: each client session owns an LSTM
+//! `(h, c)` pair the size of the policy's hidden width. Sessions are
+//! created lazily on first request, zeroed on episode boundaries (the
+//! request's `reset` flag), and evicted once idle longer than the TTL.
+//!
+//! The table is owned by exactly one batcher shard (sessions are pinned
+//! to shards by id), so it needs no interior locking — the concurrency
+//! story lives in the request queue, not here.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+struct Session {
+    h: Vec<f32>,
+    c: Vec<f32>,
+    last_used: Instant,
+}
+
+/// One shard's session store.
+pub struct SessionTable {
+    /// Hidden width per state vector; 0 for feedforward policies (the
+    /// table then only tracks liveness for stats).
+    state_dim: usize,
+    ttl: Duration,
+    sessions: HashMap<u64, Session>,
+    last_sweep: Instant,
+    /// Total sessions ever created (monotone; eviction does not undo it).
+    created: u64,
+    /// Total sessions evicted by the TTL.
+    evicted: u64,
+}
+
+impl SessionTable {
+    pub fn new(state_dim: usize, ttl: Duration) -> Self {
+        SessionTable {
+            state_dim,
+            ttl,
+            sessions: HashMap::new(),
+            last_sweep: Instant::now(),
+            created: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Fetch session state for one request, applying the reset flag.
+    /// Appends the session's `(h, c)` to the batch gather buffers and
+    /// stamps it live. New sessions (and resets) contribute zeros —
+    /// exactly what the trainer feeds at episode starts.
+    pub fn gather(&mut self, id: u64, reset: bool, h_batch: &mut Vec<f32>, c_batch: &mut Vec<f32>) {
+        let now = Instant::now();
+        let sd = self.state_dim;
+        let entry = self.sessions.entry(id).or_insert_with(|| {
+            self.created += 1;
+            Session {
+                h: vec![0.0; sd],
+                c: vec![0.0; sd],
+                last_used: now,
+            }
+        });
+        if reset {
+            entry.h.iter_mut().for_each(|v| *v = 0.0);
+            entry.c.iter_mut().for_each(|v| *v = 0.0);
+        }
+        entry.last_used = now;
+        h_batch.extend_from_slice(&entry.h);
+        c_batch.extend_from_slice(&entry.c);
+    }
+
+    /// Write one batch row's updated state back into a session. A
+    /// session evicted between gather and scatter (impossible within a
+    /// shard, but cheap to tolerate) is silently dropped.
+    pub fn scatter(&mut self, id: u64, h_row: &[f32], c_row: &[f32]) {
+        debug_assert_eq!(h_row.len(), self.state_dim);
+        if let Some(s) = self.sessions.get_mut(&id) {
+            s.h.copy_from_slice(h_row);
+            s.c.copy_from_slice(c_row);
+        }
+    }
+
+    /// Drop sessions idle past the TTL. Rate-limited to ~1 sweep/s so
+    /// the scan never taxes the request path; pass `force` to sweep
+    /// unconditionally (tests, shutdown accounting).
+    pub fn evict_idle(&mut self, force: bool) -> usize {
+        let now = Instant::now();
+        if !force && now.duration_since(self.last_sweep) < Duration::from_secs(1) {
+            return 0;
+        }
+        self.last_sweep = now;
+        let ttl = self.ttl;
+        let before = self.sessions.len();
+        self.sessions
+            .retain(|_, s| now.duration_since(s.last_used) < ttl);
+        let gone = before - self.sessions.len();
+        self.evicted += gone as u64;
+        gone
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Whether a session currently holds state (mostly for tests).
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// Sessions ever created on this shard.
+    pub fn created(&self) -> u64 {
+        self.created
+    }
+
+    /// Sessions evicted on this shard.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(ttl_ms: u64) -> SessionTable {
+        SessionTable::new(2, Duration::from_millis(ttl_ms))
+    }
+
+    #[test]
+    fn new_sessions_start_zeroed_and_persist_state() {
+        let mut t = table(10_000);
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(7, false, &mut h, &mut c);
+        assert_eq!(h, vec![0.0, 0.0]);
+        assert_eq!(c, vec![0.0, 0.0]);
+        t.scatter(7, &[1.0, 2.0], &[3.0, 4.0]);
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(7, false, &mut h, &mut c);
+        assert_eq!(h, vec![1.0, 2.0]);
+        assert_eq!(c, vec![3.0, 4.0]);
+        assert_eq!(t.created(), 1, "touching is not creating");
+    }
+
+    #[test]
+    fn reset_zeroes_state_without_dropping_the_session() {
+        let mut t = table(10_000);
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(7, false, &mut h, &mut c);
+        t.scatter(7, &[1.0, 2.0], &[3.0, 4.0]);
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(7, true, &mut h, &mut c);
+        assert_eq!(h, vec![0.0, 0.0], "reset must zero h");
+        assert_eq!(c, vec![0.0, 0.0], "reset must zero c");
+        assert_eq!(t.created(), 1);
+    }
+
+    #[test]
+    fn idle_sessions_are_evicted_and_recreated_fresh() {
+        let mut t = table(0); // everything is instantly idle
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(1, false, &mut h, &mut c);
+        t.scatter(1, &[9.0, 9.0], &[9.0, 9.0]);
+        assert_eq!(t.evict_idle(true), 1);
+        assert!(!t.contains(1));
+        assert_eq!(t.evicted(), 1);
+        // The same id comes back zeroed, not with its old state.
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(1, false, &mut h, &mut c);
+        assert_eq!(h, vec![0.0, 0.0]);
+        assert_eq!(t.created(), 2);
+    }
+
+    #[test]
+    fn live_sessions_survive_the_sweep() {
+        let mut t = table(60_000);
+        let (mut h, mut c) = (Vec::new(), Vec::new());
+        t.gather(1, false, &mut h, &mut c);
+        t.gather(2, false, &mut h, &mut c);
+        assert_eq!(t.evict_idle(true), 0);
+        assert_eq!(t.len(), 2);
+    }
+}

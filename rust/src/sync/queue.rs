@@ -94,7 +94,36 @@ impl<T> Sender<T> {
     }
 }
 
+/// Outcome of a [`Receiver::try_recv`] poll.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecv<T> {
+    /// An item was waiting.
+    Item(T),
+    /// The queue is momentarily empty but senders are still alive.
+    Empty,
+    /// The queue is drained and every sender has dropped — the
+    /// non-blocking twin of [`Receiver::recv`] returning `None`.
+    Disconnected,
+}
+
 impl<T> Receiver<T> {
+    /// Non-blocking receive — the serve batcher's dual-budget collect
+    /// loop polls this between forwards instead of parking on `recv`, so
+    /// the `max_wait_us` budget stays in the caller's hands.
+    pub fn try_recv(&self) -> TryRecv<T> {
+        let mut st = lock_unpoisoned(&self.shared.state);
+        if let Some(item) = st.items.pop_front() {
+            // Wake a sender blocked on capacity.
+            self.shared.cond.notify_all();
+            return TryRecv::Item(item);
+        }
+        if st.senders == 0 {
+            TryRecv::Disconnected
+        } else {
+            TryRecv::Empty
+        }
+    }
+
     /// Blocking receive. `None` once the queue is drained and every
     /// sender has dropped.
     pub fn recv(&self) -> Option<T> {
@@ -201,6 +230,38 @@ mod tests {
         drop(tx2);
         assert_eq!(rx.recv(), Some(9));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn try_recv_reports_all_three_states() {
+        let (tx, rx) = channel::<u32>(None);
+        assert_eq!(rx.try_recv(), TryRecv::Empty);
+        tx.send(5).unwrap();
+        assert_eq!(rx.try_recv(), TryRecv::Item(5));
+        assert_eq!(rx.try_recv(), TryRecv::Empty);
+        tx.send(6).unwrap();
+        drop(tx);
+        // Drained-then-disconnected, never items lost to the hangup.
+        assert_eq!(rx.try_recv(), TryRecv::Item(6));
+        assert_eq!(rx.try_recv(), TryRecv::Disconnected);
+    }
+
+    #[test]
+    fn try_recv_frees_a_blocked_sender() {
+        let (tx, rx) = channel::<u32>(Some(1));
+        assert!(tx.send(1).is_ok());
+        let blocked = thread::spawn(move || tx.send(2));
+        loop {
+            match rx.try_recv() {
+                TryRecv::Item(v) => {
+                    assert_eq!(v, 1);
+                    break;
+                }
+                _ => thread::yield_now(),
+            }
+        }
+        assert_eq!(blocked.join().expect("sender thread"), Ok(()));
+        assert_eq!(rx.recv(), Some(2));
     }
 
     #[test]

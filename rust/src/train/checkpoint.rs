@@ -53,6 +53,20 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read just the magic and format version — what `puffer ckpt info`
+    /// and serve use to tell a v1 (spec-less) file apart from a corrupt
+    /// one without pulling three parameter arrays into memory.
+    pub fn probe_version(path: impl AsRef<Path>) -> Result<u32> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a puffer checkpoint");
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        Ok(u32::from_le_bytes(u32b))
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let mut f = std::fs::File::open(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
@@ -176,6 +190,24 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
         assert_eq!(back.run_spec_json, None);
+        assert_eq!(Checkpoint::probe_version(&path).unwrap(), 1);
+    }
+
+    #[test]
+    fn probe_version_reads_the_header_only() {
+        let dir = std::env::temp_dir().join("puffer_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("probe.bin");
+        sample(None).save(&path).unwrap();
+        assert_eq!(Checkpoint::probe_version(&path).unwrap(), VERSION);
+        // A bare header probes fine even though load() would fail.
+        let path = dir.join("header_only.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&7u32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(Checkpoint::probe_version(&path).unwrap(), 7);
+        assert!(Checkpoint::probe_version(dir.join("garbage.bin")).is_err());
     }
 
     #[test]

@@ -262,3 +262,51 @@ fn reset_seed_matches_epoch() {
         assert_eq!(seen, vec![7, 9], "each RESET observes its own epoch's seed");
     });
 }
+
+/// The serve batcher's close/drain protocol (`serve/batcher.rs`,
+/// `serve/server.rs` module docs): connection readers and the accept
+/// loop drop their `Sender<Job>` clones at shutdown, and the shard —
+/// looping [`collect_batch`](pufferlib::serve::batcher::collect_batch)
+/// — must hand every request sent before the close to a forward pass,
+/// then observe `None` and exit. The model replaces the `Instant`
+/// deadline with a bounded poll counter (the closure is the real
+/// production seam: `expired()` is injected precisely so loom can drive
+/// it), and checks that no interleaving of producer sends, sender
+/// drops, and batch cuts can strand or duplicate a request.
+#[test]
+fn serve_batcher_drains_every_request_on_close() {
+    use pufferlib::serve::batcher::collect_batch;
+    loom::model(|| {
+        let (tx, rx) = queue::channel::<u32>(None);
+        let producers: Vec<_> = [1u32, 2u32]
+            .into_iter()
+            .map(|v| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    tx.send(v).expect("receiver outlives the producers");
+                })
+            })
+            .collect();
+        drop(tx); // the accept loop's clones go away with it
+
+        // Shard loop: collect until the queue reports closed + drained.
+        let mut got = Vec::new();
+        loop {
+            let mut polls = 0u32;
+            let expired = move || {
+                polls += 1;
+                polls >= 2 // bounded budget so every branch terminates
+            };
+            let Some(batch) = collect_batch(&rx, 2, expired) else {
+                break;
+            };
+            got.extend(batch);
+        }
+
+        for p in producers {
+            p.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "every pre-close request reaches a batch exactly once");
+    });
+}

@@ -1,0 +1,350 @@
+//! Inference-server integration suite: the serving path end-to-end —
+//! batched forwards bit-identical to a serial client, per-session
+//! recurrent state isolation (interleaved sessions reproduce their solo
+//! trajectories), episode reset + idle eviction, deterministic weight
+//! hot-swaps with monotone versions and zero dropped requests, the JSON
+//! debug protocol, and a scaled-down run of the built-in load
+//! generator.
+//!
+//! Everything runs against synthetic (untrained) checkpoints written by
+//! `serve::selftest::write_synthetic_checkpoint` on an ephemeral port,
+//! with one shard so reply order is globally deterministic.
+
+use pufferlib::backend::PolicyBackend;
+use pufferlib::policy::{greedy_actions, PolicySpec};
+use pufferlib::runspec::RunSpec;
+use pufferlib::serve::protocol::{self, StepReply, StepRequest};
+use pufferlib::serve::selftest::{self, synthetic_obs, write_synthetic_checkpoint};
+use pufferlib::serve::{ServeConfig, ServedModel, Server, ServerHandle};
+use pufferlib::train::Checkpoint;
+use pufferlib::vector::VecSpec;
+use pufferlib::wrappers::EnvSpec;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("puffer_serve_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Feedforward spec on the smallest env.
+fn ff_spec() -> RunSpec {
+    RunSpec::new(EnvSpec::new("ocean/bandit"))
+        .with_vec(VecSpec::Serial)
+        .with_seed(5)
+}
+
+/// The same env with an LSTM sandwich, so replies depend on per-session
+/// state.
+fn lstm_spec() -> RunSpec {
+    ff_spec().with_policy(PolicySpec::default().with_hidden(32).with_lstm(16))
+}
+
+/// Write a synthetic checkpoint for `spec` and open it twice: once to
+/// serve, once as the serial reference.
+fn servable(name: &str, spec: &RunSpec) -> (String, ServedModel, ServedModel) {
+    let path = temp_dir(name).join("ckpt.bin");
+    let path = path.to_string_lossy().into_owned();
+    write_synthetic_checkpoint(spec, &path).unwrap();
+    (path.clone(), ServedModel::open(&path).unwrap(), ServedModel::open(&path).unwrap())
+}
+
+fn one_shard(max_batch: usize, max_wait_us: u64, session_ttl_s: u64) -> ServeConfig {
+    ServeConfig {
+        port: 0,
+        max_batch,
+        max_wait_us,
+        session_ttl_s,
+        threads: 1,
+    }
+}
+
+/// A binary-protocol client with the hello handshake done.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+    slots: usize,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).unwrap();
+        let mut w = s.try_clone().unwrap();
+        w.write_all(protocol::CLIENT_MAGIC).unwrap();
+        let mut r = BufReader::new(s);
+        let (_obs_dim, slots) = protocol::read_hello(&mut r).unwrap();
+        Client { w, r, slots }
+    }
+
+    fn send(&mut self, session: u64, reset: bool, obs: Vec<f32>) {
+        protocol::write_request(&mut self.w, &StepRequest { session, reset, obs }).unwrap();
+    }
+
+    fn recv(&mut self) -> StepReply {
+        protocol::read_reply(&mut self.r, self.slots).unwrap().expect("server closed early")
+    }
+}
+
+/// Serial reference: run `obs_seq` through the model one row at a time
+/// with a private state trajectory, exactly like a dedicated
+/// single-session server would.
+fn serial_trajectory(
+    model: &mut ServedModel,
+    params: &[f32],
+    obs_seq: &[(bool, Vec<f32>)],
+) -> Vec<(f32, Vec<i32>)> {
+    let (sd, act_dims) = (model.state_dim(), model.act_dims().to_vec());
+    let recurrent = model.recurrent();
+    let (mut h, mut c) = (vec![0.0f32; sd], vec![0.0f32; sd]);
+    let mut out = Vec::new();
+    for (reset, obs) in obs_seq {
+        if *reset {
+            h.iter_mut().for_each(|v| *v = 0.0);
+            c.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let (logits, value) = if recurrent {
+            let fwd = model.backend.forward_lstm(params, obs, &h, &c, 1).unwrap();
+            h = fwd.h;
+            c = fwd.c;
+            (fwd.logits, fwd.values[0])
+        } else {
+            let fwd = model.backend.forward(params, obs, 1).unwrap();
+            (fwd.logits, fwd.values[0])
+        };
+        out.push((value, greedy_actions(&logits, &act_dims)));
+    }
+    out
+}
+
+fn shutdown(handle: ServerHandle) {
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn feedforward_batches_are_bit_identical_to_serial() {
+    let spec = ff_spec();
+    let (_path, model, mut reference) = servable("ff_equality", &spec);
+    let params = model.params.clone();
+    let obs_dim = model.obs_dim();
+    // A generous wait budget so pipelined requests coalesce.
+    let handle = Server::start(model, &one_shard(8, 20_000, 300), None).unwrap();
+
+    let mut client = Client::connect(handle.addr());
+    let mut sent: Vec<(u64, Vec<f32>)> = Vec::new();
+    for step in 0..8u64 {
+        for session in 0..4u64 {
+            let obs = synthetic_obs(session, step, obs_dim);
+            client.send(session, false, obs.clone());
+            sent.push((session, obs));
+        }
+    }
+    // One shard + one connection = replies in exact send order.
+    for (session, obs) in &sent {
+        let rep = client.recv();
+        assert_eq!(rep.session, *session);
+        assert_eq!(rep.version, 0, "no swap happened");
+        let expected = serial_trajectory(&mut reference, &params, &[(false, obs.clone())]);
+        assert_eq!(rep.value, expected[0].0, "values must be bit-identical");
+        assert_eq!(rep.actions, expected[0].1);
+    }
+    drop(client);
+    shutdown(handle);
+}
+
+#[test]
+fn interleaved_lstm_sessions_reproduce_their_solo_trajectories() {
+    let spec = lstm_spec();
+    let (_path, model, mut reference) = servable("lstm_isolation", &spec);
+    assert!(model.recurrent(), "spec must resolve to an LSTM policy");
+    let params = model.params.clone();
+    let obs_dim = model.obs_dim();
+    let handle = Server::start(model, &one_shard(8, 20_000, 300), None).unwrap();
+
+    const STEPS: u64 = 10;
+    let mut client = Client::connect(handle.addr());
+    let mut per_session: Vec<Vec<(f32, Vec<i32>)>> = vec![Vec::new(); 2];
+    // Interleave two sessions request-by-request; the batcher may fuse
+    // them into shared forwards, but each must evolve its own state.
+    for step in 0..STEPS {
+        for session in 0..2u64 {
+            client.send(session, false, synthetic_obs(session, step, obs_dim));
+        }
+    }
+    for _ in 0..2 * STEPS {
+        let rep = client.recv();
+        per_session[rep.session as usize].push((rep.value, rep.actions));
+    }
+
+    for session in 0..2u64 {
+        let solo: Vec<(bool, Vec<f32>)> = (0..STEPS)
+            .map(|step| (false, synthetic_obs(session, step, obs_dim)))
+            .collect();
+        let expected = serial_trajectory(&mut reference, &params, &solo);
+        assert_eq!(
+            per_session[session as usize], expected,
+            "session {session} diverged from its solo trajectory"
+        );
+    }
+    drop(client);
+    shutdown(handle);
+}
+
+#[test]
+fn reset_and_idle_eviction_both_restart_the_state() {
+    let spec = lstm_spec();
+    let (_path, model, mut reference) = servable("reset_evict", &spec);
+    let params = model.params.clone();
+    let obs_dim = model.obs_dim();
+    // 1-second TTL so the test can observe an eviction sweep.
+    let handle = Server::start(model, &one_shard(8, 200, 1), None).unwrap();
+
+    let mut client = Client::connect(handle.addr());
+    let first_obs = synthetic_obs(7, 0, obs_dim);
+    let fresh = serial_trajectory(&mut reference, &params, &[(false, first_obs.clone())])
+        .remove(0);
+
+    // Three steps of state, then an in-band reset: the reply must match
+    // a fresh session bit for bit.
+    for step in 0..3u64 {
+        client.send(7, false, synthetic_obs(7, step, obs_dim));
+        let rep = client.recv();
+        if step == 0 {
+            assert_eq!((rep.value, rep.actions), fresh.clone());
+        }
+    }
+    client.send(7, true, first_obs.clone());
+    let rep = client.recv();
+    assert_eq!((rep.value, rep.actions), fresh.clone(), "reset must zero the state");
+
+    // Idle past the TTL; traffic on another session triggers the sweep.
+    std::thread::sleep(std::time::Duration::from_millis(1300));
+    client.send(8, false, synthetic_obs(8, 0, obs_dim));
+    client.recv();
+    assert!(
+        handle.stats().evicted.load(std::sync::atomic::Ordering::Relaxed) >= 1,
+        "idle session 7 should have been evicted"
+    );
+
+    // Same id, no reset flag: the evicted session restarts from zeros.
+    client.send(7, false, first_obs);
+    let rep = client.recv();
+    assert_eq!((rep.value, rep.actions), fresh, "evicted session must restart fresh");
+    drop(client);
+    shutdown(handle);
+}
+
+#[test]
+fn hot_swap_is_monotone_lossless_and_uses_the_new_weights() {
+    let spec = ff_spec();
+    let (_path, model, mut reference) = servable("hot_swap", &spec);
+    let old_params = model.params.clone();
+    let new_params: Vec<f32> = old_params.iter().map(|p| p * 1.5 + 0.01).collect();
+    let obs_dim = model.obs_dim();
+    let handle = Server::start(model, &one_shard(8, 200, 300), None).unwrap();
+
+    let mut client = Client::connect(handle.addr());
+    let mut last_version = 0u64;
+    let mut swapped_seen = false;
+    for step in 0..60u64 {
+        if step == 30 {
+            assert_eq!(handle.publish_params(&new_params).unwrap(), 1);
+        }
+        let obs = synthetic_obs(step % 4, step, obs_dim);
+        client.send(step % 4, false, obs.clone());
+        let rep = client.recv();
+        assert!(rep.version >= last_version, "versions must be monotone");
+        last_version = rep.version;
+        // The version in the reply names the weights that computed it.
+        let params = if rep.version == 0 { &old_params } else { &new_params };
+        let expected = serial_trajectory(&mut reference, params, &[(false, obs)]).remove(0);
+        assert_eq!((rep.value, rep.actions), expected);
+        swapped_seen |= rep.version == 1;
+    }
+    assert!(swapped_seen, "requests after publish must see version 1");
+
+    // Wrong-size weights are rejected before they can reach a batch.
+    let err = handle.publish_params(&new_params[1..]).unwrap_err().to_string();
+    assert!(err.contains("parameters"), "got: {err}");
+    drop(client);
+    shutdown(handle);
+}
+
+#[test]
+fn json_debug_mode_matches_the_binary_protocol() {
+    let spec = ff_spec();
+    let (_path, model, _reference) = servable("json_mode", &spec);
+    let obs_dim = model.obs_dim();
+    let handle = Server::start(model, &one_shard(8, 200, 300), None).unwrap();
+
+    // Binary reply for the reference.
+    let mut bin = Client::connect(handle.addr());
+    let obs = synthetic_obs(3, 0, obs_dim);
+    bin.send(3, false, obs.clone());
+    let expected = bin.recv();
+
+    // Same request as a JSON line.
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = std::io::BufRead::lines(BufReader::new(stream));
+    writeln!(
+        w,
+        "{}",
+        protocol::request_to_json(&StepRequest { session: 3, reset: false, obs })
+    )
+    .unwrap();
+    let hello = r.next().unwrap().unwrap();
+    assert!(hello.contains("puffer-serve"), "got hello: {hello}");
+    let reply = protocol::reply_from_json(&r.next().unwrap().unwrap()).unwrap();
+    assert_eq!(reply.session, expected.session);
+    assert_eq!(reply.actions, expected.actions);
+    assert_eq!(reply.value, expected.value, "JSON numbers round-trip f32 exactly");
+    drop(w);
+    drop(r);
+    drop(bin);
+    shutdown(handle);
+}
+
+#[test]
+fn spec_less_v2_checkpoints_fail_with_an_actionable_error() {
+    let dir = temp_dir("spec_less");
+    let path = dir.join("bare.bin");
+    let n = 8;
+    Checkpoint {
+        spec_key: "mystery".into(),
+        run_spec_json: None,
+        global_step: 0,
+        params: vec![0.0; n],
+        adam_m: vec![0.0; n],
+        adam_v: vec![0.0; n],
+        adam_step: 0.0,
+    }
+    .save(&path)
+    .unwrap();
+    let err = ServedModel::open(path.to_str().unwrap()).unwrap_err().to_string();
+    assert!(err.contains("no embedded RunSpec"), "got: {err}");
+}
+
+#[test]
+fn scaled_down_selftest_sustains_load_without_drops() {
+    let spec = lstm_spec();
+    let path = temp_dir("selftest").join("ckpt.bin");
+    let path = path.to_string_lossy().into_owned();
+    write_synthetic_checkpoint(&spec, &path).unwrap();
+    let cfg = one_shard(16, 500, 300);
+    let st = selftest::SelftestConfig {
+        requests: 800,
+        sessions: 32,
+        clients: 4,
+        window: 8,
+        hot_swap: true,
+    };
+    let report = selftest::run(&path, &cfg, &st).unwrap();
+    assert_eq!(report.requests, 800);
+    assert_eq!(report.dropped, 0, "every accepted request must be answered");
+    assert_eq!(report.sessions, 32);
+    assert!(report.max_version >= 1, "the hot-swap leg must land");
+    assert!(report.batches >= 1 && report.occupancy >= 1.0);
+}

@@ -1,9 +1,10 @@
 //! `cargo xtask lint` — repo-invariant checks that rustc/clippy cannot
 //! express (see `rust/CONCURRENCY.md` for the rationale behind each):
 //!
-//! - **R1 (ordering)**: every `Ordering::` use in `rust/src/vector/` and
-//!   `rust/src/policy/` carries a `// ordering:` comment on the same
-//!   line or within 3 lines above, naming the edge it establishes.
+//! - **R1 (ordering)**: every `Ordering::` use in `rust/src/vector/`,
+//!   `rust/src/policy/`, and `rust/src/serve/` carries a `// ordering:`
+//!   comment on the same line or within 3 lines above, naming the edge
+//!   it establishes.
 //! - **R2 (panic)**: no `.unwrap()` / `.expect(` in `rust/src` outside
 //!   `#[cfg(test)]` blocks without a `// PANIC:` justification on the
 //!   same line or within 3 lines above.
@@ -36,6 +37,7 @@ const FORBID_UNSAFE: &[&str] = &[
     "rust/src/envs/mod.rs",
     "rust/src/policy/mod.rs",
     "rust/src/runspec.rs",
+    "rust/src/serve/mod.rs",
     "rust/src/spaces/mod.rs",
     "rust/src/sync/mod.rs",
     "rust/src/train/mod.rs",
@@ -107,7 +109,10 @@ fn lint() -> ExitCode {
             }
         };
         scanned += 1;
-        if rel.starts_with("rust/src/vector/") || rel.starts_with("rust/src/policy/") {
+        if rel.starts_with("rust/src/vector/")
+            || rel.starts_with("rust/src/policy/")
+            || rel.starts_with("rust/src/serve/")
+        {
             findings.extend(check_ordering(&rel, &text));
         }
         findings.extend(check_panics(&rel, &text));
