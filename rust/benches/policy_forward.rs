@@ -9,13 +9,16 @@
 //! - `lstm` — the recurrent sandwich (state 128) with full BPTT in the
 //!   backward cell: what `ocean/memory`-class envs now pay natively.
 //!
-//! Reported per cell: rollout-forward rows/s (batch 32) and train-step
-//! samples/s (one full PPO update over the T×R segment).
+//! Every architecture runs twice — once per [`KernelPath`] — so each
+//! row is a scalar-vs-simd cell: rollout-forward rows/s (batch 32),
+//! train-step samples/s (one full PPO update over the T×R segment), and
+//! the simd-over-scalar speedup for both.
 //! `PUFFER_BENCH_POLICY_ITERS` scales iteration counts;
 //! `PUFFER_BENCH_JSON` writes machine-readable results (`make bench`
-//! sets it to `BENCH_policy.json`).
+//! sets it to `BENCH_policy.json`); `PUFFER_KERNEL_THREADS` caps the
+//! simd path's fork-join width.
 
-use pufferlib::backend::{AdamState, NativeBackend, PolicyBackend, TrainBatch};
+use pufferlib::backend::{AdamState, KernelPath, NativeBackend, PolicyBackend, TrainBatch};
 use pufferlib::policy::{PolicySpec, ResolvedPolicy};
 use pufferlib::runtime::SpecManifest;
 use pufferlib::spaces::Space;
@@ -27,11 +30,27 @@ const T: usize = 32;
 const R: usize = 32;
 const ACT: usize = 4;
 
-struct Cell {
-    label: &'static str,
+/// One (architecture, kernel path) measurement.
+struct Run {
     fwd_rows_per_s: f64,
     train_samples_per_s: f64,
     n_params: usize,
+}
+
+/// One table row: the same architecture under both kernel paths.
+struct Cell {
+    label: &'static str,
+    scalar: Run,
+    simd: Run,
+}
+
+impl Cell {
+    fn fwd_speedup(&self) -> f64 {
+        self.simd.fwd_rows_per_s / self.scalar.fwd_rows_per_s
+    }
+    fn train_speedup(&self) -> f64 {
+        self.simd.train_samples_per_s / self.scalar.train_samples_per_s
+    }
 }
 
 fn manifest_for(arch: &ResolvedPolicy) -> SpecManifest {
@@ -53,13 +72,14 @@ fn manifest_for(arch: &ResolvedPolicy) -> SpecManifest {
     }
 }
 
-fn bench_arch(label: &'static str, arch: ResolvedPolicy, iters: usize) -> Cell {
+fn bench_arch(label: &str, arch: ResolvedPolicy, iters: usize, path: KernelPath) -> Run {
     let spec = manifest_for(&arch);
     let d = arch.obs_dim;
     let lstm = arch.is_recurrent();
     let sd = arch.state_dim();
     let n_params = arch.n_params();
     let mut b = NativeBackend::from_arch(label.to_string(), spec, arch, 1).unwrap();
+    b.set_kernel_path(path);
     let params = b.init_params().unwrap();
 
     // Deterministic pseudo-random inputs; token slots get small values
@@ -108,8 +128,7 @@ fn bench_arch(label: &'static str, arch: ResolvedPolicy, iters: usize) -> Cell {
     }
     let train_samples_per_s = (train_iters * n) as f64 / t1.secs();
 
-    Cell {
-        label,
+    Run {
         fwd_rows_per_s,
         train_samples_per_s,
         n_params,
@@ -147,33 +166,70 @@ fn main() {
     )
     .unwrap();
 
-    println!("# Bench P3 — policy fwd/bwd throughput per architecture ({iters} fwd iters)");
     println!(
-        "| {:<14} | {:>10} | {:>14} | {:>16} |",
-        "Architecture", "params", "fwd rows/s", "train samples/s"
+        "# Bench P3 — policy fwd/bwd throughput, scalar vs simd kernels ({iters} fwd iters)"
     );
-    println!("|{}|{}|{}|{}|", "-".repeat(16), "-".repeat(12), "-".repeat(16), "-".repeat(18));
+    println!(
+        "| {:<14} | {:>10} | {:>12} | {:>12} | {:>7} | {:>12} | {:>12} | {:>7} |",
+        "Architecture",
+        "params",
+        "fwd scalar",
+        "fwd simd",
+        "speedup",
+        "train scalar",
+        "train simd",
+        "speedup"
+    );
+    println!(
+        "|{}|{}|{}|{}|{}|{}|{}|{}|",
+        "-".repeat(16),
+        "-".repeat(12),
+        "-".repeat(14),
+        "-".repeat(14),
+        "-".repeat(9),
+        "-".repeat(14),
+        "-".repeat(14),
+        "-".repeat(9)
+    );
     let mut cells = Vec::new();
     for (label, arch) in [("flat-mlp", flat), ("embed-tokens", embed), ("lstm", lstm)] {
-        let cell = bench_arch(label, arch, iters);
+        let scalar = bench_arch(label, arch.clone(), iters, KernelPath::Scalar);
+        let simd = bench_arch(label, arch, iters, KernelPath::Simd);
+        let cell = Cell { label, scalar, simd };
         println!(
-            "| {:<14} | {:>10} | {:>14.0} | {:>16.0} |",
-            cell.label, cell.n_params, cell.fwd_rows_per_s, cell.train_samples_per_s
+            "| {:<14} | {:>10} | {:>12.0} | {:>12.0} | {:>6.2}x | {:>12.0} | {:>12.0} | {:>6.2}x |",
+            cell.label,
+            cell.scalar.n_params,
+            cell.scalar.fwd_rows_per_s,
+            cell.simd.fwd_rows_per_s,
+            cell.fwd_speedup(),
+            cell.scalar.train_samples_per_s,
+            cell.simd.train_samples_per_s,
+            cell.train_speedup(),
         );
         cells.push(cell);
     }
     println!("\n# flat-mlp is the baseline; embed-tokens trades a gather for a");
     println!("# narrower effective input; lstm pays the cell + BPTT tax natively.");
+    println!("# acceptance: simd >= 4x scalar forward, >= 3x train-step (flat-mlp).");
 
     if let Some(path) = json_path {
+        let run_json = |r: &Run| {
+            obj(vec![
+                ("fwd_rows_per_s", num(r.fwd_rows_per_s)),
+                ("train_samples_per_s", num(r.train_samples_per_s)),
+            ])
+        };
         let cells_json: Vec<Json> = cells
             .iter()
             .map(|c| {
                 obj(vec![
                     ("arch", s(c.label)),
-                    ("n_params", num(c.n_params as f64)),
-                    ("fwd_rows_per_s", num(c.fwd_rows_per_s)),
-                    ("train_samples_per_s", num(c.train_samples_per_s)),
+                    ("n_params", num(c.scalar.n_params as f64)),
+                    ("scalar", run_json(&c.scalar)),
+                    ("simd", run_json(&c.simd)),
+                    ("fwd_speedup", num(c.fwd_speedup())),
+                    ("train_speedup", num(c.train_speedup())),
                 ])
             })
             .collect();
@@ -181,6 +237,7 @@ fn main() {
             ("bench", s("policy_forward")),
             ("iters", num(iters as f64)),
             ("geometry", s("T=32 R=32")),
+            ("kernel_threads", num(pufferlib::backend::kernels::thread_cap_from_env() as f64)),
             ("cells", arr(cells_json)),
         ]);
         match std::fs::write(&path, out.dump()) {

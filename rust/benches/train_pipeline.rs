@@ -10,10 +10,15 @@
 //!   the pipeline is built for. Acceptance: `pipelined_sps >=
 //!   1.3 × serial_sps`.
 //!
+//! Each env also runs the pipelined cell under `kernels = "scalar"` —
+//! the pre-kernel learner math — so the JSON carries the learner-SPS
+//! speedup the simd kernel path buys end-to-end, not just in isolation.
+//!
 //! `PUFFER_BENCH_TRAIN_STEPS` env-steps per cell (default 16384).
 //! `PUFFER_BENCH_JSON` write machine-readable results to this path
 //! (`make bench` sets it to `BENCH_train.json`).
 
+use pufferlib::backend::KernelPath;
 use pufferlib::train::{TrainConfig, TrainReport, Trainer};
 use pufferlib::util::json::{arr, num, obj, s, Json};
 
@@ -21,9 +26,15 @@ struct Cell {
     env: &'static str,
     serial: TrainReport,
     pipelined: TrainReport,
+    pipelined_scalar: TrainReport,
 }
 
-fn run(env: &str, total_steps: u64, pipeline_depth: usize) -> anyhow::Result<TrainReport> {
+fn run(
+    env: &str,
+    total_steps: u64,
+    pipeline_depth: usize,
+    kernels: KernelPath,
+) -> anyhow::Result<TrainReport> {
     let cfg = TrainConfig {
         env: env.to_string(),
         total_steps,
@@ -38,6 +49,7 @@ fn run(env: &str, total_steps: u64, pipeline_depth: usize) -> anyhow::Result<Tra
         minibatches: 2,
         pipeline_depth,
         log_every: 0,
+        kernels,
         ..Default::default()
     };
     Trainer::native(cfg)?.train()
@@ -81,17 +93,24 @@ fn main() {
 
     let mut cells = Vec::new();
     for env in ["ocean/squared", "profile/atari"] {
-        let serial = match run(env, total_steps, 0) {
+        let serial = match run(env, total_steps, 0, KernelPath::Simd) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("{env} serial failed: {e}");
                 continue;
             }
         };
-        let pipelined = match run(env, total_steps, 1) {
+        let pipelined = match run(env, total_steps, 1, KernelPath::Simd) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("{env} pipelined failed: {e}");
+                continue;
+            }
+        };
+        let pipelined_scalar = match run(env, total_steps, 1, KernelPath::Scalar) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{env} pipelined (scalar kernels) failed: {e}");
                 continue;
             }
         };
@@ -105,14 +124,22 @@ fn main() {
             pipelined.learn_sps,
             pipelined.collector_stall_s + pipelined.learner_stall_s,
         );
+        println!(
+            "|   kernels=scalar |            | {:>12.0} | {:>6.2}x |           | {:>9.0} |          |",
+            pipelined_scalar.sps,
+            pipelined.sps / pipelined_scalar.sps,
+            pipelined_scalar.learn_sps,
+        );
         cells.push(Cell {
             env,
             serial,
             pipelined,
+            pipelined_scalar,
         });
     }
 
-    println!("\n# acceptance: profile/atari (pooled VecConfig) pipelined >= 1.3x serial;");
+    println!("\n# acceptance: profile/atari (pooled VecConfig) pipelined >= 1.3x serial,");
+    println!("# and pipelined learn SPS (simd) > pipelined learn SPS (scalar kernels);");
     println!("# ocean/squared is learner-bound — expect ~1x with a large collector stall.");
 
     if let Some(path) = json_path {
@@ -124,15 +151,23 @@ fn main() {
                     ("serial_sps", num(c.serial.sps)),
                     ("pipelined_sps", num(c.pipelined.sps)),
                     ("speedup", num(c.pipelined.sps / c.serial.sps)),
+                    (
+                        "kernel_learn_speedup",
+                        num(c.pipelined.learn_sps / c.pipelined_scalar.learn_sps),
+                    ),
                     ("serial", report_json(&c.serial)),
                     ("pipelined", report_json(&c.pipelined)),
+                    ("pipelined_scalar_kernels", report_json(&c.pipelined_scalar)),
                 ])
             })
             .collect();
         let out = obj(vec![
             ("bench", s("train_pipeline")),
             ("total_steps", num(total_steps as f64)),
-            ("config", s("pool=true workers=2 epochs=2 minibatches=2 depth=1")),
+            (
+                "config",
+                s("pool=true workers=2 epochs=2 minibatches=2 depth=1 kernels=simd|scalar"),
+            ),
             ("cells", arr(cells_json)),
         ]);
         match std::fs::write(&path, out.dump()) {

@@ -1,0 +1,132 @@
+//! Vectorized, deterministic global-norm-clip + Adam update.
+//!
+//! The update itself is embarrassingly parallel — every parameter's
+//! `(m, v, p)` triple depends only on its own gradient — and each
+//! element uses the exact expression sequence of the scalar
+//! `adam_update`, so the banded version is bitwise identical at any
+//! thread count. The only reduction is the gradient norm, computed with
+//! a fixed chunking scheme ([`SUMSQ_CHUNK`]-element chunks, 8-lane
+//! accumulators inside a chunk, chunks combined in ascending order) so
+//! its value too is a pure function of the gradient vector.
+
+use super::{hsum8, load8, plan_bands, LANES};
+
+/// Chunk width for the deterministic sum-of-squares reduction: lane
+/// partials are folded per chunk, chunk sums combine sequentially.
+const SUMSQ_CHUNK: usize = 4096;
+
+/// Deterministic `Σ g²` — fixed reduction tree, single-threaded (the
+/// norm is O(P) against the O(P) update that follows; not worth a fork).
+fn sumsq(grads: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    let mut c0 = 0usize;
+    while c0 < grads.len() {
+        let chunk = &grads[c0..(c0 + SUMSQ_CHUNK).min(grads.len())];
+        let mut acc = [0.0f32; 8];
+        let mut j = 0usize;
+        while j + LANES <= chunk.len() {
+            let g = load8(chunk, j);
+            for l in 0..LANES {
+                acc[l] += g[l] * g[l];
+            }
+            j += LANES;
+        }
+        let mut s = hsum8(acc);
+        for &g in &chunk[j..] {
+            s += g * g;
+        }
+        total += s;
+        c0 += SUMSQ_CHUNK;
+    }
+    total
+}
+
+/// Global-norm clip + Adam over the flat parameter vector, row-banded
+/// across threads. Semantics match the scalar `adam_update` except for
+/// the norm's reduction order (tolerance-path only; the scalar kernel
+/// path never calls this).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update_simd(
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grads: &[f32],
+    step: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    max_norm: f32,
+    threads: usize,
+) {
+    let n = params.len();
+    debug_assert_eq!(m.len(), n);
+    debug_assert_eq!(v.len(), n);
+    debug_assert_eq!(grads.len(), n);
+    let gnorm = (sumsq(grads) + 1e-12).sqrt();
+    let scale = (max_norm / gnorm).min(1.0);
+    let bc1 = 1.0 - b1.powf(step);
+    let bc2 = 1.0 - b2.powf(step);
+
+    // ~16 flops per element, counted as muladds for the fork threshold.
+    let bands = plan_bands(threads, n, 16);
+    if bands <= 1 {
+        update_band(params, m, v, grads, 0, scale, lr, bc1, bc2, b1, b2, eps);
+        return;
+    }
+    // Three mutable vectors band together (same shape as the LSTM cell's
+    // fork-join): disjoint split_at_mut ranges, scoped spawn, join on
+    // scope exit.
+    let per = n.div_ceil(bands);
+    std::thread::scope(|s| {
+        let mut p_rest = params;
+        let mut m_rest = m;
+        let mut v_rest = v;
+        let mut i0 = 0usize;
+        while i0 < n {
+            let take = per.min(n - i0);
+            let (p_band, p_tail) = p_rest.split_at_mut(take);
+            let (m_band, m_tail) = m_rest.split_at_mut(take);
+            let (v_band, v_tail) = v_rest.split_at_mut(take);
+            p_rest = p_tail;
+            m_rest = m_tail;
+            v_rest = v_tail;
+            let first = i0;
+            if i0 + take >= n {
+                update_band(p_band, m_band, v_band, grads, first, scale, lr, bc1, bc2, b1, b2, eps);
+            } else {
+                s.spawn(move || {
+                    update_band(p_band, m_band, v_band, grads, first, scale, lr, bc1, bc2, b1, b2, eps)
+                });
+            }
+            i0 += take;
+        }
+    });
+}
+
+/// Elementwise Adam over one band — the scalar update expression,
+/// verbatim, per element.
+#[allow(clippy::too_many_arguments)]
+fn update_band(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    grads: &[f32],
+    first: usize,
+    scale: f32,
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    for i in 0..p.len() {
+        let g = grads[first + i] * scale;
+        m[i] = b1 * m[i] + (1.0 - b1) * g;
+        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + eps);
+    }
+}

@@ -1,0 +1,138 @@
+//! Branch-free transcendentals and the activation kernels built on
+//! them.
+//!
+//! `f32::exp` / `f32::ln` / `f32::tanh` lower to libm calls, which
+//! blocks loop auto-vectorization — one function call per element. The
+//! fast variants here are Cephes-style polynomial approximations
+//! (range-reduce, degree-6 polynomial, reassemble the exponent via bit
+//! tricks): straight-line float arithmetic LLVM can keep in vector
+//! registers, accurate to ~1 ulp ×10 (worst observed ~1e-7 relative) —
+//! two orders of magnitude inside the 1e-5 forward-parity tolerance the
+//! SIMD path is held to.
+//!
+//! [`ScalarMath`] abstracts exp/ln so shared loss code (the PPO
+//! surrogate in `backend/native.rs`) monomorphizes once per kernel
+//! path: [`StdMath`] reproduces the scalar path bit-for-bit,
+//! [`FastMath`] is the vectorizable flavor.
+
+/// Exp/ln provider for shared loss math — dispatch by monomorphization
+/// so the scalar path keeps its exact libm call sequence.
+pub trait ScalarMath {
+    fn exp(x: f32) -> f32;
+    fn ln(x: f32) -> f32;
+}
+
+/// libm-backed math: bit-exact with the pre-kernel scalar code.
+pub struct StdMath;
+
+impl ScalarMath for StdMath {
+    #[inline(always)]
+    fn exp(x: f32) -> f32 {
+        x.exp()
+    }
+    #[inline(always)]
+    fn ln(x: f32) -> f32 {
+        x.ln()
+    }
+}
+
+/// Polynomial math: branch-free, auto-vectorizable, ~1e-7 accurate.
+pub struct FastMath;
+
+impl ScalarMath for FastMath {
+    #[inline(always)]
+    fn exp(x: f32) -> f32 {
+        fast_exp(x)
+    }
+    #[inline(always)]
+    fn ln(x: f32) -> f32 {
+        fast_ln(x)
+    }
+}
+
+// Cephes expf/logf constants (Moshier, Cephes Math Library; public
+// domain coefficients). The two-part ln 2 keeps the range reduction
+// exact in f32: C1 + C2 = ln 2 to double precision.
+const LOG2EF: f32 = 1.442_695_04;
+const EXP_C1: f32 = 0.693_359_375;
+const EXP_C2: f32 = -2.121_944_4e-4;
+const SQRTHF: f32 = 0.707_106_78;
+
+/// Polynomial `e^x`. Inputs clamp to ±[87, 88] (where f32 exp
+/// saturates to 0 / ~1.7e38 anyway), so the result is always finite
+/// and the exponent reassembly cannot overflow. Not meaningful for
+/// NaN-free code paths only in the sense that NaN propagates.
+#[inline(always)]
+pub fn fast_exp(x: f32) -> f32 {
+    let x = x.clamp(-87.0, 88.0);
+    // n = round(x / ln 2); r = x - n·ln2 in two parts (exact-ish).
+    let nf = (x * LOG2EF).round();
+    let r = x - nf * EXP_C1 - nf * EXP_C2;
+    // Degree-6 polynomial for e^r on |r| <= ln2/2.
+    let z = r * r;
+    let mut p = 1.987_569_15e-4f32;
+    p = p * r + 1.398_199_95e-3;
+    p = p * r + 8.333_451_9e-3;
+    p = p * r + 4.166_579_6e-2;
+    p = p * r + 1.666_666_55e-1;
+    p = p * r + 5.000_000_1e-1;
+    p = p * z + r + 1.0;
+    // 2^n via direct exponent-field construction: n ∈ [-126, 127].
+    let scale = f32::from_bits((((nf as i32) + 127) << 23) as u32);
+    p * scale
+}
+
+/// Polynomial `ln x` for normal positive floats (subnormals flush
+/// through the exponent extraction; x <= 0 returns NaN). Every call
+/// site feeds it softmax normalizers `z >= 1`.
+#[inline(always)]
+pub fn fast_ln(x: f32) -> f32 {
+    if x <= 0.0 {
+        return f32::NAN;
+    }
+    let bits = x.to_bits();
+    let mut e = ((bits >> 23) as i32) - 126;
+    let mut m = f32::from_bits((bits & 0x007f_ffff) | 0x3f00_0000); // [0.5, 1)
+    if m < SQRTHF {
+        e -= 1;
+        m = m + m - 1.0;
+    } else {
+        m -= 1.0;
+    }
+    let z = m * m;
+    let mut y = 7.037_683_6e-2f32;
+    y = y * m - 1.151_461_03e-1;
+    y = y * m + 1.167_699_87e-1;
+    y = y * m - 1.242_014_08e-1;
+    y = y * m + 1.424_932_28e-1;
+    y = y * m - 1.666_805_77e-1;
+    y = y * m + 2.000_071_48e-1;
+    y = y * m - 2.499_999_4e-1;
+    y = y * m + 3.333_333_1e-1;
+    y = y * m * z;
+    let ef = e as f32;
+    y += ef * EXP_C2;
+    y -= 0.5 * z;
+    (m + y) + ef * EXP_C1
+}
+
+/// `tanh` via `(e^{2x} − 1)/(e^{2x} + 1)`; saturates exactly to ±1 for
+/// |x| ≳ 44 thanks to the exp clamp.
+#[inline(always)]
+pub fn fast_tanh(x: f32) -> f32 {
+    let e2 = fast_exp(2.0 * x);
+    (e2 - 1.0) / (e2 + 1.0)
+}
+
+/// Logistic sigmoid via [`fast_exp`].
+#[inline(always)]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + fast_exp(-x))
+}
+
+/// In-place vectorized tanh over a block of activations.
+pub fn tanh_block(xs: &mut [f32]) {
+    for x in xs {
+        *x = fast_tanh(*x);
+    }
+}

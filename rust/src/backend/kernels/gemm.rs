@@ -1,0 +1,251 @@
+//! The f32 GEMM family: `linear` (forward), `accum_at_b`
+//! (weight-gradient), `matmul_a_wt` (input-gradient) — each in the
+//! bit-exact scalar flavor (the `ref.py linear_act_ref` transcription,
+//! moved here verbatim from `backend/native.rs`) and a lane-tiled SIMD
+//! flavor.
+//!
+//! Tiling: the SIMD `linear` walks each output row in 16-column panels
+//! (two [`LANES`]-wide accumulator blocks held in registers) with the
+//! reduction dimension innermost — the classic outer-product
+//! microkernel, streaming one broadcast activation against two weight
+//! vectors per iteration. `accum_at_b` blocks the sample dimension in
+//! [`IBLOCK`]-row tiles so the gradient source stays in L1 while a
+//! band of output rows accumulates. Parallel flavors partition output
+//! rows only (see the module docs on determinism): every output element
+//! is produced by exactly one thread running the same sequential
+//! reduction order as the single-threaded kernel.
+
+use super::{fma8, for_each_row_band, hsum8, load8, plan_bands, store8, LANES};
+
+/// Sample-dimension tile for [`accum_at_b_simd`]: 64 rows of a
+/// 128-wide f32 gradient block is 32 KiB — an L1-resident tile.
+const IBLOCK: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels (bit-exact; moved verbatim from native.rs).
+
+/// `out[m×n] = x[m×k] @ w[k×n] + b[n]` (bias broadcast over rows).
+pub fn linear_scalar(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let row = &mut out[i * n..(i + 1) * n];
+        row.copy_from_slice(b);
+        for kk in 0..k {
+            let a = x[i * k + kk];
+            if a != 0.0 {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, &wv) in row.iter_mut().zip(wrow) {
+                    *o += a * wv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[k×n] += a[m×k]ᵀ @ b[m×n]` (weight-gradient GEMM).
+pub fn accum_at_b_scalar(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av != 0.0 {
+                let brow = &b[i * n..(i + 1) * n];
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out[m×k] = a[m×n] @ w[k×n]ᵀ` (input-gradient GEMM).
+pub fn matmul_a_wt_scalar(a: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &wv) in arow.iter().zip(wrow) {
+                acc += av * wv;
+            }
+            out[i * k + kk] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD kernels.
+
+/// Lane-tiled `out[m×n] = x[m×k] @ w[k×n] + b[n]`, row-parallel.
+pub fn linear_simd(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let bands = plan_bands(threads, m, k * n);
+    for_each_row_band(out, m, n, bands, &|first, band| {
+        for (bi, row) in band.chunks_exact_mut(n).enumerate() {
+            let i = first + bi;
+            linear_row(&x[i * k..(i + 1) * k], w, b, row, k, n);
+        }
+    });
+}
+
+/// One output row of [`linear_simd`]: 16-column panels (two 8-lane
+/// register accumulators seeded from the bias), reduction innermost,
+/// then an 8-lane panel and a scalar tail for ragged widths.
+#[inline]
+fn linear_row(xrow: &[f32], w: &[f32], b: &[f32], row: &mut [f32], k: usize, n: usize) {
+    let mut j = 0usize;
+    while j + 2 * LANES <= n {
+        let mut acc0 = load8(b, j);
+        let mut acc1 = load8(b, j + LANES);
+        for (kk, &a) in xrow.iter().enumerate().take(k) {
+            let off = kk * n + j;
+            fma8(&mut acc0, a, load8(w, off));
+            fma8(&mut acc1, a, load8(w, off + LANES));
+        }
+        store8(row, j, acc0);
+        store8(row, j + LANES, acc1);
+        j += 2 * LANES;
+    }
+    if j + LANES <= n {
+        let mut acc = load8(b, j);
+        for (kk, &a) in xrow.iter().enumerate().take(k) {
+            fma8(&mut acc, a, load8(w, kk * n + j));
+        }
+        store8(row, j, acc);
+        j += LANES;
+    }
+    for jj in j..n {
+        let mut acc = b[jj];
+        for (kk, &a) in xrow.iter().enumerate().take(k) {
+            acc += a * w[kk * n + jj];
+        }
+        row[jj] = acc;
+    }
+}
+
+/// `acc_row += scale * src_row`, 8 lanes at a time.
+#[inline(always)]
+fn axpy(orow: &mut [f32], scale: f32, brow: &[f32], n: usize) {
+    let mut j = 0usize;
+    while j + LANES <= n {
+        let mut acc = load8(orow, j);
+        fma8(&mut acc, scale, load8(brow, j));
+        store8(orow, j, acc);
+        j += LANES;
+    }
+    for jj in j..n {
+        orow[jj] += scale * brow[jj];
+    }
+}
+
+/// Lane-tiled `out[k×n] += a[m×k]ᵀ @ b[m×n]`, parallel over the k
+/// output rows. The sample dimension is tiled in [`IBLOCK`] chunks so
+/// `b`'s tile stays cache-hot across a band of output rows; within one
+/// output row the samples accumulate in ascending order — the same
+/// order as the single-threaded kernel, whatever the band count.
+pub fn accum_at_b_simd(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    let bands = plan_bands(threads, k, m * n);
+    for_each_row_band(out, k, n, bands, &|first, band| {
+        let mut i0 = 0usize;
+        while i0 < m {
+            let iend = (i0 + IBLOCK).min(m);
+            for (bi, orow) in band.chunks_exact_mut(n).enumerate() {
+                let kk = first + bi;
+                for i in i0..iend {
+                    axpy(orow, a[i * k + kk], &b[i * n..(i + 1) * n], n);
+                }
+            }
+            i0 = iend;
+        }
+    });
+}
+
+/// 16-wide unrolled dot product with a fixed-order lane reduction.
+#[inline]
+fn dot(arow: &[f32], wrow: &[f32], n: usize) -> f32 {
+    let mut acc0 = [0.0f32; 8];
+    let mut acc1 = [0.0f32; 8];
+    let mut j = 0usize;
+    while j + 2 * LANES <= n {
+        let a0 = load8(arow, j);
+        let b0 = load8(wrow, j);
+        let a1 = load8(arow, j + LANES);
+        let b1 = load8(wrow, j + LANES);
+        for l in 0..LANES {
+            acc0[l] += a0[l] * b0[l];
+            acc1[l] += a1[l] * b1[l];
+        }
+        j += 2 * LANES;
+    }
+    if j + LANES <= n {
+        let a0 = load8(arow, j);
+        let b0 = load8(wrow, j);
+        for l in 0..LANES {
+            acc0[l] += a0[l] * b0[l];
+        }
+        j += LANES;
+    }
+    let mut s = hsum8(acc0) + hsum8(acc1);
+    for jj in j..n {
+        s += arow[jj] * wrow[jj];
+    }
+    s
+}
+
+/// Lane-tiled `out[m×k] = a[m×n] @ w[k×n]ᵀ`, row-parallel: both
+/// operands are traversed contiguously (rows of `a` against rows of
+/// `w`), so this is a pure streaming dot-product kernel.
+pub fn matmul_a_wt_simd(
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    let bands = plan_bands(threads, m, n * k);
+    for_each_row_band(out, m, k, bands, &|first, band| {
+        for (bi, orow) in band.chunks_exact_mut(k).enumerate() {
+            let arow = &a[(first + bi) * n..(first + bi + 1) * n];
+            for (kk, o) in orow.iter_mut().enumerate() {
+                *o = dot(arow, &w[kk * n..(kk + 1) * n], n);
+            }
+        }
+    });
+}

@@ -1,0 +1,178 @@
+//! Fused LSTM cell: one pass computes all four gates and applies the
+//! activations, without materializing the `[x, h]` concatenation.
+//!
+//! The scalar path (`backend/native.rs::lstm_cell`) builds an
+//! `rows × (h + sd)` concat buffer, runs one `linear` into the
+//! `rows × 4·sd` gate matrix, then a second elementwise pass. Here the
+//! gate GEMM streams the two input halves directly — `x` rows against
+//! weight rows `0..h`, `h_in` rows against weight rows `h..h+sd` — and
+//! the gate activations, cell update, and output are applied while the
+//! gate row is still cache-hot. Gate layout and semantics are identical:
+//! `(i, f, g, o)` blocks of `sd`, post-activation values written back
+//! into `gates` for BPTT.
+//!
+//! Parallelism is row-banded like the GEMM family: each sample row's
+//! gates/h/c are produced by exactly one thread running the same
+//! sequential reduction, so results are bitwise invariant to the thread
+//! count.
+
+use super::elementwise::{fast_sigmoid, fast_tanh};
+use super::{fma8, load8, plan_bands, store8, LANES};
+
+/// One fused LSTM cell step over `rows` samples.
+///
+/// Inputs: `x` (`rows × h`), `h_in`/`c_in` (`rows × sd`), weights `w`
+/// (`(h+sd) × 4·sd`, x-rows first), bias `b` (`4·sd`). Outputs:
+/// `gates` (`rows × 4·sd`, post-activation `(i, f, g, o)`), `h_out` and
+/// `c_out` (`rows × sd`).
+#[allow(clippy::too_many_arguments)]
+pub fn cell_simd(
+    x: &[f32],
+    h_in: &[f32],
+    c_in: &[f32],
+    w: &[f32],
+    b: &[f32],
+    gates: &mut [f32],
+    h_out: &mut [f32],
+    c_out: &mut [f32],
+    rows: usize,
+    h: usize,
+    sd: usize,
+    threads: usize,
+) {
+    let n = 4 * sd;
+    debug_assert_eq!(x.len(), rows * h);
+    debug_assert_eq!(h_in.len(), rows * sd);
+    debug_assert_eq!(c_in.len(), rows * sd);
+    debug_assert_eq!(w.len(), (h + sd) * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(gates.len(), rows * n);
+    debug_assert_eq!(h_out.len(), rows * sd);
+    debug_assert_eq!(c_out.len(), rows * sd);
+
+    let bands = plan_bands(threads, rows, (h + sd) * n);
+    if bands <= 1 {
+        cell_band(x, h_in, c_in, w, b, gates, h_out, c_out, 0, rows, h, sd);
+        return;
+    }
+    // Three outputs must band together, so this walks its own
+    // split_at_mut triple instead of reusing for_each_row_band; the
+    // structure is the same scoped fork-join (disjoint &mut bands, no
+    // shared state, joined before return).
+    let per = rows.div_ceil(bands);
+    std::thread::scope(|s| {
+        let mut g_rest = gates;
+        let mut h_rest = h_out;
+        let mut c_rest = c_out;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let take = per.min(rows - r0);
+            let (g_band, g_tail) = g_rest.split_at_mut(take * n);
+            let (h_band, h_tail) = h_rest.split_at_mut(take * sd);
+            let (c_band, c_tail) = c_rest.split_at_mut(take * sd);
+            g_rest = g_tail;
+            h_rest = h_tail;
+            c_rest = c_tail;
+            let first = r0;
+            if r0 + take >= rows {
+                cell_band(x, h_in, c_in, w, b, g_band, h_band, c_band, first, take, h, sd);
+            } else {
+                s.spawn(move || {
+                    cell_band(x, h_in, c_in, w, b, g_band, h_band, c_band, first, take, h, sd)
+                });
+            }
+            r0 += take;
+        }
+    });
+}
+
+/// The per-band body: gate GEMM row + fused activation/cell update for
+/// `take` rows starting at global row `first`.
+#[allow(clippy::too_many_arguments)]
+fn cell_band(
+    x: &[f32],
+    h_in: &[f32],
+    c_in: &[f32],
+    w: &[f32],
+    b: &[f32],
+    g_band: &mut [f32],
+    h_band: &mut [f32],
+    c_band: &mut [f32],
+    first: usize,
+    take: usize,
+    h: usize,
+    sd: usize,
+) {
+    let n = 4 * sd;
+    for bi in 0..take {
+        let r = first + bi;
+        let xrow = &x[r * h..(r + 1) * h];
+        let hrow = &h_in[r * sd..(r + 1) * sd];
+        let crow = &c_in[r * sd..(r + 1) * sd];
+        let g = &mut g_band[bi * n..(bi + 1) * n];
+        gates_row(xrow, hrow, w, b, g, h, sd);
+        let ho = &mut h_band[bi * sd..(bi + 1) * sd];
+        let co = &mut c_band[bi * sd..(bi + 1) * sd];
+        for j in 0..sd {
+            let i_g = fast_sigmoid(g[j]);
+            let f_g = fast_sigmoid(g[sd + j]);
+            let g_g = fast_tanh(g[2 * sd + j]);
+            let o_g = fast_sigmoid(g[3 * sd + j]);
+            let c = f_g * crow[j] + i_g * g_g;
+            co[j] = c;
+            ho[j] = o_g * fast_tanh(c);
+            g[j] = i_g;
+            g[sd + j] = f_g;
+            g[2 * sd + j] = g_g;
+            g[3 * sd + j] = o_g;
+        }
+    }
+}
+
+/// One pre-activation gate row: `g = b + xrow @ w[0..h] + hrow @
+/// w[h..h+sd]` in 16-column panels — the [`linear_simd`]
+/// microkernel shape with two stacked input segments.
+///
+/// [`linear_simd`]: super::gemm::linear_simd
+fn gates_row(xrow: &[f32], hrow: &[f32], w: &[f32], b: &[f32], g: &mut [f32], h: usize, sd: usize) {
+    let n = 4 * sd;
+    let mut j = 0usize;
+    while j + 2 * LANES <= n {
+        let mut acc0 = load8(b, j);
+        let mut acc1 = load8(b, j + LANES);
+        for (kk, &a) in xrow.iter().enumerate() {
+            let off = kk * n + j;
+            fma8(&mut acc0, a, load8(w, off));
+            fma8(&mut acc1, a, load8(w, off + LANES));
+        }
+        for (kk, &a) in hrow.iter().enumerate() {
+            let off = (h + kk) * n + j;
+            fma8(&mut acc0, a, load8(w, off));
+            fma8(&mut acc1, a, load8(w, off + LANES));
+        }
+        store8(g, j, acc0);
+        store8(g, j + LANES, acc1);
+        j += 2 * LANES;
+    }
+    if j + LANES <= n {
+        let mut acc = load8(b, j);
+        for (kk, &a) in xrow.iter().enumerate() {
+            fma8(&mut acc, a, load8(w, kk * n + j));
+        }
+        for (kk, &a) in hrow.iter().enumerate() {
+            fma8(&mut acc, a, load8(w, (h + kk) * n + j));
+        }
+        store8(g, j, acc);
+        j += LANES;
+    }
+    for jj in j..n {
+        let mut acc = b[jj];
+        for (kk, &a) in xrow.iter().enumerate() {
+            acc += a * w[kk * n + jj];
+        }
+        for (kk, &a) in hrow.iter().enumerate() {
+            acc += a * w[(h + kk) * n + jj];
+        }
+        g[jj] = acc;
+    }
+}

@@ -27,10 +27,12 @@
 //! against fixtures generated from the JAX reference
 //! (`python/compile/gen_fixtures.py`).
 
+pub mod kernels;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use kernels::KernelPath;
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;

@@ -30,6 +30,8 @@
 //! LSTM BPTT gradients) is pinned by `rust/tests/native_parity.rs`
 //! against checked-in fixtures.
 
+use super::kernels::elementwise::{FastMath, ScalarMath, StdMath};
+use super::kernels::{self, gemm, KernelPath};
 use super::{AdamState, Forward, ForwardLstm, PolicyBackend, TrainBatch};
 use crate::emulation::FlatEnv;
 use crate::policy::arch::{ArchRanges, PolicySpec, ResolvedPolicy, TrunkSegment};
@@ -113,72 +115,20 @@ impl<'a> ParamView<'a> {
 }
 
 // ---------------------------------------------------------------------------
-// Dense kernels (the ref.py `linear_act_ref` contract, row-major).
+// Dense kernels now live in `backend/kernels/` (the ref.py
+// `linear_act_ref` contract, row-major): the bit-exact scalar flavors
+// moved there verbatim as `gemm::*_scalar`, alongside the lane-tiled
+// SIMD flavors. The `k_*` dispatch methods on [`NativeBackend`] pick a
+// flavor per the backend's [`KernelPath`].
 
-/// `out[m×n] = x[m×k] @ w[k×n] + b[n]` (bias broadcast over rows).
-fn linear(x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(b.len(), n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let row = &mut out[i * n..(i + 1) * n];
-        row.copy_from_slice(b);
-        for kk in 0..k {
-            let a = x[i * k + kk];
-            if a != 0.0 {
-                let wrow = &w[kk * n..(kk + 1) * n];
-                for (o, &wv) in row.iter_mut().zip(wrow) {
-                    *o += a * wv;
-                }
-            }
-        }
-    }
-}
-
-/// `out[k×n] += a[m×k]ᵀ @ b[m×n]` (weight-gradient GEMM).
-fn accum_at_b(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            if av != 0.0 {
-                let brow = &b[i * n..(i + 1) * n];
-                let orow = &mut out[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
-}
-
-/// `out[m×k] = a[m×n] @ w[k×n]ᵀ` (input-gradient GEMM).
-fn matmul_a_wt(a: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(out.len(), m * k);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &wv) in arow.iter().zip(wrow) {
-                acc += av * wv;
-            }
-            out[i * k + kk] = acc;
-        }
-    }
-}
-
+/// libm tanh over a block — the scalar path's elementwise activation.
 fn tanh_inplace(xs: &mut [f32]) {
     for x in xs {
         *x = x.tanh();
     }
 }
 
+/// libm sigmoid — the scalar path's gate activation.
 #[inline]
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
@@ -191,8 +141,12 @@ fn sigmoid(x: f32) -> f32 {
 
 /// Returns `(metrics, d_logits, d_value)` over `n` flattened sample rows.
 /// `metrics = [loss, pg_loss, v_loss, entropy, approx_kl]`.
+///
+/// Generic over the exp/ln provider: `StdMath` monomorphizes to the
+/// exact libm call sequence the scalar kernel path is pinned to;
+/// `FastMath` is the vectorizable polynomial flavor the SIMD path uses.
 #[allow(clippy::too_many_arguments)]
-fn ppo_loss_grads(
+fn ppo_loss_grads<M: ScalarMath>(
     act_dims: &[usize],
     logits: &[f32],
     values: &[f32],
@@ -222,13 +176,13 @@ fn ppo_loss_grads(
             let mx = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
             let mut z = 0.0f32;
             for &x in seg {
-                z += (x - mx).exp();
+                z += M::exp(x - mx);
             }
-            let logz = z.ln() + mx;
+            let logz = M::ln(z) + mx;
             let mut hs = 0.0f32;
             for (j, &x) in seg.iter().enumerate() {
                 let lp = x - logz;
-                let p = lp.exp();
+                let p = M::exp(lp);
                 lps[i * a + off + j] = lp;
                 probs[i * a + off + j] = p;
                 hs -= p * lp;
@@ -265,7 +219,7 @@ fn ppo_loss_grads(
             adv[i]
         };
         let logratio = logp[i] - old_logp[i];
-        let ratio = logratio.exp();
+        let ratio = M::exp(logratio);
         let clipped = ratio.clamp(1.0 - CLIP, 1.0 + CLIP);
         let pg1 = -advn * ratio;
         let pg2 = -advn * clipped;
@@ -317,6 +271,25 @@ pub struct NativeBackend {
     spec: SpecManifest,
     arch: ResolvedPolicy,
     rng: Rng,
+    /// Which kernel flavor the `k_*` dispatchers route to. Defaults to
+    /// [`KernelPath::Simd`]; set `train.kernels = "scalar"` for the
+    /// bit-exact reference path.
+    path: KernelPath,
+    /// Worker-thread budget for kernel fork-join (`PUFFER_KERNEL_THREADS`).
+    threads: usize,
+    /// Reusable forward-pass activations for the `*_into` entry points —
+    /// the serve hot path's allocation-free batched forwards.
+    fwd: FwdScratch,
+}
+
+/// Reusable activation buffers for [`NativeBackend::forward_into`] /
+/// [`NativeBackend::forward_lstm_into`]: resized (never reallocated at
+/// steady state) per call, fully overwritten by the kernels.
+#[derive(Clone, Default)]
+struct FwdScratch {
+    h1: Vec<f32>,
+    x: Vec<f32>,
+    gates: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -436,12 +409,125 @@ impl NativeBackend {
             spec,
             arch,
             rng: Rng::new(seed),
+            path: KernelPath::default(),
+            threads: kernels::thread_cap_from_env(),
+            fwd: FwdScratch::default(),
         })
     }
 
     /// The resolved architecture this backend executes.
     pub fn arch(&self) -> &ResolvedPolicy {
         &self.arch
+    }
+
+    /// Select the kernel flavor (`train.kernels`): `Scalar` is the
+    /// bit-exact reference path, `Simd` (default) the lane-tiled
+    /// multithreaded path.
+    pub fn set_kernel_path(&mut self, path: KernelPath) {
+        self.path = path;
+    }
+
+    /// The kernel flavor this backend dispatches to.
+    pub fn kernel_path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// Override the kernel worker-thread budget (test hook for the
+    /// thread-count-invariance pins; runs resolve it from
+    /// `PUFFER_KERNEL_THREADS` at construction).
+    pub fn set_kernel_threads(&mut self, n: usize) {
+        self.threads = n.clamp(1, 64);
+    }
+
+    // -- kernel dispatch ----------------------------------------------------
+
+    fn k_linear(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        match self.path {
+            KernelPath::Scalar => gemm::linear_scalar(x, w, b, out, m, k, n),
+            KernelPath::Simd => gemm::linear_simd(x, w, b, out, m, k, n, self.threads),
+        }
+    }
+
+    fn k_accum_at_b(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        match self.path {
+            KernelPath::Scalar => gemm::accum_at_b_scalar(a, b, out, m, k, n),
+            KernelPath::Simd => gemm::accum_at_b_simd(a, b, out, m, k, n, self.threads),
+        }
+    }
+
+    fn k_matmul_a_wt(&self, a: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+        match self.path {
+            KernelPath::Scalar => gemm::matmul_a_wt_scalar(a, w, out, m, n, k),
+            KernelPath::Simd => gemm::matmul_a_wt_simd(a, w, out, m, n, k, self.threads),
+        }
+    }
+
+    fn k_tanh(&self, xs: &mut [f32]) {
+        match self.path {
+            KernelPath::Scalar => tanh_inplace(xs),
+            KernelPath::Simd => kernels::elementwise::tanh_block(xs),
+        }
+    }
+
+    /// PPO loss + grads with the path's exp/ln flavor.
+    fn k_loss(
+        &self,
+        logits: &[f32],
+        values: &[f32],
+        batch: &TrainBatch<'_>,
+        ent_coef: f32,
+        n: usize,
+    ) -> Result<([f32; 5], Vec<f32>, Vec<f32>)> {
+        match self.path {
+            KernelPath::Scalar => ppo_loss_grads::<StdMath>(
+                &self.arch.act_dims,
+                logits,
+                values,
+                batch.actions,
+                batch.logp,
+                batch.adv,
+                batch.ret,
+                ent_coef,
+                batch.norm_adv,
+                n,
+            ),
+            KernelPath::Simd => ppo_loss_grads::<FastMath>(
+                &self.arch.act_dims,
+                logits,
+                values,
+                batch.actions,
+                batch.logp,
+                batch.adv,
+                batch.ret,
+                ent_coef,
+                batch.norm_adv,
+                n,
+            ),
+        }
+    }
+
+    /// Global-norm clip + Adam with the path's flavor (the scalar
+    /// free function below, or the banded deterministic SIMD update).
+    fn k_adam(&self, params: &mut [f32], opt: &mut AdamState, lr: f32, grads: &[f32]) {
+        match self.path {
+            KernelPath::Scalar => adam_update(params, opt, lr, grads),
+            KernelPath::Simd => {
+                opt.step += 1.0;
+                kernels::adam::adam_update_simd(
+                    params,
+                    &mut opt.m,
+                    &mut opt.v,
+                    grads,
+                    opt.step,
+                    lr,
+                    ADAM_B1,
+                    ADAM_B2,
+                    ADAM_EPS,
+                    MAX_GRAD_NORM,
+                    self.threads,
+                );
+            }
+        }
     }
 
     /// Build the trunk input for `rows` observations: raw segments pass
@@ -562,7 +648,7 @@ impl NativeBackend {
             }
             grads[ranges.critic_b.start] += d_value[i];
         }
-        accum_at_b(hidden, d_logits, &mut grads[ranges.actor_w.clone()], rows, d_in, a);
+        self.k_accum_at_b(hidden, d_logits, &mut grads[ranges.actor_w.clone()], rows, d_in, a);
         for i in 0..rows {
             let dv = d_value[i];
             if dv != 0.0 {
@@ -571,7 +657,7 @@ impl NativeBackend {
                 }
             }
         }
-        matmul_a_wt(d_logits, pv.actor_w, d_hidden, rows, a, d_in);
+        self.k_matmul_a_wt(d_logits, pv.actor_w, d_hidden, rows, a, d_in);
         for i in 0..rows {
             let dv = d_value[i];
             for kk in 0..d_in {
@@ -605,20 +691,20 @@ impl NativeBackend {
         for (dz, &hv) in s.d_z2.iter_mut().zip(x) {
             *dz *= 1.0 - hv * hv;
         }
-        accum_at_b(h1, &s.d_z2, &mut grads[ranges.enc2_w.clone()], rows, h, h);
+        self.k_accum_at_b(h1, &s.d_z2, &mut grads[ranges.enc2_w.clone()], rows, h, h);
         for i in 0..rows {
             for j in 0..h {
                 grads[ranges.enc2_b.start + j] += s.d_z2[i * h + j];
             }
         }
         s.d_h1.resize(rows * h, 0.0);
-        matmul_a_wt(&s.d_z2, pv.enc2_w, &mut s.d_h1, rows, h, h);
+        self.k_matmul_a_wt(&s.d_z2, pv.enc2_w, &mut s.d_h1, rows, h, h);
         s.d_z1.resize(rows * h, 0.0);
         s.d_z1.copy_from_slice(&s.d_h1);
         for (dz, &hv) in s.d_z1.iter_mut().zip(h1) {
             *dz *= 1.0 - hv * hv;
         }
-        accum_at_b(trunk, &s.d_z1, &mut grads[ranges.enc1_w.clone()], rows, ti, h);
+        self.k_accum_at_b(trunk, &s.d_z1, &mut grads[ranges.enc1_w.clone()], rows, ti, h);
         for i in 0..rows {
             for j in 0..h {
                 grads[ranges.enc1_b.start + j] += s.d_z1[i * h + j];
@@ -626,38 +712,132 @@ impl NativeBackend {
         }
         if self.arch.has_embeds() {
             s.d_trunk.resize(rows * ti, 0.0);
-            matmul_a_wt(&s.d_z1, pv.enc1_w, &mut s.d_trunk, rows, h, ti);
+            self.k_matmul_a_wt(&s.d_z1, pv.enc1_w, &mut s.d_trunk, rows, h, ti);
             self.scatter_embed_grads(&s.d_trunk, tokens, rows, grads, ranges);
         }
     }
 
     /// Two-layer tanh trunk (model.py `encode`) over a prepared trunk
-    /// input. Returns `(h1, x)`: `h1` is kept for backprop, `x` feeds
-    /// the decoder or LSTM cell.
-    fn encode(&self, pv: &ParamView<'_>, trunk: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+    /// input, into caller buffers (resized, then fully overwritten by
+    /// the linear kernels). `h1` is kept for backprop, `x` feeds the
+    /// decoder or LSTM cell.
+    fn encode_into(
+        &self,
+        pv: &ParamView<'_>,
+        trunk: &[f32],
+        rows: usize,
+        h1: &mut Vec<f32>,
+        x: &mut Vec<f32>,
+    ) {
         let (ti, h) = (self.arch.trunk_in, self.arch.hidden());
-        let mut h1 = vec![0.0; rows * h];
-        linear(trunk, pv.enc1_w, pv.enc1_b, &mut h1, rows, ti, h);
-        tanh_inplace(&mut h1);
-        let mut x = vec![0.0; rows * h];
-        linear(&h1, pv.enc2_w, pv.enc2_b, &mut x, rows, h, h);
-        tanh_inplace(&mut x);
+        h1.resize(rows * h, 0.0);
+        self.k_linear(trunk, pv.enc1_w, pv.enc1_b, h1, rows, ti, h);
+        self.k_tanh(h1);
+        x.resize(rows * h, 0.0);
+        self.k_linear(h1, pv.enc2_w, pv.enc2_b, x, rows, h, h);
+        self.k_tanh(x);
+    }
+
+    /// Allocating wrapper over [`encode_into`](Self::encode_into) for
+    /// the train paths (which keep the activations anyway).
+    fn encode(&self, pv: &ParamView<'_>, trunk: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut h1 = Vec::new();
+        let mut x = Vec::new();
+        self.encode_into(pv, trunk, rows, &mut h1, &mut x);
         (h1, x)
     }
 
-    /// Actor/critic heads off a hidden state (model.py `decode`).
-    fn decode(&self, pv: &ParamView<'_>, hidden: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+    /// Actor/critic heads off a hidden state (model.py `decode`), into
+    /// caller buffers.
+    fn decode_into(
+        &self,
+        pv: &ParamView<'_>,
+        hidden: &[f32],
+        rows: usize,
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) {
         let (d_in, a) = (self.arch.decode_in(), self.arch.act_sum());
-        let mut logits = vec![0.0; rows * a];
-        linear(hidden, pv.actor_w, pv.actor_b, &mut logits, rows, d_in, a);
-        let mut values = vec![0.0; rows];
-        linear(hidden, pv.critic_w, pv.critic_b, &mut values, rows, d_in, 1);
+        logits.resize(rows * a, 0.0);
+        self.k_linear(hidden, pv.actor_w, pv.actor_b, logits, rows, d_in, a);
+        values.resize(rows, 0.0);
+        self.k_linear(hidden, pv.critic_w, pv.critic_b, values, rows, d_in, 1);
+    }
+
+    /// Allocating wrapper over [`decode_into`](Self::decode_into).
+    fn decode(&self, pv: &ParamView<'_>, hidden: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut logits = Vec::new();
+        let mut values = Vec::new();
+        self.decode_into(pv, hidden, rows, &mut logits, &mut values);
         (logits, values)
     }
 
-    /// One fused-gate LSTM cell step: `gates = [x, h] @ w + b`, split
-    /// `(i, f, g, o)`. Returns `(h', c', gates_post)` where `gates_post`
-    /// holds the post-activation gate values (kept for BPTT).
+    /// One fused-gate LSTM cell step into caller buffers: `gates =
+    /// [x, h] @ w + b`, split `(i, f, g, o)`; `gates` ends up holding
+    /// the post-activation gate values (kept for BPTT). The scalar path
+    /// materializes the `[x, h]` concat exactly like the reference; the
+    /// SIMD path runs the fused cell kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn lstm_cell_into(
+        &self,
+        pv: &ParamView<'_>,
+        x: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+        gates: &mut Vec<f32>,
+        h_out: &mut Vec<f32>,
+        c_out: &mut Vec<f32>,
+    ) {
+        let (h, sd) = (self.arch.hidden(), self.arch.state_dim());
+        gates.resize(rows * 4 * sd, 0.0);
+        h_out.resize(rows * sd, 0.0);
+        c_out.resize(rows * sd, 0.0);
+        match self.path {
+            KernelPath::Scalar => {
+                let mut xh = vec![0.0; rows * (h + sd)];
+                for r in 0..rows {
+                    xh[r * (h + sd)..r * (h + sd) + h].copy_from_slice(&x[r * h..(r + 1) * h]);
+                    xh[r * (h + sd) + h..(r + 1) * (h + sd)]
+                        .copy_from_slice(&h_in[r * sd..(r + 1) * sd]);
+                }
+                gemm::linear_scalar(&xh, pv.lstm_w, pv.lstm_b, gates, rows, h + sd, 4 * sd);
+                for r in 0..rows {
+                    let g = &mut gates[r * 4 * sd..(r + 1) * 4 * sd];
+                    for j in 0..sd {
+                        let i_g = sigmoid(g[j]);
+                        let f_g = sigmoid(g[sd + j]);
+                        let g_g = g[2 * sd + j].tanh();
+                        let o_g = sigmoid(g[3 * sd + j]);
+                        let c = f_g * c_in[r * sd + j] + i_g * g_g;
+                        c_out[r * sd + j] = c;
+                        h_out[r * sd + j] = o_g * c.tanh();
+                        g[j] = i_g;
+                        g[sd + j] = f_g;
+                        g[2 * sd + j] = g_g;
+                        g[3 * sd + j] = o_g;
+                    }
+                }
+            }
+            KernelPath::Simd => kernels::lstm::cell_simd(
+                x,
+                h_in,
+                c_in,
+                pv.lstm_w,
+                pv.lstm_b,
+                gates,
+                h_out,
+                c_out,
+                rows,
+                h,
+                sd,
+                self.threads,
+            ),
+        }
+    }
+
+    /// Allocating wrapper over [`lstm_cell_into`](Self::lstm_cell_into):
+    /// returns `(h', c', gates_post)`.
     fn lstm_cell(
         &self,
         pv: &ParamView<'_>,
@@ -666,33 +846,10 @@ impl NativeBackend {
         c_in: &[f32],
         rows: usize,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (h, sd) = (self.arch.hidden(), self.arch.state_dim());
-        let mut xh = vec![0.0; rows * (h + sd)];
-        for r in 0..rows {
-            xh[r * (h + sd)..r * (h + sd) + h].copy_from_slice(&x[r * h..(r + 1) * h]);
-            xh[r * (h + sd) + h..(r + 1) * (h + sd)].copy_from_slice(&h_in[r * sd..(r + 1) * sd]);
-        }
-        let mut gates = vec![0.0; rows * 4 * sd];
-        linear(&xh, pv.lstm_w, pv.lstm_b, &mut gates, rows, h + sd, 4 * sd);
-
-        let mut h2 = vec![0.0; rows * sd];
-        let mut c2 = vec![0.0; rows * sd];
-        for r in 0..rows {
-            let g = &mut gates[r * 4 * sd..(r + 1) * 4 * sd];
-            for j in 0..sd {
-                let i_g = sigmoid(g[j]);
-                let f_g = sigmoid(g[sd + j]);
-                let g_g = g[2 * sd + j].tanh();
-                let o_g = sigmoid(g[3 * sd + j]);
-                let c = f_g * c_in[r * sd + j] + i_g * g_g;
-                c2[r * sd + j] = c;
-                h2[r * sd + j] = o_g * c.tanh();
-                g[j] = i_g;
-                g[sd + j] = f_g;
-                g[2 * sd + j] = g_g;
-                g[3 * sd + j] = o_g;
-            }
-        }
+        let mut gates = Vec::new();
+        let mut h2 = Vec::new();
+        let mut c2 = Vec::new();
+        self.lstm_cell_into(pv, x, h_in, c_in, rows, &mut gates, &mut h2, &mut c2);
         (h2, c2, gates)
     }
 
@@ -714,18 +871,7 @@ impl NativeBackend {
         let (h1, h2) = self.encode(&pv, &trunk, n);
         let (logits, values) = self.decode(&pv, &h2, n);
 
-        let (metrics, d_logits, d_value) = ppo_loss_grads(
-            &self.arch.act_dims,
-            &logits,
-            &values,
-            batch.actions,
-            batch.logp,
-            batch.adv,
-            batch.ret,
-            ent_coef,
-            batch.norm_adv,
-            n,
-        )?;
+        let (metrics, d_logits, d_value) = self.k_loss(&logits, &values, batch, ent_coef, n)?;
 
         // Backprop through decode + trunk into one flat gradient vector
         // (the same `ranges` layout the forward pass reads from). The
@@ -752,7 +898,7 @@ impl NativeBackend {
         );
         drop(pv);
 
-        adam_update(params, opt, lr, &grads);
+        self.k_adam(params, opt, lr, &grads);
         Ok(metrics)
     }
 
@@ -830,18 +976,8 @@ impl NativeBackend {
         }
 
         // ---- loss over the flattened (T × R) rows ----
-        let (metrics, d_logits, d_value) = ppo_loss_grads(
-            &self.arch.act_dims,
-            &logits_all,
-            &values_all,
-            batch.actions,
-            batch.logp,
-            batch.adv,
-            batch.ret,
-            ent_coef,
-            batch.norm_adv,
-            n,
-        )?;
+        let (metrics, d_logits, d_value) =
+            self.k_loss(&logits_all, &values_all, batch, ent_coef, n)?;
 
         // ---- backward scan ----
         let mut grads = vec![0.0f32; params.len()];
@@ -900,7 +1036,7 @@ impl NativeBackend {
                     grads[ranges.lstm_b.start + j] += dgates[i * 4 * sd + j];
                 }
             }
-            accum_at_b(
+            self.k_accum_at_b(
                 &xh,
                 &dgates,
                 &mut grads[ranges.lstm_w.clone()],
@@ -909,7 +1045,7 @@ impl NativeBackend {
                 4 * sd,
             );
             // d_xh = dgates @ lstm_wᵀ → split into d_x and d_h_in.
-            matmul_a_wt(&dgates, pv.lstm_w, &mut d_xh, rows, 4 * sd, h + sd);
+            self.k_matmul_a_wt(&dgates, pv.lstm_w, &mut d_xh, rows, 4 * sd, h + sd);
             for r in 0..rows {
                 d_x[r * h..(r + 1) * h].copy_from_slice(&d_xh[r * (h + sd)..r * (h + sd) + h]);
             }
@@ -945,8 +1081,66 @@ impl NativeBackend {
         }
         drop(pv);
 
-        adam_update(params, opt, lr, &grads);
+        self.k_adam(params, opt, lr, &grads);
         Ok(metrics)
+    }
+
+    // -- allocation-free forward entry points (serve hot path) -------------
+
+    /// [`PolicyBackend::forward`] into a caller-owned [`Forward`],
+    /// reusing the backend's activation scratch — zero steady-state
+    /// allocations, the serve batcher's per-batch entry point.
+    pub fn forward_into(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        rows: usize,
+        out: &mut Forward,
+    ) -> Result<()> {
+        let d = self.arch.obs_dim;
+        ensure!(
+            !self.arch.is_recurrent(),
+            "stateless forward on a recurrent architecture — use forward_lstm"
+        );
+        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        let pv = ParamView::split(params, &self.arch)?;
+        let mut fs = std::mem::take(&mut self.fwd);
+        let (trunk, _) = self.trunk_input(&pv, obs, rows);
+        self.encode_into(&pv, &trunk, rows, &mut fs.h1, &mut fs.x);
+        self.decode_into(&pv, &fs.x, rows, &mut out.logits, &mut out.values);
+        drop(pv);
+        self.fwd = fs;
+        Ok(())
+    }
+
+    /// [`PolicyBackend::forward_lstm`] into a caller-owned
+    /// [`ForwardLstm`], reusing the backend's activation scratch.
+    pub fn forward_lstm_into(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+        out: &mut ForwardLstm,
+    ) -> Result<()> {
+        let d = self.arch.obs_dim;
+        let sd = self.arch.state_dim();
+        ensure!(sd > 0, "forward_lstm on a feedforward architecture");
+        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        ensure!(
+            h_in.len() == rows * sd && c_in.len() == rows * sd,
+            "state shape mismatch"
+        );
+        let pv = ParamView::split(params, &self.arch)?;
+        let mut fs = std::mem::take(&mut self.fwd);
+        let (trunk, _) = self.trunk_input(&pv, obs, rows);
+        self.encode_into(&pv, &trunk, rows, &mut fs.h1, &mut fs.x);
+        self.lstm_cell_into(&pv, &fs.x, h_in, c_in, rows, &mut fs.gates, &mut out.h, &mut out.c);
+        self.decode_into(&pv, &out.h, rows, &mut out.logits, &mut out.values);
+        drop(pv);
+        self.fwd = fs;
+        Ok(())
     }
 }
 
@@ -1034,17 +1228,9 @@ impl PolicyBackend for NativeBackend {
     }
 
     fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward> {
-        let d = self.arch.obs_dim;
-        ensure!(
-            !self.arch.is_recurrent(),
-            "stateless forward on a recurrent architecture — use forward_lstm"
-        );
-        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
-        let pv = ParamView::split(params, &self.arch)?;
-        let (trunk, _) = self.trunk_input(&pv, obs, rows);
-        let (_, x) = self.encode(&pv, &trunk, rows);
-        let (logits, values) = self.decode(&pv, &x, rows);
-        Ok(Forward { logits, values })
+        let mut out = Forward::default();
+        self.forward_into(params, obs, rows, &mut out)?;
+        Ok(out)
     }
 
     fn forward_lstm(
@@ -1055,25 +1241,9 @@ impl PolicyBackend for NativeBackend {
         c_in: &[f32],
         rows: usize,
     ) -> Result<ForwardLstm> {
-        let d = self.arch.obs_dim;
-        let sd = self.arch.state_dim();
-        ensure!(sd > 0, "forward_lstm on a feedforward architecture");
-        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
-        ensure!(
-            h_in.len() == rows * sd && c_in.len() == rows * sd,
-            "state shape mismatch"
-        );
-        let pv = ParamView::split(params, &self.arch)?;
-        let (trunk, _) = self.trunk_input(&pv, obs, rows);
-        let (_h1, x) = self.encode(&pv, &trunk, rows);
-        let (h2, c2, _) = self.lstm_cell(&pv, &x, h_in, c_in, rows);
-        let (logits, values) = self.decode(&pv, &h2, rows);
-        Ok(ForwardLstm {
-            logits,
-            values,
-            h: h2,
-            c: c2,
-        })
+        let mut out = ForwardLstm::default();
+        self.forward_lstm_into(params, obs, h_in, c_in, rows, &mut out)?;
+        Ok(out)
     }
 
     fn gae(

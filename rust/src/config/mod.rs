@@ -46,6 +46,7 @@ const TRAIN_KEYS: &[&str] = &[
     "pool",
     "run_dir",
     "log_every",
+    "kernels",
 ];
 
 /// Recognized experience-pipeline knobs, reachable as `train.pipeline.X`
@@ -430,6 +431,7 @@ pub fn train_config(cfg: &FlatConfig) -> Result<TrainConfig> {
         pipeline_depth: pipeline_config(cfg)?,
         run_dir: cfg.get("train.run_dir").cloned(),
         log_every: get_parse(cfg, "train.log_every", d.log_every)?,
+        kernels: get_parse(cfg, "train.kernels", d.kernels)?,
         wrappers: wrap_config(cfg)?,
         vec: vec_config(cfg)?,
     })

@@ -184,6 +184,29 @@
 //! `tests/pipeline.rs`), so results stay comparable when you turn the
 //! knobs off.
 //!
+//! ### Kernel paths
+//!
+//! Underneath all three levers sits the native backend's compute path,
+//! selected per run with `train.kernels` (`--train.kernels=scalar|simd`,
+//! [`backend::KernelPath`]):
+//!
+//! - `simd` (default): cache-blocked, 8-lane-tiled GEMM microkernels, a
+//!   fused LSTM cell, branch-free polynomial transcendentals, and
+//!   structured fork-join row parallelism across the forward, backward,
+//!   and Adam passes ([`backend::kernels`]). Matches the scalar path
+//!   within explicit tolerances (forward ≤ 1e-5, gradients ≤ 1e-4
+//!   relative — `tests/kernel_parity.rs`), and is **deterministic**:
+//!   threads partition output rows only, so results are bitwise
+//!   invariant to the thread count.
+//! - `scalar`: the original bit-exact reference math, pinned by the
+//!   golden JAX fixtures. Use it to reproduce pre-kernel runs exactly or
+//!   to bisect a numerical question down to the kernel layer.
+//!
+//! `PUFFER_KERNEL_THREADS` caps the fork-join width (default: available
+//! parallelism, capped at 8); small batches never fork. The
+//! scalar-vs-simd cells in `BENCH_policy.json` / `BENCH_train.json`
+//! (refreshed by `make bench`) quantify the speedup per architecture.
+//!
 //! ## Serving
 //!
 //! `puffer serve <ckpt>` ([`serve`]) turns a v2 (RunSpec-embedded)

@@ -111,6 +111,8 @@ fn print_help() {
          \x20 (puffer autotune writes the same cache).\n\n\
          Train keys: env total_steps lr ent_coef epochs minibatches norm_adv\n\
          \x20           anneal_lr seed num_workers pool run_dir log_every\n\
+         \x20           kernels scalar|simd (native compute path; worker cap\n\
+         \x20           via PUFFER_KERNEL_THREADS)\n\
          Pipeline keys: depth — 0 (default) trains serially; d >= 1 runs an\n\
          \x20 overlapped collector/learner pipeline\n\
          Wrap keys (innermost-first order): action_repeat time_limit\n\

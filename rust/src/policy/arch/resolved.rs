@@ -64,6 +64,35 @@ pub struct ArchRanges {
     pub total: usize,
 }
 
+impl ArchRanges {
+    /// Every parameter leaf as `(name, range)` in flat-vector order —
+    /// the `ravel_pytree` order [`ResolvedPolicy::ranges`] assigns
+    /// offsets in. The ranges tile `0..total` exactly (contiguous,
+    /// non-overlapping, covering), which is what makes this layout the
+    /// single source of truth for `n_params` and `ParamView::split`;
+    /// `tests/run_spec.rs` pins the tiling for every gallery spec.
+    pub fn leaves(&self) -> Vec<(String, Range<usize>)> {
+        let mut out = vec![
+            ("actor.b".to_string(), self.actor_b.clone()),
+            ("actor.w".to_string(), self.actor_w.clone()),
+            ("critic.b".to_string(), self.critic_b.clone()),
+            ("critic.w".to_string(), self.critic_w.clone()),
+        ];
+        for (i, r) in self.embeds.iter().enumerate() {
+            out.push((format!("embed_{i:02}.w"), r.clone()));
+        }
+        out.push(("enc1.b".to_string(), self.enc1_b.clone()));
+        out.push(("enc1.w".to_string(), self.enc1_w.clone()));
+        out.push(("enc2.b".to_string(), self.enc2_b.clone()));
+        out.push(("enc2.w".to_string(), self.enc2_w.clone()));
+        if !self.lstm_w.is_empty() {
+            out.push(("lstm.b".to_string(), self.lstm_b.clone()));
+            out.push(("lstm.w".to_string(), self.lstm_w.clone()));
+        }
+        out
+    }
+}
+
 /// A policy architecture resolved against an observation layout: what
 /// the native backend builds its passes from, and what
 /// `puffer policy describe` prints.
@@ -429,6 +458,42 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("15 bins"), "{err}");
+    }
+
+    #[test]
+    fn leaves_tile_the_flat_vector_exactly() {
+        // Feedforward + embedded + recurrent all at once: every leaf
+        // kind is present, and the named leaves must tile 0..total with
+        // no gap or overlap.
+        let space = Space::dict(vec![
+            ("feat".into(), Space::boxf(&[2], -1.0, 1.0)),
+            ("tok".into(), Space::Discrete(6)),
+        ]);
+        let spec = PolicySpec::default().with_hidden(8).with_embed_dim(4).with_lstm(8);
+        let arch = ResolvedPolicy::resolve(&spec, &space.layout(), &[3]).unwrap();
+        let r = arch.ranges();
+        let leaves = r.leaves();
+        let mut off = 0usize;
+        for (name, range) in &leaves {
+            assert_eq!(range.start, off, "{name} leaves a gap/overlap at {off}");
+            assert!(range.end > range.start, "{name} is empty");
+            off = range.end;
+        }
+        assert_eq!(off, r.total, "leaves must cover the whole vector");
+        assert_eq!(r.total, arch.n_params());
+        let names: Vec<&str> = leaves.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "actor.b", "actor.w", "critic.b", "critic.w", "embed_00.w",
+                "enc1.b", "enc1.w", "enc2.b", "enc2.w", "lstm.b", "lstm.w"
+            ]
+        );
+        // Feedforward arch: no lstm leaves at all.
+        let ff = ResolvedPolicy::from_flat(&PolicySpec::default().with_hidden(4), 3, &[2]);
+        let ff_leaves = ff.ranges().leaves();
+        assert!(ff_leaves.iter().all(|(n, _)| !n.starts_with("lstm")));
+        assert_eq!(ff_leaves.last().unwrap().1.end, ff.n_params());
     }
 
     #[test]

@@ -83,6 +83,7 @@ const RUN_TRAIN_KEYS: &[&str] = &[
     "anneal_lr",
     "run_dir",
     "log_every",
+    "kernels",
 ];
 
 /// The declarative experiment: env × policy × vectorization × training
@@ -370,6 +371,7 @@ impl RunSpec {
         put("train.norm_adv", t.norm_adv.to_string());
         put("train.anneal_lr", t.anneal_lr.to_string());
         put("train.log_every", t.log_every.to_string());
+        put("train.kernels", t.kernels.to_string());
         put("train.pipeline.depth", t.pipeline_depth.to_string());
         if let Some(dir) = &t.run_dir {
             put("train.run_dir", dir.clone());

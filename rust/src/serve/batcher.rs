@@ -100,6 +100,14 @@ pub struct Shard {
     obs_dim: usize,
     act_dims: Vec<usize>,
     recurrent: bool,
+    // Per-shard forward scratch: gather buffers + output activations,
+    // reused every batch through the backend's `*_into` kernel entry
+    // points so the steady-state hot path allocates nothing.
+    obs_buf: Vec<f32>,
+    h_buf: Vec<f32>,
+    c_buf: Vec<f32>,
+    out_ff: crate::backend::Forward,
+    out_lstm: crate::backend::ForwardLstm,
 }
 
 impl Shard {
@@ -125,6 +133,11 @@ impl Shard {
             act_dims,
             recurrent,
             backend,
+            obs_buf: Vec::new(),
+            h_buf: Vec::new(),
+            c_buf: Vec::new(),
+            out_ff: crate::backend::Forward::default(),
+            out_lstm: crate::backend::ForwardLstm::default(),
         }
     }
 
@@ -164,9 +177,11 @@ impl Shard {
 
     fn forward_group(&mut self, group: Vec<Job>, version: u64, params: &[f32]) -> Result<()> {
         let rows = group.len();
-        let mut obs = Vec::with_capacity(rows * self.obs_dim);
-        let mut h = Vec::new();
-        let mut c = Vec::new();
+        // Gather into the shard's reusable buffers (cleared, capacity
+        // kept) and run the allocation-free `*_into` forward.
+        self.obs_buf.clear();
+        self.h_buf.clear();
+        self.c_buf.clear();
         let created_before = self.sessions.created();
         for job in &group {
             anyhow::ensure!(
@@ -176,16 +191,22 @@ impl Shard {
                 job.req.obs.len(),
                 self.obs_dim
             );
-            obs.extend_from_slice(&job.req.obs);
+            self.obs_buf.extend_from_slice(&job.req.obs);
             // Creates/touches the session either way; gathers zero-width
             // state for feedforward policies.
             self.sessions
-                .gather(job.req.session, job.req.reset, &mut h, &mut c);
+                .gather(job.req.session, job.req.reset, &mut self.h_buf, &mut self.c_buf);
         }
-        let (logits, values) = if self.recurrent {
-            let out = self
-                .backend
-                .forward_lstm(params, &obs, &h, &c, rows)?;
+        let (logits, values): (&[f32], &[f32]) = if self.recurrent {
+            self.backend.forward_lstm_into(
+                params,
+                &self.obs_buf,
+                &self.h_buf,
+                &self.c_buf,
+                rows,
+                &mut self.out_lstm,
+            )?;
+            let out = &self.out_lstm;
             let sd = out.h.len() / rows;
             for (i, job) in group.iter().enumerate() {
                 self.sessions.scatter(
@@ -194,10 +215,11 @@ impl Shard {
                     &out.c[i * sd..(i + 1) * sd],
                 );
             }
-            (out.logits, out.values)
+            (&out.logits, &out.values)
         } else {
-            let out = self.backend.forward(params, &obs, rows)?;
-            (out.logits, out.values)
+            self.backend
+                .forward_into(params, &self.obs_buf, rows, &mut self.out_ff)?;
+            (&self.out_ff.logits, &self.out_ff.values)
         };
         let slot_sum: usize = self.act_dims.iter().sum();
         for (i, job) in group.into_iter().enumerate() {

@@ -73,7 +73,10 @@ impl ServedModel {
             .policy
             .clone()
             .unwrap_or_else(|| PolicySpec::default_for(&tc.env));
-        NativeBackend::for_env_with_policy(&env_spec.key(), probe.as_ref(), &policy)
+        let mut backend =
+            NativeBackend::for_env_with_policy(&env_spec.key(), probe.as_ref(), &policy)?;
+        backend.set_kernel_path(tc.kernels);
+        Ok(backend)
     }
 
     /// Validate that a (re-)loaded checkpoint matches this model's

@@ -87,6 +87,11 @@ pub struct TrainConfig {
     pub run_dir: Option<String>,
     /// Console log every n segments (0 = silent).
     pub log_every: usize,
+    /// Kernel flavor for the native backend (`train.kernels` /
+    /// `--train.kernels`): `simd` (default) = lane-tiled multithreaded
+    /// kernels, `scalar` = the bit-exact reference path every
+    /// bit-identity pin runs against.
+    pub kernels: crate::backend::KernelPath,
 }
 
 impl Default for TrainConfig {
@@ -109,6 +114,7 @@ impl Default for TrainConfig {
             pipeline_depth: 0,
             run_dir: None,
             log_every: 5,
+            kernels: crate::backend::KernelPath::default(),
         }
     }
 }
@@ -278,7 +284,8 @@ impl Trainer {
         let spec = Self::env_spec(&cfg);
         let probe = spec.build(0);
         let policy = Self::policy_spec(&cfg);
-        let backend = NativeBackend::for_env_with_policy(&spec.key(), probe.as_ref(), &policy)?;
+        let mut backend = NativeBackend::for_env_with_policy(&spec.key(), probe.as_ref(), &policy)?;
+        backend.set_kernel_path(cfg.kernels);
         Self::build(cfg, Box::new(backend), probe, seeds, run_spec)
     }
 

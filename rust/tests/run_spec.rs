@@ -280,3 +280,49 @@ fn file_errors_name_the_file_and_the_key() {
     let err = format!("{:#}", RunSpec::load(&path).unwrap_err());
     assert!(err.contains("vec.mode"), "{err}");
 }
+
+/// Every gallery spec's resolved architecture must expose a parameter
+/// layout whose named leaves tile `0..n_params` exactly — the
+/// `ArchRanges` contract `ParamView::split` and `n_params` both build
+/// on. Rebuilding through `ServedModel::backend_for` exercises the same
+/// construction path training and serving share.
+#[test]
+fn gallery_arch_ranges_tile_n_params_exactly() {
+    use pufferlib::backend::PolicyBackend;
+    use pufferlib::serve::ServedModel;
+    let mut seen = 0;
+    for entry in std::fs::read_dir(SPECS_DIR).expect("examples/specs exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        seen += 1;
+        let spec = RunSpec::load(&path).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let backend = ServedModel::backend_for(&spec).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let arch = backend.arch();
+        let ranges = arch.ranges();
+        let leaves = ranges.leaves();
+        let mut off = 0usize;
+        for (name, range) in &leaves {
+            assert_eq!(
+                range.start, off,
+                "{path:?}: leaf {name} starts at {} but previous leaf ended at {off}",
+                range.start
+            );
+            assert!(range.end > range.start, "{path:?}: leaf {name} is empty");
+            off = range.end;
+        }
+        assert_eq!(off, ranges.total, "{path:?}: leaves must cover the whole vector");
+        assert_eq!(
+            ranges.total,
+            arch.n_params(),
+            "{path:?}: ranges total and n_params disagree"
+        );
+        assert_eq!(
+            ranges.total,
+            backend.spec().n_params,
+            "{path:?}: manifest n_params and ArchRanges disagree"
+        );
+    }
+    assert!(seen >= 5, "expected a spec gallery, found {seen} files");
+}

@@ -14,6 +14,11 @@
 //! - **R4 (forbid)**: modules that need no unsafe carry
 //!   `#![forbid(unsafe_code)]`, keeping the unsafe surface pinned to
 //!   `vector/`.
+//! - **R5 (kernel alloc)**: `rust/src/backend/kernels/` is a hot path
+//!   end to end (serve forwards and train steps run through it every
+//!   batch), so allocation tokens are banned file-wide there, not just
+//!   inside named functions. Deliberate cold-path allocations carry an
+//!   `// ALLOC-OK:` comment with a reason.
 //!
 //! Output is `file:line: RULE — message`, one finding per line; exit
 //! status is nonzero when anything fires. CI runs this in the lint job;
@@ -32,6 +37,7 @@ const MARKER_WINDOW: usize = 3;
 /// relative to the repo root. `vector/` is deliberately absent — it owns
 /// the crate's entire unsafe surface.
 const FORBID_UNSAFE: &[&str] = &[
+    "rust/src/backend/kernels/mod.rs",
     "rust/src/config/mod.rs",
     "rust/src/emulation/mod.rs",
     "rust/src/envs/mod.rs",
@@ -119,11 +125,16 @@ fn lint() -> ExitCode {
         if rel.starts_with("rust/src/wrappers/") {
             findings.extend(check_hot_paths(&rel, &text));
         }
+        if rel.starts_with("rust/src/backend/kernels/") {
+            findings.extend(check_kernel_allocs(&rel, &text));
+        }
     }
     findings.extend(check_forbid(&root));
 
     if findings.is_empty() {
-        println!("xtask lint: {scanned} files clean (R1 ordering, R2 panic, R3 hot-path, R4 forbid)");
+        println!(
+            "xtask lint: {scanned} files clean (R1 ordering, R2 panic, R3 hot-path, R4 forbid, R5 kernel-alloc)"
+        );
         ExitCode::SUCCESS
     } else {
         for f in &findings {
@@ -322,6 +333,36 @@ fn check_hot_paths(rel: &str, text: &str) -> Vec<Finding> {
     out
 }
 
+/// R5: kernel files are steady-state hot paths end to end — the serve
+/// batcher and the trainer's minibatch loop call into them every batch
+/// through preallocated scratch, so the whole file must stay
+/// allocation-free. A deliberate cold-path allocation (construction,
+/// error paths) is waived line-by-line with `// ALLOC-OK: <reason>`.
+fn check_kernel_allocs(rel: &str, text: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mask = test_line_mask(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let code = code_part(line);
+        for tok in ALLOC_TOKENS {
+            if code.contains(tok) && !marker_nearby(&lines, i, "// ALLOC-OK:", MARKER_WINDOW) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "R5",
+                    msg: format!(
+                        "allocation token `{tok}` in kernel code (waive with `// ALLOC-OK: <reason>` if cold-path)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
 /// R4: the forbid list keeps the unsafe surface pinned to `vector/`.
 fn check_forbid(root: &Path) -> Vec<Finding> {
     let mut out = Vec::new();
@@ -401,5 +442,26 @@ mod tests {
         // project_step is covered too.
         let proj = "fn project_step(&self) {\n    let s = String::new();\n}\n";
         assert_eq!(check_hot_paths("w.rs", proj).len(), 1);
+    }
+
+    #[test]
+    fn kernel_allocs_are_flagged_file_wide() {
+        // Outside any named hot-path function — still flagged in kernels.
+        let bad = "pub fn helper() -> Vec<f32> {\n    let v = vec![0.0; 4];\n    v\n}\n";
+        let f = check_kernel_allocs("k.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("vec!"));
+        // ALLOC-OK on the same line or just above waives it.
+        let waived_same =
+            "let v = vec![0.0; 4]; // ALLOC-OK: one-time construction\n";
+        assert!(check_kernel_allocs("k.rs", waived_same).is_empty());
+        let waived_above =
+            "// ALLOC-OK: config-parse error path, not kernel code.\nlet e = format!(\"bad {x}\");\n";
+        assert!(check_kernel_allocs("k.rs", waived_above).is_empty());
+        // Tokens in comments and test modules are exempt.
+        let in_comment = "// callers pass Vec::new() scratch\nfn f() {}\n";
+        assert!(check_kernel_allocs("k.rs", in_comment).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let v = vec![1]; }\n}\n";
+        assert!(check_kernel_allocs("k.rs", in_test).is_empty());
     }
 }
