@@ -235,6 +235,9 @@ fn main() {
             .collect();
         let out = obj(vec![
             ("bench", s("policy_forward")),
+            // Distinguishes a real run from the checked-in
+            // "static-estimate" placeholder this file replaces.
+            ("method", s("measured")),
             ("iters", num(iters as f64)),
             ("geometry", s("T=32 R=32")),
             ("kernel_threads", num(pufferlib::backend::kernels::thread_cap_from_env() as f64)),

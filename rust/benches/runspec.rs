@@ -92,6 +92,7 @@ fn main() {
     if let Some(path) = json_path {
         let out = obj(vec![
             ("bench", s("runspec")),
+            ("method", s("measured")),
             (
                 "cells",
                 arr(cells

@@ -163,6 +163,9 @@ fn main() {
             .collect();
         let out = obj(vec![
             ("bench", s("train_pipeline")),
+            // Distinguishes a real run from the checked-in
+            // "static-estimate" placeholder this file replaces.
+            ("method", s("measured")),
             ("total_steps", num(total_steps as f64)),
             (
                 "config",

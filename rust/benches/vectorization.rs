@@ -196,6 +196,7 @@ fn main() {
         };
         let out = obj(vec![
             ("bench", s("vectorization")),
+            ("method", s("measured")),
             ("secs_per_cell", num(secs)),
             ("table2", arr(table2)),
             ("wrapper_overhead", w1),

@@ -66,6 +66,11 @@ pub const VEC_KEYS: &[&str] = &["mode", "workers", "batch", "zero_copy", "spin_b
 /// (RunSpec `[serve]` sections and `--serve.X=...` CLI overrides).
 pub const SERVE_KEYS: &[&str] = &["port", "max_batch", "max_wait_us", "session_ttl_s", "threads"];
 
+/// Recognized experiment-ops knobs
+/// ([`RunsConfig`](crate::runs::RunsConfig)), reachable as `runs.X`
+/// (RunSpec `[runs]` sections and `--runs.X=...` CLI overrides).
+pub const RUNS_KEYS: &[&str] = &["root", "heartbeat_s"];
+
 /// Recognized wrapper knobs, reachable as `train.wrap.X` (config files)
 /// or `wrap.X` (CLI `--wrap.X=...` overrides).
 const WRAP_KEYS: &[&str] = &[
@@ -145,6 +150,11 @@ pub fn validate_keys(cfg: &FlatConfig) -> Result<()> {
             ensure!(
                 SERVE_KEYS.contains(&rest),
                 "unknown serve key '{key}' (known serve knobs: {SERVE_KEYS:?})"
+            );
+        } else if let Some(rest) = key.strip_prefix("runs.") {
+            ensure!(
+                RUNS_KEYS.contains(&rest),
+                "unknown runs key '{key}' (known runs knobs: {RUNS_KEYS:?})"
             );
         } else if let Some(rest) = key.strip_prefix("train.") {
             ensure!(
@@ -280,6 +290,36 @@ pub fn serve_config(cfg: &FlatConfig) -> Result<Option<crate::serve::ServeConfig
         "config key 'serve.session_ttl_s': must be >= 1 (sessions would evict instantly)"
     );
     ensure!(spec.threads >= 1, "config key 'serve.threads': must be >= 1");
+    Ok(Some(spec))
+}
+
+/// Build the [`RunsConfig`](crate::runs::RunsConfig) from a flat
+/// config's `runs.*` keys. Returns `None` when no runs key is present
+/// (registry logging then uses the defaults); present keys get strict
+/// bounds checks and defaults for the rest.
+pub fn runs_config(cfg: &FlatConfig) -> Result<Option<crate::runs::RunsConfig>> {
+    let get = |knob: &str| cfg.get(&format!("runs.{knob}")).map(String::as_str);
+    if RUNS_KEYS.iter().all(|k| get(k).is_none()) {
+        return Ok(None);
+    }
+    let defaults = crate::runs::RunsConfig::default();
+    let spec = crate::runs::RunsConfig {
+        root: get("root").unwrap_or(&defaults.root).to_string(),
+        heartbeat_s: get_parse(cfg, "runs.heartbeat_s", defaults.heartbeat_s)?,
+    };
+    ensure!(
+        !spec.root.trim().is_empty(),
+        "config key 'runs.root': must be a non-empty directory path"
+    );
+    ensure!(
+        spec.heartbeat_s.is_finite() && spec.heartbeat_s > 0.0,
+        "config key 'runs.heartbeat_s': must be a positive number of seconds"
+    );
+    ensure!(
+        spec.heartbeat_s <= 3600.0,
+        "config key 'runs.heartbeat_s': must be <= 3600 (staleness detection \
+         needs a bounded period)"
+    );
     Ok(Some(spec))
 }
 
@@ -663,6 +703,48 @@ mod tests {
         cfg.insert("serve.prot".into(), "7777".into());
         let err = validate_keys(&cfg).unwrap_err().to_string();
         assert!(err.contains("serve.prot"), "{err}");
+    }
+
+    #[test]
+    fn runs_config_defaults_bounds_and_unknown_keys() {
+        // No runs keys → None (callers fall back to defaults).
+        assert_eq!(runs_config(&FlatConfig::new()).unwrap(), None);
+        // One key pulls in defaults for the rest.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("runs.heartbeat_s".into(), "2.5".into());
+        let rc = runs_config(&cfg).unwrap().unwrap();
+        assert_eq!(rc.heartbeat_s, 2.5);
+        assert_eq!(rc.root, crate::runs::RunsConfig::default().root);
+        // Full section round-trips.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("runs.root".into(), "exp/registry".into());
+        cfg.insert("runs.heartbeat_s".into(), "1".into());
+        let rc = runs_config(&cfg).unwrap().unwrap();
+        assert_eq!(
+            rc,
+            crate::runs::RunsConfig {
+                root: "exp/registry".to_string(),
+                heartbeat_s: 1.0
+            }
+        );
+        // Bounds are named after their key.
+        for (k, v) in [
+            ("runs.root", "  "),
+            ("runs.heartbeat_s", "0"),
+            ("runs.heartbeat_s", "-2"),
+            ("runs.heartbeat_s", "inf"),
+            ("runs.heartbeat_s", "7200"),
+        ] {
+            let mut cfg = FlatConfig::new();
+            cfg.insert(k.into(), v.into());
+            let err = runs_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(k), "{k}={v}: {err}");
+        }
+        // Typos are rejected by namespace validation.
+        let mut cfg = FlatConfig::new();
+        cfg.insert("runs.heart_beat".into(), "5".into());
+        let err = validate_keys(&cfg).unwrap_err().to_string();
+        assert!(err.contains("runs.heart_beat"), "{err}");
     }
 
     #[test]

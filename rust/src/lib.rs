@@ -226,6 +226,22 @@
 //! --selftest` runs a synthetic load and reports p50/p99 latency plus
 //! batch occupancy; `puffer ckpt info <ckpt>` prints the embedded spec.
 //!
+//! ## Experiment ops
+//!
+//! Every `puffer run`/`resume`/`sweep` launch is logged to a crash-safe
+//! run registry ([`runs`]): an append-only `runs/index.jsonl` plus one
+//! atomically-rewritten `run.json` per run dir, tracking
+//! `pending → running → done | failed | killed` with host/pid, attempt
+//! count, final metrics, and checkpoint path. Sweeps are resumable —
+//! re-invoking `puffer sweep` skips at-budget children, resumes
+//! partials from their checkpoints, and reclaims orphans — and
+//! `--processes=N` isolates children in their own OS processes.
+//! Trainers heartbeat live SPS/stall counters to `heartbeat.json`;
+//! `puffer ps` (and `--json`) tables live/recent runs with
+//! stale-heartbeat detection, `puffer top` refreshes the in-flight
+//! view. The `[runs]` spec section / `--runs.*` flags set the registry
+//! root and heartbeat period.
+//!
 //! ## Concurrency correctness
 //!
 //! Every cross-thread protocol (slab handoff, parameter snapshots,
@@ -241,6 +257,7 @@ pub mod config;
 pub mod emulation;
 pub mod envs;
 pub mod policy;
+pub mod runs;
 pub mod runspec;
 pub mod runtime;
 pub mod serve;

@@ -2,10 +2,12 @@
 //! a CLI for all included PufferLib environments, clean YAML configs").
 //!
 //! ```text
-//! puffer run <spec.toml> [--train.lr=3e-3 --vec.workers=4 ...]
+//! puffer run <spec.toml> [--train.lr=3e-3 --vec.workers=4 ...] [--resume]
 //! puffer validate <spec.toml> [more.toml ...]
 //! puffer resume <checkpoint.bin>            # zero flags: spec is embedded
-//! puffer sweep <spec.toml> [--jobs=N]       # expand the [grid] section
+//! puffer sweep <spec.toml> [--jobs=N | --processes=N]  # resumable [grid] sweep
+//! puffer ps [--runs.root=DIR] [--json]      # registry table: live/done/failed/stale
+//! puffer top [--runs.root=DIR] [--refresh=S] [--iters=N]  # refreshing live view
 //! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] ...
 //! puffer eval <checkpoint.bin> [--episodes=N]      # spec from the checkpoint
 //! puffer eval <env> --checkpoint=FILE [--episodes=N]
@@ -35,6 +37,7 @@
 use anyhow::{Context, Result};
 use pufferlib::config;
 use pufferlib::envs;
+use pufferlib::runs::{self, Registry, RunStatus};
 use pufferlib::runspec::{self, RunSpec};
 use pufferlib::train::{Checkpoint, TrainConfig, TrainReport, Trainer};
 use pufferlib::vector::autotune;
@@ -45,7 +48,7 @@ const ARTIFACTS: &str = "artifacts";
 
 /// Override namespaces every spec-consuming command accepts.
 const SPEC_NAMESPACES: &[&str] =
-    &["train.", "wrap.", "pipeline.", "policy.", "vec.", "env.", "serve.", "seed"];
+    &["train.", "wrap.", "pipeline.", "policy.", "vec.", "env.", "serve.", "runs.", "seed"];
 
 fn main() {
     if let Err(e) = run() {
@@ -66,6 +69,8 @@ fn run() -> Result<()> {
         "train" => cmd_train(&rest),
         "eval" => cmd_eval(&rest),
         "sweep" => cmd_sweep(&rest),
+        "ps" => cmd_ps(&rest),
+        "top" => cmd_top(&rest),
         "autotune" => cmd_autotune(&rest),
         "policy" => cmd_policy(&rest),
         "serve" => cmd_serve(&rest),
@@ -90,10 +95,12 @@ fn run() -> Result<()> {
 fn print_help() {
     println!(
         "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
-         USAGE:\n  puffer run <spec.toml> [--KEY=VAL ...]          run a declarative RunSpec\n  \
+         USAGE:\n  puffer run <spec.toml> [--KEY=VAL ...] [--resume]  run a declarative RunSpec\n  \
          puffer validate <spec.toml> [...]               parse + deep-check spec files\n  \
          puffer resume <checkpoint.bin> [--KEY=VAL ...]  continue a run (spec embedded)\n  \
-         puffer sweep <spec.toml> [--jobs=N]             expand + train the [grid] section\n  \
+         puffer sweep <spec.toml> [--jobs=N | --processes=N]  resumable [grid] sweep\n  \
+         puffer ps [--runs.root=DIR] [--json]            registry: live/done/failed/stale runs\n  \
+         puffer top [--runs.root=DIR] [--refresh=SECS] [--iters=N]  refreshing live view\n  \
          puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--vec.KEY=VAL ...] [--backend=native|pjrt]\n  \
          puffer eval <checkpoint.bin> [--episodes=N]     evaluate from a RunSpec checkpoint\n  \
          puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
@@ -121,7 +128,11 @@ fn print_help() {
          \x20 head categorical|quantized:<bins>\n\
          Vec keys: mode serial|mt|auto | workers | batch full|half|<envs> |\n\
          \x20 zero_copy | spin_budget\n\
-         Serve keys: port | max_batch | max_wait_us | session_ttl_s | threads\n\n\
+         Serve keys: port | max_batch | max_wait_us | session_ttl_s | threads\n\
+         Runs keys: root (registry root, default `runs`) | heartbeat_s — every\n\
+         \x20 run/sweep launch writes the registry; `puffer sweep` re-invoked on\n\
+         \x20 the same spec skips at-budget children and resumes partials, and\n\
+         \x20 `puffer ps`/`puffer top` read the same root\n\n\
          Backends: native (default, pure Rust; any spec) | pjrt (train/eval\n\
          \x20         only; AOT artifacts, default archs; needs --features pjrt\n\
          \x20         and `make artifacts`)"
@@ -281,11 +292,23 @@ fn cmd_run(args: &[String]) -> Result<()> {
         backend == "native",
         "puffer run drives the native backend; use `puffer train <env> --backend=pjrt` for the AOT path"
     );
+    // --resume: continue from the run dir's checkpoint when one exists
+    // (a fresh dir trains from scratch) — what resumable sweeps pass to
+    // their child processes.
+    let mut resume = false;
+    overrides.retain(|a| {
+        if a == "--resume" {
+            resume = true;
+            false
+        } else {
+            true
+        }
+    });
     let path = positional
         .first()
         .cloned()
         .or(cfg_file)
-        .context("usage: puffer run <spec.toml> [--KEY=VAL ...]")?;
+        .context("usage: puffer run <spec.toml> [--KEY=VAL ...] [--resume]")?;
     reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
     let spec = RunSpec::load(&path)?;
     anyhow::ensure!(
@@ -302,11 +325,38 @@ fn cmd_run(args: &[String]) -> Result<()> {
         spec.seed,
         spec.train.total_steps,
     );
-    let mut trainer = spec.build()?;
-    let report = trainer.train()?;
-    print_train_report(&report);
-    println!("checkpoint: {run_dir}/checkpoint.bin (resume with `puffer resume {run_dir}/checkpoint.bin`)");
-    Ok(())
+    // Every launch is registered: running → done|failed, so `puffer ps`
+    // and resumable sweeps see this run. A crash between begin() and the
+    // terminal write leaves a Running record that stale-heartbeat
+    // detection reports (and sweeps reclaim).
+    let reg = Registry::new(&runs::RunsConfig::for_spec(&spec).root);
+    let rec = reg.begin(&spec, &run_dir)?;
+    let trained = (|| -> Result<TrainReport> {
+        let mut trainer = spec.build()?;
+        if resume {
+            let ckpt = runs::sweep::checkpoint_path(&run_dir);
+            if std::path::Path::new(&ckpt).is_file() {
+                let ck = Checkpoint::load(&ckpt).context("loading checkpoint for --resume")?;
+                trainer.restore(&ck)?;
+                println!("resumed from {ckpt} at step {}", trainer.global_step());
+            }
+        }
+        trainer.train()
+    })();
+    match trained {
+        Ok(report) => {
+            let ckpt = runs::sweep::checkpoint_path(&run_dir);
+            let ckpt = std::path::Path::new(&ckpt).is_file().then_some(ckpt);
+            reg.finish_ok(rec, &report, ckpt)?;
+            print_train_report(&report);
+            println!("checkpoint: {run_dir}/checkpoint.bin (resume with `puffer resume {run_dir}/checkpoint.bin`)");
+            Ok(())
+        }
+        Err(e) => {
+            let _ = reg.finish_err(rec, RunStatus::Failed, &format!("{e:#}"), None);
+            Err(e)
+        }
+    }
 }
 
 fn cmd_validate(args: &[String]) -> Result<()> {
@@ -315,6 +365,9 @@ fn cmd_validate(args: &[String]) -> Result<()> {
         !positional.is_empty() && overrides.is_empty(),
         "usage: puffer validate <spec.toml> [more.toml ...]"
     );
+    // Every concrete run the invocation describes (grid sections expand
+    // to their children): (spec file, run dir, spec fingerprint).
+    let mut planned: Vec<(String, String, String)> = Vec::new();
     for path in &positional {
         let spec = RunSpec::load(path)?;
         spec.validate().with_context(|| format!("validating {path}"))?;
@@ -334,6 +387,46 @@ fn cmd_validate(args: &[String]) -> Result<()> {
             spec.seed,
             spec.train.total_steps,
         );
+        let concrete = if spec.grid.is_empty() {
+            vec![spec]
+        } else {
+            spec.expand_grid().unwrap_or_default()
+        };
+        for child in &concrete {
+            if let Some(dir) = &child.train.run_dir {
+                planned.push((
+                    path.clone(),
+                    dir.clone(),
+                    runs::record::spec_fingerprint(child),
+                ));
+            }
+        }
+    }
+    // Run-dir collision warnings. Two *different* specs writing one dir
+    // would silently share a checkpoint and registry record — resumes
+    // would cross-contaminate. Identical fingerprints are the normal
+    // re-invoke/resume case and stay quiet.
+    for (i, (path_a, dir_a, fp_a)) in planned.iter().enumerate() {
+        for (path_b, dir_b, fp_b) in planned.iter().skip(i + 1) {
+            if dir_a == dir_b && !fp_a.is_empty() && fp_a != fp_b {
+                println!(
+                    "WARN {dir_a}: {path_a} and {path_b} both write this run dir \
+                     with different specs — their checkpoints and registry \
+                     records would collide"
+                );
+            }
+        }
+    }
+    for (path, dir, fp) in &planned {
+        if let Ok(Some(rec)) = Registry::load(dir) {
+            if !rec.spec_fingerprint.is_empty() && !fp.is_empty() && rec.spec_fingerprint != *fp {
+                println!(
+                    "WARN {dir}: already registered by a different spec than \
+                     {path} (registry fingerprint mismatch) — running this file \
+                     would resume a foreign checkpoint"
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -362,40 +455,83 @@ fn cmd_resume(args: &[String]) -> Result<()> {
         ck.global_step,
         spec.train.total_steps
     );
-    let mut trainer = spec.build()?;
-    trainer.restore(&ck)?;
-    if trainer.global_step() >= spec.train.total_steps {
-        println!(
-            "already at the step budget — extend with --train.total_steps=N to keep training"
-        );
+    // Resumed attempts are registered like fresh ones: begin() bumps the
+    // record's attempt counter so `puffer ps` shows the retry history.
+    let reg_ctx = match spec.train.run_dir.clone() {
+        Some(dir) => {
+            let reg = Registry::new(&runs::RunsConfig::for_spec(&spec).root);
+            let rec = reg.begin(&spec, &dir)?;
+            Some((reg, rec, dir))
+        }
+        None => None,
+    };
+    let trained = (|| -> Result<TrainReport> {
+        let mut trainer = spec.build()?;
+        trainer.restore(&ck)?;
+        if trainer.global_step() >= spec.train.total_steps {
+            println!(
+                "already at the step budget — extend with --train.total_steps=N to keep training"
+            );
+        }
+        trainer.train()
+    })();
+    match trained {
+        Ok(report) => {
+            if let Some((reg, rec, dir)) = reg_ctx {
+                let ckpt = runs::sweep::checkpoint_path(&dir);
+                let ckpt = std::path::Path::new(&ckpt).is_file().then_some(ckpt);
+                reg.finish_ok(rec, &report, ckpt)?;
+            }
+            print_train_report(&report);
+            Ok(())
+        }
+        Err(e) => {
+            if let Some((reg, rec, _)) = reg_ctx {
+                let _ = reg.finish_err(rec, RunStatus::Failed, &format!("{e:#}"), None);
+            }
+            Err(e)
+        }
     }
-    let report = trainer.train()?;
-    print_train_report(&report);
-    Ok(())
 }
 
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let (cfg_file, positional, mut overrides) = split_args(args);
     let backend = take_backend(&mut overrides);
-    // Spec-based grid sweep: `puffer sweep <spec.toml> [--jobs=N]`.
+    // Spec-based grid sweep:
+    // `puffer sweep <spec.toml> [--jobs=N | --processes=N]`. Registry-
+    // aware and crash-resumable: at-budget children are skipped, partial
+    // checkpoints resume, orphaned `running` records are reclaimed, and
+    // every child ends with exactly one terminal registry record.
     if let Some(path) = positional.first().cloned() {
         anyhow::ensure!(backend == "native", "puffer sweep drives the native backend");
-        let mut jobs = 2usize;
-        let mut bad_jobs = None;
+        let mut jobs: Option<usize> = None;
+        let mut processes: Option<usize> = None;
+        let mut bad: Option<String> = None;
         overrides.retain(|a| {
             if let Some(v) = a.strip_prefix("--jobs=") {
                 match v.parse::<usize>() {
-                    Ok(j) if j >= 1 => jobs = j,
-                    _ => bad_jobs = Some(v.to_string()),
+                    Ok(j) if j >= 1 => jobs = Some(j),
+                    _ => bad = Some(format!("--jobs: expected an integer >= 1, got '{v}'")),
+                }
+                false
+            } else if let Some(v) = a.strip_prefix("--processes=") {
+                match v.parse::<usize>() {
+                    Ok(p) if p >= 1 => processes = Some(p),
+                    _ => bad = Some(format!("--processes: expected an integer >= 1, got '{v}'")),
                 }
                 false
             } else {
                 true
             }
         });
-        if let Some(v) = bad_jobs {
-            anyhow::bail!("--jobs: expected an integer >= 1, got '{v}'");
+        if let Some(msg) = bad {
+            anyhow::bail!("{msg}");
         }
+        anyhow::ensure!(
+            jobs.is_none() || processes.is_none(),
+            "--jobs (in-process threads) and --processes (separate OS processes) \
+             are mutually exclusive — pick one executor"
+        );
         reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
         let spec = apply_spec_overrides(RunSpec::load(&path)?, &overrides)?;
         anyhow::ensure!(
@@ -403,31 +539,52 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             "{path} has no [grid] section to sweep — run it with `puffer run {path}`"
         );
         let children = spec.expand_grid()?;
+        let reg = Registry::new(&runs::RunsConfig::for_spec(&spec).root);
+        let width = processes.or(jobs).unwrap_or(2).min(children.len());
         println!(
-            "sweeping {}: {} grid points across {} worker(s)",
+            "sweeping {}: {} grid points across {} {} (registry: {})",
             spec.env.key(),
             children.len(),
-            jobs.min(children.len())
+            width,
+            if processes.is_some() { "process(es)" } else { "worker(s)" },
+            reg.index_path().display(),
         );
-        let outcomes = runspec::run_sweep(&children, jobs, |i, o| match &o.report {
-            Ok(r) => println!(
-                "[{}/{}] {:<40} score {}  ({} steps @ {:.0} SPS) → {}",
-                i + 1,
-                children.len(),
-                o.label,
-                r.mean_score.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
-                r.global_step,
-                r.sps,
-                o.run_dir
-            ),
-            Err(e) => println!("[{}/{}] {:<40} FAILED: {e:#}", i + 1, children.len(), o.label),
-        })?;
-        let failed = outcomes.iter().filter(|o| o.report.is_err()).count();
+        use pufferlib::runs::sweep::{ChildOutcome, ChildStatus};
+        let fmt_score = |s: Option<f64>| s.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into());
+        let on_event = |o: &ChildOutcome| {
+            let resumed = if o.resumed { " (resumed)" } else { "" };
+            match &o.status {
+                ChildStatus::Skipped(why) => println!("[skip]   {:<40} {why}", o.label),
+                ChildStatus::Done(Some(r)) => println!(
+                    "[done]   {:<40} score {}  ({} steps @ {:.0} SPS){resumed} → {}",
+                    o.label,
+                    fmt_score(r.mean_score),
+                    r.global_step,
+                    r.sps,
+                    o.run_dir
+                ),
+                ChildStatus::Done(None) => {
+                    println!("[done]   {:<40}{resumed} → {}", o.label, o.run_dir)
+                }
+                ChildStatus::Failed(e) => println!("[failed] {:<40} {e}", o.label),
+            }
+        };
+        let outcomes = match processes {
+            Some(p) => runs::sweep::run_processes(&reg, &children, p, on_event)?,
+            None => runs::sweep::run_resumable(&reg, &children, jobs.unwrap_or(2), on_event)?,
+        };
+        let skipped = outcomes
+            .iter()
+            .filter(|o| matches!(o.status, ChildStatus::Skipped(_)))
+            .count();
+        let resumed = outcomes.iter().filter(|o| o.resumed && !o.failed()).count();
+        let failed = outcomes.iter().filter(|o| o.failed()).count();
         println!(
-            "sweep done: {}/{} children trained, per-child metrics under {}",
+            "sweep done: {}/{} children at budget ({skipped} skipped, {resumed} \
+             resumed, {failed} failed) — inspect with `puffer ps --runs.root={}`",
             outcomes.len() - failed,
             outcomes.len(),
-            spec.train.run_dir.as_deref().unwrap_or("runs/sweep")
+            reg.root().display(),
         );
         anyhow::ensure!(failed == 0, "{failed} sweep children failed");
         return Ok(());
@@ -456,6 +613,90 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     }
     println!("{solved}/{} Ocean envs solved", envs::OCEAN_ENVS.len());
     Ok(())
+}
+
+/// `puffer ps`: one row per registered run — derived status (live /
+/// stale / pending / done / failed / killed, with dead-pid and
+/// stale-heartbeat orphan detection), progress, SPS, attempt count,
+/// age, and owner. `--json` emits the full records for scripts.
+fn cmd_ps(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    anyhow::ensure!(
+        positional.is_empty(),
+        "usage: puffer ps [--runs.root=DIR] [--json]"
+    );
+    let mut root = runs::RunsConfig::default().root;
+    let mut json = false;
+    for a in &overrides {
+        if let Some(v) = a.strip_prefix("--runs.root=") {
+            root = v.to_string();
+        } else if a == "--json" {
+            json = true;
+        } else {
+            anyhow::bail!("unrecognized flag '{a}': puffer ps accepts --runs.root=DIR and --json");
+        }
+    }
+    let reg = Registry::new(&root);
+    let views = runs::snapshot(&reg)?;
+    let now = runs::fsio::now_ms();
+    if json {
+        println!("{}", runs::ps_json(&views, now));
+    } else {
+        print!("{}", runs::ps_table(&views, now));
+    }
+    Ok(())
+}
+
+/// `puffer top`: a refreshing in-flight view (live/stale/pending runs
+/// with heartbeat SPS and stall), redrawn every `--refresh` seconds.
+/// `--iters=N` exits after N frames (0 = run until killed).
+fn cmd_top(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    anyhow::ensure!(
+        positional.is_empty(),
+        "usage: puffer top [--runs.root=DIR] [--refresh=SECS] [--iters=N]"
+    );
+    let mut root = runs::RunsConfig::default().root;
+    let mut refresh = 2.0f64;
+    let mut iters = 0u64;
+    for a in &overrides {
+        if let Some(v) = a.strip_prefix("--runs.root=") {
+            root = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--refresh=") {
+            refresh = v
+                .parse()
+                .ok()
+                .filter(|r: &f64| r.is_finite() && *r > 0.0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--refresh: expected a positive number of seconds, got '{v}'")
+                })?;
+        } else if let Some(v) = a.strip_prefix("--iters=") {
+            iters = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--iters: expected an integer >= 0, got '{v}'"))?;
+        } else {
+            anyhow::bail!(
+                "unrecognized flag '{a}': puffer top accepts --runs.root=DIR, \
+                 --refresh=SECS, and --iters=N (0 = until killed)"
+            );
+        }
+    }
+    let reg = Registry::new(&root);
+    let mut frames = 0u64;
+    loop {
+        let views = runs::snapshot(&reg)?;
+        let frame = runs::top_frame(&views, runs::fsio::now_ms());
+        // ANSI clear + cursor home, then one whole frame — flushed so
+        // partial redraws never linger between refreshes.
+        print!("\x1b[2J\x1b[H{frame}");
+        use std::io::Write;
+        std::io::stdout().flush()?;
+        frames += 1;
+        if iters != 0 && frames >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(refresh));
+    }
 }
 
 // -- imperative commands ----------------------------------------------------

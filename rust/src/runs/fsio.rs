@@ -1,0 +1,161 @@
+//! Crash-safe file primitives for the run registry: every durable
+//! artifact in `runs/` goes through exactly two write shapes, both of
+//! which leave a parseable file no matter where a SIGKILL lands.
+//!
+//! * [`write_atomic`] — whole-file replace via tmp sibling + `fsync` +
+//!   `rename`. Readers see either the old complete file or the new
+//!   complete file, never a torn one. Used for `run.json`,
+//!   `heartbeat.json`, per-child `spec.toml`, and `checkpoint.bin`.
+//! * [`append_line_fsync`] — one `O_APPEND` write of a single
+//!   newline-terminated line, then `fsync`. A kill mid-write can at
+//!   worst leave one truncated *final* line, which the index reader
+//!   tolerates and skips. Used for `index.jsonl`.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Milliseconds since the Unix epoch (0 if the clock is before it).
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Best-effort hostname: `/etc/hostname`, then `$HOSTNAME`, then
+/// `"unknown"`. Recorded so `puffer ps` on one machine does not
+/// liveness-probe pids that belong to another.
+pub fn hostname() -> String {
+    if let Ok(h) = std::fs::read_to_string("/etc/hostname") {
+        let h = h.trim();
+        if !h.is_empty() {
+            return h.to_string();
+        }
+    }
+    match std::env::var("HOSTNAME") {
+        Ok(h) if !h.trim().is_empty() => h.trim().to_string(),
+        _ => "unknown".to_string(),
+    }
+}
+
+/// Is `pid` a live process? `Some(alive)` where the answer is knowable
+/// (Linux procfs), `None` elsewhere — callers must treat `None` as
+/// "unknown", not "dead", so a registry copied to another OS never
+/// misreports live runs as orphans.
+pub fn pid_alive(pid: u32) -> Option<bool> {
+    if cfg!(target_os = "linux") {
+        Some(Path::new(&format!("/proc/{pid}")).exists())
+    } else {
+        None
+    }
+}
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Replace `path` atomically: write a `.tmp` sibling, `fsync` it, then
+/// `rename` over the target (same directory, so the rename is atomic on
+/// POSIX filesystems), then best-effort `fsync` the directory so the
+/// rename itself survives power loss. Creates parent directories.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let parent = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let tmp = tmp_sibling(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    if let Some(dir) = parent {
+        // Directory fsync is advisory: some filesystems refuse O_RDONLY
+        // dir syncs, and the rename already happened.
+        let _ = std::fs::File::open(dir).and_then(|d| d.sync_all());
+    }
+    Ok(())
+}
+
+/// Append one newline-terminated line to `path` with `O_APPEND` + fsync.
+/// The line must not itself contain a newline (compact JSON never does);
+/// embedded newlines are replaced with spaces as a last-ditch guard so a
+/// bad payload degrades to one odd line, not a corrupt log.
+pub fn append_line_fsync(path: impl AsRef<Path>, line: &str) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let mut buf = Vec::with_capacity(line.len() + 1);
+    if line.contains('\n') {
+        buf.extend_from_slice(line.replace('\n', " ").as_bytes());
+    } else {
+        buf.extend_from_slice(line.as_bytes());
+    }
+    buf.push(b'\n');
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    // One write_all over one buffer: O_APPEND makes the whole line land
+    // as a single atomic append on local filesystems.
+    f.write_all(&buf)
+        .with_context(|| format!("appending to {}", path.display()))?;
+    f.sync_all()
+        .with_context(|| format!("syncing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("puffer_fsio_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let d = tdir("atomic");
+        let p = d.join("nested/dir/file.json");
+        write_atomic(&p, b"{\"a\":1}").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"{\"a\":1}");
+        write_atomic(&p, b"{\"a\":2}").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"{\"a\":2}");
+        assert!(!tmp_sibling(&p).exists(), "tmp sibling must be renamed away");
+    }
+
+    #[test]
+    fn append_line_fsync_appends_and_sanitizes() {
+        let d = tdir("append");
+        let p = d.join("index.jsonl");
+        append_line_fsync(&p, "{\"x\":1}").unwrap();
+        append_line_fsync(&p, "bad\nline").unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "{\"x\":1}\nbad line\n");
+    }
+
+    #[test]
+    fn pid_alive_sees_this_process() {
+        if let Some(alive) = pid_alive(std::process::id()) {
+            assert!(alive);
+        }
+        // A pid beyond pid_max is never alive.
+        if let Some(alive) = pid_alive(u32::MAX - 1) {
+            assert!(!alive);
+        }
+    }
+}

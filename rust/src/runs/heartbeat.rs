@@ -1,0 +1,233 @@
+//! Live-run telemetry: each trainer with a run dir rewrites a tiny
+//! `<run_dir>/heartbeat.json` (atomic replace, so readers never see a
+//! torn file) once per configured period. `puffer ps` uses its age for
+//! stale-heartbeat orphan detection; `puffer top` tails the SPS/stall
+//! counters across live runs. The file is a throwaway — deleting it
+//! only makes a live run look momentarily stale.
+
+use super::fsio;
+use crate::util::json::{num, obj, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// A heartbeat stale for longer than `max(3 × period, 10 s)` marks its
+/// run as orphaned (`puffer ps` shows `stale`, resumable sweeps reclaim
+/// the child). Three periods tolerates scheduler hiccups; the 10 s
+/// floor keeps sub-second periods from flapping.
+pub fn stale_after_s(period_s: f64) -> f64 {
+    (period_s * 3.0).max(10.0)
+}
+
+/// One parsed `heartbeat.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Heartbeat {
+    pub pid: u32,
+    pub global_step: u64,
+    pub total_steps: u64,
+    /// Collection / learning steps-per-second for the last segment.
+    pub env_sps: f64,
+    pub learn_sps: f64,
+    /// Cumulative collector + learner stall seconds.
+    pub stall_s: f64,
+    pub mean_score: Option<f64>,
+    /// Wall-clock write time (ms since epoch) — the staleness anchor.
+    pub updated_ms: u64,
+    /// The writer's configured period, so readers compute staleness
+    /// against the cadence the trainer actually promised.
+    pub period_s: f64,
+}
+
+impl Heartbeat {
+    pub fn path_for(run_dir: &str) -> PathBuf {
+        Path::new(run_dir).join("heartbeat.json")
+    }
+
+    /// Load the heartbeat for `run_dir`; `Ok(None)` when none exists.
+    pub fn load(run_dir: &str) -> Result<Option<Heartbeat>> {
+        let path = Self::path_for(run_dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let get_u64 = |key: &str| j.get(key).as_f64().unwrap_or(0.0) as u64;
+        Ok(Some(Heartbeat {
+            pid: get_u64("pid") as u32,
+            global_step: get_u64("global_step"),
+            total_steps: get_u64("total_steps"),
+            env_sps: j.get("env_sps").as_f64().unwrap_or(0.0),
+            learn_sps: j.get("learn_sps").as_f64().unwrap_or(0.0),
+            stall_s: j.get("stall_s").as_f64().unwrap_or(0.0),
+            mean_score: j.get("mean_score").as_f64(),
+            updated_ms: get_u64("updated_ms"),
+            period_s: j.get("period_s").as_f64().unwrap_or(5.0),
+        }))
+    }
+
+    /// Seconds since this heartbeat was written, as seen at `now_ms`.
+    pub fn age_s(&self, now_ms: u64) -> f64 {
+        (now_ms.saturating_sub(self.updated_ms)) as f64 / 1e3
+    }
+
+    /// Stale as seen at `now_ms`? See [`stale_after_s`].
+    pub fn is_stale(&self, now_ms: u64) -> bool {
+        self.age_s(now_ms) > stale_after_s(self.period_s)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("pid", num(self.pid as f64)),
+            ("global_step", num(self.global_step as f64)),
+            ("total_steps", num(self.total_steps as f64)),
+            ("env_sps", num(self.env_sps)),
+            ("learn_sps", num(self.learn_sps)),
+            ("stall_s", num(self.stall_s)),
+            (
+                "mean_score",
+                match self.mean_score {
+                    Some(x) => num(x),
+                    None => Json::Null,
+                },
+            ),
+            ("updated_ms", num(self.updated_ms as f64)),
+            ("period_s", num(self.period_s)),
+        ])
+    }
+}
+
+/// The trainer-side throttled writer: call [`beat`](Self::beat) once
+/// per logged segment (cheap — it returns immediately inside the
+/// period) and [`force`](Self::force) at run start/end so `ps` sees a
+/// fresh file even for runs shorter than one period.
+#[derive(Debug)]
+pub struct HeartbeatWriter {
+    run_dir: String,
+    period: Duration,
+    period_s: f64,
+    total_steps: u64,
+    last_write: Option<Instant>,
+}
+
+impl HeartbeatWriter {
+    pub fn new(run_dir: &str, period_s: f64, total_steps: u64) -> Self {
+        let period_s = if period_s.is_finite() && period_s > 0.0 {
+            period_s
+        } else {
+            5.0
+        };
+        HeartbeatWriter {
+            run_dir: run_dir.to_string(),
+            period: Duration::from_secs_f64(period_s),
+            period_s,
+            total_steps,
+            last_write: None,
+        }
+    }
+
+    /// Throttled write: a no-op until a full period has elapsed since
+    /// the last write.
+    pub fn beat(
+        &mut self,
+        global_step: u64,
+        env_sps: f64,
+        learn_sps: f64,
+        stall_s: f64,
+        mean_score: Option<f64>,
+    ) -> Result<()> {
+        if let Some(last) = self.last_write {
+            if last.elapsed() < self.period {
+                return Ok(());
+            }
+        }
+        self.force(global_step, env_sps, learn_sps, stall_s, mean_score)
+    }
+
+    /// Unthrottled write.
+    pub fn force(
+        &mut self,
+        global_step: u64,
+        env_sps: f64,
+        learn_sps: f64,
+        stall_s: f64,
+        mean_score: Option<f64>,
+    ) -> Result<()> {
+        let hb = Heartbeat {
+            pid: std::process::id(),
+            global_step,
+            total_steps: self.total_steps,
+            env_sps,
+            learn_sps,
+            stall_s,
+            mean_score,
+            updated_ms: fsio::now_ms(),
+            period_s: self.period_s,
+        };
+        fsio::write_atomic(Heartbeat::path_for(&self.run_dir), hb.to_json().dump().as_bytes())?;
+        self.last_write = Some(Instant::now());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("puffer_heartbeat_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn round_trips_and_throttles() {
+        let dir = tdir("rt");
+        let dir_s = dir.to_string_lossy().to_string();
+        let mut w = HeartbeatWriter::new(&dir_s, 3600.0, 8192);
+        w.force(1024, 1e5, 2e5, 0.5, Some(0.9)).unwrap();
+        let hb = Heartbeat::load(&dir_s).unwrap().unwrap();
+        assert_eq!(hb.global_step, 1024);
+        assert_eq!(hb.total_steps, 8192);
+        assert_eq!(hb.pid, std::process::id());
+        assert_eq!(hb.mean_score, Some(0.9));
+        // Within the (1 h) period, beat() is a no-op.
+        w.beat(2048, 0.0, 0.0, 0.0, None).unwrap();
+        let again = Heartbeat::load(&dir_s).unwrap().unwrap();
+        assert_eq!(again.global_step, 1024, "throttled beat must not rewrite");
+        // force() always writes.
+        w.force(2048, 0.0, 0.0, 0.0, None).unwrap();
+        assert_eq!(Heartbeat::load(&dir_s).unwrap().unwrap().global_step, 2048);
+    }
+
+    #[test]
+    fn staleness_uses_period_with_a_floor() {
+        let hb = Heartbeat {
+            pid: 1,
+            global_step: 0,
+            total_steps: 0,
+            env_sps: 0.0,
+            learn_sps: 0.0,
+            stall_s: 0.0,
+            mean_score: None,
+            updated_ms: 1_000_000,
+            period_s: 5.0,
+        };
+        assert!(!hb.is_stale(1_000_000 + 14_000), "within 3x period");
+        assert!(hb.is_stale(1_000_000 + 16_000), "past 3x period");
+        // Sub-second periods still get the 10 s floor.
+        let fast = Heartbeat { period_s: 0.1, ..hb };
+        assert!(!fast.is_stale(1_000_000 + 9_000));
+        assert!(fast.is_stale(1_000_000 + 11_000));
+        assert_eq!(stale_after_s(5.0), 15.0);
+        assert_eq!(stale_after_s(1.0), 10.0);
+    }
+
+    #[test]
+    fn missing_heartbeat_is_none() {
+        let dir = tdir("none");
+        assert!(Heartbeat::load(&dir.to_string_lossy()).unwrap().is_none());
+    }
+}

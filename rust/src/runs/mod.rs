@@ -1,0 +1,129 @@
+//! Fleet-scale experiment ops: the run registry, resumable sweeps, and
+//! the `puffer ps` / `puffer top` live watch (ROADMAP north-star item
+//! 5 — one durable, machine-readable record per experiment instead of
+//! loose `metrics.csv` directories).
+//!
+//! ## The registry
+//!
+//! Every `RunSpec` launch is logged under a registry root (default
+//! `runs/`, the `[runs]` spec section / `--runs.root` flag):
+//!
+//! ```text
+//! runs/
+//!   index.jsonl                  # append-only event log, fsync'd: one
+//!                                #   line per status transition
+//!   <run_dir>/run.json           # the authoritative per-run record,
+//!                                #   rewritten atomically per transition
+//!   <run_dir>/heartbeat.json     # live SPS/stall telemetry, rewritten
+//!                                #   atomically once per period
+//! ```
+//!
+//! Records transition `pending → running → done | failed | killed`
+//! with host/pid, start/end times, attempt count, final metrics, and
+//! checkpoint path. Both write shapes ([`fsio`]) are crash-safe, so a
+//! SIGKILL at any point leaves a parseable registry — the property the
+//! resume path builds on.
+//!
+//! ## Resumable sweeps
+//!
+//! `puffer sweep` consults the registry before launching each grid
+//! child ([`sweep::classify`]): at-budget children are skipped,
+//! partials resume from their checkpoints via the zero-flag resume
+//! path, and orphans (stale heartbeat, dead pid) are reclaimed. With
+//! `--processes=N` the children run as separate OS processes
+//! ([`sweep::run_processes`]) so a child panic/OOM/SIGKILL costs that
+//! child alone, with its exit status captured into the registry.
+//!
+//! ## Live watch
+//!
+//! Trainers heartbeat env-SPS / learner-SPS / stall counters to
+//! `heartbeat.json` ([`heartbeat::HeartbeatWriter`]); `puffer ps`
+//! ([`watch::ps_table`], `--json` for scripts) tables live/recent runs
+//! with stale-heartbeat orphan detection, and `puffer top`
+//! ([`watch::top_frame`]) refreshes the in-flight view.
+
+// Registry plumbing is pure std-file I/O over safe primitives; the
+// crate's unsafe surface stays in vector/ (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+pub mod fsio;
+pub mod heartbeat;
+pub mod record;
+pub mod registry;
+pub mod sweep;
+pub mod watch;
+
+pub use heartbeat::{Heartbeat, HeartbeatWriter};
+pub use record::{FinalMetrics, RunRecord, RunStatus};
+pub use registry::Registry;
+pub use watch::{ps_json, ps_table, snapshot, top_frame, DerivedStatus, RunView};
+
+/// The strict `[runs]` section of a [`RunSpec`](crate::runspec::RunSpec)
+/// and the `--runs.*` CLI namespace. Plain data, TOML/JSON
+/// round-trippable like every other spec part; `None` on a spec means
+/// "defaults" — registry logging is always on for runs with a run dir.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunsConfig {
+    /// Registry root: where `index.jsonl` lives. Relative paths resolve
+    /// against the working directory, like `train.run_dir`.
+    pub root: String,
+    /// Heartbeat period in seconds. Staleness is judged at
+    /// `max(3 × period, 10 s)` ([`heartbeat::stale_after_s`]).
+    pub heartbeat_s: f64,
+}
+
+impl Default for RunsConfig {
+    fn default() -> Self {
+        RunsConfig {
+            root: "runs".to_string(),
+            heartbeat_s: 5.0,
+        }
+    }
+}
+
+impl RunsConfig {
+    /// The flat `runs.*` pairs (serialization form, mirroring
+    /// [`ServeConfig`](crate::serve::ServeConfig)).
+    pub fn to_flat_pairs(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("root", self.root.clone()),
+            ("heartbeat_s", fmt_f64(self.heartbeat_s)),
+        ]
+    }
+
+    /// The effective config for a spec: its `[runs]` section, or
+    /// defaults when the section is absent.
+    pub fn for_spec(spec: &crate::runspec::RunSpec) -> RunsConfig {
+        spec.runs.clone().unwrap_or_default()
+    }
+}
+
+/// Format an f64 so it round-trips through the flat string form
+/// (integral values print without a fraction, like the JSON dumper).
+fn fmt_f64(x: f64) -> String {
+    if x == x.trunc() && x.is_finite() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_pairs_round_trip_defaults() {
+        let cfg = RunsConfig::default();
+        let pairs = cfg.to_flat_pairs();
+        assert_eq!(
+            pairs,
+            vec![
+                ("root", "runs".to_string()),
+                ("heartbeat_s", "5".to_string()),
+            ]
+        );
+        assert_eq!(fmt_f64(2.5), "2.5");
+        assert_eq!(fmt_f64(5.0), "5");
+    }
+}

@@ -1,0 +1,371 @@
+//! The durable unit of the registry: one [`RunRecord`] per run
+//! directory, serialized as compact JSON in `<run_dir>/run.json` and
+//! rewritten atomically on every status transition. The record is the
+//! single source of truth for "what happened to this run" — `puffer ps`
+//! renders it, resumable sweeps classify children from it, and the
+//! root `index.jsonl` merely points at it.
+
+use crate::runspec::RunSpec;
+use crate::train::TrainReport;
+use crate::util::json::{num, obj, s, Json};
+use anyhow::{bail, Result};
+
+/// Lifecycle of a registered run. Transitions are
+/// `Pending → Running → Done | Failed | Killed`; `Running → Pending`
+/// happens only when a sweep re-queues an orphan, and re-launches bump
+/// [`RunRecord::attempt`] back through `Running`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    /// Queued by a sweep; no process has claimed it yet.
+    Pending,
+    /// Claimed: `pid`/`host`/`started_ms` identify the worker.
+    Running,
+    /// Trained to budget; `metrics` and `checkpoint` are final.
+    Done,
+    /// The trainer returned an error or panicked; see `error`.
+    Failed,
+    /// The process died without writing a terminal status (SIGKILL,
+    /// OOM); recorded post-hoc by the sweep parent or orphan reconciler.
+    Killed,
+}
+
+impl RunStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RunStatus::Pending => "pending",
+            RunStatus::Running => "running",
+            RunStatus::Done => "done",
+            RunStatus::Failed => "failed",
+            RunStatus::Killed => "killed",
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        Ok(match text {
+            "pending" => RunStatus::Pending,
+            "running" => RunStatus::Running,
+            "done" => RunStatus::Done,
+            "failed" => RunStatus::Failed,
+            "killed" => RunStatus::Killed,
+            other => bail!("unknown run status '{other}'"),
+        })
+    }
+
+    /// Terminal states are never overwritten by the orphan reconciler.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, RunStatus::Done | RunStatus::Failed | RunStatus::Killed)
+    }
+}
+
+/// The throughput/score summary copied from the final [`TrainReport`]
+/// when a run completes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FinalMetrics {
+    pub global_step: u64,
+    pub sps: f64,
+    pub env_sps: f64,
+    pub learn_sps: f64,
+    pub mean_score: Option<f64>,
+    pub mean_return: Option<f64>,
+    pub episodes: u64,
+}
+
+impl FinalMetrics {
+    pub fn from_report(r: &TrainReport) -> Self {
+        FinalMetrics {
+            global_step: r.global_step,
+            sps: r.sps,
+            env_sps: r.env_sps,
+            learn_sps: r.learn_sps,
+            mean_score: r.mean_score,
+            mean_return: r.mean_return,
+            episodes: r.episodes as u64,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("global_step", num(self.global_step as f64)),
+            ("sps", num(self.sps)),
+            ("env_sps", num(self.env_sps)),
+            ("learn_sps", num(self.learn_sps)),
+            ("mean_score", opt_num(self.mean_score)),
+            ("mean_return", opt_num(self.mean_return)),
+            ("episodes", num(self.episodes as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Self {
+        FinalMetrics {
+            global_step: j.get("global_step").as_f64().unwrap_or(0.0) as u64,
+            sps: j.get("sps").as_f64().unwrap_or(0.0),
+            env_sps: j.get("env_sps").as_f64().unwrap_or(0.0),
+            learn_sps: j.get("learn_sps").as_f64().unwrap_or(0.0),
+            mean_score: j.get("mean_score").as_f64(),
+            mean_return: j.get("mean_return").as_f64(),
+            episodes: j.get("episodes").as_f64().unwrap_or(0.0) as u64,
+        }
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => num(x),
+        None => Json::Null,
+    }
+}
+
+fn opt_str(v: &Option<String>) -> Json {
+    match v {
+        Some(x) => s(x),
+        None => Json::Null,
+    }
+}
+
+/// One registered run. Everything `puffer ps` shows and resumable
+/// sweeps decide from lives here; the struct is plain data and the JSON
+/// form is stable (unknown fields are ignored on read, missing optional
+/// fields default).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    /// The run directory — the registry's primary key.
+    pub run_dir: String,
+    /// Display label: the run-dir leaf (the grid assignment for sweep
+    /// children).
+    pub label: String,
+    /// The env key, wrappers included (e.g. `ocean/bandit`).
+    pub env: String,
+    pub seed: u64,
+    /// The step budget the launching spec asked for.
+    pub total_steps: u64,
+    /// Serialized spec identity minus `train.total_steps` (budget
+    /// extensions are resumes, not collisions) — what `puffer validate`
+    /// compares to warn about two different specs claiming one run dir.
+    /// Empty for unserializable specs.
+    pub spec_fingerprint: String,
+    pub status: RunStatus,
+    /// How many times this run entered `Running`. Attempt 2+ means a
+    /// resume (after completion with a bigger budget, or after a crash).
+    pub attempt: u64,
+    pub host: String,
+    pub pid: u32,
+    pub created_ms: u64,
+    /// 0 = never started.
+    pub started_ms: u64,
+    /// 0 = not ended (pending/running).
+    pub ended_ms: u64,
+    /// Process-mode child exit code, when the child exited by itself.
+    pub exit_code: Option<i64>,
+    /// Failure detail: the error chain or panic message.
+    pub error: Option<String>,
+    /// Path to the run's checkpoint, once one exists.
+    pub checkpoint: Option<String>,
+    /// Final metrics, set when the run reaches `Done`.
+    pub metrics: Option<FinalMetrics>,
+}
+
+impl RunRecord {
+    /// A fresh `Pending` record for `spec` at `run_dir`.
+    pub fn new(spec: &RunSpec, run_dir: &str) -> Self {
+        RunRecord {
+            run_dir: run_dir.to_string(),
+            label: label_of(run_dir),
+            env: spec.env.key(),
+            seed: spec.seed,
+            total_steps: spec.train.total_steps,
+            spec_fingerprint: spec_fingerprint(spec),
+            status: RunStatus::Pending,
+            attempt: 0,
+            host: String::new(),
+            pid: 0,
+            created_ms: super::fsio::now_ms(),
+            started_ms: 0,
+            ended_ms: 0,
+            exit_code: None,
+            error: None,
+            checkpoint: None,
+            metrics: None,
+        }
+    }
+
+    /// Refresh the spec-derived fields (budget, seed, fingerprint) from
+    /// a re-launch spec — a resume may legitimately extend the budget.
+    pub fn absorb_spec(&mut self, spec: &RunSpec) {
+        self.env = spec.env.key();
+        self.seed = spec.seed;
+        self.total_steps = spec.train.total_steps;
+        self.spec_fingerprint = spec_fingerprint(spec);
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("run_dir", s(&self.run_dir)),
+            ("label", s(&self.label)),
+            ("env", s(&self.env)),
+            ("seed", num(self.seed as f64)),
+            ("total_steps", num(self.total_steps as f64)),
+            ("spec_fingerprint", s(&self.spec_fingerprint)),
+            ("status", s(self.status.as_str())),
+            ("attempt", num(self.attempt as f64)),
+            ("host", s(&self.host)),
+            ("pid", num(self.pid as f64)),
+            ("created_ms", num(self.created_ms as f64)),
+            ("started_ms", num(self.started_ms as f64)),
+            ("ended_ms", num(self.ended_ms as f64)),
+            (
+                "exit_code",
+                match self.exit_code {
+                    Some(c) => num(c as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("error", opt_str(&self.error)),
+            ("checkpoint", opt_str(&self.checkpoint)),
+            (
+                "metrics",
+                match &self.metrics {
+                    Some(m) => m.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let run_dir = match j.get("run_dir").as_str() {
+            Some(d) if !d.is_empty() => d.to_string(),
+            _ => bail!("run record missing 'run_dir'"),
+        };
+        let status = match j.get("status").as_str() {
+            Some(text) => RunStatus::parse(text)?,
+            None => bail!("run record missing 'status'"),
+        };
+        let get_u64 = |key: &str| j.get(key).as_f64().unwrap_or(0.0) as u64;
+        Ok(RunRecord {
+            label: j
+                .get("label")
+                .as_str()
+                .map(str::to_string)
+                .unwrap_or_else(|| label_of(&run_dir)),
+            env: j.get("env").as_str().unwrap_or("").to_string(),
+            seed: get_u64("seed"),
+            total_steps: get_u64("total_steps"),
+            spec_fingerprint: j.get("spec_fingerprint").as_str().unwrap_or("").to_string(),
+            status,
+            attempt: get_u64("attempt"),
+            host: j.get("host").as_str().unwrap_or("").to_string(),
+            pid: get_u64("pid") as u32,
+            created_ms: get_u64("created_ms"),
+            started_ms: get_u64("started_ms"),
+            ended_ms: get_u64("ended_ms"),
+            exit_code: j.get("exit_code").as_f64().map(|c| c as i64),
+            error: j.get("error").as_str().map(str::to_string),
+            checkpoint: j.get("checkpoint").as_str().map(str::to_string),
+            metrics: match j.get("metrics") {
+                Json::Null => None,
+                m => Some(FinalMetrics::from_json(m)),
+            },
+            run_dir,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("parsing run record: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// The run-dir leaf, used as the display label.
+pub fn label_of(run_dir: &str) -> String {
+    run_dir
+        .trim_end_matches('/')
+        .rsplit('/')
+        .next()
+        .unwrap_or(run_dir)
+        .to_string()
+}
+
+/// Spec identity for cross-spec collision warnings: the flat serialized
+/// form minus `train.total_steps` (extending a budget re-queues the same
+/// run — it is not a different experiment). Empty when the spec is
+/// unserializable (custom env), in which case no collision check fires.
+pub fn spec_fingerprint(spec: &RunSpec) -> String {
+    match spec.to_flat() {
+        Ok((mut flat, arrays)) => {
+            flat.remove("train.total_steps");
+            let mut parts: Vec<String> =
+                flat.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            for (k, vs) in &arrays {
+                parts.push(format!("{k}=[{}]", vs.join(",")));
+            }
+            parts.join(";")
+        }
+        Err(_) => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wrappers::EnvSpec;
+
+    fn spec() -> RunSpec {
+        RunSpec::new(EnvSpec::new("ocean/bandit"))
+            .with_seed(7)
+            .with_train(|t| {
+                t.total_steps = 4096;
+                t.run_dir = Some("runs/sweep/lr=0.001".into());
+            })
+    }
+
+    #[test]
+    fn record_round_trips_through_json() {
+        let mut rec = RunRecord::new(&spec(), "runs/sweep/lr=0.001");
+        rec.status = RunStatus::Failed;
+        rec.attempt = 2;
+        rec.host = "box".into();
+        rec.pid = 1234;
+        rec.started_ms = 17;
+        rec.ended_ms = 99;
+        rec.exit_code = Some(101);
+        rec.error = Some("panicked: \"boom\"\nline two".into());
+        rec.checkpoint = Some("runs/sweep/lr=0.001/checkpoint.bin".into());
+        rec.metrics = Some(FinalMetrics {
+            global_step: 4096,
+            sps: 1e5,
+            env_sps: 2e5,
+            learn_sps: 3e5,
+            mean_score: Some(0.75),
+            mean_return: None,
+            episodes: 12,
+        });
+        let back = RunRecord::parse(&rec.to_json().dump()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.label, "lr=0.001");
+    }
+
+    #[test]
+    fn fingerprint_ignores_budget_but_not_other_knobs() {
+        let a = spec();
+        let mut b = spec();
+        b.train.total_steps = 999_999;
+        assert_eq!(spec_fingerprint(&a), spec_fingerprint(&b));
+        let c = spec().with_seed(8);
+        assert_ne!(spec_fingerprint(&a), spec_fingerprint(&c));
+    }
+
+    #[test]
+    fn status_parse_rejects_unknown() {
+        for st in [
+            RunStatus::Pending,
+            RunStatus::Running,
+            RunStatus::Done,
+            RunStatus::Failed,
+            RunStatus::Killed,
+        ] {
+            assert_eq!(RunStatus::parse(st.as_str()).unwrap(), st);
+            assert_eq!(st.is_terminal(), !matches!(st, RunStatus::Pending | RunStatus::Running));
+        }
+        assert!(RunStatus::parse("zombie").is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! The run registry: a root directory holding one append-only
+//! `index.jsonl` (one line per status transition, fsync'd) plus the
+//! per-run `run.json` records the index points at. The split gives both
+//! durability shapes their natural home — the index is a log (appends
+//! survive anything, torn final lines are skipped), the record is a
+//! snapshot (atomic replace, never torn) — so a SIGKILL at any point
+//! leaves a parseable registry with exactly one record per run dir.
+
+use super::fsio;
+use super::record::{FinalMetrics, RunRecord, RunStatus};
+use crate::runspec::RunSpec;
+use crate::train::TrainReport;
+use crate::util::json::{num, obj, s, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Handle on a registry root. Cheap plain data: every operation opens
+/// the files it needs, so handles can live on sweep worker threads
+/// without shared state.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Registry { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// `<root>/index.jsonl`.
+    pub fn index_path(&self) -> PathBuf {
+        self.root.join("index.jsonl")
+    }
+
+    /// `<run_dir>/run.json` — the record lives with the run, not under
+    /// the registry root, so deleting a run dir deletes its record.
+    pub fn record_path(run_dir: &str) -> PathBuf {
+        Path::new(run_dir).join("run.json")
+    }
+
+    /// Load the record for `run_dir`; `Ok(None)` when none exists.
+    pub fn load(run_dir: &str) -> Result<Option<RunRecord>> {
+        let path = Self::record_path(run_dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        RunRecord::parse(&text)
+            .map(Some)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Persist a record: atomic `run.json` replace, then append the
+    /// transition to the index. Crash between the two loses only the
+    /// index line; the reader unions index entries with the authoritative
+    /// `run.json` files it already knows, so the record still wins.
+    pub fn write(&self, rec: &RunRecord) -> Result<()> {
+        fsio::write_atomic(Self::record_path(&rec.run_dir), rec.to_json().dump().as_bytes())?;
+        let event = obj(vec![
+            ("ts_ms", num(fsio::now_ms() as f64)),
+            ("run_dir", s(&rec.run_dir)),
+            ("status", s(rec.status.as_str())),
+            ("attempt", num(rec.attempt as f64)),
+            ("pid", num(rec.pid as f64)),
+        ]);
+        fsio::append_line_fsync(self.index_path(), &event.dump())
+    }
+
+    /// All registered runs, most recent transition first. Run dirs are
+    /// discovered from the index (deduplicated); each loads its
+    /// `run.json`. Torn or unparseable index lines are skipped, and a
+    /// run dir whose record vanished (deleted by hand) is synthesized
+    /// from its last index event so `ps` still explains it.
+    pub fn list(&self) -> Result<Vec<RunRecord>> {
+        let path = self.index_path();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        // Last event per run dir, in last-seen order (iterate in file
+        // order; later lines overwrite and push recency).
+        let mut order: Vec<String> = Vec::new();
+        let mut last: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Ok(event) = Json::parse(line) else {
+                continue; // torn final line, or hand-edited garbage
+            };
+            let Some(run_dir) = event.get("run_dir").as_str() else {
+                continue;
+            };
+            let run_dir = run_dir.to_string();
+            if let Some(pos) = order.iter().position(|d| d == &run_dir) {
+                order.remove(pos);
+            }
+            order.push(run_dir.clone());
+            last.insert(run_dir, event);
+        }
+        let mut out = Vec::with_capacity(order.len());
+        for run_dir in order.iter().rev() {
+            match Self::load(run_dir) {
+                Ok(Some(rec)) => out.push(rec),
+                Ok(None) | Err(_) => {
+                    // PANIC: every dir in `order` has an entry in `last` by construction.
+                    let event = last.get(run_dir).expect("indexed run dir");
+                    let status = event
+                        .get("status")
+                        .as_str()
+                        .and_then(|t| RunStatus::parse(t).ok())
+                        .unwrap_or(RunStatus::Killed);
+                    let mut rec = RunRecord {
+                        run_dir: run_dir.clone(),
+                        label: super::record::label_of(run_dir),
+                        env: String::new(),
+                        seed: 0,
+                        total_steps: 0,
+                        spec_fingerprint: String::new(),
+                        status,
+                        attempt: event.get("attempt").as_f64().unwrap_or(0.0) as u64,
+                        host: String::new(),
+                        pid: event.get("pid").as_f64().unwrap_or(0.0) as u32,
+                        created_ms: event.get("ts_ms").as_f64().unwrap_or(0.0) as u64,
+                        started_ms: 0,
+                        ended_ms: 0,
+                        exit_code: None,
+                        error: None,
+                        checkpoint: None,
+                        metrics: None,
+                    };
+                    rec.error = Some("run.json missing or unreadable".into());
+                    out.push(rec);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // -- lifecycle helpers ---------------------------------------------------
+
+    /// Register `run_dir` as `Pending` without bumping the attempt
+    /// counter — what the sweep parent does for every child it is about
+    /// to (re-)queue. Refreshes spec-derived fields on existing records.
+    pub fn mark_pending(&self, spec: &RunSpec, run_dir: &str) -> Result<RunRecord> {
+        let mut rec = match Self::load(run_dir)? {
+            Some(rec) => rec,
+            None => RunRecord::new(spec, run_dir),
+        };
+        rec.absorb_spec(spec);
+        rec.status = RunStatus::Pending;
+        rec.ended_ms = 0;
+        rec.exit_code = None;
+        rec.error = None;
+        self.write(&rec)?;
+        Ok(rec)
+    }
+
+    /// Claim `run_dir` for this process: transition to `Running`, bump
+    /// the attempt counter, stamp host/pid/start time.
+    pub fn begin(&self, spec: &RunSpec, run_dir: &str) -> Result<RunRecord> {
+        let mut rec = match Self::load(run_dir)? {
+            Some(rec) => rec,
+            None => RunRecord::new(spec, run_dir),
+        };
+        rec.absorb_spec(spec);
+        rec.status = RunStatus::Running;
+        rec.attempt += 1;
+        rec.host = fsio::hostname();
+        rec.pid = std::process::id();
+        rec.started_ms = fsio::now_ms();
+        rec.ended_ms = 0;
+        rec.exit_code = None;
+        rec.error = None;
+        self.write(&rec)?;
+        Ok(rec)
+    }
+
+    /// Terminal success: `Done` with the final metrics and checkpoint.
+    pub fn finish_ok(
+        &self,
+        mut rec: RunRecord,
+        report: &TrainReport,
+        checkpoint: Option<String>,
+    ) -> Result<RunRecord> {
+        rec.status = RunStatus::Done;
+        rec.ended_ms = fsio::now_ms();
+        rec.metrics = Some(FinalMetrics::from_report(report));
+        if checkpoint.is_some() {
+            rec.checkpoint = checkpoint;
+        }
+        self.write(&rec)?;
+        Ok(rec)
+    }
+
+    /// Terminal failure: `Failed` (trainer error / child panic / nonzero
+    /// exit) or `Killed` (died without a terminal status of its own).
+    pub fn finish_err(
+        &self,
+        mut rec: RunRecord,
+        status: RunStatus,
+        error: &str,
+        exit_code: Option<i64>,
+    ) -> Result<RunRecord> {
+        debug_assert!(status.is_terminal());
+        rec.status = status;
+        rec.ended_ms = fsio::now_ms();
+        rec.error = Some(error.to_string());
+        rec.exit_code = exit_code;
+        self.write(&rec)?;
+        Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wrappers::EnvSpec;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("puffer_registry_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn spec(dir: &str) -> RunSpec {
+        RunSpec::new(EnvSpec::new("ocean/bandit")).with_train(|t| {
+            t.total_steps = 2048;
+            t.run_dir = Some(dir.to_string());
+        })
+    }
+
+    #[test]
+    fn transitions_keep_one_record_per_dir_and_log_every_event() {
+        let root = tdir("transitions");
+        let reg = Registry::new(&root);
+        let dir_a = root.join("a").to_string_lossy().to_string();
+        let dir_b = root.join("b").to_string_lossy().to_string();
+
+        reg.mark_pending(&spec(&dir_a), &dir_a).unwrap();
+        reg.mark_pending(&spec(&dir_b), &dir_b).unwrap();
+        let rec = reg.begin(&spec(&dir_a), &dir_a).unwrap();
+        assert_eq!(rec.attempt, 1);
+        assert_eq!(rec.pid, std::process::id());
+        let report = TrainReport {
+            global_step: 2048,
+            mean_score: Some(1.0),
+            episodes: 3,
+            ..Default::default()
+        };
+        reg.finish_ok(rec, &report, Some(format!("{dir_a}/checkpoint.bin"))).unwrap();
+
+        let runs = reg.list().unwrap();
+        assert_eq!(runs.len(), 2, "one record per dir, not per transition");
+        // Most recent transition first: a finished after b was queued.
+        assert_eq!(runs[0].run_dir, dir_a);
+        assert_eq!(runs[0].status, RunStatus::Done);
+        assert_eq!(runs[0].metrics.as_ref().unwrap().global_step, 2048);
+        assert_eq!(runs[1].status, RunStatus::Pending);
+        // The index logged all four transitions.
+        let index = std::fs::read_to_string(reg.index_path()).unwrap();
+        assert_eq!(index.lines().count(), 4);
+    }
+
+    #[test]
+    fn torn_index_lines_and_missing_records_are_tolerated() {
+        let root = tdir("torn");
+        let reg = Registry::new(&root);
+        let dir = root.join("child").to_string_lossy().to_string();
+        let rec = reg.begin(&spec(&dir), &dir).unwrap();
+        reg.finish_err(rec, RunStatus::Failed, "boom", Some(101)).unwrap();
+        // Simulate a SIGKILL mid-append: a truncated final line.
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(reg.index_path())
+            .unwrap();
+        f.write_all(b"{\"ts_ms\":123,\"run_dir\":\"runs/tor").unwrap();
+        drop(f);
+        let runs = reg.list().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].status, RunStatus::Failed);
+        assert_eq!(runs[0].exit_code, Some(101));
+        // Now delete the record: the run still lists, synthesized from
+        // its last index event.
+        std::fs::remove_file(Registry::record_path(&dir)).unwrap();
+        let runs = reg.list().unwrap();
+        assert_eq!(runs.len(), 1);
+        assert!(runs[0].error.as_deref().unwrap().contains("run.json missing"));
+    }
+
+    #[test]
+    fn resume_bumps_attempt_and_absorbs_budget_extension() {
+        let root = tdir("resume");
+        let reg = Registry::new(&root);
+        let dir = root.join("child").to_string_lossy().to_string();
+        let rec = reg.begin(&spec(&dir), &dir).unwrap();
+        reg.finish_ok(rec, &TrainReport::default(), None).unwrap();
+        let mut bigger = spec(&dir);
+        bigger.train.total_steps = 9999;
+        let rec = reg.begin(&bigger, &dir).unwrap();
+        assert_eq!(rec.attempt, 2);
+        assert_eq!(rec.total_steps, 9999);
+        assert_eq!(rec.status, RunStatus::Running);
+        assert!(rec.error.is_none(), "re-launch clears stale failure detail");
+    }
+}

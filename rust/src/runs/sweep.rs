@@ -1,0 +1,446 @@
+//! Registry-aware sweep execution: classify every grid child against
+//! the registry before launching anything (at-budget children are
+//! skipped, partials resume from their checkpoints, orphans are
+//! reclaimed), then drain the remainder either on an in-process worker
+//! pool ([`run_resumable`], panic-isolated per child) or as separate
+//! OS processes ([`run_processes`], surviving child SIGKILL/OOM with
+//! per-child exit status captured into the registry). Re-invoking
+//! `puffer sweep` on the same spec is therefore always safe: finished
+//! work is never redone, and every child ends with exactly one
+//! terminal record.
+
+use super::heartbeat::Heartbeat;
+use super::record::{RunRecord, RunStatus};
+use super::registry::Registry;
+use super::watch::{DerivedStatus, RunView};
+use crate::runspec::{run_sweep_with, RunSpec};
+use crate::train::{Checkpoint, TrainReport, Trainer};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Why a child needs no launch.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SkipReason {
+    /// The checkpoint already holds `step >= budget`.
+    AtBudget { step: u64, budget: u64 },
+    /// A live process (fresh heartbeat, live pid) owns the run dir.
+    Live,
+}
+
+impl SkipReason {
+    pub fn describe(&self) -> String {
+        match self {
+            SkipReason::AtBudget { step, budget } => {
+                format!("checkpoint at budget ({step}/{budget} steps)")
+            }
+            SkipReason::Live => "a live process already owns this run dir".to_string(),
+        }
+    }
+}
+
+/// What the registry says should happen to one grid child.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Plan {
+    /// Nothing to do (at budget, or a live run already owns the dir).
+    Skip(SkipReason),
+    /// A checkpoint below budget exists — resume from this step.
+    Resume(u64),
+    /// No usable checkpoint — train from scratch.
+    Fresh,
+}
+
+/// Terminal outcome of one child under a resumable sweep.
+#[derive(Debug)]
+pub enum ChildStatus {
+    Skipped(String),
+    /// Trained to budget. The report is `None` when the child ran in
+    /// its own process (its record's final metrics carry the numbers).
+    Done(Option<TrainReport>),
+    Failed(String),
+}
+
+/// One child's result, in grid order.
+#[derive(Debug)]
+pub struct ChildOutcome {
+    pub run_dir: String,
+    pub label: String,
+    pub resumed: bool,
+    pub status: ChildStatus,
+}
+
+impl ChildOutcome {
+    pub fn failed(&self) -> bool {
+        matches!(self.status, ChildStatus::Failed(_))
+    }
+}
+
+/// The checkpoint path a trainer with this run dir writes.
+pub fn checkpoint_path(run_dir: &str) -> String {
+    format!("{}/checkpoint.bin", run_dir.trim_end_matches('/'))
+}
+
+/// Decide a child's fate from its checkpoint and registry record. The
+/// checkpoint is the ground truth for progress (`probe_progress` reads
+/// only the header); the record guards against double-launching a dir
+/// some live process already owns. An unreadable checkpoint classifies
+/// as `Fresh` — pre-atomic-write torn files should retrain, not wedge
+/// the sweep.
+pub fn classify(child: &RunSpec) -> Result<(String, Plan)> {
+    let run_dir = child
+        .train
+        .run_dir
+        .clone()
+        .context("sweep children always carry a run dir")?;
+    let ckpt = checkpoint_path(&run_dir);
+    let step = if Path::new(&ckpt).exists() {
+        Checkpoint::probe_progress(&ckpt).ok().map(|(_, step)| step)
+    } else {
+        None
+    };
+    if let Some(step) = step {
+        if step >= child.train.total_steps {
+            return Ok((
+                run_dir,
+                Plan::Skip(SkipReason::AtBudget {
+                    step,
+                    budget: child.train.total_steps,
+                }),
+            ));
+        }
+    }
+    if let Some(rec) = Registry::load(&run_dir)? {
+        if rec.status == RunStatus::Running {
+            let view = RunView {
+                rec,
+                heartbeat: Heartbeat::load(&run_dir).unwrap_or(None),
+            };
+            if view.derived(super::fsio::now_ms()) == DerivedStatus::Live {
+                return Ok((run_dir, Plan::Skip(SkipReason::Live)));
+            }
+        }
+    }
+    Ok((
+        run_dir,
+        match step {
+            Some(step) => Plan::Resume(step),
+            None => Plan::Fresh,
+        },
+    ))
+}
+
+/// The shared prologue of both executors: classify every child, emit
+/// skip outcomes immediately, reclaim orphaned `Running` records
+/// (terminal `Killed` transition, so the event log explains the gap),
+/// and register the survivors as `Pending`.
+struct LaunchSet {
+    /// Slots for all children; skips pre-filled.
+    outcomes: Vec<Option<ChildOutcome>>,
+    /// Indices into `children` that actually launch.
+    to_run: Vec<usize>,
+    /// Parallel to `to_run`: resume (vs fresh) launch.
+    resumed: Vec<bool>,
+}
+
+fn prepare(
+    reg: &Registry,
+    children: &[RunSpec],
+    mut on_event: impl FnMut(&ChildOutcome),
+) -> Result<LaunchSet> {
+    let mut set = LaunchSet {
+        outcomes: children.iter().map(|_| None).collect(),
+        to_run: Vec::new(),
+        resumed: Vec::new(),
+    };
+    for (i, child) in children.iter().enumerate() {
+        let (run_dir, plan) = classify(child)?;
+        let label = super::record::label_of(&run_dir);
+        match plan {
+            Plan::Skip(reason) => {
+                // An at-budget child can still hold a non-terminal
+                // record (a process SIGKILLed right after its final
+                // checkpoint landed). Settle it so the registry shows
+                // exactly one terminal record per child.
+                if matches!(reason, SkipReason::AtBudget { .. }) {
+                    if let Some(rec) = Registry::load(&run_dir)? {
+                        if !rec.status.is_terminal() {
+                            reg.finish_err(
+                                rec,
+                                RunStatus::Killed,
+                                "process died after reaching budget; checkpoint is complete",
+                                None,
+                            )?;
+                        }
+                    }
+                }
+                let outcome = ChildOutcome {
+                    run_dir,
+                    label,
+                    resumed: false,
+                    status: ChildStatus::Skipped(reason.describe()),
+                };
+                on_event(&outcome);
+                set.outcomes[i] = Some(outcome);
+            }
+            Plan::Resume(_) | Plan::Fresh => {
+                if let Some(rec) = Registry::load(&run_dir)? {
+                    if rec.status == RunStatus::Running {
+                        // classify() said not-live, so this is an orphan.
+                        reg.finish_err(
+                            rec,
+                            RunStatus::Killed,
+                            "orphaned run (stale heartbeat / dead pid) reclaimed by sweep",
+                            None,
+                        )?;
+                    }
+                }
+                reg.mark_pending(child, &run_dir)?;
+                set.to_run.push(i);
+                set.resumed.push(matches!(plan, Plan::Resume(_)));
+            }
+        }
+    }
+    Ok(set)
+}
+
+/// Settle the registry record for a finished in-process child and
+/// translate its report into a [`ChildStatus`].
+fn settle(
+    reg: &Registry,
+    child: &RunSpec,
+    run_dir: &str,
+    report: &Result<TrainReport>,
+) -> ChildStatus {
+    let rec = match Registry::load(run_dir) {
+        Ok(Some(rec)) => rec,
+        // The child may have failed before begin() wrote anything.
+        _ => RunRecord::new(child, run_dir),
+    };
+    match report {
+        Ok(report) => {
+            let ckpt = checkpoint_path(run_dir);
+            let ckpt = Path::new(&ckpt).exists().then_some(ckpt);
+            if let Err(e) = reg.finish_ok(rec, report, ckpt) {
+                return ChildStatus::Failed(format!("trained, but registry write failed: {e:#}"));
+            }
+            ChildStatus::Done(Some(report.clone()))
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let _ = reg.finish_err(rec, RunStatus::Failed, &msg, None);
+            ChildStatus::Failed(msg)
+        }
+    }
+}
+
+/// In-process resumable sweep: the registry-aware layer over
+/// [`run_sweep_with`]. Each launched child transitions
+/// `pending → running` on its worker (host/pid/attempt stamped),
+/// resumes from its checkpoint when one exists, and settles to
+/// `done`/`failed` as it finishes — a panic in one child becomes its
+/// `failed` record while siblings keep draining. Outcomes come back in
+/// child order; `on_event` fires per settled child.
+pub fn run_resumable(
+    reg: &Registry,
+    children: &[RunSpec],
+    jobs: usize,
+    mut on_event: impl FnMut(&ChildOutcome),
+) -> Result<Vec<ChildOutcome>> {
+    let mut set = prepare(reg, children, &mut on_event)?;
+    if set.to_run.is_empty() {
+        // PANIC: every child was classified Skip, so every slot is filled.
+        return Ok(set.outcomes.into_iter().map(|o| o.expect("skipped")).collect());
+    }
+    let subset: Vec<RunSpec> = set.to_run.iter().map(|&i| children[i].clone()).collect();
+    let resumed = &set.resumed;
+    let reg_ref = &*reg;
+    let outcomes = run_sweep_with(
+        &subset,
+        jobs,
+        |si, child| {
+            // PANIC: prepare() only queues children that carry run dirs.
+            let run_dir = child.train.run_dir.as_deref().expect("queued child has a run dir");
+            reg_ref.begin(child, run_dir)?;
+            let mut trainer = Trainer::from_run_spec(child)?;
+            if resumed[si] {
+                let ck = Checkpoint::load(checkpoint_path(run_dir))?;
+                trainer.restore(&ck)?;
+            }
+            trainer.train()
+        },
+        |si, outcome| {
+            let i = set.to_run[si];
+            let status = settle(reg_ref, &children[i], &outcome.run_dir, &outcome.report);
+            let child_outcome = ChildOutcome {
+                run_dir: outcome.run_dir.clone(),
+                label: outcome.label.clone(),
+                resumed: resumed[si],
+                status,
+            };
+            on_event(&child_outcome);
+            set.outcomes[i] = Some(child_outcome);
+        },
+    )?;
+    debug_assert_eq!(outcomes.len(), subset.len());
+    // PANIC: prepare() filled the skips and run_sweep_with reported every launched child.
+    Ok(set.outcomes.into_iter().map(|o| o.expect("all children settled")).collect())
+}
+
+/// Process-mode resumable sweep: each launched child is a separate
+/// `puffer run <run_dir>/spec.toml [--resume]` OS process (stdout and
+/// stderr tee'd to `<run_dir>/child.log`), so a child panic, OOM kill,
+/// or SIGKILL costs that child alone. The child process writes its own
+/// `running → done|failed` transitions (its pid in the record); the
+/// parent only reconciles children that died without settling —
+/// `killed` for signals, `failed` with the exit code otherwise.
+pub fn run_processes(
+    reg: &Registry,
+    children: &[RunSpec],
+    processes: usize,
+    mut on_event: impl FnMut(&ChildOutcome),
+) -> Result<Vec<ChildOutcome>> {
+    let exe = std::env::current_exe().context("locating the puffer binary for child spawns")?;
+    let mut set = prepare(reg, children, &mut on_event)?;
+    if set.to_run.is_empty() {
+        // PANIC: every child was classified Skip, so every slot is filled.
+        return Ok(set.outcomes.into_iter().map(|o| o.expect("skipped")).collect());
+    }
+    // Materialize each child's spec where its process (and a curious
+    // human) can find it.
+    for &i in &set.to_run {
+        let child = &children[i];
+        // PANIC: prepare() only queues children that carry run dirs.
+        let run_dir = child.train.run_dir.as_deref().expect("queued child has a run dir");
+        let toml = child
+            .to_toml()
+            .with_context(|| format!("serializing child spec for {run_dir}"))?;
+        super::fsio::write_atomic(Path::new(run_dir).join("spec.toml"), toml.as_bytes())?;
+    }
+    let n = set.to_run.len();
+    let processes = processes.clamp(1, n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let to_run = &set.to_run;
+    let resumed = &set.resumed;
+    let reg_ref = &*reg;
+    let exe = &exe;
+    let mut results: Vec<Option<ChildOutcome>> = children.iter().map(|_| None).collect();
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..processes {
+            let tx = tx.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                // ordering: Relaxed — a pure work-stealing counter; the
+                // claimed slot is the only data, and fetch_add's
+                // atomicity alone guarantees each slot is claimed once.
+                let slot = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if slot >= to_run.len() {
+                    break;
+                }
+                let i = to_run[slot];
+                let child = &children[i];
+                // PANIC: prepare() only queues children that carry run dirs.
+                let run_dir =
+                    child.train.run_dir.as_deref().expect("queued child has a run dir");
+                let status = spawn_child(exe, run_dir, resumed[slot], reg_ref, child);
+                if tx.send((i, slot, status)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, slot, status) in rx {
+            // PANIC: prepare() only queues children that carry run dirs.
+            let run_dir = children[i].train.run_dir.as_deref().expect("queued child");
+            let outcome = ChildOutcome {
+                run_dir: run_dir.to_string(),
+                label: super::record::label_of(run_dir),
+                resumed: resumed[slot],
+                status,
+            };
+            on_event(&outcome);
+            results[i] = Some(outcome);
+        }
+    });
+    for (i, slot) in set.outcomes.iter_mut().enumerate() {
+        if slot.is_none() {
+            *slot = results[i].take();
+        }
+    }
+    // PANIC: every child is either a prepare() skip or a reported process result.
+    Ok(set.outcomes.into_iter().map(|o| o.expect("all children settled")).collect())
+}
+
+/// Run one child to completion in its own process and reconcile its
+/// registry record against the exit status.
+fn spawn_child(
+    exe: &Path,
+    run_dir: &str,
+    resume: bool,
+    reg: &Registry,
+    child: &RunSpec,
+) -> ChildStatus {
+    let spec_path = Path::new(run_dir).join("spec.toml");
+    let log_path = Path::new(run_dir).join("child.log");
+    let open_log = || -> Result<std::fs::File> {
+        std::fs::File::create(&log_path)
+            .with_context(|| format!("creating {}", log_path.display()))
+    };
+    let spawned = open_log().and_then(|log| {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.arg("run").arg(&spec_path);
+        if resume {
+            cmd.arg("--resume");
+        }
+        cmd.stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::from(log.try_clone().context("duping child log")?))
+            .stderr(std::process::Stdio::from(log));
+        cmd.spawn().with_context(|| format!("spawning child for {run_dir}"))
+    });
+    let mut proc = match spawned {
+        Ok(proc) => proc,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let rec = Registry::load(run_dir).ok().flatten();
+            let rec = rec.unwrap_or_else(|| RunRecord::new(child, run_dir));
+            let _ = reg.finish_err(rec, RunStatus::Failed, &msg, None);
+            return ChildStatus::Failed(msg);
+        }
+    };
+    let status = match proc.wait() {
+        Ok(status) => status,
+        Err(e) => {
+            let msg = format!("waiting on child for {run_dir}: {e}");
+            return ChildStatus::Failed(msg);
+        }
+    };
+    // The child settles its own record on clean paths; the parent only
+    // steps in when it died mid-flight.
+    let rec = Registry::load(run_dir).ok().flatten();
+    let terminal = rec.as_ref().map(|r| r.status.is_terminal()).unwrap_or(false);
+    if status.success() {
+        if terminal {
+            return ChildStatus::Done(None);
+        }
+        let msg = "child exited 0 without settling its record".to_string();
+        let rec = rec.unwrap_or_else(|| RunRecord::new(child, run_dir));
+        let _ = reg.finish_err(rec, RunStatus::Failed, &msg, None);
+        return ChildStatus::Failed(msg);
+    }
+    if terminal {
+        // The child recorded its own failure before exiting nonzero.
+        let detail = rec
+            .and_then(|r| r.error)
+            .unwrap_or_else(|| format!("child exited with {status}"));
+        return ChildStatus::Failed(detail);
+    }
+    // Died without a terminal record: a signal (SIGKILL/OOM) or a hard
+    // abort. `{status}` spells out "signal: 9" / "exit status: 101".
+    let (term_status, msg) = if status.code().is_none() {
+        (RunStatus::Killed, format!("child killed ({status})"))
+    } else {
+        (RunStatus::Failed, format!("child died ({status})"))
+    };
+    let rec = rec.unwrap_or_else(|| RunRecord::new(child, run_dir));
+    let _ = reg.finish_err(rec, term_status, &msg, status.code().map(|c| c as i64));
+    ChildStatus::Failed(msg)
+}

@@ -1,0 +1,404 @@
+//! Read-side of the registry: the snapshots behind `puffer ps` (table
+//! or `--json` of live/recent runs, with stale-heartbeat orphan
+//! detection) and `puffer top` (refreshing SPS/stall view across live
+//! runs). Pure functions over [`RunRecord`]s + [`Heartbeat`]s — the
+//! CLI loop in `main.rs` owns the terminal.
+
+use super::fsio;
+use super::heartbeat::{stale_after_s, Heartbeat};
+use super::record::{RunRecord, RunStatus};
+use super::registry::Registry;
+use crate::util::json::{arr, obj, s, Json};
+use crate::util::stats::{fmt_age, fmt_si};
+use anyhow::Result;
+
+/// What `ps` actually reports per run: the recorded status refined by
+/// liveness evidence (heartbeat age, pid existence). A `Running` record
+/// whose writer can no longer be observed is `Stale` — the registry's
+/// word for "probably orphaned; a resumable sweep would reclaim it".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DerivedStatus {
+    Live,
+    Stale,
+    Pending,
+    Done,
+    Failed,
+    Killed,
+}
+
+impl DerivedStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DerivedStatus::Live => "live",
+            DerivedStatus::Stale => "stale",
+            DerivedStatus::Pending => "pending",
+            DerivedStatus::Done => "done",
+            DerivedStatus::Failed => "failed",
+            DerivedStatus::Killed => "killed",
+        }
+    }
+}
+
+/// One run as `ps`/`top` see it: the durable record plus the volatile
+/// heartbeat sampled at snapshot time.
+#[derive(Clone, Debug)]
+pub struct RunView {
+    pub rec: RunRecord,
+    pub heartbeat: Option<Heartbeat>,
+}
+
+impl RunView {
+    /// Refine the recorded status with liveness evidence as of `now_ms`.
+    pub fn derived(&self, now_ms: u64) -> DerivedStatus {
+        match self.rec.status {
+            RunStatus::Pending => DerivedStatus::Pending,
+            RunStatus::Done => DerivedStatus::Done,
+            RunStatus::Failed => DerivedStatus::Failed,
+            RunStatus::Killed => DerivedStatus::Killed,
+            RunStatus::Running => {
+                // Same-host pid probe is the strongest signal: a dead
+                // pid is an orphan no matter how fresh the heartbeat.
+                if self.rec.host == fsio::hostname()
+                    && fsio::pid_alive(self.rec.pid) == Some(false)
+                {
+                    return DerivedStatus::Stale;
+                }
+                match &self.heartbeat {
+                    Some(hb) => {
+                        if hb.is_stale(now_ms) {
+                            DerivedStatus::Stale
+                        } else {
+                            DerivedStatus::Live
+                        }
+                    }
+                    // No heartbeat yet: trust a fresh launch for one
+                    // default staleness window, then call it orphaned.
+                    None => {
+                        let started_age_s =
+                            now_ms.saturating_sub(self.rec.started_ms) as f64 / 1e3;
+                        if self.rec.started_ms > 0 && started_age_s <= stale_after_s(5.0) {
+                            DerivedStatus::Live
+                        } else {
+                            DerivedStatus::Stale
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Seconds since the run last showed signs of life (heartbeat,
+    /// terminal transition, start, or registration — whichever is
+    /// latest).
+    pub fn age_s(&self, now_ms: u64) -> f64 {
+        let mut latest = self.rec.created_ms.max(self.rec.started_ms).max(self.rec.ended_ms);
+        if let Some(hb) = &self.heartbeat {
+            latest = latest.max(hb.updated_ms);
+        }
+        now_ms.saturating_sub(latest) as f64 / 1e3
+    }
+
+    fn progress(&self) -> (u64, u64) {
+        let (mut step, mut total) = (0u64, self.rec.total_steps);
+        if let Some(m) = &self.rec.metrics {
+            step = m.global_step;
+        }
+        if let Some(hb) = &self.heartbeat {
+            step = step.max(hb.global_step);
+            total = total.max(hb.total_steps);
+        }
+        (step, total)
+    }
+
+    fn sps_pair(&self) -> (f64, f64) {
+        if self.rec.status == RunStatus::Running {
+            if let Some(hb) = &self.heartbeat {
+                return (hb.env_sps, hb.learn_sps);
+            }
+        }
+        match &self.rec.metrics {
+            Some(m) => (m.env_sps, m.learn_sps),
+            None => (f64::NAN, f64::NAN),
+        }
+    }
+
+    fn score(&self) -> Option<f64> {
+        if self.rec.status == RunStatus::Running {
+            if let Some(hb) = &self.heartbeat {
+                if hb.mean_score.is_some() {
+                    return hb.mean_score;
+                }
+            }
+        }
+        self.rec.metrics.as_ref().and_then(|m| m.mean_score)
+    }
+}
+
+/// Every registered run with its heartbeat sampled now, most recent
+/// transition first (the registry's list order).
+pub fn snapshot(reg: &Registry) -> Result<Vec<RunView>> {
+    let mut views = Vec::new();
+    for rec in reg.list()? {
+        let heartbeat = Heartbeat::load(&rec.run_dir).unwrap_or(None);
+        views.push(RunView { rec, heartbeat });
+    }
+    Ok(views)
+}
+
+fn render_rows(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.chars().count()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    let emit = |out: &mut String, cells: &[String]| {
+        let line: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:<width$}", width = widths[i]))
+            .collect();
+        out.push_str(line.join("  ").trim_end());
+        out.push('\n');
+    };
+    let header_cells: Vec<String> = header.iter().map(|h| h.to_string()).collect();
+    emit(&mut out, &header_cells);
+    for row in rows {
+        emit(&mut out, row);
+    }
+    out
+}
+
+fn table_row(v: &RunView, now_ms: u64) -> Vec<String> {
+    let (step, total) = v.progress();
+    let (env_sps, learn_sps) = v.sps_pair();
+    vec![
+        v.derived(now_ms).as_str().to_string(),
+        v.rec.run_dir.clone(),
+        format!("{}/{}", fmt_si(step as f64), fmt_si(total as f64)),
+        format!("{}/{}", fmt_si(env_sps), fmt_si(learn_sps)),
+        match v.score() {
+            Some(x) => format!("{x:.3}"),
+            None => "-".to_string(),
+        },
+        format!("a{}", v.rec.attempt),
+        fmt_age(v.age_s(now_ms)),
+        if v.rec.pid == 0 {
+            "-".to_string()
+        } else {
+            format!("{}:{}", v.rec.host, v.rec.pid)
+        },
+    ]
+}
+
+const TABLE_HEADER: &[&str] = &[
+    "STATUS", "RUN", "STEPS", "SPS(env/learn)", "SCORE", "ATT", "AGE", "HOST:PID",
+];
+
+/// The `puffer ps` table over all registered runs.
+pub fn ps_table(views: &[RunView], now_ms: u64) -> String {
+    if views.is_empty() {
+        return "no registered runs\n".to_string();
+    }
+    let rows: Vec<Vec<String>> = views.iter().map(|v| table_row(v, now_ms)).collect();
+    render_rows(TABLE_HEADER, &rows)
+}
+
+/// The `puffer ps --json` form: an array of run objects, each the
+/// `run.json` payload plus `derived_status`, `age_s`, and the sampled
+/// `heartbeat` (null when absent) — what the CI invariants script
+/// asserts over.
+pub fn ps_json(views: &[RunView], now_ms: u64) -> String {
+    let items: Vec<Json> = views
+        .iter()
+        .map(|v| {
+            let mut o = match v.rec.to_json() {
+                Json::Obj(map) => map,
+                // PANIC: RunRecord::to_json always builds an object.
+                _ => unreachable!("run record serializes to an object"),
+            };
+            o.insert("derived_status".into(), s(v.derived(now_ms).as_str()));
+            o.insert(
+                "age_s".into(),
+                crate::util::json::num((v.age_s(now_ms) * 1e3).round() / 1e3),
+            );
+            o.insert(
+                "heartbeat".into(),
+                match &v.heartbeat {
+                    Some(hb) => obj(vec![
+                        ("pid", crate::util::json::num(hb.pid as f64)),
+                        ("global_step", crate::util::json::num(hb.global_step as f64)),
+                        ("env_sps", crate::util::json::num(hb.env_sps)),
+                        ("learn_sps", crate::util::json::num(hb.learn_sps)),
+                        ("stall_s", crate::util::json::num(hb.stall_s)),
+                        ("age_s", crate::util::json::num(hb.age_s(now_ms))),
+                        ("stale", Json::Bool(hb.is_stale(now_ms))),
+                    ]),
+                    None => Json::Null,
+                },
+            );
+            Json::Obj(o)
+        })
+        .collect();
+    arr(items).dump()
+}
+
+/// One `puffer top` frame: the in-flight runs (live + stale first),
+/// stall column included, with a one-line fleet summary.
+pub fn top_frame(views: &[RunView], now_ms: u64) -> String {
+    let mut counts = [0usize; 6];
+    for v in views {
+        counts[match v.derived(now_ms) {
+            DerivedStatus::Live => 0,
+            DerivedStatus::Stale => 1,
+            DerivedStatus::Pending => 2,
+            DerivedStatus::Done => 3,
+            DerivedStatus::Failed => 4,
+            DerivedStatus::Killed => 5,
+        }] += 1;
+    }
+    let mut active: Vec<&RunView> = views
+        .iter()
+        .filter(|v| {
+            matches!(
+                v.derived(now_ms),
+                DerivedStatus::Live | DerivedStatus::Stale | DerivedStatus::Pending
+            )
+        })
+        .collect();
+    active.sort_by(|a, b| a.rec.run_dir.cmp(&b.rec.run_dir));
+    let mut out = format!(
+        "puffer top — {} live, {} stale, {} pending, {} done, {} failed, {} killed\n\n",
+        counts[0], counts[1], counts[2], counts[3], counts[4], counts[5]
+    );
+    if active.is_empty() {
+        out.push_str("no in-flight runs\n");
+        return out;
+    }
+    let rows: Vec<Vec<String>> = active
+        .iter()
+        .map(|v| {
+            let mut row = table_row(v, now_ms);
+            let stall = v.heartbeat.as_ref().map(|hb| hb.stall_s).unwrap_or(f64::NAN);
+            row.insert(4, if stall.is_finite() { format!("{stall:.1}s") } else { "-".into() });
+            row
+        })
+        .collect();
+    let header: &[&str] = &[
+        "STATUS", "RUN", "STEPS", "SPS(env/learn)", "STALL", "SCORE", "ATT", "AGE", "HOST:PID",
+    ];
+    out.push_str(&render_rows(header, &rows));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runs::record::FinalMetrics;
+
+    fn rec(dir: &str, status: RunStatus) -> RunRecord {
+        RunRecord {
+            run_dir: dir.to_string(),
+            label: super::super::record::label_of(dir),
+            env: "ocean/bandit".into(),
+            seed: 1,
+            total_steps: 8192,
+            spec_fingerprint: String::new(),
+            status,
+            attempt: 1,
+            host: "elsewhere".into(),
+            pid: 42,
+            created_ms: 1_000,
+            started_ms: 2_000,
+            ended_ms: 0,
+            exit_code: None,
+            error: None,
+            checkpoint: None,
+            metrics: None,
+        }
+    }
+
+    fn hb(updated_ms: u64) -> Heartbeat {
+        Heartbeat {
+            pid: 42,
+            global_step: 4096,
+            total_steps: 8192,
+            env_sps: 120_000.0,
+            learn_sps: 450_000.0,
+            stall_s: 0.25,
+            mean_score: Some(0.9),
+            updated_ms,
+            period_s: 5.0,
+        }
+    }
+
+    #[test]
+    fn derived_status_distinguishes_live_stale_and_terminals() {
+        let now = 100_000u64;
+        let live = RunView {
+            rec: rec("runs/a", RunStatus::Running),
+            heartbeat: Some(hb(now - 2_000)),
+        };
+        assert_eq!(live.derived(now), DerivedStatus::Live);
+        let stale = RunView {
+            rec: rec("runs/b", RunStatus::Running),
+            heartbeat: Some(hb(now - 60_000)),
+        };
+        assert_eq!(stale.derived(now), DerivedStatus::Stale);
+        let no_hb_old = RunView {
+            rec: rec("runs/c", RunStatus::Running),
+            heartbeat: None,
+        };
+        assert_eq!(no_hb_old.derived(now), DerivedStatus::Stale);
+        for (status, want) in [
+            (RunStatus::Pending, DerivedStatus::Pending),
+            (RunStatus::Done, DerivedStatus::Done),
+            (RunStatus::Failed, DerivedStatus::Failed),
+            (RunStatus::Killed, DerivedStatus::Killed),
+        ] {
+            let v = RunView { rec: rec("runs/t", status), heartbeat: None };
+            assert_eq!(v.derived(now), want);
+        }
+    }
+
+    #[test]
+    fn tables_and_json_render_every_run() {
+        let now = 100_000u64;
+        let mut done = rec("runs/done", RunStatus::Done);
+        done.metrics = Some(FinalMetrics {
+            global_step: 8192,
+            sps: 1e5,
+            env_sps: 2e5,
+            learn_sps: 3e5,
+            mean_score: Some(1.0),
+            mean_return: Some(0.5),
+            episodes: 9,
+        });
+        done.ended_ms = now - 5_000;
+        let views = vec![
+            RunView { rec: done, heartbeat: None },
+            RunView {
+                rec: rec("runs/live", RunStatus::Running),
+                heartbeat: Some(hb(now - 1_000)),
+            },
+        ];
+        let table = ps_table(&views, now);
+        assert!(table.contains("runs/done"), "{table}");
+        assert!(table.contains("done"), "{table}");
+        assert!(table.contains("live"), "{table}");
+        assert!(table.contains("4.1k/8.2k"), "live row shows heartbeat steps: {table}");
+        let json = Json::parse(&ps_json(&views, now)).unwrap();
+        let items = json.as_arr().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].get("derived_status").as_str(), Some("done"));
+        assert_eq!(items[1].get("derived_status").as_str(), Some("live"));
+        assert_eq!(items[1].get("heartbeat").get("global_step").as_f64(), Some(4096.0));
+        let frame = top_frame(&views, now);
+        assert!(frame.contains("1 live"), "{frame}");
+        assert!(frame.contains("1 done"), "{frame}");
+        assert!(frame.contains("runs/live"), "{frame}");
+        assert!(!frame.contains("runs/done"), "top shows in-flight runs only: {frame}");
+    }
+}

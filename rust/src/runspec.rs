@@ -39,6 +39,10 @@
 //! workers = 2
 //! batch = "half"
 //!
+//! [runs]                    # optional experiment-ops knobs
+//! root = "runs"             # registry root (index.jsonl lives here)
+//! heartbeat_s = 5
+//!
 //! [train]
 //! total_steps = 50000
 //! lr = 0.0025
@@ -108,6 +112,10 @@ pub struct RunSpec {
     /// Inference-server settings (`puffer serve`); `None` for the
     /// (common) specs that never serve. Inert during training.
     pub serve: Option<crate::serve::ServeConfig>,
+    /// Experiment-ops settings: registry root + heartbeat period.
+    /// `None` means defaults (registry logging is always on for runs
+    /// with a run dir).
+    pub runs: Option<crate::runs::RunsConfig>,
     /// Sweep grid: spec key → candidate values. Empty for a single run.
     pub grid: BTreeMap<String, Vec<String>>,
 }
@@ -122,6 +130,7 @@ impl RunSpec {
             train: TrainConfig::default(),
             seed: TrainConfig::default().seed,
             serve: None,
+            runs: None,
             grid: BTreeMap::new(),
         };
         spec.normalize();
@@ -148,6 +157,12 @@ impl RunSpec {
 
     pub fn with_serve(mut self, serve: crate::serve::ServeConfig) -> Self {
         self.serve = Some(serve);
+        self.normalize();
+        self
+    }
+
+    pub fn with_runs(mut self, runs: crate::runs::RunsConfig) -> Self {
+        self.runs = Some(runs);
         self.normalize();
         self
     }
@@ -304,6 +319,7 @@ impl RunSpec {
             .map(|(k, v)| (k.strip_prefix("grid.").unwrap().to_string(), v.clone()))
             .collect();
         let serve = config::serve_config(&flat)?;
+        let runs = config::runs_config(&flat)?;
         let mut spec = RunSpec {
             env: EnvSpec::new(name).with_wrappers(train.wrappers.iter().cloned()),
             policy: train.policy.clone(),
@@ -311,6 +327,7 @@ impl RunSpec {
             seed: train.seed,
             train,
             serve,
+            runs,
             grid,
         };
         spec.normalize();
@@ -362,6 +379,11 @@ impl RunSpec {
                 put(&format!("serve.{knob}"), value);
             }
         }
+        if let Some(runs) = &s.runs {
+            for (knob, value) in runs.to_flat_pairs() {
+                put(&format!("runs.{knob}"), value);
+            }
+        }
         let t = &s.train;
         put("train.total_steps", t.total_steps.to_string());
         put("train.lr", format!("{}", t.lr));
@@ -407,7 +429,7 @@ impl RunSpec {
         };
         section_value(&mut out, "seed", &flat["seed"]);
         // Emit sections in a fixed, readable order.
-        for section in ["env", "env.wrap", "policy", "vec", "serve", "train"] {
+        for section in ["env", "env.wrap", "policy", "vec", "serve", "runs", "train"] {
             let prefix = format!("{section}.");
             let keys: Vec<&String> = flat
                 .keys()
@@ -645,16 +667,38 @@ pub struct SweepOutcome {
 /// (each child builds its trainer inside its worker, so envs, backends,
 /// and metrics files are fully isolated). `on_done` fires as each child
 /// finishes, from the calling thread; outcomes come back in child
-/// order.
+/// order. A panicking child becomes a `Failed` outcome carrying the
+/// panic message — its siblings keep draining the grid.
 pub fn run_sweep(
     children: &[RunSpec],
     jobs: usize,
+    on_done: impl FnMut(usize, &SweepOutcome),
+) -> Result<Vec<SweepOutcome>> {
+    run_sweep_with(
+        children,
+        jobs,
+        |_, child| Trainer::from_run_spec(child).and_then(|mut t| t.train()),
+        on_done,
+    )
+}
+
+/// [`run_sweep`] with a pluggable per-child task — what the
+/// registry-aware resumable executor ([`crate::runs::sweep`]) layers
+/// its record transitions onto. The task runs on a worker thread under
+/// `catch_unwind`, so one child's panic is converted into an `Err`
+/// outcome (message preserved) instead of killing the worker and
+/// silently orphaning every index that worker would have claimed.
+pub fn run_sweep_with(
+    children: &[RunSpec],
+    jobs: usize,
+    task: impl Fn(usize, &RunSpec) -> Result<TrainReport> + Sync,
     mut on_done: impl FnMut(usize, &SweepOutcome),
 ) -> Result<Vec<SweepOutcome>> {
     ensure!(!children.is_empty(), "no sweep children to run");
     let n = children.len();
     let jobs = jobs.clamp(1, n);
     let next = std::sync::atomic::AtomicUsize::new(0);
+    let task = &task;
     let mut outcomes: Vec<Option<SweepOutcome>> = std::iter::repeat_with(|| None).take(n).collect();
     std::thread::scope(|s| {
         let (tx, rx) = std::sync::mpsc::channel();
@@ -669,7 +713,19 @@ pub fn run_sweep(
                 if i >= children.len() {
                     break;
                 }
-                let report = Trainer::from_run_spec(&children[i]).and_then(|mut t| t.train());
+                // AssertUnwindSafe: on panic the child's trainer (and
+                // anything it half-mutated) is dropped here, never
+                // observed again — the only state that crosses the
+                // boundary is the extracted panic message.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    task(i, &children[i])
+                }));
+                let report = caught.unwrap_or_else(|payload| {
+                    Err(anyhow::anyhow!(
+                        "sweep child panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                });
                 if tx.send((i, report)).is_err() {
                     break;
                 }
@@ -694,6 +750,19 @@ pub fn run_sweep(
     });
     // PANIC: the scope joined every worker; each index was reported exactly once.
     Ok(outcomes.into_iter().map(|o| o.expect("all children ran")).collect())
+}
+
+/// Extract a human-readable message from a `catch_unwind` payload
+/// (`panic!` with a literal yields `&str`, with formatting yields
+/// `String`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(text) = payload.downcast_ref::<&str>() {
+        (*text).to_string()
+    } else if let Some(text) = payload.downcast_ref::<String>() {
+        text.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 // -- JSON plumbing ----------------------------------------------------------
@@ -811,6 +880,7 @@ fn validate_scalar_key(key: &str) -> Result<()> {
         || key.starts_with("policy.")
         || key.starts_with("vec.")
         || key.starts_with("serve.")
+        || key.starts_with("runs.")
         || key.starts_with("train.pipeline.")
         || (key.strip_prefix("train.").is_some_and(|rest| RUN_TRAIN_KEYS.contains(&rest)));
     if !known_namespace {
@@ -822,7 +892,7 @@ fn validate_scalar_key(key: &str) -> Result<()> {
         }
         bail!(
             "unknown RunSpec key '{key}' (sections: seed, [env], [env.wrap], \
-             [policy], [vec], [serve], [train], [grid])"
+             [policy], [vec], [serve], [runs], [train], [grid])"
         );
     }
     // Namespaced keys get their suffix validation from the config-layer
@@ -923,6 +993,42 @@ mod tests {
             .expect("typo'd serve key must be rejected")
             .to_string();
         assert!(err.contains("serve key 'prot'"), "got: {err}");
+    }
+
+    #[test]
+    fn runs_section_round_trips_and_rejects_unknown_knobs() {
+        let runs = crate::runs::RunsConfig {
+            root: "exp/registry".to_string(),
+            heartbeat_s: 2.5,
+        };
+        let spec = full_spec().with_runs(runs.clone());
+        let toml = spec.to_toml().unwrap();
+        assert!(toml.contains("\n[runs]\n"), "runs gets its own section:\n{toml}");
+        assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+
+        // Specs without ops overrides stay runs-less (no section emitted).
+        let plain = full_spec();
+        assert_eq!(plain.runs, None);
+        assert!(!plain.to_toml().unwrap().contains("[runs]"));
+
+        // A partial section pulls defaults for the rest.
+        let partial = RunSpec::from_toml_str(
+            "[env]\nname = \"ocean/bandit\"\n[runs]\nheartbeat_s = 1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            partial.runs,
+            Some(crate::runs::RunsConfig { heartbeat_s: 1.0, ..Default::default() })
+        );
+
+        // Unknown runs knobs error naming the key.
+        let err = RunSpec::from_toml_str("[runs]\nheart_beat = 5\n")
+            .err()
+            .expect("typo'd runs key must be rejected")
+            .to_string();
+        assert!(err.contains("runs key 'heart_beat'"), "got: {err}");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! no embedded spec.
 
 use anyhow::{Context, Result};
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PUFFCKPT";
@@ -30,27 +30,36 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Serialize and publish atomically (tmp sibling + fsync + rename,
+    /// via [`crate::runs::fsio::write_atomic`]): the checkpoint is the
+    /// only resumable artifact, so a kill mid-save must leave either
+    /// the previous complete file or the new one — never a torn hybrid.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("creating {}", path.as_ref().display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        let path = path.as_ref();
+        let mut bytes = Vec::with_capacity(
+            64 + self.spec_key.len()
+                + self.run_spec_json.as_deref().unwrap_or("").len()
+                + 4 * (self.params.len() + self.adam_m.len() + self.adam_v.len()),
+        );
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
         let key = self.spec_key.as_bytes();
-        f.write_all(&(key.len() as u32).to_le_bytes())?;
-        f.write_all(key)?;
+        bytes.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(key);
         // Length-prefixed run spec; 0 = none.
         let spec = self.run_spec_json.as_deref().unwrap_or("").as_bytes();
-        f.write_all(&(spec.len() as u32).to_le_bytes())?;
-        f.write_all(spec)?;
-        f.write_all(&self.global_step.to_le_bytes())?;
-        f.write_all(&self.adam_step.to_le_bytes())?;
+        bytes.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(spec);
+        bytes.extend_from_slice(&self.global_step.to_le_bytes());
+        bytes.extend_from_slice(&self.adam_step.to_le_bytes());
         for arr in [&self.params, &self.adam_m, &self.adam_v] {
-            f.write_all(&(arr.len() as u64).to_le_bytes())?;
+            bytes.extend_from_slice(&(arr.len() as u64).to_le_bytes());
             for x in arr.iter() {
-                f.write_all(&x.to_le_bytes())?;
+                bytes.extend_from_slice(&x.to_le_bytes());
             }
         }
-        Ok(())
+        crate::runs::fsio::write_atomic(path, &bytes)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
     }
 
     /// Read just the magic and format version — what `puffer ckpt info`
@@ -65,6 +74,36 @@ impl Checkpoint {
         let mut u32b = [0u8; 4];
         f.read_exact(&mut u32b)?;
         Ok(u32::from_le_bytes(u32b))
+    }
+
+    /// Read the header only — format version plus the resume step —
+    /// skipping over the embedded strings and never touching the three
+    /// parameter arrays. Resumable sweeps use this to classify a child
+    /// as at-budget vs partial without paying a full `load` per grid
+    /// point.
+    pub fn probe_progress(path: impl AsRef<Path>) -> Result<(u32, u64)> {
+        use std::io::{Seek, SeekFrom};
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a puffer checkpoint");
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        anyhow::ensure!(
+            version == 1 || version == VERSION,
+            "checkpoint version {version} not supported (this build reads v1 and v{VERSION})"
+        );
+        // Skip the length-prefixed spec-key (and run-spec JSON, v2+).
+        let strings = if version >= 2 { 2 } else { 1 };
+        for _ in 0..strings {
+            f.read_exact(&mut u32b)?;
+            f.seek(SeekFrom::Current(u32::from_le_bytes(u32b) as i64))?;
+        }
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        Ok((version, u64::from_le_bytes(u64b)))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
@@ -208,6 +247,49 @@ mod tests {
         std::fs::write(&path, bytes).unwrap();
         assert_eq!(Checkpoint::probe_version(&path).unwrap(), 7);
         assert!(Checkpoint::probe_version(dir.join("garbage.bin")).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_truncated_files_are_rejected() {
+        let dir = std::env::temp_dir().join("puffer_ckpt_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("checkpoint.bin");
+        let ck = sample(Some(r#"{"env":{"name":"ocean/squared"}}"#.into()));
+        ck.save(&path).unwrap();
+        // The tmp sibling must be renamed away, and re-saving must
+        // replace in place (the overwrite path a trainer hits every
+        // checkpoint interval).
+        assert!(!dir.join("checkpoint.bin.tmp").exists());
+        let mut ck2 = ck.clone();
+        ck2.global_step = 99_999;
+        ck2.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck2);
+        assert_eq!(Checkpoint::probe_progress(&path).unwrap(), (VERSION, 99_999));
+
+        // Every strict prefix of the file must be rejected by load():
+        // a torn write can never masquerade as a resumable checkpoint.
+        let full = std::fs::read(&path).unwrap();
+        let cut_points = [
+            4,              // inside the magic
+            10,             // inside the version
+            14,             // inside the spec-key
+            full.len() / 2, // mid-arrays
+            full.len() - 1, // one byte short
+        ];
+        for cut in cut_points {
+            let torn = dir.join(format!("torn_{cut}.bin"));
+            std::fs::write(&torn, &full[..cut]).unwrap();
+            assert!(
+                Checkpoint::load(&torn).is_err(),
+                "a {cut}-byte prefix of a {}-byte checkpoint must not load",
+                full.len()
+            );
+        }
+        // probe_progress reads only the header, so it accepts any
+        // prefix that still contains one — but never a torn header.
+        assert!(Checkpoint::probe_progress(dir.join("torn_4.bin")).is_err());
+        assert!(Checkpoint::probe_progress(dir.join("torn_14.bin")).is_err());
     }
 
     #[test]

@@ -120,7 +120,7 @@ impl Default for TrainConfig {
 }
 
 /// Final report from a training run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TrainReport {
     pub global_step: u64,
     /// End-to-end env steps per wall-clock second.
@@ -225,6 +225,10 @@ pub struct Trainer {
     opt: AdamState,
     global_step: u64,
     metrics: MetricsSink,
+    /// Live telemetry for `puffer ps` / `puffer top`: rewrites
+    /// `<run_dir>/heartbeat.json` once per configured period (`None`
+    /// when the run has no directory — nothing to watch).
+    heartbeat: Option<crate::runs::HeartbeatWriter>,
     /// Per-stream seeds: [`SeedPlan::legacy`] for directly-configured
     /// trainers (bit-identical to the pre-RunSpec loop),
     /// [`SeedPlan::from_root`] for RunSpec-constructed ones.
@@ -400,6 +404,14 @@ impl Trainer {
         );
 
         let metrics = MetricsSink::new(cfg.run_dir.as_deref());
+        let heartbeat = cfg.run_dir.as_deref().map(|dir| {
+            let period_s = run_spec
+                .as_ref()
+                .and_then(|s| s.runs.as_ref())
+                .map(|r| r.heartbeat_s)
+                .unwrap_or_else(|| crate::runs::RunsConfig::default().heartbeat_s);
+            crate::runs::HeartbeatWriter::new(dir, period_s, cfg.total_steps)
+        });
         let shuffle_rng = Rng::new(seeds.shuffle);
         Ok(Trainer {
             cfg,
@@ -412,6 +424,7 @@ impl Trainer {
             opt: AdamState::new(spec.n_params),
             global_step: 0,
             metrics,
+            heartbeat,
             seeds,
             run_spec,
             shuffle_rng,
@@ -434,6 +447,21 @@ impl Trainer {
     /// Run the full training loop (serial or pipelined per
     /// [`TrainConfig::pipeline_depth`]).
     pub fn train(&mut self) -> Result<TrainReport> {
+        // Test hook: the integration suite injects a deterministic child
+        // failure (sweep panic isolation / registry `failed` records) by
+        // naming a run-dir substring in this env var. Inert otherwise.
+        if let Ok(needle) = std::env::var("PUFFER_TEST_TRAIN_PANIC") {
+            if let Some(dir) = &self.cfg.run_dir {
+                if !needle.is_empty() && dir.contains(&needle) {
+                    panic!("PUFFER_TEST_TRAIN_PANIC: injected failure for {dir}");
+                }
+            }
+        }
+        // First beat before any stepping so even instant crashes leave a
+        // heartbeat for `puffer ps` to date the attempt by.
+        if let Some(hb) = self.heartbeat.as_mut() {
+            hb.force(self.global_step, 0.0, 0.0, 0.0, None)?;
+        }
         let report = if self.cfg.pipeline_depth == 0 {
             self.train_serial()?
         } else {
@@ -442,6 +470,17 @@ impl Trainer {
         if let Some(dir) = &self.cfg.run_dir {
             std::fs::create_dir_all(dir)?;
             self.checkpoint().save(format!("{dir}/checkpoint.bin"))?;
+        }
+        // Final beat with the report's numbers so `ps` shows the finished
+        // progress even if the registry transition races a reader.
+        if let Some(hb) = self.heartbeat.as_mut() {
+            hb.force(
+                report.global_step,
+                report.env_sps,
+                report.learn_sps,
+                report.collector_stall_s + report.learner_stall_s,
+                report.mean_score,
+            )?;
         }
         Ok(report)
     }
@@ -507,6 +546,7 @@ impl Trainer {
             log_segment(
                 &self.cfg,
                 &mut self.metrics,
+                &mut self.heartbeat,
                 self.global_step,
                 sps.window(),
                 sps.total(),
@@ -573,6 +613,7 @@ impl Trainer {
             opt,
             global_step,
             metrics,
+            heartbeat,
             shuffle_rng,
             scratch,
             ..
@@ -645,6 +686,7 @@ impl Trainer {
                 log_segment(
                     cfg,
                     metrics,
+                    heartbeat,
                     *global_step,
                     sps.window(),
                     sps.total(),
@@ -913,6 +955,7 @@ fn learn_on_segment(
 fn log_segment(
     cfg: &TrainConfig,
     sink: &mut MetricsSink,
+    heartbeat: &mut Option<crate::runs::HeartbeatWriter>,
     global_step: u64,
     window_sps: f64,
     total_steps_done: u64,
@@ -924,6 +967,9 @@ fn log_segment(
     let env_sps = rate(total_steps_done, tel.env_active_s);
     let learn_sps = rate(total_steps_done, tel.learn_s);
     let stall_s = tel.collector_stall_s + tel.learner_stall_s;
+    if let Some(hb) = heartbeat.as_mut() {
+        hb.beat(global_step, env_sps, learn_sps, stall_s, log.mean_score(100))?;
+    }
     if cfg.log_every > 0 && segment % cfg.log_every as u64 == 0 {
         println!(
             "[{}] step {:>8}  sps {:>8.0}  env {:>8.0}  learn {:>8.0}  stall {:>6.2}s  score {:>6}  return {:>8}  loss {:>8.4}  kl {:>7.4}",

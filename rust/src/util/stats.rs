@@ -192,6 +192,54 @@ impl Histogram {
     }
 }
 
+/// Compact SI-suffixed magnitude for console tables (`puffer ps`/`top`
+/// SPS and step columns): `512`, `34.2k`, `1.2M`, `3.4G`. Non-finite
+/// values render as `-`.
+pub fn fmt_si(x: f64) -> String {
+    if !x.is_finite() {
+        return "-".to_string();
+    }
+    let (mag, sign) = (x.abs(), if x < 0.0 { "-" } else { "" });
+    let (scaled, suffix) = if mag >= 1e9 {
+        (mag / 1e9, "G")
+    } else if mag >= 1e6 {
+        (mag / 1e6, "M")
+    } else if mag >= 1e3 {
+        (mag / 1e3, "k")
+    } else {
+        (mag, "")
+    };
+    if suffix.is_empty() {
+        if mag == mag.trunc() && mag < 1e3 {
+            format!("{sign}{}", mag as u64)
+        } else {
+            format!("{sign}{mag:.1}")
+        }
+    } else if scaled >= 100.0 {
+        format!("{sign}{scaled:.0}{suffix}")
+    } else {
+        format!("{sign}{scaled:.1}{suffix}")
+    }
+}
+
+/// Compact age/duration for console tables: `3s`, `2m10s`, `4h02m`,
+/// `2d07h`. Negative or non-finite durations render as `-`.
+pub fn fmt_age(secs: f64) -> String {
+    if !secs.is_finite() || secs < 0.0 {
+        return "-".to_string();
+    }
+    let s = secs as u64;
+    if s < 60 {
+        format!("{s}s")
+    } else if s < 3600 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else if s < 86_400 {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    } else {
+        format!("{}d{:02}h", s / 86_400, (s % 86_400) / 3600)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +295,22 @@ mod tests {
             e.push(10.0);
         }
         assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fmt_si_and_fmt_age_cover_the_ranges() {
+        assert_eq!(fmt_si(0.0), "0");
+        assert_eq!(fmt_si(512.0), "512");
+        assert_eq!(fmt_si(34_200.0), "34.2k");
+        assert_eq!(fmt_si(1_200_000.0), "1.2M");
+        assert_eq!(fmt_si(3.4e9), "3.4G");
+        assert_eq!(fmt_si(-1500.0), "-1.5k");
+        assert_eq!(fmt_si(f64::NAN), "-");
+        assert_eq!(fmt_age(3.0), "3s");
+        assert_eq!(fmt_age(130.0), "2m10s");
+        assert_eq!(fmt_age(4.0 * 3600.0 + 120.0), "4h02m");
+        assert_eq!(fmt_age(2.0 * 86_400.0 + 7.0 * 3600.0), "2d07h");
+        assert_eq!(fmt_age(-1.0), "-");
     }
 
     #[test]

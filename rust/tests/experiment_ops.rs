@@ -1,0 +1,277 @@
+//! Experiment-ops integration: the run registry, resumable sweeps, and
+//! the `puffer ps`/`top` read side, driven end-to-end on the serial
+//! `ocean/bandit` env. Serial bandit trains in 1024-step segments, so a
+//! budget of 1 rounds up to exactly one segment — phases of
+//! fresh-train / kill / resume / skip stay cheap and deterministic.
+
+use pufferlib::prelude::*;
+use pufferlib::runs::sweep::{self, ChildStatus};
+use pufferlib::runs::{
+    fsio, ps_table, snapshot, top_frame, DerivedStatus, Registry, RunRecord, RunStatus, RunsConfig,
+};
+use pufferlib::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("puffer_experiment_ops").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 2×2 bandit grid (seed × lr) with registry root and sweep base both
+/// absolute under `dir`, so tests never depend on the process cwd.
+fn sweep_spec(dir: &Path, total_steps: u64) -> RunSpec {
+    let root = dir.join("registry").to_str().unwrap().to_string();
+    let base = dir.join("sweep").to_str().unwrap().to_string();
+    let mut spec = RunSpec::new(EnvSpec::new("ocean/bandit"))
+        .with_vec(VecSpec::Serial)
+        .with_seed(11)
+        .with_runs(RunsConfig { root, heartbeat_s: 1.0 })
+        .with_train(|t| {
+            t.total_steps = total_steps;
+            t.log_every = 0;
+            t.run_dir = Some(base);
+        });
+    spec.grid.insert("seed".into(), vec!["1".into(), "2".into()]);
+    spec.grid.insert("train.lr".into(), vec!["0.002".into(), "0.003".into()]);
+    spec
+}
+
+#[test]
+fn sweep_survives_a_hard_kill_and_resumes_without_duplicate_records() {
+    let dir = temp_dir("kill_resume");
+    let reg = Registry::new(dir.join("registry"));
+
+    // Phase 1: a tiny budget stands in for the progress a killed sweep
+    // had banked — every child trains one 1024-step segment.
+    let children = sweep_spec(&dir, 1).expand_grid().unwrap();
+    assert_eq!(children.len(), 4);
+    let outcomes = sweep::run_resumable(&reg, &children, 2, |_| {}).unwrap();
+    for o in &outcomes {
+        assert!(matches!(o.status, ChildStatus::Done(Some(_))), "{}: {:?}", o.label, o.status);
+        assert!(!o.resumed, "{}", o.label);
+    }
+    let recs = reg.list().unwrap();
+    assert_eq!(recs.len(), 4);
+    assert!(recs.iter().all(|r| r.status == RunStatus::Done && r.attempt == 1));
+
+    // Simulate a SIGKILL mid-run on one child: a `running` record under
+    // a pid that no longer exists, heartbeat gone — exactly what kill -9
+    // leaves on disk.
+    let victim = children[0].train.run_dir.clone().unwrap();
+    let mut rec = Registry::load(&victim).unwrap().unwrap();
+    rec.status = RunStatus::Running;
+    rec.host = fsio::hostname();
+    rec.pid = 4_294_900_000; // above Linux PID_MAX_LIMIT: never a live pid
+    rec.started_ms = rec.started_ms.saturating_sub(3_600_000);
+    rec.ended_ms = 0;
+    reg.write(&rec).unwrap();
+    let _ = std::fs::remove_file(Path::new(&victim).join("heartbeat.json"));
+    let views = snapshot(&reg).unwrap();
+    let orphan = views.iter().find(|v| v.rec.run_dir == victim).unwrap();
+    assert_eq!(orphan.derived(fsio::now_ms()), DerivedStatus::Stale);
+
+    // Phase 2: double the budget and re-invoke. The orphan is reclaimed
+    // (a `killed` transition lands in the event log) and all four
+    // children resume from their phase-1 checkpoints instead of
+    // retraining from scratch.
+    let children = sweep_spec(&dir, 2048).expand_grid().unwrap();
+    let outcomes = sweep::run_resumable(&reg, &children, 2, |_| {}).unwrap();
+    for o in &outcomes {
+        assert!(o.resumed, "{} should resume, not retrain", o.label);
+        match &o.status {
+            ChildStatus::Done(Some(r)) => assert_eq!(r.global_step, 2048, "{}", o.label),
+            other => panic!("{}: {other:?}", o.label),
+        }
+    }
+    let recs = reg.list().unwrap();
+    assert_eq!(recs.len(), 4, "one record per child, no duplicates");
+    for r in &recs {
+        assert_eq!(r.status, RunStatus::Done, "{}", r.run_dir);
+        assert_eq!(r.attempt, 2, "{}", r.run_dir);
+        assert_eq!(r.total_steps, 2048, "budget extension absorbed into the record");
+        assert!(r.checkpoint.is_some(), "{}", r.run_dir);
+        assert_eq!(r.metrics.as_ref().unwrap().global_step, 2048, "{}", r.run_dir);
+    }
+    let index = std::fs::read_to_string(reg.index_path()).unwrap();
+    assert!(index.contains("\"killed\""), "orphan reclaim must be logged:\n{index}");
+
+    // Phase 3: same budget again — everything skips, nothing retrains,
+    // attempts stay where they were.
+    let outcomes = sweep::run_resumable(&reg, &children, 2, |_| {}).unwrap();
+    for o in &outcomes {
+        match &o.status {
+            ChildStatus::Skipped(why) => assert!(why.contains("at budget"), "{why}"),
+            other => panic!("{}: {other:?}", o.label),
+        }
+    }
+    let recs = reg.list().unwrap();
+    assert!(recs.iter().all(|r| r.status == RunStatus::Done && r.attempt == 2));
+}
+
+#[test]
+fn a_panicking_child_fails_alone_and_retries_clean() {
+    let dir = temp_dir("panic_isolation");
+    let reg = Registry::new(dir.join("registry"));
+    let children = sweep_spec(&dir, 1).expand_grid().unwrap();
+    let victim = children
+        .iter()
+        .find_map(|c| {
+            let d = c.train.run_dir.clone().unwrap();
+            d.ends_with("seed=2+train.lr=0.003").then_some(d)
+        })
+        .unwrap();
+
+    // The injection hook matches a substring of the trainer's run dir;
+    // the victim's absolute path is unique to this test's temp tree, so
+    // trainers running concurrently in sibling tests never trip it.
+    // (This is the only test in the binary that touches the hook — the
+    // env map is process-global.)
+    std::env::set_var("PUFFER_TEST_TRAIN_PANIC", &victim);
+    let mut events = 0usize;
+    let outcomes = sweep::run_resumable(&reg, &children, 2, |_| events += 1).unwrap();
+    assert_eq!(events, 4, "every child reports even when one panics");
+    let failed: Vec<_> = outcomes.iter().filter(|o| o.failed()).collect();
+    assert_eq!(failed.len(), 1, "exactly the injected child fails");
+    assert_eq!(failed[0].run_dir, victim);
+    match &failed[0].status {
+        ChildStatus::Failed(msg) => {
+            assert!(msg.contains("panicked"), "{msg}");
+            assert!(msg.contains("PUFFER_TEST_TRAIN_PANIC"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    let recs = reg.list().unwrap();
+    assert_eq!(recs.len(), 4);
+    assert_eq!(recs.iter().filter(|r| r.status == RunStatus::Done).count(), 3);
+    let failed_rec = recs.iter().find(|r| r.status == RunStatus::Failed).unwrap();
+    assert_eq!(failed_rec.run_dir, victim);
+    assert!(failed_rec.error.as_deref().unwrap().contains("panicked"));
+
+    // Disarm the hook and re-invoke: the at-budget siblings skip, the
+    // failed child retrains, and the registry converges to four `done`
+    // records.
+    std::env::set_var("PUFFER_TEST_TRAIN_PANIC", "::disarmed::");
+    let outcomes = sweep::run_resumable(&reg, &children, 2, |_| {}).unwrap();
+    let done: Vec<_> = outcomes
+        .iter()
+        .filter(|o| matches!(o.status, ChildStatus::Done(Some(_))))
+        .collect();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].run_dir, victim);
+    assert_eq!(
+        outcomes.iter().filter(|o| matches!(o.status, ChildStatus::Skipped(_))).count(),
+        3
+    );
+    let recs = reg.list().unwrap();
+    assert!(recs.iter().all(|r| r.status == RunStatus::Done), "{recs:?}");
+    assert_eq!(recs.iter().find(|r| r.run_dir == victim).unwrap().attempt, 2);
+}
+
+#[test]
+fn process_mode_sweep_is_reinvocable_and_ps_reports_the_fleet() {
+    let dir = temp_dir("process_mode");
+    let root = dir.join("registry");
+    let spec = sweep_spec(&dir, 1);
+    let spec_path = dir.join("sweep.toml");
+    std::fs::write(&spec_path, spec.to_toml().unwrap()).unwrap();
+    let exe = env!("CARGO_BIN_EXE_puffer");
+
+    let sweep_cmd = || {
+        std::process::Command::new(exe)
+            .args(["sweep", spec_path.to_str().unwrap(), "--processes=2"])
+            .output()
+            .unwrap()
+    };
+    let out = sweep_cmd();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(
+        out.status.success(),
+        "sweep failed:\nstdout:\n{stdout}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(stdout.matches("[done]").count(), 4, "{stdout}");
+
+    // Re-invoking the exact same command is a no-op: every at-budget
+    // child skips, and the summary says so.
+    let out = sweep_cmd();
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(out.status.success(), "{stdout}");
+    assert_eq!(stdout.matches("[skip]").count(), 4, "{stdout}");
+    assert!(stdout.contains("4 skipped"), "{stdout}");
+
+    // `puffer ps --json` over the same registry root: four `done`
+    // records, one per run dir, each with a checkpoint and final
+    // metrics, plus the per-child artifacts on disk.
+    let ps = std::process::Command::new(exe)
+        .args(["ps", &format!("--runs.root={}", root.to_str().unwrap()), "--json"])
+        .output()
+        .unwrap();
+    assert!(ps.status.success(), "{}", String::from_utf8_lossy(&ps.stderr));
+    let text = String::from_utf8_lossy(&ps.stdout).to_string();
+    let json = Json::parse(&text).unwrap();
+    let items = json.as_arr().unwrap();
+    assert_eq!(items.len(), 4, "{text}");
+    let mut dirs = std::collections::BTreeSet::new();
+    for item in items {
+        assert_eq!(item.get("status").as_str(), Some("done"), "{text}");
+        assert_eq!(item.get("derived_status").as_str(), Some("done"), "{text}");
+        assert_eq!(item.get("attempt").as_f64(), Some(1.0), "{text}");
+        assert!(item.get("checkpoint").as_str().unwrap().ends_with("checkpoint.bin"), "{text}");
+        assert!(item.get("metrics").get("global_step").as_f64().unwrap() >= 1024.0, "{text}");
+        let run_dir = item.get("run_dir").as_str().unwrap();
+        assert!(dirs.insert(run_dir.to_string()), "duplicate run dir: {text}");
+        assert!(Path::new(run_dir).join("child.log").is_file(), "{run_dir}");
+        assert!(Path::new(run_dir).join("spec.toml").is_file(), "{run_dir}");
+    }
+
+    // The human-readable table renders the same states.
+    let ps = std::process::Command::new(exe)
+        .args(["ps", &format!("--runs.root={}", root.to_str().unwrap())])
+        .output()
+        .unwrap();
+    assert!(ps.status.success());
+    let table = String::from_utf8_lossy(&ps.stdout).to_string();
+    assert!(table.starts_with("STATUS"), "{table}");
+    assert_eq!(table.matches("\ndone").count(), 4, "{table}");
+}
+
+#[test]
+fn ps_flags_an_orphaned_running_record_as_stale() {
+    let dir = temp_dir("stale_orphan");
+    let reg = Registry::new(dir.join("registry"));
+    let run_dir = dir.join("run").to_str().unwrap().to_string();
+    let now = fsio::now_ms();
+    let rec = RunRecord {
+        run_dir: run_dir.clone(),
+        label: "run".into(),
+        env: "ocean/bandit".into(),
+        seed: 1,
+        total_steps: 8192,
+        spec_fingerprint: String::new(),
+        status: RunStatus::Running,
+        attempt: 1,
+        host: fsio::hostname(),
+        pid: 4_294_900_000, // above Linux PID_MAX_LIMIT: never a live pid
+        created_ms: now.saturating_sub(120_000),
+        started_ms: now.saturating_sub(90_000),
+        ended_ms: 0,
+        exit_code: None,
+        error: None,
+        checkpoint: None,
+        metrics: None,
+    };
+    std::fs::create_dir_all(&run_dir).unwrap();
+    reg.write(&rec).unwrap();
+
+    let views = snapshot(&reg).unwrap();
+    assert_eq!(views.len(), 1);
+    assert_eq!(views[0].derived(now), DerivedStatus::Stale);
+    let table = ps_table(&views, now);
+    assert!(table.starts_with("STATUS"), "{table}");
+    assert!(table.contains("stale"), "{table}");
+    let frame = top_frame(&views, now);
+    assert!(frame.contains("1 stale"), "{frame}");
+    assert!(frame.contains(&run_dir), "a stale orphan stays on the in-flight board: {frame}");
+}

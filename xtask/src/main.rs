@@ -42,6 +42,7 @@ const FORBID_UNSAFE: &[&str] = &[
     "rust/src/emulation/mod.rs",
     "rust/src/envs/mod.rs",
     "rust/src/policy/mod.rs",
+    "rust/src/runs/mod.rs",
     "rust/src/runspec.rs",
     "rust/src/serve/mod.rs",
     "rust/src/spaces/mod.rs",
