@@ -1,4 +1,4 @@
-.PHONY: artifacts fixtures test bench bench-all loom miri tsan lint
+.PHONY: artifacts fixtures test bench bench-py bench-all loom miri tsan lint develop-py test-py
 
 # AOT-lower every env spec to HLO text + manifest (needed only for the
 # `pjrt` feature; the default native backend needs nothing).
@@ -7,28 +7,37 @@ artifacts:
 
 # Regenerate the NativeBackend parity fixtures from the JAX reference.
 fixtures:
-	cd python && python -m compile.gen_fixtures --out ../rust/tests/fixtures
+	cd python && python -m compile.gen_fixtures --out ../crates/puffer-train/tests/fixtures
 
-# Tier-1 verification.
+# Tier-1 verification (builds and tests every workspace crate:
+# puffer-core, puffer-train, puffer-py's pure-Rust bridge, xtask).
 test:
 	cargo build --release && cargo test -q
+
+# Build the Python extension into the active venv, then run the
+# binding tests (they skip themselves if the module isn't built).
+develop-py:
+	maturin develop --release --features python
+
+test-py:
+	cd python && python -m pytest tests/test_bindings.py -q
 
 # Exhaustive model checking of the cross-thread protocols: the
 # crate::sync facade swaps to loom's instrumented primitives under
 # --cfg loom, and tests/loom_models.rs explores every interleaving of
 # the slab handoff, shutdown, snapshot, rotation, and reset-seed
-# protocols (see rust/CONCURRENCY.md). Release profile: loom's state
-# exploration is CPU-bound, and the debug-only slab sentinel must stay
-# out of the modeled state space.
+# protocols (see CONCURRENCY.md). Release profile:
+# loom's state exploration is CPU-bound, and the debug-only slab
+# sentinel must stay out of the modeled state space.
 loom:
 	RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
-		cargo test --release -p pufferlib --test loom_models
+		cargo test --release -p puffer-train --test loom_models
 
 # Miri over the unsafe-adjacent lib tests (slab windows + sentinel,
 # queue, snapshot): undefined behavior (aliasing, leaks, invalid
 # reads) fails the lane. Scoped — full-crate Miri is far too slow.
 miri:
-	cargo +nightly miri test -p pufferlib --lib -- \
+	cargo +nightly miri test -p puffer-core --lib -- \
 		sync:: vector::shared policy::snapshot
 
 # ThreadSanitizer over the integration suites that actually thread:
@@ -36,7 +45,7 @@ miri:
 # rust-src (build-std instruments std too).
 tsan:
 	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
-		cargo +nightly test -p pufferlib -Zbuild-std \
+		cargo +nightly test -p puffer-train -Zbuild-std \
 		--target x86_64-unknown-linux-gnu \
 		--test pipeline --test vector_semantics
 
@@ -49,16 +58,23 @@ lint:
 # Vector throughput bench (paper Table 2 + the W1 wrapper-overhead
 # cell), the pipelined-vs-serial trainer bench (P2), the per-
 # architecture policy fwd/bwd bench (P3), the RunSpec-construction
-# microbench (R1), and the inference-serving latency bench (S1);
-# write machine-readable results to BENCH_vector.json /
-# BENCH_train.json / BENCH_policy.json / BENCH_runspec.json /
-# BENCH_serve.json.
+# microbench (R1), the inference-serving latency bench (S1), and the
+# real Python-driven puffer-vs-Gymnasium comparison (needs the wheel:
+# `make develop-py`); write machine-readable results to
+# BENCH_vector.json / BENCH_train.json / BENCH_policy.json /
+# BENCH_runspec.json / BENCH_serve.json / BENCH_pybind.json.
 bench:
 	PUFFER_BENCH_JSON=BENCH_vector.json cargo bench --bench vectorization
 	PUFFER_BENCH_JSON=BENCH_train.json cargo bench --bench train_pipeline
 	PUFFER_BENCH_JSON=BENCH_policy.json cargo bench --bench policy_forward
 	PUFFER_BENCH_JSON=BENCH_runspec.json cargo bench --bench runspec
 	PUFFER_BENCH_JSON=BENCH_serve.json cargo bench --bench serve_latency
+	$(MAKE) bench-py
+
+# The puffer-py side alone: Rust vectorizer through the zero-copy
+# Python adapter vs gymnasium.vector.SyncVectorEnv, same workload.
+bench-py:
+	PUFFER_BENCH_JSON=BENCH_pybind.json python examples/python/bench_vec.py
 
 # Every bench target.
 bench-all:

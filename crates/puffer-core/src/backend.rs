@@ -1,0 +1,41 @@
+//! Plain-data backend configuration — the kernel-path selector the
+//! `train.kernels` spec key parses into. The backends themselves
+//! (`NativeBackend`, the PJRT path, the kernel tree) live in
+//! `puffer-train`, which re-exports this type under
+//! `backend::KernelPath` / `backend::kernels::KernelPath`.
+
+// Plain data; no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+/// Which kernel implementation the backend dispatches to (see
+/// `puffer-train`'s `backend::kernels` module docs). Selected per run
+/// via `train.kernels` / `--train.kernels`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// Bit-exact scalar reference kernels (the pre-kernel-module math).
+    Scalar,
+    /// Lane-tiled, multithreaded kernels (tolerance-validated).
+    #[default]
+    Simd,
+}
+
+impl std::str::FromStr for KernelPath {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelPath::Scalar),
+            "simd" => Ok(KernelPath::Simd),
+            // ALLOC-OK: config-parse error path, not kernel code.
+            other => Err(format!("unknown kernel path '{other}' (scalar|simd)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Simd => "simd",
+        })
+    }
+}

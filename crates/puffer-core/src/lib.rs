@@ -1,0 +1,69 @@
+//! `puffer-core` — the environment half of the PufferLib reproduction:
+//! structured spaces, the emulation layer that packs them into flat
+//! byte rows, the first-party env suite, allocation-free wrapper
+//! chains, the serial/multithreaded vectorizers, and the declarative
+//! [`RunSpec`](runspec::RunSpec) experiment currency.
+//!
+//! This crate is deliberately free of trainer, server, and kernel code:
+//! it is what the `puffer-py` Python bindings link (a cdylib wants the
+//! vectorizer, not the PPO loop), and what `puffer-train` builds the
+//! trainer/serve stack on top of. The boundary rule:
+//!
+//! - **Here**: anything needed to *describe* or *simulate* an
+//!   experiment — `Space`/`StructLayout`, `FlatEnv` emulation,
+//!   envs, wrappers, `VecEnv` vectorization, the `sync` facade, config
+//!   parsing, and `RunSpec` — including the standalone vectorizer path
+//!   [`build_venv`](runspec::RunSpec::build_venv).
+//! - **In `puffer-train`**: anything that *executes* one — backends and
+//!   kernels, the `Policy` runtime, the trainer/pipeline, checkpoints,
+//!   the run registry executors, `puffer serve`, and the CLI.
+//!
+//! So the spec layer stays self-contained, the plain-data config types
+//! whose *execution* lives upstream are defined here in thin mirror
+//! modules — [`train::TrainConfig`], [`serve::ServeConfig`],
+//! [`runs::RunsConfig`], [`backend::KernelPath`] — and re-exported by
+//! `puffer-train` under the same module paths.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`spaces`] | `Space`, `Value`, packed [`StructLayout`](spaces::StructLayout) rows |
+//! | [`emulation`] | `FlatEnv` byte-row contract, `PufferEnv`/`StructuredEnv` adapters |
+//! | [`envs`] | first-party suite (`ocean/*`, `classic/*`, `profile/*`) |
+//! | [`wrappers`] | `EnvSpec` = base env + allocation-free microwrapper chain |
+//! | [`vector`] | `VecEnv`: `Serial`, `Multiprocessing`, autotune, shared slabs |
+//! | [`sync`] | loom-swappable primitives (see `CONCURRENCY.md`) |
+//! | [`config`] | strict flat `key = value` parsing (TOML/YAML subsets) |
+//! | [`runspec`] | `RunSpec`: env × policy × vec × train × seed, TOML/JSON |
+//! | [`policy`] | `PolicySpec` architecture descriptions (resolution only) |
+//! | [`train`] / [`serve`] / [`runs`] / [`backend`] | plain-data config mirrors |
+//! | [`util`] | rng, seed derivation, json, stats, timers |
+
+pub mod backend;
+pub mod config;
+pub mod emulation;
+pub mod envs;
+pub mod policy;
+pub mod runs;
+pub mod runspec;
+pub mod serve;
+pub mod spaces;
+pub mod sync;
+pub mod train;
+pub mod util;
+pub mod vector;
+pub mod wrappers;
+
+pub mod prelude {
+    //! One-line imports for the common core surface.
+    pub use crate::emulation::{EpisodeStats, FlatEnv, PufferEnv, StructuredEnv};
+    pub use crate::policy::{ActionHead, PolicySpec, Recurrence};
+    pub use crate::runspec::RunSpec;
+    pub use crate::spaces::{Space, StructLayout, Value};
+    pub use crate::util::rng::Rng;
+    pub use crate::vector::{
+        Multiprocessing, Serial, StepBatch, VecBatch, VecConfig, VecEnv, VecSpec,
+    };
+    pub use crate::wrappers::{EnvSpec, Wrapper, WrapperSpec};
+}

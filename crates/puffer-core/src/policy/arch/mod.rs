@@ -1,0 +1,257 @@
+//! [`PolicySpec`] — the declarative policy-architecture description that
+//! is the construction currency for models, exactly as
+//! [`EnvSpec`](crate::wrappers::EnvSpec) is for environments.
+//!
+//! The paper's §3.4 model format is an encoder → recurrence → decoder
+//! *sandwich*: observations are unflattened inside the policy (per-leaf
+//! encoders resolved from the emulated [`StructLayout`]), a trunk MLP
+//! mixes the encoded leaves, an optional LSTM cell sits between hidden
+//! state and heads (recurrence is a flag, not a second model), and a
+//! unified action head covers MultiDiscrete logits plus a declared
+//! quantized-continuous grid ([`ActionHead::Quantized`]). Native
+//! continuous (Gaussian) heads are ROADMAP item 4 and rejected with an
+//! actionable error at spec parse time.
+//!
+//! A spec is plain data: cloneable, comparable, and embedded in
+//! checkpoint keys ([`ResolvedPolicy::key_fragment`]) so parameters never
+//! silently restore across architectures. [`ResolvedPolicy`] is the spec
+//! bound to a concrete observation layout + action dims — what
+//! `puffer-train`'s `NativeBackend` builds its forward *and backward*
+//! passes from.
+
+mod resolved;
+
+pub use resolved::{ArchRanges, ResolvedPolicy, TrunkSegment};
+
+/// Default trunk width (matches `python/compile/model.py::HIDDEN`).
+pub const DEFAULT_HIDDEN: usize = 128;
+
+/// Token leaves wider than this stay raw even when `embed_dim > 0`: an
+/// embedding table per 10⁶-glyph vocabulary would dominate the parameter
+/// vector without a hand-written spec, so resolution refuses silently
+/// huge tables.
+pub const MAX_EMBED_VOCAB: usize = 4096;
+
+/// Envs whose reference spec (aot.py ENV_SPECS) is recurrent: their
+/// default [`PolicySpec`] carries an LSTM stage. Accepts a full
+/// [`EnvSpec`](crate::wrappers::EnvSpec) key — wrapper fragments after
+/// `+` are ignored.
+pub fn requires_recurrence(env_name: &str) -> bool {
+    const RECURRENT_REFERENCE_SPECS: &[&str] = &["ocean/memory"];
+    let base_name = env_name.split('+').next().unwrap_or(env_name);
+    RECURRENT_REFERENCE_SPECS.contains(&base_name)
+}
+
+/// The recurrence stage of the sandwich.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Recurrence {
+    /// Feedforward: the trunk output feeds the heads directly.
+    None,
+    /// A fused-gate LSTM cell between trunk and heads; `hidden` is the
+    /// recurrent state width (decode fan-in becomes `hidden`).
+    Lstm { hidden: usize },
+}
+
+/// The action head covering every emulated action space.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ActionHead {
+    /// Per-slot categorical logits over the env's MultiDiscrete dims —
+    /// the emulated form of every discrete space (a plain Discrete is
+    /// the 1-slot case).
+    Categorical,
+    /// The continuous path: the env's Box action space was emulated as a
+    /// quantization grid, so every slot must have exactly `bins`
+    /// choices. Same logits math, declared so the grid resolution is
+    /// part of the architecture key.
+    Quantized { bins: usize },
+}
+
+impl ActionHead {
+    /// The `policy.head` config-grammar form (`"categorical"` or
+    /// `"quantized:<bins>"`) — what [`crate::config::policy_config`]
+    /// parses and what RunSpec serialization emits.
+    pub fn config_value(&self) -> String {
+        match self {
+            ActionHead::Categorical => "categorical".to_string(),
+            ActionHead::Quantized { bins } => format!("quantized:{bins}"),
+        }
+    }
+}
+
+/// Declarative policy architecture: per-leaf encoders × trunk ×
+/// recurrence × action head.
+///
+/// The default spec reproduces the pre-PolicySpec model bit for bit
+/// (two-layer tanh trunk of width 128 over the raw flat observation,
+/// feedforward, categorical heads), so existing checkpoints and the
+/// `native_parity` golden fixtures are unaffected.
+///
+/// ```
+/// use pufferlib::policy::arch::{PolicySpec, Recurrence};
+/// let spec = PolicySpec::default().with_hidden(64).with_lstm(64).with_embed_dim(8);
+/// assert_eq!(spec.recurrence, Recurrence::Lstm { hidden: 64 });
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicySpec {
+    /// Trunk MLP width (two tanh layers).
+    pub hidden: usize,
+    /// Embedding width for Discrete / token (i32) observation leaves.
+    /// `0` (default) consumes every leaf as raw f32 — the flat path.
+    pub embed_dim: usize,
+    pub recurrence: Recurrence,
+    pub head: ActionHead,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        PolicySpec {
+            hidden: DEFAULT_HIDDEN,
+            embed_dim: 0,
+            recurrence: Recurrence::None,
+            head: ActionHead::Categorical,
+        }
+    }
+}
+
+impl PolicySpec {
+    /// The default architecture for a first-party env: feedforward —
+    /// except for recurrent reference specs ([`requires_recurrence`]),
+    /// which default to the LSTM sandwich so e.g. `ocean/memory` trains
+    /// out of the box on the native backend.
+    pub fn default_for(env_name: &str) -> Self {
+        let spec = PolicySpec::default();
+        if requires_recurrence(env_name) {
+            let hidden = spec.hidden;
+            spec.with_lstm(hidden)
+        } else {
+            spec
+        }
+    }
+
+    /// Set the trunk width.
+    pub fn with_hidden(mut self, hidden: usize) -> Self {
+        assert!(hidden >= 1, "trunk width must be >= 1");
+        self.hidden = hidden;
+        self
+    }
+
+    /// Sandwich an LSTM of state width `hidden` between trunk and heads.
+    pub fn with_lstm(mut self, hidden: usize) -> Self {
+        assert!(hidden >= 1, "LSTM width must be >= 1");
+        self.recurrence = Recurrence::Lstm { hidden };
+        self
+    }
+
+    /// Drop the recurrence stage (feedforward).
+    pub fn feedforward(mut self) -> Self {
+        self.recurrence = Recurrence::None;
+        self
+    }
+
+    /// Embed Discrete / token (i32) observation leaves at this width
+    /// (0 = raw f32 pass-through, the default).
+    pub fn with_embed_dim(mut self, dim: usize) -> Self {
+        self.embed_dim = dim;
+        self
+    }
+
+    /// Declare the quantized-continuous head (`bins` per action dim).
+    pub fn with_quantized_head(mut self, bins: usize) -> Self {
+        assert!(bins >= 2, "quantized head needs at least 2 bins");
+        self.head = ActionHead::Quantized { bins };
+        self
+    }
+
+    /// Recurrent state width (0 when feedforward).
+    pub fn state_dim(&self) -> usize {
+        match self.recurrence {
+            Recurrence::None => 0,
+            Recurrence::Lstm { hidden } => hidden,
+        }
+    }
+
+    pub fn is_recurrent(&self) -> bool {
+        self.state_dim() > 0
+    }
+
+    /// Fan-in of the actor/critic heads: the LSTM state when recurrent,
+    /// else the trunk output.
+    pub fn decode_in(&self) -> usize {
+        if self.is_recurrent() {
+            self.state_dim()
+        } else {
+            self.hidden
+        }
+    }
+
+    /// Stable `name=value` key components, in canonical order. Empty for
+    /// the default spec — default-spec checkpoint keys are unchanged
+    /// from before PolicySpec existed.
+    pub(crate) fn key_components(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.embed_dim > 0 {
+            out.push(format!("embed={}", self.embed_dim));
+        }
+        if self.hidden != DEFAULT_HIDDEN {
+            out.push(format!("h={}", self.hidden));
+        }
+        if let Recurrence::Lstm { hidden } = self.recurrence {
+            out.push(format!("lstm={hidden}"));
+        }
+        if let ActionHead::Quantized { bins } = self.head {
+            out.push(format!("quantized={bins}"));
+        }
+        out
+    }
+
+    /// Human-readable grammar form, e.g.
+    /// `"embed=8+h=128+lstm=128"`; `"mlp"` for the default.
+    pub fn key(&self) -> String {
+        let parts = self.key_components();
+        if parts.is_empty() {
+            "mlp".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_the_pre_refactor_architecture() {
+        let s = PolicySpec::default();
+        assert_eq!(s.hidden, 128);
+        assert_eq!(s.embed_dim, 0);
+        assert_eq!(s.recurrence, Recurrence::None);
+        assert_eq!(s.head, ActionHead::Categorical);
+        assert!(s.key_components().is_empty());
+        assert_eq!(s.key(), "mlp");
+        assert_eq!(s.state_dim(), 0);
+        assert_eq!(s.decode_in(), 128);
+    }
+
+    #[test]
+    fn recurrent_reference_envs_default_to_lstm() {
+        assert!(requires_recurrence("ocean/memory"));
+        assert!(requires_recurrence("ocean/memory+stack=4"));
+        assert!(!requires_recurrence("ocean/bandit"));
+        let mem = PolicySpec::default_for("ocean/memory");
+        assert_eq!(mem.recurrence, Recurrence::Lstm { hidden: 128 });
+        assert_eq!(mem.decode_in(), 128);
+        assert_eq!(PolicySpec::default_for("ocean/bandit"), PolicySpec::default());
+    }
+
+    #[test]
+    fn key_grammar_is_canonical() {
+        let s = PolicySpec::default()
+            .with_embed_dim(8)
+            .with_hidden(64)
+            .with_lstm(32)
+            .with_quantized_head(15);
+        assert_eq!(s.key(), "embed=8+h=64+lstm=32+quantized=15");
+        assert_eq!(PolicySpec::default().with_lstm(128).key(), "lstm=128");
+    }
+}

@@ -1,0 +1,15 @@
+//! Declarative policy architecture: [`PolicySpec`] and its resolution
+//! against an env's observation layout ([`ResolvedPolicy`]). This is
+//! the *description* half of the model — plain data the spec layer and
+//! checkpoint keys are built from. The runtime half (the `Policy`
+//! forward/sampling loop, `ParamSnapshot` publish/acquire) lives in
+//! `puffer-train`, which re-exports this module's contents under the
+//! same `policy::` path.
+
+// Architecture resolution is pure data plumbing; no unsafe belongs
+// here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+pub mod arch;
+
+pub use arch::{ActionHead, PolicySpec, Recurrence, ResolvedPolicy};

@@ -1,0 +1,78 @@
+//! Plain-data experiment-ops configuration — the `[runs]` section of a
+//! [`RunSpec`](crate::runspec::RunSpec). The registry, resumable
+//! sweeps, heartbeats, and `puffer ps`/`top` live in `puffer-train`,
+//! which re-exports this type under the same `runs::` path.
+
+// Plain data; no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+/// The strict `[runs]` section of a [`RunSpec`](crate::runspec::RunSpec)
+/// and the `--runs.*` CLI namespace. Plain data, TOML/JSON
+/// round-trippable like every other spec part; `None` on a spec means
+/// "defaults" — registry logging is always on for runs with a run dir.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunsConfig {
+    /// Registry root: where `index.jsonl` lives. Relative paths resolve
+    /// against the working directory, like `train.run_dir`.
+    pub root: String,
+    /// Heartbeat period in seconds. Staleness is judged at
+    /// `max(3 × period, 10 s)` (`heartbeat::stale_after_s` in
+    /// `puffer-train`).
+    pub heartbeat_s: f64,
+}
+
+impl Default for RunsConfig {
+    fn default() -> Self {
+        RunsConfig {
+            root: "runs".to_string(),
+            heartbeat_s: 5.0,
+        }
+    }
+}
+
+impl RunsConfig {
+    /// The flat `runs.*` pairs (serialization form, mirroring
+    /// [`ServeConfig`](crate::serve::ServeConfig)).
+    pub fn to_flat_pairs(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("root", self.root.clone()),
+            ("heartbeat_s", fmt_f64(self.heartbeat_s)),
+        ]
+    }
+
+    /// The effective config for a spec: its `[runs]` section, or
+    /// defaults when the section is absent.
+    pub fn for_spec(spec: &crate::runspec::RunSpec) -> RunsConfig {
+        spec.runs.clone().unwrap_or_default()
+    }
+}
+
+/// Format an f64 so it round-trips through the flat string form
+/// (integral values print without a fraction, like the JSON dumper).
+pub fn fmt_f64(x: f64) -> String {
+    if x == x.trunc() && x.is_finite() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_pairs_round_trip_defaults() {
+        let cfg = RunsConfig::default();
+        let pairs = cfg.to_flat_pairs();
+        assert_eq!(
+            pairs,
+            vec![
+                ("root", "runs".to_string()),
+                ("heartbeat_s", "5".to_string()),
+            ]
+        );
+        assert_eq!(fmt_f64(2.5), "2.5");
+        assert_eq!(fmt_f64(5.0), "5");
+    }
+}

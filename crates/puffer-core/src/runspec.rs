@@ -1,0 +1,1011 @@
+//! [`RunSpec`] — the top-level declarative experiment currency.
+//!
+//! The paper's pitch is one-line declarative construction: envs
+//! ([`EnvSpec`]), models ([`PolicySpec`]), and now the remaining half of
+//! every experiment — vectorization ([`VecSpec`]) and the train
+//! configuration — unified in a single serializable value:
+//!
+//! ```text
+//! RunSpec { env: EnvSpec, policy: Option<PolicySpec>, vec: VecSpec,
+//!           train: TrainConfig, seed }
+//! ```
+//!
+//! A RunSpec round-trips through TOML (`puffer run spec.toml`, the
+//! `examples/specs/` gallery) and JSON (embedded in checkpoints, so
+//! `puffer resume <ckpt>` / `puffer eval <ckpt>` need zero flags), with
+//! the same strict unknown-key/malformed-value errors as the
+//! `train.*`/`wrap.*` config layer. The single `seed` is the root from
+//! which env-reset, policy, shuffle, collector, and eval streams are
+//! derived via the documented split function
+//! ([`crate::util::seed::SeedPlan::from_root`]) — no more duplicated
+//! `VecConfig.seed` / `TrainConfig.seed` plumbing.
+//!
+//! ## File grammar (TOML subset)
+//!
+//! ```toml
+//! seed = 1                  # the run root seed
+//!
+//! [env]
+//! name = "ocean/memory"     # any first-party env name
+//! [env.wrap]                # canonical innermost-first knobs
+//! stack = 4
+//!
+//! [policy]                  # optional; omitted = the env's default arch
+//! hidden = 48
+//! lstm = true
+//!
+//! [vec]                     # serial | mt | auto (autotune, cached)
+//! mode = "mt"
+//! workers = 2
+//! batch = "half"
+//!
+//! [runs]                    # optional experiment-ops knobs
+//! root = "runs"             # registry root (index.jsonl lives here)
+//! heartbeat_s = 5
+//!
+//! [train]
+//! total_steps = 50000
+//! lr = 0.0025
+//! pipeline.depth = 1
+//!
+//! [grid]                    # optional sweep: any spec key -> values
+//! "train.lr" = [0.001, 0.0025]
+//! ```
+//!
+//! [`RunSpec::build_venv`] builds the standalone vectorizer (the path
+//! the Python bindings drive). Trainer construction lives one crate up:
+//! `puffer-train`'s `RunSpecExt` extension trait adds `build()`
+//! (returning the ready `Trainer`) and the deep `validate()` that
+//! resolves the policy against a backend. A `[grid]` section expands
+//! into child specs ([`RunSpec::expand_grid`]) executed by `puffer
+//! sweep` across a worker pool, each with its own metrics directory.
+
+// Declarative plumbing: no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+use crate::config::{self, FlatConfig};
+use crate::envs;
+use crate::policy::{PolicySpec, Recurrence};
+use crate::train::TrainConfig;
+use crate::util::json::Json;
+use crate::util::seed;
+use crate::vector::{VecEnv, VecSpec};
+use crate::wrappers::EnvSpec;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Train keys a RunSpec file may set directly. The remaining
+/// `TrainConfig` fields are derived: `env`/`wrappers` from `[env]`,
+/// `policy` from `[policy]`, `seed` from the top-level root,
+/// `num_workers`/`pool`/`vec` from `[vec]`.
+const RUN_TRAIN_KEYS: &[&str] = &[
+    "total_steps",
+    "lr",
+    "ent_coef",
+    "epochs",
+    "minibatches",
+    "norm_adv",
+    "anneal_lr",
+    "run_dir",
+    "log_every",
+    "kernels",
+];
+
+/// The declarative experiment: env × policy × vectorization × training
+/// × seed, plus an optional sweep grid. Plain data — cloneable,
+/// comparable, TOML/JSON-serializable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// Base env + wrapper chain. Only named (non-custom) specs with
+    /// canonical-order chains are serializable.
+    pub env: EnvSpec,
+    /// Policy architecture; `None` resolves the env's default.
+    pub policy: Option<PolicySpec>,
+    /// Vectorization: `serial`, `mt { … }`, or `auto`.
+    pub vec: VecSpec,
+    /// Train settings. Derived fields (`env`, `wrappers`, `policy`,
+    /// `seed`, `num_workers`, `pool`, `vec`) are overwritten from the
+    /// spec parts on every use — the spec parts are authoritative.
+    pub train: TrainConfig,
+    /// The run root seed; every RNG stream derives from it via
+    /// [`seed::split`].
+    pub seed: u64,
+    /// Inference-server settings (`puffer serve`); `None` for the
+    /// (common) specs that never serve. Inert during training.
+    pub serve: Option<crate::serve::ServeConfig>,
+    /// Experiment-ops settings: registry root + heartbeat period.
+    /// `None` means defaults (registry logging is always on for runs
+    /// with a run dir).
+    pub runs: Option<crate::runs::RunsConfig>,
+    /// Sweep grid: spec key → candidate values. Empty for a single run.
+    pub grid: BTreeMap<String, Vec<String>>,
+}
+
+impl RunSpec {
+    /// A spec over `env` with every other part defaulted.
+    pub fn new(env: EnvSpec) -> Self {
+        let mut spec = RunSpec {
+            env,
+            policy: None,
+            vec: VecSpec::default(),
+            train: TrainConfig::default(),
+            seed: TrainConfig::default().seed,
+            serve: None,
+            runs: None,
+            grid: BTreeMap::new(),
+        };
+        spec.normalize();
+        spec
+    }
+
+    pub fn with_policy(mut self, policy: PolicySpec) -> Self {
+        self.policy = Some(policy);
+        self.normalize();
+        self
+    }
+
+    pub fn with_vec(mut self, vec: VecSpec) -> Self {
+        self.vec = vec;
+        self.normalize();
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self.normalize();
+        self
+    }
+
+    pub fn with_serve(mut self, serve: crate::serve::ServeConfig) -> Self {
+        self.serve = Some(serve);
+        self.normalize();
+        self
+    }
+
+    pub fn with_runs(mut self, runs: crate::runs::RunsConfig) -> Self {
+        self.runs = Some(runs);
+        self.normalize();
+        self
+    }
+
+    /// Edit the train settings in place (derived fields are re-derived
+    /// afterwards, so only the real train knobs stick).
+    pub fn with_train(mut self, f: impl FnOnce(&mut TrainConfig)) -> Self {
+        f(&mut self.train);
+        self.normalize();
+        self
+    }
+
+    /// Re-derive the `train` fields owned by the spec parts, making
+    /// `env`/`policy`/`vec`/`seed` the single source of truth.
+    pub fn normalize(&mut self) {
+        self.train.env = self.env.name().to_string();
+        self.train.wrappers = self.env.wrappers().to_vec();
+        self.train.policy = self.policy.clone();
+        self.train.seed = self.seed;
+        self.train.vec = Some(self.vec.clone());
+        let (num_workers, pool) = match &self.vec {
+            VecSpec::Serial => (0, false),
+            VecSpec::Mt { workers, batch, .. } => {
+                (*workers, matches!(batch, crate::vector::VecBatch::Half))
+            }
+            VecSpec::Auto => (TrainConfig::default().num_workers, false),
+        };
+        self.train.num_workers = num_workers;
+        self.train.pool = pool;
+    }
+
+    /// The full [`TrainConfig`] this spec trains with (derived fields
+    /// filled in).
+    pub fn train_config(&self) -> TrainConfig {
+        let mut s = self.clone();
+        s.normalize();
+        s.train
+    }
+
+    // -- construction -------------------------------------------------------
+
+    /// Build just the vectorized env for `num_envs` env copies — the
+    /// standalone form of the `VecSpec::build` construction path, with
+    /// the env-reset seed derived from the run root. `auto` resolves
+    /// through the autotune cache under the spec's run dir.
+    pub fn build_venv(&self, num_envs: usize) -> Result<Box<dyn VecEnv>> {
+        self.vec
+            .resolved(&self.env, num_envs, self.train.run_dir.as_deref())?
+            .build(&self.env, num_envs, seed::split(self.seed, "env"))
+    }
+
+    // -- parsing ------------------------------------------------------------
+
+    /// Parse the TOML file grammar.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = config::parse_toml(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_parts(&doc.scalars, &doc.arrays)
+    }
+
+    /// Load and parse a TOML spec file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading spec {}", path.display()))?;
+        Self::from_toml_str(&text).with_context(|| format!("parsing spec {}", path.display()))
+    }
+
+    /// Parse the JSON form (what checkpoints embed).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut scalars = FlatConfig::new();
+        let mut arrays = BTreeMap::new();
+        flatten_json(j, "", &mut scalars, &mut arrays)?;
+        Self::from_parts(&scalars, &arrays)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("parsing RunSpec JSON: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Assemble from flat dotted keys (+ `grid.*` arrays) with strict
+    /// validation: unknown keys and malformed values are errors naming
+    /// the offending key.
+    pub fn from_parts(
+        scalars: &FlatConfig,
+        arrays: &BTreeMap<String, Vec<String>>,
+    ) -> Result<Self> {
+        for key in scalars.keys() {
+            validate_scalar_key(key)?;
+        }
+        for (key, values) in arrays {
+            let Some(target) = key.strip_prefix("grid.") else {
+                bail!(
+                    "key '{key}': array values are only valid under the [grid] \
+                     sweep section"
+                );
+            };
+            validate_scalar_key(target)
+                .with_context(|| format!("grid key '{key}' sweeps an invalid spec key"))?;
+            ensure!(!values.is_empty(), "grid key '{key}' has no values");
+        }
+        // Parse the root seed up front so a malformed value errors under
+        // its own name — the translated 'train.seed' alias below is the
+        // very key this grammar redirects users away from.
+        if let Some(v) = scalars.get("seed") {
+            v.parse::<u64>().map_err(|_| {
+                anyhow::anyhow!(
+                    "config key 'seed': cannot parse value '{v}' as a non-negative integer"
+                )
+            })?;
+        }
+        // Translate into the config-layer grammar and reuse its strict
+        // parsers for every section.
+        let mut flat = FlatConfig::new();
+        for (k, v) in scalars {
+            let translated = if k == "seed" {
+                "train.seed".to_string()
+            } else if let Some(rest) = k.strip_prefix("env.wrap.") {
+                format!("wrap.{rest}")
+            } else if k == "env.name" {
+                "train.env".to_string()
+            } else {
+                k.clone() // policy.* / vec.* / train.* pass through
+            };
+            flat.insert(translated, v.clone());
+        }
+        let train = config::train_config(&flat)?;
+        let name = scalars
+            .get("env.name")
+            .cloned()
+            .unwrap_or_else(|| TrainConfig::default().env);
+        ensure!(
+            envs::ALL_ENVS.contains(&name.as_str()),
+            "config key 'env.name': unknown first-party env '{name}' \
+             (known: {:?})",
+            envs::ALL_ENVS
+        );
+        let grid = arrays
+            .iter()
+            // PANIC: arrays keys are collected with the 'grid.' prefix present.
+            .map(|(k, v)| (k.strip_prefix("grid.").unwrap().to_string(), v.clone()))
+            .collect();
+        let serve = config::serve_config(&flat)?;
+        let runs = config::runs_config(&flat)?;
+        let mut spec = RunSpec {
+            env: EnvSpec::new(name).with_wrappers(train.wrappers.iter().cloned()),
+            policy: train.policy.clone(),
+            vec: train.vec.clone().unwrap_or_default(),
+            seed: train.seed,
+            train,
+            serve,
+            runs,
+            grid,
+        };
+        spec.normalize();
+        Ok(spec)
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// The flat dotted-key form (scalars + grid arrays) — the common
+    /// core of the TOML and JSON serializers. Errors when the spec is
+    /// not representable (custom base env, non-canonical wrapper
+    /// chain).
+    pub fn to_flat(&self) -> Result<(FlatConfig, BTreeMap<String, Vec<String>>)> {
+        ensure!(
+            self.env.is_named(),
+            "RunSpec with a custom base env ('{}') cannot be serialized — \
+             only first-party env names are expressible in a spec file",
+            self.env.name()
+        );
+        let s = {
+            let mut s = self.clone();
+            s.normalize();
+            s
+        };
+        let mut flat = FlatConfig::new();
+        let mut put = |k: &str, v: String| flat.insert(k.to_string(), v);
+        put("seed", s.seed.to_string());
+        put("env.name", s.env.name().to_string());
+        for (knob, value) in config::wrap_knob_pairs(s.env.wrappers())? {
+            put(&format!("env.wrap.{knob}"), value);
+        }
+        if let Some(p) = &s.policy {
+            put("policy.hidden", p.hidden.to_string());
+            match p.recurrence {
+                Recurrence::None => put("policy.lstm", "false".to_string()),
+                Recurrence::Lstm { hidden } => {
+                    put("policy.lstm", "true".to_string());
+                    put("policy.lstm_hidden", hidden.to_string());
+                }
+            };
+            put("policy.embed_dim", p.embed_dim.to_string());
+            put("policy.head", p.head.config_value());
+        }
+        for (knob, value) in s.vec.to_flat_pairs() {
+            put(&format!("vec.{knob}"), value);
+        }
+        if let Some(serve) = &s.serve {
+            for (knob, value) in serve.to_flat_pairs() {
+                put(&format!("serve.{knob}"), value);
+            }
+        }
+        if let Some(runs) = &s.runs {
+            for (knob, value) in runs.to_flat_pairs() {
+                put(&format!("runs.{knob}"), value);
+            }
+        }
+        let t = &s.train;
+        put("train.total_steps", t.total_steps.to_string());
+        put("train.lr", format!("{}", t.lr));
+        put("train.ent_coef", format!("{}", t.ent_coef));
+        put("train.epochs", t.epochs.to_string());
+        put("train.minibatches", t.minibatches.to_string());
+        put("train.norm_adv", t.norm_adv.to_string());
+        put("train.anneal_lr", t.anneal_lr.to_string());
+        put("train.log_every", t.log_every.to_string());
+        put("train.kernels", t.kernels.to_string());
+        put("train.pipeline.depth", t.pipeline_depth.to_string());
+        if let Some(dir) = &t.run_dir {
+            put("train.run_dir", dir.clone());
+        }
+        let arrays = s
+            .grid
+            .iter()
+            .map(|(k, v)| (format!("grid.{k}"), v.clone()))
+            .collect();
+        Ok((flat, arrays))
+    }
+
+    /// Canonical TOML text; `parse(to_toml(spec)) == spec`.
+    pub fn to_toml(&self) -> Result<String> {
+        let (flat, arrays) = self.to_flat()?;
+        // The TOML subset has no string escapes, so values carrying a
+        // quote or newline (only free-form strings like run_dir or grid
+        // entries can) are unrepresentable — error here naming the key
+        // instead of emitting a file that fails to re-parse.
+        for (k, v) in flat
+            .iter()
+            .chain(arrays.iter().flat_map(|(k, vs)| vs.iter().map(move |v| (k, v))))
+        {
+            ensure!(
+                !v.contains('"') && !v.contains('\n'),
+                "key '{k}': value {v:?} is not representable in the TOML subset \
+                 (no string escapes) — avoid '\"' and newlines"
+            );
+        }
+        let mut out = String::from("# puffer RunSpec\n");
+        let section_value = |out: &mut String, key: &str, value: &str| {
+            out.push_str(&format!("{key} = {}\n", config::toml_value(value)));
+        };
+        section_value(&mut out, "seed", &flat["seed"]);
+        // Emit sections in a fixed, readable order.
+        for section in ["env", "env.wrap", "policy", "vec", "serve", "runs", "train"] {
+            let prefix = format!("{section}.");
+            let keys: Vec<&String> = flat
+                .keys()
+                .filter(|k| {
+                    k.starts_with(&prefix)
+                        && !(section == "env" && k.starts_with("env.wrap."))
+                        && !(section == "train" && k.starts_with("train.pipeline."))
+                })
+                .collect();
+            if keys.is_empty() && section != "train" {
+                continue;
+            }
+            out.push_str(&format!("\n[{section}]\n"));
+            for k in keys {
+                section_value(&mut out, &k[prefix.len()..], &flat[k]);
+            }
+            if section == "train" {
+                // Dotted key inside [train]; the parser flattens it back
+                // to train.pipeline.depth.
+                section_value(
+                    &mut out,
+                    "pipeline.depth",
+                    &flat["train.pipeline.depth"],
+                );
+            }
+        }
+        if !arrays.is_empty() {
+            out.push_str("\n[grid]\n");
+            for (k, values) in &arrays {
+                let body: Vec<String> = values.iter().map(|v| config::toml_value(v)).collect();
+                out.push_str(&format!(
+                    "\"{}\" = [{}]\n",
+                    // PANIC: arrays keys are collected with the 'grid.' prefix present.
+                    k.strip_prefix("grid.").unwrap(),
+                    body.join(", ")
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Compact JSON form (checkpoint embedding);
+    /// `from_json(to_json(spec)) == spec`. Panics only if the spec is
+    /// unserializable — call [`to_flat`](Self::to_flat) first to check.
+    pub fn to_json(&self) -> Json {
+        let (flat, arrays) = self
+            .to_flat()
+            // PANIC: documented contract — to_json panics on unserializable specs.
+            .expect("unserializable RunSpec (custom env or non-canonical chain)");
+        let mut root = BTreeMap::new();
+        for (k, v) in &flat {
+            let path: Vec<&str> = k.split('.').collect();
+            insert_json_path(&mut root, &path, scalar_to_json(v));
+        }
+        for (k, values) in &arrays {
+            let path: Vec<&str> = k.split('.').collect();
+            let arr = Json::Arr(values.iter().map(|v| scalar_to_json(v)).collect());
+            insert_json_path(&mut root, &path, arr);
+        }
+        Json::Obj(root)
+    }
+
+    // -- sweeping -----------------------------------------------------------
+
+    /// Expand the `[grid]` section into one child spec per point of the
+    /// cartesian product. Children drop the grid, apply their overrides,
+    /// and get distinct `train.run_dir`s
+    /// (`<base run_dir or "runs/sweep">/<key=value+...>`) so metrics and
+    /// checkpoints never collide.
+    pub fn expand_grid(&self) -> Result<Vec<RunSpec>> {
+        ensure!(
+            !self.grid.is_empty(),
+            "this spec has no [grid] section to expand"
+        );
+        let (base_flat, _) = self.to_flat()?;
+        let base_dir = self
+            .train
+            .run_dir
+            .clone()
+            .unwrap_or_else(|| "runs/sweep".to_string());
+        let axes: Vec<(&String, &Vec<String>)> = self.grid.iter().collect();
+        let mut children = Vec::new();
+        let total: usize = axes.iter().map(|(_, vs)| vs.len()).product();
+        for point in 0..total {
+            let mut flat = base_flat.clone();
+            let mut pairs = Vec::new();
+            let mut label_parts = Vec::new();
+            let mut rem = point;
+            for (key, values) in &axes {
+                let v = &values[rem % values.len()];
+                rem /= values.len();
+                pairs.push(((*key).clone(), v.clone()));
+                label_parts.push(format!("{key}={}", v.replace('/', "-")));
+            }
+            // Through the same merge as CLI overrides, so a grid can
+            // sweep discriminant keys (vec.mode, policy.lstm) too.
+            merge_overrides(&mut flat, &pairs);
+            let label = label_parts.join("+");
+            flat.insert("train.run_dir".into(), format!("{base_dir}/{label}"));
+            let child = RunSpec::from_parts(&flat, &BTreeMap::new())
+                .with_context(|| format!("grid point '{label}'"))?;
+            children.push(child);
+        }
+        // Children run concurrently; a run-dir collision (duplicate grid
+        // values, or values that sanitize to the same label) would race
+        // two trainers onto one metrics.csv/checkpoint.bin.
+        let mut dirs = std::collections::BTreeSet::new();
+        for child in &children {
+            let dir = child.train.run_dir.as_deref().unwrap_or("");
+            ensure!(
+                dirs.insert(dir.to_string()),
+                "grid expansion produced two children with the same run dir \
+                 '{dir}' (duplicate values in a [grid] axis?) — sweep children \
+                 must have distinct metrics directories"
+            );
+        }
+        Ok(children)
+    }
+
+    /// Shallow structural validation: env name + serialization round
+    /// trip. The deep form (policy resolution against a backend, vec
+    /// satisfiability at the env's trainable batch) is
+    /// `RunSpecExt::validate` in `puffer-train`, which layers on top of
+    /// this.
+    pub fn validate_shallow(&self) -> Result<()> {
+        ensure!(
+            self.env.is_named() && envs::ALL_ENVS.contains(&self.env.name()),
+            "env '{}' is not a first-party env name",
+            self.env.name()
+        );
+        // Serialization round trip (also catches non-canonical chains).
+        let toml = self.to_toml()?;
+        let back = Self::from_toml_str(&toml).context("re-parsing the serialized spec")?;
+        let mut normalized = self.clone();
+        normalized.normalize();
+        ensure!(
+            back == normalized,
+            "spec does not round-trip through its own serialization"
+        );
+        Ok(())
+    }
+}
+
+/// Merge override pairs onto a serialized flat spec. Discriminant keys
+/// are applied first and drop the dependent knobs serialized under the
+/// old value — otherwise `--vec.mode=serial` would trip over the
+/// emitted `vec.workers`, and `--policy.lstm=false` over
+/// `policy.lstm_hidden` — so overrides (and grid points) compose onto
+/// any spec, including mode switches.
+pub fn merge_overrides(flat: &mut FlatConfig, pairs: &[(String, String)]) {
+    let is_discriminant =
+        |k: &str, v: &str| k == "vec.mode" || (k == "policy.lstm" && v == "false");
+    for (k, v) in pairs {
+        // A redundant same-value switch keeps the spec's knobs: only an
+        // actual mode change invalidates them.
+        if k == "vec.mode" && flat.get("vec.mode") != Some(v) {
+            for dep in ["vec.workers", "vec.batch", "vec.zero_copy", "vec.spin_budget"] {
+                flat.remove(dep);
+            }
+        } else if k == "policy.lstm" && v == "false" && flat.get("policy.lstm") != Some(v) {
+            flat.remove("policy.lstm_hidden");
+        } else {
+            continue;
+        }
+        flat.insert(k.clone(), v.clone());
+    }
+    for (k, v) in pairs {
+        if !is_discriminant(k, v) {
+            flat.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+/// Translate a CLI override key into the RunSpec key grammar:
+/// `wrap.*` → `env.wrap.*`, `pipeline.*` → `train.pipeline.*`; `seed`,
+/// `env.*`, `policy.*`, `vec.*`, and `train.*` pass through.
+pub fn translate_cli_key(key: &str) -> String {
+    if let Some(rest) = key.strip_prefix("wrap.") {
+        format!("env.wrap.{rest}")
+    } else if let Some(rest) = key.strip_prefix("pipeline.") {
+        format!("train.pipeline.{rest}")
+    } else {
+        key.to_string()
+    }
+}
+
+// -- JSON plumbing ----------------------------------------------------------
+
+/// Scalar string → typed JSON where the typed form round-trips exactly
+/// back to the same string (otherwise it stays a string).
+fn scalar_to_json(v: &str) -> Json {
+    if v == "true" {
+        return Json::Bool(true);
+    }
+    if v == "false" {
+        return Json::Bool(false);
+    }
+    if let Ok(n) = v.parse::<f64>() {
+        if n.is_finite() && Json::Num(n).dump() == v {
+            return Json::Num(n);
+        }
+    }
+    Json::Str(v.to_string())
+}
+
+fn insert_json_path(root: &mut BTreeMap<String, Json>, path: &[&str], value: Json) {
+    if path.len() == 1 {
+        root.insert(path[0].to_string(), value);
+        return;
+    }
+    let entry = root
+        .entry(path[0].to_string())
+        .or_insert_with(|| Json::Obj(BTreeMap::new()));
+    match entry {
+        Json::Obj(m) => insert_json_path(m, &path[1..], value),
+        _ => unreachable!("scalar and section share the key '{}'", path[0]),
+    }
+}
+
+/// Nested JSON → flat dotted keys (+ arrays), the inverse of
+/// [`RunSpec::to_json`].
+fn flatten_json(
+    j: &Json,
+    prefix: &str,
+    scalars: &mut FlatConfig,
+    arrays: &mut BTreeMap<String, Vec<String>>,
+) -> Result<()> {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let key = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten_json(v, &key, scalars, arrays)?;
+            }
+            Ok(())
+        }
+        Json::Arr(items) => {
+            let values = items
+                .iter()
+                .map(|i| match i {
+                    Json::Obj(_) | Json::Arr(_) | Json::Null => {
+                        bail!("key '{prefix}': arrays may only hold scalars")
+                    }
+                    other => Ok(json_scalar_string(other)),
+                })
+                .collect::<Result<Vec<_>>>()?;
+            arrays.insert(prefix.to_string(), values);
+            Ok(())
+        }
+        Json::Null => bail!("key '{prefix}': null is not a valid spec value"),
+        other => {
+            scalars.insert(prefix.to_string(), json_scalar_string(other));
+            Ok(())
+        }
+    }
+}
+
+fn json_scalar_string(j: &Json) -> String {
+    match j {
+        Json::Str(s) => s.clone(),
+        other => other.dump(),
+    }
+}
+
+/// Strictly validate one scalar key of the RunSpec grammar, with
+/// redirecting messages for keys that exist in the flat config grammar
+/// but are owned by another section here.
+fn validate_scalar_key(key: &str) -> Result<()> {
+    match key {
+        "seed" | "env.name" => return Ok(()),
+        "train.env" => bail!(
+            "config key 'train.env': in a RunSpec the env is the [env] \
+             section — set env.name instead"
+        ),
+        "train.seed" => bail!(
+            "config key 'train.seed': in a RunSpec the seed is the top-level \
+             'seed' key (the root every stream derives from)"
+        ),
+        "train.num_workers" | "train.pool" => bail!(
+            "config key '{key}': in a RunSpec vectorization is the [vec] \
+             section (mode = \"serial\" | \"mt\" | \"auto\", workers, batch, \
+             zero_copy, spin_budget)"
+        ),
+        _ => {}
+    }
+    if key.starts_with("train.wrap.") || key.starts_with("train.policy.") {
+        bail!(
+            "config key '{key}': in a RunSpec use the [env.wrap] / [policy] \
+             sections instead of the train.* aliases"
+        );
+    }
+    if key.starts_with("grid.") {
+        bail!("config key '{key}': grid entries must be arrays of values");
+    }
+    let known_namespace = key.starts_with("env.wrap.")
+        || key.starts_with("policy.")
+        || key.starts_with("vec.")
+        || key.starts_with("serve.")
+        || key.starts_with("runs.")
+        || key.starts_with("train.pipeline.")
+        || (key.strip_prefix("train.").is_some_and(|rest| RUN_TRAIN_KEYS.contains(&rest)));
+    if !known_namespace {
+        if let Some(rest) = key.strip_prefix("train.") {
+            bail!(
+                "unknown config key 'train.{rest}' (RunSpec train keys: \
+                 {RUN_TRAIN_KEYS:?}, plus pipeline.depth)"
+            );
+        }
+        bail!(
+            "unknown RunSpec key '{key}' (sections: seed, [env], [env.wrap], \
+             [policy], [vec], [serve], [runs], [train], [grid])"
+        );
+    }
+    // Namespaced keys get their suffix validation from the config-layer
+    // parsers (validate_keys / from_parts), which name the key.
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vector::VecBatch;
+
+    fn full_spec() -> RunSpec {
+        RunSpec::new(EnvSpec::new("ocean/spaces").clip_reward(1.0).stack(2))
+            .with_policy(
+                PolicySpec::default()
+                    .with_hidden(64)
+                    .with_embed_dim(8)
+                    .with_lstm(32),
+            )
+            .with_vec(VecSpec::Mt {
+                workers: 2,
+                batch: VecBatch::Half,
+                zero_copy: true,
+                spin_budget: 128,
+            })
+            .with_seed(42)
+            .with_train(|t| {
+                t.total_steps = 12_345;
+                t.lr = 0.0015;
+                t.ent_coef = 0.002;
+                t.epochs = 2;
+                t.minibatches = 4;
+                t.norm_adv = false;
+                t.anneal_lr = false;
+                t.pipeline_depth = 1;
+                t.log_every = 0;
+                t.run_dir = Some("runs/full".into());
+            })
+    }
+
+    #[test]
+    fn defaulted_spec_round_trips_toml_and_json() {
+        let spec = RunSpec::new(EnvSpec::new("ocean/bandit"));
+        let toml = spec.to_toml().unwrap();
+        assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+    }
+
+    #[test]
+    fn fully_overridden_spec_round_trips_toml_and_json() {
+        let mut spec = full_spec();
+        spec.grid
+            .insert("train.lr".into(), vec!["0.001".into(), "0.0025".into()]);
+        spec.grid
+            .insert("policy.hidden".into(), vec!["32".into(), "64".into()]);
+        let toml = spec.to_toml().unwrap();
+        assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+    }
+
+    #[test]
+    fn serve_section_round_trips_and_rejects_unknown_knobs() {
+        let serve = crate::serve::ServeConfig {
+            port: 9001,
+            max_batch: 32,
+            max_wait_us: 250,
+            session_ttl_s: 60,
+            threads: 2,
+        };
+        let spec = full_spec().with_serve(serve.clone());
+        let toml = spec.to_toml().unwrap();
+        assert!(toml.contains("\n[serve]\n"), "serve gets its own section:\n{toml}");
+        assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+
+        // Specs that never serve stay serve-less (no section emitted).
+        let plain = full_spec();
+        assert_eq!(plain.serve, None);
+        assert!(!plain.to_toml().unwrap().contains("[serve]"));
+
+        // A partial section pulls defaults for the rest.
+        let partial = RunSpec::from_toml_str(
+            "[env]\nname = \"ocean/bandit\"\n[serve]\nport = 8080\n",
+        )
+        .unwrap();
+        assert_eq!(
+            partial.serve,
+            Some(crate::serve::ServeConfig { port: 8080, ..Default::default() })
+        );
+
+        // Unknown serve knobs error naming the key.
+        let err = RunSpec::from_toml_str("[serve]\nprot = 7777\n")
+            .err()
+            .expect("typo'd serve key must be rejected")
+            .to_string();
+        assert!(err.contains("serve key 'prot'"), "got: {err}");
+    }
+
+    #[test]
+    fn runs_section_round_trips_and_rejects_unknown_knobs() {
+        let runs = crate::runs::RunsConfig {
+            root: "exp/registry".to_string(),
+            heartbeat_s: 2.5,
+        };
+        let spec = full_spec().with_runs(runs.clone());
+        let toml = spec.to_toml().unwrap();
+        assert!(toml.contains("\n[runs]\n"), "runs gets its own section:\n{toml}");
+        assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+
+        // Specs without ops overrides stay runs-less (no section emitted).
+        let plain = full_spec();
+        assert_eq!(plain.runs, None);
+        assert!(!plain.to_toml().unwrap().contains("[runs]"));
+
+        // A partial section pulls defaults for the rest.
+        let partial = RunSpec::from_toml_str(
+            "[env]\nname = \"ocean/bandit\"\n[runs]\nheartbeat_s = 1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            partial.runs,
+            Some(crate::runs::RunsConfig { heartbeat_s: 1.0, ..Default::default() })
+        );
+
+        // Unknown runs knobs error naming the key.
+        let err = RunSpec::from_toml_str("[runs]\nheart_beat = 5\n")
+            .err()
+            .expect("typo'd runs key must be rejected")
+            .to_string();
+        assert!(err.contains("runs key 'heart_beat'"), "got: {err}");
+    }
+
+    #[test]
+    fn spec_parts_are_authoritative_over_derived_train_fields() {
+        let spec = full_spec();
+        let tc = spec.train_config();
+        assert_eq!(tc.env, "ocean/spaces");
+        assert_eq!(tc.seed, 42);
+        assert_eq!(tc.wrappers.len(), 2);
+        assert_eq!(tc.vec, Some(spec.vec.clone()));
+        assert!(tc.pool, "half batch mirrors the legacy pool knob");
+        // Tampering with a derived field does not survive normalization.
+        let tampered = spec.with_train(|t| t.env = "ocean/bandit".into());
+        assert_eq!(tampered.train.env, "ocean/spaces");
+    }
+
+    #[test]
+    fn unknown_and_misplaced_keys_error_naming_the_key() {
+        for (toml, needle) in [
+            ("[env]\nname = \"ocean/bandit\"\n[train]\ntotl_steps = 5", "train.totl_steps"),
+            ("[train]\nenv = \"ocean/bandit\"", "train.env"),
+            ("[train]\nseed = 4", "train.seed"),
+            ("[train]\nnum_workers = 4", "train.num_workers"),
+            ("[train]\npool = true", "train.pool"),
+            ("[train.wrap]\nstack = 4", "train.wrap"),
+            ("[env]\nname = \"ocean/bandit\"\nstacc = 4", "env.stacc"),
+            ("[vec]\nmode = \"warp\"", "vec.mode"),
+            ("[env.wrap]\nstack = \"lots\"", "wrap.stack"),
+            ("[policy]\nhidden = \"wide\"", "policy.hidden"),
+            ("[env]\nname = \"atari/pong\"", "env.name"),
+            ("seed = banana", "config key 'seed'"),
+            ("seed = [1, 2]", "seed"),
+            ("[grid]\nlr = [0.1]", "grid key"),
+        ] {
+            let err = RunSpec::from_toml_str(toml)
+                .err()
+                .unwrap_or_else(|| panic!("'{toml}' should not parse"));
+            let chain = format!("{err:#}");
+            assert!(
+                chain.contains(needle),
+                "'{toml}': expected '{needle}' in '{chain}'"
+            );
+        }
+    }
+
+    #[test]
+    fn grid_expansion_covers_the_cartesian_product_with_distinct_dirs() {
+        let mut spec = RunSpec::new(EnvSpec::new("ocean/bandit")).with_train(|t| {
+            t.run_dir = Some("runs/grid_test".into());
+            t.total_steps = 1;
+        });
+        spec.grid
+            .insert("train.lr".into(), vec!["0.001".into(), "0.0025".into()]);
+        spec.grid
+            .insert("seed".into(), vec!["1".into(), "2".into()]);
+        let children = spec.expand_grid().unwrap();
+        assert_eq!(children.len(), 4);
+        let dirs: std::collections::BTreeSet<_> = children
+            .iter()
+            .map(|c| c.train.run_dir.clone().unwrap())
+            .collect();
+        assert_eq!(dirs.len(), 4, "run dirs must be distinct: {dirs:?}");
+        for c in &children {
+            assert!(c.grid.is_empty());
+            assert!(c.train.run_dir.as_ref().unwrap().starts_with("runs/grid_test/"));
+        }
+        // Both lr values and both seeds appear.
+        let lrs: std::collections::BTreeSet<_> =
+            children.iter().map(|c| format!("{}", c.train.lr)).collect();
+        assert_eq!(lrs.len(), 2);
+        let seeds: std::collections::BTreeSet<_> = children.iter().map(|c| c.seed).collect();
+        assert_eq!(seeds, [1u64, 2].into_iter().collect());
+        // No grid → expansion is an error, not an empty vec.
+        assert!(RunSpec::new(EnvSpec::new("ocean/bandit")).expand_grid().is_err());
+        // Duplicate axis values would collide two children onto one run
+        // dir — rejected instead of racing their metrics/checkpoints.
+        let mut dup = RunSpec::new(EnvSpec::new("ocean/bandit"));
+        dup.grid.insert("seed".into(), vec!["1".into(), "1".into()]);
+        let err = dup.expand_grid().unwrap_err().to_string();
+        assert!(err.contains("same run dir"), "{err}");
+    }
+
+    #[test]
+    fn validate_shallow_accepts_good_specs_and_rejects_bad_names() {
+        RunSpec::new(EnvSpec::new("ocean/bandit")).validate_shallow().unwrap();
+        let err = RunSpec::new(EnvSpec::new("atari/pong"))
+            .validate_shallow()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("first-party"), "{err}");
+    }
+
+    #[test]
+    fn overrides_and_grids_can_switch_discriminant_modes() {
+        // Switching vec.mode drops the old mode's dependent knobs
+        // instead of tripping over them.
+        let spec = full_spec();
+        let (mut flat, arrays) = spec.to_flat().unwrap();
+        merge_overrides(&mut flat, &[("vec.mode".into(), "serial".into())]);
+        let back = RunSpec::from_parts(&flat, &arrays).unwrap();
+        assert_eq!(back.vec, VecSpec::Serial);
+        // A redundant same-mode override keeps the spec's knobs.
+        let (mut flat, arrays) = spec.to_flat().unwrap();
+        merge_overrides(&mut flat, &[("vec.mode".into(), "mt".into())]);
+        let back = RunSpec::from_parts(&flat, &arrays).unwrap();
+        assert_eq!(back.vec, spec.vec);
+        // Turning the LSTM off drops the serialized lstm_hidden.
+        let (mut flat, arrays) = spec.to_flat().unwrap();
+        merge_overrides(&mut flat, &[("policy.lstm".into(), "false".into())]);
+        let back = RunSpec::from_parts(&flat, &arrays).unwrap();
+        assert!(!back.policy.unwrap().is_recurrent());
+        // A grid can sweep the discriminant itself.
+        let mut gridded = RunSpec::new(EnvSpec::new("ocean/bandit"));
+        gridded
+            .grid
+            .insert("vec.mode".into(), vec!["serial".into(), "mt".into()]);
+        let children = gridded.expand_grid().unwrap();
+        assert_eq!(children.len(), 2);
+        assert!(children.iter().any(|c| c.vec == VecSpec::Serial));
+        assert!(children.iter().any(|c| matches!(c.vec, VecSpec::Mt { .. })));
+    }
+
+    #[test]
+    fn toml_rejects_unrepresentable_values_but_json_carries_them() {
+        let spec = RunSpec::new(EnvSpec::new("ocean/bandit"))
+            .with_train(|t| t.run_dir = Some("runs/a\"b".into()));
+        let err = spec.to_toml().unwrap_err().to_string();
+        assert!(err.contains("train.run_dir"), "{err}");
+        // The JSON form has real escapes, so the same spec round-trips.
+        assert_eq!(RunSpec::from_json(&spec.to_json()).unwrap(), spec);
+    }
+
+    #[test]
+    fn cli_key_translation() {
+        assert_eq!(translate_cli_key("wrap.stack"), "env.wrap.stack");
+        assert_eq!(translate_cli_key("pipeline.depth"), "train.pipeline.depth");
+        assert_eq!(translate_cli_key("train.lr"), "train.lr");
+        assert_eq!(translate_cli_key("seed"), "seed");
+        assert_eq!(translate_cli_key("vec.mode"), "vec.mode");
+    }
+}

@@ -1,0 +1,59 @@
+//! Plain-data serving configuration — the `[serve]` section of a
+//! [`RunSpec`](crate::runspec::RunSpec). The inference server itself
+//! (`puffer serve`: batcher shards, sessions, protocol) lives in
+//! `puffer-train`, which re-exports this type under the same `serve::`
+//! path.
+
+// Plain data; no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+/// The strict `[serve]` section of a [`RunSpec`](crate::runspec::RunSpec)
+/// and the `--serve.*` CLI namespace. Plain data, TOML/JSON
+/// round-trippable like every other spec part.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// TCP port to bind on 127.0.0.1. `0` binds an ephemeral port (the
+    /// selftest and tests always use this).
+    pub port: u16,
+    /// Row budget: a batch is dispatched as soon as this many requests
+    /// are queued.
+    pub max_batch: usize,
+    /// Time budget: a non-empty batch is dispatched once this many
+    /// microseconds have passed since its first request, even if
+    /// `max_batch` was not reached. `0` dispatches whatever is queued.
+    pub max_wait_us: u64,
+    /// Idle sessions older than this many seconds are evicted (their
+    /// recurrent state is dropped; a later request under the same id
+    /// starts fresh).
+    pub session_ttl_s: u64,
+    /// Number of batcher shards. Sessions are pinned to a shard
+    /// (`session_id % threads`), so per-session request order is
+    /// preserved; batching happens independently per shard.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 7777,
+            max_batch: 64,
+            max_wait_us: 500,
+            session_ttl_s: 300,
+            threads: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Canonical `(knob, value)` pairs for the `[serve]` section — the
+    /// inverse of [`crate::config::serve_config`].
+    pub fn to_flat_pairs(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("port", self.port.to_string()),
+            ("max_batch", self.max_batch.to_string()),
+            ("max_wait_us", self.max_wait_us.to_string()),
+            ("session_ttl_s", self.session_ttl_s.to_string()),
+            ("threads", self.threads.to_string()),
+        ]
+    }
+}

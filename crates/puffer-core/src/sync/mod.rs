@@ -1,0 +1,96 @@
+//! The synchronization facade every cross-thread protocol in this crate
+//! is written against — and the seam that makes those protocols
+//! **model-checkable**.
+//!
+//! Under a normal build these are straight re-exports of `std` types
+//! with zero overhead. Under `RUSTFLAGS="--cfg loom"` (the `make loom`
+//! lane) they swap to [loom](https://docs.rs/loom)'s instrumented
+//! doubles, and `crates/puffer-train/tests/loom_models.rs` exhaustively explores every
+//! interleaving of the protocols built on top:
+//!
+//! - the worker↔driver slab-ownership handoff
+//!   ([`Flag`](crate::vector::shared::Flag)),
+//! - the learner→collector parameter publish/acquire
+//!   (`ParamSnapshot` in `puffer-train`),
+//! - the rotating rollout-buffer exchange ([`queue`]),
+//! - shutdown/reset-seed delivery
+//!   ([`Multiprocessing`](crate::vector::Multiprocessing)).
+//!
+//! The rules for which primitive to use where, and the memory-ordering
+//! contract each protocol relies on, live in `CONCURRENCY.md`.
+//! New cross-thread state must go through this module (not `std::sync`
+//! directly) so it stays inside the model-checked surface; the
+//! exceptions, documented there, are `std::sync::mpsc` for the
+//! fire-and-forget info channel and the debug-only aliasing sentinel's
+//! internal mutex.
+
+// The facade re-exports and builds on safe primitives only; the unsafe
+// surface stays in vector/ (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+pub mod queue;
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Atomics with the same paths under std and loom.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Busy-wait pause inside a spin loop. Under loom this is a yield — a
+/// scheduling point the model checker uses to bound spin exploration.
+#[inline]
+pub fn spin_loop_hint() {
+    #[cfg(not(loom))]
+    std::hint::spin_loop();
+    #[cfg(loom)]
+    loom::thread::yield_now();
+}
+
+/// Give the core away (oversubscribed hosts, long waits).
+#[inline]
+pub fn yield_now() {
+    #[cfg(not(loom))]
+    std::thread::yield_now();
+    #[cfg(loom)]
+    loom::thread::yield_now();
+}
+
+/// Lock a facade mutex, recovering from poisoning.
+///
+/// Every mutex behind this facade guards state whose invariants hold
+/// between (not within) critical sections that cannot panic mid-update,
+/// so a poisoned lock only means *some other* thread panicked — its
+/// protected data is still consistent and the caller may proceed. This
+/// keeps a collector-thread panic from cascading into an opaque learner
+/// panic; the original error still surfaces through the pipeline's
+/// channel/join paths.
+#[inline]
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock");
+        })
+        .join();
+        assert_eq!(*lock_unpoisoned(&m), 7, "state intact despite poison");
+    }
+}

@@ -1,0 +1,148 @@
+//! Plain-data train configuration and reports — the `[train]` section
+//! of a [`RunSpec`](crate::runspec::RunSpec) and the result currencies
+//! every executor returns.
+//!
+//! The training *loop* itself (Clean PuffeRL: the experience pipeline,
+//! checkpoints, the `Trainer`) lives in `puffer-train`, which
+//! re-exports these types under the same `train::` path. Defining the
+//! config here keeps the spec layer self-contained: `RunSpec` parsing,
+//! serialization, and grid expansion — and therefore the Python
+//! bindings — never link trainer code.
+
+// Plain data; no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+use crate::policy::PolicySpec;
+use crate::vector::VecSpec;
+use crate::wrappers::WrapperSpec;
+
+/// Training configuration (Clean PuffeRL's YAML keys, as a struct; see
+/// [`crate::config`] for the file/CLI layer, and
+/// [`RunSpec`](crate::runspec::RunSpec) for the declarative experiment
+/// currency that assembles one of these from its `[train]` section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// First-party env name, e.g. "ocean/squared".
+    pub env: String,
+    /// Wrapper chain applied over the env, innermost first (the
+    /// `train.wrap.*` config keys / `--wrap.*` CLI overrides). The whole
+    /// pipeline — probe, backend spec, vectorizer slabs — sizes itself
+    /// from the wrapped geometry.
+    pub wrappers: Vec<WrapperSpec>,
+    /// Policy architecture (the `train.policy.*` config keys /
+    /// `--policy.*` CLI overrides). `None` (default) resolves the env's
+    /// default spec — feedforward, except recurrent reference envs,
+    /// which get the LSTM sandwich ([`PolicySpec::default_for`]). A
+    /// non-default spec becomes part of the backend/checkpoint key, so
+    /// parameters never cross architectures silently.
+    pub policy: Option<PolicySpec>,
+    /// Total environment interactions to train for.
+    pub total_steps: u64,
+    pub lr: f32,
+    pub ent_coef: f32,
+    /// PPO epochs per rollout segment.
+    pub epochs: usize,
+    /// Minibatches per epoch: the segment's agent rows are shuffled and
+    /// split into this many row-subset batches (1 = full batch, the
+    /// pre-pipeline behavior). Must divide `batch_roll`.
+    pub minibatches: usize,
+    /// Normalize advantages per minibatch (mean/var) inside the
+    /// surrogate loss. Standard PPO; on by default.
+    pub norm_adv: bool,
+    pub anneal_lr: bool,
+    pub seed: u64,
+    /// Worker threads for the vectorizer (0 = serial backend). Legacy
+    /// knob: ignored when [`TrainConfig::vec`] is set.
+    pub num_workers: usize,
+    /// EnvPool mode: recv half the envs per batch (M = 2N
+    /// double-buffering). Requires `num_workers >= 2`. Legacy knob:
+    /// ignored when [`TrainConfig::vec`] is set.
+    pub pool: bool,
+    /// Declarative vectorization ([`VecSpec`]: `serial`, `mt { … }`, or
+    /// `auto`). `None` (default) maps the legacy `num_workers`/`pool`
+    /// knobs through [`VecSpec::from_workers_pool`]. `auto` resolves
+    /// through the autotune cache under [`TrainConfig::run_dir`].
+    pub vec: Option<VecSpec>,
+    /// Experience-pipeline depth (`train.pipeline.depth` /
+    /// `--pipeline.depth`): 0 = serial loop; d ≥ 1 = a collector thread
+    /// runs up to d segments ahead of the learner over d + 1 rotating
+    /// buffers.
+    pub pipeline_depth: usize,
+    /// Optional run directory for metrics.csv + checkpoints.
+    pub run_dir: Option<String>,
+    /// Console log every n segments (0 = silent).
+    pub log_every: usize,
+    /// Kernel flavor for the native backend (`train.kernels` /
+    /// `--train.kernels`): `simd` (default) = lane-tiled multithreaded
+    /// kernels, `scalar` = the bit-exact reference path every
+    /// bit-identity pin runs against.
+    pub kernels: crate::backend::KernelPath,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            env: "ocean/squared".into(),
+            wrappers: Vec::new(),
+            policy: None,
+            total_steps: 30_000,
+            lr: 2.5e-3,
+            ent_coef: 0.01,
+            epochs: 4,
+            minibatches: 1,
+            norm_adv: true,
+            anneal_lr: true,
+            seed: 1,
+            num_workers: 2,
+            pool: false,
+            vec: None,
+            pipeline_depth: 0,
+            run_dir: None,
+            log_every: 5,
+            kernels: crate::backend::KernelPath::default(),
+        }
+    }
+}
+
+/// Final report from a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub global_step: u64,
+    /// End-to-end env steps per wall-clock second.
+    pub sps: f64,
+    /// Steps per second of *collection* alone (env stepping + rollout
+    /// inference, excluding stalls). Equals learner-side idle capacity
+    /// when it exceeds `sps`.
+    pub env_sps: f64,
+    /// Steps per second of *learning* alone (GAE + PPO epochs,
+    /// excluding stalls).
+    pub learn_sps: f64,
+    /// Seconds the collector spent stalled waiting for a free segment
+    /// buffer (pipelined mode; 0 when serial). High values → the learner
+    /// is the bottleneck: raise `pipeline.depth` or lower `epochs` /
+    /// `minibatches` cost.
+    pub collector_stall_s: f64,
+    /// Seconds the learner spent stalled waiting for a filled segment
+    /// (pipelined mode; 0 when serial). High values → collection is the
+    /// bottleneck: add env workers or enable `pool`.
+    pub learner_stall_s: f64,
+    /// Worst-case parameter staleness observed: how many published
+    /// updates the collector's snapshot lagged behind the learner when a
+    /// segment was consumed. 0 when serial; bounded by `pipeline_depth`
+    /// (the learner publishes before recycling each buffer).
+    pub max_param_staleness: u64,
+    pub mean_score: Option<f64>,
+    pub mean_return: Option<f64>,
+    pub episodes: usize,
+    pub last_loss: f32,
+    /// (global_step, mean_score) curve sampled once per segment.
+    pub score_curve: Vec<(u64, f64)>,
+}
+
+/// Report from an evaluation run.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub episodes: usize,
+    pub mean_score: Option<f64>,
+    pub mean_return: Option<f64>,
+}

@@ -1,0 +1,45 @@
+//! Reimplementations of the Gymnasium and SB3 vectorization *designs*,
+//! used as the comparison points for the paper's Table 2.
+//!
+//! These are faithful to the designs' documented structure — one env per
+//! worker, wait-for-all synchronization, channel (queue/pipe) signaling,
+//! per-message allocation, and the copy discipline each library uses — not
+//! to their Python constant factors. The paper's Table 2 differences come
+//! from exactly these design choices (scaling degradation above ~1000
+//! synchronizations/sec/core, straggler waits, extra copies), all of which
+//! reproduce in Rust; see EXPERIMENTS.md for measured shapes.
+//!
+//! These simulations keep Table 2 runnable without a Python toolchain,
+//! but they are no longer the only comparison: with the `puffer-py`
+//! bindings built, `examples/python/bench_vec.py` (`make bench-py`)
+//! measures the *actual* `gymnasium.vector.SyncVectorEnv` against the
+//! Rust vectorizer through the zero-copy adapter on the same workload,
+//! writing `BENCH_pybind.json`. Prefer those numbers when citing
+//! head-to-head throughput.
+
+mod gymnasium;
+mod sb3;
+
+pub use gymnasium::GymnasiumVec;
+pub use sb3::Sb3Vec;
+
+use crate::emulation::Info;
+
+/// Command sent to a baseline worker (one env per worker, as both
+/// libraries do).
+pub(crate) enum Cmd {
+    Reset(u64),
+    Step(Vec<i32>),
+    Close,
+}
+
+/// Reply from a baseline worker. Every message allocates fresh buffers —
+/// the analog of pickling through a pipe/queue.
+pub(crate) struct Reply {
+    pub env_id: usize,
+    pub obs: Vec<u8>,
+    pub rewards: Vec<f32>,
+    pub terms: Vec<bool>,
+    pub truncs: Vec<bool>,
+    pub info: Info,
+}

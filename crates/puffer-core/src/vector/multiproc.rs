@@ -1,0 +1,1053 @@
+//! The multiprocessing backend: `W` worker threads, each simulating
+//! `M / W` environments, exchanging all step data through preallocated
+//! shared slabs and signaling through busy-wait flags.
+//!
+//! This is the Rust analog of the paper's Python multiprocessing design
+//! (see DESIGN.md §Hardware-Adaptation: threads + shared buffers preserve
+//! the copy counts and synchronization topology of the original's shared
+//! memory + process model). All four optimized code paths live here,
+//! selected by [`VecConfig::mode`]:
+//!
+//! | [`Mode`]              | wait policy             | obs copies |
+//! |-----------------------|-------------------------|------------|
+//! | `Sync`                | all workers             | 0 (slab *is* the batch) |
+//! | `Async`               | first workers to finish | 1 gather   |
+//! | `AsyncSingleWorker`   | first worker to finish  | 0 (worker region is the batch) |
+//! | `ZeroCopy`            | next band in rotation   | 0 (band region is the batch) |
+//!
+//! The leader↔worker handoff, shutdown, and reset-seed protocols are
+//! documented in `CONCURRENCY.md` and model-checked in
+//! `crates/puffer-train/tests/loom_models.rs` (see [`crate::sync`]).
+
+use super::shared::{Flag, Slab, ACTIONS_READY, OBS_READY, POISONED, RESET, SHUTDOWN};
+use super::{probe_factory, EnvFactory, Mode, StepBatch, VecConfig, VecEnv};
+use crate::emulation::{FlatEnv, Info};
+use crate::spaces::StructLayout;
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Arc;
+use crate::wrappers::EnvSpec;
+use anyhow::Result;
+// The info channel is the documented exception to the crate::sync facade
+// rule (CONCURRENCY.md): fire-and-forget, unbounded, never part of the
+// flag protocol's blocking structure, so it stays std mpsc and outside
+// the loom-modeled surface.
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Shared-memory threaded vectorization with EnvPool semantics.
+pub struct Multiprocessing {
+    cfg: VecConfig,
+    mode: Mode,
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    agents: usize,
+
+    flags: Vec<Arc<Flag>>,
+    obs: Arc<Slab<u8>>,
+    rewards: Arc<Slab<f32>>,
+    terms: Arc<Slab<bool>>,
+    truncs: Arc<Slab<bool>>,
+    actions: Arc<Slab<i32>>,
+    reset_seed: Arc<AtomicU64>,
+    /// Advisory fast-exit hint for workers. The *authoritative* shutdown
+    /// signal is the SHUTDOWN flag state: a worker's step-completion edge
+    /// is a CAS ([`Flag::complete`]) that loses to a concurrent SHUTDOWN
+    /// store, so the signal can never be overwritten and lost.
+    shutdown: Arc<AtomicBool>,
+    info_rx: mpsc::Receiver<(usize, Info)>,
+    handles: Vec<JoinHandle<()>>,
+
+    /// Worker ids claimed by the last `recv`, in claim order.
+    pending: Vec<usize>,
+    env_ids: Vec<usize>,
+    awaiting_send: bool,
+    /// True while the leader's `StepBatch` views alias claimed workers'
+    /// slab regions directly (Sync/AsyncSingleWorker/ZeroCopy); drives
+    /// the sentinel hold/release bookkeeping (see [`Slab::hold`]).
+    holding: bool,
+    /// Round-robin scan start (Async fairness).
+    scan_cursor: usize,
+    /// Next band to claim (ZeroCopy rotation).
+    band_cursor: usize,
+
+    // Gather buffers (Async path only).
+    g_obs: Vec<u8>,
+    g_rewards: Vec<f32>,
+    g_terms: Vec<bool>,
+    g_truncs: Vec<bool>,
+}
+
+impl Multiprocessing {
+    /// Build from a composable [`EnvSpec`] — the preferred constructor.
+    /// Every worker instantiates its own envs (and wrapper state) from
+    /// the spec, so wrapper chains need no cross-thread synchronization.
+    pub fn from_spec(spec: &EnvSpec, cfg: VecConfig) -> Result<Self> {
+        Self::from_factory_box(spec.to_factory(), cfg)
+    }
+
+    /// Low-level escape hatch: build from a raw factory closure. Prefer
+    /// [`from_spec`](Self::from_spec); for custom envs see
+    /// [`EnvSpec::custom`].
+    pub fn from_factory(
+        factory: impl Fn(usize) -> Box<dyn FlatEnv> + Send + Sync + 'static,
+        cfg: VecConfig,
+    ) -> Result<Self> {
+        Self::from_factory_box(Box::new(factory), cfg)
+    }
+
+    fn from_factory_box(factory: EnvFactory, cfg: VecConfig) -> Result<Self> {
+        let mode = cfg.mode()?;
+        let (layout, action_dims, agents) = probe_factory(&factory);
+        let w = layout.byte_len();
+        let slots = action_dims.len();
+        let rows = cfg.num_envs * agents;
+
+        let obs = Slab::<u8>::new(rows * w);
+        let rewards = Slab::<f32>::new(rows);
+        let terms = Slab::<bool>::new(rows);
+        let truncs = Slab::<bool>::new(rows);
+        let actions = Slab::<i32>::new(rows * slots);
+        let reset_seed = Arc::new(AtomicU64::new(cfg.seed));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flags: Vec<Arc<Flag>> = (0..cfg.num_workers).map(|_| Arc::new(Flag::new())).collect();
+        let (info_tx, info_rx) = mpsc::channel::<(usize, Info)>();
+
+        let factory = Arc::new(factory);
+        let epw = cfg.envs_per_worker();
+        let mut handles: Vec<JoinHandle<()>> = Vec::with_capacity(cfg.num_workers);
+        for wid in 0..cfg.num_workers {
+            let ctx = WorkerCtx {
+                wid,
+                epw,
+                agents,
+                byte_len: w,
+                slots,
+                spin_budget: cfg.spin_budget,
+                flag: flags[wid].clone(),
+                obs: obs.clone(),
+                rewards: rewards.clone(),
+                terms: terms.clone(),
+                truncs: truncs.clone(),
+                actions: actions.clone(),
+                reset_seed: reset_seed.clone(),
+                shutdown: shutdown.clone(),
+                info_tx: info_tx.clone(),
+                factory: factory.clone(),
+            };
+            let spawned = std::thread::Builder::new()
+                .name(format!("puffer-worker-{wid}"))
+                .spawn(move || worker_main(ctx));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Tear down the workers already spawned so the error
+                    // doesn't leak threads parked in Flag::wait forever.
+                    // ordering: Relaxed — advisory hint; the SHUTDOWN
+                    // flag store below is the authoritative signal.
+                    shutdown.store(true, Ordering::Relaxed);
+                    for f in &flags[..wid] {
+                        f.store(SHUTDOWN);
+                    }
+                    for h in handles.drain(..) {
+                        let _ = h.join();
+                    }
+                    anyhow::bail!("failed to spawn worker {wid}: {e}");
+                }
+            }
+        }
+
+        let batch_rows = cfg.batch_size * agents;
+        Ok(Multiprocessing {
+            mode,
+            layout,
+            action_dims,
+            agents,
+            flags,
+            obs,
+            rewards,
+            terms,
+            truncs,
+            actions,
+            reset_seed,
+            shutdown,
+            info_rx,
+            handles,
+            pending: Vec::with_capacity(cfg.num_workers),
+            env_ids: Vec::with_capacity(cfg.batch_size),
+            awaiting_send: false,
+            holding: false,
+            scan_cursor: 0,
+            band_cursor: 0,
+            g_obs: vec![0; batch_rows * w],
+            g_rewards: vec![0.0; batch_rows],
+            g_terms: vec![false; batch_rows],
+            g_truncs: vec![false; batch_rows],
+            cfg,
+        })
+    }
+
+    /// The resolved code path.
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    fn epw(&self) -> usize {
+        self.cfg.envs_per_worker()
+    }
+    /// Rows owned by one worker.
+    fn rows_per_worker(&self) -> usize {
+        self.epw() * self.agents
+    }
+    fn workers_per_batch(&self) -> usize {
+        self.cfg.batch_size / self.epw()
+    }
+
+    fn drain_infos(&mut self) -> Vec<(usize, Info)> {
+        let mut out = Vec::new();
+        while let Ok(item) = self.info_rx.try_recv() {
+            out.push(item);
+        }
+        out
+    }
+
+    fn check_poison(&self) -> Result<()> {
+        for (wid, f) in self.flags.iter().enumerate() {
+            if f.load() == POISONED {
+                anyhow::bail!(
+                    "worker {wid} poisoned: an environment panicked; the vectorizer is dead"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Wait until `wid` reaches a leader-owned state (OBS_READY), claiming
+    /// it. Errors on poison.
+    fn wait_and_claim(&self, wid: usize) -> Result<()> {
+        let s = self.flags[wid].wait(self.cfg.spin_budget, |s| {
+            s == OBS_READY || s == POISONED
+        });
+        if s == POISONED {
+            self.check_poison()?;
+        }
+        // Exclusive claim (we are the only leader, but CAS keeps the
+        // invariant explicit and cheap).
+        anyhow::ensure!(self.flags[wid].try_claim(), "claim raced on worker {wid}");
+        Ok(())
+    }
+
+    /// Register the leader's long-lived `StepBatch` views over
+    /// `[first, first + n)` worker regions with the aliasing sentinel
+    /// (no-op in release builds). Matched by the releases in `send`.
+    fn hold_workers(&mut self, first_wid: usize, n: usize) {
+        let rpw = self.rows_per_worker();
+        let w = self.layout.byte_len();
+        for wid in first_wid..first_wid + n {
+            self.obs.hold(wid * rpw * w, rpw * w);
+            self.rewards.hold(wid * rpw, rpw);
+            self.terms.hold(wid * rpw, rpw);
+            self.truncs.hold(wid * rpw, rpw);
+        }
+        self.holding = true;
+    }
+
+    /// Borrowed slices over a contiguous run of workers
+    /// `[first, first + n)`.
+    fn region_slices(&self, first_wid: usize, n_workers: usize) -> (&[u8], &[f32], &[bool], &[bool]) {
+        let rpw = self.rows_per_worker();
+        let w = self.layout.byte_len();
+        let row0 = first_wid * rpw;
+        let rows = n_workers * rpw;
+        // SAFETY: all workers in the run are CLAIMED (leader-owned).
+        unsafe {
+            (
+                self.obs.slice(row0 * w, rows * w),
+                self.rewards.slice(row0, rows),
+                self.terms.slice(row0, rows),
+                self.truncs.slice(row0, rows),
+            )
+        }
+    }
+
+    fn set_env_ids(&mut self, worker_order: &[usize]) {
+        self.env_ids.clear();
+        let epw = self.epw();
+        for &wid in worker_order {
+            self.env_ids.extend(wid * epw..(wid + 1) * epw);
+        }
+    }
+}
+
+impl VecEnv for Multiprocessing {
+    fn obs_layout(&self) -> &StructLayout {
+        &self.layout
+    }
+    fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+    fn agents_per_env(&self) -> usize {
+        self.agents
+    }
+    fn num_envs(&self) -> usize {
+        self.cfg.num_envs
+    }
+    fn batch_size(&self) -> usize {
+        self.cfg.batch_size
+    }
+
+    fn async_reset(&mut self, seed: u64) {
+        assert!(
+            !self.awaiting_send,
+            "async_reset with a batch outstanding; send() first"
+        );
+        // Phase 1: quiesce. Every worker must be parked in a leader-owned
+        // state (IDLE at startup, OBS_READY/CLAIMED mid-run, POISONED if
+        // dead) before the new seed is published. Publishing first would
+        // let a worker still processing a *previous* RESET load *this*
+        // seed — back-to-back resets would then mix seed epochs (pinned
+        // by `reset_seed_epochs_never_mix` below and the
+        // `reset_seed_matches_epoch` loom model).
+        for f in &self.flags {
+            f.wait(self.cfg.spin_budget, |s| {
+                s != ACTIONS_READY && s != RESET
+            });
+        }
+        // Phase 2: publish the seed, then wake each worker into RESET.
+        // ordering: Relaxed — publication piggybacks on the RESET flag
+        // edge: this store is sequenced before the flag's Release store,
+        // and workers read the seed only after their Acquire load
+        // returns RESET; phase 1 guarantees no worker reads concurrently.
+        self.reset_seed.store(seed, Ordering::Relaxed);
+        for f in &self.flags {
+            f.store(RESET);
+        }
+        self.pending.clear();
+        self.scan_cursor = 0;
+        self.band_cursor = 0;
+    }
+
+    fn recv(&mut self) -> Result<StepBatch<'_>> {
+        anyhow::ensure!(
+            !self.awaiting_send,
+            "recv called twice without an intervening send"
+        );
+        self.check_poison()?;
+        self.pending.clear();
+
+        match self.mode {
+            Mode::Sync => {
+                for wid in 0..self.cfg.num_workers {
+                    self.wait_and_claim(wid)?;
+                    self.pending.push(wid);
+                }
+                self.set_env_ids(&(0..self.cfg.num_workers).collect::<Vec<_>>());
+                self.hold_workers(0, self.cfg.num_workers);
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                let (obs, rewards, terms, truncs) =
+                    self.region_slices(0, self.cfg.num_workers);
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs,
+                    rewards,
+                    terms,
+                    truncs,
+                    infos,
+                })
+            }
+            Mode::AsyncSingleWorker => {
+                // First worker to finish wins; round-robin scan for
+                // fairness.
+                let wid = loop {
+                    self.check_poison()?;
+                    let mut found = None;
+                    for k in 0..self.cfg.num_workers {
+                        let wid = (self.scan_cursor + k) % self.cfg.num_workers;
+                        if self.flags[wid].try_claim() {
+                            found = Some(wid);
+                            break;
+                        }
+                    }
+                    match found {
+                        Some(wid) => break wid,
+                        // Nothing ready: let workers run (crucial when
+                        // cores are oversubscribed).
+                        None => crate::sync::yield_now(),
+                    }
+                };
+                self.scan_cursor = (wid + 1) % self.cfg.num_workers;
+                self.pending.push(wid);
+                self.set_env_ids(&[wid]);
+                self.hold_workers(wid, 1);
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                let (obs, rewards, terms, truncs) = self.region_slices(wid, 1);
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs,
+                    rewards,
+                    terms,
+                    truncs,
+                    infos,
+                })
+            }
+            Mode::Async => {
+                // Claim the first `workers_per_batch` finishers, gather
+                // their regions into one contiguous batch (the single copy
+                // this path pays). The gather reads are transient, so no
+                // sentinel holds: the StepBatch aliases g_* buffers, not
+                // the slabs.
+                let need = self.workers_per_batch();
+                while self.pending.len() < need {
+                    self.check_poison()?;
+                    let mut progressed = false;
+                    for k in 0..self.cfg.num_workers {
+                        let wid = (self.scan_cursor + k) % self.cfg.num_workers;
+                        if self.pending.contains(&wid) {
+                            continue;
+                        }
+                        if self.flags[wid].try_claim() {
+                            self.pending.push(wid);
+                            progressed = true;
+                            if self.pending.len() == need {
+                                break;
+                            }
+                        }
+                    }
+                    if !progressed {
+                        // Let workers run while we wait for finishers.
+                        crate::sync::yield_now();
+                    }
+                }
+                self.scan_cursor =
+                    (self.pending.last().copied().unwrap_or(0) + 1) % self.cfg.num_workers;
+                let order = self.pending.clone();
+                self.set_env_ids(&order);
+
+                let rpw = self.rows_per_worker();
+                let w = self.layout.byte_len();
+                for (slot, &wid) in order.iter().enumerate() {
+                    let row0 = wid * rpw;
+                    // SAFETY: worker `wid` is CLAIMED (leader-owned).
+                    // Field-disjoint borrows: slab sources vs gather
+                    // destinations.
+                    unsafe {
+                        self.g_obs[slot * rpw * w..(slot + 1) * rpw * w]
+                            .copy_from_slice(self.obs.slice(row0 * w, rpw * w));
+                        self.g_rewards[slot * rpw..(slot + 1) * rpw]
+                            .copy_from_slice(self.rewards.slice(row0, rpw));
+                        self.g_terms[slot * rpw..(slot + 1) * rpw]
+                            .copy_from_slice(self.terms.slice(row0, rpw));
+                        self.g_truncs[slot * rpw..(slot + 1) * rpw]
+                            .copy_from_slice(self.truncs.slice(row0, rpw));
+                    }
+                }
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs: &self.g_obs,
+                    rewards: &self.g_rewards,
+                    terms: &self.g_terms,
+                    truncs: &self.g_truncs,
+                    infos,
+                })
+            }
+            Mode::ZeroCopy => {
+                // Bands of adjacent workers claimed in rotation: the batch
+                // is a contiguous slab window — a circular buffer of
+                // batches.
+                let wpb = self.workers_per_batch();
+                let n_bands = self.cfg.num_workers / wpb;
+                let band = self.band_cursor % n_bands;
+                let first = band * wpb;
+                for wid in first..first + wpb {
+                    self.wait_and_claim(wid)?;
+                    self.pending.push(wid);
+                }
+                self.band_cursor = (band + 1) % n_bands;
+                self.set_env_ids(&(first..first + wpb).collect::<Vec<_>>());
+                self.hold_workers(first, wpb);
+                self.awaiting_send = true;
+                let infos = self.drain_infos();
+                let (obs, rewards, terms, truncs) = self.region_slices(first, wpb);
+                Ok(StepBatch {
+                    env_ids: &self.env_ids,
+                    obs,
+                    rewards,
+                    terms,
+                    truncs,
+                    infos,
+                })
+            }
+        }
+    }
+
+    fn send(&mut self, actions: &[i32]) -> Result<()> {
+        anyhow::ensure!(self.awaiting_send, "send called without a pending recv");
+        let slots = self.action_dims.len();
+        let rpw = self.rows_per_worker();
+        let w = self.layout.byte_len();
+        anyhow::ensure!(
+            actions.len() == self.pending.len() * rpw * slots,
+            "expected {} action slots, got {}",
+            self.pending.len() * rpw * slots,
+            actions.len()
+        );
+        for slot in 0..self.pending.len() {
+            let wid = self.pending[slot];
+            if self.holding {
+                // The caller's StepBatch views died when this call
+                // borrowed self mutably; tell the sentinel before the
+                // ACTIONS_READY store lets the worker write the regions.
+                self.obs.release(wid * rpw * w, rpw * w);
+                self.rewards.release(wid * rpw, rpw);
+                self.terms.release(wid * rpw, rpw);
+                self.truncs.release(wid * rpw, rpw);
+            }
+            {
+                // SAFETY: worker is CLAIMED (leader-owned) until the flag
+                // store below hands the region back.
+                let mut dst = unsafe { self.actions.slice_mut(wid * rpw * slots, rpw * slots) };
+                dst.copy_from_slice(&actions[slot * rpw * slots..(slot + 1) * rpw * slots]);
+            } // window guard drops before the handoff store
+            self.flags[wid].store(ACTIONS_READY);
+        }
+        self.pending.clear();
+        self.holding = false;
+        self.awaiting_send = false;
+        Ok(())
+    }
+}
+
+impl Drop for Multiprocessing {
+    fn drop(&mut self) {
+        // ordering: Relaxed — advisory fast-exit hint only; the flag
+        // stores below are the authoritative, Release-ordered signal. A
+        // worker mid-step cannot lose it: its completion edge is a CAS
+        // that fails against SHUTDOWN instead of overwriting it.
+        self.shutdown.store(true, Ordering::Relaxed);
+        for f in &self.flags {
+            f.store(SHUTDOWN);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct WorkerCtx {
+    wid: usize,
+    epw: usize,
+    agents: usize,
+    byte_len: usize,
+    slots: usize,
+    spin_budget: u32,
+    flag: Arc<Flag>,
+    obs: Arc<Slab<u8>>,
+    rewards: Arc<Slab<f32>>,
+    terms: Arc<Slab<bool>>,
+    truncs: Arc<Slab<bool>>,
+    actions: Arc<Slab<i32>>,
+    reset_seed: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    info_tx: mpsc::Sender<(usize, Info)>,
+    factory: Arc<EnvFactory>,
+}
+
+fn worker_main(ctx: WorkerCtx) {
+    let flag = ctx.flag.clone();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        worker_loop(ctx)
+    }));
+    if result.is_err() {
+        // Mark the backend dead; the leader surfaces this as an error on
+        // the next recv (failure injection tests exercise this path).
+        flag.store(POISONED);
+    }
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    // Envs are constructed *inside* the worker (processes do the same),
+    // parallelizing expensive env startup.
+    let mut envs: Vec<Box<dyn FlatEnv>> = (0..ctx.epw)
+        .map(|j| (ctx.factory)(ctx.wid * ctx.epw + j))
+        .collect();
+
+    let rpw = ctx.epw * ctx.agents;
+    let row0 = ctx.wid * rpw;
+    loop {
+        // ordering: Relaxed — advisory fast exit (skip one last wake-up
+        // cycle); correctness does not depend on observing it, because
+        // the SHUTDOWN flag state below cannot be overwritten by this
+        // worker (completion is a CAS, not a store).
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        let state = ctx
+            .flag
+            .wait(ctx.spin_budget, |s| matches!(s, ACTIONS_READY | RESET | SHUTDOWN));
+        match state {
+            SHUTDOWN => return,
+            RESET => {
+                // ordering: Relaxed — async_reset quiesces all workers,
+                // stores the seed, *then* Release-stores RESET; our
+                // Acquire load of RESET (in `wait`) makes the seed
+                // visible, and no store can race while any worker is
+                // processing RESET.
+                let seed = ctx.reset_seed.load(Ordering::Relaxed);
+                for (j, env) in envs.iter_mut().enumerate() {
+                    let env_id = ctx.wid * ctx.epw + j;
+                    let r = j * ctx.agents;
+                    // SAFETY: RESET state grants the worker its regions.
+                    let mut obs = unsafe {
+                        ctx.obs
+                            .slice_mut((row0 + r) * ctx.byte_len, ctx.agents * ctx.byte_len)
+                    };
+                    let info = env.reset(seed + env_id as u64, &mut obs);
+                    // SAFETY: RESET state grants the worker its regions.
+                    unsafe {
+                        ctx.rewards.slice_mut(row0 + r, ctx.agents).fill(0.0);
+                        ctx.terms.slice_mut(row0 + r, ctx.agents).fill(false);
+                        ctx.truncs.slice_mut(row0 + r, ctx.agents).fill(false);
+                    }
+                    if !info.is_empty() {
+                        let _ = ctx.info_tx.send((env_id, info));
+                    }
+                }
+                // Publish results only if the leader didn't pull the flag
+                // out from under us (SHUTDOWN mid-reset): a plain store
+                // would erase that signal and strand this worker in its
+                // next wait.
+                if !ctx.flag.complete(RESET) {
+                    return;
+                }
+            }
+            ACTIONS_READY => {
+                for (j, env) in envs.iter_mut().enumerate() {
+                    let env_id = ctx.wid * ctx.epw + j;
+                    let r = j * ctx.agents;
+                    // SAFETY: ACTIONS_READY grants the worker its regions.
+                    // Each env's rows are stacked directly into the shared
+                    // slab — "multiple environments per worker" without
+                    // extra copies.
+                    let (actions, mut obs, mut rewards, mut terms, mut truncs) = unsafe {
+                        (
+                            ctx.actions
+                                .slice((row0 + r) * ctx.slots, ctx.agents * ctx.slots),
+                            ctx.obs
+                                .slice_mut((row0 + r) * ctx.byte_len, ctx.agents * ctx.byte_len),
+                            ctx.rewards.slice_mut(row0 + r, ctx.agents),
+                            ctx.terms.slice_mut(row0 + r, ctx.agents),
+                            ctx.truncs.slice_mut(row0 + r, ctx.agents),
+                        )
+                    };
+                    let info =
+                        env.step(actions, &mut obs, &mut rewards, &mut terms, &mut truncs);
+                    if !info.is_empty() {
+                        // The only cross-thread channel traffic: one send
+                        // per episode per env (paper: pipes for infos).
+                        let _ = ctx.info_tx.send((env_id, info));
+                    }
+                }
+                // As in the RESET arm: CAS, never a blind store, so a
+                // concurrent SHUTDOWN survives and we exit instead.
+                if !ctx.flag.complete(ACTIONS_READY) {
+                    return;
+                }
+            }
+            _ => unreachable!("worker woke in state {state}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spaces::{Space, Value};
+
+    fn cfg(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) -> VecConfig {
+        VecConfig {
+            num_envs,
+            num_workers,
+            batch_size,
+            zero_copy,
+            ..Default::default()
+        }
+    }
+
+    fn drive(mut v: Multiprocessing, steps: usize) {
+        v.async_reset(3);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let w = v.obs_layout().byte_len();
+        for _ in 0..steps {
+            let ids;
+            {
+                let b = v.recv().unwrap();
+                assert_eq!(b.obs.len(), rows * w);
+                assert_eq!(b.rewards.len(), rows);
+                ids = b.env_ids.to_vec();
+            }
+            assert_eq!(ids.len(), v.batch_size());
+            v.send(&vec![0i32; rows * slots]).unwrap();
+        }
+    }
+
+    #[test]
+    fn sync_path() {
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 2, 8, false)).unwrap();
+        assert_eq!(v.mode(), Mode::Sync);
+        drive(v, 30);
+    }
+
+    #[test]
+    fn async_path() {
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 4, 4, false)).unwrap();
+        assert_eq!(v.mode(), Mode::Async);
+        drive(v, 30);
+    }
+
+    #[test]
+    fn async_single_worker_path() {
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 4, 2, false)).unwrap();
+        assert_eq!(v.mode(), Mode::AsyncSingleWorker);
+        drive(v, 30);
+    }
+
+    #[test]
+    fn zero_copy_path() {
+        let v = Multiprocessing::from_spec(&EnvSpec::new("ocean/squared"), cfg(8, 4, 4, true)).unwrap();
+        assert_eq!(v.mode(), Mode::ZeroCopy);
+        drive(v, 30);
+    }
+
+    /// Deterministic env whose obs encodes (env_instance_id, step_count,
+    /// last_action) — catches row routing bugs across all code paths.
+    struct Tracer {
+        id: u64,
+        t: f32,
+        last: f32,
+    }
+    impl crate::emulation::StructuredEnv for Tracer {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[3], -1e6, 1e6)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(64)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            self.t = 0.0;
+            self.last = -1.0;
+            Value::F32(vec![self.id as f32, 0.0, -1.0])
+        }
+        fn step(&mut self, a: &Value) -> (Value, f32, bool, bool, crate::emulation::Info) {
+            self.t += 1.0;
+            self.last = a.as_discrete().unwrap() as f32;
+            (
+                Value::F32(vec![self.id as f32, self.t, self.last]),
+                self.last,
+                false,
+                false,
+                vec![],
+            )
+        }
+    }
+
+    fn tracer_factory(i: usize) -> Box<dyn FlatEnv> {
+        Box::new(crate::emulation::PufferEnv::new(Tracer {
+            id: i as u64,
+            t: 0.0,
+            last: -1.0,
+        }))
+    }
+
+    fn decode_rows(w: usize, obs: &[u8]) -> Vec<(f32, f32, f32)> {
+        obs.chunks_exact(w)
+            .map(|row| {
+                let f = |i: usize| {
+                    f32::from_le_bytes(row[4 * i..4 * i + 4].try_into().unwrap())
+                };
+                (f(0), f(1), f(2))
+            })
+            .collect()
+    }
+
+    /// Actions sent for env e must arrive at env e, and its obs row must
+    /// come back in the position its env_id claims — on every path.
+    fn routing_check(num_envs: usize, num_workers: usize, batch_size: usize, zero_copy: bool) {
+        let mut v = Multiprocessing::from_factory(
+            tracer_factory,
+            cfg(num_envs, num_workers, batch_size, zero_copy),
+        )
+        .unwrap();
+        let w = v.obs_layout().byte_len();
+        v.async_reset(0);
+        for _round in 0..20 {
+            let (ids, rows) = {
+                let b = v.recv().unwrap();
+                (b.env_ids.to_vec(), decode_rows(w, b.obs))
+            };
+            for (slot, &env_id) in ids.iter().enumerate() {
+                let (id, _t, _last) = rows[slot];
+                assert_eq!(id as usize, env_id, "row {slot} carries wrong env");
+            }
+            // Send action = env_id + 7; verify it echoes next time we see
+            // that env.
+            let actions: Vec<i32> = ids.iter().map(|&e| (e as i32 + 7) % 64).collect();
+            v.send(&actions).unwrap();
+            let (ids2, rows2) = {
+                let b = v.recv().unwrap();
+                (b.env_ids.to_vec(), decode_rows(w, b.obs))
+            };
+            for (slot, &env_id) in ids2.iter().enumerate() {
+                let (id, t, last) = rows2[slot];
+                assert_eq!(id as usize, env_id);
+                if t > 0.0 {
+                    assert_eq!(
+                        last as i32,
+                        (env_id as i32 + 7) % 64,
+                        "env {env_id} got someone else's action"
+                    );
+                }
+            }
+            let actions: Vec<i32> = ids2.iter().map(|&e| (e as i32 + 7) % 64).collect();
+            v.send(&actions).unwrap();
+        }
+    }
+
+    #[test]
+    fn routing_sync() {
+        routing_check(8, 4, 8, false);
+    }
+    #[test]
+    fn routing_async() {
+        routing_check(8, 4, 4, false);
+    }
+    #[test]
+    fn routing_single_worker() {
+        routing_check(8, 4, 2, false);
+    }
+    #[test]
+    fn routing_zero_copy() {
+        routing_check(8, 4, 4, true);
+    }
+    #[test]
+    fn routing_multi_env_per_worker() {
+        routing_check(12, 3, 4, false);
+    }
+
+    #[test]
+    fn infos_cross_once_per_episode() {
+        let mut v =
+            Multiprocessing::from_spec(&EnvSpec::new("ocean/bandit"), cfg(4, 2, 4, false)).unwrap();
+        v.async_reset(1);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let mut episode_infos = 0;
+        for _ in 0..10 {
+            let b = v.recv().unwrap();
+            episode_infos += b.infos.len();
+            let n = rows * slots;
+            v.send(&vec![0i32; n]).unwrap();
+        }
+        // Bandit episodes are one step: every step ends an episode, so
+        // infos flow — but only via the channel, only non-empty.
+        assert!(episode_infos > 0, "no episode infos arrived");
+    }
+
+    /// Env that panics on step `k` — the worker must poison, and the
+    /// leader must report an error instead of hanging.
+    struct Bomb {
+        t: u32,
+        fuse: u32,
+    }
+    impl crate::emulation::StructuredEnv for Bomb {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[1], 0.0, 1.0)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(2)
+        }
+        fn reset(&mut self, _seed: u64) -> Value {
+            Value::F32(vec![0.0])
+        }
+        fn step(&mut self, _a: &Value) -> (Value, f32, bool, bool, crate::emulation::Info) {
+            self.t += 1;
+            if self.t >= self.fuse {
+                panic!("boom");
+            }
+            (Value::F32(vec![0.0]), 0.0, false, false, vec![])
+        }
+    }
+
+    #[test]
+    fn worker_panic_poisons_backend() {
+        let mut v = Multiprocessing::from_factory(
+            |_i| {
+                Box::new(crate::emulation::PufferEnv::new(Bomb { t: 0, fuse: 3 }))
+                    as Box<dyn FlatEnv>
+            },
+            cfg(4, 2, 4, false),
+        )
+        .unwrap();
+        v.async_reset(0);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let mut saw_error = false;
+        for _ in 0..10 {
+            match v.recv() {
+                Ok(_) => {
+                    if v.send(&vec![0i32; rows * slots]).is_err() {
+                        saw_error = true;
+                        break;
+                    }
+                }
+                Err(e) => {
+                    assert!(e.to_string().contains("poisoned"), "{e}");
+                    saw_error = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_error, "poison never surfaced");
+    }
+
+    #[test]
+    fn pool_returns_fast_envs_first() {
+        // Workers 0..3: worker 3 is 50x slower. With batch = 1 worker, the
+        // fast workers should dominate the claimed batches.
+        use crate::envs::profile::{ProfileConfig, ProfileSim};
+        let factory = |i: usize| -> Box<dyn FlatEnv> {
+            let step_us = if i == 3 { 5000.0 } else { 100.0 };
+            Box::new(crate::emulation::PufferEnv::new(ProfileSim::new(
+                ProfileConfig::synthetic(step_us, 0.0, 0.0, 4),
+                i as u64,
+            )))
+        };
+        let mut v = Multiprocessing::from_factory(factory, cfg(4, 4, 1, false)).unwrap();
+        assert_eq!(v.mode(), Mode::AsyncSingleWorker);
+        v.async_reset(0);
+        let slots = v.action_dims().len();
+        let mut counts = [0usize; 4];
+        for _ in 0..40 {
+            let wid = {
+                let b = v.recv().unwrap();
+                b.env_ids[0]
+            };
+            counts[wid] += 1;
+            v.send(&vec![0i32; slots]).unwrap();
+        }
+        let fast: usize = counts[..3].iter().sum();
+        assert!(
+            fast > counts[3] * 3,
+            "slow worker claimed too often: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn batch_sizes_and_agent_rows() {
+        let v =
+            Multiprocessing::from_spec(&EnvSpec::new("ocean/multiagent"), cfg(4, 2, 2, false))
+                .unwrap();
+        assert_eq!(v.agents_per_env(), 2);
+        assert_eq!(v.batch_rows(), 4);
+        drop(v);
+    }
+
+    #[test]
+    fn protocol_misuse_errors() {
+        let mut v =
+            Multiprocessing::from_spec(&EnvSpec::new("ocean/bandit"), cfg(2, 1, 2, false)).unwrap();
+        assert!(v.send(&[0, 0]).is_err(), "send before recv");
+        v.async_reset(0);
+        let _ = v.recv().unwrap();
+        assert!(v.recv().is_err(), "double recv");
+    }
+
+    /// Env whose observation is exactly the seed its last reset received
+    /// — the probe for reset-seed epoch mixing.
+    struct SeedEcho {
+        seed: f32,
+    }
+    impl crate::emulation::StructuredEnv for SeedEcho {
+        fn observation_space(&self) -> Space {
+            Space::boxf(&[1], 0.0, 1e9)
+        }
+        fn action_space(&self) -> Space {
+            Space::Discrete(2)
+        }
+        fn reset(&mut self, seed: u64) -> Value {
+            self.seed = seed as f32;
+            Value::F32(vec![self.seed])
+        }
+        fn step(&mut self, _a: &Value) -> (Value, f32, bool, bool, crate::emulation::Info) {
+            (Value::F32(vec![self.seed]), 0.0, false, false, vec![])
+        }
+    }
+
+    /// Regression for the reset-seed epoch race: async_reset published
+    /// the new seed *before* quiescing workers, so with back-to-back
+    /// resets a worker still processing reset A could load seed B. The
+    /// fix quiesces all workers first (phase 1), then publishes the seed
+    /// and the RESET flags (phase 2); with the old order this test is
+    /// racy, with the new order it must always pass.
+    #[test]
+    fn reset_seed_epochs_never_mix() {
+        let mut v = Multiprocessing::from_factory(
+            |_i| Box::new(crate::emulation::PufferEnv::new(SeedEcho { seed: -1.0 })) as Box<dyn FlatEnv>,
+            cfg(8, 4, 8, false),
+        )
+        .unwrap();
+        let w = v.obs_layout().byte_len();
+        for round in 0..20u64 {
+            let (a, b) = (1000 * round + 100, 1000 * round + 200);
+            v.async_reset(a);
+            v.async_reset(b); // immediately supersedes A
+            let obs: Vec<f32> = {
+                let batch = v.recv().unwrap();
+                batch
+                    .obs
+                    .chunks_exact(w)
+                    .map(|row| f32::from_le_bytes(row[0..4].try_into().unwrap()))
+                    .collect()
+            };
+            // Sync mode: rows come back in env-id order 0..8.
+            for env_id in 0..8usize {
+                assert_eq!(
+                    obs[env_id],
+                    (b + env_id as u64) as f32,
+                    "env {env_id} reset with a stale seed epoch"
+                );
+            }
+            v.send(&vec![0i32; 8]).unwrap();
+        }
+    }
+
+    /// Dropping the vectorizer while workers are mid-step (flags still
+    /// ACTIONS_READY) must join every worker: the SHUTDOWN store lands
+    /// while a worker is stepping, the worker's completion CAS fails,
+    /// and it exits instead of stranding itself in the next wait. With
+    /// the old blind `store(OBS_READY)` this could hang forever.
+    #[test]
+    fn drop_mid_step_joins_straggler_workers() {
+        use crate::envs::profile::{ProfileConfig, ProfileSim};
+        let factory = |i: usize| -> Box<dyn FlatEnv> {
+            // 2ms steps: drop() below lands while workers are stepping.
+            Box::new(crate::emulation::PufferEnv::new(ProfileSim::new(
+                ProfileConfig::synthetic(2000.0, 0.0, 0.0, 4),
+                i as u64,
+            )))
+        };
+        let mut v = Multiprocessing::from_factory(factory, cfg(4, 4, 4, false)).unwrap();
+        v.async_reset(0);
+        let slots = v.action_dims().len();
+        let rows = v.batch_rows();
+        let _ = v.recv().unwrap();
+        v.send(&vec![0i32; rows * slots]).unwrap();
+        // Workers are now inside env.step; Drop must still join them all.
+        drop(v);
+    }
+}

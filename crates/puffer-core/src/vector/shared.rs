@@ -1,0 +1,562 @@
+//! Shared-memory slabs and the per-worker signaling flags.
+//!
+//! The multiprocessing backend exchanges *all* per-step data
+//! (observations, rewards, terminals, truncateds, actions) through large
+//! preallocated shared arrays, and signals readiness through per-worker
+//! atomic flags that both sides busy-wait on — the paper's "shared memory
+//! for data communication" + "shared flags for signaling" design, which
+//! reduces steady-state inter-process communication to zero. Only infos
+//! travel over a channel (the paper's pipes), and only when non-empty.
+//!
+//! ## Safety protocol
+//!
+//! Each worker owns a disjoint region of every slab. Region access
+//! alternates strictly between leader and worker, mediated by that
+//! worker's [`Flag`]:
+//!
+//! ```text
+//!   leader writes actions ──Release──▶ ACTIONS_READY
+//!   worker Acquire-loads, steps envs, writes obs/rew/term/trunc
+//!          ──CAS(ACTIONS_READY → OBS_READY)──▶ OBS_READY
+//!   leader Acquire-loads, reads results, (claims), writes next actions…
+//! ```
+//!
+//! The Release/Acquire pair on the flag makes every slab write by one side
+//! visible to the other before it touches the region, so the raw slices
+//! handed out by [`Slab`] are never accessed concurrently. The worker's
+//! step-completion edge is a *compare-exchange* ([`Flag::complete`]), not
+//! a plain store: the leader may asynchronously store [`SHUTDOWN`] while
+//! the worker is mid-step, and a blind `store(OBS_READY)` would overwrite
+//! it — the worker would then park in [`Flag::wait`] on a signal that
+//! will never be re-sent. The CAS loses that race detectably instead
+//! (pinned by `tests/loom_models.rs::shutdown_is_never_lost`).
+//!
+//! ## Aliasing sentinel
+//!
+//! In debug builds (and under the `slab-sentinel` cargo feature) every
+//! slab additionally tracks its outstanding windows and panics the
+//! moment two overlap illegally — a dynamic double-check that the flag
+//! protocol really did serialize region access. Mutable access is an
+//! RAII [`SlabWindow`] guard; long-lived shared borrows that outlive a
+//! call (the leader holding a [`StepBatch`](crate::vector::StepBatch)
+//! view from `recv` until the next `send`) are registered with
+//! [`Slab::hold`] / [`Slab::release`]. Release builds compile all of it
+//! to nothing. See `CONCURRENCY.md`.
+
+use std::cell::UnsafeCell;
+use std::ops::{Deref, DerefMut};
+
+use crate::sync::atomic::{AtomicU32, Ordering};
+use crate::sync::Arc;
+
+/// Worker flag states.
+pub const IDLE: u32 = 0;
+/// Leader → worker: actions for your envs are in the action slab; step.
+pub const ACTIONS_READY: u32 = 1;
+/// Worker → leader: observations/rewards/terms are in the slabs.
+pub const OBS_READY: u32 = 2;
+/// Leader → worker: reset all your envs (seed published with this store).
+pub const RESET: u32 = 3;
+/// Leader has taken this worker's OBS_READY output (pool bookkeeping).
+pub const CLAIMED: u32 = 4;
+/// Leader → worker: exit.
+pub const SHUTDOWN: u32 = 5;
+/// Worker → leader: an env panicked; the backend is dead.
+pub const POISONED: u32 = 6;
+
+/// Outstanding-window bookkeeping for one slab. Real in debug / with the
+/// `slab-sentinel` feature; a zero-cost stub otherwise (and under loom,
+/// where the slab protocol is modeled with loom's own access-checking
+/// cells instead).
+mod sentinel {
+    #[cfg(all(not(loom), any(debug_assertions, feature = "slab-sentinel")))]
+    pub(super) struct Tracker {
+        // A plain std mutex on purpose: the sentinel is debug
+        // instrumentation *about* the flag protocol, not part of it, so
+        // it must not route through the crate::sync facade and perturb
+        // the loom-modeled state space.
+        ranges: std::sync::Mutex<Ranges>,
+    }
+
+    #[cfg(all(not(loom), any(debug_assertions, feature = "slab-sentinel")))]
+    #[derive(Default)]
+    struct Ranges {
+        /// Live exclusive windows (from [`super::Slab::slice_mut`]).
+        excl: Vec<(usize, usize)>,
+        /// Registered long-lived shared holds (from [`super::Slab::hold`]).
+        shared: Vec<(usize, usize)>,
+    }
+
+    #[cfg(all(not(loom), any(debug_assertions, feature = "slab-sentinel")))]
+    fn overlaps(a: (usize, usize), b: (usize, usize)) -> bool {
+        a.1 != 0 && b.1 != 0 && a.0 < b.0 + b.1 && b.0 < a.0 + a.1
+    }
+
+    #[cfg(all(not(loom), any(debug_assertions, feature = "slab-sentinel")))]
+    impl Tracker {
+        pub(super) fn new() -> Self {
+            Tracker {
+                ranges: std::sync::Mutex::new(Ranges::default()),
+            }
+        }
+
+        fn lock(&self) -> std::sync::MutexGuard<'_, Ranges> {
+            // The sentinel stays usable while a panic (possibly one it
+            // raised itself) unwinds through another thread.
+            self.ranges
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+        }
+
+        pub(super) fn acquire_excl(&self, start: usize, len: usize) {
+            let mut r = self.lock();
+            if let Some(&(s, l)) = r.excl.iter().find(|&&w| overlaps(w, (start, len))) {
+                panic!(
+                    "slab sentinel: exclusive window {start}..{} overlaps live exclusive window {s}..{} — flag-protocol violation",
+                    start + len,
+                    s + l
+                );
+            }
+            if let Some(&(s, l)) = r.shared.iter().find(|&&w| overlaps(w, (start, len))) {
+                panic!(
+                    "slab sentinel: exclusive window {start}..{} overlaps held shared window {s}..{} — flag-protocol violation",
+                    start + len,
+                    s + l
+                );
+            }
+            r.excl.push((start, len));
+        }
+
+        pub(super) fn release_excl(&self, start: usize, len: usize) {
+            let mut r = self.lock();
+            match r.excl.iter().position(|&w| w == (start, len)) {
+                Some(i) => {
+                    r.excl.swap_remove(i);
+                }
+                // A guard is only constructed after a successful push,
+                // so a miss means sentinel-internal corruption. Don't
+                // compound a panic already unwinding through the guard's
+                // drop with a second one (that would abort).
+                None if std::thread::panicking() => {}
+                None => panic!(
+                    "slab sentinel: released exclusive window {start}..{} that was never acquired",
+                    start + len
+                ),
+            }
+        }
+
+        pub(super) fn check_shared(&self, start: usize, len: usize) {
+            let r = self.lock();
+            if let Some(&(s, l)) = r.excl.iter().find(|&&w| overlaps(w, (start, len))) {
+                panic!(
+                    "slab sentinel: shared read {start}..{} overlaps live exclusive window {s}..{} — flag-protocol violation",
+                    start + len,
+                    s + l
+                );
+            }
+        }
+
+        pub(super) fn hold_shared(&self, start: usize, len: usize) {
+            let mut r = self.lock();
+            if let Some(&(s, l)) = r.excl.iter().find(|&&w| overlaps(w, (start, len))) {
+                panic!(
+                    "slab sentinel: shared hold {start}..{} overlaps live exclusive window {s}..{} — flag-protocol violation",
+                    start + len,
+                    s + l
+                );
+            }
+            r.shared.push((start, len));
+        }
+
+        pub(super) fn release_shared(&self, start: usize, len: usize) {
+            let mut r = self.lock();
+            match r.shared.iter().position(|&w| w == (start, len)) {
+                Some(i) => {
+                    r.shared.swap_remove(i);
+                }
+                None if std::thread::panicking() => {}
+                None => panic!(
+                    "slab sentinel: released shared hold {start}..{} that was never registered",
+                    start + len
+                ),
+            }
+        }
+    }
+
+    #[cfg(not(all(not(loom), any(debug_assertions, feature = "slab-sentinel"))))]
+    pub(super) struct Tracker;
+
+    #[cfg(not(all(not(loom), any(debug_assertions, feature = "slab-sentinel"))))]
+    impl Tracker {
+        #[inline(always)]
+        pub(super) fn new() -> Self {
+            Tracker
+        }
+        #[inline(always)]
+        pub(super) fn acquire_excl(&self, _start: usize, _len: usize) {}
+        #[inline(always)]
+        pub(super) fn release_excl(&self, _start: usize, _len: usize) {}
+        #[inline(always)]
+        pub(super) fn check_shared(&self, _start: usize, _len: usize) {}
+        #[inline(always)]
+        pub(super) fn hold_shared(&self, _start: usize, _len: usize) {}
+        #[inline(always)]
+        pub(super) fn release_shared(&self, _start: usize, _len: usize) {}
+    }
+}
+
+/// A fixed-size shared array of `T` carved into per-worker regions.
+///
+/// Interior mutability + manual synchronization: see the module docs for
+/// the flag protocol that makes region access exclusive, and the
+/// aliasing sentinel that dynamically enforces it in debug builds.
+pub struct Slab<T> {
+    data: Box<[UnsafeCell<T>]>,
+    tracker: sentinel::Tracker,
+}
+
+// SAFETY: sending a Slab<T> between threads moves the boxed cells, whose
+// contents are plain `T: Send` values; the tracker's interior mutex is
+// itself Send.
+unsafe impl<T: Send> Send for Slab<T> {}
+// SAFETY: concurrent `&Slab` access is sound because every data access
+// goes through slice/slice_mut, whose contract (enforced by the Flag
+// Release/Acquire protocol, double-checked by the sentinel) serializes
+// access per region; `T: Send` suffices since only one thread touches a
+// region at a time — no `&T` is ever shared across threads.
+unsafe impl<T: Send> Sync for Slab<T> {}
+
+impl<T: Copy + Default> Slab<T> {
+    pub fn new(len: usize) -> Arc<Self> {
+        let data: Box<[UnsafeCell<T>]> = (0..len).map(|_| UnsafeCell::new(T::default())).collect();
+        Arc::new(Slab {
+            data,
+            tracker: sentinel::Tracker::new(),
+        })
+    }
+
+    #[allow(dead_code)]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Borrow a region immutably.
+    ///
+    /// # Safety
+    /// The caller must hold the flag state that grants it the region, and
+    /// the range must stay within its region. If the returned slice is
+    /// kept alive past this synchronization window (the leader's
+    /// `StepBatch` views), the caller must bracket it with
+    /// [`hold`](Self::hold) / [`release`](Self::release) so the sentinel
+    /// can see the borrow.
+    #[inline]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &[T] {
+        debug_assert!(start + len <= self.data.len());
+        self.tracker.check_shared(start, len);
+        // SAFETY: the caller holds the flag state granting (at least
+        // shared) access to [start, start+len), which is in bounds per
+        // the debug_assert and the region arithmetic of the callers;
+        // UnsafeCell<T> is layout-identical to T, so the cell pointer
+        // reads as T.
+        unsafe { std::slice::from_raw_parts(self.data.as_ptr().add(start) as *const T, len) }
+    }
+
+    /// Borrow a region mutably. The returned guard releases the
+    /// sentinel's exclusive claim on drop — drop it **before** the flag
+    /// store that hands the region to the other side.
+    ///
+    /// # Safety
+    /// As [`slice`](Self::slice), plus exclusivity: no other live
+    /// reference to the range (guaranteed by the flag protocol).
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> SlabWindow<'_, T> {
+        debug_assert!(start + len <= self.data.len());
+        // Panics on an illegal overlap *before* the aliasing &mut exists.
+        self.tracker.acquire_excl(start, len);
+        // SAFETY: the caller guarantees exclusive ownership of
+        // [start, start+len) per the flag protocol (no concurrent reader
+        // or writer until the next Release store), the range is in
+        // bounds, and UnsafeCell<T> is layout-identical to T.
+        let data =
+            unsafe { std::slice::from_raw_parts_mut(self.data.as_ptr().add(start) as *mut T, len) };
+        SlabWindow {
+            data,
+            tracker: &self.tracker,
+            start,
+        }
+    }
+
+    /// Register a long-lived shared borrow with the sentinel (no-op in
+    /// release builds). Call after [`slice`](Self::slice) when the slice
+    /// outlives the call — e.g. the leader keeping `StepBatch` views
+    /// from `recv` until the next `send`.
+    #[inline]
+    pub fn hold(&self, start: usize, len: usize) {
+        self.tracker.hold_shared(start, len);
+    }
+
+    /// Release a borrow registered with [`hold`](Self::hold). Must
+    /// happen before the region is handed back to its worker.
+    #[inline]
+    pub fn release(&self, start: usize, len: usize) {
+        self.tracker.release_shared(start, len);
+    }
+}
+
+/// RAII mutable window into a [`Slab`] region. Dereferences to
+/// `[T]`; dropping it ends the sentinel's exclusive claim.
+pub struct SlabWindow<'a, T> {
+    data: &'a mut [T],
+    tracker: &'a sentinel::Tracker,
+    start: usize,
+}
+
+impl<T> Deref for SlabWindow<'_, T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.data
+    }
+}
+
+impl<T> DerefMut for SlabWindow<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.data
+    }
+}
+
+impl<T> Drop for SlabWindow<'_, T> {
+    #[inline]
+    fn drop(&mut self) {
+        self.tracker.release_excl(self.start, self.data.len());
+    }
+}
+
+/// One worker's signaling flag.
+pub struct Flag {
+    state: AtomicU32,
+}
+
+impl Flag {
+    pub fn new() -> Self {
+        Flag {
+            state: AtomicU32::new(IDLE),
+        }
+    }
+
+    #[inline]
+    pub fn load(&self) -> u32 {
+        // ordering: Acquire pairs with the Release store/CAS of whichever
+        // side published the state, making that side's slab writes
+        // visible before the observer touches the region.
+        self.state.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    pub fn store(&self, v: u32) {
+        // ordering: Release publishes every slab write sequenced before
+        // this store to the Acquire load on the other side. Leader-only
+        // for ACTIONS_READY/RESET/SHUTDOWN; workers must use
+        // `complete`/POISONED paths so they can never overwrite a
+        // concurrent SHUTDOWN.
+        self.state.store(v, Ordering::Release);
+    }
+
+    /// CAS used by the pool leader to claim an OBS_READY worker exactly
+    /// once.
+    #[inline]
+    pub fn try_claim(&self) -> bool {
+        // ordering: AcqRel on success — Acquire to see the worker's slab
+        // writes behind its OBS_READY edge, Release so pool bookkeeping
+        // sequenced before the claim is visible if anyone chains on
+        // CLAIMED; Acquire on failure because the loaded state may still
+        // be acted on (e.g. observing POISONED).
+        self.state
+            .compare_exchange(OBS_READY, CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Worker-side step-completion edge: `from` → OBS_READY, but only if
+    /// the leader didn't change the state (to SHUTDOWN) while the worker
+    /// was stepping. Returns `false` when preempted — the caller must
+    /// honor the new state (exit) instead of publishing results, because
+    /// a blind `store(OBS_READY)` here would erase the shutdown signal
+    /// and strand the worker in its next wait
+    /// (`tests/loom_models.rs::shutdown_is_never_lost`).
+    #[inline]
+    pub fn complete(&self, from: u32) -> bool {
+        // ordering: AcqRel on success — Release publishes the worker's
+        // freshly written obs/rew/term/trunc regions to the leader's
+        // Acquire load/claim; Acquire on both paths so on failure the
+        // worker synchronizes with the leader's SHUTDOWN store before
+        // tearing down its envs.
+        self.state
+            .compare_exchange(from, OBS_READY, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Busy-wait until the flag matches `pred`, spinning `spin_budget`
+    /// iterations between yields. Returns the matched state.
+    #[inline]
+    pub fn wait(&self, spin_budget: u32, pred: impl Fn(u32) -> bool) -> u32 {
+        loop {
+            for _ in 0..spin_budget.max(1) {
+                let s = self.load();
+                if pred(s) {
+                    return s;
+                }
+                crate::sync::spin_loop_hint();
+            }
+            // Oversubscribed or long step: give the core away. On the
+            // paper's many-core desktop this branch is cold; on small
+            // hosts it is what keeps busy-wait from starving the workers.
+            crate::sync::yield_now();
+        }
+    }
+}
+
+impl Default for Flag {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn slab_regions_round_trip() {
+        let slab = Slab::<f32>::new(8);
+        unsafe {
+            slab.slice_mut(2, 3).copy_from_slice(&[1.0, 2.0, 3.0]);
+            assert_eq!(slab.slice(2, 3), &[1.0, 2.0, 3.0]);
+            assert_eq!(slab.slice(0, 2), &[0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn flag_claim_is_exclusive() {
+        let f = Flag::new();
+        f.store(OBS_READY);
+        assert!(f.try_claim());
+        assert!(!f.try_claim(), "double claim must fail");
+        assert_eq!(f.load(), CLAIMED);
+    }
+
+    #[test]
+    fn flag_complete_takes_the_expected_edge() {
+        let f = Flag::new();
+        f.store(ACTIONS_READY);
+        assert!(f.complete(ACTIONS_READY));
+        assert_eq!(f.load(), OBS_READY);
+    }
+
+    #[test]
+    fn flag_complete_loses_to_a_concurrent_shutdown() {
+        let f = Flag::new();
+        f.store(ACTIONS_READY);
+        // Leader preempts the worker mid-step.
+        f.store(SHUTDOWN);
+        assert!(!f.complete(ACTIONS_READY), "must not erase SHUTDOWN");
+        assert_eq!(f.load(), SHUTDOWN, "shutdown signal survives");
+    }
+
+    #[test]
+    fn flag_protocol_passes_data_across_threads() {
+        let slab = Slab::<u32>::new(4);
+        let flag = Arc::new(Flag::new());
+        let (s2, f2) = (slab.clone(), flag.clone());
+        let t = thread::spawn(move || {
+            f2.wait(16, |s| s == ACTIONS_READY);
+            let val = unsafe { s2.slice(0, 1) }[0];
+            unsafe {
+                s2.slice_mut(1, 1)[0] = val * 2;
+            }
+            assert!(f2.complete(ACTIONS_READY));
+        });
+        unsafe {
+            slab.slice_mut(0, 1)[0] = 21;
+        }
+        flag.store(ACTIONS_READY);
+        flag.wait(16, |s| s == OBS_READY);
+        assert_eq!(unsafe { slab.slice(1, 1) }[0], 42);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_matches_any_predicate() {
+        let f = Flag::new();
+        f.store(SHUTDOWN);
+        let s = f.wait(4, |s| s == ACTIONS_READY || s == SHUTDOWN);
+        assert_eq!(s, SHUTDOWN);
+    }
+
+    #[cfg(all(not(loom), any(debug_assertions, feature = "slab-sentinel")))]
+    mod sentinel {
+        use super::*;
+
+        #[test]
+        fn disjoint_mut_windows_coexist() {
+            let slab = Slab::<u8>::new(8);
+            let (mut a, mut b) = unsafe { (slab.slice_mut(0, 4), slab.slice_mut(4, 4)) };
+            a[0] = 1;
+            b[0] = 2;
+            drop(a);
+            drop(b);
+            assert_eq!(unsafe { slab.slice(0, 8) }, &[1, 0, 0, 0, 2, 0, 0, 0]);
+        }
+
+        #[test]
+        #[should_panic(expected = "overlaps live exclusive window")]
+        fn overlapping_mut_windows_panic() {
+            let slab = Slab::<u8>::new(8);
+            let _a = unsafe { slab.slice_mut(0, 4) };
+            let _b = unsafe { slab.slice_mut(2, 2) };
+        }
+
+        #[test]
+        #[should_panic(expected = "overlaps live exclusive window")]
+        fn shared_read_under_mut_window_panics() {
+            let slab = Slab::<u8>::new(8);
+            let _a = unsafe { slab.slice_mut(0, 4) };
+            let _r = unsafe { slab.slice(3, 1) };
+        }
+
+        #[test]
+        #[should_panic(expected = "overlaps held shared window")]
+        fn mut_window_over_held_region_panics() {
+            let slab = Slab::<u8>::new(8);
+            let _r = unsafe { slab.slice(0, 2) };
+            slab.hold(0, 2);
+            let _w = unsafe { slab.slice_mut(1, 1) };
+        }
+
+        #[test]
+        fn release_reopens_the_region() {
+            let slab = Slab::<u8>::new(8);
+            slab.hold(0, 2);
+            slab.release(0, 2);
+            unsafe { slab.slice_mut(0, 2) }[0] = 9;
+            assert_eq!(unsafe { slab.slice(0, 1) }, &[9]);
+        }
+
+        #[test]
+        fn dropping_a_window_reopens_the_region() {
+            let slab = Slab::<u8>::new(8);
+            {
+                let mut w = unsafe { slab.slice_mut(0, 4) };
+                w[1] = 7;
+            }
+            // Same range again: the drop above must have released it.
+            assert_eq!(unsafe { slab.slice_mut(0, 4) }[1], 7);
+        }
+    }
+}

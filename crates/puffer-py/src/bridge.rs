@@ -1,0 +1,437 @@
+//! The pure-Rust half of the bindings: spec assembly, vectorizer
+//! construction, and the raw step surface the Python package wraps.
+//!
+//! Everything here is plain data in and plain data out — `Vec`s,
+//! `String`s, and slab addresses as `usize` — so the module compiles
+//! and unit-tests without pyo3 (the `python` feature only adds the
+//! CPython skin). The zero-copy contract lives at this boundary:
+//! [`NativeVecEnv::recv`] returns the **addresses** of the batch's
+//! obs/reward/term/trunc regions instead of copying them, and the
+//! Python side reinterprets those addresses as numpy arrays. The
+//! addresses stay valid until the next `recv` on the same object
+//! (full-batch vectorizers reuse one persistent buffer, so in practice
+//! they are stable for the life of the env — the adapter still re-keys
+//! its view cache by address every step, so a vectorizer that rotates
+//! buffers is merely slower, never unsound).
+
+// Bindings glue is plain slice/integer plumbing; the crate's unsafe
+// surface stays in puffer-core's vector/ (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+use anyhow::{Context, Result};
+use puffer_core::config::FlatConfig;
+use puffer_core::runspec::RunSpec;
+use puffer_core::spaces::{Space, StructLayout};
+use puffer_core::util::json::{arr, num, obj, s, Json};
+use puffer_core::vector::VecEnv;
+use std::collections::BTreeMap;
+
+/// One received batch, as raw slab geometry. All addresses point into
+/// buffers owned by the [`NativeVecEnv`] this came from and are
+/// readable for `rows` elements (× the row width for `obs`).
+#[derive(Clone, Debug)]
+pub struct RawBatch {
+    /// Agent rows in the batch (`batch_size × agents_per_env`).
+    pub rows: usize,
+    /// Address of the packed obs rows (`rows × obs_byte_len` bytes).
+    pub obs_ptr: usize,
+    /// Total obs byte length (`rows × obs_byte_len`).
+    pub obs_len: usize,
+    /// Address of the f32 reward row (`rows` elements).
+    pub rew_ptr: usize,
+    /// Address of the bool termination row (`rows` one-byte elements).
+    pub term_ptr: usize,
+    /// Address of the bool truncation row (`rows` one-byte elements).
+    pub trunc_ptr: usize,
+    /// Env indices in row order (`batch_size` entries).
+    pub env_ids: Vec<usize>,
+    /// Non-empty infos drained this step: `(env_id, key/value pairs)`.
+    pub infos: Vec<(usize, Vec<(String, f64)>)>,
+}
+
+/// A built vectorizer plus the spec it came from — the object behind
+/// the Python `VecEnv` class.
+pub struct NativeVecEnv {
+    /// `None` after [`close`](Self::close); every step call errors.
+    venv: Option<Box<dyn VecEnv>>,
+    spec: RunSpec,
+    num_envs: usize,
+    // Geometry snapshot, kept so describe-side accessors outlive close().
+    layout: StructLayout,
+    action_dims: Vec<usize>,
+    agents_per_env: usize,
+    batch_size: usize,
+    obs_space: Space,
+    act_space: Space,
+}
+
+impl NativeVecEnv {
+    /// Build from a parsed spec. Probes one env (index 0) for the space
+    /// trees, then vectorizes via [`RunSpec::build_venv`].
+    pub fn from_spec(spec: RunSpec, num_envs: usize) -> Result<Self> {
+        anyhow::ensure!(num_envs > 0, "num_envs must be >= 1");
+        let probe = spec.env.build(0);
+        let obs_space = probe.observation_space().clone();
+        let act_space = probe.action_space().clone();
+        drop(probe);
+        let venv = spec
+            .build_venv(num_envs)
+            .with_context(|| format!("vectorizing {num_envs}x {}", spec.env.key()))?;
+        Ok(NativeVecEnv {
+            layout: venv.obs_layout().clone(),
+            action_dims: venv.action_dims().to_vec(),
+            agents_per_env: venv.agents_per_env(),
+            batch_size: venv.batch_size(),
+            venv: Some(venv),
+            spec,
+            num_envs,
+            obs_space,
+            act_space,
+        })
+    }
+
+    /// Build from flat dotted `key = value` pairs (the kwargs path:
+    /// `emulate("ocean/squared", num_envs=256, stack=4)` becomes
+    /// `[("env.name", "ocean/squared"), ("env.wrap.stack", "4")]`).
+    /// Exactly the grammar of the TOML files, so kwargs and specs are
+    /// provably equivalent ([`spec_toml`](Self::spec_toml) round-trips).
+    pub fn from_flat_pairs(pairs: &[(String, String)], num_envs: usize) -> Result<Self> {
+        let mut scalars = FlatConfig::new();
+        for (k, v) in pairs {
+            anyhow::ensure!(
+                scalars.insert(k.clone(), v.clone()).is_none(),
+                "duplicate config key '{k}'"
+            );
+        }
+        let spec = RunSpec::from_parts(&scalars, &BTreeMap::new())?;
+        Self::from_spec(spec, num_envs)
+    }
+
+    /// Build from RunSpec TOML text (the spec-file path).
+    pub fn from_toml_str(text: &str, num_envs: usize) -> Result<Self> {
+        Self::from_spec(RunSpec::from_toml_str(text)?, num_envs)
+    }
+
+    /// Build from RunSpec JSON (what checkpoints embed).
+    pub fn from_json_str(text: &str, num_envs: usize) -> Result<Self> {
+        Self::from_spec(RunSpec::from_json_str(text)?, num_envs)
+    }
+
+    fn venv_mut(&mut self) -> Result<&mut Box<dyn VecEnv>> {
+        self.venv.as_mut().context("VecEnv is closed")
+    }
+
+    // -- stepping ------------------------------------------------------------
+
+    /// Dispatch resets to every env; the next [`recv`](Self::recv)
+    /// delivers reset observations with rewards/flags zeroed.
+    pub fn async_reset(&mut self, seed: u64) -> Result<()> {
+        self.venv_mut()?.async_reset(seed);
+        Ok(())
+    }
+
+    /// Block until the next batch is ready and return its slab
+    /// geometry (no observation/reward bytes are copied).
+    pub fn recv(&mut self) -> Result<RawBatch> {
+        let b = self.venv_mut()?.recv()?;
+        Ok(RawBatch {
+            rows: b.rewards.len(),
+            obs_ptr: b.obs.as_ptr() as usize,
+            obs_len: b.obs.len(),
+            rew_ptr: b.rewards.as_ptr() as usize,
+            term_ptr: b.terms.as_ptr() as usize,
+            trunc_ptr: b.truncs.as_ptr() as usize,
+            env_ids: b.env_ids.to_vec(),
+            infos: b
+                .infos
+                .into_iter()
+                .map(|(i, kv)| (i, kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect()))
+                .collect(),
+        })
+    }
+
+    /// Send actions (`batch_rows × action_slots` i32, row order matching
+    /// the last `recv`) to those envs.
+    pub fn send(&mut self, actions: &[i32]) -> Result<()> {
+        self.venv_mut()?.send(actions)
+    }
+
+    /// Drop the vectorizer (joins worker threads). Idempotent; stepping
+    /// afterwards errors.
+    pub fn close(&mut self) {
+        self.venv = None;
+    }
+
+    // -- geometry ------------------------------------------------------------
+
+    pub fn num_envs(&self) -> usize {
+        self.num_envs
+    }
+    pub fn agents_per_env(&self) -> usize {
+        self.agents_per_env
+    }
+    /// Envs per batch (`N`; `< num_envs` on the EnvPool half-batch path).
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+    /// Agent rows per batch.
+    pub fn batch_rows(&self) -> usize {
+        self.batch_size * self.agents_per_env
+    }
+    /// Packed bytes per observation row.
+    pub fn obs_byte_len(&self) -> usize {
+        self.layout.byte_len()
+    }
+    /// Scalars per observation row in the f32 view.
+    pub fn obs_flat_len(&self) -> usize {
+        self.layout.flat_len()
+    }
+    /// Per-slot cardinalities of the MultiDiscrete action interface.
+    pub fn action_dims(&self) -> &[usize] {
+        &self.action_dims
+    }
+
+    // -- descriptions --------------------------------------------------------
+
+    /// The packed [`StructLayout`] as JSON — the numpy structured dtype
+    /// recipe (field names, dtypes, shapes, byte offsets).
+    pub fn layout_json(&self) -> String {
+        layout_to_json(&self.layout).dump()
+    }
+
+    /// The (wrapped) observation space tree as JSON.
+    pub fn obs_space_json(&self) -> String {
+        space_to_json(&self.obs_space).dump()
+    }
+
+    /// The action space tree as JSON.
+    pub fn act_space_json(&self) -> String {
+        space_to_json(&self.act_space).dump()
+    }
+
+    /// The full spec in canonical TOML — byte-identical for any two
+    /// construction paths (kwargs, TOML, JSON) describing the same run.
+    pub fn spec_toml(&self) -> Result<String> {
+        self.spec.to_toml()
+    }
+
+    /// The full spec in canonical JSON (the checkpoint-embedded form).
+    pub fn spec_json(&self) -> String {
+        self.spec.to_json().dump()
+    }
+}
+
+/// [`StructLayout`] → JSON: `byte_len`, `flat_len`, and one entry per
+/// packed field. Dtype names are the Rust-side `f32`/`u8`/`i32`; the
+/// Python adapter maps them to numpy (`<f4`/`|u1`/`<i4` — rows are
+/// little-endian by construction).
+pub fn layout_to_json(layout: &StructLayout) -> Json {
+    let fields = layout
+        .fields()
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("name", s(&f.name)),
+                ("dtype", s(f.dtype.name())),
+                ("shape", arr(f.shape.iter().map(|&d| num(d as f64)).collect())),
+                ("count", num(f.count as f64)),
+                ("byte_offset", num(f.byte_offset as f64)),
+                ("f32_offset", num(f.f32_offset as f64)),
+                ("vocab", num(f.vocab as f64)),
+                ("token_base", num(f.token_base as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("byte_len", num(layout.byte_len() as f64)),
+        ("flat_len", num(layout.flat_len() as f64)),
+        ("fields", arr(fields)),
+    ])
+}
+
+/// [`Space`] → JSON tree. Box bounds travel as strings (`"-inf"`,
+/// `"255"`) because JSON numbers cannot express infinities; Python's
+/// `float()` parses both spellings.
+pub fn space_to_json(space: &Space) -> Json {
+    fn bound(v: f32) -> Json {
+        s(&if v == f32::INFINITY {
+            "inf".to_string()
+        } else if v == f32::NEG_INFINITY {
+            "-inf".to_string()
+        } else {
+            format!("{v}")
+        })
+    }
+    match space {
+        Space::Discrete(n) => obj(vec![("type", s("discrete")), ("n", num(*n as f64))]),
+        Space::MultiDiscrete(nvec) => obj(vec![
+            ("type", s("multidiscrete")),
+            ("nvec", arr(nvec.iter().map(|&n| num(n as f64)).collect())),
+        ]),
+        Space::Box {
+            dtype,
+            shape,
+            low,
+            high,
+        } => obj(vec![
+            ("type", s("box")),
+            ("dtype", s(dtype.name())),
+            ("shape", arr(shape.iter().map(|&d| num(d as f64)).collect())),
+            ("low", bound(*low)),
+            ("high", bound(*high)),
+        ]),
+        Space::Tuple(subs) => obj(vec![
+            ("type", s("tuple")),
+            ("items", arr(subs.iter().map(space_to_json).collect())),
+        ]),
+        // Entries as an ordered [name, space] list — a JSON object would
+        // re-sort keys, and canonical order is load-bearing for offsets.
+        Space::Dict(entries) => obj(vec![
+            ("type", s("dict")),
+            (
+                "entries",
+                arr(entries
+                    .iter()
+                    .map(|(k, sub)| arr(vec![s(k), space_to_json(sub)]))
+                    .collect()),
+            ),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pairs(kv: &[(&str, &str)]) -> Vec<(String, String)> {
+        kv.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    #[test]
+    fn builds_and_steps_from_flat_pairs() {
+        let mut venv = NativeVecEnv::from_flat_pairs(
+            &pairs(&[("env.name", "ocean/squared"), ("vec.mode", "serial")]),
+            4,
+        )
+        .unwrap();
+        assert_eq!(venv.num_envs(), 4);
+        assert_eq!(venv.batch_rows(), 4);
+        venv.async_reset(7).unwrap();
+        let b = venv.recv().unwrap();
+        assert_eq!(b.rows, 4);
+        assert_eq!(b.obs_len, 4 * venv.obs_byte_len());
+        assert_eq!(b.env_ids, vec![0, 1, 2, 3]);
+        assert_ne!(b.obs_ptr, 0);
+        let slots = venv.action_dims().len();
+        venv.send(&vec![0i32; 4 * slots]).unwrap();
+        // Full-batch vectorizers reuse one persistent buffer: the slab
+        // address must be stable across steps — this is what makes the
+        // Python side's cached numpy views alias live data.
+        let b2 = venv.recv().unwrap();
+        assert_eq!(b2.obs_ptr, b.obs_ptr);
+        assert_eq!(b2.rew_ptr, b.rew_ptr);
+    }
+
+    #[test]
+    fn kwargs_and_toml_specs_are_equivalent() {
+        let from_kwargs = NativeVecEnv::from_flat_pairs(
+            &pairs(&[
+                ("env.name", "ocean/squared"),
+                ("env.wrap.stack", "2"),
+                ("vec.mode", "serial"),
+                ("seed", "9"),
+            ]),
+            2,
+        )
+        .unwrap();
+        let toml = from_kwargs.spec_toml().unwrap();
+        let from_toml = NativeVecEnv::from_toml_str(&toml, 2).unwrap();
+        assert_eq!(from_toml.spec_toml().unwrap(), toml);
+        assert_eq!(from_toml.obs_byte_len(), from_kwargs.obs_byte_len());
+        // And through JSON (the checkpoint-embedded form).
+        let from_json =
+            NativeVecEnv::from_json_str(&from_kwargs.spec_json(), 2).unwrap();
+        assert_eq!(from_json.spec_toml().unwrap(), toml);
+    }
+
+    #[test]
+    fn close_is_idempotent_and_stepping_after_close_errors() {
+        let mut venv = NativeVecEnv::from_flat_pairs(
+            &pairs(&[("env.name", "ocean/bandit"), ("vec.mode", "serial")]),
+            1,
+        )
+        .unwrap();
+        venv.close();
+        venv.close();
+        assert!(venv.async_reset(0).is_err());
+        assert!(venv.recv().is_err());
+        // Geometry accessors survive close (describe-only use).
+        assert_eq!(venv.num_envs(), 1);
+        assert!(venv.obs_byte_len() > 0);
+    }
+
+    #[test]
+    fn layout_json_names_every_field() {
+        let venv = NativeVecEnv::from_flat_pairs(
+            &pairs(&[("env.name", "ocean/spaces"), ("vec.mode", "serial")]),
+            1,
+        )
+        .unwrap();
+        let j = Json::parse(&venv.layout_json()).unwrap();
+        let fields = j.get("fields").as_arr().unwrap();
+        assert!(!fields.is_empty());
+        let byte_len = j.get("byte_len").as_usize().unwrap();
+        assert_eq!(byte_len, venv.obs_byte_len());
+        // Fields are packed in order: offsets never decrease.
+        let mut prev = 0usize;
+        for f in fields {
+            let off = f.get("byte_offset").as_usize().unwrap();
+            assert!(off >= prev, "field offsets must be packed in order");
+            prev = off;
+        }
+    }
+
+    #[test]
+    fn space_json_round_trips_bounds_and_order() {
+        let sp = Space::dict(vec![
+            ("b".into(), Space::boxf(&[3], f32::NEG_INFINITY, f32::INFINITY)),
+            ("a".into(), Space::Discrete(5)),
+        ]);
+        let j = space_to_json(&sp);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("type").as_str(), Some("dict"));
+        let entries = parsed.get("entries").as_arr().unwrap();
+        // Canonical (sorted) order preserved as a list.
+        assert_eq!(entries[0].at(0).as_str(), Some("a"));
+        assert_eq!(entries[1].at(0).as_str(), Some("b"));
+        let b = entries[1].at(1);
+        assert_eq!(b.get("low").as_str(), Some("-inf"));
+        assert_eq!(b.get("high").as_str(), Some("inf"));
+    }
+
+    #[test]
+    fn multiagent_and_pooled_geometry_is_reported() {
+        let venv = NativeVecEnv::from_flat_pairs(
+            &pairs(&[("env.name", "ocean/multiagent"), ("vec.mode", "serial")]),
+            3,
+        )
+        .unwrap();
+        assert_eq!(venv.agents_per_env(), 2);
+        assert_eq!(venv.batch_rows(), 6);
+        // Pooled (half-batch) vectorization: batch < num_envs. The
+        // Python Gymnasium adapter refuses this shape; the raw class
+        // reports it honestly.
+        let pooled = NativeVecEnv::from_flat_pairs(
+            &pairs(&[
+                ("env.name", "ocean/squared"),
+                ("vec.mode", "mt"),
+                ("vec.workers", "2"),
+                ("vec.batch", "half"),
+            ]),
+            4,
+        )
+        .unwrap();
+        assert_eq!(pooled.batch_size(), 2);
+        assert_eq!(pooled.num_envs(), 4);
+    }
+}

@@ -1,0 +1,37 @@
+//! `puffer-py` — the Python binding crate: a PyO3 `cdylib` over
+//! `puffer-core` that hands CPython **zero-copy numpy views** of the
+//! Rust vectorizer slabs (paper §3.2: the shared-memory observation
+//! buffers are the product; copying them per step would throw away the
+//! vectorization win).
+//!
+//! ## Architecture
+//!
+//! - [`bridge`] (always compiled, pure Rust) — assembles a
+//!   [`RunSpec`](puffer_core::runspec::RunSpec) from flat kwargs pairs /
+//!   TOML / JSON, builds the vectorizer via `RunSpec::build_venv`, and
+//!   exposes the recv/send step surface as **raw slab addresses +
+//!   lengths** plus JSON descriptions of the packed
+//!   [`StructLayout`](puffer_core::spaces::StructLayout) and the
+//!   space trees. No `unsafe`: pointers leave as plain integers.
+//! - `module` (behind the off-by-default `python` cargo feature) — the
+//!   thin `#[pyclass]`/`#[pymodule]` skin (`pufferlib._puffer`) over the
+//!   bridge. The numpy side lives in `python/pufferlib/`: it wraps the
+//!   addresses with `np.ctypeslib` into arrays that alias the Rust
+//!   slabs, caches them keyed by address, and presents the Gymnasium
+//!   `VectorEnv` interface CleanRL/SB3 already speak.
+//!
+//! The feature split keeps the offline workspace build (`cargo build` /
+//! `cargo test` from the repo root) free of the pyo3 dependency — the
+//! stub build still compiles and unit-tests every line of [`bridge`] —
+//! while `maturin build --features python` (see the repo-root
+//! `pyproject.toml`) produces the abi3 wheel.
+//!
+//! This crate depends on `puffer-core` **only**. That is the point of
+//! the workspace split: importing `pufferlib` in Python links the
+//! spaces/emulation/vector stack and nothing from `puffer-train` (no
+//! PPO loop, no kernels, no server).
+
+pub mod bridge;
+
+#[cfg(feature = "python")]
+mod module;

@@ -1,0 +1,150 @@
+//! The CPython skin over [`crate::bridge`]: one `#[pyclass]` (`VecEnv`)
+//! plus module metadata, compiled only with `--features python` and
+//! imported as `pufferlib._puffer` (maturin names the module; see the
+//! repo-root `pyproject.toml`).
+//!
+//! Deliberately dumb: every method is a forwarder that converts
+//! `anyhow::Error` into `RuntimeError` and releases the GIL around
+//! blocking vectorizer calls (`recv` parks on worker slabs; holding the
+//! GIL there would serialize Python-side threads against env stepping).
+//! All numpy construction happens in `python/pufferlib/` from the raw
+//! addresses [`bridge::RawBatch`](crate::bridge::RawBatch) reports.
+
+use crate::bridge::NativeVecEnv;
+use pyo3::exceptions::PyRuntimeError;
+use pyo3::prelude::*;
+
+fn to_py_err(e: anyhow::Error) -> PyErr {
+    PyRuntimeError::new_err(format!("{e:#}"))
+}
+
+/// The raw vectorized-env handle. `recv` returns slab addresses, not
+/// arrays — use `pufferlib.emulate(...)` / `pufferlib.vector` for the
+/// numpy/Gymnasium surface.
+#[pyclass(module = "pufferlib._puffer")]
+pub struct VecEnv {
+    inner: NativeVecEnv,
+}
+
+type RecvTuple = (
+    usize,                                // rows
+    usize,                                // obs address
+    usize,                                // obs byte length
+    usize,                                // rewards address
+    usize,                                // terms address
+    usize,                                // truncs address
+    Vec<usize>,                           // env ids
+    Vec<(usize, Vec<(String, f64)>)>,     // infos
+);
+
+#[pymethods]
+impl VecEnv {
+    /// Build from flat dotted `key = value` pairs (the kwargs path).
+    #[staticmethod]
+    fn from_flat_pairs(pairs: Vec<(String, String)>, num_envs: usize) -> PyResult<Self> {
+        Ok(VecEnv {
+            inner: NativeVecEnv::from_flat_pairs(&pairs, num_envs).map_err(to_py_err)?,
+        })
+    }
+
+    /// Build from RunSpec TOML text.
+    #[staticmethod]
+    fn from_toml(text: &str, num_envs: usize) -> PyResult<Self> {
+        Ok(VecEnv {
+            inner: NativeVecEnv::from_toml_str(text, num_envs).map_err(to_py_err)?,
+        })
+    }
+
+    /// Build from RunSpec JSON text (what checkpoints embed).
+    #[staticmethod]
+    fn from_json(text: &str, num_envs: usize) -> PyResult<Self> {
+        Ok(VecEnv {
+            inner: NativeVecEnv::from_json_str(text, num_envs).map_err(to_py_err)?,
+        })
+    }
+
+    fn async_reset(&mut self, py: Python<'_>, seed: u64) -> PyResult<()> {
+        let inner = &mut self.inner;
+        py.allow_threads(|| inner.async_reset(seed)).map_err(to_py_err)
+    }
+
+    /// Blocking receive. Returns `(rows, obs_ptr, obs_len, rew_ptr,
+    /// term_ptr, trunc_ptr, env_ids, infos)`; the pointers alias slabs
+    /// owned by this object and are valid until the next `recv`/`close`.
+    fn recv(&mut self, py: Python<'_>) -> PyResult<RecvTuple> {
+        let inner = &mut self.inner;
+        let b = py.allow_threads(|| inner.recv()).map_err(to_py_err)?;
+        Ok((
+            b.rows,
+            b.obs_ptr,
+            b.obs_len,
+            b.rew_ptr,
+            b.term_ptr,
+            b.trunc_ptr,
+            b.env_ids,
+            b.infos,
+        ))
+    }
+
+    /// Send one i32 action slot row per agent row of the last `recv`.
+    fn send(&mut self, py: Python<'_>, actions: Vec<i32>) -> PyResult<()> {
+        let inner = &mut self.inner;
+        py.allow_threads(|| inner.send(&actions)).map_err(to_py_err)
+    }
+
+    /// Drop the vectorizer and join its workers. Idempotent.
+    fn close(&mut self) {
+        self.inner.close();
+    }
+
+    #[getter]
+    fn num_envs(&self) -> usize {
+        self.inner.num_envs()
+    }
+    #[getter]
+    fn agents_per_env(&self) -> usize {
+        self.inner.agents_per_env()
+    }
+    #[getter]
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    #[getter]
+    fn batch_rows(&self) -> usize {
+        self.inner.batch_rows()
+    }
+    #[getter]
+    fn obs_byte_len(&self) -> usize {
+        self.inner.obs_byte_len()
+    }
+    #[getter]
+    fn obs_flat_len(&self) -> usize {
+        self.inner.obs_flat_len()
+    }
+
+    fn action_dims(&self) -> Vec<usize> {
+        self.inner.action_dims().to_vec()
+    }
+    fn layout_json(&self) -> String {
+        self.inner.layout_json()
+    }
+    fn obs_space_json(&self) -> String {
+        self.inner.obs_space_json()
+    }
+    fn act_space_json(&self) -> String {
+        self.inner.act_space_json()
+    }
+    fn spec_toml(&self) -> PyResult<String> {
+        self.inner.spec_toml().map_err(to_py_err)
+    }
+    fn spec_json(&self) -> String {
+        self.inner.spec_json()
+    }
+}
+
+#[pymodule]
+fn _puffer(m: &Bound<'_, PyModule>) -> PyResult<()> {
+    m.add_class::<VecEnv>()?;
+    m.add("__version__", env!("CARGO_PKG_VERSION"))?;
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! **Bench R1** — RunSpec-construction microbench: how much the
+//! declarative layer costs. Cells:
+//!
+//! - `parse_toml` — TOML text → RunSpec (the `puffer run` hot path),
+//! - `to_toml` — canonical serialization (checkpoint/validate path),
+//! - `json_round_trip` — to_json → parse (what every checkpoint embeds),
+//! - `expand_grid` — 16-point sweep expansion,
+//! - `build_trainer` — full `RunSpec::build()` (probe + backend +
+//!   serial vectorizer + buffers), the end-to-end construction cost.
+//!
+//! `PUFFER_BENCH_JSON` writes machine-readable results (`make bench`
+//! sets it to `BENCH_runspec.json`).
+
+use pufferlib::runspec::{RunSpec, RunSpecExt as _};
+use pufferlib::util::json::{arr, num, obj, s};
+use pufferlib::util::timer::Timer;
+use pufferlib::vector::VecSpec;
+use pufferlib::wrappers::EnvSpec;
+
+fn spec_toml() -> String {
+    let mut spec = RunSpec::new(EnvSpec::new("ocean/spaces").clip_reward(1.0).stack(2))
+        .with_policy(
+            pufferlib::policy::PolicySpec::default()
+                .with_hidden(64)
+                .with_embed_dim(8),
+        )
+        .with_vec(VecSpec::pooled(2))
+        .with_seed(42)
+        .with_train(|t| {
+            t.total_steps = 30_000;
+            t.minibatches = 2;
+        });
+    spec.grid
+        .insert("train.lr".into(), vec!["0.001".into(), "0.002".into(), "0.003".into(), "0.004".into()]);
+    spec.grid
+        .insert("seed".into(), vec!["1".into(), "2".into(), "3".into(), "4".into()]);
+    spec.to_toml().unwrap()
+}
+
+/// Time `iters` runs of `f`, returning ns/op.
+fn bench(iters: u64, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let t = Timer::start();
+    for _ in 0..iters {
+        f();
+    }
+    t.secs() * 1e9 / iters as f64
+}
+
+fn main() {
+    let json_path = std::env::var("PUFFER_BENCH_JSON").ok();
+    let toml = spec_toml();
+    let spec = RunSpec::from_toml_str(&toml).unwrap();
+    let json = spec.to_json().dump();
+    let single = {
+        let mut s = spec.clone();
+        s.grid.clear();
+        s.with_vec(VecSpec::Serial).with_train(|t| {
+            t.total_steps = 0;
+            t.log_every = 0;
+            t.run_dir = None;
+        })
+    };
+
+    let mut cells: Vec<(&str, u64, f64)> = Vec::new();
+    cells.push(("parse_toml", 2000, bench(2000, || {
+        let _ = RunSpec::from_toml_str(&toml).unwrap();
+    })));
+    cells.push(("to_toml", 2000, bench(2000, || {
+        let _ = spec.to_toml().unwrap();
+    })));
+    cells.push(("json_round_trip", 2000, bench(2000, || {
+        let _ = RunSpec::from_json_str(&json).unwrap();
+    })));
+    cells.push(("expand_grid", 500, bench(500, || {
+        assert_eq!(spec.expand_grid().unwrap().len(), 16);
+    })));
+    cells.push(("build_trainer", 20, bench(20, || {
+        let _ = single.build().unwrap();
+    })));
+
+    println!("# Bench R1 — RunSpec construction (ns/op)");
+    println!("| {:<16} | {:>8} | {:>14} |", "cell", "iters", "ns/op");
+    println!("|{}|{}|{}|", "-".repeat(18), "-".repeat(10), "-".repeat(16));
+    for (name, iters, ns) in &cells {
+        println!("| {name:<16} | {iters:>8} | {ns:>14.0} |");
+    }
+
+    if let Some(path) = json_path {
+        let out = obj(vec![
+            ("bench", s("runspec")),
+            ("method", s("measured")),
+            (
+                "cells",
+                arr(cells
+                    .iter()
+                    .map(|(name, iters, ns)| {
+                        obj(vec![
+                            ("cell", s(name)),
+                            ("iters", num(*iters as f64)),
+                            ("ns_per_op", num(*ns)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]);
+        match std::fs::write(&path, out.dump()) {
+            Ok(()) => println!("\n# wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
+}

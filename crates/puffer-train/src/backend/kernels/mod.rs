@@ -1,0 +1,159 @@
+//! Vectorized, multithreaded compute kernels for the native backend.
+//!
+//! This module is the Rust analogue of the Pallas kernel tree under
+//! `python/compile/kernels/`: cache-blocked GEMM microkernels tiled to
+//! an 8-wide f32 lane ([`LANES`], the AVX2/NEON-friendly width LLVM
+//! auto-vectorizes hand-unrolled `[f32; 8]` arithmetic into), a fused
+//! LSTM cell (one pass for all four gates), branch-free fast
+//! transcendentals, and a deterministic Adam update.
+//!
+//! ## Kernel paths
+//!
+//! Every kernel exists in two flavors behind [`KernelPath`]:
+//!
+//! - [`KernelPath::Scalar`] — the original, bit-exact transcription of
+//!   `ref.py` / `model.py`. Pinned by the golden fixtures and every
+//!   bit-identity test in the repo; byte-for-byte the pre-kernel math.
+//! - [`KernelPath::Simd`] (default) — lane-tiled microkernels with
+//!   structured fork-join row parallelism. Validated against the scalar
+//!   path and the fixtures at explicit tolerances
+//!   (`crates/puffer-train/tests/kernel_parity.rs`).
+//!
+//! ## Determinism
+//!
+//! Parallelism never introduces nondeterminism: threads partition
+//! **output** elements only — each output row is computed by exactly one
+//! thread running the identical sequential reduction, so results are
+//! invariant to the thread count (`PUFFER_KERNEL_THREADS=1` and `=N`
+//! produce bitwise-identical floats) and to how rows are grouped into
+//! batches. There are no cross-thread reductions, no atomics, and no
+//! shared mutable state: [`for_each_row_band`] hands each scoped thread
+//! a disjoint `&mut` band via `split_at_mut` and joins before returning
+//! (see `CONCURRENCY.md`, "Kernel fork-join").
+#![forbid(unsafe_code)]
+
+pub mod adam;
+pub mod elementwise;
+pub mod gemm;
+pub mod lstm;
+
+/// The f32 lane width every microkernel tiles to. Eight lanes = one
+/// AVX2 register / two NEON registers; hand-unrolled `[f32; 8]` blocks
+/// reliably auto-vectorize at this width.
+pub const LANES: usize = 8;
+
+/// Minimum multiply-add count before a kernel forks worker threads.
+/// Below this, `std::thread::scope` spawn/join overhead (~tens of µs)
+/// outweighs the parallel speedup and the kernel runs on the calling
+/// thread. 2M mul-adds ≈ 0.5 ms scalar — comfortably past break-even.
+const PAR_THRESHOLD: usize = 2 << 20;
+
+// The selector enum is plain data the spec layer parses (`train.kernels`),
+// so it lives in puffer-core; re-exported here so
+// `crate::backend::kernels::KernelPath` keeps resolving.
+pub use puffer_core::backend::KernelPath;
+
+/// Worker-thread budget for kernel fork-join, resolved once at backend
+/// construction: `PUFFER_KERNEL_THREADS` if set (clamped to [1, 64]),
+/// else the machine's available parallelism capped at 8 — GEMMs at our
+/// sizes stop scaling past a handful of cores, and the trainer's
+/// collector/vectorizer threads need cores too.
+pub fn thread_cap_from_env() -> usize {
+    if let Ok(v) = std::env::var("PUFFER_KERNEL_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 8)
+}
+
+/// How many bands to split `rows` output rows into, given the thread
+/// budget and the per-row multiply-add cost. Returns 1 (run inline)
+/// unless the total work clears [`PAR_THRESHOLD`]; never more bands
+/// than rows. The band count depends only on (threads, rows, work) —
+/// but results never depend on it at all, because bands partition
+/// outputs (see module docs).
+pub(crate) fn plan_bands(threads: usize, rows: usize, muladds_per_row: usize) -> usize {
+    if threads <= 1 || rows == 0 {
+        return 1;
+    }
+    let total = rows.saturating_mul(muladds_per_row);
+    if total < PAR_THRESHOLD {
+        return 1;
+    }
+    // Don't fork more bands than threshold-sized chunks of work.
+    threads.min(rows).min(total / PAR_THRESHOLD + 1)
+}
+
+/// Structured fork-join over disjoint row bands of `out`: splits
+/// `out` (`rows × row_w`, row-major) into `bands` contiguous bands and
+/// runs `f(first_row, band_slice)` on each, on scoped threads when
+/// `bands > 1`. Every band is a disjoint `&mut` (via `split_at_mut`);
+/// the scope joins all threads before returning, so no reference
+/// escapes and no synchronization beyond spawn/join exists.
+pub(crate) fn for_each_row_band<F>(out: &mut [f32], rows: usize, row_w: usize, bands: usize, f: &F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_w);
+    if bands <= 1 || rows <= 1 {
+        f(0, out);
+        return;
+    }
+    let per = rows.div_ceil(bands);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let take = per.min(rows - r0);
+            let (band, tail) = rest.split_at_mut(take * row_w);
+            rest = tail;
+            let first = r0;
+            // The calling thread takes the final band itself instead of
+            // sitting idle in join.
+            if r0 + take >= rows {
+                f(first, band);
+            } else {
+                s.spawn(move || f(first, band));
+            }
+            r0 += take;
+        }
+    });
+}
+
+/// Load an 8-lane block starting at `off`. The caller guarantees
+/// `off + LANES <= s.len()`; the bounds are checked once here rather
+/// than per lane, which is what lets LLVM keep the block in one vector
+/// register.
+#[inline(always)]
+pub(crate) fn load8(s: &[f32], off: usize) -> [f32; 8] {
+    let mut v = [0.0f32; 8];
+    v.copy_from_slice(&s[off..off + 8]);
+    v
+}
+
+/// Store an 8-lane block starting at `off`.
+#[inline(always)]
+pub(crate) fn store8(s: &mut [f32], off: usize, v: [f32; 8]) {
+    s[off..off + 8].copy_from_slice(&v);
+}
+
+/// `acc += a * b` over 8 lanes (fused multiply-add shape).
+#[inline(always)]
+pub(crate) fn fma8(acc: &mut [f32; 8], a: f32, b: [f32; 8]) {
+    for l in 0..8 {
+        acc[l] += a * b[l];
+    }
+}
+
+/// Fixed-order horizontal sum of 8 lanes: pairwise tree so the result
+/// is independent of how many rows preceded it and identical on every
+/// call with the same lanes.
+#[inline(always)]
+pub(crate) fn hsum8(v: [f32; 8]) -> f32 {
+    let a = [v[0] + v[4], v[1] + v[5], v[2] + v[6], v[3] + v[7]];
+    (a[0] + a[2]) + (a[1] + a[3])
+}

@@ -1,0 +1,324 @@
+//! The compute-backend layer: one trait, [`PolicyBackend`], between the
+//! coordinator (trainer + rollout + policy) and whatever executes the
+//! learner math.
+//!
+//! Two implementations ship:
+//!
+//! - [`NativeBackend`] (default) — a pure-Rust port of the reference math
+//!   in `python/compile/kernels/ref.py` / `gae.py` and `model.py`, built
+//!   from a resolved [`PolicySpec`](crate::policy::PolicySpec): per-leaf
+//!   observation encoders (raw or embedding tables), the trunk MLP
+//!   forward, the LSTM cell **and full BPTT training**, the GAE reverse
+//!   scan, and the full clipped-surrogate PPO update (hand-derived
+//!   backprop + global-norm clip + Adam). Zero native dependencies: the
+//!   crate builds and trains on a clean machine with no XLA artifacts
+//!   and no Python.
+//! - `PjrtBackend` (`pjrt` cargo feature) — the original AOT path: JAX/
+//!   Pallas entry points lowered to HLO text by `python/compile/aot.py`
+//!   and executed through the PJRT C API. Executes default architectures
+//!   only (the shapes are baked into the artifacts).
+//!
+//! Both speak the same flat-parameter contract (the alphabetical
+//! `ravel_pytree` order of `model.py`), so checkpoints written against
+//! one backend restore against the other **when the resolved
+//! architectures match** — [`crate::train::Trainer::restore`] rejects
+//! mismatched architecture keys and parameter counts. Golden-value
+//! parity between the two is pinned by `crates/puffer-train/tests/native_parity.rs`
+//! against fixtures generated from the JAX reference
+//! (`python/compile/gen_fixtures.py`).
+
+pub mod kernels;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use kernels::KernelPath;
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use crate::runtime::SpecManifest;
+use anyhow::Result;
+
+/// Output of a feedforward policy pass over `rows` observations.
+#[derive(Clone, Debug, Default)]
+pub struct Forward {
+    /// `rows × sum(act_dims)` logits, row-major.
+    pub logits: Vec<f32>,
+    /// `rows` value estimates.
+    pub values: Vec<f32>,
+}
+
+/// Output of a recurrent (one LSTM cell step) policy pass.
+#[derive(Clone, Debug, Default)]
+pub struct ForwardLstm {
+    pub logits: Vec<f32>,
+    pub values: Vec<f32>,
+    /// Updated hidden state, `rows × hidden`.
+    pub h: Vec<f32>,
+    /// Updated cell state, `rows × hidden`.
+    pub c: Vec<f32>,
+}
+
+/// Flat Adam optimizer state (same length as the parameter vector).
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl AdamState {
+    pub fn new(n_params: usize) -> Self {
+        AdamState {
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            step: 0.0,
+        }
+    }
+}
+
+/// One PPO update's worth of rollout data, time-major `(T, R)` over all
+/// agent rows — a full segment, or a row-subset minibatch produced by
+/// [`TrainBatch::gather_rows`]. Feedforward backends flatten to
+/// `N = T × R` sample rows; recurrent backends keep the time structure
+/// (and the `starts` episode boundaries) for BPTT.
+pub struct TrainBatch<'a> {
+    /// Rollout segment length `T`.
+    pub t: usize,
+    /// Agent rows `R` in this batch (`batch_roll`, or
+    /// `batch_roll / minibatches` for a minibatch view).
+    pub r: usize,
+    /// Normalize advantages (mean/var over *this* batch — i.e. per
+    /// minibatch once the segment is split) inside the surrogate loss.
+    pub norm_adv: bool,
+    /// `(T, R, obs_dim)` f32.
+    pub obs: &'a [f32],
+    /// `(T, R)`: 1.0 where the stored obs begins a new episode.
+    pub starts: &'a [f32],
+    /// `(T, R, slots)` i32.
+    pub actions: &'a [i32],
+    /// `(T, R)` behavior log-probs.
+    pub logp: &'a [f32],
+    /// `(T, R)` advantages (from [`PolicyBackend::gae`]).
+    pub adv: &'a [f32],
+    /// `(T, R)` returns.
+    pub ret: &'a [f32],
+}
+
+/// Reusable owned storage backing a minibatch view gathered out of a full
+/// `(T, R)` segment — one allocation, recycled across minibatches and
+/// epochs.
+#[derive(Default)]
+pub struct MinibatchScratch {
+    obs: Vec<f32>,
+    starts: Vec<f32>,
+    actions: Vec<i32>,
+    logp: Vec<f32>,
+    adv: Vec<f32>,
+    ret: Vec<f32>,
+}
+
+impl TrainBatch<'_> {
+    /// Gather the row subset `rows` (indices into `0..self.r`) into
+    /// `scratch`, returning a dense time-major `(T, rows.len())` batch.
+    ///
+    /// Minibatching slices **whole rows**: each selected agent row keeps
+    /// its full `T`-step trajectory and its `starts` episode-boundary
+    /// flags, so recurrent (BPTT) backends see intact time structure —
+    /// shuffling permutes rows, never time steps (LSTM-start-aware
+    /// slicing).
+    pub fn gather_rows<'s>(
+        &self,
+        rows: &[usize],
+        scratch: &'s mut MinibatchScratch,
+    ) -> TrainBatch<'s> {
+        let (t_dim, r_dim) = (self.t, self.r);
+        let n = t_dim * r_dim;
+        let d = self.obs.len() / n;
+        let slots = self.actions.len() / n;
+        let rb = rows.len();
+        debug_assert!(rows.iter().all(|&g| g < r_dim), "row index out of range");
+
+        scratch.obs.resize(t_dim * rb * d, 0.0);
+        scratch.starts.resize(t_dim * rb, 0.0);
+        scratch.actions.resize(t_dim * rb * slots, 0);
+        scratch.logp.resize(t_dim * rb, 0.0);
+        scratch.adv.resize(t_dim * rb, 0.0);
+        scratch.ret.resize(t_dim * rb, 0.0);
+        for ti in 0..t_dim {
+            for (j, &g) in rows.iter().enumerate() {
+                let src = ti * r_dim + g;
+                let dst = ti * rb + j;
+                scratch.obs[dst * d..(dst + 1) * d]
+                    .copy_from_slice(&self.obs[src * d..(src + 1) * d]);
+                scratch.actions[dst * slots..(dst + 1) * slots]
+                    .copy_from_slice(&self.actions[src * slots..(src + 1) * slots]);
+                scratch.starts[dst] = self.starts[src];
+                scratch.logp[dst] = self.logp[src];
+                scratch.adv[dst] = self.adv[src];
+                scratch.ret[dst] = self.ret[src];
+            }
+        }
+        TrainBatch {
+            t: t_dim,
+            r: rb,
+            norm_adv: self.norm_adv,
+            obs: &scratch.obs,
+            starts: &scratch.starts,
+            actions: &scratch.actions,
+            logp: &scratch.logp,
+            adv: &scratch.adv,
+            ret: &scratch.ret,
+        }
+    }
+}
+
+/// The narrow waist between the trainer/policy and the learner math:
+/// policy forward, value head, GAE, and the PPO update.
+///
+/// Parameters travel as one opaque flat f32 vector owned by the caller
+/// (the [`Policy`](crate::policy::Policy) / the trainer); backends define
+/// its layout via [`PolicyBackend::init_params`] and consume it
+/// everywhere else.
+pub trait PolicyBackend: Send {
+    /// The shape contract this backend was built for.
+    fn spec(&self) -> &SpecManifest;
+
+    /// Spec key, e.g. `"ocean_bandit"` (checkpoint compatibility).
+    fn key(&self) -> &str;
+
+    /// Produce the initial flat parameter vector (`spec().n_params` long).
+    fn init_params(&mut self) -> Result<Vec<f32>>;
+
+    /// Feedforward pass: `obs` is `rows × obs_dim` f32, row-major.
+    fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward>;
+
+    /// Recurrent pass: one LSTM cell step with per-row state `h`, `c`
+    /// (`rows × hidden` each).
+    fn forward_lstm(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h: &[f32],
+        c: &[f32],
+        rows: usize,
+    ) -> Result<ForwardLstm>;
+
+    /// Generalized Advantage Estimation over the `(T, R)` rollout
+    /// (`horizon × batch_roll` from the spec). Returns
+    /// `(advantages, returns)`, both `(T, R)`.
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        dones: &[f32],
+        last_values: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// One clipped-surrogate PPO update, applied in place to `params` and
+    /// `opt`. Returns `[loss, pg_loss, v_loss, entropy, approx_kl]`.
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]>;
+
+    /// Clone this backend for concurrent rollout inference on the
+    /// pipelined trainer's collector thread (only `forward`/`forward_lstm`
+    /// are called on the fork; the learner keeps `self` for
+    /// `gae`/`train_step`). Backends whose execution state cannot run
+    /// concurrently keep this default error — the serial path
+    /// (`pipeline.depth = 0`) never calls it.
+    fn fork_for_rollout(&self) -> Result<Box<dyn PolicyBackend>> {
+        anyhow::bail!(
+            "backend '{}' does not support pipelined collection \
+             (train.pipeline.depth > 0); use the serial trainer \
+             (--pipeline.depth=0)",
+            self.key()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type SeqBatch = (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+    fn seq_batch(t: usize, r: usize, d: usize, slots: usize) -> SeqBatch {
+        let n = t * r;
+        (
+            (0..n * d).map(|i| i as f32).collect(),
+            (0..n).map(|i| (i % 3 == 0) as u8 as f32).collect(),
+            (0..n * slots).map(|i| i as i32).collect(),
+            (0..n).map(|i| -(i as f32)).collect(),
+            (0..n).map(|i| 0.5 * i as f32).collect(),
+            (0..n).map(|i| 2.0 * i as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn gather_rows_keeps_time_major_layout() {
+        let (t, r, d, slots) = (3, 4, 2, 2);
+        let (obs, starts, actions, logp, adv, ret) = seq_batch(t, r, d, slots);
+        let full = TrainBatch {
+            t,
+            r,
+            norm_adv: true,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let mut scratch = MinibatchScratch::default();
+        let mb = full.gather_rows(&[2, 0], &mut scratch);
+        assert_eq!((mb.t, mb.r), (3, 2));
+        assert!(mb.norm_adv);
+        for ti in 0..t {
+            for (j, g) in [2usize, 0].into_iter().enumerate() {
+                let src = ti * r + g;
+                let dst = ti * 2 + j;
+                assert_eq!(mb.obs[dst * d..(dst + 1) * d], obs[src * d..(src + 1) * d]);
+                assert_eq!(
+                    mb.actions[dst * slots..(dst + 1) * slots],
+                    actions[src * slots..(src + 1) * slots]
+                );
+                assert_eq!(mb.starts[dst], starts[src]);
+                assert_eq!(mb.logp[dst], logp[src]);
+                assert_eq!(mb.adv[dst], adv[src]);
+                assert_eq!(mb.ret[dst], ret[src]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_all_rows_in_order_is_identity() {
+        let (t, r, d, slots) = (2, 3, 1, 1);
+        let (obs, starts, actions, logp, adv, ret) = seq_batch(t, r, d, slots);
+        let full = TrainBatch {
+            t,
+            r,
+            norm_adv: false,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let mut scratch = MinibatchScratch::default();
+        let mb = full.gather_rows(&[0, 1, 2], &mut scratch);
+        assert_eq!(mb.obs, &obs[..]);
+        assert_eq!(mb.starts, &starts[..]);
+        assert_eq!(mb.actions, &actions[..]);
+        assert_eq!(mb.logp, &logp[..]);
+        assert_eq!(mb.adv, &adv[..]);
+        assert_eq!(mb.ret, &ret[..]);
+    }
+}

@@ -1,0 +1,1607 @@
+//! [`NativeBackend`] — the default, dependency-free compute backend: a
+//! pure-Rust port of the reference math the Pallas kernels are checked
+//! against (`python/compile/kernels/ref.py`, `gae.py`) and of the Clean
+//! PuffeRL learner in `python/compile/model.py`.
+//!
+//! Since the PolicySpec redesign the backend builds its forward **and
+//! backward** passes from a [`ResolvedPolicy`] — the declarative
+//! [`PolicySpec`] bound to the env's emulated observation layout:
+//!
+//! - per-leaf observation encoders (raw f32 pass-through, or learned
+//!   embedding tables for Discrete/token leaves) concatenated into the
+//!   two-layer tanh trunk (the fused `linear_act` kernel's
+//!   `y = act(x @ w + b)` contract),
+//! - recurrence as a composable stage: the fused-gate LSTM cell on the
+//!   rollout side **and full BPTT through the time scan on the training
+//!   side** (`model.py::train_step_lstm`), over whole rollout rows with
+//!   episode-start state masking — recurrent envs train natively,
+//! - the GAE reverse time scan,
+//! - the full clipped-surrogate PPO update: hand-derived backprop through
+//!   every stage, global-norm gradient clipping, and Adam — bit-for-bit
+//!   the same update rule as `model._adam`.
+//!
+//! The flat parameter vector uses the same layout as the PJRT path:
+//! JAX's `ravel_pytree` flattens the params dict in alphabetical leaf
+//! order (`actor.b, actor.w, critic.b, critic.w[, embed_00.w …], enc1.b,
+//! enc1.w, enc2.b, enc2.w[, lstm.b, lstm.w]`), so checkpoints are
+//! interchangeable across backends for matching architectures. The
+//! default [`PolicySpec`] reproduces the pre-PolicySpec model bit for
+//! bit; parity with the JAX reference (including embedding fwd/bwd and
+//! LSTM BPTT gradients) is pinned by `crates/puffer-train/tests/native_parity.rs`
+//! against checked-in fixtures.
+
+use super::kernels::elementwise::{FastMath, ScalarMath, StdMath};
+use super::kernels::{self, gemm, KernelPath};
+use super::{AdamState, Forward, ForwardLstm, PolicyBackend, TrainBatch};
+use crate::emulation::FlatEnv;
+use crate::policy::arch::{ArchRanges, PolicySpec, ResolvedPolicy, TrunkSegment};
+use crate::runtime::{Manifest, SpecManifest};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+
+pub use crate::policy::arch::requires_recurrence;
+
+// Rollout geometry + hyperparameters, mirroring python/compile/aot.py and
+// model.py (the Python↔Rust contract for the PJRT path; the native path
+// keeps the same numbers so runs are comparable across backends).
+pub const HIDDEN: usize = 128;
+pub const B_FWD: usize = 16;
+pub const B_ROLL: usize = 32;
+pub const HORIZON: usize = 32;
+pub const GAMMA: f32 = 0.99;
+pub const LAM: f32 = 0.95;
+
+const CLIP: f32 = 0.2;
+const VF_COEF: f32 = 0.5;
+const MAX_GRAD_NORM: f32 = 0.5;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Flat parameter count for the *default* (flat-observation) model
+/// architecture — the legacy formula, kept as the Python↔Rust n_params
+/// cross-check. Arbitrary architectures: [`ResolvedPolicy::n_params`].
+pub fn n_params(obs_dim: usize, act_dims: &[usize], hidden: usize, lstm: bool) -> usize {
+    let mut spec = PolicySpec::default().with_hidden(hidden);
+    if lstm {
+        spec = spec.with_lstm(hidden);
+    }
+    ResolvedPolicy::from_flat(&spec, obs_dim, act_dims).n_params()
+}
+
+/// Borrowed views of each parameter leaf inside the flat vector, laid
+/// out by [`ResolvedPolicy::ranges`]. Weights are row-major
+/// `(fan_in, fan_out)`; embedding tables are `(vocab, embed_dim)`.
+struct ParamView<'a> {
+    actor_b: &'a [f32],
+    actor_w: &'a [f32],
+    critic_b: &'a [f32],
+    critic_w: &'a [f32],
+    embeds: Vec<&'a [f32]>,
+    enc1_b: &'a [f32],
+    enc1_w: &'a [f32],
+    enc2_b: &'a [f32],
+    enc2_w: &'a [f32],
+    lstm_b: &'a [f32],
+    lstm_w: &'a [f32],
+}
+
+impl<'a> ParamView<'a> {
+    fn split(p: &'a [f32], arch: &ResolvedPolicy) -> Result<ParamView<'a>> {
+        let r = arch.ranges();
+        ensure!(
+            p.len() == r.total,
+            "params len {} != expected {} for architecture '{}'",
+            p.len(),
+            r.total,
+            arch.spec.key()
+        );
+        Ok(ParamView {
+            actor_b: &p[r.actor_b],
+            actor_w: &p[r.actor_w],
+            critic_b: &p[r.critic_b],
+            critic_w: &p[r.critic_w],
+            embeds: r.embeds.iter().map(|e| &p[e.clone()]).collect(),
+            enc1_b: &p[r.enc1_b],
+            enc1_w: &p[r.enc1_w],
+            enc2_b: &p[r.enc2_b],
+            enc2_w: &p[r.enc2_w],
+            lstm_b: &p[r.lstm_b],
+            lstm_w: &p[r.lstm_w],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense kernels now live in `backend/kernels/` (the ref.py
+// `linear_act_ref` contract, row-major): the bit-exact scalar flavors
+// moved there verbatim as `gemm::*_scalar`, alongside the lane-tiled
+// SIMD flavors. The `k_*` dispatch methods on [`NativeBackend`] pick a
+// flavor per the backend's [`KernelPath`].
+
+/// libm tanh over a block — the scalar path's elementwise activation.
+fn tanh_inplace(xs: &mut [f32]) {
+    for x in xs {
+        *x = x.tanh();
+    }
+}
+
+/// libm sigmoid — the scalar path's gate activation.
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+// ---------------------------------------------------------------------------
+// Shared PPO loss: per-slot softmax statistics, the clipped surrogate,
+// and its gradient w.r.t. logits/values — identical math for the
+// feedforward and BPTT paths (model._ppo_loss).
+
+/// Returns `(metrics, d_logits, d_value)` over `n` flattened sample rows.
+/// `metrics = [loss, pg_loss, v_loss, entropy, approx_kl]`.
+///
+/// Generic over the exp/ln provider: `StdMath` monomorphizes to the
+/// exact libm call sequence the scalar kernel path is pinned to;
+/// `FastMath` is the vectorizable polynomial flavor the SIMD path uses.
+#[allow(clippy::too_many_arguments)]
+fn ppo_loss_grads<M: ScalarMath>(
+    act_dims: &[usize],
+    logits: &[f32],
+    values: &[f32],
+    actions: &[i32],
+    old_logp: &[f32],
+    adv: &[f32],
+    ret: &[f32],
+    ent_coef: f32,
+    norm_adv: bool,
+    n: usize,
+) -> Result<([f32; 5], Vec<f32>, Vec<f32>)> {
+    let a: usize = act_dims.iter().sum();
+    let slots = act_dims.len();
+    let nf = n as f32;
+
+    // Per-slot softmax statistics: probs, log-probs, slot entropies.
+    let mut probs = vec![0.0f32; n * a];
+    let mut lps = vec![0.0f32; n * a];
+    let mut slot_ent = vec![0.0f32; n * slots];
+    let mut logp = vec![0.0f32; n];
+    let mut entropy = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &logits[i * a..(i + 1) * a];
+        let mut off = 0;
+        for (s, &k) in act_dims.iter().enumerate() {
+            let seg = &row[off..off + k];
+            let mx = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &x in seg {
+                z += M::exp(x - mx);
+            }
+            let logz = M::ln(z) + mx;
+            let mut hs = 0.0f32;
+            for (j, &x) in seg.iter().enumerate() {
+                let lp = x - logz;
+                let p = M::exp(lp);
+                lps[i * a + off + j] = lp;
+                probs[i * a + off + j] = p;
+                hs -= p * lp;
+            }
+            let act = actions[i * slots + s] as usize;
+            ensure!(act < k, "action {act} out of range for slot {s} (dim {k})");
+            logp[i] += lps[i * a + off + act];
+            slot_ent[i * slots + s] = hs;
+            entropy[i] += hs;
+            off += k;
+        }
+    }
+
+    // Clipped-surrogate loss (model._ppo_loss). Advantages are
+    // normalized over *this* batch when `norm_adv` — i.e. per minibatch
+    // once the trainer splits the segment.
+    let (mu, sd) = if norm_adv {
+        let mu = adv.iter().sum::<f32>() / nf;
+        let var = adv.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / nf;
+        (mu, var.sqrt())
+    } else {
+        (0.0, 1.0)
+    };
+    let mut pg_loss = 0.0f32;
+    let mut v_loss = 0.0f32;
+    let mut ent_mean = 0.0f32;
+    let mut kl = 0.0f32;
+    let mut g_logp = vec![0.0f32; n]; // d pg_loss / d logp_i
+    let mut d_value = vec![0.0f32; n];
+    for i in 0..n {
+        let advn = if norm_adv {
+            (adv[i] - mu) / (sd + 1e-8)
+        } else {
+            adv[i]
+        };
+        let logratio = logp[i] - old_logp[i];
+        let ratio = M::exp(logratio);
+        let clipped = ratio.clamp(1.0 - CLIP, 1.0 + CLIP);
+        let pg1 = -advn * ratio;
+        let pg2 = -advn * clipped;
+        pg_loss += pg1.max(pg2);
+        // max() routes the gradient: the clipped branch is flat
+        // outside the trust region. Inside it, clipped == ratio so
+        // pg1 == pg2 and this branch covers that case too.
+        if pg1 >= pg2 {
+            g_logp[i] = -advn * ratio / nf;
+        }
+        v_loss += 0.5 * (values[i] - ret[i]) * (values[i] - ret[i]);
+        d_value[i] = VF_COEF * (values[i] - ret[i]) / nf;
+        ent_mean += entropy[i];
+        kl += (ratio - 1.0) - logratio;
+    }
+    pg_loss /= nf;
+    v_loss /= nf;
+    ent_mean /= nf;
+    kl /= nf;
+    let loss = pg_loss - ent_coef * ent_mean + VF_COEF * v_loss;
+
+    // d loss / d logits: policy-gradient term + entropy-bonus term.
+    let mut d_logits = vec![0.0f32; n * a];
+    for i in 0..n {
+        let mut off = 0;
+        for (s, &k) in act_dims.iter().enumerate() {
+            let act = actions[i * slots + s] as usize;
+            let hs = slot_ent[i * slots + s];
+            for j in 0..k {
+                let p = probs[i * a + off + j];
+                let lp = lps[i * a + off + j];
+                let onehot = if j == act { 1.0 } else { 0.0 };
+                d_logits[i * a + off + j] =
+                    g_logp[i] * (onehot - p) + (ent_coef / nf) * p * (lp + hs);
+            }
+            off += k;
+        }
+    }
+
+    Ok(([loss, pg_loss, v_loss, ent_mean, kl], d_logits, d_value))
+}
+
+// ---------------------------------------------------------------------------
+
+/// The pure-Rust compute backend (see module docs).
+#[derive(Clone)]
+pub struct NativeBackend {
+    key: String,
+    spec: SpecManifest,
+    arch: ResolvedPolicy,
+    rng: Rng,
+    /// Which kernel flavor the `k_*` dispatchers route to. Defaults to
+    /// [`KernelPath::Simd`]; set `train.kernels = "scalar"` for the
+    /// bit-exact reference path.
+    path: KernelPath,
+    /// Worker-thread budget for kernel fork-join (`PUFFER_KERNEL_THREADS`).
+    threads: usize,
+    /// Reusable forward-pass activations for the `*_into` entry points —
+    /// the serve hot path's allocation-free batched forwards.
+    fwd: FwdScratch,
+}
+
+/// Reusable activation buffers for [`NativeBackend::forward_into`] /
+/// [`NativeBackend::forward_lstm_into`]: resized (never reallocated at
+/// steady state) per call, fully overwritten by the kernels.
+#[derive(Clone, Default)]
+struct FwdScratch {
+    h1: Vec<f32>,
+    x: Vec<f32>,
+    gates: Vec<f32>,
+}
+
+impl NativeBackend {
+    /// Build a backend for a first-party env with its **default**
+    /// architecture ([`PolicySpec::default_for`] — feedforward, except
+    /// recurrent reference envs, which get the LSTM sandwich).
+    pub fn for_env(env_name: &str, env: &dyn FlatEnv) -> Result<Self> {
+        Self::for_env_with_policy(env_name, env, &PolicySpec::default_for(env_name))
+    }
+
+    /// Build a backend for an env with an explicit [`PolicySpec`]: the
+    /// spec's per-leaf encoders are resolved against the env's emulated
+    /// observation layout, and the architecture key fragment is embedded
+    /// in the backend/checkpoint key (relative to the env's default
+    /// spec, so default-arch checkpoints keep their pre-PolicySpec
+    /// keys).
+    ///
+    /// `env_name` may be a full [`EnvSpec`](crate::wrappers::EnvSpec)
+    /// key ("ocean/squared+clip_reward=1+stack=4"); wrapper fragments
+    /// become part of the key, and `env` is expected to be the *wrapped*
+    /// probe so the spec is sized from the wrapped geometry.
+    pub fn for_env_with_policy(
+        env_name: &str,
+        env: &dyn FlatEnv,
+        policy: &PolicySpec,
+    ) -> Result<Self> {
+        // A feedforward policy cannot solve a memory task — fail at
+        // construction instead of burning the step budget training
+        // garbage. (The *default* spec for such envs is recurrent; this
+        // only fires when a user explicitly forces feedforward.)
+        ensure!(
+            policy.is_recurrent() || !requires_recurrence(env_name),
+            "'{env_name}' needs a recurrent (LSTM) policy to be solvable, but \
+             this PolicySpec is feedforward — training would produce ~chance \
+             scores. Drop the override (the default spec for this env is \
+             recurrent) or set --policy.lstm=true."
+        );
+        let agents = env.num_agents();
+        ensure!(
+            B_ROLL % agents == 0,
+            "env '{env_name}': batch_roll {B_ROLL} not divisible by {agents} agents"
+        );
+        let arch = ResolvedPolicy::resolve(policy, env.obs_layout(), env.action_dims())?;
+        let spec = SpecManifest {
+            obs_dim: arch.obs_dim,
+            n_params: arch.n_params(),
+            act_dims: arch.act_dims.clone(),
+            agents,
+            lstm: arch.is_recurrent(),
+            hidden: arch.hidden(),
+            policy: arch.effective_spec(),
+            batch_fwd: B_FWD,
+            batch_roll: B_ROLL,
+            horizon: HORIZON,
+            gamma: GAMMA as f64,
+            lam: LAM as f64,
+            params0: String::new(),
+            artifacts: BTreeMap::new(),
+        };
+        let mut key = Manifest::spec_key_for_env(env_name);
+        if let Some(frag) = arch.key_fragment(&PolicySpec::default_for(env_name)) {
+            key.push('#');
+            key.push_str(&frag);
+        }
+        // Deterministic per-spec init, like aot.py's name-hashed params0
+        // (the architecture fragment participates, so distinct archs
+        // draw distinct initial weights).
+        let seed = key
+            .bytes()
+            .fold(0x4E41_5449u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+        Self::from_arch(key, spec, arch, seed)
+    }
+
+    /// Build from an explicit manifest spec (tests, custom geometries,
+    /// manifest-driven paths): the architecture is taken from
+    /// `spec.policy` over the opaque flat observation — no layout, so no
+    /// per-leaf embedding resolution (see
+    /// [`from_arch`](Self::from_arch) for that).
+    ///
+    /// # Panics
+    ///
+    /// If `spec` is internally inconsistent — `n_params` / `lstm` /
+    /// `hidden` disagreeing with what `spec.policy` resolves to. That is
+    /// a caller-constructed contradiction, not an input condition; use
+    /// [`from_arch`](Self::from_arch) for fallible construction.
+    pub fn from_spec(key: String, spec: SpecManifest, seed: u64) -> Self {
+        let arch = ResolvedPolicy::from_flat(&spec.policy, spec.obs_dim, &spec.act_dims);
+        Self::from_arch(key, spec, arch, seed)
+            .unwrap_or_else(|e| panic!("from_spec: manifest contradicts its own policy spec: {e}"))
+    }
+
+    /// Build from a fully resolved architecture (golden-fixture tests,
+    /// embedded-leaf specs with explicit geometry).
+    pub fn from_arch(
+        key: String,
+        spec: SpecManifest,
+        arch: ResolvedPolicy,
+        seed: u64,
+    ) -> Result<Self> {
+        ensure!(
+            spec.n_params == arch.n_params(),
+            "spec '{key}': manifest n_params {} != resolved architecture {} ('{}')",
+            spec.n_params,
+            arch.n_params(),
+            arch.spec.key()
+        );
+        ensure!(
+            spec.obs_dim == arch.obs_dim && spec.act_dims == arch.act_dims,
+            "spec '{key}': manifest geometry disagrees with resolved architecture"
+        );
+        ensure!(
+            spec.lstm == arch.is_recurrent(),
+            "spec '{key}': manifest lstm flag disagrees with the architecture"
+        );
+        Ok(NativeBackend {
+            key,
+            spec,
+            arch,
+            rng: Rng::new(seed),
+            path: KernelPath::default(),
+            threads: kernels::thread_cap_from_env(),
+            fwd: FwdScratch::default(),
+        })
+    }
+
+    /// The resolved architecture this backend executes.
+    pub fn arch(&self) -> &ResolvedPolicy {
+        &self.arch
+    }
+
+    /// Select the kernel flavor (`train.kernels`): `Scalar` is the
+    /// bit-exact reference path, `Simd` (default) the lane-tiled
+    /// multithreaded path.
+    pub fn set_kernel_path(&mut self, path: KernelPath) {
+        self.path = path;
+    }
+
+    /// The kernel flavor this backend dispatches to.
+    pub fn kernel_path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// Override the kernel worker-thread budget (test hook for the
+    /// thread-count-invariance pins; runs resolve it from
+    /// `PUFFER_KERNEL_THREADS` at construction).
+    pub fn set_kernel_threads(&mut self, n: usize) {
+        self.threads = n.clamp(1, 64);
+    }
+
+    // -- kernel dispatch ----------------------------------------------------
+
+    fn k_linear(&self, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        match self.path {
+            KernelPath::Scalar => gemm::linear_scalar(x, w, b, out, m, k, n),
+            KernelPath::Simd => gemm::linear_simd(x, w, b, out, m, k, n, self.threads),
+        }
+    }
+
+    fn k_accum_at_b(&self, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        match self.path {
+            KernelPath::Scalar => gemm::accum_at_b_scalar(a, b, out, m, k, n),
+            KernelPath::Simd => gemm::accum_at_b_simd(a, b, out, m, k, n, self.threads),
+        }
+    }
+
+    fn k_matmul_a_wt(&self, a: &[f32], w: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+        match self.path {
+            KernelPath::Scalar => gemm::matmul_a_wt_scalar(a, w, out, m, n, k),
+            KernelPath::Simd => gemm::matmul_a_wt_simd(a, w, out, m, n, k, self.threads),
+        }
+    }
+
+    fn k_tanh(&self, xs: &mut [f32]) {
+        match self.path {
+            KernelPath::Scalar => tanh_inplace(xs),
+            KernelPath::Simd => kernels::elementwise::tanh_block(xs),
+        }
+    }
+
+    /// PPO loss + grads with the path's exp/ln flavor.
+    fn k_loss(
+        &self,
+        logits: &[f32],
+        values: &[f32],
+        batch: &TrainBatch<'_>,
+        ent_coef: f32,
+        n: usize,
+    ) -> Result<([f32; 5], Vec<f32>, Vec<f32>)> {
+        match self.path {
+            KernelPath::Scalar => ppo_loss_grads::<StdMath>(
+                &self.arch.act_dims,
+                logits,
+                values,
+                batch.actions,
+                batch.logp,
+                batch.adv,
+                batch.ret,
+                ent_coef,
+                batch.norm_adv,
+                n,
+            ),
+            KernelPath::Simd => ppo_loss_grads::<FastMath>(
+                &self.arch.act_dims,
+                logits,
+                values,
+                batch.actions,
+                batch.logp,
+                batch.adv,
+                batch.ret,
+                ent_coef,
+                batch.norm_adv,
+                n,
+            ),
+        }
+    }
+
+    /// Global-norm clip + Adam with the path's flavor (the scalar
+    /// free function below, or the banded deterministic SIMD update).
+    fn k_adam(&self, params: &mut [f32], opt: &mut AdamState, lr: f32, grads: &[f32]) {
+        match self.path {
+            KernelPath::Scalar => adam_update(params, opt, lr, grads),
+            KernelPath::Simd => {
+                opt.step += 1.0;
+                kernels::adam::adam_update_simd(
+                    params,
+                    &mut opt.m,
+                    &mut opt.v,
+                    grads,
+                    opt.step,
+                    lr,
+                    ADAM_B1,
+                    ADAM_B2,
+                    ADAM_EPS,
+                    MAX_GRAD_NORM,
+                    self.threads,
+                );
+            }
+        }
+    }
+
+    /// Build the trunk input for `rows` observations: raw segments pass
+    /// through, token segments are replaced by embedding-table rows.
+    /// Returns the trunk (borrowed when nothing is embedded — the
+    /// default path stays zero-copy) plus the clamped token indices per
+    /// embed segment (kept for the backward scatter).
+    fn trunk_input<'a>(
+        &self,
+        pv: &ParamView<'_>,
+        obs: &'a [f32],
+        rows: usize,
+    ) -> (Cow<'a, [f32]>, Vec<Vec<usize>>) {
+        if !self.arch.has_embeds() {
+            return (Cow::Borrowed(obs), Vec::new());
+        }
+        let d = self.arch.obs_dim;
+        let ti = self.arch.trunk_in;
+        let dim = self.arch.spec.embed_dim;
+        let mut trunk = vec![0.0f32; rows * ti];
+        let mut tokens: Vec<Vec<usize>> = Vec::new();
+        let mut col = 0usize;
+        let mut ei = 0usize;
+        for seg in &self.arch.segments {
+            match *seg {
+                TrunkSegment::Raw { offset, count, .. } => {
+                    for i in 0..rows {
+                        trunk[i * ti + col..i * ti + col + count]
+                            .copy_from_slice(&obs[i * d + offset..i * d + offset + count]);
+                    }
+                    col += count;
+                }
+                TrunkSegment::Embed {
+                    offset,
+                    count,
+                    vocab,
+                    base,
+                    ..
+                } => {
+                    let table = pv.embeds[ei];
+                    let mut toks = Vec::with_capacity(rows * count);
+                    for i in 0..rows {
+                        for j in 0..count {
+                            let v = obs[i * d + offset + j];
+                            let t = ((v.round() as i64) - base as i64)
+                                .clamp(0, vocab as i64 - 1) as usize;
+                            trunk[i * ti + col + j * dim..i * ti + col + (j + 1) * dim]
+                                .copy_from_slice(&table[t * dim..(t + 1) * dim]);
+                            toks.push(t);
+                        }
+                    }
+                    tokens.push(toks);
+                    ei += 1;
+                    col += count * dim;
+                }
+            }
+        }
+        (Cow::Owned(trunk), tokens)
+    }
+
+    /// Scatter `d_trunk` (`rows × trunk_in`) into the embedding-table
+    /// gradients — the backward half of [`trunk_input`](Self::trunk_input).
+    fn scatter_embed_grads(
+        &self,
+        d_trunk: &[f32],
+        tokens: &[Vec<usize>],
+        rows: usize,
+        grads: &mut [f32],
+        ranges: &ArchRanges,
+    ) {
+        let ti = self.arch.trunk_in;
+        let dim = self.arch.spec.embed_dim;
+        let mut col = 0usize;
+        let mut ei = 0usize;
+        for seg in &self.arch.segments {
+            match seg {
+                TrunkSegment::Raw { count, .. } => col += count,
+                TrunkSegment::Embed { count, .. } => {
+                    let g = &mut grads[ranges.embeds[ei].clone()];
+                    let toks = &tokens[ei];
+                    for i in 0..rows {
+                        for j in 0..*count {
+                            let t = toks[i * count + j];
+                            let c0 = i * ti + col + j * dim;
+                            let src = &d_trunk[c0..c0 + dim];
+                            for (o, &v) in g[t * dim..(t + 1) * dim].iter_mut().zip(src) {
+                                *o += v;
+                            }
+                        }
+                    }
+                    col += count * dim;
+                    ei += 1;
+                }
+            }
+        }
+    }
+
+    /// Backward through the actor/critic heads, shared by both train
+    /// paths: accumulates head parameter gradients and **overwrites**
+    /// `d_hidden` with `d_logits @ actor_wᵀ + d_value ⊗ critic_w`
+    /// (`rows × decode_in`).
+    #[allow(clippy::too_many_arguments)]
+    fn head_backward(
+        &self,
+        pv: &ParamView<'_>,
+        ranges: &ArchRanges,
+        hidden: &[f32],
+        d_logits: &[f32],
+        d_value: &[f32],
+        rows: usize,
+        grads: &mut [f32],
+        d_hidden: &mut [f32],
+    ) {
+        let (d_in, a) = (self.arch.decode_in(), self.arch.act_sum());
+        for i in 0..rows {
+            for j in 0..a {
+                grads[ranges.actor_b.start + j] += d_logits[i * a + j];
+            }
+            grads[ranges.critic_b.start] += d_value[i];
+        }
+        self.k_accum_at_b(hidden, d_logits, &mut grads[ranges.actor_w.clone()], rows, d_in, a);
+        for i in 0..rows {
+            let dv = d_value[i];
+            if dv != 0.0 {
+                for kk in 0..d_in {
+                    grads[ranges.critic_w.start + kk] += hidden[i * d_in + kk] * dv;
+                }
+            }
+        }
+        self.k_matmul_a_wt(d_logits, pv.actor_w, d_hidden, rows, a, d_in);
+        for i in 0..rows {
+            let dv = d_value[i];
+            for kk in 0..d_in {
+                d_hidden[i * d_in + kk] += dv * pv.critic_w[kk];
+            }
+        }
+    }
+
+    /// Backward through the trunk — tanh' through enc2, enc2 grads,
+    /// tanh' through enc1, enc1 grads, and the embedding scatter — shared
+    /// verbatim by the feedforward path and every BPTT step. `d_top` is
+    /// the loss gradient w.r.t. the trunk output `x` (`rows × hidden`);
+    /// scratch buffers in `s` are resized (not reallocated) per call.
+    #[allow(clippy::too_many_arguments)]
+    fn trunk_backward(
+        &self,
+        pv: &ParamView<'_>,
+        ranges: &ArchRanges,
+        d_top: &[f32],
+        x: &[f32],
+        h1: &[f32],
+        trunk: &[f32],
+        tokens: &[Vec<usize>],
+        rows: usize,
+        grads: &mut [f32],
+        s: &mut TrunkBwdScratch,
+    ) {
+        let (h, ti) = (self.arch.hidden(), self.arch.trunk_in);
+        s.d_z2.resize(rows * h, 0.0);
+        s.d_z2.copy_from_slice(d_top);
+        for (dz, &hv) in s.d_z2.iter_mut().zip(x) {
+            *dz *= 1.0 - hv * hv;
+        }
+        self.k_accum_at_b(h1, &s.d_z2, &mut grads[ranges.enc2_w.clone()], rows, h, h);
+        for i in 0..rows {
+            for j in 0..h {
+                grads[ranges.enc2_b.start + j] += s.d_z2[i * h + j];
+            }
+        }
+        s.d_h1.resize(rows * h, 0.0);
+        self.k_matmul_a_wt(&s.d_z2, pv.enc2_w, &mut s.d_h1, rows, h, h);
+        s.d_z1.resize(rows * h, 0.0);
+        s.d_z1.copy_from_slice(&s.d_h1);
+        for (dz, &hv) in s.d_z1.iter_mut().zip(h1) {
+            *dz *= 1.0 - hv * hv;
+        }
+        self.k_accum_at_b(trunk, &s.d_z1, &mut grads[ranges.enc1_w.clone()], rows, ti, h);
+        for i in 0..rows {
+            for j in 0..h {
+                grads[ranges.enc1_b.start + j] += s.d_z1[i * h + j];
+            }
+        }
+        if self.arch.has_embeds() {
+            s.d_trunk.resize(rows * ti, 0.0);
+            self.k_matmul_a_wt(&s.d_z1, pv.enc1_w, &mut s.d_trunk, rows, h, ti);
+            self.scatter_embed_grads(&s.d_trunk, tokens, rows, grads, ranges);
+        }
+    }
+
+    /// Two-layer tanh trunk (model.py `encode`) over a prepared trunk
+    /// input, into caller buffers (resized, then fully overwritten by
+    /// the linear kernels). `h1` is kept for backprop, `x` feeds the
+    /// decoder or LSTM cell.
+    fn encode_into(
+        &self,
+        pv: &ParamView<'_>,
+        trunk: &[f32],
+        rows: usize,
+        h1: &mut Vec<f32>,
+        x: &mut Vec<f32>,
+    ) {
+        let (ti, h) = (self.arch.trunk_in, self.arch.hidden());
+        h1.resize(rows * h, 0.0);
+        self.k_linear(trunk, pv.enc1_w, pv.enc1_b, h1, rows, ti, h);
+        self.k_tanh(h1);
+        x.resize(rows * h, 0.0);
+        self.k_linear(h1, pv.enc2_w, pv.enc2_b, x, rows, h, h);
+        self.k_tanh(x);
+    }
+
+    /// Allocating wrapper over [`encode_into`](Self::encode_into) for
+    /// the train paths (which keep the activations anyway).
+    fn encode(&self, pv: &ParamView<'_>, trunk: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut h1 = Vec::new();
+        let mut x = Vec::new();
+        self.encode_into(pv, trunk, rows, &mut h1, &mut x);
+        (h1, x)
+    }
+
+    /// Actor/critic heads off a hidden state (model.py `decode`), into
+    /// caller buffers.
+    fn decode_into(
+        &self,
+        pv: &ParamView<'_>,
+        hidden: &[f32],
+        rows: usize,
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) {
+        let (d_in, a) = (self.arch.decode_in(), self.arch.act_sum());
+        logits.resize(rows * a, 0.0);
+        self.k_linear(hidden, pv.actor_w, pv.actor_b, logits, rows, d_in, a);
+        values.resize(rows, 0.0);
+        self.k_linear(hidden, pv.critic_w, pv.critic_b, values, rows, d_in, 1);
+    }
+
+    /// Allocating wrapper over [`decode_into`](Self::decode_into).
+    fn decode(&self, pv: &ParamView<'_>, hidden: &[f32], rows: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut logits = Vec::new();
+        let mut values = Vec::new();
+        self.decode_into(pv, hidden, rows, &mut logits, &mut values);
+        (logits, values)
+    }
+
+    /// One fused-gate LSTM cell step into caller buffers: `gates =
+    /// [x, h] @ w + b`, split `(i, f, g, o)`; `gates` ends up holding
+    /// the post-activation gate values (kept for BPTT). The scalar path
+    /// materializes the `[x, h]` concat exactly like the reference; the
+    /// SIMD path runs the fused cell kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn lstm_cell_into(
+        &self,
+        pv: &ParamView<'_>,
+        x: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+        gates: &mut Vec<f32>,
+        h_out: &mut Vec<f32>,
+        c_out: &mut Vec<f32>,
+    ) {
+        let (h, sd) = (self.arch.hidden(), self.arch.state_dim());
+        gates.resize(rows * 4 * sd, 0.0);
+        h_out.resize(rows * sd, 0.0);
+        c_out.resize(rows * sd, 0.0);
+        match self.path {
+            KernelPath::Scalar => {
+                let mut xh = vec![0.0; rows * (h + sd)];
+                for r in 0..rows {
+                    xh[r * (h + sd)..r * (h + sd) + h].copy_from_slice(&x[r * h..(r + 1) * h]);
+                    xh[r * (h + sd) + h..(r + 1) * (h + sd)]
+                        .copy_from_slice(&h_in[r * sd..(r + 1) * sd]);
+                }
+                gemm::linear_scalar(&xh, pv.lstm_w, pv.lstm_b, gates, rows, h + sd, 4 * sd);
+                for r in 0..rows {
+                    let g = &mut gates[r * 4 * sd..(r + 1) * 4 * sd];
+                    for j in 0..sd {
+                        let i_g = sigmoid(g[j]);
+                        let f_g = sigmoid(g[sd + j]);
+                        let g_g = g[2 * sd + j].tanh();
+                        let o_g = sigmoid(g[3 * sd + j]);
+                        let c = f_g * c_in[r * sd + j] + i_g * g_g;
+                        c_out[r * sd + j] = c;
+                        h_out[r * sd + j] = o_g * c.tanh();
+                        g[j] = i_g;
+                        g[sd + j] = f_g;
+                        g[2 * sd + j] = g_g;
+                        g[3 * sd + j] = o_g;
+                    }
+                }
+            }
+            KernelPath::Simd => kernels::lstm::cell_simd(
+                x,
+                h_in,
+                c_in,
+                pv.lstm_w,
+                pv.lstm_b,
+                gates,
+                h_out,
+                c_out,
+                rows,
+                h,
+                sd,
+                self.threads,
+            ),
+        }
+    }
+
+    /// Allocating wrapper over [`lstm_cell_into`](Self::lstm_cell_into):
+    /// returns `(h', c', gates_post)`.
+    fn lstm_cell(
+        &self,
+        pv: &ParamView<'_>,
+        x: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut gates = Vec::new();
+        let mut h2 = Vec::new();
+        let mut c2 = Vec::new();
+        self.lstm_cell_into(pv, x, h_in, c_in, rows, &mut gates, &mut h2, &mut c2);
+        (h2, c2, gates)
+    }
+
+    // -- train paths -------------------------------------------------------
+
+    /// Feedforward PPO update over `n = T × R` flattened sample rows.
+    fn train_step_ff(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        let h = self.arch.hidden();
+        let n = batch.t * batch.r;
+        let pv = ParamView::split(params, &self.arch)?;
+        let (trunk, tokens) = self.trunk_input(&pv, batch.obs, n);
+        let (h1, h2) = self.encode(&pv, &trunk, n);
+        let (logits, values) = self.decode(&pv, &h2, n);
+
+        let (metrics, d_logits, d_value) = self.k_loss(&logits, &values, batch, ent_coef, n)?;
+
+        // Backprop through decode + trunk into one flat gradient vector
+        // (the same `ranges` layout the forward pass reads from). The
+        // chain is shared with the BPTT path: heads, then tanh' through
+        // enc2/enc1, then the embedding scatter. For feedforward archs
+        // the decode input *is* the trunk output, so `d_h2` feeds
+        // `trunk_backward` directly.
+        let mut grads = vec![0.0f32; params.len()];
+        let ranges = self.arch.ranges();
+        let mut d_h2 = vec![0.0f32; n * h];
+        self.head_backward(&pv, &ranges, &h2, &d_logits, &d_value, n, &mut grads, &mut d_h2);
+        let mut scratch = TrunkBwdScratch::default();
+        self.trunk_backward(
+            &pv,
+            &ranges,
+            &d_h2,
+            &h2,
+            &h1,
+            &trunk,
+            &tokens,
+            n,
+            &mut grads,
+            &mut scratch,
+        );
+        drop(pv);
+
+        self.k_adam(params, opt, lr, &grads);
+        Ok(metrics)
+    }
+
+    /// Recurrent PPO update: BPTT through the whole `(T, R)` time scan,
+    /// with LSTM state zeroed at episode starts (`batch.starts`) exactly
+    /// like `model.py::train_step_lstm` — the scan begins from zero
+    /// state each segment, and the minibatch slicer only ever hands this
+    /// path whole agent rows, so the time structure is intact.
+    fn train_step_bptt(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        let (t_dim, rows) = (batch.t, batch.r);
+        let n = t_dim * rows;
+        let h = self.arch.hidden();
+        let sd = self.arch.state_dim();
+        let d = self.arch.obs_dim;
+        let a = self.arch.act_sum();
+        let pv = ParamView::split(params, &self.arch)?;
+
+        // ---- forward scan, caching per-step activations ----
+        struct StepCache {
+            trunk: Option<Vec<f32>>, // None when borrowed straight from obs
+            tokens: Vec<Vec<usize>>,
+            h1: Vec<f32>,
+            x: Vec<f32>,
+            h_in: Vec<f32>, // post-mask state entering the cell
+            c_in: Vec<f32>,
+            gates: Vec<f32>, // post-activation (i, f, g, o)
+            c: Vec<f32>,
+            h: Vec<f32>,
+        }
+        let mut cache: Vec<StepCache> = Vec::with_capacity(t_dim);
+        let mut logits_all = vec![0.0f32; n * a];
+        let mut values_all = vec![0.0f32; n];
+        let mut h_prev = vec![0.0f32; rows * sd];
+        let mut c_prev = vec![0.0f32; rows * sd];
+        for t in 0..t_dim {
+            let obs_t = &batch.obs[t * rows * d..(t + 1) * rows * d];
+            let starts_t = &batch.starts[t * rows..(t + 1) * rows];
+            let mut h_in = h_prev.clone();
+            let mut c_in = c_prev.clone();
+            for r in 0..rows {
+                if starts_t[r] != 0.0 {
+                    h_in[r * sd..(r + 1) * sd].fill(0.0);
+                    c_in[r * sd..(r + 1) * sd].fill(0.0);
+                }
+            }
+            let (trunk, tokens) = self.trunk_input(&pv, obs_t, rows);
+            let (h1, x) = self.encode(&pv, &trunk, rows);
+            let (h2, c2, gates) = self.lstm_cell(&pv, &x, &h_in, &c_in, rows);
+            let (lo, va) = self.decode(&pv, &h2, rows);
+            logits_all[t * rows * a..(t + 1) * rows * a].copy_from_slice(&lo);
+            values_all[t * rows..(t + 1) * rows].copy_from_slice(&va);
+            h_prev.copy_from_slice(&h2);
+            c_prev.copy_from_slice(&c2);
+            cache.push(StepCache {
+                trunk: match trunk {
+                    Cow::Borrowed(_) => None,
+                    Cow::Owned(v) => Some(v),
+                },
+                tokens,
+                h1,
+                x,
+                h_in,
+                c_in,
+                gates,
+                c: c2,
+                h: h2,
+            });
+        }
+
+        // ---- loss over the flattened (T × R) rows ----
+        let (metrics, d_logits, d_value) =
+            self.k_loss(&logits_all, &values_all, batch, ent_coef, n)?;
+
+        // ---- backward scan ----
+        let mut grads = vec![0.0f32; params.len()];
+        let ranges = self.arch.ranges();
+        let mut dh_next = vec![0.0f32; rows * sd];
+        let mut dc_next = vec![0.0f32; rows * sd];
+        // Reused per-step scratch — sized once, overwritten every step.
+        let mut dh = vec![0.0f32; rows * sd];
+        let mut d_x = vec![0.0f32; rows * h];
+        let mut dgates = vec![0.0f32; rows * 4 * sd];
+        let mut dc_in_t = vec![0.0f32; rows * sd];
+        let mut xh = vec![0.0f32; rows * (h + sd)];
+        let mut d_xh = vec![0.0f32; rows * (h + sd)];
+        let mut scratch = TrunkBwdScratch::default();
+        for t in (0..t_dim).rev() {
+            let sc = &cache[t];
+            let dl = &d_logits[t * rows * a..(t + 1) * rows * a];
+            let dv = &d_value[t * rows..(t + 1) * rows];
+            let starts_t = &batch.starts[t * rows..(t + 1) * rows];
+
+            // Heads off h_t: parameter grads + dh, then the carry from
+            // t+1 on top.
+            self.head_backward(&pv, &ranges, &sc.h, dl, dv, rows, &mut grads, &mut dh);
+            for (acc, &carry) in dh.iter_mut().zip(&dh_next) {
+                *acc += carry;
+            }
+
+            // Cell backward: c = f∘c_in + i∘g, h = o∘tanh(c).
+            for r in 0..rows {
+                let g = &sc.gates[r * 4 * sd..(r + 1) * 4 * sd];
+                for j in 0..sd {
+                    let (gi, gf, gg, go) = (g[j], g[sd + j], g[2 * sd + j], g[3 * sd + j]);
+                    let c = sc.c[r * sd + j];
+                    let tc = c.tanh();
+                    let dh_v = dh[r * sd + j];
+                    let d_o = dh_v * tc;
+                    let dc = dh_v * go * (1.0 - tc * tc) + dc_next[r * sd + j];
+                    let d_i = dc * gg;
+                    let d_f = dc * sc.c_in[r * sd + j];
+                    let d_g = dc * gi;
+                    dc_in_t[r * sd + j] = dc * gf;
+                    dgates[r * 4 * sd + j] = d_i * gi * (1.0 - gi);
+                    dgates[r * 4 * sd + sd + j] = d_f * gf * (1.0 - gf);
+                    dgates[r * 4 * sd + 2 * sd + j] = d_g * (1.0 - gg * gg);
+                    dgates[r * 4 * sd + 3 * sd + j] = d_o * go * (1.0 - go);
+                }
+            }
+            // lstm parameter grads off [x, h_in].
+            for r in 0..rows {
+                xh[r * (h + sd)..r * (h + sd) + h].copy_from_slice(&sc.x[r * h..(r + 1) * h]);
+                xh[r * (h + sd) + h..(r + 1) * (h + sd)]
+                    .copy_from_slice(&sc.h_in[r * sd..(r + 1) * sd]);
+            }
+            for i in 0..rows {
+                for j in 0..4 * sd {
+                    grads[ranges.lstm_b.start + j] += dgates[i * 4 * sd + j];
+                }
+            }
+            self.k_accum_at_b(
+                &xh,
+                &dgates,
+                &mut grads[ranges.lstm_w.clone()],
+                rows,
+                h + sd,
+                4 * sd,
+            );
+            // d_xh = dgates @ lstm_wᵀ → split into d_x and d_h_in.
+            self.k_matmul_a_wt(&dgates, pv.lstm_w, &mut d_xh, rows, 4 * sd, h + sd);
+            for r in 0..rows {
+                d_x[r * h..(r + 1) * h].copy_from_slice(&d_xh[r * (h + sd)..r * (h + sd) + h]);
+            }
+
+            // Trunk backward: identical chain to the feedforward path.
+            let obs_t = &batch.obs[t * rows * d..(t + 1) * rows * d];
+            let trunk_t: &[f32] = match &sc.trunk {
+                Some(v) => v,
+                None => obs_t,
+            };
+            self.trunk_backward(
+                &pv,
+                &ranges,
+                &d_x,
+                &sc.x,
+                &sc.h1,
+                trunk_t,
+                &sc.tokens,
+                rows,
+                &mut grads,
+                &mut scratch,
+            );
+
+            // Carry to t-1 through the episode-start mask: state entering
+            // step t was `h_{t-1} * (1 - starts_t)`.
+            for r in 0..rows {
+                let mask = 1.0 - starts_t[r];
+                for j in 0..sd {
+                    dh_next[r * sd + j] = d_xh[r * (h + sd) + h + j] * mask;
+                    dc_next[r * sd + j] = dc_in_t[r * sd + j] * mask;
+                }
+            }
+        }
+        drop(pv);
+
+        self.k_adam(params, opt, lr, &grads);
+        Ok(metrics)
+    }
+
+    // -- allocation-free forward entry points (serve hot path) -------------
+
+    /// [`PolicyBackend::forward`] into a caller-owned [`Forward`],
+    /// reusing the backend's activation scratch — zero steady-state
+    /// allocations, the serve batcher's per-batch entry point.
+    pub fn forward_into(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        rows: usize,
+        out: &mut Forward,
+    ) -> Result<()> {
+        let d = self.arch.obs_dim;
+        ensure!(
+            !self.arch.is_recurrent(),
+            "stateless forward on a recurrent architecture — use forward_lstm"
+        );
+        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        let pv = ParamView::split(params, &self.arch)?;
+        let mut fs = std::mem::take(&mut self.fwd);
+        let (trunk, _) = self.trunk_input(&pv, obs, rows);
+        self.encode_into(&pv, &trunk, rows, &mut fs.h1, &mut fs.x);
+        self.decode_into(&pv, &fs.x, rows, &mut out.logits, &mut out.values);
+        drop(pv);
+        self.fwd = fs;
+        Ok(())
+    }
+
+    /// [`PolicyBackend::forward_lstm`] into a caller-owned
+    /// [`ForwardLstm`], reusing the backend's activation scratch.
+    pub fn forward_lstm_into(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+        out: &mut ForwardLstm,
+    ) -> Result<()> {
+        let d = self.arch.obs_dim;
+        let sd = self.arch.state_dim();
+        ensure!(sd > 0, "forward_lstm on a feedforward architecture");
+        ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        ensure!(
+            h_in.len() == rows * sd && c_in.len() == rows * sd,
+            "state shape mismatch"
+        );
+        let pv = ParamView::split(params, &self.arch)?;
+        let mut fs = std::mem::take(&mut self.fwd);
+        let (trunk, _) = self.trunk_input(&pv, obs, rows);
+        self.encode_into(&pv, &trunk, rows, &mut fs.h1, &mut fs.x);
+        self.lstm_cell_into(&pv, &fs.x, h_in, c_in, rows, &mut fs.gates, &mut out.h, &mut out.c);
+        self.decode_into(&pv, &out.h, rows, &mut out.logits, &mut out.values);
+        drop(pv);
+        self.fwd = fs;
+        Ok(())
+    }
+}
+
+/// Reusable scratch for [`NativeBackend::trunk_backward`]: one set of
+/// buffers per train step, resized (never reallocated) per call.
+#[derive(Default)]
+struct TrunkBwdScratch {
+    d_z2: Vec<f32>,
+    d_h1: Vec<f32>,
+    d_z1: Vec<f32>,
+    d_trunk: Vec<f32>,
+}
+
+/// Global-norm clip + Adam (model._adam, flat) — shared update tail.
+fn adam_update(params: &mut [f32], opt: &mut AdamState, lr: f32, grads: &[f32]) {
+    let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
+    let scale = (MAX_GRAD_NORM / gnorm).min(1.0);
+    opt.step += 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(opt.step);
+    let bc2 = 1.0 - ADAM_B2.powf(opt.step);
+    for i in 0..params.len() {
+        let g = grads[i] * scale;
+        opt.m[i] = ADAM_B1 * opt.m[i] + (1.0 - ADAM_B1) * g;
+        opt.v[i] = ADAM_B2 * opt.v[i] + (1.0 - ADAM_B2) * g * g;
+        let mhat = opt.m[i] / bc1;
+        let vhat = opt.v[i] / bc2;
+        params[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+impl PolicyBackend for NativeBackend {
+    fn spec(&self) -> &SpecManifest {
+        &self.spec
+    }
+
+    fn key(&self) -> &str {
+        &self.key
+    }
+
+    fn init_params(&mut self) -> Result<Vec<f32>> {
+        // CleanRL-style layer_init scaling, as model.init_params: weights
+        // are N(0, scale²/fan_in), biases zero, actor head scaled 0.01,
+        // embedding tables bias-free. Draw order == layout order, so the
+        // default architecture replays the exact pre-PolicySpec stream.
+        let arch = self.arch.clone();
+        let (h, a, d_in, sd, ti) = (
+            arch.hidden(),
+            arch.act_sum(),
+            arch.decode_in(),
+            arch.state_dim(),
+            arch.trunk_in,
+        );
+        let mut p = Vec::with_capacity(self.spec.n_params);
+        let dense = |rng: &mut Rng,
+                     p: &mut Vec<f32>,
+                     fan_in: usize,
+                     fan_out: usize,
+                     scale: f32,
+                     bias: bool| {
+            if bias {
+                p.extend(std::iter::repeat(0.0).take(fan_out));
+            }
+            let s = scale / (fan_in as f32).sqrt();
+            p.extend((0..fan_in * fan_out).map(|_| rng.normal() as f32 * s));
+        };
+        dense(&mut self.rng, &mut p, d_in, a, 0.01, true); // actor
+        dense(&mut self.rng, &mut p, d_in, 1, 1.0, true); // critic
+        for seg in &arch.segments {
+            if let TrunkSegment::Embed { vocab, .. } = seg {
+                dense(&mut self.rng, &mut p, *vocab, arch.spec.embed_dim, 1.0, false);
+            }
+        }
+        dense(&mut self.rng, &mut p, ti, h, 1.0, true); // enc1
+        dense(&mut self.rng, &mut p, h, h, 1.0, true); // enc2
+        if sd > 0 {
+            dense(&mut self.rng, &mut p, h + sd, 4 * sd, 1.0, true);
+        }
+        ensure!(
+            p.len() == self.spec.n_params,
+            "init_params produced {} values, spec says {}",
+            p.len(),
+            self.spec.n_params
+        );
+        Ok(p)
+    }
+
+    fn forward(&mut self, params: &[f32], obs: &[f32], rows: usize) -> Result<Forward> {
+        let mut out = Forward::default();
+        self.forward_into(params, obs, rows, &mut out)?;
+        Ok(out)
+    }
+
+    fn forward_lstm(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        h_in: &[f32],
+        c_in: &[f32],
+        rows: usize,
+    ) -> Result<ForwardLstm> {
+        let mut out = ForwardLstm::default();
+        self.forward_lstm_into(params, obs, h_in, c_in, rows, &mut out)?;
+        Ok(out)
+    }
+
+    fn gae(
+        &mut self,
+        rewards: &[f32],
+        values: &[f32],
+        dones: &[f32],
+        last_values: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        // The ref.py `gae_ref` reverse scan, time-major (T, R).
+        let (t_dim, r_dim) = (self.spec.horizon, self.spec.batch_roll);
+        let n = t_dim * r_dim;
+        ensure!(
+            rewards.len() == n && values.len() == n && dones.len() == n,
+            "gae inputs must be (T={t_dim}, R={r_dim})"
+        );
+        ensure!(last_values.len() == r_dim, "last_values must be R={r_dim}");
+        let (gamma, lam) = (self.spec.gamma as f32, self.spec.lam as f32);
+
+        let mut adv = vec![0.0f32; n];
+        let mut gae = vec![0.0f32; r_dim];
+        let mut next_value = last_values.to_vec();
+        for t in (0..t_dim).rev() {
+            let base = t * r_dim;
+            for r in 0..r_dim {
+                let mask = 1.0 - dones[base + r];
+                let delta = rewards[base + r] + gamma * next_value[r] * mask - values[base + r];
+                gae[r] = delta + gamma * lam * mask * gae[r];
+                adv[base + r] = gae[r];
+                next_value[r] = values[base + r];
+            }
+        }
+        let ret: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+        Ok((adv, ret))
+    }
+
+    fn train_step(
+        &mut self,
+        params: &mut Vec<f32>,
+        opt: &mut AdamState,
+        lr: f32,
+        ent_coef: f32,
+        batch: &TrainBatch<'_>,
+    ) -> Result<[f32; 5]> {
+        let d = self.arch.obs_dim;
+        let slots = self.arch.act_dims.len();
+        let n = batch.t * batch.r;
+        ensure!(batch.obs.len() == n * d, "obs len {} != {n}x{d}", batch.obs.len());
+        ensure!(batch.actions.len() == n * slots, "actions len mismatch");
+        ensure!(
+            batch.logp.len() == n && batch.adv.len() == n && batch.ret.len() == n,
+            "logp/adv/ret must be N={n}"
+        );
+        ensure!(batch.starts.len() == n, "starts must be N={n}");
+        ensure!(
+            opt.m.len() == params.len() && opt.v.len() == params.len(),
+            "optimizer state length mismatch"
+        );
+        if self.arch.is_recurrent() {
+            self.train_step_bptt(params, opt, lr, ent_coef, batch)
+        } else {
+            self.train_step_ff(params, opt, lr, ent_coef, batch)
+        }
+    }
+
+    fn fork_for_rollout(&self) -> Result<Box<dyn PolicyBackend>> {
+        // The backend is pure math over caller-owned parameters; its only
+        // state (the init RNG) is never touched by forward passes, so a
+        // plain clone is a safe concurrent-inference fork.
+        Ok(Box::new(self.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest(policy: &PolicySpec, d: usize, act_dims: Vec<usize>) -> SpecManifest {
+        let arch = ResolvedPolicy::from_flat(policy, d, &act_dims);
+        SpecManifest {
+            obs_dim: d,
+            n_params: arch.n_params(),
+            act_dims,
+            agents: 1,
+            lstm: policy.is_recurrent(),
+            hidden: policy.hidden,
+            policy: policy.clone(),
+            batch_fwd: 4,
+            batch_roll: 4,
+            horizon: 3,
+            gamma: 0.99,
+            lam: 0.95,
+            params0: String::new(),
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn tiny_spec(d: usize, act_dims: Vec<usize>, hidden: usize) -> SpecManifest {
+        tiny_manifest(&PolicySpec::default().with_hidden(hidden), d, act_dims)
+    }
+
+    #[test]
+    fn init_params_matches_spec_len() {
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(5, vec![3, 2], 8), 1);
+        let p = b.init_params().unwrap();
+        assert_eq!(p.len(), b.spec().n_params);
+        // Actor bias and all biases start at zero; some weights nonzero.
+        assert!(p[..5].iter().all(|&x| x == 0.0), "actor bias zero-init");
+        assert!(p.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(5, vec![3, 2], 8), 2);
+        let p = b.init_params().unwrap();
+        let obs: Vec<f32> = (0..4 * 5).map(|i| (i as f32 * 0.37).sin()).collect();
+        let out = b.forward(&p, &obs, 4).unwrap();
+        assert_eq!(out.logits.len(), 4 * 5);
+        assert_eq!(out.values.len(), 4);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn gae_single_row_hand_check() {
+        // T=3, R=1, gamma/lam as spec; verify against a hand-unrolled scan.
+        let mut spec = tiny_spec(1, vec![2], 4);
+        spec.horizon = 3;
+        spec.batch_roll = 1;
+        let mut b = NativeBackend::from_spec("t".into(), spec, 3);
+        let rewards = [1.0f32, 0.0, 2.0];
+        let values = [0.5f32, 0.4, 0.3];
+        let dones = [0.0f32, 1.0, 0.0];
+        let last = [0.7f32];
+        let (adv, ret) = b.gae(&rewards, &values, &dones, &last).unwrap();
+        let (g, l) = (0.99f32, 0.95f32);
+        let d2 = 2.0 + g * 0.7 - 0.3;
+        let a2 = d2;
+        let d1 = 0.0 + 0.0 - 0.4; // done masks the bootstrap
+        let a1 = d1;
+        let d0 = 1.0 + g * 0.4 - 0.5;
+        let a0 = d0 + g * l * a1;
+        assert!((adv[0] - a0).abs() < 1e-6, "{} vs {a0}", adv[0]);
+        assert!((adv[1] - a1).abs() < 1e-6);
+        assert!((adv[2] - a2).abs() < 1e-6);
+        assert!((ret[2] - (a2 + 0.3)).abs() < 1e-6);
+    }
+
+    type RegressionBatch = (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>);
+
+    fn value_regression_batch(t: usize, r: usize, d: usize) -> RegressionBatch {
+        let n = t * r;
+        (
+            (0..n * d).map(|i| ((i * 7 % 13) as f32) / 13.0).collect(),
+            vec![0i32; n],
+            vec![-0.69f32; n],
+            vec![0.0f32; n],
+            (0..n).map(|i| (i % 3) as f32).collect(),
+            vec![0.0; n],
+        )
+    }
+
+    #[test]
+    fn train_step_descends_on_value_loss() {
+        // With adv ≡ 0 the update is pure value regression: repeated steps
+        // must reduce v_loss.
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(3, vec![2], 8), 4);
+        let mut params = b.init_params().unwrap();
+        let mut opt = AdamState::new(params.len());
+        let (t, r) = (3usize, 4usize);
+        let (obs, actions, logp, adv, ret, starts) = value_regression_batch(t, r, 3);
+        let batch = TrainBatch {
+            t,
+            r,
+            norm_adv: true,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let first = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        }
+        assert!(
+            last[2] < first[2] * 0.5,
+            "v_loss did not descend: {} -> {}",
+            first[2],
+            last[2]
+        );
+        assert_eq!(opt.step, 61.0);
+    }
+
+    #[test]
+    fn bptt_train_step_descends_on_value_loss() {
+        // The recurrent path must optimize too: same pure value
+        // regression through the LSTM sandwich, with episode starts
+        // scattered through the batch.
+        let policy = PolicySpec::default().with_hidden(8).with_lstm(8);
+        let mut b = NativeBackend::from_spec("t".into(), tiny_manifest(&policy, 3, vec![2]), 4);
+        let mut params = b.init_params().unwrap();
+        let mut opt = AdamState::new(params.len());
+        let (t, r) = (3usize, 4usize);
+        let (obs, actions, logp, adv, ret, mut starts) = value_regression_batch(t, r, 3);
+        for (i, s) in starts.iter_mut().enumerate() {
+            *s = if i % 5 == 0 { 1.0 } else { 0.0 };
+        }
+        let batch = TrainBatch {
+            t,
+            r,
+            norm_adv: true,
+            obs: &obs,
+            starts: &starts,
+            actions: &actions,
+            logp: &logp,
+            adv: &adv,
+            ret: &ret,
+        };
+        let first = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        let mut last = first;
+        for _ in 0..80 {
+            last = b.train_step(&mut params, &mut opt, 0.05, 0.0, &batch).unwrap();
+        }
+        assert!(
+            last[2] < first[2] * 0.5,
+            "BPTT v_loss did not descend: {} -> {}",
+            first[2],
+            last[2]
+        );
+    }
+
+    #[test]
+    fn recurrent_reference_env_gets_a_recurrent_default_arch() {
+        // ocean/memory now constructs on the native backend: the default
+        // PolicySpec for it carries the LSTM stage (and no architecture
+        // key fragment — it *is* the env default).
+        let env = crate::envs::make("ocean/memory", 0);
+        let b = NativeBackend::for_env("ocean/memory", env.as_ref()).unwrap();
+        assert!(b.arch().is_recurrent());
+        assert!(b.spec().lstm);
+        assert_eq!(b.key(), "ocean_memory");
+        // Forcing feedforward on a memory env stays a hard, actionable
+        // construction error.
+        let err = NativeBackend::for_env_with_policy(
+            "ocean/memory",
+            env.as_ref(),
+            &PolicySpec::default(),
+        )
+        .err()
+        .expect("feedforward override must not construct")
+        .to_string();
+        assert!(err.contains("--policy.lstm"), "unactionable error: {err}");
+        assert!(requires_recurrence("ocean/memory+clip_reward=1"));
+        assert!(!requires_recurrence("ocean/bandit"));
+    }
+
+    #[test]
+    fn non_default_arch_is_part_of_the_key() {
+        let env = crate::envs::make("ocean/bandit", 0);
+        let b = NativeBackend::for_env("ocean/bandit", env.as_ref()).unwrap();
+        assert_eq!(b.key(), "ocean_bandit");
+        let b64 = NativeBackend::for_env_with_policy(
+            "ocean/bandit",
+            env.as_ref(),
+            &PolicySpec::default().with_hidden(64),
+        )
+        .unwrap();
+        assert_eq!(b64.key(), "ocean_bandit#h=64");
+        // Distinct architecture keys draw distinct init streams.
+        let lstm = NativeBackend::for_env_with_policy(
+            "ocean/bandit",
+            env.as_ref(),
+            &PolicySpec::default().with_lstm(128),
+        )
+        .unwrap();
+        assert_eq!(lstm.key(), "ocean_bandit#lstm=128");
+    }
+
+    #[test]
+    fn norm_adv_off_feeds_raw_advantages() {
+        // Constant positive advantages: normalized they collapse to zero
+        // (zero policy gradient); raw they drive an actor update. The two
+        // settings must therefore diverge from the same start.
+        let mk = || NativeBackend::from_spec("t".into(), tiny_spec(3, vec![2], 8), 9);
+        let mut b = mk();
+        let params0 = b.init_params().unwrap();
+        let t = 3usize;
+        let r = 4usize;
+        let n = t * r;
+        let obs: Vec<f32> = (0..n * 3).map(|i| ((i * 5 % 11) as f32) / 11.0).collect();
+        let actions = vec![1i32; n];
+        let logp = vec![-0.69f32; n];
+        let adv = vec![1.0f32; n];
+        let ret = vec![0.0f32; n];
+        let starts = vec![0.0f32; n];
+        let run = |norm_adv: bool| {
+            let mut b = mk();
+            let mut params = params0.clone();
+            let mut opt = AdamState::new(params.len());
+            let batch = TrainBatch {
+                t,
+                r,
+                norm_adv,
+                obs: &obs,
+                starts: &starts,
+                actions: &actions,
+                logp: &logp,
+                adv: &adv,
+                ret: &ret,
+            };
+            let m = b.train_step(&mut params, &mut opt, 0.01, 0.0, &batch).unwrap();
+            (params, m)
+        };
+        let (p_norm, m_norm) = run(true);
+        let (p_raw, m_raw) = run(false);
+        assert!((m_norm[1]).abs() < 1e-6, "normalized constant adv → pg 0");
+        assert!(m_raw[1].abs() > 1e-3, "raw adv must drive the surrogate");
+        assert_ne!(p_norm, p_raw);
+    }
+
+    #[test]
+    fn fork_for_rollout_matches_forward() {
+        let mut b = NativeBackend::from_spec("t".into(), tiny_spec(5, vec![3], 8), 2);
+        let p = b.init_params().unwrap();
+        let obs: Vec<f32> = (0..4 * 5).map(|i| (i as f32 * 0.31).cos()).collect();
+        let mut fork = b.fork_for_rollout().unwrap();
+        assert_eq!(fork.key(), b.key());
+        let a = b.forward(&p, &obs, 4).unwrap();
+        let f = fork.forward(&p, &obs, 4).unwrap();
+        assert_eq!(a.logits, f.logits);
+        assert_eq!(a.values, f.values);
+    }
+
+    #[test]
+    fn embedded_tokens_change_the_trunk_not_the_api() {
+        use crate::spaces::Space;
+        // {feat: f32[2], tok: Discrete(5)} with embed_dim 3.
+        let space = Space::dict(vec![
+            ("feat".into(), Space::boxf(&[2], -1.0, 1.0)),
+            ("tok".into(), Space::Discrete(5)),
+        ]);
+        let policy = PolicySpec::default().with_hidden(8).with_embed_dim(3);
+        let arch = ResolvedPolicy::resolve(&policy, &space.layout(), &[2]).unwrap();
+        let mut spec = tiny_manifest(&policy, 3, vec![2]);
+        spec.hidden = 8;
+        spec.n_params = arch.n_params();
+        let mut b = NativeBackend::from_arch("t".into(), spec, arch, 7).unwrap();
+        let params = b.init_params().unwrap();
+        // Two observations differing only in the token must produce
+        // different logits (the table rows differ), same shapes.
+        let obs_a = [0.5f32, -0.25, 1.0, 0.5f32, -0.25, 3.0];
+        let out = b.forward(&params, &obs_a, 2).unwrap();
+        assert_eq!(out.logits.len(), 2 * 2);
+        assert_ne!(out.logits[0..2], out.logits[2..4]);
+        // Out-of-range tokens clamp instead of indexing out of bounds.
+        let obs_c = [0.5f32, -0.25, 99.0];
+        assert!(b.forward(&params, &obs_c, 1).is_ok());
+    }
+}

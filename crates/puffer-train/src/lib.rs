@@ -1,0 +1,308 @@
+//! # PufferLib (Rust + JAX + Pallas reproduction)
+//!
+//! A faithful systems reproduction of *"PufferLib: Making Reinforcement
+//! Learning Libraries and Environments Play Nice"* (Suárez, 2024). The
+//! repo is a three-crate workspace; this crate (`puffer-train`, lib name
+//! `pufferlib`) is the execution layer:
+//!
+//! - **`puffer-core`** — emulation ([`emulation`]), the from-scratch
+//!   vectorization engine with EnvPool semantics ([`vector`]),
+//!   first-party environments including the Ocean sanity suite
+//!   ([`envs`]), wrapper chains ([`wrappers`]), and the declarative
+//!   [`RunSpec`](runspec::RunSpec) spec layer. Re-exported here under
+//!   the same paths, so `pufferlib::vector::...` keeps working.
+//! - **`puffer-train` (this crate)** — the Clean PuffeRL PPO trainer
+//!   ([`train`]), the native/PJRT learner backends and vectorized
+//!   kernels ([`backend`]), the policy runtime ([`policy`]), the run
+//!   registry and resumable sweeps ([`runs`]), the `puffer serve`
+//!   inference server ([`serve`]), and the `puffer` CLI.
+//! - **`puffer-py`** — the PyO3 cdylib over `puffer-core`: zero-copy
+//!   numpy views of the vectorizer slabs, the `pufferlib.emulate(...)`
+//!   one-liner, and a Gymnasium `VectorEnv` adapter so CleanRL/SB3
+//!   scripts train against this backend unmodified (see
+//!   `python/pufferlib/`).
+//!
+//! The learner math sits behind the [`backend`] abstraction
+//! ([`backend::PolicyBackend`]): the default
+//! [`NativeBackend`](backend::NativeBackend) is a pure-Rust port of the
+//! JAX/Pallas reference math under `python/compile/`, so the crate
+//! builds and trains on a clean machine with **zero native
+//! dependencies** — no XLA, no Python. Enable the `pjrt` cargo feature
+//! to execute the AOT-compiled HLO artifacts through the PJRT C API
+//! instead (the [`runtime`] module), with Python still never running on
+//! the rollout or training path. Disabling the default `trainer`
+//! feature compiles out the training loop, pipeline, and sweep
+//! executors while keeping checkpoint loading and serving — the
+//! serve-only build (`cargo check -p puffer-train
+//! --no-default-features`) proves the inference path never links
+//! trainer code.
+//!
+//! ## Quickstart: one `RunSpec` per experiment
+//!
+//! The construction currency is the declarative [`RunSpec`](runspec::RunSpec):
+//! env × policy × vectorization × training × one root seed, fully
+//! TOML/JSON-serializable. One value describes a run; one value is
+//! embedded in every checkpoint (`puffer resume <ckpt>` needs zero
+//! flags); one file drives the CLI (`puffer run spec.toml`, see the
+//! `examples/specs/` gallery).
+//!
+//! ```no_run
+//! use pufferlib::prelude::*;
+//! use pufferlib::runspec::{RunSpec, RunSpecExt as _};
+//!
+//! let spec = RunSpec::new(EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4))
+//!     .with_vec(VecSpec::pooled(2))            // mt, M = 2N double-buffering
+//!     .with_seed(7)                            // root of every RNG stream
+//!     .with_train(|t| t.total_steps = 30_000);
+//! let report = spec.build().unwrap().train().unwrap();
+//! println!("score: {:?}", report.mean_score);
+//!
+//! // The same spec as a file (examples/specs/*.toml):
+//! let toml = spec.to_toml().unwrap();
+//! assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+//! ```
+//!
+//! Three sub-specs compose it, each usable on its own:
+//!
+//! - [`EnvSpec`](wrappers::EnvSpec) — base env + in-place microwrapper
+//!   chain ([`wrappers`]); custom envs slot in via
+//!   [`EnvSpec::custom`](wrappers::EnvSpec::custom) (see
+//!   `examples/custom_env.rs`).
+//! - [`PolicySpec`](policy::PolicySpec) — the architecture sandwich
+//!   (below).
+//! - [`VecSpec`](vector::VecSpec) — `serial`, `mt { workers, batch,
+//!   zero_copy, spin_budget }`, or `auto` (autotuned once, cached under
+//!   the run dir). `VecSpec::build(&env_spec, num_envs, seed)` is the
+//!   public vectorizer path; `Serial::from_spec` /
+//!   `Multiprocessing::from_spec` remain underneath as the typed
+//!   low-level layer:
+//!
+//! ```no_run
+//! use pufferlib::prelude::*;
+//!
+//! let env = EnvSpec::new("ocean/squared").clip_reward(1.0).stack(4);
+//! let mut venv = VecSpec::mt(2).build(&env, 8, 0).unwrap();
+//! let (obs, _rewards, _terms, _truncs, _infos) = venv.reset(0).unwrap();
+//! assert_eq!(obs.len(), 8 * venv.obs_layout().byte_len());
+//! ```
+//!
+//! The classic imperative `TrainConfig` path still works (and stays
+//! bit-identical to the pre-RunSpec trainer); a RunSpec additionally
+//! derives every RNG stream — env resets, policy sampling, minibatch
+//! shuffle, collector, eval — from the single `seed` root via the
+//! documented split function ([`util::seed::SeedPlan::from_root`]), and
+//! a `[grid]` section expands into a sweep
+//! ([`RunSpec::expand_grid`](runspec::RunSpec::expand_grid), `puffer
+//! sweep`).
+//!
+//! ## Policy architectures
+//!
+//! The model is as composable as the env: a declarative
+//! [`PolicySpec`](policy::PolicySpec) — per-leaf observation encoders ×
+//! recurrence × action head, paper §3.4's encoder → LSTM → decoder
+//! "sandwich" — is resolved against the env's emulated
+//! [`StructLayout`](spaces::StructLayout) and becomes the construction
+//! currency for models exactly as [`EnvSpec`](wrappers::EnvSpec) is for
+//! envs:
+//!
+//! - **Per-leaf encoders**: f32/u8 leaves feed the two-layer tanh trunk
+//!   raw; Discrete / token (i32) leaves become learned embedding tables
+//!   when `embed_dim > 0` (indices clamped into the leaf's vocabulary,
+//!   concatenated into the trunk in field order).
+//! - **Recurrence is a flag, not a second model**
+//!   ([`Recurrence::None`](policy::Recurrence) |
+//!   [`Lstm { hidden }`](policy::Recurrence)): the native backend runs
+//!   the fused-gate cell on the rollout side and **full BPTT through the
+//!   time scan** on the training side, with LSTM state zeroed at episode
+//!   starts. Recurrent envs (e.g. `ocean/memory`) resolve a recurrent
+//!   default spec and train natively — the old "recurrent envs require
+//!   `--features pjrt`" error is gone.
+//! - **Unified action head** ([`ActionHead`](policy::ActionHead)):
+//!   per-slot categorical logits over the emulated MultiDiscrete, or a
+//!   declared quantized-continuous grid (`head=quantized:<bins>`).
+//!   Native continuous (Gaussian) heads are ROADMAP item 4 and rejected
+//!   with an actionable error at spec parse time.
+//!
+//! ```no_run
+//! use pufferlib::policy::PolicySpec;
+//! use pufferlib::train::{TrainConfig, Trainer};
+//!
+//! // ocean/memory defaults to the LSTM sandwich — this trains natively.
+//! let recurrent = TrainConfig { env: "ocean/memory".into(), ..Default::default() };
+//! Trainer::native(recurrent).unwrap().train().unwrap();
+//!
+//! // Explicit spec: 64-wide trunk, 8-wide token embeddings, 64-wide LSTM.
+//! let cfg = TrainConfig {
+//!     env: "ocean/spaces".into(),
+//!     policy: Some(PolicySpec::default().with_hidden(64).with_embed_dim(8).with_lstm(64)),
+//!     ..Default::default()
+//! };
+//! Trainer::native(cfg).unwrap().train().unwrap();
+//! ```
+//!
+//! Config/CLI: `train.policy.*` keys and `--policy.*` overrides
+//! (`hidden`, `lstm`, `lstm_hidden`, `embed_dim`,
+//! `head=categorical|quantized:<bins>`), parsed as strictly as
+//! `--wrap.*`. A non-default spec is embedded in the checkpoint key
+//! (`env#h=64+lstm=64`), so restores never cross architectures;
+//! `puffer policy describe <env>` prints the resolved leaves, stages,
+//! and parameter counts. The PJRT backend executes AOT-lowered default
+//! architectures only and rejects non-default specs at construction.
+//!
+//! ## Throughput tuning
+//!
+//! Three multiplicative levers, innermost out:
+//!
+//! 1. **Vectorizer pooling** (`TrainConfig::pool`, paper §3.3): `recv`
+//!    returns the first half of the envs to finish (`M = 2N`), so
+//!    rollout inference double-buffers against simulation and stragglers
+//!    never block a batch.
+//! 2. **Pipeline depth** (`TrainConfig::pipeline_depth`,
+//!    `--pipeline.depth`): `0` is the serial collect-then-learn loop;
+//!    `d ≥ 1` moves collection to a dedicated thread that runs up to `d`
+//!    rollout segments ahead over `d + 1` rotating buffers, inferring
+//!    off epoch-versioned parameter snapshots while the learner
+//!    optimizes the previous segment. Simulation and backprop overlap
+//!    instead of taking turns.
+//! 3. **Minibatches** (`TrainConfig::minibatches`): each PPO epoch
+//!    shuffles the segment's agent rows into this many row-subset
+//!    updates (advantages re-normalized per minibatch,
+//!    `TrainConfig::norm_adv`). More, smaller updates per segment —
+//!    standard PPO — and the learner-side cost knob to balance against
+//!    collection.
+//!
+//! ```no_run
+//! use pufferlib::train::{TrainConfig, Trainer};
+//!
+//! let cfg = TrainConfig {
+//!     env: "profile/atari".into(),
+//!     pool: true,        // M = 2N double-buffered simulation
+//!     pipeline_depth: 1, // collector thread overlaps the learner
+//!     minibatches: 4,    // 4 shuffled row-minibatches per PPO epoch
+//!     ..Default::default()
+//! };
+//! let report = Trainer::native(cfg).unwrap().train().unwrap();
+//! // Read the balance: env_sps ≈ collection ceiling, learn_sps ≈
+//! // learner ceiling; end-to-end sps approaches min(env, learn) when
+//! // pipelined. collector_stall_s > 0 → learner-bound (lower epochs /
+//! // minibatch cost); learner_stall_s > 0 → env-bound (more workers,
+//! // enable pool).
+//! println!("sps {:.0} env {:.0} learn {:.0} stalls {:.1}s/{:.1}s",
+//!     report.sps, report.env_sps, report.learn_sps,
+//!     report.collector_stall_s, report.learner_stall_s);
+//! ```
+//!
+//! With `pipeline_depth = 0` and `minibatches = 1` the trainer is the
+//! exact serial loop (bit-identical params; pinned by
+//! `tests/pipeline.rs`), so results stay comparable when you turn the
+//! knobs off.
+//!
+//! ### Kernel paths
+//!
+//! Underneath all three levers sits the native backend's compute path,
+//! selected per run with `train.kernels` (`--train.kernels=scalar|simd`,
+//! [`backend::KernelPath`]):
+//!
+//! - `simd` (default): cache-blocked, 8-lane-tiled GEMM microkernels, a
+//!   fused LSTM cell, branch-free polynomial transcendentals, and
+//!   structured fork-join row parallelism across the forward, backward,
+//!   and Adam passes ([`backend::kernels`]). Matches the scalar path
+//!   within explicit tolerances (forward ≤ 1e-5, gradients ≤ 1e-4
+//!   relative — `tests/kernel_parity.rs`), and is **deterministic**:
+//!   threads partition output rows only, so results are bitwise
+//!   invariant to the thread count.
+//! - `scalar`: the original bit-exact reference math, pinned by the
+//!   golden JAX fixtures. Use it to reproduce pre-kernel runs exactly or
+//!   to bisect a numerical question down to the kernel layer.
+//!
+//! `PUFFER_KERNEL_THREADS` caps the fork-join width (default: available
+//! parallelism, capped at 8); small batches never fork. The
+//! scalar-vs-simd cells in `BENCH_policy.json` / `BENCH_train.json`
+//! (refreshed by `make bench`) quantify the speedup per architecture.
+//!
+//! ## Serving
+//!
+//! `puffer serve <ckpt>` ([`serve`]) turns a v2 (RunSpec-embedded)
+//! checkpoint into a localhost inference service: concurrent TCP
+//! clients send flat observation rows (length-prefixed binary frames,
+//! or newline-JSON for debugging — [`serve::protocol`] documents the
+//! exact layout), and a dynamic batcher coalesces them into batched
+//! forward passes under a dual budget (`serve.max_batch` rows or
+//! `serve.max_wait_us`, whichever first). Recurrent policies keep
+//! per-session LSTM state server-side — sessions are created lazily,
+//! reset on episode boundaries, and evicted after `serve.session_ttl_s`
+//! idle — and a watcher thread hot-swaps weights through
+//! [`policy::ParamSnapshot`] whenever the checkpoint file changes, so a
+//! trainer can publish into a live server. Replies are deterministic
+//! (greedy argmax) and bit-identical to a serial forward regardless of
+//! batch shape (pinned by `tests/serve.rs`). `puffer serve <ckpt>
+//! --selftest` runs a synthetic load and reports p50/p99 latency plus
+//! batch occupancy; `puffer ckpt info <ckpt>` prints the embedded spec
+//! (`--json` for scripts).
+//!
+//! ## Experiment ops
+//!
+//! Every `puffer run`/`resume`/`sweep` launch is logged to a crash-safe
+//! run registry ([`runs`]): an append-only `runs/index.jsonl` plus one
+//! atomically-rewritten `run.json` per run dir, tracking
+//! `pending → running → done | failed | killed` with host/pid, attempt
+//! count, final metrics, and checkpoint path. Sweeps are resumable —
+//! re-invoking `puffer sweep` skips at-budget children, resumes
+//! partials from their checkpoints, and reclaims orphans — and
+//! `--processes=N` isolates children in their own OS processes.
+//! Trainers heartbeat live SPS/stall counters to `heartbeat.json`;
+//! `puffer ps` (and `--json`) tables live/recent runs with
+//! stale-heartbeat detection, `puffer top` refreshes the in-flight
+//! view. The `[runs]` spec section / `--runs.*` flags set the registry
+//! root and heartbeat period.
+//!
+//! ## Concurrency correctness
+//!
+//! Every cross-thread protocol (slab handoff, parameter snapshots,
+//! buffer rotation, shutdown/reset delivery) is written against the
+//! [`sync`] facade, which swaps to [loom](https://docs.rs/loom)'s
+//! model-checked primitives under `--cfg loom` so
+//! `tests/loom_models.rs` can exhaustively explore interleavings.
+//! The protocol contracts, memory-ordering audit, and rules for new
+//! `unsafe`/atomics live in `CONCURRENCY.md` at the repo root.
+
+// The environment half of the stack lives in puffer-core; re-export its
+// modules under the historical paths so `pufferlib::vector::...` (and
+// `crate::vector::...` inside this crate) keep resolving unchanged.
+pub use puffer_core::{config, emulation, envs, spaces, sync, util, vector, wrappers};
+
+pub mod backend;
+pub mod policy;
+pub mod runs;
+pub mod runtime;
+pub mod serve;
+pub mod train;
+
+#[cfg(feature = "trainer")]
+mod runspec_ext;
+
+/// The declarative experiment currency ([`RunSpec`](runspec::RunSpec),
+/// from `puffer-core`) plus this crate's executors: the
+/// [`RunSpecExt`](runspec::RunSpecExt) extension trait (`build()` /
+/// deep `validate()`) and the sweep runners, available with the
+/// default `trainer` feature.
+pub mod runspec {
+    pub use puffer_core::runspec::*;
+
+    #[cfg(feature = "trainer")]
+    pub use crate::runspec_ext::{run_sweep, run_sweep_with, RunSpecExt, SweepOutcome};
+}
+
+/// Convenience re-exports covering the most common entry points.
+pub mod prelude {
+    pub use crate::backend::{NativeBackend, PolicyBackend};
+    pub use crate::emulation::{EpisodeStats, FlatEnv, PufferEnv, StructuredEnv};
+    pub use crate::policy::{ActionHead, PolicySpec, Recurrence};
+    pub use crate::runspec::RunSpec;
+    #[cfg(feature = "trainer")]
+    pub use crate::runspec::RunSpecExt;
+    pub use crate::spaces::{Space, StructLayout, Value};
+    pub use crate::util::rng::Rng;
+    pub use crate::vector::{Multiprocessing, Serial, StepBatch, VecBatch, VecConfig, VecEnv, VecSpec};
+    pub use crate::wrappers::{EnvSpec, Wrapper, WrapperSpec};
+}

@@ -1,0 +1,1090 @@
+//! `puffer` — the Clean PuffeRL runner CLI (paper §6: "a runner file with
+//! a CLI for all included PufferLib environments, clean YAML configs").
+//!
+//! ```text
+//! puffer run <spec.toml> [--train.lr=3e-3 --vec.workers=4 ...] [--resume]
+//! puffer validate <spec.toml> [more.toml ...]
+//! puffer resume <checkpoint.bin>            # zero flags: spec is embedded
+//! puffer sweep <spec.toml> [--jobs=N | --processes=N]  # resumable [grid] sweep
+//! puffer ps [--runs.root=DIR] [--json]      # registry table: live/done/failed/stale
+//! puffer top [--runs.root=DIR] [--refresh=S] [--iters=N]  # refreshing live view
+//! puffer train <env> [--config cfg.yaml] [--train.lr=3e-3] [--wrap.stack=4] ...
+//! puffer eval <checkpoint.bin> [--episodes=N]      # spec from the checkpoint
+//! puffer eval <env> --checkpoint=FILE [--episodes=N]
+//! puffer sweep                              # legacy: train the whole Ocean suite
+//! puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--run_dir=DIR]
+//! puffer policy describe <env> [--wrap.* ...] [--policy.* ...]
+//! puffer serve <checkpoint.bin> [--serve.port=7777 ...] [--selftest]
+//! puffer ckpt info <checkpoint.bin> [--json]  # version, arch key, embedded spec
+//! puffer envs                               # list first-party environments
+//! ```
+//!
+//! The declarative path: a `RunSpec` TOML file (see `examples/specs/`)
+//! describes the whole experiment — `[env]` + `[env.wrap]`, `[policy]`,
+//! `[vec]` (`serial` | `mt` | `auto`), `[train]`, one root `seed`, and
+//! an optional `[grid]` sweep. `puffer run` executes it, embeds the spec
+//! in the checkpoint, and `puffer resume` / `puffer eval` reconstruct
+//! the run from the checkpoint alone. CLI `--section.key=value`
+//! overrides compose onto any spec (`--wrap.*` / `--pipeline.*` are
+//! aliases for `env.wrap.*` / `train.pipeline.*`).
+//!
+//! The imperative path (`puffer train <env>`) still accepts the classic
+//! flat keys, now including `--vec.*`. The default backend is the
+//! pure-Rust `NativeBackend`; `--backend=pjrt` (train/eval only) selects
+//! the AOT/PJRT path, which requires a build with `--features pjrt` plus
+//! `make artifacts`.
+
+use anyhow::{Context, Result};
+use pufferlib::config;
+use pufferlib::envs;
+use pufferlib::runs::{self, Registry, RunStatus};
+use pufferlib::runspec::{self, RunSpec, RunSpecExt as _};
+use pufferlib::train::{Checkpoint, TrainConfig, TrainReport, Trainer};
+use pufferlib::vector::autotune;
+use pufferlib::wrappers::EnvSpec;
+
+#[cfg(feature = "pjrt")]
+const ARTIFACTS: &str = "artifacts";
+
+/// Override namespaces every spec-consuming command accepts.
+const SPEC_NAMESPACES: &[&str] =
+    &["train.", "wrap.", "pipeline.", "policy.", "vec.", "env.", "serve.", "runs.", "seed"];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+
+    match cmd {
+        "run" => cmd_run(&rest),
+        "validate" => cmd_validate(&rest),
+        "resume" => cmd_resume(&rest),
+        "train" => cmd_train(&rest),
+        "eval" => cmd_eval(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "ps" => cmd_ps(&rest),
+        "top" => cmd_top(&rest),
+        "autotune" => cmd_autotune(&rest),
+        "policy" => cmd_policy(&rest),
+        "serve" => cmd_serve(&rest),
+        "ckpt" => cmd_ckpt(&rest),
+        "envs" => {
+            for name in envs::ALL_ENVS {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'");
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "puffer — PufferLib (Rust + JAX + Pallas) runner\n\n\
+         USAGE:\n  puffer run <spec.toml> [--KEY=VAL ...] [--resume]  run a declarative RunSpec\n  \
+         puffer validate <spec.toml> [...]               parse + deep-check spec files\n  \
+         puffer resume <checkpoint.bin> [--KEY=VAL ...]  continue a run (spec embedded)\n  \
+         puffer sweep <spec.toml> [--jobs=N | --processes=N]  resumable [grid] sweep\n  \
+         puffer ps [--runs.root=DIR] [--json]            registry: live/done/failed/stale runs\n  \
+         puffer top [--runs.root=DIR] [--refresh=SECS] [--iters=N]  refreshing live view\n  \
+         puffer train <env> [--config FILE] [--train.KEY=VAL ...] [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...] [--pipeline.KEY=VAL ...] [--vec.KEY=VAL ...] [--backend=native|pjrt]\n  \
+         puffer eval <checkpoint.bin> [--episodes=N]     evaluate from a RunSpec checkpoint\n  \
+         puffer eval <env> --checkpoint=FILE [--episodes=N]\n  \
+         puffer sweep [--train.KEY=VAL ...]              legacy: train the whole Ocean suite\n  \
+         puffer autotune <env> [--envs=N] [--workers=W] [--secs=S] [--run_dir=DIR] [--wrap.KEY=VAL ...]\n  \
+         puffer policy describe <env> [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...]\n  \
+         puffer serve <checkpoint.bin> [--serve.KEY=VAL ...] [--selftest]\n  \
+         puffer ckpt info <checkpoint.bin> [--json]      print version + embedded spec\n  \
+         puffer envs                                     list first-party envs\n\n\
+         RunSpec files (examples/specs/*.toml): seed = N, [env] name + [env.wrap]\n\
+         \x20 knobs, [policy] hidden/lstm/lstm_hidden/embed_dim/head, [vec]\n\
+         \x20 mode=serial|mt|auto + workers/batch/zero_copy/spin_budget, [train]\n\
+         \x20 keys below, and an optional [grid] of key = [values] to sweep.\n\
+         \x20 `vec = auto` benchmarks once and caches under the run dir\n\
+         \x20 (puffer autotune writes the same cache).\n\n\
+         Train keys: env total_steps lr ent_coef epochs minibatches norm_adv\n\
+         \x20           anneal_lr seed num_workers pool run_dir log_every\n\
+         \x20           kernels scalar|simd (native compute path; worker cap\n\
+         \x20           via PUFFER_KERNEL_THREADS)\n\
+         Pipeline keys: depth — 0 (default) trains serially; d >= 1 runs an\n\
+         \x20 overlapped collector/learner pipeline\n\
+         Wrap keys (innermost-first order): action_repeat time_limit\n\
+         \x20 scale_reward clip_reward normalize_obs stack\n\
+         Policy keys: hidden | lstm true/false | lstm_hidden | embed_dim |\n\
+         \x20 head categorical|quantized:<bins>\n\
+         Vec keys: mode serial|mt|auto | workers | batch full|half|<envs> |\n\
+         \x20 zero_copy | spin_budget\n\
+         Serve keys: port | max_batch | max_wait_us | session_ttl_s | threads\n\
+         Runs keys: root (registry root, default `runs`) | heartbeat_s — every\n\
+         \x20 run/sweep launch writes the registry; `puffer sweep` re-invoked on\n\
+         \x20 the same spec skips at-budget children and resumes partials, and\n\
+         \x20 `puffer ps`/`puffer top` read the same root\n\n\
+         Backends: native (default, pure Rust; any spec) | pjrt (train/eval\n\
+         \x20         only; AOT artifacts, default archs; needs --features pjrt\n\
+         \x20         and `make artifacts`)"
+    );
+}
+
+/// Extract `--config FILE` and positional args, leaving `--k=v` overrides.
+fn split_args(args: &[String]) -> (Option<String>, Vec<String>, Vec<String>) {
+    let mut cfg_file = None;
+    let mut positional = Vec::new();
+    let mut overrides = Vec::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if a == "--config" {
+            cfg_file = it.next().cloned();
+        } else if a.starts_with("--") {
+            overrides.push(a.clone());
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    (cfg_file, positional, overrides)
+}
+
+/// Reject `--key=value` overrides outside the namespaces this command
+/// owns. Without this, a typo'd `--clip_reward=1` (missing the `wrap.`
+/// prefix) or `--trian.lr=3e-3` would be silently ignored — the same
+/// footgun the strict config parser closes for key *suffixes*.
+fn reject_stray_overrides(overrides: &[String], allowed: &[&str]) -> Result<()> {
+    for a in overrides {
+        if let Some(body) = a.strip_prefix("--") {
+            let key = body.split('=').next().unwrap_or(body);
+            if !allowed.iter().any(|ns| key.starts_with(ns)) {
+                let expected: Vec<String> = allowed.iter().map(|ns| format!("--{ns}KEY=VAL")).collect();
+                anyhow::bail!(
+                    "unrecognized flag '--{key}...': this command accepts {}",
+                    expected.join(" and ")
+                );
+            }
+            // Space-separated values (`--wrap.stack 4`) would otherwise
+            // be dropped without effect by the override parser.
+            anyhow::ensure!(
+                body.contains('='),
+                "flag '--{key}' is missing a value: use --{key}=VALUE"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Pull `--backend=...` out of the override list (default: native).
+fn take_backend(overrides: &mut Vec<String>) -> String {
+    let mut backend = "native".to_string();
+    overrides.retain(|a| {
+        if let Some(v) = a.strip_prefix("--backend=") {
+            backend = v.to_string();
+            false
+        } else {
+            true
+        }
+    });
+    backend
+}
+
+fn make_trainer(tc: TrainConfig, backend: &str) -> Result<Trainer> {
+    match backend {
+        "native" => Trainer::native(tc),
+        "pjrt" => pjrt_trainer(tc),
+        other => anyhow::bail!("unknown backend '{other}' (expected native or pjrt)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_trainer(tc: TrainConfig) -> Result<Trainer> {
+    Trainer::pjrt(tc, ARTIFACTS)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_trainer(_tc: TrainConfig) -> Result<Trainer> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature; rebuild with \
+         `cargo build --release --features pjrt` and run `make artifacts`"
+    )
+}
+
+fn print_train_report(report: &TrainReport) {
+    println!(
+        "pipeline: env {:.0} SPS, learner {:.0} SPS, stalls {:.2}s collector / {:.2}s learner",
+        report.env_sps, report.learn_sps, report.collector_stall_s, report.learner_stall_s,
+    );
+    println!(
+        "done: {} steps @ {:.0} SPS, {} episodes, score {}, return {}",
+        report.global_step,
+        report.sps,
+        report.episodes,
+        report
+            .mean_score
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+        report
+            .mean_return
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+    );
+}
+
+// -- declarative commands ---------------------------------------------------
+
+/// Merge `--section.key=value` overrides onto a spec (through its flat
+/// serialized form, so override values get exactly the file grammar's
+/// strict validation, and discriminant switches like `--vec.mode=serial`
+/// drop the old mode's dependent knobs).
+fn apply_spec_overrides(spec: RunSpec, overrides: &[String]) -> Result<RunSpec> {
+    if overrides.is_empty() {
+        return Ok(spec);
+    }
+    let (mut flat, arrays) = spec.to_flat()?;
+    let pairs: Vec<(String, String)> = overrides
+        .iter()
+        .filter_map(|a| {
+            let body = a.strip_prefix("--")?;
+            let (k, v) = body.split_once('=')?;
+            Some((runspec::translate_cli_key(k), v.to_string()))
+        })
+        .collect();
+    runspec::merge_overrides(&mut flat, &pairs);
+    RunSpec::from_parts(&flat, &arrays)
+}
+
+/// The deterministic default run dir for an env key — shared by
+/// `puffer run` (when the spec has none) and `puffer autotune` (so its
+/// cache lands exactly where a default `puffer run` of the same env
+/// will look for it).
+fn run_dir_for(env_key: &str) -> String {
+    let leaf: String = env_key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("runs/{leaf}")
+}
+
+/// Give a spec a deterministic run dir when it has none, so every
+/// `puffer run` leaves a resumable checkpoint + metrics behind. Applied
+/// *before* the trainer embeds the spec, so resumed runs agree.
+fn default_run_dir(spec: RunSpec) -> RunSpec {
+    if spec.train.run_dir.is_some() {
+        return spec;
+    }
+    let dir = run_dir_for(&spec.env.key());
+    spec.with_train(|t| t.run_dir = Some(dir))
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    anyhow::ensure!(
+        backend == "native",
+        "puffer run drives the native backend; use `puffer train <env> --backend=pjrt` for the AOT path"
+    );
+    // --resume: continue from the run dir's checkpoint when one exists
+    // (a fresh dir trains from scratch) — what resumable sweeps pass to
+    // their child processes.
+    let mut resume = false;
+    overrides.retain(|a| {
+        if a == "--resume" {
+            resume = true;
+            false
+        } else {
+            true
+        }
+    });
+    let path = positional
+        .first()
+        .cloned()
+        .or(cfg_file)
+        .context("usage: puffer run <spec.toml> [--KEY=VAL ...] [--resume]")?;
+    reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+    let spec = RunSpec::load(&path)?;
+    anyhow::ensure!(
+        spec.grid.is_empty(),
+        "{path} has a [grid] section — execute it with `puffer sweep {path}`"
+    );
+    let spec = default_run_dir(apply_spec_overrides(spec, &overrides)?);
+    let run_dir = spec.train.run_dir.clone().unwrap_or_default();
+    println!(
+        "running {} (policy {}, vec {}, seed {}) for {} steps → {run_dir}",
+        spec.env.key(),
+        spec.policy.as_ref().map(|p| p.key()).unwrap_or_else(|| "default".into()),
+        spec.vec,
+        spec.seed,
+        spec.train.total_steps,
+    );
+    // Every launch is registered: running → done|failed, so `puffer ps`
+    // and resumable sweeps see this run. A crash between begin() and the
+    // terminal write leaves a Running record that stale-heartbeat
+    // detection reports (and sweeps reclaim).
+    let reg = Registry::new(&runs::RunsConfig::for_spec(&spec).root);
+    let rec = reg.begin(&spec, &run_dir)?;
+    let trained = (|| -> Result<TrainReport> {
+        let mut trainer = spec.build()?;
+        if resume {
+            let ckpt = runs::sweep::checkpoint_path(&run_dir);
+            if std::path::Path::new(&ckpt).is_file() {
+                let ck = Checkpoint::load(&ckpt).context("loading checkpoint for --resume")?;
+                trainer.restore(&ck)?;
+                println!("resumed from {ckpt} at step {}", trainer.global_step());
+            }
+        }
+        trainer.train()
+    })();
+    match trained {
+        Ok(report) => {
+            let ckpt = runs::sweep::checkpoint_path(&run_dir);
+            let ckpt = std::path::Path::new(&ckpt).is_file().then_some(ckpt);
+            reg.finish_ok(rec, &report, ckpt)?;
+            print_train_report(&report);
+            println!("checkpoint: {run_dir}/checkpoint.bin (resume with `puffer resume {run_dir}/checkpoint.bin`)");
+            Ok(())
+        }
+        Err(e) => {
+            let _ = reg.finish_err(rec, RunStatus::Failed, &format!("{e:#}"), None);
+            Err(e)
+        }
+    }
+}
+
+fn cmd_validate(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    anyhow::ensure!(
+        !positional.is_empty() && overrides.is_empty(),
+        "usage: puffer validate <spec.toml> [more.toml ...]"
+    );
+    // Every concrete run the invocation describes (grid sections expand
+    // to their children): (spec file, run dir, spec fingerprint).
+    let mut planned: Vec<(String, String, String)> = Vec::new();
+    for path in &positional {
+        let spec = RunSpec::load(path)?;
+        spec.validate().with_context(|| format!("validating {path}"))?;
+        let grid_note = if spec.grid.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", grid {} points",
+                spec.expand_grid().map(|c| c.len()).unwrap_or(0)
+            )
+        };
+        println!(
+            "OK {path}: env {}, policy {}, vec {}, seed {}, {} steps{grid_note}",
+            spec.env.key(),
+            spec.policy.as_ref().map(|p| p.key()).unwrap_or_else(|| "default".into()),
+            spec.vec,
+            spec.seed,
+            spec.train.total_steps,
+        );
+        let concrete = if spec.grid.is_empty() {
+            vec![spec]
+        } else {
+            spec.expand_grid().unwrap_or_default()
+        };
+        for child in &concrete {
+            if let Some(dir) = &child.train.run_dir {
+                planned.push((
+                    path.clone(),
+                    dir.clone(),
+                    runs::record::spec_fingerprint(child),
+                ));
+            }
+        }
+    }
+    // Run-dir collision warnings. Two *different* specs writing one dir
+    // would silently share a checkpoint and registry record — resumes
+    // would cross-contaminate. Identical fingerprints are the normal
+    // re-invoke/resume case and stay quiet.
+    for (i, (path_a, dir_a, fp_a)) in planned.iter().enumerate() {
+        for (path_b, dir_b, fp_b) in planned.iter().skip(i + 1) {
+            if dir_a == dir_b && !fp_a.is_empty() && fp_a != fp_b {
+                println!(
+                    "WARN {dir_a}: {path_a} and {path_b} both write this run dir \
+                     with different specs — their checkpoints and registry \
+                     records would collide"
+                );
+            }
+        }
+    }
+    for (path, dir, fp) in &planned {
+        if let Ok(Some(rec)) = Registry::load(dir) {
+            if !rec.spec_fingerprint.is_empty() && !fp.is_empty() && rec.spec_fingerprint != *fp {
+                println!(
+                    "WARN {dir}: already registered by a different spec than \
+                     {path} (registry fingerprint mismatch) — running this file \
+                     would resume a foreign checkpoint"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_resume(args: &[String]) -> Result<()> {
+    let (_, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    anyhow::ensure!(backend == "native", "puffer resume drives the native backend");
+    let path = positional
+        .first()
+        .context("usage: puffer resume <checkpoint.bin> [--KEY=VAL ...]")?;
+    reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+    let ck = Checkpoint::load(path).context("loading checkpoint")?;
+    let json = ck.run_spec_json.as_deref().with_context(|| {
+        format!(
+            "{path} has no embedded RunSpec (written by `puffer train` or an \
+             older version) — rerun through `puffer run`, or use \
+             `puffer train`/`puffer eval` with explicit flags"
+        )
+    })?;
+    let spec = RunSpec::from_json_str(json).context("parsing the embedded RunSpec")?;
+    let spec = apply_spec_overrides(spec, &overrides)?;
+    println!(
+        "resuming {} at step {} of {} (spec from checkpoint)",
+        spec.env.key(),
+        ck.global_step,
+        spec.train.total_steps
+    );
+    // Resumed attempts are registered like fresh ones: begin() bumps the
+    // record's attempt counter so `puffer ps` shows the retry history.
+    let reg_ctx = match spec.train.run_dir.clone() {
+        Some(dir) => {
+            let reg = Registry::new(&runs::RunsConfig::for_spec(&spec).root);
+            let rec = reg.begin(&spec, &dir)?;
+            Some((reg, rec, dir))
+        }
+        None => None,
+    };
+    let trained = (|| -> Result<TrainReport> {
+        let mut trainer = spec.build()?;
+        trainer.restore(&ck)?;
+        if trainer.global_step() >= spec.train.total_steps {
+            println!(
+                "already at the step budget — extend with --train.total_steps=N to keep training"
+            );
+        }
+        trainer.train()
+    })();
+    match trained {
+        Ok(report) => {
+            if let Some((reg, rec, dir)) = reg_ctx {
+                let ckpt = runs::sweep::checkpoint_path(&dir);
+                let ckpt = std::path::Path::new(&ckpt).is_file().then_some(ckpt);
+                reg.finish_ok(rec, &report, ckpt)?;
+            }
+            print_train_report(&report);
+            Ok(())
+        }
+        Err(e) => {
+            if let Some((reg, rec, _)) = reg_ctx {
+                let _ = reg.finish_err(rec, RunStatus::Failed, &format!("{e:#}"), None);
+            }
+            Err(e)
+        }
+    }
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    // Spec-based grid sweep:
+    // `puffer sweep <spec.toml> [--jobs=N | --processes=N]`. Registry-
+    // aware and crash-resumable: at-budget children are skipped, partial
+    // checkpoints resume, orphaned `running` records are reclaimed, and
+    // every child ends with exactly one terminal registry record.
+    if let Some(path) = positional.first().cloned() {
+        anyhow::ensure!(backend == "native", "puffer sweep drives the native backend");
+        let mut jobs: Option<usize> = None;
+        let mut processes: Option<usize> = None;
+        let mut bad: Option<String> = None;
+        overrides.retain(|a| {
+            if let Some(v) = a.strip_prefix("--jobs=") {
+                match v.parse::<usize>() {
+                    Ok(j) if j >= 1 => jobs = Some(j),
+                    _ => bad = Some(format!("--jobs: expected an integer >= 1, got '{v}'")),
+                }
+                false
+            } else if let Some(v) = a.strip_prefix("--processes=") {
+                match v.parse::<usize>() {
+                    Ok(p) if p >= 1 => processes = Some(p),
+                    _ => bad = Some(format!("--processes: expected an integer >= 1, got '{v}'")),
+                }
+                false
+            } else {
+                true
+            }
+        });
+        if let Some(msg) = bad {
+            anyhow::bail!("{msg}");
+        }
+        anyhow::ensure!(
+            jobs.is_none() || processes.is_none(),
+            "--jobs (in-process threads) and --processes (separate OS processes) \
+             are mutually exclusive — pick one executor"
+        );
+        reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+        let spec = apply_spec_overrides(RunSpec::load(&path)?, &overrides)?;
+        anyhow::ensure!(
+            !spec.grid.is_empty(),
+            "{path} has no [grid] section to sweep — run it with `puffer run {path}`"
+        );
+        let children = spec.expand_grid()?;
+        let reg = Registry::new(&runs::RunsConfig::for_spec(&spec).root);
+        let width = processes.or(jobs).unwrap_or(2).min(children.len());
+        println!(
+            "sweeping {}: {} grid points across {} {} (registry: {})",
+            spec.env.key(),
+            children.len(),
+            width,
+            if processes.is_some() { "process(es)" } else { "worker(s)" },
+            reg.index_path().display(),
+        );
+        use pufferlib::runs::sweep::{ChildOutcome, ChildStatus};
+        let fmt_score = |s: Option<f64>| s.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into());
+        let on_event = |o: &ChildOutcome| {
+            let resumed = if o.resumed { " (resumed)" } else { "" };
+            match &o.status {
+                ChildStatus::Skipped(why) => println!("[skip]   {:<40} {why}", o.label),
+                ChildStatus::Done(Some(r)) => println!(
+                    "[done]   {:<40} score {}  ({} steps @ {:.0} SPS){resumed} → {}",
+                    o.label,
+                    fmt_score(r.mean_score),
+                    r.global_step,
+                    r.sps,
+                    o.run_dir
+                ),
+                ChildStatus::Done(None) => {
+                    println!("[done]   {:<40}{resumed} → {}", o.label, o.run_dir)
+                }
+                ChildStatus::Failed(e) => println!("[failed] {:<40} {e}", o.label),
+            }
+        };
+        let outcomes = match processes {
+            Some(p) => runs::sweep::run_processes(&reg, &children, p, on_event)?,
+            None => runs::sweep::run_resumable(&reg, &children, jobs.unwrap_or(2), on_event)?,
+        };
+        let skipped = outcomes
+            .iter()
+            .filter(|o| matches!(o.status, ChildStatus::Skipped(_)))
+            .count();
+        let resumed = outcomes.iter().filter(|o| o.resumed && !o.failed()).count();
+        let failed = outcomes.iter().filter(|o| o.failed()).count();
+        println!(
+            "sweep done: {}/{} children at budget ({skipped} skipped, {resumed} \
+             resumed, {failed} failed) — inspect with `puffer ps --runs.root={}`",
+            outcomes.len() - failed,
+            outcomes.len(),
+            reg.root().display(),
+        );
+        anyhow::ensure!(failed == 0, "{failed} sweep children failed");
+        return Ok(());
+    }
+
+    // Legacy: train the whole Ocean suite with one flat config.
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy.", "vec."])?;
+    let mut solved = 0;
+    for env in envs::OCEAN_ENVS {
+        let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+        flat.insert("train.env".into(), env.to_string());
+        let tc = config::train_config(&flat)?;
+        let mut trainer = make_trainer(tc, &backend)?;
+        let report = trainer.train()?;
+        let score = report.mean_score.unwrap_or(0.0);
+        let ok = score > 0.9;
+        if ok {
+            solved += 1;
+        }
+        println!(
+            "{:<20} score {:.3}  {}",
+            env,
+            score,
+            if ok { "SOLVED" } else { "unsolved" }
+        );
+    }
+    println!("{solved}/{} Ocean envs solved", envs::OCEAN_ENVS.len());
+    Ok(())
+}
+
+/// `puffer ps`: one row per registered run — derived status (live /
+/// stale / pending / done / failed / killed, with dead-pid and
+/// stale-heartbeat orphan detection), progress, SPS, attempt count,
+/// age, and owner. `--json` emits the full records for scripts.
+fn cmd_ps(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    anyhow::ensure!(
+        positional.is_empty(),
+        "usage: puffer ps [--runs.root=DIR] [--json]"
+    );
+    let mut root = runs::RunsConfig::default().root;
+    let mut json = false;
+    for a in &overrides {
+        if let Some(v) = a.strip_prefix("--runs.root=") {
+            root = v.to_string();
+        } else if a == "--json" {
+            json = true;
+        } else {
+            anyhow::bail!("unrecognized flag '{a}': puffer ps accepts --runs.root=DIR and --json");
+        }
+    }
+    let reg = Registry::new(&root);
+    let views = runs::snapshot(&reg)?;
+    let now = runs::fsio::now_ms();
+    if json {
+        println!("{}", runs::ps_json(&views, now));
+    } else {
+        print!("{}", runs::ps_table(&views, now));
+    }
+    Ok(())
+}
+
+/// `puffer top`: a refreshing in-flight view (live/stale/pending runs
+/// with heartbeat SPS and stall), redrawn every `--refresh` seconds.
+/// `--iters=N` exits after N frames (0 = run until killed).
+fn cmd_top(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    anyhow::ensure!(
+        positional.is_empty(),
+        "usage: puffer top [--runs.root=DIR] [--refresh=SECS] [--iters=N]"
+    );
+    let mut root = runs::RunsConfig::default().root;
+    let mut refresh = 2.0f64;
+    let mut iters = 0u64;
+    for a in &overrides {
+        if let Some(v) = a.strip_prefix("--runs.root=") {
+            root = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--refresh=") {
+            refresh = v
+                .parse()
+                .ok()
+                .filter(|r: &f64| r.is_finite() && *r > 0.0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--refresh: expected a positive number of seconds, got '{v}'")
+                })?;
+        } else if let Some(v) = a.strip_prefix("--iters=") {
+            iters = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--iters: expected an integer >= 0, got '{v}'"))?;
+        } else {
+            anyhow::bail!(
+                "unrecognized flag '{a}': puffer top accepts --runs.root=DIR, \
+                 --refresh=SECS, and --iters=N (0 = until killed)"
+            );
+        }
+    }
+    let reg = Registry::new(&root);
+    let mut frames = 0u64;
+    loop {
+        let views = runs::snapshot(&reg)?;
+        let frame = runs::top_frame(&views, runs::fsio::now_ms());
+        // ANSI clear + cursor home, then one whole frame — flushed so
+        // partial redraws never linger between refreshes.
+        print!("\x1b[2J\x1b[H{frame}");
+        use std::io::Write;
+        std::io::stdout().flush()?;
+        frames += 1;
+        if iters != 0 && frames >= iters {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(refresh));
+    }
+}
+
+// -- imperative commands ----------------------------------------------------
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy.", "vec."])?;
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat)?;
+    let spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
+    println!(
+        "training {} for {} steps ({backend} backend) ...",
+        spec.key(),
+        tc.total_steps
+    );
+    let mut trainer = make_trainer(tc, &backend)?;
+    let report = trainer.train()?;
+    print_train_report(&report);
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    let backend = take_backend(&mut overrides);
+    // Pull out eval-specific flags.
+    let mut checkpoint = None;
+    let mut episodes = 20usize;
+    let mut bad_episodes = None;
+    overrides.retain(|a| {
+        if let Some(v) = a.strip_prefix("--checkpoint=") {
+            checkpoint = Some(v.to_string());
+            false
+        } else if let Some(v) = a.strip_prefix("--episodes=") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => episodes = n,
+                _ => bad_episodes = Some(v.to_string()),
+            }
+            false
+        } else {
+            true
+        }
+    });
+    if let Some(v) = bad_episodes {
+        anyhow::bail!("--episodes: expected an integer >= 1, got '{v}'");
+    }
+
+    // RunSpec form: the positional is a checkpoint file, spec embedded.
+    // Route by argument shape, not just existence: a mistyped checkpoint
+    // path must fail with the file error, not a confusing "unknown env".
+    let positional_is_ckpt = positional.first().is_some_and(|p| {
+        !envs::ALL_ENVS.contains(&p.as_str())
+            && (p.ends_with(".bin") || std::path::Path::new(p).is_file())
+    });
+    if positional_is_ckpt {
+        anyhow::ensure!(
+            backend == "native",
+            "RunSpec checkpoints evaluate on the native backend; use \
+             `puffer eval <env> --checkpoint=FILE --backend=pjrt` for the AOT path"
+        );
+        anyhow::ensure!(
+            checkpoint.is_none(),
+            "conflicting checkpoints: a positional checkpoint and --checkpoint= \
+             were both given — pass one or the other"
+        );
+        reject_stray_overrides(&overrides, SPEC_NAMESPACES)?;
+        // PANIC: positional_is_ckpt implies a first positional exists.
+        let path = positional.first().unwrap();
+        let ck = Checkpoint::load(path).context("loading checkpoint")?;
+        let json = ck.run_spec_json.as_deref().with_context(|| {
+            format!("{path} has no embedded RunSpec — use `puffer eval <env> --checkpoint={path}`")
+        })?;
+        // Evaluation never writes run data: the metrics sink opens
+        // lazily on the first written row (eval writes none) and the
+        // checkpoint is only saved by train(). One exception by design:
+        // a vec = "auto" spec whose autotune cache is missing re-tunes
+        // and restores `<run_dir>/autotune.json` — infrastructure, not
+        // run history.
+        let spec = apply_spec_overrides(RunSpec::from_json_str(json)?, &overrides)?;
+        let mut trainer = spec.build()?;
+        trainer.restore(&ck)?;
+        println!(
+            "evaluating {} restored at step {}",
+            spec.env.key(),
+            ck.global_step
+        );
+        let report = trainer.eval(episodes)?;
+        print_eval(&report);
+        return Ok(());
+    }
+
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "pipeline.", "policy.", "vec."])?;
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat)?;
+    let mut trainer = make_trainer(tc, &backend)?;
+    if let Some(ck_path) = checkpoint {
+        let ck = Checkpoint::load(&ck_path).context("loading checkpoint")?;
+        trainer.restore(&ck)?;
+        println!("restored checkpoint at step {}", ck.global_step);
+    }
+    let report = trainer.eval(episodes)?;
+    print_eval(&report);
+    Ok(())
+}
+
+fn print_eval(report: &pufferlib::train::EvalReport) {
+    println!(
+        "eval: {} episodes, score {}, return {}",
+        report.episodes,
+        report
+            .mean_score
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+        report
+            .mean_return
+            .map(|s| format!("{s:.3}"))
+            .unwrap_or_else(|| "-".into()),
+    );
+}
+
+/// `puffer policy describe <env>`: print the resolved architecture —
+/// per-leaf encoders, trunk/recurrence/head stages, parameter counts per
+/// stage, and the checkpoint key — for debugging spec/env mismatches.
+fn cmd_policy(args: &[String]) -> Result<()> {
+    let sub = args.first().map(String::as_str);
+    anyhow::ensure!(
+        sub == Some("describe"),
+        "usage: puffer policy describe <env> [--wrap.KEY=VAL ...] [--policy.KEY=VAL ...]"
+    );
+    let (cfg_file, positional, overrides) = split_args(&args[1..]);
+    reject_stray_overrides(&overrides, &["train.", "wrap.", "policy."])?;
+    let (mut flat, _) = config::load(cfg_file.as_deref(), &overrides)?;
+    if let Some(env) = positional.first() {
+        flat.insert("train.env".into(), env.clone());
+    }
+    let tc = config::train_config(&flat)?;
+    let spec = EnvSpec::new(tc.env.as_str()).with_wrappers(tc.wrappers.iter().cloned());
+    let pspec = tc
+        .policy
+        .clone()
+        .unwrap_or_else(|| pufferlib::policy::PolicySpec::default_for(&tc.env));
+    let probe = spec.build(0);
+    let backend = pufferlib::backend::NativeBackend::for_env_with_policy(
+        &spec.key(),
+        probe.as_ref(),
+        &pspec,
+    )?;
+    println!(
+        "{} — resolved architecture (checkpoint key: {})",
+        spec.key(),
+        backend.key()
+    );
+    print!("{}", backend.arch().describe());
+    Ok(())
+}
+
+/// `puffer serve <checkpoint.bin>`: dynamic-batching inference server
+/// over the checkpoint's embedded policy. `--serve.KEY=VAL` overrides
+/// the spec's `[serve]` section; `--selftest` runs the built-in load
+/// generator against an ephemeral instance (port 0) and checks the
+/// batching/zero-drop acceptance gates instead of serving forever.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (cfg_file, positional, mut overrides) = split_args(args);
+    anyhow::ensure!(
+        cfg_file.is_none(),
+        "puffer serve takes no --config file: serve knobs come from the \
+         checkpoint's [serve] section or --serve.KEY=VAL overrides"
+    );
+    let mut selftest = false;
+    let mut st = pufferlib::serve::selftest::SelftestConfig::default();
+    let mut bad: Option<String> = None;
+    overrides.retain(|a| {
+        if a == "--selftest" {
+            selftest = true;
+            false
+        } else if let Some(v) = a.strip_prefix("--selftest.requests=") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => st.requests = n,
+                _ => bad = Some(format!("--selftest.requests: expected an integer >= 1, got '{v}'")),
+            }
+            false
+        } else if let Some(v) = a.strip_prefix("--selftest.sessions=") {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => st.sessions = n,
+                _ => bad = Some(format!("--selftest.sessions: expected an integer >= 1, got '{v}'")),
+            }
+            false
+        } else {
+            true
+        }
+    });
+    if let Some(msg) = bad {
+        anyhow::bail!("{msg}");
+    }
+    reject_stray_overrides(&overrides, &["serve."])?;
+    anyhow::ensure!(
+        positional.len() == 1,
+        "usage: puffer serve <checkpoint.bin> [--serve.KEY=VAL ...] [--selftest]"
+    );
+    // PANIC: length checked above.
+    let path = positional.first().unwrap();
+    let model = pufferlib::serve::ServedModel::open(path)?;
+    let spec = apply_spec_overrides(model.spec.clone(), &overrides)?;
+    let cfg = spec.serve.clone().unwrap_or_default();
+
+    if selftest {
+        let report = pufferlib::serve::selftest::run(path, &cfg, &st)?;
+        pufferlib::serve::selftest::print_report(&report);
+        if let Some(p) = pufferlib::serve::selftest::maybe_write_bench_json(&report)? {
+            println!("wrote {p}");
+        }
+        anyhow::ensure!(
+            report.dropped == 0,
+            "selftest dropped {} requests — the server must answer every \
+             accepted request",
+            report.dropped
+        );
+        anyhow::ensure!(
+            report.occupancy > 1.0,
+            "selftest never coalesced: occupancy {:.2} rows/batch should \
+             exceed 1 (is max_wait_us too small for this machine?)",
+            report.occupancy
+        );
+        return Ok(());
+    }
+
+    let recurrent = model.recurrent();
+    let step = model.global_step;
+    let key = model.spec_key.clone();
+    let handle = pufferlib::serve::Server::start(model, &cfg, Some(path.as_str()))?;
+    println!(
+        "serving {key} (step {step}{}) on {} — {} shard(s), batch <= {} rows \
+         or {} us, session ttl {} s; Ctrl-C to stop",
+        if recurrent { ", recurrent" } else { "" },
+        handle.addr(),
+        cfg.threads,
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.session_ttl_s,
+    );
+    // Foreground server: park until killed. The handle keeps the
+    // accept/shard/watcher threads alive for the life of the process.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `puffer ckpt info <checkpoint.bin> [--json]`: print the file's
+/// format version, arch key, training step, parameter count, and the
+/// embedded RunSpec — canonical TOML for humans, or one JSON object
+/// (`--json`, for scripts) with the spec inlined as a JSON value (null
+/// for v1 files, which never recorded one). The human path errors on
+/// v1 files, naming the limitation after the header fields.
+fn cmd_ckpt(args: &[String]) -> Result<()> {
+    let json_out = args.iter().any(|a| a == "--json");
+    let pos: Vec<&String> = args.iter().filter(|a| a.as_str() != "--json").collect();
+    anyhow::ensure!(
+        pos.first().map(|a| a.as_str()) == Some("info") && pos.len() == 2,
+        "usage: puffer ckpt info <checkpoint.bin> [--json]"
+    );
+    // PANIC: length checked above.
+    let path = pos.get(1).unwrap().as_str();
+    let version = Checkpoint::probe_version(path)?;
+    let ck = Checkpoint::load(path).context("loading checkpoint")?;
+    if json_out {
+        use pufferlib::util::json::{num, obj, s, Json};
+        let spec = match ck.run_spec_json.as_deref() {
+            Some(text) => RunSpec::from_json_str(text)
+                .with_context(|| format!("parsing the RunSpec embedded in {path}"))?
+                .to_json(),
+            None => Json::Null,
+        };
+        let info = obj(vec![
+            ("file", s(path)),
+            ("format_version", num(version as f64)),
+            ("arch", s(&ck.spec_key)),
+            ("global_step", num(ck.global_step as f64)),
+            ("params", num(ck.params.len() as f64)),
+            ("spec", spec),
+        ]);
+        println!("{}", info.dump());
+        return Ok(());
+    }
+    println!("file:     {path}");
+    println!("format:   v{version}");
+    println!("arch key: {}", ck.spec_key);
+    println!("step:     {}", ck.global_step);
+    println!("params:   {}", ck.params.len());
+    let json = ck.run_spec_json.as_deref().with_context(|| {
+        format!(
+            "{path} is a v{version} checkpoint with no embedded RunSpec — \
+             `ckpt info` can only print the spec for v2 files, which record \
+             it at save time. Re-train (or fine-tune via `puffer resume`) \
+             with this build to produce one"
+        )
+    })?;
+    let spec = RunSpec::from_json_str(json)
+        .with_context(|| format!("parsing the RunSpec embedded in {path}"))?;
+    println!();
+    print!("{}", spec.to_toml()?);
+    Ok(())
+}
+
+fn cmd_autotune(args: &[String]) -> Result<()> {
+    let (_, positional, overrides) = split_args(args);
+    let env = positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "ocean/squared".into());
+    let mut num_envs = None;
+    let mut workers = 4;
+    let mut secs = 1.0f64;
+    let mut run_dir = None;
+    let mut wrap_overrides = Vec::new();
+    for a in overrides {
+        if let Some(v) = a.strip_prefix("--envs=") {
+            num_envs = Some(v.parse().map_err(|_| anyhow::anyhow!("--envs: cannot parse '{v}'"))?);
+        } else if let Some(v) = a.strip_prefix("--workers=") {
+            workers = v.parse().map_err(|_| anyhow::anyhow!("--workers: cannot parse '{v}'"))?;
+        } else if let Some(v) = a.strip_prefix("--secs=") {
+            secs = v.parse().map_err(|_| anyhow::anyhow!("--secs: cannot parse '{v}'"))?;
+        } else if let Some(v) = a.strip_prefix("--run_dir=") {
+            run_dir = Some(v.to_string());
+        } else {
+            wrap_overrides.push(a);
+        }
+    }
+    // Remaining overrides are --wrap.* knobs: tune with the exact
+    // pipeline you will train with.
+    reject_stray_overrides(&wrap_overrides, &["wrap."])?;
+    let (flat, _) = config::load(None, &wrap_overrides)?;
+    config::validate_keys(&flat)?;
+    let spec = EnvSpec::new(env.as_str()).with_wrappers(config::wrap_config(&flat)?);
+    // Default the env budget to the trainer's own count (batch_roll /
+    // agents) so the cached winner is exactly what `vec = "auto"`
+    // consumes on the next run of this env.
+    let num_envs = match num_envs {
+        Some(n) => n,
+        None => {
+            let probe = spec.build(0);
+            let backend =
+                pufferlib::backend::NativeBackend::for_env(&spec.key(), probe.as_ref())?;
+            backend.spec().batch_roll / backend.spec().agents
+        }
+    };
+    println!(
+        "autotuning {} with {num_envs} envs (≤{workers} workers, {secs}s per config) ...",
+        spec.key()
+    );
+    let results = autotune::autotune(&spec, num_envs, workers, secs)?;
+    print!("{}", autotune::format_results(&results));
+    println!(
+        "\nrecommended: {} (num_workers={}, batch_size={}, zero_copy={})",
+        results[0].label,
+        results[0].cfg.num_workers,
+        results[0].cfg.batch_size,
+        results[0].cfg.zero_copy
+    );
+    // The machine-readable winner: a VecSpec, printed and cached where
+    // `vec = "auto"` looks for it. Only full/half batches are trainable
+    // (the policy forward is compiled for those shapes), so the cache
+    // takes the fastest such candidate.
+    let trainable = autotune::trainable_winner(&results, num_envs);
+    if trainable.label != results[0].label {
+        println!(
+            "(fastest *trainable* config: {} — the overall winner's batch shape \
+             cannot feed the policy forward)",
+            trainable.label
+        );
+    }
+    let winner = trainable.vec_spec();
+    println!("vec spec: {}", winner.to_json().dump());
+    // Default the cache location to the same run dir a default
+    // `puffer run` of this env resolves, so `vec = "auto"` actually
+    // consumes what was just tuned.
+    let run_dir = run_dir.unwrap_or_else(|| run_dir_for(&spec.key()));
+    let cache = autotune::cache_path(Some(&run_dir));
+    autotune::write_cache(&cache, &spec.key(), num_envs, &winner)?;
+    println!(
+        "cached → {} (consumed by vec = \"auto\" for {} at {num_envs} envs)",
+        cache.display(),
+        spec.key()
+    );
+    Ok(())
+}

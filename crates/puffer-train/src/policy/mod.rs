@@ -1,0 +1,257 @@
+//! The rollout-side policy: runs the forward pass through a
+//! [`PolicyBackend`] (native Rust math by default, AOT/PJRT behind the
+//! `pjrt` feature), samples MultiDiscrete actions from the logits, and
+//! manages recurrent state (the LSTM "sandwich" of paper §3.4 —
+//! recurrence is a config flag, not a second model; this module owns the
+//! state-reshaping and reset-on-done logic that the paper calls the most
+//! common source of hard-to-diagnose bugs).
+
+// Policy math and snapshots go through safe primitives only
+// (CONCURRENCY.md — keep the unsafe surface in vector/).
+#![forbid(unsafe_code)]
+
+pub mod snapshot;
+
+// The architecture description half (PolicySpec and its resolution)
+// lives in puffer-core — it is plain data the spec layer and the Python
+// bindings need without linking backends. Re-exported here so
+// `crate::policy::arch::...` keeps resolving.
+pub use puffer_core::policy::arch;
+pub use puffer_core::policy::{ActionHead, PolicySpec, Recurrence, ResolvedPolicy};
+
+pub use snapshot::ParamSnapshot;
+
+use crate::backend::PolicyBackend;
+use crate::runtime::SpecManifest;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Output of one policy step over a batch of rows.
+#[derive(Clone, Debug, Default)]
+pub struct PolicyOut {
+    /// Sampled actions, `rows × slots`, row-major.
+    pub actions: Vec<i32>,
+    /// Joint log-probability of each row's action.
+    pub logp: Vec<f32>,
+    /// Value estimates per row.
+    pub values: Vec<f32>,
+}
+
+/// A policy bound to one spec. Parameters are an opaque flat f32 buffer
+/// whose layout is owned by the backend ([`PolicyBackend::init_params`]);
+/// both backends share the `ravel_pytree` layout, so checkpoints are
+/// interchangeable across backends when the spec architectures match.
+pub struct Policy {
+    spec: SpecManifest,
+    params: Vec<f32>,
+    /// Per-row recurrent state, `rows × state_dim` (recurrent
+    /// architectures only); indexed by global env row.
+    h: Vec<f32>,
+    c: Vec<f32>,
+    rng: Rng,
+}
+
+impl Policy {
+    /// Initialize parameters for the backend's spec.
+    pub fn new(backend: &mut dyn PolicyBackend, seed: u64) -> Result<Self> {
+        let spec = backend.spec().clone();
+        let params = backend.init_params()?;
+        anyhow::ensure!(
+            params.len() == spec.n_params,
+            "backend produced {} params, spec says {}",
+            params.len(),
+            spec.n_params
+        );
+        let state_rows = spec.batch_roll.max(spec.batch_fwd);
+        let state = vec![0.0; state_rows * spec.policy.state_dim()];
+        Ok(Policy {
+            spec,
+            params,
+            h: state.clone(),
+            c: state,
+            rng: Rng::new(seed ^ 0x504F_4C49),
+        })
+    }
+
+    pub fn spec(&self) -> &SpecManifest {
+        &self.spec
+    }
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+    pub fn params_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.params
+    }
+
+    /// Overwrite the parameter vector (e.g. from a [`ParamSnapshot`]
+    /// acquired on the pipelined trainer's collector thread). Length must
+    /// match the spec.
+    pub fn set_params(&mut self, params: &[f32]) {
+        assert_eq!(
+            params.len(),
+            self.spec.n_params,
+            "params length != spec n_params"
+        );
+        self.params.copy_from_slice(params);
+    }
+
+    /// Zero the recurrent state of a global env row (call when that row's
+    /// episode ended — the auto-reset means its next obs starts fresh).
+    pub fn reset_state(&mut self, row: usize) {
+        if !self.spec.policy.is_recurrent() {
+            return;
+        }
+        let h = self.spec.policy.state_dim();
+        self.h[row * h..(row + 1) * h].fill(0.0);
+        self.c[row * h..(row + 1) * h].fill(0.0);
+    }
+
+    /// Zero all recurrent state.
+    pub fn reset_all_state(&mut self) {
+        self.h.fill(0.0);
+        self.c.fill(0.0);
+    }
+
+    /// Run the forward pass on `obs` (`rows × obs_dim` f32) where `rows`
+    /// must equal `batch_fwd` or `batch_roll`; `global_rows[i]` maps batch
+    /// row `i` to its env row (for recurrent-state gather/scatter).
+    pub fn step(
+        &mut self,
+        backend: &mut dyn PolicyBackend,
+        obs: &[f32],
+        global_rows: &[usize],
+    ) -> Result<PolicyOut> {
+        let rows = global_rows.len();
+        let d = self.spec.obs_dim;
+        anyhow::ensure!(obs.len() == rows * d, "obs len {} != {rows}x{d}", obs.len());
+        anyhow::ensure!(
+            rows == self.spec.batch_fwd || rows == self.spec.batch_roll,
+            "forward compiled for {} or {} rows, got {rows}",
+            self.spec.batch_fwd,
+            self.spec.batch_roll
+        );
+        let hdim = self.spec.policy.state_dim();
+
+        let (logits, values) = if self.spec.policy.is_recurrent() {
+            // Gather recurrent state for these rows.
+            let mut hbuf = vec![0.0f32; rows * hdim];
+            let mut cbuf = vec![0.0f32; rows * hdim];
+            for (i, &g) in global_rows.iter().enumerate() {
+                hbuf[i * hdim..(i + 1) * hdim]
+                    .copy_from_slice(&self.h[g * hdim..(g + 1) * hdim]);
+                cbuf[i * hdim..(i + 1) * hdim]
+                    .copy_from_slice(&self.c[g * hdim..(g + 1) * hdim]);
+            }
+            let out = backend.forward_lstm(&self.params, obs, &hbuf, &cbuf, rows)?;
+            // Scatter updated state back.
+            for (i, &g) in global_rows.iter().enumerate() {
+                self.h[g * hdim..(g + 1) * hdim]
+                    .copy_from_slice(&out.h[i * hdim..(i + 1) * hdim]);
+                self.c[g * hdim..(g + 1) * hdim]
+                    .copy_from_slice(&out.c[i * hdim..(i + 1) * hdim]);
+            }
+            (out.logits, out.values)
+        } else {
+            let out = backend.forward(&self.params, obs, rows)?;
+            (out.logits, out.values)
+        };
+
+        Ok(self.sample(&logits, &values, rows))
+    }
+
+    /// Sample MultiDiscrete actions from logits; compute joint log-probs.
+    fn sample(&mut self, logits: &[f32], values: &[f32], rows: usize) -> PolicyOut {
+        let act_dims = &self.spec.act_dims;
+        let n_act: usize = act_dims.iter().sum();
+        debug_assert_eq!(logits.len(), rows * n_act);
+        let slots = act_dims.len();
+        let mut actions = vec![0i32; rows * slots];
+        let mut logp = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &logits[r * n_act..(r + 1) * n_act];
+            let mut off = 0;
+            for (s, &n) in act_dims.iter().enumerate() {
+                let seg = &row[off..off + n];
+                let a = self.rng.categorical_logits(seg);
+                actions[r * slots + s] = a as i32;
+                logp[r] += log_softmax_at(seg, a);
+                off += n;
+            }
+        }
+        PolicyOut {
+            actions,
+            logp,
+            values: values[..rows].to_vec(),
+        }
+    }
+
+    /// Greedy (argmax) actions — deterministic evaluation.
+    pub fn greedy(&self, logits_row: &[f32]) -> Vec<i32> {
+        greedy_actions(logits_row, &self.spec.act_dims)
+    }
+}
+
+/// Greedy (argmax) action per head slot from one row of logits — the
+/// deterministic decode shared by [`Policy::greedy`] and the serve
+/// batcher (which runs the backend directly, without a [`Policy`]).
+pub fn greedy_actions(logits_row: &[f32], act_dims: &[usize]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(act_dims.len());
+    let mut off = 0;
+    for &n in act_dims {
+        let seg = &logits_row[off..off + n];
+        let arg = seg
+            .iter()
+            .enumerate()
+            // PANIC: act_dims entries are > 0, so the segment is non-empty and logits are finite.
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        out.push(arg as i32);
+        off += n;
+    }
+    out
+}
+
+/// Numerically stable `log softmax(seg)[idx]`.
+pub fn log_softmax_at(seg: &[f32], idx: usize) -> f32 {
+    let max = seg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let logz = seg.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    seg[idx] - logz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_sane() {
+        let seg = [0.0f32, 0.0];
+        assert!((log_softmax_at(&seg, 0) - (-0.6931472)).abs() < 1e-5);
+        // Invariant to shifts.
+        let a = log_softmax_at(&[1.0, 3.0, 2.0], 1);
+        let b = log_softmax_at(&[101.0, 103.0, 102.0], 1);
+        assert!((a - b).abs() < 1e-4);
+        // Sums to one in prob space.
+        let seg = [0.3f32, -1.2, 2.0, 0.0];
+        let total: f32 = (0..4).map(|i| log_softmax_at(&seg, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn policy_steps_through_native_backend() {
+        use crate::backend::{NativeBackend, PolicyBackend as _};
+        let env = crate::envs::make("ocean/bandit", 0);
+        let mut backend = NativeBackend::for_env("ocean/bandit", env.as_ref()).unwrap();
+        let spec = backend.spec().clone();
+        let mut policy = Policy::new(&mut backend, 5).unwrap();
+        let rows: Vec<usize> = (0..spec.batch_fwd).collect();
+        let obs = vec![0.0f32; spec.batch_fwd * spec.obs_dim];
+        let out = policy.step(&mut backend, &obs, &rows).unwrap();
+        assert_eq!(out.actions.len(), spec.batch_fwd * spec.act_dims.len());
+        assert_eq!(out.values.len(), spec.batch_fwd);
+        assert!(out.logp.iter().all(|l| *l <= 0.0));
+        // Wrong batch size is rejected (the PJRT artifact contract).
+        let bad_rows: Vec<usize> = (0..3).collect();
+        assert!(policy.step(&mut backend, &vec![0.0; 3 * spec.obs_dim], &bad_rows).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Fleet-scale experiment ops: the run registry, resumable sweeps, and
+//! the `puffer ps` / `puffer top` live watch (ROADMAP north-star item
+//! 5 — one durable, machine-readable record per experiment instead of
+//! loose `metrics.csv` directories).
+//!
+//! ## The registry
+//!
+//! Every `RunSpec` launch is logged under a registry root (default
+//! `runs/`, the `[runs]` spec section / `--runs.root` flag):
+//!
+//! ```text
+//! runs/
+//!   index.jsonl                  # append-only event log, fsync'd: one
+//!                                #   line per status transition
+//!   <run_dir>/run.json           # the authoritative per-run record,
+//!                                #   rewritten atomically per transition
+//!   <run_dir>/heartbeat.json     # live SPS/stall telemetry, rewritten
+//!                                #   atomically once per period
+//! ```
+//!
+//! Records transition `pending → running → done | failed | killed`
+//! with host/pid, start/end times, attempt count, final metrics, and
+//! checkpoint path. Both write shapes ([`fsio`]) are crash-safe, so a
+//! SIGKILL at any point leaves a parseable registry — the property the
+//! resume path builds on.
+//!
+//! ## Resumable sweeps
+//!
+//! `puffer sweep` consults the registry before launching each grid
+//! child ([`sweep::classify`]): at-budget children are skipped,
+//! partials resume from their checkpoints via the zero-flag resume
+//! path, and orphans (stale heartbeat, dead pid) are reclaimed. With
+//! `--processes=N` the children run as separate OS processes
+//! ([`sweep::run_processes`]) so a child panic/OOM/SIGKILL costs that
+//! child alone, with its exit status captured into the registry.
+//!
+//! ## Live watch
+//!
+//! Trainers heartbeat env-SPS / learner-SPS / stall counters to
+//! `heartbeat.json` ([`heartbeat::HeartbeatWriter`]); `puffer ps`
+//! ([`watch::ps_table`], `--json` for scripts) tables live/recent runs
+//! with stale-heartbeat orphan detection, and `puffer top`
+//! ([`watch::top_frame`]) refreshes the in-flight view.
+
+// Registry plumbing is pure std-file I/O over safe primitives; the
+// crate's unsafe surface stays in vector/ (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+pub mod fsio;
+pub mod heartbeat;
+pub mod record;
+pub mod registry;
+#[cfg(feature = "trainer")]
+pub mod sweep;
+pub mod watch;
+
+pub use heartbeat::{Heartbeat, HeartbeatWriter};
+pub use record::{FinalMetrics, RunRecord, RunStatus};
+pub use registry::Registry;
+pub use watch::{ps_json, ps_table, snapshot, top_frame, DerivedStatus, RunView};
+
+// The plain-data `[runs]` config lives in puffer-core (the spec layer
+// needs it without linking this crate); re-exported here so
+// `crate::runs::RunsConfig` keeps resolving.
+pub use puffer_core::runs::RunsConfig;

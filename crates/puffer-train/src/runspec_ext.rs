@@ -1,0 +1,233 @@
+//! Trainer-side extensions to [`RunSpec`]: the `build()` / deep
+//! `validate()` entry points and the sweep executors. These need the
+//! [`Trainer`] and [`NativeBackend`](crate::backend::NativeBackend), so
+//! they live in this crate — `puffer-core` owns the plain-data spec and
+//! its parsing/serialization; this module owns execution. Re-exported
+//! through [`crate::runspec`] so callers keep writing
+//! `pufferlib::runspec::{RunSpec, RunSpecExt, run_sweep}`.
+
+// Execution plumbing over safe primitives; no unsafe belongs here
+// (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+use crate::runspec::RunSpec;
+use crate::train::{TrainReport, Trainer};
+use anyhow::{ensure, Context, Result};
+
+/// Construction and deep validation for [`RunSpec`] — the trainer-side
+/// half of the spec layer, as an extension trait.
+pub trait RunSpecExt {
+    /// Build the ready-to-run [`Trainer`] (native backend): the one-line
+    /// construction path that replaces imperative
+    /// probe/backend/vectorizer assembly.
+    fn build(&self) -> Result<Trainer>;
+
+    /// Deep-validate without training: env name + wrapper chain resolve
+    /// (probe construction), the policy spec resolves against the env
+    /// (architecture errors like forced-feedforward on a recurrent env
+    /// surface here), the vec spec is satisfiable at this env's scale,
+    /// minibatches divide the batch, the spec serializes and round-trips,
+    /// and every grid point assembles.
+    fn validate(&self) -> Result<()>;
+}
+
+impl RunSpecExt for RunSpec {
+    fn build(&self) -> Result<Trainer> {
+        ensure!(
+            self.grid.is_empty(),
+            "this spec has a [grid] section ({} keys) — expand it with \
+             expand_grid() / `puffer sweep` instead of running it directly",
+            self.grid.len()
+        );
+        Trainer::from_run_spec(self)
+    }
+
+    fn validate(&self) -> Result<()> {
+        // Structural half: env name + serialization round trip.
+        self.validate_shallow()?;
+        // Architecture resolution against the wrapped env.
+        let probe = self.env.build(0);
+        let policy = self
+            .policy
+            .clone()
+            .unwrap_or_else(|| crate::policy::PolicySpec::default_for(self.env.name()));
+        let backend = crate::backend::NativeBackend::for_env_with_policy(
+            &self.env.key(),
+            probe.as_ref(),
+            &policy,
+        )?;
+        let spec = backend.spec();
+        let tc = self.train_config();
+        ensure!(
+            tc.minibatches >= 1 && spec.batch_roll % tc.minibatches == 0,
+            "train.minibatches {} must divide batch_roll {}",
+            tc.minibatches,
+            spec.batch_roll
+        );
+        // Vec satisfiability (auto validates at run time, after tuning).
+        if !self.vec.is_auto() {
+            let num_envs = spec.batch_roll / spec.agents;
+            let vcfg = self.vec.resolve(num_envs, 0)?;
+            spec.ensure_trainable_batch(&self.vec.to_string(), vcfg.batch_size)?;
+        }
+        if !self.grid.is_empty() {
+            for child in self.expand_grid()? {
+                child.validate().with_context(|| {
+                    format!(
+                        "grid child '{}'",
+                        child.train.run_dir.as_deref().unwrap_or("?")
+                    )
+                })?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One finished sweep child.
+pub struct SweepOutcome {
+    /// The child's distinguishing grid assignment (its run-dir leaf).
+    pub label: String,
+    pub run_dir: String,
+    pub report: Result<TrainReport>,
+}
+
+/// Execute a sweep: train every expanded child
+/// ([`RunSpec::expand_grid`]) across a pool of `jobs` worker threads
+/// (each child builds its trainer inside its worker, so envs, backends,
+/// and metrics files are fully isolated). `on_done` fires as each child
+/// finishes, from the calling thread; outcomes come back in child
+/// order. A panicking child becomes a `Failed` outcome carrying the
+/// panic message — its siblings keep draining the grid.
+pub fn run_sweep(
+    children: &[RunSpec],
+    jobs: usize,
+    on_done: impl FnMut(usize, &SweepOutcome),
+) -> Result<Vec<SweepOutcome>> {
+    run_sweep_with(
+        children,
+        jobs,
+        |_, child| Trainer::from_run_spec(child).and_then(|mut t| t.train()),
+        on_done,
+    )
+}
+
+/// [`run_sweep`] with a pluggable per-child task — what the
+/// registry-aware resumable executor ([`crate::runs::sweep`]) layers
+/// its record transitions onto. The task runs on a worker thread under
+/// `catch_unwind`, so one child's panic is converted into an `Err`
+/// outcome (message preserved) instead of killing the worker and
+/// silently orphaning every index that worker would have claimed.
+pub fn run_sweep_with(
+    children: &[RunSpec],
+    jobs: usize,
+    task: impl Fn(usize, &RunSpec) -> Result<TrainReport> + Sync,
+    mut on_done: impl FnMut(usize, &SweepOutcome),
+) -> Result<Vec<SweepOutcome>> {
+    ensure!(!children.is_empty(), "no sweep children to run");
+    let n = children.len();
+    let jobs = jobs.clamp(1, n);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let task = &task;
+    let mut outcomes: Vec<Option<SweepOutcome>> = std::iter::repeat_with(|| None).take(n).collect();
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            s.spawn(move || loop {
+                // ordering: Relaxed — a pure work-stealing counter; the
+                // claimed index is the only data, and fetch_add's
+                // atomicity alone guarantees each index is claimed once.
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= children.len() {
+                    break;
+                }
+                // AssertUnwindSafe: on panic the child's trainer (and
+                // anything it half-mutated) is dropped here, never
+                // observed again — the only state that crosses the
+                // boundary is the extracted panic message.
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    task(i, &children[i])
+                }));
+                let report = caught.unwrap_or_else(|payload| {
+                    Err(anyhow::anyhow!(
+                        "sweep child panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                });
+                if tx.send((i, report)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, report) in rx {
+            let run_dir = children[i].train.run_dir.clone().unwrap_or_default();
+            let label = run_dir
+                .rsplit('/')
+                .next()
+                .unwrap_or(run_dir.as_str())
+                .to_string();
+            let outcome = SweepOutcome {
+                label,
+                run_dir,
+                report,
+            };
+            on_done(i, &outcome);
+            outcomes[i] = Some(outcome);
+        }
+    });
+    // PANIC: the scope joined every worker; each index was reported exactly once.
+    Ok(outcomes.into_iter().map(|o| o.expect("all children ran")).collect())
+}
+
+/// Extract a human-readable message from a `catch_unwind` payload
+/// (`panic!` with a literal yields `&str`, with formatting yields
+/// `String`; anything else is opaque).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(text) = payload.downcast_ref::<&str>() {
+        (*text).to_string()
+    } else if let Some(text) = payload.downcast_ref::<String>() {
+        text.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicySpec;
+    use crate::vector::{VecBatch, VecSpec};
+    use crate::wrappers::EnvSpec;
+
+    #[test]
+    fn validate_accepts_good_specs_and_rejects_bad_resolutions() {
+        RunSpec::new(EnvSpec::new("ocean/bandit")).validate().unwrap();
+        // Forced-feedforward on a recurrent reference env fails with the
+        // actionable architecture error.
+        let bad = RunSpec::new(EnvSpec::new("ocean/memory"))
+            .with_policy(PolicySpec::default());
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("--policy.lstm"), "{err}");
+        // A batch nobody can forward.
+        let bad = RunSpec::new(EnvSpec::new("ocean/bandit")).with_vec(VecSpec::Mt {
+            workers: 8,
+            batch: VecBatch::Envs(8),
+            zero_copy: false,
+            spin_budget: 64,
+        });
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("rows"), "{err}");
+    }
+
+    #[test]
+    fn gridded_spec_refuses_direct_building() {
+        let mut spec = RunSpec::new(EnvSpec::new("ocean/bandit"));
+        spec.grid
+            .insert("train.lr".into(), vec!["0.001".into(), "0.0025".into()]);
+        let err = spec.build().unwrap_err().to_string();
+        assert!(err.contains("grid"), "{err}");
+    }
+}

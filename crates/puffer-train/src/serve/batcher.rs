@@ -1,0 +1,314 @@
+//! The dynamic batcher: drain queued requests into one forward pass
+//! under a dual budget — `max_batch` rows, or `max_wait_us` elapsed,
+//! whichever trips first.
+//!
+//! Each shard owns a request queue ([`crate::sync::queue`]), a clone of
+//! the [`NativeBackend`], and a [`SessionTable`]; sessions are pinned
+//! to shards by id, so per-session request order — and therefore the
+//! recurrent-state trajectory — is exactly what a serial client would
+//! produce. Weights are [`ParamSnapshot::acquire`]d once per collected
+//! batch, never mid-batch, so a hot-swap lands between forwards.
+//!
+//! [`collect_batch`] is deliberately time-free: the deadline is an
+//! injected `expired()` closure, so the production shard passes an
+//! `Instant` budget while the loom model in `crates/puffer-train/tests/loom_models.rs`
+//! passes a bounded counter and model-checks the close/drain protocol
+//! (no request is ever stranded when the queue closes).
+
+use super::protocol::{StepReply, StepRequest};
+use super::session::SessionTable;
+use super::{ServeConfig, ServeStats};
+use crate::backend::{NativeBackend, PolicyBackend};
+use crate::policy::{greedy_actions, ParamSnapshot};
+use crate::sync::atomic::Ordering;
+use crate::sync::queue::{Receiver, Sender, TryRecv};
+use crate::sync::{yield_now, Arc};
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// One queued request plus the way home: a clone of its connection's
+/// reply sender. A send error (client hung up) is counted, not fatal.
+pub struct Job {
+    pub req: StepRequest,
+    pub reply: Sender<StepReply>,
+}
+
+/// Drain up to `max_batch` items from `rx`: block for the first item,
+/// then poll without blocking until the batch fills, the queue
+/// momentarily empties *and* `expired()` says the time budget is spent,
+/// or every sender hangs up. `None` means the queue is closed and
+/// drained — the shard's exit signal.
+///
+/// `expired` is only consulted while the queue is empty, so a saturated
+/// queue always fills the batch, and the first call happens right after
+/// the first item — callers start their clock lazily inside the
+/// closure.
+pub fn collect_batch<T>(
+    rx: &Receiver<T>,
+    max_batch: usize,
+    mut expired: impl FnMut() -> bool,
+) -> Option<Vec<T>> {
+    let first = rx.recv()?;
+    let mut batch = Vec::with_capacity(max_batch.min(64));
+    batch.push(first);
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            TryRecv::Item(item) => batch.push(item),
+            TryRecv::Disconnected => break,
+            TryRecv::Empty => {
+                if expired() {
+                    break;
+                }
+                yield_now();
+            }
+        }
+    }
+    Some(batch)
+}
+
+/// Split a batch so no session appears twice within one forward: a
+/// repeated session must see the state its previous request wrote.
+/// Splitting at the first repeat preserves arrival (and therefore
+/// per-session) order.
+fn split_unique_sessions(jobs: Vec<Job>) -> Vec<Vec<Job>> {
+    let mut out = Vec::new();
+    let mut seen = HashSet::new();
+    let mut cur: Vec<Job> = Vec::new();
+    for j in jobs {
+        if !seen.insert(j.req.session) {
+            out.push(std::mem::take(&mut cur));
+            seen.clear();
+            seen.insert(j.req.session);
+        }
+        cur.push(j);
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// One batcher shard: loop collect → forward → reply until the request
+/// queue closes. Owns its backend clone and session table outright.
+pub struct Shard {
+    backend: NativeBackend,
+    sessions: SessionTable,
+    snapshot: Arc<ParamSnapshot>,
+    stats: Arc<ServeStats>,
+    max_batch: usize,
+    max_wait: std::time::Duration,
+    obs_dim: usize,
+    act_dims: Vec<usize>,
+    recurrent: bool,
+    // Per-shard forward scratch: gather buffers + output activations,
+    // reused every batch through the backend's `*_into` kernel entry
+    // points so the steady-state hot path allocates nothing.
+    obs_buf: Vec<f32>,
+    h_buf: Vec<f32>,
+    c_buf: Vec<f32>,
+    out_ff: crate::backend::Forward,
+    out_lstm: crate::backend::ForwardLstm,
+}
+
+impl Shard {
+    pub fn new(
+        backend: NativeBackend,
+        cfg: &ServeConfig,
+        snapshot: Arc<ParamSnapshot>,
+        stats: Arc<ServeStats>,
+    ) -> Self {
+        let arch = backend.arch();
+        let (state_dim, obs_dim) = (arch.state_dim(), arch.obs_dim);
+        let (act_dims, recurrent) = (arch.act_dims.clone(), arch.is_recurrent());
+        Shard {
+            sessions: SessionTable::new(
+                state_dim,
+                std::time::Duration::from_secs(cfg.session_ttl_s),
+            ),
+            snapshot,
+            stats,
+            max_batch: cfg.max_batch,
+            max_wait: std::time::Duration::from_micros(cfg.max_wait_us),
+            obs_dim,
+            act_dims,
+            recurrent,
+            backend,
+            obs_buf: Vec::new(),
+            h_buf: Vec::new(),
+            c_buf: Vec::new(),
+            out_ff: crate::backend::Forward::default(),
+            out_lstm: crate::backend::ForwardLstm::default(),
+        }
+    }
+
+    /// Run until the queue closes (server shutdown: the accept loop and
+    /// every connection reader drop their senders). Every request
+    /// received before close gets a reply — the drain guarantee the
+    /// loom model checks on [`collect_batch`].
+    pub fn run(mut self, rx: Receiver<Job>) -> Result<()> {
+        let max_wait = self.max_wait;
+        loop {
+            let mut deadline = None;
+            let expired = move || {
+                let d = *deadline.get_or_insert_with(|| std::time::Instant::now() + max_wait);
+                std::time::Instant::now() >= d
+            };
+            let Some(jobs) = collect_batch(&rx, self.max_batch, expired) else {
+                return Ok(());
+            };
+            // Acquire once per collected batch: every row of a batch is
+            // answered by one consistent weight version.
+            let (version, params) = self.snapshot.acquire();
+            let groups = if self.recurrent {
+                split_unique_sessions(jobs)
+            } else {
+                vec![jobs]
+            };
+            for group in groups {
+                self.forward_group(group, version, &params)?;
+            }
+            let evicted = self.sessions.evict_idle(false);
+            if evicted > 0 {
+                // ordering: Relaxed — independent stat counter.
+                self.stats.evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn forward_group(&mut self, group: Vec<Job>, version: u64, params: &[f32]) -> Result<()> {
+        let rows = group.len();
+        // Gather into the shard's reusable buffers (cleared, capacity
+        // kept) and run the allocation-free `*_into` forward.
+        self.obs_buf.clear();
+        self.h_buf.clear();
+        self.c_buf.clear();
+        let created_before = self.sessions.created();
+        for job in &group {
+            anyhow::ensure!(
+                job.req.obs.len() == self.obs_dim,
+                "request for session {} carries {} obs values, expected {}",
+                job.req.session,
+                job.req.obs.len(),
+                self.obs_dim
+            );
+            self.obs_buf.extend_from_slice(&job.req.obs);
+            // Creates/touches the session either way; gathers zero-width
+            // state for feedforward policies.
+            self.sessions
+                .gather(job.req.session, job.req.reset, &mut self.h_buf, &mut self.c_buf);
+        }
+        let (logits, values): (&[f32], &[f32]) = if self.recurrent {
+            self.backend.forward_lstm_into(
+                params,
+                &self.obs_buf,
+                &self.h_buf,
+                &self.c_buf,
+                rows,
+                &mut self.out_lstm,
+            )?;
+            let out = &self.out_lstm;
+            let sd = out.h.len() / rows;
+            for (i, job) in group.iter().enumerate() {
+                self.sessions.scatter(
+                    job.req.session,
+                    &out.h[i * sd..(i + 1) * sd],
+                    &out.c[i * sd..(i + 1) * sd],
+                );
+            }
+            (&out.logits, &out.values)
+        } else {
+            self.backend
+                .forward_into(params, &self.obs_buf, rows, &mut self.out_ff)?;
+            (&self.out_ff.logits, &self.out_ff.values)
+        };
+        let slot_sum: usize = self.act_dims.iter().sum();
+        for (i, job) in group.into_iter().enumerate() {
+            let row = &logits[i * slot_sum..(i + 1) * slot_sum];
+            let reply = StepReply {
+                session: job.req.session,
+                version,
+                value: values[i],
+                actions: greedy_actions(row, &self.act_dims),
+            };
+            if job.reply.send(reply).is_err() {
+                // ordering: Relaxed — independent stat counter.
+                self.stats.hangups.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let created = self.sessions.created() - created_before;
+        // ordering: Relaxed — independent stat counters throughout; the
+        // selftest reads them after joining every thread.
+        self.stats.sessions.fetch_add(created, Ordering::Relaxed);
+        self.stats.requests.fetch_add(rows as u64, Ordering::Relaxed);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.stats.note_batch_size(rows as u64);
+        if rows > 1 {
+            self.stats.multi_row_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::queue;
+
+    #[test]
+    fn collect_blocks_for_the_first_item_then_fills() {
+        let (tx, rx) = queue::channel::<u32>(None);
+        for v in 0..5 {
+            tx.send(v).unwrap();
+        }
+        let batch = collect_batch(&rx, 3, || false).unwrap();
+        assert_eq!(batch, vec![0, 1, 2], "row budget caps the batch");
+        let batch = collect_batch(&rx, 8, || true).unwrap();
+        assert_eq!(batch, vec![3, 4], "queue drained + expired closes the batch");
+    }
+
+    #[test]
+    fn collect_returns_none_on_a_closed_drained_queue() {
+        let (tx, rx) = queue::channel::<u32>(None);
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(collect_batch(&rx, 4, || false), Some(vec![1]));
+        assert_eq!(collect_batch(&rx, 4, || false), None);
+    }
+
+    #[test]
+    fn expired_is_not_consulted_while_items_flow() {
+        let (tx, rx) = queue::channel::<u32>(None);
+        for v in 0..4 {
+            tx.send(v).unwrap();
+        }
+        // An instantly-expired budget still yields a full batch when the
+        // queue never runs empty.
+        let batch = collect_batch(&rx, 4, || true).unwrap();
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn repeated_sessions_split_into_ordered_groups() {
+        let (reply_tx, _reply_rx) = queue::channel::<StepReply>(None);
+        let job = |session: u64, tag: f32| Job {
+            req: StepRequest { session, reset: false, obs: vec![tag] },
+            reply: reply_tx.clone(),
+        };
+        let groups =
+            split_unique_sessions(vec![job(1, 0.0), job(2, 1.0), job(1, 2.0), job(1, 3.0)]);
+        let shape: Vec<Vec<(u64, f32)>> = groups
+            .iter()
+            .map(|g| g.iter().map(|j| (j.req.session, j.req.obs[0])).collect())
+            .collect();
+        assert_eq!(
+            shape,
+            vec![
+                vec![(1, 0.0), (2, 1.0)],
+                vec![(1, 2.0)],
+                vec![(1, 3.0)],
+            ],
+            "session 1's requests stay in arrival order, one per group"
+        );
+    }
+}

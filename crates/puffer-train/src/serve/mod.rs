@@ -1,0 +1,134 @@
+//! `puffer serve` — the dynamic-batching policy inference server: the
+//! production traffic path that turns a trained checkpoint into a
+//! network service (ROADMAP north-star item 2, the "millions of users"
+//! half of the paper's play-nice pitch).
+//!
+//! ## Architecture
+//!
+//! - [`model`] opens a v2 (RunSpec-embedded) checkpoint read-only and
+//!   rebuilds the exact [`NativeBackend`](crate::backend::NativeBackend)
+//!   the trainer used — flat obs row width, action head, and recurrence
+//!   are all known from the embedded spec, so clients send bare
+//!   `obs_dim × f32` rows.
+//! - [`server`] accepts concurrent localhost TCP connections speaking
+//!   the length-prefixed binary protocol (or the newline-JSON debug
+//!   mode — [`protocol`]) and routes each request to a batcher shard by
+//!   session id.
+//! - [`batcher`] coalesces queued requests into batched forward passes
+//!   under a dual budget — `max_batch` rows or `max_wait_us` elapsed,
+//!   whichever comes first. The request queue rides the loom-able
+//!   [`crate::sync::queue`] facade; the close/drain protocol is model
+//!   checked in `crates/puffer-train/tests/loom_models.rs`.
+//! - [`session`] owns per-session LSTM h/c state for recurrent policies:
+//!   created on first use, touched per request, reset on episode
+//!   boundaries (the request's `reset` flag), evicted after
+//!   `session_ttl_s` idle.
+//! - Weight rollover reuses [`ParamSnapshot`](crate::policy::ParamSnapshot):
+//!   a watcher thread re-reads the checkpoint path on change and
+//!   publishes a new version; each shard acquires the latest snapshot
+//!   between batches, so serving never blocks on a swap and every reply
+//!   carries the monotone snapshot version it was computed with.
+//! - [`selftest`] is the synthetic open-loop load generator behind
+//!   `puffer serve --selftest` and `benches/serve_latency.rs`, reporting
+//!   p50/p99 latency, batch occupancy, and sessions served into
+//!   `BENCH_serve.json` via the `PUFFER_BENCH_JSON` hook.
+//!
+//! Inference is deterministic (greedy argmax per action slot), which is
+//! what makes the batched-vs-serial bit-equality contract testable: the
+//! native forward math is row-independent, so a request's reply is
+//! bit-identical whether it rode a 64-row batch or a solo forward.
+
+// Serving is plumbing over safe primitives; the unsafe surface stays in
+// vector/ (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+pub mod batcher;
+pub mod model;
+pub mod protocol;
+pub mod selftest;
+pub mod server;
+pub mod session;
+
+pub use model::ServedModel;
+pub use protocol::{StepReply, StepRequest};
+pub use server::{Server, ServerHandle};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+// The plain-data `[serve]` config lives in puffer-core (the spec layer
+// needs it without linking this crate); re-exported here so
+// `crate::serve::ServeConfig` keeps resolving.
+pub use puffer_core::serve::ServeConfig;
+
+/// Shared serving counters, updated by the batcher shards and read by
+/// the CLI/selftest. All counters are independent tallies — no cross
+/// counter invariant is read concurrently — so Relaxed is sufficient
+/// throughout.
+#[derive(Debug)]
+pub struct ServeStats {
+    /// Requests answered (replies handed to a connection writer).
+    pub requests: AtomicU64,
+    /// Forward passes executed.
+    pub batches: AtomicU64,
+    /// Total rows across all forward passes.
+    pub rows: AtomicU64,
+    /// Largest single-forward row count observed.
+    pub max_batch: AtomicU64,
+    /// Forward passes with more than one row — the coalescing proof the
+    /// smoke test asserts on.
+    pub multi_row_batches: AtomicU64,
+    /// Sessions created across all shards.
+    pub sessions: AtomicU64,
+    /// Sessions evicted by the idle TTL.
+    pub evicted: AtomicU64,
+    /// Replies dropped because the client hung up before the answer.
+    pub hangups: AtomicU64,
+}
+
+impl Default for ServeStats {
+    // Hand-written (not derived) so it builds against both std and loom
+    // atomics without relying on loom's trait surface.
+    fn default() -> Self {
+        ServeStats {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            multi_row_batches: AtomicU64::new(0),
+            sessions: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            hangups: AtomicU64::new(0),
+        }
+    }
+}
+
+impl ServeStats {
+    /// Raise `max_batch` to at least `rows`. CAS loop because the sync
+    /// facade's loom doubles don't provide `fetch_max`.
+    pub fn note_batch_size(&self, rows: u64) {
+        // ordering: Relaxed — a monotone stat gauge; no other memory is
+        // published through it.
+        let mut cur = self.max_batch.load(Ordering::Relaxed);
+        while rows > cur {
+            // ordering: Relaxed — same gauge, success and failure alike.
+            match self
+                .max_batch
+                .compare_exchange_weak(cur, rows, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Mean rows per forward pass.
+    pub fn occupancy(&self) -> f64 {
+        // ordering: Relaxed — independent counters, no paired edge.
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        // ordering: Relaxed — as above.
+        self.rows.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+}

@@ -1,0 +1,383 @@
+//! The TCP front end: accept localhost connections, decode frames,
+//! route requests to batcher shards, stream replies back, and watch the
+//! checkpoint file for weight rollovers.
+//!
+//! Thread shape (for `threads = N` shards):
+//!
+//! ```text
+//! accept loop ──spawns──▶ per-connection reader ──Job──▶ shard 0..N
+//!                         per-connection writer ◀─reply── (queue)
+//! watcher ──publish──▶ ParamSnapshot ◀─acquire── shards
+//! ```
+//!
+//! Close/drain: connection readers drop their shard senders at client
+//! EOF; [`ServerHandle::shutdown`] stops the accept loop and drops its
+//! senders too, so each shard's queue reports disconnected exactly when
+//! no request can arrive anymore — the drain guarantee modeled in
+//! `crates/puffer-train/tests/loom_models.rs`.
+
+use super::batcher::{Job, Shard};
+use super::model::ServedModel;
+use super::protocol::{self, StepReply};
+use super::{ServeConfig, ServeStats};
+use crate::policy::ParamSnapshot;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::queue::{self, Sender};
+use crate::sync::{lock_unpoisoned, Arc, Mutex};
+use crate::train::Checkpoint;
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+/// Marker type for the running server (constructed via
+/// [`Server::start`], controlled through [`ServerHandle`]).
+pub struct Server;
+
+/// A running inference server. Dropping the handle without calling
+/// [`shutdown`](Self::shutdown) leaves the threads serving until
+/// process exit — call `shutdown` for a clean drain.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stats: Arc<ServeStats>,
+    snapshot: Arc<ParamSnapshot>,
+    n_params: usize,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    watcher: Option<JoinHandle<()>>,
+    shards: Vec<JoinHandle<Result<()>>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Server {
+    /// Bind, spawn the shard/accept/watcher threads, and return the
+    /// control handle. `cfg.port == 0` binds an ephemeral port — read
+    /// it back from [`ServerHandle::addr`].
+    pub fn start(model: ServedModel, cfg: &ServeConfig, watch_path: Option<&str>) -> Result<ServerHandle> {
+        anyhow::ensure!(cfg.threads >= 1, "serve.threads must be >= 1");
+        anyhow::ensure!(cfg.max_batch >= 1, "serve.max_batch must be >= 1");
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+
+        let stats = Arc::new(ServeStats::default());
+        let snapshot = Arc::new(ParamSnapshot::new(model.params.clone()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let mut shard_txs = Vec::with_capacity(cfg.threads);
+        let mut shards = Vec::with_capacity(cfg.threads);
+        for _ in 0..cfg.threads {
+            let (tx, rx) = queue::channel::<Job>(None);
+            let shard = Shard::new(model.backend.clone(), cfg, snapshot.clone(), stats.clone());
+            shards.push(std::thread::spawn(move || shard.run(rx)));
+            shard_txs.push(tx);
+        }
+
+        let watcher = watch_path.map(|path| {
+            spawn_watcher(
+                path.to_string(),
+                model.spec_key.clone(),
+                model.params.len(),
+                snapshot.clone(),
+                shutdown.clone(),
+            )
+        });
+
+        let geometry = ConnGeometry {
+            obs_dim: model.obs_dim(),
+            slots: model.slots(),
+            threads: cfg.threads,
+        };
+        let accept = {
+            let (shutdown, conns, stats) = (shutdown.clone(), conns.clone(), stats.clone());
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    // ordering: Relaxed — the dummy wake-up connection from
+                    // shutdown() orders itself; the flag is just a latch.
+                    if shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("serve: accept failed: {e}");
+                            continue;
+                        }
+                    };
+                    let (txs, stats) = (shard_txs.clone(), stats.clone());
+                    let handle = std::thread::spawn(move || {
+                        if let Err(e) = handle_connection(stream, geometry, &txs, &stats) {
+                            eprintln!("serve: connection error: {e:#}");
+                        }
+                    });
+                    lock_unpoisoned(&conns).push(handle);
+                }
+                // Dropping shard_txs here (with every connection reader
+                // already tracked) lets the shards drain and exit.
+            })
+        };
+
+        Ok(ServerHandle {
+            addr,
+            stats,
+            snapshot,
+            n_params: model.params.len(),
+            shutdown,
+            accept: Some(accept),
+            watcher,
+            shards,
+            conns,
+        })
+    }
+}
+
+impl ServerHandle {
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Current weight-snapshot version (0 = as loaded).
+    pub fn snapshot_version(&self) -> u64 {
+        self.snapshot.version()
+    }
+
+    /// Publish new weights directly (the in-process twin of the file
+    /// watcher — tests use it for deterministic hot-swaps).
+    pub fn publish_params(&self, params: &[f32]) -> Result<u64> {
+        anyhow::ensure!(
+            params.len() == self.n_params,
+            "published weights have {} parameters, expected {}",
+            params.len(),
+            self.n_params
+        );
+        Ok(self.snapshot.publish(params))
+    }
+
+    /// Stop accepting, drain in-flight requests, and join every thread.
+    /// Connections must be closed by their clients first (this is a
+    /// localhost tool; readers block on their sockets).
+    pub fn shutdown(mut self) -> Result<()> {
+        // ordering: Relaxed — the accept loop re-checks after its next
+        // (dummy) connection; no data is published through this flag.
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Wake the accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            // PANIC: propagating a panic from the accept thread — it holds
+            // no lock anyone else needs by this point.
+            h.join().expect("accept thread panicked");
+        }
+        for h in lock_unpoisoned(&self.conns).drain(..) {
+            // PANIC: as above, for connection threads.
+            h.join().expect("connection thread panicked");
+        }
+        for h in self.shards.drain(..) {
+            // PANIC: as above, for shard threads.
+            h.join().expect("shard thread panicked")?;
+        }
+        if let Some(h) = self.watcher.take() {
+            // PANIC: as above, for the watcher thread.
+            h.join().expect("watcher thread panicked");
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy)]
+struct ConnGeometry {
+    obs_dim: usize,
+    slots: usize,
+    threads: usize,
+}
+
+/// Serve one client connection until EOF. The reader (this thread)
+/// decodes frames and routes them to shards; a paired writer thread
+/// streams replies back so a slow batch never blocks decode.
+fn handle_connection(
+    stream: TcpStream,
+    geo: ConnGeometry,
+    shard_txs: &[Sender<Job>],
+    stats: &Arc<ServeStats>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut write_stream = stream.try_clone().context("cloning connection stream")?;
+    let mut reader = BufReader::new(stream);
+
+    // Mode detection: binary clients lead with `PUFB`, debug clients
+    // with a `{`.
+    let mut first = [0u8; 1];
+    if !read_one(&mut reader, &mut first)? {
+        return Ok(()); // connected and left (the shutdown wake-up does this)
+    }
+    let binary = first[0] != b'{';
+
+    // The hello goes out before the writer thread exists, so it cannot
+    // race a reply: no request has been routed yet.
+    if binary {
+        let mut rest = [0u8; 3];
+        anyhow::ensure!(read_one(&mut reader, &mut rest)?, "client closed mid-magic");
+        let magic = [first[0], rest[0], rest[1], rest[2]];
+        anyhow::ensure!(
+            &magic == protocol::CLIENT_MAGIC,
+            "bad client magic {magic:?} — expected {:?} or a JSON line",
+            protocol::CLIENT_MAGIC
+        );
+        protocol::write_hello(&mut write_stream, geo.obs_dim, geo.slots)?;
+    } else {
+        writeln!(write_stream, "{}", protocol::hello_json(geo.obs_dim, geo.slots))
+            .context("serve hello write")?;
+    }
+
+    let (reply_tx, reply_rx) = queue::channel::<StepReply>(None);
+    let writer = std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_stream);
+        while let Some(rep) = reply_rx.recv() {
+            let res = if binary {
+                protocol::write_reply(&mut w, &rep)
+            } else {
+                writeln!(w, "{}", protocol::reply_to_json(&rep)).map_err(anyhow::Error::from)
+            };
+            if res.and_then(|_| w.flush().map_err(anyhow::Error::from)).is_err() {
+                // Client went away; drain remaining replies quietly so
+                // the shards never block on this connection.
+                while reply_rx.recv().is_some() {}
+                return;
+            }
+        }
+    });
+
+    let route = |req: super::protocol::StepRequest| {
+        let shard = (req.session % geo.threads as u64) as usize;
+        let job = Job { req, reply: reply_tx.clone() };
+        if shard_txs[shard].send(job).is_err() {
+            // Server shutting down mid-connection: count it like a hangup.
+            // ordering: Relaxed — independent stat counter.
+            stats.hangups.fetch_add(1, Ordering::Relaxed);
+        }
+    };
+
+    let read_result = if binary {
+        loop {
+            match protocol::read_request(&mut reader, geo.obs_dim) {
+                Ok(Some(req)) => route(req),
+                Ok(None) => break Ok(()),
+                Err(e) => break Err(e),
+            }
+        }
+    } else {
+        let mut line = vec![first[0]];
+        loop {
+            match read_line(&mut reader, &mut line)? {
+                None => break Ok(()),
+                Some(text) => {
+                    let req = protocol::request_from_json(text, geo.obs_dim)?;
+                    route(req);
+                }
+            }
+            line.clear();
+        }
+    };
+
+    // Reader done: drop our reply sender so the writer exits once every
+    // in-flight job's clone is consumed.
+    drop(reply_tx);
+    // PANIC: writer thread holds no shared lock; propagate its panics.
+    writer.join().expect("connection writer panicked");
+    read_result
+}
+
+/// Fill `buf` exactly; `Ok(false)` if EOF arrived first.
+fn read_one(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..]).context("serve socket read")?;
+        if n == 0 {
+            return Ok(false);
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
+/// Read one newline-terminated line into `buf` (which may already hold
+/// the first byte). `None` at EOF with nothing buffered.
+fn read_line<'a>(r: &mut impl Read, buf: &'a mut Vec<u8>) -> Result<Option<&'a str>> {
+    let mut byte = [0u8; 1];
+    loop {
+        let n = r.read(&mut byte).context("serve socket read")?;
+        if n == 0 {
+            if buf.iter().all(|b| b.is_ascii_whitespace()) {
+                return Ok(None);
+            }
+            anyhow::bail!("connection closed mid-line");
+        }
+        if byte[0] == b'\n' {
+            let text = std::str::from_utf8(buf).context("request line is not UTF-8")?;
+            return Ok(Some(text));
+        }
+        buf.push(byte[0]);
+    }
+}
+
+fn file_stamp(path: &str) -> Option<(SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+/// Poll the checkpoint path and publish new weights when it changes.
+/// Validation failures keep the previous weights — a half-written or
+/// incompatible file can never reach the batcher.
+fn spawn_watcher(
+    path: String,
+    spec_key: String,
+    n_params: usize,
+    snapshot: Arc<ParamSnapshot>,
+    shutdown: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut last = file_stamp(&path);
+        // ordering: Relaxed — shutdown latch only, no data published.
+        while !shutdown.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(50));
+            let cur = file_stamp(&path);
+            if cur.is_none() || cur == last {
+                continue;
+            }
+            // One load attempt per observed stamp: a partial write fails
+            // validation, keeps the old weights, and the completed write
+            // changes the stamp again.
+            last = cur;
+            match Checkpoint::load(&path) {
+                Ok(ck) if ck.spec_key != spec_key => {
+                    eprintln!(
+                        "serve: ignoring {path}: arch key '{}' does not match served '{spec_key}'",
+                        ck.spec_key
+                    );
+                }
+                Ok(ck) if ck.params.len() != n_params => {
+                    eprintln!(
+                        "serve: ignoring {path}: {} parameters, expected {n_params}",
+                        ck.params.len()
+                    );
+                }
+                Ok(ck) => {
+                    let v = snapshot.publish(&ck.params);
+                    eprintln!(
+                        "serve: weights rolled to version {v} (step {})",
+                        ck.global_step
+                    );
+                }
+                Err(e) => {
+                    eprintln!("serve: ignoring unreadable {path}: {e:#}");
+                }
+            }
+        }
+    })
+}

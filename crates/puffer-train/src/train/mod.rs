@@ -1,0 +1,40 @@
+//! Clean PuffeRL (paper §6): the first-party PPO trainer. Heavily
+//! customized in the same ways the paper describes — separate train/eval,
+//! model checkpointing, fast LSTM support, asynchronous environment
+//! simulation (EnvPool), episode-stat logging, and multiagent support —
+//! driving the learner math through the [`crate::backend::PolicyBackend`]
+//! abstraction (pure-Rust `NativeBackend` by default, AOT/PJRT behind the
+//! `pjrt` feature). Python never runs here.
+//!
+//! Training itself is an **experience pipeline** ([`pipeline`]): with
+//! `train.pipeline.depth ≥ 1` a collector thread fills rotating rollout
+//! segments (inference off epoch-versioned parameter snapshots) while the
+//! learner runs shuffled-minibatch PPO epochs on the previous segment —
+//! simulation and optimization overlap instead of taking turns. Depth 0
+//! is the serial loop, bit-identical to the pre-pipeline trainer.
+
+// The trainer threads, but through safe primitives only (crate::sync,
+// scoped threads); no unsafe belongs here (CONCURRENCY.md).
+#![forbid(unsafe_code)]
+
+mod checkpoint;
+#[cfg(feature = "trainer")]
+pub mod pipeline;
+#[cfg(feature = "trainer")]
+mod rollout;
+#[cfg(feature = "trainer")]
+mod trainer;
+
+// The plain-data config/report types live in puffer-core (the spec
+// layer needs them without linking this crate); re-exported here so
+// `crate::train::TrainConfig` keeps resolving. Checkpoint loading is
+// ungated — `puffer serve` opens checkpoints without the trainer.
+pub use puffer_core::train::{EvalReport, TrainConfig, TrainReport};
+
+pub use checkpoint::Checkpoint;
+#[cfg(feature = "trainer")]
+pub use pipeline::Segment;
+#[cfg(feature = "trainer")]
+pub use rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
+#[cfg(feature = "trainer")]
+pub use trainer::Trainer;

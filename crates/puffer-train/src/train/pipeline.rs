@@ -1,0 +1,112 @@
+//! The experience pipeline behind `train.pipeline.depth > 0`: a
+//! **collector** thread owns the [`VecEnv`], runs rollout inference off
+//! the latest [`ParamSnapshot`] version, and fills one of `depth + 1`
+//! rotating [`RolloutBuffer`] segments while the **learner** (the caller
+//! thread, [`Trainer::train`](crate::train::Trainer::train)) consumes the
+//! previously completed segment — GAE plus shuffled-minibatch PPO epochs —
+//! and publishes fresh parameters for the next acquisition.
+//!
+//! Buffer rotation doubles as flow control: the collector can run at most
+//! `depth` segments ahead because no more buffers exist, and either side
+//! exits cleanly when the other hangs up its channel endpoint. Stall time
+//! on both sides is measured (the collector's wait for a free buffer, the
+//! learner's wait for a filled segment) so `env SPS` vs `learner SPS` and
+//! the pipeline balance are observable per run.
+//!
+//! The transport is [`crate::sync::queue`] rather than `std::sync::mpsc`
+//! so the rotation/hangup protocol itself runs under loom — see the
+//! `rotation_*` models in `crates/puffer-train/tests/loom_models.rs`.
+
+use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
+use crate::backend::PolicyBackend;
+use crate::policy::{ParamSnapshot, Policy};
+use crate::sync::queue;
+use crate::util::timer::Timer;
+use crate::vector::VecEnv;
+use anyhow::Result;
+
+/// One collected rollout segment in flight from collector to learner.
+pub struct Segment {
+    pub buf: RolloutBuffer,
+    /// Episode stats harvested while collecting this segment.
+    pub log: EpisodeLog,
+    /// Param snapshot version the collector inferred with.
+    pub version: u64,
+    /// Env steps stored in the segment (`horizon × batch_roll`).
+    pub steps: u64,
+    /// Wall-clock seconds spent collecting (inference + env stepping).
+    pub collect_s: f64,
+    /// Seconds the collector stalled waiting for a free buffer before
+    /// this segment — the learner-is-too-slow signal.
+    pub stall_s: f64,
+}
+
+/// Collector half of the pipeline; runs on a dedicated scoped thread.
+///
+/// Resets the venv, then for each of `segments_total` segments: waits for
+/// a free buffer, acquires the newest published params into `policy`,
+/// threads the episode-boundary carry from the previous segment in, and
+/// collects. Recurrent policy state (`h`/`c`) lives in `policy` and is
+/// carried across segments exactly as the serial loop carries it across
+/// iterations. Exits early (without panicking) when the learner hangs up.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn collector_loop(
+    venv: &mut dyn VecEnv,
+    policy: &mut Policy,
+    backend: &mut dyn PolicyBackend,
+    snapshot: &ParamSnapshot,
+    free_rx: queue::Receiver<RolloutBuffer>,
+    filled_tx: queue::Sender<Result<Segment>>,
+    segments_total: u64,
+    seed: u64,
+) {
+    venv.async_reset(seed);
+    policy.reset_all_state();
+    let rows = policy.spec().batch_roll;
+    let mut carry = vec![true; rows]; // hard reset: every row starts fresh
+
+    for _ in 0..segments_total {
+        let wait = Timer::start();
+        let Some(mut buf) = free_rx.recv() else {
+            return; // learner dropped its sender (done or errored)
+        };
+        let stall_s = wait.secs();
+
+        let (version, params) = snapshot.acquire();
+        policy.set_params(&params);
+        buf.set_episode_carry(&carry);
+
+        let mut log = EpisodeLog::default();
+        let collect = Timer::start();
+        let res = collect_rollout(venv, &mut buf, &mut log, |obs, rows, done_rows| {
+            // Zero recurrent state for rows whose episode just ended
+            // *before* the forward pass on their fresh observations —
+            // the LSTM state-reset discipline of paper §3.4.
+            for &r in done_rows {
+                policy.reset_state(r);
+            }
+            policy.step(&mut *backend, obs, rows)
+        });
+        let collect_s = collect.secs();
+        carry.copy_from_slice(buf.episode_carry());
+
+        let msg = match res {
+            Ok(()) => {
+                let steps = buf.segment_steps() as u64;
+                Ok(Segment {
+                    buf,
+                    log,
+                    version,
+                    steps,
+                    collect_s,
+                    stall_s,
+                })
+            }
+            Err(e) => Err(e),
+        };
+        let failed = msg.is_err();
+        if filled_tx.send(msg).is_err() || failed {
+            return;
+        }
+    }
+}

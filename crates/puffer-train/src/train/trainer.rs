@@ -1,0 +1,1017 @@
+//! The PPO training loop — as a two-speed **experience pipeline**:
+//!
+//! - `pipeline.depth = 0` (default): the serial loop — rollout → GAE →
+//!   minibatched PPO epochs, one after another on the caller thread. With
+//!   `minibatches = 1` this is bit-identical to the pre-pipeline trainer
+//!   (pinned by `tests/pipeline.rs`).
+//! - `pipeline.depth = d ≥ 1`: a collector thread owns the [`VecEnv`] and
+//!   fills one of `d + 1` rotating [`RolloutBuffer`] segments, inferring
+//!   off an epoch-versioned [`ParamSnapshot`], while the learner (this
+//!   thread) consumes completed segments — GAE plus shuffled-minibatch
+//!   PPO epochs — and publishes fresh parameters. Simulation and
+//!   optimization overlap; each side's stall time is reported so the
+//!   depth × minibatches balance is tunable from the logs.
+//!
+//! Everything runs through the [`PolicyBackend`] abstraction, so the same
+//! loop drives the pure-Rust [`NativeBackend`] (default) and the AOT/PJRT
+//! path (`pjrt` feature).
+
+use super::pipeline::{collector_loop, Segment};
+use super::rollout::{collect_rollout, EpisodeLog, RolloutBuffer};
+use super::{Checkpoint, EvalReport, TrainConfig, TrainReport};
+use crate::backend::{AdamState, MinibatchScratch, NativeBackend, PolicyBackend, TrainBatch};
+use crate::policy::{ParamSnapshot, Policy, PolicySpec};
+use crate::runspec::RunSpec;
+use crate::sync::queue;
+use crate::util::rng::Rng;
+use crate::util::seed::SeedPlan;
+use crate::util::timer::{SpsCounter, Timer};
+use crate::vector::{VecEnv, VecSpec};
+use crate::wrappers::EnvSpec;
+use anyhow::Result;
+use std::io::Write as _;
+
+/// Lazily-opened `metrics.csv` sink. Nothing on disk is touched until
+/// the first row is written, so trainers that never train (e.g.
+/// `puffer eval <ckpt>` rebuilding from an embedded RunSpec) leave the
+/// run dir untouched. The truncate-vs-append decision is made at first
+/// write: a fresh run starts a clean file; a restored trainer
+/// ([`Trainer::restore`]) appends, continuing the original run's curve
+/// instead of erasing its history. The header is written only when the
+/// file ends up empty.
+struct MetricsSink {
+    path: Option<String>,
+    file: Option<std::fs::File>,
+    /// Set by `restore()`: append instead of truncating.
+    append: bool,
+}
+
+impl MetricsSink {
+    fn new(run_dir: Option<&str>) -> Self {
+        MetricsSink {
+            path: run_dir.map(|dir| format!("{dir}/metrics.csv")),
+            file: None,
+            append: false,
+        }
+    }
+
+    /// The open file, creating it on first use (`None` when the run has
+    /// no directory).
+    fn file(&mut self) -> Result<Option<&mut std::fs::File>> {
+        if self.file.is_none() {
+            let Some(path) = &self.path else {
+                return Ok(None);
+            };
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let mut f = if self.append {
+                std::fs::OpenOptions::new().create(true).append(true).open(path)?
+            } else {
+                std::fs::File::create(path)?
+            };
+            if f.metadata()?.len() == 0 {
+                writeln!(
+                    f,
+                    "global_step,sps,score,ep_return,ep_length,loss,pg_loss,v_loss,entropy,approx_kl,env_sps,learn_sps,stall_s"
+                )?;
+            }
+            self.file = Some(f);
+        }
+        Ok(self.file.as_mut())
+    }
+}
+
+/// Clean PuffeRL.
+pub struct Trainer {
+    cfg: TrainConfig,
+    backend: Box<dyn PolicyBackend>,
+    policy: Policy,
+    venv: Box<dyn VecEnv>,
+    buf: RolloutBuffer,
+    log: EpisodeLog,
+    spec_key: String,
+    opt: AdamState,
+    global_step: u64,
+    metrics: MetricsSink,
+    /// Live telemetry for `puffer ps` / `puffer top`: rewrites
+    /// `<run_dir>/heartbeat.json` once per configured period (`None`
+    /// when the run has no directory — nothing to watch).
+    heartbeat: Option<crate::runs::HeartbeatWriter>,
+    /// Per-stream seeds: [`SeedPlan::legacy`] for directly-configured
+    /// trainers (bit-identical to the pre-RunSpec loop),
+    /// [`SeedPlan::from_root`] for RunSpec-constructed ones.
+    seeds: SeedPlan,
+    /// The declarative spec this trainer was built from, when it was
+    /// built through [`Trainer::from_run_spec`] — embedded in every
+    /// checkpoint so `puffer resume` / `puffer eval` need zero flags.
+    run_spec: Option<RunSpec>,
+    /// Minibatch row-permutation stream (never consumed when
+    /// `minibatches == 1`, keeping the full-batch path bit-identical to
+    /// the pre-pipeline trainer).
+    shuffle_rng: Rng,
+    scratch: MinibatchScratch,
+}
+
+impl Trainer {
+    /// The env + wrapper-chain spec this config describes — what every
+    /// construction path (probe, backend, vectorizer) builds from.
+    fn env_spec(cfg: &TrainConfig) -> EnvSpec {
+        EnvSpec::new(cfg.env.as_str()).with_wrappers(cfg.wrappers.iter().cloned())
+    }
+
+    /// The policy architecture this config trains: the explicit
+    /// [`TrainConfig::policy`] spec, or the env's default.
+    fn policy_spec(cfg: &TrainConfig) -> PolicySpec {
+        cfg.policy
+            .clone()
+            .unwrap_or_else(|| PolicySpec::default_for(&cfg.env))
+    }
+
+    /// Train with the default pure-Rust [`NativeBackend`]: no artifacts,
+    /// no Python, no native dependencies. The backend spec is sized from
+    /// the *wrapped* env (stacking widens `obs_dim`) and resolved
+    /// against its observation layout (per-leaf encoders), and its key
+    /// embeds the wrapper chain plus any non-default architecture so
+    /// checkpoints never cross chains or architectures silently.
+    pub fn native(cfg: TrainConfig) -> Result<Self> {
+        let seeds = SeedPlan::legacy(cfg.seed);
+        Self::native_with(cfg, seeds, None)
+    }
+
+    /// Construct from a declarative [`RunSpec`] — the one-line
+    /// experiment path. Differences from [`Trainer::native`]: the env,
+    /// wrappers, policy, vectorization, and train settings all come from
+    /// the spec; every RNG stream is derived from the single `run.seed`
+    /// root via the documented split function
+    /// ([`SeedPlan::from_root`]); and checkpoints embed the serialized
+    /// spec, so `puffer resume <ckpt>` / `puffer eval <ckpt>` work with
+    /// zero flags.
+    pub fn from_run_spec(spec: &RunSpec) -> Result<Self> {
+        let cfg = spec.train_config();
+        let seeds = SeedPlan::from_root(spec.seed);
+        Self::native_with(cfg, seeds, Some(spec.clone()))
+    }
+
+    fn native_with(cfg: TrainConfig, seeds: SeedPlan, run_spec: Option<RunSpec>) -> Result<Self> {
+        let spec = Self::env_spec(&cfg);
+        let probe = spec.build(0);
+        let policy = Self::policy_spec(&cfg);
+        let mut backend = NativeBackend::for_env_with_policy(&spec.key(), probe.as_ref(), &policy)?;
+        backend.set_kernel_path(cfg.kernels);
+        Self::build(cfg, Box::new(backend), probe, seeds, run_spec)
+    }
+
+    /// Train through the AOT/PJRT path (requires the `pjrt` feature and
+    /// `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.wrappers.is_empty(),
+            "the pjrt backend executes AOT-compiled specs with fixed shapes; \
+             wrapper chains are supported on the native backend only for now"
+        );
+        anyhow::ensure!(
+            cfg.minibatches == 1,
+            "the pjrt backend's train_step was AOT-lowered for the full \
+             (horizon, batch_roll) segment; train.minibatches > 1 requires \
+             the native backend"
+        );
+        anyhow::ensure!(
+            cfg.norm_adv,
+            "the pjrt backend's compiled train_step always normalizes \
+             advantages; train.norm_adv=false requires the native backend"
+        );
+        if let Some(policy) = &cfg.policy {
+            anyhow::ensure!(
+                *policy == PolicySpec::default_for(&cfg.env),
+                "the pjrt backend executes AOT-lowered default architectures \
+                 only; the requested spec '{}' (train.policy.* / --policy.*) \
+                 requires the native backend, which builds arbitrary \
+                 PolicySpecs from the spec itself",
+                policy.key()
+            );
+        }
+        let key = crate::runtime::Manifest::spec_key_for_env(&cfg.env);
+        let backend = crate::backend::PjrtBackend::new(artifacts_dir, &key)?;
+        Self::with_backend(cfg, Box::new(backend))
+    }
+
+    /// Train with any [`PolicyBackend`].
+    pub fn with_backend(cfg: TrainConfig, backend: Box<dyn PolicyBackend>) -> Result<Self> {
+        let probe = Self::env_spec(&cfg).build(0);
+        let seeds = SeedPlan::legacy(cfg.seed);
+        Self::build(cfg, backend, probe, seeds, None)
+    }
+
+    fn build(
+        cfg: TrainConfig,
+        mut backend: Box<dyn PolicyBackend>,
+        probe: Box<dyn crate::emulation::FlatEnv>,
+        seeds: SeedPlan,
+        run_spec: Option<RunSpec>,
+    ) -> Result<Self> {
+        let spec = backend.spec().clone();
+        let spec_key = backend.key().to_string();
+
+        // Contract check against the probe env: shape drift between the
+        // backend spec and the Rust env fails loudly here.
+        anyhow::ensure!(
+            spec.obs_dim == probe.obs_layout().flat_len(),
+            "spec '{spec_key}': obs_dim {} != env flat obs len {}",
+            spec.obs_dim,
+            probe.obs_layout().flat_len()
+        );
+        anyhow::ensure!(
+            spec.act_dims == probe.action_dims(),
+            "spec '{spec_key}': act_dims {:?} != env action dims {:?}",
+            spec.act_dims,
+            probe.action_dims()
+        );
+        anyhow::ensure!(
+            spec.agents == probe.num_agents(),
+            "spec '{spec_key}': agents {} != env num_agents {}",
+            spec.agents,
+            probe.num_agents()
+        );
+        drop(probe);
+
+        let agents = spec.agents;
+        anyhow::ensure!(
+            spec.batch_roll % agents == 0,
+            "batch_roll {} not divisible by agents {agents}",
+            spec.batch_roll
+        );
+        anyhow::ensure!(
+            cfg.minibatches >= 1 && spec.batch_roll % cfg.minibatches == 0,
+            "train.minibatches {} must be >= 1 and divide batch_roll {} \
+             (minibatches slice whole agent rows)",
+            cfg.minibatches,
+            spec.batch_roll
+        );
+        let num_envs = spec.batch_roll / agents;
+
+        // Vectorizer: built through the declarative VecSpec from the
+        // same EnvSpec as the probe, so the worker slabs use the wrapped
+        // layout. Explicit `cfg.vec` wins; otherwise the legacy
+        // num_workers/pool knobs map through the same spec type.
+        let env_spec = Self::env_spec(&cfg);
+        let vec_spec = match &cfg.vec {
+            Some(v) => v.clone(),
+            None => VecSpec::from_workers_pool(cfg.num_workers, cfg.pool),
+        };
+        let vec_spec = vec_spec.resolved(&env_spec, num_envs, cfg.run_dir.as_deref())?;
+        let venv = vec_spec.build(&env_spec, num_envs, seeds.env)?;
+        spec.ensure_trainable_batch(&vec_spec.to_string(), venv.batch_size())?;
+
+        let policy = Policy::new(backend.as_mut(), seeds.policy)?;
+        let buf = RolloutBuffer::new(
+            spec.horizon,
+            spec.batch_roll,
+            spec.obs_dim,
+            spec.act_dims.len(),
+        );
+
+        let metrics = MetricsSink::new(cfg.run_dir.as_deref());
+        let heartbeat = cfg.run_dir.as_deref().map(|dir| {
+            let period_s = run_spec
+                .as_ref()
+                .and_then(|s| s.runs.as_ref())
+                .map(|r| r.heartbeat_s)
+                .unwrap_or_else(|| crate::runs::RunsConfig::default().heartbeat_s);
+            crate::runs::HeartbeatWriter::new(dir, period_s, cfg.total_steps)
+        });
+        let shuffle_rng = Rng::new(seeds.shuffle);
+        Ok(Trainer {
+            cfg,
+            backend,
+            policy,
+            venv,
+            buf,
+            log: EpisodeLog::default(),
+            spec_key,
+            opt: AdamState::new(spec.n_params),
+            global_step: 0,
+            metrics,
+            heartbeat,
+            seeds,
+            run_spec,
+            shuffle_rng,
+            scratch: MinibatchScratch::default(),
+        })
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+    pub fn global_step(&self) -> u64 {
+        self.global_step
+    }
+    /// The declarative spec this trainer was built from (only when
+    /// constructed through [`Trainer::from_run_spec`]).
+    pub fn run_spec(&self) -> Option<&RunSpec> {
+        self.run_spec.as_ref()
+    }
+
+    /// Run the full training loop (serial or pipelined per
+    /// [`TrainConfig::pipeline_depth`]).
+    pub fn train(&mut self) -> Result<TrainReport> {
+        // Test hook: the integration suite injects a deterministic child
+        // failure (sweep panic isolation / registry `failed` records) by
+        // naming a run-dir substring in this env var. Inert otherwise.
+        if let Ok(needle) = std::env::var("PUFFER_TEST_TRAIN_PANIC") {
+            if let Some(dir) = &self.cfg.run_dir {
+                if !needle.is_empty() && dir.contains(&needle) {
+                    panic!("PUFFER_TEST_TRAIN_PANIC: injected failure for {dir}");
+                }
+            }
+        }
+        // First beat before any stepping so even instant crashes leave a
+        // heartbeat for `puffer ps` to date the attempt by.
+        if let Some(hb) = self.heartbeat.as_mut() {
+            hb.force(self.global_step, 0.0, 0.0, 0.0, None)?;
+        }
+        let report = if self.cfg.pipeline_depth == 0 {
+            self.train_serial()?
+        } else {
+            self.train_pipelined()?
+        };
+        if let Some(dir) = &self.cfg.run_dir {
+            std::fs::create_dir_all(dir)?;
+            self.checkpoint().save(format!("{dir}/checkpoint.bin"))?;
+        }
+        // Final beat with the report's numbers so `ps` shows the finished
+        // progress even if the registry transition races a reader.
+        if let Some(hb) = self.heartbeat.as_mut() {
+            hb.force(
+                report.global_step,
+                report.env_sps,
+                report.learn_sps,
+                report.collector_stall_s + report.learner_stall_s,
+                report.mean_score,
+            )?;
+        }
+        Ok(report)
+    }
+
+    /// The serial loop: collect a segment, then learn on it, on one
+    /// thread. With `minibatches == 1` every operation — and therefore
+    /// every parameter bit — matches the pre-pipeline trainer.
+    fn train_serial(&mut self) -> Result<TrainReport> {
+        let n = self.buf.segment_steps() as u64;
+        let mut sps = SpsCounter::new();
+        let mut tel = Telemetry::default();
+        let mut last_metrics = [0.0f32; 5];
+        let mut segment = 0u64;
+        let mut score_curve = Vec::new();
+
+        self.venv.async_reset(self.seeds.env);
+        self.buf.mark_all_starts();
+        self.policy.reset_all_state();
+
+        while self.global_step < self.cfg.total_steps {
+            // ---- Rollout ----
+            let roll = Timer::start();
+            let (policy, backend, venv, buf, log) = (
+                &mut self.policy,
+                &mut *self.backend,
+                &mut *self.venv,
+                &mut self.buf,
+                &mut self.log,
+            );
+            collect_rollout(venv, buf, log, |obs, rows, done_rows| {
+                // Zero recurrent state for rows whose episode just ended
+                // *before* the forward pass on their fresh observations —
+                // the LSTM state-reset discipline of paper §3.4.
+                for &r in done_rows {
+                    policy.reset_state(r);
+                }
+                policy.step(&mut *backend, obs, rows)
+            })?;
+            tel.env_active_s += roll.secs();
+            self.global_step += n;
+            sps.add(n);
+
+            // ---- GAE + PPO epochs ----
+            let lr = anneal_lr(&self.cfg, self.global_step, self.cfg.total_steps);
+            let learn = Timer::start();
+            last_metrics = learn_on_segment(
+                &mut *self.backend,
+                self.policy.params_mut(),
+                &mut self.opt,
+                &self.cfg,
+                &mut self.shuffle_rng,
+                &mut self.scratch,
+                &self.buf,
+                lr,
+            )?;
+            tel.learn_s += learn.secs();
+
+            // ---- Logging ----
+            segment += 1;
+            if let Some(s) = self.log.mean_score(100) {
+                score_curve.push((self.global_step, s));
+            }
+            log_segment(
+                &self.cfg,
+                &mut self.metrics,
+                &mut self.heartbeat,
+                self.global_step,
+                sps.window(),
+                sps.total(),
+                &self.log,
+                &last_metrics,
+                segment,
+                &tel,
+            )?;
+        }
+
+        Ok(self.report(sps.overall(), sps.total(), &tel, last_metrics, score_curve))
+    }
+
+    /// The pipelined loop: a collector thread fills rotating segment
+    /// buffers (inference off the latest published params) while this
+    /// thread learns on completed segments and publishes updates.
+    fn train_pipelined(&mut self) -> Result<TrainReport> {
+        let depth = self.cfg.pipeline_depth;
+        let spec = self.policy.spec().clone();
+        let n = (spec.horizon * spec.batch_roll) as u64;
+        let remaining = self.cfg.total_steps.saturating_sub(self.global_step);
+        let segments_total = remaining.div_ceil(n);
+
+        // Collector-side inference stack: a forked backend plus its own
+        // policy (sampling RNG + recurrent state), reading the learner's
+        // published weights — never its in-place-mutating buffer.
+        let mut col_backend = self.backend.fork_for_rollout()?;
+        let mut col_policy = Policy::new(col_backend.as_mut(), self.seeds.collector)?;
+        col_policy.set_params(self.policy.params());
+        let snapshot = ParamSnapshot::new(self.policy.params().to_vec());
+
+        // depth + 1 buffers rotate collector → learner → collector; the
+        // buffer pool, not the channel, is the back-pressure bound. The
+        // trainer's own segment buffer is lent as pool slot 0 (the
+        // collector rewrites the episode carry before every fill) and
+        // re-created after the scope, so peak memory is depth + 1 segment
+        // buffers instead of depth + 2.
+        let (free_tx, free_rx) = queue::channel::<RolloutBuffer>(None);
+        let (filled_tx, filled_rx) = queue::channel::<Result<Segment>>(Some(depth + 1));
+        let lent = std::mem::replace(&mut self.buf, RolloutBuffer::new(0, 0, 0, 0));
+        assert!(free_tx.send(lent).is_ok(), "free_rx alive until the scope");
+        for _ in 0..depth {
+            let buf = RolloutBuffer::new(
+                spec.horizon,
+                spec.batch_roll,
+                spec.obs_dim,
+                spec.act_dims.len(),
+            );
+            assert!(free_tx.send(buf).is_ok(), "free_rx alive until the scope");
+        }
+
+        let seed = self.seeds.env;
+        let mut sps = SpsCounter::new();
+        let mut tel = Telemetry::default();
+        let mut last_metrics = [0.0f32; 5];
+        let mut score_curve = Vec::new();
+
+        let Trainer {
+            cfg,
+            backend,
+            policy,
+            venv,
+            log,
+            opt,
+            global_step,
+            metrics,
+            heartbeat,
+            shuffle_rng,
+            scratch,
+            ..
+        } = self;
+
+        // Reborrows handed to the spawned collector must be created out
+        // here: scoped threads may only borrow data living outside the
+        // scope closure.
+        let venv_ref: &mut dyn VecEnv = &mut **venv;
+        let col_policy_ref = &mut col_policy;
+        let col_backend_ref = col_backend.as_mut();
+        let snapshot_ref = &snapshot;
+
+        let scope_result = std::thread::scope(|s| -> Result<()> {
+            // Rebinding moves the learner-side endpoints *into* this
+            // closure, so every exit path (success or `?`) drops them
+            // here — unblocking a collector stuck on recv/send before
+            // the scope's implicit join.
+            let free_tx = free_tx;
+            let filled_rx = filled_rx;
+            let _collector = s.spawn(move || {
+                collector_loop(
+                    venv_ref,
+                    col_policy_ref,
+                    col_backend_ref,
+                    snapshot_ref,
+                    free_rx,
+                    filled_tx,
+                    segments_total,
+                    seed,
+                )
+            });
+
+            let mut segment = 0u64;
+            while segment < segments_total {
+                let wait = Timer::start();
+                let msg = filled_rx.recv().ok_or_else(|| {
+                    anyhow::anyhow!("collector thread exited before delivering all segments")
+                })?;
+                tel.learner_stall_s += wait.secs();
+                let seg: Segment = msg?;
+                // `segment` publishes have happened so far; the collector
+                // inferred this segment with version `seg.version`.
+                tel.max_staleness = tel.max_staleness.max(segment.saturating_sub(seg.version));
+                log.merge(&seg.log);
+                *global_step += seg.steps;
+                sps.add(seg.steps);
+                tel.env_active_s += seg.collect_s;
+                tel.collector_stall_s += seg.stall_s;
+
+                let lr = anneal_lr(cfg, *global_step, cfg.total_steps);
+                let learn = Timer::start();
+                last_metrics = learn_on_segment(
+                    backend.as_mut(),
+                    policy.params_mut(),
+                    opt,
+                    cfg,
+                    shuffle_rng,
+                    scratch,
+                    &seg.buf,
+                    lr,
+                )?;
+                tel.learn_s += learn.secs();
+                snapshot.publish(policy.params());
+
+                segment += 1;
+                if let Some(sc) = log.mean_score(100) {
+                    score_curve.push((*global_step, sc));
+                }
+                log_segment(
+                    cfg,
+                    metrics,
+                    heartbeat,
+                    *global_step,
+                    sps.window(),
+                    sps.total(),
+                    log,
+                    &last_metrics,
+                    segment,
+                    &tel,
+                )?;
+                // Recycle; the collector may already be done with its
+                // quota, so a hung-up receiver is fine.
+                let _ = free_tx.send(seg.buf);
+            }
+            Ok(())
+        });
+
+        // Re-create the lent segment buffer on every exit path (including
+        // errors) so a later train() on this trainer — e.g. after
+        // restore() rewinds global_step — finds a full-sized buffer.
+        self.buf = RolloutBuffer::new(
+            spec.horizon,
+            spec.batch_roll,
+            spec.obs_dim,
+            spec.act_dims.len(),
+        );
+        scope_result?;
+
+        Ok(self.report(sps.overall(), sps.total(), &tel, last_metrics, score_curve))
+    }
+
+    fn report(
+        &self,
+        sps: f64,
+        steps: u64,
+        tel: &Telemetry,
+        last_metrics: [f32; 5],
+        score_curve: Vec<(u64, f64)>,
+    ) -> TrainReport {
+        TrainReport {
+            global_step: self.global_step,
+            sps,
+            env_sps: rate(steps, tel.env_active_s),
+            learn_sps: rate(steps, tel.learn_s),
+            collector_stall_s: tel.collector_stall_s,
+            learner_stall_s: tel.learner_stall_s,
+            max_param_staleness: tel.max_staleness,
+            mean_score: self.log.mean_score(100),
+            mean_return: self.log.mean_return(100),
+            episodes: self.log.scores.len(),
+            last_loss: last_metrics[0],
+            score_curve,
+        }
+    }
+
+    /// Evaluate the current policy (stochastic sampling, fresh envs) for
+    /// `min_episodes` episodes.
+    pub fn eval(&mut self, min_episodes: usize) -> Result<EvalReport> {
+        let mut log = EpisodeLog::default();
+        self.venv.async_reset(self.seeds.eval);
+        self.policy.reset_all_state();
+        let agents = self.venv.agents_per_env();
+        let slots = self.venv.action_dims().len();
+        let layout = self.venv.obs_layout().clone();
+        let d = layout.flat_len();
+        while log.scores.len() < min_episodes {
+            let (raw_obs, env_ids, terms, truncs, infos) = {
+                let b = self.venv.recv()?;
+                (
+                    b.obs.to_vec(),
+                    b.env_ids.to_vec(),
+                    b.terms.to_vec(),
+                    b.truncs.to_vec(),
+                    b.infos,
+                )
+            };
+            log.absorb(&infos);
+            let mut global_rows = Vec::new();
+            for &e in &env_ids {
+                for a in 0..agents {
+                    global_rows.push(e * agents + a);
+                }
+            }
+            let rows = global_rows.len();
+            // Eval-side recurrent reset: done flags arrive with the batch;
+            // rows whose episode just ended get fresh obs (auto-reset), so
+            // their LSTM state must be zeroed before the forward pass —
+            // the same discipline the training rollout applies.
+            for (i, &g) in global_rows.iter().enumerate() {
+                if terms[i] || truncs[i] {
+                    self.policy.reset_state(g);
+                }
+            }
+            let mut obs_f32 = vec![0.0; rows * d];
+            for (i, row) in raw_obs.chunks_exact(layout.byte_len()).enumerate() {
+                layout.row_to_f32(row, &mut obs_f32[i * d..(i + 1) * d]);
+            }
+            let out = self.policy.step(&mut *self.backend, &obs_f32, &global_rows)?;
+            self.venv.send(&out.actions[..rows * slots])?;
+        }
+        Ok(EvalReport {
+            episodes: log.scores.len(),
+            mean_score: log.mean_score(usize::MAX),
+            mean_return: log.mean_return(usize::MAX),
+        })
+    }
+
+    /// Snapshot trainer state. When the trainer was built from a
+    /// [`RunSpec`], the serialized spec rides along so `puffer resume` /
+    /// `puffer eval` can reconstruct the whole experiment with zero
+    /// flags. Specs that cannot serialize (custom base env,
+    /// non-canonical wrapper chain) checkpoint without an embedded spec
+    /// — such runs restore through the explicit API, matched by
+    /// `spec_key` as always.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            spec_key: self.spec_key.clone(),
+            run_spec_json: self
+                .run_spec
+                .as_ref()
+                .filter(|r| r.to_flat().is_ok())
+                .map(|r| r.to_json().dump()),
+            global_step: self.global_step,
+            params: self.policy.params().to_vec(),
+            adam_m: self.opt.m.clone(),
+            adam_v: self.opt.v.clone(),
+            adam_step: self.opt.step,
+        }
+    }
+
+    /// Restore from a checkpoint (env spec, wrapper chain, and policy
+    /// architecture must all match — they are the key).
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        if ck.spec_key != self.spec_key {
+            // The key is `<env+wrappers>[#<arch>]`; name the mismatched
+            // half so the fix (re-train, or match --policy.*) is obvious.
+            let split = |k: &str| -> (String, String) {
+                match k.split_once('#') {
+                    Some((env, arch)) => (env.to_string(), arch.to_string()),
+                    None => (k.to_string(), "default".to_string()),
+                }
+            };
+            let (ck_env, ck_arch) = split(&ck.spec_key);
+            let (my_env, my_arch) = split(&self.spec_key);
+            if ck_env == my_env && ck_arch != my_arch {
+                anyhow::bail!(
+                    "checkpoint is for '{ck_env}' with policy architecture \
+                     '{ck_arch}', but this trainer resolved architecture \
+                     '{my_arch}' — parameter layouts differ across \
+                     architectures; match the checkpoint's --policy.* spec \
+                     or retrain"
+                );
+            }
+            anyhow::bail!(
+                "checkpoint is for '{}', trainer is '{}'",
+                ck.spec_key,
+                self.spec_key
+            );
+        }
+        anyhow::ensure!(
+            ck.params.len() == self.policy.spec().n_params,
+            "checkpoint '{}' has {} params, this backend expects {} — was it \
+             written by a backend with a different architecture (e.g. a \
+             recurrent pjrt spec vs the feedforward native spec)?",
+            ck.spec_key,
+            ck.params.len(),
+            self.policy.spec().n_params
+        );
+        anyhow::ensure!(
+            ck.adam_m.len() == ck.params.len() && ck.adam_v.len() == ck.params.len(),
+            "checkpoint optimizer state length does not match its params"
+        );
+        *self.policy.params_mut() = ck.params.clone();
+        self.opt.m = ck.adam_m.clone();
+        self.opt.v = ck.adam_v.clone();
+        self.opt.step = ck.adam_step;
+        self.global_step = ck.global_step;
+        // This trainer now continues an earlier run: metrics must append
+        // to that run's history, not truncate it (no-op if rows were
+        // already written this session — the file is simply kept open).
+        self.metrics.append = true;
+        Ok(())
+    }
+}
+
+/// Per-run wall-clock accounting (both trainer paths).
+#[derive(Default)]
+struct Telemetry {
+    /// Collection time: env stepping + rollout inference.
+    env_active_s: f64,
+    /// Learning time: GAE + PPO epochs.
+    learn_s: f64,
+    collector_stall_s: f64,
+    learner_stall_s: f64,
+    /// Worst published-updates lag of any consumed segment's snapshot.
+    max_staleness: u64,
+}
+
+fn rate(steps: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        0.0
+    } else {
+        steps as f64 / secs
+    }
+}
+
+/// Annealed learning rate at `global_step` (the pre-pipeline formula,
+/// evaluated after the segment's steps are added).
+fn anneal_lr(cfg: &TrainConfig, global_step: u64, total_steps: u64) -> f32 {
+    if cfg.anneal_lr {
+        let frac = 1.0 - global_step as f32 / total_steps as f32;
+        cfg.lr * frac.max(0.05)
+    } else {
+        cfg.lr
+    }
+}
+
+/// Learner half shared by both paths: GAE over the full segment, then
+/// `epochs × minibatches` PPO updates. With `minibatches == 1` the full
+/// buffers are passed straight through (no shuffle, no gather) — the
+/// bit-identical pre-pipeline path; otherwise agent rows are shuffled
+/// each epoch and gathered into dense row-subset views
+/// ([`TrainBatch::gather_rows`]).
+#[allow(clippy::too_many_arguments)]
+fn learn_on_segment(
+    backend: &mut dyn PolicyBackend,
+    params: &mut Vec<f32>,
+    opt: &mut AdamState,
+    cfg: &TrainConfig,
+    shuffle_rng: &mut Rng,
+    scratch: &mut MinibatchScratch,
+    buf: &RolloutBuffer,
+    lr: f32,
+) -> Result<[f32; 5]> {
+    let (adv, ret) = backend.gae(&buf.rewards, &buf.values, &buf.dones, &buf.last_values)?;
+    let full = TrainBatch {
+        t: buf.horizon,
+        r: buf.rows,
+        norm_adv: cfg.norm_adv,
+        obs: &buf.obs,
+        starts: &buf.starts,
+        actions: &buf.actions,
+        logp: &buf.logp,
+        adv: &adv,
+        ret: &ret,
+    };
+    let mut metrics = [0.0f32; 5];
+    if cfg.minibatches <= 1 {
+        for _ in 0..cfg.epochs {
+            metrics = backend.train_step(params, opt, lr, cfg.ent_coef, &full)?;
+        }
+    } else {
+        let mb_rows = buf.rows / cfg.minibatches;
+        let mut perm: Vec<usize> = (0..buf.rows).collect();
+        for _ in 0..cfg.epochs {
+            shuffle_rng.shuffle(&mut perm);
+            for rows in perm.chunks_exact(mb_rows) {
+                let mb = full.gather_rows(rows, scratch);
+                metrics = backend.train_step(params, opt, lr, cfg.ent_coef, &mb)?;
+            }
+        }
+    }
+    Ok(metrics)
+}
+
+/// Console + CSV metric emission, once per segment.
+#[allow(clippy::too_many_arguments)]
+fn log_segment(
+    cfg: &TrainConfig,
+    sink: &mut MetricsSink,
+    heartbeat: &mut Option<crate::runs::HeartbeatWriter>,
+    global_step: u64,
+    window_sps: f64,
+    total_steps_done: u64,
+    log: &EpisodeLog,
+    metrics: &[f32; 5],
+    segment: u64,
+    tel: &Telemetry,
+) -> Result<()> {
+    let env_sps = rate(total_steps_done, tel.env_active_s);
+    let learn_sps = rate(total_steps_done, tel.learn_s);
+    let stall_s = tel.collector_stall_s + tel.learner_stall_s;
+    if let Some(hb) = heartbeat.as_mut() {
+        hb.beat(global_step, env_sps, learn_sps, stall_s, log.mean_score(100))?;
+    }
+    if cfg.log_every > 0 && segment % cfg.log_every as u64 == 0 {
+        println!(
+            "[{}] step {:>8}  sps {:>8.0}  env {:>8.0}  learn {:>8.0}  stall {:>6.2}s  score {:>6}  return {:>8}  loss {:>8.4}  kl {:>7.4}",
+            cfg.env,
+            global_step,
+            window_sps,
+            env_sps,
+            learn_sps,
+            stall_s,
+            fmt_opt(log.mean_score(100)),
+            fmt_opt(log.mean_return(100)),
+            metrics[0],
+            metrics[4],
+        );
+    }
+    if let Some(f) = sink.file()? {
+        writeln!(
+            f,
+            "{},{:.0},{},{},{},{},{},{},{},{},{:.0},{:.0},{:.3}",
+            global_step,
+            window_sps,
+            fmt_opt(log.mean_score(100)),
+            fmt_opt(log.mean_return(100)),
+            fmt_opt(log.mean_length(100)),
+            metrics[0],
+            metrics[1],
+            metrics[2],
+            metrics[3],
+            metrics[4],
+            env_sps,
+            learn_sps,
+            stall_s,
+        )?;
+    }
+    Ok(())
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.3}"),
+        None => "-".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wrappers::WrapperSpec;
+
+    #[test]
+    fn trainer_sizes_backend_from_wrapped_spec() {
+        let bare = crate::envs::make("ocean/squared", 0);
+        let bare_dim = bare.obs_layout().flat_len();
+        drop(bare);
+        let cfg = TrainConfig {
+            env: "ocean/squared".into(),
+            wrappers: vec![WrapperSpec::ClipReward(1.0), WrapperSpec::Stack(4)],
+            total_steps: 0, // construct only
+            log_every: 0,
+            ..Default::default()
+        };
+        let t = Trainer::native(cfg).unwrap();
+        assert_eq!(t.policy().spec().obs_dim, 4 * bare_dim);
+        // The chain is part of the checkpoint key: a differently-wrapped
+        // run can never silently restore these params.
+        assert!(t.spec_key.contains("stack=4"), "{}", t.spec_key);
+    }
+
+    #[test]
+    fn native_trainer_constructs_for_every_ocean_env() {
+        for env in crate::envs::OCEAN_ENVS {
+            let cfg = TrainConfig {
+                env: env.to_string(),
+                total_steps: 0, // construct only
+                log_every: 0,
+                ..Default::default()
+            };
+            // Every env constructs with its default architecture —
+            // recurrent reference specs get the LSTM sandwich and train
+            // natively (no more pjrt-only caveat).
+            let t = Trainer::native(cfg).unwrap_or_else(|e| panic!("{env}: {e}"));
+            assert_eq!(t.policy().params().len(), t.policy().spec().n_params);
+            assert_eq!(
+                t.policy().spec().lstm,
+                crate::backend::native::requires_recurrence(env),
+                "{env}: default recurrence"
+            );
+        }
+        // Forcing feedforward on a memory env stays a hard error naming
+        // the --policy.lstm fix.
+        let err = Trainer::native(TrainConfig {
+            env: "ocean/memory".into(),
+            policy: Some(PolicySpec::default()),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        })
+        .err()
+        .expect("feedforward memory must not construct")
+        .to_string();
+        assert!(err.contains("--policy.lstm"), "{err}");
+    }
+
+    #[test]
+    fn explicit_vec_spec_drives_the_vectorizer() {
+        // A declarative VecSpec overrides the legacy num_workers/pool
+        // knobs entirely.
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            num_workers: 4, // ignored: vec wins
+            vec: Some(VecSpec::Serial),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let t = Trainer::native(cfg).unwrap();
+        assert_eq!(t.venv.batch_size(), t.venv.num_envs());
+        // A pooled spec halves the recv batch (batch_fwd rows).
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            vec: Some(VecSpec::pooled(2)),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let t = Trainer::native(cfg).unwrap();
+        assert_eq!(t.venv.batch_rows(), t.policy.spec().batch_fwd);
+        // A batch size the compiled forward cannot take is a
+        // construction error naming vec.batch.
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            vec: Some(VecSpec::Mt {
+                workers: 8,
+                batch: crate::vector::VecBatch::Envs(8),
+                zero_copy: false,
+                spin_budget: 64,
+            }),
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let err = Trainer::native(cfg).unwrap_err().to_string();
+        assert!(err.contains("vec.batch"), "{err}");
+    }
+
+    #[test]
+    fn minibatches_must_divide_batch_roll() {
+        let cfg = TrainConfig {
+            env: "ocean/bandit".into(),
+            minibatches: 5, // batch_roll is 32
+            total_steps: 0,
+            log_every: 0,
+            ..Default::default()
+        };
+        let err = Trainer::native(cfg).unwrap_err().to_string();
+        assert!(err.contains("minibatches"), "{err}");
+    }
+
+    #[test]
+    fn anneal_matches_pre_pipeline_formula() {
+        let cfg = TrainConfig {
+            lr: 1.0,
+            anneal_lr: true,
+            ..Default::default()
+        };
+        assert!((anneal_lr(&cfg, 250, 1000) - 0.75).abs() < 1e-6);
+        // Floors at 5%.
+        assert!((anneal_lr(&cfg, 1000, 1000) - 0.05).abs() < 1e-6);
+        let no = TrainConfig {
+            lr: 0.3,
+            anneal_lr: false,
+            ..Default::default()
+        };
+        assert_eq!(anneal_lr(&no, 900, 1000), 0.3);
+    }
+}

@@ -1,0 +1,312 @@
+//! Exhaustive model checking of every cross-thread protocol in the
+//! crate, using [loom](https://docs.rs/loom). Compiled only under
+//! `RUSTFLAGS="--cfg loom"` (`make loom` / the CI loom lane), where the
+//! `pufferlib::sync` facade swaps std primitives for loom's instrumented
+//! doubles and each `loom::model` closure is re-run under **every**
+//! reachable interleaving (bounded by `LOOM_MAX_PREEMPTIONS`).
+//!
+//! Each model drives the *real* production primitive — [`Flag`],
+//! [`ParamSnapshot`], [`sync::queue`], [`RolloutBuffer`] — with inline
+//! leader/worker drivers that mirror the call sequences in
+//! `vector/multiproc.rs` and `train/{pipeline,trainer}.rs`. The map from
+//! model to protocol is documented per test and in `CONCURRENCY.md`.
+//!
+//! Models use a spin budget of 1 so every busy-wait iteration is a loom
+//! scheduling point (`Flag::wait` yields through the facade).
+
+#![cfg(loom)]
+
+use pufferlib::policy::ParamSnapshot;
+use pufferlib::sync::atomic::{AtomicU64, Ordering};
+use pufferlib::sync::{queue, Arc};
+use pufferlib::train::RolloutBuffer;
+use pufferlib::vector::shared::{Flag, ACTIONS_READY, OBS_READY, RESET, SHUTDOWN};
+
+use loom::thread;
+
+/// The slab-ownership handoff (`vector/shared.rs` module docs): leader
+/// and worker alternate over one worker's region, mediated solely by the
+/// flag's Release/Acquire edges. The regions are modeled as
+/// [`loom::cell::UnsafeCell`]s, whose access tracking makes loom itself
+/// fail the model if any interleaving lets both sides hold a window into
+/// the same region at once — i.e. if `Slab::slice_mut` could ever hand
+/// out overlapping `&mut` windows under this protocol.
+#[test]
+fn slab_handoff_yields_exclusive_windows() {
+    loom::model(|| {
+        let flag = Arc::new(Flag::new());
+        // One worker's action region and obs region.
+        let actions = Arc::new(loom::cell::UnsafeCell::new(0u32));
+        let obs = Arc::new(loom::cell::UnsafeCell::new(0u32));
+
+        let worker = {
+            let (flag, actions, obs) = (flag.clone(), actions.clone(), obs.clone());
+            thread::spawn(move || {
+                // worker_loop's step arm: Acquire the actions, write the
+                // results, publish via the completion CAS.
+                let s = flag.wait(1, |s| s == ACTIONS_READY || s == SHUTDOWN);
+                if s == SHUTDOWN {
+                    return;
+                }
+                // SAFETY: loom's UnsafeCell tracks these accesses and
+                // fails the model itself on any concurrent overlap —
+                // exactly the property being checked.
+                let a = actions.with(|p| unsafe { *p });
+                // SAFETY: as above; exclusivity is loom-checked.
+                obs.with_mut(|p| unsafe { *p = a * 2 });
+                assert!(flag.complete(ACTIONS_READY), "no shutdown in this model");
+            })
+        };
+
+        // Leader: write actions, hand the region over, await results.
+        // SAFETY: loom-checked access, as in the worker above.
+        actions.with_mut(|p| unsafe { *p = 21 });
+        flag.store(ACTIONS_READY);
+        flag.wait(1, |s| s == OBS_READY);
+        // SAFETY: loom-checked access, as in the worker above.
+        assert_eq!(obs.with(|p| unsafe { *p }), 42, "obs write must be visible");
+
+        worker.join().unwrap();
+    });
+}
+
+/// Pins defect #1 (`Flag::complete`): the leader may store SHUTDOWN
+/// while the worker is mid-step. The worker's completion edge is a CAS,
+/// so it *loses* that race detectably and exits; a blind
+/// `store(OBS_READY)` would erase the shutdown signal and strand the
+/// worker in its next wait — which loom reports as a livelock (every
+/// remaining thread yielding) if you re-introduce it.
+#[test]
+fn shutdown_is_never_lost() {
+    loom::model(|| {
+        let flag = Arc::new(Flag::new());
+        flag.store(ACTIONS_READY);
+
+        let worker = {
+            let flag = flag.clone();
+            thread::spawn(move || {
+                // worker_loop, compressed: one step arm, then back to wait.
+                loop {
+                    let s = flag.wait(1, |s| s == ACTIONS_READY || s == SHUTDOWN);
+                    if s == SHUTDOWN {
+                        return;
+                    }
+                    // (env stepping happens here)
+                    if !flag.complete(ACTIONS_READY) {
+                        // Preempted by SHUTDOWN mid-step: honor it.
+                        assert_eq!(flag.load(), SHUTDOWN);
+                        return;
+                    }
+                }
+            })
+        };
+
+        // Drop-path leader: shutdown racing the worker's step.
+        flag.store(SHUTDOWN);
+        // The worker always terminates (join returns under every
+        // interleaving) and the signal itself is never erased below.
+        worker.join().unwrap();
+        assert_eq!(flag.load(), SHUTDOWN, "shutdown signal survives the race");
+    });
+}
+
+/// The learner→collector parameter handoff (`policy/snapshot.rs`):
+/// params encode their version, so any torn read (a mix of two
+/// publishes) or version regression fails the assertions under some
+/// interleaving.
+#[test]
+fn snapshot_is_never_torn_and_versions_are_monotone() {
+    loom::model(|| {
+        let snap = Arc::new(ParamSnapshot::new(vec![0.0; 4]));
+
+        let learner = {
+            let snap = snap.clone();
+            thread::spawn(move || {
+                for v in 1..=2u64 {
+                    assert_eq!(snap.publish(&[v as f32; 4]), v);
+                }
+            })
+        };
+
+        // Collector: acquire twice (start of two segments).
+        let mut last = 0u64;
+        for _ in 0..2 {
+            let (v, p) = snap.acquire();
+            assert!(p.iter().all(|&x| x == v as f32), "torn snapshot at v{v}");
+            assert!(v >= last, "version went backwards: {v} < {last}");
+            last = v;
+        }
+
+        learner.join().unwrap();
+        assert_eq!(snap.version(), 2);
+    });
+}
+
+/// The pipelined trainer's buffer rotation (`train/pipeline.rs` +
+/// `train/trainer.rs`): free and filled queues rotate `RolloutBuffer`s
+/// between learner and collector, and the episode carry written by one
+/// side is exactly what the other reads back — never lost or crossed
+/// between the two rotating buffers.
+#[test]
+fn rotation_preserves_carry_across_the_handover() {
+    loom::model(|| {
+        let (free_tx, free_rx) = queue::channel::<RolloutBuffer>(None);
+        let (filled_tx, filled_rx) = queue::channel::<RolloutBuffer>(Some(2));
+
+        let collector = thread::spawn(move || {
+            // collector_loop, compressed: recv a free buffer, thread the
+            // carry in, "collect" (flip the carry), send it filled.
+            let mut carry = vec![true];
+            for _ in 0..2 {
+                let Some(mut buf) = free_rx.recv() else { return };
+                buf.set_episode_carry(&carry);
+                carry[0] = !carry[0];
+                if filled_tx.send(buf).is_err() {
+                    return;
+                }
+            }
+        });
+
+        // Learner: lend depth+1 = 2 buffers, then consume both segments.
+        for _ in 0..2 {
+            assert!(free_tx.send(RolloutBuffer::new(1, 1, 1, 1)).is_ok());
+        }
+        let a = filled_rx.recv().expect("collector delivers segment 1");
+        let b = filled_rx.recv().expect("collector delivers segment 2");
+        assert_eq!(a.episode_carry(), &[true], "segment 1 carries the hard reset");
+        assert_eq!(b.episode_carry(), &[false], "segment 2 carries segment 1's end state");
+
+        collector.join().unwrap();
+    });
+}
+
+/// Rotation hangup: when the learner exits (success or error) it drops
+/// both endpoints; a collector blocked on either queue must wake and
+/// return instead of deadlocking the scope join — the exit protocol of
+/// `Trainer::train_pipelined`'s scoped threads.
+#[test]
+fn rotation_hangup_always_unblocks_the_collector() {
+    loom::model(|| {
+        let (free_tx, free_rx) = queue::channel::<u32>(None);
+        let (filled_tx, filled_rx) = queue::channel::<u32>(Some(1));
+
+        let collector = thread::spawn(move || {
+            // Fill the filled queue, then block on the next free recv
+            // (or on a full filled send) until the learner hangs up.
+            loop {
+                let Some(x) = free_rx.recv() else { return };
+                if filled_tx.send(x).is_err() {
+                    return;
+                }
+            }
+        });
+
+        assert!(free_tx.send(1).is_ok());
+        assert!(free_tx.send(2).is_ok());
+        // Learner exits mid-run: drop both endpoints in scope-exit order.
+        drop(free_tx);
+        drop(filled_rx);
+        // The collector must terminate under every interleaving: recv
+        // returns None once the queue drains, send errors once the
+        // receiver is gone.
+        collector.join().unwrap();
+    });
+}
+
+/// Pins defect #2 (`Multiprocessing::async_reset`): the two-phase reset
+/// (quiesce every flag, *then* publish the seed and store RESET) means a
+/// worker processing RESET always reads the seed of the reset that woke
+/// it. The pre-fix ordering (seed stored before quiescing) let a worker
+/// mid-RESET read the *next* reset's seed — here that shows up as the
+/// worker recording `[b, b]` instead of `[a, b]`.
+#[test]
+fn reset_seed_matches_epoch() {
+    loom::model(|| {
+        let flag = Arc::new(Flag::new());
+        let seed = Arc::new(AtomicU64::new(0));
+
+        let worker = {
+            let (flag, seed) = (flag.clone(), seed.clone());
+            thread::spawn(move || {
+                // worker_loop's RESET arm, recording each observed seed.
+                let mut seen = Vec::new();
+                loop {
+                    let s = flag.wait(1, |s| s == RESET || s == SHUTDOWN);
+                    if s == SHUTDOWN {
+                        return seen;
+                    }
+                    // ordering: Relaxed — publication rides the RESET
+                    // flag edge, as in vector/multiproc.rs.
+                    seen.push(seed.load(Ordering::Relaxed));
+                    if !flag.complete(RESET) {
+                        return seen;
+                    }
+                }
+            })
+        };
+
+        // Leader: two back-to-back async_resets (the double-reset that
+        // motivated the fix), mimicking the two-phase protocol.
+        for s in [7u64, 9u64] {
+            // Phase 1: quiesce — no worker may still be consuming an
+            // in-flight reset (or step) when the seed changes.
+            flag.wait(1, |st| st != RESET && st != ACTIONS_READY);
+            // Phase 2: publish the seed, then wake the worker into RESET.
+            seed.store(s, Ordering::Relaxed);
+            flag.store(RESET);
+        }
+        flag.wait(1, |st| st == OBS_READY);
+        flag.store(SHUTDOWN);
+
+        let seen = worker.join().unwrap();
+        assert_eq!(seen, vec![7, 9], "each RESET observes its own epoch's seed");
+    });
+}
+
+/// The serve batcher's close/drain protocol (`serve/batcher.rs`,
+/// `serve/server.rs` module docs): connection readers and the accept
+/// loop drop their `Sender<Job>` clones at shutdown, and the shard —
+/// looping [`collect_batch`](pufferlib::serve::batcher::collect_batch)
+/// — must hand every request sent before the close to a forward pass,
+/// then observe `None` and exit. The model replaces the `Instant`
+/// deadline with a bounded poll counter (the closure is the real
+/// production seam: `expired()` is injected precisely so loom can drive
+/// it), and checks that no interleaving of producer sends, sender
+/// drops, and batch cuts can strand or duplicate a request.
+#[test]
+fn serve_batcher_drains_every_request_on_close() {
+    use pufferlib::serve::batcher::collect_batch;
+    loom::model(|| {
+        let (tx, rx) = queue::channel::<u32>(None);
+        let producers: Vec<_> = [1u32, 2u32]
+            .into_iter()
+            .map(|v| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    tx.send(v).expect("receiver outlives the producers");
+                })
+            })
+            .collect();
+        drop(tx); // the accept loop's clones go away with it
+
+        // Shard loop: collect until the queue reports closed + drained.
+        let mut got = Vec::new();
+        loop {
+            let mut polls = 0u32;
+            let expired = move || {
+                polls += 1;
+                polls >= 2 // bounded budget so every branch terminates
+            };
+            let Some(batch) = collect_batch(&rx, 2, expired) else {
+                break;
+            };
+            got.extend(batch);
+        }
+
+        for p in producers {
+            p.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "every pre-close request reaches a batch exactly once");
+    });
+}

@@ -1,0 +1,328 @@
+//! RunSpec integration suite: the declarative experiment currency
+//! end-to-end — file parsing + validation over the shipped
+//! `examples/specs/` gallery, TOML/JSON round trips, root-seed
+//! reproducibility (bit-identical first segments), checkpoint → resume
+//! with zero flags, and sweep-grid execution with per-child isolation.
+
+use pufferlib::runspec::{run_sweep, RunSpec, RunSpecExt as _};
+use pufferlib::train::Checkpoint;
+use pufferlib::vector::VecSpec;
+use pufferlib::wrappers::EnvSpec;
+use std::path::PathBuf;
+
+const SPECS_DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs");
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("puffer_run_spec_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A fast, fully deterministic base spec (serial vectorizer, one
+/// segment = 1024 steps).
+fn bandit_spec(run_dir: &std::path::Path) -> RunSpec {
+    RunSpec::new(EnvSpec::new("ocean/bandit"))
+        .with_vec(VecSpec::Serial)
+        .with_seed(11)
+        .with_train(|t| {
+            t.total_steps = 1; // rounds up to exactly one segment
+            t.log_every = 0;
+            t.run_dir = Some(run_dir.to_string_lossy().into_owned());
+        })
+}
+
+#[test]
+fn example_spec_gallery_parses_validates_and_round_trips() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir(SPECS_DIR).expect("examples/specs exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        seen += 1;
+        let spec = RunSpec::load(&path).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        spec.validate().unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        // Serialize → parse → identical spec (and identical text, since
+        // to_toml is canonical).
+        let toml = spec.to_toml().unwrap();
+        let back = RunSpec::from_toml_str(&toml).unwrap();
+        assert_eq!(back, spec, "{path:?} does not round-trip");
+        assert_eq!(back.to_toml().unwrap(), toml);
+        let json = spec.to_json().dump();
+        assert_eq!(RunSpec::from_json_str(&json).unwrap(), spec);
+    }
+    // The gallery covers every env family plus a recurrent and a swept
+    // spec.
+    assert!(seen >= 5, "expected a spec gallery, found {seen} files");
+    let names: Vec<String> = std::fs::read_dir(SPECS_DIR)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    for family in ["ocean", "classic", "profile", "sweep"] {
+        assert!(
+            names.iter().any(|n| n.starts_with(family)),
+            "gallery is missing a {family} spec: {names:?}"
+        );
+    }
+}
+
+#[test]
+fn identical_run_specs_produce_bit_identical_first_segments() {
+    let run = |seed: u64, tag: &str| {
+        let dir = temp_dir(&format!("seed_split_{tag}"));
+        let spec = bandit_spec(&dir).with_seed(seed);
+        let mut trainer = spec.build().unwrap();
+        trainer.train().unwrap();
+        trainer.checkpoint()
+    };
+    let a = run(11, "a");
+    let b = run(11, "b");
+    assert_eq!(a.params, b.params, "identical RunSpecs must train identically");
+    assert_eq!(a.adam_m, b.adam_m);
+    assert_eq!(a.adam_v, b.adam_v);
+    assert_eq!(a.global_step, b.global_step);
+    // A different root seed changes the derived streams (env resets,
+    // sampling) and therefore the trajectory.
+    let c = run(12, "c");
+    assert_ne!(a.params, c.params, "the root seed must matter");
+}
+
+#[test]
+fn checkpoint_embeds_the_spec_and_resume_continues_training() {
+    let dir = temp_dir("resume");
+    let spec = bandit_spec(&dir);
+
+    // Phase 1: train one segment; train() drops a checkpoint in run_dir.
+    let mut first = spec.build().unwrap();
+    let report1 = first.train().unwrap();
+    assert!(report1.global_step >= 1);
+    drop(first);
+    let ck_path = dir.join("checkpoint.bin");
+    let ck = Checkpoint::load(&ck_path).unwrap();
+
+    // The checkpoint reproduces the original spec exactly — same value,
+    // same re-serialized TOML.
+    let embedded = RunSpec::from_json_str(ck.run_spec_json.as_deref().expect("spec embedded")).unwrap();
+    assert_eq!(embedded, spec);
+    assert_eq!(embedded.to_toml().unwrap(), spec.to_toml().unwrap());
+
+    // Zero-flag resume: rebuild from the embedded spec alone, restore,
+    // and train — the budget is already met, so state is preserved
+    // as-is.
+    let mut resumed = embedded.build().unwrap();
+    resumed.restore(&ck).unwrap();
+    assert_eq!(resumed.global_step(), ck.global_step);
+
+    // Extending the budget (puffer resume --train.total_steps=N)
+    // continues training from the restored state — and appends to the
+    // original run's metrics history instead of truncating it.
+    let lines_before = std::fs::read_to_string(dir.join("metrics.csv"))
+        .unwrap()
+        .lines()
+        .count();
+    let extended = embedded
+        .clone()
+        .with_train(|t| t.total_steps = ck.global_step * 2);
+    let mut more = extended.build().unwrap();
+    more.restore(&ck).unwrap();
+    let report2 = more.train().unwrap();
+    assert_eq!(report2.global_step, ck.global_step * 2);
+    assert_ne!(
+        more.checkpoint().params,
+        ck.params,
+        "continued training must update parameters"
+    );
+    let csv = std::fs::read_to_string(dir.join("metrics.csv")).unwrap();
+    assert!(csv.starts_with("global_step,"), "header written once");
+    assert!(
+        csv.lines().count() > lines_before,
+        "resume must append to metrics.csv, not truncate the run's history"
+    );
+}
+
+#[test]
+fn cross_spec_restores_keep_their_actionable_rejections() {
+    let dir = temp_dir("cross_restore");
+    let spec = bandit_spec(&dir);
+    let mut trainer = spec.build().unwrap();
+    trainer.train().unwrap();
+    let ck = trainer.checkpoint();
+    drop(trainer);
+
+    // A differently-wrapped env must refuse the checkpoint.
+    let wrapped = RunSpec::new(EnvSpec::new("ocean/bandit").stack(2))
+        .with_vec(VecSpec::Serial)
+        .with_train(|t| {
+            t.total_steps = 0;
+            t.log_every = 0;
+        });
+    let err = wrapped.build().unwrap().restore(&ck).unwrap_err().to_string();
+    assert!(err.contains("checkpoint is for"), "{err}");
+
+    // A different architecture names both archs in the rejection.
+    let rearched = RunSpec::new(EnvSpec::new("ocean/bandit"))
+        .with_vec(VecSpec::Serial)
+        .with_policy(pufferlib::policy::PolicySpec::default().with_hidden(64))
+        .with_train(|t| {
+            t.total_steps = 0;
+            t.log_every = 0;
+        });
+    let err = rearched.build().unwrap().restore(&ck).unwrap_err().to_string();
+    assert!(err.contains("architecture"), "{err}");
+}
+
+#[test]
+fn the_memory_example_spec_runs_and_resumes_recurrently() {
+    // The acceptance-path spec: recurrent arch from the shipped gallery
+    // file, budget shrunk to one segment for test speed.
+    let dir = temp_dir("memory_example");
+    let path = format!("{SPECS_DIR}/ocean_memory.toml");
+    let spec = RunSpec::load(&path)
+        .unwrap()
+        .with_train(|t| {
+            t.total_steps = 1;
+            t.log_every = 0;
+            t.run_dir = Some(dir.to_string_lossy().into_owned());
+        });
+    assert!(
+        spec.policy.as_ref().expect("gallery spec pins the arch").is_recurrent(),
+        "ocean_memory.toml must exercise the recurrent sandwich"
+    );
+    let mut trainer = spec.build().unwrap();
+    trainer.train().unwrap();
+    drop(trainer);
+    let ck = Checkpoint::load(dir.join("checkpoint.bin")).unwrap();
+    let embedded = RunSpec::from_json_str(ck.run_spec_json.as_deref().unwrap()).unwrap();
+    assert_eq!(embedded, spec);
+    let mut resumed = embedded.build().unwrap();
+    resumed.restore(&ck).unwrap();
+    assert_eq!(resumed.global_step(), ck.global_step);
+}
+
+#[test]
+fn sweep_grid_trains_isolated_children() {
+    let dir = temp_dir("sweep");
+    let mut spec = bandit_spec(&dir);
+    spec.grid
+        .insert("train.lr".into(), vec!["0.002".into(), "0.003".into()]);
+    spec.grid.insert("seed".into(), vec!["1".into(), "2".into()]);
+
+    let children = spec.expand_grid().unwrap();
+    let mut done_order = Vec::new();
+    let outcomes = run_sweep(&children, 2, |i, _| done_order.push(i)).unwrap();
+    assert_eq!(outcomes.len(), 4);
+    assert_eq!(done_order.len(), 4);
+    for (child, outcome) in children.iter().zip(&outcomes) {
+        let report = outcome.report.as_ref().unwrap_or_else(|e| panic!("{}: {e:#}", outcome.label));
+        assert!(report.global_step >= 1);
+        // Per-child metrics directory with its own metrics + checkpoint.
+        let child_dir = PathBuf::from(child.train.run_dir.as_ref().unwrap());
+        assert!(child_dir.join("metrics.csv").is_file(), "{child_dir:?}");
+        let ck = Checkpoint::load(child_dir.join("checkpoint.bin")).unwrap();
+        // Each child's checkpoint embeds the *child* spec (grid applied,
+        // no grid section left).
+        let embedded = RunSpec::from_json_str(ck.run_spec_json.as_deref().unwrap()).unwrap();
+        assert_eq!(&embedded, child);
+        assert!(embedded.grid.is_empty());
+    }
+    // The four children trained four distinct (lr, seed) points.
+    let points: std::collections::BTreeSet<(String, u64)> = children
+        .iter()
+        .map(|c| (format!("{}", c.train.lr), c.seed))
+        .collect();
+    assert_eq!(points.len(), 4);
+}
+
+#[test]
+fn auto_vec_consumes_the_autotune_cache_and_survives_serialization() {
+    let dir = temp_dir("auto_vec");
+    // Seed the cache with a known winner so construction is instant and
+    // deterministic (what `puffer autotune` writes).
+    let env = EnvSpec::new("ocean/bandit");
+    let num_envs = 32; // batch_roll 32 / 1 agent
+    pufferlib::vector::autotune::write_cache(
+        &pufferlib::vector::autotune::cache_path(Some(dir.to_str().unwrap())),
+        &env.key(),
+        num_envs,
+        &VecSpec::Serial,
+    )
+    .unwrap();
+
+    let spec = bandit_spec(&dir).with_vec(VecSpec::Auto);
+    // `auto` survives the round trip un-resolved: the spec stays
+    // declarative, the cache holds the binding.
+    let toml = spec.to_toml().unwrap();
+    assert!(toml.contains("\"auto\""), "{toml}");
+    assert_eq!(RunSpec::from_toml_str(&toml).unwrap(), spec);
+
+    let mut trainer = spec.build().unwrap();
+    assert_eq!(trainer.run_spec().unwrap().vec, VecSpec::Auto);
+    trainer.train().unwrap();
+    drop(trainer);
+    // The checkpoint embeds the auto spec, so a resume re-resolves from
+    // the same cache.
+    let ck = Checkpoint::load(dir.join("checkpoint.bin")).unwrap();
+    let embedded = RunSpec::from_json_str(ck.run_spec_json.as_deref().unwrap()).unwrap();
+    assert_eq!(embedded.vec, VecSpec::Auto);
+}
+
+#[test]
+fn file_errors_name_the_file_and_the_key() {
+    let dir = temp_dir("bad_files");
+    let path = dir.join("bad.toml");
+    std::fs::write(&path, "[train]\ntotl_steps = 5\n").unwrap();
+    let err = format!("{:#}", RunSpec::load(&path).unwrap_err());
+    assert!(err.contains("bad.toml"), "{err}");
+    assert!(err.contains("train.totl_steps"), "{err}");
+
+    std::fs::write(&path, "[env]\nname = \"ocean/bandit\"\n[vec]\nmode = \"warp\"\n").unwrap();
+    let err = format!("{:#}", RunSpec::load(&path).unwrap_err());
+    assert!(err.contains("vec.mode"), "{err}");
+}
+
+/// Every gallery spec's resolved architecture must expose a parameter
+/// layout whose named leaves tile `0..n_params` exactly — the
+/// `ArchRanges` contract `ParamView::split` and `n_params` both build
+/// on. Rebuilding through `ServedModel::backend_for` exercises the same
+/// construction path training and serving share.
+#[test]
+fn gallery_arch_ranges_tile_n_params_exactly() {
+    use pufferlib::backend::PolicyBackend;
+    use pufferlib::serve::ServedModel;
+    let mut seen = 0;
+    for entry in std::fs::read_dir(SPECS_DIR).expect("examples/specs exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        seen += 1;
+        let spec = RunSpec::load(&path).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let backend = ServedModel::backend_for(&spec).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let arch = backend.arch();
+        let ranges = arch.ranges();
+        let leaves = ranges.leaves();
+        let mut off = 0usize;
+        for (name, range) in &leaves {
+            assert_eq!(
+                range.start, off,
+                "{path:?}: leaf {name} starts at {} but previous leaf ended at {off}",
+                range.start
+            );
+            assert!(range.end > range.start, "{path:?}: leaf {name} is empty");
+            off = range.end;
+        }
+        assert_eq!(off, ranges.total, "{path:?}: leaves must cover the whole vector");
+        assert_eq!(
+            ranges.total,
+            arch.n_params(),
+            "{path:?}: ranges total and n_params disagree"
+        );
+        assert_eq!(
+            ranges.total,
+            backend.spec().n_params,
+            "{path:?}: manifest n_params and ArchRanges disagree"
+        );
+    }
+    assert!(seen >= 5, "expected a spec gallery, found {seen} files");
+}

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Real Python-driven vectorization benchmark: puffer-py vs Gymnasium.
+
+This replaces the *simulated* Gymnasium/SB3 comparators in
+``crates/puffer-core/src/vector/baselines`` with actual measurements:
+the same CartPole workload stepped through (a) the Rust vectorizer via
+the zero-copy ``pufferlib.emulate`` adapter, (b) the raw native handle
+(adapter overhead isolated), and (c) ``gymnasium.vector.SyncVectorEnv``
+over the pure-Python ``CartPole-v1``.
+
+Steps/s counts env-steps (``num_envs`` per ``step()`` call). Writes
+machine-readable results to ``$PUFFER_BENCH_JSON`` when set — ``make
+bench-py`` sets it to ``BENCH_pybind.json``, matching the Rust bench
+convention.
+
+    python examples/python/bench_vec.py --num-envs 32 --steps 2000
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import pufferlib
+
+
+def bench_adapter(env_name, num_envs, steps, **kwargs):
+    envs = pufferlib.emulate(env_name, num_envs=num_envs, **kwargs)
+    actions = np.zeros(num_envs, dtype=np.int32)
+    envs.reset(seed=0)
+    envs.step(actions)  # warm the view cache
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        envs.step(actions)
+    elapsed = time.perf_counter() - t0
+    envs.close()
+    return num_envs * steps / elapsed
+
+
+def bench_raw(env_name, num_envs, steps):
+    v = pufferlib.raw_vecenv(env_name, num_envs)
+    slots = len(v.action_dims())
+    actions = [0] * (num_envs * slots)
+    v.async_reset(0)
+    rows, *_ = v.recv()
+    v.send(actions)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        v.recv()
+        v.send(actions)
+    elapsed = time.perf_counter() - t0
+    v.close()
+    return num_envs * steps / elapsed
+
+
+def bench_gymnasium(num_envs, steps):
+    try:
+        import gymnasium
+    except ImportError:
+        return None
+    envs = gymnasium.vector.SyncVectorEnv(
+        [lambda: gymnasium.make("CartPole-v1") for _ in range(num_envs)]
+    )
+    actions = np.zeros(num_envs, dtype=np.int64)
+    envs.reset(seed=0)
+    envs.step(actions)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        envs.step(actions)
+    elapsed = time.perf_counter() - t0
+    envs.close()
+    return num_envs * steps / elapsed
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--num-envs", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=2000)
+    ap.add_argument("--workers", type=int, default=4)
+    args = ap.parse_args()
+    n, steps = args.num_envs, args.steps
+
+    rows = [
+        ("puffer/serial", "classic/cartpole",
+         bench_adapter("classic/cartpole", n, steps)),
+        ("puffer/mt", "classic/cartpole",
+         bench_adapter("classic/cartpole", n, steps, vec="mt", workers=args.workers)),
+        ("puffer/raw-serial", "classic/cartpole",
+         bench_raw("classic/cartpole", n, steps)),
+        ("gymnasium/sync", "CartPole-v1", bench_gymnasium(n, steps)),
+    ]
+
+    print(f"# pybind vectorization bench — {n} envs x {steps} steps")
+    print(f"| {'backend':<18} | {'env':<16} | {'steps/s':>12} | {'us/step':>10} |")
+    print(f"|{'-' * 20}|{'-' * 18}|{'-' * 14}|{'-' * 12}|")
+    for backend, env, sps in rows:
+        if sps is None:
+            print(f"| {backend:<18} | {env:<16} | {'-':>12} | {'-':>10} |")
+            continue
+        us = 1e6 * n / sps
+        print(f"| {backend:<18} | {env:<16} | {sps:>12.0f} | {us:>10.1f} |")
+
+    path = os.environ.get("PUFFER_BENCH_JSON")
+    if path:
+        out = {
+            "bench": "pybind_vector",
+            "method": "measured",
+            "num_envs": n,
+            "steps": steps,
+            "rows": [
+                {
+                    "backend": backend,
+                    "env": env,
+                    "sps": sps,
+                    "us_per_step_batch": None if sps is None else 1e6 * n / sps,
+                }
+                for backend, env, sps in rows
+            ],
+        }
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"\n# wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

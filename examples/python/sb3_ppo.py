@@ -1,0 +1,42 @@
+#!/usr/bin/env python3
+"""Stable-Baselines3 PPO on the Rust vectorizer — unmodified SB3.
+
+``pufferlib.sb3.make_sb3_env`` stands in for ``make_vec_env``; SB3's own
+``PPO`` class does the training. Exits cleanly with a pointer to the
+extra dependency when stable-baselines3 (or torch) is not installed, so
+the example is safe to invoke from CI on images without torch.
+
+    python examples/python/sb3_ppo.py --timesteps 8192
+"""
+
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--env", default="classic/cartpole")
+    ap.add_argument("--num-envs", type=int, default=8)
+    ap.add_argument("--timesteps", type=int, default=8192)
+    args = ap.parse_args()
+
+    try:
+        from stable_baselines3 import PPO
+    except ImportError:
+        print(
+            "stable-baselines3 not installed — skipping "
+            "(pip install 'pufferlib[sb3]' to run this example)"
+        )
+        return 0
+
+    from pufferlib.sb3 import make_sb3_env
+
+    venv = make_sb3_env(args.env, num_envs=args.num_envs)
+    model = PPO("MlpPolicy", venv, n_steps=128, batch_size=256, verbose=1)
+    model.learn(total_timesteps=args.timesteps)
+    venv.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,7 @@
 
 use pufferlib::envs;
 use pufferlib::policy::PolicySpec;
-use pufferlib::runspec::RunSpec;
+use pufferlib::runspec::{RunSpec, RunSpecExt as _};
 use pufferlib::vector::VecSpec;
 use pufferlib::wrappers::EnvSpec;
 

@@ -7,10 +7,10 @@ and the Rust tests need no Python or XLA at test time.
 
 Run from ``python/``:
 
-    python -m compile.gen_fixtures --out ../rust/tests/fixtures
+    python -m compile.gen_fixtures --out ../crates/puffer-train/tests/fixtures
 
 Regenerate whenever the model math or the flat parameter layout changes;
-``rust/tests/native_parity.rs`` consumes the output.
+``crates/puffer-train/tests/native_parity.rs`` consumes the output.
 """
 
 import argparse
@@ -36,7 +36,7 @@ def lst(x):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="../rust/tests/fixtures")
+    ap.add_argument("--out", default="../crates/puffer-train/tests/fixtures")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
 

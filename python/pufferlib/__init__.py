@@ -1,0 +1,106 @@
+"""pufferlib — Python bindings for the Rust PufferLib vectorizer.
+
+The package is a thin numpy/Gymnasium skin over the compiled extension
+module ``pufferlib._puffer`` (built by maturin from ``crates/puffer-py``;
+see the repo-root ``pyproject.toml``).  The extension hands out **raw
+slab addresses**; :mod:`pufferlib.vector` wraps them into numpy arrays
+that alias the Rust observation/reward/done buffers, so stepping never
+copies observations into Python.
+
+The one-liner::
+
+    import pufferlib
+    envs = pufferlib.emulate("ocean/squared", num_envs=256)
+    obs, infos = envs.reset(seed=0)
+    obs, rew, term, trunc, infos = envs.step(actions)
+
+returns a Gymnasium ``VectorEnv``-compatible object that unmodified
+CleanRL scripts train against; :mod:`pufferlib.sb3` adds the
+Stable-Baselines3 ``VecEnv`` shim on top.
+"""
+
+__version__ = "0.1.0"
+
+__all__ = ["emulate", "raw_vecenv", "__version__"]
+
+# Flat spec keys understood by the Rust RunSpec grammar, minus the
+# namespaced ones we build below. Kept in sync with
+# crates/puffer-core/src/config/mod.rs WRAP_KNOBS.
+_WRAP_KNOBS = (
+    "clip_reward",
+    "scale_reward",
+    "normalize_obs",
+    "stack",
+    "time_limit",
+    "action_repeat",
+)
+
+
+def _native():
+    """Import the compiled extension, with an actionable error if absent."""
+    try:
+        from . import _puffer
+    except ImportError as e:  # pragma: no cover - only without the wheel
+        raise ImportError(
+            "pufferlib._puffer is not built. Install the wheel, or build "
+            "in place with: pip install maturin && maturin develop "
+            "--features python (run from the repo root)."
+        ) from e
+    return _puffer
+
+
+def _fmt(value):
+    """Render a kwarg value in the spec's TOML-scalar spelling."""
+    if isinstance(value, bool):
+        return "true" if value else "false"
+    return str(value)
+
+
+def _flat_pairs(env_name, seed, vec, workers, batch, wrap):
+    pairs = [("env.name", str(env_name)), ("seed", _fmt(seed)), ("vec.mode", str(vec))]
+    if workers is not None:
+        pairs.append(("vec.workers", _fmt(workers)))
+    if batch is not None:
+        pairs.append(("vec.batch", _fmt(batch)))
+    for key, value in sorted(wrap.items()):
+        if key not in _WRAP_KNOBS:
+            raise TypeError(
+                f"emulate() got an unexpected wrapper kwarg {key!r} "
+                f"(known: {', '.join(_WRAP_KNOBS)})"
+            )
+        pairs.append((f"env.wrap.{key}", _fmt(value)))
+    return pairs
+
+
+def raw_vecenv(env_name, num_envs=1, *, seed=0, vec="serial", workers=None, batch=None, **wrap):
+    """Build the raw native ``_puffer.VecEnv`` (addresses, no numpy).
+
+    Most callers want :func:`emulate`; this is the escape hatch for code
+    that manages its own views (benchmarks, the SB3 shim).
+    """
+    pairs = _flat_pairs(env_name, seed, vec, workers, batch, wrap)
+    return _native().VecEnv.from_flat_pairs(pairs, num_envs)
+
+
+def emulate(env_name, num_envs=1, *, seed=0, vec="serial", workers=None, batch=None, **wrap):
+    """One-line vectorized-env constructor (paper §3.1, from Python).
+
+    Builds ``num_envs`` copies of the named first-party env inside the
+    Rust vectorizer and returns a Gymnasium ``VectorEnv``-compatible
+    adapter with zero-copy observation views.
+
+    Args:
+        env_name: first-party env name, e.g. ``"ocean/squared"``.
+        num_envs: number of env copies.
+        seed: root seed recorded in the spec (``reset(seed=...)`` still
+            controls the actual reset seed).
+        vec: ``"serial"``, ``"mt"``, or ``"auto"``.
+        workers / batch: multithreaded-backend knobs (``vec="mt"`` only).
+        **wrap: wrapper knobs applied to every copy, e.g.
+            ``stack=4, clip_reward=1.0, time_limit=500``.
+    """
+    from .vector import PufferVectorEnv
+
+    return PufferVectorEnv(raw_vecenv(
+        env_name, num_envs, seed=seed, vec=vec, workers=workers, batch=batch, **wrap
+    ))

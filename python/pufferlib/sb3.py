@@ -1,0 +1,107 @@
+"""Stable-Baselines3 ``VecEnv`` shim over the native puffer vectorizer.
+
+SB3 predates the Gymnasium vector API and brings its own ``VecEnv``
+base class (reset -> obs; step -> (obs, rews, dones, list-of-dict
+infos)), so it gets its own thin adapter instead of reusing
+:class:`pufferlib.vector.PufferVectorEnv`.
+
+SB3 keeps references to the arrays it receives across steps, so —
+unlike the Gymnasium adapter — this shim **copies** observations and
+rewards out of the zero-copy views each step. The vectorization win
+(batched Rust stepping, no per-env Python) is untouched; only the
+final hand-off copies.
+
+Known gap: the Rust core's same-step autoreset discards the terminal
+observation, so ``info["terminal_observation"]`` is never set. SB3's
+on-policy algorithms (PPO/A2C) only consult it to bootstrap truncated
+episodes; returns at timeouts are slightly pessimistic.
+"""
+
+import numpy as np
+
+try:
+    from stable_baselines3.common.vec_env.base_vec_env import VecEnv as _SB3VecEnv
+except ImportError as e:  # pragma: no cover - sb3 is optional
+    raise ImportError(
+        "pufferlib.sb3 needs stable-baselines3 "
+        "(pip install 'pufferlib[sb3]')"
+    ) from e
+
+from .vector import PufferVectorEnv
+
+
+def make_sb3_env(env_name, num_envs=1, **kwargs):
+    """``pufferlib.emulate`` with an SB3 ``VecEnv`` interface."""
+    import pufferlib
+
+    return PufferSB3VecEnv(pufferlib.emulate(env_name, num_envs, **kwargs))
+
+
+class PufferSB3VecEnv(_SB3VecEnv):
+    """Wrap a :class:`PufferVectorEnv` for Stable-Baselines3."""
+
+    def __init__(self, venv: PufferVectorEnv):
+        self.venv = venv
+        super().__init__(
+            num_envs=venv.num_envs,
+            observation_space=venv.single_observation_space,
+            action_space=venv.single_action_space,
+        )
+        self._pending = None
+
+    def reset(self):
+        obs, _ = self.venv.reset(seed=0)
+        return np.array(obs, copy=True)
+
+    def step_async(self, actions):
+        self._pending = actions
+
+    def step_wait(self):
+        obs, rewards, terms, truncs, vec_infos = self.venv.step(self._pending)
+        self._pending = None
+        dones = terms | truncs
+        infos = []
+        for i in range(self.num_envs):
+            info = {
+                key: float(vec_infos[key][i])
+                for key in vec_infos
+                if not key.startswith("_") and vec_infos[f"_{key}"][i]
+            }
+            if truncs[i] and not terms[i]:
+                info["TimeLimit.truncated"] = True
+            infos.append(info)
+        return np.array(obs, copy=True), np.array(rewards, copy=True), np.array(dones, copy=True), infos
+
+    def close(self):
+        self.venv.close()
+
+    # -- SB3 VecEnv plumbing the Rust backend has no use for ----------
+
+    def get_attr(self, attr_name, indices=None):
+        return [getattr(self.venv, attr_name)] * self._count(indices)
+
+    def set_attr(self, attr_name, value, indices=None):
+        raise NotImplementedError(
+            "puffer envs live in Rust worker threads; per-env attribute "
+            "mutation from Python is not supported"
+        )
+
+    def env_method(self, method_name, *args, indices=None, **kwargs):
+        raise NotImplementedError(
+            "puffer envs live in Rust worker threads; per-env method calls "
+            "from Python are not supported"
+        )
+
+    def env_is_wrapped(self, wrapper_class, indices=None):
+        return [False] * self._count(indices)
+
+    def seed(self, seed=None):
+        # Seeds apply at reset time in the Rust core.
+        return [seed] * self.num_envs
+
+    def _count(self, indices):
+        if indices is None:
+            return self.num_envs
+        if isinstance(indices, int):
+            return 1
+        return len(list(indices))

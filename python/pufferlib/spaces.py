@@ -1,0 +1,85 @@
+"""Space/layout JSON → numpy dtypes and Gymnasium spaces.
+
+The native module describes observation layouts and space trees as JSON
+(see ``crates/puffer-py/src/bridge.rs``): Box bounds travel as strings
+(``"inf"``/``"-inf"``/``"3"``) because JSON numbers cannot express
+infinities, and Dict entries arrive as an **ordered** ``[name, space]``
+list because field order is load-bearing for the packed byte layout.
+"""
+
+import json
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "u8": np.uint8, "i32": np.int32}
+
+
+def np_dtype(name):
+    """Map a Rust dtype name (``f32``/``u8``/``i32``) to numpy."""
+    try:
+        return _DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown dtype name {name!r} in layout JSON") from None
+
+
+def structured_dtype(layout):
+    """Build the numpy structured dtype matching a packed obs layout.
+
+    ``layout`` is the parsed ``layout_json()`` dict. The result has one
+    (possibly subarray) field per layout leaf, with explicit byte
+    offsets and itemsize, so viewing the raw obs slab with it aliases
+    the Rust memory exactly.
+    """
+    fields = layout["fields"]
+    return np.dtype(
+        {
+            "names": [f["name"] for f in fields],
+            "formats": [(np_dtype(f["dtype"]), tuple(int(d) for d in f["shape"])) for f in fields],
+            "offsets": [int(f["byte_offset"]) for f in fields],
+            "itemsize": int(layout["byte_len"]),
+        }
+    )
+
+
+def _bound(text):
+    # float() parses "inf"/"-inf"/"3.5" alike.
+    return float(text)
+
+
+def space_from_json(tree):
+    """Recursively convert a native space JSON tree to a Gymnasium space."""
+    import gymnasium
+
+    kind = tree["type"]
+    if kind == "discrete":
+        return gymnasium.spaces.Discrete(int(tree["n"]))
+    if kind == "multidiscrete":
+        return gymnasium.spaces.MultiDiscrete([int(n) for n in tree["nvec"]])
+    if kind == "box":
+        dtype = np_dtype(tree["dtype"])
+        shape = tuple(int(d) for d in tree["shape"])
+        return gymnasium.spaces.Box(
+            low=_bound(tree["low"]), high=_bound(tree["high"]), shape=shape, dtype=dtype
+        )
+    if kind == "tuple":
+        return gymnasium.spaces.Tuple([space_from_json(t) for t in tree["items"]])
+    if kind == "dict":
+        # Entries are an ordered [name, space] list; Gymnasium Dict
+        # preserves insertion order when given a list of pairs.
+        return gymnasium.spaces.Dict(
+            [(name, space_from_json(sub)) for name, sub in tree["entries"]]
+        )
+    raise ValueError(f"unknown space type {kind!r} in space JSON")
+
+
+def parse_layout(native):
+    """Parse a native handle's ``layout_json()`` into a plain dict."""
+    return json.loads(native.layout_json())
+
+
+def parse_obs_space(native):
+    return space_from_json(json.loads(native.obs_space_json()))
+
+
+def parse_act_space(native):
+    return space_from_json(json.loads(native.act_space_json()))

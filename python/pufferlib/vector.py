@@ -1,0 +1,240 @@
+"""Gymnasium ``VectorEnv`` adapter over the native puffer vectorizer.
+
+The native extension returns **addresses** of the Rust-owned batch
+slabs; this module wraps them with ``ctypes`` + ``np.ctypeslib`` into
+numpy arrays that *alias* that memory, and caches the arrays keyed by
+address. The serial and multithreaded-sync backends reuse one slab for
+the lifetime of the env, so steady-state stepping allocates nothing and
+copies nothing on the observation path — the whole point of the split
+(paper §3.2).
+
+Aliasing contract: the arrays returned by :meth:`PufferVectorEnv.reset`
+and :meth:`PufferVectorEnv.step` are views into Rust memory, valid until
+the next ``step``/``close`` and **overwritten in place** by the next
+step. Trainers that keep observations across steps (every replay buffer
+does) must copy — which CleanRL/SB3 already do when they stage rollouts
+into their own storage.
+
+Autoreset follows Gymnasium's **same-step** convention, matching the
+Rust core (``PufferEnv`` in ``crates/puffer-core/src/emulation``): when
+``terminated | truncated`` is set, the returned observation is already
+the *next* episode's first observation, and the episode's aggregate
+stats arrive in ``infos`` (``episode_return``, ``episode_length``).
+"""
+
+import ctypes
+
+import numpy as np
+
+try:
+    import gymnasium
+except ImportError as e:  # pragma: no cover - gymnasium is a test/CI dep
+    raise ImportError(
+        "pufferlib.vector needs gymnasium (pip install 'pufferlib[gymnasium]')"
+    ) from e
+
+from . import spaces as _spaces
+
+
+def _u8_view(address, nbytes):
+    """A uint8 numpy array aliasing ``nbytes`` of foreign memory."""
+    buf = (ctypes.c_ubyte * nbytes).from_address(address)
+    return np.ctypeslib.as_array(buf)
+
+
+class _SlabViews:
+    """Pointer-keyed cache of numpy views over the native batch slabs.
+
+    The backends hand out stable addresses, so after the first step this
+    is a dict hit per array — no ctypes traffic, no allocation.
+    """
+
+    def __init__(self):
+        self._cache = {}
+
+    def u8(self, address, nbytes):
+        key = (address, nbytes)
+        view = self._cache.get(key)
+        if view is None:
+            view = _u8_view(address, nbytes)
+            self._cache[key] = view
+        return view
+
+    def f32(self, address, count):
+        key = (address, count, "f32")
+        view = self._cache.get(key)
+        if view is None:
+            view = self.u8(address, count * 4).view(np.float32)
+            self._cache[key] = view
+        return view
+
+    def bools(self, address, count):
+        key = (address, count, "b")
+        view = self._cache.get(key)
+        if view is None:
+            view = self.u8(address, count).view(np.bool_)
+            self._cache[key] = view
+        return view
+
+
+class PufferVectorEnv(gymnasium.vector.VectorEnv):
+    """Gymnasium ``VectorEnv`` over a native ``_puffer.VecEnv`` handle.
+
+    Built by :func:`pufferlib.emulate`. Observations come back as
+    zero-copy views: a plain ndarray when the packed layout is a single
+    leaf (the common Box case), or a numpy *structured array* whose
+    field offsets mirror the Rust :class:`StructLayout` for multi-leaf
+    Dict/Tuple observation spaces.
+    """
+
+    metadata = {"render_modes": []}
+    render_mode = None
+
+    def __init__(self, native):
+        if native.agents_per_env != 1:
+            raise ValueError(
+                f"PufferVectorEnv is single-agent (agents_per_env="
+                f"{native.agents_per_env}); drive multi-agent envs through "
+                "the raw pufferlib.raw_vecenv() handle"
+            )
+        if native.batch_size != native.num_envs:
+            raise ValueError(
+                f"PufferVectorEnv needs synchronous batches (batch_size="
+                f"{native.batch_size} != num_envs={native.num_envs}); "
+                "async env pools don't fit the Gymnasium VectorEnv step "
+                "contract — use the raw handle for pooled stepping"
+            )
+        self.native = native
+        self.num_envs = native.num_envs
+        self._views = _SlabViews()
+        self._layout = _spaces.parse_layout(native)
+        self._row_ids = list(range(self.num_envs))
+        self._action_slots = len(native.action_dims())
+        self._closed = False
+
+        fields = self._layout["fields"]
+        if len(fields) == 1 and int(fields[0]["byte_offset"]) == 0:
+            # Single-leaf layout: expose a plain (num_envs, *shape) view.
+            field = fields[0]
+            self._obs_dtype = _spaces.np_dtype(field["dtype"])
+            self._obs_shape = tuple(int(d) for d in field["shape"])
+        else:
+            # Multi-leaf layout: a structured dtype whose offsets mirror
+            # the packed Rust layout, viewed in place over the slab.
+            self._obs_dtype = _spaces.structured_dtype(self._layout)
+            self._obs_shape = ()
+
+        self.single_observation_space = _spaces.parse_obs_space(native)
+        self.single_action_space = _spaces.parse_act_space(native)
+        self.observation_space = gymnasium.vector.utils.batch_space(
+            self.single_observation_space, self.num_envs
+        )
+        self.action_space = gymnasium.vector.utils.batch_space(
+            self.single_action_space, self.num_envs
+        )
+        # Gymnasium >= 1.1 names the autoreset convention explicitly; the
+        # Rust core implements same-step autoreset.
+        autoreset = getattr(gymnasium.vector, "AutoresetMode", None)
+        if autoreset is not None:
+            self.metadata = dict(self.metadata, autoreset_mode=autoreset.SAME_STEP)
+
+    # -- step surface -------------------------------------------------
+
+    def reset(self, *, seed=None, options=None):
+        del options
+        if seed is None:
+            seed = 0
+        try:
+            seed = int(seed)
+        except (TypeError, ValueError):
+            raise TypeError(
+                "PufferVectorEnv.reset takes one int seed (the Rust core "
+                "derives per-env seeds from it), not a per-env list"
+            ) from None
+        self.native.async_reset(seed)
+        obs, _, _, _, infos = self._recv()
+        return obs, infos
+
+    def step(self, actions):
+        flat = np.asarray(actions, dtype=np.int32)
+        expect = self.num_envs * self._action_slots
+        if flat.size != expect:
+            raise ValueError(
+                f"step() wants {expect} action slots "
+                f"({self.num_envs} envs x {self._action_slots} per env), "
+                f"got array of shape {flat.shape}"
+            )
+        self.native.send(flat.ravel().tolist())
+        return self._recv()
+
+    def close(self, **kwargs):
+        del kwargs
+        self._closed = True
+        # Views alias slabs owned by the native object; drop them first.
+        self._views = _SlabViews()
+        self.native.close()
+
+    # -- internals ----------------------------------------------------
+
+    def _recv(self):
+        rows, obs_ptr, obs_len, rew_ptr, term_ptr, trunc_ptr, env_ids, raw_infos = (
+            self.native.recv()
+        )
+        if env_ids != self._row_ids:
+            raise RuntimeError(
+                f"backend returned rows {env_ids}; the Gymnasium adapter "
+                "requires full batches in env order"
+            )
+        obs = self._obs_view(obs_ptr, obs_len, rows)
+        rewards = self._views.f32(rew_ptr, rows)
+        terms = self._views.bools(term_ptr, rows)
+        truncs = self._views.bools(trunc_ptr, rows)
+        return obs, rewards, terms, truncs, self._infos(raw_infos)
+
+    def _obs_view(self, address, nbytes, rows):
+        flat = self._views.u8(address, nbytes)
+        key = (address, nbytes, "obs")
+        obs = self._views._cache.get(key)
+        if obs is None:
+            obs = flat.view(self._obs_dtype)
+            if self._obs_shape:
+                obs = obs.reshape((rows,) + self._obs_shape)
+            self._views._cache[key] = obs
+        return obs
+
+    def _infos(self, raw_infos):
+        """Native per-row infos → the Gymnasium vector dict convention.
+
+        ``[(row, [(key, value), ...]), ...]`` becomes
+        ``{key: array(num_envs), "_key": present_mask}``.
+        """
+        infos = {}
+        for row, pairs in raw_infos:
+            for key, value in pairs:
+                slot = infos.get(key)
+                if slot is None:
+                    slot = (
+                        np.zeros(self.num_envs, dtype=np.float64),
+                        np.zeros(self.num_envs, dtype=np.bool_),
+                    )
+                    infos[key] = slot
+                slot[0][row] = value
+                slot[1][row] = True
+        return {
+            name: arr
+            for key, (values, mask) in infos.items()
+            for name, arr in ((key, values), (f"_{key}", mask))
+        }
+
+    def __del__(self):
+        if not getattr(self, "_closed", True):
+            try:
+                self.close()
+            except Exception:
+                pass
+
+    def __repr__(self):
+        return (
+            f"PufferVectorEnv({self.native.spec_json()}, "
+            f"num_envs={self.num_envs})"
+        )

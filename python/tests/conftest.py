@@ -1,0 +1,11 @@
+"""Make `compile` and `pufferlib` importable when pytest runs from the
+repo root. Appended (not prepended) so an installed pufferlib wheel —
+which carries the compiled `_puffer` extension the source tree lacks —
+always wins over the pure-Python fallback in python/pufferlib/."""
+
+import os
+import sys
+
+_PYTHON_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PYTHON_DIR not in sys.path:
+    sys.path.append(_PYTHON_DIR)

@@ -1,0 +1,215 @@
+"""Binding-level tests for pufferlib (the puffer-py extension + adapter).
+
+Skipped wholesale when the native module isn't built — run
+``maturin develop --features python`` from the repo root first (the CI
+``pybind`` job installs the wheel). The aliasing/ordering assertions
+here mirror the Rust contracts in
+``crates/puffer-train/tests/vector_semantics.rs`` and the bridge unit
+tests in ``crates/puffer-py/src/bridge.rs``.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+_puffer = pytest.importorskip(
+    "pufferlib._puffer",
+    reason="native module not built (maturin develop --features python)",
+)
+gymnasium = pytest.importorskip("gymnasium")
+
+import pufferlib
+from pufferlib import spaces as pspaces
+from pufferlib.vector import PufferVectorEnv
+
+
+def test_zero_copy_views_alias_the_rust_slabs():
+    """The tentpole property: no per-step observation copies.
+
+    Hold the view returned by reset; after step() the *same array
+    object* shows the new observations — the Rust backend rewrote the
+    slab in place and the adapter's pointer-keyed cache returned the
+    identical view, no re-fetch needed.
+    """
+    envs = pufferlib.emulate("classic/cartpole", num_envs=4)
+    try:
+        held, _ = envs.reset(seed=7)
+        before = np.array(held, copy=True)
+        obs, rew, term, trunc, _ = envs.step(np.zeros(4, dtype=np.int64))
+        assert obs is held, "cached view must be reused, not rebuilt"
+        assert np.shares_memory(obs, held)
+        # Cartpole physics moves every step: the held view sees the new
+        # state without any re-fetch.
+        assert not np.array_equal(held, before)
+        assert rew.dtype == np.float32
+        assert term.dtype == np.bool_ and trunc.dtype == np.bool_
+    finally:
+        envs.close()
+
+
+def test_dtype_and_shape_agree_with_the_native_layout():
+    envs = pufferlib.emulate("ocean/bandit", num_envs=2)
+    try:
+        assert isinstance(envs.single_action_space, gymnasium.spaces.Discrete)
+        assert envs.single_action_space.n == 4
+        box = envs.single_observation_space
+        assert isinstance(box, gymnasium.spaces.Box)
+        assert box.shape == (1,) and box.dtype == np.float32
+        layout = json.loads(envs.native.layout_json())
+        assert layout["byte_len"] == 4 and layout["flat_len"] == 1
+        obs, _ = envs.reset(seed=0)
+        assert obs.shape == (2, 1) and obs.dtype == np.float32
+    finally:
+        envs.close()
+
+
+def test_structured_view_matches_multi_leaf_layout():
+    """Multi-leaf Dict obs → numpy structured dtype with the exact Rust
+    byte offsets (field for field, offset for offset)."""
+    envs = pufferlib.emulate("ocean/spaces", num_envs=2)
+    try:
+        layout = json.loads(envs.native.layout_json())
+        assert len(layout["fields"]) > 1
+        obs, _ = envs.reset(seed=0)
+        assert obs.dtype.names == tuple(f["name"] for f in layout["fields"])
+        for f in layout["fields"]:
+            sub_dtype, offset = obs.dtype.fields[f["name"]][:2]
+            assert offset == int(f["byte_offset"])
+            assert sub_dtype.base == pspaces.np_dtype(f["dtype"])
+        assert obs.dtype.itemsize == layout["byte_len"]
+        assert isinstance(envs.single_observation_space, gymnasium.spaces.Dict)
+    finally:
+        envs.close()
+
+
+def test_kwargs_and_toml_specs_are_equivalent():
+    """emulate(**wrap) kwargs and a TOML spec produce the same RunSpec."""
+    via_kwargs = pufferlib.raw_vecenv(
+        "ocean/squared", 4, seed=3, stack=2, clip_reward=1.0
+    )
+    toml = via_kwargs.spec_toml()
+    via_toml = _puffer.VecEnv.from_toml(toml, 4)
+    assert via_toml.spec_toml() == toml
+    assert via_toml.spec_json() == via_kwargs.spec_json()
+    via_kwargs.close()
+    via_toml.close()
+
+
+def test_serial_batches_arrive_in_env_order():
+    """Mirror of vector_semantics.rs serial_is_sync_and_in_order."""
+    v = pufferlib.raw_vecenv("classic/cartpole", 4)
+    slots = len(v.action_dims())
+    v.async_reset(1)
+    for _ in range(10):
+        rows, _o, _l, _r, _t, _tr, env_ids, _infos = v.recv()
+        assert env_ids == list(range(4)), "Serial batches are in env order"
+        v.send([0] * (rows * slots))
+    v.close()
+
+
+def test_autoreset_is_same_step():
+    """ocean/bandit episodes last one step: every step terminates, the
+    returned obs is already the next episode's first observation, and
+    episode stats arrive in the same step's infos — Gymnasium's
+    same-step autoreset convention, matching the Rust PufferEnv."""
+    envs = pufferlib.emulate("ocean/bandit", num_envs=8)
+    try:
+        mode = envs.metadata.get("autoreset_mode")
+        if mode is not None:
+            assert mode == gymnasium.vector.AutoresetMode.SAME_STEP
+        envs.reset(seed=1)
+        for _ in range(5):
+            obs, rew, term, trunc, infos = envs.step(np.zeros(8, dtype=np.int64))
+            assert term.all() and not trunc.any()
+            assert obs.shape == (8, 1)  # next episode's obs, same step
+            assert infos["_episode_return"].all()
+            np.testing.assert_array_equal(
+                infos["episode_return"], rew.astype(np.float64)
+            )
+            np.testing.assert_array_equal(infos["episode_length"], np.ones(8))
+    finally:
+        envs.close()
+
+
+def test_gym_adapter_rejects_pooled_and_multiagent_configs():
+    pooled = pufferlib.raw_vecenv("ocean/squared", 4, vec="mt", workers=2, batch=2)
+    with pytest.raises(ValueError, match="batch_size"):
+        PufferVectorEnv(pooled)
+    pooled.close()
+    multi = pufferlib.raw_vecenv("ocean/multiagent", 2)
+    with pytest.raises(ValueError, match="agents_per_env"):
+        PufferVectorEnv(multi)
+    multi.close()
+
+
+def test_step_after_close_raises():
+    envs = pufferlib.emulate("ocean/squared", num_envs=2)
+    envs.close()
+    envs.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        envs.native.async_reset(0)
+
+
+def _softmax(z):
+    z = z - z.max()
+    e = np.exp(z)
+    return e / e.sum()
+
+
+def test_cleanrl_style_ppo_clears_random_on_bandit():
+    """~100-update PPO loop on ocean/bandit must beat the random policy.
+
+    The bandit pays Bernoulli(0.9) on the best arm and Bernoulli(0.3)
+    on the other three, so random play scores 0.45 in expectation; a
+    greedy learned policy scores ~0.9. Fully deterministic: the numpy
+    rng and the env seeds are fixed.
+    """
+    num_envs, n_arms = 32, 4
+    envs = pufferlib.emulate("ocean/bandit", num_envs=num_envs)
+    try:
+        rng = np.random.default_rng(0)
+        logits = np.zeros(n_arms)
+        baseline = 0.45
+        envs.reset(seed=0)
+        for _ in range(100):
+            probs = _softmax(logits)
+            actions = rng.choice(n_arms, size=num_envs, p=probs)
+            _, rew, _, _, _ = envs.step(actions)
+            rew = np.asarray(rew, dtype=np.float64)
+            adv = rew - baseline
+            baseline = 0.9 * baseline + 0.1 * rew.mean()
+            # Single-epoch clipped-surrogate step: at theta_old the PPO
+            # gradient reduces to the policy gradient.
+            grad = np.zeros(n_arms)
+            for a, g in zip(actions, adv):
+                grad += g * (np.eye(n_arms)[a] - probs)
+            logits += 0.5 * grad / num_envs
+        # Greedy evaluation: 20 batches of the argmax arm.
+        best = int(np.argmax(logits))
+        total = 0.0
+        for _ in range(20):
+            _, rew, _, _, _ = envs.step(np.full(num_envs, best, dtype=np.int64))
+            total += float(np.asarray(rew, dtype=np.float64).mean())
+        mean_reward = total / 20
+        assert mean_reward > 0.6, (
+            f"learned arm {best} scores {mean_reward:.3f}; random is 0.45"
+        )
+    finally:
+        envs.close()
+
+
+def test_sb3_shim_steps_and_reports_dones():
+    pytest.importorskip("stable_baselines3")
+    from pufferlib.sb3 import make_sb3_env
+
+    venv = make_sb3_env("ocean/bandit", num_envs=4)
+    try:
+        obs = venv.reset()
+        assert obs.shape == (4, 1)
+        venv.step_async(np.zeros(4, dtype=np.int64))
+        obs, rew, dones, infos = venv.step_wait()
+        assert dones.all()  # one-step episodes
+        assert all("episode_return" in info for info in infos)
+    finally:
+        venv.close()

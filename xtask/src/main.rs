@@ -1,23 +1,25 @@
 //! `cargo xtask lint` — repo-invariant checks that rustc/clippy cannot
-//! express (see `rust/CONCURRENCY.md` for the rationale behind each):
+//! express (see `CONCURRENCY.md` for the rationale behind each). Scans
+//! every workspace crate: `crates/puffer-core/src`,
+//! `crates/puffer-train/src`, and `crates/puffer-py/src`.
 //!
-//! - **R1 (ordering)**: every `Ordering::` use in `rust/src/vector/`,
-//!   `rust/src/policy/`, and `rust/src/serve/` carries a `// ordering:`
-//!   comment on the same line or within 3 lines above, naming the edge
-//!   it establishes.
-//! - **R2 (panic)**: no `.unwrap()` / `.expect(` in `rust/src` outside
-//!   `#[cfg(test)]` blocks without a `// PANIC:` justification on the
-//!   same line or within 3 lines above.
+//! - **R1 (ordering)**: every `Ordering::` use in the concurrency-
+//!   bearing modules (`vector/`, `policy/`, `serve/` of any crate)
+//!   carries a `// ordering:` comment on the same line or within 3
+//!   lines above, naming the edge it establishes.
+//! - **R2 (panic)**: no `.unwrap()` / `.expect(` in crate sources
+//!   outside `#[cfg(test)]` blocks without a `// PANIC:` justification
+//!   on the same line or within 3 lines above.
 //! - **R3 (hot path)**: no allocation tokens inside `fn on_step` /
-//!   `fn project_step` bodies in `rust/src/wrappers/` — these run per
-//!   step per env and must stay allocation-free.
+//!   `fn project_step` bodies in `wrappers/` — these run per step per
+//!   env and must stay allocation-free.
 //! - **R4 (forbid)**: modules that need no unsafe carry
 //!   `#![forbid(unsafe_code)]`, keeping the unsafe surface pinned to
-//!   `vector/`.
-//! - **R5 (kernel alloc)**: `rust/src/backend/kernels/` is a hot path
-//!   end to end (serve forwards and train steps run through it every
-//!   batch), so allocation tokens are banned file-wide there, not just
-//!   inside named functions. Deliberate cold-path allocations carry an
+//!   puffer-core's `vector/`.
+//! - **R5 (kernel alloc)**: `backend/kernels/` is a hot path end to
+//!   end (serve forwards and train steps run through it every batch),
+//!   so allocation tokens are banned file-wide there, not just inside
+//!   named functions. Deliberate cold-path allocations carry an
 //!   `// ALLOC-OK:` comment with a reason.
 //!
 //! Output is `file:line: RULE — message`, one finding per line; exit
@@ -34,22 +36,29 @@ use std::process::ExitCode;
 const MARKER_WINDOW: usize = 3;
 
 /// Files that must stay `#![forbid(unsafe_code)]` (R4). Paths are
-/// relative to the repo root. `vector/` is deliberately absent — it owns
-/// the crate's entire unsafe surface.
+/// relative to the repo root. puffer-core's `vector/` is deliberately
+/// absent — it owns the workspace's entire unsafe surface.
 const FORBID_UNSAFE: &[&str] = &[
-    "rust/src/backend/kernels/mod.rs",
-    "rust/src/config/mod.rs",
-    "rust/src/emulation/mod.rs",
-    "rust/src/envs/mod.rs",
-    "rust/src/policy/mod.rs",
-    "rust/src/runs/mod.rs",
-    "rust/src/runspec.rs",
-    "rust/src/serve/mod.rs",
-    "rust/src/spaces/mod.rs",
-    "rust/src/sync/mod.rs",
-    "rust/src/train/mod.rs",
-    "rust/src/util/mod.rs",
-    "rust/src/wrappers/mod.rs",
+    "crates/puffer-core/src/backend.rs",
+    "crates/puffer-core/src/config/mod.rs",
+    "crates/puffer-core/src/emulation/mod.rs",
+    "crates/puffer-core/src/envs/mod.rs",
+    "crates/puffer-core/src/policy/mod.rs",
+    "crates/puffer-core/src/runs.rs",
+    "crates/puffer-core/src/runspec.rs",
+    "crates/puffer-core/src/serve.rs",
+    "crates/puffer-core/src/spaces/mod.rs",
+    "crates/puffer-core/src/sync/mod.rs",
+    "crates/puffer-core/src/train.rs",
+    "crates/puffer-core/src/util/mod.rs",
+    "crates/puffer-core/src/wrappers/mod.rs",
+    "crates/puffer-py/src/bridge.rs",
+    "crates/puffer-train/src/backend/kernels/mod.rs",
+    "crates/puffer-train/src/policy/mod.rs",
+    "crates/puffer-train/src/runs/mod.rs",
+    "crates/puffer-train/src/runspec_ext.rs",
+    "crates/puffer-train/src/serve/mod.rs",
+    "crates/puffer-train/src/train/mod.rs",
 ];
 
 /// Allocation tokens banned from wrapper hot paths (R3).
@@ -91,43 +100,51 @@ fn main() -> ExitCode {
     }
 }
 
+/// Crate source roots the lint walks, relative to the repo root.
+const SRC_ROOTS: &[&str] = &[
+    "crates/puffer-core/src",
+    "crates/puffer-train/src",
+    "crates/puffer-py/src",
+];
+
 fn lint() -> ExitCode {
     let root = repo_root();
-    let src = root.join("rust/src");
     let mut findings = Vec::new();
     let mut scanned = 0usize;
 
-    for path in rust_files(&src) {
-        let rel = path
-            .strip_prefix(&root)
-            .unwrap_or(&path)
-            .to_string_lossy()
-            .replace('\\', "/");
-        let text = match std::fs::read_to_string(&path) {
-            Ok(t) => t,
-            Err(e) => {
-                findings.push(Finding {
-                    file: rel,
-                    line: 0,
-                    rule: "IO",
-                    msg: format!("unreadable: {e}"),
-                });
-                continue;
+    for src in SRC_ROOTS {
+        for path in rust_files(&root.join(src)) {
+            let rel = path
+                .strip_prefix(&root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = match std::fs::read_to_string(&path) {
+                Ok(t) => t,
+                Err(e) => {
+                    findings.push(Finding {
+                        file: rel,
+                        line: 0,
+                        rule: "IO",
+                        msg: format!("unreadable: {e}"),
+                    });
+                    continue;
+                }
+            };
+            scanned += 1;
+            if rel.contains("/src/vector/")
+                || rel.contains("/src/policy/")
+                || rel.contains("/src/serve/")
+            {
+                findings.extend(check_ordering(&rel, &text));
             }
-        };
-        scanned += 1;
-        if rel.starts_with("rust/src/vector/")
-            || rel.starts_with("rust/src/policy/")
-            || rel.starts_with("rust/src/serve/")
-        {
-            findings.extend(check_ordering(&rel, &text));
-        }
-        findings.extend(check_panics(&rel, &text));
-        if rel.starts_with("rust/src/wrappers/") {
-            findings.extend(check_hot_paths(&rel, &text));
-        }
-        if rel.starts_with("rust/src/backend/kernels/") {
-            findings.extend(check_kernel_allocs(&rel, &text));
+            findings.extend(check_panics(&rel, &text));
+            if rel.contains("/src/wrappers/") {
+                findings.extend(check_hot_paths(&rel, &text));
+            }
+            if rel.contains("/src/backend/kernels/") {
+                findings.extend(check_kernel_allocs(&rel, &text));
+            }
         }
     }
     findings.extend(check_forbid(&root));
